@@ -1,0 +1,52 @@
+//! Autoscaling policy comparison on the simulated cluster — the paper's
+//! headline experiment (Fig. 9) as a runnable example.
+//!
+//!     cargo run --release --example autoscale_sim [rps] [duration_s]
+
+use tokenscale::report::runner::RunOverrides;
+use tokenscale::report::{deployment, run_experiment, PolicyKind};
+use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::util::table::{fnum, pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rps: f64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(22.0);
+    let duration: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(240.0);
+
+    let dep = deployment("small-a100").unwrap();
+    let trace = generate_family(TraceFamily::Mixed, rps, duration, 42);
+    println!(
+        "mixed trace: {} requests @ {:.1} rps, avg {:.0} in / {:.0} out tokens\n",
+        trace.requests.len(),
+        trace.avg_rps(),
+        trace.avg_input_tokens(),
+        trace.avg_output_tokens()
+    );
+
+    let mut table = Table::new(&format!(
+        "policy comparison | {} | mixed @ {rps} rps for {duration}s",
+        dep.name
+    ))
+    .header(&["policy", "SLO att.", "TTFT att.", "TPOT att.", "avg GPUs", "scale ups/downs"]);
+
+    let mut best: Option<(f64, String)> = None;
+    for policy in PolicyKind::all_baselines() {
+        let res = run_experiment(&dep, policy, &trace, &RunOverrides::default());
+        let r = &res.report;
+        table.row(vec![
+            policy.name().into(),
+            pct(r.overall_attainment),
+            pct(r.ttft_attainment),
+            pct(r.tpot_attainment),
+            fnum(r.avg_gpus, 2),
+            format!("{}/{}", res.sim.scale_ups, res.sim.scale_downs),
+        ]);
+        if best.as_ref().map_or(true, |(b, _)| r.overall_attainment > *b) {
+            best = Some((r.overall_attainment, policy.name().to_string()));
+        }
+    }
+    print!("{}", table.render());
+    let (att, name) = best.unwrap();
+    println!("\nbest attainment: {name} ({})", pct(att));
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Capacity planner: size a PD-disaggregated fleet for a workload using
+//! TokenScale's velocity math (Eqs. 2–4), then validate the plan in the
+//! simulator.
+//!
+//!     cargo run --release --example capacity_planner [trace] [rps]
+
+use tokenscale::perfmodel::catalog;
+use tokenscale::report::runner::RunOverrides;
+use tokenscale::report::{deployment, run_experiment, PolicyKind};
+use tokenscale::scaler::{convertible_count, required_decoders_frac, required_prefillers};
+use tokenscale::trace::burst::{bin_traffic, burst_time_fraction};
+use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::velocity::VelocityProfile;
+use tokenscale::workload::BucketScheme;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let family = args
+        .first()
+        .and_then(|s| TraceFamily::parse(s))
+        .unwrap_or(TraceFamily::AzureConv);
+    let rps: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(22.0);
+
+    let dep = deployment("small-a100").unwrap();
+    let trace = generate_family(family, rps, 300.0, 13);
+    let profile = VelocityProfile::analytic(
+        &dep.engine,
+        &catalog::link("a100-cluster").unwrap(),
+        trace.avg_input_tokens() as usize,
+    );
+
+    // Eq. 2: prefillers from the mean input-token rate.
+    let lambda = trace.avg_input_tps();
+    let prefillers = required_prefillers(lambda, &profile).max(1);
+
+    // Eq. 3: decoders from per-bucket combined token rates.
+    let scheme = BucketScheme::default();
+    let mut per_bucket = [0.0f64; 9];
+    for r in &trace.requests {
+        let b = scheme.classify(r.input_tokens, r.output_tokens);
+        per_bucket[b.index()] += (r.input_tokens + r.output_tokens) as f64;
+    }
+    for l in per_bucket.iter_mut() {
+        *l /= trace.duration_s;
+    }
+    let decoders_frac = required_decoders_frac(&per_bucket, &profile);
+    let decoders = decoders_frac.ceil() as usize;
+
+    // §IV-C2: convertible pool from the burst ratio.
+    let series = bin_traffic(&trace, 1.0);
+    let burst_ratio = burst_time_fraction(&series.tokens, 1.0, 60.0);
+    let convertibles = convertible_count(decoders as f64, burst_ratio * 0.5);
+
+    println!("capacity plan | {} @ {:.0} rps on {}", family.name(), rps, dep.name);
+    println!("  input-token rate λ   : {:.0} tok/s", lambda);
+    println!("  V_P (per prefiller)  : {:.0} tok/s", profile.prefill);
+    println!("  prefillers (Eq. 2)   : {prefillers}");
+    println!("  decoders (Eq. 3)     : {decoders} (frac {:.2})", decoders_frac);
+    println!("  burst time fraction  : {:.1}%", burst_ratio * 100.0);
+    println!("  convertible decoders : {convertibles}");
+    println!(
+        "  total GPUs (steady)  : {}",
+        (prefillers + decoders + convertibles) * dep.engine.tp
+    );
+
+    // Validate: run TokenScale with this convertible pool.
+    let ov = RunOverrides {
+        convertibles: Some(convertibles),
+        initial_prefillers: Some(prefillers),
+        initial_decoders: Some(decoders.saturating_sub(convertibles).max(1)),
+        ..Default::default()
+    };
+    let res = run_experiment(&dep, PolicyKind::TokenScale, &trace, &ov);
+    println!("\nvalidation run (TokenScale, plan as initial fleet):");
+    println!(
+        "  SLO attainment {:.1}% | avg GPUs {:.2}",
+        res.report.overall_attainment * 100.0,
+        res.report.avg_gpus
+    );
+    anyhow::ensure!(
+        res.report.overall_attainment > 0.6,
+        "plan failed validation"
+    );
+    Ok(())
+}

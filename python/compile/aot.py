@@ -1,0 +1,178 @@
+"""AOT pipeline: lower the L2 model's entry points to HLO **text**
+artifacts the Rust runtime loads via the PJRT C API.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that
+the ``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+  - ``prefill_s{16,64}.hlo.txt``  — prompt pass at two padded lengths
+  - ``decode_b4.hlo.txt``         — batched decode step
+  - ``chunked_prefill_c16.hlo.txt`` — Convertible-Decoder restricted prefill
+  - ``weights.bin``               — flat f32 weights (little-endian)
+  - ``model_meta.json``           — shapes/manifest for the Rust loader
+
+Python runs ONCE at build time (``make artifacts``); nothing here is on the
+request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+MAX_CACHE = 160  # padded KV-cache length served by the decode artifacts
+DECODE_BATCH = 4
+PREFILL_LENS = (16, 64)
+CHUNK = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts():
+    cfg = M.CFG
+    L, KV, D = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    nw = M.n_params(cfg)
+    w_spec = spec((nw,))
+
+    artifacts = {}
+
+    for s in PREFILL_LENS:
+        name = f"prefill_s{s}"
+        lowered = jax.jit(M.prefill).lower(spec((1, s), jnp.int32), w_spec)
+        artifacts[name] = {
+            "hlo": to_hlo_text(lowered),
+            "inputs": [
+                {"kind": "tokens", "shape": [1, s], "dtype": "i32"},
+                {"kind": "weights", "shape": [nw], "dtype": "f32"},
+            ],
+            "outputs": [
+                {"kind": "logits", "shape": [1, s, cfg.vocab], "dtype": "f32"},
+                {"kind": "cache_k", "shape": [L, KV, s, D], "dtype": "f32"},
+                {"kind": "cache_v", "shape": [L, KV, s, D], "dtype": "f32"},
+            ],
+        }
+
+    cache_shape = [L, DECODE_BATCH, KV, MAX_CACHE, D]
+    lowered = jax.jit(M.decode_step).lower(
+        spec((DECODE_BATCH,), jnp.int32),
+        spec(tuple(cache_shape)),
+        spec(tuple(cache_shape)),
+        spec((DECODE_BATCH,), jnp.int32),
+        w_spec,
+    )
+    artifacts["decode_b4"] = {
+        "hlo": to_hlo_text(lowered),
+        "inputs": [
+            {"kind": "tokens", "shape": [DECODE_BATCH], "dtype": "i32"},
+            {"kind": "cache_k", "shape": cache_shape, "dtype": "f32"},
+            {"kind": "cache_v", "shape": cache_shape, "dtype": "f32"},
+            {"kind": "cache_len", "shape": [DECODE_BATCH], "dtype": "i32"},
+            {"kind": "weights", "shape": [nw], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"kind": "logits", "shape": [DECODE_BATCH, cfg.vocab], "dtype": "f32"},
+            {"kind": "cache_k", "shape": cache_shape, "dtype": "f32"},
+            {"kind": "cache_v", "shape": cache_shape, "dtype": "f32"},
+        ],
+    }
+
+    conv_cache = [L, 1, KV, MAX_CACHE, D]
+    lowered = jax.jit(M.chunked_prefill).lower(
+        spec((1, CHUNK), jnp.int32),
+        spec(tuple(conv_cache)),
+        spec(tuple(conv_cache)),
+        spec((1,), jnp.int32),
+        w_spec,
+    )
+    artifacts[f"chunked_prefill_c{CHUNK}"] = {
+        "hlo": to_hlo_text(lowered),
+        "inputs": [
+            {"kind": "tokens", "shape": [1, CHUNK], "dtype": "i32"},
+            {"kind": "cache_k", "shape": conv_cache, "dtype": "f32"},
+            {"kind": "cache_v", "shape": conv_cache, "dtype": "f32"},
+            {"kind": "cache_len", "shape": [1], "dtype": "i32"},
+            {"kind": "weights", "shape": [nw], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"kind": "logits", "shape": [1, CHUNK, cfg.vocab], "dtype": "f32"},
+            {"kind": "cache_k", "shape": conv_cache, "dtype": "f32"},
+            {"kind": "cache_v", "shape": conv_cache, "dtype": "f32"},
+        ],
+    }
+    return artifacts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    cfg = M.CFG
+    artifacts = build_artifacts()
+
+    manifest = {
+        "model": {
+            "name": "tiny-llama",
+            "vocab": cfg.vocab,
+            "hidden": cfg.hidden,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.head_dim,
+            "intermediate": cfg.intermediate,
+            "n_params": M.n_params(cfg),
+            "weights_seed": args.seed,
+        },
+        "max_cache": MAX_CACHE,
+        "decode_batch": DECODE_BATCH,
+        "chunk": CHUNK,
+        "prefill_lens": list(PREFILL_LENS),
+        "artifacts": {},
+    }
+
+    for name, art in artifacts.items():
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(art["hlo"])
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": art["inputs"],
+            "outputs": art["outputs"],
+        }
+        print(f"wrote {path} ({len(art['hlo'])} chars)")
+
+    weights = M.init_weights(args.seed)
+    wpath = os.path.join(args.outdir, "weights.bin")
+    with open(wpath, "wb") as f:
+        f.write(bytes(memoryview(jnp.asarray(weights, jnp.float32)).cast("B")))
+    print(f"wrote {wpath} ({weights.size * 4} bytes)")
+
+    mpath = os.path.join(args.outdir, "model_meta.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

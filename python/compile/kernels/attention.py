@@ -1,0 +1,191 @@
+"""L1 Pallas attention kernels (TPU-shaped, run under interpret=True).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's serving
+hot-spot runs on NVIDIA GPUs via vLLM's CUDA kernels (paged attention,
+chunked prefill). Re-thought for TPU:
+
+- CUDA threadblock tiling over shared memory  →  Pallas ``BlockSpec`` tiling
+  over VMEM: the grid is (batch/head, kv-block) and each step holds a
+  Q tile + one KV block in VMEM.
+- Tensor-core WMMA  →  MXU matmuls with f32 accumulation
+  (``preferred_element_type=jnp.float32``); head_dim padded to the MXU's
+  128-lane width.
+- GQA KV sharing is expressed in the ``BlockSpec`` index map
+  (``kv_head = q_head // group``) instead of materializing repeated KV.
+- The online-softmax (flash) recurrence replaces the quadratic masked
+  softmax, bounding VMEM at O(chunk · block) per grid step.
+
+``interpret=True`` is mandatory here: real TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute. Numerics are validated
+against ``ref.py`` by pytest/hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# KV block size per grid step. 128 matches the MXU systolic width; the
+# oracle tests sweep sizes around it.
+DEFAULT_KV_BLOCK = 128
+
+NEG_INF = -1e30
+
+
+def _chunked_prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, prefix, chunk,
+                            total, kv_block, scale):
+    """Grid: (n_heads,). One head's full Q chunk stays resident in VMEM;
+    the KV sequence streams through in ``kv_block`` tiles with the online
+    softmax carrying (max, sum, accumulator)."""
+    q = q_ref[0].astype(jnp.float32)  # [chunk, d]
+    d = q.shape[-1]
+    n_blocks = (total + kv_block - 1) // kv_block
+    q_pos = prefix + jax.lax.broadcasted_iota(jnp.int32, (chunk, kv_block), 0)
+
+    def body(i, carry):
+        m, l, acc = carry
+        start = i * kv_block
+        k = jax.lax.dynamic_slice(
+            k_ref[0], (start, 0), (kv_block, d)).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(
+            v_ref[0], (start, 0), (kv_block, d)).astype(jnp.float32)
+        # MXU matmul: [chunk, d] x [d, kv_block] with f32 accumulation.
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        k_pos = start + jax.lax.broadcasted_iota(jnp.int32, (chunk, kv_block), 1)
+        mask = (k_pos <= q_pos) & (k_pos < total)
+        s = jnp.where(mask, s, NEG_INF)
+        # Online softmax update.
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = alpha * acc + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((chunk, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((chunk, 1), jnp.float32)
+    acc0 = jnp.zeros((chunk, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0] = acc / jnp.maximum(l, 1e-30)
+
+
+def chunked_prefill_attention(q, k_prefix, v_prefix, k_chunk, v_chunk,
+                              kv_block=DEFAULT_KV_BLOCK):
+    """Pallas chunked-prefill attention; same contract as
+    ``ref.chunked_prefill_attention_ref``.
+
+    q:        [n_heads, chunk, d]
+    k/v_prefix: [n_kv_heads, prefix, d] (prefix may be 0)
+    k/v_chunk:  [n_kv_heads, chunk, d]
+    returns   [n_heads, chunk, d] f32
+    """
+    n_heads, chunk, d = q.shape
+    n_kv, prefix, _ = k_prefix.shape
+    group = n_heads // n_kv
+    total = prefix + chunk
+    scale = 1.0 / (d ** 0.5)
+
+    k_all = jnp.concatenate([k_prefix, k_chunk], axis=1)
+    v_all = jnp.concatenate([v_prefix, v_chunk], axis=1)
+    # Pad the KV sequence to a whole number of blocks (masked in-kernel).
+    pad = (-total) % kv_block
+    if pad:
+        k_all = jnp.pad(k_all, ((0, 0), (0, pad), (0, 0)))
+        v_all = jnp.pad(v_all, ((0, 0), (0, pad), (0, 0)))
+    padded = total + pad
+
+    kernel = functools.partial(
+        _chunked_prefill_kernel, prefix=prefix, chunk=chunk, total=total,
+        kv_block=kv_block, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_heads,),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d), lambda h: (h, 0, 0)),
+            # GQA: the BlockSpec index map picks the shared KV head.
+            pl.BlockSpec((1, padded, d), lambda h: (h // group, 0, 0)),
+            pl.BlockSpec((1, padded, d), lambda h: (h // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_heads, chunk, d), jnp.float32),
+        interpret=True,
+    )(q, k_all, v_all)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, max_len,
+                   kv_block, scale):
+    """Grid: (batch, n_heads). Single-token query against the padded KV
+    cache; valid length is dynamic (read from ``len_ref``)."""
+    q = q_ref[0, 0].astype(jnp.float32)  # [d]
+    d = q.shape[-1]
+    clen = len_ref[0]
+    n_blocks = (max_len + kv_block - 1) // kv_block
+
+    def body(i, carry):
+        m, l, acc = carry
+        start = i * kv_block
+        k = jax.lax.dynamic_slice(
+            k_ref[0, 0], (start, 0), (kv_block, d)).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(
+            v_ref[0, 0], (start, 0), (kv_block, d)).astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q[None, :], k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [1, kv_block]
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, kv_block), 1)
+        s = jnp.where(pos < clen, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = alpha * acc + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((1, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((1, 1), jnp.float32)
+    acc0 = jnp.zeros((1, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30))[0]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len,
+                     kv_block=DEFAULT_KV_BLOCK):
+    """Pallas batched decode attention; batched contract of
+    ``ref.decode_attention_ref``.
+
+    q:         [batch, n_heads, d]
+    k/v_cache: [batch, n_kv_heads, max_len, d]
+    cache_len: [batch] int32 valid lengths
+    returns    [batch, n_heads, d] f32
+    """
+    batch, n_heads, d = q.shape
+    _, n_kv, max_len, _ = k_cache.shape
+    group = n_heads // n_kv
+    scale = 1.0 / (d ** 0.5)
+    pad = (-max_len) % kv_block
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    padded = max_len + pad
+
+    kernel = functools.partial(
+        _decode_kernel, max_len=max_len, kv_block=kv_block, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(batch, n_heads),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, padded, d), lambda b, h: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, padded, d), lambda b, h: (b, h // group, 0, 0)),
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_heads, d), jnp.float32),
+        interpret=True,
+    )(q, k_cache, v_cache, cache_len)

@@ -1,0 +1,82 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel must match its
+oracle to float tolerance under pytest/hypothesis (python/tests/).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_prefill_attention_ref(q, k_prefix, v_prefix, k_chunk, v_chunk, scale=None):
+    """Attention for a chunked-prefill step (the Convertible Decoder's
+    restricted prefill, paper §IV-D).
+
+    The query chunk attends (a) fully to the already-cached prefix KV and
+    (b) causally to itself.
+
+    Args:
+      q:        [n_heads, chunk, head_dim] queries for the new chunk.
+      k_prefix: [n_kv_heads, prefix, head_dim] cached keys (may be empty).
+      v_prefix: [n_kv_heads, prefix, head_dim] cached values.
+      k_chunk:  [n_kv_heads, chunk, head_dim] keys of the new chunk.
+      v_chunk:  [n_kv_heads, chunk, head_dim] values of the new chunk.
+
+    Returns:
+      [n_heads, chunk, head_dim] attention output (f32).
+    """
+    n_heads, chunk, head_dim = q.shape
+    n_kv = k_prefix.shape[0]
+    group = n_heads // n_kv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(head_dim))
+
+    k_all = jnp.concatenate([k_prefix, k_chunk], axis=1)  # [kv, prefix+chunk, d]
+    v_all = jnp.concatenate([v_prefix, v_chunk], axis=1)
+    prefix = k_prefix.shape[1]
+
+    # Expand KV heads to query heads (GQA).
+    k_exp = jnp.repeat(k_all, group, axis=0)  # [n_heads, total, d]
+    v_exp = jnp.repeat(v_all, group, axis=0)
+
+    logits = jnp.einsum(
+        "hqd,hkd->hqk", q.astype(jnp.float32), k_exp.astype(jnp.float32)
+    ) * scale
+    # Causal mask: chunk position i attends to the prefix plus chunk
+    # positions <= i.
+    q_pos = prefix + jnp.arange(chunk)[:, None]  # [chunk, 1]
+    k_pos = jnp.arange(prefix + chunk)[None, :]  # [1, total]
+    mask = k_pos <= q_pos  # [chunk, total]
+    logits = jnp.where(mask[None, :, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v_exp.astype(jnp.float32))
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, scale=None):
+    """Single-token decode attention over a (padded) KV cache.
+
+    Args:
+      q:        [n_heads, head_dim] query for the new token.
+      k_cache:  [n_kv_heads, max_len, head_dim] padded key cache.
+      v_cache:  [n_kv_heads, max_len, head_dim] padded value cache.
+      cache_len: scalar int32 — number of valid cache entries (the current
+        token's KV is already written at position cache_len-1).
+
+    Returns:
+      [n_heads, head_dim] attention output (f32).
+    """
+    n_heads, head_dim = q.shape
+    n_kv, max_len, _ = k_cache.shape
+    group = n_heads // n_kv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(head_dim))
+
+    k_exp = jnp.repeat(k_cache, group, axis=0)  # [n_heads, max_len, d]
+    v_exp = jnp.repeat(v_cache, group, axis=0)
+    logits = jnp.einsum(
+        "hd,hkd->hk", q.astype(jnp.float32), k_exp.astype(jnp.float32)
+    ) * scale
+    mask = jnp.arange(max_len)[None, :] < cache_len
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hk,hkd->hd", probs, v_exp.astype(jnp.float32))

@@ -1,0 +1,282 @@
+"""L2: the JAX transformer served by the Rust runtime.
+
+A tiny Llama-style decoder-only model (RMSNorm, RoPE, GQA attention via the
+L1 Pallas kernels, SwiGLU MLP) with three entry points, each AOT-lowered to
+its own HLO artifact by ``aot.py``:
+
+- ``prefill``          — prompt pass, builds the KV cache.
+- ``decode_step``      — one token per sequence over a padded KV cache.
+- ``chunked_prefill``  — a prompt *chunk* against an existing cache prefix:
+                         the Convertible Decoder's restricted prefill.
+
+All weights travel as ONE flat f32 vector input (sliced internally at
+static offsets), so the Rust side feeds exactly one weights literal loaded
+from ``artifacts/weights.bin`` — mirroring a ServerlessLLM-style host-cached
+weight load. Dtype is f32 throughout: the CPU PJRT backend executes the
+artifacts for correctness; on a real TPU deployment the matmuls would run
+bf16 into the MXU (see kernels/attention.py).
+"""
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import chunked_prefill_attention, decode_attention
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """tiny-llama: the model the end-to-end serving example runs."""
+
+    vocab: int = 512
+    hidden: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 64
+    intermediate: int = 688
+    rope_theta: float = 10000.0
+
+    @property
+    def q_dim(self):
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self):
+        return self.n_kv_heads * self.head_dim
+
+
+CFG = ModelConfig()
+
+
+# ---------------------------------------------------------------- weights
+
+def _shapes(cfg: ModelConfig):
+    """Ordered (name, shape) list for the flat weight vector."""
+    out = [("embed", (cfg.vocab, cfg.hidden))]
+    for i in range(cfg.n_layers):
+        out += [
+            (f"l{i}.attn_norm", (cfg.hidden,)),
+            (f"l{i}.wq", (cfg.hidden, cfg.q_dim)),
+            (f"l{i}.wk", (cfg.hidden, cfg.kv_dim)),
+            (f"l{i}.wv", (cfg.hidden, cfg.kv_dim)),
+            (f"l{i}.wo", (cfg.q_dim, cfg.hidden)),
+            (f"l{i}.mlp_norm", (cfg.hidden,)),
+            (f"l{i}.w_gate", (cfg.hidden, cfg.intermediate)),
+            (f"l{i}.w_up", (cfg.hidden, cfg.intermediate)),
+            (f"l{i}.w_down", (cfg.intermediate, cfg.hidden)),
+        ]
+    out += [("final_norm", (cfg.hidden,)), ("lm_head", (cfg.hidden, cfg.vocab))]
+    return out
+
+
+def n_params(cfg: ModelConfig = CFG) -> int:
+    return sum(math.prod(s) for _, s in _shapes(cfg))
+
+
+def unpack(flat, cfg: ModelConfig = CFG):
+    """Slice the flat weight vector into a name→array dict (static offsets,
+    free at compile time)."""
+    params = {}
+    off = 0
+    for name, shape in _shapes(cfg):
+        size = math.prod(shape)
+        params[name] = jax.lax.slice(flat, (off,), (off + size,)).reshape(shape)
+        off += size
+    return params
+
+
+def init_weights(seed: int = 0, cfg: ModelConfig = CFG) -> jnp.ndarray:
+    """Deterministic random weights as one flat f32 vector."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in _shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            w = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            std = 1.0 / math.sqrt(fan_in)
+            w = std * jax.random.normal(sub, shape, jnp.float32)
+        chunks.append(w.reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+# ------------------------------------------------------------- components
+
+def rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, theta=CFG.rope_theta):
+    """Rotary embeddings. x: [..., seq, n, d]; positions: [..., seq]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs
+    cos = jnp.cos(angles)[..., :, None, :]  # [..., seq, 1, half]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _mlp_block(h, p, layer):
+    ln = rmsnorm(h, p[f"l{layer}.mlp_norm"])
+    gate = jax.nn.silu(ln @ p[f"l{layer}.w_gate"])
+    up = ln @ p[f"l{layer}.w_up"]
+    return h + (gate * up) @ p[f"l{layer}.w_down"]
+
+
+def _project_qkv(h, p, layer, positions, cfg: ModelConfig = CFG):
+    """RMSNorm + QKV projections + RoPE. h: [seq, H], positions: [seq].
+    Returns q [seq, n_heads, d], k [seq, n_kv, d], v [seq, n_kv, d]."""
+    ln = rmsnorm(h, p[f"l{layer}.attn_norm"])
+    q = (ln @ p[f"l{layer}.wq"]).reshape(-1, cfg.n_heads, cfg.head_dim)
+    k = (ln @ p[f"l{layer}.wk"]).reshape(-1, cfg.n_kv_heads, cfg.head_dim)
+    v = (ln @ p[f"l{layer}.wv"]).reshape(-1, cfg.n_kv_heads, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ------------------------------------------------------------ entry points
+
+def prefill(tokens, flat_weights, cfg: ModelConfig = CFG):
+    """Prompt pass (batch = 1).
+
+    tokens [1, S] i32 → (logits [1, S, V],
+                         k_cache [L, n_kv, S, d], v_cache [L, n_kv, S, d])
+    """
+    p = unpack(flat_weights, cfg)
+    _, seq = tokens.shape
+    h = p["embed"][tokens[0]]  # [S, H]
+    positions = jnp.arange(seq)
+    empty = jnp.zeros((cfg.n_kv_heads, 0, cfg.head_dim), jnp.float32)
+    ks, vs = [], []
+
+    for layer in range(cfg.n_layers):
+        q, k, v = _project_qkv(h, p, layer, positions, cfg)
+        kh = jnp.transpose(k, (1, 0, 2))  # [n_kv, S, d]
+        vh = jnp.transpose(v, (1, 0, 2))
+        ks.append(kh)
+        vs.append(vh)
+        # Full-prompt prefill = chunked-prefill attention, empty prefix.
+        out = chunked_prefill_attention(
+            jnp.transpose(q, (1, 0, 2)), empty, empty, kh, vh)
+        out = jnp.transpose(out, (1, 0, 2)).reshape(seq, cfg.q_dim)
+        h = h + out @ p[f"l{layer}.wo"]
+        h = _mlp_block(h, p, layer)
+
+    logits = rmsnorm(h, p["final_norm"]) @ p["lm_head"]
+    return logits[None], jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_step(tokens, cache_k, cache_v, cache_len, flat_weights,
+                cfg: ModelConfig = CFG):
+    """One decode iteration for a batch.
+
+    tokens    [B] i32            — current token per sequence
+    cache_k/v [L, B, n_kv, M, d] — padded KV caches
+    cache_len [B] i32            — valid entries per sequence *before* this
+                                   step (this step's KV is written there)
+    → (logits [B, V], new_cache_k [L,B,n_kv,M,d], new_cache_v)
+    """
+    p = unpack(flat_weights, cfg)
+    h = p["embed"][tokens]  # [B, H]
+    new_k, new_v = [], []
+
+    def write_kv(cache, new):
+        # cache [B, n_kv, M, d], new [B, n_kv, d] at per-batch position.
+        def one(c, n, pos):
+            return jax.lax.dynamic_update_slice(c, n[:, None, :], (0, pos, 0))
+        return jax.vmap(one)(cache, new, cache_len)
+
+    for layer in range(cfg.n_layers):
+        # Per-sequence positions: token position = cache_len.
+        ln = rmsnorm(h, p[f"l{layer}.attn_norm"])
+        q = (ln @ p[f"l{layer}.wq"]).reshape(-1, cfg.n_heads, cfg.head_dim)
+        k = (ln @ p[f"l{layer}.wk"]).reshape(-1, cfg.n_kv_heads, cfg.head_dim)
+        v = (ln @ p[f"l{layer}.wv"]).reshape(-1, cfg.n_kv_heads, cfg.head_dim)
+        # RoPE at position cache_len (shape [B] -> [B,1] seq of one).
+        q = rope(q[:, None], cache_len[:, None], cfg.rope_theta)[:, 0]
+        k = rope(k[:, None], cache_len[:, None], cfg.rope_theta)[:, 0]
+
+        ck = write_kv(cache_k[layer], jnp.transpose(k, (0, 1, 2)))
+        cv = write_kv(cache_v[layer], v)
+        new_k.append(ck)
+        new_v.append(cv)
+
+        out = decode_attention(q, ck, cv, cache_len + 1)  # [B, n_heads, d]
+        h = h + out.reshape(-1, cfg.q_dim) @ p[f"l{layer}.wo"]
+        h = _mlp_block(h, p, layer)
+
+    logits = rmsnorm(h, p["final_norm"]) @ p["lm_head"]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def masked_prefix_chunk_attention(q, k_cache, v_cache, k_chunk, v_chunk,
+                                  prefix_len):
+    """Chunk attention with *dynamic* prefix length: queries attend to the
+    padded cache (positions < prefix_len valid) plus causally to the chunk.
+
+    Pure-jnp: the dynamic-length mask over the padded cache is a pattern
+    XLA fuses well; the static-shape hot paths use the Pallas kernels.
+    """
+    n_heads, chunk, d = q.shape
+    n_kv, max_len, _ = k_cache.shape
+    group = n_heads // n_kv
+    scale = 1.0 / math.sqrt(d)
+    k_all = jnp.concatenate([k_cache, k_chunk], axis=1)  # [n_kv, M+C, d]
+    v_all = jnp.concatenate([v_cache, v_chunk], axis=1)
+    k_exp = jnp.repeat(k_all, group, axis=0)
+    v_exp = jnp.repeat(v_all, group, axis=0)
+    logits = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                        k_exp.astype(jnp.float32)) * scale
+    kpos = jnp.arange(max_len + chunk)[None, :]
+    qpos = jnp.arange(chunk)[:, None]
+    valid_cache = kpos < prefix_len
+    in_chunk = (kpos >= max_len) & ((kpos - max_len) <= qpos)
+    mask = valid_cache | in_chunk
+    logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v_exp.astype(jnp.float32))
+
+
+def chunked_prefill(chunk_tokens, cache_k, cache_v, cache_len, flat_weights,
+                    cfg: ModelConfig = CFG):
+    """Restricted chunked prefill (batch = 1): process a prompt chunk
+    against the existing cache prefix and append its KV (§IV-D).
+
+    chunk_tokens [1, C] i32
+    cache_k/v    [L, 1, n_kv, M, d]
+    cache_len    [1] i32 — prefix length already cached
+    → (logits [1, C, V], new_cache_k, new_cache_v)
+    """
+    p = unpack(flat_weights, cfg)
+    _, c = chunk_tokens.shape
+    h = p["embed"][chunk_tokens[0]]  # [C, H]
+    prefix_len = cache_len[0]
+    positions = prefix_len + jnp.arange(c)
+
+    new_k, new_v = [], []
+    for layer in range(cfg.n_layers):
+        q, k, v = _project_qkv(h, p, layer, positions, cfg)
+        kc = jnp.transpose(k, (1, 0, 2))  # [n_kv, C, d]
+        vc = jnp.transpose(v, (1, 0, 2))
+        ck = jax.lax.dynamic_update_slice(
+            cache_k[layer, 0], kc, (0, prefix_len, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache_v[layer, 0], vc, (0, prefix_len, 0))
+        new_k.append(ck[None])
+        new_v.append(cv[None])
+        out = masked_prefix_chunk_attention(
+            jnp.transpose(q, (1, 0, 2)), ck, cv, kc, vc, prefix_len)
+        out = jnp.transpose(out, (1, 0, 2)).reshape(c, cfg.q_dim)
+        h = h + out @ p[f"l{layer}.wo"]
+        h = _mlp_block(h, p, layer)
+
+    logits = rmsnorm(h, p["final_norm"]) @ p["lm_head"]
+    return logits[None], jnp.stack(new_k), jnp.stack(new_v)

@@ -1,0 +1,70 @@
+"""AOT pipeline integrity: the build_artifacts() manifest must stay
+consistent with the model config (shapes the Rust loader relies on), and
+lowering must produce parseable HLO text with the expected entry signature.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    return aot.build_artifacts()
+
+
+def test_all_expected_artifacts_present(artifacts):
+    names = set(artifacts)
+    for s in aot.PREFILL_LENS:
+        assert f"prefill_s{s}" in names
+    assert "decode_b4" in names
+    assert f"chunked_prefill_c{aot.CHUNK}" in names
+
+
+def test_hlo_text_looks_like_hlo(artifacts):
+    for name, art in artifacts.items():
+        hlo = art["hlo"]
+        assert "HloModule" in hlo, name
+        assert "ENTRY" in hlo, name
+        assert len(hlo) > 10_000, f"{name} suspiciously small"
+
+
+def test_input_specs_match_model_config(artifacts):
+    cfg = M.CFG
+    nw = M.n_params(cfg)
+    d = artifacts["decode_b4"]
+    kinds = [i["kind"] for i in d["inputs"]]
+    assert kinds == ["tokens", "cache_k", "cache_v", "cache_len", "weights"]
+    cache = d["inputs"][1]["shape"]
+    assert cache == [cfg.n_layers, aot.DECODE_BATCH, cfg.n_kv_heads,
+                     aot.MAX_CACHE, cfg.head_dim]
+    assert d["inputs"][4]["shape"] == [nw]
+    logits = d["outputs"][0]["shape"]
+    assert logits == [aot.DECODE_BATCH, cfg.vocab]
+
+
+def test_prefill_output_shapes(artifacts):
+    cfg = M.CFG
+    for s in aot.PREFILL_LENS:
+        art = artifacts[f"prefill_s{s}"]
+        assert art["outputs"][0]["shape"] == [1, s, cfg.vocab]
+        assert art["outputs"][1]["shape"] == [cfg.n_layers, cfg.n_kv_heads,
+                                              s, cfg.head_dim]
+
+
+def test_weights_roundtrip_bytes():
+    w = M.init_weights(0)
+    raw = bytes(memoryview(jnp.asarray(w, jnp.float32)).cast("B"))
+    assert len(raw) == w.size * 4
+    back = jnp.frombuffer(raw, dtype=jnp.float32)
+    assert jnp.array_equal(back, w)
+
+
+def test_weights_deterministic_per_seed():
+    assert jnp.array_equal(M.init_weights(3), M.init_weights(3))
+    assert not jnp.array_equal(M.init_weights(3), M.init_weights(4))

@@ -1,0 +1,178 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles.
+
+This is the CORE correctness signal for the compute layer — the same
+kernels lower into every HLO artifact the Rust runtime serves.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import chunked_prefill_attention, decode_attention
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def split(key, n):
+    return jax.random.split(key, n)
+
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+class TestChunkedPrefill:
+    @pytest.mark.parametrize("prefix", [0, 1, 7, 40, 128])
+    @pytest.mark.parametrize("chunk", [1, 5, 16])
+    def test_matches_ref_across_lengths(self, prefix, chunk):
+        nh, nkv, d = 4, 2, 32
+        ks = split(jax.random.PRNGKey(prefix * 31 + chunk), 5)
+        q = rand(ks[0], (nh, chunk, d))
+        kp = rand(ks[1], (nkv, prefix, d))
+        vp = rand(ks[2], (nkv, prefix, d))
+        kc = rand(ks[3], (nkv, chunk, d))
+        vc = rand(ks[4], (nkv, chunk, d))
+        got = chunked_prefill_attention(q, kp, vp, kc, vc, kv_block=32)
+        want = ref.chunked_prefill_attention_ref(q, kp, vp, kc, vc)
+        assert jnp.allclose(got, want, **TOL), float(jnp.abs(got - want).max())
+
+    @pytest.mark.parametrize("kv_block", [8, 32, 128, 256])
+    def test_block_size_invariance(self, kv_block):
+        """Output must not depend on the VMEM tile size."""
+        nh, nkv, d = 4, 4, 16
+        ks = split(jax.random.PRNGKey(kv_block), 5)
+        q = rand(ks[0], (nh, 9, d))
+        kp = rand(ks[1], (nkv, 33, d))
+        vp = rand(ks[2], (nkv, 33, d))
+        kc = rand(ks[3], (nkv, 9, d))
+        vc = rand(ks[4], (nkv, 9, d))
+        got = chunked_prefill_attention(q, kp, vp, kc, vc, kv_block=kv_block)
+        want = ref.chunked_prefill_attention_ref(q, kp, vp, kc, vc)
+        assert jnp.allclose(got, want, **TOL)
+
+    def test_causality_within_chunk(self):
+        """Changing future chunk tokens must not affect earlier outputs."""
+        nh, nkv, d, chunk = 2, 1, 16, 8
+        ks = split(jax.random.PRNGKey(0), 5)
+        q = rand(ks[0], (nh, chunk, d))
+        kp = rand(ks[1], (nkv, 10, d))
+        vp = rand(ks[2], (nkv, 10, d))
+        kc = rand(ks[3], (nkv, chunk, d))
+        vc = rand(ks[4], (nkv, chunk, d))
+        base = chunked_prefill_attention(q, kp, vp, kc, vc, kv_block=16)
+        kc2 = kc.at[:, -1].set(99.0)
+        vc2 = vc.at[:, -1].set(-99.0)
+        mod = chunked_prefill_attention(q, kp, vp, kc2, vc2, kv_block=16)
+        # All but the last query position identical.
+        assert jnp.allclose(base[:, :-1], mod[:, :-1], **TOL)
+        assert not jnp.allclose(base[:, -1], mod[:, -1], **TOL)
+
+    def test_prefix_fully_visible(self):
+        """Every chunk position attends to the whole prefix."""
+        nh, nkv, d = 2, 2, 16
+        ks = split(jax.random.PRNGKey(3), 5)
+        q = rand(ks[0], (nh, 4, d))
+        kp = rand(ks[1], (nkv, 20, d))
+        vp = rand(ks[2], (nkv, 20, d))
+        kc = rand(ks[3], (nkv, 4, d))
+        vc = rand(ks[4], (nkv, 4, d))
+        base = chunked_prefill_attention(q, kp, vp, kc, vc, kv_block=16)
+        vp2 = vp.at[:, 0].add(10.0)  # perturb the first prefix value
+        mod = chunked_prefill_attention(q, kp, vp2, kc, vc, kv_block=16)
+        assert not jnp.allclose(base, mod, **TOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        nh_over_nkv=st.sampled_from([1, 2, 4]),
+        nkv=st.sampled_from([1, 2]),
+        prefix=st.integers(0, 70),
+        chunk=st.integers(1, 24),
+        d=st.sampled_from([8, 16, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, nh_over_nkv, nkv, prefix, chunk, d, seed):
+        nh = nh_over_nkv * nkv
+        ks = split(jax.random.PRNGKey(seed), 5)
+        q = rand(ks[0], (nh, chunk, d))
+        kp = rand(ks[1], (nkv, prefix, d))
+        vp = rand(ks[2], (nkv, prefix, d))
+        kc = rand(ks[3], (nkv, chunk, d))
+        vc = rand(ks[4], (nkv, chunk, d))
+        got = chunked_prefill_attention(q, kp, vp, kc, vc, kv_block=32)
+        want = ref.chunked_prefill_attention_ref(q, kp, vp, kc, vc)
+        assert jnp.allclose(got, want, **TOL), float(jnp.abs(got - want).max())
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("clen", [1, 2, 31, 32, 33, 96])
+    def test_matches_ref_across_lengths(self, clen):
+        b, nh, nkv, d, maxlen = 2, 4, 2, 32, 96
+        ks = split(jax.random.PRNGKey(clen), 3)
+        q = rand(ks[0], (b, nh, d))
+        kc = rand(ks[1], (b, nkv, maxlen, d))
+        vc = rand(ks[2], (b, nkv, maxlen, d))
+        lens = jnp.array([clen, maxlen], jnp.int32)
+        got = decode_attention(q, kc, vc, lens, kv_block=32)
+        want = jnp.stack([
+            ref.decode_attention_ref(q[i], kc[i], vc[i], lens[i])
+            for i in range(b)
+        ])
+        assert jnp.allclose(got, want, **TOL), float(jnp.abs(got - want).max())
+
+    def test_padding_is_ignored(self):
+        """Garbage beyond cache_len must not change the output."""
+        b, nh, nkv, d, maxlen = 1, 2, 1, 16, 64
+        ks = split(jax.random.PRNGKey(7), 3)
+        q = rand(ks[0], (b, nh, d))
+        kc = rand(ks[1], (b, nkv, maxlen, d))
+        vc = rand(ks[2], (b, nkv, maxlen, d))
+        lens = jnp.array([10], jnp.int32)
+        base = decode_attention(q, kc, vc, lens, kv_block=32)
+        kc2 = kc.at[:, :, 10:].set(1e4)
+        vc2 = vc.at[:, :, 10:].set(-1e4)
+        mod = decode_attention(q, kc2, vc2, lens, kv_block=32)
+        assert jnp.allclose(base, mod, **TOL)
+
+    def test_batch_entries_independent(self):
+        b, nh, nkv, d, maxlen = 3, 2, 2, 16, 32
+        ks = split(jax.random.PRNGKey(9), 3)
+        q = rand(ks[0], (b, nh, d))
+        kc = rand(ks[1], (b, nkv, maxlen, d))
+        vc = rand(ks[2], (b, nkv, maxlen, d))
+        lens = jnp.array([5, 20, 32], jnp.int32)
+        base = decode_attention(q, kc, vc, lens, kv_block=32)
+        # Perturb batch entry 1's VALUES (a uniform key shift would be
+        # softmax-invariant and change nothing).
+        vc2 = vc.at[1].add(3.0)
+        mod = decode_attention(q, kc, vc2, lens, kv_block=32)
+        assert jnp.allclose(base[0], mod[0], **TOL)
+        assert jnp.allclose(base[2], mod[2], **TOL)
+        assert not jnp.allclose(base[1], mod[1], **TOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        nh_over_nkv=st.sampled_from([1, 2]),
+        nkv=st.sampled_from([1, 2]),
+        maxlen=st.sampled_from([32, 64, 96]),
+        d=st.sampled_from([8, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, b, nh_over_nkv, nkv, maxlen, d, seed):
+        nh = nh_over_nkv * nkv
+        ks = split(jax.random.PRNGKey(seed), 4)
+        q = rand(ks[0], (b, nh, d))
+        kc = rand(ks[1], (b, nkv, maxlen, d))
+        vc = rand(ks[2], (b, nkv, maxlen, d))
+        lens = jax.random.randint(ks[3], (b,), 1, maxlen + 1).astype(jnp.int32)
+        got = decode_attention(q, kc, vc, lens, kv_block=32)
+        want = jnp.stack([
+            ref.decode_attention_ref(q[i], kc[i], vc[i], lens[i])
+            for i in range(b)
+        ])
+        assert jnp.allclose(got, want, **TOL), float(jnp.abs(got - want).max())

@@ -1,0 +1,136 @@
+"""L2 correctness: model entry-point consistency and shape contracts.
+
+The three AOT entry points must agree with each other: decoding token-by-
+token from a cache must produce the same logits as one full prefill, and
+chunked prefill must splice into the cache exactly as a full pass would.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.CFG
+TOL = dict(rtol=3e-4, atol=3e-4)
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return M.init_weights(0)
+
+
+def empty_cache(batch, max_len):
+    shape = (CFG.n_layers, batch, CFG.n_kv_heads, max_len, CFG.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def toks(key, n):
+    return jax.random.randint(key, (1, n), 0, CFG.vocab)
+
+
+class TestShapes:
+    def test_prefill_shapes(self, weights):
+        t = toks(jax.random.PRNGKey(0), 16)
+        logits, k, v = M.prefill(t, weights)
+        assert logits.shape == (1, 16, CFG.vocab)
+        assert k.shape == (CFG.n_layers, CFG.n_kv_heads, 16, CFG.head_dim)
+        assert v.shape == k.shape
+
+    def test_decode_shapes(self, weights):
+        B, MAXLEN = 4, 32
+        ck, cv = empty_cache(B, MAXLEN)
+        tokens = jnp.array([1, 2, 3, 4], jnp.int32)
+        lens = jnp.array([1, 5, 9, 13], jnp.int32)
+        logits, nk, nv = M.decode_step(tokens, ck, cv, lens, weights)
+        assert logits.shape == (B, CFG.vocab)
+        assert nk.shape == ck.shape and nv.shape == cv.shape
+
+    def test_param_count_matches_meta(self):
+        # ~3.2M params for the tiny model; manifest relies on this.
+        n = M.n_params()
+        assert n == M.init_weights(0).size
+        assert 3_000_000 < n < 3_500_000
+
+
+class TestConsistency:
+    def test_decode_continues_prefill(self, weights):
+        """prefill(S-1) + decode_step == prefill(S) final logits."""
+        S, MAXLEN = 12, 32
+        t = toks(jax.random.PRNGKey(1), S)
+        full, kf, vf = M.prefill(t, weights)
+
+        part, k1, v1 = M.prefill(t[:, : S - 1], weights)
+        ck, cv = empty_cache(1, MAXLEN)
+        ck = ck.at[:, 0, :, : S - 1].set(k1)
+        cv = cv.at[:, 0, :, : S - 1].set(v1)
+        logits, nk, nv = M.decode_step(
+            t[:, S - 1], ck, cv, jnp.array([S - 1], jnp.int32), weights
+        )
+        assert jnp.allclose(logits[0], full[0, -1], **TOL)
+        # The new KV must match the full prefill's last position.
+        assert jnp.allclose(nk[:, 0, :, S - 1], kf[:, :, S - 1], **TOL)
+
+    def test_chunked_prefill_matches_full(self, weights):
+        """prefill(head) + chunked_prefill(tail) == prefill(full)."""
+        S, split, MAXLEN = 14, 6, 32
+        t = toks(jax.random.PRNGKey(2), S)
+        full, kf, vf = M.prefill(t, weights)
+
+        head, kh, vh = M.prefill(t[:, :split], weights)
+        ck, cv = empty_cache(1, MAXLEN)
+        ck = ck.at[:, 0, :, :split].set(kh)
+        cv = cv.at[:, 0, :, :split].set(vh)
+        tail_logits, nk, nv = M.chunked_prefill(
+            t[:, split:], ck, cv, jnp.array([split], jnp.int32), weights
+        )
+        assert jnp.allclose(tail_logits[0], full[0, split:], **TOL)
+        assert jnp.allclose(nk[:, 0, :, :S], kf, **TOL)
+
+    def test_multi_step_decode_greedy_matches(self, weights):
+        """Greedy decode over 3 steps equals incremental prefill logits."""
+        S0, steps, MAXLEN = 6, 3, 32
+        t = toks(jax.random.PRNGKey(3), S0)
+        _, k0, v0 = M.prefill(t, weights)
+        ck, cv = empty_cache(1, MAXLEN)
+        ck = ck.at[:, 0, :, :S0].set(k0)
+        cv = cv.at[:, 0, :, :S0].set(v0)
+
+        seq = list(t[0].tolist())
+        cur = jnp.array([seq[-1]], jnp.int32)  # re-decode last prompt token?
+        # Decode from the prompt's last cached position: feed next tokens.
+        clen = S0
+        prev_logits, k_full, v_full = M.prefill(t, weights)
+        nxt = int(jnp.argmax(prev_logits[0, -1]))
+        for _ in range(steps):
+            logits, ck, cv = M.decode_step(
+                jnp.array([nxt], jnp.int32),
+                ck,
+                cv,
+                jnp.array([clen], jnp.int32),
+                weights,
+            )
+            seq.append(nxt)
+            clen += 1
+            # Check against a fresh full prefill over the extended sequence.
+            full_logits, _, _ = M.prefill(jnp.array([seq], jnp.int32), weights)
+            assert jnp.allclose(logits[0], full_logits[0, -1], **TOL)
+            nxt = int(jnp.argmax(logits[0]))
+
+    def test_batch_isolation_in_decode(self, weights):
+        """Decode lanes must not leak into each other."""
+        B, MAXLEN = 4, 32
+        ck, cv = empty_cache(B, MAXLEN)
+        key = jax.random.PRNGKey(4)
+        ck = ck.at[:].set(jax.random.normal(key, ck.shape) * 0.1)
+        lens = jnp.array([4, 8, 12, 16], jnp.int32)
+        tokens = jnp.array([7, 8, 9, 10], jnp.int32)
+        base, _, _ = M.decode_step(tokens, ck, cv, lens, weights)
+        # Change lane 2's cache; lanes 0,1,3 must be unaffected.
+        ck2 = ck.at[:, 2].add(1.0)
+        mod, _, _ = M.decode_step(tokens, ck2, cv, lens, weights)
+        for lane in [0, 1, 3]:
+            assert jnp.allclose(base[lane], mod[lane], **TOL)
+        assert not jnp.allclose(base[2], mod[2], **TOL)

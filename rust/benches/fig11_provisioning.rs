@@ -1,0 +1,95 @@
+//! Fig. 11 — provisioned vs required instance counts over time, and the
+//! Pearson correlation between them, for prefillers and decoders under
+//! each policy.
+//!
+//! Ground truth (paper §VI-B3): run with an overprovisioned static fleet
+//! and derive required instances from measured utilization × allocated
+//! capacity (prefill throughput for prefillers, memory occupancy for
+//! decoders).
+//!
+//! Paper's numbers: TokenScale r=0.63 (prefill) / 0.44 (decode), highest
+//! of all systems; DistServe second; AIBrix/BlitzScale fluctuate.
+
+use tokenscale::report::runner::RunOverrides;
+use tokenscale::report::{deployment, run_experiment, PolicyKind};
+use tokenscale::sim::{simulate, ClusterConfig, SimConfig, StaticCoordinator};
+use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::util::stats::pearson;
+use tokenscale::util::table::{fnum, Table};
+
+fn main() {
+    let dep = deployment("small-a100").unwrap();
+    let trace = generate_family(TraceFamily::AzureConv, 22.0, 300.0, 17);
+    let horizon = trace.duration_s;
+    let step = 1.0;
+
+    // Ground truth: big static fleet, required = utilization x allocated.
+    let fleet_p = 8usize;
+    let fleet_d = 8usize;
+    let mut static_coord = StaticCoordinator::new(fleet_p, fleet_d);
+    let cfg = SimConfig {
+        initial_prefillers: fleet_p,
+        initial_decoders: fleet_d,
+        link: dep.link.clone(),
+        ..Default::default()
+    };
+    let ccfg = ClusterConfig {
+        prefill_engine: dep.engine.clone(),
+        decode_engine: dep.engine.clone(),
+        startup_override_s: None,
+        max_gpus: 64,
+        convertible_chunk_size: 0,
+        convertible_reserve_tokens: 0.0,
+    };
+    let gt = simulate(cfg, ccfg, &mut static_coord, &trace);
+    let req_p: Vec<f64> = gt
+        .series
+        .prefill_compute
+        .resample(horizon, step, 0.0)
+        .iter()
+        .map(|u| (u * fleet_p as f64).max(1.0))
+        .collect();
+    let req_d: Vec<f64> = gt
+        .series
+        .decode_memory
+        .resample(horizon, step, 0.0)
+        .iter()
+        .map(|u| (u * fleet_d as f64).max(1.0))
+        .collect();
+
+    let mut t = Table::new("Fig. 11 — Pearson correlation: provisioned vs required instances")
+        .header(&["policy", "prefiller r", "decoder r", "mean prov P", "mean prov D"]);
+    let mut csv = Table::new("").header(&[
+        "t_s", "required_p", "required_d", "policy", "prov_p", "prov_d",
+    ]);
+
+    for policy in PolicyKind::all_baselines() {
+        let res = run_experiment(&dep, policy, &trace, &RunOverrides::default());
+        let prov_p = res.sim.prefiller_series.resample(horizon, step, 1.0);
+        let prov_d = res.sim.decoder_series.resample(horizon, step, 1.0);
+        let r_p = pearson(&prov_p, &req_p);
+        let r_d = pearson(&prov_d, &req_d);
+        t.row(vec![
+            policy.name().into(),
+            fnum(r_p, 2),
+            fnum(r_d, 2),
+            fnum(prov_p.iter().sum::<f64>() / prov_p.len() as f64, 2),
+            fnum(prov_d.iter().sum::<f64>() / prov_d.len() as f64, 2),
+        ]);
+        for (i, (p, d)) in prov_p.iter().zip(&prov_d).enumerate() {
+            csv.row(vec![
+                (i as f64 * step).to_string(),
+                fnum(req_p[i], 2),
+                fnum(req_d[i], 2),
+                policy.name().into(),
+                fnum(*p, 0),
+                fnum(*d, 0),
+            ]);
+        }
+        eprintln!("[fig11] {:11} r_p={r_p:.2} r_d={r_d:.2}", policy.name());
+    }
+    print!("{}", t.render());
+    t.save_csv("fig11_pearson").unwrap();
+    csv.save_csv("fig11_timeline").unwrap();
+    println!("CSV: results/fig11_pearson.csv, results/fig11_timeline.csv");
+}

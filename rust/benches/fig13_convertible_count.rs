@@ -1,0 +1,50 @@
+//! Fig. 13 — SLO attainment vs the number of Convertible Decoders (0–4)
+//! on the Mixed trace.
+//!
+//! Paper's shape: a large jump from 0 → 1 convertible decoder, then a
+//! plateau (burst sizes are bounded; one CD absorbs them).
+
+use tokenscale::report::runner::RunOverrides;
+use tokenscale::report::{deployment, run_experiment, PolicyKind};
+use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::util::table::{fnum, pct, Table};
+
+fn main() {
+    let dep = deployment("small-a100").unwrap();
+    let trace = generate_family(TraceFamily::Mixed, 22.0, 300.0, 29);
+    let mut t = Table::new("Fig. 13 — SLO attainment vs #Convertible Decoders")
+        .header(&["convertibles", "SLO att.", "TTFT att.", "TPOT att.", "avg GPUs"]);
+    let mut series = Vec::new();
+
+    for n in 0..=4usize {
+        let ov = RunOverrides {
+            convertibles: Some(n),
+            ..Default::default()
+        };
+        let res = run_experiment(&dep, PolicyKind::TokenScale, &trace, &ov);
+        let r = &res.report;
+        t.row(vec![
+            n.to_string(),
+            pct(r.overall_attainment),
+            pct(r.ttft_attainment),
+            pct(r.tpot_attainment),
+            fnum(r.avg_gpus, 2),
+        ]);
+        series.push((r.overall_attainment, r.ttft_attainment));
+        eprintln!(
+            "[fig13] cd={n} att={:.3} ttft={:.3}",
+            r.overall_attainment, r.ttft_attainment
+        );
+    }
+    print!("{}", t.render());
+    t.save_csv("fig13_convertible_count").unwrap();
+
+    let gain_0_to_1 = series[1].1 - series[0].1;
+    let gain_1_to_4 = series[4].1 - series[1].1;
+    println!(
+        "TTFT attainment gain 0→1 CD: {:+.1}pp; 1→4 CDs: {:+.1}pp (paper: big jump then plateau)",
+        gain_0_to_1 * 100.0,
+        gain_1_to_4 * 100.0
+    );
+    println!("CSV: results/fig13_convertible_count.csv");
+}

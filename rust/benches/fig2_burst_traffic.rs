@@ -1,0 +1,46 @@
+//! Fig. 2 — traffic (requests & tokens) vs the 1-minute running average on
+//! a production-code-style trace; bursts are the spikes above the
+//! trendline. Prints summary statistics and emits the full series to
+//! results/fig2_{requests,tokens}.csv.
+
+use tokenscale::trace::burst::{bin_traffic, burst_time_fraction, mean_burst_len_s, running_average};
+use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::util::table::{fnum, pct, Table};
+
+fn main() {
+    let trace = generate_family(TraceFamily::AzureCode, 22.0, 900.0, 2025);
+    let series = bin_traffic(&trace, 1.0);
+    let trend_req = running_average(&series.requests, 1.0, 60.0);
+    let trend_tok = running_average(&series.tokens, 1.0, 60.0);
+
+    let mut req_csv = Table::new("").header(&["t_s", "requests", "trend"]);
+    let mut tok_csv = Table::new("").header(&["t_s", "tokens", "trend"]);
+    for (i, (r, t)) in series.requests.iter().zip(&series.tokens).enumerate() {
+        req_csv.row(vec![i.to_string(), fnum(*r, 0), fnum(trend_req[i], 2)]);
+        tok_csv.row(vec![i.to_string(), fnum(*t, 0), fnum(trend_tok[i], 1)]);
+    }
+    req_csv.save_csv("fig2_requests").unwrap();
+    tok_csv.save_csv("fig2_tokens").unwrap();
+
+    let mut t = Table::new("Fig. 2 — burst structure of the code trace (paper: bursts 47% of time, ~2.3s each on Azure)")
+        .header(&["series", "burst time frac", "mean burst len", "peak/trend ratio"]);
+    for (name, xs, trend) in [
+        ("requests", &series.requests, &trend_req),
+        ("tokens", &series.tokens, &trend_tok),
+    ] {
+        let peak_ratio = xs
+            .iter()
+            .zip(trend)
+            .filter(|(_, tr)| **tr > 0.0)
+            .map(|(x, tr)| x / tr)
+            .fold(0.0f64, f64::max);
+        t.row(vec![
+            name.into(),
+            pct(burst_time_fraction(xs, 1.0, 60.0)),
+            format!("{:.1}s", mean_burst_len_s(xs, 1.0, 60.0)),
+            fnum(peak_ratio, 1),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("series CSVs: results/fig2_requests.csv, results/fig2_tokens.csv");
+}

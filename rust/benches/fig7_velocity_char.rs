@@ -1,0 +1,43 @@
+//! Fig. 7 — Token Velocity characterization of the prefill, network and
+//! decode stages for Qwen-2.5 {7B, 14B, 32B} on the A100 and H100
+//! clusters, all GPUs of a node devoted to one stage.
+//!
+//! Paper's conclusion: network velocity is far above both compute stages —
+//! the interconnect rarely bottlenecks PD disaggregation.
+
+use tokenscale::perfmodel::{catalog, EngineModel};
+use tokenscale::util::table::{fnum, Table};
+use tokenscale::velocity::VelocityProfile;
+
+fn main() {
+    // Node-level TP: 4 GPUs per A100 node, 8 per H100 node (§V).
+    let setups = [("a100-40g", "a100-cluster", 4usize), ("h100-80g", "h100-cluster", 8)];
+    let mut t = Table::new("Fig. 7 — Token Velocity by stage (tok/s, full node per stage)")
+        .header(&["cluster", "model", "V_P prefill", "V_N network", "V_D decode (min..max)"]);
+
+    for (gpu, link_name, tp) in setups {
+        for model in catalog::qwen_family() {
+            let engine = EngineModel::new(
+                catalog::model(model).unwrap(),
+                catalog::gpu(gpu).unwrap(),
+                tp,
+            );
+            let link = catalog::link(link_name).unwrap();
+            let p = VelocityProfile::analytic(&engine, &link, 1024);
+            let dmin = p.decode.iter().cloned().fold(f64::MAX, f64::min);
+            let dmax = p.decode.iter().cloned().fold(0.0f64, f64::max);
+            t.row(vec![
+                gpu.into(),
+                model.into(),
+                fnum(p.prefill, 0),
+                fnum(p.network, 0),
+                format!("{:.0}..{:.0}", dmin, dmax),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    t.save_csv("fig7_velocity_char").unwrap();
+
+    println!("\npaper shape check: V_N >> max(V_P, V_D) in every configuration");
+    println!("CSV: results/fig7_velocity_char.csv");
+}

@@ -1,0 +1,53 @@
+//! Fig. 9 — the headline end-to-end comparison: average utilized GPUs vs
+//! achieved SLO attainment for the four systems across the three traces
+//! on (a) the small setup (Llama-3.1-8B TP=1, 16-GPU A100 cluster) and
+//! (b) the large setup (Qwen-2.5-32B TP=4, 64-GPU A100 cluster).
+//!
+//! Paper's shape: TokenScale top-left (80–96 % attainment, 4–14 % fewer
+//! GPUs); AIBrix/BlitzScale overprovision; DistServe cheap but violating.
+
+use tokenscale::report::runner::RunOverrides;
+use tokenscale::report::{deployment, run_experiment, PolicyKind};
+use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::util::table::{fnum, pct, Table};
+
+fn main() {
+    let duration = std::env::var("FIG9_DURATION")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300.0);
+    let traces = [TraceFamily::AzureConv, TraceFamily::AzureCode, TraceFamily::Mixed];
+    let mut t = Table::new("Fig. 9 — SLO attainment vs avg GPUs (top-left is better)")
+        .header(&["setup", "trace", "policy", "SLO att.", "TTFT att.", "TPOT att.", "avg GPUs", "n"]);
+
+    for setup in ["small-a100", "large-a100"] {
+        let dep = deployment(setup).unwrap();
+        for family in traces {
+            let trace = generate_family(family, 22.0, duration, 42);
+            for policy in PolicyKind::all_baselines() {
+                let res = run_experiment(&dep, policy, &trace, &RunOverrides::default());
+                let r = &res.report;
+                t.row(vec![
+                    setup.into(),
+                    family.name().into(),
+                    policy.name().into(),
+                    pct(r.overall_attainment),
+                    pct(r.ttft_attainment),
+                    pct(r.tpot_attainment),
+                    fnum(r.avg_gpus, 2),
+                    r.n.to_string(),
+                ]);
+                eprintln!(
+                    "[fig9] {setup:11} {:10} {:10} att={:.3} gpus={:.2}",
+                    family.name(),
+                    policy.name(),
+                    r.overall_attainment,
+                    r.avg_gpus
+                );
+            }
+        }
+    }
+    print!("{}", t.render());
+    t.save_csv("fig9_end_to_end").unwrap();
+    println!("CSV: results/fig9_end_to_end.csv");
+}

@@ -1,0 +1,113 @@
+//! §Perf — hot-path microbenchmarks for the performance pass:
+//! simulator event throughput, router decision latency, scaler evaluation
+//! latency, trace generation rate, and (if artifacts exist) real-engine
+//! prefill/decode step latency.
+
+use std::sync::Arc;
+use tokenscale::coordinator::{router, RouterConfig, TokenScale, TokenScaleConfig};
+use tokenscale::perfmodel::{catalog, EngineModel};
+use tokenscale::report::bench::{human_time, BenchTimer};
+use tokenscale::report::runner::RunOverrides;
+use tokenscale::report::{deployment, run_experiment, PolicyKind};
+use tokenscale::sim::{Cluster, ClusterConfig, Coordinator, Role};
+use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::workload::{Request, SloPolicy};
+
+fn main() {
+    let timer = BenchTimer::new(2, 8);
+
+    // 1. End-to-end simulation throughput (the Fig. 9 inner loop).
+    let dep = deployment("small-a100").unwrap();
+    let trace = generate_family(TraceFamily::Mixed, 22.0, 120.0, 5);
+    let n_req = trace.requests.len();
+    let stats = timer.run(|| {
+        let r = run_experiment(&dep, PolicyKind::TokenScale, &trace, &RunOverrides::default());
+        std::hint::black_box(r.report.n);
+    });
+    println!("{}", stats.line("sim_e2e_tokenscale_120s_22rps"));
+    println!(
+        "  -> {:.0} simulated requests/s of wall time",
+        n_req as f64 / stats.p50_s
+    );
+
+    // 2. Router decision latency (Alg. 1) on a 16-instance cluster.
+    let engine = Arc::new(EngineModel::new(
+        catalog::model("llama-3.1-8b").unwrap(),
+        catalog::gpu("a100-40g").unwrap(),
+        1,
+    ));
+    let mut cluster = Cluster::new(ClusterConfig {
+        prefill_engine: engine.clone(),
+        decode_engine: engine.clone(),
+        startup_override_s: None,
+        max_gpus: 64,
+        convertible_chunk_size: 512,
+        convertible_reserve_tokens: 4096.0,
+    });
+    for _ in 0..8 {
+        cluster.spawn(Role::Prefiller, 0.0, Some(0.0));
+    }
+    for _ in 0..6 {
+        cluster.spawn(Role::Decoder, 0.0, Some(0.0));
+    }
+    for _ in 0..2 {
+        cluster.spawn(Role::ConvertibleDecoder, 0.0, Some(0.0));
+    }
+    let rcfg = RouterConfig {
+        prefill_velocity: 8000.0,
+        chunk_size: 512,
+        convertible_mem_threshold: 0.9,
+        slo: SloPolicy::default(),
+    };
+    let req = Request::new(1, 0.0, 1024, 200);
+    let inner = 10_000;
+    let stats = timer.run(|| {
+        for _ in 0..inner {
+            std::hint::black_box(router::route_prefill(&rcfg, &req, &cluster, false));
+        }
+    });
+    println!("{}", stats.line("router_route_prefill_x10k (16 instances)"));
+    println!("  -> {} per decision", human_time(stats.p50_s / inner as f64));
+
+    // 3. Scaler evaluation latency.
+    let link = catalog::link("a100-cluster").unwrap();
+    let mut ts = TokenScale::new(TokenScaleConfig::default(), &engine, &link, 1024, 900.0);
+    for i in 0..200 {
+        ts.observe_arrival(i as f64 * 0.01, &Request::new(i, i as f64 * 0.01, 512, 100));
+    }
+    let stats = timer.run(|| {
+        for _ in 0..inner {
+            std::hint::black_box(ts.scale(2.0, &cluster));
+        }
+    });
+    println!("{}", stats.line("tokenscale_scale_eval_x10k"));
+    println!("  -> {} per evaluation", human_time(stats.p50_s / inner as f64));
+
+    // 4. Trace generation rate.
+    let stats = timer.run(|| {
+        let t = generate_family(TraceFamily::Mixed, 22.0, 300.0, 9);
+        std::hint::black_box(t.requests.len());
+    });
+    println!("{}", stats.line("trace_gen_mixed_300s_22rps"));
+
+    // 5. Real engine steps (needs artifacts).
+    if tokenscale::runtime::artifacts_available() {
+        let dir = tokenscale::runtime::artifacts_dir();
+        let mut engine = tokenscale::runtime::RealEngine::load(&dir).unwrap();
+        let prompt: Vec<i32> = (0..48).map(|i| (i * 7) % 500).collect();
+        let stats = BenchTimer::new(1, 5).run(|| {
+            std::hint::black_box(engine.prefill(&prompt).unwrap());
+        });
+        println!("{}", stats.line("real_engine_prefill_48tok"));
+
+        let pre = engine.prefill(&prompt).unwrap();
+        let lane = engine.start_sequence(&pre).unwrap();
+        let stats = BenchTimer::new(1, 5).run(|| {
+            std::hint::black_box(engine.decode_iteration().unwrap());
+        });
+        engine.finish(lane);
+        println!("{}", stats.line("real_engine_decode_iter_b1"));
+    } else {
+        println!("real engine benches skipped (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,42 @@
+//! Table I — scaling thresholds for each system on each trace, derived
+//! exactly as §V describes (ratios of profiled capacities to trace
+//! statistics). Paper's Azure-conv row: BlitzScale 7/45 req, AIBrix
+//! 7 req/70%, DistServe 14/28 req/s, TokenScale 14K tok/s.
+
+use tokenscale::perfmodel::{catalog, EngineModel};
+use tokenscale::scaler::derive_thresholds;
+use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::util::table::Table;
+use tokenscale::velocity::VelocityProfile;
+
+fn main() {
+    let engine = EngineModel::new(
+        catalog::model("llama-3.1-8b").unwrap(),
+        catalog::gpu("a100-40g").unwrap(),
+        1,
+    );
+    let link = catalog::link("a100-cluster").unwrap();
+
+    let mut t = Table::new("Table I — derived scaling thresholds (Llama-3.1-8B TP=1, A100)")
+        .header(&["trace", "system", "prefiller", "decoder"]);
+    for family in [TraceFamily::AzureConv, TraceFamily::AzureCode, TraceFamily::Mixed] {
+        let trace = generate_family(family, 22.0, 300.0, 5);
+        let profile = VelocityProfile::analytic(&engine, &link, trace.avg_input_tokens() as usize);
+        let th = derive_thresholds(&trace, &engine, &profile);
+        t.row(vec![family.name().into(), "BlitzScale".into(),
+            format!("{:.0} req", th.concurrency_per_prefiller),
+            format!("{:.0} req", th.concurrency_per_decoder)]);
+        t.row(vec![family.name().into(), "AIBrix".into(),
+            format!("{:.0} req", th.concurrency_per_prefiller),
+            format!("{:.0}%", th.aibrix_mem_util * 100.0)]);
+        t.row(vec![family.name().into(), "DistServe".into(),
+            format!("{:.0} req/s", th.rps_per_prefiller),
+            format!("{:.0} req/s", th.rps_per_decoder)]);
+        t.row(vec![family.name().into(), "TokenScale".into(),
+            format!("{:.1}K tok/s", th.tokens_per_prefiller / 1e3),
+            "per-bucket V_D (Tab. II)".into()]);
+    }
+    print!("{}", t.render());
+    t.save_csv("table1_thresholds").unwrap();
+    println!("CSV: results/table1_thresholds.csv");
+}

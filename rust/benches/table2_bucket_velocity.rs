@@ -1,0 +1,56 @@
+//! Table II — per-bucket decode Token Velocity for Llama-3.1-8B (TP=1) and
+//! Qwen-2.5-32B (TP=4) on the A100 cluster, via BOTH the analytic model
+//! and the profiler's saturation sweep, compared against the paper's
+//! published values.
+
+use tokenscale::perfmodel::{catalog, EngineModel};
+use tokenscale::profiler::measure_decode_velocity;
+use tokenscale::util::table::{fnum, Table};
+use tokenscale::velocity::decode_velocity;
+use tokenscale::workload::{all_buckets, BucketScheme};
+
+/// Published Table II values (tok/s), row-major S-S..L-L order.
+const PAPER_LLAMA: [f64; 9] = [
+    23535.0, 8146.0, 5138.0, 33106.0, 9794.0, 5766.0, 39551.0, 11310.0, 6495.0,
+];
+const PAPER_QWEN: [f64; 9] = [
+    17500.0, 8401.0, 6667.0, 24917.0, 12536.0, 8812.0, 24044.0, 11547.0, 9128.0,
+];
+
+fn main() {
+    let setups = [
+        ("Llama-3.1-8B TP=1", "llama-3.1-8b", 1usize, &PAPER_LLAMA),
+        ("Qwen-2.5-32B TP=4", "qwen-2.5-32b", 4, &PAPER_QWEN),
+    ];
+    let scheme = BucketScheme::default();
+
+    for (label, model, tp, paper) in setups {
+        let engine = EngineModel::new(
+            catalog::model(model).unwrap(),
+            catalog::gpu("a100-40g").unwrap(),
+            tp,
+        );
+        let mut t = Table::new(&format!("Table II — decode Token Velocity (tok/s): {label} on A100"))
+            .header(&["bucket", "in-out", "paper", "analytic", "measured", "ratio vs paper"]);
+        let mut worst: f64 = 1.0;
+        for b in all_buckets() {
+            let (i, o) = scheme.representative(b);
+            let analytic = decode_velocity(&engine, i, o);
+            let measured = measure_decode_velocity(&engine, i, o, 48);
+            let ratio = measured / paper[b.index()];
+            worst = worst.max(ratio.max(1.0 / ratio));
+            t.row(vec![
+                b.label(),
+                format!("{i}-{o}"),
+                fnum(paper[b.index()], 0),
+                fnum(analytic, 0),
+                fnum(measured, 0),
+                fnum(ratio, 2),
+            ]);
+        }
+        print!("{}", t.render());
+        println!("worst-case deviation from paper: {:.2}x\n", worst);
+        t.save_csv(&format!("table2_{}", model.replace('.', "_"))).unwrap();
+    }
+    println!("CSV: results/table2_llama-3_1-8b.csv, results/table2_qwen-2_5-32b.csv");
+}

@@ -1,0 +1,104 @@
+//! Tiny flag parser: `--key value` / `--flag` pairs after a subcommand.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = iter.next();
+            }
+        }
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                anyhow::ensure!(!key.is_empty(), "empty flag");
+                // Value if the next token isn't a flag; boolean otherwise.
+                let value = match iter.peek() {
+                    Some(v) if !v.starts_with("--") => iter.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                args.flags.insert(key.to_string(), value);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_f64(&self, key: &str) -> anyhow::Result<Option<f64>> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("--{key} expects a number, got `{v}`"))
+            })
+            .transpose()
+    }
+
+    pub fn get_usize(&self, key: &str) -> anyhow::Result<Option<usize>> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got `{v}`"))
+            })
+            .transpose()
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["simulate", "--rps", "22", "--policy", "tokenscale", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get("rps"), Some("22"));
+        assert_eq!(a.get_f64("rps").unwrap(), Some(22.0));
+        assert_eq!(a.get("policy"), Some("tokenscale"));
+        assert!(a.get_bool("verbose"));
+        assert!(!a.get_bool("quiet"));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.subcommand, None);
+        assert!(a.get_bool("help"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["x", "--rps", "fast"]);
+        assert!(a.get_f64("rps").is_err());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse(&["x", "--delta", "-3"]);
+        assert_eq!(a.get_f64("delta").unwrap(), Some(-3.0));
+    }
+}

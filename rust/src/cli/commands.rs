@@ -1,0 +1,246 @@
+//! Subcommand implementations for the `tokenscale` launcher.
+
+use super::args::Args;
+use crate::config::ExperimentConfig;
+use crate::report::{deployment, run_experiment, PolicyKind};
+use crate::report::runner::RunOverrides;
+use crate::trace::{generate_family, TraceFamily};
+use crate::util::table::{fnum, pct, Table};
+use crate::velocity::VelocityProfile;
+use crate::workload::{all_buckets, BucketScheme};
+
+const USAGE: &str = "tokenscale — TokenScale paper reproduction (CS.DC 2025)
+
+USAGE:
+    tokenscale <SUBCOMMAND> [--flag value ...]
+
+SUBCOMMANDS:
+    simulate    Run one policy over a trace on the simulated cluster
+                  --config FILE | --deployment D --trace T --policy P
+                  --rps R --duration S --seed N [--convertibles N]
+                  [--accuracy A]
+    compare     Run all four policies on the same trace (Fig. 9 style)
+                  [same flags as simulate, policy ignored]
+    profile     Print the velocity profile for a deployment (Tab. II style)
+                  --deployment D
+    thresholds  Print derived baseline thresholds (Tab. I style)
+                  --deployment D --trace T --rps R
+    trace       Generate a trace and print its burst statistics
+                  --trace T --rps R --duration S [--seed N]
+    serve       Serve real requests through the PJRT engine (needs
+                  `make artifacts`)  [--requests N] [--tokens N]
+    help        Show this message
+";
+
+/// Entry point used by main.rs; returns the process exit code.
+pub fn run_cli(argv: Vec<String>) -> i32 {
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            return 2;
+        }
+    };
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    let result = match sub.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "compare" => cmd_compare(&args),
+        "profile" => cmd_profile(&args),
+        "thresholds" => cmd_thresholds(&args),
+        "trace" => cmd_trace(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand `{other}`\n{USAGE}");
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(v) = args.get("deployment") {
+        cfg.deployment = v.to_string();
+    }
+    if let Some(v) = args.get("trace") {
+        cfg.trace = v.to_string();
+    }
+    if let Some(v) = args.get("policy") {
+        cfg.policy = v.to_string();
+    }
+    if let Some(v) = args.get_f64("rps")? {
+        cfg.rps = v;
+    }
+    if let Some(v) = args.get_f64("duration")? {
+        cfg.duration_s = v;
+    }
+    if let Some(v) = args.get_usize("seed")? {
+        cfg.seed = v as u64;
+    }
+    if let Some(v) = args.get_usize("convertibles")? {
+        cfg.convertibles = Some(v);
+    }
+    if let Some(v) = args.get_f64("accuracy")? {
+        cfg.predictor_accuracy = Some(v);
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn run_one(cfg: &ExperimentConfig, policy: PolicyKind) -> anyhow::Result<crate::report::ExperimentResult> {
+    let dep = deployment(&cfg.deployment)
+        .ok_or_else(|| anyhow::anyhow!("unknown deployment"))?;
+    let family = TraceFamily::parse(&cfg.trace).ok_or_else(|| anyhow::anyhow!("unknown trace"))?;
+    let trace = generate_family(family, cfg.rps, cfg.duration_s, cfg.seed);
+    let ov = RunOverrides {
+        convertibles: cfg.convertibles,
+        predictor_accuracy: cfg.predictor_accuracy,
+        warmup_s: cfg.warmup_s,
+        ..Default::default()
+    };
+    Ok(run_experiment(&dep, policy, &trace, &ov))
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from_args(args)?;
+    let policy = PolicyKind::parse(&cfg.policy).unwrap();
+    let res = run_one(&cfg, policy)?;
+    let r = &res.report;
+    println!(
+        "== {} | {} | {} @ {} rps for {}s ==",
+        policy.name(),
+        cfg.deployment,
+        cfg.trace,
+        cfg.rps,
+        cfg.duration_s
+    );
+    println!("requests completed : {}", r.n);
+    println!("SLO attainment     : {} (TTFT {}, TPOT {})",
+        pct(r.overall_attainment), pct(r.ttft_attainment), pct(r.tpot_attainment));
+    println!("avg GPUs           : {:.2}", r.avg_gpus);
+    println!("TTFT p50/p99       : {:.0} / {:.0} ms", r.ttft.p50 * 1e3, r.ttft.p99 * 1e3);
+    println!("TPOT p50/p99       : {:.1} / {:.1} ms", r.tpot.p50 * 1e3, r.tpot.p99 * 1e3);
+    println!("scale ups/downs    : {} / {}", res.sim.scale_ups, res.sim.scale_downs);
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from_args(args)?;
+    let mut table = Table::new(&format!(
+        "policy comparison | {} | {} @ {} rps",
+        cfg.deployment, cfg.trace, cfg.rps
+    ))
+    .header(&["policy", "SLO att.", "TTFT att.", "TPOT att.", "avg GPUs", "n"]);
+    for policy in PolicyKind::all_baselines() {
+        let res = run_one(&cfg, policy)?;
+        let r = &res.report;
+        table.row(vec![
+            policy.name().into(),
+            pct(r.overall_attainment),
+            pct(r.ttft_attainment),
+            pct(r.tpot_attainment),
+            fnum(r.avg_gpus, 2),
+            r.n.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let name = args.get("deployment").unwrap_or("small-a100");
+    let dep = deployment(name).ok_or_else(|| anyhow::anyhow!("unknown deployment {name}"))?;
+    let profile = VelocityProfile::analytic(&dep.engine, &dep.link, 1024);
+    println!("== velocity profile: {} ({} TP={}) ==", dep.name, dep.engine.model.name, dep.engine.tp);
+    println!("prefill velocity V_P : {:.0} tok/s", profile.prefill);
+    println!("network velocity V_N : {:.0} tok/s", profile.network);
+    let scheme = BucketScheme::default();
+    let mut t = Table::new("decode velocity V_D per bucket (Tab. II)")
+        .header(&["bucket", "input", "output", "V_D tok/s"]);
+    for b in all_buckets() {
+        let (i, o) = scheme.representative(b);
+        t.row(vec![
+            b.label(),
+            i.to_string(),
+            o.to_string(),
+            fnum(profile.decode[b.index()], 0),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_thresholds(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from_args(args)?;
+    let dep = deployment(&cfg.deployment).unwrap();
+    let family = TraceFamily::parse(&cfg.trace).unwrap();
+    let trace = generate_family(family, cfg.rps, cfg.duration_s.min(120.0), cfg.seed);
+    let profile = VelocityProfile::analytic(&dep.engine, &dep.link, trace.avg_input_tokens() as usize);
+    let th = crate::scaler::derive_thresholds(&trace, &dep.engine, &profile);
+    let mut t = Table::new(&format!("scaling thresholds (Tab. I) | {} | {}", cfg.deployment, cfg.trace))
+        .header(&["system", "prefiller", "decoder"]);
+    t.row(vec!["BlitzScale".into(), format!("{:.0} req", th.concurrency_per_prefiller), format!("{:.0} req", th.concurrency_per_decoder)]);
+    t.row(vec!["AIBrix".into(), format!("{:.0} req", th.concurrency_per_prefiller), format!("{:.0}%", th.aibrix_mem_util * 100.0)]);
+    t.row(vec!["DistServe".into(), format!("{:.0} req/s", th.rps_per_prefiller), format!("{:.0} req/s", th.rps_per_decoder)]);
+    t.row(vec!["TokenScale".into(), format!("{:.0} tok/s", th.tokens_per_prefiller), "per-bucket V_D".into()]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from_args(args)?;
+    let family = TraceFamily::parse(&cfg.trace).unwrap();
+    let trace = generate_family(family, cfg.rps, cfg.duration_s, cfg.seed);
+    let series = crate::trace::burst::bin_traffic(&trace, 1.0);
+    println!("== trace {} | {} requests over {}s ==", cfg.trace, trace.requests.len(), cfg.duration_s);
+    println!("avg rps            : {:.2}", trace.avg_rps());
+    println!("avg input tokens   : {:.0}", trace.avg_input_tokens());
+    println!("avg output tokens  : {:.0}", trace.avg_output_tokens());
+    println!("input token rate   : {:.0} tok/s", trace.avg_input_tps());
+    println!(
+        "burst time fraction: {}",
+        pct(crate::trace::burst::burst_time_fraction(&series.requests, 1.0, 60.0))
+    );
+    println!(
+        "mean burst length  : {:.1}s",
+        crate::trace::burst::mean_burst_len_s(&series.requests, 1.0, 60.0)
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        crate::runtime::artifacts_available(),
+        "artifacts/ missing — run `make artifacts` first"
+    );
+    let n = args.get_usize("requests")?.unwrap_or(8);
+    let out_tokens = args.get_usize("tokens")?.unwrap_or(8);
+    let requests: Vec<crate::server::ServeRequest> = (0..n as u64)
+        .map(|i| crate::server::ServeRequest {
+            id: i,
+            prompt: (0..(5 + (i as i32 % 10) * 4)).map(|t| (t * 31 + i as i32 * 7) % 500).collect(),
+            max_new_tokens: out_tokens,
+        })
+        .collect();
+    println!("serving {n} requests on the real PJRT engine ...");
+    let report = crate::server::PdServer::serve_all(requests)?;
+    println!("completed          : {}", report.completions.len());
+    println!("wall time          : {:.2}s", report.wall_s);
+    println!("decode throughput  : {:.1} tok/s", report.throughput_tps());
+    println!("mean TTFT          : {:.1} ms", report.mean_ttft() * 1e3);
+    println!("mean TPOT          : {:.1} ms", report.mean_tpot() * 1e3);
+    Ok(())
+}

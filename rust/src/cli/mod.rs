@@ -1,0 +1,8 @@
+//! Hand-rolled CLI (clap is unavailable offline): flag parsing plus the
+//! subcommand implementations behind the `tokenscale` binary.
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+pub use commands::run_cli;

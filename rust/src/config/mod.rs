@@ -1,0 +1,162 @@
+//! Experiment configuration: a typed config loadable from JSON files
+//! and overridable from CLI flags — the launcher's single source of truth.
+
+use crate::util::json::Json;
+
+/// One experiment's full configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    /// Deployment preset name (`small-a100`, `large-a100`, `h100`).
+    pub deployment: String,
+    /// Trace family (`azure-conv`, `azure-code`, `burstgpt-1/2`, `mixed`).
+    pub trace: String,
+    /// Control plane (`tokenscale`, `aibrix`, `blitzscale`, `distserve`).
+    pub policy: String,
+    /// Average request rate after sampling (§V: 22 RPS).
+    pub rps: f64,
+    /// Trace duration, seconds.
+    pub duration_s: f64,
+    pub seed: u64,
+    /// Warmup excluded from SLO reports.
+    pub warmup_s: f64,
+    /// TokenScale-only overrides.
+    pub convertibles: Option<usize>,
+    pub predictor_accuracy: Option<f64>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            deployment: "small-a100".into(),
+            trace: "mixed".into(),
+            policy: "tokenscale".into(),
+            rps: 22.0,
+            duration_s: 300.0,
+            seed: 42,
+            warmup_s: 10.0,
+            convertibles: None,
+            predictor_accuracy: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from a JSON object; missing fields keep defaults.
+    pub fn from_json(j: &Json) -> anyhow::Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(v) = j.get("deployment").and_then(Json::as_str) {
+            cfg.deployment = v.to_string();
+        }
+        if let Some(v) = j.get("trace").and_then(Json::as_str) {
+            cfg.trace = v.to_string();
+        }
+        if let Some(v) = j.get("policy").and_then(Json::as_str) {
+            cfg.policy = v.to_string();
+        }
+        if let Some(v) = j.get("rps").and_then(Json::as_f64) {
+            cfg.rps = v;
+        }
+        if let Some(v) = j.get("duration_s").and_then(Json::as_f64) {
+            cfg.duration_s = v;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_f64) {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = j.get("warmup_s").and_then(Json::as_f64) {
+            cfg.warmup_s = v;
+        }
+        if let Some(v) = j.get("convertibles").and_then(Json::as_f64) {
+            cfg.convertibles = Some(v as usize);
+        }
+        if let Some(v) = j.get("predictor_accuracy").and_then(Json::as_f64) {
+            cfg.predictor_accuracy = Some(v);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            crate::report::deployment(&self.deployment).is_some(),
+            "unknown deployment `{}`",
+            self.deployment
+        );
+        anyhow::ensure!(
+            crate::trace::TraceFamily::parse(&self.trace).is_some(),
+            "unknown trace `{}`",
+            self.trace
+        );
+        anyhow::ensure!(
+            crate::report::PolicyKind::parse(&self.policy).is_some(),
+            "unknown policy `{}`",
+            self.policy
+        );
+        anyhow::ensure!(self.rps > 0.0, "rps must be positive");
+        anyhow::ensure!(self.duration_s > 0.0, "duration must be positive");
+        if let Some(a) = self.predictor_accuracy {
+            anyhow::ensure!((0.0..=1.0).contains(&a), "accuracy in [0,1]");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("deployment", self.deployment.as_str())
+            .set("trace", self.trace.as_str())
+            .set("policy", self.policy.as_str())
+            .set("rps", self.rps)
+            .set("duration_s", self.duration_s)
+            .set("seed", self.seed)
+            .set("warmup_s", self.warmup_s);
+        if let Some(c) = self.convertibles {
+            j = j.set("convertibles", c);
+        }
+        if let Some(a) = self.predictor_accuracy {
+            j = j.set("predictor_accuracy", a);
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.convertibles = Some(2);
+        cfg.predictor_accuracy = Some(0.7);
+        let j = cfg.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let j = Json::parse(r#"{"policy":"distserve","rps":10}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.policy, "distserve");
+        assert_eq!(cfg.rps, 10.0);
+        assert_eq!(cfg.deployment, "small-a100");
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        for bad in [
+            r#"{"policy":"nope"}"#,
+            r#"{"deployment":"tpu"}"#,
+            r#"{"trace":"x"}"#,
+            r#"{"rps":-1}"#,
+            r#"{"predictor_accuracy":1.5}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_json(&j).is_err(), "{bad}");
+        }
+    }
+}

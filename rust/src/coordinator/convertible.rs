@@ -1,0 +1,129 @@
+//! Convertible Decoder management (§III-D, §IV-D): SLO-aware restricted
+//! chunked prefill — chunk sizing, convertible prefill velocity (Eq. 5)
+//! and the Eq. 6 memory reserve.
+
+use crate::perfmodel::EngineModel;
+
+/// Offline chunk-size profiling (§IV-D): the largest chunk such that one
+/// chunked iteration (prefill chunk co-located with a typical decode
+/// batch) still meets the TPOT SLO. Mirrors the paper's procedure of
+/// growing the chunk until TPOT violation occurs.
+pub fn profile_chunk_size(
+    engine: &EngineModel,
+    typical_batch: usize,
+    typical_ctx: f64,
+    tpot_slo_s: f64,
+) -> usize {
+    let mut best = 0usize;
+    // Exponential probe then binary refine.
+    let mut lo = 0usize;
+    let mut hi = 16usize;
+    while engine.chunked_iter_time(hi, typical_batch, typical_ctx) <= tpot_slo_s {
+        best = hi;
+        lo = hi;
+        hi *= 2;
+        if hi > 1 << 20 {
+            break;
+        }
+    }
+    while lo + 1 < hi {
+        let mid = (lo + hi) / 2;
+        if engine.chunked_iter_time(mid, typical_batch, typical_ctx) <= tpot_slo_s {
+            best = mid;
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    best
+}
+
+/// Eq. 5: the Convertible Decoder's prefill Token Velocity:
+/// `V_D^P' = (chunk_size − batch_size) / TPOT_SLO` (tokens/s available for
+/// prefill work while decode meets its SLO).
+pub fn convertible_prefill_velocity(
+    chunk_size: usize,
+    decode_batch_size: usize,
+    tpot_slo_s: f64,
+) -> f64 {
+    if tpot_slo_s <= 0.0 {
+        return 0.0;
+    }
+    chunk_size.saturating_sub(decode_batch_size) as f64 / tpot_slo_s
+}
+
+/// Eq. 6 expressed in KV tokens: the reserve a Convertible Decoder holds
+/// for burst prefill, `V_D^P' × TTFT_SLO` tokens (the paper multiplies by
+/// `Mem_T` to get bytes; our memory accounting is in tokens).
+pub fn convertible_reserve_tokens(v_prefill: f64, ttft_slo_s: f64) -> f64 {
+    (v_prefill * ttft_slo_s).max(0.0)
+}
+
+/// Average decode batch size estimate used by Eq. 5 offline: available KV
+/// capacity divided by the average per-request footprint (§IV-D).
+pub fn estimate_decode_batch(engine: &EngineModel, avg_request_tokens: f64) -> usize {
+    if avg_request_tokens <= 0.0 {
+        return 1;
+    }
+    ((engine.kv_capacity_tokens() / avg_request_tokens).floor() as usize).clamp(1, 256)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::catalog;
+
+    fn llama_a100() -> EngineModel {
+        EngineModel::new(
+            catalog::model("llama-3.1-8b").unwrap(),
+            catalog::gpu("a100-40g").unwrap(),
+            1,
+        )
+    }
+
+    #[test]
+    fn chunk_size_meets_tpot() {
+        let e = llama_a100();
+        let chunk = profile_chunk_size(&e, 64, 800.0, 0.100);
+        assert!(chunk > 0, "chunk={chunk}");
+        // Verification: chosen chunk meets SLO, chunk+margin does not.
+        assert!(e.chunked_iter_time(chunk, 64, 800.0) <= 0.100);
+        assert!(e.chunked_iter_time(chunk + chunk / 4 + 64, 64, 800.0) > 0.100);
+    }
+
+    #[test]
+    fn chunk_shrinks_with_tighter_slo() {
+        let e = llama_a100();
+        let loose = profile_chunk_size(&e, 64, 800.0, 0.100);
+        let tight = profile_chunk_size(&e, 64, 800.0, 0.050);
+        assert!(tight < loose, "tight={tight} loose={loose}");
+    }
+
+    #[test]
+    fn chunk_zero_when_slo_unmeetable() {
+        let e = llama_a100();
+        // 1 µs TPOT can't even cover the weight stream.
+        assert_eq!(profile_chunk_size(&e, 64, 800.0, 1e-6), 0);
+    }
+
+    #[test]
+    fn eq5_velocity() {
+        assert_eq!(convertible_prefill_velocity(512, 64, 0.1), 4480.0);
+        assert_eq!(convertible_prefill_velocity(64, 512, 0.1), 0.0); // saturating
+    }
+
+    #[test]
+    fn eq6_reserve() {
+        let v = convertible_prefill_velocity(512, 64, 0.1);
+        let r = convertible_reserve_tokens(v, 0.4);
+        assert!((r - 1792.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_estimate_bounds() {
+        let e = llama_a100();
+        let b = estimate_decode_batch(&e, 900.0);
+        assert!((1..=256).contains(&b));
+        assert_eq!(estimate_decode_batch(&e, 0.0), 1);
+    }
+}

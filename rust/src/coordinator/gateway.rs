@@ -1,0 +1,178 @@
+//! Gateway (§IV-A ①): records incoming request/token rates, predicts
+//! output lengths, and maintains the per-bucket combined token-rate
+//! windows the Scaler consumes.
+
+use crate::util::stats::{Ewma, SlidingWindow};
+use crate::workload::{Bucket, OutputPredictor, Request};
+
+/// Traffic statistics at the gateway.
+pub struct Gateway {
+    /// Input-token arrival rate window (λ for Eq. 2).
+    input_tokens: SlidingWindow,
+    /// Request arrival rate window.
+    requests: SlidingWindow,
+    /// Per-bucket combined (input + predicted output) token-rate windows
+    /// (λ'_b for Eq. 3).
+    bucket_tokens: Vec<SlidingWindow>,
+    /// Output predictor (simulated accuracy, §V).
+    pub predictor: OutputPredictor,
+    /// Long-baseline EWMA of the token rate for burst detection.
+    baseline: Ewma,
+    /// Burst detection factor: rate > factor × baseline ⇒ burst.
+    pub burst_factor: f64,
+    last_rate: f64,
+    /// Detector ticks seen; the baseline bootstraps during the first few.
+    ticks: usize,
+}
+
+impl Gateway {
+    pub fn new(window_s: f64, decode_window_s: f64, predictor: OutputPredictor) -> Gateway {
+        Gateway {
+            input_tokens: SlidingWindow::new(window_s),
+            requests: SlidingWindow::new(window_s),
+            bucket_tokens: (0..9).map(|_| SlidingWindow::new(decode_window_s)).collect(),
+            predictor,
+            baseline: Ewma::with_half_life(30.0),
+            burst_factor: 1.8,
+            last_rate: 0.0,
+            ticks: 0,
+        }
+    }
+
+    /// Ingest a request: returns its predicted bucket.
+    pub fn ingest(&mut self, now: f64, req: &Request) -> Bucket {
+        self.input_tokens.push(now, req.input_tokens as f64);
+        self.requests.push(now, 1.0);
+        let bucket = self
+            .predictor
+            .predict_bucket(req.input_tokens, req.output_tokens);
+        let predicted_out = match bucket.output {
+            crate::workload::LenClass::Short => 100usize,
+            crate::workload::LenClass::Medium => 350,
+            crate::workload::LenClass::Long => 610,
+        };
+        self.bucket_tokens[bucket.index()].push(now, (req.input_tokens + predicted_out) as f64);
+        bucket
+    }
+
+    /// Input-token arrival rate λ (tok/s) over the short window.
+    pub fn input_token_rate(&mut self, now: f64) -> f64 {
+        self.input_tokens.evict(now);
+        let rate = self.input_tokens.rate();
+        self.last_rate = rate;
+        rate
+    }
+
+    /// Request rate (req/s).
+    pub fn request_rate(&mut self, now: f64) -> f64 {
+        self.requests.evict(now);
+        self.requests.rate()
+    }
+
+    /// Per-bucket λ'_b combined token rates (tok/s).
+    pub fn bucket_token_rates(&mut self, now: f64) -> [f64; 9] {
+        let mut out = [0.0; 9];
+        for (i, w) in self.bucket_tokens.iter_mut().enumerate() {
+            w.evict(now);
+            out[i] = w.rate();
+        }
+        out
+    }
+
+    /// Update the burst baseline (call once per control tick) and report
+    /// whether the system is currently inside a burst.
+    pub fn tick_burst_detector(&mut self, now: f64) -> bool {
+        let rate = self.input_token_rate(now);
+        self.ticks += 1;
+        // Bootstrap: converge the baseline quickly before arming the
+        // detector (a cold detector would flag the initial ramp forever,
+        // because burst samples barely move the baseline).
+        if self.ticks <= 5 {
+            let base = self.baseline.get_or(rate);
+            // Set directly (EWMA alpha is too slow for cold start).
+            self.baseline.reset();
+            self.baseline.update(0.5 * base + 0.5 * rate);
+            return false;
+        }
+        let base = self.baseline.get_or(rate.max(1.0));
+        let bursting = rate > self.burst_factor * base && rate > 0.0;
+        // Don't fold burst samples fully into the baseline (they would
+        // inflate it and mask sustained bursts).
+        if bursting {
+            self.baseline.update(base + 0.1 * (rate - base));
+        } else {
+            self.baseline.update(rate);
+        }
+        bursting
+    }
+
+    /// Instantaneous burst check against the current baseline.
+    pub fn is_burst(&self) -> bool {
+        let base = self.baseline.get_or(f64::MAX);
+        self.last_rate > self.burst_factor * base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::OutputPredictor;
+
+    fn gw() -> Gateway {
+        Gateway::new(1.0, 5.0, OutputPredictor::new(1.0, 42))
+    }
+
+    fn req(id: u64, t: f64, input: usize, output: usize) -> Request {
+        Request::new(id, t, input, output)
+    }
+
+    #[test]
+    fn token_rate_tracks_window() {
+        let mut g = gw();
+        for i in 0..10 {
+            g.ingest(i as f64 * 0.1, &req(i, i as f64 * 0.1, 100, 50));
+        }
+        let rate = g.input_token_rate(0.95);
+        assert!((rate - 1000.0).abs() < 150.0, "rate={rate}");
+    }
+
+    #[test]
+    fn bucket_rates_follow_prediction() {
+        let mut g = gw();
+        // 256-in/100-out -> S-S bucket with perfect predictor.
+        g.ingest(0.0, &req(1, 0.0, 256, 100));
+        let rates = g.bucket_token_rates(0.1);
+        let ss = crate::workload::Bucket::new(
+            crate::workload::LenClass::Short,
+            crate::workload::LenClass::Short,
+        );
+        assert!(rates[ss.index()] > 0.0);
+        assert_eq!(rates.iter().filter(|r| **r > 0.0).count(), 1);
+    }
+
+    #[test]
+    fn burst_detector_fires_on_spike() {
+        let mut g = gw();
+        // Stable 1000 tok/s for 30 ticks.
+        let mut t = 0.0;
+        for i in 0..300 {
+            t = i as f64 * 0.1;
+            g.ingest(t, &req(i as u64, t, 100, 50));
+            if i % 10 == 0 {
+                let fired = g.tick_burst_detector(t);
+                assert!(
+                    !fired || i < 20,
+                    "i={i} rate={} baseline={:?}",
+                    g.last_rate,
+                    g.baseline.get()
+                );
+            }
+        }
+        // Spike: 10x tokens in the next 0.5 s.
+        for k in 0..50 {
+            let tt = t + 0.01 * k as f64;
+            g.ingest(tt, &req(1000 + k as u64, tt, 1000, 50));
+        }
+        assert!(g.tick_burst_detector(t + 0.5), "burst not detected");
+    }
+}

@@ -1,0 +1,16 @@
+//! The TokenScale control plane (§IV): Gateway, Router (Alg. 1), the
+//! Convertible Decoder calculators (Eqs. 5–6), and the full coordinator
+//! wiring them to the Scaler.
+
+pub mod convertible;
+pub mod gateway;
+pub mod router;
+pub mod tokenscale;
+
+pub use convertible::{
+    convertible_prefill_velocity, convertible_reserve_tokens, estimate_decode_batch,
+    profile_chunk_size,
+};
+pub use gateway::Gateway;
+pub use router::RouterConfig;
+pub use tokenscale::{TokenScale, TokenScaleConfig};

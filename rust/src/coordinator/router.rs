@@ -1,0 +1,254 @@
+//! Routing / load balancing (§IV-E): Alg. 1's two-round prefill routing
+//! (prefillers first, Convertible Decoders second, queue otherwise) and
+//! the per-type least-in-flight decode balancer.
+
+use super::convertible::convertible_prefill_velocity;
+use crate::sim::{Cluster, InstanceId, Role, Route};
+use crate::workload::{Bucket, Request, SloPolicy};
+
+/// Router configuration.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Offline-profiled prefill velocity per prefiller (V_P, tok/s).
+    pub prefill_velocity: f64,
+    /// Profiled convertible chunk size (tokens/iteration).
+    pub chunk_size: usize,
+    /// Memory-utilization threshold above which Convertible Decoders stop
+    /// accepting new work (§IV-E2).
+    pub convertible_mem_threshold: f64,
+    pub slo: SloPolicy,
+}
+
+/// Alg. 1: route a prefill task.
+///
+/// Round 1 — pick the prefiller whose estimated waiting time
+/// (`inflight_tokens / V_P`) is smallest, if it meets the request's TTFT
+/// SLO. Round 2 — same over Convertible Decoders using the Eq. 5 velocity.
+/// Otherwise queue.
+///
+/// During a detected burst (`bursting`, §IV-A: "burst requests will be
+/// routed directly to the Convertible Decoders"), the two rounds collapse
+/// into a single minimum-waiting-time choice across both pools so the
+/// burst excess spills to the Convertible Decoders *before* prefiller
+/// queues approach the SLO boundary.
+pub fn route_prefill(
+    cfg: &RouterConfig,
+    req: &Request,
+    cluster: &Cluster,
+    bursting: bool,
+) -> Route {
+    let slo = cfg.slo.ttft_slo(req.input_tokens);
+
+    // Round 1: prefillers.
+    let mut best_p: Option<(f64, InstanceId)> = None;
+    for p in cluster.running_of(Role::Prefiller) {
+        let waiting = (p.inflight_prefill_tokens() + req.input_tokens) as f64 / cfg.prefill_velocity;
+        if waiting <= slo && best_p.map_or(true, |(w, _)| waiting < w) {
+            best_p = Some((waiting, p.id));
+        }
+    }
+    if !bursting {
+        if let Some((_, id)) = best_p {
+            return Route::Prefiller(id);
+        }
+    }
+
+    // Round 2: Convertible Decoders.
+    let mut best_c: Option<(f64, InstanceId)> = None;
+    for d in cluster.running_of(Role::ConvertibleDecoder) {
+        if d.mem_utilization() > cfg.convertible_mem_threshold {
+            continue;
+        }
+        let v = convertible_prefill_velocity(cfg.chunk_size, d.decode_load(), cfg.slo.tpot_s);
+        if v <= 0.0 {
+            continue;
+        }
+        let waiting = (d.inflight_prefill_tokens() + req.input_tokens) as f64 / v;
+        if waiting <= slo && best_c.map_or(true, |(w, _)| waiting < w) {
+            best_c = Some((waiting, d.id));
+        }
+    }
+
+    match (best_p, best_c) {
+        (Some((wp, p)), Some((wc, c))) => {
+            if bursting && wc < wp {
+                Route::Convertible(c)
+            } else {
+                Route::Prefiller(p)
+            }
+        }
+        (Some((_, p)), None) => Route::Prefiller(p),
+        (None, Some((_, c))) => Route::Convertible(c),
+        // Alg. 1 line 15: wait for an available prefiller.
+        (None, None) => Route::Queue,
+    }
+}
+
+/// §IV-E2 decode load balancing: route to the decoder with the fewest
+/// in-flight requests of the request's predicted type; Convertible
+/// Decoders are excluded above the memory threshold, and regular decoders
+/// are preferred at equal type-load (keeping convertibles' headroom for
+/// bursts).
+pub fn route_decode(
+    cfg: &RouterConfig,
+    req: &Request,
+    bucket: Bucket,
+    cluster: &Cluster,
+) -> Option<InstanceId> {
+    let need = req.total_tokens();
+    let mut best: Option<(usize, usize, InstanceId)> = None; // (type_load, is_convertible, id)
+    for d in cluster
+        .running_of(Role::Decoder)
+        .chain(cluster.running_of(Role::ConvertibleDecoder))
+    {
+        if !d.can_admit(need) {
+            continue;
+        }
+        let conv = d.role == Role::ConvertibleDecoder;
+        if conv && d.mem_utilization() > cfg.convertible_mem_threshold {
+            continue;
+        }
+        let key = (d.inflight_of_bucket(bucket.index()), conv as usize, d.id);
+        if best.map_or(true, |b| (key.0, key.1) < (b.0, b.1)) {
+            best = Some(key);
+        }
+    }
+    best.map(|(_, _, id)| id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::{catalog, EngineModel};
+    use crate::sim::{Cluster, ClusterConfig};
+    use crate::workload::{LenClass, Request};
+    use std::sync::Arc;
+
+    fn mk_cluster(prefillers: usize, decoders: usize, convertibles: usize) -> Cluster {
+        let engine = Arc::new(EngineModel::new(
+            catalog::model("llama-3.1-8b").unwrap(),
+            catalog::gpu("a100-40g").unwrap(),
+            1,
+        ));
+        let mut c = Cluster::new(ClusterConfig {
+            prefill_engine: engine.clone(),
+            decode_engine: engine,
+            startup_override_s: None,
+            max_gpus: 64,
+            convertible_chunk_size: 512,
+            convertible_reserve_tokens: 4096.0,
+        });
+        for _ in 0..prefillers {
+            c.spawn(Role::Prefiller, 0.0, Some(0.0));
+        }
+        for _ in 0..decoders {
+            c.spawn(Role::Decoder, 0.0, Some(0.0));
+        }
+        for _ in 0..convertibles {
+            c.spawn(Role::ConvertibleDecoder, 0.0, Some(0.0));
+        }
+        c
+    }
+
+    fn cfg() -> RouterConfig {
+        RouterConfig {
+            prefill_velocity: 10_000.0,
+            chunk_size: 512,
+            convertible_mem_threshold: 0.9,
+            slo: SloPolicy::default(),
+        }
+    }
+
+    #[test]
+    fn idle_prefiller_wins_round1() {
+        let cluster = mk_cluster(2, 1, 1);
+        let req = Request::new(1, 0.0, 200, 50);
+        match route_prefill(&cfg(), &req, &cluster, false) {
+            Route::Prefiller(_) => {}
+            other => panic!("expected prefiller, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn saturated_prefillers_overflow_to_convertible() {
+        let mut cluster = mk_cluster(1, 1, 1);
+        // Load the only prefiller far beyond the SLO horizon:
+        // waiting = 10_000_000/10_000 = 1000 s >> any TTFT SLO.
+        let pid = cluster.ids_of(Role::Prefiller)[0];
+        cluster.get_mut(pid).unwrap().prefill_queue.push_back(crate::sim::PrefillJob {
+            req: Request::new(99, 0.0, 10_000_000, 1),
+            remaining: 10_000_000,
+            enqueued_at: 0.0,
+        });
+        let req = Request::new(1, 0.0, 200, 50);
+        match route_prefill(&cfg(), &req, &cluster, false) {
+            Route::Convertible(_) => {}
+            other => panic!("expected convertible, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn everything_saturated_queues() {
+        let mut cluster = mk_cluster(1, 1, 1);
+        let pid = cluster.ids_of(Role::Prefiller)[0];
+        cluster.get_mut(pid).unwrap().prefill_queue.push_back(crate::sim::PrefillJob {
+            req: Request::new(99, 0.0, 10_000_000, 1),
+            remaining: 10_000_000,
+            enqueued_at: 0.0,
+        });
+        let cid = cluster.ids_of(Role::ConvertibleDecoder)[0];
+        cluster.get_mut(cid).unwrap().prefill_queue.push_back(crate::sim::PrefillJob {
+            req: Request::new(98, 0.0, 10_000_000, 1),
+            remaining: 10_000_000,
+            enqueued_at: 0.0,
+        });
+        let req = Request::new(1, 0.0, 200, 50);
+        assert_eq!(route_prefill(&cfg(), &req, &cluster, false), Route::Queue);
+    }
+
+    #[test]
+    fn decode_prefers_least_type_load_and_regular() {
+        let mut cluster = mk_cluster(1, 2, 1);
+        let ids = cluster.ids_of(Role::Decoder);
+        let bucket = Bucket::new(LenClass::Short, LenClass::Short);
+        // Give decoder 0 two requests of this type.
+        for k in 0..2 {
+            let seq = crate::sim::ActiveSeq {
+                req: Request::new(10 + k, 0.0, 100, 50),
+                generated: 0,
+                ctx: 100,
+                first_token_at: None,
+                predicted_bucket: bucket.index(),
+            };
+            cluster.get_mut(ids[0]).unwrap().admit(seq);
+        }
+        let req = Request::new(1, 0.0, 100, 50);
+        let picked = route_decode(&cfg(), &req, bucket, &cluster).unwrap();
+        assert_eq!(picked, ids[1], "least-loaded regular decoder wins");
+    }
+
+    #[test]
+    fn convertible_excluded_above_mem_threshold() {
+        let mut cluster = mk_cluster(1, 0, 1);
+        let cid = cluster.ids_of(Role::ConvertibleDecoder)[0];
+        let cap = {
+            let inst = cluster.get(cid).unwrap();
+            inst.engine.kv_capacity_tokens()
+        };
+        cluster.get_mut(cid).unwrap().reserved_tokens = cap * 0.95;
+        let req = Request::new(1, 0.0, 100, 50);
+        let bucket = Bucket::new(LenClass::Short, LenClass::Short);
+        assert_eq!(route_decode(&cfg(), &req, bucket, &cluster), None);
+    }
+
+    #[test]
+    fn full_decoder_not_picked() {
+        let mut cluster = mk_cluster(1, 1, 0);
+        let id = cluster.ids_of(Role::Decoder)[0];
+        let cap = cluster.get(id).unwrap().engine.kv_capacity_tokens();
+        cluster.get_mut(id).unwrap().reserved_tokens = cap;
+        let req = Request::new(1, 0.0, 100, 50);
+        let bucket = Bucket::new(LenClass::Short, LenClass::Short);
+        assert_eq!(route_decode(&cfg(), &req, bucket, &cluster), None);
+    }
+}

@@ -1,0 +1,268 @@
+//! The complete TokenScale control plane (§IV): Gateway + Router + Scaler
+//! + Convertible Decoder management, implemented as a simulator
+//! [`Coordinator`] so it drives the same mechanics as every baseline.
+
+use super::convertible::{
+    convertible_prefill_velocity, convertible_reserve_tokens, estimate_decode_batch,
+    profile_chunk_size,
+};
+use super::gateway::Gateway;
+use super::router::{self, RouterConfig};
+use crate::perfmodel::{EngineModel, LinkSpec};
+use crate::scaler::tokenscale::{
+    required_decoders, required_prefillers, regular_decoders, Hysteresis,
+};
+use crate::sim::{Cluster, Coordinator, InstanceId, Role, Route, ScaleTargets};
+use crate::velocity::VelocityProfile;
+use crate::workload::{OutputPredictor, Request, SloPolicy};
+
+/// TokenScale configuration knobs (with the paper's defaults).
+#[derive(Clone, Debug)]
+pub struct TokenScaleConfig {
+    /// Sliding-window length for the prefill-side λ (short: prefillers
+    /// must react within the TTFT budget).
+    pub prefill_window_s: f64,
+    /// Sliding-window length for per-bucket decode rates (decoders
+    /// tolerate seconds of delay, R2).
+    pub decode_window_s: f64,
+    /// Scale-down hysteresis, in control ticks.
+    pub down_delay_ticks: usize,
+    /// Convertible Decoder memory cutoff for new admissions.
+    pub convertible_mem_threshold: f64,
+    /// Output predictor accuracy (the paper simulates ~85 %).
+    pub predictor_accuracy: f64,
+    pub predictor_seed: u64,
+    /// Number of statically provisioned Convertible Decoders.
+    pub convertibles: usize,
+    /// Floor for the regular fleets.
+    pub min_prefillers: usize,
+    pub min_decoders: usize,
+    pub slo: SloPolicy,
+}
+
+impl Default for TokenScaleConfig {
+    fn default() -> Self {
+        TokenScaleConfig {
+            prefill_window_s: 1.0,
+            decode_window_s: 5.0,
+            down_delay_ticks: 20,
+            convertible_mem_threshold: 0.9,
+            predictor_accuracy: 0.85,
+            predictor_seed: 0xC0FFEE,
+            convertibles: 1,
+            min_prefillers: 1,
+            min_decoders: 1,
+            slo: SloPolicy::default(),
+        }
+    }
+}
+
+/// The TokenScale coordinator.
+pub struct TokenScale {
+    pub cfg: TokenScaleConfig,
+    pub profile: VelocityProfile,
+    gateway: Gateway,
+    router_cfg: RouterConfig,
+    prefill_hyst: Hysteresis,
+    decode_hyst: Hysteresis,
+    /// Profiled chunk size for Convertible Decoders.
+    pub chunk_size: usize,
+    /// Eq. 6 reserve (KV tokens) each Convertible Decoder holds.
+    pub reserve_tokens: f64,
+}
+
+impl TokenScale {
+    /// Build a TokenScale control plane for a deployment: performs the
+    /// "offline profiling" (analytic velocity profile + chunk sizing) the
+    /// paper's Offline Profiler does on hardware.
+    pub fn new(
+        cfg: TokenScaleConfig,
+        engine: &EngineModel,
+        link: &LinkSpec,
+        avg_prompt_tokens: usize,
+        avg_request_tokens: f64,
+    ) -> TokenScale {
+        let profile = VelocityProfile::analytic(engine, link, avg_prompt_tokens);
+        let typical_batch = estimate_decode_batch(engine, avg_request_tokens);
+        let chunk_size = profile_chunk_size(
+            engine,
+            typical_batch.min(64),
+            avg_request_tokens.max(128.0),
+            cfg.slo.tpot_s,
+        );
+        let v_conv = convertible_prefill_velocity(chunk_size, typical_batch.min(64), cfg.slo.tpot_s);
+        let reserve = convertible_reserve_tokens(v_conv, cfg.slo.ttft_medium_s);
+        let gateway = Gateway::new(
+            cfg.prefill_window_s,
+            cfg.decode_window_s,
+            OutputPredictor::new(cfg.predictor_accuracy, cfg.predictor_seed),
+        );
+        let router_cfg = RouterConfig {
+            prefill_velocity: profile.prefill,
+            chunk_size,
+            convertible_mem_threshold: cfg.convertible_mem_threshold,
+            slo: cfg.slo,
+        };
+        TokenScale {
+            prefill_hyst: Hysteresis::new(cfg.down_delay_ticks),
+            decode_hyst: Hysteresis::new(cfg.down_delay_ticks),
+            gateway,
+            router_cfg,
+            chunk_size,
+            reserve_tokens: reserve,
+            profile,
+            cfg,
+        }
+    }
+
+    /// The velocity profile in use (for reports and Table II).
+    pub fn velocity_profile(&self) -> &VelocityProfile {
+        &self.profile
+    }
+}
+
+impl Coordinator for TokenScale {
+    fn name(&self) -> &str {
+        "tokenscale"
+    }
+
+    fn observe_arrival(&mut self, now: f64, req: &Request) {
+        self.gateway.ingest(now, req);
+    }
+
+    fn route_prefill(&mut self, _now: f64, req: &Request, cluster: &Cluster) -> Route {
+        router::route_prefill(&self.router_cfg, req, cluster, self.gateway.is_burst())
+    }
+
+    fn route_decode(&mut self, _now: f64, req: &Request, cluster: &Cluster) -> Option<InstanceId> {
+        let bucket = self
+            .gateway
+            .predictor
+            .predict_bucket(req.input_tokens, req.output_tokens);
+        router::route_decode(&self.router_cfg, req, bucket, cluster)
+    }
+
+    fn scale(&mut self, now: f64, cluster: &Cluster) -> ScaleTargets {
+        self.gateway.tick_burst_detector(now);
+
+        // Eq. 2: prefillers from the input-token rate.
+        let lambda = self.gateway.input_token_rate(now);
+        let p_target = required_prefillers(lambda, &self.profile).max(self.cfg.min_prefillers);
+        let cur_p = cluster.active_count(Role::Prefiller);
+        let prefillers = self.prefill_hyst.apply(cur_p, p_target);
+
+        // Eqs. 3–4: decoders from per-bucket combined token rates, minus
+        // the static convertible pool.
+        let per_bucket = self.gateway.bucket_token_rates(now);
+        let d_total = required_decoders(&per_bucket, &self.profile);
+        let d_target =
+            regular_decoders(d_total, self.cfg.convertibles).max(self.cfg.min_decoders);
+        let cur_d = cluster.active_count(Role::Decoder);
+        let decoders = self.decode_hyst.apply(cur_d, d_target);
+
+        ScaleTargets {
+            prefillers,
+            decoders,
+        }
+    }
+
+    fn predict_bucket(&mut self, req: &Request) -> usize {
+        self.gateway
+            .predictor
+            .predict_bucket(req.input_tokens, req.output_tokens)
+            .index()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::catalog;
+
+    fn mk() -> TokenScale {
+        let engine = EngineModel::new(
+            catalog::model("llama-3.1-8b").unwrap(),
+            catalog::gpu("a100-40g").unwrap(),
+            1,
+        );
+        let link = catalog::link("a100-cluster").unwrap();
+        TokenScale::new(TokenScaleConfig::default(), &engine, &link, 1024, 900.0)
+    }
+
+    #[test]
+    fn offline_profiling_produces_sane_values() {
+        let ts = mk();
+        assert!(ts.chunk_size > 0);
+        assert!(ts.reserve_tokens > 0.0);
+        assert!(ts.profile.prefill > 1_000.0);
+        assert!(ts.profile.network > ts.profile.prefill);
+    }
+
+    #[test]
+    fn scale_grows_with_token_rate() {
+        use crate::sim::{Cluster, ClusterConfig};
+        use std::sync::Arc;
+        let engine = Arc::new(EngineModel::new(
+            catalog::model("llama-3.1-8b").unwrap(),
+            catalog::gpu("a100-40g").unwrap(),
+            1,
+        ));
+        let mut cluster = Cluster::new(ClusterConfig {
+            prefill_engine: engine.clone(),
+            decode_engine: engine,
+            startup_override_s: None,
+            max_gpus: 64,
+            convertible_chunk_size: 512,
+            convertible_reserve_tokens: 4096.0,
+        });
+        cluster.spawn(Role::Prefiller, 0.0, Some(0.0));
+        cluster.spawn(Role::Decoder, 0.0, Some(0.0));
+
+        let mut ts = mk();
+        // Feed a heavy token stream: 40 req × 4096 tok within 1 s.
+        for i in 0..40 {
+            let r = Request::new(i, i as f64 * 0.02, 4096, 200);
+            ts.observe_arrival(r.arrival, &r);
+        }
+        let targets = ts.scale(0.9, &cluster);
+        assert!(
+            targets.prefillers > 1,
+            "high token rate must scale prefillers, got {}",
+            targets.prefillers
+        );
+    }
+
+    #[test]
+    fn scale_down_is_delayed() {
+        use crate::sim::{Cluster, ClusterConfig};
+        use std::sync::Arc;
+        let engine = Arc::new(EngineModel::new(
+            catalog::model("llama-3.1-8b").unwrap(),
+            catalog::gpu("a100-40g").unwrap(),
+            1,
+        ));
+        let mut cluster = Cluster::new(ClusterConfig {
+            prefill_engine: engine.clone(),
+            decode_engine: engine,
+            startup_override_s: None,
+            max_gpus: 64,
+            convertible_chunk_size: 512,
+            convertible_reserve_tokens: 4096.0,
+        });
+        for _ in 0..4 {
+            cluster.spawn(Role::Prefiller, 0.0, Some(0.0));
+        }
+        cluster.spawn(Role::Decoder, 0.0, Some(0.0));
+        let mut ts = mk();
+        // No traffic at all: target collapses to min, but hysteresis holds
+        // for down_delay_ticks evaluations.
+        let t1 = ts.scale(0.0, &cluster);
+        assert_eq!(t1.prefillers, 4, "first tick holds");
+        for k in 1..ts.cfg.down_delay_ticks - 1 {
+            let t = ts.scale(k as f64 * 0.25, &cluster);
+            assert_eq!(t.prefillers, 4, "tick {k} holds");
+        }
+        let t_final = ts.scale(5.0, &cluster);
+        assert_eq!(t_final.prefillers, ts.cfg.min_prefillers);
+    }
+}

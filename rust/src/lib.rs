@@ -1,0 +1,35 @@
+//! # TokenScale — reproduction library
+//!
+//! A production-shaped reproduction of *TokenScale: Timely and Accurate
+//! Autoscaling for Disaggregated LLM Serving with Token Velocity*
+//! (CS.DC 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the TokenScale control plane: gateway, burst
+//!   detector, Alg. 1 router, Token-Velocity autoscalers (Eqs. 2–4),
+//!   Convertible Decoders (Eqs. 5–6), the baseline policies it is compared
+//!   against (AIBrix, BlitzScale, DistServe), a discrete-event cluster
+//!   simulator standing in for the paper's GPU testbed, and a PJRT runtime
+//!   that serves a real (tiny) model AOT-compiled from JAX.
+//! - **L2 (`python/compile/model.py`)** — JAX transformer (prefill, decode,
+//!   chunked-prefill steps) lowered once to HLO text artifacts.
+//! - **L1 (`python/compile/kernels/`)** — Pallas attention kernels
+//!   (chunked-prefill + decode) with a pure-jnp oracle.
+//!
+//! See DESIGN.md for the experiment index and substitution notes, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod perfmodel;
+pub mod profiler;
+pub mod report;
+pub mod runtime;
+pub mod server;
+pub mod scaler;
+pub mod sim;
+pub mod trace;
+pub mod util;
+pub mod velocity;
+pub mod workload;

@@ -1,0 +1,7 @@
+//! `tokenscale` launcher: simulate / compare / profile / thresholds /
+//! trace / serve. See `tokenscale help`.
+
+fn main() {
+    let code = tokenscale::cli::run_cli(std::env::args().skip(1).collect());
+    std::process::exit(code);
+}

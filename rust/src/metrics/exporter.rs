@@ -1,0 +1,89 @@
+//! Prometheus-text-format metric export (the paper integrates with
+//! Prometheus for compatibility with vLLM's monitoring; we emit the same
+//! exposition format so the control plane stays scrape-compatible).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A registry of gauges/counters rendered in Prometheus exposition format.
+#[derive(Clone, Debug, Default)]
+pub struct PromRegistry {
+    gauges: BTreeMap<String, (String, Vec<(Vec<(String, String)>, f64)>)>,
+}
+
+impl PromRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set a gauge value with labels; replaces any previous sample with the
+    /// same label set.
+    pub fn set_gauge(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        let entry = self
+            .gauges
+            .entry(name.to_string())
+            .or_insert_with(|| (help.to_string(), Vec::new()));
+        let key: Vec<(String, String)> = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        if let Some(slot) = entry.1.iter_mut().find(|(k, _)| *k == key) {
+            slot.1 = value;
+        } else {
+            entry.1.push((key, value));
+        }
+    }
+
+    /// Render the exposition text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, (help, samples)) in &self.gauges {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            for (labels, value) in samples {
+                if labels.is_empty() {
+                    let _ = writeln!(out, "{name} {value}");
+                } else {
+                    let lab = labels
+                        .iter()
+                        .map(|(k, v)| format!("{k}=\"{v}\""))
+                        .collect::<Vec<_>>()
+                        .join(",");
+                    let _ = writeln!(out, "{name}{{{lab}}} {value}");
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_exposition_format() {
+        let mut r = PromRegistry::new();
+        r.set_gauge(
+            "tokenscale_prefillers",
+            "Active prefiller instances",
+            &[("cluster", "a100")],
+            3.0,
+        );
+        r.set_gauge("tokenscale_token_rate", "Incoming tok/s", &[], 14000.0);
+        let text = r.render();
+        assert!(text.contains("# TYPE tokenscale_prefillers gauge"));
+        assert!(text.contains("tokenscale_prefillers{cluster=\"a100\"} 3"));
+        assert!(text.contains("tokenscale_token_rate 14000"));
+    }
+
+    #[test]
+    fn same_labels_overwrite() {
+        let mut r = PromRegistry::new();
+        r.set_gauge("g", "h", &[("a", "b")], 1.0);
+        r.set_gauge("g", "h", &[("a", "b")], 2.0);
+        let text = r.render();
+        assert_eq!(text.matches("g{a=\"b\"}").count(), 1);
+        assert!(text.contains("g{a=\"b\"} 2"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Metrics subsystem: per-request latency recording, SLO attainment, GPU
+//! cost accounting, time series, and Prometheus-style text export.
+
+pub mod exporter;
+pub mod recorder;
+pub mod series;
+
+pub use recorder::{MetricsRecorder, SloReport};
+pub use series::TimeSeries;

@@ -1,0 +1,145 @@
+//! Completion recording and SLO attainment reporting.
+
+use crate::util::stats::Summary;
+use crate::workload::{Completion, SloPolicy};
+
+/// Collects completions and GPU-time, and produces the attainment/cost
+/// numbers every end-to-end experiment reports (Fig. 9, 14, 15).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRecorder {
+    pub completions: Vec<Completion>,
+    /// Integral of (allocated GPUs) dt, in GPU-seconds.
+    pub gpu_seconds: f64,
+    /// Wall-clock horizon the gpu_seconds integral covers.
+    pub horizon_s: f64,
+    /// Requests rejected/dropped (should stay 0; tracked for failure
+    /// injection tests).
+    pub dropped: usize,
+}
+
+/// Aggregated SLO report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SloReport {
+    pub n: usize,
+    /// Fraction of requests meeting their TTFT SLO.
+    pub ttft_attainment: f64,
+    /// Fraction meeting the TPOT SLO.
+    pub tpot_attainment: f64,
+    /// Fraction meeting both.
+    pub overall_attainment: f64,
+    /// Time-averaged GPU count over the horizon.
+    pub avg_gpus: f64,
+    pub ttft: Summary,
+    pub tpot: Summary,
+}
+
+impl MetricsRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, c: Completion) {
+        self.completions.push(c);
+    }
+
+    pub fn add_gpu_time(&mut self, gpus: f64, dt: f64) {
+        debug_assert!(dt >= -1e-9, "negative dt {dt}");
+        self.gpu_seconds += gpus * dt.max(0.0);
+    }
+
+    /// Produce the report under an SLO policy. `warmup_s` drops requests
+    /// arriving before that time (cold-start transient).
+    pub fn report(&self, slo: &SloPolicy, warmup_s: f64) -> SloReport {
+        let completions: Vec<&Completion> = self
+            .completions
+            .iter()
+            .filter(|c| c.arrival >= warmup_s)
+            .collect();
+        let n = completions.len();
+        if n == 0 {
+            return SloReport {
+                avg_gpus: if self.horizon_s > 0.0 {
+                    self.gpu_seconds / self.horizon_s
+                } else {
+                    0.0
+                },
+                ..Default::default()
+            };
+        }
+        let ttft_ok = completions.iter().filter(|c| c.ttft_ok(slo)).count();
+        let tpot_ok = completions.iter().filter(|c| c.tpot_ok(slo)).count();
+        let both_ok = completions.iter().filter(|c| c.slo_ok(slo)).count();
+        let ttfts: Vec<f64> = completions.iter().map(|c| c.ttft).collect();
+        let tpots: Vec<f64> = completions
+            .iter()
+            .filter(|c| c.output_tokens > 1)
+            .map(|c| c.tpot)
+            .collect();
+        SloReport {
+            n,
+            ttft_attainment: ttft_ok as f64 / n as f64,
+            tpot_attainment: tpot_ok as f64 / n as f64,
+            overall_attainment: both_ok as f64 / n as f64,
+            avg_gpus: if self.horizon_s > 0.0 {
+                self.gpu_seconds / self.horizon_s
+            } else {
+                0.0
+            },
+            ttft: Summary::of(&ttfts),
+            tpot: Summary::of(&tpots),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(arrival: f64, input: usize, ttft: f64, tpot: f64) -> Completion {
+        Completion {
+            id: 0,
+            arrival,
+            input_tokens: input,
+            output_tokens: 10,
+            ttft,
+            tpot,
+            finish: arrival + 1.0,
+        }
+    }
+
+    #[test]
+    fn attainment_counts() {
+        let mut m = MetricsRecorder::new();
+        m.record(c(0.0, 100, 0.1, 0.05)); // ok, ok
+        m.record(c(1.0, 100, 0.5, 0.05)); // ttft bad
+        m.record(c(2.0, 100, 0.1, 0.2)); // tpot bad
+        m.record(c(3.0, 100, 0.5, 0.2)); // both bad
+        m.horizon_s = 10.0;
+        m.add_gpu_time(4.0, 10.0);
+        let r = m.report(&SloPolicy::default(), 0.0);
+        assert_eq!(r.n, 4);
+        assert!((r.ttft_attainment - 0.5).abs() < 1e-12);
+        assert!((r.tpot_attainment - 0.5).abs() < 1e-12);
+        assert!((r.overall_attainment - 0.25).abs() < 1e-12);
+        assert!((r.avg_gpus - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warmup_filters() {
+        let mut m = MetricsRecorder::new();
+        m.record(c(0.0, 100, 9.0, 9.0));
+        m.record(c(10.0, 100, 0.1, 0.05));
+        m.horizon_s = 20.0;
+        let r = m.report(&SloPolicy::default(), 5.0);
+        assert_eq!(r.n, 1);
+        assert!((r.overall_attainment - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_is_zeroed() {
+        let m = MetricsRecorder::new();
+        let r = m.report(&SloPolicy::default(), 0.0);
+        assert_eq!(r.n, 0);
+        assert_eq!(r.overall_attainment, 0.0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Timestamped time series used by the timeline figures (Figs. 4, 10, 11).
+
+/// A named (t, value) series with helpers for resampling onto fixed grids.
+#[derive(Clone, Debug, Default)]
+pub struct TimeSeries {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl TimeSeries {
+    pub fn new(name: &str) -> TimeSeries {
+        TimeSeries {
+            name: name.to_string(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, t: f64, v: f64) {
+        debug_assert!(
+            self.points.last().map_or(true, |(lt, _)| *lt <= t + 1e-12),
+            "non-monotone series push ({} after {})",
+            t,
+            self.points.last().unwrap().0
+        );
+        self.points.push((t, v));
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Step-function value at time `t` (last point at or before `t`).
+    pub fn value_at(&self, t: f64) -> Option<f64> {
+        match self.points.binary_search_by(|(pt, _)| {
+            pt.partial_cmp(&t).unwrap_or(std::cmp::Ordering::Equal)
+        }) {
+            Ok(i) => Some(self.points[i].1),
+            Err(0) => None,
+            Err(i) => Some(self.points[i - 1].1),
+        }
+    }
+
+    /// Resample as a step function onto a fixed grid [0, horizon) with the
+    /// given step; values before the first point become `fill`.
+    pub fn resample(&self, horizon: f64, step: f64, fill: f64) -> Vec<f64> {
+        let n = (horizon / step).ceil() as usize;
+        (0..n)
+            .map(|i| self.value_at(i as f64 * step).unwrap_or(fill))
+            .collect()
+    }
+
+    /// Time-weighted average of a step series over [0, horizon].
+    pub fn time_average(&self, horizon: f64) -> f64 {
+        if self.points.is_empty() || horizon <= 0.0 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        for (i, (t, v)) in self.points.iter().enumerate() {
+            if *t >= horizon {
+                break;
+            }
+            let end = self
+                .points
+                .get(i + 1)
+                .map(|(nt, _)| nt.min(horizon))
+                .unwrap_or(horizon);
+            acc += v * (end - t).max(0.0);
+        }
+        // Before the first sample the value is undefined; treat as first.
+        let (t0, v0) = self.points[0];
+        if t0 > 0.0 {
+            acc += v0 * t0.min(horizon);
+        }
+        acc / horizon
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_at_steps() {
+        let mut s = TimeSeries::new("x");
+        s.push(1.0, 10.0);
+        s.push(2.0, 20.0);
+        assert_eq!(s.value_at(0.5), None);
+        assert_eq!(s.value_at(1.0), Some(10.0));
+        assert_eq!(s.value_at(1.5), Some(10.0));
+        assert_eq!(s.value_at(2.5), Some(20.0));
+    }
+
+    #[test]
+    fn resample_grid() {
+        let mut s = TimeSeries::new("x");
+        s.push(0.0, 1.0);
+        s.push(2.0, 3.0);
+        let g = s.resample(4.0, 1.0, 0.0);
+        assert_eq!(g, vec![1.0, 1.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn time_average_weighted() {
+        let mut s = TimeSeries::new("x");
+        s.push(0.0, 2.0);
+        s.push(5.0, 4.0);
+        // [0,5): 2, [5,10): 4 -> avg 3
+        assert!((s.time_average(10.0) - 3.0).abs() < 1e-12);
+    }
+}

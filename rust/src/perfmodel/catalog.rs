@@ -1,0 +1,174 @@
+//! Named catalogs of models, GPUs and cluster interconnects used across the
+//! paper's evaluation (§V): Llama-3.1-8B / Qwen-2.5-{7,14,32}B on A100-40G
+//! and H100-80G clusters.
+
+use super::gpu::{GpuSpec, LinkSpec};
+use super::model::ModelSpec;
+
+/// Look up a model spec by name (case-insensitive).
+pub fn model(name: &str) -> Option<ModelSpec> {
+    let n = name.to_ascii_lowercase();
+    let spec = match n.as_str() {
+        "llama-3.1-8b" | "llama-8b" | "llama" => ModelSpec {
+            name: "llama-3.1-8b".into(),
+            n_layers: 32,
+            hidden: 4096,
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            intermediate: 14336,
+            vocab: 128_256,
+        },
+        "qwen-2.5-7b" | "qwen-7b" => ModelSpec {
+            name: "qwen-2.5-7b".into(),
+            n_layers: 28,
+            hidden: 3584,
+            n_heads: 28,
+            n_kv_heads: 4,
+            head_dim: 128,
+            intermediate: 18944,
+            vocab: 152_064,
+        },
+        "qwen-2.5-14b" | "qwen-14b" => ModelSpec {
+            name: "qwen-2.5-14b".into(),
+            n_layers: 48,
+            hidden: 5120,
+            n_heads: 40,
+            n_kv_heads: 8,
+            head_dim: 128,
+            intermediate: 13824,
+            vocab: 152_064,
+        },
+        "qwen-2.5-32b" | "qwen-32b" | "qwen" => ModelSpec {
+            name: "qwen-2.5-32b".into(),
+            n_layers: 64,
+            hidden: 5120,
+            n_heads: 40,
+            n_kv_heads: 8,
+            head_dim: 128,
+            intermediate: 27648,
+            vocab: 152_064,
+        },
+        // Referenced by the Azure trace collection setup (sampling ratio).
+        "llama-2-70b" | "llama-70b" => ModelSpec {
+            name: "llama-2-70b".into(),
+            n_layers: 80,
+            hidden: 8192,
+            n_heads: 64,
+            n_kv_heads: 8,
+            head_dim: 128,
+            intermediate: 28672,
+            vocab: 32_000,
+        },
+        // The tiny model served for real by the L1/L2/L3 stack (examples/).
+        "tiny-llama" => ModelSpec {
+            name: "tiny-llama".into(),
+            n_layers: 4,
+            hidden: 256,
+            n_heads: 4,
+            n_kv_heads: 4,
+            head_dim: 64,
+            intermediate: 688,
+            vocab: 512,
+        },
+        _ => return None,
+    };
+    Some(spec)
+}
+
+/// Look up a GPU SKU by name. Efficiency factors are calibrated so the
+/// analytic decode/prefill velocities land in the range of the paper's
+/// Table II / Fig. 7 profiles (see `profiler` tests).
+pub fn gpu(name: &str) -> Option<GpuSpec> {
+    let n = name.to_ascii_lowercase();
+    let spec = match n.as_str() {
+        "a100-40g" | "a100" => GpuSpec {
+            name: "a100-40g".into(),
+            tflops_bf16: 312.0,
+            hbm_gbps: 1555.0,
+            mem_gib: 40.0,
+            flops_eff: 0.45,
+            bw_eff: 0.55,
+        },
+        "h100-80g" | "h100" => GpuSpec {
+            name: "h100-80g".into(),
+            tflops_bf16: 989.0,
+            hbm_gbps: 3350.0,
+            mem_gib: 80.0,
+            flops_eff: 0.42,
+            bw_eff: 0.55,
+        },
+        _ => return None,
+    };
+    Some(spec)
+}
+
+/// Cluster interconnects from the paper's §V hardware setup.
+pub fn link(name: &str) -> Option<LinkSpec> {
+    let n = name.to_ascii_lowercase();
+    let spec = match n.as_str() {
+        // 4×A100 per node, NVLink 3.0 600 GB/s, 2×ConnectX-6 → 200 Gbps.
+        "a100-cluster" => LinkSpec {
+            name: "a100-cluster".into(),
+            nvlink_gbps: 600.0,
+            rdma_gbps: 200.0 / 8.0, // Gbps → GB/s
+            latency_s: 0.002,
+            eff: 0.8,
+        },
+        // 8×H100 per node, NVLink 1200 GB/s, 12 NICs → 2880 Gbps.
+        "h100-cluster" => LinkSpec {
+            name: "h100-cluster".into(),
+            nvlink_gbps: 1200.0,
+            rdma_gbps: 2880.0 / 8.0,
+            latency_s: 0.002,
+            eff: 0.8,
+        },
+        _ => return None,
+    };
+    Some(spec)
+}
+
+/// All model names used in the characterization experiments (Fig. 7).
+pub fn qwen_family() -> Vec<&'static str> {
+    vec!["qwen-2.5-7b", "qwen-2.5-14b", "qwen-2.5-32b"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_known_models() {
+        for name in [
+            "llama-3.1-8b",
+            "qwen-2.5-7b",
+            "qwen-2.5-14b",
+            "qwen-2.5-32b",
+            "llama-2-70b",
+            "tiny-llama",
+        ] {
+            assert!(model(name).is_some(), "missing model {name}");
+        }
+        assert!(model("gpt-99").is_none());
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive() {
+        assert_eq!(model("LLAMA-3.1-8B").unwrap().name, "llama-3.1-8b");
+        assert_eq!(gpu("A100").unwrap().name, "a100-40g");
+    }
+
+    #[test]
+    fn qwen_family_ordered_by_size() {
+        let fam = qwen_family();
+        let params: Vec<f64> = fam.iter().map(|n| model(n).unwrap().params()).collect();
+        assert!(params.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn links_exist() {
+        assert!(link("a100-cluster").is_some());
+        assert!(link("h100-cluster").is_some());
+        assert!(link("tpu-pod").is_none());
+    }
+}

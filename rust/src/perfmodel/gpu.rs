@@ -1,0 +1,100 @@
+//! GPU and interconnect hardware specifications.
+
+/// A GPU SKU with its achievable (not peak-datasheet) efficiency factors.
+///
+/// `flops_eff` / `bw_eff` discount the datasheet numbers to what serving
+/// engines typically sustain; they are the calibration knobs that align the
+/// analytic model with the paper's published Token Velocity table (Tab. II).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Peak dense bf16 TFLOPs.
+    pub tflops_bf16: f64,
+    /// HBM bandwidth, GB/s.
+    pub hbm_gbps: f64,
+    /// Device memory, GiB.
+    pub mem_gib: f64,
+    /// Sustained fraction of peak FLOPs in prefill-style batched matmuls.
+    pub flops_eff: f64,
+    /// Sustained fraction of peak HBM bandwidth in decode-style reads.
+    pub bw_eff: f64,
+}
+
+impl GpuSpec {
+    /// Effective compute in FLOP/s.
+    pub fn eff_flops(&self) -> f64 {
+        self.tflops_bf16 * 1e12 * self.flops_eff
+    }
+
+    /// Effective memory bandwidth in bytes/s.
+    pub fn eff_bw(&self) -> f64 {
+        self.hbm_gbps * 1e9 * self.bw_eff
+    }
+
+    /// Device memory in bytes.
+    pub fn mem_bytes(&self) -> f64 {
+        self.mem_gib * 1024.0 * 1024.0 * 1024.0
+    }
+}
+
+/// Node-level interconnect description (links between prefillers and
+/// decoders for KVC transfer).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkSpec {
+    pub name: String,
+    /// Aggregate intra-node NVLink bandwidth, GB/s.
+    pub nvlink_gbps: f64,
+    /// Aggregate inter-node RDMA bandwidth, GB/s (converted from Gbps NICs).
+    pub rdma_gbps: f64,
+    /// Per-transfer fixed latency, seconds (connection setup + first byte).
+    pub latency_s: f64,
+    /// Sustained fraction of peak link bandwidth.
+    pub eff: f64,
+}
+
+impl LinkSpec {
+    /// Effective cross-node transfer bandwidth in bytes/s (RDMA path, the
+    /// one PD disaggregation uses between nodes).
+    pub fn eff_rdma_bytes(&self) -> f64 {
+        self.rdma_gbps * 1e9 * self.eff
+    }
+
+    /// Effective intra-node bandwidth in bytes/s.
+    pub fn eff_nvlink_bytes(&self) -> f64 {
+        self.nvlink_gbps * 1e9 * self.eff
+    }
+
+    /// Time to move `bytes` across the inter-node fabric.
+    pub fn transfer_time(&self, bytes: f64) -> f64 {
+        self.latency_s + bytes / self.eff_rdma_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::perfmodel::catalog;
+
+    #[test]
+    fn a100_specs() {
+        let g = catalog::gpu("a100-40g").unwrap();
+        assert_eq!(g.tflops_bf16, 312.0);
+        assert!(g.eff_flops() < 312.0e12);
+        assert!(g.mem_bytes() > 39.0 * 1e9);
+    }
+
+    #[test]
+    fn h100_faster_than_a100() {
+        let a = catalog::gpu("a100-40g").unwrap();
+        let h = catalog::gpu("h100-80g").unwrap();
+        assert!(h.eff_flops() > 2.0 * a.eff_flops());
+        assert!(h.eff_bw() > a.eff_bw());
+        assert!(h.mem_gib > a.mem_gib);
+    }
+
+    #[test]
+    fn transfer_time_has_floor() {
+        let l = catalog::link("a100-cluster").unwrap();
+        assert!(l.transfer_time(0.0) >= l.latency_s);
+        assert!(l.transfer_time(1e9) > l.transfer_time(1e6));
+    }
+}

@@ -1,0 +1,15 @@
+//! Analytic performance model of LLM serving hardware.
+//!
+//! Replaces the paper's physical A100/H100 clusters (see DESIGN.md
+//! substitution table): model specs, GPU SKUs, interconnects, and the
+//! latency/capacity formulas the discrete-event simulator and the offline
+//! profiler consume.
+
+pub mod catalog;
+pub mod gpu;
+pub mod latency;
+pub mod model;
+
+pub use gpu::{GpuSpec, LinkSpec};
+pub use latency::EngineModel;
+pub use model::ModelSpec;

@@ -1,0 +1,119 @@
+//! Transformer model specifications: parameter counts, KV-cache footprint,
+//! and FLOP accounting used by the analytic latency model.
+
+/// Dense decoder-only transformer architecture description.
+///
+/// All byte/FLOP accounting assumes bf16 weights and KV cache (2 bytes per
+/// element), matching the paper's half-precision serving setup.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_layers: usize,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub intermediate: usize,
+    pub vocab: usize,
+}
+
+pub const BF16_BYTES: f64 = 2.0;
+
+impl ModelSpec {
+    /// Approximate parameter count (attention + MLP + embeddings + head).
+    pub fn params(&self) -> f64 {
+        let h = self.hidden as f64;
+        let l = self.n_layers as f64;
+        let qkv_out = (self.n_heads + 2 * self.n_kv_heads) as f64 * self.head_dim as f64;
+        let attn = h * qkv_out + (self.n_heads * self.head_dim) as f64 * h;
+        let mlp = 3.0 * h * self.intermediate as f64; // SwiGLU: gate, up, down
+        let norms = 2.0 * h;
+        let embed = self.vocab as f64 * h;
+        let lm_head = self.vocab as f64 * h;
+        l * (attn + mlp + norms) + embed + lm_head + h
+    }
+
+    /// Weight bytes in bf16 (per full model; divide by TP degree per GPU).
+    pub fn weight_bytes(&self) -> f64 {
+        self.params() * BF16_BYTES
+    }
+
+    /// KV-cache bytes per token: K and V for every layer over KV heads.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.n_layers as f64
+            * self.n_kv_heads as f64
+            * self.head_dim as f64
+            * BF16_BYTES
+    }
+
+    /// FLOPs to prefill `n` prompt tokens (linear layers + quadratic
+    /// attention term). 2 FLOPs per MAC.
+    pub fn prefill_flops(&self, n: usize) -> f64 {
+        let n = n as f64;
+        let linear = 2.0 * self.params() * n;
+        // attention score+value matmuls: per layer 2 * (2 * n^2 * heads * head_dim)
+        let attn = self.n_layers as f64
+            * 4.0
+            * n
+            * n
+            * (self.n_heads * self.head_dim) as f64;
+        linear + attn
+    }
+
+    /// FLOPs for one decode step of a single sequence at context length
+    /// `ctx` (linear layers on one token + attention over the cache).
+    pub fn decode_flops(&self, ctx: usize) -> f64 {
+        let linear = 2.0 * self.params();
+        let attn = self.n_layers as f64
+            * 4.0
+            * ctx as f64
+            * (self.n_heads * self.head_dim) as f64;
+        linear + attn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::perfmodel::catalog;
+
+    #[test]
+    fn llama8b_params_near_8b() {
+        let m = catalog::model("llama-3.1-8b").unwrap();
+        let p = m.params();
+        assert!(
+            (7.5e9..9.0e9).contains(&p),
+            "llama-8b params {p:.3e} out of range"
+        );
+    }
+
+    #[test]
+    fn qwen32b_params_near_32b() {
+        let m = catalog::model("qwen-2.5-32b").unwrap();
+        let p = m.params();
+        assert!(
+            (30e9..35e9).contains(&p),
+            "qwen-32b params {p:.3e} out of range"
+        );
+    }
+
+    #[test]
+    fn llama8b_kv_bytes() {
+        let m = catalog::model("llama-3.1-8b").unwrap();
+        // 2 (K,V) * 32 layers * 8 kv-heads * 128 dim * 2 bytes = 131072
+        assert_eq!(m.kv_bytes_per_token(), 131072.0);
+    }
+
+    #[test]
+    fn prefill_flops_superlinear() {
+        let m = catalog::model("llama-3.1-8b").unwrap();
+        let f1 = m.prefill_flops(1024);
+        let f2 = m.prefill_flops(2048);
+        assert!(f2 > 2.0 * f1); // quadratic attention term
+    }
+
+    #[test]
+    fn decode_flops_grow_with_context() {
+        let m = catalog::model("llama-3.1-8b").unwrap();
+        assert!(m.decode_flops(8192) > m.decode_flops(128));
+    }
+}

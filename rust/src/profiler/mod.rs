@@ -1,0 +1,8 @@
+//! Offline Profiler (§IV-B): measures Token Velocities by saturation
+//! sweeps — the same procedure the paper runs on hardware, here against
+//! the engine performance model's mechanics (not its closed forms, so the
+//! measured values validate the analytic ones).
+
+pub mod sweep;
+
+pub use sweep::{measure_decode_velocity, measure_prefill_velocity, measured_profile};

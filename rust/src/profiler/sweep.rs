@@ -1,0 +1,141 @@
+//! Saturation sweeps: drive a single instance's engine mechanics to its
+//! peak rate and record the achieved velocity, per §IV-B:
+//!
+//! - prefill: "send requests … gradually increase the request rate until
+//!   its output rate saturates".
+//! - decode: "sweep the request rate from low to high until the decoder
+//!   reaches its peak output rate", per request-type bucket.
+
+use crate::perfmodel::{EngineModel, LinkSpec};
+use crate::velocity::VelocityProfile;
+use crate::workload::{all_buckets, BucketScheme};
+
+/// Measured prefill velocity: saturate one prefiller with back-to-back
+/// prompts of length `prompt_len` and measure tokens/second processed.
+pub fn measure_prefill_velocity(engine: &EngineModel, prompt_len: usize, n_requests: usize) -> f64 {
+    let mut t = 0.0;
+    let mut tokens = 0usize;
+    for _ in 0..n_requests {
+        t += engine.prefill_time(prompt_len);
+        tokens += prompt_len;
+    }
+    tokens as f64 / t
+}
+
+/// Measured decode velocity for a bucket (L_in, L_out): run a saturated
+/// continuous-batching loop (always refill to the admissible batch) and
+/// measure *released* tokens per second over `n_completions` completions
+/// (Eq. 1's release-rate semantics).
+pub fn measure_decode_velocity(
+    engine: &EngineModel,
+    input_tokens: usize,
+    output_tokens: usize,
+    n_completions: usize,
+) -> f64 {
+    let total = input_tokens + output_tokens;
+    let max_batch = 256usize;
+    let cap = engine.kv_capacity_tokens();
+    let admissible = ((cap / total as f64).floor() as usize).clamp(1, max_batch);
+
+    // Steady-state staggered batch: sequences uniformly spread over their
+    // output progress, so one completes every (L_out / B) iterations.
+    let mut progress: Vec<usize> = (0..admissible)
+        .map(|i| i * output_tokens / admissible)
+        .collect();
+    let mut t = 0.0;
+    let mut released = 0usize;
+    let mut completions = 0usize;
+    while completions < n_completions {
+        let batch = progress.len();
+        let avg_ctx = input_tokens as f64
+            + progress.iter().sum::<usize>() as f64 / batch as f64;
+        t += engine.decode_iter_time(batch, avg_ctx);
+        for p in progress.iter_mut() {
+            *p += 1;
+        }
+        // Completed sequences release their tokens and are replaced.
+        for p in progress.iter_mut() {
+            if *p >= output_tokens {
+                released += total;
+                completions += 1;
+                *p = 0;
+            }
+        }
+    }
+    released as f64 / t
+}
+
+/// A full measured velocity profile (Table II / Fig. 7 procedure).
+pub fn measured_profile(
+    engine: &EngineModel,
+    link: &LinkSpec,
+    avg_prompt_tokens: usize,
+) -> VelocityProfile {
+    let scheme = BucketScheme::default();
+    let mut decode = [0.0; 9];
+    for b in all_buckets() {
+        let (i, o) = scheme.representative(b);
+        decode[b.index()] = measure_decode_velocity(engine, i, o, 64);
+    }
+    VelocityProfile {
+        prefill: measure_prefill_velocity(engine, avg_prompt_tokens, 32),
+        network: link.eff_rdma_bytes() / engine.model.kv_bytes_per_token(),
+        decode,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::catalog;
+    use crate::velocity::analytic;
+
+    fn llama_a100() -> EngineModel {
+        EngineModel::new(
+            catalog::model("llama-3.1-8b").unwrap(),
+            catalog::gpu("a100-40g").unwrap(),
+            1,
+        )
+    }
+
+    #[test]
+    fn measured_matches_analytic_prefill() {
+        let e = llama_a100();
+        let measured = measure_prefill_velocity(&e, 2048, 16);
+        let analytic = analytic::prefill_velocity(&e, 2048);
+        let ratio = measured / analytic;
+        assert!((0.95..1.05).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn measured_decode_velocity_close_to_analytic() {
+        let e = llama_a100();
+        for (inp, out) in [(256, 100), (1024, 350), (8192, 610)] {
+            let measured = measure_decode_velocity(&e, inp, out, 64);
+            let formula = analytic::decode_velocity(&e, inp, out);
+            let ratio = measured / formula;
+            assert!(
+                (0.6..1.6).contains(&ratio),
+                "bucket ({inp},{out}): measured {measured:.0} vs analytic {formula:.0}"
+            );
+        }
+    }
+
+    #[test]
+    fn measured_profile_matches_table2_ordering() {
+        let e = llama_a100();
+        let link = catalog::link("a100-cluster").unwrap();
+        let p = measured_profile(&e, &link, 1024);
+        let idx = |label: &str| {
+            all_buckets()
+                .into_iter()
+                .find(|b| b.label() == label)
+                .unwrap()
+                .index()
+        };
+        // Table II ordering: L-S > S-S > S-M > S-L.
+        assert!(p.decode[idx("L-S")] > p.decode[idx("S-S")]);
+        assert!(p.decode[idx("S-S")] > p.decode[idx("S-M")]);
+        assert!(p.decode[idx("S-M")] > p.decode[idx("S-L")]);
+    }
+}

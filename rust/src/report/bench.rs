@@ -1,0 +1,102 @@
+//! Minimal timing harness for the `harness = false` bench targets
+//! (criterion is unavailable offline). Measures wall-clock per iteration
+//! with warmup, reporting mean / p50 / min like criterion's summary line.
+
+use std::time::Instant;
+
+/// Timing summary for one benchmarked operation.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn line(&self, name: &str) -> String {
+        format!(
+            "bench {name:40} iters={:4}  mean={}  p50={}  min={}",
+            self.iters,
+            human_time(self.mean_s),
+            human_time(self.p50_s),
+            human_time(self.min_s),
+        )
+    }
+}
+
+/// Render seconds human-readably (µs/ms/s).
+pub fn human_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.0}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// The timer: run `f` for `warmup` + `iters` iterations and summarize.
+pub struct BenchTimer {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchTimer {
+    fn default() -> Self {
+        BenchTimer {
+            warmup: 2,
+            iters: 10,
+        }
+    }
+}
+
+impl BenchTimer {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        BenchTimer { warmup, iters }
+    }
+
+    pub fn run<F: FnMut()>(&self, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        BenchStats {
+            iters: self.iters,
+            mean_s: samples.iter().sum::<f64>() / samples.len() as f64,
+            p50_s: samples[samples.len() / 2],
+            min_s: samples[0],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_work() {
+        let stats = BenchTimer::new(1, 5).run(|| {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert_eq!(stats.iters, 5);
+        assert!(stats.min_s <= stats.mean_s);
+        assert!(stats.mean_s < 1.0);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2e-9).ends_with("ns"));
+        assert!(human_time(5e-5).ends_with("µs"));
+        assert!(human_time(5e-2).ends_with("ms"));
+        assert!(human_time(3.0).ends_with('s'));
+    }
+}

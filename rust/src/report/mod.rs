@@ -1,0 +1,9 @@
+//! Reporting and experiment harness: deployment presets, the shared
+//! policy-vs-trace runner every bench target drives, and a tiny timing
+//! harness replacing criterion (offline crate set).
+
+pub mod bench;
+pub mod runner;
+
+pub use bench::BenchTimer;
+pub use runner::{deployment, run_experiment, Deployment, ExperimentResult, PolicyKind};

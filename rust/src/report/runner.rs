@@ -1,0 +1,270 @@
+//! The shared experiment runner: deployment presets matching the paper's
+//! §V setups and a single entry point that drives any policy over any
+//! trace on the simulated cluster. Every bench target and example uses
+//! this, so all experiments share identical mechanics.
+
+use crate::coordinator::{TokenScale, TokenScaleConfig};
+use crate::metrics::SloReport;
+use crate::perfmodel::{catalog, EngineModel, LinkSpec};
+use crate::scaler::{derive_thresholds, AiBrix, BlitzScale, DistServe};
+use crate::sim::{simulate, ClusterConfig, SimConfig, SimResult};
+use crate::trace::Trace;
+use crate::velocity::VelocityProfile;
+use crate::workload::SloPolicy;
+use std::sync::Arc;
+
+/// A deployment preset: (model, GPU, TP, cluster size, link).
+#[derive(Clone)]
+pub struct Deployment {
+    pub name: String,
+    pub engine: Arc<EngineModel>,
+    pub link: LinkSpec,
+    pub max_gpus: usize,
+    pub initial_prefillers: usize,
+    pub initial_decoders: usize,
+}
+
+/// Deployment presets from §V:
+/// - `small-a100`: Llama-3.1-8B TP=1 on the 4-node (16-GPU) A100 cluster.
+/// - `large-a100`: Qwen-2.5-32B TP=4 on the 16-node (64-GPU) A100 cluster.
+/// - `h100`: Llama-3.1-8B TP=1 on the 2-node (16-GPU) H100 cluster.
+pub fn deployment(name: &str) -> Option<Deployment> {
+    let d = match name {
+        "small-a100" | "small" => Deployment {
+            name: "small-a100".into(),
+            engine: Arc::new(EngineModel::new(
+                catalog::model("llama-3.1-8b")?,
+                catalog::gpu("a100-40g")?,
+                1,
+            )),
+            link: catalog::link("a100-cluster")?,
+            max_gpus: 16,
+            initial_prefillers: 2,
+            initial_decoders: 2,
+        },
+        "large-a100" | "large" => Deployment {
+            name: "large-a100".into(),
+            engine: Arc::new(EngineModel::new(
+                catalog::model("qwen-2.5-32b")?,
+                catalog::gpu("a100-40g")?,
+                4,
+            )),
+            link: catalog::link("a100-cluster")?,
+            max_gpus: 64,
+            initial_prefillers: 2,
+            initial_decoders: 2,
+        },
+        "h100" => Deployment {
+            name: "h100".into(),
+            engine: Arc::new(EngineModel::new(
+                catalog::model("llama-3.1-8b")?,
+                catalog::gpu("h100-80g")?,
+                1,
+            )),
+            link: catalog::link("h100-cluster")?,
+            max_gpus: 16,
+            initial_prefillers: 1,
+            initial_decoders: 1,
+        },
+        _ => return None,
+    };
+    Some(d)
+}
+
+/// The four control planes under evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    TokenScale,
+    AiBrix,
+    BlitzScale,
+    DistServe,
+    /// Ablation: DistServe base + TokenScale prefiller scaler (Fig. 14 B+P).
+    AblationBP,
+    /// Ablation: + TokenScale decoder scaler, no convertibles (B+P+D).
+    AblationBPD,
+}
+
+impl PolicyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::TokenScale => "tokenscale",
+            PolicyKind::AiBrix => "aibrix",
+            PolicyKind::BlitzScale => "blitzscale",
+            PolicyKind::DistServe => "distserve",
+            PolicyKind::AblationBP => "b+p",
+            PolicyKind::AblationBPD => "b+p+d",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "tokenscale" | "ts" => Some(PolicyKind::TokenScale),
+            "aibrix" => Some(PolicyKind::AiBrix),
+            "blitzscale" | "blitz" => Some(PolicyKind::BlitzScale),
+            "distserve" | "dist" => Some(PolicyKind::DistServe),
+            "b+p" | "bp" => Some(PolicyKind::AblationBP),
+            "b+p+d" | "bpd" => Some(PolicyKind::AblationBPD),
+            _ => None,
+        }
+    }
+
+    pub fn all_baselines() -> [PolicyKind; 4] {
+        [
+            PolicyKind::TokenScale,
+            PolicyKind::AiBrix,
+            PolicyKind::BlitzScale,
+            PolicyKind::DistServe,
+        ]
+    }
+}
+
+/// Knobs the individual experiments override.
+#[derive(Clone, Debug)]
+pub struct RunOverrides {
+    /// Convertible decoder count (TokenScale only; None = config default).
+    pub convertibles: Option<usize>,
+    /// Output-predictor accuracy (TokenScale only).
+    pub predictor_accuracy: Option<f64>,
+    /// Warmup seconds excluded from the SLO report.
+    pub warmup_s: f64,
+    /// Initial fleet override.
+    pub initial_prefillers: Option<usize>,
+    pub initial_decoders: Option<usize>,
+}
+
+impl Default for RunOverrides {
+    fn default() -> Self {
+        RunOverrides {
+            convertibles: None,
+            predictor_accuracy: None,
+            warmup_s: 10.0,
+            initial_prefillers: None,
+            initial_decoders: None,
+        }
+    }
+}
+
+/// Everything a figure needs from one run.
+pub struct ExperimentResult {
+    pub policy: PolicyKind,
+    pub report: SloReport,
+    pub sim: SimResult,
+}
+
+/// Run one (deployment, policy, trace) experiment.
+pub fn run_experiment(
+    dep: &Deployment,
+    policy: PolicyKind,
+    trace: &Trace,
+    ov: &RunOverrides,
+) -> ExperimentResult {
+    let slo = SloPolicy::default();
+    let avg_in = trace.avg_input_tokens().max(1.0);
+    let avg_total = avg_in + trace.avg_output_tokens();
+    let profile = VelocityProfile::analytic(&dep.engine, &dep.link, avg_in as usize);
+    let thresholds = derive_thresholds(trace, &dep.engine, &profile);
+
+    let mut sim_cfg = SimConfig {
+        initial_prefillers: ov.initial_prefillers.unwrap_or(dep.initial_prefillers),
+        initial_decoders: ov.initial_decoders.unwrap_or(dep.initial_decoders),
+        initial_convertibles: 0,
+        link: dep.link.clone(),
+        slo,
+        ..Default::default()
+    };
+    let mut cluster_cfg = ClusterConfig {
+        prefill_engine: dep.engine.clone(),
+        decode_engine: dep.engine.clone(),
+        startup_override_s: None,
+        max_gpus: dep.max_gpus,
+        convertible_chunk_size: 0,
+        convertible_reserve_tokens: 0.0,
+    };
+
+    let sim = match policy {
+        PolicyKind::TokenScale => {
+            let mut cfg = TokenScaleConfig::default();
+            if let Some(c) = ov.convertibles {
+                cfg.convertibles = c;
+            }
+            if let Some(a) = ov.predictor_accuracy {
+                cfg.predictor_accuracy = a;
+            }
+            let mut ts = TokenScale::new(cfg, &dep.engine, &dep.link, avg_in as usize, avg_total);
+            sim_cfg.initial_convertibles = ts.cfg.convertibles;
+            cluster_cfg.convertible_chunk_size = ts.chunk_size;
+            cluster_cfg.convertible_reserve_tokens = ts.reserve_tokens;
+            simulate(sim_cfg, cluster_cfg, &mut ts, trace)
+        }
+        PolicyKind::AiBrix => {
+            let mut p = AiBrix::new(&thresholds);
+            simulate(sim_cfg, cluster_cfg, &mut p, trace)
+        }
+        PolicyKind::BlitzScale => {
+            let mut p = BlitzScale::new(&thresholds);
+            simulate(sim_cfg, cluster_cfg, &mut p, trace)
+        }
+        PolicyKind::DistServe => {
+            let mut p = DistServe::new(&thresholds);
+            simulate(sim_cfg, cluster_cfg, &mut p, trace)
+        }
+        PolicyKind::AblationBP => {
+            let mut p = crate::scaler::baselines::ablation_bp(
+                &thresholds,
+                &dep.engine,
+                &dep.link,
+                avg_in as usize,
+            );
+            simulate(sim_cfg, cluster_cfg, &mut p, trace)
+        }
+        PolicyKind::AblationBPD => {
+            let mut p = crate::scaler::baselines::ablation_bpd(
+                &thresholds,
+                &dep.engine,
+                &dep.link,
+                avg_in as usize,
+                ov.predictor_accuracy.unwrap_or(0.85),
+            );
+            simulate(sim_cfg, cluster_cfg, &mut p, trace)
+        }
+    };
+
+    let report = sim.metrics.report(&slo, ov.warmup_s);
+    ExperimentResult {
+        policy,
+        report,
+        sim,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{generate_family, TraceFamily};
+
+    #[test]
+    fn presets_exist() {
+        for n in ["small-a100", "large-a100", "h100"] {
+            assert!(deployment(n).is_some(), "{n}");
+        }
+        assert!(deployment("tpu-pod").is_none());
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in PolicyKind::all_baselines() {
+            assert_eq!(PolicyKind::parse(p.name()), Some(p));
+        }
+    }
+
+    #[test]
+    fn runner_produces_reports_for_all_policies() {
+        let dep = deployment("small-a100").unwrap();
+        let trace = generate_family(TraceFamily::AzureConv, 8.0, 60.0, 3);
+        for p in PolicyKind::all_baselines() {
+            let r = run_experiment(&dep, p, &trace, &RunOverrides::default());
+            assert!(r.report.n > 100, "{}: n={}", p.name(), r.report.n);
+            assert!(r.report.avg_gpus > 0.0);
+        }
+    }
+}

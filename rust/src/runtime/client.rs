@@ -1,0 +1,150 @@
+//! PJRT client wrapper: load HLO-text artifacts, compile once, execute.
+//!
+//! Follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. HLO *text* is
+//! the interchange format (xla_extension 0.5.1 rejects jax ≥ 0.5 protos).
+
+use std::path::Path;
+
+/// A compiled artifact ready to execute.
+pub struct CompiledArtifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledArtifact {
+    /// Execute with literal inputs; returns the decomposed output tuple
+    /// (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute failed: {e:?}"))?;
+        Self::untuple(outs)
+    }
+
+    /// Execute with device-resident buffer inputs (hot path: persistent
+    /// weights buffer avoids re-uploading megabytes per step).
+    pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> anyhow::Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute_b failed: {e:?}"))?;
+        Self::untuple(outs)
+    }
+
+    fn untuple(outs: Vec<Vec<xla::PjRtBuffer>>) -> anyhow::Result<Vec<xla::Literal>> {
+        let mut result = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal failed: {e:?}"))?;
+        result
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose failed: {e:?}"))
+    }
+}
+
+/// The PJRT runtime: one CPU client, many compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload host f32 data to a device buffer (one copy, reusable across
+    /// executions).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload_f32: {e:?}"))
+    }
+
+    /// Upload host i32 data to a device buffer.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload_i32: {e:?}"))
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn compile_file(&self, name: &str, path: &Path) -> anyhow::Result<CompiledArtifact> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        Ok(CompiledArtifact {
+            name: name.to_string(),
+            exe,
+        })
+    }
+}
+
+/// Literal construction helpers (row-major).
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    lit.reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape f32 literal: {e:?}"))
+}
+
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    lit.reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape i32 literal: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::meta::{artifacts_available, artifacts_dir, ModelMeta};
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(lit.element_count(), 4);
+        let back: Vec<f32> = lit.to_vec().unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn compiles_and_runs_prefill_artifact() {
+        if !artifacts_available() {
+            eprintln!("artifacts/ missing; skipped");
+            return;
+        }
+        let dir = artifacts_dir();
+        let meta = ModelMeta::load(&dir).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let spec = meta.artifact("prefill_s16").unwrap();
+        let exe = rt.compile_file(&spec.name, &spec.file).unwrap();
+        let weights = meta.load_weights(&dir).unwrap();
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 7) % meta.vocab as i32).collect();
+        let out = exe
+            .run(&[
+                literal_i32(&tokens, &[1, 16]).unwrap(),
+                literal_f32(&weights, &[weights.len() as i64]).unwrap(),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 3, "logits + k + v");
+        let logits: Vec<f32> = out[0].to_vec().unwrap();
+        assert_eq!(logits.len(), 16 * meta.vocab);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        // Distinct positions should have distinct logits.
+        let a = &logits[0..meta.vocab];
+        let b = &logits[15 * meta.vocab..16 * meta.vocab];
+        assert!(a != b);
+    }
+}

@@ -1,0 +1,174 @@
+//! Artifact manifest (`artifacts/model_meta.json`) parsing.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One tensor binding in an artifact's signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    /// Semantic kind: tokens | weights | cache_k | cache_v | cache_len |
+    /// logits.
+    pub kind: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled HLO artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The model description emitted by `python/compile/aot.py`.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub n_params: usize,
+    pub max_cache: usize,
+    pub decode_batch: usize,
+    pub chunk: usize,
+    pub prefill_lens: Vec<usize>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn tensor_specs(j: &Json) -> anyhow::Result<Vec<TensorSpec>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected tensor-spec array"))?;
+    arr.iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                kind: t.req_str("kind")?.to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("missing shape"))?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: t.req_str("dtype")?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl ModelMeta {
+    /// Load and validate the manifest from an artifacts directory.
+    pub fn load(dir: &Path) -> anyhow::Result<ModelMeta> {
+        let text = std::fs::read_to_string(dir.join("model_meta.json"))?;
+        let j = Json::parse(&text)?;
+        let m = j
+            .get("model")
+            .ok_or_else(|| anyhow::anyhow!("missing `model`"))?;
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| match a {
+                Json::Obj(map) => Some(map),
+                _ => None,
+            })
+            .ok_or_else(|| anyhow::anyhow!("missing `artifacts`"))?;
+        let mut artifacts = Vec::new();
+        for (name, a) in arts {
+            artifacts.push(ArtifactSpec {
+                name: name.clone(),
+                file: dir.join(a.req_str("file")?),
+                inputs: tensor_specs(
+                    a.get("inputs").ok_or_else(|| anyhow::anyhow!("inputs"))?,
+                )?,
+                outputs: tensor_specs(
+                    a.get("outputs").ok_or_else(|| anyhow::anyhow!("outputs"))?,
+                )?,
+            });
+        }
+        Ok(ModelMeta {
+            name: m.req_str("name")?.to_string(),
+            vocab: m.req_f64("vocab")? as usize,
+            hidden: m.req_f64("hidden")? as usize,
+            n_layers: m.req_f64("n_layers")? as usize,
+            n_heads: m.req_f64("n_heads")? as usize,
+            n_kv_heads: m.req_f64("n_kv_heads")? as usize,
+            head_dim: m.req_f64("head_dim")? as usize,
+            n_params: m.req_f64("n_params")? as usize,
+            max_cache: j.req_f64("max_cache")? as usize,
+            decode_batch: j.req_f64("decode_batch")? as usize,
+            chunk: j.req_f64("chunk")? as usize,
+            prefill_lens: j
+                .get("prefill_lens")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Load `weights.bin` (flat little-endian f32) and sanity-check length.
+    pub fn load_weights(&self, dir: &Path) -> anyhow::Result<Vec<f32>> {
+        let bytes = std::fs::read(dir.join("weights.bin"))?;
+        anyhow::ensure!(
+            bytes.len() == self.n_params * 4,
+            "weights.bin is {} bytes, expected {}",
+            bytes.len(),
+            self.n_params * 4
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Default artifacts directory: `$TOKENSCALE_ARTIFACTS` or `artifacts/`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("TOKENSCALE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// True when AOT artifacts are present (tests skip gracefully otherwise).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("model_meta.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        if !artifacts_available() {
+            eprintln!("artifacts/ missing; run `make artifacts` (skipped)");
+            return;
+        }
+        let meta = ModelMeta::load(&artifacts_dir()).unwrap();
+        assert_eq!(meta.name, "tiny-llama");
+        assert!(meta.artifact("decode_b4").is_some());
+        assert!(meta.artifact("prefill_s64").is_some());
+        let d = meta.artifact("decode_b4").unwrap();
+        assert_eq!(d.inputs.len(), 5);
+        assert_eq!(d.outputs.len(), 3);
+        assert_eq!(d.inputs[0].kind, "tokens");
+        // weights roundtrip
+        let w = meta.load_weights(&artifacts_dir()).unwrap();
+        assert_eq!(w.len(), meta.n_params);
+        assert!(w.iter().any(|x| *x != 0.0));
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: load the AOT HLO artifacts produced by `python/compile/`,
+//! compile them once on the CPU PJRT client, and serve a real model from
+//! Rust — Python is never on the request path.
+
+pub mod client;
+pub mod engine;
+pub mod meta;
+
+pub use client::{literal_f32, literal_i32, CompiledArtifact, Runtime};
+pub use engine::{PrefillResult, RealEngine};
+pub use meta::{artifacts_available, artifacts_dir, ArtifactSpec, ModelMeta, TensorSpec};

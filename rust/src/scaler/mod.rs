@@ -1,0 +1,14 @@
+//! Autoscaling policies: TokenScale's velocity-ratio calculators
+//! (Eqs. 2–4) and the three baseline control planes (AIBrix, BlitzScale,
+//! DistServe) with their Table I threshold derivations.
+
+pub mod baselines;
+pub mod thresholds;
+pub mod tokenscale;
+
+pub use baselines::{AiBrix, BlitzScale, DistServe};
+pub use thresholds::{derive as derive_thresholds, Thresholds};
+pub use tokenscale::{
+    convertible_count, regular_decoders, required_decoders, required_decoders_frac,
+    required_prefillers, Hysteresis,
+};

@@ -1,0 +1,106 @@
+//! Scaling-threshold derivations for the baseline systems (Table I).
+//!
+//! The paper derives each baseline's thresholds from trace statistics and
+//! profiled capacities (§V Baselines); these functions reproduce those
+//! derivations so `table1_thresholds` can print the same table.
+
+use crate::perfmodel::EngineModel;
+use crate::trace::Trace;
+use crate::velocity::VelocityProfile;
+
+/// Derived thresholds for all systems on one (trace, deployment) pair.
+#[derive(Clone, Debug)]
+pub struct Thresholds {
+    /// AIBrix / BlitzScale prefiller: concurrent requests per prefiller
+    /// (= max prefill throughput / average prefill length).
+    pub concurrency_per_prefiller: f64,
+    /// AIBrix decoder: memory-utilization trigger (fixed at 70 %).
+    pub aibrix_mem_util: f64,
+    /// BlitzScale decoder: concurrent requests per decoder
+    /// (= KVC memory / average per-request footprint).
+    pub concurrency_per_decoder: f64,
+    /// DistServe prefiller: requests/s per prefiller.
+    pub rps_per_prefiller: f64,
+    /// DistServe decoder: requests/s per decoder.
+    pub rps_per_decoder: f64,
+    /// TokenScale prefiller: input tokens/s per prefiller (V_P).
+    pub tokens_per_prefiller: f64,
+}
+
+/// Derive every system's thresholds from the trace statistics and the
+/// deployment's velocity profile.
+pub fn derive(trace: &Trace, engine: &EngineModel, profile: &VelocityProfile) -> Thresholds {
+    let avg_in = trace.avg_input_tokens().max(1.0);
+    let avg_out = trace.avg_output_tokens().max(1.0);
+    let avg_total = avg_in + avg_out;
+
+    // Prefill-side: how many concurrent / per-second requests one
+    // prefiller sustains at the trace's average prompt length.
+    let concurrency_per_prefiller = (profile.prefill / avg_in).max(1.0);
+    let rps_per_prefiller = profile.prefill / avg_in;
+
+    // Decode-side: memory-capacity concurrency and completion-rate RPS.
+    let concurrency_per_decoder = (engine.kv_capacity_tokens() / avg_total).max(1.0);
+    // A decoder's sustainable completion rate: the velocity of the trace's
+    // average request type divided by its released tokens.
+    let v_avg = crate::velocity::decode_velocity(
+        engine,
+        avg_in.round() as usize,
+        avg_out.round() as usize,
+    );
+    let rps_per_decoder = v_avg / avg_total;
+
+    Thresholds {
+        concurrency_per_prefiller,
+        aibrix_mem_util: 0.70,
+        concurrency_per_decoder,
+        rps_per_prefiller,
+        rps_per_decoder,
+        tokens_per_prefiller: profile.prefill,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::catalog;
+    use crate::trace::{generate_family, TraceFamily};
+
+    #[test]
+    fn thresholds_in_table1_ballpark() {
+        // Table I (Azure conv, Llama-8B A100): BlitzScale/AIBrix P=7 req,
+        // BlitzScale D=45 req, DistServe P=14 req/s D=28 req/s,
+        // TokenScale 14 K tok/s.
+        let engine = EngineModel::new(
+            catalog::model("llama-3.1-8b").unwrap(),
+            catalog::gpu("a100-40g").unwrap(),
+            1,
+        );
+        let link = catalog::link("a100-cluster").unwrap();
+        let trace = generate_family(TraceFamily::AzureConv, 22.0, 300.0, 1);
+        let profile = VelocityProfile::analytic(&engine, &link, trace.avg_input_tokens() as usize);
+        let t = derive(&trace, &engine, &profile);
+        assert!(
+            (2.0..40.0).contains(&t.concurrency_per_prefiller),
+            "P concurrency {}",
+            t.concurrency_per_prefiller
+        );
+        assert!(
+            (15.0..300.0).contains(&t.concurrency_per_decoder),
+            "D concurrency {}",
+            t.concurrency_per_decoder
+        );
+        assert!(
+            (3.0..60.0).contains(&t.rps_per_prefiller),
+            "P rps {}",
+            t.rps_per_prefiller
+        );
+        assert!(
+            (5.0..120.0).contains(&t.rps_per_decoder),
+            "D rps {}",
+            t.rps_per_decoder
+        );
+        assert_eq!(t.aibrix_mem_util, 0.70);
+        assert!(t.tokens_per_prefiller > 3_000.0);
+    }
+}

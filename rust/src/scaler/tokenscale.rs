@@ -1,0 +1,178 @@
+//! TokenScale's velocity-ratio autoscaling calculators (§IV-C).
+//!
+//! Pure functions implementing Eq. 2 (prefillers), Eq. 3 (decoders) and
+//! Eq. 4 (regular decoders after the static Convertible pool), plus the
+//! hysteresis wrapper that turns instantaneous targets into stable scaling
+//! decisions.
+
+use crate::velocity::VelocityProfile;
+
+/// Eq. 2: required prefillers `I_P = λ / min(V_P, V_BW)` where λ is the
+/// input-token arrival rate (tok/s).
+pub fn required_prefillers(lambda_tokens_per_s: f64, profile: &VelocityProfile) -> usize {
+    let v = profile.prefill.min(profile.network);
+    if v <= 0.0 {
+        return 0;
+    }
+    (lambda_tokens_per_s / v).ceil().max(0.0) as usize
+}
+
+/// Eq. 3: required decoders `I_D = Σ_b λ'_b / V_D^b` where `λ'_b` is the
+/// per-bucket combined (input + predicted output) token arrival rate.
+/// Returns the unrounded sum; callers ceil it (the paper's §VI-B1 reports
+/// the fractional value 3.2 vs the measured saturation at 3).
+pub fn required_decoders_frac(lambda_per_bucket: &[f64; 9], profile: &VelocityProfile) -> f64 {
+    lambda_per_bucket
+        .iter()
+        .enumerate()
+        .map(|(b, l)| {
+            let v = profile.decode[b];
+            if v <= 0.0 {
+                0.0
+            } else {
+                l / v
+            }
+        })
+        .sum()
+}
+
+/// Eq. 3 rounded up to whole instances.
+pub fn required_decoders(lambda_per_bucket: &[f64; 9], profile: &VelocityProfile) -> usize {
+    required_decoders_frac(lambda_per_bucket, profile).ceil() as usize
+}
+
+/// Eq. 4: regular decoders after subtracting the static Convertible pool.
+pub fn regular_decoders(total_required: usize, convertible_count: usize) -> usize {
+    total_required.saturating_sub(convertible_count)
+}
+
+/// Offline sizing of the Convertible pool (§IV-C2): the estimated maximum
+/// decoder fleet multiplied by the trace's burst ratio.
+pub fn convertible_count(max_decoders_estimate: f64, burst_ratio: f64) -> usize {
+    (max_decoders_estimate * burst_ratio).ceil().max(1.0) as usize
+}
+
+/// Scale-up-fast / scale-down-slow hysteresis.
+///
+/// The paper scales whenever the computed target differs from the current
+/// count; naively applying that to a per-tick signal thrashes on noise.
+/// We follow the standard serverless practice the baselines also use:
+/// scale up immediately on a higher target, scale down only after the
+/// target has stayed below the current count for `down_delay_ticks`
+/// consecutive evaluations.
+#[derive(Clone, Debug)]
+pub struct Hysteresis {
+    pub down_delay_ticks: usize,
+    below: usize,
+    /// Max target seen during the below-streak (scale down to this).
+    below_max: usize,
+}
+
+impl Hysteresis {
+    pub fn new(down_delay_ticks: usize) -> Self {
+        Hysteresis {
+            down_delay_ticks,
+            below: 0,
+            below_max: 0,
+        }
+    }
+
+    /// Combine the instantaneous target with the current count.
+    pub fn apply(&mut self, current: usize, target: usize) -> usize {
+        if target >= current {
+            self.below = 0;
+            self.below_max = 0;
+            return target;
+        }
+        self.below += 1;
+        self.below_max = self.below_max.max(target);
+        if self.below >= self.down_delay_ticks {
+            let t = self.below_max.max(target);
+            self.below = 0;
+            self.below_max = 0;
+            t
+        } else {
+            current
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> VelocityProfile {
+        VelocityProfile {
+            prefill: 10_000.0,
+            network: 100_000.0,
+            decode: [20_000.0, 8_000.0, 5_000.0, 30_000.0, 9_000.0, 5_500.0, 38_000.0, 11_000.0, 6_400.0],
+        }
+    }
+
+    #[test]
+    fn eq2_prefillers() {
+        let p = profile();
+        assert_eq!(required_prefillers(0.0, &p), 0);
+        assert_eq!(required_prefillers(5_000.0, &p), 1);
+        assert_eq!(required_prefillers(10_000.0, &p), 1);
+        assert_eq!(required_prefillers(10_001.0, &p), 2);
+        assert_eq!(required_prefillers(35_000.0, &p), 4);
+    }
+
+    #[test]
+    fn eq2_uses_min_of_prefill_and_network() {
+        let mut p = profile();
+        p.network = 4_000.0; // network becomes the bottleneck
+        assert_eq!(required_prefillers(8_000.0, &p), 2);
+    }
+
+    #[test]
+    fn eq3_sums_buckets() {
+        let p = profile();
+        let mut lambda = [0.0; 9];
+        lambda[0] = 10_000.0; // 0.5 of bucket 0
+        lambda[2] = 10_000.0; // 2.0 of bucket 2
+        let frac = required_decoders_frac(&lambda, &p);
+        assert!((frac - 2.5).abs() < 1e-9);
+        assert_eq!(required_decoders(&lambda, &p), 3);
+    }
+
+    #[test]
+    fn eq4_subtracts_convertibles() {
+        assert_eq!(regular_decoders(5, 2), 3);
+        assert_eq!(regular_decoders(1, 2), 0);
+    }
+
+    #[test]
+    fn convertible_sizing() {
+        assert_eq!(convertible_count(8.0, 0.25), 2);
+        assert_eq!(convertible_count(2.0, 0.1), 1); // at least one
+    }
+
+    #[test]
+    fn hysteresis_up_fast_down_slow() {
+        let mut h = Hysteresis::new(3);
+        assert_eq!(h.apply(2, 5), 5); // immediate up
+        assert_eq!(h.apply(5, 3), 5); // hold
+        assert_eq!(h.apply(5, 3), 5); // hold
+        assert_eq!(h.apply(5, 3), 3); // third consecutive below -> down
+    }
+
+    #[test]
+    fn hysteresis_resets_on_up() {
+        let mut h = Hysteresis::new(3);
+        assert_eq!(h.apply(5, 3), 5);
+        assert_eq!(h.apply(5, 3), 5);
+        assert_eq!(h.apply(5, 6), 6); // spike resets the streak
+        assert_eq!(h.apply(6, 3), 6);
+        assert_eq!(h.apply(6, 3), 6);
+        assert_eq!(h.apply(6, 3), 3);
+    }
+
+    #[test]
+    fn hysteresis_scales_down_to_streak_max() {
+        let mut h = Hysteresis::new(2);
+        assert_eq!(h.apply(10, 4), 10);
+        assert_eq!(h.apply(10, 7), 7); // down, but to the streak max 7
+    }
+}

@@ -1,0 +1,11 @@
+//! Real PD-disaggregated serving over the PJRT engine.
+//!
+//! An in-process miniature of the paper's deployment: a prefill worker
+//! thread and a decode worker thread each own a [`RealEngine`] (their own
+//! PJRT client — disaggregated state), connected by channels standing in
+//! for the RDMA KVC path. std threads + mpsc replace tokio (offline crate
+//! set; see DESIGN.md).
+
+pub mod pd;
+
+pub use pd::{PdServer, ServeReport, ServeRequest, ServedCompletion};

@@ -1,0 +1,260 @@
+//! The threaded prefill/decode server.
+//!
+//! Topology (mirrors Fig. 1 at miniature scale):
+//!
+//! ```text
+//!  submit ──► [prefill worker: RealEngine A] ──KVC channel──►
+//!             [decode worker: RealEngine B, continuous batching] ──► done
+//! ```
+//!
+//! The prefill worker computes prompt KV (the paper's prefiller); the
+//! decode worker installs transferred KV into free lanes and runs batched
+//! decode iterations (the decoder). TTFT is measured when the first output
+//! token exists; TPOT over subsequent tokens.
+
+use crate::runtime::{artifacts_dir, RealEngine};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// A request submitted to the server.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// Output tokens to generate.
+    pub max_new_tokens: usize,
+}
+
+/// Completion record with real measured latencies.
+#[derive(Clone, Debug)]
+pub struct ServedCompletion {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Seconds from submit to first output token.
+    pub ttft: f64,
+    /// Mean seconds per output token after the first.
+    pub tpot: f64,
+}
+
+/// Aggregate report for a served batch of requests.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub completions: Vec<ServedCompletion>,
+    pub wall_s: f64,
+    pub total_output_tokens: usize,
+}
+
+impl ServeReport {
+    pub fn throughput_tps(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.total_output_tokens as f64 / self.wall_s
+        }
+    }
+
+    pub fn mean_ttft(&self) -> f64 {
+        if self.completions.is_empty() {
+            return 0.0;
+        }
+        self.completions.iter().map(|c| c.ttft).sum::<f64>() / self.completions.len() as f64
+    }
+
+    pub fn mean_tpot(&self) -> f64 {
+        let with: Vec<f64> = self
+            .completions
+            .iter()
+            .filter(|c| c.tokens.len() > 1)
+            .map(|c| c.tpot)
+            .collect();
+        if with.is_empty() {
+            0.0
+        } else {
+            with.iter().sum::<f64>() / with.len() as f64
+        }
+    }
+}
+
+struct KvHandoff {
+    id: u64,
+    pre: crate::runtime::PrefillResult,
+    max_new_tokens: usize,
+    submitted: Instant,
+}
+
+/// The PD server. `serve_all` runs the full pipeline to completion —
+/// suitable for the examples and benches (a long-running daemon variant
+/// would loop forever on the submit channel).
+pub struct PdServer;
+
+impl PdServer {
+    /// Serve a workload through the two-stage pipeline; returns per-request
+    /// real latencies. Loads two engines (prefiller + decoder).
+    pub fn serve_all(requests: Vec<ServeRequest>) -> anyhow::Result<ServeReport> {
+        let dir = artifacts_dir();
+        // PJRT handles are not Send: each worker constructs its engine
+        // inside its own thread (truly disaggregated state).
+        let mut decoder = RealEngine::load(&dir)?;
+
+        let (kv_tx, kv_rx) = mpsc::channel::<KvHandoff>();
+        let start = Instant::now();
+
+        // Prefill worker: sequential prompt passes (prefill batch = 1, as
+        // in the paper's §II-C2), shipping KV to the decoder.
+        let prefill_dir = dir.clone();
+        let prefill_thread = std::thread::spawn(move || -> anyhow::Result<()> {
+            let mut prefiller = RealEngine::load(&prefill_dir)?;
+            for req in requests {
+                let submitted = Instant::now();
+                let pre = prefiller.prefill(&req.prompt)?;
+                kv_tx.send(KvHandoff {
+                    id: req.id,
+                    pre,
+                    max_new_tokens: req.max_new_tokens,
+                    submitted,
+                })?;
+            }
+            Ok(())
+        });
+
+        // Decode worker: continuous batching over the engine's lanes.
+        struct LaneState {
+            id: u64,
+            target: usize,
+            tokens: Vec<i32>,
+            first_at: Instant,
+            submitted: Instant,
+        }
+        let mut lanes: Vec<Option<LaneState>> = Vec::new();
+        let mut completions = Vec::new();
+        let mut total_tokens = 0usize;
+        let mut inbox_open = true;
+
+        while inbox_open || lanes.iter().any(|l| l.is_some()) {
+            // Install pending KV into free lanes.
+            while decoder.free_lanes() > 0 {
+                match kv_rx.try_recv() {
+                    Ok(h) => {
+                        let lane = decoder.start_sequence(&h.pre)?;
+                        if lanes.len() <= lane {
+                            lanes.resize_with(lane + 1, || None);
+                        }
+                        let now = Instant::now();
+                        lanes[lane] = Some(LaneState {
+                            id: h.id,
+                            target: h.max_new_tokens,
+                            tokens: vec![h.pre.first_token],
+                            first_at: now,
+                            submitted: h.submitted,
+                        });
+                        total_tokens += 1;
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        inbox_open = false;
+                        break;
+                    }
+                }
+            }
+            if lanes.iter().all(|l| l.is_none()) {
+                if !inbox_open {
+                    break;
+                }
+                // Idle: block for the next handoff.
+                match kv_rx.recv() {
+                    Ok(h) => {
+                        let lane = decoder.start_sequence(&h.pre)?;
+                        if lanes.len() <= lane {
+                            lanes.resize_with(lane + 1, || None);
+                        }
+                        let now = Instant::now();
+                        lanes[lane] = Some(LaneState {
+                            id: h.id,
+                            target: h.max_new_tokens,
+                            tokens: vec![h.pre.first_token],
+                            first_at: now,
+                            submitted: h.submitted,
+                        });
+                        total_tokens += 1;
+                        continue;
+                    }
+                    Err(_) => {
+                        inbox_open = false;
+                        continue;
+                    }
+                }
+            }
+
+            // One continuous-batching iteration.
+            for (lane, tok, _) in decoder.decode_iteration()? {
+                if let Some(Some(state)) = lanes.get_mut(lane).map(|l| l.as_mut()) {
+                    state.tokens.push(tok);
+                    total_tokens += 1;
+                }
+            }
+            // Finish lanes that reached their target.
+            for (lane_idx, slot) in lanes.iter_mut().enumerate() {
+                let done = slot
+                    .as_ref()
+                    .map(|s| s.tokens.len() >= s.target)
+                    .unwrap_or(false);
+                if done {
+                    let s = slot.take().unwrap();
+                    decoder.finish(lane_idx);
+                    let now = Instant::now();
+                    let ttft = (s.first_at - s.submitted).as_secs_f64();
+                    let n = s.tokens.len();
+                    let tpot = if n > 1 {
+                        (now - s.first_at).as_secs_f64() / (n - 1) as f64
+                    } else {
+                        0.0
+                    };
+                    completions.push(ServedCompletion {
+                        id: s.id,
+                        tokens: s.tokens,
+                        ttft,
+                        tpot,
+                    });
+                }
+            }
+        }
+
+        prefill_thread
+            .join()
+            .map_err(|_| anyhow::anyhow!("prefill worker panicked"))??;
+        Ok(ServeReport {
+            completions,
+            wall_s: start.elapsed().as_secs_f64(),
+            total_output_tokens: total_tokens,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_available;
+
+    #[test]
+    fn serves_batch_with_real_latencies() {
+        if !artifacts_available() {
+            eprintln!("artifacts/ missing; skipped");
+            return;
+        }
+        let requests: Vec<ServeRequest> = (0..6)
+            .map(|i| ServeRequest {
+                id: i,
+                prompt: (0..(4 + i as i32 * 3)).map(|t| (t * 11 + i as i32) % 400).collect(),
+                max_new_tokens: 6,
+            })
+            .collect();
+        let report = PdServer::serve_all(requests).unwrap();
+        assert_eq!(report.completions.len(), 6);
+        for c in &report.completions {
+            assert_eq!(c.tokens.len(), 6);
+            assert!(c.ttft > 0.0 && c.ttft.is_finite());
+            assert!(c.tpot >= 0.0);
+        }
+        assert!(report.throughput_tps() > 0.0);
+    }
+}

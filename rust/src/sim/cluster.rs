@@ -1,0 +1,245 @@
+//! Cluster state: the set of live instances, spawn/retire lifecycle, and
+//! GPU-cost accounting.
+
+use super::event::InstanceId;
+use super::instance::{Instance, LifeState, Role};
+use crate::metrics::TimeSeries;
+use crate::perfmodel::EngineModel;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Deployment-level configuration of a simulated cluster.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Engine model for prefiller instances.
+    pub prefill_engine: Arc<EngineModel>,
+    /// Engine model for decoder instances (same model, possibly same spec).
+    pub decode_engine: Arc<EngineModel>,
+    /// Startup latency override; None uses the engine model's estimate.
+    pub startup_override_s: Option<f64>,
+    /// Hard cap on simultaneously allocated GPUs (cluster size).
+    pub max_gpus: usize,
+    /// Convertible decoder chunk budget (tokens/iteration, from the
+    /// offline profiler).
+    pub convertible_chunk_size: usize,
+    /// Eq. 6 reserved KV tokens on each convertible decoder.
+    pub convertible_reserve_tokens: f64,
+}
+
+/// The live cluster.
+pub struct Cluster {
+    pub config: ClusterConfig,
+    pub instances: BTreeMap<InstanceId, Instance>,
+    next_id: InstanceId,
+    /// GPU-seconds accumulated so far.
+    pub gpu_seconds: f64,
+    last_cost_t: f64,
+    /// Instance-count time series (provisioned; Fig. 11).
+    pub prefiller_series: TimeSeries,
+    pub decoder_series: TimeSeries,
+}
+
+impl Cluster {
+    pub fn new(config: ClusterConfig) -> Cluster {
+        Cluster {
+            config,
+            instances: BTreeMap::new(),
+            next_id: 0,
+            gpu_seconds: 0.0,
+            last_cost_t: 0.0,
+            prefiller_series: TimeSeries::new("prefillers"),
+            decoder_series: TimeSeries::new("decoders"),
+        }
+    }
+
+    /// Advance the GPU-cost integral to `now`.
+    pub fn accrue_cost(&mut self, now: f64) {
+        let dt = (now - self.last_cost_t).max(0.0);
+        if dt > 0.0 {
+            self.gpu_seconds += self.allocated_gpus() as f64 * dt;
+            self.last_cost_t = now;
+        }
+    }
+
+    /// GPUs currently allocated (all non-removed instances, including
+    /// Starting and Draining — they occupy hardware).
+    pub fn allocated_gpus(&self) -> usize {
+        self.instances.values().map(|i| i.gpus()).sum()
+    }
+
+    pub fn count_role(&self, role: Role) -> usize {
+        self.instances.values().filter(|i| i.role == role).count()
+    }
+
+    /// Instances of a role that are not draining (the "desired count" the
+    /// autoscalers compare against).
+    pub fn active_count(&self, role: Role) -> usize {
+        self.instances
+            .values()
+            .filter(|i| i.role == role && i.life != LifeState::Draining)
+            .count()
+    }
+
+    /// Spawn a new instance; returns None if the GPU cap would be exceeded.
+    pub fn spawn(&mut self, role: Role, now: f64, live_startup_s: Option<f64>) -> Option<InstanceId> {
+        let engine = match role {
+            Role::Prefiller => self.config.prefill_engine.clone(),
+            _ => self.config.decode_engine.clone(),
+        };
+        if self.allocated_gpus() + engine.tp > self.config.max_gpus {
+            return None;
+        }
+        self.accrue_cost(now);
+        let startup = live_startup_s
+            .or(self.config.startup_override_s)
+            .unwrap_or_else(|| engine.startup_time());
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut inst = Instance::new(id, role, engine, now, startup);
+        if role == Role::ConvertibleDecoder {
+            inst.chunk_size = self.config.convertible_chunk_size;
+            inst.convertible_reserve_tokens = self.config.convertible_reserve_tokens;
+        }
+        self.instances.insert(id, inst);
+        self.record_counts(now);
+        Some(id)
+    }
+
+    /// Mark an instance draining; it is physically removed by
+    /// `sweep_drained` once idle. Convertible decoders are never retired by
+    /// the autoscaler (the paper keeps them static).
+    pub fn retire(&mut self, id: InstanceId, now: f64) {
+        self.accrue_cost(now);
+        if let Some(inst) = self.instances.get_mut(&id) {
+            inst.life = LifeState::Draining;
+        }
+        self.record_counts(now);
+    }
+
+    /// Remove drained instances, freeing their GPUs. Returns removed ids.
+    pub fn sweep_drained(&mut self, now: f64) -> Vec<InstanceId> {
+        self.accrue_cost(now);
+        let dead: Vec<InstanceId> = self
+            .instances
+            .values()
+            .filter(|i| i.life == LifeState::Draining && i.drained())
+            .map(|i| i.id)
+            .collect();
+        for id in &dead {
+            self.instances.remove(id);
+        }
+        if !dead.is_empty() {
+            self.record_counts(now);
+        }
+        dead
+    }
+
+    fn record_counts(&mut self, now: f64) {
+        self.prefiller_series
+            .push(now, self.active_count(Role::Prefiller) as f64);
+        self.decoder_series.push(
+            now,
+            (self.active_count(Role::Decoder) + self.active_count(Role::ConvertibleDecoder)) as f64,
+        );
+    }
+
+    pub fn get(&self, id: InstanceId) -> Option<&Instance> {
+        self.instances.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: InstanceId) -> Option<&mut Instance> {
+        self.instances.get_mut(&id)
+    }
+
+    /// Iterate running instances of a role.
+    pub fn running_of(&self, role: Role) -> impl Iterator<Item = &Instance> {
+        self.instances
+            .values()
+            .filter(move |i| i.role == role && i.is_running())
+    }
+
+    /// Ids of non-draining instances of a role, spawn order.
+    pub fn ids_of(&self, role: Role) -> Vec<InstanceId> {
+        self.instances
+            .values()
+            .filter(|i| i.role == role && i.life != LifeState::Draining)
+            .map(|i| i.id)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::catalog;
+
+    pub fn test_config(max_gpus: usize) -> ClusterConfig {
+        let engine = Arc::new(EngineModel::new(
+            catalog::model("llama-3.1-8b").unwrap(),
+            catalog::gpu("a100-40g").unwrap(),
+            1,
+        ));
+        ClusterConfig {
+            prefill_engine: engine.clone(),
+            decode_engine: engine,
+            startup_override_s: None,
+            max_gpus,
+            convertible_chunk_size: 512,
+            convertible_reserve_tokens: 8192.0,
+        }
+    }
+
+    #[test]
+    fn spawn_respects_gpu_cap() {
+        let mut c = Cluster::new(test_config(2));
+        assert!(c.spawn(Role::Prefiller, 0.0, None).is_some());
+        assert!(c.spawn(Role::Decoder, 0.0, None).is_some());
+        assert!(c.spawn(Role::Decoder, 0.0, None).is_none());
+        assert_eq!(c.allocated_gpus(), 2);
+    }
+
+    #[test]
+    fn cost_accrues_with_time() {
+        let mut c = Cluster::new(test_config(8));
+        c.spawn(Role::Prefiller, 0.0, None);
+        c.spawn(Role::Decoder, 0.0, None);
+        c.accrue_cost(10.0);
+        assert!((c.gpu_seconds - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn retire_then_sweep() {
+        let mut c = Cluster::new(test_config(8));
+        let id = c.spawn(Role::Decoder, 0.0, None).unwrap();
+        c.retire(id, 1.0);
+        assert_eq!(c.active_count(Role::Decoder), 0);
+        assert_eq!(c.count_role(Role::Decoder), 1); // still allocated
+        let removed = c.sweep_drained(2.0);
+        assert_eq!(removed, vec![id]);
+        assert_eq!(c.count_role(Role::Decoder), 0);
+    }
+
+    #[test]
+    fn convertible_gets_chunk_config() {
+        let mut c = Cluster::new(test_config(8));
+        let id = c.spawn(Role::ConvertibleDecoder, 0.0, None).unwrap();
+        let inst = c.get(id).unwrap();
+        assert_eq!(inst.chunk_size, 512);
+        assert_eq!(inst.convertible_reserve_tokens, 8192.0);
+    }
+
+    #[test]
+    fn series_track_counts() {
+        let mut c = Cluster::new(test_config(8));
+        c.spawn(Role::Prefiller, 0.0, None);
+        c.spawn(Role::Prefiller, 1.0, None);
+        assert_eq!(c.prefiller_series.value_at(1.5), Some(2.0));
+    }
+
+    #[test]
+    fn live_startup_overrides() {
+        let mut c = Cluster::new(test_config(8));
+        let id = c.spawn(Role::Prefiller, 0.0, Some(0.2)).unwrap();
+        assert!((c.get(id).unwrap().ready_at - 0.2).abs() < 1e-12);
+    }
+}

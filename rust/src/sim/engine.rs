@@ -1,0 +1,959 @@
+//! The discrete-event simulation engine.
+//!
+//! Drives a [`Coordinator`] (TokenScale or a baseline) over a trace against
+//! a simulated PD-disaggregated cluster: prefillers process prompts, KVC
+//! moves across the interconnect, decoders run continuous batching (with
+//! restricted chunked prefill on Convertible Decoders), instances start up
+//! with realistic delays, and every completion's TTFT/TPOT is recorded.
+
+use super::cluster::{Cluster, ClusterConfig};
+use super::event::{Event, EventQueue, InstanceId};
+use super::instance::{ActiveSeq, LifeState, PrefillJob, Role};
+use super::policy::{Coordinator, Route, ScaleTargets};
+use crate::metrics::{MetricsRecorder, TimeSeries};
+use crate::perfmodel::LinkSpec;
+use crate::trace::Trace;
+use crate::workload::{Completion, Request, RequestId, SloPolicy};
+use std::collections::{HashMap, VecDeque};
+
+/// Simulation parameters.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Control-plane tick interval (autoscaler evaluation period).
+    pub control_interval_s: f64,
+    /// Time-series sampling interval.
+    pub sample_interval_s: f64,
+    /// Interconnect between prefillers and decoders.
+    pub link: LinkSpec,
+    /// Initial fleet (spawned warm at t=0).
+    pub initial_prefillers: usize,
+    pub initial_decoders: usize,
+    pub initial_convertibles: usize,
+    /// Extra simulated time after the last arrival to drain in-flight work.
+    pub drain_s: f64,
+    /// SLOs used in reports.
+    pub slo: SloPolicy,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            control_interval_s: 0.25,
+            sample_interval_s: 0.25,
+            link: crate::perfmodel::catalog::link("a100-cluster").unwrap(),
+            initial_prefillers: 1,
+            initial_decoders: 1,
+            initial_convertibles: 0,
+            drain_s: 120.0,
+            slo: SloPolicy::default(),
+        }
+    }
+}
+
+/// Sampled utilization/timeline series captured during a run (Figs. 4, 10).
+#[derive(Clone, Debug, Default)]
+pub struct SimSeries {
+    /// Fraction of running prefillers busy.
+    pub prefill_compute: TimeSeries,
+    /// Mean decoder KV-memory utilization.
+    pub decode_memory: TimeSeries,
+    /// Fraction of running decoders iterating.
+    pub decode_compute: TimeSeries,
+    /// Interconnect utilization (aggregate transfer rate / capacity).
+    pub network: TimeSeries,
+    /// Output tokens per second (decode throughput, Fig. 10b).
+    pub decode_throughput: TimeSeries,
+    /// Gateway queue length.
+    pub queue_len: TimeSeries,
+}
+
+/// Complete result of a simulation run.
+pub struct SimResult {
+    pub metrics: MetricsRecorder,
+    pub series: SimSeries,
+    /// Provisioned-instance series (from the cluster).
+    pub prefiller_series: TimeSeries,
+    pub decoder_series: TimeSeries,
+    /// Per-completion (arrival time, ttft) pairs, for timeline plots.
+    pub ttft_points: Vec<(f64, f64)>,
+    pub horizon_s: f64,
+    /// Total scale-up/scale-down actions (instances spawned/retired).
+    pub scale_ups: usize,
+    pub scale_downs: usize,
+}
+
+/// In-flight KVC transfer bookkeeping.
+struct Transfer {
+    bytes_per_s: f64,
+}
+
+/// Per-request journey clocks.
+#[derive(Clone, Copy, Default)]
+struct Clocks {
+    prefill_done: Option<f64>,
+}
+
+pub struct SimEngine<'a, C: Coordinator> {
+    cfg: SimConfig,
+    coordinator: &'a mut C,
+    cluster: Cluster,
+    events: EventQueue,
+    trace: &'a Trace,
+    now: f64,
+    /// Gateway queue of prefill tasks with no feasible instance (Alg. 1).
+    pending: VecDeque<Request>,
+    /// Prefilled requests awaiting a decoder with capacity (backpressure).
+    awaiting_decode: VecDeque<Request>,
+    transfers: HashMap<RequestId, Transfer>,
+    /// Requests mid-KVC-transfer: (request, predicted bucket).
+    in_transfer: HashMap<RequestId, (Request, usize)>,
+    clocks: HashMap<RequestId, Clocks>,
+    metrics: MetricsRecorder,
+    series: SimSeries,
+    ttft_points: Vec<(f64, f64)>,
+    /// Output tokens generated since the last sample tick.
+    tokens_since_sample: f64,
+    scale_ups: usize,
+    scale_downs: usize,
+    /// Per-instance chunk tokens processed by the in-flight iteration.
+    iter_chunk: HashMap<InstanceId, usize>,
+}
+
+impl<'a, C: Coordinator> SimEngine<'a, C> {
+    pub fn new(
+        cfg: SimConfig,
+        cluster_cfg: ClusterConfig,
+        coordinator: &'a mut C,
+        trace: &'a Trace,
+    ) -> Self {
+        SimEngine {
+            cfg,
+            coordinator,
+            cluster: Cluster::new(cluster_cfg),
+            events: EventQueue::new(),
+            trace,
+            now: 0.0,
+            pending: VecDeque::new(),
+            awaiting_decode: VecDeque::new(),
+            transfers: HashMap::new(),
+            in_transfer: HashMap::new(),
+            clocks: HashMap::new(),
+            metrics: MetricsRecorder::new(),
+            series: SimSeries::default(),
+            ttft_points: Vec::new(),
+            tokens_since_sample: 0.0,
+            scale_ups: 0,
+            scale_downs: 0,
+            iter_chunk: HashMap::new(),
+        }
+    }
+
+    /// Run the simulation to completion and return the results.
+    pub fn run(mut self) -> SimResult {
+        // Warm initial fleet.
+        for _ in 0..self.cfg.initial_prefillers {
+            self.cluster.spawn(Role::Prefiller, 0.0, Some(0.0));
+        }
+        for _ in 0..self.cfg.initial_decoders {
+            self.cluster.spawn(Role::Decoder, 0.0, Some(0.0));
+        }
+        for _ in 0..self.cfg.initial_convertibles {
+            self.cluster.spawn(Role::ConvertibleDecoder, 0.0, Some(0.0));
+        }
+        for (i, r) in self.trace.requests.iter().enumerate() {
+            self.events.push(r.arrival, Event::Arrival(i));
+        }
+        self.events.push(0.0, Event::ControlTick);
+        self.events.push(0.0, Event::SampleTick);
+
+        let horizon = self.trace.duration_s + self.cfg.drain_s;
+        while let Some((t, ev)) = self.events.pop() {
+            if t > horizon {
+                break;
+            }
+            self.now = t;
+            self.cluster.accrue_cost(t);
+            self.handle(ev);
+            // Stop early once all work has drained past the trace end.
+            if self.now > self.trace.duration_s
+                && self.all_idle()
+                && self.pending.is_empty()
+                && self.awaiting_decode.is_empty()
+            {
+                break;
+            }
+        }
+        let end = self.now.max(self.trace.duration_s);
+        self.cluster.accrue_cost(end);
+        self.metrics.gpu_seconds = self.cluster.gpu_seconds;
+        // Cost is averaged over the actual busy horizon (trace + drain), so
+        // a policy that leaves a long tail of unfinished work pays for it.
+        self.metrics.horizon_s = end;
+        SimResult {
+            metrics: self.metrics,
+            series: self.series,
+            prefiller_series: self.cluster.prefiller_series.clone(),
+            decoder_series: self.cluster.decoder_series.clone(),
+            ttft_points: self.ttft_points,
+            horizon_s: end,
+            scale_ups: self.scale_ups,
+            scale_downs: self.scale_downs,
+        }
+    }
+
+    fn all_idle(&self) -> bool {
+        self.transfers.is_empty()
+            && self.cluster.instances.values().all(|i| i.drained())
+    }
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::Arrival(idx) => {
+                let req = self.trace.requests[idx].clone();
+                self.coordinator.observe_arrival(self.now, &req);
+                self.dispatch_prefill(req);
+            }
+            Event::ControlTick => {
+                self.control_tick();
+                self.events
+                    .push(self.now + self.cfg.control_interval_s, Event::ControlTick);
+            }
+            Event::SampleTick => {
+                self.sample();
+                self.events
+                    .push(self.now + self.cfg.sample_interval_s, Event::SampleTick);
+            }
+            Event::InstanceReady { instance } => {
+                if let Some(inst) = self.cluster.get_mut(instance) {
+                    if inst.life == LifeState::Starting {
+                        inst.life = LifeState::Running;
+                    }
+                }
+                self.reoffer_pending();
+                self.maybe_start_prefill(instance);
+            }
+            Event::PrefillDone { instance, req } => self.on_prefill_done(instance, req),
+            Event::TransferDone { instance, req } => self.on_transfer_done(instance, req),
+            Event::DecodeIterDone { instance, epoch } => self.on_iter_done(instance, epoch),
+        }
+    }
+
+    // ---- routing / prefill ----
+
+    fn dispatch_prefill(&mut self, req: Request) {
+        match self.coordinator.route_prefill(self.now, &req, &self.cluster) {
+            Route::Prefiller(id) => {
+                let job = PrefillJob {
+                    remaining: req.input_tokens,
+                    req,
+                    enqueued_at: self.now,
+                };
+                if let Some(inst) = self.cluster.get_mut(id) {
+                    inst.prefill_queue.push_back(job);
+                } else {
+                    // Router picked a just-removed instance: queue instead.
+                    self.pending.push_back(job.req);
+                    return;
+                }
+                self.maybe_start_prefill(id);
+            }
+            Route::Convertible(id) => self.admit_convertible_prefill(id, req),
+            Route::Queue => self.pending.push_back(req),
+        }
+    }
+
+    /// Hand a prefill task to a Convertible Decoder: the sequence reserves
+    /// its full KV footprint there (prefill happens in place; no transfer)
+    /// and the chunked-prefill loop carries it through decode afterwards.
+    fn admit_convertible_prefill(&mut self, id: InstanceId, req: Request) {
+        let bucket = self.coordinator.predict_bucket(&req);
+        let job = PrefillJob {
+            remaining: req.input_tokens,
+            req,
+            enqueued_at: self.now,
+        };
+        let Some(inst) = self.cluster.get_mut(id) else {
+            self.pending.push_back(job.req);
+            return;
+        };
+        inst.reserved_tokens += job.req.total_tokens() as f64;
+        // Convertible decoders process at most one prefill at a time
+        // (§IV-D); extras wait in its local queue.
+        inst.prefill_queue.push_back(job);
+        let _ = bucket; // bucket recorded when the seq joins decode
+        self.ensure_iterating(id);
+    }
+
+    fn maybe_start_prefill(&mut self, id: InstanceId) {
+        let Some(inst) = self.cluster.get_mut(id) else {
+            return;
+        };
+        // A draining prefiller still finishes its queue; a starting one
+        // cannot run yet.
+        if inst.role != Role::Prefiller
+            || inst.active_prefill.is_some()
+            || inst.life == LifeState::Starting
+        {
+            return;
+        }
+        let Some(job) = inst.prefill_queue.pop_front() else {
+            return;
+        };
+        let dur = inst.engine.prefill_time(job.req.input_tokens);
+        let req_id = job.req.id;
+        inst.active_prefill = Some(job);
+        inst.prefill_done_at = self.now + dur;
+        self.events.push(
+            self.now + dur,
+            Event::PrefillDone {
+                instance: id,
+                req: req_id,
+            },
+        );
+    }
+
+    fn on_prefill_done(&mut self, instance: InstanceId, req_id: RequestId) {
+        let Some(inst) = self.cluster.get_mut(instance) else {
+            return;
+        };
+        let Some(job) = inst.active_prefill.take() else {
+            return;
+        };
+        debug_assert_eq!(job.req.id, req_id);
+        inst.prefill_done_at = f64::INFINITY;
+        self.clocks.entry(req_id).or_default().prefill_done = Some(self.now);
+        // Next job on this prefiller.
+        self.maybe_start_prefill(instance);
+        // Ship the KVC to a decoder.
+        self.try_send_to_decoder(job.req);
+    }
+
+    fn try_send_to_decoder(&mut self, req: Request) {
+        // Reject requests that can never fit: their full KV footprint
+        // exceeds a whole decoder's capacity (no amount of scaling helps).
+        let max_capacity = self.cluster.config.decode_engine.kv_capacity_tokens();
+        if req.total_tokens() as f64 > max_capacity {
+            log::warn!(
+                "request {} needs {} KV tokens > decoder capacity {:.0}; rejecting",
+                req.id,
+                req.total_tokens(),
+                max_capacity
+            );
+            self.metrics.dropped += 1;
+            return;
+        }
+        match self.coordinator.route_decode(self.now, &req, &self.cluster) {
+            Some(decoder) => {
+                let bucket = self.coordinator.predict_bucket(&req);
+                let Some(inst) = self.cluster.get_mut(decoder) else {
+                    self.awaiting_decode.push_back(req);
+                    return;
+                };
+                // Reserve at transfer start so concurrent transfers cannot
+                // overcommit the decoder.
+                inst.reserved_tokens += req.total_tokens() as f64;
+                let bytes = inst.engine.kvc_bytes(req.input_tokens);
+                let dur = self.cfg.link.transfer_time(bytes);
+                self.transfers.insert(
+                    req.id,
+                    Transfer {
+                        bytes_per_s: bytes / dur.max(1e-9),
+                    },
+                );
+                let _ = bucket;
+                self.events.push(
+                    self.now + dur,
+                    Event::TransferDone {
+                        instance: decoder,
+                        req: req.id,
+                    },
+                );
+                // Stash the request on the decoder via joining-at-transfer:
+                // we re-create the ActiveSeq at TransferDone; carry the
+                // request in the event via a map.
+                self.in_transfer.insert(req.id, (req, bucket));
+            }
+            None => self.awaiting_decode.push_back(req),
+        }
+    }
+
+    fn on_transfer_done(&mut self, instance: InstanceId, req_id: RequestId) {
+        self.transfers.remove(&req_id);
+        let Some((req, bucket)) = self.in_transfer.remove(&req_id) else {
+            return;
+        };
+        let Some(inst) = self.cluster.get_mut(instance) else {
+            return;
+        };
+        inst.joining.push(ActiveSeq {
+            ctx: req.input_tokens,
+            generated: 0,
+            first_token_at: None,
+            predicted_bucket: bucket,
+            req,
+        });
+        self.ensure_iterating(instance);
+    }
+
+    // ---- decode iterations ----
+
+    /// Start an engine iteration on a decoder if one is not in flight.
+    fn ensure_iterating(&mut self, id: InstanceId) {
+        let Some(inst) = self.cluster.get_mut(id) else {
+            return;
+        };
+        if !inst.is_running() && inst.life != LifeState::Draining {
+            return;
+        }
+        if inst.iterating {
+            return;
+        }
+        // Merge joiners at the iteration boundary.
+        let joiners = std::mem::take(&mut inst.joining);
+        inst.batch.extend(joiners);
+        let max_batch = 256;
+        if inst.batch.len() > max_batch {
+            // Defer the overflow back to joining (next iterations).
+            let overflow = inst.batch.split_off(max_batch);
+            inst.joining = overflow;
+        }
+
+        // Convertible decoders pull their next prefill job into the chunked
+        // loop (at most one at a time, prioritizing decode: chunk budget is
+        // what's left after the decode batch).
+        let mut chunk_tokens = 0usize;
+        if inst.role == Role::ConvertibleDecoder {
+            if inst.active_prefill.is_none() {
+                inst.active_prefill = inst.prefill_queue.pop_front();
+            }
+            if let Some(job) = &inst.active_prefill {
+                let budget = inst.chunk_size.saturating_sub(inst.batch.len());
+                chunk_tokens = budget.min(job.remaining);
+            }
+        }
+
+        if inst.batch.is_empty() && chunk_tokens == 0 {
+            return; // idle
+        }
+
+        let avg_ctx = if inst.batch.is_empty() {
+            0.0
+        } else {
+            inst.batch.iter().map(|s| s.ctx as f64).sum::<f64>() / inst.batch.len() as f64
+        };
+        let dur = if chunk_tokens > 0 {
+            inst.engine
+                .chunked_iter_time(chunk_tokens, inst.batch.len(), avg_ctx)
+        } else {
+            inst.engine.decode_iter_time(inst.batch.len(), avg_ctx)
+        };
+        inst.iterating = true;
+        inst.iter_epoch += 1;
+        let epoch = inst.iter_epoch;
+        self.iter_chunk.insert(id, chunk_tokens);
+        self.events.push(
+            self.now + dur,
+            Event::DecodeIterDone {
+                instance: id,
+                epoch,
+            },
+        );
+    }
+
+    fn on_iter_done(&mut self, id: InstanceId, epoch: u64) {
+        let chunk = self.iter_chunk.remove(&id).unwrap_or(0);
+        let mut completions: Vec<Completion> = Vec::new();
+        let mut freed = false;
+        {
+            let Some(inst) = self.cluster.get_mut(id) else {
+                return;
+            };
+            if epoch != inst.iter_epoch {
+                return; // stale event
+            }
+            inst.iterating = false;
+
+            // Apply chunked-prefill progress.
+            if chunk > 0 {
+                if let Some(job) = &mut inst.active_prefill {
+                    job.remaining = job.remaining.saturating_sub(chunk);
+                    if job.remaining == 0 {
+                        let job = inst.active_prefill.take().unwrap();
+                        // Seamlessly transition to decoding on this instance
+                        // (§III-D); KV already reserved at admission.
+                        let bucket = crate::workload::BucketScheme::default()
+                            .classify(job.req.input_tokens, job.req.output_tokens)
+                            .index();
+                        self.clocks.entry(job.req.id).or_default().prefill_done = Some(self.now);
+                        inst.joining.push(ActiveSeq {
+                            ctx: job.req.input_tokens,
+                            generated: 0,
+                            first_token_at: None,
+                            predicted_bucket: bucket,
+                            req: job.req,
+                        });
+                    }
+                }
+            }
+
+            // Every batched sequence emits one token.
+            let now = self.now;
+            let n_generated = inst.batch.len() as f64;
+            self.tokens_since_sample += n_generated;
+            let mut still_active = Vec::with_capacity(inst.batch.len());
+            for mut seq in inst.batch.drain(..) {
+                seq.generated += 1;
+                seq.ctx += 1;
+                if seq.first_token_at.is_none() {
+                    seq.first_token_at = Some(now);
+                }
+                if seq.generated >= seq.req.output_tokens {
+                    // Completed: release the full reservation.
+                    inst.reserved_tokens =
+                        (inst.reserved_tokens - seq.req.total_tokens() as f64).max(0.0);
+                    freed = true;
+                    let first = seq.first_token_at.unwrap();
+                    let ttft = first - seq.req.arrival;
+                    let tpot = if seq.req.output_tokens > 1 {
+                        (now - first) / (seq.req.output_tokens - 1) as f64
+                    } else {
+                        0.0
+                    };
+                    completions.push(Completion {
+                        id: seq.req.id,
+                        arrival: seq.req.arrival,
+                        input_tokens: seq.req.input_tokens,
+                        output_tokens: seq.req.output_tokens,
+                        ttft,
+                        tpot,
+                        finish: now,
+                    });
+                } else {
+                    still_active.push(seq);
+                }
+            }
+            inst.batch = still_active;
+        }
+
+        for c in &completions {
+            self.ttft_points.push((c.arrival, c.ttft));
+            let req = Request::new(c.id, c.arrival, c.input_tokens, c.output_tokens);
+            self.coordinator.observe_completion(self.now, &req);
+            self.metrics.record(*c);
+            self.clocks.remove(&c.id);
+        }
+
+        // Freed memory: retry backpressured prefilled requests.
+        if freed {
+            self.retry_awaiting_decode();
+        }
+        self.ensure_iterating(id);
+    }
+
+    // ---- control plane ----
+
+    fn control_tick(&mut self) {
+        let targets = self.coordinator.scale(self.now, &self.cluster);
+        self.apply_scaling(targets);
+        self.reoffer_pending();
+        self.retry_awaiting_decode();
+        self.cluster.sweep_drained(self.now);
+    }
+
+    fn apply_scaling(&mut self, t: ScaleTargets) {
+        let live = if self.coordinator.live_scaling() {
+            Some(0.2)
+        } else {
+            None
+        };
+        // Cluster-manager quota sharing: if the combined target exceeds the
+        // GPU cap, shrink both stages proportionally (keeping ≥1 each) so
+        // an aggressive prefill target cannot starve the decode fleet.
+        let t = {
+            let tp_p = self.cluster.config.prefill_engine.tp;
+            let tp_d = self.cluster.config.decode_engine.tp;
+            let conv_gpus: usize = self
+                .cluster
+                .instances
+                .values()
+                .filter(|i| i.role == Role::ConvertibleDecoder)
+                .map(|i| i.gpus())
+                .sum();
+            let budget = self.cluster.config.max_gpus.saturating_sub(conv_gpus);
+            let want = t.prefillers * tp_p + t.decoders * tp_d;
+            if want > budget && want > 0 {
+                let ratio = budget as f64 / want as f64;
+                ScaleTargets {
+                    prefillers: ((t.prefillers as f64 * ratio).floor() as usize).max(1),
+                    decoders: ((t.decoders as f64 * ratio).floor() as usize).max(1),
+                }
+            } else {
+                t
+            }
+        };
+        // Prefillers.
+        let cur_p = self.cluster.active_count(Role::Prefiller);
+        if t.prefillers > cur_p {
+            for _ in 0..(t.prefillers - cur_p) {
+                if let Some(id) = self.cluster.spawn(Role::Prefiller, self.now, live) {
+                    self.scale_ups += 1;
+                    let ready = self.cluster.get(id).unwrap().ready_at;
+                    self.events.push(ready, Event::InstanceReady { instance: id });
+                }
+            }
+        } else if t.prefillers < cur_p {
+            // Retire idle-most prefillers first.
+            let mut candidates: Vec<(usize, InstanceId)> = self
+                .cluster
+                .instances
+                .values()
+                .filter(|i| i.role == Role::Prefiller && i.life != LifeState::Draining)
+                .map(|i| (i.inflight_prefill_tokens(), i.id))
+                .collect();
+            candidates.sort();
+            for (_, id) in candidates.into_iter().take(cur_p - t.prefillers) {
+                self.cluster.retire(id, self.now);
+                self.scale_downs += 1;
+            }
+        }
+        // Regular decoders (convertibles never scale).
+        let cur_d = self.cluster.active_count(Role::Decoder);
+        if t.decoders > cur_d {
+            for _ in 0..(t.decoders - cur_d) {
+                if let Some(id) = self.cluster.spawn(Role::Decoder, self.now, live) {
+                    self.scale_ups += 1;
+                    let ready = self.cluster.get(id).unwrap().ready_at;
+                    self.events.push(ready, Event::InstanceReady { instance: id });
+                }
+            }
+        } else if t.decoders < cur_d {
+            let mut candidates: Vec<(usize, InstanceId)> = self
+                .cluster
+                .instances
+                .values()
+                .filter(|i| i.role == Role::Decoder && i.life != LifeState::Draining)
+                .map(|i| (i.decode_load(), i.id))
+                .collect();
+            candidates.sort();
+            for (_, id) in candidates.into_iter().take(cur_d - t.decoders) {
+                self.cluster.retire(id, self.now);
+                self.scale_downs += 1;
+            }
+        }
+    }
+
+    fn reoffer_pending(&mut self) {
+        let n = self.pending.len();
+        for _ in 0..n {
+            let Some(req) = self.pending.pop_front() else {
+                break;
+            };
+            match self.coordinator.route_prefill(self.now, &req, &self.cluster) {
+                Route::Prefiller(id) => {
+                    let job = PrefillJob {
+                        remaining: req.input_tokens,
+                        req,
+                        enqueued_at: self.now,
+                    };
+                    if let Some(inst) = self.cluster.get_mut(id) {
+                        inst.prefill_queue.push_back(job);
+                        self.maybe_start_prefill(id);
+                    } else {
+                        self.pending.push_back(job.req);
+                    }
+                }
+                Route::Convertible(id) => self.admit_convertible_prefill(id, req),
+                Route::Queue => self.pending.push_back(req),
+            }
+        }
+    }
+
+    fn retry_awaiting_decode(&mut self) {
+        let n = self.awaiting_decode.len();
+        for _ in 0..n {
+            let Some(req) = self.awaiting_decode.pop_front() else {
+                break;
+            };
+            self.try_send_to_decoder(req);
+        }
+    }
+
+    // ---- sampling ----
+
+    fn sample(&mut self) {
+        let t = self.now;
+        let running_p: Vec<&super::instance::Instance> =
+            self.cluster.running_of(Role::Prefiller).collect();
+        let busy = running_p
+            .iter()
+            .filter(|i| i.active_prefill.is_some())
+            .count();
+        let p_util = if running_p.is_empty() {
+            0.0
+        } else {
+            busy as f64 / running_p.len() as f64
+        };
+        let decoders: Vec<&super::instance::Instance> = self
+            .cluster
+            .running_of(Role::Decoder)
+            .chain(self.cluster.running_of(Role::ConvertibleDecoder))
+            .collect();
+        let mem = if decoders.is_empty() {
+            0.0
+        } else {
+            decoders.iter().map(|i| i.mem_utilization()).sum::<f64>() / decoders.len() as f64
+        };
+        let d_busy = if decoders.is_empty() {
+            0.0
+        } else {
+            decoders.iter().filter(|i| i.iterating).count() as f64 / decoders.len() as f64
+        };
+        let net_rate: f64 = self.transfers.values().map(|tr| tr.bytes_per_s).sum();
+        let net_util = (net_rate / self.cfg.link.eff_rdma_bytes()).min(1.0);
+
+        self.series.prefill_compute.push(t, p_util);
+        self.series.decode_memory.push(t, mem);
+        self.series.decode_compute.push(t, d_busy);
+        self.series.network.push(t, net_util);
+        let thr = self.tokens_since_sample / self.cfg.sample_interval_s;
+        self.tokens_since_sample = 0.0;
+        self.series.decode_throughput.push(t, thr);
+        self.series
+            .queue_len
+            .push(t, (self.pending.len() + self.awaiting_decode.len()) as f64);
+    }
+}
+
+/// Convenience wrapper: build and run a simulation.
+pub fn simulate<C: Coordinator>(
+    cfg: SimConfig,
+    cluster_cfg: ClusterConfig,
+    coordinator: &mut C,
+    trace: &Trace,
+) -> SimResult {
+    SimEngine::new(cfg, cluster_cfg, coordinator, trace).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::{catalog, EngineModel};
+    use crate::sim::policy::StaticCoordinator;
+    use crate::trace::step_trace;
+    use std::sync::Arc;
+
+    fn cluster_cfg(max_gpus: usize) -> ClusterConfig {
+        let engine = Arc::new(EngineModel::new(
+            catalog::model("llama-3.1-8b").unwrap(),
+            catalog::gpu("a100-40g").unwrap(),
+            1,
+        ));
+        ClusterConfig {
+            prefill_engine: engine.clone(),
+            decode_engine: engine,
+            startup_override_s: None,
+            max_gpus,
+            convertible_chunk_size: 512,
+            convertible_reserve_tokens: 8192.0,
+        }
+    }
+
+    #[test]
+    fn static_fleet_completes_all_requests() {
+        let trace = step_trace(4.0, 4.0, 0.0, 0.0, 20.0, 256, 64, 1);
+        let n = trace.requests.len();
+        assert!(n > 40);
+        let mut coord = StaticCoordinator::new(2, 2);
+        let cfg = SimConfig {
+            initial_prefillers: 2,
+            initial_decoders: 2,
+            ..Default::default()
+        };
+        let res = simulate(cfg, cluster_cfg(16), &mut coord, &trace);
+        assert_eq!(res.metrics.completions.len(), n, "all requests complete");
+        // Sanity: every completion has positive latency and finish >= arrival.
+        for c in &res.metrics.completions {
+            assert!(c.ttft > 0.0, "ttft {}", c.ttft);
+            assert!(c.finish >= c.arrival);
+            assert!(c.tpot >= 0.0);
+        }
+    }
+
+    #[test]
+    fn adequately_provisioned_meets_slos() {
+        let trace = step_trace(2.0, 2.0, 0.0, 0.0, 20.0, 256, 64, 2);
+        let mut coord = StaticCoordinator::new(2, 3);
+        let cfg = SimConfig {
+            initial_prefillers: 2,
+            initial_decoders: 3,
+            ..Default::default()
+        };
+        let slo = cfg.slo;
+        let res = simulate(cfg, cluster_cfg(16), &mut coord, &trace);
+        let report = res.metrics.report(&slo, 0.0);
+        assert!(
+            report.overall_attainment > 0.9,
+            "attainment {} ttft_p99 {} tpot_p99 {}",
+            report.overall_attainment,
+            report.ttft.p99,
+            report.tpot.p99
+        );
+    }
+
+    #[test]
+    fn underprovisioned_violates_ttft() {
+        // 1 prefiller, heavy prompt load: queueing must blow TTFT.
+        let trace = step_trace(12.0, 12.0, 0.0, 0.0, 15.0, 4096, 16, 3);
+        let mut coord = StaticCoordinator::new(1, 2);
+        let cfg = SimConfig {
+            initial_prefillers: 1,
+            initial_decoders: 2,
+            ..Default::default()
+        };
+        let slo = cfg.slo;
+        let res = simulate(cfg, cluster_cfg(16), &mut coord, &trace);
+        let report = res.metrics.report(&slo, 0.0);
+        assert!(
+            report.ttft_attainment < 0.7,
+            "expected TTFT violations, got {}",
+            report.ttft_attainment
+        );
+    }
+
+    #[test]
+    fn gpu_cost_accounts_fleet() {
+        let trace = step_trace(2.0, 2.0, 0.0, 0.0, 10.0, 128, 16, 4);
+        let mut coord = StaticCoordinator::new(1, 1);
+        let cfg = SimConfig {
+            initial_prefillers: 1,
+            initial_decoders: 1,
+            ..Default::default()
+        };
+        let res = simulate(cfg, cluster_cfg(4), &mut coord, &trace);
+        // 2 GPUs for >= 10 s of trace time.
+        assert!(res.metrics.gpu_seconds >= 2.0 * 10.0 * 0.99);
+        let report = res.metrics.report(&SloPolicy::default(), 0.0);
+        assert!((report.avg_gpus - 2.0).abs() < 0.4, "avg {}", report.avg_gpus);
+    }
+
+    #[test]
+    fn memory_reservation_never_exceeds_capacity() {
+        let trace = step_trace(8.0, 8.0, 0.0, 0.0, 20.0, 2048, 512, 5);
+        let mut coord = StaticCoordinator::new(2, 1);
+        let cfg = SimConfig {
+            initial_prefillers: 2,
+            initial_decoders: 1,
+            ..Default::default()
+        };
+        let res = simulate(cfg, cluster_cfg(8), &mut coord, &trace);
+        // The run completes (backpressure may delay but not deadlock).
+        assert!(res.metrics.completions.len() > trace.requests.len() / 2);
+    }
+
+    #[test]
+    fn convertible_decoder_serves_prefill_locally() {
+        // Route everything through a convertible decoder by having no
+        // regular prefillers at all.
+        struct ConvertibleOnly;
+        impl Coordinator for ConvertibleOnly {
+            fn name(&self) -> &str {
+                "convertible-only"
+            }
+            fn observe_arrival(&mut self, _: f64, _: &Request) {}
+            fn route_prefill(&mut self, _: f64, _: &Request, cluster: &Cluster) -> Route {
+                cluster
+                    .running_of(Role::ConvertibleDecoder)
+                    .next()
+                    .map(|i| Route::Convertible(i.id))
+                    .unwrap_or(Route::Queue)
+            }
+            fn route_decode(&mut self, _: f64, _: &Request, _: &Cluster) -> Option<InstanceId> {
+                None
+            }
+            fn scale(&mut self, _: f64, _: &Cluster) -> ScaleTargets {
+                ScaleTargets {
+                    prefillers: 0,
+                    decoders: 0,
+                }
+            }
+            fn predict_bucket(&mut self, _: &Request) -> usize {
+                0
+            }
+        }
+        let trace = step_trace(2.0, 2.0, 0.0, 0.0, 10.0, 512, 32, 6);
+        let mut coord = ConvertibleOnly;
+        let cfg = SimConfig {
+            initial_prefillers: 0,
+            initial_decoders: 0,
+            initial_convertibles: 1,
+            ..Default::default()
+        };
+        let res = simulate(cfg, cluster_cfg(4), &mut coord, &trace);
+        assert_eq!(res.metrics.completions.len(), trace.requests.len());
+        for c in &res.metrics.completions {
+            assert!(c.ttft > 0.0 && c.ttft.is_finite());
+        }
+    }
+
+    #[test]
+    fn scaling_up_spawns_and_respects_startup() {
+        struct GrowAt { t: f64 }
+        impl Coordinator for GrowAt {
+            fn name(&self) -> &str {
+                "grow"
+            }
+            fn observe_arrival(&mut self, _: f64, _: &Request) {}
+            fn route_prefill(&mut self, _: f64, _: &Request, cluster: &Cluster) -> Route {
+                cluster
+                    .running_of(Role::Prefiller)
+                    .min_by_key(|i| i.inflight_prefill_tokens())
+                    .map(|i| Route::Prefiller(i.id))
+                    .unwrap_or(Route::Queue)
+            }
+            fn route_decode(&mut self, _: f64, req: &Request, cluster: &Cluster) -> Option<InstanceId> {
+                cluster
+                    .running_of(Role::Decoder)
+                    .filter(|i| i.can_admit(req.total_tokens()))
+                    .min_by_key(|i| i.decode_load())
+                    .map(|i| i.id)
+            }
+            fn scale(&mut self, now: f64, _: &Cluster) -> ScaleTargets {
+                ScaleTargets {
+                    prefillers: if now >= self.t { 3 } else { 1 },
+                    decoders: 1,
+                }
+            }
+            fn predict_bucket(&mut self, _: &Request) -> usize {
+                0
+            }
+        }
+        let trace = step_trace(2.0, 2.0, 0.0, 0.0, 30.0, 256, 32, 7);
+        let mut coord = GrowAt { t: 5.0 };
+        let cfg = SimConfig {
+            initial_prefillers: 1,
+            initial_decoders: 1,
+            ..Default::default()
+        };
+        let res = simulate(cfg, cluster_cfg(8), &mut coord, &trace);
+        assert!(res.scale_ups >= 2, "scale_ups {}", res.scale_ups);
+        // Prefiller count should reach 3 only after startup latency (>= 3 s).
+        let p_at_6 = res.prefiller_series.value_at(6.0).unwrap_or(1.0);
+        assert!(p_at_6 >= 3.0, "count series should register spawned {p_at_6}");
+        assert_eq!(res.metrics.completions.len(), trace.requests.len());
+    }
+
+    #[test]
+    fn series_are_sampled() {
+        let trace = step_trace(4.0, 4.0, 0.0, 0.0, 10.0, 512, 64, 8);
+        let mut coord = StaticCoordinator::new(1, 1);
+        let cfg = SimConfig {
+            initial_prefillers: 1,
+            initial_decoders: 1,
+            ..Default::default()
+        };
+        let res = simulate(cfg, cluster_cfg(4), &mut coord, &trace);
+        assert!(res.series.decode_memory.len() > 20);
+        assert!(res.series.decode_throughput.points.iter().any(|(_, v)| *v > 0.0));
+        assert!(res.series.prefill_compute.points.iter().any(|(_, v)| *v > 0.0));
+    }
+}

@@ -1,0 +1,132 @@
+//! Discrete-event machinery: event kinds and the time-ordered event heap.
+
+use crate::workload::RequestId;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Instance identifier within a simulation.
+pub type InstanceId = u32;
+
+/// Everything that can happen in the simulated cluster.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// A request arrives at the gateway (index into the trace).
+    Arrival(usize),
+    /// Periodic control-plane tick: autoscaling + queue re-evaluation.
+    ControlTick,
+    /// A prefiller finished the prefill of `req`.
+    PrefillDone {
+        instance: InstanceId,
+        req: RequestId,
+    },
+    /// KVC transfer of `req` into decoder `instance` completed.
+    TransferDone {
+        instance: InstanceId,
+        req: RequestId,
+    },
+    /// A decoder engine iteration completed.
+    DecodeIterDone { instance: InstanceId, epoch: u64 },
+    /// A newly provisioned instance finished starting up.
+    InstanceReady { instance: InstanceId },
+    /// Metrics sampling tick (time-series capture).
+    SampleTick,
+}
+
+/// Heap entry ordered by (time, seq) so simultaneous events pop FIFO.
+#[derive(Clone, Debug)]
+struct Scheduled {
+    time: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Earliest-first event queue with deterministic FIFO tie-breaking.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: f64, event: Event) {
+        debug_assert!(time.is_finite(), "non-finite event time");
+        self.heap.push(Scheduled {
+            time,
+            seq: self.seq,
+            event,
+        });
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        self.heap.pop().map(|s| (s.time, s.event))
+    }
+
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|s| s.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, Event::ControlTick);
+        q.push(1.0, Event::Arrival(0));
+        q.push(2.0, Event::SampleTick);
+        assert_eq!(q.pop().unwrap().0, 1.0);
+        assert_eq!(q.pop().unwrap().0, 2.0);
+        assert_eq!(q.pop().unwrap().0, 3.0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_are_fifo() {
+        let mut q = EventQueue::new();
+        q.push(1.0, Event::Arrival(1));
+        q.push(1.0, Event::Arrival(2));
+        q.push(1.0, Event::Arrival(3));
+        let order: Vec<Event> = (0..3).map(|_| q.pop().unwrap().1).collect();
+        assert_eq!(
+            order,
+            vec![Event::Arrival(1), Event::Arrival(2), Event::Arrival(3)]
+        );
+    }
+}

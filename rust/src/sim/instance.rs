@@ -1,0 +1,301 @@
+//! Simulated prefiller and decoder instances: lifecycle, queues,
+//! continuous batching and (for Convertible Decoders) restricted chunked
+//! prefill state.
+
+use super::event::InstanceId;
+use crate::perfmodel::EngineModel;
+use crate::workload::{Request, RequestId};
+use std::collections::VecDeque;
+
+/// Instance lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LifeState {
+    /// Provisioned, loading weights/runtime; ready at the stored time.
+    Starting,
+    /// Serving.
+    Running,
+    /// No longer admitting work; removed once drained.
+    Draining,
+}
+
+/// Role of an instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Prefiller,
+    Decoder,
+    /// Decoder that the router may also hand prefill work (§III-D).
+    ConvertibleDecoder,
+}
+
+/// A sequence actively decoding (or waiting to join the next iteration).
+#[derive(Clone, Debug)]
+pub struct ActiveSeq {
+    pub req: Request,
+    /// Output tokens generated so far.
+    pub generated: usize,
+    /// Context length currently held in KV cache (input + generated).
+    pub ctx: usize,
+    /// Time the first output token was produced (TTFT measurement).
+    pub first_token_at: Option<f64>,
+    /// Predicted output bucket index (for per-type load balancing).
+    pub predicted_bucket: usize,
+}
+
+/// A prefill job executing or queued on a prefiller / convertible decoder.
+#[derive(Clone, Debug)]
+pub struct PrefillJob {
+    pub req: Request,
+    /// Prompt tokens still to process (chunked prefill decrements this).
+    pub remaining: usize,
+    /// Arrival at this instance's queue.
+    pub enqueued_at: f64,
+}
+
+/// One simulated engine instance.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub id: InstanceId,
+    pub role: Role,
+    pub life: LifeState,
+    /// Time the instance becomes Running (while Starting).
+    pub ready_at: f64,
+    /// Time the instance was provisioned (cost accounting starts here).
+    pub spawned_at: f64,
+    /// Engine performance model (shared across instances of a deployment).
+    pub engine: std::sync::Arc<EngineModel>,
+
+    // ---- prefill side (prefillers + convertible decoders) ----
+    pub prefill_queue: VecDeque<PrefillJob>,
+    /// Currently executing prefill job (prefillers run one at a time;
+    /// convertible decoders chunk it through decode iterations).
+    pub active_prefill: Option<PrefillJob>,
+    /// When the running prefill completes (prefillers only).
+    pub prefill_done_at: f64,
+
+    // ---- decode side (decoders + convertible decoders) ----
+    /// Sequences in the continuous batch.
+    pub batch: Vec<ActiveSeq>,
+    /// Sequences admitted but joining at the next iteration boundary.
+    pub joining: Vec<ActiveSeq>,
+    /// KV tokens reserved by admitted sequences (full final footprint).
+    pub reserved_tokens: f64,
+    /// Monotone iteration epoch; stale DecodeIterDone events are ignored.
+    pub iter_epoch: u64,
+    /// Whether an iteration is currently in flight.
+    pub iterating: bool,
+    /// Restricted chunked-prefill budget (tokens/iteration) for
+    /// convertible decoders; decode-only instances keep 0.
+    pub chunk_size: usize,
+    /// KV tokens reserved for burst prefill work (Eq. 6), convertibles only.
+    pub convertible_reserve_tokens: f64,
+}
+
+impl Instance {
+    pub fn new(
+        id: InstanceId,
+        role: Role,
+        engine: std::sync::Arc<EngineModel>,
+        now: f64,
+        startup: f64,
+    ) -> Instance {
+        Instance {
+            id,
+            role,
+            life: if startup <= 0.0 {
+                LifeState::Running
+            } else {
+                LifeState::Starting
+            },
+            ready_at: now + startup,
+            spawned_at: now,
+            engine,
+            prefill_queue: VecDeque::new(),
+            active_prefill: None,
+            prefill_done_at: f64::INFINITY,
+            batch: Vec::new(),
+            joining: Vec::new(),
+            reserved_tokens: 0.0,
+            iter_epoch: 0,
+            iterating: false,
+            chunk_size: 0,
+            convertible_reserve_tokens: 0.0,
+        }
+    }
+
+    pub fn gpus(&self) -> usize {
+        self.engine.tp
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.life == LifeState::Running
+    }
+
+    /// Prompt tokens waiting or executing on this instance (the in-flight
+    /// token count Alg. 1's waiting-time estimate divides by velocity).
+    pub fn inflight_prefill_tokens(&self) -> usize {
+        self.prefill_queue.iter().map(|j| j.remaining).sum::<usize>()
+            + self.active_prefill.as_ref().map_or(0, |j| j.remaining)
+    }
+
+    /// KV tokens currently materialized in the batch.
+    pub fn used_tokens(&self) -> f64 {
+        self.batch.iter().map(|s| s.ctx as f64).sum::<f64>()
+            + self.joining.iter().map(|s| s.ctx as f64).sum::<f64>()
+    }
+
+    /// Memory utilization as reserved fraction of KV capacity.
+    pub fn mem_utilization(&self) -> f64 {
+        let cap = self.engine.kv_capacity_tokens();
+        if cap <= 0.0 {
+            return 1.0;
+        }
+        (self.reserved_tokens / cap).min(1.0)
+    }
+
+    /// KV capacity available for new decode admissions (tokens). For
+    /// convertible decoders, the Eq. 6 prefill reserve is carved out.
+    pub fn admission_capacity(&self) -> f64 {
+        let cap = self.engine.kv_capacity_tokens() - self.convertible_reserve_tokens;
+        (cap - self.reserved_tokens).max(0.0)
+    }
+
+    /// Can this instance admit a decode sequence that will eventually hold
+    /// `total_tokens` of KV?
+    pub fn can_admit(&self, total_tokens: usize) -> bool {
+        self.is_running() && self.admission_capacity() >= total_tokens as f64
+    }
+
+    /// Admit a sequence into the next iteration (reserves full footprint).
+    pub fn admit(&mut self, seq: ActiveSeq) {
+        debug_assert!(self.role != Role::Prefiller);
+        self.reserved_tokens += seq.req.total_tokens() as f64;
+        self.joining.push(seq);
+    }
+
+    /// Number of in-flight decode requests of a predicted bucket (for the
+    /// per-type least-loaded decode LB).
+    pub fn inflight_of_bucket(&self, bucket: usize) -> usize {
+        self.batch
+            .iter()
+            .chain(self.joining.iter())
+            .filter(|s| s.predicted_bucket == bucket)
+            .count()
+    }
+
+    pub fn decode_load(&self) -> usize {
+        self.batch.len() + self.joining.len()
+    }
+
+    /// Whether the instance has fully drained (safe to remove).
+    pub fn drained(&self) -> bool {
+        self.batch.is_empty()
+            && self.joining.is_empty()
+            && self.active_prefill.is_none()
+            && self.prefill_queue.is_empty()
+    }
+}
+
+/// Record of a completed (or in-progress) request's journey, kept by the
+/// engine loop for TTFT/TPOT bookkeeping.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestClock {
+    pub id: RequestId,
+    pub arrival: f64,
+    pub prefill_started: Option<f64>,
+    pub prefill_done: Option<f64>,
+    pub first_token: Option<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::{catalog, EngineModel};
+    use std::sync::Arc;
+
+    fn engine() -> Arc<EngineModel> {
+        Arc::new(EngineModel::new(
+            catalog::model("llama-3.1-8b").unwrap(),
+            catalog::gpu("a100-40g").unwrap(),
+            1,
+        ))
+    }
+
+    fn seq(id: u64, input: usize, output: usize) -> ActiveSeq {
+        ActiveSeq {
+            req: Request::new(id, 0.0, input, output),
+            generated: 0,
+            ctx: input,
+            first_token_at: None,
+            predicted_bucket: 0,
+        }
+    }
+
+    #[test]
+    fn starting_instance_not_running() {
+        let i = Instance::new(1, Role::Decoder, engine(), 0.0, 5.0);
+        assert_eq!(i.life, LifeState::Starting);
+        assert!(!i.is_running());
+        assert_eq!(i.ready_at, 5.0);
+        let j = Instance::new(2, Role::Decoder, engine(), 0.0, 0.0);
+        assert!(j.is_running());
+    }
+
+    #[test]
+    fn admission_respects_capacity() {
+        let mut i = Instance::new(1, Role::Decoder, engine(), 0.0, 0.0);
+        let cap = i.engine.kv_capacity_tokens();
+        assert!(i.can_admit(1000));
+        i.admit(seq(1, 500, 500));
+        assert_eq!(i.reserved_tokens, 1000.0);
+        assert!(!i.can_admit(cap as usize)); // capacity reduced
+    }
+
+    #[test]
+    fn convertible_reserve_shrinks_admission() {
+        let mut a = Instance::new(1, Role::ConvertibleDecoder, engine(), 0.0, 0.0);
+        let base = a.admission_capacity();
+        a.convertible_reserve_tokens = 10_000.0;
+        assert!((base - a.admission_capacity() - 10_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn inflight_prefill_counts_queue_and_active() {
+        let mut i = Instance::new(1, Role::Prefiller, engine(), 0.0, 0.0);
+        i.prefill_queue.push_back(PrefillJob {
+            req: Request::new(1, 0.0, 700, 10),
+            remaining: 700,
+            enqueued_at: 0.0,
+        });
+        i.active_prefill = Some(PrefillJob {
+            req: Request::new(2, 0.0, 300, 10),
+            remaining: 300,
+            enqueued_at: 0.0,
+        });
+        assert_eq!(i.inflight_prefill_tokens(), 1000);
+    }
+
+    #[test]
+    fn bucket_inflight_counting() {
+        let mut i = Instance::new(1, Role::Decoder, engine(), 0.0, 0.0);
+        let mut s1 = seq(1, 10, 10);
+        s1.predicted_bucket = 3;
+        let mut s2 = seq(2, 10, 10);
+        s2.predicted_bucket = 3;
+        let mut s3 = seq(3, 10, 10);
+        s3.predicted_bucket = 5;
+        i.admit(s1);
+        i.batch.push(s2);
+        i.admit(s3);
+        assert_eq!(i.inflight_of_bucket(3), 2);
+        assert_eq!(i.inflight_of_bucket(5), 1);
+        assert_eq!(i.decode_load(), 3);
+    }
+
+    #[test]
+    fn drained_logic() {
+        let mut i = Instance::new(1, Role::Decoder, engine(), 0.0, 0.0);
+        assert!(i.drained());
+        i.admit(seq(1, 10, 10));
+        assert!(!i.drained());
+    }
+}

@@ -1,0 +1,18 @@
+//! Discrete-event simulator of a PD-disaggregated LLM serving cluster.
+//!
+//! Substitute for the paper's physical GPU testbed (see DESIGN.md): the
+//! same control planes (TokenScale + baselines) are driven over simulated
+//! prefillers, decoders, KVC transfers and instance lifecycles whose
+//! timings come from `perfmodel`.
+
+pub mod cluster;
+pub mod engine;
+pub mod event;
+pub mod instance;
+pub mod policy;
+
+pub use cluster::{Cluster, ClusterConfig};
+pub use engine::{simulate, SimConfig, SimEngine, SimResult, SimSeries};
+pub use event::{Event, EventQueue, InstanceId};
+pub use instance::{ActiveSeq, Instance, LifeState, PrefillJob, Role};
+pub use policy::{Coordinator, Route, ScaleTargets, StaticCoordinator};

@@ -1,0 +1,124 @@
+//! The control-plane interface the simulator drives.
+//!
+//! The simulator owns the *mechanics* (queues, batches, transfers, memory,
+//! clocks); a [`Coordinator`] owns the *decisions* (routing, load
+//! balancing, autoscaling). TokenScale and every baseline implement this
+//! trait, so all systems are compared on identical mechanics — mirroring
+//! how the paper deploys different control planes over the same vLLM
+//! cluster.
+
+use super::cluster::Cluster;
+use super::event::InstanceId;
+use crate::workload::Request;
+
+/// Where a request's prefill should execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// A regular prefiller instance.
+    Prefiller(InstanceId),
+    /// A Convertible Decoder running restricted chunked prefill (§III-D).
+    Convertible(InstanceId),
+    /// No feasible instance: wait in the gateway queue (Alg. 1 line 15).
+    Queue,
+}
+
+/// Desired instance counts from an autoscaler evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScaleTargets {
+    pub prefillers: usize,
+    /// Regular decoders (convertible decoders are statically provisioned
+    /// and never scaled, per §IV-C2).
+    pub decoders: usize,
+}
+
+/// A serving control plane: gateway statistics, router, load balancer and
+/// autoscaler, driven by the simulator's event loop.
+pub trait Coordinator {
+    fn name(&self) -> &str;
+
+    /// Gateway ingest notification: called once per request on arrival,
+    /// before routing. Policies maintain their traffic windows here.
+    fn observe_arrival(&mut self, now: f64, req: &Request);
+
+    /// Route a prefill task (fresh arrival or queued retry).
+    fn route_prefill(&mut self, now: f64, req: &Request, cluster: &Cluster) -> Route;
+
+    /// Pick a decoder to receive the KVC of a prefilled request.
+    /// `None` = all decoders saturated (backpressure; the engine retries).
+    fn route_decode(&mut self, now: f64, req: &Request, cluster: &Cluster) -> Option<InstanceId>;
+
+    /// Autoscaler evaluation at a control tick.
+    fn scale(&mut self, now: f64, cluster: &Cluster) -> ScaleTargets;
+
+    /// Predicted request-type bucket index (0..9) used for per-type load
+    /// balancing and the decoder autoscaler.
+    fn predict_bucket(&mut self, req: &Request) -> usize;
+
+    /// Whether scale-ups use live autoscaling (BlitzScale §V: scale-up
+    /// executed proactively, removing model-load latency).
+    fn live_scaling(&self) -> bool {
+        false
+    }
+
+    /// Notification that a completion happened (memory freed) — lets
+    /// policies track decode velocity online.
+    fn observe_completion(&mut self, _now: f64, _req: &Request) {}
+}
+
+/// A fixed-fleet coordinator used for tests, profiling sweeps and the
+/// "required vs provisioned" ground-truth runs: never scales, routes
+/// prefill to the least-loaded prefiller and decode to the least-loaded
+/// decoder with capacity.
+pub struct StaticCoordinator {
+    pub prefillers: usize,
+    pub decoders: usize,
+}
+
+impl StaticCoordinator {
+    pub fn new(prefillers: usize, decoders: usize) -> Self {
+        StaticCoordinator {
+            prefillers,
+            decoders,
+        }
+    }
+}
+
+impl Coordinator for StaticCoordinator {
+    fn name(&self) -> &str {
+        "static"
+    }
+
+    fn observe_arrival(&mut self, _now: f64, _req: &Request) {}
+
+    fn route_prefill(&mut self, _now: f64, _req: &Request, cluster: &Cluster) -> Route {
+        use super::instance::Role;
+        cluster
+            .running_of(Role::Prefiller)
+            .min_by_key(|i| i.inflight_prefill_tokens())
+            .map(|i| Route::Prefiller(i.id))
+            .unwrap_or(Route::Queue)
+    }
+
+    fn route_decode(&mut self, _now: f64, req: &Request, cluster: &Cluster) -> Option<InstanceId> {
+        use super::instance::Role;
+        cluster
+            .running_of(Role::Decoder)
+            .chain(cluster.running_of(Role::ConvertibleDecoder))
+            .filter(|i| i.can_admit(req.total_tokens()))
+            .min_by_key(|i| i.decode_load())
+            .map(|i| i.id)
+    }
+
+    fn scale(&mut self, _now: f64, _cluster: &Cluster) -> ScaleTargets {
+        ScaleTargets {
+            prefillers: self.prefillers,
+            decoders: self.decoders,
+        }
+    }
+
+    fn predict_bucket(&mut self, req: &Request) -> usize {
+        crate::workload::BucketScheme::default()
+            .classify(req.input_tokens, req.output_tokens)
+            .index()
+    }
+}

@@ -1,0 +1,186 @@
+//! Burst analytics over traces: the running-average method of the paper's
+//! §II-C1, powering Fig. 2 (traffic vs trendline) and Fig. 3
+//! (burst fraction vs overprovisioning ratio).
+
+use super::gen::Trace;
+
+/// Per-second binned traffic series for a trace.
+#[derive(Clone, Debug)]
+pub struct TrafficSeries {
+    /// Bin width, seconds.
+    pub bin_s: f64,
+    /// Requests per bin.
+    pub requests: Vec<f64>,
+    /// Input tokens per bin.
+    pub tokens: Vec<f64>,
+}
+
+/// Bin a trace's arrivals into fixed-width bins.
+pub fn bin_traffic(trace: &Trace, bin_s: f64) -> TrafficSeries {
+    assert!(bin_s > 0.0);
+    let n = (trace.duration_s / bin_s).ceil() as usize;
+    let mut requests = vec![0.0; n];
+    let mut tokens = vec![0.0; n];
+    for r in &trace.requests {
+        let idx = ((r.arrival / bin_s) as usize).min(n.saturating_sub(1));
+        requests[idx] += 1.0;
+        tokens[idx] += r.input_tokens as f64;
+    }
+    TrafficSeries {
+        bin_s,
+        requests,
+        tokens,
+    }
+}
+
+/// Running average over a sliding window of `window_s` seconds, evaluated
+/// at every bin (the paper's 1-minute sliding window).
+pub fn running_average(series: &[f64], bin_s: f64, window_s: f64) -> Vec<f64> {
+    let w = (window_s / bin_s).round().max(1.0) as usize;
+    let mut out = Vec::with_capacity(series.len());
+    let mut sum = 0.0;
+    for (i, x) in series.iter().enumerate() {
+        sum += x;
+        if i >= w {
+            sum -= series[i - w];
+        }
+        let denom = (i + 1).min(w) as f64;
+        out.push(sum / denom);
+    }
+    out
+}
+
+/// Fraction of traffic (by volume) exceeding `ratio ×` the running average —
+/// i.e. the share a system provisioned at `ratio ×` the trend would fail to
+/// absorb instantaneously. This is the paper's Fig. 3 metric.
+pub fn burst_fraction(series: &[f64], bin_s: f64, window_s: f64, ratio: f64) -> f64 {
+    let trend = running_average(series, bin_s, window_s);
+    let mut excess = 0.0;
+    let mut total = 0.0;
+    for (x, t) in series.iter().zip(&trend) {
+        total += x;
+        let cap = ratio * t;
+        if *x > cap {
+            excess += x - cap;
+        }
+    }
+    if total <= 0.0 {
+        0.0
+    } else {
+        excess / total
+    }
+}
+
+/// Fraction of wall-clock bins that are inside a burst (bin value above the
+/// running average) — the paper's "47 % of operational time" statistic.
+pub fn burst_time_fraction(series: &[f64], bin_s: f64, window_s: f64) -> f64 {
+    let trend = running_average(series, bin_s, window_s);
+    if series.is_empty() {
+        return 0.0;
+    }
+    let above = series
+        .iter()
+        .zip(&trend)
+        .filter(|(x, t)| **x > **t * 1.0001 && **x > 0.0)
+        .count();
+    above as f64 / series.len() as f64
+}
+
+/// Mean length (seconds) of maximal runs of consecutive above-trend bins —
+/// the paper's "each burst lasting 2.3 s on average".
+pub fn mean_burst_len_s(series: &[f64], bin_s: f64, window_s: f64) -> f64 {
+    let trend = running_average(series, bin_s, window_s);
+    let mut lens = Vec::new();
+    let mut run = 0usize;
+    for (x, t) in series.iter().zip(&trend) {
+        if *x > *t * 1.0001 && *x > 0.0 {
+            run += 1;
+        } else if run > 0 {
+            lens.push(run as f64 * bin_s);
+            run = 0;
+        }
+    }
+    if run > 0 {
+        lens.push(run as f64 * bin_s);
+    }
+    if lens.is_empty() {
+        0.0
+    } else {
+        lens.iter().sum::<f64>() / lens.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::gen::generate;
+    use crate::trace::spec::TraceFamily;
+    use crate::workload::Request;
+
+    fn flat_trace(rps: usize, duration: usize) -> Trace {
+        let mut requests = Vec::new();
+        let mut id = 0;
+        for s in 0..duration {
+            for k in 0..rps {
+                requests.push(Request::new(id, s as f64 + k as f64 / rps as f64, 100, 50));
+                id += 1;
+            }
+        }
+        Trace {
+            name: "flat".into(),
+            duration_s: duration as f64,
+            requests,
+        }
+    }
+
+    #[test]
+    fn bin_conserves_counts() {
+        let t = flat_trace(5, 30);
+        let s = bin_traffic(&t, 1.0);
+        assert_eq!(s.requests.iter().sum::<f64>() as usize, t.requests.len());
+        assert_eq!(
+            s.tokens.iter().sum::<f64>() as usize,
+            t.requests.iter().map(|r| r.input_tokens).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn flat_traffic_has_no_bursts() {
+        let t = flat_trace(5, 120);
+        let s = bin_traffic(&t, 1.0);
+        assert!(burst_fraction(&s.requests, 1.0, 60.0, 1.5) < 1e-9);
+        assert!(burst_time_fraction(&s.requests, 1.0, 60.0) < 0.05);
+    }
+
+    #[test]
+    fn running_average_smooths() {
+        let xs = vec![0.0, 0.0, 10.0, 0.0, 0.0, 0.0];
+        let avg = running_average(&xs, 1.0, 3.0);
+        assert!(avg[2] < 10.0);
+        assert!(avg[2] > 0.0);
+    }
+
+    #[test]
+    fn burst_fraction_decreases_with_ratio() {
+        let spec = TraceFamily::BurstGpt2.spec(20.0, 600.0);
+        let t = generate(&spec, 3);
+        let s = bin_traffic(&t, 1.0);
+        let f1 = burst_fraction(&s.requests, 1.0, 60.0, 1.0);
+        let f2 = burst_fraction(&s.requests, 1.0, 60.0, 2.0);
+        let f4 = burst_fraction(&s.requests, 1.0, 60.0, 4.0);
+        assert!(f1 > f2 && f2 > f4, "f1={f1} f2={f2} f4={f4}");
+        assert!(f1 > 0.05, "bursty trace should have bursts, f1={f1}");
+    }
+
+    #[test]
+    fn azure_conv_burst_time_near_half() {
+        // The paper: bursts during ~47 % of time, ~2.3 s average length.
+        let spec = TraceFamily::AzureConv.spec(22.0, 900.0);
+        let t = generate(&spec, 11);
+        let s = bin_traffic(&t, 1.0);
+        let frac = burst_time_fraction(&s.requests, 1.0, 60.0);
+        assert!((0.30..0.60).contains(&frac), "burst time fraction={frac}");
+        let len = mean_burst_len_s(&s.requests, 1.0, 60.0);
+        assert!((1.0..5.0).contains(&len), "mean burst len={len}");
+    }
+}

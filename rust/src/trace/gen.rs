@@ -1,0 +1,335 @@
+//! Trace generation: turn a [`TraceSpec`] into a concrete, time-ordered
+//! request sequence, plus the synthetic step/burst traces used by the
+//! paper's microbenchmarks (Figs. 4, 6, 10).
+
+use super::spec::{base_families, TraceFamily, TraceSpec};
+use crate::util::rng::Pcg64;
+use crate::workload::Request;
+
+/// A generated trace: time-sorted requests plus its spec for reporting.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub name: String,
+    pub duration_s: f64,
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn avg_rps(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.requests.len() as f64 / self.duration_s
+    }
+
+    pub fn avg_input_tokens(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests.iter().map(|r| r.input_tokens as f64).sum::<f64>()
+            / self.requests.len() as f64
+    }
+
+    pub fn avg_output_tokens(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests.iter().map(|r| r.output_tokens as f64).sum::<f64>()
+            / self.requests.len() as f64
+    }
+
+    /// Input-token arrival rate averaged over the whole trace (tok/s).
+    pub fn avg_input_tps(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.requests.iter().map(|r| r.input_tokens as f64).sum::<f64>() / self.duration_s
+    }
+
+    /// Resample to a target average RPS by uniform thinning (the paper's
+    /// §V sampling to 22 RPS) or by duplication with jitter when the target
+    /// exceeds the source rate.
+    pub fn resample_to_rps(&self, target_rps: f64, rng: &mut Pcg64) -> Trace {
+        let cur = self.avg_rps();
+        if cur <= 0.0 {
+            return self.clone();
+        }
+        let keep = target_rps / cur;
+        let mut requests = Vec::new();
+        let mut id = 0u64;
+        for r in &self.requests {
+            let mut copies = keep.floor() as usize;
+            if rng.f64() < keep - keep.floor() {
+                copies += 1;
+            }
+            for c in 0..copies {
+                let jitter = if c == 0 { 0.0 } else { rng.range_f64(0.0, 0.050) };
+                let mut nr = r.clone();
+                nr.id = id;
+                nr.arrival = (r.arrival + jitter).min(self.duration_s);
+                id += 1;
+                requests.push(nr);
+            }
+        }
+        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        Trace {
+            name: self.name.clone(),
+            duration_s: self.duration_s,
+            requests,
+        }
+    }
+}
+
+fn sample_len(rng: &mut Pcg64, d: &super::spec::LenDist) -> usize {
+    (rng.lognormal(d.mu, d.sigma).round() as usize).clamp(d.min, d.max)
+}
+
+/// Generate a trace from a spec. Deterministic for a given seed.
+///
+/// The arrival process is a two-state Markov-modulated Gamma renewal
+/// process: stable ↔ burst episodes (Exp-distributed lengths), with the
+/// stable/burst rates solved so that the long-run average hits `spec.rps`
+/// and the burst occupancy matches `spec.burst.time_fraction`. A slow
+/// sinusoid modulates both, giving the trend the paper's running-average
+/// plots show.
+pub fn generate(spec: &TraceSpec, seed: u64) -> Trace {
+    let mut rng = Pcg64::new(seed);
+    let mut arrivals_rng = rng.fork();
+    let mut len_rng = rng.fork();
+    let mut episode_rng = rng.fork();
+
+    let bf = &spec.burst;
+    // Solve stable rate r_s from: f*k*r_s + (1-f)*r_s = rps
+    let r_stable = spec.rps / (bf.time_fraction * bf.rate_factor + (1.0 - bf.time_fraction));
+    let r_burst = r_stable * bf.rate_factor;
+    // Episode dynamics: mean burst length given; mean stable gap from
+    // occupancy: f = mean_burst / (mean_burst + mean_stable).
+    let mean_stable_gap = if bf.time_fraction > 0.0 {
+        bf.mean_len_s * (1.0 - bf.time_fraction) / bf.time_fraction
+    } else {
+        f64::INFINITY
+    };
+
+    let mut requests = Vec::with_capacity((spec.rps * spec.duration_s) as usize + 16);
+    let mut t = 0.0f64;
+    let mut in_burst = false;
+    let mut phase_end = if mean_stable_gap.is_finite() {
+        episode_rng.exponential(1.0 / mean_stable_gap)
+    } else {
+        f64::INFINITY
+    };
+    let mut id = 0u64;
+
+    while t < spec.duration_s {
+        // Advance episode state machine past `t`.
+        while t >= phase_end {
+            in_burst = !in_burst;
+            let mean = if in_burst { bf.mean_len_s } else { mean_stable_gap };
+            phase_end += episode_rng.exponential(1.0 / mean);
+        }
+        let diurnal =
+            1.0 + spec.diurnal_amplitude * (2.0 * std::f64::consts::PI * t / spec.diurnal_period_s).sin();
+        let rate = (if in_burst { r_burst } else { r_stable }) * diurnal.max(0.05);
+        // Gamma renewal with shape k and mean 1/rate → scale = 1/(k*rate).
+        let k = spec.arrival_shape;
+        let gap = arrivals_rng.gamma(k, 1.0 / (k * rate));
+        t += gap;
+        if t >= spec.duration_s {
+            break;
+        }
+        let input = sample_len(&mut len_rng, &spec.input_len);
+        let output = sample_len(&mut len_rng, &spec.output_len);
+        requests.push(Request::new(id, t, input, output));
+        id += 1;
+    }
+
+    Trace {
+        name: spec.name.clone(),
+        duration_s: spec.duration_s,
+        requests,
+    }
+}
+
+/// Generate a family trace at the given rate/duration.
+pub fn generate_family(family: TraceFamily, rps: f64, duration_s: f64, seed: u64) -> Trace {
+    if family == TraceFamily::Mixed {
+        return generate_mixed(rps, duration_s, seed);
+    }
+    generate(&family.spec(rps, duration_s), seed)
+}
+
+/// The paper's Mixed trace: Azure Conversation + Azure Code + BurstGPT 1/2
+/// interleaved at equal request rates (§V Workload Generation).
+pub fn generate_mixed(total_rps: f64, duration_s: f64, seed: u64) -> Trace {
+    let per = total_rps / 4.0;
+    let mut requests = Vec::new();
+    for (i, fam) in base_families().into_iter().enumerate() {
+        let sub = generate(&fam.spec(per, duration_s), seed.wrapping_add(i as u64 * 7919));
+        requests.extend(sub.requests);
+    }
+    requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    Trace {
+        name: "mixed".into(),
+        duration_s,
+        requests,
+    }
+}
+
+/// A step trace: stable `base_rps`, jumping to `burst_rps` during
+/// [t_start, t_start + burst_len), then back — the §II-C2 and Fig. 10
+/// microbenchmark shape. Lengths are fixed for determinism.
+pub fn step_trace(
+    base_rps: f64,
+    burst_rps: f64,
+    t_start: f64,
+    burst_len: f64,
+    duration_s: f64,
+    input_tokens: usize,
+    output_tokens: usize,
+    seed: u64,
+) -> Trace {
+    let mut rng = Pcg64::new(seed);
+    let mut requests = Vec::new();
+    let mut t = 0.0;
+    let mut id = 0u64;
+    while t < duration_s {
+        let rate = if t >= t_start && t < t_start + burst_len {
+            burst_rps
+        } else {
+            base_rps
+        };
+        t += rng.exponential(rate);
+        if t >= duration_s {
+            break;
+        }
+        requests.push(Request::new(id, t, input_tokens, output_tokens));
+        id += 1;
+    }
+    Trace {
+        name: format!("step-{base_rps}to{burst_rps}"),
+        duration_s,
+        requests,
+    }
+}
+
+/// The Fig. 6 toy workload: two bursts over stable traffic — at `t1`
+/// five 2-token requests (request burst), at `t2` two 5-token requests
+/// (token burst).
+pub fn fig6_trace(t1: f64, t2: f64, duration_s: f64) -> Trace {
+    let mut requests = Vec::new();
+    let mut id = 0u64;
+    // stable background: 1 request of 1 token every second
+    let mut t = 0.5;
+    while t < duration_s {
+        requests.push(Request::new(id, t, 1, 8));
+        id += 1;
+        t += 1.0;
+    }
+    for i in 0..5 {
+        requests.push(Request::new(id, t1 + i as f64 * 1e-3, 2, 8));
+        id += 1;
+    }
+    for i in 0..2 {
+        requests.push(Request::new(id, t2 + i as f64 * 1e-3, 5, 8));
+        id += 1;
+    }
+    requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    Trace {
+        name: "fig6-two-bursts".into(),
+        duration_s,
+        requests,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_rate_matches_spec() {
+        // Full diurnal period so the sinusoidal modulation integrates out.
+        let spec = TraceFamily::AzureConv.spec(22.0, 900.0);
+        let t = generate(&spec, 1);
+        let rps = t.avg_rps();
+        assert!((rps - 22.0).abs() < 3.0, "rps={rps}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let spec = TraceFamily::AzureCode.spec(10.0, 60.0);
+        let a = generate(&spec, 7);
+        let b = generate(&spec, 7);
+        assert_eq!(a.requests, b.requests);
+        let c = generate(&spec, 8);
+        assert_ne!(a.requests.len(), 0);
+        assert!(a.requests != c.requests);
+    }
+
+    #[test]
+    fn arrivals_sorted_and_bounded() {
+        let spec = TraceFamily::BurstGpt2.spec(15.0, 120.0);
+        let t = generate(&spec, 3);
+        for w in t.requests.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        assert!(t.requests.iter().all(|r| r.arrival < 120.0));
+        assert!(t.requests.iter().all(|r| r.input_tokens >= 4));
+        assert!(t.requests.iter().all(|r| r.input_tokens <= 8192));
+    }
+
+    #[test]
+    fn mixed_combines_families() {
+        let t = generate_mixed(20.0, 120.0, 5);
+        assert!((t.avg_rps() - 20.0).abs() < 4.0, "rps={}", t.avg_rps());
+        // IDs reassigned contiguous
+        assert_eq!(t.requests.first().unwrap().id, 0);
+        assert_eq!(t.requests.last().unwrap().id as usize, t.requests.len() - 1);
+    }
+
+    #[test]
+    fn resample_halves_rate() {
+        let spec = TraceFamily::AzureConv.spec(20.0, 200.0);
+        let t = generate(&spec, 11);
+        let mut rng = Pcg64::new(1);
+        let half = t.resample_to_rps(10.0, &mut rng);
+        assert!((half.avg_rps() - 10.0).abs() < 1.5, "rps={}", half.avg_rps());
+    }
+
+    #[test]
+    fn step_trace_rates() {
+        let t = step_trace(8.0, 16.0, 4.0, 4.0, 12.0, 512, 128, 2);
+        let in_burst = t
+            .requests
+            .iter()
+            .filter(|r| r.arrival >= 4.0 && r.arrival < 8.0)
+            .count() as f64
+            / 4.0;
+        let stable = t
+            .requests
+            .iter()
+            .filter(|r| r.arrival < 4.0)
+            .count() as f64
+            / 4.0;
+        assert!(in_burst > stable, "burst={in_burst} stable={stable}");
+    }
+
+    #[test]
+    fn fig6_trace_structure() {
+        let t = fig6_trace(3.0, 7.0, 10.0);
+        let at_t1 = t
+            .requests
+            .iter()
+            .filter(|r| (r.arrival - 3.0).abs() < 0.01 && r.input_tokens == 2)
+            .count();
+        let at_t2 = t
+            .requests
+            .iter()
+            .filter(|r| (r.arrival - 7.0).abs() < 0.01 && r.input_tokens == 5)
+            .count();
+        assert_eq!(at_t1, 5);
+        assert_eq!(at_t2, 2);
+    }
+}

@@ -1,0 +1,13 @@
+//! Synthetic workload traces.
+//!
+//! Substitute for the paper's Azure LLM-inference and BurstGPT production
+//! traces (unavailable offline): parameterized generators reproducing the
+//! published burstiness and length statistics, plus the running-average
+//! burst analytics of §II-C1.
+
+pub mod burst;
+pub mod gen;
+pub mod spec;
+
+pub use gen::{fig6_trace, generate, generate_family, generate_mixed, step_trace, Trace};
+pub use spec::{base_families, BurstModel, LenDist, TraceFamily, TraceSpec};

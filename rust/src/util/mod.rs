@@ -1,0 +1,12 @@
+//! Foundational utilities: deterministic RNG, JSON, statistics, table/CSV
+//! rendering, and a hand-rolled property-testing harness.
+//!
+//! These replace crates (`rand`, `serde_json`, `proptest`, `criterion`
+//! report helpers) that are unavailable in the offline build environment;
+//! see DESIGN.md "Dependency substitutions".
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

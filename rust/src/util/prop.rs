@@ -1,0 +1,142 @@
+//! Hand-rolled property-based testing (proptest is unavailable offline).
+//!
+//! A property runs against `cases` randomly generated inputs drawn from a
+//! caller-supplied generator. On failure the harness attempts a simple
+//! "re-seed shrink": it replays the failing case and reports the seed so the
+//! failure is reproducible. Generators get a forked [`Pcg64`] per case.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries lack the xla rpath in this image)
+//! use tokenscale::util::prop::{check, Config};
+//! check(Config::named("sum-commutes"), |rng| {
+//!     let a = rng.below(1000) as i64;
+//!     let b = rng.below(1000) as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Pcg64;
+
+/// Property-test configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Human-readable property name, included in failure messages.
+    pub name: String,
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; each case forks a child generator from it.
+    pub seed: u64,
+}
+
+impl Config {
+    pub fn named(name: &str) -> Config {
+        Config {
+            name: name.to_string(),
+            cases: default_cases(),
+            seed: env_seed(),
+        }
+    }
+
+    pub fn cases(mut self, n: usize) -> Config {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Config {
+        self.seed = s;
+        self
+    }
+}
+
+fn default_cases() -> usize {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+fn env_seed() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA11CE5)
+}
+
+/// Run `property` against `cfg.cases` random inputs. Panics (failing the
+/// surrounding `#[test]`) with the case seed on the first failing case.
+pub fn check<F>(cfg: Config, mut property: F)
+where
+    F: FnMut(&mut Pcg64),
+{
+    let mut master = Pcg64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = master.next_u64();
+        let mut rng = Pcg64::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property `{}` failed on case {}/{} (replay with PROP_SEED per-case seed {}):\n{}",
+                cfg.name, case + 1, cfg.cases, case_seed, msg
+            );
+        }
+    }
+}
+
+/// Generate a random vector with length in [min_len, max_len] whose items
+/// come from `gen`.
+pub fn vec_of<T>(
+    rng: &mut Pcg64,
+    min_len: usize,
+    max_len: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+) -> Vec<T> {
+    let len = rng.range_usize(min_len, max_len);
+    (0..len).map(|_| gen(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(Config::named("abs-nonneg").cases(64), |rng| {
+            let x = rng.normal();
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check(Config::named("always-fails").cases(4), |_rng| {
+                panic!("intentional");
+            });
+        });
+        let msg = match result {
+            Err(p) => p
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("always-fails"), "msg={msg}");
+        assert!(msg.contains("replay"), "msg={msg}");
+    }
+
+    #[test]
+    fn vec_of_respects_bounds() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..100 {
+            let v = vec_of(&mut rng, 2, 5, |r| r.below(10));
+            assert!((2..=5).contains(&v.len()));
+        }
+    }
+}

@@ -1,0 +1,305 @@
+//! Small statistics toolkit: summaries, percentiles, correlation, EWMA,
+//! and running-window averages used by the burst analytics and metrics.
+
+/// Mean of a slice; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance; 0.0 for fewer than 2 samples.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Coefficient of variation (stddev / mean); 0.0 when the mean is ~0.
+pub fn cv(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m.abs() < 1e-12 {
+        return 0.0;
+    }
+    stddev(xs) / m
+}
+
+/// Linear-interpolated percentile, `q` in [0, 100]. Sorts a copy.
+/// Returns 0.0 for empty input.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    percentile_sorted(&v, q)
+}
+
+/// Percentile over an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 100.0);
+    let pos = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Pearson correlation coefficient between two equal-length series.
+/// Returns 0.0 if either series is constant or lengths mismatch/empty.
+/// Used for the paper's Fig. 11 provisioned-vs-required analysis.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    if xs.len() != ys.len() || xs.len() < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        let dx = x - mx;
+        let dy = y - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx <= 1e-12 || syy <= 1e-12 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Exponentially-weighted moving average with configurable smoothing.
+/// Drives the online velocity estimates and the burst detector baseline.
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha), "alpha must be in [0,1]");
+        Ewma { alpha, value: None }
+    }
+
+    /// EWMA whose weight corresponds to a given half-life in samples.
+    pub fn with_half_life(samples: f64) -> Self {
+        let alpha = 1.0 - 0.5f64.powf(1.0 / samples.max(1e-9));
+        Ewma::new(alpha)
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => prev + self.alpha * (x - prev),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn get_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+/// Fixed-duration sliding-window sum/rate over timestamped samples.
+/// Matches the paper's "1-minute sliding window" running-average analysis
+/// and the short windows the autoscalers act on.
+#[derive(Clone, Debug)]
+pub struct SlidingWindow {
+    window: f64,
+    samples: std::collections::VecDeque<(f64, f64)>, // (time, value)
+    sum: f64,
+}
+
+impl SlidingWindow {
+    pub fn new(window_secs: f64) -> Self {
+        assert!(window_secs > 0.0);
+        SlidingWindow {
+            window: window_secs,
+            samples: std::collections::VecDeque::new(),
+            sum: 0.0,
+        }
+    }
+
+    /// Record `value` at time `now` (seconds); evicts expired samples.
+    pub fn push(&mut self, now: f64, value: f64) {
+        self.samples.push_back((now, value));
+        self.sum += value;
+        self.evict(now);
+    }
+
+    /// Drop samples older than `now - window`.
+    pub fn evict(&mut self, now: f64) {
+        while let Some(&(t, v)) = self.samples.front() {
+            if t < now - self.window {
+                self.samples.pop_front();
+                self.sum -= v;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Sum of values currently inside the window.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Sum divided by window length: a per-second rate.
+    pub fn rate(&self) -> f64 {
+        self.sum / self.window
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn window_secs(&self) -> f64 {
+        self.window
+    }
+}
+
+/// Summary of a latency distribution used throughout the reports.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        Summary {
+            count: v.len(),
+            mean: mean(&v),
+            p50: percentile_sorted(&v, 50.0),
+            p90: percentile_sorted(&v, 90.0),
+            p99: percentile_sorted(&v, 99.0),
+            max: *v.last().unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_empty_and_single() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn pearson_perfect_and_inverse() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let z = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_constant_is_zero() {
+        let x = [1.0, 1.0, 1.0];
+        let y = [1.0, 2.0, 3.0];
+        assert_eq!(pearson(&x, &y), 0.0);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..60 {
+            e.update(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ewma_half_life() {
+        let mut e = Ewma::with_half_life(10.0);
+        e.update(0.0);
+        for _ in 0..10 {
+            e.update(1.0);
+        }
+        // After one half-life of 1.0-valued updates from 0, ~half way.
+        let v = e.get().unwrap();
+        assert!((v - 0.5).abs() < 0.05, "v={v}");
+    }
+
+    #[test]
+    fn sliding_window_evicts() {
+        let mut w = SlidingWindow::new(1.0);
+        w.push(0.0, 5.0);
+        w.push(0.5, 5.0);
+        assert_eq!(w.sum(), 10.0);
+        w.push(1.6, 1.0); // evicts both earlier samples (t < 0.6)
+        assert_eq!(w.sum(), 1.0);
+        w.evict(3.0);
+        assert_eq!(w.sum(), 0.0);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn summary_of_known() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.count, 5);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.max, 100.0);
+        assert!(s.p99 > 4.0);
+    }
+}

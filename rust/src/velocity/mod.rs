@@ -1,0 +1,17 @@
+//! Token Velocity (§III-B): the paper's leading capacity metric.
+//!
+//! *"The maximum number of tokens that the instance can release in a
+//! second with the current allocated resource."* Three stage velocities
+//! unify the PD pipeline:
+//!
+//! - **Prefill velocity** `V_P` — input tokens/s a prefiller sustains
+//!   (compute-bound, constant per model×GPU×TP).
+//! - **Network velocity** `V_N` — KVC tokens/s the interconnect moves.
+//! - **Decode velocity** `V_D` — tokens/s a decoder *releases* (memory
+//!   freed by completing requests), per request-type bucket (Eq. 1).
+
+pub mod analytic;
+pub mod online;
+
+pub use analytic::{decode_velocity, network_velocity, prefill_velocity, VelocityProfile};
+pub use online::OnlineVelocity;

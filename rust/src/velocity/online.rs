@@ -1,0 +1,77 @@
+//! Online decode-velocity measurement (Eq. 1): `V_D = Σ L_r / TPOT` over
+//! recently completed requests — the runtime-status signal the Scaler
+//! cross-checks against the offline profile.
+
+use crate::util::stats::{Ewma, SlidingWindow};
+
+/// Measures realized decode velocity from the completion stream.
+#[derive(Clone, Debug)]
+pub struct OnlineVelocity {
+    /// Released tokens (L_r = input + output) over a sliding window.
+    released: SlidingWindow,
+    /// Smoothed TPOT of completions.
+    tpot: Ewma,
+}
+
+impl OnlineVelocity {
+    pub fn new(window_s: f64) -> Self {
+        OnlineVelocity {
+            released: SlidingWindow::new(window_s),
+            tpot: Ewma::with_half_life(32.0),
+        }
+    }
+
+    /// Record a completion releasing `tokens` KV tokens with measured
+    /// per-token latency `tpot_s`.
+    pub fn on_completion(&mut self, now: f64, tokens: usize, tpot_s: f64) {
+        self.released.push(now, tokens as f64);
+        if tpot_s > 0.0 {
+            self.tpot.update(tpot_s);
+        }
+    }
+
+    /// Realized release rate (tokens/s) over the window.
+    pub fn release_rate(&mut self, now: f64) -> f64 {
+        self.released.evict(now);
+        self.released.rate()
+    }
+
+    /// Smoothed observed TPOT, if any completions were seen.
+    pub fn observed_tpot(&self) -> Option<f64> {
+        self.tpot.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn release_rate_tracks_completions() {
+        let mut v = OnlineVelocity::new(10.0);
+        for i in 0..10 {
+            v.on_completion(i as f64, 500, 0.05);
+        }
+        // 5000 tokens over a 10 s window.
+        let r = v.release_rate(9.9);
+        assert!((r - 500.0).abs() < 60.0, "rate={r}");
+    }
+
+    #[test]
+    fn old_completions_expire() {
+        let mut v = OnlineVelocity::new(5.0);
+        v.on_completion(0.0, 1000, 0.05);
+        assert!(v.release_rate(1.0) > 0.0);
+        assert_eq!(v.release_rate(100.0), 0.0);
+    }
+
+    #[test]
+    fn tpot_smooths() {
+        let mut v = OnlineVelocity::new(5.0);
+        for _ in 0..50 {
+            v.on_completion(0.0, 10, 0.08);
+        }
+        let t = v.observed_tpot().unwrap();
+        assert!((t - 0.08).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,169 @@
+//! Request-type buckets (Table II): the 3×3 grid of short/medium/long
+//! inputs × short/medium/long outputs the decoder autoscaler sums over.
+
+/// Length class for either input or output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LenClass {
+    Short,
+    Medium,
+    Long,
+}
+
+impl LenClass {
+    pub fn label(self) -> &'static str {
+        match self {
+            LenClass::Short => "S",
+            LenClass::Medium => "M",
+            LenClass::Long => "L",
+        }
+    }
+}
+
+/// A (input-class, output-class) bucket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Bucket {
+    pub input: LenClass,
+    pub output: LenClass,
+}
+
+impl Bucket {
+    pub fn new(input: LenClass, output: LenClass) -> Bucket {
+        Bucket { input, output }
+    }
+
+    /// "S-M"-style label matching Table II's header row.
+    pub fn label(&self) -> String {
+        format!("{}-{}", self.input.label(), self.output.label())
+    }
+
+    /// Index 0..9 in row-major (input, output) order.
+    pub fn index(&self) -> usize {
+        let i = match self.input {
+            LenClass::Short => 0,
+            LenClass::Medium => 1,
+            LenClass::Long => 2,
+        };
+        let o = match self.output {
+            LenClass::Short => 0,
+            LenClass::Medium => 1,
+            LenClass::Long => 2,
+        };
+        i * 3 + o
+    }
+
+    pub fn from_index(idx: usize) -> Bucket {
+        let classes = [LenClass::Short, LenClass::Medium, LenClass::Long];
+        Bucket::new(classes[idx / 3], classes[idx % 3])
+    }
+}
+
+/// Classification thresholds; boundaries follow the paper's bucket
+/// representatives (256 / 1024 / 8192 input, 100 / 350 / 610 output).
+#[derive(Clone, Copy, Debug)]
+pub struct BucketScheme {
+    pub input_short_max: usize,
+    pub input_medium_max: usize,
+    pub output_short_max: usize,
+    pub output_medium_max: usize,
+}
+
+impl Default for BucketScheme {
+    fn default() -> Self {
+        BucketScheme {
+            input_short_max: 512,   // S-rep 256
+            input_medium_max: 3072, // M-rep 1024, L-rep 8192
+            output_short_max: 200,  // S-rep 100
+            output_medium_max: 480, // M-rep 350, L-rep 610
+        }
+    }
+}
+
+impl BucketScheme {
+    pub fn classify_input(&self, tokens: usize) -> LenClass {
+        if tokens <= self.input_short_max {
+            LenClass::Short
+        } else if tokens <= self.input_medium_max {
+            LenClass::Medium
+        } else {
+            LenClass::Long
+        }
+    }
+
+    pub fn classify_output(&self, tokens: usize) -> LenClass {
+        if tokens <= self.output_short_max {
+            LenClass::Short
+        } else if tokens <= self.output_medium_max {
+            LenClass::Medium
+        } else {
+            LenClass::Long
+        }
+    }
+
+    pub fn classify(&self, input_tokens: usize, output_tokens: usize) -> Bucket {
+        Bucket::new(
+            self.classify_input(input_tokens),
+            self.classify_output(output_tokens),
+        )
+    }
+
+    /// Representative (input, output) lengths for each bucket — the exact
+    /// values Table II profiles with.
+    pub fn representative(&self, b: Bucket) -> (usize, usize) {
+        let input = match b.input {
+            LenClass::Short => 256,
+            LenClass::Medium => 1024,
+            LenClass::Long => 8192,
+        };
+        let output = match b.output {
+            LenClass::Short => 100,
+            LenClass::Medium => 350,
+            LenClass::Long => 610,
+        };
+        (input, output)
+    }
+}
+
+/// All nine buckets in Table II's order (S-S, S-M, S-L, M-S, …, L-L).
+pub fn all_buckets() -> Vec<Bucket> {
+    (0..9).map(Bucket::from_index).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_match_table2_order() {
+        let labels: Vec<String> = all_buckets().iter().map(|b| b.label()).collect();
+        assert_eq!(
+            labels,
+            vec!["S-S", "S-M", "S-L", "M-S", "M-M", "M-L", "L-S", "L-M", "L-L"]
+        );
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        for i in 0..9 {
+            assert_eq!(Bucket::from_index(i).index(), i);
+        }
+    }
+
+    #[test]
+    fn classify_representatives_identity() {
+        let scheme = BucketScheme::default();
+        for b in all_buckets() {
+            let (i, o) = scheme.representative(b);
+            assert_eq!(scheme.classify(i, o), b, "bucket {}", b.label());
+        }
+    }
+
+    #[test]
+    fn classify_boundaries() {
+        let s = BucketScheme::default();
+        assert_eq!(s.classify_input(512), LenClass::Short);
+        assert_eq!(s.classify_input(513), LenClass::Medium);
+        assert_eq!(s.classify_input(3073), LenClass::Long);
+        assert_eq!(s.classify_output(200), LenClass::Short);
+        assert_eq!(s.classify_output(481), LenClass::Long);
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload model: requests, SLOs, the paper's Table II request-type
+//! buckets, and the simulated output-length predictor.
+
+pub mod bucket;
+pub mod predictor;
+pub mod request;
+
+pub use bucket::{all_buckets, Bucket, BucketScheme, LenClass};
+pub use predictor::OutputPredictor;
+pub use request::{Completion, Request, RequestId, SloPolicy};

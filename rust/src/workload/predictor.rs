@@ -1,0 +1,135 @@
+//! Simulated output-length predictor.
+//!
+//! The paper (§V) simulates a DeepServe-style classifier with ~85 %
+//! accuracy because production traces carry length metadata but not prompt
+//! content; we do the same. With probability `accuracy` the predictor
+//! returns the request's true output class; otherwise it returns one of the
+//! other classes, with errors biased toward adjacent classes (a classifier
+//! confuses M with S/L far more often than S with L).
+
+use super::bucket::{Bucket, BucketScheme, LenClass};
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct OutputPredictor {
+    pub accuracy: f64,
+    pub scheme: BucketScheme,
+    rng: Pcg64,
+}
+
+impl OutputPredictor {
+    pub fn new(accuracy: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&accuracy));
+        OutputPredictor {
+            accuracy,
+            scheme: BucketScheme::default(),
+            rng: Pcg64::new(seed ^ 0x9E37_79B9),
+        }
+    }
+
+    /// Predict the output-length class for a request with the given true
+    /// output length.
+    pub fn predict_class(&mut self, true_output: usize) -> LenClass {
+        let truth = self.scheme.classify_output(true_output);
+        if self.rng.chance(self.accuracy) {
+            return truth;
+        }
+        // Misprediction: adjacent class 80% of the time, far class 20%.
+        match truth {
+            LenClass::Short => {
+                if self.rng.chance(0.8) {
+                    LenClass::Medium
+                } else {
+                    LenClass::Long
+                }
+            }
+            LenClass::Long => {
+                if self.rng.chance(0.8) {
+                    LenClass::Medium
+                } else {
+                    LenClass::Short
+                }
+            }
+            LenClass::Medium => {
+                if self.rng.chance(0.5) {
+                    LenClass::Short
+                } else {
+                    LenClass::Long
+                }
+            }
+        }
+    }
+
+    /// Predicted output length in tokens: the bucket representative of the
+    /// predicted class.
+    pub fn predict_tokens(&mut self, true_output: usize) -> usize {
+        match self.predict_class(true_output) {
+            LenClass::Short => 100,
+            LenClass::Medium => 350,
+            LenClass::Long => 610,
+        }
+    }
+
+    /// Predict the full (input, output) bucket for a request.
+    pub fn predict_bucket(&mut self, input_tokens: usize, true_output: usize) -> Bucket {
+        Bucket::new(
+            self.scheme.classify_input(input_tokens),
+            self.predict_class(true_output),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_predictor_never_errs() {
+        let mut p = OutputPredictor::new(1.0, 1);
+        for out in [50, 300, 600, 1000] {
+            let truth = p.scheme.classify_output(out);
+            for _ in 0..50 {
+                assert_eq!(p.predict_class(out), truth);
+            }
+        }
+    }
+
+    #[test]
+    fn accuracy_is_calibrated() {
+        let mut p = OutputPredictor::new(0.85, 2);
+        let n = 20_000;
+        let mut correct = 0;
+        for i in 0..n {
+            let out = [50usize, 300, 600][i % 3];
+            let truth = p.scheme.classify_output(out);
+            if p.predict_class(out) == truth {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / n as f64;
+        assert!((acc - 0.85).abs() < 0.02, "acc={acc}");
+    }
+
+    #[test]
+    fn zero_accuracy_always_errs() {
+        let mut p = OutputPredictor::new(0.0, 3);
+        for _ in 0..100 {
+            assert_ne!(p.predict_class(50), LenClass::Short);
+        }
+    }
+
+    #[test]
+    fn mispredictions_favor_adjacent() {
+        let mut p = OutputPredictor::new(0.0, 4);
+        let mut med = 0;
+        let mut long = 0;
+        for _ in 0..10_000 {
+            match p.predict_class(50) {
+                LenClass::Medium => med += 1,
+                LenClass::Long => long += 1,
+                LenClass::Short => unreachable!(),
+            }
+        }
+        assert!(med > 3 * long, "med={med} long={long}");
+    }
+}

@@ -1,0 +1,153 @@
+//! Request model shared by the trace generators, simulator, coordinator
+//! and the real serving engine.
+
+/// Unique request identifier.
+pub type RequestId = u64;
+
+/// One inference request as it arrives at the gateway.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: RequestId,
+    /// Arrival time in seconds from trace start.
+    pub arrival: f64,
+    /// Prompt length in tokens (known at arrival).
+    pub input_tokens: usize,
+    /// True output length in tokens (hidden from the system; revealed
+    /// during generation; the predictor estimates it).
+    pub output_tokens: usize,
+}
+
+impl Request {
+    pub fn new(id: RequestId, arrival: f64, input_tokens: usize, output_tokens: usize) -> Self {
+        Request {
+            id,
+            arrival,
+            input_tokens,
+            output_tokens,
+        }
+    }
+
+    /// Total tokens this request will eventually occupy in KV cache.
+    pub fn total_tokens(&self) -> usize {
+        self.input_tokens + self.output_tokens
+    }
+}
+
+/// Service-level objectives, following the paper's §V standards
+/// (DynamoLLM-derived, MLPerf-consistent): input-length-dependent TTFT and
+/// fixed 100 ms TPOT.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloPolicy {
+    /// TTFT targets (seconds) for short (<256), medium (<1024) and long
+    /// (≤8192-token) prompts.
+    pub ttft_short_s: f64,
+    pub ttft_medium_s: f64,
+    pub ttft_long_s: f64,
+    /// TPOT target, seconds per output token.
+    pub tpot_s: f64,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        SloPolicy {
+            ttft_short_s: 0.250,
+            ttft_medium_s: 0.400,
+            ttft_long_s: 2.000,
+            tpot_s: 0.100,
+        }
+    }
+}
+
+impl SloPolicy {
+    /// TTFT SLO for a given prompt length.
+    pub fn ttft_slo(&self, input_tokens: usize) -> f64 {
+        if input_tokens < 256 {
+            self.ttft_short_s
+        } else if input_tokens < 1024 {
+            self.ttft_medium_s
+        } else {
+            self.ttft_long_s
+        }
+    }
+}
+
+/// Completed-request measurement produced by the simulator or the real
+/// engine, consumed by the metrics subsystem.
+#[derive(Clone, Copy, Debug)]
+pub struct Completion {
+    pub id: RequestId,
+    pub arrival: f64,
+    pub input_tokens: usize,
+    pub output_tokens: usize,
+    /// Time to first token, seconds (includes queueing + prefill + KVC
+    /// transfer until the first decode step completes).
+    pub ttft: f64,
+    /// Mean time per output token after the first, seconds.
+    pub tpot: f64,
+    /// Completion wall-clock time, seconds from trace start.
+    pub finish: f64,
+}
+
+impl Completion {
+    /// Did this request meet both its TTFT and TPOT SLOs?
+    pub fn slo_ok(&self, slo: &SloPolicy) -> bool {
+        self.ttft_ok(slo) && self.tpot_ok(slo)
+    }
+
+    pub fn ttft_ok(&self, slo: &SloPolicy) -> bool {
+        self.ttft <= slo.ttft_slo(self.input_tokens)
+    }
+
+    pub fn tpot_ok(&self, slo: &SloPolicy) -> bool {
+        self.output_tokens <= 1 || self.tpot <= slo.tpot_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttft_slo_tiers() {
+        let slo = SloPolicy::default();
+        assert_eq!(slo.ttft_slo(100), 0.250);
+        assert_eq!(slo.ttft_slo(256), 0.400);
+        assert_eq!(slo.ttft_slo(1023), 0.400);
+        assert_eq!(slo.ttft_slo(1024), 2.000);
+        assert_eq!(slo.ttft_slo(8192), 2.000);
+    }
+
+    #[test]
+    fn completion_slo_checks() {
+        let slo = SloPolicy::default();
+        let ok = Completion {
+            id: 1,
+            arrival: 0.0,
+            input_tokens: 100,
+            output_tokens: 50,
+            ttft: 0.2,
+            tpot: 0.05,
+            finish: 3.0,
+        };
+        assert!(ok.slo_ok(&slo));
+        let bad_ttft = Completion { ttft: 0.3, ..ok };
+        assert!(!bad_ttft.slo_ok(&slo));
+        let bad_tpot = Completion { tpot: 0.15, ..ok };
+        assert!(!bad_tpot.slo_ok(&slo));
+    }
+
+    #[test]
+    fn single_token_output_ignores_tpot() {
+        let slo = SloPolicy::default();
+        let c = Completion {
+            id: 1,
+            arrival: 0.0,
+            input_tokens: 100,
+            output_tokens: 1,
+            ttft: 0.1,
+            tpot: 99.0,
+            finish: 1.0,
+        };
+        assert!(c.slo_ok(&slo));
+    }
+}

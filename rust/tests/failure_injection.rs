@@ -1,0 +1,190 @@
+//! Failure injection and edge cases: the system must degrade gracefully,
+//! never deadlock, and account for everything it drops.
+
+use std::sync::Arc;
+use tokenscale::perfmodel::{catalog, EngineModel};
+use tokenscale::report::runner::RunOverrides;
+use tokenscale::report::{deployment, run_experiment, PolicyKind};
+use tokenscale::sim::{simulate, ClusterConfig, SimConfig, StaticCoordinator};
+use tokenscale::trace::{step_trace, Trace};
+use tokenscale::workload::Request;
+
+fn engine() -> Arc<EngineModel> {
+    Arc::new(EngineModel::new(
+        catalog::model("llama-3.1-8b").unwrap(),
+        catalog::gpu("a100-40g").unwrap(),
+        1,
+    ))
+}
+
+fn cluster_cfg(max_gpus: usize) -> ClusterConfig {
+    ClusterConfig {
+        prefill_engine: engine(),
+        decode_engine: engine(),
+        startup_override_s: None,
+        max_gpus,
+        convertible_chunk_size: 512,
+        convertible_reserve_tokens: 4096.0,
+    }
+}
+
+#[test]
+fn empty_trace_completes_instantly() {
+    let trace = Trace {
+        name: "empty".into(),
+        duration_s: 10.0,
+        requests: vec![],
+    };
+    let mut coord = StaticCoordinator::new(1, 1);
+    let res = simulate(SimConfig::default(), cluster_cfg(4), &mut coord, &trace);
+    assert_eq!(res.metrics.completions.len(), 0);
+    assert_eq!(res.metrics.dropped, 0);
+}
+
+#[test]
+fn oversized_request_is_rejected_not_deadlocked() {
+    // A request whose KV footprint exceeds a whole decoder is rejected and
+    // accounted; everything else still completes.
+    let cap_tokens = engine().kv_capacity_tokens() as usize;
+    let mut requests = vec![
+        Request::new(0, 0.1, 256, 64),
+        Request::new(1, 0.2, 8192, cap_tokens), // impossible
+        Request::new(2, 0.3, 256, 64),
+    ];
+    requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    let trace = Trace {
+        name: "oversized".into(),
+        duration_s: 5.0,
+        requests,
+    };
+    let mut coord = StaticCoordinator::new(1, 1);
+    let res = simulate(SimConfig::default(), cluster_cfg(4), &mut coord, &trace);
+    assert_eq!(res.metrics.dropped, 1, "oversized request must be dropped");
+    assert_eq!(res.metrics.completions.len(), 2, "others must complete");
+}
+
+#[test]
+fn simultaneous_arrivals_are_handled() {
+    let requests: Vec<Request> = (0..50)
+        .map(|i| Request::new(i, 1.0, 128, 16))
+        .collect();
+    let trace = Trace {
+        name: "thundering-herd".into(),
+        duration_s: 5.0,
+        requests,
+    };
+    let mut coord = StaticCoordinator::new(2, 2);
+    let cfg = SimConfig {
+        initial_prefillers: 2,
+        initial_decoders: 2,
+        ..Default::default()
+    };
+    let res = simulate(cfg, cluster_cfg(8), &mut coord, &trace);
+    assert_eq!(res.metrics.completions.len(), 50);
+}
+
+#[test]
+fn tiny_gpu_cap_still_serves_with_degraded_slo() {
+    // Cap of 2 GPUs: the autoscaler wants more but can't have them.
+    let dep = deployment("small-a100").unwrap();
+    let trace = step_trace(16.0, 16.0, 0.0, 0.0, 30.0, 1024, 128, 3); // 2x one prefiller's V_P
+    let mut dep2 = dep.clone();
+    dep2.max_gpus = 2;
+    dep2.initial_prefillers = 1;
+    dep2.initial_decoders = 1;
+    let res = run_experiment(
+        &dep2,
+        PolicyKind::TokenScale,
+        &trace,
+        &RunOverrides {
+            convertibles: Some(0),
+            warmup_s: 0.0,
+            ..Default::default()
+        },
+    );
+    // Overload: most requests finish (eventually) and none vanish.
+    assert!(res.report.n + res.sim.metrics.dropped > 0);
+    assert!(
+        res.report.overall_attainment < 0.9,
+        "a 2-GPU cluster can't meet SLOs at this load (got {})",
+        res.report.overall_attainment
+    );
+}
+
+#[test]
+fn zero_output_predictor_accuracy_still_works() {
+    let dep = deployment("small-a100").unwrap();
+    let trace = step_trace(6.0, 6.0, 0.0, 0.0, 30.0, 512, 128, 5);
+    let res = run_experiment(
+        &dep,
+        PolicyKind::TokenScale,
+        &trace,
+        &RunOverrides {
+            predictor_accuracy: Some(0.0),
+            warmup_s: 0.0,
+            ..Default::default()
+        },
+    );
+    // Always-wrong predictions cost efficiency, never correctness.
+    assert_eq!(res.report.n, trace.requests.len());
+}
+
+#[test]
+fn draining_prefiller_finishes_queue() {
+    // Scale down mid-burst: requests already queued on the retired
+    // prefiller must still complete.
+    use tokenscale::sim::{Cluster, Coordinator, InstanceId, Role, Route, ScaleTargets};
+
+    struct ShrinkAt {
+        t: f64,
+    }
+    impl Coordinator for ShrinkAt {
+        fn name(&self) -> &str {
+            "shrink"
+        }
+        fn observe_arrival(&mut self, _: f64, _: &Request) {}
+        fn route_prefill(&mut self, _: f64, _: &Request, cluster: &Cluster) -> Route {
+            cluster
+                .running_of(Role::Prefiller)
+                .min_by_key(|i| i.inflight_prefill_tokens())
+                .map(|i| Route::Prefiller(i.id))
+                .unwrap_or(Route::Queue)
+        }
+        fn route_decode(
+            &mut self,
+            _: f64,
+            req: &Request,
+            cluster: &Cluster,
+        ) -> Option<InstanceId> {
+            cluster
+                .running_of(Role::Decoder)
+                .filter(|i| i.can_admit(req.total_tokens()))
+                .min_by_key(|i| i.decode_load())
+                .map(|i| i.id)
+        }
+        fn scale(&mut self, now: f64, _: &Cluster) -> ScaleTargets {
+            ScaleTargets {
+                prefillers: if now >= self.t { 1 } else { 3 },
+                decoders: 2,
+            }
+        }
+        fn predict_bucket(&mut self, _: &Request) -> usize {
+            0
+        }
+    }
+
+    let trace = step_trace(10.0, 10.0, 0.0, 0.0, 20.0, 1024, 32, 7);
+    let mut coord = ShrinkAt { t: 5.0 };
+    let cfg = SimConfig {
+        initial_prefillers: 3,
+        initial_decoders: 2,
+        ..Default::default()
+    };
+    let res = simulate(cfg, cluster_cfg(8), &mut coord, &trace);
+    assert_eq!(
+        res.metrics.completions.len(),
+        trace.requests.len(),
+        "scale-down dropped requests"
+    );
+    assert!(res.scale_downs >= 2);
+}

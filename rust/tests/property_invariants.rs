@@ -1,0 +1,203 @@
+//! Property-based invariants over the simulator, scalers, router and
+//! workload substrate, using the hand-rolled `util::prop` harness
+//! (PROP_CASES / PROP_SEED env vars control case count and seeding).
+
+use std::sync::Arc;
+use tokenscale::perfmodel::{catalog, EngineModel};
+use tokenscale::scaler::tokenscale::Hysteresis;
+use tokenscale::scaler::{required_decoders_frac, required_prefillers};
+use tokenscale::sim::{simulate, ClusterConfig, SimConfig, StaticCoordinator};
+use tokenscale::trace::{generate_family, step_trace, TraceFamily};
+use tokenscale::util::prop::{check, Config};
+use tokenscale::util::rng::Pcg64;
+use tokenscale::velocity::VelocityProfile;
+use tokenscale::workload::{all_buckets, BucketScheme, SloPolicy};
+
+fn engine() -> Arc<EngineModel> {
+    Arc::new(EngineModel::new(
+        catalog::model("llama-3.1-8b").unwrap(),
+        catalog::gpu("a100-40g").unwrap(),
+        1,
+    ))
+}
+
+fn cluster_cfg(max_gpus: usize) -> ClusterConfig {
+    ClusterConfig {
+        prefill_engine: engine(),
+        decode_engine: engine(),
+        startup_override_s: None,
+        max_gpus,
+        convertible_chunk_size: 512,
+        convertible_reserve_tokens: 4096.0,
+    }
+}
+
+/// Conservation: every request in a feasible workload is eventually
+/// completed exactly once, with sane latencies (no loss, no duplication).
+#[test]
+fn prop_simulation_conserves_requests() {
+    check(Config::named("sim-conservation").cases(12), |rng| {
+        let rps = rng.range_f64(1.0, 6.0);
+        let input = rng.range_usize(16, 2048);
+        let output = rng.range_usize(4, 256);
+        let trace = step_trace(rps, rps, 0.0, 0.0, 20.0, input, output, rng.next_u64());
+        let n = trace.requests.len();
+        let mut coord = StaticCoordinator::new(2, 2);
+        let cfg = SimConfig {
+            initial_prefillers: 2,
+            initial_decoders: 2,
+            drain_s: 600.0,
+            ..Default::default()
+        };
+        let res = simulate(cfg, cluster_cfg(8), &mut coord, &trace);
+        assert_eq!(
+            res.metrics.completions.len() + res.metrics.dropped,
+            n,
+            "requests lost (rps={rps:.1} in={input} out={output})"
+        );
+        let mut ids: Vec<u64> = res.metrics.completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), res.metrics.completions.len(), "duplicate completions");
+        for c in &res.metrics.completions {
+            assert!(c.ttft > 0.0 && c.ttft.is_finite());
+            assert!(c.finish >= c.arrival + c.ttft - 1e-9);
+        }
+    });
+}
+
+/// The GPU-cost integral is bounded by cap × horizon and is non-negative.
+#[test]
+fn prop_gpu_cost_bounded_by_cap() {
+    check(Config::named("gpu-cost-bound").cases(10), |rng| {
+        let cap = rng.range_usize(2, 12);
+        let trace = generate_family(
+            TraceFamily::AzureConv,
+            rng.range_f64(2.0, 15.0),
+            60.0,
+            rng.next_u64(),
+        );
+        let mut coord = StaticCoordinator::new(1, 1);
+        let cfg = SimConfig::default();
+        let res = simulate(cfg, cluster_cfg(cap), &mut coord, &trace);
+        let max_cost = cap as f64 * res.horizon_s;
+        assert!(res.metrics.gpu_seconds >= 0.0);
+        assert!(
+            res.metrics.gpu_seconds <= max_cost + 1e-6,
+            "cost {} exceeds cap bound {}",
+            res.metrics.gpu_seconds,
+            max_cost
+        );
+    });
+}
+
+/// Eq. 2 monotonicity: more arriving tokens can never require fewer
+/// prefillers; Eq. 3 likewise per bucket.
+#[test]
+fn prop_scaler_monotone_in_load() {
+    let engine = engine();
+    let link = catalog::link("a100-cluster").unwrap();
+    let profile = VelocityProfile::analytic(&engine, &link, 1024);
+    check(Config::named("scaler-monotone").cases(200), |rng| {
+        let a = rng.range_f64(0.0, 80_000.0);
+        let b = rng.range_f64(0.0, 80_000.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        assert!(required_prefillers(lo, &profile) <= required_prefillers(hi, &profile));
+
+        let mut lam_lo = [0.0; 9];
+        let mut lam_hi = [0.0; 9];
+        for i in 0..9 {
+            let x = rng.range_f64(0.0, 30_000.0);
+            let y = rng.range_f64(0.0, 10_000.0);
+            lam_lo[i] = x;
+            lam_hi[i] = x + y;
+        }
+        assert!(
+            required_decoders_frac(&lam_lo, &profile)
+                <= required_decoders_frac(&lam_hi, &profile) + 1e-9
+        );
+    });
+}
+
+/// Hysteresis safety: output target is always between min(current, target)
+/// and max(current, target) — it never overshoots in either direction.
+#[test]
+fn prop_hysteresis_bounded() {
+    check(Config::named("hysteresis-bounded").cases(200), |rng| {
+        let mut h = Hysteresis::new(rng.range_usize(1, 30));
+        let mut current = rng.range_usize(0, 20);
+        for _ in 0..100 {
+            let target = rng.range_usize(0, 20);
+            let out = h.apply(current, target);
+            let lo = current.min(target);
+            let hi = current.max(target);
+            assert!(
+                (lo..=hi).contains(&out),
+                "hysteresis escaped [{lo},{hi}]: {out}"
+            );
+            current = out;
+        }
+    });
+}
+
+/// Bucket classification is total and consistent with its representatives.
+#[test]
+fn prop_bucket_classification_total() {
+    let scheme = BucketScheme::default();
+    check(Config::named("bucket-total").cases(500), |rng| {
+        let input = rng.range_usize(1, 10_000);
+        let output = rng.range_usize(1, 2_000);
+        let b = scheme.classify(input, output);
+        assert!(b.index() < 9);
+        // Representatives classify back into their own bucket.
+        for bb in all_buckets() {
+            let (i, o) = scheme.representative(bb);
+            assert_eq!(scheme.classify(i, o), bb);
+        }
+    });
+}
+
+/// SLO checks: ttft_slo is monotone non-increasing in strictness (longer
+/// prompts never get tighter deadlines).
+#[test]
+fn prop_slo_monotone() {
+    let slo = SloPolicy::default();
+    check(Config::named("slo-monotone").cases(300), |rng| {
+        let a = rng.range_usize(1, 8192);
+        let b = rng.range_usize(1, 8192);
+        let (short, long) = if a <= b { (a, b) } else { (b, a) };
+        assert!(slo.ttft_slo(short) <= slo.ttft_slo(long));
+    });
+}
+
+/// Trace generators: arrivals sorted, lengths within bounds, rate within a
+/// factor of the request across all families and seeds.
+#[test]
+fn prop_trace_generator_sane() {
+    check(Config::named("trace-sane").cases(16), |rng: &mut Pcg64| {
+        let fams = [
+            TraceFamily::AzureConv,
+            TraceFamily::AzureCode,
+            TraceFamily::BurstGpt1,
+            TraceFamily::BurstGpt2,
+            TraceFamily::Mixed,
+        ];
+        let fam = fams[rng.range_usize(0, fams.len() - 1)];
+        let rps = rng.range_f64(2.0, 40.0);
+        let trace = tokenscale::trace::generate_family(fam, rps, 120.0, rng.next_u64());
+        assert!(!trace.requests.is_empty(), "{fam:?} empty at {rps}");
+        for w in trace.requests.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        for r in &trace.requests {
+            assert!(r.input_tokens >= 1 && r.input_tokens <= 8192);
+            assert!(r.output_tokens >= 1 && r.output_tokens <= 1024);
+            assert!(r.arrival >= 0.0 && r.arrival < 120.0);
+        }
+        let measured = trace.avg_rps();
+        assert!(
+            measured > rps * 0.4 && measured < rps * 2.0,
+            "{fam:?}: rps {measured:.1} vs requested {rps:.1}"
+        );
+    });
+}

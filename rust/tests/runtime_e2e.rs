@@ -1,0 +1,102 @@
+//! End-to-end integration over the REAL engine (gated on `make artifacts`):
+//! the three-layer stack must serve a mixed batch with correct bookkeeping
+//! and deterministic greedy outputs, and the convertible-decoder compute
+//! path must agree with the one-shot prefill path.
+
+use tokenscale::runtime::{artifacts_available, artifacts_dir, RealEngine};
+use tokenscale::server::{PdServer, ServeRequest};
+
+fn gated() -> bool {
+    if !artifacts_available() {
+        eprintln!("artifacts/ missing — run `make artifacts` (test skipped)");
+        return false;
+    }
+    true
+}
+
+#[test]
+fn pd_server_serves_mixed_batch() {
+    if !gated() {
+        return;
+    }
+    let requests: Vec<ServeRequest> = (0..10u64)
+        .map(|i| ServeRequest {
+            id: i,
+            prompt: (0..(3 + (i as i32 * 7) % 50))
+                .map(|t| (t * 29 + i as i32) % 500)
+                .collect(),
+            max_new_tokens: 4 + (i as usize % 5),
+        })
+        .collect();
+    let expect: Vec<(u64, usize)> = requests.iter().map(|r| (r.id, r.max_new_tokens)).collect();
+    let report = PdServer::serve_all(requests).unwrap();
+    assert_eq!(report.completions.len(), 10);
+    for (id, want) in expect {
+        let c = report.completions.iter().find(|c| c.id == id).unwrap();
+        assert_eq!(c.tokens.len(), want, "req {id} token count");
+        assert!(c.tokens.iter().all(|t| (0..512).contains(t)));
+        assert!(c.ttft > 0.0);
+    }
+}
+
+#[test]
+fn pd_server_is_deterministic_across_runs() {
+    if !gated() {
+        return;
+    }
+    let mk = || -> Vec<ServeRequest> {
+        (0..4u64)
+            .map(|i| ServeRequest {
+                id: i,
+                prompt: (0..10).map(|t| (t * 31 + i as i32 * 3) % 500).collect(),
+                max_new_tokens: 6,
+            })
+            .collect()
+    };
+    let a = PdServer::serve_all(mk()).unwrap();
+    let b = PdServer::serve_all(mk()).unwrap();
+    for id in 0..4u64 {
+        let ta = &a.completions.iter().find(|c| c.id == id).unwrap().tokens;
+        let tb = &b.completions.iter().find(|c| c.id == id).unwrap().tokens;
+        assert_eq!(ta, tb, "greedy decoding must be run-invariant (req {id})");
+    }
+}
+
+#[test]
+fn convertible_chunked_path_matches_prefill_across_prompts() {
+    if !gated() {
+        return;
+    }
+    let mut engine = RealEngine::load(&artifacts_dir()).unwrap();
+    let chunk = engine.meta.chunk;
+    for seed in 0..3i32 {
+        let len = chunk + 1 + (seed as usize * 9) % (2 * chunk);
+        let prompt: Vec<i32> = (0..len as i32).map(|t| (t * 11 + seed * 101) % 500).collect();
+        let whole = engine.prefill(&prompt).unwrap();
+
+        let (mut ck, mut cv) = engine.empty_conv_cache();
+        let mut off = 0;
+        let mut last_logits = Vec::new();
+        while off < prompt.len() {
+            let end = (off + chunk).min(prompt.len());
+            last_logits = engine
+                .chunked_prefill(&prompt[off..end], &mut ck, &mut cv, off)
+                .unwrap();
+            off = end;
+        }
+        let argmax = |xs: &[f32]| -> i32 {
+            let mut b = 0;
+            for (i, x) in xs.iter().enumerate() {
+                if *x > xs[b] {
+                    b = i;
+                }
+            }
+            b as i32
+        };
+        assert_eq!(
+            argmax(&last_logits),
+            whole.first_token,
+            "chunked vs whole prefill disagree (seed {seed}, len {len})"
+        );
+    }
+}
