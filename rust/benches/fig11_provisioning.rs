@@ -10,8 +10,9 @@
 //! Paper's numbers: TokenScale r=0.63 (prefill) / 0.44 (decode), highest
 //! of all systems; DistServe second; AIBrix/BlitzScale fluctuate.
 
-use tokenscale::report::runner::RunOverrides;
-use tokenscale::report::{deployment, run_experiment, PolicyKind};
+use std::sync::Arc;
+use tokenscale::report::runner::{run_experiments, ExperimentSpec};
+use tokenscale::report::{deployment, PolicyKind};
 use tokenscale::sim::{simulate, ClusterConfig, SimConfig, StaticCoordinator};
 use tokenscale::trace::{generate_family, TraceFamily};
 use tokenscale::util::stats::pearson;
@@ -19,7 +20,7 @@ use tokenscale::util::table::{fnum, Table};
 
 fn main() {
     let dep = deployment("small-a100").unwrap();
-    let trace = generate_family(TraceFamily::AzureConv, 22.0, 300.0, 17);
+    let trace = Arc::new(generate_family(TraceFamily::AzureConv, 22.0, 300.0, 17));
     let horizon = trace.duration_s;
     let step = 1.0;
 
@@ -63,8 +64,15 @@ fn main() {
         "t_s", "required_p", "required_d", "policy", "prov_p", "prov_d",
     ]);
 
-    for policy in PolicyKind::all_baselines() {
-        let res = run_experiment(&dep, policy, &trace, &RunOverrides::default());
+    // Fan the four policy runs across cores.
+    let specs: Vec<ExperimentSpec> = PolicyKind::all_baselines()
+        .iter()
+        .map(|p| ExperimentSpec::new(&dep, *p, &trace))
+        .collect();
+    let results = run_experiments(&specs);
+
+    for res in &results {
+        let policy = res.policy;
         let prov_p = res.sim.prefiller_series.resample(horizon, step, 1.0);
         let prov_d = res.sim.decoder_series.resample(horizon, step, 1.0);
         let r_p = pearson(&prov_p, &req_p);

@@ -5,9 +5,13 @@
 //!
 //! Paper's shape: TokenScale top-left (80–96 % attainment, 4–14 % fewer
 //! GPUs); AIBrix/BlitzScale overprovision; DistServe cheap but violating.
+//!
+//! The 24-cell (setup × trace × policy) grid fans out across all cores via
+//! `run_experiments`; results are deterministic and ordered.
 
-use tokenscale::report::runner::RunOverrides;
-use tokenscale::report::{deployment, run_experiment, PolicyKind};
+use std::sync::Arc;
+use tokenscale::report::runner::{run_experiments, ExperimentSpec};
+use tokenscale::report::{deployment, PolicyKind};
 use tokenscale::trace::{generate_family, TraceFamily};
 use tokenscale::util::table::{fnum, pct, Table};
 
@@ -20,32 +24,42 @@ fn main() {
     let mut t = Table::new("Fig. 9 — SLO attainment vs avg GPUs (top-left is better)")
         .header(&["setup", "trace", "policy", "SLO att.", "TTFT att.", "TPOT att.", "avg GPUs", "n"]);
 
+    // Build the full grid first (traces shared via Arc), then fan out.
+    let mut specs: Vec<ExperimentSpec> = Vec::new();
     for setup in ["small-a100", "large-a100"] {
         let dep = deployment(setup).unwrap();
         for family in traces {
-            let trace = generate_family(family, 22.0, duration, 42);
+            let trace = Arc::new(generate_family(family, 22.0, duration, 42));
             for policy in PolicyKind::all_baselines() {
-                let res = run_experiment(&dep, policy, &trace, &RunOverrides::default());
-                let r = &res.report;
-                t.row(vec![
-                    setup.into(),
-                    family.name().into(),
-                    policy.name().into(),
-                    pct(r.overall_attainment),
-                    pct(r.ttft_attainment),
-                    pct(r.tpot_attainment),
-                    fnum(r.avg_gpus, 2),
-                    r.n.to_string(),
-                ]);
-                eprintln!(
-                    "[fig9] {setup:11} {:10} {:10} att={:.3} gpus={:.2}",
-                    family.name(),
-                    policy.name(),
-                    r.overall_attainment,
-                    r.avg_gpus
+                specs.push(
+                    ExperimentSpec::new(&dep, policy, &trace)
+                        .with_label(format!("{setup}/{}", family.name())),
                 );
             }
         }
+    }
+    let results = run_experiments(&specs);
+
+    for res in &results {
+        let (setup, family) = res.label.split_once('/').unwrap_or((res.label.as_str(), ""));
+        let r = &res.report;
+        t.row(vec![
+            setup.into(),
+            family.into(),
+            res.policy.name().into(),
+            pct(r.overall_attainment),
+            pct(r.ttft_attainment),
+            pct(r.tpot_attainment),
+            fnum(r.avg_gpus, 2),
+            r.n.to_string(),
+        ]);
+        eprintln!(
+            "[fig9] {setup:11} {:10} {:10} att={:.3} gpus={:.2}",
+            family,
+            res.policy.name(),
+            r.overall_attainment,
+            r.avg_gpus
+        );
     }
     print!("{}", t.render());
     t.save_csv("fig9_end_to_end").unwrap();

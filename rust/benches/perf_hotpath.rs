@@ -1,7 +1,11 @@
 //! §Perf — hot-path microbenchmarks for the performance pass:
-//! simulator event throughput, router decision latency, scaler evaluation
-//! latency, trace generation rate, and (if artifacts exist) real-engine
-//! prefill/decode step latency.
+//! simulator event throughput (coalesced vs single-step reference),
+//! router decision latency, scaler evaluation latency, trace generation
+//! rate, and (if artifacts exist) real-engine prefill/decode step latency.
+//!
+//! Emits `BENCH_hotpath.json` (events/s, simulated-requests/s per wall
+//! second, speedup vs the single-step reference mode) so the perf
+//! trajectory is tracked across PRs.
 
 use std::sync::Arc;
 use tokenscale::coordinator::{router, RouterConfig, TokenScale, TokenScaleConfig};
@@ -11,23 +15,77 @@ use tokenscale::report::runner::RunOverrides;
 use tokenscale::report::{deployment, run_experiment, PolicyKind};
 use tokenscale::sim::{Cluster, ClusterConfig, Coordinator, Role};
 use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::util::json::Json;
 use tokenscale::workload::{Request, SloPolicy};
 
 fn main() {
     let timer = BenchTimer::new(2, 8);
+    let mut out = Json::obj();
 
-    // 1. End-to-end simulation throughput (the Fig. 9 inner loop).
+    // 1. End-to-end simulation throughput (the Fig. 9 inner loop), in the
+    //    default coalesced mode and in the single-step reference mode the
+    //    pre-refactor engine was equivalent to.
     let dep = deployment("small-a100").unwrap();
     let trace = generate_family(TraceFamily::Mixed, 22.0, 120.0, 5);
     let n_req = trace.requests.len();
-    let stats = timer.run(|| {
+
+    let fast_probe = run_experiment(&dep, PolicyKind::TokenScale, &trace, &RunOverrides::default());
+    let fast_events = fast_probe.sim.events_processed;
+    let slow_ov = RunOverrides {
+        force_single_step: true,
+        ..Default::default()
+    };
+    let slow_probe = run_experiment(&dep, PolicyKind::TokenScale, &trace, &slow_ov);
+    let slow_events = slow_probe.sim.events_processed;
+
+    let fast = timer.run(|| {
         let r = run_experiment(&dep, PolicyKind::TokenScale, &trace, &RunOverrides::default());
         std::hint::black_box(r.report.n);
     });
-    println!("{}", stats.line("sim_e2e_tokenscale_120s_22rps"));
+    println!("{}", fast.line("sim_e2e_tokenscale_120s_22rps"));
     println!(
-        "  -> {:.0} simulated requests/s of wall time",
-        n_req as f64 / stats.p50_s
+        "  -> {:.0} simulated requests/s of wall time, {:.2}M events/s ({} events)",
+        n_req as f64 / fast.p50_s,
+        fast_events as f64 / fast.p50_s / 1e6,
+        fast_events
+    );
+
+    let slow = BenchTimer::new(1, 3).run(|| {
+        let r = run_experiment(&dep, PolicyKind::TokenScale, &trace, &slow_ov);
+        std::hint::black_box(r.report.n);
+    });
+    println!("{}", slow.line("sim_e2e_single_step_reference"));
+    let speedup = slow.p50_s / fast.p50_s;
+    println!(
+        "  -> {:.0} simulated requests/s of wall time, {} events; coalesced speedup {speedup:.2}x",
+        n_req as f64 / slow.p50_s,
+        slow_events
+    );
+
+    out = out.set(
+        "sim_e2e",
+        Json::obj()
+            .set("p50_s", fast.p50_s)
+            .set("mean_s", fast.mean_s)
+            .set("requests", n_req)
+            .set("sim_requests_per_s", n_req as f64 / fast.p50_s)
+            .set("events", fast_events)
+            .set("events_per_s", fast_events as f64 / fast.p50_s),
+    );
+    out = out.set(
+        "sim_e2e_single_step",
+        Json::obj()
+            .set("p50_s", slow.p50_s)
+            .set("mean_s", slow.mean_s)
+            .set("requests", n_req)
+            .set("sim_requests_per_s", n_req as f64 / slow.p50_s)
+            .set("events", slow_events)
+            .set("events_per_s", slow_events as f64 / slow.p50_s),
+    );
+    out = out.set("speedup_vs_single_step", speedup);
+    out = out.set(
+        "event_reduction",
+        slow_events as f64 / (fast_events as f64).max(1.0),
     );
 
     // 2. Router decision latency (Alg. 1) on a 16-instance cluster.
@@ -68,6 +126,7 @@ fn main() {
     });
     println!("{}", stats.line("router_route_prefill_x10k (16 instances)"));
     println!("  -> {} per decision", human_time(stats.p50_s / inner as f64));
+    out = out.set("router_route_prefill_ns", stats.p50_s / inner as f64 * 1e9);
 
     // 3. Scaler evaluation latency.
     let link = catalog::link("a100-cluster").unwrap();
@@ -82,6 +141,7 @@ fn main() {
     });
     println!("{}", stats.line("tokenscale_scale_eval_x10k"));
     println!("  -> {} per evaluation", human_time(stats.p50_s / inner as f64));
+    out = out.set("tokenscale_scale_eval_ns", stats.p50_s / inner as f64 * 1e9);
 
     // 4. Trace generation rate.
     let stats = timer.run(|| {
@@ -89,8 +149,9 @@ fn main() {
         std::hint::black_box(t.requests.len());
     });
     println!("{}", stats.line("trace_gen_mixed_300s_22rps"));
+    out = out.set("trace_gen_mixed_300s_p50_s", stats.p50_s);
 
-    // 5. Real engine steps (needs artifacts).
+    // 5. Real engine steps (needs artifacts + the xla feature).
     if tokenscale::runtime::artifacts_available() {
         let dir = tokenscale::runtime::artifacts_dir();
         let mut engine = tokenscale::runtime::RealEngine::load(&dir).unwrap();
@@ -99,6 +160,7 @@ fn main() {
             std::hint::black_box(engine.prefill(&prompt).unwrap());
         });
         println!("{}", stats.line("real_engine_prefill_48tok"));
+        out = out.set("real_engine_prefill_48tok_p50_s", stats.p50_s);
 
         let pre = engine.prefill(&prompt).unwrap();
         let lane = engine.start_sequence(&pre).unwrap();
@@ -107,7 +169,12 @@ fn main() {
         });
         engine.finish(lane);
         println!("{}", stats.line("real_engine_decode_iter_b1"));
+        out = out.set("real_engine_decode_iter_b1_p50_s", stats.p50_s);
     } else {
         println!("real engine benches skipped (run `make artifacts`)");
     }
+
+    let path = "BENCH_hotpath.json";
+    std::fs::write(path, out.to_string()).expect("write BENCH_hotpath.json");
+    println!("\nwrote {path}");
 }

@@ -15,6 +15,13 @@ pub struct MetricsRecorder {
     /// Requests rejected/dropped (should stay 0; tracked for failure
     /// injection tests).
     pub dropped: usize,
+    /// Per-request (arrival, prefill wait): arrival → prefill completion,
+    /// i.e. gateway queueing + prefill-stage queueing + execution. From
+    /// the engine's `RequestClock`s.
+    pub prefill_waits: Vec<(f64, f64)>,
+    /// Per-request (arrival, queue delay): arrival → first moment the
+    /// prompt began executing.
+    pub queue_waits: Vec<(f64, f64)>,
 }
 
 /// Aggregated SLO report.
@@ -31,6 +38,10 @@ pub struct SloReport {
     pub avg_gpus: f64,
     pub ttft: Summary,
     pub tpot: Summary,
+    /// Arrival → prefill-done latency distribution (queueing + prefill).
+    pub prefill_wait: Summary,
+    /// Arrival → prefill-execution-start distribution (pure queue delay).
+    pub queue_wait: Summary,
 }
 
 impl MetricsRecorder {
@@ -75,6 +86,14 @@ impl MetricsRecorder {
             .filter(|c| c.output_tokens > 1)
             .map(|c| c.tpot)
             .collect();
+        let wait_filter = |xs: &[(f64, f64)]| -> Vec<f64> {
+            xs.iter()
+                .filter(|(arrival, _)| *arrival >= warmup_s)
+                .map(|(_, w)| *w)
+                .collect()
+        };
+        let prefill_waits = wait_filter(&self.prefill_waits);
+        let queue_waits = wait_filter(&self.queue_waits);
         SloReport {
             n,
             ttft_attainment: ttft_ok as f64 / n as f64,
@@ -87,6 +106,8 @@ impl MetricsRecorder {
             },
             ttft: Summary::of(&ttfts),
             tpot: Summary::of(&tpots),
+            prefill_wait: Summary::of(&prefill_waits),
+            queue_wait: Summary::of(&queue_waits),
         }
     }
 }

@@ -6,4 +6,7 @@ pub mod bench;
 pub mod runner;
 
 pub use bench::BenchTimer;
-pub use runner::{deployment, run_experiment, Deployment, ExperimentResult, PolicyKind};
+pub use runner::{
+    deployment, run_experiment, run_experiments, Deployment, ExperimentResult, ExperimentSpec,
+    PolicyKind,
+};

@@ -130,6 +130,9 @@ pub struct RunOverrides {
     /// Initial fleet override.
     pub initial_prefillers: Option<usize>,
     pub initial_decoders: Option<usize>,
+    /// Run the simulator in single-step reference mode (no decode-
+    /// iteration coalescing). Perf baseline + equivalence testing only.
+    pub force_single_step: bool,
 }
 
 impl Default for RunOverrides {
@@ -140,6 +143,7 @@ impl Default for RunOverrides {
             warmup_s: 10.0,
             initial_prefillers: None,
             initial_decoders: None,
+            force_single_step: false,
         }
     }
 }
@@ -149,6 +153,9 @@ pub struct ExperimentResult {
     pub policy: PolicyKind,
     pub report: SloReport,
     pub sim: SimResult,
+    /// The spec's free-form label when run via `run_experiments`
+    /// (empty for direct `run_experiment` calls).
+    pub label: String,
 }
 
 /// Run one (deployment, policy, trace) experiment.
@@ -170,6 +177,7 @@ pub fn run_experiment(
         initial_convertibles: 0,
         link: dep.link.clone(),
         slo,
+        force_single_step: ov.force_single_step,
         ..Default::default()
     };
     let mut cluster_cfg = ClusterConfig {
@@ -234,7 +242,112 @@ pub fn run_experiment(
         policy,
         report,
         sim,
+        label: String::new(),
     }
+}
+
+/// Run one spec, carrying its label onto the result.
+fn run_spec(s: &ExperimentSpec) -> ExperimentResult {
+    let mut r = run_experiment(&s.deployment, s.policy, &s.trace, &s.overrides);
+    r.label = s.label.clone();
+    r
+}
+
+// ---------------------------------------------------- parallel experiments
+
+/// One cell of an experiment grid: everything `run_experiment` needs,
+/// owned/shared so cells can execute on any worker thread. Traces are
+/// `Arc`-shared — a (deployment × policy) sweep over one trace clones the
+/// handle, not the requests.
+#[derive(Clone)]
+pub struct ExperimentSpec {
+    pub deployment: Deployment,
+    pub policy: PolicyKind,
+    pub trace: Arc<Trace>,
+    pub overrides: RunOverrides,
+    /// Free-form tag (e.g. trace family name) carried to the result.
+    pub label: String,
+}
+
+impl ExperimentSpec {
+    pub fn new(dep: &Deployment, policy: PolicyKind, trace: &Arc<Trace>) -> ExperimentSpec {
+        ExperimentSpec {
+            deployment: dep.clone(),
+            policy,
+            trace: trace.clone(),
+            overrides: RunOverrides::default(),
+            label: String::new(),
+        }
+    }
+
+    pub fn with_label(mut self, label: impl Into<String>) -> ExperimentSpec {
+        self.label = label.into();
+        self
+    }
+
+    pub fn with_overrides(mut self, ov: RunOverrides) -> ExperimentSpec {
+        self.overrides = ov;
+        self
+    }
+}
+
+/// Worker count for [`run_experiments`]: `TOKENSCALE_JOBS` if set,
+/// otherwise the machine's available parallelism.
+pub fn experiment_workers() -> usize {
+    std::env::var("TOKENSCALE_JOBS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|n| *n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// Run an experiment grid across all cores and return results in spec
+/// order. Each (deployment × policy × trace × overrides) cell is an
+/// independent simulation, so the fan-out is embarrassingly parallel;
+/// work-stealing is a shared atomic cursor over the spec list (cells vary
+/// wildly in cost — long traces vs short, 64 GPUs vs 16 — so static
+/// chunking would straggle). Built on `std::thread::scope`: the offline
+/// crate set has no rayon, and scoped threads give the same borrow-based
+/// safety without a dependency.
+pub fn run_experiments(specs: &[ExperimentSpec]) -> Vec<ExperimentResult> {
+    let workers = experiment_workers().min(specs.len().max(1));
+    if workers <= 1 || specs.len() <= 1 {
+        return specs.iter().map(run_spec).collect();
+    }
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc;
+    let cursor = AtomicUsize::new(0);
+    let mut slots: Vec<Option<ExperimentResult>> = Vec::with_capacity(specs.len());
+    slots.resize_with(specs.len(), || None);
+    std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::channel::<(usize, ExperimentResult)>();
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let cursor = &cursor;
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= specs.len() {
+                    break;
+                }
+                let r = run_spec(&specs[i]);
+                if tx.send((i, r)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (i, r) in rx {
+            slots[i] = Some(r);
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("every grid cell produces a result"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -265,6 +378,29 @@ mod tests {
             let r = run_experiment(&dep, p, &trace, &RunOverrides::default());
             assert!(r.report.n > 100, "{}: n={}", p.name(), r.report.n);
             assert!(r.report.avg_gpus > 0.0);
+        }
+    }
+
+    #[test]
+    fn parallel_grid_matches_sequential_in_order() {
+        let dep = deployment("small-a100").unwrap();
+        let trace = Arc::new(generate_family(TraceFamily::AzureConv, 8.0, 45.0, 5));
+        let specs: Vec<ExperimentSpec> = PolicyKind::all_baselines()
+            .iter()
+            .map(|p| ExperimentSpec::new(&dep, *p, &trace).with_label(p.name()))
+            .collect();
+        let par = run_experiments(&specs);
+        assert_eq!(par.len(), specs.len());
+        for (spec, res) in specs.iter().zip(&par) {
+            // Results come back in spec order, labels attached...
+            assert_eq!(spec.policy, res.policy);
+            assert_eq!(spec.label, res.label);
+            // ...and are identical to a sequential run (simulations are
+            // deterministic, so parallelism must not change anything).
+            let seq = run_experiment(&spec.deployment, spec.policy, &spec.trace, &spec.overrides);
+            assert_eq!(seq.report.n, res.report.n, "{}", spec.label);
+            assert_eq!(seq.report.overall_attainment, res.report.overall_attainment);
+            assert_eq!(seq.report.avg_gpus, res.report.avg_gpus);
         }
     }
 }

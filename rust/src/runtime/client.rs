@@ -109,7 +109,7 @@ pub fn literal_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::meta::{artifacts_available, artifacts_dir, ModelMeta};
+    use crate::runtime::meta::{artifacts_dir, artifacts_present, ModelMeta};
 
     #[test]
     fn literal_roundtrip() {
@@ -121,7 +121,7 @@ mod tests {
 
     #[test]
     fn compiles_and_runs_prefill_artifact() {
-        if !artifacts_available() {
+        if !artifacts_present() {
             eprintln!("artifacts/ missing; skipped");
             return;
         }

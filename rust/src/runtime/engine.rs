@@ -304,10 +304,10 @@ fn argmax(xs: &[f32]) -> i32 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::meta::{artifacts_available, artifacts_dir};
+    use crate::runtime::meta::{artifacts_dir, artifacts_present};
 
     fn engine() -> Option<RealEngine> {
-        if !artifacts_available() {
+        if !artifacts_present() {
             eprintln!("artifacts/ missing; run `make artifacts` (skipped)");
             return None;
         }

@@ -143,8 +143,10 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-/// True when AOT artifacts are present (tests skip gracefully otherwise).
-pub fn artifacts_available() -> bool {
+/// True when the AOT artifact manifest exists on disk (regardless of
+/// whether the PJRT runtime is compiled in — see
+/// `runtime::artifacts_available` for the combined check).
+pub fn artifacts_present() -> bool {
     artifacts_dir().join("model_meta.json").exists()
 }
 
@@ -154,7 +156,7 @@ mod tests {
 
     #[test]
     fn parses_real_manifest_when_present() {
-        if !artifacts_available() {
+        if !artifacts_present() {
             eprintln!("artifacts/ missing; run `make artifacts` (skipped)");
             return;
         }

@@ -1,11 +1,38 @@
 //! PJRT runtime: load the AOT HLO artifacts produced by `python/compile/`,
 //! compile them once on the CPU PJRT client, and serve a real model from
 //! Rust — Python is never on the request path.
+//!
+//! The PJRT client and engine need the `xla` bindings crate, which is not
+//! part of the offline crate set; they are gated behind the `xla`
+//! feature. Without it, a stub with the same surface is compiled and
+//! [`artifacts_available`] reports false, so everything downstream (PD
+//! server, real-engine benches, e2e tests, quickstart) skips gracefully.
 
-pub mod client;
-pub mod engine;
 pub mod meta;
 
+#[cfg(feature = "xla")]
+pub mod client;
+#[cfg(feature = "xla")]
+pub mod engine;
+#[cfg(feature = "xla")]
 pub use client::{literal_f32, literal_i32, CompiledArtifact, Runtime};
+#[cfg(feature = "xla")]
 pub use engine::{PrefillResult, RealEngine};
-pub use meta::{artifacts_available, artifacts_dir, ArtifactSpec, ModelMeta, TensorSpec};
+
+#[cfg(not(feature = "xla"))]
+mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::{PrefillResult, RealEngine};
+
+pub use meta::{artifacts_dir, ArtifactSpec, ModelMeta, TensorSpec};
+
+/// Whether the PJRT runtime is compiled into this binary.
+pub fn runtime_built() -> bool {
+    cfg!(feature = "xla")
+}
+
+/// True when the runtime is built AND AOT artifacts are present (tests,
+/// benches and examples skip gracefully otherwise).
+pub fn artifacts_available() -> bool {
+    runtime_built() && meta::artifacts_present()
+}

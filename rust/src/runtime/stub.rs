@@ -1,0 +1,74 @@
+//! Runtime stub compiled when the `xla` feature is off (the PJRT bindings
+//! are not in the offline crate set). Mirrors the public surface of
+//! `runtime::engine` so downstream code typechecks; every entry point
+//! returns a clear error, and `runtime::artifacts_available()` reports
+//! false so tests, benches and examples skip gracefully.
+
+use super::meta::ModelMeta;
+use std::path::Path;
+
+/// KV prefix produced by a prefill call (stub: never constructed).
+pub struct PrefillResult {
+    pub first_token: i32,
+    pub prompt_len: usize,
+}
+
+/// The real serving engine (stub).
+pub struct RealEngine {
+    pub meta: ModelMeta,
+}
+
+fn unavailable<T>() -> anyhow::Result<T> {
+    anyhow::bail!(
+        "PJRT runtime not built: this binary was compiled without the `xla` \
+         feature. Enabling it requires first adding the xla bindings crate \
+         to Cargo.toml (it is not in the offline crate set), then building \
+         with `--features xla`"
+    )
+}
+
+impl RealEngine {
+    pub fn load(_dir: &Path) -> anyhow::Result<RealEngine> {
+        unavailable()
+    }
+
+    pub fn max_prompt(&self) -> usize {
+        0
+    }
+
+    pub fn free_lanes(&self) -> usize {
+        0
+    }
+
+    pub fn active_lanes(&self) -> usize {
+        0
+    }
+
+    pub fn prefill(&mut self, _prompt: &[i32]) -> anyhow::Result<PrefillResult> {
+        unavailable()
+    }
+
+    pub fn start_sequence(&mut self, _pre: &PrefillResult) -> anyhow::Result<usize> {
+        unavailable()
+    }
+
+    pub fn decode_iteration(&mut self) -> anyhow::Result<Vec<(usize, i32, usize)>> {
+        unavailable()
+    }
+
+    pub fn finish(&mut self, _lane: usize) {}
+
+    pub fn chunked_prefill(
+        &self,
+        _chunk_tokens: &[i32],
+        _conv_k: &mut Vec<f32>,
+        _conv_v: &mut Vec<f32>,
+        _prefix_len: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        unavailable()
+    }
+
+    pub fn empty_conv_cache(&self) -> (Vec<f32>, Vec<f32>) {
+        (Vec::new(), Vec::new())
+    }
+}

@@ -16,7 +16,7 @@ use super::thresholds::Thresholds;
 use super::tokenscale::Hysteresis;
 use crate::sim::{Cluster, Coordinator, InstanceId, Role, Route, ScaleTargets};
 use crate::util::stats::SlidingWindow;
-use crate::workload::{BucketScheme, Request};
+use crate::workload::{BucketScheme, Completion, Request};
 
 /// Shared mechanics for the baselines: traffic windows + least-loaded
 /// routing.
@@ -165,7 +165,7 @@ impl Coordinator for AiBrix {
         self.state.on_arrival(now, req);
     }
 
-    fn observe_completion(&mut self, _now: f64, _req: &Request) {
+    fn observe_completion(&mut self, _now: f64, _c: &Completion) {
         self.state.on_completion();
     }
 
@@ -250,7 +250,7 @@ impl Coordinator for BlitzScale {
         self.state.on_arrival(now, req);
     }
 
-    fn observe_completion(&mut self, _now: f64, _req: &Request) {
+    fn observe_completion(&mut self, _now: f64, _c: &Completion) {
         self.state.on_completion();
     }
 
@@ -329,7 +329,7 @@ impl Coordinator for DistServe {
         self.state.on_arrival(now, req);
     }
 
-    fn observe_completion(&mut self, _now: f64, _req: &Request) {
+    fn observe_completion(&mut self, _now: f64, _c: &Completion) {
         self.state.on_completion();
     }
 
@@ -559,7 +559,7 @@ impl Coordinator for Ablation {
         self.gateway.ingest(now, req);
     }
 
-    fn observe_completion(&mut self, _now: f64, _req: &Request) {
+    fn observe_completion(&mut self, _now: f64, _c: &Completion) {
         self.state.on_completion();
     }
 

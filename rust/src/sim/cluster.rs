@@ -1,11 +1,17 @@
 //! Cluster state: the set of live instances, spawn/retire lifecycle, and
 //! GPU-cost accounting.
+//!
+//! Instances live in a slab (`Vec` of slots + free list) addressed by
+//! generation-tagged [`InstanceId`]s, with cached per-role live lists in
+//! spawn order — so routing scans, control ticks and cost accrual never
+//! rebuild collections or walk a tree. The allocated-GPU count is cached
+//! and the cost integral advances only when the count can change
+//! (spawn/retire/sweep) instead of on every simulator event.
 
 use super::event::InstanceId;
 use super::instance::{Instance, LifeState, Role};
 use crate::metrics::TimeSeries;
 use crate::perfmodel::EngineModel;
-use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// Deployment-level configuration of a simulated cluster.
@@ -26,11 +32,31 @@ pub struct ClusterConfig {
     pub convertible_reserve_tokens: f64,
 }
 
+/// One slab slot. `seq` records the spawn sequence number of the current
+/// (or last) occupant; a stale id's `seq` no longer matches, so freed ids
+/// stay dead forever.
+#[derive(Debug, Default)]
+struct Slot {
+    seq: u64,
+    inst: Option<Instance>,
+}
+
 /// The live cluster.
 pub struct Cluster {
     pub config: ClusterConfig,
-    pub instances: BTreeMap<InstanceId, Instance>,
-    next_id: InstanceId,
+    slots: Vec<Slot>,
+    /// Free slot indices (LIFO reuse).
+    free: Vec<u32>,
+    /// Monotonic spawn counter feeding `InstanceId::seq` (starts at 1 so
+    /// a default/zero slot never matches a real id).
+    next_seq: u64,
+    /// Live (allocated, possibly Starting/Draining) ids per role, spawn
+    /// order.
+    live: [Vec<InstanceId>; 3],
+    /// Non-draining count per role (the autoscalers' "desired count").
+    active: [usize; 3],
+    /// Cached GPUs across all live instances.
+    allocated: usize,
     /// GPU-seconds accumulated so far.
     pub gpu_seconds: f64,
     last_cost_t: f64,
@@ -43,8 +69,12 @@ impl Cluster {
     pub fn new(config: ClusterConfig) -> Cluster {
         Cluster {
             config,
-            instances: BTreeMap::new(),
-            next_id: 0,
+            slots: Vec::new(),
+            free: Vec::new(),
+            next_seq: 1,
+            live: [Vec::new(), Vec::new(), Vec::new()],
+            active: [0; 3],
+            allocated: 0,
             gpu_seconds: 0.0,
             last_cost_t: 0.0,
             prefiller_series: TimeSeries::new("prefillers"),
@@ -52,11 +82,13 @@ impl Cluster {
         }
     }
 
-    /// Advance the GPU-cost integral to `now`.
+    /// Advance the GPU-cost integral to `now`. O(1): uses the cached
+    /// allocated-GPU count, which only changes in spawn/sweep (which call
+    /// this first).
     pub fn accrue_cost(&mut self, now: f64) {
         let dt = (now - self.last_cost_t).max(0.0);
         if dt > 0.0 {
-            self.gpu_seconds += self.allocated_gpus() as f64 * dt;
+            self.gpu_seconds += self.allocated as f64 * dt;
             self.last_cost_t = now;
         }
     }
@@ -64,20 +96,26 @@ impl Cluster {
     /// GPUs currently allocated (all non-removed instances, including
     /// Starting and Draining — they occupy hardware).
     pub fn allocated_gpus(&self) -> usize {
-        self.instances.values().map(|i| i.gpus()).sum()
+        self.allocated
+    }
+
+    /// GPUs held by live instances of one role.
+    pub fn role_gpus(&self, role: Role) -> usize {
+        self.live[role.idx()]
+            .iter()
+            .filter_map(|id| self.get(*id))
+            .map(|i| i.gpus())
+            .sum()
     }
 
     pub fn count_role(&self, role: Role) -> usize {
-        self.instances.values().filter(|i| i.role == role).count()
+        self.live[role.idx()].len()
     }
 
     /// Instances of a role that are not draining (the "desired count" the
     /// autoscalers compare against).
     pub fn active_count(&self, role: Role) -> usize {
-        self.instances
-            .values()
-            .filter(|i| i.role == role && i.life != LifeState::Draining)
-            .count()
+        self.active[role.idx()]
     }
 
     /// Spawn a new instance; returns None if the GPU cap would be exceeded.
@@ -86,21 +124,33 @@ impl Cluster {
             Role::Prefiller => self.config.prefill_engine.clone(),
             _ => self.config.decode_engine.clone(),
         };
-        if self.allocated_gpus() + engine.tp > self.config.max_gpus {
+        if self.allocated + engine.tp > self.config.max_gpus {
             return None;
         }
         self.accrue_cost(now);
         let startup = live_startup_s
             .or(self.config.startup_override_s)
             .unwrap_or_else(|| engine.startup_time());
-        let id = self.next_id;
-        self.next_id += 1;
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.slots.push(Slot::default());
+                (self.slots.len() - 1) as u32
+            }
+        };
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.slots[slot as usize].seq = seq;
+        let id = InstanceId::new(slot, seq);
         let mut inst = Instance::new(id, role, engine, now, startup);
         if role == Role::ConvertibleDecoder {
             inst.chunk_size = self.config.convertible_chunk_size;
             inst.convertible_reserve_tokens = self.config.convertible_reserve_tokens;
         }
-        self.instances.insert(id, inst);
+        self.allocated += inst.gpus();
+        self.slots[slot as usize].inst = Some(inst);
+        self.live[role.idx()].push(id);
+        self.active[role.idx()] += 1;
         self.record_counts(now);
         Some(id)
     }
@@ -110,8 +160,15 @@ impl Cluster {
     /// the autoscaler (the paper keeps them static).
     pub fn retire(&mut self, id: InstanceId, now: f64) {
         self.accrue_cost(now);
-        if let Some(inst) = self.instances.get_mut(&id) {
-            inst.life = LifeState::Draining;
+        let mut newly_draining = None;
+        if let Some(inst) = self.get_mut(id) {
+            if inst.life != LifeState::Draining {
+                inst.life = LifeState::Draining;
+                newly_draining = Some(inst.role);
+            }
+        }
+        if let Some(role) = newly_draining {
+            self.active[role.idx()] -= 1;
         }
         self.record_counts(now);
     }
@@ -119,14 +176,23 @@ impl Cluster {
     /// Remove drained instances, freeing their GPUs. Returns removed ids.
     pub fn sweep_drained(&mut self, now: f64) -> Vec<InstanceId> {
         self.accrue_cost(now);
-        let dead: Vec<InstanceId> = self
-            .instances
-            .values()
-            .filter(|i| i.life == LifeState::Draining && i.drained())
-            .map(|i| i.id)
-            .collect();
+        let mut dead: Vec<InstanceId> = Vec::new();
+        for role_list in &self.live {
+            for id in role_list {
+                if let Some(inst) = self.slots[id.slot()].inst.as_ref() {
+                    if inst.life == LifeState::Draining && inst.drained() {
+                        dead.push(*id);
+                    }
+                }
+            }
+        }
         for id in &dead {
-            self.instances.remove(id);
+            let slot = &mut self.slots[id.slot()];
+            if let Some(inst) = slot.inst.take() {
+                self.allocated -= inst.gpus();
+                self.live[inst.role.idx()].retain(|x| x != id);
+            }
+            self.free.push(id.slot() as u32);
         }
         if !dead.is_empty() {
             self.record_counts(now);
@@ -144,25 +210,60 @@ impl Cluster {
     }
 
     pub fn get(&self, id: InstanceId) -> Option<&Instance> {
-        self.instances.get(&id)
+        let slot = self.slots.get(id.slot())?;
+        if slot.seq != id.seq() {
+            return None;
+        }
+        slot.inst.as_ref()
     }
 
     pub fn get_mut(&mut self, id: InstanceId) -> Option<&mut Instance> {
-        self.instances.get_mut(&id)
+        let slot = self.slots.get_mut(id.slot())?;
+        if slot.seq != id.seq() {
+            return None;
+        }
+        slot.inst.as_mut()
+    }
+
+    /// Iterate all live instances (any role/life state), spawn order
+    /// within each role, prefillers → decoders → convertibles.
+    pub fn iter(&self) -> impl Iterator<Item = &Instance> {
+        self.live
+            .iter()
+            .flat_map(|ids| ids.iter())
+            .filter_map(move |id| self.get(*id))
+    }
+
+    /// Visit live instances of one role mutably, spawn order. Used by the
+    /// engine's window catch-up; avoids materializing an id list.
+    pub fn for_each_role_mut(&mut self, role: Role, mut f: impl FnMut(&mut Instance)) {
+        for k in 0..self.live[role.idx()].len() {
+            let id = self.live[role.idx()][k];
+            let slot = &mut self.slots[id.slot()];
+            if slot.seq == id.seq() {
+                if let Some(inst) = slot.inst.as_mut() {
+                    f(inst);
+                }
+            }
+        }
+    }
+
+    /// Iterate live instances of one role (any life state), spawn order.
+    pub fn iter_role(&self, role: Role) -> impl Iterator<Item = &Instance> {
+        self.live[role.idx()]
+            .iter()
+            .filter_map(move |id| self.get(*id))
     }
 
     /// Iterate running instances of a role.
     pub fn running_of(&self, role: Role) -> impl Iterator<Item = &Instance> {
-        self.instances
-            .values()
-            .filter(move |i| i.role == role && i.is_running())
+        self.iter_role(role).filter(|i| i.is_running())
     }
 
     /// Ids of non-draining instances of a role, spawn order.
     pub fn ids_of(&self, role: Role) -> Vec<InstanceId> {
-        self.instances
-            .values()
-            .filter(|i| i.role == role && i.life != LifeState::Draining)
+        self.iter_role(role)
+            .filter(|i| i.life != LifeState::Draining)
             .map(|i| i.id)
             .collect()
     }
@@ -217,6 +318,36 @@ mod tests {
         let removed = c.sweep_drained(2.0);
         assert_eq!(removed, vec![id]);
         assert_eq!(c.count_role(Role::Decoder), 0);
+        assert_eq!(c.allocated_gpus(), 0);
+    }
+
+    #[test]
+    fn stale_id_resolves_to_none_after_slot_reuse() {
+        let mut c = Cluster::new(test_config(8));
+        let id = c.spawn(Role::Decoder, 0.0, None).unwrap();
+        c.retire(id, 1.0);
+        c.sweep_drained(2.0);
+        // Slot is reused; the old id's spawn seq no longer matches.
+        let id2 = c.spawn(Role::Decoder, 3.0, None).unwrap();
+        assert_eq!(id.slot(), id2.slot());
+        assert_ne!(id, id2);
+        assert!(c.get(id).is_none());
+        assert!(c.get(id2).is_some());
+    }
+
+    #[test]
+    fn id_ordering_follows_spawn_order_across_slot_reuse() {
+        let mut c = Cluster::new(test_config(8));
+        let a = c.spawn(Role::Decoder, 0.0, Some(0.0)).unwrap();
+        let b = c.spawn(Role::Decoder, 0.0, Some(0.0)).unwrap();
+        assert!(a < b);
+        c.retire(a, 1.0);
+        c.sweep_drained(1.0);
+        // Reuses a's slot, but the id must still sort AFTER b so min-by-id
+        // tie-breaks keep picking the oldest instance (pre-slab semantics).
+        let c2 = c.spawn(Role::Decoder, 2.0, Some(0.0)).unwrap();
+        assert_eq!(c2.slot(), a.slot());
+        assert!(c2 > b, "later spawn must order after earlier despite lower slot");
     }
 
     #[test]
@@ -241,5 +372,22 @@ mod tests {
         let mut c = Cluster::new(test_config(8));
         let id = c.spawn(Role::Prefiller, 0.0, Some(0.2)).unwrap();
         assert!((c.get(id).unwrap().ready_at - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_cost_matches_rescan_through_lifecycle() {
+        let mut c = Cluster::new(test_config(16));
+        let a = c.spawn(Role::Prefiller, 0.0, Some(0.0)).unwrap();
+        let _b = c.spawn(Role::Decoder, 0.0, Some(0.0)).unwrap();
+        // 2 GPUs for 5 s.
+        c.accrue_cost(5.0);
+        assert!((c.gpu_seconds - 10.0).abs() < 1e-9);
+        // Retire one; it still occupies hardware until swept.
+        c.retire(a, 5.0);
+        c.accrue_cost(7.0);
+        assert!((c.gpu_seconds - 14.0).abs() < 1e-9);
+        c.sweep_drained(7.0);
+        c.accrue_cost(10.0);
+        assert!((c.gpu_seconds - 17.0).abs() < 1e-9);
     }
 }

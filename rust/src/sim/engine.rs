@@ -5,10 +5,31 @@
 //! moves across the interconnect, decoders run continuous batching (with
 //! restricted chunked prefill on Convertible Decoders), instances start up
 //! with realistic delays, and every completion's TTFT/TPOT is recorded.
+//!
+//! ## Event throughput
+//!
+//! The hot loop is engineered so wall-clock cost scales with *decisions*,
+//! not with simulated output tokens:
+//!
+//! - **Decode iteration coalescing** — when a decoder's batch composition
+//!   cannot change (no pending joiners, no chunked prefill), one
+//!   `DecodeIterDone` event covers every iteration up to the first
+//!   completion. External touches (a KVC transfer landing, a convertible
+//!   prefill admission) truncate the window; sample/control ticks fast-
+//!   forward its token accounting. Event times, per-token timestamps and
+//!   batch state reproduce single-stepping bit for bit (see
+//!   `force_single_step` and the `sim_equivalence` integration test).
+//! - **O(1) cost accrual** — the cluster caches its allocated-GPU count
+//!   and advances the GPU-seconds integral only when that count can
+//!   change, instead of scanning all instances on every event pop.
+//! - **Allocation-free iteration path** — per-iteration chunk state lives
+//!   on the instance, the batch-drain scratch and completion buffers are
+//!   reused across events, and network utilization is maintained as a
+//!   running accumulator rather than a per-sample rescan.
 
 use super::cluster::{Cluster, ClusterConfig};
 use super::event::{Event, EventQueue, InstanceId};
-use super::instance::{ActiveSeq, LifeState, PrefillJob, Role};
+use super::instance::{ActiveSeq, LifeState, PrefillJob, RequestClock, Role};
 use super::policy::{Coordinator, Route, ScaleTargets};
 use crate::metrics::{MetricsRecorder, TimeSeries};
 use crate::perfmodel::LinkSpec;
@@ -33,6 +54,11 @@ pub struct SimConfig {
     pub drain_s: f64,
     /// SLOs used in reports.
     pub slo: SloPolicy,
+    /// Disable decode-iteration coalescing and schedule one event per
+    /// iteration (the pre-optimization reference mode). Used by the
+    /// equivalence tests and the perf baseline; results are identical
+    /// either way, single-step is just slower.
+    pub force_single_step: bool,
 }
 
 impl Default for SimConfig {
@@ -46,6 +72,7 @@ impl Default for SimConfig {
             initial_convertibles: 0,
             drain_s: 120.0,
             slo: SloPolicy::default(),
+            force_single_step: false,
         }
     }
 }
@@ -80,17 +107,14 @@ pub struct SimResult {
     /// Total scale-up/scale-down actions (instances spawned/retired).
     pub scale_ups: usize,
     pub scale_downs: usize,
+    /// Events popped from the queue (throughput accounting; one coalesced
+    /// decode event may stand in for thousands of iterations).
+    pub events_processed: u64,
 }
 
 /// In-flight KVC transfer bookkeeping.
 struct Transfer {
     bytes_per_s: f64,
-}
-
-/// Per-request journey clocks.
-#[derive(Clone, Copy, Default)]
-struct Clocks {
-    prefill_done: Option<f64>,
 }
 
 pub struct SimEngine<'a, C: Coordinator> {
@@ -105,18 +129,24 @@ pub struct SimEngine<'a, C: Coordinator> {
     /// Prefilled requests awaiting a decoder with capacity (backpressure).
     awaiting_decode: VecDeque<Request>,
     transfers: HashMap<RequestId, Transfer>,
+    /// Running sum of in-flight transfer rates (avoids rescanning
+    /// `transfers` every sample tick).
+    net_bytes_per_s: f64,
     /// Requests mid-KVC-transfer: (request, predicted bucket).
     in_transfer: HashMap<RequestId, (Request, usize)>,
-    clocks: HashMap<RequestId, Clocks>,
+    clocks: HashMap<RequestId, RequestClock>,
     metrics: MetricsRecorder,
     series: SimSeries,
     ttft_points: Vec<(f64, f64)>,
     /// Output tokens generated since the last sample tick.
     tokens_since_sample: f64,
+    last_sample_t: f64,
     scale_ups: usize,
     scale_downs: usize,
-    /// Per-instance chunk tokens processed by the in-flight iteration.
-    iter_chunk: HashMap<InstanceId, usize>,
+    events_processed: u64,
+    /// Reused buffers for the iteration path (no steady-state allocation).
+    completions_buf: Vec<Completion>,
+    batch_scratch: Vec<ActiveSeq>,
 }
 
 impl<'a, C: Coordinator> SimEngine<'a, C> {
@@ -136,15 +166,19 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
             pending: VecDeque::new(),
             awaiting_decode: VecDeque::new(),
             transfers: HashMap::new(),
+            net_bytes_per_s: 0.0,
             in_transfer: HashMap::new(),
             clocks: HashMap::new(),
             metrics: MetricsRecorder::new(),
             series: SimSeries::default(),
             ttft_points: Vec::new(),
             tokens_since_sample: 0.0,
+            last_sample_t: 0.0,
             scale_ups: 0,
             scale_downs: 0,
-            iter_chunk: HashMap::new(),
+            events_processed: 0,
+            completions_buf: Vec::new(),
+            batch_scratch: Vec::new(),
         }
     }
 
@@ -172,13 +206,13 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
                 break;
             }
             self.now = t;
-            self.cluster.accrue_cost(t);
+            self.events_processed += 1;
             self.handle(ev);
             // Stop early once all work has drained past the trace end.
             if self.now > self.trace.duration_s
-                && self.all_idle()
                 && self.pending.is_empty()
                 && self.awaiting_decode.is_empty()
+                && self.all_idle()
             {
                 break;
             }
@@ -198,27 +232,31 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
             horizon_s: end,
             scale_ups: self.scale_ups,
             scale_downs: self.scale_downs,
+            events_processed: self.events_processed,
         }
     }
 
     fn all_idle(&self) -> bool {
-        self.transfers.is_empty()
-            && self.cluster.instances.values().all(|i| i.drained())
+        self.transfers.is_empty() && self.cluster.iter().all(|i| i.drained())
     }
 
     fn handle(&mut self, ev: Event) {
         match ev {
             Event::Arrival(idx) => {
                 let req = self.trace.requests[idx].clone();
+                self.clocks
+                    .insert(req.id, RequestClock::at_arrival(req.id, req.arrival));
                 self.coordinator.observe_arrival(self.now, &req);
                 self.dispatch_prefill(req);
             }
             Event::ControlTick => {
+                self.catch_up_windows();
                 self.control_tick();
                 self.events
                     .push(self.now + self.cfg.control_interval_s, Event::ControlTick);
             }
             Event::SampleTick => {
+                self.catch_up_windows();
                 self.sample();
                 self.events
                     .push(self.now + self.cfg.sample_interval_s, Event::SampleTick);
@@ -272,6 +310,9 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
             req,
             enqueued_at: self.now,
         };
+        // A pure-decode window on this convertible must yield: the chunked
+        // loop re-evaluates at the next true iteration boundary.
+        self.interrupt_window(id);
         let Some(inst) = self.cluster.get_mut(id) else {
             self.pending.push_back(job.req);
             return;
@@ -303,6 +344,11 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
         let req_id = job.req.id;
         inst.active_prefill = Some(job);
         inst.prefill_done_at = self.now + dur;
+        if let Some(ck) = self.clocks.get_mut(&req_id) {
+            if ck.prefill_started.is_none() {
+                ck.prefill_started = Some(self.now);
+            }
+        }
         self.events.push(
             self.now + dur,
             Event::PrefillDone {
@@ -321,7 +367,9 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
         };
         debug_assert_eq!(job.req.id, req_id);
         inst.prefill_done_at = f64::INFINITY;
-        self.clocks.entry(req_id).or_default().prefill_done = Some(self.now);
+        if let Some(ck) = self.clocks.get_mut(&req_id) {
+            ck.prefill_done = Some(self.now);
+        }
         // Next job on this prefiller.
         self.maybe_start_prefill(instance);
         // Ship the KVC to a decoder.
@@ -333,13 +381,20 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
         // exceeds a whole decoder's capacity (no amount of scaling helps).
         let max_capacity = self.cluster.config.decode_engine.kv_capacity_tokens();
         if req.total_tokens() as f64 > max_capacity {
-            log::warn!(
-                "request {} needs {} KV tokens > decoder capacity {:.0}; rejecting",
-                req.id,
-                req.total_tokens(),
-                max_capacity
-            );
             self.metrics.dropped += 1;
+            // One line per run, not per rejection: parallel grid runs would
+            // otherwise interleave unbounded stderr. The full count is in
+            // metrics.dropped.
+            if self.metrics.dropped == 1 {
+                eprintln!(
+                    "[sim] request {} needs {} KV tokens > decoder capacity {:.0}; rejecting \
+                     (further oversized requests counted in metrics.dropped)",
+                    req.id,
+                    req.total_tokens(),
+                    max_capacity
+                );
+            }
+            self.clocks.remove(&req.id);
             return;
         }
         match self.coordinator.route_decode(self.now, &req, &self.cluster) {
@@ -354,13 +409,9 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
                 inst.reserved_tokens += req.total_tokens() as f64;
                 let bytes = inst.engine.kvc_bytes(req.input_tokens);
                 let dur = self.cfg.link.transfer_time(bytes);
-                self.transfers.insert(
-                    req.id,
-                    Transfer {
-                        bytes_per_s: bytes / dur.max(1e-9),
-                    },
-                );
-                let _ = bucket;
+                let bytes_per_s = bytes / dur.max(1e-9);
+                self.transfers.insert(req.id, Transfer { bytes_per_s });
+                self.net_bytes_per_s += bytes_per_s;
                 self.events.push(
                     self.now + dur,
                     Event::TransferDone {
@@ -378,10 +429,15 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
     }
 
     fn on_transfer_done(&mut self, instance: InstanceId, req_id: RequestId) {
-        self.transfers.remove(&req_id);
+        if let Some(tr) = self.transfers.remove(&req_id) {
+            self.net_bytes_per_s = (self.net_bytes_per_s - tr.bytes_per_s).max(0.0);
+        }
         let Some((req, bucket)) = self.in_transfer.remove(&req_id) else {
             return;
         };
+        // A joiner changes the batch composition: truncate any coalesced
+        // window so the merge happens at the next true iteration boundary.
+        self.interrupt_window(instance);
         let Some(inst) = self.cluster.get_mut(instance) else {
             return;
         };
@@ -397,8 +453,61 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
 
     // ---- decode iterations ----
 
+    /// Fast-forward every in-flight coalesced window to `now` so that any
+    /// state the control plane or sampler reads (token counters) is
+    /// current. Cheap: O(live decoders) checks plus amortized per-
+    /// iteration scalar work.
+    fn catch_up_windows(&mut self) {
+        let now = self.now;
+        let mut produced = 0.0;
+        for role in [Role::Decoder, Role::ConvertibleDecoder] {
+            self.cluster.for_each_role_mut(role, |inst| {
+                if inst.win_active {
+                    produced += inst.win_fast_forward(now);
+                }
+            });
+        }
+        self.tokens_since_sample += produced;
+    }
+
+    /// An external touch (joiner injection / prefill admission) that can
+    /// change the batch composition invalidates a coalesced window:
+    /// account the iterations that already elapsed, apply them to the
+    /// sequences, and fall back to one scheduled event for the iteration
+    /// currently mid-flight — exactly the state a single-stepping run
+    /// would be in at this moment.
+    fn interrupt_window(&mut self, id: InstanceId) {
+        let now = self.now;
+        let mut produced = 0.0;
+        let mut reschedule = None;
+        if let Some(inst) = self.cluster.get_mut(id) {
+            if inst.win_active {
+                produced = inst.win_fast_forward(now);
+                // The (win_done+1)-th iteration is mid-flight; reproduce
+                // its single-step schedule.
+                let n = inst.batch.len();
+                let avg = inst.win_avg_ctx(inst.win_done);
+                let dur = inst.engine.decode_iter_time(n, avg);
+                let end = inst.win_t + dur;
+                inst.win_apply_to_seqs();
+                inst.win_clear();
+                inst.iter_epoch += 1; // old window event becomes stale
+                reschedule = Some((end, inst.iter_epoch));
+            }
+        }
+        if let Some((end, epoch)) = reschedule {
+            self.events
+                .push(end, Event::DecodeIterDone { instance: id, epoch });
+        }
+        self.tokens_since_sample += produced;
+    }
+
     /// Start an engine iteration on a decoder if one is not in flight.
+    /// When the batch is closed (no joiners, no chunked prefill), a single
+    /// event covers every iteration up to the first completion.
     fn ensure_iterating(&mut self, id: InstanceId) {
+        let force_single = self.cfg.force_single_step;
+        let now = self.now;
         let Some(inst) = self.cluster.get_mut(id) else {
             return;
         };
@@ -422,6 +531,7 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
         // loop (at most one at a time, prioritizing decode: chunk budget is
         // what's left after the decode batch).
         let mut chunk_tokens = 0usize;
+        let mut chunk_first_start: Option<RequestId> = None;
         if inst.role == Role::ConvertibleDecoder {
             if inst.active_prefill.is_none() {
                 inst.active_prefill = inst.prefill_queue.pop_front();
@@ -429,6 +539,9 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
             if let Some(job) = &inst.active_prefill {
                 let budget = inst.chunk_size.saturating_sub(inst.batch.len());
                 chunk_tokens = budget.min(job.remaining);
+                if chunk_tokens > 0 && job.remaining == job.req.input_tokens {
+                    chunk_first_start = Some(job.req.id);
+                }
             }
         }
 
@@ -436,34 +549,74 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
             return; // idle
         }
 
-        let avg_ctx = if inst.batch.is_empty() {
+        let n = inst.batch.len();
+        // Integer context sum: exact in f64, so avg_ctx is bit-identical
+        // to summing the casts (the pre-refactor formulation).
+        let sum_ctx: u64 = inst.batch.iter().map(|s| s.ctx as u64).sum();
+        let avg_ctx = if n == 0 {
             0.0
         } else {
-            inst.batch.iter().map(|s| s.ctx as f64).sum::<f64>() / inst.batch.len() as f64
+            (sum_ctx as f64) / (n as f64)
         };
         let dur = if chunk_tokens > 0 {
-            inst.engine
-                .chunked_iter_time(chunk_tokens, inst.batch.len(), avg_ctx)
+            inst.engine.chunked_iter_time(chunk_tokens, n, avg_ctx)
         } else {
-            inst.engine.decode_iter_time(inst.batch.len(), avg_ctx)
+            inst.engine.decode_iter_time(n, avg_ctx)
         };
         inst.iterating = true;
         inst.iter_epoch += 1;
+        inst.iter_chunk = chunk_tokens;
         let epoch = inst.iter_epoch;
-        self.iter_chunk.insert(id, chunk_tokens);
-        self.events.push(
-            self.now + dur,
-            Event::DecodeIterDone {
-                instance: id,
-                epoch,
-            },
-        );
+
+        let mut end = now + dur;
+        let coalescible = !force_single
+            && chunk_tokens == 0
+            && n > 0
+            && inst.joining.is_empty()
+            && inst.active_prefill.is_none()
+            && inst.prefill_queue.is_empty();
+        if coalescible {
+            let min_remaining = inst
+                .batch
+                .iter()
+                .map(|s| s.req.output_tokens.saturating_sub(s.generated).max(1))
+                .min()
+                .unwrap_or(1);
+            if min_remaining > 1 {
+                let total = min_remaining as u32;
+                // Accumulate the window end exactly as single-stepping
+                // would: t_{i+1} = t_i + dur_i, with dur_i from the exact
+                // integer context sum after i iterations.
+                let mut t = end; // iteration 0 computed above
+                for i in 1..total {
+                    let avg = ((sum_ctx + i as u64 * n as u64) as f64) / (n as f64);
+                    t += inst.engine.decode_iter_time(n, avg);
+                }
+                inst.win_active = true;
+                inst.win_total = total;
+                inst.win_done = 0;
+                inst.win_t = now;
+                inst.win_t1 = 0.0;
+                inst.win_sum_ctx0 = sum_ctx;
+                end = t;
+            }
+        }
+        self.events
+            .push(end, Event::DecodeIterDone { instance: id, epoch });
+        if let Some(rid) = chunk_first_start {
+            if let Some(ck) = self.clocks.get_mut(&rid) {
+                if ck.prefill_started.is_none() {
+                    ck.prefill_started = Some(now);
+                }
+            }
+        }
     }
 
     fn on_iter_done(&mut self, id: InstanceId, epoch: u64) {
-        let chunk = self.iter_chunk.remove(&id).unwrap_or(0);
-        let mut completions: Vec<Completion> = Vec::new();
+        self.completions_buf.clear();
         let mut freed = false;
+        let mut produced = 0.0;
+        let now = self.now;
         {
             let Some(inst) = self.cluster.get_mut(id) else {
                 return;
@@ -472,6 +625,18 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
                 return; // stale event
             }
             inst.iterating = false;
+            let chunk = inst.iter_chunk;
+            inst.iter_chunk = 0;
+
+            // Close out a coalesced window: account and apply every
+            // iteration before the final one; the final iteration — the
+            // first that can complete a sequence — runs through the normal
+            // path below.
+            if inst.win_active {
+                produced += inst.win_fast_forward(f64::INFINITY);
+                inst.win_apply_to_seqs();
+                inst.win_clear();
+            }
 
             // Apply chunked-prefill progress.
             if chunk > 0 {
@@ -484,7 +649,9 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
                         let bucket = crate::workload::BucketScheme::default()
                             .classify(job.req.input_tokens, job.req.output_tokens)
                             .index();
-                        self.clocks.entry(job.req.id).or_default().prefill_done = Some(self.now);
+                        if let Some(ck) = self.clocks.get_mut(&job.req.id) {
+                            ck.prefill_done = Some(now);
+                        }
                         inst.joining.push(ActiveSeq {
                             ctx: job.req.input_tokens,
                             generated: 0,
@@ -497,10 +664,9 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
             }
 
             // Every batched sequence emits one token.
-            let now = self.now;
-            let n_generated = inst.batch.len() as f64;
-            self.tokens_since_sample += n_generated;
-            let mut still_active = Vec::with_capacity(inst.batch.len());
+            produced += inst.batch.len() as f64;
+            let mut scratch = std::mem::take(&mut self.batch_scratch);
+            scratch.clear();
             for mut seq in inst.batch.drain(..) {
                 seq.generated += 1;
                 seq.ctx += 1;
@@ -519,7 +685,7 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
                     } else {
                         0.0
                     };
-                    completions.push(Completion {
+                    self.completions_buf.push(Completion {
                         id: seq.req.id,
                         arrival: seq.req.arrival,
                         input_tokens: seq.req.input_tokens,
@@ -529,18 +695,27 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
                         finish: now,
                     });
                 } else {
-                    still_active.push(seq);
+                    scratch.push(seq);
                 }
             }
-            inst.batch = still_active;
+            std::mem::swap(&mut inst.batch, &mut scratch);
+            self.batch_scratch = scratch;
         }
+        self.tokens_since_sample += produced;
 
-        for c in &completions {
+        for idx in 0..self.completions_buf.len() {
+            let c = self.completions_buf[idx];
             self.ttft_points.push((c.arrival, c.ttft));
-            let req = Request::new(c.id, c.arrival, c.input_tokens, c.output_tokens);
-            self.coordinator.observe_completion(self.now, &req);
-            self.metrics.record(*c);
-            self.clocks.remove(&c.id);
+            self.coordinator.observe_completion(now, &c);
+            self.metrics.record(c);
+            if let Some(ck) = self.clocks.remove(&c.id) {
+                if let Some(done) = ck.prefill_done {
+                    self.metrics.prefill_waits.push((c.arrival, done - c.arrival));
+                }
+                if let Some(started) = ck.prefill_started {
+                    self.metrics.queue_waits.push((c.arrival, started - c.arrival));
+                }
+            }
         }
 
         // Freed memory: retry backpressured prefilled requests.
@@ -572,13 +747,7 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
         let t = {
             let tp_p = self.cluster.config.prefill_engine.tp;
             let tp_d = self.cluster.config.decode_engine.tp;
-            let conv_gpus: usize = self
-                .cluster
-                .instances
-                .values()
-                .filter(|i| i.role == Role::ConvertibleDecoder)
-                .map(|i| i.gpus())
-                .sum();
+            let conv_gpus = self.cluster.role_gpus(Role::ConvertibleDecoder);
             let budget = self.cluster.config.max_gpus.saturating_sub(conv_gpus);
             let want = t.prefillers * tp_p + t.decoders * tp_d;
             if want > budget && want > 0 {
@@ -605,9 +774,8 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
             // Retire idle-most prefillers first.
             let mut candidates: Vec<(usize, InstanceId)> = self
                 .cluster
-                .instances
-                .values()
-                .filter(|i| i.role == Role::Prefiller && i.life != LifeState::Draining)
+                .iter_role(Role::Prefiller)
+                .filter(|i| i.life != LifeState::Draining)
                 .map(|i| (i.inflight_prefill_tokens(), i.id))
                 .collect();
             candidates.sort();
@@ -629,9 +797,8 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
         } else if t.decoders < cur_d {
             let mut candidates: Vec<(usize, InstanceId)> = self
                 .cluster
-                .instances
-                .values()
-                .filter(|i| i.role == Role::Decoder && i.life != LifeState::Draining)
+                .iter_role(Role::Decoder)
+                .filter(|i| i.life != LifeState::Draining)
                 .map(|i| (i.decode_load(), i.id))
                 .collect();
             candidates.sort();
@@ -682,41 +849,52 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
 
     fn sample(&mut self) {
         let t = self.now;
-        let running_p: Vec<&super::instance::Instance> =
-            self.cluster.running_of(Role::Prefiller).collect();
-        let busy = running_p
-            .iter()
-            .filter(|i| i.active_prefill.is_some())
-            .count();
-        let p_util = if running_p.is_empty() {
+        let mut n_p = 0usize;
+        let mut busy = 0usize;
+        for i in self.cluster.running_of(Role::Prefiller) {
+            n_p += 1;
+            busy += i.active_prefill.is_some() as usize;
+        }
+        let p_util = if n_p == 0 {
             0.0
         } else {
-            busy as f64 / running_p.len() as f64
+            busy as f64 / n_p as f64
         };
-        let decoders: Vec<&super::instance::Instance> = self
+        let mut n_d = 0usize;
+        let mut mem_sum = 0.0;
+        let mut d_iter = 0usize;
+        for i in self
             .cluster
             .running_of(Role::Decoder)
             .chain(self.cluster.running_of(Role::ConvertibleDecoder))
-            .collect();
-        let mem = if decoders.is_empty() {
+        {
+            n_d += 1;
+            mem_sum += i.mem_utilization();
+            d_iter += i.iterating as usize;
+        }
+        let mem = if n_d == 0 { 0.0 } else { mem_sum / n_d as f64 };
+        let d_busy = if n_d == 0 {
             0.0
         } else {
-            decoders.iter().map(|i| i.mem_utilization()).sum::<f64>() / decoders.len() as f64
+            d_iter as f64 / n_d as f64
         };
-        let d_busy = if decoders.is_empty() {
-            0.0
-        } else {
-            decoders.iter().filter(|i| i.iterating).count() as f64 / decoders.len() as f64
-        };
-        let net_rate: f64 = self.transfers.values().map(|tr| tr.bytes_per_s).sum();
-        let net_util = (net_rate / self.cfg.link.eff_rdma_bytes()).min(1.0);
+        let net_util = (self.net_bytes_per_s / self.cfg.link.eff_rdma_bytes()).min(1.0);
 
         self.series.prefill_compute.push(t, p_util);
         self.series.decode_memory.push(t, mem);
         self.series.decode_compute.push(t, d_busy);
         self.series.network.push(t, net_util);
-        let thr = self.tokens_since_sample / self.cfg.sample_interval_s;
+        // Throughput over the *actual* elapsed interval since the last
+        // sample (the configured interval misreports the t=0 tick and any
+        // late/coalesced tick).
+        let elapsed = t - self.last_sample_t;
+        let thr = if elapsed > 0.0 {
+            self.tokens_since_sample / elapsed
+        } else {
+            0.0
+        };
         self.tokens_since_sample = 0.0;
+        self.last_sample_t = t;
         self.series.decode_throughput.push(t, thr);
         self.series
             .queue_len
@@ -777,6 +955,7 @@ mod tests {
             assert!(c.finish >= c.arrival);
             assert!(c.tpot >= 0.0);
         }
+        assert!(res.events_processed > 0);
     }
 
     #[test]
@@ -955,5 +1134,63 @@ mod tests {
         assert!(res.series.decode_memory.len() > 20);
         assert!(res.series.decode_throughput.points.iter().any(|(_, v)| *v > 0.0));
         assert!(res.series.prefill_compute.points.iter().any(|(_, v)| *v > 0.0));
+    }
+
+    #[test]
+    fn coalescing_reduces_event_count_with_identical_completions() {
+        let trace = step_trace(4.0, 4.0, 0.0, 0.0, 20.0, 256, 96, 9);
+        let run = |force: bool| {
+            let mut coord = StaticCoordinator::new(2, 2);
+            let cfg = SimConfig {
+                initial_prefillers: 2,
+                initial_decoders: 2,
+                force_single_step: force,
+                ..Default::default()
+            };
+            simulate(cfg, cluster_cfg(16), &mut coord, &trace)
+        };
+        let fast = run(false);
+        let slow = run(true);
+        assert_eq!(fast.metrics.completions.len(), slow.metrics.completions.len());
+        let key = |v: &Vec<crate::workload::Completion>| {
+            let mut s: Vec<_> = v.iter().map(|c| (c.id, c.ttft, c.tpot, c.finish)).collect();
+            s.sort_by(|a, b| a.0.cmp(&b.0));
+            s
+        };
+        assert_eq!(
+            key(&fast.metrics.completions),
+            key(&slow.metrics.completions),
+            "coalesced stepping must be completion-for-completion identical"
+        );
+        assert!(
+            fast.events_processed < slow.events_processed,
+            "coalescing should shrink the event count ({} vs {})",
+            fast.events_processed,
+            slow.events_processed
+        );
+    }
+
+    #[test]
+    fn prefill_wait_clocks_are_recorded() {
+        let trace = step_trace(4.0, 4.0, 0.0, 0.0, 10.0, 512, 32, 10);
+        let mut coord = StaticCoordinator::new(1, 1);
+        let cfg = SimConfig {
+            initial_prefillers: 1,
+            initial_decoders: 1,
+            ..Default::default()
+        };
+        let slo = cfg.slo;
+        let res = simulate(cfg, cluster_cfg(4), &mut coord, &trace);
+        let n = res.metrics.completions.len();
+        assert_eq!(res.metrics.prefill_waits.len(), n);
+        assert_eq!(res.metrics.queue_waits.len(), n);
+        for (_, w) in &res.metrics.prefill_waits {
+            assert!(*w > 0.0 && w.is_finite());
+        }
+        let report = res.metrics.report(&slo, 0.0);
+        assert!(report.prefill_wait.count > 0);
+        assert!(report.prefill_wait.p50 > 0.0);
+        // Prefill wait (queue + execution) dominates pure queue delay.
+        assert!(report.prefill_wait.p50 >= report.queue_wait.p50);
     }
 }

@@ -3,9 +3,43 @@
 use crate::workload::RequestId;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::fmt;
 
-/// Instance identifier within a simulation.
-pub type InstanceId = u32;
+/// Generation-tagged handle into the cluster's instance slab.
+///
+/// `slot` indexes the slab; `seq` is a cluster-global monotonic spawn
+/// sequence number. A freed slot's next occupant gets a fresh `seq`, so a
+/// stale id held by an in-flight event or a router decision resolves to
+/// `None` instead of aliasing the new occupant. `seq` leads the derived
+/// ordering, so id-based tie-breaking (router min-by keys, retirement
+/// candidate sorts) picks the oldest instance by spawn order — exactly the
+/// semantics of the pre-slab monotonic ids, even after slot reuse.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct InstanceId {
+    seq: u64,
+    slot: u32,
+}
+
+impl InstanceId {
+    pub fn new(slot: u32, seq: u64) -> InstanceId {
+        InstanceId { seq, slot }
+    }
+
+    pub fn slot(self) -> usize {
+        self.slot as usize
+    }
+
+    /// Global spawn sequence number (unique per spawned instance).
+    pub fn seq(self) -> u64 {
+        self.seq
+    }
+}
+
+impl fmt::Display for InstanceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "i{}.{}", self.slot, self.seq)
+    }
+}
 
 /// Everything that can happen in the simulated cluster.
 #[derive(Clone, Debug, PartialEq)]

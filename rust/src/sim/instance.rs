@@ -1,6 +1,16 @@
 //! Simulated prefiller and decoder instances: lifecycle, queues,
 //! continuous batching and (for Convertible Decoders) restricted chunked
 //! prefill state.
+//!
+//! Decode iterations on a fixed batch are *coalesced*: when the batch
+//! composition cannot change (no joiners, no chunked prefill, nobody
+//! completing), the engine schedules one event covering many iterations
+//! and this module carries the window bookkeeping. The window's effects
+//! are applied lazily — either when an external touch (joiner, sample)
+//! forces a catch-up, or when the window's final iteration fires — in a
+//! way that is bit-identical to stepping every iteration individually
+//! (context sums are exact integers in f64, and event times accumulate
+//! with the same additions single-stepping would perform).
 
 use super::event::InstanceId;
 use crate::perfmodel::EngineModel;
@@ -25,6 +35,17 @@ pub enum Role {
     Decoder,
     /// Decoder that the router may also hand prefill work (§III-D).
     ConvertibleDecoder,
+}
+
+impl Role {
+    /// Dense index used by the cluster's per-role caches.
+    pub(crate) fn idx(self) -> usize {
+        match self {
+            Role::Prefiller => 0,
+            Role::Decoder => 1,
+            Role::ConvertibleDecoder => 2,
+        }
+    }
 }
 
 /// A sequence actively decoding (or waiting to join the next iteration).
@@ -81,13 +102,34 @@ pub struct Instance {
     pub reserved_tokens: f64,
     /// Monotone iteration epoch; stale DecodeIterDone events are ignored.
     pub iter_epoch: u64,
-    /// Whether an iteration is currently in flight.
+    /// Whether an iteration (or a coalesced window) is in flight.
     pub iterating: bool,
+    /// Chunk tokens processed by the in-flight iteration (moved here from
+    /// a per-event engine-side HashMap).
+    pub iter_chunk: usize,
     /// Restricted chunked-prefill budget (tokens/iteration) for
     /// convertible decoders; decode-only instances keep 0.
     pub chunk_size: usize,
     /// KV tokens reserved for burst prefill work (Eq. 6), convertibles only.
     pub convertible_reserve_tokens: f64,
+
+    // ---- coalesced decode window (fixed batch fast path) ----
+    /// A multi-iteration window is in flight (the scheduled
+    /// DecodeIterDone covers `win_total` iterations).
+    pub(crate) win_active: bool,
+    /// Iterations in the window; the final one is the first that can
+    /// complete a sequence.
+    pub(crate) win_total: u32,
+    /// Iterations already accounted (tokens counted; per-seq state applied
+    /// lazily by `win_apply_to_seqs`). Capped at `win_total - 1`.
+    pub(crate) win_done: u32,
+    /// End time of the last accounted iteration (window start initially).
+    pub(crate) win_t: f64,
+    /// End time of the window's first iteration (first-token timestamp for
+    /// sequences that joined at the window start).
+    pub(crate) win_t1: f64,
+    /// Integer sum of batch contexts at window start (exact in f64).
+    pub(crate) win_sum_ctx0: u64,
 }
 
 impl Instance {
@@ -117,8 +159,15 @@ impl Instance {
             reserved_tokens: 0.0,
             iter_epoch: 0,
             iterating: false,
+            iter_chunk: 0,
             chunk_size: 0,
             convertible_reserve_tokens: 0.0,
+            win_active: false,
+            win_total: 0,
+            win_done: 0,
+            win_t: 0.0,
+            win_t1: 0.0,
+            win_sum_ctx0: 0,
         }
     }
 
@@ -135,12 +184,6 @@ impl Instance {
     pub fn inflight_prefill_tokens(&self) -> usize {
         self.prefill_queue.iter().map(|j| j.remaining).sum::<usize>()
             + self.active_prefill.as_ref().map_or(0, |j| j.remaining)
-    }
-
-    /// KV tokens currently materialized in the batch.
-    pub fn used_tokens(&self) -> f64 {
-        self.batch.iter().map(|s| s.ctx as f64).sum::<f64>()
-            + self.joining.iter().map(|s| s.ctx as f64).sum::<f64>()
     }
 
     /// Memory utilization as reserved fraction of KV capacity.
@@ -193,17 +236,98 @@ impl Instance {
             && self.active_prefill.is_none()
             && self.prefill_queue.is_empty()
     }
+
+    // ---- coalesced-window internals (driven by the sim engine) ----
+
+    /// Mean batch context before window iteration `i` (0-based). The sum
+    /// is an exact integer in f64, so this reproduces the value
+    /// single-stepping would compute by re-summing the batch.
+    #[inline]
+    pub(crate) fn win_avg_ctx(&self, i: u32) -> f64 {
+        let n = self.batch.len() as u64;
+        ((self.win_sum_ctx0 + i as u64 * n) as f64) / (n as f64)
+    }
+
+    /// Account window iterations whose end time lies strictly before `t`,
+    /// capped at `win_total - 1` (the final, possibly-completing iteration
+    /// is always handled by the event itself). Returns output tokens
+    /// produced by the newly accounted iterations.
+    pub(crate) fn win_fast_forward(&mut self, t: f64) -> f64 {
+        if !self.win_active {
+            return 0.0;
+        }
+        let n = self.batch.len();
+        let mut produced = 0u64;
+        while self.win_done + 1 < self.win_total {
+            let avg = self.win_avg_ctx(self.win_done);
+            let dur = self.engine.decode_iter_time(n, avg);
+            let end = self.win_t + dur;
+            if end >= t {
+                break;
+            }
+            self.win_t = end;
+            self.win_done += 1;
+            if self.win_done == 1 {
+                self.win_t1 = end;
+            }
+            produced += n as u64;
+        }
+        produced as f64
+    }
+
+    /// Apply the accounted window iterations to the per-sequence state
+    /// (generated / ctx bumps, first-token stamps). Idempotent per window:
+    /// call exactly once, when the window ends or is truncated.
+    pub(crate) fn win_apply_to_seqs(&mut self) {
+        let d = self.win_done as usize;
+        if d == 0 {
+            return;
+        }
+        let t1 = self.win_t1;
+        for seq in &mut self.batch {
+            if seq.first_token_at.is_none() {
+                seq.first_token_at = Some(t1);
+            }
+            seq.generated += d;
+            seq.ctx += d;
+        }
+    }
+
+    /// Clear window bookkeeping (after apply).
+    pub(crate) fn win_clear(&mut self) {
+        self.win_active = false;
+        self.win_total = 0;
+        self.win_done = 0;
+        self.win_t = 0.0;
+        self.win_t1 = 0.0;
+        self.win_sum_ctx0 = 0;
+    }
 }
 
-/// Record of a completed (or in-progress) request's journey, kept by the
-/// engine loop for TTFT/TPOT bookkeeping.
+/// Record of a request's journey through the gateway, prefill stage and
+/// first decode iteration, kept by the engine loop. Feeds the
+/// prefill-wait / queue-delay percentiles in `SloReport`.
 #[derive(Clone, Copy, Debug)]
 pub struct RequestClock {
     pub id: RequestId,
     pub arrival: f64,
+    /// First moment the prompt began executing (prefiller pass start, or
+    /// first chunked-prefill iteration on a convertible decoder).
     pub prefill_started: Option<f64>,
+    /// Prefill completion (KVC ready to ship / sequence ready to decode).
+    /// First-token time lives on `ActiveSeq::first_token_at`.
     pub prefill_done: Option<f64>,
-    pub first_token: Option<f64>,
+}
+
+impl RequestClock {
+    pub fn at_arrival(id: RequestId, arrival: f64) -> RequestClock {
+        RequestClock {
+            id,
+            arrival,
+            prefill_started: None,
+            prefill_done: None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -220,6 +344,10 @@ mod tests {
         ))
     }
 
+    fn iid(n: u32) -> InstanceId {
+        InstanceId::new(n, 0)
+    }
+
     fn seq(id: u64, input: usize, output: usize) -> ActiveSeq {
         ActiveSeq {
             req: Request::new(id, 0.0, input, output),
@@ -232,17 +360,17 @@ mod tests {
 
     #[test]
     fn starting_instance_not_running() {
-        let i = Instance::new(1, Role::Decoder, engine(), 0.0, 5.0);
+        let i = Instance::new(iid(1), Role::Decoder, engine(), 0.0, 5.0);
         assert_eq!(i.life, LifeState::Starting);
         assert!(!i.is_running());
         assert_eq!(i.ready_at, 5.0);
-        let j = Instance::new(2, Role::Decoder, engine(), 0.0, 0.0);
+        let j = Instance::new(iid(2), Role::Decoder, engine(), 0.0, 0.0);
         assert!(j.is_running());
     }
 
     #[test]
     fn admission_respects_capacity() {
-        let mut i = Instance::new(1, Role::Decoder, engine(), 0.0, 0.0);
+        let mut i = Instance::new(iid(1), Role::Decoder, engine(), 0.0, 0.0);
         let cap = i.engine.kv_capacity_tokens();
         assert!(i.can_admit(1000));
         i.admit(seq(1, 500, 500));
@@ -252,7 +380,7 @@ mod tests {
 
     #[test]
     fn convertible_reserve_shrinks_admission() {
-        let mut a = Instance::new(1, Role::ConvertibleDecoder, engine(), 0.0, 0.0);
+        let mut a = Instance::new(iid(1), Role::ConvertibleDecoder, engine(), 0.0, 0.0);
         let base = a.admission_capacity();
         a.convertible_reserve_tokens = 10_000.0;
         assert!((base - a.admission_capacity() - 10_000.0).abs() < 1e-6);
@@ -260,7 +388,7 @@ mod tests {
 
     #[test]
     fn inflight_prefill_counts_queue_and_active() {
-        let mut i = Instance::new(1, Role::Prefiller, engine(), 0.0, 0.0);
+        let mut i = Instance::new(iid(1), Role::Prefiller, engine(), 0.0, 0.0);
         i.prefill_queue.push_back(PrefillJob {
             req: Request::new(1, 0.0, 700, 10),
             remaining: 700,
@@ -276,7 +404,7 @@ mod tests {
 
     #[test]
     fn bucket_inflight_counting() {
-        let mut i = Instance::new(1, Role::Decoder, engine(), 0.0, 0.0);
+        let mut i = Instance::new(iid(1), Role::Decoder, engine(), 0.0, 0.0);
         let mut s1 = seq(1, 10, 10);
         s1.predicted_bucket = 3;
         let mut s2 = seq(2, 10, 10);
@@ -293,9 +421,58 @@ mod tests {
 
     #[test]
     fn drained_logic() {
-        let mut i = Instance::new(1, Role::Decoder, engine(), 0.0, 0.0);
+        let mut i = Instance::new(iid(1), Role::Decoder, engine(), 0.0, 0.0);
         assert!(i.drained());
         i.admit(seq(1, 10, 10));
         assert!(!i.drained());
+    }
+
+    #[test]
+    fn window_fast_forward_matches_manual_accumulation() {
+        let mut i = Instance::new(iid(1), Role::Decoder, engine(), 0.0, 0.0);
+        i.batch.push(seq(1, 100, 10));
+        i.batch.push(seq(2, 200, 10));
+        i.win_active = true;
+        i.win_total = 10;
+        i.win_done = 0;
+        i.win_t = 5.0;
+        i.win_sum_ctx0 = 300;
+
+        // Manually accumulate 3 iteration end times exactly as the window
+        // should.
+        let mut t = 5.0;
+        let mut ends = Vec::new();
+        for k in 0..3u64 {
+            let avg = ((300 + k * 2) as f64) / 2.0;
+            t += i.engine.decode_iter_time(2, avg);
+            ends.push(t);
+        }
+        // Fast-forward strictly past the 3rd end: exactly 3 iterations.
+        let produced = i.win_fast_forward(ends[2] + 1e-9);
+        assert_eq!(produced, 6.0);
+        assert_eq!(i.win_done, 3);
+        assert_eq!(i.win_t, ends[2]);
+        assert_eq!(i.win_t1, ends[0]);
+
+        // Apply: every sequence advanced by 3, first token at t1.
+        i.win_apply_to_seqs();
+        assert_eq!(i.batch[0].generated, 3);
+        assert_eq!(i.batch[0].ctx, 103);
+        assert_eq!(i.batch[0].first_token_at, Some(ends[0]));
+        assert_eq!(i.batch[1].ctx, 203);
+    }
+
+    #[test]
+    fn window_fast_forward_caps_before_final_iteration() {
+        let mut i = Instance::new(iid(1), Role::Decoder, engine(), 0.0, 0.0);
+        i.batch.push(seq(1, 100, 4));
+        i.win_active = true;
+        i.win_total = 4; // final (4th) iteration completes the sequence
+        i.win_t = 0.0;
+        i.win_sum_ctx0 = 100;
+        let produced = i.win_fast_forward(f64::INFINITY);
+        // Only 3 of 4 iterations may be fast-forwarded.
+        assert_eq!(i.win_done, 3);
+        assert_eq!(produced, 3.0);
     }
 }

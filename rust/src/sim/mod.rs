@@ -14,5 +14,5 @@ pub mod policy;
 pub use cluster::{Cluster, ClusterConfig};
 pub use engine::{simulate, SimConfig, SimEngine, SimResult, SimSeries};
 pub use event::{Event, EventQueue, InstanceId};
-pub use instance::{ActiveSeq, Instance, LifeState, PrefillJob, Role};
+pub use instance::{ActiveSeq, Instance, LifeState, PrefillJob, RequestClock, Role};
 pub use policy::{Coordinator, Route, ScaleTargets, StaticCoordinator};

@@ -9,7 +9,7 @@
 
 use super::cluster::Cluster;
 use super::event::InstanceId;
-use crate::workload::Request;
+use crate::workload::{Completion, Request};
 
 /// Where a request's prefill should execute.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -61,8 +61,10 @@ pub trait Coordinator {
     }
 
     /// Notification that a completion happened (memory freed) — lets
-    /// policies track decode velocity online.
-    fn observe_completion(&mut self, _now: f64, _req: &Request) {}
+    /// policies track decode velocity online. Receives the completion
+    /// record directly (the engine no longer reconstructs a `Request` per
+    /// completion on the hot path).
+    fn observe_completion(&mut self, _now: f64, _completion: &Completion) {}
 }
 
 /// A fixed-fleet coordinator used for tests, profiling sweeps and the

@@ -1,0 +1,115 @@
+//! Simulator refactor safety nets:
+//!
+//! 1. **Determinism** — the same (deployment, policy, trace, seed) must
+//!    produce bit-identical completions and reports across two runs in
+//!    the same process (no HashMap-iteration or allocation-order leakage
+//!    into results).
+//! 2. **Coalescing equivalence** — decode-iteration coalescing (the event-
+//!    throughput fast path) must be completion-for-completion identical to
+//!    the single-step reference mode (`force_single_step`), including on
+//!    convertible-decoder workloads where chunked prefill interleaves with
+//!    pure-decode windows.
+
+use tokenscale::report::runner::RunOverrides;
+use tokenscale::report::{deployment, run_experiment, ExperimentResult, PolicyKind};
+use tokenscale::trace::{generate_family, Trace, TraceFamily};
+
+/// Canonical per-request view of a run's completions, sorted by id.
+fn completion_key(res: &ExperimentResult) -> Vec<(u64, f64, f64, f64, f64)> {
+    let mut v: Vec<(u64, f64, f64, f64, f64)> = res
+        .sim
+        .metrics
+        .completions
+        .iter()
+        .map(|c| (c.id, c.arrival, c.ttft, c.tpot, c.finish))
+        .collect();
+    v.sort_by(|a, b| a.0.cmp(&b.0));
+    v
+}
+
+fn run(policy: PolicyKind, trace: &Trace, ov: &RunOverrides) -> ExperimentResult {
+    let dep = deployment("small-a100").unwrap();
+    run_experiment(&dep, policy, trace, ov)
+}
+
+#[test]
+fn same_seed_is_bit_deterministic() {
+    let trace = generate_family(TraceFamily::AzureConv, 12.0, 90.0, 7);
+    let ov = RunOverrides::default();
+    let a = run(PolicyKind::TokenScale, &trace, &ov);
+    let b = run(PolicyKind::TokenScale, &trace, &ov);
+    assert_eq!(completion_key(&a), completion_key(&b));
+    assert_eq!(a.sim.metrics.gpu_seconds, b.sim.metrics.gpu_seconds);
+    assert_eq!(a.sim.events_processed, b.sim.events_processed);
+    assert_eq!(a.report.n, b.report.n);
+    assert_eq!(a.report.overall_attainment, b.report.overall_attainment);
+    assert_eq!(a.report.ttft.p99, b.report.ttft.p99);
+    assert_eq!(a.report.prefill_wait.p99, b.report.prefill_wait.p99);
+    assert_eq!(a.sim.scale_ups, b.sim.scale_ups);
+    assert_eq!(a.sim.scale_downs, b.sim.scale_downs);
+    // Sampled series are part of the contract too.
+    assert_eq!(
+        a.sim.series.decode_throughput.points,
+        b.sim.series.decode_throughput.points
+    );
+}
+
+fn assert_modes_equivalent(policy: PolicyKind, trace: &Trace, base: RunOverrides) {
+    let coalesced = run(policy, trace, &base);
+    let single = run(
+        policy,
+        trace,
+        &RunOverrides {
+            force_single_step: true,
+            ..base
+        },
+    );
+    assert!(
+        !coalesced.sim.metrics.completions.is_empty(),
+        "workload must complete requests"
+    );
+    assert_eq!(
+        completion_key(&coalesced),
+        completion_key(&single),
+        "coalesced stepping must reproduce single-step TTFT/TPOT/finish exactly ({})",
+        policy.name()
+    );
+    assert_eq!(coalesced.sim.metrics.dropped, single.sim.metrics.dropped);
+    assert_eq!(coalesced.sim.scale_ups, single.sim.scale_ups);
+    assert_eq!(coalesced.sim.scale_downs, single.sim.scale_downs);
+    assert!(
+        coalesced.sim.events_processed < single.sim.events_processed,
+        "coalescing must shrink the event count ({} vs {})",
+        coalesced.sim.events_processed,
+        single.sim.events_processed
+    );
+}
+
+#[test]
+fn coalesced_equals_single_step_mixed_workload() {
+    // Mixed prompt/output lengths under an autoscaling policy: exercises
+    // joins mid-window (transfer landings), scale-up/down, and drain.
+    let trace = generate_family(TraceFamily::Mixed, 10.0, 75.0, 11);
+    assert_modes_equivalent(PolicyKind::TokenScale, &trace, RunOverrides::default());
+}
+
+#[test]
+fn coalesced_equals_single_step_with_convertible_decoders() {
+    // Convertible decoders interleave restricted chunked prefill with
+    // decode; windows must yield to prefill admissions exactly like
+    // single-stepping.
+    let trace = generate_family(TraceFamily::AzureCode, 10.0, 75.0, 13);
+    let ov = RunOverrides {
+        convertibles: Some(2),
+        ..Default::default()
+    };
+    assert_modes_equivalent(PolicyKind::TokenScale, &trace, ov);
+}
+
+#[test]
+fn coalesced_equals_single_step_for_baseline_policy() {
+    // A baseline (no convertibles, different routing/scaling) as a second
+    // independent control plane over the same mechanics.
+    let trace = generate_family(TraceFamily::AzureConv, 10.0, 60.0, 17);
+    assert_modes_equivalent(PolicyKind::DistServe, &trace, RunOverrides::default());
+}

@@ -1,0 +1,96 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The container image has no crates.io access, so this path dependency
+//! provides the subset of anyhow's surface the codebase uses: the opaque
+//! [`Error`] type, the [`Result`] alias, the `anyhow!` / `bail!` /
+//! `ensure!` macros, and the blanket `From<E: std::error::Error>` that
+//! makes `?` work. Swap it for the real crate by editing the root
+//! Cargo.toml if a registry is available.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Opaque, message-carrying error. Like the real `anyhow::Error`, it does
+/// **not** implement `std::error::Error` itself, which keeps the blanket
+/// `From` impl below coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_and_conversions() {
+        fn inner(fail: bool) -> crate::Result<u32> {
+            crate::ensure!(!fail, "failed with {}", 42);
+            let n: u32 = "7".parse()?; // ParseIntError -> Error via blanket From
+            Ok(n)
+        }
+        assert_eq!(inner(false).unwrap(), 7);
+        let e = inner(true).unwrap_err();
+        assert_eq!(e.to_string(), "failed with 42");
+        let e2: crate::Error = crate::anyhow!("x={}", 1);
+        assert_eq!(format!("{e2:?}"), "x=1");
+    }
+}
