@@ -2,27 +2,57 @@
 //! TokenScale's velocity math (Eqs. 2–4), then validate the plan in the
 //! simulator.
 //!
-//!     cargo run --release --example capacity_planner [trace] [rps]
+//!     cargo run --release --example capacity_planner [trace|FILE] [rps]
+//!
+//! The first argument is a trace family name **or a replay file path**
+//! (CSV/JSONL, see docs/traces.md); with no arguments the bundled
+//! `examples/traces/azure_conv_sample.csv` replay is planned. When an
+//! `rps` is given for a replay file, the trace is resampled to that rate
+//! first (the paper's §V sampling).
 
 use tokenscale::perfmodel::catalog;
 use tokenscale::report::runner::RunOverrides;
 use tokenscale::report::{deployment, run_experiment, PolicyKind};
 use tokenscale::scaler::{convertible_count, required_decoders_frac, required_prefillers};
 use tokenscale::trace::burst::{bin_traffic, burst_time_fraction};
-use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::trace::{generate_family, replay, Trace, TraceFamily};
+use tokenscale::util::rng::Pcg64;
 use tokenscale::velocity::VelocityProfile;
 use tokenscale::workload::BucketScheme;
 
+const BUNDLED_TRACE: &str = "examples/traces/azure_conv_sample.csv";
+
+fn load_workload(args: &[String]) -> anyhow::Result<Trace> {
+    let rps: Option<f64> = args.get(1).and_then(|s| s.parse().ok());
+    match args.first() {
+        Some(arg) if std::path::Path::new(arg).exists() => {
+            let trace = replay::load_path(std::path::Path::new(arg))?;
+            Ok(match rps {
+                Some(r) => trace.resample_to_rps(r, &mut Pcg64::new(13)),
+                None => trace,
+            })
+        }
+        Some(arg) => {
+            let family = TraceFamily::parse(arg)
+                .ok_or_else(|| anyhow::anyhow!("`{arg}` is neither a file nor a trace family"))?;
+            Ok(generate_family(family, rps.unwrap_or(22.0), 300.0, 13))
+        }
+        None => {
+            let bundled = std::path::Path::new(BUNDLED_TRACE);
+            if bundled.exists() {
+                replay::load_path(bundled)
+            } else {
+                Ok(generate_family(TraceFamily::AzureConv, 22.0, 300.0, 13))
+            }
+        }
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let family = args
-        .first()
-        .and_then(|s| TraceFamily::parse(s))
-        .unwrap_or(TraceFamily::AzureConv);
-    let rps: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(22.0);
-
     let dep = deployment("small-a100").unwrap();
-    let trace = generate_family(family, rps, 300.0, 13);
+    let trace = load_workload(&args)?;
+    let rps = trace.avg_rps();
     let profile = VelocityProfile::analytic(
         &dep.engine,
         &catalog::link("a100-cluster").unwrap(),
@@ -51,7 +81,7 @@ fn main() -> anyhow::Result<()> {
     let burst_ratio = burst_time_fraction(&series.tokens, 1.0, 60.0);
     let convertibles = convertible_count(decoders as f64, burst_ratio * 0.5);
 
-    println!("capacity plan | {} @ {:.0} rps on {}", family.name(), rps, dep.name);
+    println!("capacity plan | {} @ {:.1} rps on {}", trace.name, rps, dep.name);
     println!("  input-token rate λ   : {:.0} tok/s", lambda);
     println!("  V_P (per prefiller)  : {:.0} tok/s", profile.prefill);
     println!("  prefillers (Eq. 2)   : {prefillers}");

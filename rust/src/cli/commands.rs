@@ -25,8 +25,16 @@ SUBCOMMANDS:
                   --deployment D
     thresholds  Print derived baseline thresholds (Tab. I style)
                   --deployment D --trace T --rps R
-    trace       Generate a trace and print its burst statistics
-                  --trace T --rps R --duration S [--seed N]
+    trace       Workload-trace tooling
+                  trace [inspect] --trace T --rps R --duration S [--seed N]
+                      Generate a synthetic trace and print its stats
+                  trace inspect --file PATH
+                      Load an Azure-style CSV/JSONL replay file and print
+                      per-family stats (avg RPS, token means, burst
+                      fraction)
+                  trace convert --out PATH [--in PATH | --trace T ...]
+                      Convert replay files between CSV and JSONL (format
+                      chosen by extension), or export a synthetic family
     serve       Serve real requests through the PJRT engine (needs
                   `make artifacts`)  [--requests N] [--tokens N]
     help        Show this message
@@ -201,11 +209,33 @@ fn cmd_thresholds(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    match args.positional.first().map(String::as_str) {
+        None | Some("inspect") => cmd_trace_inspect(args),
+        Some("convert") => cmd_trace_convert(args),
+        Some(other) => anyhow::bail!("unknown trace action `{other}` (expected inspect|convert)"),
+    }
+}
+
+/// Resolve the trace named by the flags: `--file` loads a replay file,
+/// otherwise a synthetic family is generated from the config flags.
+fn trace_from_flags(args: &Args) -> anyhow::Result<crate::trace::Trace> {
+    if let Some(path) = args.get("in").or_else(|| args.get("file")) {
+        return crate::trace::replay::load_path(std::path::Path::new(path));
+    }
     let cfg = config_from_args(args)?;
-    let family = TraceFamily::parse(&cfg.trace).unwrap();
-    let trace = generate_family(family, cfg.rps, cfg.duration_s, cfg.seed);
-    let series = crate::trace::burst::bin_traffic(&trace, 1.0);
-    println!("== trace {} | {} requests over {}s ==", cfg.trace, trace.requests.len(), cfg.duration_s);
+    let family = TraceFamily::parse(&cfg.trace)
+        .ok_or_else(|| anyhow::anyhow!("unknown trace family `{}`", cfg.trace))?;
+    Ok(generate_family(family, cfg.rps, cfg.duration_s, cfg.seed))
+}
+
+fn print_trace_stats(trace: &crate::trace::Trace) {
+    let series = crate::trace::burst::bin_traffic(trace, 1.0);
+    println!(
+        "== trace {} | {} requests over {}s ==",
+        trace.name,
+        trace.requests.len(),
+        trace.duration_s
+    );
     println!("avg rps            : {:.2}", trace.avg_rps());
     println!("avg input tokens   : {:.0}", trace.avg_input_tokens());
     println!("avg output tokens  : {:.0}", trace.avg_output_tokens());
@@ -217,6 +247,27 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     println!(
         "mean burst length  : {:.1}s",
         crate::trace::burst::mean_burst_len_s(&series.requests, 1.0, 60.0)
+    );
+}
+
+fn cmd_trace_inspect(args: &Args) -> anyhow::Result<()> {
+    let trace = trace_from_flags(args)?;
+    print_trace_stats(&trace);
+    Ok(())
+}
+
+fn cmd_trace_convert(args: &Args) -> anyhow::Result<()> {
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("trace convert needs --out PATH"))?;
+    let trace = trace_from_flags(args)?;
+    let path = std::path::Path::new(out);
+    crate::trace::replay::save_path(path, &trace)?;
+    println!(
+        "wrote {} ({} requests over {}s)",
+        path.display(),
+        trace.requests.len(),
+        trace.duration_s
     );
     Ok(())
 }

@@ -1,7 +1,7 @@
 //! Completion recording and SLO attainment reporting.
 
 use crate::util::stats::Summary;
-use crate::workload::{Completion, SloPolicy};
+use crate::workload::{Completion, Request, SloPolicy};
 
 /// Collects completions and GPU-time, and produces the attainment/cost
 /// numbers every end-to-end experiment reports (Fig. 9, 14, 15).
@@ -22,6 +22,16 @@ pub struct MetricsRecorder {
     /// Per-request (arrival, queue delay): arrival → first moment the
     /// prompt began executing.
     pub queue_waits: Vec<(f64, f64)>,
+    /// Arrival-side stats accumulated online as the engine consumes the
+    /// stream (the streaming replacement for re-scanning a materialized
+    /// `Trace` with `avg_input_tokens()` etc. after the fact).
+    pub arrivals: usize,
+    pub arrival_input_tokens: f64,
+    pub arrival_output_tokens: f64,
+    /// Nominal workload duration (arrivals occur in `[0, workload_s]`).
+    /// Distinct from `horizon_s`, which extends into the drain tail and
+    /// therefore varies with how slowly a policy finishes.
+    pub workload_s: f64,
 }
 
 /// Aggregated SLO report.
@@ -51,6 +61,42 @@ impl MetricsRecorder {
 
     pub fn record(&mut self, c: Completion) {
         self.completions.push(c);
+    }
+
+    /// Accumulate arrival-side statistics (one call per consumed arrival).
+    pub fn note_arrival(&mut self, r: &Request) {
+        self.arrivals += 1;
+        self.arrival_input_tokens += r.input_tokens as f64;
+        self.arrival_output_tokens += r.output_tokens as f64;
+    }
+
+    /// Mean prompt length over all arrivals seen so far.
+    pub fn avg_arrival_input_tokens(&self) -> f64 {
+        if self.arrivals == 0 {
+            0.0
+        } else {
+            self.arrival_input_tokens / self.arrivals as f64
+        }
+    }
+
+    /// Mean output length over all arrivals seen so far.
+    pub fn avg_arrival_output_tokens(&self) -> f64 {
+        if self.arrivals == 0 {
+            0.0
+        } else {
+            self.arrival_output_tokens / self.arrivals as f64
+        }
+    }
+
+    /// Offered request rate over the workload duration (not the cost
+    /// horizon: the drain tail contains no arrivals, and its length
+    /// depends on the policy under test).
+    pub fn offered_rps(&self) -> f64 {
+        if self.workload_s > 0.0 {
+            self.arrivals as f64 / self.workload_s
+        } else {
+            0.0
+        }
     }
 
     pub fn add_gpu_time(&mut self, gpus: f64, dt: f64) {
@@ -154,6 +200,19 @@ mod tests {
         let r = m.report(&SloPolicy::default(), 5.0);
         assert_eq!(r.n, 1);
         assert!((r.overall_attainment - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arrival_stats_accumulate_online() {
+        let mut m = MetricsRecorder::new();
+        m.note_arrival(&Request::new(0, 0.0, 100, 20));
+        m.note_arrival(&Request::new(1, 1.0, 300, 60));
+        m.workload_s = 2.0;
+        m.horizon_s = 10.0; // drain tail must not dilute the offered rate
+        assert_eq!(m.arrivals, 2);
+        assert!((m.avg_arrival_input_tokens() - 200.0).abs() < 1e-12);
+        assert!((m.avg_arrival_output_tokens() - 40.0).abs() < 1e-12);
+        assert!((m.offered_rps() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -7,6 +7,6 @@ pub mod runner;
 
 pub use bench::BenchTimer;
 pub use runner::{
-    deployment, run_experiment, run_experiments, Deployment, ExperimentResult, ExperimentSpec,
-    PolicyKind,
+    deployment, run_experiment, run_experiment_source, run_experiments, Deployment,
+    ExperimentResult, ExperimentSpec, PolicyKind, Workload,
 };

@@ -6,9 +6,9 @@
 use crate::coordinator::{TokenScale, TokenScaleConfig};
 use crate::metrics::SloReport;
 use crate::perfmodel::{catalog, EngineModel, LinkSpec};
-use crate::scaler::{derive_thresholds, AiBrix, BlitzScale, DistServe};
-use crate::sim::{simulate, ClusterConfig, SimConfig, SimResult};
-use crate::trace::Trace;
+use crate::scaler::{derive_thresholds_from_profile, AiBrix, BlitzScale, DistServe};
+use crate::sim::{simulate_source, ClusterConfig, SimConfig, SimResult};
+use crate::trace::{ArrivalSource, SourceFactory, Trace, TraceProfile, TraceSliceSource};
 use crate::velocity::VelocityProfile;
 use crate::workload::SloPolicy;
 use std::sync::Arc;
@@ -158,18 +158,36 @@ pub struct ExperimentResult {
     pub label: String,
 }
 
-/// Run one (deployment, policy, trace) experiment.
+/// Run one (deployment, policy, trace) experiment over a materialized
+/// trace: measures the workload profile exactly, then streams the trace
+/// through the arrival pipeline.
 pub fn run_experiment(
     dep: &Deployment,
     policy: PolicyKind,
     trace: &Trace,
     ov: &RunOverrides,
 ) -> ExperimentResult {
+    let workload = TraceProfile::of_trace(trace);
+    let mut src = TraceSliceSource::new(trace);
+    run_experiment_source(dep, policy, &mut src, &workload, ov)
+}
+
+/// Run one experiment over a streaming arrival source. `workload` is the
+/// a-priori character estimate used to size velocity profiles and the
+/// baselines' thresholds (for a materialized trace it is measured; for a
+/// synthetic source it is analytic — see [`TraceProfile`]).
+pub fn run_experiment_source(
+    dep: &Deployment,
+    policy: PolicyKind,
+    source: &mut dyn ArrivalSource,
+    workload: &TraceProfile,
+    ov: &RunOverrides,
+) -> ExperimentResult {
     let slo = SloPolicy::default();
-    let avg_in = trace.avg_input_tokens().max(1.0);
-    let avg_total = avg_in + trace.avg_output_tokens();
+    let avg_in = workload.avg_input_tokens.max(1.0);
+    let avg_total = avg_in + workload.avg_output_tokens;
     let profile = VelocityProfile::analytic(&dep.engine, &dep.link, avg_in as usize);
-    let thresholds = derive_thresholds(trace, &dep.engine, &profile);
+    let thresholds = derive_thresholds_from_profile(workload, &dep.engine, &profile);
 
     let mut sim_cfg = SimConfig {
         initial_prefillers: ov.initial_prefillers.unwrap_or(dep.initial_prefillers),
@@ -202,19 +220,19 @@ pub fn run_experiment(
             sim_cfg.initial_convertibles = ts.cfg.convertibles;
             cluster_cfg.convertible_chunk_size = ts.chunk_size;
             cluster_cfg.convertible_reserve_tokens = ts.reserve_tokens;
-            simulate(sim_cfg, cluster_cfg, &mut ts, trace)
+            simulate_source(sim_cfg, cluster_cfg, &mut ts, source)
         }
         PolicyKind::AiBrix => {
             let mut p = AiBrix::new(&thresholds);
-            simulate(sim_cfg, cluster_cfg, &mut p, trace)
+            simulate_source(sim_cfg, cluster_cfg, &mut p, source)
         }
         PolicyKind::BlitzScale => {
             let mut p = BlitzScale::new(&thresholds);
-            simulate(sim_cfg, cluster_cfg, &mut p, trace)
+            simulate_source(sim_cfg, cluster_cfg, &mut p, source)
         }
         PolicyKind::DistServe => {
             let mut p = DistServe::new(&thresholds);
-            simulate(sim_cfg, cluster_cfg, &mut p, trace)
+            simulate_source(sim_cfg, cluster_cfg, &mut p, source)
         }
         PolicyKind::AblationBP => {
             let mut p = crate::scaler::baselines::ablation_bp(
@@ -223,7 +241,7 @@ pub fn run_experiment(
                 &dep.link,
                 avg_in as usize,
             );
-            simulate(sim_cfg, cluster_cfg, &mut p, trace)
+            simulate_source(sim_cfg, cluster_cfg, &mut p, source)
         }
         PolicyKind::AblationBPD => {
             let mut p = crate::scaler::baselines::ablation_bpd(
@@ -233,7 +251,7 @@ pub fn run_experiment(
                 avg_in as usize,
                 ov.predictor_accuracy.unwrap_or(0.85),
             );
-            simulate(sim_cfg, cluster_cfg, &mut p, trace)
+            simulate_source(sim_cfg, cluster_cfg, &mut p, source)
         }
     };
 
@@ -248,22 +266,38 @@ pub fn run_experiment(
 
 /// Run one spec, carrying its label onto the result.
 fn run_spec(s: &ExperimentSpec) -> ExperimentResult {
-    let mut r = run_experiment(&s.deployment, s.policy, &s.trace, &s.overrides);
+    let mut r = match &s.workload {
+        Workload::Shared(trace) => run_experiment(&s.deployment, s.policy, trace, &s.overrides),
+        Workload::Streaming(factory) => {
+            // Each cell builds its own source, so grid workers stream
+            // independent copies instead of sharing a materialized vector.
+            let mut src = factory();
+            let profile = src.profile();
+            run_experiment_source(&s.deployment, s.policy, &mut src, &profile, &s.overrides)
+        }
+    };
     r.label = s.label.clone();
     r
 }
 
 // ---------------------------------------------------- parallel experiments
 
+/// What a grid cell runs over: a shared materialized trace (`Arc`-cloned
+/// handle, not requests) or a streaming source factory that every worker
+/// invokes for its own independent, lazily-generated copy.
+#[derive(Clone)]
+pub enum Workload {
+    Shared(Arc<Trace>),
+    Streaming(SourceFactory),
+}
+
 /// One cell of an experiment grid: everything `run_experiment` needs,
-/// owned/shared so cells can execute on any worker thread. Traces are
-/// `Arc`-shared — a (deployment × policy) sweep over one trace clones the
-/// handle, not the requests.
+/// owned/shared so cells can execute on any worker thread.
 #[derive(Clone)]
 pub struct ExperimentSpec {
     pub deployment: Deployment,
     pub policy: PolicyKind,
-    pub trace: Arc<Trace>,
+    pub workload: Workload,
     pub overrides: RunOverrides,
     /// Free-form tag (e.g. trace family name) carried to the result.
     pub label: String,
@@ -274,7 +308,19 @@ impl ExperimentSpec {
         ExperimentSpec {
             deployment: dep.clone(),
             policy,
-            trace: trace.clone(),
+            workload: Workload::Shared(trace.clone()),
+            overrides: RunOverrides::default(),
+            label: String::new(),
+        }
+    }
+
+    /// A grid cell over a streaming source factory (trace never
+    /// materialized; each worker streams its own copy).
+    pub fn streaming(dep: &Deployment, policy: PolicyKind, factory: SourceFactory) -> ExperimentSpec {
+        ExperimentSpec {
+            deployment: dep.clone(),
+            policy,
+            workload: Workload::Streaming(factory),
             overrides: RunOverrides::default(),
             label: String::new(),
         }
@@ -397,10 +443,31 @@ mod tests {
             assert_eq!(spec.label, res.label);
             // ...and are identical to a sequential run (simulations are
             // deterministic, so parallelism must not change anything).
-            let seq = run_experiment(&spec.deployment, spec.policy, &spec.trace, &spec.overrides);
+            let seq = run_spec(spec);
             assert_eq!(seq.report.n, res.report.n, "{}", spec.label);
             assert_eq!(seq.report.overall_attainment, res.report.overall_attainment);
             assert_eq!(seq.report.avg_gpus, res.report.avg_gpus);
         }
+    }
+
+    #[test]
+    fn streaming_grid_cells_are_deterministic() {
+        use crate::trace::{SourceExt, SpecSource};
+        let dep = deployment("small-a100").unwrap();
+        let factory: SourceFactory =
+            Arc::new(|| SpecSource::new(TraceFamily::AzureConv.spec(6.0, 40.0), 9).boxed());
+        let specs: Vec<ExperimentSpec> = (0..2)
+            .map(|i| {
+                ExperimentSpec::streaming(&dep, PolicyKind::DistServe, factory.clone())
+                    .with_label(format!("copy{i}"))
+            })
+            .collect();
+        let res = run_experiments(&specs);
+        assert_eq!(res.len(), 2);
+        // Two independent streams of the same factory are identical runs.
+        assert!(res[0].report.n > 50);
+        assert_eq!(res[0].report.n, res[1].report.n);
+        assert_eq!(res[0].report.overall_attainment, res[1].report.overall_attainment);
+        assert_eq!(res[0].sim.events_processed, res[1].sim.events_processed);
     }
 }

@@ -7,7 +7,9 @@ pub mod thresholds;
 pub mod tokenscale;
 
 pub use baselines::{AiBrix, BlitzScale, DistServe};
-pub use thresholds::{derive as derive_thresholds, Thresholds};
+pub use thresholds::{
+    derive as derive_thresholds, derive_from_profile as derive_thresholds_from_profile, Thresholds,
+};
 pub use tokenscale::{
     convertible_count, regular_decoders, required_decoders, required_decoders_frac,
     required_prefillers, Hysteresis,

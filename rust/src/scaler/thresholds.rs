@@ -5,7 +5,7 @@
 //! derivations so `table1_thresholds` can print the same table.
 
 use crate::perfmodel::EngineModel;
-use crate::trace::Trace;
+use crate::trace::{Trace, TraceProfile};
 use crate::velocity::VelocityProfile;
 
 /// Derived thresholds for all systems on one (trace, deployment) pair.
@@ -27,11 +27,22 @@ pub struct Thresholds {
     pub tokens_per_prefiller: f64,
 }
 
-/// Derive every system's thresholds from the trace statistics and the
-/// deployment's velocity profile.
+/// Derive every system's thresholds from measured trace statistics and
+/// the deployment's velocity profile.
 pub fn derive(trace: &Trace, engine: &EngineModel, profile: &VelocityProfile) -> Thresholds {
-    let avg_in = trace.avg_input_tokens().max(1.0);
-    let avg_out = trace.avg_output_tokens().max(1.0);
+    derive_from_profile(&TraceProfile::of_trace(trace), engine, profile)
+}
+
+/// Derive thresholds from an a-priori [`TraceProfile`] — the streaming
+/// path: a workload's character estimate stands in for a full scan of a
+/// materialized request vector.
+pub fn derive_from_profile(
+    tp: &TraceProfile,
+    engine: &EngineModel,
+    profile: &VelocityProfile,
+) -> Thresholds {
+    let avg_in = tp.avg_input_tokens.max(1.0);
+    let avg_out = tp.avg_output_tokens.max(1.0);
     let avg_total = avg_in + avg_out;
 
     // Prefill-side: how many concurrent / per-second requests one

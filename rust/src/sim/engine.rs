@@ -1,10 +1,18 @@
 //! The discrete-event simulation engine.
 //!
-//! Drives a [`Coordinator`] (TokenScale or a baseline) over a trace against
-//! a simulated PD-disaggregated cluster: prefillers process prompts, KVC
-//! moves across the interconnect, decoders run continuous batching (with
-//! restricted chunked prefill on Convertible Decoders), instances start up
-//! with realistic delays, and every completion's TTFT/TPOT is recorded.
+//! Drives a [`Coordinator`] (TokenScale or a baseline) over an arrival
+//! stream against a simulated PD-disaggregated cluster: prefillers process
+//! prompts, KVC moves across the interconnect, decoders run continuous
+//! batching (with restricted chunked prefill on Convertible Decoders),
+//! instances start up with realistic delays, and every completion's
+//! TTFT/TPOT is recorded.
+//!
+//! Arrivals are consumed incrementally from an [`ArrivalSource`]: the
+//! engine holds exactly one pending request and one scheduled `Arrival`
+//! event at a time, pulling the next from the stream when it fires — a
+//! multi-hour trace never has to exist as a materialized `Vec<Request>`
+//! (use [`simulate`] for a pre-built [`Trace`], [`simulate_source`] to
+//! stream).
 //!
 //! ## Event throughput
 //!
@@ -33,7 +41,7 @@ use super::instance::{ActiveSeq, LifeState, PrefillJob, RequestClock, Role};
 use super::policy::{Coordinator, Route, ScaleTargets};
 use crate::metrics::{MetricsRecorder, TimeSeries};
 use crate::perfmodel::LinkSpec;
-use crate::trace::Trace;
+use crate::trace::{ArrivalSource, Trace, TraceSliceSource};
 use crate::workload::{Completion, Request, RequestId, SloPolicy};
 use std::collections::{HashMap, VecDeque};
 
@@ -122,7 +130,12 @@ pub struct SimEngine<'a, C: Coordinator> {
     coordinator: &'a mut C,
     cluster: Cluster,
     events: EventQueue,
-    trace: &'a Trace,
+    arrivals: &'a mut dyn ArrivalSource,
+    /// Nominal workload horizon (from the source); drain extends past it.
+    duration_s: f64,
+    /// The single pending arrival pulled from the stream; its `Arrival`
+    /// event is already scheduled.
+    next_arrival: Option<Request>,
     now: f64,
     /// Gateway queue of prefill tasks with no feasible instance (Alg. 1).
     pending: VecDeque<Request>,
@@ -154,14 +167,17 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
         cfg: SimConfig,
         cluster_cfg: ClusterConfig,
         coordinator: &'a mut C,
-        trace: &'a Trace,
+        arrivals: &'a mut dyn ArrivalSource,
     ) -> Self {
+        let duration_s = arrivals.duration_s();
         SimEngine {
             cfg,
             coordinator,
             cluster: Cluster::new(cluster_cfg),
             events: EventQueue::new(),
-            trace,
+            arrivals,
+            duration_s,
+            next_arrival: None,
             now: 0.0,
             pending: VecDeque::new(),
             awaiting_decode: VecDeque::new(),
@@ -194,13 +210,15 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
         for _ in 0..self.cfg.initial_convertibles {
             self.cluster.spawn(Role::ConvertibleDecoder, 0.0, Some(0.0));
         }
-        for (i, r) in self.trace.requests.iter().enumerate() {
-            self.events.push(r.arrival, Event::Arrival(i));
+        // Prime the stream: exactly one arrival is pending at any time.
+        self.next_arrival = self.arrivals.next_request();
+        if let Some(r) = &self.next_arrival {
+            self.events.push(r.arrival.max(0.0), Event::Arrival);
         }
         self.events.push(0.0, Event::ControlTick);
         self.events.push(0.0, Event::SampleTick);
 
-        let horizon = self.trace.duration_s + self.cfg.drain_s;
+        let horizon = self.duration_s + self.cfg.drain_s;
         while let Some((t, ev)) = self.events.pop() {
             if t > horizon {
                 break;
@@ -209,7 +227,8 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
             self.events_processed += 1;
             self.handle(ev);
             // Stop early once all work has drained past the trace end.
-            if self.now > self.trace.duration_s
+            if self.now > self.duration_s
+                && self.next_arrival.is_none()
                 && self.pending.is_empty()
                 && self.awaiting_decode.is_empty()
                 && self.all_idle()
@@ -217,12 +236,13 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
                 break;
             }
         }
-        let end = self.now.max(self.trace.duration_s);
+        let end = self.now.max(self.duration_s);
         self.cluster.accrue_cost(end);
         self.metrics.gpu_seconds = self.cluster.gpu_seconds;
         // Cost is averaged over the actual busy horizon (trace + drain), so
         // a policy that leaves a long tail of unfinished work pays for it.
         self.metrics.horizon_s = end;
+        self.metrics.workload_s = self.duration_s;
         SimResult {
             metrics: self.metrics,
             series: self.series,
@@ -242,8 +262,23 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
 
     fn handle(&mut self, ev: Event) {
         match ev {
-            Event::Arrival(idx) => {
-                let req = self.trace.requests[idx].clone();
+            Event::Arrival => {
+                let Some(req) = self.next_arrival.take() else {
+                    return;
+                };
+                // Pull the successor and schedule its event before
+                // dispatching, so the stream stays exactly one ahead.
+                self.next_arrival = self.arrivals.next_request();
+                if let Some(n) = &self.next_arrival {
+                    debug_assert!(
+                        n.arrival >= req.arrival,
+                        "arrival source must be time-sorted ({} after {})",
+                        n.arrival,
+                        req.arrival
+                    );
+                    self.events.push(n.arrival.max(self.now), Event::Arrival);
+                }
+                self.metrics.note_arrival(&req);
                 self.clocks
                     .insert(req.id, RequestClock::at_arrival(req.id, req.arrival));
                 self.coordinator.observe_arrival(self.now, &req);
@@ -902,14 +937,28 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
     }
 }
 
-/// Convenience wrapper: build and run a simulation.
+/// Convenience wrapper: build and run a simulation over a materialized
+/// trace (replayed through the streaming arrival path).
 pub fn simulate<C: Coordinator>(
     cfg: SimConfig,
     cluster_cfg: ClusterConfig,
     coordinator: &mut C,
     trace: &Trace,
 ) -> SimResult {
-    SimEngine::new(cfg, cluster_cfg, coordinator, trace).run()
+    let mut src = TraceSliceSource::new(trace);
+    SimEngine::new(cfg, cluster_cfg, coordinator, &mut src).run()
+}
+
+/// Build and run a simulation over a streaming arrival source — the
+/// native entry point: the workload is pulled one request at a time, so
+/// hour-scale traces never materialize.
+pub fn simulate_source<C: Coordinator>(
+    cfg: SimConfig,
+    cluster_cfg: ClusterConfig,
+    coordinator: &mut C,
+    arrivals: &mut dyn ArrivalSource,
+) -> SimResult {
+    SimEngine::new(cfg, cluster_cfg, coordinator, arrivals).run()
 }
 
 #[cfg(test)]
@@ -956,6 +1005,35 @@ mod tests {
             assert!(c.tpot >= 0.0);
         }
         assert!(res.events_processed > 0);
+    }
+
+    #[test]
+    fn streaming_source_matches_preloaded_trace() {
+        // The trace-wrapper path and a true streaming source must drive
+        // the engine identically: same completions, same event count.
+        let trace = step_trace(4.0, 4.0, 0.0, 0.0, 20.0, 256, 64, 12);
+        let cfg = SimConfig {
+            initial_prefillers: 2,
+            initial_decoders: 2,
+            ..Default::default()
+        };
+        let mut coord_a = StaticCoordinator::new(2, 2);
+        let a = simulate(cfg.clone(), cluster_cfg(16), &mut coord_a, &trace);
+        let mut coord_b = StaticCoordinator::new(2, 2);
+        let mut src = crate::trace::OwnedTraceSource::new(trace.clone());
+        let b = simulate_source(cfg, cluster_cfg(16), &mut coord_b, &mut src);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.metrics.completions.len(), b.metrics.completions.len());
+        for (x, y) in a.metrics.completions.iter().zip(&b.metrics.completions) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.ttft, y.ttft);
+            assert_eq!(x.tpot, y.tpot);
+            assert_eq!(x.finish, y.finish);
+        }
+        // Online arrival stats match the trace scans they replace.
+        assert_eq!(b.metrics.arrivals, trace.requests.len());
+        assert_eq!(b.metrics.avg_arrival_input_tokens(), trace.avg_input_tokens());
+        assert_eq!(b.metrics.avg_arrival_output_tokens(), trace.avg_output_tokens());
     }
 
     #[test]

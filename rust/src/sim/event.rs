@@ -44,8 +44,10 @@ impl fmt::Display for InstanceId {
 /// Everything that can happen in the simulated cluster.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Event {
-    /// A request arrives at the gateway (index into the trace).
-    Arrival(usize),
+    /// The next pending arrival from the streaming source reaches the
+    /// gateway (the engine holds the request itself and schedules one
+    /// arrival event at a time).
+    Arrival,
     /// Periodic control-plane tick: autoscaling + queue re-evaluation.
     ControlTick,
     /// A prefiller finished the prefill of `req`.
@@ -66,10 +68,20 @@ pub enum Event {
     SampleTick,
 }
 
-/// Heap entry ordered by (time, seq) so simultaneous events pop FIFO.
+/// Heap entry ordered by (time, class rank, seq): simultaneous events pop
+/// arrivals first, then FIFO.
+///
+/// The arrival-first rank preserves the pre-streaming engine's tie
+/// semantics: when every arrival was preloaded at init, an arrival
+/// coinciding exactly with a control/sample tick (common with replay
+/// files carrying coarse, tick-aligned timestamps) always carried a lower
+/// insertion seq and popped first. With arrivals now scheduled
+/// just-in-time their seqs are late, so the rank makes the old ordering
+/// explicit instead of an accident of preloading.
 #[derive(Clone, Debug)]
 struct Scheduled {
     time: f64,
+    rank: u8,
     seq: u64,
     event: Event,
 }
@@ -92,6 +104,7 @@ impl Ord for Scheduled {
             .time
             .partial_cmp(&self.time)
             .unwrap_or(Ordering::Equal)
+            .then(other.rank.cmp(&self.rank))
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -110,8 +123,10 @@ impl EventQueue {
 
     pub fn push(&mut self, time: f64, event: Event) {
         debug_assert!(time.is_finite(), "non-finite event time");
+        let rank = if matches!(event, Event::Arrival) { 0 } else { 1 };
         self.heap.push(Scheduled {
             time,
+            rank,
             seq: self.seq,
             event,
         });
@@ -143,7 +158,7 @@ mod tests {
     fn pops_in_time_order() {
         let mut q = EventQueue::new();
         q.push(3.0, Event::ControlTick);
-        q.push(1.0, Event::Arrival(0));
+        q.push(1.0, Event::Arrival);
         q.push(2.0, Event::SampleTick);
         assert_eq!(q.pop().unwrap().0, 1.0);
         assert_eq!(q.pop().unwrap().0, 2.0);
@@ -153,14 +168,28 @@ mod tests {
 
     #[test]
     fn ties_are_fifo() {
+        let ev = |req: u64| Event::PrefillDone {
+            instance: InstanceId::new(0, 0),
+            req,
+        };
         let mut q = EventQueue::new();
-        q.push(1.0, Event::Arrival(1));
-        q.push(1.0, Event::Arrival(2));
-        q.push(1.0, Event::Arrival(3));
+        q.push(1.0, ev(1));
+        q.push(1.0, ev(2));
+        q.push(1.0, ev(3));
         let order: Vec<Event> = (0..3).map(|_| q.pop().unwrap().1).collect();
-        assert_eq!(
-            order,
-            vec![Event::Arrival(1), Event::Arrival(2), Event::Arrival(3)]
-        );
+        assert_eq!(order, vec![ev(1), ev(2), ev(3)]);
+    }
+
+    #[test]
+    fn arrival_wins_exact_time_ties() {
+        // A just-in-time-scheduled arrival coinciding with an earlier-
+        // pushed tick must still pop first (pre-streaming semantics).
+        let mut q = EventQueue::new();
+        q.push(1.0, Event::ControlTick);
+        q.push(1.0, Event::SampleTick);
+        q.push(1.0, Event::Arrival);
+        assert_eq!(q.pop().unwrap().1, Event::Arrival);
+        assert_eq!(q.pop().unwrap().1, Event::ControlTick);
+        assert_eq!(q.pop().unwrap().1, Event::SampleTick);
     }
 }

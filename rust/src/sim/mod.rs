@@ -12,7 +12,7 @@ pub mod instance;
 pub mod policy;
 
 pub use cluster::{Cluster, ClusterConfig};
-pub use engine::{simulate, SimConfig, SimEngine, SimResult, SimSeries};
+pub use engine::{simulate, simulate_source, SimConfig, SimEngine, SimResult, SimSeries};
 pub use event::{Event, EventQueue, InstanceId};
 pub use instance::{ActiveSeq, Instance, LifeState, PrefillJob, RequestClock, Role};
 pub use policy::{Coordinator, Route, ScaleTargets, StaticCoordinator};

@@ -1,8 +1,16 @@
-//! Trace generation: turn a [`TraceSpec`] into a concrete, time-ordered
-//! request sequence, plus the synthetic step/burst traces used by the
-//! paper's microbenchmarks (Figs. 4, 6, 10).
+//! Trace generation: lazy, streaming generators that turn a
+//! [`TraceSpec`] into a time-ordered request stream ([`SpecSource`],
+//! [`MixedSource`]), the materialized [`Trace`] container, and the
+//! synthetic step/burst traces used by the paper's microbenchmarks
+//! (Figs. 4, 6, 10).
+//!
+//! `generate(spec, seed)` is now a thin wrapper that drains the streaming
+//! generator; `rust/tests/trace_streaming.rs` pins the stream to the
+//! byte-identical sequence the pre-streaming eager generator produced.
 
+use super::source::{materialize, ArrivalSource, TraceProfile, TraceSliceSource};
 use super::spec::{base_families, TraceFamily, TraceSpec};
+use super::transform::Resample;
 use crate::util::rng::Pcg64;
 use crate::workload::Request;
 
@@ -49,34 +57,18 @@ impl Trace {
     /// Resample to a target average RPS by uniform thinning (the paper's
     /// §V sampling to 22 RPS) or by duplication with jitter when the target
     /// exceeds the source rate.
+    ///
+    /// Implemented on the streaming [`Resample`] combinator, which fixes
+    /// the old duplication path: output arrivals stay time-sorted (the
+    /// jittered copies go through a reorder buffer) and ids are
+    /// re-sequenced 0..n in emission order, deterministically from a
+    /// generator forked off `rng`.
     pub fn resample_to_rps(&self, target_rps: f64, rng: &mut Pcg64) -> Trace {
-        let cur = self.avg_rps();
-        if cur <= 0.0 {
+        if self.avg_rps() <= 0.0 {
             return self.clone();
         }
-        let keep = target_rps / cur;
-        let mut requests = Vec::new();
-        let mut id = 0u64;
-        for r in &self.requests {
-            let mut copies = keep.floor() as usize;
-            if rng.f64() < keep - keep.floor() {
-                copies += 1;
-            }
-            for c in 0..copies {
-                let jitter = if c == 0 { 0.0 } else { rng.range_f64(0.0, 0.050) };
-                let mut nr = r.clone();
-                nr.id = id;
-                nr.arrival = (r.arrival + jitter).min(self.duration_s);
-                id += 1;
-                requests.push(nr);
-            }
-        }
-        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
-        Trace {
-            name: self.name.clone(),
-            duration_s: self.duration_s,
-            requests,
-        }
+        let mut rs = Resample::new(TraceSliceSource::new(self), target_rps, rng.fork());
+        materialize(&mut rs)
     }
 }
 
@@ -84,103 +76,241 @@ fn sample_len(rng: &mut Pcg64, d: &super::spec::LenDist) -> usize {
     (rng.lognormal(d.mu, d.sigma).round() as usize).clamp(d.min, d.max)
 }
 
-/// Generate a trace from a spec. Deterministic for a given seed.
+/// Streaming generator for one [`TraceSpec`]. Deterministic per seed.
 ///
 /// The arrival process is a two-state Markov-modulated Gamma renewal
 /// process: stable ↔ burst episodes (Exp-distributed lengths), with the
 /// stable/burst rates solved so that the long-run average hits `spec.rps`
 /// and the burst occupancy matches `spec.burst.time_fraction`. A slow
 /// sinusoid modulates both, giving the trend the paper's running-average
-/// plots show.
-pub fn generate(spec: &TraceSpec, seed: u64) -> Trace {
-    let mut rng = Pcg64::new(seed);
-    let mut arrivals_rng = rng.fork();
-    let mut len_rng = rng.fork();
-    let mut episode_rng = rng.fork();
+/// plots show. State (three independent rng streams, episode machine,
+/// clock) lives on the source, so a multi-hour trace is generated one
+/// arrival at a time instead of as a up-front `Vec`.
+pub struct SpecSource {
+    spec: TraceSpec,
+    arrivals_rng: Pcg64,
+    len_rng: Pcg64,
+    episode_rng: Pcg64,
+    r_stable: f64,
+    r_burst: f64,
+    mean_stable_gap: f64,
+    t: f64,
+    in_burst: bool,
+    phase_end: f64,
+    next_id: u64,
+    done: bool,
+}
 
-    let bf = &spec.burst;
-    // Solve stable rate r_s from: f*k*r_s + (1-f)*r_s = rps
-    let r_stable = spec.rps / (bf.time_fraction * bf.rate_factor + (1.0 - bf.time_fraction));
-    let r_burst = r_stable * bf.rate_factor;
-    // Episode dynamics: mean burst length given; mean stable gap from
-    // occupancy: f = mean_burst / (mean_burst + mean_stable).
-    let mean_stable_gap = if bf.time_fraction > 0.0 {
-        bf.mean_len_s * (1.0 - bf.time_fraction) / bf.time_fraction
-    } else {
-        f64::INFINITY
-    };
+impl SpecSource {
+    pub fn new(spec: TraceSpec, seed: u64) -> SpecSource {
+        let mut rng = Pcg64::new(seed);
+        let arrivals_rng = rng.fork();
+        let len_rng = rng.fork();
+        let mut episode_rng = rng.fork();
 
-    let mut requests = Vec::with_capacity((spec.rps * spec.duration_s) as usize + 16);
-    let mut t = 0.0f64;
-    let mut in_burst = false;
-    let mut phase_end = if mean_stable_gap.is_finite() {
-        episode_rng.exponential(1.0 / mean_stable_gap)
-    } else {
-        f64::INFINITY
-    };
-    let mut id = 0u64;
+        let bf = &spec.burst;
+        // Solve stable rate r_s from: f*k*r_s + (1-f)*r_s = rps
+        let r_stable = spec.rps / (bf.time_fraction * bf.rate_factor + (1.0 - bf.time_fraction));
+        let r_burst = r_stable * bf.rate_factor;
+        // Episode dynamics: mean burst length given; mean stable gap from
+        // occupancy: f = mean_burst / (mean_burst + mean_stable).
+        let mean_stable_gap = if bf.time_fraction > 0.0 {
+            bf.mean_len_s * (1.0 - bf.time_fraction) / bf.time_fraction
+        } else {
+            f64::INFINITY
+        };
+        let phase_end = if mean_stable_gap.is_finite() {
+            episode_rng.exponential(1.0 / mean_stable_gap)
+        } else {
+            f64::INFINITY
+        };
 
-    while t < spec.duration_s {
+        SpecSource {
+            spec,
+            arrivals_rng,
+            len_rng,
+            episode_rng,
+            r_stable,
+            r_burst,
+            mean_stable_gap,
+            t: 0.0,
+            in_burst: false,
+            phase_end,
+            next_id: 0,
+            done: false,
+        }
+    }
+}
+
+impl ArrivalSource for SpecSource {
+    fn next_request(&mut self) -> Option<Request> {
+        // One resumption of the eager generator's loop body: either the
+        // clock is already past the horizon (stream exhausted), or one
+        // more renewal step lands inside it and yields a request.
+        if self.done || self.t >= self.spec.duration_s {
+            self.done = true;
+            return None;
+        }
         // Advance episode state machine past `t`.
-        while t >= phase_end {
-            in_burst = !in_burst;
-            let mean = if in_burst { bf.mean_len_s } else { mean_stable_gap };
-            phase_end += episode_rng.exponential(1.0 / mean);
+        while self.t >= self.phase_end {
+            self.in_burst = !self.in_burst;
+            let mean = if self.in_burst {
+                self.spec.burst.mean_len_s
+            } else {
+                self.mean_stable_gap
+            };
+            self.phase_end += self.episode_rng.exponential(1.0 / mean);
         }
-        let diurnal =
-            1.0 + spec.diurnal_amplitude * (2.0 * std::f64::consts::PI * t / spec.diurnal_period_s).sin();
-        let rate = (if in_burst { r_burst } else { r_stable }) * diurnal.max(0.05);
+        let diurnal = 1.0
+            + self.spec.diurnal_amplitude
+                * (2.0 * std::f64::consts::PI * self.t / self.spec.diurnal_period_s).sin();
+        let rate = (if self.in_burst { self.r_burst } else { self.r_stable }) * diurnal.max(0.05);
         // Gamma renewal with shape k and mean 1/rate → scale = 1/(k*rate).
-        let k = spec.arrival_shape;
-        let gap = arrivals_rng.gamma(k, 1.0 / (k * rate));
-        t += gap;
-        if t >= spec.duration_s {
-            break;
+        let k = self.spec.arrival_shape;
+        let gap = self.arrivals_rng.gamma(k, 1.0 / (k * rate));
+        self.t += gap;
+        if self.t >= self.spec.duration_s {
+            self.done = true;
+            return None;
         }
-        let input = sample_len(&mut len_rng, &spec.input_len);
-        let output = sample_len(&mut len_rng, &spec.output_len);
-        requests.push(Request::new(id, t, input, output));
-        id += 1;
+        let input = sample_len(&mut self.len_rng, &self.spec.input_len);
+        let output = sample_len(&mut self.len_rng, &self.spec.output_len);
+        let req = Request::new(self.next_id, self.t, input, output);
+        self.next_id += 1;
+        Some(req)
     }
 
-    Trace {
-        name: spec.name.clone(),
-        duration_s: spec.duration_s,
-        requests,
+    fn duration_s(&self) -> f64 {
+        self.spec.duration_s
+    }
+
+    fn label(&self) -> String {
+        self.spec.name.clone()
+    }
+
+    fn profile(&self) -> TraceProfile {
+        TraceProfile {
+            avg_rps: self.spec.rps,
+            avg_input_tokens: self.spec.input_len.mean(),
+            avg_output_tokens: self.spec.output_len.mean(),
+            duration_s: self.spec.duration_s,
+        }
     }
 }
 
-/// Generate a family trace at the given rate/duration.
-pub fn generate_family(family: TraceFamily, rps: f64, duration_s: f64, seed: u64) -> Trace {
+/// Streaming Mixed workload: Azure Conversation + Azure Code +
+/// BurstGPT 1/2 interleaved at equal request rates (§V Workload
+/// Generation) via a 4-way time-ordered merge, ids re-sequenced at
+/// emission. Ties break toward the lower family index, matching the
+/// stable sort of the eager implementation.
+pub struct MixedSource {
+    subs: Vec<SpecSource>,
+    peeked: Vec<Option<Request>>,
+    total_rps: f64,
+    duration_s: f64,
+    next_id: u64,
+}
+
+impl MixedSource {
+    pub fn new(total_rps: f64, duration_s: f64, seed: u64) -> MixedSource {
+        let per = total_rps / 4.0;
+        let mut subs: Vec<SpecSource> = base_families()
+            .into_iter()
+            .enumerate()
+            .map(|(i, fam)| SpecSource::new(fam.spec(per, duration_s), seed.wrapping_add(i as u64 * 7919)))
+            .collect();
+        let peeked = subs.iter_mut().map(|s| s.next_request()).collect();
+        MixedSource {
+            subs,
+            peeked,
+            total_rps,
+            duration_s,
+            next_id: 0,
+        }
+    }
+}
+
+impl ArrivalSource for MixedSource {
+    fn next_request(&mut self) -> Option<Request> {
+        let mut best: Option<usize> = None;
+        for (i, p) in self.peeked.iter().enumerate() {
+            if let Some(r) = p {
+                let better = match best {
+                    None => true,
+                    Some(b) => r.arrival < self.peeked[b].as_ref().unwrap().arrival,
+                };
+                if better {
+                    best = Some(i);
+                }
+            }
+        }
+        let b = best?;
+        let mut r = self.peeked[b].take().unwrap();
+        self.peeked[b] = self.subs[b].next_request();
+        r.id = self.next_id;
+        self.next_id += 1;
+        Some(r)
+    }
+
+    fn duration_s(&self) -> f64 {
+        self.duration_s
+    }
+
+    fn label(&self) -> String {
+        "mixed".into()
+    }
+
+    fn profile(&self) -> TraceProfile {
+        let fams = base_families();
+        let n = fams.len() as f64;
+        let mut avg_in = 0.0;
+        let mut avg_out = 0.0;
+        for fam in fams {
+            let s = fam.spec(self.total_rps / n, self.duration_s);
+            avg_in += s.input_len.mean() / n;
+            avg_out += s.output_len.mean() / n;
+        }
+        TraceProfile {
+            avg_rps: self.total_rps,
+            avg_input_tokens: avg_in,
+            avg_output_tokens: avg_out,
+            duration_s: self.duration_s,
+        }
+    }
+}
+
+/// Build the streaming source for a trace family (the factory the grid
+/// runner hands to each worker).
+pub fn family_source(family: TraceFamily, rps: f64, duration_s: f64, seed: u64) -> Box<dyn ArrivalSource + Send> {
     if family == TraceFamily::Mixed {
-        return generate_mixed(rps, duration_s, seed);
+        Box::new(MixedSource::new(rps, duration_s, seed))
+    } else {
+        Box::new(SpecSource::new(family.spec(rps, duration_s), seed))
     }
-    generate(&family.spec(rps, duration_s), seed)
 }
 
-/// The paper's Mixed trace: Azure Conversation + Azure Code + BurstGPT 1/2
-/// interleaved at equal request rates (§V Workload Generation).
+/// Generate a materialized trace from a spec. Deterministic for a given
+/// seed; drains [`SpecSource`], whose sequence is pinned to the old eager
+/// generator by the streaming-equivalence tests.
+pub fn generate(spec: &TraceSpec, seed: u64) -> Trace {
+    materialize(&mut SpecSource::new(spec.clone(), seed))
+}
+
+/// Generate a materialized family trace at the given rate/duration.
+pub fn generate_family(family: TraceFamily, rps: f64, duration_s: f64, seed: u64) -> Trace {
+    let mut src = family_source(family, rps, duration_s, seed);
+    materialize(&mut src)
+}
+
+/// The paper's Mixed trace, materialized (see [`MixedSource`]).
 pub fn generate_mixed(total_rps: f64, duration_s: f64, seed: u64) -> Trace {
-    let per = total_rps / 4.0;
-    let mut requests = Vec::new();
-    for (i, fam) in base_families().into_iter().enumerate() {
-        let sub = generate(&fam.spec(per, duration_s), seed.wrapping_add(i as u64 * 7919));
-        requests.extend(sub.requests);
-    }
-    requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
-    for (i, r) in requests.iter_mut().enumerate() {
-        r.id = i as u64;
-    }
-    Trace {
-        name: "mixed".into(),
-        duration_s,
-        requests,
-    }
+    materialize(&mut MixedSource::new(total_rps, duration_s, seed))
 }
 
 /// A step trace: stable `base_rps`, jumping to `burst_rps` during
 /// [t_start, t_start + burst_len), then back — the §II-C2 and Fig. 10
 /// microbenchmark shape. Lengths are fixed for determinism.
+#[allow(clippy::too_many_arguments)]
 pub fn step_trace(
     base_rps: f64,
     burst_rps: f64,
@@ -269,6 +399,18 @@ mod tests {
     }
 
     #[test]
+    fn streaming_source_matches_materialized() {
+        let spec = TraceFamily::BurstGpt1.spec(8.0, 90.0);
+        let eager = generate(&spec, 5);
+        let mut src = SpecSource::new(spec, 5);
+        let mut streamed = Vec::new();
+        while let Some(r) = src.next_request() {
+            streamed.push(r);
+        }
+        assert_eq!(streamed, eager.requests);
+    }
+
+    #[test]
     fn arrivals_sorted_and_bounded() {
         let spec = TraceFamily::BurstGpt2.spec(15.0, 120.0);
         let t = generate(&spec, 3);
@@ -287,6 +429,9 @@ mod tests {
         // IDs reassigned contiguous
         assert_eq!(t.requests.first().unwrap().id, 0);
         assert_eq!(t.requests.last().unwrap().id as usize, t.requests.len() - 1);
+        for w in t.requests.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
     }
 
     #[test]
@@ -296,6 +441,28 @@ mod tests {
         let mut rng = Pcg64::new(1);
         let half = t.resample_to_rps(10.0, &mut rng);
         assert!((half.avg_rps() - 10.0).abs() < 1.5, "rps={}", half.avg_rps());
+    }
+
+    #[test]
+    fn resample_duplication_stays_sorted_with_sequential_ids() {
+        // Regression: the old duplication path jittered copies after id
+        // assignment and sorted afterwards, leaving ids out of arrival
+        // order. Sort-and-compare must now be a no-op.
+        let spec = TraceFamily::AzureConv.spec(8.0, 120.0);
+        let t = generate(&spec, 21);
+        let mut rng = Pcg64::new(9);
+        let up = t.resample_to_rps(24.0, &mut rng);
+        assert!((up.avg_rps() - 24.0).abs() < 3.0, "rps={}", up.avg_rps());
+        let mut sorted = up.requests.clone();
+        sorted.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        assert_eq!(sorted, up.requests, "duplication must keep arrivals time-sorted");
+        for (i, r) in up.requests.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "ids must be re-sequenced in arrival order");
+        }
+        // Deterministic from the caller's rng state.
+        let mut rng2 = Pcg64::new(9);
+        let up2 = t.resample_to_rps(24.0, &mut rng2);
+        assert_eq!(up.requests, up2.requests);
     }
 
     #[test]

@@ -1,13 +1,30 @@
-//! Synthetic workload traces.
+//! Workload traces: streaming arrival pipeline + synthetic generators.
 //!
 //! Substitute for the paper's Azure LLM-inference and BurstGPT production
-//! traces (unavailable offline): parameterized generators reproducing the
-//! published burstiness and length statistics, plus the running-average
-//! burst analytics of §II-C1.
+//! traces (unavailable offline): parameterized streaming generators
+//! reproducing the published burstiness and length statistics
+//! ([`gen::SpecSource`]), a replay loader for Azure-style CSV/JSONL trace
+//! files ([`replay`]), composable transform combinators ([`transform`]),
+//! and the running-average burst analytics of §II-C1 ([`burst`]).
+//!
+//! Everything downstream consumes the pull-based [`ArrivalSource`] trait;
+//! [`materialize`] bridges to the eager [`Trace`] container where a full
+//! vector is genuinely needed.
 
 pub mod burst;
 pub mod gen;
+pub mod replay;
+pub mod source;
 pub mod spec;
+pub mod transform;
 
-pub use gen::{fig6_trace, generate, generate_family, generate_mixed, step_trace, Trace};
+pub use gen::{
+    family_source, fig6_trace, generate, generate_family, generate_mixed, step_trace, MixedSource,
+    SpecSource, Trace,
+};
+pub use source::{
+    materialize, ArrivalSource, OwnedTraceSource, SourceFactory, TraceProfile, TraceReplaySource,
+    TraceSliceSource,
+};
 pub use spec::{base_families, BurstModel, LenDist, TraceFamily, TraceSpec};
+pub use transform::{BurstInject, BurstWindow, Diurnal, RateScale, Resample, SourceExt, Window};

@@ -1,0 +1,362 @@
+//! Trace replay: load and save Azure-LLM-style trace files.
+//!
+//! Two formats, no external dependencies (the JSONL path reuses
+//! `util/json.rs`):
+//!
+//! - **CSV** — a header row naming an arrival-time column and the two
+//!   token-count columns, then one record per line. Header aliases match
+//!   the public Azure LLM inference traces (`TIMESTAMP`,
+//!   `ContextTokens`, `GeneratedTokens`) as well as our canonical
+//!   `arrival_s,input_tokens,output_tokens`. Lines starting with `#` are
+//!   comments; a `# duration_s=<x>` comment pins the trace horizon.
+//! - **JSONL** — one JSON object per line with the same field aliases. A
+//!   record containing `duration_s` and no arrival field is metadata.
+//!
+//! Without explicit metadata the horizon defaults to the last arrival
+//! rounded up to a whole second. Records are stably sorted by arrival and
+//! ids are re-sequenced 0..n on load, so a save → load round trip of any
+//! well-formed trace (sorted, sequential ids) is lossless: arrival times
+//! are emitted with Rust's shortest-round-trip float formatting.
+
+use super::gen::Trace;
+use crate::util::json::Json;
+use crate::workload::Request;
+use std::path::Path;
+
+/// Column aliases accepted for each field (lowercased for matching).
+const ARRIVAL_KEYS: &[&str] = &["arrival_s", "arrival", "timestamp", "ts", "time"];
+const INPUT_KEYS: &[&str] = &["input_tokens", "contexttokens", "context_tokens", "prompt_tokens", "input"];
+const OUTPUT_KEYS: &[&str] = &["output_tokens", "generatedtokens", "generated_tokens", "output"];
+
+fn match_key(name: &str, aliases: &[&str]) -> bool {
+    let n = name.trim().to_ascii_lowercase();
+    aliases.iter().any(|a| *a == n)
+}
+
+/// Finalize parsed rows into a [`Trace`]: stable-sort by arrival,
+/// re-sequence ids, resolve the horizon.
+fn finish(name: &str, mut rows: Vec<(f64, usize, usize)>, duration_s: Option<f64>) -> anyhow::Result<Trace> {
+    anyhow::ensure!(!rows.is_empty(), "replay file contains no records");
+    rows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    let last = rows.last().map(|r| r.0).unwrap_or(0.0);
+    let duration = duration_s.unwrap_or_else(|| last.ceil().max(1.0));
+    anyhow::ensure!(
+        duration.is_finite() && duration > 0.0,
+        "declared duration_s {duration} must be finite and positive"
+    );
+    anyhow::ensure!(
+        duration >= last,
+        "declared duration_s {duration} precedes last arrival {last}"
+    );
+    let requests = rows
+        .into_iter()
+        .enumerate()
+        .map(|(i, (t, inp, out))| Request::new(i as u64, t, inp, out))
+        .collect();
+    Ok(Trace {
+        name: name.to_string(),
+        duration_s: duration,
+        requests,
+    })
+}
+
+/// Parse a `# key=value` comment; returns the declared duration if the
+/// line carries one.
+fn comment_duration(line: &str) -> Option<f64> {
+    let body = line.trim_start_matches('#').trim();
+    for part in body.split_whitespace() {
+        if let Some(v) = part.strip_prefix("duration_s=") {
+            return v.parse::<f64>().ok();
+        }
+    }
+    None
+}
+
+/// Parse CSV replay text into a trace named `name`.
+pub fn parse_csv(text: &str, name: &str) -> anyhow::Result<Trace> {
+    let mut duration: Option<f64> = None;
+    let mut cols: Option<(usize, usize, usize)> = None;
+    let mut rows: Vec<(f64, usize, usize)> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('#') {
+            if let Some(d) = comment_duration(line) {
+                duration = Some(d);
+            }
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        if cols.is_none() {
+            // Header row: locate each column by alias. A header is
+            // required — Azure-style exports always carry one.
+            let find = |aliases: &[&str]| fields.iter().position(|f| match_key(f, aliases));
+            let (Some(a), Some(i), Some(o)) = (find(ARRIVAL_KEYS), find(INPUT_KEYS), find(OUTPUT_KEYS)) else {
+                anyhow::bail!(
+                    "line {}: CSV header must name arrival/input/output columns \
+                     (e.g. `arrival_s,input_tokens,output_tokens`), got `{line}`",
+                    lineno + 1
+                );
+            };
+            cols = Some((a, i, o));
+            continue;
+        }
+        let (a, i, o) = cols.unwrap();
+        let need = a.max(i).max(o);
+        anyhow::ensure!(
+            fields.len() > need,
+            "line {}: expected at least {} comma-separated fields, got {}",
+            lineno + 1,
+            need + 1,
+            fields.len()
+        );
+        let arrival: f64 = fields[a]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("line {}: bad arrival `{}`", lineno + 1, fields[a]))?;
+        let input: usize = fields[i]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("line {}: bad input tokens `{}`", lineno + 1, fields[i]))?;
+        let output: usize = fields[o]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("line {}: bad output tokens `{}`", lineno + 1, fields[o]))?;
+        anyhow::ensure!(
+            arrival.is_finite() && arrival >= 0.0,
+            "line {}: arrival must be finite and >= 0",
+            lineno + 1
+        );
+        rows.push((arrival, input, output));
+    }
+    finish(name, rows, duration)
+}
+
+/// Pull a numeric field from a JSON object by alias list.
+fn json_field(obj: &Json, aliases: &[&str]) -> Option<f64> {
+    if let Json::Obj(m) = obj {
+        for (k, v) in m {
+            if match_key(k, aliases) {
+                return v.as_f64();
+            }
+        }
+    }
+    None
+}
+
+/// Parse JSONL replay text into a trace named `name`.
+pub fn parse_jsonl(text: &str, name: &str) -> anyhow::Result<Trace> {
+    let mut duration: Option<f64> = None;
+    let mut rows: Vec<(f64, usize, usize)> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('#') {
+            if let Some(d) = comment_duration(line) {
+                duration = Some(d);
+            }
+            continue;
+        }
+        let obj = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("line {}: invalid JSON record: {e}", lineno + 1))?;
+        let arrival = json_field(&obj, ARRIVAL_KEYS);
+        if arrival.is_none() {
+            // Metadata record (e.g. `{"duration_s": 7200}`).
+            if let Some(d) = obj.get("duration_s").and_then(Json::as_f64) {
+                duration = Some(d);
+                continue;
+            }
+            anyhow::bail!("line {}: record has no arrival field", lineno + 1);
+        }
+        let arrival = arrival.unwrap();
+        let input = json_field(&obj, INPUT_KEYS)
+            .ok_or_else(|| anyhow::anyhow!("line {}: record has no input-token field", lineno + 1))?;
+        let output = json_field(&obj, OUTPUT_KEYS)
+            .ok_or_else(|| anyhow::anyhow!("line {}: record has no output-token field", lineno + 1))?;
+        anyhow::ensure!(
+            arrival.is_finite() && arrival >= 0.0,
+            "line {}: arrival must be finite and >= 0",
+            lineno + 1
+        );
+        // Match the CSV path's strictness: token counts must be
+        // non-negative integers (a bare `as usize` would silently
+        // saturate -100 to 0 and truncate 10.7 to 10).
+        for (label, v) in [("input", input), ("output", output)] {
+            anyhow::ensure!(
+                v.is_finite() && v >= 0.0 && v.fract() == 0.0,
+                "line {}: {label} tokens must be a non-negative integer, got {v}",
+                lineno + 1
+            );
+        }
+        rows.push((arrival, input as usize, output as usize));
+    }
+    finish(name, rows, duration)
+}
+
+/// Serialize a trace to canonical CSV (`# duration_s` comment + header +
+/// one row per request, shortest-round-trip floats).
+pub fn to_csv(trace: &Trace) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("# duration_s={}\n", trace.duration_s));
+    out.push_str("arrival_s,input_tokens,output_tokens\n");
+    for r in &trace.requests {
+        out.push_str(&format!("{},{},{}\n", r.arrival, r.input_tokens, r.output_tokens));
+    }
+    out
+}
+
+/// Serialize a trace to canonical JSONL (metadata record first).
+pub fn to_jsonl(trace: &Trace) -> String {
+    let mut out = String::new();
+    out.push_str(&Json::obj().set("duration_s", trace.duration_s).to_string());
+    out.push('\n');
+    for r in &trace.requests {
+        let rec = Json::obj()
+            .set("arrival_s", r.arrival)
+            .set("input_tokens", r.input_tokens)
+            .set("output_tokens", r.output_tokens);
+        out.push_str(&rec.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Does the path look like JSONL (vs CSV)?
+fn is_jsonl(path: &Path) -> bool {
+    matches!(
+        path.extension().and_then(|e| e.to_str()).map(|e| e.to_ascii_lowercase()).as_deref(),
+        Some("jsonl") | Some("ndjson") | Some("json")
+    )
+}
+
+fn stem_name(path: &Path) -> String {
+    path.file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("replay")
+        .to_string()
+}
+
+/// Load a replay file, dispatching on extension (`.csv` vs
+/// `.jsonl`/`.ndjson`/`.json`); unknown extensions are sniffed from the
+/// first non-comment byte.
+pub fn load_path(path: &Path) -> anyhow::Result<Trace> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let name = stem_name(path);
+    if is_jsonl(path) {
+        return parse_jsonl(&text, &name);
+    }
+    if path.extension().and_then(|e| e.to_str()).map(|e| e.eq_ignore_ascii_case("csv")) == Some(true) {
+        return parse_csv(&text, &name);
+    }
+    let first = text
+        .lines()
+        .map(str::trim)
+        .find(|l| !l.is_empty() && !l.starts_with('#'));
+    match first {
+        Some(l) if l.starts_with('{') => parse_jsonl(&text, &name),
+        _ => parse_csv(&text, &name),
+    }
+}
+
+/// Save a trace to `path`, format chosen by extension (CSV unless the
+/// extension says JSONL).
+pub fn save_path(path: &Path, trace: &Trace) -> anyhow::Result<()> {
+    let text = if is_jsonl(path) {
+        to_jsonl(trace)
+    } else {
+        to_csv(trace)
+    };
+    std::fs::write(path, text).map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::gen::generate;
+    use crate::trace::spec::TraceFamily;
+
+    fn sample() -> Trace {
+        generate(&TraceFamily::AzureConv.spec(5.0, 60.0), 3)
+    }
+
+    #[test]
+    fn csv_round_trip_is_lossless() {
+        let t = sample();
+        let text = to_csv(&t);
+        let back = parse_csv(&text, &t.name).unwrap();
+        assert_eq!(back.requests, t.requests);
+        assert_eq!(back.duration_s, t.duration_s);
+        // Stable canonical form: serialize(parse(serialize(x))) == serialize(x).
+        assert_eq!(to_csv(&back), text);
+    }
+
+    #[test]
+    fn jsonl_round_trip_is_lossless() {
+        let t = sample();
+        let text = to_jsonl(&t);
+        let back = parse_jsonl(&text, &t.name).unwrap();
+        assert_eq!(back.requests, t.requests);
+        assert_eq!(back.duration_s, t.duration_s);
+        assert_eq!(to_jsonl(&back), text);
+    }
+
+    #[test]
+    fn cross_format_conversion_preserves_requests() {
+        let t = sample();
+        let via_jsonl = parse_jsonl(&to_jsonl(&t), "x").unwrap();
+        let via_csv = parse_csv(&to_csv(&via_jsonl), "x").unwrap();
+        assert_eq!(via_csv.requests, t.requests);
+        assert_eq!(via_csv.duration_s, t.duration_s);
+    }
+
+    #[test]
+    fn azure_style_headers_are_accepted() {
+        let text = "TIMESTAMP,ContextTokens,GeneratedTokens\n0.5,100,20\n1.25,300,40\n";
+        let t = parse_csv(text, "azure").unwrap();
+        assert_eq!(t.requests.len(), 2);
+        assert_eq!(t.requests[0].input_tokens, 100);
+        assert_eq!(t.requests[1].arrival, 1.25);
+        // No metadata: horizon defaults to ceil(last arrival).
+        assert_eq!(t.duration_s, 2.0);
+    }
+
+    #[test]
+    fn unsorted_rows_are_sorted_and_reid_on_load() {
+        let text = "arrival_s,input_tokens,output_tokens\n5.0,10,1\n1.0,20,2\n3.0,30,3\n";
+        let t = parse_csv(text, "x").unwrap();
+        let arr: Vec<f64> = t.requests.iter().map(|r| r.arrival).collect();
+        assert_eq!(arr, vec![1.0, 3.0, 5.0]);
+        let ids: Vec<u64> = t.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn bad_inputs_are_rejected() {
+        assert!(parse_csv("a,b,c\n1,2,3\n", "x").is_err()); // unknown header
+        assert!(parse_csv("arrival_s,input_tokens,output_tokens\n", "x").is_err()); // empty
+        assert!(parse_csv("arrival_s,input_tokens,output_tokens\n-1,5,5\n", "x").is_err());
+        assert!(parse_jsonl("{\"input_tokens\":3}\n", "x").is_err()); // no arrival
+        assert!(
+            parse_csv("# duration_s=1\narrival_s,input_tokens,output_tokens\n9.0,5,5\n", "x").is_err(),
+            "duration before last arrival must be rejected"
+        );
+        for bad in ["inf", "nan", "-5", "0"] {
+            let text = format!("# duration_s={bad}\narrival_s,input_tokens,output_tokens\n0.5,5,5\n");
+            assert!(parse_csv(&text, "x").is_err(), "duration_s={bad} must be rejected");
+        }
+        // JSONL token counts must be non-negative integers, like CSV.
+        assert!(parse_jsonl("{\"arrival_s\":1,\"input_tokens\":-100,\"output_tokens\":5}\n", "x").is_err());
+        assert!(parse_jsonl("{\"arrival_s\":1,\"input_tokens\":10.7,\"output_tokens\":5}\n", "x").is_err());
+    }
+
+    #[test]
+    fn jsonl_metadata_record_sets_duration() {
+        let text = "{\"duration_s\": 100}\n{\"arrival_s\":1.5,\"input_tokens\":10,\"output_tokens\":2}\n";
+        let t = parse_jsonl(text, "x").unwrap();
+        assert_eq!(t.duration_s, 100.0);
+        assert_eq!(t.requests.len(), 1);
+    }
+}

@@ -1,0 +1,196 @@
+//! Streaming arrival sources.
+//!
+//! The workload path used to be "materialize a `Vec<Request>`, then
+//! simulate". [`ArrivalSource`] decouples generation from consumption: a
+//! source is a pull-based, time-ordered request stream, deterministic per
+//! seed, that the simulator drains one arrival at a time. Multi-hour
+//! traces no longer live in memory per grid cell, external trace files
+//! can be replayed (see [`super::replay`]), and transform combinators
+//! (see [`super::transform`]) compose over any source.
+
+use super::gen::Trace;
+use crate::workload::Request;
+use std::sync::Arc;
+
+/// A-priori summary of a workload's character: what the experiment
+/// harness needs *before* a run (velocity profiles, baseline threshold
+/// derivations) without scanning a materialized request vector.
+///
+/// For materialized traces the profile is measured exactly; for synthetic
+/// spec sources it is analytic (spec rate, length-distribution means);
+/// combinators adjust it approximately and document how.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceProfile {
+    /// Expected average request rate over the stream (req/s).
+    pub avg_rps: f64,
+    /// Expected mean prompt length (tokens).
+    pub avg_input_tokens: f64,
+    /// Expected mean output length (tokens).
+    pub avg_output_tokens: f64,
+    /// Nominal stream duration (seconds).
+    pub duration_s: f64,
+}
+
+impl TraceProfile {
+    /// Measure a materialized trace exactly (the pre-streaming behavior:
+    /// the same floats `Trace::avg_*` used to produce).
+    pub fn of_trace(trace: &Trace) -> TraceProfile {
+        TraceProfile {
+            avg_rps: trace.avg_rps(),
+            avg_input_tokens: trace.avg_input_tokens(),
+            avg_output_tokens: trace.avg_output_tokens(),
+            duration_s: trace.duration_s,
+        }
+    }
+}
+
+/// A pull-based, time-ordered arrival stream.
+///
+/// Contract: `next_request` yields requests with non-decreasing `arrival`
+/// times and returns `None` once exhausted; for a given construction
+/// (spec × seed × combinator chain) the sequence is deterministic.
+pub trait ArrivalSource {
+    /// Pull the next arrival, or `None` when the stream is exhausted.
+    fn next_request(&mut self) -> Option<Request>;
+
+    /// Nominal duration of the stream in seconds (the simulation horizon
+    /// base; arrivals never exceed it).
+    fn duration_s(&self) -> f64;
+
+    /// Human-readable name for reporting.
+    fn label(&self) -> String;
+
+    /// A-priori workload estimate (see [`TraceProfile`]).
+    fn profile(&self) -> TraceProfile;
+}
+
+impl<S: ArrivalSource + ?Sized> ArrivalSource for Box<S> {
+    fn next_request(&mut self) -> Option<Request> {
+        (**self).next_request()
+    }
+    fn duration_s(&self) -> f64 {
+        (**self).duration_s()
+    }
+    fn label(&self) -> String {
+        (**self).label()
+    }
+    fn profile(&self) -> TraceProfile {
+        (**self).profile()
+    }
+}
+
+/// Replay an already-materialized trace as a stream, generic over how the
+/// trace is held. [`TraceSliceSource`] (borrowed) is the compatibility
+/// bridge — `simulate(cfg, …, &Trace)` wraps the trace in one and drives
+/// the streaming engine; [`OwnedTraceSource`] (owned) is what replay-file
+/// factories hand each grid worker.
+pub struct TraceReplaySource<T> {
+    trace: T,
+    idx: usize,
+}
+
+/// Borrowed replay of a materialized trace.
+pub type TraceSliceSource<'t> = TraceReplaySource<&'t Trace>;
+
+/// Owned replay of a materialized trace (e.g. one loaded from a file).
+pub type OwnedTraceSource = TraceReplaySource<Trace>;
+
+impl<T: std::borrow::Borrow<Trace>> TraceReplaySource<T> {
+    pub fn new(trace: T) -> TraceReplaySource<T> {
+        TraceReplaySource { trace, idx: 0 }
+    }
+
+    /// The underlying trace (e.g. for burst analytics on a loaded file).
+    pub fn trace(&self) -> &Trace {
+        self.trace.borrow()
+    }
+}
+
+impl<T: std::borrow::Borrow<Trace>> ArrivalSource for TraceReplaySource<T> {
+    fn next_request(&mut self) -> Option<Request> {
+        let r = self.trace.borrow().requests.get(self.idx)?.clone();
+        self.idx += 1;
+        Some(r)
+    }
+
+    fn duration_s(&self) -> f64 {
+        self.trace.borrow().duration_s
+    }
+
+    fn label(&self) -> String {
+        self.trace.borrow().name.clone()
+    }
+
+    fn profile(&self) -> TraceProfile {
+        TraceProfile::of_trace(self.trace.borrow())
+    }
+}
+
+/// Drain a source into a materialized [`Trace`] — the oracle helper the
+/// streaming/materialized equivalence tests compare against, and the
+/// bridge for consumers that genuinely need the whole vector (burst
+/// analytics, replay export).
+pub fn materialize(src: &mut dyn ArrivalSource) -> Trace {
+    let mut requests = Vec::new();
+    while let Some(r) = src.next_request() {
+        requests.push(r);
+    }
+    Trace {
+        name: src.label(),
+        duration_s: src.duration_s(),
+        requests,
+    }
+}
+
+/// A shareable constructor of independent source instances: the grid
+/// runner clones the factory into each worker so every (deployment ×
+/// policy × seed) cell streams its own copy instead of sharing one
+/// materialized vector.
+pub type SourceFactory = Arc<dyn Fn() -> Box<dyn ArrivalSource + Send> + Send + Sync>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::gen::step_trace;
+
+    #[test]
+    fn slice_source_streams_all_requests_in_order() {
+        let trace = step_trace(4.0, 4.0, 0.0, 0.0, 20.0, 128, 16, 1);
+        let mut src = TraceSliceSource::new(&trace);
+        let back = materialize(&mut src);
+        assert_eq!(back.requests, trace.requests);
+        assert_eq!(back.duration_s, trace.duration_s);
+        assert_eq!(back.name, trace.name);
+    }
+
+    #[test]
+    fn owned_source_matches_slice_source() {
+        let trace = step_trace(3.0, 3.0, 0.0, 0.0, 15.0, 64, 8, 2);
+        let a = materialize(&mut TraceSliceSource::new(&trace));
+        let b = materialize(&mut OwnedTraceSource::new(trace.clone()));
+        assert_eq!(a.requests, b.requests);
+    }
+
+    #[test]
+    fn profile_of_trace_matches_avg_methods() {
+        let trace = step_trace(5.0, 5.0, 0.0, 0.0, 30.0, 256, 32, 3);
+        let p = TraceProfile::of_trace(&trace);
+        assert_eq!(p.avg_rps, trace.avg_rps());
+        assert_eq!(p.avg_input_tokens, trace.avg_input_tokens());
+        assert_eq!(p.avg_output_tokens, trace.avg_output_tokens());
+        assert_eq!(p.duration_s, trace.duration_s);
+    }
+
+    #[test]
+    fn boxed_source_delegates() {
+        let trace = step_trace(2.0, 2.0, 0.0, 0.0, 10.0, 32, 4, 4);
+        let n = trace.requests.len();
+        let mut boxed: Box<dyn ArrivalSource + Send> = Box::new(OwnedTraceSource::new(trace));
+        let mut count = 0;
+        while boxed.next_request().is_some() {
+            count += 1;
+        }
+        assert_eq!(count, n);
+        assert_eq!(boxed.duration_s(), 10.0);
+    }
+}

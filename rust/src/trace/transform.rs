@@ -1,0 +1,600 @@
+//! Transform combinators over arrival sources.
+//!
+//! Each combinator wraps any [`ArrivalSource`] and is itself a source, so
+//! chains compose: replay an Azure-style file, splice out an hour, scale
+//! it to a target RPS, overlay a diurnal sinusoid and inject bursts — all
+//! lazily, deterministic per seed, without materializing intermediates.
+//!
+//! Ordering guarantee: every combinator preserves non-decreasing arrival
+//! times. The duplication-based ones (resample, burst injection) jitter
+//! copies by up to [`MAX_JITTER_S`] and therefore run a small reorder
+//! buffer: a pending copy is only emitted once its timestamp is ≤ the
+//! next upstream arrival, after which no earlier copy can appear.
+
+use super::source::{ArrivalSource, TraceProfile};
+use crate::util::rng::Pcg64;
+use crate::workload::Request;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Maximum jitter applied to duplicated arrivals (seconds).
+pub const MAX_JITTER_S: f64 = 0.050;
+
+/// A pending duplicated arrival inside a reorder buffer, min-ordered by
+/// (time, insertion seq) so ties pop FIFO and deterministically.
+#[derive(Clone, Debug)]
+struct Pending {
+    time: f64,
+    seq: u64,
+    input_tokens: usize,
+    output_tokens: usize,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Pending {}
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Shared machinery of the duplication-based combinators ([`Resample`],
+/// [`BurstInject`]): pull upstream arrivals, expand each into a
+/// probabilistic number of jittered copies, and emit from the reorder
+/// buffer only once nothing earlier can still arrive (a buffered copy is
+/// safe when its timestamp is ≤ the next upstream arrival).
+struct DupEmitter {
+    pending: BinaryHeap<Pending>,
+    peeked: Option<Request>,
+    primed: bool,
+    seq: u64,
+    next_id: u64,
+}
+
+impl DupEmitter {
+    fn new() -> DupEmitter {
+        DupEmitter {
+            pending: BinaryHeap::new(),
+            peeked: None,
+            primed: false,
+            seq: 0,
+            next_id: 0,
+        }
+    }
+
+    /// Emit the next request. `factor(r)` is the expected copy count for
+    /// an upstream arrival (fractional part resolved by one Bernoulli
+    /// draw); `min_copies` floors the result (1 ⇒ the original always
+    /// passes through). Copies after the first are jittered by up to
+    /// [`MAX_JITTER_S`] and clamped to the stream horizon.
+    fn next(
+        &mut self,
+        inner: &mut dyn ArrivalSource,
+        rng: &mut Pcg64,
+        min_copies: usize,
+        factor: impl Fn(&Request) -> f64,
+    ) -> Option<Request> {
+        if !self.primed {
+            self.peeked = inner.next_request();
+            self.primed = true;
+        }
+        loop {
+            if let Some(p) = self.pending.peek() {
+                let safe = match &self.peeked {
+                    None => true,
+                    Some(n) => p.time <= n.arrival,
+                };
+                if safe {
+                    let p = self.pending.pop().unwrap();
+                    let r = Request::new(self.next_id, p.time, p.input_tokens, p.output_tokens);
+                    self.next_id += 1;
+                    return Some(r);
+                }
+            }
+            let r = self.peeked.take()?;
+            self.peeked = inner.next_request();
+            let f = factor(&r);
+            let mut copies = f.floor() as usize;
+            if rng.f64() < f - f.floor() {
+                copies += 1;
+            }
+            let duration = inner.duration_s();
+            for c in 0..copies.max(min_copies) {
+                let jitter = if c == 0 {
+                    0.0
+                } else {
+                    rng.range_f64(0.0, MAX_JITTER_S)
+                };
+                self.pending.push(Pending {
+                    time: (r.arrival + jitter).min(duration),
+                    seq: self.seq,
+                    input_tokens: r.input_tokens,
+                    output_tokens: r.output_tokens,
+                });
+                self.seq += 1;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- Window
+
+/// Time-window splice: keep arrivals in `[t0, t1)`, shifted so the window
+/// starts at 0. Ids are re-sequenced from 0.
+pub struct Window<S> {
+    inner: S,
+    t0: f64,
+    t1: f64,
+    next_id: u64,
+    done: bool,
+}
+
+impl<S: ArrivalSource> Window<S> {
+    pub fn new(inner: S, t0: f64, t1: f64) -> Window<S> {
+        assert!(t1 >= t0, "window end before start");
+        // Clamp to the source's own horizon: a window reaching past it
+        // would inflate the simulation horizon (and dilute every
+        // horizon-averaged metric) with guaranteed-empty time.
+        let t1 = t1.min(inner.duration_s()).max(t0);
+        Window {
+            inner,
+            t0,
+            t1,
+            next_id: 0,
+            done: false,
+        }
+    }
+}
+
+impl<S: ArrivalSource> ArrivalSource for Window<S> {
+    fn next_request(&mut self) -> Option<Request> {
+        if self.done {
+            return None;
+        }
+        loop {
+            let Some(r) = self.inner.next_request() else {
+                self.done = true;
+                return None;
+            };
+            if r.arrival < self.t0 {
+                continue;
+            }
+            if r.arrival >= self.t1 {
+                // Upstream is time-sorted: nothing later can fall back in.
+                self.done = true;
+                return None;
+            }
+            let req = Request::new(self.next_id, r.arrival - self.t0, r.input_tokens, r.output_tokens);
+            self.next_id += 1;
+            return Some(req);
+        }
+    }
+
+    fn duration_s(&self) -> f64 {
+        self.t1 - self.t0
+    }
+
+    fn label(&self) -> String {
+        format!("{}[{}..{}s]", self.inner.label(), self.t0, self.t1)
+    }
+
+    fn profile(&self) -> TraceProfile {
+        // Rate estimate carries over; only the horizon shrinks.
+        TraceProfile {
+            duration_s: self.t1 - self.t0,
+            ..self.inner.profile()
+        }
+    }
+}
+
+// ---------------------------------------------------------- RateScale
+
+/// Compress or stretch time by `factor`: arrivals at `t` move to
+/// `t / factor`, so the request rate is multiplied by `factor` while the
+/// per-request token lengths are untouched.
+pub struct RateScale<S> {
+    inner: S,
+    factor: f64,
+}
+
+impl<S: ArrivalSource> RateScale<S> {
+    pub fn new(inner: S, factor: f64) -> RateScale<S> {
+        assert!(factor > 0.0, "rate factor must be positive");
+        RateScale { inner, factor }
+    }
+}
+
+impl<S: ArrivalSource> ArrivalSource for RateScale<S> {
+    fn next_request(&mut self) -> Option<Request> {
+        let mut r = self.inner.next_request()?;
+        r.arrival /= self.factor;
+        Some(r)
+    }
+
+    fn duration_s(&self) -> f64 {
+        self.inner.duration_s() / self.factor
+    }
+
+    fn label(&self) -> String {
+        format!("{}*{}x", self.inner.label(), self.factor)
+    }
+
+    fn profile(&self) -> TraceProfile {
+        let p = self.inner.profile();
+        TraceProfile {
+            avg_rps: p.avg_rps * self.factor,
+            duration_s: p.duration_s / self.factor,
+            ..p
+        }
+    }
+}
+
+// ------------------------------------------------------------ Diurnal
+
+/// Diurnal sinusoid modulation by probabilistic thinning: an arrival at
+/// time `t` is kept with probability
+/// `(1 + a·sin(2πt/T)) / (1 + a)`, so the shape follows the sinusoid and
+/// the long-run rate is ≈ `1/(1+a)` of the source's. Deterministic per
+/// seed; ids re-sequenced from 0.
+pub struct Diurnal<S> {
+    inner: S,
+    amplitude: f64,
+    period_s: f64,
+    rng: Pcg64,
+    next_id: u64,
+}
+
+impl<S: ArrivalSource> Diurnal<S> {
+    pub fn new(inner: S, amplitude: f64, period_s: f64, seed: u64) -> Diurnal<S> {
+        assert!(period_s > 0.0, "diurnal period must be positive");
+        Diurnal {
+            inner,
+            amplitude: amplitude.clamp(0.0, 0.95),
+            period_s,
+            rng: Pcg64::new(seed),
+            next_id: 0,
+        }
+    }
+}
+
+impl<S: ArrivalSource> ArrivalSource for Diurnal<S> {
+    fn next_request(&mut self) -> Option<Request> {
+        loop {
+            let r = self.inner.next_request()?;
+            let phase = 2.0 * std::f64::consts::PI * r.arrival / self.period_s;
+            let keep = (1.0 + self.amplitude * phase.sin()) / (1.0 + self.amplitude);
+            if self.rng.f64() < keep {
+                let req = Request::new(self.next_id, r.arrival, r.input_tokens, r.output_tokens);
+                self.next_id += 1;
+                return Some(req);
+            }
+        }
+    }
+
+    fn duration_s(&self) -> f64 {
+        self.inner.duration_s()
+    }
+
+    fn label(&self) -> String {
+        format!("{}+diurnal", self.inner.label())
+    }
+
+    fn profile(&self) -> TraceProfile {
+        let p = self.inner.profile();
+        TraceProfile {
+            // Mean keep probability over whole periods is 1/(1+a).
+            avg_rps: p.avg_rps / (1.0 + self.amplitude),
+            ..p
+        }
+    }
+}
+
+// -------------------------------------------------------- BurstInject
+
+/// One injected burst episode: arrivals inside
+/// `[start_s, start_s + len_s)` are duplicated so the local rate is
+/// multiplied by `rate_factor`.
+#[derive(Clone, Copy, Debug)]
+pub struct BurstWindow {
+    pub start_s: f64,
+    pub len_s: f64,
+    pub rate_factor: f64,
+}
+
+impl BurstWindow {
+    pub fn new(start_s: f64, len_s: f64, rate_factor: f64) -> BurstWindow {
+        BurstWindow {
+            start_s,
+            len_s,
+            rate_factor,
+        }
+    }
+
+    fn contains(&self, t: f64) -> bool {
+        t >= self.start_s && t < self.start_s + self.len_s
+    }
+}
+
+/// Burst injection: multiply the arrival rate inside each
+/// [`BurstWindow`] by duplicating arrivals (copies carry the original
+/// token lengths, jittered ≤ [`MAX_JITTER_S`]). Outside windows the
+/// stream passes through untouched. Ids re-sequenced from 0.
+pub struct BurstInject<S> {
+    inner: S,
+    bursts: Vec<BurstWindow>,
+    rng: Pcg64,
+    emit: DupEmitter,
+}
+
+impl<S: ArrivalSource> BurstInject<S> {
+    pub fn new(inner: S, bursts: Vec<BurstWindow>, seed: u64) -> BurstInject<S> {
+        for b in &bursts {
+            assert!(b.len_s >= 0.0 && b.rate_factor >= 1.0, "bad burst window");
+        }
+        BurstInject {
+            inner,
+            bursts,
+            rng: Pcg64::new(seed),
+            emit: DupEmitter::new(),
+        }
+    }
+}
+
+impl<S: ArrivalSource> ArrivalSource for BurstInject<S> {
+    fn next_request(&mut self) -> Option<Request> {
+        let bursts = &self.bursts;
+        // min_copies = 1: outside burst windows the stream passes through.
+        self.emit.next(&mut self.inner, &mut self.rng, 1, |r| {
+            bursts
+                .iter()
+                .find(|b| b.contains(r.arrival))
+                .map(|b| b.rate_factor)
+                .unwrap_or(1.0)
+        })
+    }
+
+    fn duration_s(&self) -> f64 {
+        self.inner.duration_s()
+    }
+
+    fn label(&self) -> String {
+        format!("{}+bursts", self.inner.label())
+    }
+
+    fn profile(&self) -> TraceProfile {
+        let p = self.inner.profile();
+        let dur = p.duration_s.max(1e-9);
+        let extra: f64 = self
+            .bursts
+            .iter()
+            .map(|b| (b.rate_factor - 1.0) * (b.len_s / dur))
+            .sum();
+        TraceProfile {
+            avg_rps: p.avg_rps * (1.0 + extra),
+            ..p
+        }
+    }
+}
+
+// ----------------------------------------------------------- Resample
+
+/// Resample to a target average RPS (the paper's §V sampling to 22 RPS):
+/// uniform thinning when the target is below the source rate, duplication
+/// with ≤ [`MAX_JITTER_S`] jitter when above. The keep/duplicate ratio is
+/// derived from the source's [`TraceProfile::avg_rps`] estimate. Output
+/// stays time-sorted (reorder buffer) and ids are re-sequenced from 0 in
+/// emission order, deterministic for a given rng seed.
+pub struct Resample<S> {
+    inner: S,
+    target_rps: f64,
+    keep: f64,
+    rng: Pcg64,
+    emit: DupEmitter,
+}
+
+impl<S: ArrivalSource> Resample<S> {
+    pub fn new(inner: S, target_rps: f64, rng: Pcg64) -> Resample<S> {
+        let cur = inner.profile().avg_rps;
+        let keep = if cur > 0.0 { target_rps / cur } else { 1.0 };
+        Resample {
+            inner,
+            target_rps,
+            keep,
+            rng,
+            emit: DupEmitter::new(),
+        }
+    }
+}
+
+impl<S: ArrivalSource> ArrivalSource for Resample<S> {
+    fn next_request(&mut self) -> Option<Request> {
+        let keep = self.keep;
+        // min_copies = 0: thinning may drop an arrival entirely.
+        self.emit.next(&mut self.inner, &mut self.rng, 0, |_| keep)
+    }
+
+    fn duration_s(&self) -> f64 {
+        self.inner.duration_s()
+    }
+
+    fn label(&self) -> String {
+        self.inner.label()
+    }
+
+    fn profile(&self) -> TraceProfile {
+        TraceProfile {
+            avg_rps: self.target_rps,
+            ..self.inner.profile()
+        }
+    }
+}
+
+// ----------------------------------------------------------- SourceExt
+
+/// Fluent combinator constructors for any source:
+/// `SpecSource::new(spec, seed).window(0.0, 3600.0).diurnal(0.4, 3600.0, 7)`.
+pub trait SourceExt: ArrivalSource + Sized {
+    /// Splice out `[t0, t1)`, re-based to start at 0.
+    fn window(self, t0: f64, t1: f64) -> Window<Self> {
+        Window::new(self, t0, t1)
+    }
+
+    /// Compress time so the request rate is multiplied by `factor`.
+    fn scale_rate(self, factor: f64) -> RateScale<Self> {
+        RateScale::new(self, factor)
+    }
+
+    /// Overlay a sinusoidal diurnal pattern by thinning.
+    fn diurnal(self, amplitude: f64, period_s: f64, seed: u64) -> Diurnal<Self> {
+        Diurnal::new(self, amplitude, period_s, seed)
+    }
+
+    /// Inject burst episodes by local duplication.
+    fn inject_bursts(self, bursts: Vec<BurstWindow>, seed: u64) -> BurstInject<Self> {
+        BurstInject::new(self, bursts, seed)
+    }
+
+    /// Thin/duplicate to a target average RPS.
+    fn resample_rps(self, target_rps: f64, seed: u64) -> Resample<Self> {
+        Resample::new(self, target_rps, Pcg64::new(seed))
+    }
+
+    /// Box the chain for use behind a [`super::source::SourceFactory`].
+    fn boxed(self) -> Box<dyn ArrivalSource + Send>
+    where
+        Self: Send + 'static,
+    {
+        Box::new(self)
+    }
+
+    /// Drain into a materialized [`super::gen::Trace`].
+    fn collect_trace(mut self) -> super::gen::Trace {
+        super::source::materialize(&mut self)
+    }
+}
+
+impl<S: ArrivalSource + Sized> SourceExt for S {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::gen::{SpecSource, Trace};
+    use crate::trace::source::{materialize, OwnedTraceSource};
+    use crate::trace::spec::TraceFamily;
+
+    fn sorted(t: &Trace) -> bool {
+        t.requests.windows(2).all(|w| w[0].arrival <= w[1].arrival)
+    }
+
+    fn ids_sequential(t: &Trace) -> bool {
+        t.requests.iter().enumerate().all(|(i, r)| r.id == i as u64)
+    }
+
+    fn base(seed: u64) -> SpecSource {
+        SpecSource::new(TraceFamily::AzureConv.spec(10.0, 120.0), seed)
+    }
+
+    #[test]
+    fn window_splices_and_rebases() {
+        let full = base(1).collect_trace();
+        let win = base(1).window(30.0, 90.0).collect_trace();
+        assert_eq!(win.duration_s, 60.0);
+        assert!(sorted(&win) && ids_sequential(&win));
+        assert!(win.requests.iter().all(|r| r.arrival >= 0.0 && r.arrival < 60.0));
+        let expect = full
+            .requests
+            .iter()
+            .filter(|r| r.arrival >= 30.0 && r.arrival < 90.0)
+            .count();
+        assert_eq!(win.requests.len(), expect);
+    }
+
+    #[test]
+    fn rate_scale_compresses_time() {
+        let full = base(2).collect_trace();
+        let fast = base(2).scale_rate(2.0).collect_trace();
+        assert_eq!(fast.requests.len(), full.requests.len());
+        assert_eq!(fast.duration_s, 60.0);
+        assert!((fast.avg_rps() - 2.0 * full.avg_rps()).abs() < 1e-9);
+        assert!(sorted(&fast));
+    }
+
+    #[test]
+    fn diurnal_thins_and_stays_sorted() {
+        let full = base(3).collect_trace();
+        let mod_src = base(3).diurnal(0.5, 60.0, 99);
+        assert!(mod_src.profile().avg_rps < 10.0);
+        let t = mod_src.collect_trace();
+        assert!(sorted(&t) && ids_sequential(&t));
+        assert!(t.requests.len() < full.requests.len());
+        assert!(t.requests.len() > full.requests.len() / 4);
+    }
+
+    #[test]
+    fn burst_inject_adds_in_window_only() {
+        let full = base(4).collect_trace();
+        let t = base(4)
+            .inject_bursts(vec![BurstWindow::new(40.0, 20.0, 3.0)], 7)
+            .collect_trace();
+        assert!(sorted(&t) && ids_sequential(&t));
+        let in_win = |tr: &Trace| {
+            tr.requests
+                .iter()
+                .filter(|r| r.arrival >= 40.0 && r.arrival < 20.0 + 40.0 + MAX_JITTER_S)
+                .count()
+        };
+        let out_before = |tr: &Trace| tr.requests.iter().filter(|r| r.arrival < 40.0).count();
+        assert!(in_win(&t) > in_win(&full) * 2, "{} vs {}", in_win(&t), in_win(&full));
+        assert_eq!(out_before(&t), out_before(&full));
+    }
+
+    #[test]
+    fn combinators_are_deterministic() {
+        let a = base(5).diurnal(0.4, 90.0, 11).collect_trace();
+        let b = base(5).diurnal(0.4, 90.0, 11).collect_trace();
+        assert_eq!(a.requests, b.requests);
+        let c = base(5)
+            .inject_bursts(vec![BurstWindow::new(10.0, 30.0, 2.5)], 13)
+            .collect_trace();
+        let d = base(5)
+            .inject_bursts(vec![BurstWindow::new(10.0, 30.0, 2.5)], 13)
+            .collect_trace();
+        assert_eq!(c.requests, d.requests);
+    }
+
+    #[test]
+    fn resample_up_keeps_sorted_sequential_ids() {
+        let trace = base(6).collect_trace();
+        let up = OwnedTraceSource::new(trace.clone())
+            .resample_rps(30.0, 17)
+            .collect_trace();
+        assert!(sorted(&up) && ids_sequential(&up));
+        assert!((up.avg_rps() - 30.0).abs() < 4.0, "rps={}", up.avg_rps());
+    }
+
+    #[test]
+    fn chain_composes() {
+        let mut chained = base(8)
+            .window(0.0, 60.0)
+            .diurnal(0.3, 30.0, 21)
+            .inject_bursts(vec![BurstWindow::new(20.0, 10.0, 2.0)], 22);
+        let t = materialize(&mut chained);
+        assert!(sorted(&t) && ids_sequential(&t));
+        assert!(!t.requests.is_empty());
+        assert_eq!(t.duration_s, 60.0);
+    }
+}

@@ -1,0 +1,254 @@
+//! Streaming arrival-pipeline safety nets:
+//!
+//! 1. **Generator equivalence** — for every `TraceSpec` family, the lazy
+//!    [`SpecSource`]/[`MixedSource`] streams must yield the byte-identical
+//!    request sequence the pre-streaming eager generators produced. The
+//!    oracle below is a verbatim copy of those eager implementations
+//!    (materialize-then-sort), so any drift in rng draw order, episode
+//!    accounting, or merge tie-breaking fails loudly.
+//! 2. **Replay round trips** — replay → materialize → replay must be
+//!    lossless in both CSV and JSONL, including across formats.
+//! 3. **Resample regression** — the duplication path must keep arrivals
+//!    time-sorted with ids re-sequenced in arrival order.
+//! 4. **Engine equivalence** — driving the simulator from a live stream
+//!    must reproduce the preloaded-trace run event for event.
+
+use tokenscale::report::runner::RunOverrides;
+use tokenscale::report::{deployment, run_experiment, run_experiment_source, PolicyKind};
+use tokenscale::trace::{
+    base_families, generate, generate_mixed, materialize, replay, ArrivalSource, MixedSource,
+    SpecSource, Trace, TraceFamily, TraceProfile, TraceSpec,
+};
+use tokenscale::util::rng::Pcg64;
+use tokenscale::workload::Request;
+
+// ---------------------------------------------------------------- oracle
+//
+// Verbatim port of the eager generators that predate the streaming
+// pipeline (trace/gen.rs as of PR 1). Kept here, not in the library, so
+// the production path stays single-implementation.
+
+fn oracle_sample_len(rng: &mut Pcg64, d: &tokenscale::trace::LenDist) -> usize {
+    (rng.lognormal(d.mu, d.sigma).round() as usize).clamp(d.min, d.max)
+}
+
+fn oracle_generate(spec: &TraceSpec, seed: u64) -> Trace {
+    let mut rng = Pcg64::new(seed);
+    let mut arrivals_rng = rng.fork();
+    let mut len_rng = rng.fork();
+    let mut episode_rng = rng.fork();
+
+    let bf = &spec.burst;
+    let r_stable = spec.rps / (bf.time_fraction * bf.rate_factor + (1.0 - bf.time_fraction));
+    let r_burst = r_stable * bf.rate_factor;
+    let mean_stable_gap = if bf.time_fraction > 0.0 {
+        bf.mean_len_s * (1.0 - bf.time_fraction) / bf.time_fraction
+    } else {
+        f64::INFINITY
+    };
+
+    let mut requests = Vec::new();
+    let mut t = 0.0f64;
+    let mut in_burst = false;
+    let mut phase_end = if mean_stable_gap.is_finite() {
+        episode_rng.exponential(1.0 / mean_stable_gap)
+    } else {
+        f64::INFINITY
+    };
+    let mut id = 0u64;
+
+    while t < spec.duration_s {
+        while t >= phase_end {
+            in_burst = !in_burst;
+            let mean = if in_burst { bf.mean_len_s } else { mean_stable_gap };
+            phase_end += episode_rng.exponential(1.0 / mean);
+        }
+        let diurnal =
+            1.0 + spec.diurnal_amplitude * (2.0 * std::f64::consts::PI * t / spec.diurnal_period_s).sin();
+        let rate = (if in_burst { r_burst } else { r_stable }) * diurnal.max(0.05);
+        let k = spec.arrival_shape;
+        let gap = arrivals_rng.gamma(k, 1.0 / (k * rate));
+        t += gap;
+        if t >= spec.duration_s {
+            break;
+        }
+        let input = oracle_sample_len(&mut len_rng, &spec.input_len);
+        let output = oracle_sample_len(&mut len_rng, &spec.output_len);
+        requests.push(Request::new(id, t, input, output));
+        id += 1;
+    }
+
+    Trace {
+        name: spec.name.clone(),
+        duration_s: spec.duration_s,
+        requests,
+    }
+}
+
+fn oracle_generate_mixed(total_rps: f64, duration_s: f64, seed: u64) -> Trace {
+    let per = total_rps / 4.0;
+    let mut requests = Vec::new();
+    for (i, fam) in base_families().into_iter().enumerate() {
+        let sub = oracle_generate(&fam.spec(per, duration_s), seed.wrapping_add(i as u64 * 7919));
+        requests.extend(sub.requests);
+    }
+    requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    Trace {
+        name: "mixed".into(),
+        duration_s,
+        requests,
+    }
+}
+
+// ----------------------------------------------------------- equivalence
+
+#[test]
+fn streaming_generator_matches_eager_oracle_for_every_family() {
+    for family in base_families() {
+        for seed in [1u64, 7, 42, 1234] {
+            let spec = family.spec(14.0, 180.0);
+            let eager = oracle_generate(&spec, seed);
+            let streamed = materialize(&mut SpecSource::new(spec.clone(), seed));
+            assert!(!eager.requests.is_empty(), "{family:?} produced nothing");
+            assert_eq!(
+                streamed.requests, eager.requests,
+                "{family:?} seed {seed}: streaming sequence must be byte-identical"
+            );
+            assert_eq!(streamed.duration_s, eager.duration_s);
+            assert_eq!(streamed.name, eager.name);
+            // The library's `generate` is the same stream drained.
+            assert_eq!(generate(&spec, seed).requests, eager.requests);
+        }
+    }
+}
+
+#[test]
+fn streaming_mixed_matches_eager_merge_oracle() {
+    for seed in [5u64, 99] {
+        let eager = oracle_generate_mixed(20.0, 150.0, seed);
+        let streamed = materialize(&mut MixedSource::new(20.0, 150.0, seed));
+        assert_eq!(
+            streamed.requests, eager.requests,
+            "seed {seed}: 4-way merge must reproduce the stable sort"
+        );
+        assert_eq!(generate_mixed(20.0, 150.0, seed).requests, eager.requests);
+    }
+}
+
+#[test]
+fn zero_duration_spec_yields_empty_stream() {
+    let spec = TraceFamily::AzureConv.spec(10.0, 0.0);
+    let mut src = SpecSource::new(spec, 3);
+    assert!(src.next_request().is_none());
+    assert!(src.next_request().is_none(), "exhausted source stays exhausted");
+}
+
+// ---------------------------------------------------------- replay trips
+
+#[test]
+fn replay_materialize_replay_round_trip_is_lossless() {
+    for family in [TraceFamily::AzureConv, TraceFamily::BurstGpt2] {
+        let t = generate(&family.spec(6.0, 90.0), 11);
+
+        let csv = replay::to_csv(&t);
+        let from_csv = replay::parse_csv(&csv, &t.name).unwrap();
+        assert_eq!(from_csv.requests, t.requests, "{family:?} csv");
+        assert_eq!(from_csv.duration_s, t.duration_s);
+        assert_eq!(replay::to_csv(&from_csv), csv, "csv canonical form stable");
+
+        let jsonl = replay::to_jsonl(&t);
+        let from_jsonl = replay::parse_jsonl(&jsonl, &t.name).unwrap();
+        assert_eq!(from_jsonl.requests, t.requests, "{family:?} jsonl");
+        assert_eq!(from_jsonl.duration_s, t.duration_s);
+        assert_eq!(replay::to_jsonl(&from_jsonl), jsonl);
+
+        // Cross-format: csv -> jsonl -> csv ends where it started.
+        let cross = replay::parse_jsonl(&replay::to_jsonl(&from_csv), &t.name).unwrap();
+        assert_eq!(replay::to_csv(&cross), csv);
+    }
+}
+
+#[test]
+fn bundled_example_traces_load_and_stream() {
+    for rel in ["examples/traces/azure_conv_sample.csv", "examples/traces/burstgpt_sample.jsonl"] {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(rel);
+        let t = replay::load_path(&path).unwrap_or_else(|e| panic!("loading {rel}: {e}"));
+        assert!(t.requests.len() >= 150, "{rel}: {} rows", t.requests.len());
+        assert!(t.duration_s > 0.0);
+        for w in t.requests.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival, "{rel} must be time-sorted");
+        }
+        let mut src = tokenscale::trace::OwnedTraceSource::new(t.clone());
+        let back = materialize(&mut src);
+        assert_eq!(back.requests, t.requests);
+    }
+}
+
+// ------------------------------------------------------ resample regress
+
+#[test]
+fn resample_duplication_sorts_and_resequences_ids() {
+    let t = generate(&TraceFamily::AzureCode.spec(6.0, 150.0), 17);
+    let mut rng = Pcg64::new(23);
+    let up = t.resample_to_rps(20.0, &mut rng);
+    assert!((up.avg_rps() - 20.0).abs() < 3.0, "rps={}", up.avg_rps());
+
+    // Sort-and-compare: the sequence must already be arrival-sorted.
+    let mut sorted = up.requests.clone();
+    sorted.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    assert_eq!(sorted, up.requests);
+    for (i, r) in up.requests.iter().enumerate() {
+        assert_eq!(r.id, i as u64);
+    }
+
+    // Deterministic re-derivation from the caller's rng state.
+    let mut rng2 = Pcg64::new(23);
+    assert_eq!(t.resample_to_rps(20.0, &mut rng2).requests, up.requests);
+}
+
+// -------------------------------------------------------- engine streams
+
+#[test]
+fn streamed_run_matches_preloaded_run_for_every_policy() {
+    let spec = TraceFamily::AzureConv.spec(8.0, 60.0);
+    let seed = 31;
+    let trace = generate(&spec, seed);
+    let dep = deployment("small-a100").unwrap();
+    let ov = RunOverrides::default();
+    // Use the measured profile on both sides so the only difference is
+    // preloaded-vs-streamed arrival delivery.
+    let profile = TraceProfile::of_trace(&trace);
+    for policy in [PolicyKind::TokenScale, PolicyKind::DistServe] {
+        let preloaded = run_experiment(&dep, policy, &trace, &ov);
+        let mut src = SpecSource::new(spec.clone(), seed);
+        let streamed = run_experiment_source(&dep, policy, &mut src, &profile, &ov);
+        assert_eq!(
+            preloaded.sim.events_processed, streamed.sim.events_processed,
+            "{}: event counts must match",
+            policy.name()
+        );
+        let key = |r: &tokenscale::report::ExperimentResult| {
+            let mut v: Vec<(u64, f64, f64, f64)> = r
+                .sim
+                .metrics
+                .completions
+                .iter()
+                .map(|c| (c.id, c.ttft, c.tpot, c.finish))
+                .collect();
+            v.sort_by(|a, b| a.0.cmp(&b.0));
+            v
+        };
+        assert_eq!(key(&preloaded), key(&streamed), "{}", policy.name());
+        assert_eq!(preloaded.report.n, streamed.report.n);
+        assert_eq!(
+            preloaded.report.overall_attainment,
+            streamed.report.overall_attainment
+        );
+        assert_eq!(preloaded.sim.metrics.gpu_seconds, streamed.sim.metrics.gpu_seconds);
+        // The stream was consumed exactly once and fully.
+        assert_eq!(streamed.sim.metrics.arrivals, trace.requests.len());
+    }
+}
