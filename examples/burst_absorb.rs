@@ -14,7 +14,7 @@ fn main() -> anyhow::Result<()> {
     let trace = step_trace(1.0, 10.0, 10.0, 8.0, 30.0, 1000, 64, 7);
     println!("burst scenario: 1 rps → 10 rps at t=10 s (×10), 1000-token prompts\n");
 
-    for policy in [PolicyKind::TokenScale, PolicyKind::DistServe] {
+    for policy in [PolicyKind::named("tokenscale"), PolicyKind::named("distserve")] {
         let ov = RunOverrides {
             warmup_s: 0.0,
             initial_prefillers: Some(1),

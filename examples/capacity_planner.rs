@@ -100,7 +100,7 @@ fn main() -> anyhow::Result<()> {
         initial_decoders: Some(decoders.saturating_sub(convertibles).max(1)),
         ..Default::default()
     };
-    let res = run_experiment(&dep, PolicyKind::TokenScale, &trace, &ov);
+    let res = run_experiment(&dep, PolicyKind::named("tokenscale"), &trace, &ov);
     println!("\nvalidation run (TokenScale, plan as initial fleet):");
     println!(
         "  SLO attainment {:.1}% | avg GPUs {:.2}",

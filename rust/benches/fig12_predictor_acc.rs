@@ -22,7 +22,7 @@ fn main() {
             predictor_accuracy: Some(acc),
             ..Default::default()
         };
-        let res = run_experiment(&dep, PolicyKind::TokenScale, &trace, &ov);
+        let res = run_experiment(&dep, PolicyKind::named("tokenscale"), &trace, &ov);
         let r = &res.report;
         t.row(vec![
             pct(acc),

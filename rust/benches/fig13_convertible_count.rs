@@ -21,7 +21,7 @@ fn main() {
             convertibles: Some(n),
             ..Default::default()
         };
-        let res = run_experiment(&dep, PolicyKind::TokenScale, &trace, &ov);
+        let res = run_experiment(&dep, PolicyKind::named("tokenscale"), &trace, &ov);
         let r = &res.report;
         t.row(vec![
             n.to_string(),

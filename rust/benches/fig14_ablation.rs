@@ -14,10 +14,10 @@ fn main() {
     let dep = deployment("small-a100").unwrap();
     let trace = generate_family(TraceFamily::Mixed, 22.0, 300.0, 31);
     let stages = [
-        ("B (DistServe)", PolicyKind::DistServe),
-        ("B+P", PolicyKind::AblationBP),
-        ("B+P+D", PolicyKind::AblationBPD),
-        ("TokenScale (full)", PolicyKind::TokenScale),
+        ("B (DistServe)", PolicyKind::named("distserve")),
+        ("B+P", PolicyKind::named("b+p")),
+        ("B+P+D", PolicyKind::named("b+p+d")),
+        ("TokenScale (full)", PolicyKind::named("tokenscale")),
     ];
     let mut t = Table::new("Fig. 14 — component ablation on the mixed trace")
         .header(&["configuration", "overall att.", "TTFT att.", "TPOT att.", "avg GPUs"]);

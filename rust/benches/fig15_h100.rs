@@ -19,7 +19,7 @@ fn main() {
 
     for family in traces {
         let trace = generate_family(family, 60.0, 300.0, 37);
-        for policy in [PolicyKind::DistServe, PolicyKind::TokenScale] {
+        for policy in [PolicyKind::named("distserve"), PolicyKind::named("tokenscale")] {
             let res = run_experiment(&dep, policy, &trace, &RunOverrides::default());
             let r = &res.report;
             t.row(vec![

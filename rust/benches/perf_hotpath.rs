@@ -13,7 +13,7 @@ use tokenscale::perfmodel::{catalog, EngineModel};
 use tokenscale::report::bench::{human_time, BenchTimer};
 use tokenscale::report::runner::RunOverrides;
 use tokenscale::report::{deployment, run_experiment, PolicyKind};
-use tokenscale::sim::{Cluster, ClusterConfig, Coordinator, Role};
+use tokenscale::sim::{Action, Cluster, ClusterConfig, ClusterView, ControlPlane, Role, Signal};
 use tokenscale::trace::{generate_family, TraceFamily};
 use tokenscale::util::json::Json;
 use tokenscale::workload::{Request, SloPolicy};
@@ -29,17 +29,17 @@ fn main() {
     let trace = generate_family(TraceFamily::Mixed, 22.0, 120.0, 5);
     let n_req = trace.requests.len();
 
-    let fast_probe = run_experiment(&dep, PolicyKind::TokenScale, &trace, &RunOverrides::default());
+    let fast_probe = run_experiment(&dep, PolicyKind::named("tokenscale"), &trace, &RunOverrides::default());
     let fast_events = fast_probe.sim.events_processed;
     let slow_ov = RunOverrides {
         force_single_step: true,
         ..Default::default()
     };
-    let slow_probe = run_experiment(&dep, PolicyKind::TokenScale, &trace, &slow_ov);
+    let slow_probe = run_experiment(&dep, PolicyKind::named("tokenscale"), &trace, &slow_ov);
     let slow_events = slow_probe.sim.events_processed;
 
     let fast = timer.run(|| {
-        let r = run_experiment(&dep, PolicyKind::TokenScale, &trace, &RunOverrides::default());
+        let r = run_experiment(&dep, PolicyKind::named("tokenscale"), &trace, &RunOverrides::default());
         std::hint::black_box(r.report.n);
     });
     println!("{}", fast.line("sim_e2e_tokenscale_120s_22rps"));
@@ -51,7 +51,7 @@ fn main() {
     );
 
     let slow = BenchTimer::new(1, 3).run(|| {
-        let r = run_experiment(&dep, PolicyKind::TokenScale, &trace, &slow_ov);
+        let r = run_experiment(&dep, PolicyKind::named("tokenscale"), &trace, &slow_ov);
         std::hint::black_box(r.report.n);
     });
     println!("{}", slow.line("sim_e2e_single_step_reference"));
@@ -118,10 +118,11 @@ fn main() {
         slo: SloPolicy::default(),
     };
     let req = Request::new(1, 0.0, 1024, 200);
+    let view = ClusterView::new(&cluster);
     let inner = 10_000;
     let stats = timer.run(|| {
         for _ in 0..inner {
-            std::hint::black_box(router::route_prefill(&rcfg, &req, &cluster, false));
+            std::hint::black_box(router::route_prefill(&rcfg, &req, &view, false));
         }
     });
     println!("{}", stats.line("router_route_prefill_x10k (16 instances)"));
@@ -131,12 +132,17 @@ fn main() {
     // 3. Scaler evaluation latency.
     let link = catalog::link("a100-cluster").unwrap();
     let mut ts = TokenScale::new(TokenScaleConfig::default(), &engine, &link, 1024, 900.0);
+    let mut acts: Vec<Action> = Vec::new();
     for i in 0..200 {
-        ts.observe_arrival(i as f64 * 0.01, &Request::new(i, i as f64 * 0.01, 512, 100));
+        let r = Request::new(i, i as f64 * 0.01, 512, 100);
+        acts.clear();
+        ts.on_signal(r.arrival, Signal::Arrival(&r), &view, &mut acts);
     }
     let stats = timer.run(|| {
         for _ in 0..inner {
-            std::hint::black_box(ts.scale(2.0, &cluster));
+            acts.clear();
+            ts.on_signal(2.0, Signal::Tick, &view, &mut acts);
+            std::hint::black_box(acts.len());
         }
     });
     println!("{}", stats.line("tokenscale_scale_eval_x10k"));

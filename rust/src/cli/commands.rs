@@ -2,8 +2,8 @@
 
 use super::args::Args;
 use crate::config::ExperimentConfig;
-use crate::report::{deployment, run_experiment, PolicyKind};
 use crate::report::runner::RunOverrides;
+use crate::report::{deployment, run_experiment, PolicyKind, PolicyRegistry};
 use crate::trace::{generate_family, TraceFamily};
 use crate::util::table::{fnum, pct, Table};
 use crate::velocity::VelocityProfile;
@@ -25,6 +25,12 @@ SUBCOMMANDS:
                   --deployment D
     thresholds  Print derived baseline thresholds (Tab. I style)
                   --deployment D --trace T --rps R
+    explain     Re-run one scenario with the decision audit ring enabled
+                  and print the control plane's applied/rejected actions
+                  [same flags as simulate] [--last N] [--ring N]
+    policy      Policy-registry tooling
+                  policy list   Print registered control planes (name,
+                                aliases, description, tunable params)
     trace       Workload-trace tooling
                   trace [inspect] --trace T --rps R --duration S [--seed N]
                       Generate a synthetic trace and print its stats
@@ -53,6 +59,8 @@ pub fn run_cli(argv: Vec<String>) -> i32 {
     let result = match sub.as_str() {
         "simulate" => cmd_simulate(&args),
         "compare" => cmd_compare(&args),
+        "explain" => cmd_explain(&args),
+        "policy" => cmd_policy(&args),
         "profile" => cmd_profile(&args),
         "thresholds" => cmd_thresholds(&args),
         "trace" => cmd_trace(&args),
@@ -108,7 +116,11 @@ fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
     Ok(cfg)
 }
 
-fn run_one(cfg: &ExperimentConfig, policy: PolicyKind) -> anyhow::Result<crate::report::ExperimentResult> {
+fn run_one_with(
+    cfg: &ExperimentConfig,
+    policy: PolicyKind,
+    decision_log: usize,
+) -> anyhow::Result<crate::report::ExperimentResult> {
     let dep = deployment(&cfg.deployment)
         .ok_or_else(|| anyhow::anyhow!("unknown deployment"))?;
     let family = TraceFamily::parse(&cfg.trace).ok_or_else(|| anyhow::anyhow!("unknown trace"))?;
@@ -117,14 +129,25 @@ fn run_one(cfg: &ExperimentConfig, policy: PolicyKind) -> anyhow::Result<crate::
         convertibles: cfg.convertibles,
         predictor_accuracy: cfg.predictor_accuracy,
         warmup_s: cfg.warmup_s,
+        decision_log,
         ..Default::default()
     };
     Ok(run_experiment(&dep, policy, &trace, &ov))
 }
 
+fn run_one(cfg: &ExperimentConfig, policy: PolicyKind) -> anyhow::Result<crate::report::ExperimentResult> {
+    run_one_with(cfg, policy, 0)
+}
+
+fn parse_policy(name: &str) -> anyhow::Result<PolicyKind> {
+    PolicyKind::parse(name).ok_or_else(|| {
+        anyhow::anyhow!("unknown policy `{name}` (see `tokenscale policy list`)")
+    })
+}
+
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from_args(args)?;
-    let policy = PolicyKind::parse(&cfg.policy).unwrap();
+    let policy = parse_policy(&cfg.policy)?;
     let res = run_one(&cfg, policy)?;
     let r = &res.report;
     println!(
@@ -142,6 +165,12 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     println!("TTFT p50/p99       : {:.0} / {:.0} ms", r.ttft.p50 * 1e3, r.ttft.p99 * 1e3);
     println!("TPOT p50/p99       : {:.1} / {:.1} ms", r.tpot.p50 * 1e3, r.tpot.p99 * 1e3);
     println!("scale ups/downs    : {} / {}", res.sim.scale_ups, res.sim.scale_downs);
+    if r.rejected_actions > 0 {
+        println!(
+            "rejected actions   : {} (see `tokenscale explain` for the audit trail)",
+            r.rejected_actions
+        );
+    }
     Ok(())
 }
 
@@ -166,6 +195,75 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
     }
     print!("{}", table.render());
     Ok(())
+}
+
+fn cmd_explain(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from_args(args)?;
+    let policy = parse_policy(&cfg.policy)?;
+    let ring = args.get_usize("ring")?.unwrap_or(4096);
+    let last = args.get_usize("last")?.unwrap_or(40);
+    let res = run_one_with(&cfg, policy, ring.max(1))?;
+    let log = res
+        .sim
+        .decisions
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("decision log missing (ring size 0?)"))?;
+
+    println!(
+        "== decision audit | {} | {} | {} @ {} rps for {}s ==",
+        policy.name(),
+        cfg.deployment,
+        cfg.trace,
+        cfg.rps,
+        cfg.duration_s
+    );
+    println!(
+        "decisions          : {} total, {} retained (ring {})",
+        log.total_seen(),
+        log.len(),
+        log.capacity()
+    );
+    let rejections = &res.sim.metrics.rejections;
+    println!("rejected/clamped   : {}", rejections.total());
+    for (reason, n) in rejections.nonzero() {
+        println!("  - {:<18}: {n}", reason.label());
+    }
+    let mut per_action: std::collections::BTreeMap<&'static str, usize> =
+        std::collections::BTreeMap::new();
+    for r in log.iter() {
+        *per_action.entry(r.action.label()).or_insert(0) += 1;
+    }
+    println!("actions (retained) :");
+    for (label, n) in &per_action {
+        println!("  - {label:<18}: {n}");
+    }
+    println!("last {} decisions:", last.min(log.len()));
+    for rec in log.tail(last) {
+        println!("  {}", rec.line());
+    }
+    Ok(())
+}
+
+fn cmd_policy(args: &Args) -> anyhow::Result<()> {
+    match args.positional.first().map(String::as_str) {
+        None | Some("list") => {
+            let registry = PolicyRegistry::global();
+            let mut t = Table::new("registered control planes")
+                .header(&["name", "aliases", "description", "params"]);
+            for e in registry.entries() {
+                t.row(vec![
+                    e.name.into(),
+                    e.aliases.join(", "),
+                    e.description.into(),
+                    e.params.into(),
+                ]);
+            }
+            print!("{}", t.render());
+            println!("select with --policy NAME (simulate/compare/explain) or ExperimentSpec");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown policy action `{other}` (expected: list)"),
+    }
 }
 
 fn cmd_profile(args: &Args) -> anyhow::Result<()> {

@@ -12,5 +12,5 @@ pub use convertible::{
     profile_chunk_size,
 };
 pub use gateway::Gateway;
-pub use router::RouterConfig;
+pub use router::{RouteChoice, RouterConfig};
 pub use tokenscale::{TokenScale, TokenScaleConfig};

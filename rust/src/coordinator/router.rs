@@ -3,8 +3,20 @@
 //! the per-type least-in-flight decode balancer.
 
 use super::convertible::convertible_prefill_velocity;
-use crate::sim::{Cluster, InstanceId, Role, Route};
+use crate::sim::{ClusterView, InstanceId, Role};
 use crate::workload::{Bucket, Request, SloPolicy};
+
+/// Routing decision from Alg. 1 (the caller translates it into a
+/// `RoutePrefill` action or leaves the request queued).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteChoice {
+    /// A regular prefiller instance.
+    Prefiller(InstanceId),
+    /// A Convertible Decoder running restricted chunked prefill (§III-D).
+    Convertible(InstanceId),
+    /// No feasible instance: wait in the gateway queue (Alg. 1 line 15).
+    Queue,
+}
 
 /// Router configuration.
 #[derive(Clone, Debug)]
@@ -34,9 +46,9 @@ pub struct RouterConfig {
 pub fn route_prefill(
     cfg: &RouterConfig,
     req: &Request,
-    cluster: &Cluster,
+    cluster: &ClusterView<'_>,
     bursting: bool,
-) -> Route {
+) -> RouteChoice {
     let slo = cfg.slo.ttft_slo(req.input_tokens);
 
     // Round 1: prefillers.
@@ -49,7 +61,7 @@ pub fn route_prefill(
     }
     if !bursting {
         if let Some((_, id)) = best_p {
-            return Route::Prefiller(id);
+            return RouteChoice::Prefiller(id);
         }
     }
 
@@ -72,15 +84,15 @@ pub fn route_prefill(
     match (best_p, best_c) {
         (Some((wp, p)), Some((wc, c))) => {
             if bursting && wc < wp {
-                Route::Convertible(c)
+                RouteChoice::Convertible(c)
             } else {
-                Route::Prefiller(p)
+                RouteChoice::Prefiller(p)
             }
         }
-        (Some((_, p)), None) => Route::Prefiller(p),
-        (None, Some((_, c))) => Route::Convertible(c),
+        (Some((_, p)), None) => RouteChoice::Prefiller(p),
+        (None, Some((_, c))) => RouteChoice::Convertible(c),
         // Alg. 1 line 15: wait for an available prefiller.
-        (None, None) => Route::Queue,
+        (None, None) => RouteChoice::Queue,
     }
 }
 
@@ -93,7 +105,7 @@ pub fn route_decode(
     cfg: &RouterConfig,
     req: &Request,
     bucket: Bucket,
-    cluster: &Cluster,
+    cluster: &ClusterView<'_>,
 ) -> Option<InstanceId> {
     let need = req.total_tokens();
     let mut best: Option<(usize, usize, InstanceId)> = None; // (type_load, is_convertible, id)
@@ -123,6 +135,10 @@ mod tests {
     use crate::sim::{Cluster, ClusterConfig};
     use crate::workload::{LenClass, Request};
     use std::sync::Arc;
+
+    fn view(c: &Cluster) -> ClusterView<'_> {
+        ClusterView::new(c)
+    }
 
     fn mk_cluster(prefillers: usize, decoders: usize, convertibles: usize) -> Cluster {
         let engine = Arc::new(EngineModel::new(
@@ -163,8 +179,8 @@ mod tests {
     fn idle_prefiller_wins_round1() {
         let cluster = mk_cluster(2, 1, 1);
         let req = Request::new(1, 0.0, 200, 50);
-        match route_prefill(&cfg(), &req, &cluster, false) {
-            Route::Prefiller(_) => {}
+        match route_prefill(&cfg(), &req, &view(&cluster), false) {
+            RouteChoice::Prefiller(_) => {}
             other => panic!("expected prefiller, got {other:?}"),
         }
     }
@@ -179,10 +195,11 @@ mod tests {
             req: Request::new(99, 0.0, 10_000_000, 1),
             remaining: 10_000_000,
             enqueued_at: 0.0,
+            chunk_override: None,
         });
         let req = Request::new(1, 0.0, 200, 50);
-        match route_prefill(&cfg(), &req, &cluster, false) {
-            Route::Convertible(_) => {}
+        match route_prefill(&cfg(), &req, &view(&cluster), false) {
+            RouteChoice::Convertible(_) => {}
             other => panic!("expected convertible, got {other:?}"),
         }
     }
@@ -195,15 +212,20 @@ mod tests {
             req: Request::new(99, 0.0, 10_000_000, 1),
             remaining: 10_000_000,
             enqueued_at: 0.0,
+            chunk_override: None,
         });
         let cid = cluster.ids_of(Role::ConvertibleDecoder)[0];
         cluster.get_mut(cid).unwrap().prefill_queue.push_back(crate::sim::PrefillJob {
             req: Request::new(98, 0.0, 10_000_000, 1),
             remaining: 10_000_000,
             enqueued_at: 0.0,
+            chunk_override: None,
         });
         let req = Request::new(1, 0.0, 200, 50);
-        assert_eq!(route_prefill(&cfg(), &req, &cluster, false), Route::Queue);
+        assert_eq!(
+            route_prefill(&cfg(), &req, &view(&cluster), false),
+            RouteChoice::Queue
+        );
     }
 
     #[test]
@@ -223,7 +245,7 @@ mod tests {
             cluster.get_mut(ids[0]).unwrap().admit(seq);
         }
         let req = Request::new(1, 0.0, 100, 50);
-        let picked = route_decode(&cfg(), &req, bucket, &cluster).unwrap();
+        let picked = route_decode(&cfg(), &req, bucket, &view(&cluster)).unwrap();
         assert_eq!(picked, ids[1], "least-loaded regular decoder wins");
     }
 
@@ -238,7 +260,7 @@ mod tests {
         cluster.get_mut(cid).unwrap().reserved_tokens = cap * 0.95;
         let req = Request::new(1, 0.0, 100, 50);
         let bucket = Bucket::new(LenClass::Short, LenClass::Short);
-        assert_eq!(route_decode(&cfg(), &req, bucket, &cluster), None);
+        assert_eq!(route_decode(&cfg(), &req, bucket, &view(&cluster)), None);
     }
 
     #[test]
@@ -249,6 +271,6 @@ mod tests {
         cluster.get_mut(id).unwrap().reserved_tokens = cap;
         let req = Request::new(1, 0.0, 100, 50);
         let bucket = Bucket::new(LenClass::Short, LenClass::Short);
-        assert_eq!(route_decode(&cfg(), &req, bucket, &cluster), None);
+        assert_eq!(route_decode(&cfg(), &req, bucket, &view(&cluster)), None);
     }
 }

@@ -1,18 +1,18 @@
 //! The complete TokenScale control plane (§IV): Gateway + Router + Scaler
 //! + Convertible Decoder management, implemented as a simulator
-//! [`Coordinator`] so it drives the same mechanics as every baseline.
+//! [`ControlPlane`] so it drives the same mechanics as every baseline.
 
 use super::convertible::{
     convertible_prefill_velocity, convertible_reserve_tokens, estimate_decode_batch,
     profile_chunk_size,
 };
 use super::gateway::Gateway;
-use super::router::{self, RouterConfig};
+use super::router::{self, RouteChoice, RouterConfig};
 use crate::perfmodel::{EngineModel, LinkSpec};
 use crate::scaler::tokenscale::{
     required_decoders, required_prefillers, regular_decoders, Hysteresis,
 };
-use crate::sim::{Cluster, Coordinator, InstanceId, Role, Route, ScaleTargets};
+use crate::sim::{Action, ClusterView, ControlPlane, Role, Signal};
 use crate::velocity::VelocityProfile;
 use crate::workload::{OutputPredictor, Request, SloPolicy};
 
@@ -121,56 +121,103 @@ impl TokenScale {
     }
 }
 
-impl Coordinator for TokenScale {
+impl TokenScale {
+    /// Alg. 1 routing for a prefill offer, translated into an action.
+    ///
+    /// RNG-stream note: the pre-redesign engine drew one (discarded)
+    /// bucket prediction whenever it admitted a prefill onto a Convertible
+    /// Decoder; the equivalence gate pins results bit-for-bit, so that
+    /// draw is reproduced here.
+    fn emit_prefill_route(
+        &mut self,
+        req: &Request,
+        view: &ClusterView<'_>,
+        actions: &mut Vec<Action>,
+    ) {
+        match router::route_prefill(&self.router_cfg, req, view, self.gateway.is_burst()) {
+            RouteChoice::Prefiller(target) => {
+                actions.push(Action::RoutePrefill { req: req.id, target });
+            }
+            RouteChoice::Convertible(target) => {
+                let _ = self
+                    .gateway
+                    .predictor
+                    .predict_bucket(req.input_tokens, req.output_tokens);
+                actions.push(Action::RoutePrefill { req: req.id, target });
+            }
+            RouteChoice::Queue => {}
+        }
+    }
+}
+
+impl ControlPlane for TokenScale {
     fn name(&self) -> &str {
         "tokenscale"
     }
 
-    fn observe_arrival(&mut self, now: f64, req: &Request) {
-        self.gateway.ingest(now, req);
-    }
+    fn on_signal(
+        &mut self,
+        now: f64,
+        signal: Signal<'_>,
+        view: &ClusterView<'_>,
+        actions: &mut Vec<Action>,
+    ) {
+        match signal {
+            Signal::Arrival(req) => {
+                self.gateway.ingest(now, req);
+                self.emit_prefill_route(req, view, actions);
+            }
+            Signal::RetryPrefill(req) => self.emit_prefill_route(req, view, actions),
+            Signal::PrefillDone(req) => {
+                // Two predictor draws, as in v1: one inside the decode
+                // router, one for the bucket recorded on the sequence.
+                let bucket = self
+                    .gateway
+                    .predictor
+                    .predict_bucket(req.input_tokens, req.output_tokens);
+                if let Some(decoder) = router::route_decode(&self.router_cfg, req, bucket, view) {
+                    let recorded = self
+                        .gateway
+                        .predictor
+                        .predict_bucket(req.input_tokens, req.output_tokens)
+                        .index();
+                    actions.push(Action::DispatchDecode {
+                        req: req.id,
+                        decoder,
+                        bucket: recorded,
+                    });
+                }
+            }
+            Signal::Tick => {
+                self.gateway.tick_burst_detector(now);
 
-    fn route_prefill(&mut self, _now: f64, req: &Request, cluster: &Cluster) -> Route {
-        router::route_prefill(&self.router_cfg, req, cluster, self.gateway.is_burst())
-    }
+                // Eq. 2: prefillers from the input-token rate.
+                let lambda = self.gateway.input_token_rate(now);
+                let p_target =
+                    required_prefillers(lambda, &self.profile).max(self.cfg.min_prefillers);
+                let cur_p = view.active_count(Role::Prefiller);
+                let prefillers = self.prefill_hyst.apply(cur_p, p_target);
 
-    fn route_decode(&mut self, _now: f64, req: &Request, cluster: &Cluster) -> Option<InstanceId> {
-        let bucket = self
-            .gateway
-            .predictor
-            .predict_bucket(req.input_tokens, req.output_tokens);
-        router::route_decode(&self.router_cfg, req, bucket, cluster)
-    }
+                // Eqs. 3–4: decoders from per-bucket combined token rates,
+                // minus the static convertible pool.
+                let per_bucket = self.gateway.bucket_token_rates(now);
+                let d_total = required_decoders(&per_bucket, &self.profile);
+                let d_target =
+                    regular_decoders(d_total, self.cfg.convertibles).max(self.cfg.min_decoders);
+                let cur_d = view.active_count(Role::Decoder);
+                let decoders = self.decode_hyst.apply(cur_d, d_target);
 
-    fn scale(&mut self, now: f64, cluster: &Cluster) -> ScaleTargets {
-        self.gateway.tick_burst_detector(now);
-
-        // Eq. 2: prefillers from the input-token rate.
-        let lambda = self.gateway.input_token_rate(now);
-        let p_target = required_prefillers(lambda, &self.profile).max(self.cfg.min_prefillers);
-        let cur_p = cluster.active_count(Role::Prefiller);
-        let prefillers = self.prefill_hyst.apply(cur_p, p_target);
-
-        // Eqs. 3–4: decoders from per-bucket combined token rates, minus
-        // the static convertible pool.
-        let per_bucket = self.gateway.bucket_token_rates(now);
-        let d_total = required_decoders(&per_bucket, &self.profile);
-        let d_target =
-            regular_decoders(d_total, self.cfg.convertibles).max(self.cfg.min_decoders);
-        let cur_d = cluster.active_count(Role::Decoder);
-        let decoders = self.decode_hyst.apply(cur_d, d_target);
-
-        ScaleTargets {
-            prefillers,
-            decoders,
+                actions.push(Action::SetFleet {
+                    role: Role::Prefiller,
+                    target: prefillers,
+                });
+                actions.push(Action::SetFleet {
+                    role: Role::Decoder,
+                    target: decoders,
+                });
+            }
+            Signal::Completion(_) | Signal::InstanceReady(_) | Signal::InstanceDrained(_) => {}
         }
-    }
-
-    fn predict_bucket(&mut self, req: &Request) -> usize {
-        self.gateway
-            .predictor
-            .predict_bucket(req.input_tokens, req.output_tokens)
-            .index()
     }
 }
 
@@ -178,6 +225,7 @@ impl Coordinator for TokenScale {
 mod tests {
     use super::*;
     use crate::perfmodel::catalog;
+    use crate::sim::Cluster;
 
     fn mk() -> TokenScale {
         let engine = EngineModel::new(
@@ -187,6 +235,32 @@ mod tests {
         );
         let link = catalog::link("a100-cluster").unwrap();
         TokenScale::new(TokenScaleConfig::default(), &engine, &link, 1024, 900.0)
+    }
+
+    /// Feed one arrival through the signal API (routing actions ignored).
+    fn observe(ts: &mut TokenScale, now: f64, req: &Request, cluster: &Cluster) {
+        let view = ClusterView::new(cluster);
+        let mut acts = Vec::new();
+        ts.on_signal(now, Signal::Arrival(req), &view, &mut acts);
+    }
+
+    /// Run one control tick and return the (prefiller, decoder) targets.
+    fn tick_targets(ts: &mut TokenScale, now: f64, cluster: &Cluster) -> (usize, usize) {
+        let view = ClusterView::new(cluster);
+        let mut acts = Vec::new();
+        ts.on_signal(now, Signal::Tick, &view, &mut acts);
+        let mut p = cluster.active_count(Role::Prefiller);
+        let mut d = cluster.active_count(Role::Decoder);
+        for a in &acts {
+            if let Action::SetFleet { role, target } = a {
+                match role {
+                    Role::Prefiller => p = *target,
+                    Role::Decoder => d = *target,
+                    Role::ConvertibleDecoder => {}
+                }
+            }
+        }
+        (p, d)
     }
 
     #[test]
@@ -222,13 +296,12 @@ mod tests {
         // Feed a heavy token stream: 40 req × 4096 tok within 1 s.
         for i in 0..40 {
             let r = Request::new(i, i as f64 * 0.02, 4096, 200);
-            ts.observe_arrival(r.arrival, &r);
+            observe(&mut ts, r.arrival, &r, &cluster);
         }
-        let targets = ts.scale(0.9, &cluster);
+        let (prefillers, _) = tick_targets(&mut ts, 0.9, &cluster);
         assert!(
-            targets.prefillers > 1,
-            "high token rate must scale prefillers, got {}",
-            targets.prefillers
+            prefillers > 1,
+            "high token rate must scale prefillers, got {prefillers}"
         );
     }
 
@@ -256,13 +329,13 @@ mod tests {
         let mut ts = mk();
         // No traffic at all: target collapses to min, but hysteresis holds
         // for down_delay_ticks evaluations.
-        let t1 = ts.scale(0.0, &cluster);
-        assert_eq!(t1.prefillers, 4, "first tick holds");
+        let (p1, _) = tick_targets(&mut ts, 0.0, &cluster);
+        assert_eq!(p1, 4, "first tick holds");
         for k in 1..ts.cfg.down_delay_ticks - 1 {
-            let t = ts.scale(k as f64 * 0.25, &cluster);
-            assert_eq!(t.prefillers, 4, "tick {k} holds");
+            let (p, _) = tick_targets(&mut ts, k as f64 * 0.25, &cluster);
+            assert_eq!(p, 4, "tick {k} holds");
         }
-        let t_final = ts.scale(5.0, &cluster);
-        assert_eq!(t_final.prefillers, ts.cfg.min_prefillers);
+        let (p_final, _) = tick_targets(&mut ts, 5.0, &cluster);
+        assert_eq!(p_final, ts.cfg.min_prefillers);
     }
 }

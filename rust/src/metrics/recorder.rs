@@ -1,7 +1,46 @@
 //! Completion recording and SLO attainment reporting.
 
+use crate::sim::policy::RejectReason;
 use crate::util::stats::Summary;
 use crate::workload::{Completion, Request, SloPolicy};
+
+/// Per-reason counters for control-plane actions the engine refused (or
+/// clamped). A healthy policy keeps every counter at zero; non-zero
+/// counts are surfaced in [`SloReport::rejected_actions`] and broken down
+/// by the `tokenscale explain` subcommand.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RejectionCounts {
+    counts: [usize; RejectReason::ALL.len()],
+}
+
+impl RejectionCounts {
+    pub fn note(&mut self, reason: RejectReason) {
+        self.counts[reason.idx()] += 1;
+    }
+
+    pub fn get(&self, reason: RejectReason) -> usize {
+        self.counts[reason.idx()]
+    }
+
+    pub fn total(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    /// (reason, count) pairs for every non-zero counter.
+    pub fn nonzero(&self) -> Vec<(RejectReason, usize)> {
+        RejectReason::ALL
+            .iter()
+            .filter_map(|r| {
+                let n = self.get(*r);
+                if n > 0 {
+                    Some((*r, n))
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+}
 
 /// Collects completions and GPU-time, and produces the attainment/cost
 /// numbers every end-to-end experiment reports (Fig. 9, 14, 15).
@@ -32,6 +71,8 @@ pub struct MetricsRecorder {
     /// Distinct from `horizon_s`, which extends into the drain tail and
     /// therefore varies with how slowly a policy finishes.
     pub workload_s: f64,
+    /// Control-plane actions the engine rejected or clamped, by reason.
+    pub rejections: RejectionCounts,
 }
 
 /// Aggregated SLO report.
@@ -52,6 +93,10 @@ pub struct SloReport {
     pub prefill_wait: Summary,
     /// Arrival → prefill-execution-start distribution (pure queue delay).
     pub queue_wait: Summary,
+    /// Total control-plane actions the engine rejected or clamped during
+    /// the run (0 for well-formed policies; see
+    /// [`MetricsRecorder::rejections`] for the per-reason breakdown).
+    pub rejected_actions: usize,
 }
 
 impl MetricsRecorder {
@@ -120,6 +165,7 @@ impl MetricsRecorder {
                 } else {
                     0.0
                 },
+                rejected_actions: self.rejections.total(),
                 ..Default::default()
             };
         }
@@ -154,6 +200,7 @@ impl MetricsRecorder {
             tpot: Summary::of(&tpots),
             prefill_wait: Summary::of(&prefill_waits),
             queue_wait: Summary::of(&queue_waits),
+            rejected_actions: self.rejections.total(),
         }
     }
 }
@@ -221,5 +268,26 @@ mod tests {
         let r = m.report(&SloPolicy::default(), 0.0);
         assert_eq!(r.n, 0);
         assert_eq!(r.overall_attainment, 0.0);
+        assert_eq!(r.rejected_actions, 0);
+    }
+
+    #[test]
+    fn rejections_roll_up_into_report() {
+        let mut m = MetricsRecorder::new();
+        m.rejections.note(RejectReason::WrongRole);
+        m.rejections.note(RejectReason::WrongRole);
+        m.rejections.note(RejectReason::FleetOverQuota);
+        assert_eq!(m.rejections.get(RejectReason::WrongRole), 2);
+        assert_eq!(m.rejections.total(), 3);
+        assert_eq!(
+            m.rejections.nonzero(),
+            vec![
+                (RejectReason::WrongRole, 2),
+                (RejectReason::FleetOverQuota, 1)
+            ]
+        );
+        m.record(c(0.0, 100, 0.1, 0.05));
+        let r = m.report(&SloPolicy::default(), 0.0);
+        assert_eq!(r.rejected_actions, 3);
     }
 }

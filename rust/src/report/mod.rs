@@ -1,11 +1,16 @@
-//! Reporting and experiment harness: deployment presets, the shared
-//! policy-vs-trace runner every bench target drives, and a tiny timing
-//! harness replacing criterion (offline crate set).
+//! Reporting and experiment harness: deployment presets, the policy
+//! registry, the shared policy-vs-trace runner every bench target drives,
+//! and a tiny timing harness replacing criterion (offline crate set).
 
 pub mod bench;
+pub mod registry;
 pub mod runner;
 
 pub use bench::BenchTimer;
+pub use registry::{
+    register_policy, BuiltPolicy, ClusterSetup, PolicyContext, PolicyEntry, PolicyParams,
+    PolicyRegistry,
+};
 pub use runner::{
     deployment, run_experiment, run_experiment_source, run_experiments, Deployment,
     ExperimentResult, ExperimentSpec, PolicyKind, Workload,

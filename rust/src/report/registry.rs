@@ -1,0 +1,373 @@
+//! The policy registry: one place where control planes are named, built
+//! and documented.
+//!
+//! The experiment runner used to hard-code a six-arm `match` over a
+//! `PolicyKind` enum; every bench, test and CLI flag that wanted a policy
+//! had to reach that match. Now the registry owns the mapping *name →
+//! erased constructor*: the CLI, all fig*/table* benches and tests select
+//! policies by string, `tokenscale policy list` prints what exists, and
+//! third-party policies join with a single [`register_policy`] call — no
+//! core file edits.
+//!
+//! A constructor receives the experiment context ([`PolicyContext`]:
+//! deployment, measured/analytic workload profile, derived thresholds,
+//! velocity profile, SLOs) plus the run's [`PolicyParams`], and returns a
+//! [`BuiltPolicy`]: the boxed [`ControlPlane`] and the cluster provisions
+//! it needs (convertible pool size, chunk budget, Eq. 6 reserve).
+
+use crate::coordinator::{TokenScale, TokenScaleConfig};
+use crate::report::runner::Deployment;
+use crate::scaler::{
+    ablation_bp, ablation_bpd, prefill_deflect, AiBrix, BlitzScale, DistServe, Thresholds,
+};
+use crate::sim::{ControlPlane, StaticCoordinator};
+use crate::trace::TraceProfile;
+use crate::velocity::VelocityProfile;
+use crate::workload::SloPolicy;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// Everything a policy constructor may consult: the deployment under
+/// test, the workload's a-priori character, the Table I thresholds and
+/// Table II velocity profile derived for it, and the SLO policy.
+pub struct PolicyContext<'a> {
+    pub deployment: &'a Deployment,
+    pub workload: &'a TraceProfile,
+    pub thresholds: &'a Thresholds,
+    pub profile: &'a VelocityProfile,
+    pub slo: SloPolicy,
+}
+
+/// Tunable knobs a run may pass to the constructor. Unset fields keep
+/// each policy's defaults.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PolicyParams {
+    /// Convertible Decoder pool size (TokenScale).
+    pub convertibles: Option<usize>,
+    /// Output-predictor accuracy (TokenScale, B+P+D).
+    pub predictor_accuracy: Option<f64>,
+    /// Fixed fleet sizes (the `static` policy).
+    pub prefillers: Option<usize>,
+    pub decoders: Option<usize>,
+}
+
+/// Cluster provisions a policy requires from the runner.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClusterSetup {
+    /// Statically provisioned Convertible Decoders (spawned warm at t=0).
+    pub convertibles: usize,
+    /// Profiled chunk budget installed on convertible decoders.
+    pub chunk_size: usize,
+    /// Eq. 6 KV reserve installed on convertible decoders.
+    pub reserve_tokens: f64,
+}
+
+/// A constructed policy plus its cluster requirements.
+pub struct BuiltPolicy {
+    pub plane: Box<dyn ControlPlane>,
+    pub setup: ClusterSetup,
+}
+
+impl BuiltPolicy {
+    /// A policy with no special cluster provisions.
+    pub fn plain(plane: Box<dyn ControlPlane>) -> BuiltPolicy {
+        BuiltPolicy {
+            plane,
+            setup: ClusterSetup::default(),
+        }
+    }
+}
+
+/// Erased policy constructor.
+pub type BuildFn = Arc<dyn Fn(&PolicyContext<'_>, &PolicyParams) -> BuiltPolicy + Send + Sync>;
+
+/// One registry row.
+#[derive(Clone)]
+pub struct PolicyEntry {
+    /// Canonical name (what `PolicyKind::name` returns).
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    /// One-line description for `tokenscale policy list`.
+    pub description: &'static str,
+    /// Tunable-parameter help for `tokenscale policy list`.
+    pub params: &'static str,
+    pub build: BuildFn,
+}
+
+impl PolicyEntry {
+    fn matches(&self, query: &str) -> bool {
+        self.name.eq_ignore_ascii_case(query)
+            || self.aliases.iter().any(|a| a.eq_ignore_ascii_case(query))
+    }
+}
+
+/// Extra entries registered at runtime (third-party policies).
+fn extras() -> &'static Mutex<Vec<PolicyEntry>> {
+    static EXTRAS: Mutex<Vec<PolicyEntry>> = Mutex::new(Vec::new());
+    &EXTRAS
+}
+
+/// Register a policy so every string-keyed selection point (CLI flags,
+/// benches, `ExperimentSpec`s) can use it. Last registration wins on name
+/// collisions with built-ins, so experiments can also shadow a stock
+/// policy. Names for dynamically built strings can be obtained with
+/// `Box::leak`.
+pub fn register_policy(entry: PolicyEntry) {
+    extras().lock().unwrap().push(entry);
+}
+
+/// Name-keyed collection of policy constructors.
+pub struct PolicyRegistry {
+    entries: Vec<PolicyEntry>,
+}
+
+impl PolicyRegistry {
+    /// The six stock control planes plus the deflection demo.
+    pub fn builtin() -> PolicyRegistry {
+        let entries = vec![
+            PolicyEntry {
+                name: "tokenscale",
+                aliases: &["ts"],
+                description: "Token-velocity autoscaling + convertible decoders (the paper's system)",
+                params: "convertibles=N, predictor_accuracy=0..1",
+                build: Arc::new(|ctx, params| {
+                    let mut cfg = TokenScaleConfig::default();
+                    if let Some(c) = params.convertibles {
+                        cfg.convertibles = c;
+                    }
+                    if let Some(a) = params.predictor_accuracy {
+                        cfg.predictor_accuracy = a;
+                    }
+                    let avg_in = ctx.workload.avg_input_tokens.max(1.0);
+                    let avg_total = avg_in + ctx.workload.avg_output_tokens;
+                    let ts = TokenScale::new(
+                        cfg,
+                        &ctx.deployment.engine,
+                        &ctx.deployment.link,
+                        avg_in as usize,
+                        avg_total,
+                    );
+                    BuiltPolicy {
+                        setup: ClusterSetup {
+                            convertibles: ts.cfg.convertibles,
+                            chunk_size: ts.chunk_size,
+                            reserve_tokens: ts.reserve_tokens,
+                        },
+                        plane: Box::new(ts),
+                    }
+                }),
+            },
+            PolicyEntry {
+                name: "aibrix",
+                aliases: &[],
+                description: "Concurrency-based prefiller + 70%-memory decoder autoscaling (KPA heritage)",
+                params: "(thresholds derived offline)",
+                build: Arc::new(|ctx, _| BuiltPolicy::plain(Box::new(AiBrix::new(ctx.thresholds)))),
+            },
+            PolicyEntry {
+                name: "blitzscale",
+                aliases: &["blitz"],
+                description: "Concurrency thresholds for both stages + idealized live scale-up",
+                params: "(thresholds derived offline)",
+                build: Arc::new(|ctx, _| {
+                    BuiltPolicy::plain(Box::new(BlitzScale::new(ctx.thresholds)))
+                }),
+            },
+            PolicyEntry {
+                name: "distserve",
+                aliases: &["dist"],
+                description: "RPS thresholds for both stages (simulator-derived offline)",
+                params: "(thresholds derived offline)",
+                build: Arc::new(|ctx, _| {
+                    BuiltPolicy::plain(Box::new(DistServe::new(ctx.thresholds)))
+                }),
+            },
+            PolicyEntry {
+                name: "b+p",
+                aliases: &["bp"],
+                description: "Ablation: DistServe base + TokenScale prefiller scaler (Fig. 14)",
+                params: "(thresholds derived offline)",
+                build: Arc::new(|ctx, _| {
+                    let avg_in = ctx.workload.avg_input_tokens.max(1.0);
+                    BuiltPolicy::plain(Box::new(ablation_bp(
+                        ctx.thresholds,
+                        &ctx.deployment.engine,
+                        &ctx.deployment.link,
+                        avg_in as usize,
+                    )))
+                }),
+            },
+            PolicyEntry {
+                name: "b+p+d",
+                aliases: &["bpd"],
+                description: "Ablation: + TokenScale decoder scaler, no convertibles (Fig. 14)",
+                params: "predictor_accuracy=0..1",
+                build: Arc::new(|ctx, params| {
+                    let avg_in = ctx.workload.avg_input_tokens.max(1.0);
+                    BuiltPolicy::plain(Box::new(ablation_bpd(
+                        ctx.thresholds,
+                        &ctx.deployment.engine,
+                        &ctx.deployment.link,
+                        avg_in as usize,
+                        params.predictor_accuracy.unwrap_or(0.85),
+                    )))
+                }),
+            },
+            PolicyEntry {
+                name: "deflect",
+                aliases: &[],
+                description: "DistServe base that deflects prefill onto regular decoders under SLO pressure",
+                params: "(thresholds derived offline)",
+                build: Arc::new(|ctx, _| {
+                    BuiltPolicy::plain(Box::new(prefill_deflect(
+                        ctx.thresholds,
+                        ctx.profile.prefill,
+                        ctx.slo,
+                    )))
+                }),
+            },
+            PolicyEntry {
+                name: "static",
+                aliases: &[],
+                description: "Fixed fleet, least-loaded routing (tests / capacity ground truth)",
+                params: "prefillers=N, decoders=N (defaults: deployment initial fleet)",
+                build: Arc::new(|ctx, params| {
+                    BuiltPolicy::plain(Box::new(StaticCoordinator::new(
+                        params.prefillers.unwrap_or(ctx.deployment.initial_prefillers),
+                        params.decoders.unwrap_or(ctx.deployment.initial_decoders),
+                    )))
+                }),
+            },
+        ];
+        PolicyRegistry { entries }
+    }
+
+    /// Built-ins plus everything registered via [`register_policy`].
+    pub fn global() -> PolicyRegistry {
+        let mut reg = PolicyRegistry::builtin();
+        reg.entries.extend(extras().lock().unwrap().iter().cloned());
+        reg
+    }
+
+    pub fn entries(&self) -> &[PolicyEntry] {
+        &self.entries
+    }
+
+    /// Look up by canonical name or alias, case-insensitive. Later
+    /// registrations shadow earlier ones.
+    pub fn get(&self, name: &str) -> Option<&PolicyEntry> {
+        self.entries.iter().rev().find(|e| e.matches(name))
+    }
+}
+
+/// A validated policy name — a thin, copyable wrapper over the registry's
+/// canonical names (the enum it replaces carried the constructors; the
+/// registry owns those now).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PolicyKind(&'static str);
+
+impl PolicyKind {
+    /// Resolve a user-supplied name/alias against the registry.
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        PolicyKind::parse_with(&PolicyRegistry::global(), s)
+    }
+
+    /// Resolve against a specific registry snapshot.
+    pub fn parse_with(registry: &PolicyRegistry, s: &str) -> Option<PolicyKind> {
+        registry.get(s).map(|e| PolicyKind(e.name))
+    }
+
+    /// Like [`PolicyKind::parse`] but panics on unknown names — for
+    /// benches and tests that select stock policies.
+    pub fn named(s: &str) -> PolicyKind {
+        PolicyKind::parse(s).unwrap_or_else(|| panic!("policy `{s}` is not in the registry"))
+    }
+
+    pub fn name(self) -> &'static str {
+        self.0
+    }
+
+    /// The four headline control planes of the paper's evaluation.
+    pub fn all_baselines() -> [PolicyKind; 4] {
+        [
+            PolicyKind("tokenscale"),
+            PolicyKind("aibrix"),
+            PolicyKind("blitzscale"),
+            PolicyKind("distserve"),
+        ]
+    }
+}
+
+impl fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Action, ClusterView, Signal};
+
+    #[test]
+    fn builtin_names_and_aliases_resolve() {
+        for (query, canon) in [
+            ("tokenscale", "tokenscale"),
+            ("ts", "tokenscale"),
+            ("AIBRIX", "aibrix"),
+            ("blitz", "blitzscale"),
+            ("dist", "distserve"),
+            ("bp", "b+p"),
+            ("b+p+d", "b+p+d"),
+            ("deflect", "deflect"),
+            ("static", "static"),
+        ] {
+            assert_eq!(PolicyKind::parse(query).map(|k| k.name()), Some(canon), "{query}");
+        }
+        assert!(PolicyKind::parse("no-such-policy").is_none());
+    }
+
+    #[test]
+    fn baseline_set_is_stable() {
+        let names: Vec<&str> = PolicyKind::all_baselines().iter().map(|k| k.name()).collect();
+        assert_eq!(names, vec!["tokenscale", "aibrix", "blitzscale", "distserve"]);
+    }
+
+    #[test]
+    fn registry_lists_builtins_with_descriptions() {
+        let reg = PolicyRegistry::builtin();
+        assert!(reg.entries().len() >= 8);
+        for e in reg.entries() {
+            assert!(!e.description.is_empty(), "{} needs a description", e.name);
+            assert!(!e.params.is_empty(), "{} needs a params note", e.name);
+        }
+    }
+
+    #[test]
+    fn third_party_registration_resolves_by_string() {
+        struct Noop;
+        impl crate::sim::ControlPlane for Noop {
+            fn name(&self) -> &str {
+                "noop-test-policy"
+            }
+            fn on_signal(
+                &mut self,
+                _: f64,
+                _: Signal<'_>,
+                _: &ClusterView<'_>,
+                _: &mut Vec<Action>,
+            ) {
+            }
+        }
+        register_policy(PolicyEntry {
+            name: "noop-test-policy",
+            aliases: &["noop"],
+            description: "test-only",
+            params: "-",
+            build: Arc::new(|_, _| BuiltPolicy::plain(Box::new(Noop))),
+        });
+        let kind = PolicyKind::parse("noop-test-policy").expect("registered");
+        assert_eq!(kind.name(), "noop-test-policy");
+        assert!(PolicyKind::parse("noop").is_some());
+    }
+}

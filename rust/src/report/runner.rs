@@ -2,16 +2,24 @@
 //! §V setups and a single entry point that drives any policy over any
 //! trace on the simulated cluster. Every bench target and example uses
 //! this, so all experiments share identical mechanics.
+//!
+//! Policies are selected **by registry name** ([`PolicyKind`] is a thin
+//! wrapper over the canonical names): the runner derives the experiment
+//! context (workload profile, thresholds, velocity profile) and hands it
+//! to the registry constructor — no policy-specific code lives here.
 
-use crate::coordinator::{TokenScale, TokenScaleConfig};
 use crate::metrics::SloReport;
 use crate::perfmodel::{catalog, EngineModel, LinkSpec};
-use crate::scaler::{derive_thresholds_from_profile, AiBrix, BlitzScale, DistServe};
+use crate::report::registry::{PolicyContext, PolicyParams, PolicyRegistry};
+use crate::scaler::derive_thresholds_from_profile;
+use crate::sim::legacy::{simulate_source_legacy, V1Bridge};
 use crate::sim::{simulate_source, ClusterConfig, SimConfig, SimResult};
 use crate::trace::{ArrivalSource, SourceFactory, Trace, TraceProfile, TraceSliceSource};
 use crate::velocity::VelocityProfile;
 use crate::workload::SloPolicy;
 use std::sync::Arc;
+
+pub use crate::report::registry::PolicyKind;
 
 /// A deployment preset: (model, GPU, TP, cluster size, link).
 #[derive(Clone)]
@@ -71,53 +79,6 @@ pub fn deployment(name: &str) -> Option<Deployment> {
     Some(d)
 }
 
-/// The four control planes under evaluation.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum PolicyKind {
-    TokenScale,
-    AiBrix,
-    BlitzScale,
-    DistServe,
-    /// Ablation: DistServe base + TokenScale prefiller scaler (Fig. 14 B+P).
-    AblationBP,
-    /// Ablation: + TokenScale decoder scaler, no convertibles (B+P+D).
-    AblationBPD,
-}
-
-impl PolicyKind {
-    pub fn name(self) -> &'static str {
-        match self {
-            PolicyKind::TokenScale => "tokenscale",
-            PolicyKind::AiBrix => "aibrix",
-            PolicyKind::BlitzScale => "blitzscale",
-            PolicyKind::DistServe => "distserve",
-            PolicyKind::AblationBP => "b+p",
-            PolicyKind::AblationBPD => "b+p+d",
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<PolicyKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "tokenscale" | "ts" => Some(PolicyKind::TokenScale),
-            "aibrix" => Some(PolicyKind::AiBrix),
-            "blitzscale" | "blitz" => Some(PolicyKind::BlitzScale),
-            "distserve" | "dist" => Some(PolicyKind::DistServe),
-            "b+p" | "bp" => Some(PolicyKind::AblationBP),
-            "b+p+d" | "bpd" => Some(PolicyKind::AblationBPD),
-            _ => None,
-        }
-    }
-
-    pub fn all_baselines() -> [PolicyKind; 4] {
-        [
-            PolicyKind::TokenScale,
-            PolicyKind::AiBrix,
-            PolicyKind::BlitzScale,
-            PolicyKind::DistServe,
-        ]
-    }
-}
-
 /// Knobs the individual experiments override.
 #[derive(Clone, Debug)]
 pub struct RunOverrides {
@@ -133,6 +94,8 @@ pub struct RunOverrides {
     /// Run the simulator in single-step reference mode (no decode-
     /// iteration coalescing). Perf baseline + equivalence testing only.
     pub force_single_step: bool,
+    /// Decision audit ring capacity (0 = disabled).
+    pub decision_log: usize,
 }
 
 impl Default for RunOverrides {
@@ -144,6 +107,18 @@ impl Default for RunOverrides {
             initial_prefillers: None,
             initial_decoders: None,
             force_single_step: false,
+            decision_log: 0,
+        }
+    }
+}
+
+impl RunOverrides {
+    fn policy_params(&self) -> PolicyParams {
+        PolicyParams {
+            convertibles: self.convertibles,
+            predictor_accuracy: self.predictor_accuracy,
+            prefillers: self.initial_prefillers,
+            decoders: self.initial_decoders,
         }
     }
 }
@@ -156,6 +131,52 @@ pub struct ExperimentResult {
     /// The spec's free-form label when run via `run_experiments`
     /// (empty for direct `run_experiment` calls).
     pub label: String,
+}
+
+/// Build the simulation/cluster configs and the policy (via the registry)
+/// for one experiment cell.
+fn prepare_run(
+    dep: &Deployment,
+    policy: PolicyKind,
+    workload: &TraceProfile,
+    ov: &RunOverrides,
+) -> (SimConfig, ClusterConfig, crate::report::registry::BuiltPolicy) {
+    let slo = SloPolicy::default();
+    let avg_in = workload.avg_input_tokens.max(1.0);
+    let profile = VelocityProfile::analytic(&dep.engine, &dep.link, avg_in as usize);
+    let thresholds = derive_thresholds_from_profile(workload, &dep.engine, &profile);
+    let registry = PolicyRegistry::global();
+    let entry = registry
+        .get(policy.name())
+        .unwrap_or_else(|| panic!("policy `{}` is not in the registry", policy.name()));
+    let ctx = PolicyContext {
+        deployment: dep,
+        workload,
+        thresholds: &thresholds,
+        profile: &profile,
+        slo,
+    };
+    let built = (entry.build)(&ctx, &ov.policy_params());
+
+    let sim_cfg = SimConfig {
+        initial_prefillers: ov.initial_prefillers.unwrap_or(dep.initial_prefillers),
+        initial_decoders: ov.initial_decoders.unwrap_or(dep.initial_decoders),
+        initial_convertibles: built.setup.convertibles,
+        link: dep.link.clone(),
+        slo,
+        force_single_step: ov.force_single_step,
+        decision_log: ov.decision_log,
+        ..Default::default()
+    };
+    let cluster_cfg = ClusterConfig {
+        prefill_engine: dep.engine.clone(),
+        decode_engine: dep.engine.clone(),
+        startup_override_s: None,
+        max_gpus: dep.max_gpus,
+        convertible_chunk_size: built.setup.chunk_size,
+        convertible_reserve_tokens: built.setup.reserve_tokens,
+    };
+    (sim_cfg, cluster_cfg, built)
 }
 
 /// Run one (deployment, policy, trace) experiment over a materialized
@@ -183,78 +204,47 @@ pub fn run_experiment_source(
     workload: &TraceProfile,
     ov: &RunOverrides,
 ) -> ExperimentResult {
-    let slo = SloPolicy::default();
-    let avg_in = workload.avg_input_tokens.max(1.0);
-    let avg_total = avg_in + workload.avg_output_tokens;
-    let profile = VelocityProfile::analytic(&dep.engine, &dep.link, avg_in as usize);
-    let thresholds = derive_thresholds_from_profile(workload, &dep.engine, &profile);
+    let (sim_cfg, cluster_cfg, mut built) = prepare_run(dep, policy, workload, ov);
+    let slo = sim_cfg.slo;
+    let sim = simulate_source(sim_cfg, cluster_cfg, built.plane.as_mut(), source);
+    let report = sim.metrics.report(&slo, ov.warmup_s);
+    ExperimentResult {
+        policy,
+        report,
+        sim,
+        label: String::new(),
+    }
+}
 
-    let mut sim_cfg = SimConfig {
-        initial_prefillers: ov.initial_prefillers.unwrap_or(dep.initial_prefillers),
-        initial_decoders: ov.initial_decoders.unwrap_or(dep.initial_decoders),
-        initial_convertibles: 0,
-        link: dep.link.clone(),
-        slo,
-        force_single_step: ov.force_single_step,
-        ..Default::default()
-    };
-    let mut cluster_cfg = ClusterConfig {
-        prefill_engine: dep.engine.clone(),
-        decode_engine: dep.engine.clone(),
-        startup_override_s: None,
-        max_gpus: dep.max_gpus,
-        convertible_chunk_size: 0,
-        convertible_reserve_tokens: 0.0,
-    };
+/// Equivalence-oracle twin of [`run_experiment`]: same registry-built
+/// policy, driven through the frozen v1 `Coordinator` engine via
+/// [`V1Bridge`]. Used only by `rust/tests/control_plane_equivalence.rs`;
+/// deleted together with `sim::legacy`.
+#[doc(hidden)]
+pub fn run_experiment_legacy(
+    dep: &Deployment,
+    policy: PolicyKind,
+    trace: &Trace,
+    ov: &RunOverrides,
+) -> ExperimentResult {
+    let workload = TraceProfile::of_trace(trace);
+    let mut src = TraceSliceSource::new(trace);
+    run_experiment_source_legacy(dep, policy, &mut src, &workload, ov)
+}
 
-    let sim = match policy {
-        PolicyKind::TokenScale => {
-            let mut cfg = TokenScaleConfig::default();
-            if let Some(c) = ov.convertibles {
-                cfg.convertibles = c;
-            }
-            if let Some(a) = ov.predictor_accuracy {
-                cfg.predictor_accuracy = a;
-            }
-            let mut ts = TokenScale::new(cfg, &dep.engine, &dep.link, avg_in as usize, avg_total);
-            sim_cfg.initial_convertibles = ts.cfg.convertibles;
-            cluster_cfg.convertible_chunk_size = ts.chunk_size;
-            cluster_cfg.convertible_reserve_tokens = ts.reserve_tokens;
-            simulate_source(sim_cfg, cluster_cfg, &mut ts, source)
-        }
-        PolicyKind::AiBrix => {
-            let mut p = AiBrix::new(&thresholds);
-            simulate_source(sim_cfg, cluster_cfg, &mut p, source)
-        }
-        PolicyKind::BlitzScale => {
-            let mut p = BlitzScale::new(&thresholds);
-            simulate_source(sim_cfg, cluster_cfg, &mut p, source)
-        }
-        PolicyKind::DistServe => {
-            let mut p = DistServe::new(&thresholds);
-            simulate_source(sim_cfg, cluster_cfg, &mut p, source)
-        }
-        PolicyKind::AblationBP => {
-            let mut p = crate::scaler::baselines::ablation_bp(
-                &thresholds,
-                &dep.engine,
-                &dep.link,
-                avg_in as usize,
-            );
-            simulate_source(sim_cfg, cluster_cfg, &mut p, source)
-        }
-        PolicyKind::AblationBPD => {
-            let mut p = crate::scaler::baselines::ablation_bpd(
-                &thresholds,
-                &dep.engine,
-                &dep.link,
-                avg_in as usize,
-                ov.predictor_accuracy.unwrap_or(0.85),
-            );
-            simulate_source(sim_cfg, cluster_cfg, &mut p, source)
-        }
-    };
-
+/// Streaming-source twin of [`run_experiment_legacy`].
+#[doc(hidden)]
+pub fn run_experiment_source_legacy(
+    dep: &Deployment,
+    policy: PolicyKind,
+    source: &mut dyn ArrivalSource,
+    workload: &TraceProfile,
+    ov: &RunOverrides,
+) -> ExperimentResult {
+    let (sim_cfg, cluster_cfg, mut built) = prepare_run(dep, policy, workload, ov);
+    let slo = sim_cfg.slo;
+    let mut bridge = V1Bridge::new(built.plane.as_mut(), cluster_cfg.clone());
+    let sim = simulate_source_legacy(sim_cfg, cluster_cfg, &mut bridge, source);
     let report = sim.metrics.report(&slo, ov.warmup_s);
     ExperimentResult {
         policy,
@@ -424,7 +414,20 @@ mod tests {
             let r = run_experiment(&dep, p, &trace, &RunOverrides::default());
             assert!(r.report.n > 100, "{}: n={}", p.name(), r.report.n);
             assert!(r.report.avg_gpus > 0.0);
+            // Registry-built stock policies emit only valid actions.
+            assert_eq!(r.report.rejected_actions, 0, "{}", p.name());
         }
+    }
+
+    #[test]
+    fn runner_drives_registry_extras() {
+        // The deflection demo (new action space) runs through the same
+        // string-keyed path as the stock policies.
+        let dep = deployment("small-a100").unwrap();
+        let trace = generate_family(TraceFamily::AzureConv, 6.0, 45.0, 9);
+        let r = run_experiment(&dep, PolicyKind::named("deflect"), &trace, &RunOverrides::default());
+        assert!(r.report.n > 50, "n={}", r.report.n);
+        assert_eq!(r.report.rejected_actions, 0);
     }
 
     #[test]
@@ -458,7 +461,7 @@ mod tests {
             Arc::new(|| SpecSource::new(TraceFamily::AzureConv.spec(6.0, 40.0), 9).boxed());
         let specs: Vec<ExperimentSpec> = (0..2)
             .map(|i| {
-                ExperimentSpec::streaming(&dep, PolicyKind::DistServe, factory.clone())
+                ExperimentSpec::streaming(&dep, PolicyKind::named("distserve"), factory.clone())
                     .with_label(format!("copy{i}"))
             })
             .collect();

@@ -10,16 +10,19 @@
 //!
 //! All three route with least-loaded balancing and have no Convertible
 //! Decoders — matching how the paper retrofits them into the same PD
-//! cluster.
+//! cluster. They implement the v2 [`ControlPlane`] signal/action API; the
+//! extra [`PrefillDeflect`] policy below exercises the action space the
+//! old `Coordinator` trait could not express (load-aware prefill
+//! deflection onto regular decoders).
 
 use super::thresholds::Thresholds;
 use super::tokenscale::Hysteresis;
-use crate::sim::{Cluster, Coordinator, InstanceId, Role, Route, ScaleTargets};
+use crate::sim::{Action, ClusterView, ControlPlane, InstanceId, Role, Signal};
 use crate::util::stats::SlidingWindow;
-use crate::workload::{BucketScheme, Completion, Request};
+use crate::workload::{BucketScheme, Request, SloPolicy};
 
 /// Shared mechanics for the baselines: traffic windows + least-loaded
-/// routing.
+/// routing, expressed over the v2 signal/action exchange.
 struct BaseState {
     /// In-system request count (arrivals − completions).
     inflight: usize,
@@ -71,9 +74,9 @@ impl BaseState {
     fn stage_concurrency(
         &mut self,
         now: f64,
-        cluster: &Cluster,
+        view: &ClusterView<'_>,
     ) -> ((f64, f64), (f64, f64)) {
-        let prefill_now: usize = cluster
+        let prefill_now: usize = view
             .running_of(Role::Prefiller)
             .map(|i| i.prefill_queue.len() + i.active_prefill.is_some() as usize)
             .sum();
@@ -110,17 +113,14 @@ impl BaseState {
         }
     }
 
-    fn route_prefill(&self, cluster: &Cluster) -> Route {
-        cluster
-            .running_of(Role::Prefiller)
+    fn route_prefill(&self, view: &ClusterView<'_>) -> Option<InstanceId> {
+        view.running_of(Role::Prefiller)
             .min_by_key(|i| i.inflight_prefill_tokens())
-            .map(|i| Route::Prefiller(i.id))
-            .unwrap_or(Route::Queue)
+            .map(|i| i.id)
     }
 
-    fn route_decode(&self, req: &Request, cluster: &Cluster) -> Option<InstanceId> {
-        cluster
-            .running_of(Role::Decoder)
+    fn route_decode(&self, req: &Request, view: &ClusterView<'_>) -> Option<InstanceId> {
+        view.running_of(Role::Decoder)
             .filter(|i| i.can_admit(req.total_tokens()))
             .min_by_key(|i| i.decode_load())
             .map(|i| i.id)
@@ -128,6 +128,83 @@ impl BaseState {
 
     fn predict_bucket(&self, req: &Request) -> usize {
         self.scheme.classify(req.input_tokens, req.output_tokens).index()
+    }
+
+    /// Default handling for the non-Tick signals every baseline shares:
+    /// arrival accounting, least-loaded routing, completion accounting.
+    /// Returns true when the signal was one of those (Tick and lifecycle
+    /// notifications return false for the caller to handle).
+    fn base_signal(
+        &mut self,
+        now: f64,
+        signal: Signal<'_>,
+        view: &ClusterView<'_>,
+        actions: &mut Vec<Action>,
+    ) -> bool {
+        match signal {
+            Signal::Arrival(req) => {
+                self.on_arrival(now, req);
+                if let Some(target) = self.route_prefill(view) {
+                    actions.push(Action::RoutePrefill { req: req.id, target });
+                }
+                true
+            }
+            Signal::RetryPrefill(req) => {
+                if let Some(target) = self.route_prefill(view) {
+                    actions.push(Action::RoutePrefill { req: req.id, target });
+                }
+                true
+            }
+            Signal::PrefillDone(req) => {
+                if let Some(decoder) = self.route_decode(req, view) {
+                    actions.push(Action::DispatchDecode {
+                        req: req.id,
+                        decoder,
+                        bucket: self.predict_bucket(req),
+                    });
+                }
+                true
+            }
+            Signal::Completion(_) => {
+                self.on_completion();
+                true
+            }
+            Signal::Tick | Signal::InstanceReady(_) | Signal::InstanceDrained(_) => false,
+        }
+    }
+
+    fn push_fleet(actions: &mut Vec<Action>, prefillers: usize, decoders: usize) {
+        actions.push(Action::SetFleet {
+            role: Role::Prefiller,
+            target: prefillers,
+        });
+        actions.push(Action::SetFleet {
+            role: Role::Decoder,
+            target: decoders,
+        });
+    }
+
+    /// DistServe-style per-tick fleet targets: windowed RPS over the two
+    /// offline thresholds, floored and hysteresis-smoothed. Shared by
+    /// every RPS-threshold policy so a threshold/hysteresis fix lands in
+    /// all of them at once.
+    fn rps_fleet_targets(
+        &mut self,
+        now: f64,
+        view: &ClusterView<'_>,
+        prefill_rps_threshold: f64,
+        decode_rps_threshold: f64,
+    ) -> (usize, usize) {
+        self.rps.evict(now);
+        let rps = self.rps.rate();
+        let p_target = ((rps / prefill_rps_threshold).ceil() as usize).max(self.min_prefillers);
+        let d_target = ((rps / decode_rps_threshold).ceil() as usize).max(self.min_decoders);
+        (
+            self.prefill_hyst
+                .apply(view.active_count(Role::Prefiller), p_target),
+            self.decode_hyst
+                .apply(view.active_count(Role::Decoder), d_target),
+        )
     }
 }
 
@@ -154,47 +231,21 @@ impl AiBrix {
             mem_util_target: thresholds.aibrix_mem_util,
         }
     }
-}
 
-impl Coordinator for AiBrix {
-    fn name(&self) -> &str {
-        "aibrix"
-    }
-
-    fn observe_arrival(&mut self, now: f64, req: &Request) {
-        self.state.on_arrival(now, req);
-    }
-
-    fn observe_completion(&mut self, _now: f64, _c: &Completion) {
-        self.state.on_completion();
-    }
-
-    fn route_prefill(&mut self, _now: f64, _req: &Request, cluster: &Cluster) -> Route {
-        self.state.route_prefill(cluster)
-    }
-
-    fn route_decode(&mut self, _now: f64, req: &Request, cluster: &Cluster) -> Option<InstanceId> {
-        self.state.route_decode(req, cluster)
-    }
-
-    fn scale(&mut self, now: f64, cluster: &Cluster) -> ScaleTargets {
+    fn tick(&mut self, now: f64, view: &ClusterView<'_>, actions: &mut Vec<Action>) {
         // Prefillers: window-averaged prefill-stage concurrency over the
         // per-instance threshold, with KPA panic mode for live spikes.
-        let ((p_win, p_now), _) = self.state.stage_concurrency(now, cluster);
-        let cur_p = cluster.active_count(Role::Prefiller);
-        let p_target = BaseState::panic_target(
-            p_win,
-            p_now,
-            self.prefill_concurrency_threshold,
-            cur_p,
-        )
-        .max(self.state.min_prefillers);
+        let ((p_win, p_now), _) = self.state.stage_concurrency(now, view);
+        let cur_p = view.active_count(Role::Prefiller);
+        let p_target =
+            BaseState::panic_target(p_win, p_now, self.prefill_concurrency_threshold, cur_p)
+                .max(self.state.min_prefillers);
         let prefillers = self.state.prefill_hyst.apply(cur_p, p_target);
 
         // Decoders: mean memory utilization vs the 70 % target (KPA).
         let decoders_now: Vec<&crate::sim::Instance> =
-            cluster.running_of(Role::Decoder).collect();
-        let cur_d = cluster.active_count(Role::Decoder).max(1);
+            view.running_of(Role::Decoder).collect();
+        let cur_d = view.active_count(Role::Decoder).max(1);
         let util = if decoders_now.is_empty() {
             0.0
         } else {
@@ -206,16 +257,30 @@ impl Coordinator for AiBrix {
         let decoders = self
             .state
             .decode_hyst
-            .apply(cluster.active_count(Role::Decoder), d_target);
+            .apply(view.active_count(Role::Decoder), d_target);
 
-        ScaleTargets {
-            prefillers,
-            decoders,
-        }
+        BaseState::push_fleet(actions, prefillers, decoders);
+    }
+}
+
+impl ControlPlane for AiBrix {
+    fn name(&self) -> &str {
+        "aibrix"
     }
 
-    fn predict_bucket(&mut self, req: &Request) -> usize {
-        self.state.predict_bucket(req)
+    fn on_signal(
+        &mut self,
+        now: f64,
+        signal: Signal<'_>,
+        view: &ClusterView<'_>,
+        actions: &mut Vec<Action>,
+    ) {
+        if self.state.base_signal(now, signal, view, actions) {
+            return;
+        }
+        if matches!(signal, Signal::Tick) {
+            self.tick(now, view, actions);
+        }
     }
 }
 
@@ -239,61 +304,47 @@ impl BlitzScale {
             decode_concurrency_threshold: thresholds.concurrency_per_decoder,
         }
     }
+
+    fn tick(&mut self, now: f64, view: &ClusterView<'_>, actions: &mut Vec<Action>) {
+        let ((p_win, p_now), (d_win, d_now)) = self.state.stage_concurrency(now, view);
+        let cur_p = view.active_count(Role::Prefiller);
+        let cur_d = view.active_count(Role::Decoder);
+        let p_target =
+            BaseState::panic_target(p_win, p_now, self.prefill_concurrency_threshold, cur_p)
+                .max(self.state.min_prefillers);
+        let d_target =
+            BaseState::panic_target(d_win, d_now, self.decode_concurrency_threshold, cur_d)
+                .max(self.state.min_decoders);
+        let prefillers = self
+            .state
+            .prefill_hyst
+            .apply(view.active_count(Role::Prefiller), p_target);
+        let decoders = self
+            .state
+            .decode_hyst
+            .apply(view.active_count(Role::Decoder), d_target);
+        BaseState::push_fleet(actions, prefillers, decoders);
+    }
 }
 
-impl Coordinator for BlitzScale {
+impl ControlPlane for BlitzScale {
     fn name(&self) -> &str {
         "blitzscale"
     }
 
-    fn observe_arrival(&mut self, now: f64, req: &Request) {
-        self.state.on_arrival(now, req);
-    }
-
-    fn observe_completion(&mut self, _now: f64, _c: &Completion) {
-        self.state.on_completion();
-    }
-
-    fn route_prefill(&mut self, _now: f64, _req: &Request, cluster: &Cluster) -> Route {
-        self.state.route_prefill(cluster)
-    }
-
-    fn route_decode(&mut self, _now: f64, req: &Request, cluster: &Cluster) -> Option<InstanceId> {
-        self.state.route_decode(req, cluster)
-    }
-
-    fn scale(&mut self, now: f64, cluster: &Cluster) -> ScaleTargets {
-        let ((p_win, p_now), (d_win, d_now)) = self.state.stage_concurrency(now, cluster);
-        let cur_p = cluster.active_count(Role::Prefiller);
-        let cur_d = cluster.active_count(Role::Decoder);
-        let p_target = BaseState::panic_target(
-            p_win,
-            p_now,
-            self.prefill_concurrency_threshold,
-            cur_p,
-        )
-        .max(self.state.min_prefillers);
-        let d_target = BaseState::panic_target(
-            d_win,
-            d_now,
-            self.decode_concurrency_threshold,
-            cur_d,
-        )
-        .max(self.state.min_decoders);
-        ScaleTargets {
-            prefillers: self
-                .state
-                .prefill_hyst
-                .apply(cluster.active_count(Role::Prefiller), p_target),
-            decoders: self
-                .state
-                .decode_hyst
-                .apply(cluster.active_count(Role::Decoder), d_target),
+    fn on_signal(
+        &mut self,
+        now: f64,
+        signal: Signal<'_>,
+        view: &ClusterView<'_>,
+        actions: &mut Vec<Action>,
+    ) {
+        if self.state.base_signal(now, signal, view, actions) {
+            return;
         }
-    }
-
-    fn predict_bucket(&mut self, req: &Request) -> usize {
-        self.state.predict_bucket(req)
+        if matches!(signal, Signal::Tick) {
+            self.tick(now, view, actions);
+        }
     }
 
     fn live_scaling(&self) -> bool {
@@ -318,50 +369,143 @@ impl DistServe {
             decode_rps_threshold: thresholds.rps_per_decoder,
         }
     }
+
+    fn tick(&mut self, now: f64, view: &ClusterView<'_>, actions: &mut Vec<Action>) {
+        let (prefillers, decoders) = self.state.rps_fleet_targets(
+            now,
+            view,
+            self.prefill_rps_threshold,
+            self.decode_rps_threshold,
+        );
+        BaseState::push_fleet(actions, prefillers, decoders);
+    }
 }
 
-impl Coordinator for DistServe {
+impl ControlPlane for DistServe {
     fn name(&self) -> &str {
         "distserve"
     }
 
-    fn observe_arrival(&mut self, now: f64, req: &Request) {
-        self.state.on_arrival(now, req);
-    }
-
-    fn observe_completion(&mut self, _now: f64, _c: &Completion) {
-        self.state.on_completion();
-    }
-
-    fn route_prefill(&mut self, _now: f64, _req: &Request, cluster: &Cluster) -> Route {
-        self.state.route_prefill(cluster)
-    }
-
-    fn route_decode(&mut self, _now: f64, req: &Request, cluster: &Cluster) -> Option<InstanceId> {
-        self.state.route_decode(req, cluster)
-    }
-
-    fn scale(&mut self, now: f64, cluster: &Cluster) -> ScaleTargets {
-        self.state.rps.evict(now);
-        let rps = self.state.rps.rate();
-        let p_target = ((rps / self.prefill_rps_threshold).ceil() as usize)
-            .max(self.state.min_prefillers);
-        let d_target = ((rps / self.decode_rps_threshold).ceil() as usize)
-            .max(self.state.min_decoders);
-        ScaleTargets {
-            prefillers: self
-                .state
-                .prefill_hyst
-                .apply(cluster.active_count(Role::Prefiller), p_target),
-            decoders: self
-                .state
-                .decode_hyst
-                .apply(cluster.active_count(Role::Decoder), d_target),
+    fn on_signal(
+        &mut self,
+        now: f64,
+        signal: Signal<'_>,
+        view: &ClusterView<'_>,
+        actions: &mut Vec<Action>,
+    ) {
+        if self.state.base_signal(now, signal, view, actions) {
+            return;
+        }
+        if matches!(signal, Signal::Tick) {
+            self.tick(now, view, actions);
         }
     }
+}
 
-    fn predict_bucket(&mut self, req: &Request) -> usize {
-        self.state.predict_bucket(req)
+// ------------------------------------------------- Prefill deflection demo
+
+/// DistServe-style base that *deflects* prefill onto regular decoders
+/// instead of queueing when no prefiller can meet the request's TTFT SLO
+/// — the "Towards Load-Aware Prefill Deflection" move, inexpressible in
+/// the v1 API and exercising [`Action::DeflectPrefill`].
+pub struct PrefillDeflect {
+    state: BaseState,
+    pub prefill_rps_threshold: f64,
+    pub decode_rps_threshold: f64,
+    /// Offline-profiled prefill velocity (tok/s per prefiller) for the
+    /// SLO feasibility check.
+    pub prefill_velocity: f64,
+    slo: SloPolicy,
+}
+
+/// Build the deflection policy from the same offline context the other
+/// baselines use.
+pub fn prefill_deflect(
+    thresholds: &Thresholds,
+    prefill_velocity: f64,
+    slo: SloPolicy,
+) -> PrefillDeflect {
+    PrefillDeflect {
+        state: BaseState::new(60, 10.0),
+        prefill_rps_threshold: thresholds.rps_per_prefiller,
+        decode_rps_threshold: thresholds.rps_per_decoder,
+        prefill_velocity,
+        slo,
+    }
+}
+
+impl PrefillDeflect {
+    fn emit_prefill(&self, req: &Request, view: &ClusterView<'_>, actions: &mut Vec<Action>) {
+        // Feasible prefiller first (least estimated waiting time).
+        let slo = self.slo.ttft_slo(req.input_tokens);
+        let mut best: Option<(f64, InstanceId)> = None;
+        for p in view.running_of(Role::Prefiller) {
+            let waiting =
+                (p.inflight_prefill_tokens() + req.input_tokens) as f64 / self.prefill_velocity;
+            if waiting <= slo && best.map_or(true, |(w, _)| waiting < w) {
+                best = Some((waiting, p.id));
+            }
+        }
+        if let Some((_, target)) = best {
+            actions.push(Action::RoutePrefill { req: req.id, target });
+            return;
+        }
+        // Every prefiller would blow the SLO: deflect to the least-loaded
+        // regular decoder with room for the full KV footprint.
+        let deflect = view
+            .running_of(Role::Decoder)
+            .filter(|d| d.admission_capacity() >= req.total_tokens() as f64)
+            .min_by_key(|d| (d.decode_load(), d.id))
+            .map(|d| d.id);
+        if let Some(decoder) = deflect {
+            actions.push(Action::DeflectPrefill {
+                req: req.id,
+                decoder,
+                chunked: true,
+            });
+            return;
+        }
+        // Fall back to the least-loaded prefiller (waiting beats dropping).
+        if let Some(target) = self.state.route_prefill(view) {
+            actions.push(Action::RoutePrefill { req: req.id, target });
+        }
+    }
+}
+
+impl ControlPlane for PrefillDeflect {
+    fn name(&self) -> &str {
+        "deflect"
+    }
+
+    fn on_signal(
+        &mut self,
+        now: f64,
+        signal: Signal<'_>,
+        view: &ClusterView<'_>,
+        actions: &mut Vec<Action>,
+    ) {
+        match signal {
+            // Deflection replaces the default prefill routing; everything
+            // else (decode dispatch, completion accounting) is the shared
+            // baseline behavior.
+            Signal::Arrival(req) => {
+                self.state.on_arrival(now, req);
+                self.emit_prefill(req, view, actions);
+            }
+            Signal::RetryPrefill(req) => self.emit_prefill(req, view, actions),
+            Signal::Tick => {
+                let (prefillers, decoders) = self.state.rps_fleet_targets(
+                    now,
+                    view,
+                    self.prefill_rps_threshold,
+                    self.decode_rps_threshold,
+                );
+                BaseState::push_fleet(actions, prefillers, decoders);
+            }
+            other => {
+                self.state.base_signal(now, other, view, actions);
+            }
+        }
     }
 }
 
@@ -370,6 +514,7 @@ mod tests {
     use super::*;
     use crate::perfmodel::{catalog, EngineModel};
     use crate::scaler::thresholds;
+    use crate::sim::Cluster;
     use crate::trace::{generate_family, TraceFamily};
     use crate::velocity::VelocityProfile;
 
@@ -406,6 +551,37 @@ mod tests {
         c
     }
 
+    /// Drive one signal and collect the actions.
+    fn signal<P: ControlPlane>(
+        p: &mut P,
+        now: f64,
+        sig: Signal<'_>,
+        cluster: &Cluster,
+    ) -> Vec<Action> {
+        let mut acts = Vec::new();
+        p.on_signal(now, sig, &ClusterView::new(cluster), &mut acts);
+        acts
+    }
+
+    /// Run one tick and read back the (prefiller, decoder) fleet targets.
+    fn tick_targets<P: ControlPlane>(p: &mut P, now: f64, cluster: &Cluster) -> (usize, usize) {
+        let acts = signal(p, now, Signal::Tick, cluster);
+        let mut out = (
+            cluster.active_count(Role::Prefiller),
+            cluster.active_count(Role::Decoder),
+        );
+        for a in &acts {
+            if let Action::SetFleet { role, target } = a {
+                match role {
+                    Role::Prefiller => out.0 = *target,
+                    Role::Decoder => out.1 = *target,
+                    Role::ConvertibleDecoder => {}
+                }
+            }
+        }
+        out
+    }
+
     #[test]
     fn aibrix_scales_prefill_on_concurrency() {
         let t = thresh();
@@ -415,6 +591,8 @@ mod tests {
         let need = (t.concurrency_per_prefiller * 3.0) as usize + 1;
         let pid = cluster.ids_of(Role::Prefiller)[0];
         for i in 0..need {
+            let req = Request::new(i as u64, 0.0, 500, 100);
+            let _ = signal(&mut a, 0.0, Signal::Arrival(&req), &cluster);
             cluster
                 .get_mut(pid)
                 .unwrap()
@@ -423,17 +601,30 @@ mod tests {
                     req: Request::new(i as u64, 0.0, 500, 100),
                     remaining: 500,
                     enqueued_at: 0.0,
+                    chunk_override: None,
                 });
         }
-        let targets = a.scale(0.1, &cluster);
-        assert!(targets.prefillers >= 3, "prefillers {}", targets.prefillers);
+        let (prefillers, _) = tick_targets(&mut a, 0.1, &cluster);
+        assert!(prefillers >= 3, "prefillers {prefillers}");
         // Queue drains: windowed average decays, hysteresis then releases.
         cluster.get_mut(pid).unwrap().prefill_queue.clear();
-        let mut last = targets;
-        for k in 0..300 {
-            last = a.scale(0.2 + k as f64 * 0.25, &cluster);
+        for i in 0..need {
+            let c = crate::workload::Completion {
+                id: i as u64,
+                arrival: 0.0,
+                input_tokens: 500,
+                output_tokens: 100,
+                ttft: 0.1,
+                tpot: 0.01,
+                finish: 0.2,
+            };
+            let _ = signal(&mut a, 0.2, Signal::Completion(&c), &cluster);
         }
-        assert_eq!(last.prefillers, 1, "should eventually scale back down");
+        let mut last = (0, 0);
+        for k in 0..300 {
+            last = tick_targets(&mut a, 0.2 + k as f64 * 0.25, &cluster);
+        }
+        assert_eq!(last.0, 1, "should eventually scale back down");
     }
 
     #[test]
@@ -445,8 +636,8 @@ mod tests {
         let id = cluster.ids_of(Role::Decoder)[0];
         let cap = cluster.get(id).unwrap().engine.kv_capacity_tokens();
         cluster.get_mut(id).unwrap().reserved_tokens = 0.95 * cap;
-        let targets = a.scale(0.0, &cluster);
-        assert!(targets.decoders >= 2, "decoders {}", targets.decoders);
+        let (_, decoders) = tick_targets(&mut a, 0.0, &cluster);
+        assert!(decoders >= 2, "decoders {decoders}");
     }
 
     #[test]
@@ -465,10 +656,11 @@ mod tests {
         let n = (t.rps_per_prefiller * 4.0 * 5.0) as usize + 1;
         for i in 0..n {
             let at = i as f64 * (5.0 / n as f64);
-            d.observe_arrival(at, &Request::new(i as u64, at, 500, 100));
+            let req = Request::new(i as u64, at, 500, 100);
+            let _ = signal(&mut d, at, Signal::Arrival(&req), &cluster);
         }
-        let targets = d.scale(5.0, &cluster);
-        assert!(targets.prefillers >= 3, "prefillers {}", targets.prefillers);
+        let (prefillers, _) = tick_targets(&mut d, 5.0, &cluster);
+        assert!(prefillers >= 3, "prefillers {prefillers}");
     }
 
     #[test]
@@ -477,11 +669,48 @@ mod tests {
         let mut d = DistServe::new(&t);
         let cluster = mk_cluster();
         let req = Request::new(1, 0.0, 500, 100);
-        match d.route_prefill(0.0, &req, &cluster) {
-            Route::Prefiller(_) => {}
-            other => panic!("expected prefiller, got {other:?}"),
-        }
-        assert!(d.route_decode(0.0, &req, &cluster).is_some());
+        let acts = signal(&mut d, 0.0, Signal::Arrival(&req), &cluster);
+        assert!(
+            matches!(acts.as_slice(), [Action::RoutePrefill { req: 1, .. }]),
+            "expected a prefill route, got {acts:?}"
+        );
+        let acts = signal(&mut d, 0.0, Signal::PrefillDone(&req), &cluster);
+        assert!(
+            matches!(acts.as_slice(), [Action::DispatchDecode { req: 1, .. }]),
+            "expected a decode dispatch, got {acts:?}"
+        );
+    }
+
+    #[test]
+    fn deflect_policy_deflects_when_prefillers_are_saturated() {
+        let t = thresh();
+        let mut p = prefill_deflect(&t, 10_000.0, SloPolicy::default());
+        let mut cluster = mk_cluster();
+        let req = Request::new(1, 0.0, 256, 64);
+        // Idle prefiller: normal routing.
+        let acts = signal(&mut p, 0.0, Signal::Arrival(&req), &cluster);
+        assert!(matches!(acts.as_slice(), [Action::RoutePrefill { .. }]));
+        // Saturate the only prefiller far past any TTFT SLO.
+        let pid = cluster.ids_of(Role::Prefiller)[0];
+        cluster
+            .get_mut(pid)
+            .unwrap()
+            .prefill_queue
+            .push_back(crate::sim::PrefillJob {
+                req: Request::new(99, 0.0, 10_000_000, 1),
+                remaining: 10_000_000,
+                enqueued_at: 0.0,
+                chunk_override: None,
+            });
+        let req2 = Request::new(2, 0.1, 256, 64);
+        let acts = signal(&mut p, 0.1, Signal::Arrival(&req2), &cluster);
+        assert!(
+            matches!(
+                acts.as_slice(),
+                [Action::DeflectPrefill { req: 2, chunked: true, .. }]
+            ),
+            "expected a deflection, got {acts:?}"
+        );
     }
 }
 
@@ -549,29 +778,36 @@ pub fn ablation_bpd(
     }
 }
 
-impl Coordinator for Ablation {
+impl ControlPlane for Ablation {
     fn name(&self) -> &str {
         self.label
     }
 
-    fn observe_arrival(&mut self, now: f64, req: &Request) {
-        self.state.on_arrival(now, req);
-        self.gateway.ingest(now, req);
-    }
+    fn on_signal(
+        &mut self,
+        now: f64,
+        signal: Signal<'_>,
+        view: &ClusterView<'_>,
+        actions: &mut Vec<Action>,
+    ) {
+        // The gateway ingest (velocity windows + one predictor draw) must
+        // run before the shared arrival handling, mirroring the v1
+        // observe_arrival body.
+        if let Signal::Arrival(req) = signal {
+            self.state.on_arrival(now, req);
+            self.gateway.ingest(now, req);
+            if let Some(target) = self.state.route_prefill(view) {
+                actions.push(Action::RoutePrefill { req: req.id, target });
+            }
+            return;
+        }
+        if self.state.base_signal(now, signal, view, actions) {
+            return;
+        }
+        if !matches!(signal, Signal::Tick) {
+            return;
+        }
 
-    fn observe_completion(&mut self, _now: f64, _c: &Completion) {
-        self.state.on_completion();
-    }
-
-    fn route_prefill(&mut self, _now: f64, _req: &Request, cluster: &Cluster) -> Route {
-        self.state.route_prefill(cluster)
-    }
-
-    fn route_decode(&mut self, _now: f64, req: &Request, cluster: &Cluster) -> Option<InstanceId> {
-        self.state.route_decode(req, cluster)
-    }
-
-    fn scale(&mut self, now: f64, cluster: &Cluster) -> ScaleTargets {
         self.state.rps.evict(now);
         let rps = self.state.rps.rate();
 
@@ -587,19 +823,14 @@ impl Coordinator for Ablation {
         } else {
             ((rps / self.decode_rps_threshold).ceil() as usize).max(self.state.min_decoders)
         };
-        ScaleTargets {
-            prefillers: self
-                .state
-                .prefill_hyst
-                .apply(cluster.active_count(Role::Prefiller), p_target),
-            decoders: self
-                .state
-                .decode_hyst
-                .apply(cluster.active_count(Role::Decoder), d_target),
-        }
-    }
-
-    fn predict_bucket(&mut self, req: &Request) -> usize {
-        self.state.predict_bucket(req)
+        let prefillers = self
+            .state
+            .prefill_hyst
+            .apply(view.active_count(Role::Prefiller), p_target);
+        let decoders = self
+            .state
+            .decode_hyst
+            .apply(view.active_count(Role::Decoder), d_target);
+        BaseState::push_fleet(actions, prefillers, decoders);
     }
 }

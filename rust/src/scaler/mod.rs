@@ -6,7 +6,10 @@ pub mod baselines;
 pub mod thresholds;
 pub mod tokenscale;
 
-pub use baselines::{AiBrix, BlitzScale, DistServe};
+pub use baselines::{
+    ablation_bp, ablation_bpd, prefill_deflect, Ablation, AiBrix, BlitzScale, DistServe,
+    PrefillDeflect,
+};
 pub use thresholds::{
     derive as derive_thresholds, derive_from_profile as derive_thresholds_from_profile, Thresholds,
 };

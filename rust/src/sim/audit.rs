@@ -1,0 +1,181 @@
+//! Decision audit trail: a bounded ring buffer of every control-plane
+//! action the engine validated, with its triggering signal and outcome.
+//!
+//! Enabled per run via `SimConfig::decision_log` (ring capacity; 0 = off,
+//! the default — recording is allocation-light but not free). The full
+//! ring is exported on `SimResult::decisions` and rendered by the
+//! `tokenscale explain` CLI subcommand.
+
+use super::policy::{Action, ActionOutcome, SignalKind};
+use crate::util::json::Json;
+use std::collections::VecDeque;
+
+/// One validated control-plane decision.
+#[derive(Clone, Copy, Debug)]
+pub struct DecisionRecord {
+    /// Simulation time the action was processed.
+    pub t: f64,
+    /// The signal that prompted it.
+    pub signal: SignalKind,
+    pub action: Action,
+    pub outcome: ActionOutcome,
+}
+
+impl DecisionRecord {
+    /// One-line human rendering (the `explain` CLI format).
+    pub fn line(&self) -> String {
+        let outcome = match self.outcome {
+            ActionOutcome::Applied => "applied".to_string(),
+            ActionOutcome::Clamped(r) => format!("clamped: {}", r.label()),
+            ActionOutcome::Rejected(r) => format!("REJECTED: {}", r.label()),
+        };
+        format!(
+            "t={:9.3}s  [{:>15}] {} -> {}",
+            self.t,
+            self.signal.label(),
+            self.action,
+            outcome
+        )
+    }
+}
+
+/// Bounded ring of [`DecisionRecord`]s. Keeps the most recent `capacity`
+/// records; `total_seen` counts everything ever pushed so truncation is
+/// visible.
+#[derive(Clone, Debug, Default)]
+pub struct DecisionLog {
+    capacity: usize,
+    total_seen: u64,
+    buf: VecDeque<DecisionRecord>,
+}
+
+impl DecisionLog {
+    pub fn new(capacity: usize) -> DecisionLog {
+        DecisionLog {
+            capacity,
+            total_seen: 0,
+            buf: VecDeque::with_capacity(capacity.min(4096)),
+        }
+    }
+
+    pub fn push(&mut self, rec: DecisionRecord) {
+        self.total_seen += 1;
+        if self.capacity == 0 {
+            return;
+        }
+        if self.buf.len() == self.capacity {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(rec);
+    }
+
+    /// Records currently retained (oldest first).
+    pub fn iter(&self) -> impl Iterator<Item = &DecisionRecord> {
+        self.buf.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Every decision ever pushed (>= `len()` once the ring wrapped).
+    pub fn total_seen(&self) -> u64 {
+        self.total_seen
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The last `n` records, oldest first.
+    pub fn tail(&self, n: usize) -> Vec<DecisionRecord> {
+        let skip = self.buf.len().saturating_sub(n);
+        self.buf.iter().skip(skip).copied().collect()
+    }
+
+    /// JSON export (per-run artifact).
+    pub fn to_json(&self) -> Json {
+        let mut arr: Vec<Json> = Vec::with_capacity(self.buf.len());
+        for r in &self.buf {
+            let (status, reason) = match r.outcome {
+                ActionOutcome::Applied => ("applied", None),
+                ActionOutcome::Clamped(rr) => ("clamped", Some(rr.label())),
+                ActionOutcome::Rejected(rr) => ("rejected", Some(rr.label())),
+            };
+            let mut j = Json::obj()
+                .set("t", r.t)
+                .set("signal", r.signal.label())
+                .set("action", r.action.label())
+                .set("detail", r.action.to_string())
+                .set("status", status);
+            if let Some(reason) = reason {
+                j = j.set("reason", reason);
+            }
+            arr.push(j);
+        }
+        Json::obj()
+            .set("total_seen", self.total_seen as f64)
+            .set("retained", self.buf.len())
+            .set("records", Json::Arr(arr))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::policy::{Action, RejectReason};
+    use crate::sim::Role;
+
+    fn rec(t: f64) -> DecisionRecord {
+        DecisionRecord {
+            t,
+            signal: SignalKind::Tick,
+            action: Action::SetFleet {
+                role: Role::Prefiller,
+                target: 2,
+            },
+            outcome: ActionOutcome::Applied,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_most_recent() {
+        let mut log = DecisionLog::new(3);
+        for k in 0..10 {
+            log.push(rec(k as f64));
+        }
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.total_seen(), 10);
+        let ts: Vec<f64> = log.iter().map(|r| r.t).collect();
+        assert_eq!(ts, vec![7.0, 8.0, 9.0]);
+        assert_eq!(log.tail(2).len(), 2);
+        assert_eq!(log.tail(2)[0].t, 8.0);
+    }
+
+    #[test]
+    fn zero_capacity_counts_but_retains_nothing() {
+        let mut log = DecisionLog::new(0);
+        log.push(rec(1.0));
+        assert!(log.is_empty());
+        assert_eq!(log.total_seen(), 1);
+    }
+
+    #[test]
+    fn json_export_carries_outcomes() {
+        let mut log = DecisionLog::new(4);
+        log.push(rec(0.5));
+        log.push(DecisionRecord {
+            outcome: ActionOutcome::Rejected(RejectReason::WrongRole),
+            ..rec(1.0)
+        });
+        let j = log.to_json();
+        assert_eq!(j.get("retained").and_then(Json::as_usize), Some(2));
+        let records = j.get("records").and_then(Json::as_arr).unwrap();
+        assert_eq!(records[1].get("status").and_then(Json::as_str), Some("rejected"));
+        assert_eq!(records[1].get("reason").and_then(Json::as_str), Some("wrong-role"));
+    }
+}

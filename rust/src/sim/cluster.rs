@@ -173,6 +173,45 @@ impl Cluster {
         self.record_counts(now);
     }
 
+    /// Change a decoder-side instance's role in place (Convertible
+    /// Decoder activation as an explicit control-plane decision). The
+    /// instance keeps its id, batch and reservations; on conversion to
+    /// `ConvertibleDecoder` it receives the deployment chunk budget and
+    /// Eq. 6 reserve, on reversion both are cleared. Returns false when
+    /// the instance is missing or the roles don't line up (caller
+    /// validates and reports the typed rejection).
+    pub fn convert_role(&mut self, id: InstanceId, to: Role) -> bool {
+        let (chunk, reserve) = match to {
+            Role::ConvertibleDecoder => (
+                self.config.convertible_chunk_size,
+                self.config.convertible_reserve_tokens,
+            ),
+            Role::Decoder => (0, 0.0),
+            Role::Prefiller => return false,
+        };
+        let mut moved = None;
+        if let Some(inst) = self.get_mut(id) {
+            let from = inst.role;
+            if from == to || from == Role::Prefiller {
+                return false;
+            }
+            inst.role = to;
+            inst.chunk_size = chunk;
+            inst.convertible_reserve_tokens = reserve;
+            moved = Some((from, inst.life));
+        }
+        let Some((from, life)) = moved else {
+            return false;
+        };
+        self.live[from.idx()].retain(|x| *x != id);
+        self.live[to.idx()].push(id);
+        if life != LifeState::Draining {
+            self.active[from.idx()] -= 1;
+            self.active[to.idx()] += 1;
+        }
+        true
+    }
+
     /// Remove drained instances, freeing their GPUs. Returns removed ids.
     pub fn sweep_drained(&mut self, now: f64) -> Vec<InstanceId> {
         self.accrue_cost(now);
@@ -357,6 +396,29 @@ mod tests {
         let inst = c.get(id).unwrap();
         assert_eq!(inst.chunk_size, 512);
         assert_eq!(inst.convertible_reserve_tokens, 8192.0);
+    }
+
+    #[test]
+    fn convert_role_round_trips() {
+        let mut c = Cluster::new(test_config(8));
+        let id = c.spawn(Role::Decoder, 0.0, Some(0.0)).unwrap();
+        assert!(c.convert_role(id, Role::ConvertibleDecoder));
+        assert_eq!(c.active_count(Role::Decoder), 0);
+        assert_eq!(c.active_count(Role::ConvertibleDecoder), 1);
+        let inst = c.get(id).unwrap();
+        assert_eq!(inst.role, Role::ConvertibleDecoder);
+        assert_eq!(inst.chunk_size, 512);
+        assert_eq!(inst.convertible_reserve_tokens, 8192.0);
+        assert!(c.convert_role(id, Role::Decoder));
+        let inst = c.get(id).unwrap();
+        assert_eq!(inst.role, Role::Decoder);
+        assert_eq!(inst.chunk_size, 0);
+        assert_eq!(c.active_count(Role::Decoder), 1);
+        // Invalid conversions are refused.
+        assert!(!c.convert_role(id, Role::Decoder));
+        assert!(!c.convert_role(id, Role::Prefiller));
+        let p = c.spawn(Role::Prefiller, 0.0, Some(0.0)).unwrap();
+        assert!(!c.convert_role(p, Role::ConvertibleDecoder));
     }
 
     #[test]

@@ -1,11 +1,24 @@
 //! The discrete-event simulation engine.
 //!
-//! Drives a [`Coordinator`] (TokenScale or a baseline) over an arrival
+//! Drives a [`ControlPlane`] (TokenScale or a baseline) over an arrival
 //! stream against a simulated PD-disaggregated cluster: prefillers process
 //! prompts, KVC moves across the interconnect, decoders run continuous
 //! batching (with restricted chunked prefill on Convertible Decoders),
 //! instances start up with realistic delays, and every completion's
 //! TTFT/TPOT is recorded.
+//!
+//! ## Control-plane dispatch (v2)
+//!
+//! The engine talks to policies exclusively through typed
+//! [`Signal`]s and [`Action`]s: each event that needs a decision collects
+//! the policy's actions against a read-only
+//! [`ClusterView`](super::view::ClusterView) snapshot, then *validates and
+//! interprets* them in order. Invalid actions are refused with a typed
+//! [`RejectReason`] (counted in `MetricsRecorder::rejections`, surfaced in
+//! `SloReport::rejected_actions`) — mechanics can never be corrupted by a
+//! buggy policy. When `SimConfig::decision_log` is non-zero every decision
+//! is also appended to a [`DecisionLog`] ring exported on the result
+//! (`tokenscale explain` renders it).
 //!
 //! Arrivals are consumed incrementally from an [`ArrivalSource`]: the
 //! engine holds exactly one pending request and one scheduled `Arrival`
@@ -31,19 +44,25 @@
 //!   and advances the GPU-seconds integral only when that count can
 //!   change, instead of scanning all instances on every event pop.
 //! - **Allocation-free iteration path** — per-iteration chunk state lives
-//!   on the instance, the batch-drain scratch and completion buffers are
-//!   reused across events, and network utilization is maintained as a
-//!   running accumulator rather than a per-sample rescan.
+//!   on the instance, the batch-drain scratch, completion and action
+//!   buffers are reused across events, and network utilization is
+//!   maintained as a running accumulator rather than a per-sample rescan.
 
+use super::audit::{DecisionLog, DecisionRecord};
 use super::cluster::{Cluster, ClusterConfig};
 use super::event::{Event, EventQueue, InstanceId};
 use super::instance::{ActiveSeq, LifeState, PrefillJob, RequestClock, Role};
-use super::policy::{Coordinator, Route, ScaleTargets};
+use super::policy::{Action, ActionOutcome, ControlPlane, RejectReason, Signal, SignalKind};
+use super::view::ClusterView;
 use crate::metrics::{MetricsRecorder, TimeSeries};
 use crate::perfmodel::LinkSpec;
 use crate::trace::{ArrivalSource, Trace, TraceSliceSource};
-use crate::workload::{Completion, Request, RequestId, SloPolicy};
+use crate::workload::{BucketScheme, Completion, Request, RequestId, SloPolicy};
 use std::collections::{HashMap, VecDeque};
+
+/// Chunk budget used for `DeflectPrefill { chunked: true }` when the
+/// deployment has no profiled convertible chunk size (baseline clusters).
+const DEFAULT_DEFLECT_CHUNK: usize = 512;
 
 /// Simulation parameters.
 #[derive(Clone, Debug)]
@@ -67,6 +86,8 @@ pub struct SimConfig {
     /// equivalence tests and the perf baseline; results are identical
     /// either way, single-step is just slower.
     pub force_single_step: bool,
+    /// Decision audit ring capacity; 0 disables the [`DecisionLog`].
+    pub decision_log: usize,
 }
 
 impl Default for SimConfig {
@@ -81,6 +102,7 @@ impl Default for SimConfig {
             drain_s: 120.0,
             slo: SloPolicy::default(),
             force_single_step: false,
+            decision_log: 0,
         }
     }
 }
@@ -118,6 +140,8 @@ pub struct SimResult {
     /// Events popped from the queue (throughput accounting; one coalesced
     /// decode event may stand in for thousands of iterations).
     pub events_processed: u64,
+    /// Decision audit trail (present when `SimConfig::decision_log` > 0).
+    pub decisions: Option<DecisionLog>,
 }
 
 /// In-flight KVC transfer bookkeeping.
@@ -125,9 +149,21 @@ struct Transfer {
     bytes_per_s: f64,
 }
 
-pub struct SimEngine<'a, C: Coordinator> {
+/// What stage the request carried by the current signal dispatch is in —
+/// governs which routing actions may consume it.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum RouteCtx {
+    /// `Arrival` / `RetryPrefill`: `RoutePrefill` and `DeflectPrefill`.
+    Prefill,
+    /// `PrefillDone`: `DispatchDecode`.
+    Decode,
+    /// Notification signals: no request to route.
+    None,
+}
+
+pub struct SimEngine<'a, C: ControlPlane + ?Sized> {
     cfg: SimConfig,
-    coordinator: &'a mut C,
+    policy: &'a mut C,
     cluster: Cluster,
     events: EventQueue,
     arrivals: &'a mut dyn ArrivalSource,
@@ -160,19 +196,31 @@ pub struct SimEngine<'a, C: Coordinator> {
     /// Reused buffers for the iteration path (no steady-state allocation).
     completions_buf: Vec<Completion>,
     batch_scratch: Vec<ActiveSeq>,
+    /// Reused action buffer for signal dispatch.
+    actions_buf: Vec<Action>,
+    /// Optional decision audit ring.
+    decisions: Option<DecisionLog>,
+    /// Cached classification scheme for chunked-prefill completions (one
+    /// per run, not one per completed chunk).
+    bucket_scheme: BucketScheme,
 }
 
-impl<'a, C: Coordinator> SimEngine<'a, C> {
+impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
     pub fn new(
         cfg: SimConfig,
         cluster_cfg: ClusterConfig,
-        coordinator: &'a mut C,
+        policy: &'a mut C,
         arrivals: &'a mut dyn ArrivalSource,
     ) -> Self {
         let duration_s = arrivals.duration_s();
+        let decisions = if cfg.decision_log > 0 {
+            Some(DecisionLog::new(cfg.decision_log))
+        } else {
+            None
+        };
         SimEngine {
             cfg,
-            coordinator,
+            policy,
             cluster: Cluster::new(cluster_cfg),
             events: EventQueue::new(),
             arrivals,
@@ -195,6 +243,9 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
             events_processed: 0,
             completions_buf: Vec::new(),
             batch_scratch: Vec::new(),
+            actions_buf: Vec::new(),
+            decisions,
+            bucket_scheme: BucketScheme::default(),
         }
     }
 
@@ -253,6 +304,7 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
             scale_ups: self.scale_ups,
             scale_downs: self.scale_downs,
             events_processed: self.events_processed,
+            decisions: self.decisions,
         }
     }
 
@@ -281,8 +333,7 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
                 self.metrics.note_arrival(&req);
                 self.clocks
                     .insert(req.id, RequestClock::at_arrival(req.id, req.arrival));
-                self.coordinator.observe_arrival(self.now, &req);
-                self.dispatch_prefill(req);
+                self.offer_prefill(req, false);
             }
             Event::ControlTick => {
                 self.catch_up_windows();
@@ -297,13 +348,24 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
                     .push(self.now + self.cfg.sample_interval_s, Event::SampleTick);
             }
             Event::InstanceReady { instance } => {
+                // The instance may have been drained and removed before its
+                // startup finished (targeted Drain of a Starting spawn):
+                // never announce a dead id to the policy.
+                let mut alive = false;
                 if let Some(inst) = self.cluster.get_mut(instance) {
                     if inst.life == LifeState::Starting {
                         inst.life = LifeState::Running;
                     }
+                    alive = true;
+                }
+                if alive {
+                    self.dispatch_notify(Signal::InstanceReady(instance));
                 }
                 self.reoffer_pending();
                 self.maybe_start_prefill(instance);
+                // Decode-side instances wake their chunked/batch loop too
+                // (no-op unless work was admitted while starting).
+                self.ensure_iterating(instance);
             }
             Event::PrefillDone { instance, req } => self.on_prefill_done(instance, req),
             Event::TransferDone { instance, req } => self.on_transfer_done(instance, req),
@@ -311,54 +373,464 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
         }
     }
 
-    // ---- routing / prefill ----
+    // ---- signal dispatch / action interpretation ----
 
-    fn dispatch_prefill(&mut self, req: Request) {
-        match self.coordinator.route_prefill(self.now, &req, &self.cluster) {
-            Route::Prefiller(id) => {
+    /// Deliver one signal to the policy and return its actions (reused
+    /// buffer; callers hand it back by assigning `self.actions_buf`).
+    fn collect_actions(&mut self, signal: Signal<'_>) -> Vec<Action> {
+        let mut acts = std::mem::take(&mut self.actions_buf);
+        acts.clear();
+        let policy = &mut *self.policy;
+        let view = ClusterView::new(&self.cluster);
+        policy.on_signal(self.now, signal, &view, &mut acts);
+        acts
+    }
+
+    fn record_decision(&mut self, signal: SignalKind, action: Action, outcome: ActionOutcome) {
+        if let Some(r) = outcome.reject_reason() {
+            self.metrics.rejections.note(r);
+        }
+        if let Some(log) = &mut self.decisions {
+            log.push(DecisionRecord {
+                t: self.now,
+                signal,
+                action,
+                outcome,
+            });
+        }
+    }
+
+    /// Dispatch a notification signal (no routable request attached).
+    fn dispatch_notify(&mut self, signal: Signal<'_>) {
+        let kind = signal.kind();
+        let acts = self.collect_actions(signal);
+        let mut slot: Option<Request> = None;
+        self.apply_actions(kind, &acts, &mut slot, RouteCtx::None);
+        self.actions_buf = acts;
+    }
+
+    /// Offer a request for prefill routing (fresh arrival or queued
+    /// retry). If no valid routing action consumes it, it waits in the
+    /// gateway queue (Alg. 1 line 15).
+    fn offer_prefill(&mut self, req: Request, retry: bool) {
+        let kind = if retry {
+            SignalKind::RetryPrefill
+        } else {
+            SignalKind::Arrival
+        };
+        let acts = {
+            let signal = if retry {
+                Signal::RetryPrefill(&req)
+            } else {
+                Signal::Arrival(&req)
+            };
+            self.collect_actions(signal)
+        };
+        let mut slot = Some(req);
+        self.apply_actions(kind, &acts, &mut slot, RouteCtx::Prefill);
+        self.actions_buf = acts;
+        if let Some(req) = slot {
+            self.pending.push_back(req);
+        }
+    }
+
+    /// Offer a prefilled request for decode dispatch. No valid
+    /// `DispatchDecode` = backpressure; the engine retries at the next
+    /// control tick / memory release.
+    fn offer_decode(&mut self, req: Request) {
+        // Reject requests that can never fit: their full KV footprint
+        // exceeds a whole decoder's capacity (no amount of scaling helps).
+        let max_capacity = self.cluster.config.decode_engine.kv_capacity_tokens();
+        if req.total_tokens() as f64 > max_capacity {
+            self.metrics.dropped += 1;
+            // One line per run, not per rejection: parallel grid runs would
+            // otherwise interleave unbounded stderr. The full count is in
+            // metrics.dropped.
+            if self.metrics.dropped == 1 {
+                eprintln!(
+                    "[sim] request {} needs {} KV tokens > decoder capacity {:.0}; rejecting \
+                     (further oversized requests counted in metrics.dropped)",
+                    req.id,
+                    req.total_tokens(),
+                    max_capacity
+                );
+            }
+            self.clocks.remove(&req.id);
+            return;
+        }
+        let acts = {
+            let signal = Signal::PrefillDone(&req);
+            self.collect_actions(signal)
+        };
+        let mut slot = Some(req);
+        self.apply_actions(SignalKind::PrefillDone, &acts, &mut slot, RouteCtx::Decode);
+        self.actions_buf = acts;
+        if let Some(req) = slot {
+            self.awaiting_decode.push_back(req);
+        }
+    }
+
+    /// Validate and interpret one batch of actions. Routing actions may
+    /// consume the request in `slot` (stage-checked against `ctx`); fleet
+    /// targets for prefillers and decoders are applied jointly at the end
+    /// so they share the GPU quota exactly like the old `ScaleTargets`.
+    fn apply_actions(
+        &mut self,
+        kind: SignalKind,
+        acts: &[Action],
+        slot: &mut Option<Request>,
+        ctx: RouteCtx,
+    ) {
+        let dispatch_id = slot.as_ref().map(|r| r.id);
+        let mut fleet_p: Option<usize> = None;
+        let mut fleet_d: Option<usize> = None;
+        for &a in acts {
+            match a {
+                Action::RoutePrefill { req, target } => {
+                    let outcome = match self.check_route(
+                        slot,
+                        dispatch_id,
+                        req,
+                        ctx,
+                        RouteCtx::Prefill,
+                    ) {
+                        Err(r) => ActionOutcome::Rejected(r),
+                        Ok(()) => match self.validate_prefill_target(target) {
+                            Some(r) => ActionOutcome::Rejected(r),
+                            None => {
+                                let r = slot.take().expect("checked above");
+                                self.apply_route_prefill(target, r);
+                                ActionOutcome::Applied
+                            }
+                        },
+                    };
+                    self.record_decision(kind, a, outcome);
+                }
+                Action::DeflectPrefill {
+                    req,
+                    decoder,
+                    chunked,
+                } => {
+                    let outcome = match self.check_route(
+                        slot,
+                        dispatch_id,
+                        req,
+                        ctx,
+                        RouteCtx::Prefill,
+                    ) {
+                        Err(r) => ActionOutcome::Rejected(r),
+                        Ok(()) => {
+                            let total = slot.as_ref().map(|r| r.total_tokens()).unwrap_or(0);
+                            match self.validate_deflect_target(decoder, total) {
+                                Some(r) => ActionOutcome::Rejected(r),
+                                None => {
+                                    let r = slot.take().expect("checked above");
+                                    let chunk = if chunked {
+                                        let c = self.cluster.config.convertible_chunk_size;
+                                        if c > 0 {
+                                            c
+                                        } else {
+                                            DEFAULT_DEFLECT_CHUNK
+                                        }
+                                    } else {
+                                        // One restricted-chunked pass over
+                                        // the whole remaining prompt.
+                                        usize::MAX
+                                    };
+                                    self.admit_instance_prefill(decoder, r, Some(chunk));
+                                    ActionOutcome::Applied
+                                }
+                            }
+                        }
+                    };
+                    self.record_decision(kind, a, outcome);
+                }
+                Action::DispatchDecode {
+                    req,
+                    decoder,
+                    bucket,
+                } => {
+                    let outcome = match self.check_route(
+                        slot,
+                        dispatch_id,
+                        req,
+                        ctx,
+                        RouteCtx::Decode,
+                    ) {
+                        Err(r) => ActionOutcome::Rejected(r),
+                        Ok(()) => {
+                            let total = slot.as_ref().map(|r| r.total_tokens()).unwrap_or(0);
+                            match self.validate_decode_target(decoder, total) {
+                                Some(r) => ActionOutcome::Rejected(r),
+                                None => {
+                                    let r = slot.take().expect("checked above");
+                                    self.apply_dispatch_decode(decoder, bucket, r);
+                                    ActionOutcome::Applied
+                                }
+                            }
+                        }
+                    };
+                    self.record_decision(kind, a, outcome);
+                }
+                Action::SetFleet { role, target } => match role {
+                    Role::Prefiller => fleet_p = Some(target),
+                    Role::Decoder => fleet_d = Some(target),
+                    Role::ConvertibleDecoder => {
+                        let outcome = self.apply_convertible_fleet(target);
+                        self.record_decision(kind, a, outcome);
+                    }
+                },
+                Action::Convert { decoder } => {
+                    let outcome = self.apply_convert(decoder, true);
+                    self.record_decision(kind, a, outcome);
+                }
+                Action::Revert { decoder } => {
+                    let outcome = self.apply_convert(decoder, false);
+                    self.record_decision(kind, a, outcome);
+                }
+                Action::Drain { instance } => {
+                    let outcome = self.apply_drain(instance);
+                    self.record_decision(kind, a, outcome);
+                }
+            }
+        }
+        if fleet_p.is_some() || fleet_d.is_some() {
+            let clamped = self.apply_scaling(fleet_p, fleet_d);
+            for &a in acts {
+                if let Action::SetFleet {
+                    role: Role::Prefiller | Role::Decoder,
+                    ..
+                } = a
+                {
+                    let outcome = if clamped {
+                        ActionOutcome::Clamped(RejectReason::FleetOverQuota)
+                    } else {
+                        ActionOutcome::Applied
+                    };
+                    self.record_decision(kind, a, outcome);
+                }
+            }
+        }
+    }
+
+    /// Stage/identity gate shared by the routing actions.
+    fn check_route(
+        &self,
+        slot: &Option<Request>,
+        dispatch_id: Option<RequestId>,
+        req: RequestId,
+        ctx: RouteCtx,
+        want: RouteCtx,
+    ) -> Result<(), RejectReason> {
+        if ctx != want || dispatch_id != Some(req) {
+            return Err(RejectReason::UnknownRequest);
+        }
+        if slot.is_none() {
+            return Err(RejectReason::DuplicateRoute);
+        }
+        Ok(())
+    }
+
+    fn validate_prefill_target(&self, target: InstanceId) -> Option<RejectReason> {
+        match self.cluster.get(target) {
+            None => Some(RejectReason::UnknownInstance),
+            Some(i) if i.role == Role::Decoder => Some(RejectReason::WrongRole),
+            // A prefiller may be addressed while Starting (its queue opens
+            // at ready), but a Starting convertible cannot run its chunked
+            // loop yet — refuse rather than strand the request.
+            Some(i) if i.role == Role::ConvertibleDecoder && i.life == LifeState::Starting => {
+                Some(RejectReason::NotRunning)
+            }
+            Some(_) => None,
+        }
+    }
+
+    fn validate_deflect_target(&self, decoder: InstanceId, total: usize) -> Option<RejectReason> {
+        match self.cluster.get(decoder) {
+            None => Some(RejectReason::UnknownInstance),
+            Some(i) if i.role != Role::Decoder => Some(RejectReason::WrongRole),
+            Some(i) if !i.is_running() => Some(RejectReason::NotRunning),
+            Some(i) if i.admission_capacity() < total as f64 => Some(RejectReason::NoCapacity),
+            Some(_) => None,
+        }
+    }
+
+    fn validate_decode_target(&self, decoder: InstanceId, total: usize) -> Option<RejectReason> {
+        match self.cluster.get(decoder) {
+            None => Some(RejectReason::UnknownInstance),
+            Some(i) if i.role == Role::Prefiller => Some(RejectReason::WrongRole),
+            Some(i) if !i.is_running() => Some(RejectReason::NotRunning),
+            Some(i) if !i.can_admit(total) => Some(RejectReason::NoCapacity),
+            Some(_) => None,
+        }
+    }
+
+    fn apply_route_prefill(&mut self, target: InstanceId, req: Request) {
+        let role = self.cluster.get(target).map(|i| i.role);
+        match role {
+            Some(Role::Prefiller) => {
                 let job = PrefillJob {
                     remaining: req.input_tokens,
                     req,
                     enqueued_at: self.now,
+                    chunk_override: None,
                 };
-                if let Some(inst) = self.cluster.get_mut(id) {
+                if let Some(inst) = self.cluster.get_mut(target) {
                     inst.prefill_queue.push_back(job);
                 } else {
-                    // Router picked a just-removed instance: queue instead.
                     self.pending.push_back(job.req);
                     return;
                 }
-                self.maybe_start_prefill(id);
+                self.maybe_start_prefill(target);
             }
-            Route::Convertible(id) => self.admit_convertible_prefill(id, req),
-            Route::Queue => self.pending.push_back(req),
+            Some(Role::ConvertibleDecoder) => self.admit_instance_prefill(target, req, None),
+            // Validated before apply; a regular decoder or stale id can't
+            // reach here, but fall back to the gateway queue defensively.
+            _ => self.pending.push_back(req),
         }
     }
 
-    /// Hand a prefill task to a Convertible Decoder: the sequence reserves
-    /// its full KV footprint there (prefill happens in place; no transfer)
-    /// and the chunked-prefill loop carries it through decode afterwards.
-    fn admit_convertible_prefill(&mut self, id: InstanceId, req: Request) {
-        let bucket = self.coordinator.predict_bucket(&req);
-        let job = PrefillJob {
-            remaining: req.input_tokens,
-            req,
-            enqueued_at: self.now,
-        };
-        // A pure-decode window on this convertible must yield: the chunked
+    /// Hand a prefill task to a decode-side instance (convertible decoder,
+    /// or a regular decoder via deflection): the sequence reserves its
+    /// full KV footprint there (prefill happens in place; no transfer) and
+    /// the chunked-prefill loop carries it through decode afterwards.
+    /// `chunk_override` rides on the job (deflection chunk budget); `None`
+    /// uses the instance's configured budget.
+    fn admit_instance_prefill(
+        &mut self,
+        id: InstanceId,
+        req: Request,
+        chunk_override: Option<usize>,
+    ) {
+        // A pure-decode window on this instance must yield: the chunked
         // loop re-evaluates at the next true iteration boundary.
         self.interrupt_window(id);
         let Some(inst) = self.cluster.get_mut(id) else {
-            self.pending.push_back(job.req);
+            self.pending.push_back(req);
             return;
         };
-        inst.reserved_tokens += job.req.total_tokens() as f64;
-        // Convertible decoders process at most one prefill at a time
-        // (§IV-D); extras wait in its local queue.
-        inst.prefill_queue.push_back(job);
-        let _ = bucket; // bucket recorded when the seq joins decode
+        inst.reserved_tokens += req.total_tokens() as f64;
+        // Decode-side instances process at most one prefill at a time
+        // (§IV-D); extras wait in the local queue.
+        inst.prefill_queue.push_back(PrefillJob {
+            remaining: req.input_tokens,
+            req,
+            enqueued_at: self.now,
+            chunk_override,
+        });
         self.ensure_iterating(id);
     }
+
+    fn apply_dispatch_decode(&mut self, decoder: InstanceId, bucket: usize, req: Request) {
+        let Some(inst) = self.cluster.get_mut(decoder) else {
+            // Validated before apply; defensively fall back to backpressure.
+            self.awaiting_decode.push_back(req);
+            return;
+        };
+        // Reserve at transfer start so concurrent transfers cannot
+        // overcommit the decoder.
+        inst.reserved_tokens += req.total_tokens() as f64;
+        let bytes = inst.engine.kvc_bytes(req.input_tokens);
+        let dur = self.cfg.link.transfer_time(bytes);
+        let bytes_per_s = bytes / dur.max(1e-9);
+        self.transfers.insert(req.id, Transfer { bytes_per_s });
+        self.net_bytes_per_s += bytes_per_s;
+        self.events.push(
+            self.now + dur,
+            Event::TransferDone {
+                instance: decoder,
+                req: req.id,
+            },
+        );
+        // Stash the request on the decoder via joining-at-transfer: we
+        // re-create the ActiveSeq at TransferDone; carry the request in
+        // the event via a map.
+        self.in_transfer.insert(req.id, (req, bucket));
+    }
+
+    fn apply_convert(&mut self, id: InstanceId, to_convertible: bool) -> ActionOutcome {
+        let Some(inst) = self.cluster.get(id) else {
+            return ActionOutcome::Rejected(RejectReason::UnknownInstance);
+        };
+        if to_convertible {
+            if inst.role != Role::Decoder {
+                return ActionOutcome::Rejected(RejectReason::WrongRole);
+            }
+            if inst.life == LifeState::Draining {
+                return ActionOutcome::Rejected(RejectReason::AlreadyDraining);
+            }
+        } else {
+            if inst.role != Role::ConvertibleDecoder {
+                return ActionOutcome::Rejected(RejectReason::WrongRole);
+            }
+            if inst.active_prefill.is_some() || !inst.prefill_queue.is_empty() {
+                return ActionOutcome::Rejected(RejectReason::Busy);
+            }
+        }
+        let to = if to_convertible {
+            Role::ConvertibleDecoder
+        } else {
+            Role::Decoder
+        };
+        if self.cluster.convert_role(id, to) {
+            ActionOutcome::Applied
+        } else {
+            ActionOutcome::Rejected(RejectReason::WrongRole)
+        }
+    }
+
+    fn apply_drain(&mut self, id: InstanceId) -> ActionOutcome {
+        let Some(inst) = self.cluster.get(id) else {
+            return ActionOutcome::Rejected(RejectReason::UnknownInstance);
+        };
+        if inst.life == LifeState::Draining {
+            return ActionOutcome::Rejected(RejectReason::AlreadyDraining);
+        }
+        self.cluster.retire(id, self.now);
+        self.scale_downs += 1;
+        ActionOutcome::Applied
+    }
+
+    /// Spawn/retire the convertible pool toward `target`.
+    fn apply_convertible_fleet(&mut self, target: usize) -> ActionOutcome {
+        let live = if self.policy.live_scaling() {
+            Some(0.2)
+        } else {
+            None
+        };
+        let cur = self.cluster.active_count(Role::ConvertibleDecoder);
+        let mut outcome = ActionOutcome::Applied;
+        if target > cur {
+            for _ in 0..(target - cur) {
+                match self.cluster.spawn(Role::ConvertibleDecoder, self.now, live) {
+                    Some(id) => {
+                        self.scale_ups += 1;
+                        let ready = self.cluster.get(id).unwrap().ready_at;
+                        self.events.push(ready, Event::InstanceReady { instance: id });
+                    }
+                    None => {
+                        outcome = ActionOutcome::Clamped(RejectReason::FleetOverQuota);
+                        break;
+                    }
+                }
+            }
+        } else if target < cur {
+            let mut candidates: Vec<(usize, InstanceId)> = self
+                .cluster
+                .iter_role(Role::ConvertibleDecoder)
+                .filter(|i| i.life != LifeState::Draining)
+                .map(|i| (i.decode_load(), i.id))
+                .collect();
+            candidates.sort();
+            for (_, id) in candidates.into_iter().take(cur - target) {
+                self.cluster.retire(id, self.now);
+                self.scale_downs += 1;
+            }
+        }
+        outcome
+    }
+
+    // ---- prefill mechanics ----
 
     fn maybe_start_prefill(&mut self, id: InstanceId) {
         let Some(inst) = self.cluster.get_mut(id) else {
@@ -408,59 +880,7 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
         // Next job on this prefiller.
         self.maybe_start_prefill(instance);
         // Ship the KVC to a decoder.
-        self.try_send_to_decoder(job.req);
-    }
-
-    fn try_send_to_decoder(&mut self, req: Request) {
-        // Reject requests that can never fit: their full KV footprint
-        // exceeds a whole decoder's capacity (no amount of scaling helps).
-        let max_capacity = self.cluster.config.decode_engine.kv_capacity_tokens();
-        if req.total_tokens() as f64 > max_capacity {
-            self.metrics.dropped += 1;
-            // One line per run, not per rejection: parallel grid runs would
-            // otherwise interleave unbounded stderr. The full count is in
-            // metrics.dropped.
-            if self.metrics.dropped == 1 {
-                eprintln!(
-                    "[sim] request {} needs {} KV tokens > decoder capacity {:.0}; rejecting \
-                     (further oversized requests counted in metrics.dropped)",
-                    req.id,
-                    req.total_tokens(),
-                    max_capacity
-                );
-            }
-            self.clocks.remove(&req.id);
-            return;
-        }
-        match self.coordinator.route_decode(self.now, &req, &self.cluster) {
-            Some(decoder) => {
-                let bucket = self.coordinator.predict_bucket(&req);
-                let Some(inst) = self.cluster.get_mut(decoder) else {
-                    self.awaiting_decode.push_back(req);
-                    return;
-                };
-                // Reserve at transfer start so concurrent transfers cannot
-                // overcommit the decoder.
-                inst.reserved_tokens += req.total_tokens() as f64;
-                let bytes = inst.engine.kvc_bytes(req.input_tokens);
-                let dur = self.cfg.link.transfer_time(bytes);
-                let bytes_per_s = bytes / dur.max(1e-9);
-                self.transfers.insert(req.id, Transfer { bytes_per_s });
-                self.net_bytes_per_s += bytes_per_s;
-                self.events.push(
-                    self.now + dur,
-                    Event::TransferDone {
-                        instance: decoder,
-                        req: req.id,
-                    },
-                );
-                // Stash the request on the decoder via joining-at-transfer:
-                // we re-create the ActiveSeq at TransferDone; carry the
-                // request in the event via a map.
-                self.in_transfer.insert(req.id, (req, bucket));
-            }
-            None => self.awaiting_decode.push_back(req),
-        }
+        self.offer_decode(job.req);
     }
 
     fn on_transfer_done(&mut self, instance: InstanceId, req_id: RequestId) {
@@ -562,17 +982,19 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
             inst.joining = overflow;
         }
 
-        // Convertible decoders pull their next prefill job into the chunked
-        // loop (at most one at a time, prioritizing decode: chunk budget is
-        // what's left after the decode batch).
+        // Decode-side instances pull their next prefill job into the
+        // chunked loop (at most one at a time, prioritizing decode: chunk
+        // budget is what's left after the decode batch). Regular decoders
+        // only carry prefill jobs when a `DeflectPrefill` placed them.
         let mut chunk_tokens = 0usize;
         let mut chunk_first_start: Option<RequestId> = None;
-        if inst.role == Role::ConvertibleDecoder {
+        if inst.role != Role::Prefiller {
             if inst.active_prefill.is_none() {
                 inst.active_prefill = inst.prefill_queue.pop_front();
             }
             if let Some(job) = &inst.active_prefill {
-                let budget = inst.chunk_size.saturating_sub(inst.batch.len());
+                let chunk_size = job.chunk_override.unwrap_or(inst.chunk_size);
+                let budget = chunk_size.saturating_sub(inst.batch.len());
                 chunk_tokens = budget.min(job.remaining);
                 if chunk_tokens > 0 && job.remaining == job.req.input_tokens {
                     chunk_first_start = Some(job.req.id);
@@ -681,7 +1103,8 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
                         let job = inst.active_prefill.take().unwrap();
                         // Seamlessly transition to decoding on this instance
                         // (§III-D); KV already reserved at admission.
-                        let bucket = crate::workload::BucketScheme::default()
+                        let bucket = self
+                            .bucket_scheme
                             .classify(job.req.input_tokens, job.req.output_tokens)
                             .index();
                         if let Some(ck) = self.clocks.get_mut(&job.req.id) {
@@ -741,7 +1164,7 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
         for idx in 0..self.completions_buf.len() {
             let c = self.completions_buf[idx];
             self.ttft_points.push((c.arrival, c.ttft));
-            self.coordinator.observe_completion(now, &c);
+            self.dispatch_notify(Signal::Completion(&c));
             self.metrics.record(c);
             if let Some(ck) = self.clocks.remove(&c.id) {
                 if let Some(done) = ck.prefill_done {
@@ -763,49 +1186,56 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
     // ---- control plane ----
 
     fn control_tick(&mut self) {
-        let targets = self.coordinator.scale(self.now, &self.cluster);
-        self.apply_scaling(targets);
+        let acts = self.collect_actions(Signal::Tick);
+        let mut slot: Option<Request> = None;
+        self.apply_actions(SignalKind::Tick, &acts, &mut slot, RouteCtx::None);
+        self.actions_buf = acts;
         self.reoffer_pending();
         self.retry_awaiting_decode();
-        self.cluster.sweep_drained(self.now);
+        let dead = self.cluster.sweep_drained(self.now);
+        for id in dead {
+            self.dispatch_notify(Signal::InstanceDrained(id));
+        }
     }
 
-    fn apply_scaling(&mut self, t: ScaleTargets) {
-        let live = if self.coordinator.live_scaling() {
+    /// Apply prefiller/decoder fleet targets jointly (cluster-manager
+    /// quota sharing: if the combined target exceeds the GPU cap, shrink
+    /// both stages proportionally, keeping >= 1 each, so an aggressive
+    /// prefill target cannot starve the decode fleet). Returns whether the
+    /// targets were clamped.
+    fn apply_scaling(&mut self, p_target: Option<usize>, d_target: Option<usize>) -> bool {
+        let live = if self.policy.live_scaling() {
             Some(0.2)
         } else {
             None
         };
-        // Cluster-manager quota sharing: if the combined target exceeds the
-        // GPU cap, shrink both stages proportionally (keeping ≥1 each) so
-        // an aggressive prefill target cannot starve the decode fleet.
-        let t = {
+        let mut prefillers = p_target.unwrap_or_else(|| self.cluster.active_count(Role::Prefiller));
+        let mut decoders = d_target.unwrap_or_else(|| self.cluster.active_count(Role::Decoder));
+        let mut clamped = false;
+        {
             let tp_p = self.cluster.config.prefill_engine.tp;
             let tp_d = self.cluster.config.decode_engine.tp;
             let conv_gpus = self.cluster.role_gpus(Role::ConvertibleDecoder);
             let budget = self.cluster.config.max_gpus.saturating_sub(conv_gpus);
-            let want = t.prefillers * tp_p + t.decoders * tp_d;
+            let want = prefillers * tp_p + decoders * tp_d;
             if want > budget && want > 0 {
                 let ratio = budget as f64 / want as f64;
-                ScaleTargets {
-                    prefillers: ((t.prefillers as f64 * ratio).floor() as usize).max(1),
-                    decoders: ((t.decoders as f64 * ratio).floor() as usize).max(1),
-                }
-            } else {
-                t
+                prefillers = ((prefillers as f64 * ratio).floor() as usize).max(1);
+                decoders = ((decoders as f64 * ratio).floor() as usize).max(1);
+                clamped = true;
             }
-        };
+        }
         // Prefillers.
         let cur_p = self.cluster.active_count(Role::Prefiller);
-        if t.prefillers > cur_p {
-            for _ in 0..(t.prefillers - cur_p) {
+        if prefillers > cur_p {
+            for _ in 0..(prefillers - cur_p) {
                 if let Some(id) = self.cluster.spawn(Role::Prefiller, self.now, live) {
                     self.scale_ups += 1;
                     let ready = self.cluster.get(id).unwrap().ready_at;
                     self.events.push(ready, Event::InstanceReady { instance: id });
                 }
             }
-        } else if t.prefillers < cur_p {
+        } else if prefillers < cur_p {
             // Retire idle-most prefillers first.
             let mut candidates: Vec<(usize, InstanceId)> = self
                 .cluster
@@ -814,22 +1244,22 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
                 .map(|i| (i.inflight_prefill_tokens(), i.id))
                 .collect();
             candidates.sort();
-            for (_, id) in candidates.into_iter().take(cur_p - t.prefillers) {
+            for (_, id) in candidates.into_iter().take(cur_p - prefillers) {
                 self.cluster.retire(id, self.now);
                 self.scale_downs += 1;
             }
         }
-        // Regular decoders (convertibles never scale).
+        // Regular decoders (convertibles scale via their own SetFleet).
         let cur_d = self.cluster.active_count(Role::Decoder);
-        if t.decoders > cur_d {
-            for _ in 0..(t.decoders - cur_d) {
+        if decoders > cur_d {
+            for _ in 0..(decoders - cur_d) {
                 if let Some(id) = self.cluster.spawn(Role::Decoder, self.now, live) {
                     self.scale_ups += 1;
                     let ready = self.cluster.get(id).unwrap().ready_at;
                     self.events.push(ready, Event::InstanceReady { instance: id });
                 }
             }
-        } else if t.decoders < cur_d {
+        } else if decoders < cur_d {
             let mut candidates: Vec<(usize, InstanceId)> = self
                 .cluster
                 .iter_role(Role::Decoder)
@@ -837,11 +1267,12 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
                 .map(|i| (i.decode_load(), i.id))
                 .collect();
             candidates.sort();
-            for (_, id) in candidates.into_iter().take(cur_d - t.decoders) {
+            for (_, id) in candidates.into_iter().take(cur_d - decoders) {
                 self.cluster.retire(id, self.now);
                 self.scale_downs += 1;
             }
         }
+        clamped
     }
 
     fn reoffer_pending(&mut self) {
@@ -850,23 +1281,7 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
             let Some(req) = self.pending.pop_front() else {
                 break;
             };
-            match self.coordinator.route_prefill(self.now, &req, &self.cluster) {
-                Route::Prefiller(id) => {
-                    let job = PrefillJob {
-                        remaining: req.input_tokens,
-                        req,
-                        enqueued_at: self.now,
-                    };
-                    if let Some(inst) = self.cluster.get_mut(id) {
-                        inst.prefill_queue.push_back(job);
-                        self.maybe_start_prefill(id);
-                    } else {
-                        self.pending.push_back(job.req);
-                    }
-                }
-                Route::Convertible(id) => self.admit_convertible_prefill(id, req),
-                Route::Queue => self.pending.push_back(req),
-            }
+            self.offer_prefill(req, true);
         }
     }
 
@@ -876,7 +1291,7 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
             let Some(req) = self.awaiting_decode.pop_front() else {
                 break;
             };
-            self.try_send_to_decoder(req);
+            self.offer_decode(req);
         }
     }
 
@@ -939,26 +1354,26 @@ impl<'a, C: Coordinator> SimEngine<'a, C> {
 
 /// Convenience wrapper: build and run a simulation over a materialized
 /// trace (replayed through the streaming arrival path).
-pub fn simulate<C: Coordinator>(
+pub fn simulate<C: ControlPlane + ?Sized>(
     cfg: SimConfig,
     cluster_cfg: ClusterConfig,
-    coordinator: &mut C,
+    policy: &mut C,
     trace: &Trace,
 ) -> SimResult {
     let mut src = TraceSliceSource::new(trace);
-    SimEngine::new(cfg, cluster_cfg, coordinator, &mut src).run()
+    SimEngine::new(cfg, cluster_cfg, policy, &mut src).run()
 }
 
 /// Build and run a simulation over a streaming arrival source — the
 /// native entry point: the workload is pulled one request at a time, so
 /// hour-scale traces never materialize.
-pub fn simulate_source<C: Coordinator>(
+pub fn simulate_source<C: ControlPlane + ?Sized>(
     cfg: SimConfig,
     cluster_cfg: ClusterConfig,
-    coordinator: &mut C,
+    policy: &mut C,
     arrivals: &mut dyn ArrivalSource,
 ) -> SimResult {
-    SimEngine::new(cfg, cluster_cfg, coordinator, arrivals).run()
+    SimEngine::new(cfg, cluster_cfg, policy, arrivals).run()
 }
 
 #[cfg(test)]
@@ -1005,6 +1420,8 @@ mod tests {
             assert!(c.tpot >= 0.0);
         }
         assert!(res.events_processed > 0);
+        // A well-formed policy never has actions rejected.
+        assert_eq!(res.metrics.rejections.total(), 0);
     }
 
     #[test]
@@ -1112,29 +1529,25 @@ mod tests {
         // Route everything through a convertible decoder by having no
         // regular prefillers at all.
         struct ConvertibleOnly;
-        impl Coordinator for ConvertibleOnly {
+        impl ControlPlane for ConvertibleOnly {
             fn name(&self) -> &str {
                 "convertible-only"
             }
-            fn observe_arrival(&mut self, _: f64, _: &Request) {}
-            fn route_prefill(&mut self, _: f64, _: &Request, cluster: &Cluster) -> Route {
-                cluster
-                    .running_of(Role::ConvertibleDecoder)
-                    .next()
-                    .map(|i| Route::Convertible(i.id))
-                    .unwrap_or(Route::Queue)
-            }
-            fn route_decode(&mut self, _: f64, _: &Request, _: &Cluster) -> Option<InstanceId> {
-                None
-            }
-            fn scale(&mut self, _: f64, _: &Cluster) -> ScaleTargets {
-                ScaleTargets {
-                    prefillers: 0,
-                    decoders: 0,
+            fn on_signal(
+                &mut self,
+                _now: f64,
+                signal: Signal<'_>,
+                view: &ClusterView<'_>,
+                actions: &mut Vec<Action>,
+            ) {
+                if let Signal::Arrival(req) | Signal::RetryPrefill(req) = signal {
+                    if let Some(i) = view.running_of(Role::ConvertibleDecoder).next() {
+                        actions.push(Action::RoutePrefill {
+                            req: req.id,
+                            target: i.id,
+                        });
+                    }
                 }
-            }
-            fn predict_bucket(&mut self, _: &Request) -> usize {
-                0
             }
         }
         let trace = step_trace(2.0, 2.0, 0.0, 0.0, 10.0, 512, 32, 6);
@@ -1154,34 +1567,57 @@ mod tests {
 
     #[test]
     fn scaling_up_spawns_and_respects_startup() {
-        struct GrowAt { t: f64 }
-        impl Coordinator for GrowAt {
+        struct GrowAt {
+            t: f64,
+        }
+        impl ControlPlane for GrowAt {
             fn name(&self) -> &str {
                 "grow"
             }
-            fn observe_arrival(&mut self, _: f64, _: &Request) {}
-            fn route_prefill(&mut self, _: f64, _: &Request, cluster: &Cluster) -> Route {
-                cluster
-                    .running_of(Role::Prefiller)
-                    .min_by_key(|i| i.inflight_prefill_tokens())
-                    .map(|i| Route::Prefiller(i.id))
-                    .unwrap_or(Route::Queue)
-            }
-            fn route_decode(&mut self, _: f64, req: &Request, cluster: &Cluster) -> Option<InstanceId> {
-                cluster
-                    .running_of(Role::Decoder)
-                    .filter(|i| i.can_admit(req.total_tokens()))
-                    .min_by_key(|i| i.decode_load())
-                    .map(|i| i.id)
-            }
-            fn scale(&mut self, now: f64, _: &Cluster) -> ScaleTargets {
-                ScaleTargets {
-                    prefillers: if now >= self.t { 3 } else { 1 },
-                    decoders: 1,
+            fn on_signal(
+                &mut self,
+                now: f64,
+                signal: Signal<'_>,
+                view: &ClusterView<'_>,
+                actions: &mut Vec<Action>,
+            ) {
+                match signal {
+                    Signal::Arrival(req) | Signal::RetryPrefill(req) => {
+                        if let Some(i) = view
+                            .running_of(Role::Prefiller)
+                            .min_by_key(|i| i.inflight_prefill_tokens())
+                        {
+                            actions.push(Action::RoutePrefill {
+                                req: req.id,
+                                target: i.id,
+                            });
+                        }
+                    }
+                    Signal::PrefillDone(req) => {
+                        if let Some(i) = view
+                            .running_of(Role::Decoder)
+                            .filter(|i| i.can_admit(req.total_tokens()))
+                            .min_by_key(|i| i.decode_load())
+                        {
+                            actions.push(Action::DispatchDecode {
+                                req: req.id,
+                                decoder: i.id,
+                                bucket: 0,
+                            });
+                        }
+                    }
+                    Signal::Tick => {
+                        actions.push(Action::SetFleet {
+                            role: Role::Prefiller,
+                            target: if now >= self.t { 3 } else { 1 },
+                        });
+                        actions.push(Action::SetFleet {
+                            role: Role::Decoder,
+                            target: 1,
+                        });
+                    }
+                    _ => {}
                 }
-            }
-            fn predict_bucket(&mut self, _: &Request) -> usize {
-                0
             }
         }
         let trace = step_trace(2.0, 2.0, 0.0, 0.0, 30.0, 256, 32, 7);
@@ -1270,5 +1706,26 @@ mod tests {
         assert!(report.prefill_wait.p50 > 0.0);
         // Prefill wait (queue + execution) dominates pure queue delay.
         assert!(report.prefill_wait.p50 >= report.queue_wait.p50);
+    }
+
+    #[test]
+    fn decision_log_records_applied_actions() {
+        let trace = step_trace(4.0, 4.0, 0.0, 0.0, 10.0, 256, 32, 21);
+        let mut coord = StaticCoordinator::new(1, 1);
+        let cfg = SimConfig {
+            initial_prefillers: 1,
+            initial_decoders: 1,
+            decision_log: 64,
+            ..Default::default()
+        };
+        let res = simulate(cfg, cluster_cfg(4), &mut coord, &trace);
+        let log = res.decisions.expect("ring enabled");
+        assert!(log.total_seen() > 0);
+        assert!(log.len() <= 64);
+        assert!(log
+            .iter()
+            .all(|r| matches!(r.outcome, ActionOutcome::Applied)));
+        // Routing and fleet actions both show up.
+        assert!(log.iter().any(|r| r.signal == SignalKind::Tick));
     }
 }

@@ -70,6 +70,11 @@ pub struct PrefillJob {
     pub remaining: usize,
     /// Arrival at this instance's queue.
     pub enqueued_at: f64,
+    /// Per-job chunk-budget override (deflected prefills on regular
+    /// decoders): `Some(budget)` replaces the instance's configured
+    /// `chunk_size` while *this* job runs, so one deflection's mode never
+    /// leaks into another in-flight job. `None` everywhere else.
+    pub chunk_override: Option<usize>,
 }
 
 /// One simulated engine instance.
@@ -393,11 +398,13 @@ mod tests {
             req: Request::new(1, 0.0, 700, 10),
             remaining: 700,
             enqueued_at: 0.0,
+            chunk_override: None,
         });
         i.active_prefill = Some(PrefillJob {
             req: Request::new(2, 0.0, 300, 10),
             remaining: 300,
             enqueued_at: 0.0,
+            chunk_override: None,
         });
         assert_eq!(i.inflight_prefill_tokens(), 1000);
     }

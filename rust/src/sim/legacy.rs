@@ -1,0 +1,919 @@
+//! **Frozen v1 control-plane API** — equivalence oracle for the v2
+//! redesign, scheduled for deletion one PR after the migration settles.
+//!
+//! This module preserves, verbatim, the pre-redesign `Coordinator` trait
+//! and the engine loop that drove it, so the `control_plane_equivalence`
+//! integration test can prove the action-based v2 engine reproduces the
+//! old mechanics bit for bit: the same policies (which now natively
+//! implement [`ControlPlane`](super::policy::ControlPlane)) are run
+//! through [`V1Bridge`] + [`LegacySimEngine`] and through the v2
+//! `SimEngine`, and their `SloReport`s must match on every byte.
+//!
+//! Nothing outside `rust/tests/` should use this module.
+
+#![doc(hidden)]
+
+use super::cluster::{Cluster, ClusterConfig};
+use super::engine::{SimConfig, SimResult, SimSeries};
+use super::event::{Event, EventQueue, InstanceId};
+use super::instance::{ActiveSeq, LifeState, PrefillJob, RequestClock, Role};
+use super::policy::{Action, ControlPlane, Signal};
+use super::view::ClusterView;
+use crate::metrics::MetricsRecorder;
+use crate::trace::{ArrivalSource, Trace, TraceSliceSource};
+use crate::workload::{Completion, Request, RequestId};
+use std::collections::{HashMap, VecDeque};
+
+/// Where a request's prefill should execute (v1 routing answer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    Prefiller(InstanceId),
+    Convertible(InstanceId),
+    Queue,
+}
+
+/// Desired instance counts from a v1 autoscaler evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScaleTargets {
+    pub prefillers: usize,
+    pub decoders: usize,
+}
+
+/// The pre-redesign control-plane trait: two fixed questions plus
+/// notifications, answered against a raw `&Cluster`.
+pub trait Coordinator {
+    fn name(&self) -> &str;
+    fn observe_arrival(&mut self, now: f64, req: &Request);
+    fn route_prefill(&mut self, now: f64, req: &Request, cluster: &Cluster) -> Route;
+    fn route_decode(&mut self, now: f64, req: &Request, cluster: &Cluster) -> Option<InstanceId>;
+    fn scale(&mut self, now: f64, cluster: &Cluster) -> ScaleTargets;
+    fn predict_bucket(&mut self, req: &Request) -> usize;
+    fn live_scaling(&self) -> bool {
+        false
+    }
+    fn observe_completion(&mut self, _now: f64, _completion: &Completion) {}
+}
+
+/// Adapter driving a native v2 [`ControlPlane`] through the v1
+/// [`Coordinator`] surface, reproducing the old engine's exact call
+/// pattern (observe-then-route, separate bucket query) without any extra
+/// policy-side work.
+pub struct V1Bridge<'p> {
+    plane: &'p mut dyn ControlPlane,
+    actions: Vec<Action>,
+    /// Arrival seen by `observe_arrival`, consumed by the paired
+    /// `route_prefill` call (the v1 engine always calls them
+    /// back-to-back).
+    staged_arrival: Option<RequestId>,
+    /// Bucket carried by the last `DispatchDecode` answer, consumed by the
+    /// engine's follow-up `predict_bucket` call.
+    staged_bucket: Option<usize>,
+    /// Empty cluster standing in for the view on v1 callbacks that carry
+    /// no cluster argument (`observe_completion`).
+    detached: Cluster,
+}
+
+impl<'p> V1Bridge<'p> {
+    pub fn new(plane: &'p mut dyn ControlPlane, cfg: ClusterConfig) -> V1Bridge<'p> {
+        V1Bridge {
+            plane,
+            actions: Vec::new(),
+            staged_arrival: None,
+            staged_bucket: None,
+            detached: Cluster::new(cfg),
+        }
+    }
+
+    fn dispatch(&mut self, now: f64, signal: Signal<'_>, cluster: &Cluster) {
+        self.actions.clear();
+        let plane = &mut *self.plane;
+        let view = ClusterView::new(cluster);
+        plane.on_signal(now, signal, &view, &mut self.actions);
+    }
+}
+
+impl Coordinator for V1Bridge<'_> {
+    fn name(&self) -> &str {
+        self.plane.name()
+    }
+
+    fn observe_arrival(&mut self, _now: f64, req: &Request) {
+        self.staged_arrival = Some(req.id);
+    }
+
+    fn route_prefill(&mut self, now: f64, req: &Request, cluster: &Cluster) -> Route {
+        let fresh = self.staged_arrival.take() == Some(req.id);
+        if fresh {
+            self.dispatch(now, Signal::Arrival(req), cluster);
+        } else {
+            self.dispatch(now, Signal::RetryPrefill(req), cluster);
+        }
+        for a in &self.actions {
+            if let Action::RoutePrefill { req: rid, target } = a {
+                if *rid == req.id {
+                    return match cluster.get(*target).map(|i| i.role) {
+                        Some(Role::ConvertibleDecoder) => Route::Convertible(*target),
+                        _ => Route::Prefiller(*target),
+                    };
+                }
+            }
+        }
+        // DeflectPrefill and friends are inexpressible in v1: queue.
+        Route::Queue
+    }
+
+    fn route_decode(&mut self, now: f64, req: &Request, cluster: &Cluster) -> Option<InstanceId> {
+        self.dispatch(now, Signal::PrefillDone(req), cluster);
+        for a in &self.actions {
+            if let Action::DispatchDecode { req: rid, decoder, bucket } = a {
+                if *rid == req.id {
+                    self.staged_bucket = Some(*bucket);
+                    return Some(*decoder);
+                }
+            }
+        }
+        None
+    }
+
+    fn scale(&mut self, now: f64, cluster: &Cluster) -> ScaleTargets {
+        self.dispatch(now, Signal::Tick, cluster);
+        let mut t = ScaleTargets {
+            prefillers: cluster.active_count(Role::Prefiller),
+            decoders: cluster.active_count(Role::Decoder),
+        };
+        for a in &self.actions {
+            if let Action::SetFleet { role, target } = a {
+                match role {
+                    Role::Prefiller => t.prefillers = *target,
+                    Role::Decoder => t.decoders = *target,
+                    Role::ConvertibleDecoder => {}
+                }
+            }
+        }
+        t
+    }
+
+    fn predict_bucket(&mut self, _req: &Request) -> usize {
+        // Called by the v1 engine after a successful `route_decode` (uses
+        // the staged bucket) and on convertible prefill admission (value
+        // discarded there; v2-native policies burn the matching RNG draw
+        // themselves, so no forwarding happens here).
+        self.staged_bucket.take().unwrap_or(0)
+    }
+
+    fn live_scaling(&self) -> bool {
+        self.plane.live_scaling()
+    }
+
+    fn observe_completion(&mut self, now: f64, completion: &Completion) {
+        self.actions.clear();
+        let plane = &mut *self.plane;
+        let view = ClusterView::new(&self.detached);
+        plane.on_signal(now, Signal::Completion(completion), &view, &mut self.actions);
+    }
+}
+
+/// In-flight KVC transfer bookkeeping (v1 copy).
+struct Transfer {
+    bytes_per_s: f64,
+}
+
+/// Frozen copy of the pre-redesign simulation engine. Mechanics are the
+/// same code the v2 engine evolved from; only the control-plane dispatch
+/// differs (direct trait calls instead of signal/action exchange).
+pub struct LegacySimEngine<'a, C: Coordinator> {
+    cfg: SimConfig,
+    coordinator: &'a mut C,
+    cluster: Cluster,
+    events: EventQueue,
+    arrivals: &'a mut dyn ArrivalSource,
+    duration_s: f64,
+    next_arrival: Option<Request>,
+    now: f64,
+    pending: VecDeque<Request>,
+    awaiting_decode: VecDeque<Request>,
+    transfers: HashMap<RequestId, Transfer>,
+    net_bytes_per_s: f64,
+    in_transfer: HashMap<RequestId, (Request, usize)>,
+    clocks: HashMap<RequestId, RequestClock>,
+    metrics: MetricsRecorder,
+    series: SimSeries,
+    ttft_points: Vec<(f64, f64)>,
+    tokens_since_sample: f64,
+    last_sample_t: f64,
+    scale_ups: usize,
+    scale_downs: usize,
+    events_processed: u64,
+    completions_buf: Vec<Completion>,
+    batch_scratch: Vec<ActiveSeq>,
+}
+
+impl<'a, C: Coordinator> LegacySimEngine<'a, C> {
+    pub fn new(
+        cfg: SimConfig,
+        cluster_cfg: ClusterConfig,
+        coordinator: &'a mut C,
+        arrivals: &'a mut dyn ArrivalSource,
+    ) -> Self {
+        let duration_s = arrivals.duration_s();
+        LegacySimEngine {
+            cfg,
+            coordinator,
+            cluster: Cluster::new(cluster_cfg),
+            events: EventQueue::new(),
+            arrivals,
+            duration_s,
+            next_arrival: None,
+            now: 0.0,
+            pending: VecDeque::new(),
+            awaiting_decode: VecDeque::new(),
+            transfers: HashMap::new(),
+            net_bytes_per_s: 0.0,
+            in_transfer: HashMap::new(),
+            clocks: HashMap::new(),
+            metrics: MetricsRecorder::new(),
+            series: SimSeries::default(),
+            ttft_points: Vec::new(),
+            tokens_since_sample: 0.0,
+            last_sample_t: 0.0,
+            scale_ups: 0,
+            scale_downs: 0,
+            events_processed: 0,
+            completions_buf: Vec::new(),
+            batch_scratch: Vec::new(),
+        }
+    }
+
+    pub fn run(mut self) -> SimResult {
+        for _ in 0..self.cfg.initial_prefillers {
+            self.cluster.spawn(Role::Prefiller, 0.0, Some(0.0));
+        }
+        for _ in 0..self.cfg.initial_decoders {
+            self.cluster.spawn(Role::Decoder, 0.0, Some(0.0));
+        }
+        for _ in 0..self.cfg.initial_convertibles {
+            self.cluster.spawn(Role::ConvertibleDecoder, 0.0, Some(0.0));
+        }
+        self.next_arrival = self.arrivals.next_request();
+        if let Some(r) = &self.next_arrival {
+            self.events.push(r.arrival.max(0.0), Event::Arrival);
+        }
+        self.events.push(0.0, Event::ControlTick);
+        self.events.push(0.0, Event::SampleTick);
+
+        let horizon = self.duration_s + self.cfg.drain_s;
+        while let Some((t, ev)) = self.events.pop() {
+            if t > horizon {
+                break;
+            }
+            self.now = t;
+            self.events_processed += 1;
+            self.handle(ev);
+            if self.now > self.duration_s
+                && self.next_arrival.is_none()
+                && self.pending.is_empty()
+                && self.awaiting_decode.is_empty()
+                && self.all_idle()
+            {
+                break;
+            }
+        }
+        let end = self.now.max(self.duration_s);
+        self.cluster.accrue_cost(end);
+        self.metrics.gpu_seconds = self.cluster.gpu_seconds;
+        self.metrics.horizon_s = end;
+        self.metrics.workload_s = self.duration_s;
+        SimResult {
+            metrics: self.metrics,
+            series: self.series,
+            prefiller_series: self.cluster.prefiller_series.clone(),
+            decoder_series: self.cluster.decoder_series.clone(),
+            ttft_points: self.ttft_points,
+            horizon_s: end,
+            scale_ups: self.scale_ups,
+            scale_downs: self.scale_downs,
+            events_processed: self.events_processed,
+            decisions: None,
+        }
+    }
+
+    fn all_idle(&self) -> bool {
+        self.transfers.is_empty() && self.cluster.iter().all(|i| i.drained())
+    }
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::Arrival => {
+                let Some(req) = self.next_arrival.take() else {
+                    return;
+                };
+                self.next_arrival = self.arrivals.next_request();
+                if let Some(n) = &self.next_arrival {
+                    self.events.push(n.arrival.max(self.now), Event::Arrival);
+                }
+                self.metrics.note_arrival(&req);
+                self.clocks
+                    .insert(req.id, RequestClock::at_arrival(req.id, req.arrival));
+                self.coordinator.observe_arrival(self.now, &req);
+                self.dispatch_prefill(req);
+            }
+            Event::ControlTick => {
+                self.catch_up_windows();
+                self.control_tick();
+                self.events
+                    .push(self.now + self.cfg.control_interval_s, Event::ControlTick);
+            }
+            Event::SampleTick => {
+                self.catch_up_windows();
+                self.sample();
+                self.events
+                    .push(self.now + self.cfg.sample_interval_s, Event::SampleTick);
+            }
+            Event::InstanceReady { instance } => {
+                if let Some(inst) = self.cluster.get_mut(instance) {
+                    if inst.life == LifeState::Starting {
+                        inst.life = LifeState::Running;
+                    }
+                }
+                self.reoffer_pending();
+                self.maybe_start_prefill(instance);
+            }
+            Event::PrefillDone { instance, req } => self.on_prefill_done(instance, req),
+            Event::TransferDone { instance, req } => self.on_transfer_done(instance, req),
+            Event::DecodeIterDone { instance, epoch } => self.on_iter_done(instance, epoch),
+        }
+    }
+
+    fn dispatch_prefill(&mut self, req: Request) {
+        match self.coordinator.route_prefill(self.now, &req, &self.cluster) {
+            Route::Prefiller(id) => {
+                let job = PrefillJob {
+                    remaining: req.input_tokens,
+                    req,
+                    enqueued_at: self.now,
+                    chunk_override: None,
+                };
+                if let Some(inst) = self.cluster.get_mut(id) {
+                    inst.prefill_queue.push_back(job);
+                } else {
+                    self.pending.push_back(job.req);
+                    return;
+                }
+                self.maybe_start_prefill(id);
+            }
+            Route::Convertible(id) => self.admit_convertible_prefill(id, req),
+            Route::Queue => self.pending.push_back(req),
+        }
+    }
+
+    fn admit_convertible_prefill(&mut self, id: InstanceId, req: Request) {
+        let bucket = self.coordinator.predict_bucket(&req);
+        let job = PrefillJob {
+            remaining: req.input_tokens,
+            req,
+            enqueued_at: self.now,
+            chunk_override: None,
+        };
+        self.interrupt_window(id);
+        let Some(inst) = self.cluster.get_mut(id) else {
+            self.pending.push_back(job.req);
+            return;
+        };
+        inst.reserved_tokens += job.req.total_tokens() as f64;
+        inst.prefill_queue.push_back(job);
+        let _ = bucket;
+        self.ensure_iterating(id);
+    }
+
+    fn maybe_start_prefill(&mut self, id: InstanceId) {
+        let Some(inst) = self.cluster.get_mut(id) else {
+            return;
+        };
+        if inst.role != Role::Prefiller
+            || inst.active_prefill.is_some()
+            || inst.life == LifeState::Starting
+        {
+            return;
+        }
+        let Some(job) = inst.prefill_queue.pop_front() else {
+            return;
+        };
+        let dur = inst.engine.prefill_time(job.req.input_tokens);
+        let req_id = job.req.id;
+        inst.active_prefill = Some(job);
+        inst.prefill_done_at = self.now + dur;
+        if let Some(ck) = self.clocks.get_mut(&req_id) {
+            if ck.prefill_started.is_none() {
+                ck.prefill_started = Some(self.now);
+            }
+        }
+        self.events.push(
+            self.now + dur,
+            Event::PrefillDone {
+                instance: id,
+                req: req_id,
+            },
+        );
+    }
+
+    fn on_prefill_done(&mut self, instance: InstanceId, req_id: RequestId) {
+        let Some(inst) = self.cluster.get_mut(instance) else {
+            return;
+        };
+        let Some(job) = inst.active_prefill.take() else {
+            return;
+        };
+        debug_assert_eq!(job.req.id, req_id);
+        inst.prefill_done_at = f64::INFINITY;
+        if let Some(ck) = self.clocks.get_mut(&req_id) {
+            ck.prefill_done = Some(self.now);
+        }
+        self.maybe_start_prefill(instance);
+        self.try_send_to_decoder(job.req);
+    }
+
+    fn try_send_to_decoder(&mut self, req: Request) {
+        let max_capacity = self.cluster.config.decode_engine.kv_capacity_tokens();
+        if req.total_tokens() as f64 > max_capacity {
+            self.metrics.dropped += 1;
+            if self.metrics.dropped == 1 {
+                eprintln!(
+                    "[sim] request {} needs {} KV tokens > decoder capacity {:.0}; rejecting \
+                     (further oversized requests counted in metrics.dropped)",
+                    req.id,
+                    req.total_tokens(),
+                    max_capacity
+                );
+            }
+            self.clocks.remove(&req.id);
+            return;
+        }
+        match self.coordinator.route_decode(self.now, &req, &self.cluster) {
+            Some(decoder) => {
+                let bucket = self.coordinator.predict_bucket(&req);
+                let Some(inst) = self.cluster.get_mut(decoder) else {
+                    self.awaiting_decode.push_back(req);
+                    return;
+                };
+                inst.reserved_tokens += req.total_tokens() as f64;
+                let bytes = inst.engine.kvc_bytes(req.input_tokens);
+                let dur = self.cfg.link.transfer_time(bytes);
+                let bytes_per_s = bytes / dur.max(1e-9);
+                self.transfers.insert(req.id, Transfer { bytes_per_s });
+                self.net_bytes_per_s += bytes_per_s;
+                self.events.push(
+                    self.now + dur,
+                    Event::TransferDone {
+                        instance: decoder,
+                        req: req.id,
+                    },
+                );
+                self.in_transfer.insert(req.id, (req, bucket));
+            }
+            None => self.awaiting_decode.push_back(req),
+        }
+    }
+
+    fn on_transfer_done(&mut self, instance: InstanceId, req_id: RequestId) {
+        if let Some(tr) = self.transfers.remove(&req_id) {
+            self.net_bytes_per_s = (self.net_bytes_per_s - tr.bytes_per_s).max(0.0);
+        }
+        let Some((req, bucket)) = self.in_transfer.remove(&req_id) else {
+            return;
+        };
+        self.interrupt_window(instance);
+        let Some(inst) = self.cluster.get_mut(instance) else {
+            return;
+        };
+        inst.joining.push(ActiveSeq {
+            ctx: req.input_tokens,
+            generated: 0,
+            first_token_at: None,
+            predicted_bucket: bucket,
+            req,
+        });
+        self.ensure_iterating(instance);
+    }
+
+    fn catch_up_windows(&mut self) {
+        let now = self.now;
+        let mut produced = 0.0;
+        for role in [Role::Decoder, Role::ConvertibleDecoder] {
+            self.cluster.for_each_role_mut(role, |inst| {
+                if inst.win_active {
+                    produced += inst.win_fast_forward(now);
+                }
+            });
+        }
+        self.tokens_since_sample += produced;
+    }
+
+    fn interrupt_window(&mut self, id: InstanceId) {
+        let now = self.now;
+        let mut produced = 0.0;
+        let mut reschedule = None;
+        if let Some(inst) = self.cluster.get_mut(id) {
+            if inst.win_active {
+                produced = inst.win_fast_forward(now);
+                let n = inst.batch.len();
+                let avg = inst.win_avg_ctx(inst.win_done);
+                let dur = inst.engine.decode_iter_time(n, avg);
+                let end = inst.win_t + dur;
+                inst.win_apply_to_seqs();
+                inst.win_clear();
+                inst.iter_epoch += 1;
+                reschedule = Some((end, inst.iter_epoch));
+            }
+        }
+        if let Some((end, epoch)) = reschedule {
+            self.events
+                .push(end, Event::DecodeIterDone { instance: id, epoch });
+        }
+        self.tokens_since_sample += produced;
+    }
+
+    fn ensure_iterating(&mut self, id: InstanceId) {
+        let force_single = self.cfg.force_single_step;
+        let now = self.now;
+        let Some(inst) = self.cluster.get_mut(id) else {
+            return;
+        };
+        if !inst.is_running() && inst.life != LifeState::Draining {
+            return;
+        }
+        if inst.iterating {
+            return;
+        }
+        let joiners = std::mem::take(&mut inst.joining);
+        inst.batch.extend(joiners);
+        let max_batch = 256;
+        if inst.batch.len() > max_batch {
+            let overflow = inst.batch.split_off(max_batch);
+            inst.joining = overflow;
+        }
+
+        let mut chunk_tokens = 0usize;
+        let mut chunk_first_start: Option<RequestId> = None;
+        if inst.role == Role::ConvertibleDecoder {
+            if inst.active_prefill.is_none() {
+                inst.active_prefill = inst.prefill_queue.pop_front();
+            }
+            if let Some(job) = &inst.active_prefill {
+                let budget = inst.chunk_size.saturating_sub(inst.batch.len());
+                chunk_tokens = budget.min(job.remaining);
+                if chunk_tokens > 0 && job.remaining == job.req.input_tokens {
+                    chunk_first_start = Some(job.req.id);
+                }
+            }
+        }
+
+        if inst.batch.is_empty() && chunk_tokens == 0 {
+            return;
+        }
+
+        let n = inst.batch.len();
+        let sum_ctx: u64 = inst.batch.iter().map(|s| s.ctx as u64).sum();
+        let avg_ctx = if n == 0 {
+            0.0
+        } else {
+            (sum_ctx as f64) / (n as f64)
+        };
+        let dur = if chunk_tokens > 0 {
+            inst.engine.chunked_iter_time(chunk_tokens, n, avg_ctx)
+        } else {
+            inst.engine.decode_iter_time(n, avg_ctx)
+        };
+        inst.iterating = true;
+        inst.iter_epoch += 1;
+        inst.iter_chunk = chunk_tokens;
+        let epoch = inst.iter_epoch;
+
+        let mut end = now + dur;
+        let coalescible = !force_single
+            && chunk_tokens == 0
+            && n > 0
+            && inst.joining.is_empty()
+            && inst.active_prefill.is_none()
+            && inst.prefill_queue.is_empty();
+        if coalescible {
+            let min_remaining = inst
+                .batch
+                .iter()
+                .map(|s| s.req.output_tokens.saturating_sub(s.generated).max(1))
+                .min()
+                .unwrap_or(1);
+            if min_remaining > 1 {
+                let total = min_remaining as u32;
+                let mut t = end;
+                for i in 1..total {
+                    let avg = ((sum_ctx + i as u64 * n as u64) as f64) / (n as f64);
+                    t += inst.engine.decode_iter_time(n, avg);
+                }
+                inst.win_active = true;
+                inst.win_total = total;
+                inst.win_done = 0;
+                inst.win_t = now;
+                inst.win_t1 = 0.0;
+                inst.win_sum_ctx0 = sum_ctx;
+                end = t;
+            }
+        }
+        self.events
+            .push(end, Event::DecodeIterDone { instance: id, epoch });
+        if let Some(rid) = chunk_first_start {
+            if let Some(ck) = self.clocks.get_mut(&rid) {
+                if ck.prefill_started.is_none() {
+                    ck.prefill_started = Some(now);
+                }
+            }
+        }
+    }
+
+    fn on_iter_done(&mut self, id: InstanceId, epoch: u64) {
+        self.completions_buf.clear();
+        let mut freed = false;
+        let mut produced = 0.0;
+        let now = self.now;
+        {
+            let Some(inst) = self.cluster.get_mut(id) else {
+                return;
+            };
+            if epoch != inst.iter_epoch {
+                return;
+            }
+            inst.iterating = false;
+            let chunk = inst.iter_chunk;
+            inst.iter_chunk = 0;
+
+            if inst.win_active {
+                produced += inst.win_fast_forward(f64::INFINITY);
+                inst.win_apply_to_seqs();
+                inst.win_clear();
+            }
+
+            if chunk > 0 {
+                if let Some(job) = &mut inst.active_prefill {
+                    job.remaining = job.remaining.saturating_sub(chunk);
+                    if job.remaining == 0 {
+                        let job = inst.active_prefill.take().unwrap();
+                        let bucket = crate::workload::BucketScheme::default()
+                            .classify(job.req.input_tokens, job.req.output_tokens)
+                            .index();
+                        if let Some(ck) = self.clocks.get_mut(&job.req.id) {
+                            ck.prefill_done = Some(now);
+                        }
+                        inst.joining.push(ActiveSeq {
+                            ctx: job.req.input_tokens,
+                            generated: 0,
+                            first_token_at: None,
+                            predicted_bucket: bucket,
+                            req: job.req,
+                        });
+                    }
+                }
+            }
+
+            produced += inst.batch.len() as f64;
+            let mut scratch = std::mem::take(&mut self.batch_scratch);
+            scratch.clear();
+            for mut seq in inst.batch.drain(..) {
+                seq.generated += 1;
+                seq.ctx += 1;
+                if seq.first_token_at.is_none() {
+                    seq.first_token_at = Some(now);
+                }
+                if seq.generated >= seq.req.output_tokens {
+                    inst.reserved_tokens =
+                        (inst.reserved_tokens - seq.req.total_tokens() as f64).max(0.0);
+                    freed = true;
+                    let first = seq.first_token_at.unwrap();
+                    let ttft = first - seq.req.arrival;
+                    let tpot = if seq.req.output_tokens > 1 {
+                        (now - first) / (seq.req.output_tokens - 1) as f64
+                    } else {
+                        0.0
+                    };
+                    self.completions_buf.push(Completion {
+                        id: seq.req.id,
+                        arrival: seq.req.arrival,
+                        input_tokens: seq.req.input_tokens,
+                        output_tokens: seq.req.output_tokens,
+                        ttft,
+                        tpot,
+                        finish: now,
+                    });
+                } else {
+                    scratch.push(seq);
+                }
+            }
+            std::mem::swap(&mut inst.batch, &mut scratch);
+            self.batch_scratch = scratch;
+        }
+        self.tokens_since_sample += produced;
+
+        for idx in 0..self.completions_buf.len() {
+            let c = self.completions_buf[idx];
+            self.ttft_points.push((c.arrival, c.ttft));
+            self.coordinator.observe_completion(now, &c);
+            self.metrics.record(c);
+            if let Some(ck) = self.clocks.remove(&c.id) {
+                if let Some(done) = ck.prefill_done {
+                    self.metrics.prefill_waits.push((c.arrival, done - c.arrival));
+                }
+                if let Some(started) = ck.prefill_started {
+                    self.metrics.queue_waits.push((c.arrival, started - c.arrival));
+                }
+            }
+        }
+
+        if freed {
+            self.retry_awaiting_decode();
+        }
+        self.ensure_iterating(id);
+    }
+
+    fn control_tick(&mut self) {
+        let targets = self.coordinator.scale(self.now, &self.cluster);
+        self.apply_scaling(targets);
+        self.reoffer_pending();
+        self.retry_awaiting_decode();
+        self.cluster.sweep_drained(self.now);
+    }
+
+    fn apply_scaling(&mut self, t: ScaleTargets) {
+        let live = if self.coordinator.live_scaling() {
+            Some(0.2)
+        } else {
+            None
+        };
+        let t = {
+            let tp_p = self.cluster.config.prefill_engine.tp;
+            let tp_d = self.cluster.config.decode_engine.tp;
+            let conv_gpus = self.cluster.role_gpus(Role::ConvertibleDecoder);
+            let budget = self.cluster.config.max_gpus.saturating_sub(conv_gpus);
+            let want = t.prefillers * tp_p + t.decoders * tp_d;
+            if want > budget && want > 0 {
+                let ratio = budget as f64 / want as f64;
+                ScaleTargets {
+                    prefillers: ((t.prefillers as f64 * ratio).floor() as usize).max(1),
+                    decoders: ((t.decoders as f64 * ratio).floor() as usize).max(1),
+                }
+            } else {
+                t
+            }
+        };
+        let cur_p = self.cluster.active_count(Role::Prefiller);
+        if t.prefillers > cur_p {
+            for _ in 0..(t.prefillers - cur_p) {
+                if let Some(id) = self.cluster.spawn(Role::Prefiller, self.now, live) {
+                    self.scale_ups += 1;
+                    let ready = self.cluster.get(id).unwrap().ready_at;
+                    self.events.push(ready, Event::InstanceReady { instance: id });
+                }
+            }
+        } else if t.prefillers < cur_p {
+            let mut candidates: Vec<(usize, InstanceId)> = self
+                .cluster
+                .iter_role(Role::Prefiller)
+                .filter(|i| i.life != LifeState::Draining)
+                .map(|i| (i.inflight_prefill_tokens(), i.id))
+                .collect();
+            candidates.sort();
+            for (_, id) in candidates.into_iter().take(cur_p - t.prefillers) {
+                self.cluster.retire(id, self.now);
+                self.scale_downs += 1;
+            }
+        }
+        let cur_d = self.cluster.active_count(Role::Decoder);
+        if t.decoders > cur_d {
+            for _ in 0..(t.decoders - cur_d) {
+                if let Some(id) = self.cluster.spawn(Role::Decoder, self.now, live) {
+                    self.scale_ups += 1;
+                    let ready = self.cluster.get(id).unwrap().ready_at;
+                    self.events.push(ready, Event::InstanceReady { instance: id });
+                }
+            }
+        } else if t.decoders < cur_d {
+            let mut candidates: Vec<(usize, InstanceId)> = self
+                .cluster
+                .iter_role(Role::Decoder)
+                .filter(|i| i.life != LifeState::Draining)
+                .map(|i| (i.decode_load(), i.id))
+                .collect();
+            candidates.sort();
+            for (_, id) in candidates.into_iter().take(cur_d - t.decoders) {
+                self.cluster.retire(id, self.now);
+                self.scale_downs += 1;
+            }
+        }
+    }
+
+    fn reoffer_pending(&mut self) {
+        let n = self.pending.len();
+        for _ in 0..n {
+            let Some(req) = self.pending.pop_front() else {
+                break;
+            };
+            match self.coordinator.route_prefill(self.now, &req, &self.cluster) {
+                Route::Prefiller(id) => {
+                    let job = PrefillJob {
+                        remaining: req.input_tokens,
+                        req,
+                        enqueued_at: self.now,
+                        chunk_override: None,
+                    };
+                    if let Some(inst) = self.cluster.get_mut(id) {
+                        inst.prefill_queue.push_back(job);
+                        self.maybe_start_prefill(id);
+                    } else {
+                        self.pending.push_back(job.req);
+                    }
+                }
+                Route::Convertible(id) => self.admit_convertible_prefill(id, req),
+                Route::Queue => self.pending.push_back(req),
+            }
+        }
+    }
+
+    fn retry_awaiting_decode(&mut self) {
+        let n = self.awaiting_decode.len();
+        for _ in 0..n {
+            let Some(req) = self.awaiting_decode.pop_front() else {
+                break;
+            };
+            self.try_send_to_decoder(req);
+        }
+    }
+
+    fn sample(&mut self) {
+        let t = self.now;
+        let mut n_p = 0usize;
+        let mut busy = 0usize;
+        for i in self.cluster.running_of(Role::Prefiller) {
+            n_p += 1;
+            busy += i.active_prefill.is_some() as usize;
+        }
+        let p_util = if n_p == 0 {
+            0.0
+        } else {
+            busy as f64 / n_p as f64
+        };
+        let mut n_d = 0usize;
+        let mut mem_sum = 0.0;
+        let mut d_iter = 0usize;
+        for i in self
+            .cluster
+            .running_of(Role::Decoder)
+            .chain(self.cluster.running_of(Role::ConvertibleDecoder))
+        {
+            n_d += 1;
+            mem_sum += i.mem_utilization();
+            d_iter += i.iterating as usize;
+        }
+        let mem = if n_d == 0 { 0.0 } else { mem_sum / n_d as f64 };
+        let d_busy = if n_d == 0 {
+            0.0
+        } else {
+            d_iter as f64 / n_d as f64
+        };
+        let net_util = (self.net_bytes_per_s / self.cfg.link.eff_rdma_bytes()).min(1.0);
+
+        self.series.prefill_compute.push(t, p_util);
+        self.series.decode_memory.push(t, mem);
+        self.series.decode_compute.push(t, d_busy);
+        self.series.network.push(t, net_util);
+        let elapsed = t - self.last_sample_t;
+        let thr = if elapsed > 0.0 {
+            self.tokens_since_sample / elapsed
+        } else {
+            0.0
+        };
+        self.tokens_since_sample = 0.0;
+        self.last_sample_t = t;
+        self.series.decode_throughput.push(t, thr);
+        self.series
+            .queue_len
+            .push(t, (self.pending.len() + self.awaiting_decode.len()) as f64);
+    }
+}
+
+/// v1 convenience wrapper over a materialized trace.
+pub fn simulate_legacy<C: Coordinator>(
+    cfg: SimConfig,
+    cluster_cfg: ClusterConfig,
+    coordinator: &mut C,
+    trace: &Trace,
+) -> SimResult {
+    let mut src = TraceSliceSource::new(trace);
+    LegacySimEngine::new(cfg, cluster_cfg, coordinator, &mut src).run()
+}
+
+/// v1 convenience wrapper over a streaming source.
+pub fn simulate_source_legacy<C: Coordinator>(
+    cfg: SimConfig,
+    cluster_cfg: ClusterConfig,
+    coordinator: &mut C,
+    arrivals: &mut dyn ArrivalSource,
+) -> SimResult {
+    LegacySimEngine::new(cfg, cluster_cfg, coordinator, arrivals).run()
+}

@@ -4,15 +4,29 @@
 //! same control planes (TokenScale + baselines) are driven over simulated
 //! prefillers, decoders, KVC transfers and instance lifecycles whose
 //! timings come from `perfmodel`.
+//!
+//! Control planes implement the action-based [`ControlPlane`] v2 API
+//! (docs/control_plane.md): the engine delivers typed [`Signal`]s with a
+//! read-only [`ClusterView`], policies answer with typed [`Action`]s, and
+//! the engine validates, applies and audits them. The pre-redesign
+//! `Coordinator` trait survives one more PR in [`legacy`] as the
+//! equivalence oracle.
 
+pub mod audit;
 pub mod cluster;
 pub mod engine;
 pub mod event;
 pub mod instance;
+pub mod legacy;
 pub mod policy;
+pub mod view;
 
+pub use audit::{DecisionLog, DecisionRecord};
 pub use cluster::{Cluster, ClusterConfig};
 pub use engine::{simulate, simulate_source, SimConfig, SimEngine, SimResult, SimSeries};
 pub use event::{Event, EventQueue, InstanceId};
 pub use instance::{ActiveSeq, Instance, LifeState, PrefillJob, RequestClock, Role};
-pub use policy::{Coordinator, Route, ScaleTargets, StaticCoordinator};
+pub use policy::{
+    Action, ActionOutcome, ControlPlane, RejectReason, Signal, SignalKind, StaticCoordinator,
+};
+pub use view::ClusterView;

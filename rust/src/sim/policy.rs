@@ -1,79 +1,302 @@
-//! The control-plane interface the simulator drives.
+//! The control-plane interface the simulator drives — **ControlPlane v2**.
 //!
 //! The simulator owns the *mechanics* (queues, batches, transfers, memory,
-//! clocks); a [`Coordinator`] owns the *decisions* (routing, load
-//! balancing, autoscaling). TokenScale and every baseline implement this
-//! trait, so all systems are compared on identical mechanics — mirroring
-//! how the paper deploys different control planes over the same vLLM
-//! cluster.
+//! clocks); a [`ControlPlane`] owns the *decisions*. Where the old
+//! `Coordinator` trait (now frozen in [`crate::sim::legacy`] for one PR as
+//! the equivalence oracle) could only answer two fixed questions — "where
+//! does this prefill go?" and "how many instances do you want?" — v2
+//! inverts the boundary into a command API:
+//!
+//! - the engine delivers typed [`Signal`]s (arrivals, prefill/decode
+//!   hand-offs, control ticks, instance lifecycle notifications) together
+//!   with a read-only [`ClusterView`](super::view::ClusterView);
+//! - the policy answers with a list of typed [`Action`]s;
+//! - the engine *validates* and *interprets* every action: invalid ones
+//!   become typed [`RejectReason`]s counted in
+//!   [`MetricsRecorder`](crate::metrics::MetricsRecorder) and surfaced in
+//!   `SloReport::rejected_actions`, and every decision is appended to the
+//!   optional [`DecisionLog`](super::audit::DecisionLog) ring buffer
+//!   (`tokenscale explain` prints it).
+//!
+//! This makes decisions the old API hard-wired or could not express —
+//! draining one specific instance, converting a decoder on the fly
+//! (§III-D), or deflecting a prefill onto a *regular* decoder (load-aware
+//! prefill deflection) — first-class policy moves, while every policy
+//! still runs on identical mechanics.
 
-use super::cluster::Cluster;
 use super::event::InstanceId;
-use crate::workload::{Completion, Request};
+use super::instance::Role;
+use super::view::ClusterView;
+use crate::workload::{BucketScheme, Completion, Request, RequestId};
 
-/// Where a request's prefill should execute.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Route {
-    /// A regular prefiller instance.
-    Prefiller(InstanceId),
-    /// A Convertible Decoder running restricted chunked prefill (§III-D).
-    Convertible(InstanceId),
-    /// No feasible instance: wait in the gateway queue (Alg. 1 line 15).
-    Queue,
+/// What the engine tells a control plane. Borrowed payloads: signals are
+/// delivered synchronously from the event loop.
+#[derive(Clone, Copy, Debug)]
+pub enum Signal<'a> {
+    /// A fresh request reached the gateway. Expected answer: one
+    /// [`Action::RoutePrefill`] or [`Action::DeflectPrefill`]; no routing
+    /// action queues the request at the gateway (Alg. 1 line 15).
+    Arrival(&'a Request),
+    /// A gateway-queued request is re-offered (control tick / instance
+    /// ready). Same expected answers as [`Signal::Arrival`], but traffic
+    /// windows must NOT be updated again.
+    RetryPrefill(&'a Request),
+    /// A request's prefill finished (or a backpressured request retries);
+    /// its KVC needs a decoder. Expected answer: one
+    /// [`Action::DispatchDecode`]; none = backpressure, the engine retries
+    /// later.
+    PrefillDone(&'a Request),
+    /// A request completed and freed its KV memory.
+    Completion(&'a Completion),
+    /// Periodic control tick (autoscaler evaluation). Fleet-shaping
+    /// actions ([`Action::SetFleet`], [`Action::Convert`], …) usually
+    /// answer this.
+    Tick,
+    /// A provisioned instance finished starting up.
+    InstanceReady(InstanceId),
+    /// A draining instance finished its work and left the cluster.
+    InstanceDrained(InstanceId),
 }
 
-/// Desired instance counts from an autoscaler evaluation.
+impl Signal<'_> {
+    /// Payload-free tag for audit records.
+    pub fn kind(&self) -> SignalKind {
+        match self {
+            Signal::Arrival(_) => SignalKind::Arrival,
+            Signal::RetryPrefill(_) => SignalKind::RetryPrefill,
+            Signal::PrefillDone(_) => SignalKind::PrefillDone,
+            Signal::Completion(_) => SignalKind::Completion,
+            Signal::Tick => SignalKind::Tick,
+            Signal::InstanceReady(_) => SignalKind::InstanceReady,
+            Signal::InstanceDrained(_) => SignalKind::InstanceDrained,
+        }
+    }
+}
+
+/// Payload-free [`Signal`] tag (audit trail, summaries).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct ScaleTargets {
-    pub prefillers: usize,
-    /// Regular decoders (convertible decoders are statically provisioned
-    /// and never scaled, per §IV-C2).
-    pub decoders: usize,
+pub enum SignalKind {
+    Arrival,
+    RetryPrefill,
+    PrefillDone,
+    Completion,
+    Tick,
+    InstanceReady,
+    InstanceDrained,
+}
+
+impl SignalKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            SignalKind::Arrival => "arrival",
+            SignalKind::RetryPrefill => "retry-prefill",
+            SignalKind::PrefillDone => "prefill-done",
+            SignalKind::Completion => "completion",
+            SignalKind::Tick => "tick",
+            SignalKind::InstanceReady => "instance-ready",
+            SignalKind::InstanceDrained => "instance-drained",
+        }
+    }
+}
+
+/// A typed command from the control plane to the cluster. The engine
+/// validates each action against the current cluster state; invalid
+/// actions are rejected with a [`RejectReason`] instead of silently
+/// corrupting mechanics.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Action {
+    /// Send `req`'s prefill to a prefiller or (chunked, in-place) to a
+    /// Convertible Decoder. Rejected: unknown instance, regular decoder
+    /// target (use [`Action::DeflectPrefill`]), or a request id that is
+    /// not the one the signal carried.
+    RoutePrefill { req: RequestId, target: InstanceId },
+    /// Run `req`'s prefill on a *regular* decoder (load-aware prefill
+    /// deflection). `chunked` interleaves it with decode iterations at the
+    /// deployment chunk budget; otherwise the prompt runs as a single
+    /// restricted-chunked pass. Rejected when the decoder lacks the KV
+    /// reserve capacity for the request's full footprint.
+    DeflectPrefill {
+        req: RequestId,
+        decoder: InstanceId,
+        chunked: bool,
+    },
+    /// Ship `req`'s KVC to `decoder` and join its continuous batch.
+    /// `bucket` is the predicted request-type bucket recorded on the
+    /// sequence for per-type load balancing.
+    DispatchDecode {
+        req: RequestId,
+        decoder: InstanceId,
+        bucket: usize,
+    },
+    /// Desired instance count for one role. Prefiller and Decoder targets
+    /// given in the same signal dispatch share the GPU quota exactly like
+    /// the old `ScaleTargets` (proportional shrink when over budget —
+    /// recorded as a clamped [`RejectReason::FleetOverQuota`]).
+    /// ConvertibleDecoder targets spawn/retire the convertible pool.
+    SetFleet { role: Role, target: usize },
+    /// Turn a regular decoder into a Convertible Decoder (grants it the
+    /// deployment chunk budget + Eq. 6 reserve). Rejected on non-decoders.
+    Convert { decoder: InstanceId },
+    /// Turn a Convertible Decoder back into a regular decoder. Rejected
+    /// while it still holds prefill work.
+    Revert { decoder: InstanceId },
+    /// Begin draining one specific instance; it finishes queued work and
+    /// is removed once idle. Rejected if already draining.
+    Drain { instance: InstanceId },
+}
+
+impl Action {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Action::RoutePrefill { .. } => "route-prefill",
+            Action::DeflectPrefill { .. } => "deflect-prefill",
+            Action::DispatchDecode { .. } => "dispatch-decode",
+            Action::SetFleet { .. } => "set-fleet",
+            Action::Convert { .. } => "convert",
+            Action::Revert { .. } => "revert",
+            Action::Drain { .. } => "drain",
+        }
+    }
+}
+
+impl std::fmt::Display for Action {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Action::RoutePrefill { req, target } => write!(f, "RoutePrefill(req {req} -> {target})"),
+            Action::DeflectPrefill { req, decoder, chunked } => {
+                write!(f, "DeflectPrefill(req {req} -> {decoder}, chunked={chunked})")
+            }
+            Action::DispatchDecode { req, decoder, bucket } => {
+                write!(f, "DispatchDecode(req {req} -> {decoder}, bucket {bucket})")
+            }
+            Action::SetFleet { role, target } => write!(f, "SetFleet({role:?} -> {target})"),
+            Action::Convert { decoder } => write!(f, "Convert({decoder})"),
+            Action::Revert { decoder } => write!(f, "Revert({decoder})"),
+            Action::Drain { instance } => write!(f, "Drain({instance})"),
+        }
+    }
+}
+
+/// Why the engine refused (or clamped) an action.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The referenced instance does not exist (stale id).
+    UnknownInstance,
+    /// The action names a request other than the one the signal carried.
+    UnknownRequest,
+    /// The instance's role cannot perform this action (e.g. `Convert` on
+    /// a prefiller, `DeflectPrefill` to a non-decoder).
+    WrongRole,
+    /// The instance is not running (still starting).
+    NotRunning,
+    /// The target lacks KV reserve capacity for the request.
+    NoCapacity,
+    /// The combined fleet target exceeds `max_gpus`; targets were
+    /// proportionally clamped (old quota-sharing semantics).
+    FleetOverQuota,
+    /// `Drain` of an instance that is already draining.
+    AlreadyDraining,
+    /// `Revert` of a convertible that still holds prefill work.
+    Busy,
+    /// A second routing action for a request that was already consumed in
+    /// this dispatch.
+    DuplicateRoute,
+}
+
+impl RejectReason {
+    pub const ALL: [RejectReason; 9] = [
+        RejectReason::UnknownInstance,
+        RejectReason::UnknownRequest,
+        RejectReason::WrongRole,
+        RejectReason::NotRunning,
+        RejectReason::NoCapacity,
+        RejectReason::FleetOverQuota,
+        RejectReason::AlreadyDraining,
+        RejectReason::Busy,
+        RejectReason::DuplicateRoute,
+    ];
+
+    /// Dense index for counter arrays.
+    pub fn idx(self) -> usize {
+        match self {
+            RejectReason::UnknownInstance => 0,
+            RejectReason::UnknownRequest => 1,
+            RejectReason::WrongRole => 2,
+            RejectReason::NotRunning => 3,
+            RejectReason::NoCapacity => 4,
+            RejectReason::FleetOverQuota => 5,
+            RejectReason::AlreadyDraining => 6,
+            RejectReason::Busy => 7,
+            RejectReason::DuplicateRoute => 8,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            RejectReason::UnknownInstance => "unknown-instance",
+            RejectReason::UnknownRequest => "unknown-request",
+            RejectReason::WrongRole => "wrong-role",
+            RejectReason::NotRunning => "not-running",
+            RejectReason::NoCapacity => "no-capacity",
+            RejectReason::FleetOverQuota => "fleet-over-quota",
+            RejectReason::AlreadyDraining => "already-draining",
+            RejectReason::Busy => "busy",
+            RejectReason::DuplicateRoute => "duplicate-route",
+        }
+    }
+}
+
+/// What happened to one action after validation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ActionOutcome {
+    Applied,
+    /// Applied after adjustment (fleet quota sharing).
+    Clamped(RejectReason),
+    Rejected(RejectReason),
+}
+
+impl ActionOutcome {
+    pub fn reject_reason(&self) -> Option<RejectReason> {
+        match self {
+            ActionOutcome::Applied => None,
+            ActionOutcome::Clamped(r) | ActionOutcome::Rejected(r) => Some(*r),
+        }
+    }
 }
 
 /// A serving control plane: gateway statistics, router, load balancer and
-/// autoscaler, driven by the simulator's event loop.
-pub trait Coordinator {
+/// autoscaler, driven by the simulator's event loop through typed signals
+/// and answering with typed actions.
+pub trait ControlPlane {
     fn name(&self) -> &str;
 
-    /// Gateway ingest notification: called once per request on arrival,
-    /// before routing. Policies maintain their traffic windows here.
-    fn observe_arrival(&mut self, now: f64, req: &Request);
-
-    /// Route a prefill task (fresh arrival or queued retry).
-    fn route_prefill(&mut self, now: f64, req: &Request, cluster: &Cluster) -> Route;
-
-    /// Pick a decoder to receive the KVC of a prefilled request.
-    /// `None` = all decoders saturated (backpressure; the engine retries).
-    fn route_decode(&mut self, now: f64, req: &Request, cluster: &Cluster) -> Option<InstanceId>;
-
-    /// Autoscaler evaluation at a control tick.
-    fn scale(&mut self, now: f64, cluster: &Cluster) -> ScaleTargets;
-
-    /// Predicted request-type bucket index (0..9) used for per-type load
-    /// balancing and the decoder autoscaler.
-    fn predict_bucket(&mut self, req: &Request) -> usize;
+    /// React to one signal. Push any number of [`Action`]s; the engine
+    /// validates and applies them in order. The view is a read-only
+    /// snapshot of the cluster at signal time.
+    fn on_signal(
+        &mut self,
+        now: f64,
+        signal: Signal<'_>,
+        view: &ClusterView<'_>,
+        actions: &mut Vec<Action>,
+    );
 
     /// Whether scale-ups use live autoscaling (BlitzScale §V: scale-up
     /// executed proactively, removing model-load latency).
     fn live_scaling(&self) -> bool {
         false
     }
-
-    /// Notification that a completion happened (memory freed) — lets
-    /// policies track decode velocity online. Receives the completion
-    /// record directly (the engine no longer reconstructs a `Request` per
-    /// completion on the hot path).
-    fn observe_completion(&mut self, _now: f64, _completion: &Completion) {}
 }
 
-/// A fixed-fleet coordinator used for tests, profiling sweeps and the
+/// A fixed-fleet control plane used for tests, profiling sweeps and the
 /// "required vs provisioned" ground-truth runs: never scales, routes
 /// prefill to the least-loaded prefiller and decode to the least-loaded
 /// decoder with capacity.
 pub struct StaticCoordinator {
     pub prefillers: usize,
     pub decoders: usize,
+    /// Cached classification scheme (one per policy, not one per call).
+    scheme: BucketScheme,
 }
 
 impl StaticCoordinator {
@@ -81,46 +304,67 @@ impl StaticCoordinator {
         StaticCoordinator {
             prefillers,
             decoders,
+            scheme: BucketScheme::default(),
         }
     }
-}
 
-impl Coordinator for StaticCoordinator {
-    fn name(&self) -> &str {
-        "static"
-    }
-
-    fn observe_arrival(&mut self, _now: f64, _req: &Request) {}
-
-    fn route_prefill(&mut self, _now: f64, _req: &Request, cluster: &Cluster) -> Route {
-        use super::instance::Role;
-        cluster
-            .running_of(Role::Prefiller)
+    fn route_prefill(&self, view: &ClusterView<'_>) -> Option<InstanceId> {
+        view.running_of(Role::Prefiller)
             .min_by_key(|i| i.inflight_prefill_tokens())
-            .map(|i| Route::Prefiller(i.id))
-            .unwrap_or(Route::Queue)
+            .map(|i| i.id)
     }
 
-    fn route_decode(&mut self, _now: f64, req: &Request, cluster: &Cluster) -> Option<InstanceId> {
-        use super::instance::Role;
-        cluster
-            .running_of(Role::Decoder)
-            .chain(cluster.running_of(Role::ConvertibleDecoder))
+    fn route_decode(&self, req: &Request, view: &ClusterView<'_>) -> Option<InstanceId> {
+        view.running_of(Role::Decoder)
+            .chain(view.running_of(Role::ConvertibleDecoder))
             .filter(|i| i.can_admit(req.total_tokens()))
             .min_by_key(|i| i.decode_load())
             .map(|i| i.id)
     }
+}
 
-    fn scale(&mut self, _now: f64, _cluster: &Cluster) -> ScaleTargets {
-        ScaleTargets {
-            prefillers: self.prefillers,
-            decoders: self.decoders,
-        }
+impl ControlPlane for StaticCoordinator {
+    fn name(&self) -> &str {
+        "static"
     }
 
-    fn predict_bucket(&mut self, req: &Request) -> usize {
-        crate::workload::BucketScheme::default()
-            .classify(req.input_tokens, req.output_tokens)
-            .index()
+    fn on_signal(
+        &mut self,
+        _now: f64,
+        signal: Signal<'_>,
+        view: &ClusterView<'_>,
+        actions: &mut Vec<Action>,
+    ) {
+        match signal {
+            Signal::Arrival(req) | Signal::RetryPrefill(req) => {
+                if let Some(target) = self.route_prefill(view) {
+                    actions.push(Action::RoutePrefill { req: req.id, target });
+                }
+            }
+            Signal::PrefillDone(req) => {
+                if let Some(decoder) = self.route_decode(req, view) {
+                    let bucket = self
+                        .scheme
+                        .classify(req.input_tokens, req.output_tokens)
+                        .index();
+                    actions.push(Action::DispatchDecode {
+                        req: req.id,
+                        decoder,
+                        bucket,
+                    });
+                }
+            }
+            Signal::Tick => {
+                actions.push(Action::SetFleet {
+                    role: Role::Prefiller,
+                    target: self.prefillers,
+                });
+                actions.push(Action::SetFleet {
+                    role: Role::Decoder,
+                    target: self.decoders,
+                });
+            }
+            Signal::Completion(_) | Signal::InstanceReady(_) | Signal::InstanceDrained(_) => {}
+        }
     }
 }

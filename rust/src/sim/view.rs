@@ -1,0 +1,128 @@
+//! Read-only cluster facade handed to control planes.
+//!
+//! Policies used to receive `&Cluster` directly, which exposed the slab
+//! internals and every `&mut` entry point. [`ClusterView`] is the v2
+//! contract: a `Copy` wrapper that re-exports only the observational
+//! queries. Guarantees:
+//!
+//! - **Snapshot consistency** — the view is taken at signal-dispatch time;
+//!   nothing mutates the cluster while a policy holds it (dispatch is
+//!   synchronous), so every query in one `on_signal` call sees the same
+//!   state the engine will validate the returned actions against.
+//! - **No mutation** — there is no way to reach `&mut Instance` or the
+//!   lifecycle entry points; all cluster changes go through typed
+//!   [`Action`](super::policy::Action)s the engine validates.
+//! - **Stable iteration order** — instances iterate in spawn order within
+//!   a role (the slab's per-role live lists), so min-by tie-breaks are
+//!   deterministic and favor the oldest instance.
+
+use super::cluster::{Cluster, ClusterConfig};
+use super::event::InstanceId;
+use super::instance::{Instance, Role};
+
+/// Read-only view of the live cluster.
+#[derive(Clone, Copy)]
+pub struct ClusterView<'a> {
+    cluster: &'a Cluster,
+}
+
+impl<'a> ClusterView<'a> {
+    pub fn new(cluster: &'a Cluster) -> ClusterView<'a> {
+        ClusterView { cluster }
+    }
+
+    /// Deployment-level configuration (engines, GPU cap, chunk budgets).
+    pub fn config(&self) -> &'a ClusterConfig {
+        &self.cluster.config
+    }
+
+    /// Hard cap on simultaneously allocated GPUs.
+    pub fn max_gpus(&self) -> usize {
+        self.cluster.config.max_gpus
+    }
+
+    /// GPUs currently allocated (including Starting and Draining).
+    pub fn allocated_gpus(&self) -> usize {
+        self.cluster.allocated_gpus()
+    }
+
+    /// GPUs held by live instances of one role.
+    pub fn role_gpus(&self, role: Role) -> usize {
+        self.cluster.role_gpus(role)
+    }
+
+    /// Live instances of one role (any life state).
+    pub fn count_role(&self, role: Role) -> usize {
+        self.cluster.count_role(role)
+    }
+
+    /// Non-draining instances of one role (the autoscalers' "current
+    /// count").
+    pub fn active_count(&self, role: Role) -> usize {
+        self.cluster.active_count(role)
+    }
+
+    /// Look up one instance by id (`None` for stale ids).
+    pub fn get(&self, id: InstanceId) -> Option<&'a Instance> {
+        self.cluster.get(id)
+    }
+
+    /// Iterate all live instances, prefillers → decoders → convertibles,
+    /// spawn order within each role.
+    pub fn iter(&self) -> impl Iterator<Item = &'a Instance> + 'a {
+        self.cluster.iter()
+    }
+
+    /// Iterate live instances of one role (any life state), spawn order.
+    pub fn iter_role(&self, role: Role) -> impl Iterator<Item = &'a Instance> + 'a {
+        self.cluster.iter_role(role)
+    }
+
+    /// Iterate running instances of one role, spawn order.
+    pub fn running_of(&self, role: Role) -> impl Iterator<Item = &'a Instance> + 'a {
+        self.cluster.running_of(role)
+    }
+
+    /// Ids of non-draining instances of a role, spawn order.
+    pub fn ids_of(&self, role: Role) -> Vec<InstanceId> {
+        self.cluster.ids_of(role)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::{catalog, EngineModel};
+    use std::sync::Arc;
+
+    fn cluster() -> Cluster {
+        let engine = Arc::new(EngineModel::new(
+            catalog::model("llama-3.1-8b").unwrap(),
+            catalog::gpu("a100-40g").unwrap(),
+            1,
+        ));
+        Cluster::new(ClusterConfig {
+            prefill_engine: engine.clone(),
+            decode_engine: engine,
+            startup_override_s: None,
+            max_gpus: 8,
+            convertible_chunk_size: 512,
+            convertible_reserve_tokens: 4096.0,
+        })
+    }
+
+    #[test]
+    fn view_mirrors_cluster_queries() {
+        let mut c = cluster();
+        let p = c.spawn(Role::Prefiller, 0.0, Some(0.0)).unwrap();
+        c.spawn(Role::Decoder, 0.0, Some(0.0)).unwrap();
+        let v = ClusterView::new(&c);
+        assert_eq!(v.allocated_gpus(), c.allocated_gpus());
+        assert_eq!(v.active_count(Role::Prefiller), 1);
+        assert_eq!(v.running_of(Role::Decoder).count(), 1);
+        assert_eq!(v.get(p).unwrap().id, p);
+        assert_eq!(v.max_gpus(), 8);
+        assert_eq!(v.ids_of(Role::Prefiller), vec![p]);
+        assert_eq!(v.iter().count(), 2);
+    }
+}

@@ -1,0 +1,408 @@
+//! Engine-side validation of control-plane actions: malformed or
+//! infeasible commands must be refused with typed reasons observable in
+//! metrics (and the audit log), never silently corrupt mechanics — and
+//! the new action space (deflection, conversion, targeted drain,
+//! convertible fleet targets) must actually work end to end.
+
+use std::sync::Arc;
+use tokenscale::perfmodel::{catalog, EngineModel};
+use tokenscale::sim::{
+    simulate, Action, ActionOutcome, ClusterConfig, ClusterView, ControlPlane, RejectReason, Role,
+    Signal, SimConfig,
+};
+use tokenscale::trace::{step_trace, Trace};
+use tokenscale::workload::Request;
+
+fn engine() -> Arc<EngineModel> {
+    Arc::new(EngineModel::new(
+        catalog::model("llama-3.1-8b").unwrap(),
+        catalog::gpu("a100-40g").unwrap(),
+        1,
+    ))
+}
+
+fn cluster_cfg(max_gpus: usize) -> ClusterConfig {
+    ClusterConfig {
+        prefill_engine: engine(),
+        decode_engine: engine(),
+        startup_override_s: None,
+        max_gpus,
+        convertible_chunk_size: 512,
+        convertible_reserve_tokens: 4096.0,
+    }
+}
+
+/// Least-loaded routing shared by the scripted policies below.
+fn route_basic(signal: Signal<'_>, view: &ClusterView<'_>, actions: &mut Vec<Action>) -> bool {
+    match signal {
+        Signal::Arrival(req) | Signal::RetryPrefill(req) => {
+            if let Some(i) = view
+                .running_of(Role::Prefiller)
+                .min_by_key(|i| i.inflight_prefill_tokens())
+            {
+                actions.push(Action::RoutePrefill {
+                    req: req.id,
+                    target: i.id,
+                });
+            }
+            true
+        }
+        Signal::PrefillDone(req) => {
+            if let Some(i) = view
+                .running_of(Role::Decoder)
+                .chain(view.running_of(Role::ConvertibleDecoder))
+                .filter(|i| i.can_admit(req.total_tokens()))
+                .min_by_key(|i| i.decode_load())
+            {
+                actions.push(Action::DispatchDecode {
+                    req: req.id,
+                    decoder: i.id,
+                    bucket: 0,
+                });
+            }
+            true
+        }
+        _ => false,
+    }
+}
+
+#[test]
+fn set_fleet_beyond_max_gpus_is_clamped_and_counted() {
+    // Demands 100 prefillers + 100 decoders on a 6-GPU cluster: the
+    // engine applies the quota-shared shrink and records the clamp.
+    struct Greedy;
+    impl ControlPlane for Greedy {
+        fn name(&self) -> &str {
+            "greedy"
+        }
+        fn on_signal(
+            &mut self,
+            _now: f64,
+            signal: Signal<'_>,
+            view: &ClusterView<'_>,
+            actions: &mut Vec<Action>,
+        ) {
+            if route_basic(signal, view, actions) {
+                return;
+            }
+            if matches!(signal, Signal::Tick) {
+                actions.push(Action::SetFleet {
+                    role: Role::Prefiller,
+                    target: 100,
+                });
+                actions.push(Action::SetFleet {
+                    role: Role::Decoder,
+                    target: 100,
+                });
+            }
+        }
+    }
+    let trace = step_trace(4.0, 4.0, 0.0, 0.0, 10.0, 256, 32, 31);
+    let mut p = Greedy;
+    let cfg = SimConfig {
+        initial_prefillers: 1,
+        initial_decoders: 1,
+        decision_log: 128,
+        ..Default::default()
+    };
+    let slo = cfg.slo;
+    let res = simulate(cfg, cluster_cfg(6), &mut p, &trace);
+    assert!(
+        res.metrics.rejections.get(RejectReason::FleetOverQuota) >= 1,
+        "over-quota fleet targets must be counted"
+    );
+    let report = res.metrics.report(&slo, 0.0);
+    assert!(report.rejected_actions >= 1, "surfaced in the SLO report");
+    assert!(
+        report.avg_gpus <= 6.0 + 1e-9,
+        "the cap held: avg {}",
+        report.avg_gpus
+    );
+    // The audit trail shows the clamp, not a silent success.
+    let log = res.decisions.expect("ring enabled");
+    assert!(log.iter().any(|r| matches!(
+        r.outcome,
+        ActionOutcome::Clamped(RejectReason::FleetOverQuota)
+    )));
+    assert_eq!(res.metrics.completions.len(), trace.requests.len());
+}
+
+#[test]
+fn deflect_without_reserve_capacity_is_rejected() {
+    // Two big requests against one decoder: the first deflection fits,
+    // the second must be refused until the first drains.
+    struct DeflectAll;
+    impl ControlPlane for DeflectAll {
+        fn name(&self) -> &str {
+            "deflect-all"
+        }
+        fn on_signal(
+            &mut self,
+            _now: f64,
+            signal: Signal<'_>,
+            view: &ClusterView<'_>,
+            actions: &mut Vec<Action>,
+        ) {
+            if let Signal::Arrival(req) | Signal::RetryPrefill(req) = signal {
+                if let Some(d) = view.running_of(Role::Decoder).next() {
+                    actions.push(Action::DeflectPrefill {
+                        req: req.id,
+                        decoder: d.id,
+                        chunked: true,
+                    });
+                }
+            }
+        }
+    }
+    let cap = engine().kv_capacity_tokens();
+    let big = (cap * 0.6) as usize;
+    let trace = Trace {
+        name: "two-big".into(),
+        duration_s: 4.0,
+        requests: vec![
+            Request::new(0, 0.1, big - 64, 64),
+            Request::new(1, 0.2, big - 64, 64),
+        ],
+    };
+    let mut p = DeflectAll;
+    let cfg = SimConfig {
+        initial_prefillers: 0,
+        initial_decoders: 1,
+        ..Default::default()
+    };
+    let res = simulate(cfg, cluster_cfg(4), &mut p, &trace);
+    assert!(
+        res.metrics.rejections.get(RejectReason::NoCapacity) >= 1,
+        "deflection onto a decoder without reserve capacity must be rejected"
+    );
+    // Backpressure, not loss: both finish once memory frees up.
+    assert_eq!(res.metrics.completions.len(), 2);
+    assert_eq!(res.metrics.dropped, 0);
+}
+
+#[test]
+fn convert_validation_and_targeted_drain() {
+    // First tick: Convert the prefiller (wrong role), Convert a decoder
+    // (ok), Drain the other decoder twice (second is already draining).
+    // Afterwards prefills route to the freshly converted instance.
+    struct ConvertScript {
+        fired: bool,
+    }
+    impl ControlPlane for ConvertScript {
+        fn name(&self) -> &str {
+            "convert-script"
+        }
+        fn on_signal(
+            &mut self,
+            _now: f64,
+            signal: Signal<'_>,
+            view: &ClusterView<'_>,
+            actions: &mut Vec<Action>,
+        ) {
+            match signal {
+                Signal::Tick if !self.fired => {
+                    self.fired = true;
+                    let prefiller = view.ids_of(Role::Prefiller)[0];
+                    let decoders = view.ids_of(Role::Decoder);
+                    actions.push(Action::Convert { decoder: prefiller }); // wrong role
+                    actions.push(Action::Convert {
+                        decoder: decoders[0],
+                    });
+                    actions.push(Action::Drain {
+                        instance: decoders[1],
+                    });
+                    actions.push(Action::Drain {
+                        instance: decoders[1],
+                    }); // already draining
+                }
+                Signal::Arrival(req) | Signal::RetryPrefill(req) => {
+                    // Route prefill to the convertible once it exists.
+                    if let Some(c) = view.running_of(Role::ConvertibleDecoder).next() {
+                        actions.push(Action::RoutePrefill {
+                            req: req.id,
+                            target: c.id,
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    let trace = step_trace(2.0, 2.0, 0.0, 0.0, 10.0, 256, 32, 33);
+    let mut p = ConvertScript { fired: false };
+    let cfg = SimConfig {
+        initial_prefillers: 1,
+        initial_decoders: 2,
+        decision_log: 64,
+        ..Default::default()
+    };
+    let res = simulate(cfg, cluster_cfg(8), &mut p, &trace);
+    assert_eq!(res.metrics.rejections.get(RejectReason::WrongRole), 1);
+    assert_eq!(res.metrics.rejections.get(RejectReason::AlreadyDraining), 1);
+    assert!(res.scale_downs >= 1, "targeted drain counts as a scale-down");
+    let log = res.decisions.expect("ring enabled");
+    assert!(log.iter().any(|r| matches!(
+        (r.action, r.outcome),
+        (Action::Convert { .. }, ActionOutcome::Applied)
+    )));
+    // The converted instance serves the whole workload in place.
+    assert_eq!(res.metrics.completions.len(), trace.requests.len());
+}
+
+#[test]
+fn unchunked_deflection_completes_through_decode() {
+    // No prefillers at all: every prompt runs as a single restricted-
+    // chunked pass on the lone decoder, then decodes there.
+    struct DeflectUnchunked;
+    impl ControlPlane for DeflectUnchunked {
+        fn name(&self) -> &str {
+            "deflect-unchunked"
+        }
+        fn on_signal(
+            &mut self,
+            _now: f64,
+            signal: Signal<'_>,
+            view: &ClusterView<'_>,
+            actions: &mut Vec<Action>,
+        ) {
+            if let Signal::Arrival(req) | Signal::RetryPrefill(req) = signal {
+                if let Some(d) = view
+                    .running_of(Role::Decoder)
+                    .filter(|d| d.admission_capacity() >= req.total_tokens() as f64)
+                    .min_by_key(|d| d.decode_load())
+                {
+                    actions.push(Action::DeflectPrefill {
+                        req: req.id,
+                        decoder: d.id,
+                        chunked: false,
+                    });
+                }
+            }
+        }
+    }
+    let trace = step_trace(2.0, 2.0, 0.0, 0.0, 10.0, 512, 32, 35);
+    let mut p = DeflectUnchunked;
+    let cfg = SimConfig {
+        initial_prefillers: 0,
+        initial_decoders: 1,
+        ..Default::default()
+    };
+    let res = simulate(cfg, cluster_cfg(4), &mut p, &trace);
+    assert_eq!(res.metrics.completions.len(), trace.requests.len());
+    for c in &res.metrics.completions {
+        assert!(c.ttft > 0.0 && c.ttft.is_finite());
+    }
+    assert_eq!(res.metrics.rejections.total(), 0);
+}
+
+#[test]
+fn convertible_fleet_target_spawns_pool() {
+    // SetFleet for the convertible role provisions the pool; prefills
+    // queue until the convertible finishes starting, then run in place.
+    struct ConvPool;
+    impl ControlPlane for ConvPool {
+        fn name(&self) -> &str {
+            "conv-pool"
+        }
+        fn on_signal(
+            &mut self,
+            _now: f64,
+            signal: Signal<'_>,
+            view: &ClusterView<'_>,
+            actions: &mut Vec<Action>,
+        ) {
+            match signal {
+                Signal::Tick => {
+                    actions.push(Action::SetFleet {
+                        role: Role::ConvertibleDecoder,
+                        target: 1,
+                    });
+                }
+                Signal::Arrival(req) | Signal::RetryPrefill(req) => {
+                    if let Some(c) = view.running_of(Role::ConvertibleDecoder).next() {
+                        actions.push(Action::RoutePrefill {
+                            req: req.id,
+                            target: c.id,
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    let trace = step_trace(1.0, 1.0, 0.0, 0.0, 12.0, 256, 16, 37);
+    let mut p = ConvPool;
+    let cfg = SimConfig {
+        initial_prefillers: 0,
+        initial_decoders: 0,
+        initial_convertibles: 0,
+        ..Default::default()
+    };
+    let res = simulate(cfg, cluster_cfg(4), &mut p, &trace);
+    assert!(res.scale_ups >= 1, "convertible pool spawned");
+    assert_eq!(res.metrics.completions.len(), trace.requests.len());
+}
+
+#[test]
+fn misaddressed_routing_actions_are_rejected() {
+    // Routing actions that name the wrong request, or route twice, are
+    // refused; the request still completes via the fallback queue/retry.
+    struct Confused {
+        tried_bad: bool,
+    }
+    impl ControlPlane for Confused {
+        fn name(&self) -> &str {
+            "confused"
+        }
+        fn on_signal(
+            &mut self,
+            _now: f64,
+            signal: Signal<'_>,
+            view: &ClusterView<'_>,
+            actions: &mut Vec<Action>,
+        ) {
+            match signal {
+                Signal::Arrival(req) | Signal::RetryPrefill(req) => {
+                    let target = view.running_of(Role::Prefiller).next().unwrap().id;
+                    if !self.tried_bad {
+                        self.tried_bad = true;
+                        // Wrong request id: rejected, request queues.
+                        actions.push(Action::RoutePrefill {
+                            req: req.id + 1_000_000,
+                            target,
+                        });
+                    } else {
+                        actions.push(Action::RoutePrefill { req: req.id, target });
+                        // Second routing for the same request: rejected.
+                        actions.push(Action::RoutePrefill { req: req.id, target });
+                    }
+                }
+                Signal::PrefillDone(req) => {
+                    if let Some(i) = view
+                        .running_of(Role::Decoder)
+                        .filter(|i| i.can_admit(req.total_tokens()))
+                        .min_by_key(|i| i.decode_load())
+                    {
+                        actions.push(Action::DispatchDecode {
+                            req: req.id,
+                            decoder: i.id,
+                            bucket: 0,
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    let trace = step_trace(2.0, 2.0, 0.0, 0.0, 6.0, 128, 16, 39);
+    let mut p = Confused { tried_bad: false };
+    let cfg = SimConfig {
+        initial_prefillers: 1,
+        initial_decoders: 1,
+        ..Default::default()
+    };
+    let res = simulate(cfg, cluster_cfg(4), &mut p, &trace);
+    assert!(res.metrics.rejections.get(RejectReason::UnknownRequest) >= 1);
+    assert!(res.metrics.rejections.get(RejectReason::DuplicateRoute) >= 1);
+    assert_eq!(res.metrics.completions.len(), trace.requests.len());
+}

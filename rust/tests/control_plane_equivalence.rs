@@ -1,0 +1,158 @@
+//! The v1→v2 control-plane redesign equivalence gate.
+//!
+//! The action-based ControlPlane v2 API replaced the old `Coordinator`
+//! trait; the pre-redesign engine loop is frozen in `sim::legacy` for one
+//! PR exactly so this test can prove the swap changed *nothing* about the
+//! results: every policy is built once through the registry, then driven
+//!
+//! - through the frozen v1 engine (via `V1Bridge`, which reproduces the
+//!   old observe/route/scale/predict call pattern), and
+//! - through the v2 signal/action engine,
+//!
+//! and the two runs must agree **bit for bit**: every `SloReport` field
+//! (attainments, GPU cost, every latency percentile), every completion,
+//! the event count and the scaling activity. Scenarios cover the fig6-
+//! style policy-compare smoke (Mixed @ 22 RPS on `small-a100`) and both
+//! `fig_longtrace --smoke` scenario shapes (diurnal Azure-Conversation
+//! and burst-injected Mixed on `large-a100`), for TokenScale and all
+//! three baselines.
+
+use tokenscale::metrics::SloReport;
+use tokenscale::report::runner::{
+    run_experiment_legacy, run_experiment_source_legacy, RunOverrides,
+};
+use tokenscale::report::{
+    deployment, run_experiment, run_experiment_source, ExperimentResult, PolicyKind,
+};
+use tokenscale::trace::{
+    generate_family, ArrivalSource, BurstWindow, MixedSource, SourceExt, SpecSource, TraceFamily,
+};
+use tokenscale::util::stats::Summary;
+
+/// Every pre-redesign `SloReport` field, bit-exact (f64s via `to_bits`).
+fn report_bits(r: &SloReport) -> Vec<u64> {
+    let mut out = vec![
+        r.n as u64,
+        r.ttft_attainment.to_bits(),
+        r.tpot_attainment.to_bits(),
+        r.overall_attainment.to_bits(),
+        r.avg_gpus.to_bits(),
+    ];
+    let mut push_summary = |s: &Summary| {
+        out.push(s.count as u64);
+        out.push(s.mean.to_bits());
+        out.push(s.p50.to_bits());
+        out.push(s.p90.to_bits());
+        out.push(s.p99.to_bits());
+        out.push(s.max.to_bits());
+    };
+    push_summary(&r.ttft);
+    push_summary(&r.tpot);
+    push_summary(&r.prefill_wait);
+    push_summary(&r.queue_wait);
+    out
+}
+
+fn completion_bits(res: &ExperimentResult) -> Vec<(u64, u64, u64, u64, u64)> {
+    res.sim
+        .metrics
+        .completions
+        .iter()
+        .map(|c| {
+            (
+                c.id,
+                c.arrival.to_bits(),
+                c.ttft.to_bits(),
+                c.tpot.to_bits(),
+                c.finish.to_bits(),
+            )
+        })
+        .collect()
+}
+
+fn assert_equivalent(label: &str, v1: &ExperimentResult, v2: &ExperimentResult) {
+    assert_eq!(
+        report_bits(&v1.report),
+        report_bits(&v2.report),
+        "{label}: SloReport must be byte-identical across the redesign"
+    );
+    assert_eq!(
+        completion_bits(v1),
+        completion_bits(v2),
+        "{label}: completions must be identical"
+    );
+    assert_eq!(
+        v1.sim.events_processed, v2.sim.events_processed,
+        "{label}: event counts must match"
+    );
+    assert_eq!(v1.sim.scale_ups, v2.sim.scale_ups, "{label}: scale-ups");
+    assert_eq!(v1.sim.scale_downs, v2.sim.scale_downs, "{label}: scale-downs");
+    assert_eq!(
+        v1.sim.metrics.gpu_seconds.to_bits(),
+        v2.sim.metrics.gpu_seconds.to_bits(),
+        "{label}: GPU-seconds (cost) must be bit-identical"
+    );
+    // The ported policies only emit actions the engine accepts, so the
+    // "0.0 delta" claim holds with zero rejections on the v2 path too.
+    assert_eq!(
+        v2.sim.metrics.rejections.total(),
+        0,
+        "{label}: stock policies must have no rejected actions"
+    );
+    assert!(v2.report.n > 0, "{label}: scenario must complete requests");
+}
+
+/// Fig. 6/9-style policy-compare smoke: the bursty Mixed family at the
+/// paper's 22 RPS on the 16-GPU `small-a100` preset.
+#[test]
+fn policy_compare_smoke_is_bit_identical_across_redesign() {
+    let dep = deployment("small-a100").unwrap();
+    let trace = generate_family(TraceFamily::Mixed, 22.0, 90.0, 42);
+    let ov = RunOverrides::default();
+    for policy in PolicyKind::all_baselines() {
+        let v1 = run_experiment_legacy(&dep, policy, &trace, &ov);
+        let v2 = run_experiment(&dep, policy, &trace, &ov);
+        assert_equivalent(&format!("fig6-compare/{}", policy.name()), &v1, &v2);
+    }
+}
+
+fn diurnal_source(duration: f64, rps: f64) -> Box<dyn ArrivalSource + Send> {
+    // Same shape as fig_longtrace's "diurnal-conv" scenario (smoke scale).
+    let amp = 0.35;
+    SpecSource::new(TraceFamily::AzureConv.spec(rps * (1.0 + amp), duration), 101)
+        .diurnal(amp, duration, 202)
+        .boxed()
+}
+
+fn burst_source(duration: f64, rps: f64) -> Box<dyn ArrivalSource + Send> {
+    // Same shape as fig_longtrace's "burst-mixed" scenario (smoke scale).
+    let bursts: Vec<BurstWindow> = (0..3)
+        .map(|i| BurstWindow::new(duration * (0.15 + 0.25 * i as f64), duration * 0.05, 3.0))
+        .collect();
+    MixedSource::new(rps, duration, 303)
+        .inject_bursts(bursts, 404)
+        .boxed()
+}
+
+fn longtrace_scenario(label: &str, make: &dyn Fn() -> Box<dyn ArrivalSource + Send>) {
+    let dep = deployment("large-a100").unwrap();
+    let ov = RunOverrides::default();
+    for policy in PolicyKind::all_baselines() {
+        let mut src1 = make();
+        let profile = src1.profile();
+        let v1 = run_experiment_source_legacy(&dep, policy, src1.as_mut(), &profile, &ov);
+        let mut src2 = make();
+        let v2 = run_experiment_source(&dep, policy, src2.as_mut(), &profile, &ov);
+        assert_equivalent(&format!("{label}/{}", policy.name()), &v1, &v2);
+    }
+}
+
+#[test]
+fn longtrace_diurnal_smoke_is_bit_identical_across_redesign() {
+    longtrace_scenario("longtrace-diurnal", &|| diurnal_source(150.0, 5.0));
+}
+
+#[test]
+fn longtrace_burst_smoke_is_bit_identical_across_redesign() {
+    longtrace_scenario("longtrace-burst", &|| burst_source(150.0, 5.0));
+}

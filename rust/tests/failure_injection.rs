@@ -94,7 +94,7 @@ fn tiny_gpu_cap_still_serves_with_degraded_slo() {
     dep2.initial_decoders = 1;
     let res = run_experiment(
         &dep2,
-        PolicyKind::TokenScale,
+        PolicyKind::named("tokenscale"),
         &trace,
         &RunOverrides {
             convertibles: Some(0),
@@ -117,7 +117,7 @@ fn zero_output_predictor_accuracy_still_works() {
     let trace = step_trace(6.0, 6.0, 0.0, 0.0, 30.0, 512, 128, 5);
     let res = run_experiment(
         &dep,
-        PolicyKind::TokenScale,
+        PolicyKind::named("tokenscale"),
         &trace,
         &RunOverrides {
             predictor_accuracy: Some(0.0),
@@ -133,43 +133,59 @@ fn zero_output_predictor_accuracy_still_works() {
 fn draining_prefiller_finishes_queue() {
     // Scale down mid-burst: requests already queued on the retired
     // prefiller must still complete.
-    use tokenscale::sim::{Cluster, Coordinator, InstanceId, Role, Route, ScaleTargets};
+    use tokenscale::sim::{Action, ClusterView, ControlPlane, Role, Signal};
 
     struct ShrinkAt {
         t: f64,
     }
-    impl Coordinator for ShrinkAt {
+    impl ControlPlane for ShrinkAt {
         fn name(&self) -> &str {
             "shrink"
         }
-        fn observe_arrival(&mut self, _: f64, _: &Request) {}
-        fn route_prefill(&mut self, _: f64, _: &Request, cluster: &Cluster) -> Route {
-            cluster
-                .running_of(Role::Prefiller)
-                .min_by_key(|i| i.inflight_prefill_tokens())
-                .map(|i| Route::Prefiller(i.id))
-                .unwrap_or(Route::Queue)
-        }
-        fn route_decode(
+        fn on_signal(
             &mut self,
-            _: f64,
-            req: &Request,
-            cluster: &Cluster,
-        ) -> Option<InstanceId> {
-            cluster
-                .running_of(Role::Decoder)
-                .filter(|i| i.can_admit(req.total_tokens()))
-                .min_by_key(|i| i.decode_load())
-                .map(|i| i.id)
-        }
-        fn scale(&mut self, now: f64, _: &Cluster) -> ScaleTargets {
-            ScaleTargets {
-                prefillers: if now >= self.t { 1 } else { 3 },
-                decoders: 2,
+            now: f64,
+            signal: Signal<'_>,
+            view: &ClusterView<'_>,
+            actions: &mut Vec<Action>,
+        ) {
+            match signal {
+                Signal::Arrival(req) | Signal::RetryPrefill(req) => {
+                    if let Some(i) = view
+                        .running_of(Role::Prefiller)
+                        .min_by_key(|i| i.inflight_prefill_tokens())
+                    {
+                        actions.push(Action::RoutePrefill {
+                            req: req.id,
+                            target: i.id,
+                        });
+                    }
+                }
+                Signal::PrefillDone(req) => {
+                    if let Some(i) = view
+                        .running_of(Role::Decoder)
+                        .filter(|i| i.can_admit(req.total_tokens()))
+                        .min_by_key(|i| i.decode_load())
+                    {
+                        actions.push(Action::DispatchDecode {
+                            req: req.id,
+                            decoder: i.id,
+                            bucket: 0,
+                        });
+                    }
+                }
+                Signal::Tick => {
+                    actions.push(Action::SetFleet {
+                        role: Role::Prefiller,
+                        target: if now >= self.t { 1 } else { 3 },
+                    });
+                    actions.push(Action::SetFleet {
+                        role: Role::Decoder,
+                        target: 2,
+                    });
+                }
+                _ => {}
             }
-        }
-        fn predict_bucket(&mut self, _: &Request) -> usize {
-            0
         }
     }
 

@@ -1,93 +1,30 @@
 //! Integration: the four control planes over the same bursty trace must
 //! reproduce the paper's headline shape (Fig. 9): TokenScale on (or near)
 //! the top-left of the attainment-vs-cost frontier.
+//!
+//! Policies are selected by registry name and run through the shared
+//! runner — the same string-keyed path the CLI and every bench use.
 
-use std::sync::Arc;
-use tokenscale::coordinator::{TokenScale, TokenScaleConfig};
 use tokenscale::metrics::SloReport;
-use tokenscale::perfmodel::{catalog, EngineModel};
-use tokenscale::scaler::{derive_thresholds, AiBrix, BlitzScale, DistServe};
-use tokenscale::sim::{simulate, ClusterConfig, Coordinator, SimConfig};
+use tokenscale::report::runner::RunOverrides;
+use tokenscale::report::{deployment, run_experiment, PolicyKind};
 use tokenscale::trace::{generate_family, Trace, TraceFamily};
-use tokenscale::velocity::VelocityProfile;
-use tokenscale::workload::SloPolicy;
-
-fn engine() -> Arc<EngineModel> {
-    Arc::new(EngineModel::new(
-        catalog::model("llama-3.1-8b").unwrap(),
-        catalog::gpu("a100-40g").unwrap(),
-        1,
-    ))
-}
-
-fn cluster_cfg(convertible_chunk: usize, reserve: f64) -> ClusterConfig {
-    ClusterConfig {
-        prefill_engine: engine(),
-        decode_engine: engine(),
-        startup_override_s: None,
-        max_gpus: 16,
-        convertible_chunk_size: convertible_chunk,
-        convertible_reserve_tokens: reserve,
-    }
-}
 
 fn run_policy(name: &str, trace: &Trace) -> SloReport {
-    let eng = engine();
-    let link = catalog::link("a100-cluster").unwrap();
-    let avg_in = trace.avg_input_tokens();
-    let avg_total = avg_in + trace.avg_output_tokens();
-    let profile = VelocityProfile::analytic(&eng, &link, avg_in as usize);
-    let thresholds = derive_thresholds(trace, &eng, &profile);
-    let slo = SloPolicy::default();
-
-    let base_sim = SimConfig {
-        initial_prefillers: 2,
-        initial_decoders: 2,
-        initial_convertibles: 0,
-        ..Default::default()
-    };
-
-    let (report, label) = match name {
-        "tokenscale" => {
-            let mut ts = TokenScale::new(
-                TokenScaleConfig::default(),
-                &eng,
-                &link,
-                avg_in as usize,
-                avg_total,
-            );
-            let cfg = SimConfig {
-                initial_convertibles: ts.cfg.convertibles,
-                ..base_sim.clone()
-            };
-            let ccfg = cluster_cfg(ts.chunk_size, ts.reserve_tokens);
-            let res = simulate(cfg, ccfg, &mut ts, trace);
-            (res.metrics.report(&slo, 10.0), ts.name().to_string())
-        }
-        "aibrix" => {
-            let mut p = AiBrix::new(&thresholds);
-            let res = simulate(base_sim.clone(), cluster_cfg(0, 0.0), &mut p, trace);
-            (res.metrics.report(&slo, 10.0), p.name().to_string())
-        }
-        "blitzscale" => {
-            let mut p = BlitzScale::new(&thresholds);
-            let res = simulate(base_sim.clone(), cluster_cfg(0, 0.0), &mut p, trace);
-            (res.metrics.report(&slo, 10.0), p.name().to_string())
-        }
-        "distserve" => {
-            let mut p = DistServe::new(&thresholds);
-            let res = simulate(base_sim.clone(), cluster_cfg(0, 0.0), &mut p, trace);
-            (res.metrics.report(&slo, 10.0), p.name().to_string())
-        }
-        _ => unreachable!(),
-    };
+    let dep = deployment("small-a100").unwrap();
+    let res = run_experiment(&dep, PolicyKind::named(name), trace, &RunOverrides::default());
+    let report = res.report;
     eprintln!(
-        "{label:12} attainment={:.3} (ttft {:.3} tpot {:.3}) gpus={:.2} n={}",
+        "{name:12} attainment={:.3} (ttft {:.3} tpot {:.3}) gpus={:.2} n={}",
         report.overall_attainment,
         report.ttft_attainment,
         report.tpot_attainment,
         report.avg_gpus,
         report.n
+    );
+    assert_eq!(
+        report.rejected_actions, 0,
+        "{name}: stock policies must not have actions rejected"
     );
     report
 }

@@ -36,8 +36,8 @@ fn run(policy: PolicyKind, trace: &Trace, ov: &RunOverrides) -> ExperimentResult
 fn same_seed_is_bit_deterministic() {
     let trace = generate_family(TraceFamily::AzureConv, 12.0, 90.0, 7);
     let ov = RunOverrides::default();
-    let a = run(PolicyKind::TokenScale, &trace, &ov);
-    let b = run(PolicyKind::TokenScale, &trace, &ov);
+    let a = run(PolicyKind::named("tokenscale"), &trace, &ov);
+    let b = run(PolicyKind::named("tokenscale"), &trace, &ov);
     assert_eq!(completion_key(&a), completion_key(&b));
     assert_eq!(a.sim.metrics.gpu_seconds, b.sim.metrics.gpu_seconds);
     assert_eq!(a.sim.events_processed, b.sim.events_processed);
@@ -90,7 +90,7 @@ fn coalesced_equals_single_step_mixed_workload() {
     // Mixed prompt/output lengths under an autoscaling policy: exercises
     // joins mid-window (transfer landings), scale-up/down, and drain.
     let trace = generate_family(TraceFamily::Mixed, 10.0, 75.0, 11);
-    assert_modes_equivalent(PolicyKind::TokenScale, &trace, RunOverrides::default());
+    assert_modes_equivalent(PolicyKind::named("tokenscale"), &trace, RunOverrides::default());
 }
 
 #[test]
@@ -103,7 +103,7 @@ fn coalesced_equals_single_step_with_convertible_decoders() {
         convertibles: Some(2),
         ..Default::default()
     };
-    assert_modes_equivalent(PolicyKind::TokenScale, &trace, ov);
+    assert_modes_equivalent(PolicyKind::named("tokenscale"), &trace, ov);
 }
 
 #[test]
@@ -111,5 +111,5 @@ fn coalesced_equals_single_step_for_baseline_policy() {
     // A baseline (no convertibles, different routing/scaling) as a second
     // independent control plane over the same mechanics.
     let trace = generate_family(TraceFamily::AzureConv, 10.0, 60.0, 17);
-    assert_modes_equivalent(PolicyKind::DistServe, &trace, RunOverrides::default());
+    assert_modes_equivalent(PolicyKind::named("distserve"), &trace, RunOverrides::default());
 }

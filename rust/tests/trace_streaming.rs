@@ -221,7 +221,7 @@ fn streamed_run_matches_preloaded_run_for_every_policy() {
     // Use the measured profile on both sides so the only difference is
     // preloaded-vs-streamed arrival delivery.
     let profile = TraceProfile::of_trace(&trace);
-    for policy in [PolicyKind::TokenScale, PolicyKind::DistServe] {
+    for policy in [PolicyKind::named("tokenscale"), PolicyKind::named("distserve")] {
         let preloaded = run_experiment(&dep, policy, &trace, &ov);
         let mut src = SpecSource::new(spec.clone(), seed);
         let streamed = run_experiment_source(&dep, policy, &mut src, &profile, &ov);
