@@ -3,8 +3,7 @@
 //!
 //!     cargo run --release --example autoscale_sim [rps] [duration_s]
 
-use tokenscale::report::runner::RunOverrides;
-use tokenscale::report::{deployment, run_experiment, PolicyKind};
+use tokenscale::report::{deployment, run_experiment, ExperimentSpec, PolicyKind};
 use tokenscale::trace::{generate_family, TraceFamily};
 use tokenscale::util::table::{fnum, pct, Table};
 
@@ -14,7 +13,7 @@ fn main() -> anyhow::Result<()> {
     let duration: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(240.0);
 
     let dep = deployment("small-a100").unwrap();
-    let trace = generate_family(TraceFamily::Mixed, rps, duration, 42);
+    let trace = std::sync::Arc::new(generate_family(TraceFamily::Mixed, rps, duration, 42));
     println!(
         "mixed trace: {} requests @ {:.1} rps, avg {:.0} in / {:.0} out tokens\n",
         trace.requests.len(),
@@ -31,7 +30,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut best: Option<(f64, String)> = None;
     for policy in PolicyKind::all_baselines() {
-        let res = run_experiment(&dep, policy, &trace, &RunOverrides::default());
+        let res = run_experiment(&ExperimentSpec::new(&dep, policy, &trace));
         let r = &res.report;
         table.row(vec![
             policy.name().into(),

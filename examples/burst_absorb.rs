@@ -5,13 +5,13 @@
 //!     cargo run --release --example burst_absorb
 
 use tokenscale::report::runner::RunOverrides;
-use tokenscale::report::{deployment, run_experiment, PolicyKind};
+use tokenscale::report::{deployment, run_experiment, ExperimentSpec, PolicyKind};
 use tokenscale::trace::step_trace;
 
 fn main() -> anyhow::Result<()> {
     let dep = deployment("small-a100").unwrap();
     // 1 rps stable; at t=10 s, 10 rps of 1000-token prompts for 8 s.
-    let trace = step_trace(1.0, 10.0, 10.0, 8.0, 30.0, 1000, 64, 7);
+    let trace = std::sync::Arc::new(step_trace(1.0, 10.0, 10.0, 8.0, 30.0, 1000, 64, 7));
     println!("burst scenario: 1 rps → 10 rps at t=10 s (×10), 1000-token prompts\n");
 
     for policy in [PolicyKind::named("tokenscale"), PolicyKind::named("distserve")] {
@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
             initial_decoders: Some(1),
             ..Default::default()
         };
-        let res = run_experiment(&dep, policy, &trace, &ov);
+        let res = run_experiment(&ExperimentSpec::new(&dep, policy, &trace).with_overrides(ov));
 
         // Worst TTFT per arrival second.
         let mut per_sec = vec![0.0f64; 30];

@@ -12,7 +12,7 @@
 
 use tokenscale::perfmodel::catalog;
 use tokenscale::report::runner::RunOverrides;
-use tokenscale::report::{deployment, run_experiment, PolicyKind};
+use tokenscale::report::{deployment, run_experiment, ExperimentSpec, PolicyKind};
 use tokenscale::scaler::{convertible_count, required_decoders_frac, required_prefillers};
 use tokenscale::trace::burst::{bin_traffic, burst_time_fraction};
 use tokenscale::trace::{generate_family, replay, Trace, TraceFamily};
@@ -51,7 +51,7 @@ fn load_workload(args: &[String]) -> anyhow::Result<Trace> {
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let dep = deployment("small-a100").unwrap();
-    let trace = load_workload(&args)?;
+    let trace = std::sync::Arc::new(load_workload(&args)?);
     let rps = trace.avg_rps();
     let profile = VelocityProfile::analytic(
         &dep.engine,
@@ -100,7 +100,9 @@ fn main() -> anyhow::Result<()> {
         initial_decoders: Some(decoders.saturating_sub(convertibles).max(1)),
         ..Default::default()
     };
-    let res = run_experiment(&dep, PolicyKind::named("tokenscale"), &trace, &ov);
+    let res = run_experiment(
+        &ExperimentSpec::new(&dep, PolicyKind::named("tokenscale"), &trace).with_overrides(ov),
+    );
     println!("\nvalidation run (TokenScale, plan as initial fleet):");
     println!(
         "  SLO attainment {:.1}% | avg GPUs {:.2}",

@@ -1,52 +1,29 @@
 //! §VI-B1 — validation of the decoder-count computation (Eq. 3): on a
 //! uniformly mixed nine-bucket workload, sweep a static decoder fleet and
 //! find where SLO attainment saturates; compare with the fractional
-//! instance count TokenScale's formula predicts.
+//! instance count TokenScale's formula predicts. The sweep is the
+//! `decoder-validation` built-in suite (one scenario per fleet size over
+//! the shared `uniform-buckets` workload spec).
 //!
 //! Paper's numbers: attainment saturates around 3 decoders vs a computed
 //! 3.2 — the per-bucket sum is accurate for a realistic mix.
 
 use tokenscale::perfmodel::catalog;
-use tokenscale::report::deployment;
+use tokenscale::report::suite::decoder_validation_suite;
+use tokenscale::report::{deployment, WorkloadSpec};
 use tokenscale::scaler::required_decoders_frac;
-use tokenscale::sim::{simulate, ClusterConfig, SimConfig, StaticCoordinator};
-use tokenscale::trace::Trace;
-use tokenscale::util::rng::Pcg64;
 use tokenscale::util::table::{fnum, pct, Table};
 use tokenscale::velocity::VelocityProfile;
-use tokenscale::workload::{all_buckets, BucketScheme, Request, SloPolicy};
-
-/// Uniform nine-bucket mix at the given request rate.
-fn uniform_bucket_trace(rps: f64, duration: f64, seed: u64) -> Trace {
-    let scheme = BucketScheme::default();
-    let buckets = all_buckets();
-    let mut rng = Pcg64::new(seed);
-    let mut requests = Vec::new();
-    let mut t = 0.0;
-    let mut id = 0u64;
-    while t < duration {
-        t += rng.exponential(rps);
-        if t >= duration {
-            break;
-        }
-        let b = buckets[(id as usize) % buckets.len()];
-        let (input, output) = scheme.representative(b);
-        requests.push(Request::new(id, t, input, output));
-        id += 1;
-    }
-    Trace {
-        name: "uniform-9-bucket".into(),
-        duration_s: duration,
-        requests,
-    }
-}
+use tokenscale::workload::BucketScheme;
 
 fn main() {
+    let suite = decoder_validation_suite();
     let dep = deployment("small-a100").unwrap();
-    let rps = 6.0;
-    let trace = uniform_bucket_trace(rps, 300.0, 41);
 
-    // Eq. 3 prediction from the trace's per-bucket combined token rates.
+    // Eq. 3 prediction from the workload's per-bucket combined token
+    // rates — materialized once from the suite's own workload spec.
+    let workload: &WorkloadSpec = &suite.scenarios[0].workload;
+    let trace = workload.materialize().expect("uniform bucket workload");
     let scheme = BucketScheme::default();
     let mut lambda = [0.0f64; 9];
     for r in &trace.requests {
@@ -63,36 +40,20 @@ fn main() {
     );
     let predicted = required_decoders_frac(&lambda, &profile);
 
+    let run = suite.run().expect("decoder-validation suite");
     let mut t = Table::new("§VI-B1 — SLO attainment vs static decoder count (uniform 9-bucket mix)")
         .header(&["decoders", "SLO att.", "TPOT att.", "TTFT att."]);
-    let slo = SloPolicy::default();
     let mut attained = Vec::new();
-    for d in 1..=6usize {
-        let mut coord = StaticCoordinator::new(4, d);
-        let cfg = SimConfig {
-            initial_prefillers: 4,
-            initial_decoders: d,
-            link: dep.link.clone(),
-            ..Default::default()
-        };
-        let ccfg = ClusterConfig {
-            prefill_engine: dep.engine.clone(),
-            decode_engine: dep.engine.clone(),
-            startup_override_s: None,
-            max_gpus: 32,
-            convertible_chunk_size: 0,
-            convertible_reserve_tokens: 0.0,
-        };
-        let res = simulate(cfg, ccfg, &mut coord, &trace);
-        let r = res.metrics.report(&slo, 10.0);
+    for o in &run.outcomes {
+        let d = o.scenario.strip_prefix("d-").unwrap_or("?");
         t.row(vec![
             d.to_string(),
-            pct(r.overall_attainment),
-            pct(r.tpot_attainment),
-            pct(r.ttft_attainment),
+            pct(o.slo_attainment),
+            pct(o.tpot_attainment),
+            pct(o.ttft_attainment),
         ]);
-        attained.push(r.overall_attainment);
-        eprintln!("[decoder-validation] d={d} att={:.3}", r.overall_attainment);
+        attained.push(o.slo_attainment);
+        eprintln!("[decoder-validation] d={d} att={:.3}", o.slo_attainment);
     }
     print!("{}", t.render());
     t.save_csv("decoder_validation").unwrap();
@@ -109,5 +70,6 @@ fn main() {
         fnum(predicted, 1),
         saturation
     );
+    run.write_bench(std::path::Path::new("BENCH_decoder-validation.json")).unwrap();
     println!("CSV: results/decoder_validation.csv");
 }

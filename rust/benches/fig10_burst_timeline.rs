@@ -1,22 +1,19 @@
 //! Fig. 10 — TTFT and decode throughput vs time under a 10× burst:
 //! the system starts with 1 prefiller + 1 (convertible) decoder serving
-//! 1 req/s; at t=10 s the rate jumps to 10 req/s.
+//! 1 req/s; at t=10 s the rate jumps to 10 req/s. The setup is the
+//! `fig10` built-in suite; the timelines below render from the raw
+//! per-cell simulation results.
 //!
 //! Paper's shape: TokenScale's TTFT blips to ~50 ms and recovers by
 //! t≈14 s (bursty prefills absorbed by the Convertible Decoder); the
 //! baselines spike to 1.2–2.3 s and recover much later; TokenScale's
 //! decode throughput dips < 10 %.
 
-use tokenscale::report::runner::RunOverrides;
-use tokenscale::report::{deployment, run_experiment, PolicyKind};
-use tokenscale::trace::step_trace;
+use tokenscale::report::suite::fig10_suite;
 use tokenscale::util::table::{fnum, Table};
 
 fn main() {
-    let dep = deployment("small-a100").unwrap();
-    // 1 rps stable -> 10 rps burst at t=10s for 8 s, Llama-8B, 1000-token prompts (10k tok/s > V_P).
-    let trace = step_trace(1.0, 10.0, 10.0, 8.0, 30.0, 1000, 64, 99);
-
+    let run = fig10_suite().run().expect("fig10 suite");
     let horizon = 30.0;
     let mut ttft_rows: Vec<Vec<String>> = (0..horizon as usize)
         .map(|s| vec![s.to_string()])
@@ -24,15 +21,8 @@ fn main() {
     let mut thr_rows = ttft_rows.clone();
     let mut header = vec!["t_s".to_string()];
 
-    for policy in PolicyKind::all_baselines() {
-        let ov = RunOverrides {
-            warmup_s: 0.0,
-            initial_prefillers: Some(1),
-            initial_decoders: Some(1),
-            ..Default::default()
-        };
-        let res = run_experiment(&dep, policy, &trace, &ov);
-        header.push(policy.name().to_string());
+    for (o, res) in run.outcomes.iter().zip(&run.results) {
+        header.push(o.policy.clone());
 
         // Worst TTFT per arrival-second bucket.
         let mut per_sec = vec![0.0f64; horizon as usize];
@@ -57,7 +47,7 @@ fn main() {
             .unwrap_or(horizon as usize);
         eprintln!(
             "[fig10] {:11} peak TTFT {:.0} ms, recovered below SLO at t={}s",
-            policy.name(),
+            o.policy,
             peak * 1e3,
             recovered
         );
@@ -79,5 +69,6 @@ fn main() {
     }
     print!("{}", thr_table.render());
     thr_table.save_csv("fig10b_throughput_timeline").unwrap();
+    run.write_bench(std::path::Path::new("BENCH_fig10.json")).unwrap();
     println!("CSV: results/fig10a_ttft_timeline.csv, results/fig10b_throughput_timeline.csv");
 }

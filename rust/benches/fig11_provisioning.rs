@@ -2,60 +2,52 @@
 //! Pearson correlation between them, for prefillers and decoders under
 //! each policy.
 //!
-//! Ground truth (paper §VI-B3): run with an overprovisioned static fleet
-//! and derive required instances from measured utilization × allocated
+//! Ground truth (paper §VI-B3): the `fig11` suite's `ground-truth`
+//! scenario runs an overprovisioned static fleet on the same trace;
+//! required instances derive from measured utilization × allocated
 //! capacity (prefill throughput for prefillers, memory occupancy for
 //! decoders).
 //!
 //! Paper's numbers: TokenScale r=0.63 (prefill) / 0.44 (decode), highest
 //! of all systems; DistServe second; AIBrix/BlitzScale fluctuate.
 
-use std::sync::Arc;
-use tokenscale::report::runner::{run_experiments, ExperimentSpec};
-use tokenscale::report::{deployment, PolicyKind};
-use tokenscale::sim::{simulate, ClusterConfig, SimConfig, StaticCoordinator};
-use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::report::suite::fig11_suite;
+use tokenscale::report::WorkloadSpec;
 use tokenscale::util::stats::pearson;
 use tokenscale::util::table::{fnum, Table};
 
 fn main() {
-    let dep = deployment("small-a100").unwrap();
-    let trace = Arc::new(generate_family(TraceFamily::AzureConv, 22.0, 300.0, 17));
-    let horizon = trace.duration_s;
+    let suite = fig11_suite();
+    // Read the ground-truth fleet size and horizon from the suite's own
+    // scenario definition so retuning it can't desynchronize this figure.
+    let gt_scenario = suite
+        .scenarios
+        .iter()
+        .find(|s| s.name == "ground-truth")
+        .expect("fig11 suite has a ground-truth scenario");
+    let fleet = gt_scenario.overrides.prefillers.expect("static fleet size") as f64;
+    let horizon = match &gt_scenario.workload {
+        WorkloadSpec::Synthetic { duration_s, .. } => *duration_s,
+        other => panic!("unexpected fig11 workload {other:?}"),
+    };
     let step = 1.0;
 
+    let run = suite.run().expect("fig11 suite");
     // Ground truth: big static fleet, required = utilization x allocated.
-    let fleet_p = 8usize;
-    let fleet_d = 8usize;
-    let mut static_coord = StaticCoordinator::new(fleet_p, fleet_d);
-    let cfg = SimConfig {
-        initial_prefillers: fleet_p,
-        initial_decoders: fleet_d,
-        link: dep.link.clone(),
-        ..Default::default()
-    };
-    let ccfg = ClusterConfig {
-        prefill_engine: dep.engine.clone(),
-        decode_engine: dep.engine.clone(),
-        startup_override_s: None,
-        max_gpus: 64,
-        convertible_chunk_size: 0,
-        convertible_reserve_tokens: 0.0,
-    };
-    let gt = simulate(cfg, ccfg, &mut static_coord, &trace);
+    let gt = &run.result("ground-truth", "static").expect("ground truth").sim;
     let req_p: Vec<f64> = gt
         .series
         .prefill_compute
         .resample(horizon, step, 0.0)
         .iter()
-        .map(|u| (u * fleet_p as f64).max(1.0))
+        .map(|u| (u * fleet).max(1.0))
         .collect();
     let req_d: Vec<f64> = gt
         .series
         .decode_memory
         .resample(horizon, step, 0.0)
         .iter()
-        .map(|u| (u * fleet_d as f64).max(1.0))
+        .map(|u| (u * fleet).max(1.0))
         .collect();
 
     let mut t = Table::new("Fig. 11 — Pearson correlation: provisioned vs required instances")
@@ -64,21 +56,14 @@ fn main() {
         "t_s", "required_p", "required_d", "policy", "prov_p", "prov_d",
     ]);
 
-    // Fan the four policy runs across cores.
-    let specs: Vec<ExperimentSpec> = PolicyKind::all_baselines()
-        .iter()
-        .map(|p| ExperimentSpec::new(&dep, *p, &trace))
-        .collect();
-    let results = run_experiments(&specs);
-
-    for res in &results {
-        let policy = res.policy;
+    for o in run.outcomes.iter().filter(|o| o.scenario == "provisioning") {
+        let res = run.result("provisioning", &o.policy).unwrap();
         let prov_p = res.sim.prefiller_series.resample(horizon, step, 1.0);
         let prov_d = res.sim.decoder_series.resample(horizon, step, 1.0);
         let r_p = pearson(&prov_p, &req_p);
         let r_d = pearson(&prov_d, &req_d);
         t.row(vec![
-            policy.name().into(),
+            o.policy.clone(),
             fnum(r_p, 2),
             fnum(r_d, 2),
             fnum(prov_p.iter().sum::<f64>() / prov_p.len() as f64, 2),
@@ -89,15 +74,16 @@ fn main() {
                 (i as f64 * step).to_string(),
                 fnum(req_p[i], 2),
                 fnum(req_d[i], 2),
-                policy.name().into(),
+                o.policy.clone(),
                 fnum(*p, 0),
                 fnum(*d, 0),
             ]);
         }
-        eprintln!("[fig11] {:11} r_p={r_p:.2} r_d={r_d:.2}", policy.name());
+        eprintln!("[fig11] {:11} r_p={r_p:.2} r_d={r_d:.2}", o.policy);
     }
     print!("{}", t.render());
     t.save_csv("fig11_pearson").unwrap();
     csv.save_csv("fig11_timeline").unwrap();
+    run.write_bench(std::path::Path::new("BENCH_fig11.json")).unwrap();
     println!("CSV: results/fig11_pearson.csv, results/fig11_timeline.csv");
 }

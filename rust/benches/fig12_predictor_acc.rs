@@ -1,41 +1,34 @@
 //! Fig. 12 — TokenScale's SLO attainment and GPU cost vs output-predictor
-//! accuracy, swept 100 % → 50 % on the Mixed trace.
+//! accuracy, swept 100 % → 50 % on the Mixed trace (the `fig12` built-in
+//! suite: one scenario per accuracy setting).
 //!
 //! Paper's shape: graceful degradation — cost rises ~1.4 GPUs and
 //! attainment drops only ~2 % from 100 % to 50 % accuracy.
 
-use tokenscale::report::runner::RunOverrides;
-use tokenscale::report::{deployment, run_experiment, PolicyKind};
-use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::report::suite::fig12_suite;
 use tokenscale::util::table::{fnum, pct, Table};
 
 fn main() {
-    let dep = deployment("small-a100").unwrap();
-    let trace = generate_family(TraceFamily::Mixed, 22.0, 300.0, 23);
+    let run = fig12_suite().run().expect("fig12 suite");
     let mut t = Table::new("Fig. 12 — performance & cost vs output predictor accuracy")
         .header(&["accuracy", "SLO att.", "TTFT att.", "TPOT att.", "avg GPUs"]);
     let mut first: Option<(f64, f64)> = None;
     let mut last: Option<(f64, f64)> = None;
 
-    for acc in [1.0, 0.9, 0.8, 0.7, 0.6, 0.5] {
-        let ov = RunOverrides {
-            predictor_accuracy: Some(acc),
-            ..Default::default()
-        };
-        let res = run_experiment(&dep, PolicyKind::named("tokenscale"), &trace, &ov);
-        let r = &res.report;
+    for o in &run.outcomes {
+        let acc = o.scenario.strip_prefix("acc-").unwrap_or("?");
         t.row(vec![
-            pct(acc),
-            pct(r.overall_attainment),
-            pct(r.ttft_attainment),
-            pct(r.tpot_attainment),
-            fnum(r.avg_gpus, 2),
+            format!("{acc}%"),
+            pct(o.slo_attainment),
+            pct(o.ttft_attainment),
+            pct(o.tpot_attainment),
+            fnum(o.avg_gpus, 2),
         ]);
         if first.is_none() {
-            first = Some((r.overall_attainment, r.avg_gpus));
+            first = Some((o.slo_attainment, o.avg_gpus));
         }
-        last = Some((r.overall_attainment, r.avg_gpus));
-        eprintln!("[fig12] acc={acc:.1} att={:.3} gpus={:.2}", r.overall_attainment, r.avg_gpus);
+        last = Some((o.slo_attainment, o.avg_gpus));
+        eprintln!("[fig12] acc={acc} att={:.3} gpus={:.2}", o.slo_attainment, o.avg_gpus);
     }
     print!("{}", t.render());
     t.save_csv("fig12_predictor_acc").unwrap();
@@ -47,5 +40,6 @@ fn main() {
         (a1 - a0) * 100.0,
         g1 - g0
     );
-    println!("CSV: results/fig12_predictor_acc.csv");
+    run.write_bench(std::path::Path::new("BENCH_fig12.json")).unwrap();
+    println!("CSV: results/fig12_predictor_acc.csv | normalized: BENCH_fig12.json");
 }

@@ -1,40 +1,30 @@
 //! Fig. 13 — SLO attainment vs the number of Convertible Decoders (0–4)
-//! on the Mixed trace.
+//! on the Mixed trace (the `fig13` built-in suite: one scenario per pool
+//! size).
 //!
 //! Paper's shape: a large jump from 0 → 1 convertible decoder, then a
 //! plateau (burst sizes are bounded; one CD absorbs them).
 
-use tokenscale::report::runner::RunOverrides;
-use tokenscale::report::{deployment, run_experiment, PolicyKind};
-use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::report::suite::fig13_suite;
 use tokenscale::util::table::{fnum, pct, Table};
 
 fn main() {
-    let dep = deployment("small-a100").unwrap();
-    let trace = generate_family(TraceFamily::Mixed, 22.0, 300.0, 29);
+    let run = fig13_suite().run().expect("fig13 suite");
     let mut t = Table::new("Fig. 13 — SLO attainment vs #Convertible Decoders")
         .header(&["convertibles", "SLO att.", "TTFT att.", "TPOT att.", "avg GPUs"]);
     let mut series = Vec::new();
 
-    for n in 0..=4usize {
-        let ov = RunOverrides {
-            convertibles: Some(n),
-            ..Default::default()
-        };
-        let res = run_experiment(&dep, PolicyKind::named("tokenscale"), &trace, &ov);
-        let r = &res.report;
+    for o in &run.outcomes {
+        let n = o.scenario.strip_prefix("cd-").unwrap_or("?");
         t.row(vec![
             n.to_string(),
-            pct(r.overall_attainment),
-            pct(r.ttft_attainment),
-            pct(r.tpot_attainment),
-            fnum(r.avg_gpus, 2),
+            pct(o.slo_attainment),
+            pct(o.ttft_attainment),
+            pct(o.tpot_attainment),
+            fnum(o.avg_gpus, 2),
         ]);
-        series.push((r.overall_attainment, r.ttft_attainment));
-        eprintln!(
-            "[fig13] cd={n} att={:.3} ttft={:.3}",
-            r.overall_attainment, r.ttft_attainment
-        );
+        series.push((o.slo_attainment, o.ttft_attainment));
+        eprintln!("[fig13] cd={n} att={:.3} ttft={:.3}", o.slo_attainment, o.ttft_attainment);
     }
     print!("{}", t.render());
     t.save_csv("fig13_convertible_count").unwrap();
@@ -46,5 +36,6 @@ fn main() {
         gain_0_to_1 * 100.0,
         gain_1_to_4 * 100.0
     );
-    println!("CSV: results/fig13_convertible_count.csv");
+    run.write_bench(std::path::Path::new("BENCH_fig13.json")).unwrap();
+    println!("CSV: results/fig13_convertible_count.csv | normalized: BENCH_fig13.json");
 }

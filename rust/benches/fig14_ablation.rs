@@ -1,42 +1,38 @@
 //! Fig. 14 — ablation on the Mixed trace: B (DistServe) → B+P (TokenScale
 //! prefiller autoscaler) → B+P+D (+ decoder autoscaler) → full TokenScale
-//! (+ Convertible Decoders).
+//! (+ Convertible Decoders). One `fig14` suite scenario, four policies.
 //!
 //! Paper's shape: 78 % → (TTFT 87→91) → (TPOT 80→99, overall 90 %) →
 //! TTFT 94 % with the full system — monotone gains per component.
 
-use tokenscale::report::runner::RunOverrides;
-use tokenscale::report::{deployment, run_experiment, PolicyKind};
-use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::report::suite::fig14_suite;
 use tokenscale::util::table::{fnum, pct, Table};
 
 fn main() {
-    let dep = deployment("small-a100").unwrap();
-    let trace = generate_family(TraceFamily::Mixed, 22.0, 300.0, 31);
-    let stages = [
-        ("B (DistServe)", PolicyKind::named("distserve")),
-        ("B+P", PolicyKind::named("b+p")),
-        ("B+P+D", PolicyKind::named("b+p+d")),
-        ("TokenScale (full)", PolicyKind::named("tokenscale")),
+    let run = fig14_suite().run().expect("fig14 suite");
+    let labels = [
+        ("distserve", "B (DistServe)"),
+        ("b+p", "B+P"),
+        ("b+p+d", "B+P+D"),
+        ("tokenscale", "TokenScale (full)"),
     ];
     let mut t = Table::new("Fig. 14 — component ablation on the mixed trace")
         .header(&["configuration", "overall att.", "TTFT att.", "TPOT att.", "avg GPUs"]);
     let mut overall = Vec::new();
 
-    for (label, policy) in stages {
-        let res = run_experiment(&dep, policy, &trace, &RunOverrides::default());
-        let r = &res.report;
+    for (policy, label) in labels {
+        let o = run.outcome("ablation-mixed", policy).expect(policy);
         t.row(vec![
             label.into(),
-            pct(r.overall_attainment),
-            pct(r.ttft_attainment),
-            pct(r.tpot_attainment),
-            fnum(r.avg_gpus, 2),
+            pct(o.slo_attainment),
+            pct(o.ttft_attainment),
+            pct(o.tpot_attainment),
+            fnum(o.avg_gpus, 2),
         ]);
-        overall.push(r.overall_attainment);
+        overall.push(o.slo_attainment);
         eprintln!(
             "[fig14] {label:18} overall={:.3} ttft={:.3} tpot={:.3}",
-            r.overall_attainment, r.ttft_attainment, r.tpot_attainment
+            o.slo_attainment, o.ttft_attainment, o.tpot_attainment
         );
     }
     print!("{}", t.render());
@@ -49,5 +45,6 @@ fn main() {
             .collect::<Vec<_>>()
             .join(" -> ")
     );
-    println!("CSV: results/fig14_ablation.csv");
+    run.write_bench(std::path::Path::new("BENCH_fig14.json")).unwrap();
+    println!("CSV: results/fig14_ablation.csv | normalized: BENCH_fig14.json");
 }

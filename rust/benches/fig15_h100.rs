@@ -1,45 +1,35 @@
 //! Fig. 15 — hardware generality: TokenScale vs DistServe (the strongest
 //! baseline) on the H100 cluster with Llama-3.1-8B (TP=1) over the three
-//! traces.
+//! traces — the `fig15` built-in suite.
 //!
 //! Paper's shape: TokenScale lifts attainment from 43–77 % to 85–98 %
 //! while using 38–47 % fewer GPUs (bigger spare headroom per H100 lets
 //! Convertible Decoders absorb more).
 
-use tokenscale::report::runner::RunOverrides;
-use tokenscale::report::{deployment, run_experiment, PolicyKind};
-use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::report::suite::fig15_suite;
 use tokenscale::util::table::{fnum, pct, Table};
 
 fn main() {
-    let dep = deployment("h100").unwrap();
-    let traces = [TraceFamily::AzureConv, TraceFamily::AzureCode, TraceFamily::Mixed];
+    let run = fig15_suite().run().expect("fig15 suite");
     let mut t = Table::new("Fig. 15 — TokenScale vs DistServe on the H100 cluster (Llama-3.1-8B TP=1)")
         .header(&["trace", "policy", "SLO att.", "TTFT att.", "TPOT att.", "avg GPUs"]);
 
-    for family in traces {
-        let trace = generate_family(family, 60.0, 300.0, 37);
-        for policy in [PolicyKind::named("distserve"), PolicyKind::named("tokenscale")] {
-            let res = run_experiment(&dep, policy, &trace, &RunOverrides::default());
-            let r = &res.report;
-            t.row(vec![
-                family.name().into(),
-                policy.name().into(),
-                pct(r.overall_attainment),
-                pct(r.ttft_attainment),
-                pct(r.tpot_attainment),
-                fnum(r.avg_gpus, 2),
-            ]);
-            eprintln!(
-                "[fig15] {:10} {:10} att={:.3} gpus={:.2}",
-                family.name(),
-                policy.name(),
-                r.overall_attainment,
-                r.avg_gpus
-            );
-        }
+    for o in &run.outcomes {
+        t.row(vec![
+            o.scenario.clone(),
+            o.policy.clone(),
+            pct(o.slo_attainment),
+            pct(o.ttft_attainment),
+            pct(o.tpot_attainment),
+            fnum(o.avg_gpus, 2),
+        ]);
+        eprintln!(
+            "[fig15] {:10} {:10} att={:.3} gpus={:.2}",
+            o.scenario, o.policy, o.slo_attainment, o.avg_gpus
+        );
     }
     print!("{}", t.render());
     t.save_csv("fig15_h100").unwrap();
-    println!("CSV: results/fig15_h100.csv");
+    run.write_bench(std::path::Path::new("BENCH_fig15.json")).unwrap();
+    println!("CSV: results/fig15_h100.csv | normalized: BENCH_fig15.json");
 }

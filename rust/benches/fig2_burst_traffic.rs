@@ -1,14 +1,22 @@
 //! Fig. 2 — traffic (requests & tokens) vs the 1-minute running average on
 //! a production-code-style trace; bursts are the spikes above the
 //! trendline. Prints summary statistics and emits the full series to
-//! results/fig2_{requests,tokens}.csv.
+//! results/fig2_{requests,tokens}.csv. The trace is declared as a
+//! scenario [`WorkloadSpec`] and materialized for the burst analytics.
 
+use tokenscale::report::WorkloadSpec;
 use tokenscale::trace::burst::{bin_traffic, burst_time_fraction, mean_burst_len_s, running_average};
-use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::trace::TraceFamily;
 use tokenscale::util::table::{fnum, pct, Table};
 
 fn main() {
-    let trace = generate_family(TraceFamily::AzureCode, 22.0, 900.0, 2025);
+    let workload = WorkloadSpec::Synthetic {
+        family: TraceFamily::AzureCode,
+        rps: 22.0,
+        duration_s: 900.0,
+        seed: 2025,
+    };
+    let trace = workload.materialize().expect("synthetic workload");
     let series = bin_traffic(&trace, 1.0);
     let trend_req = running_average(&series.requests, 1.0, 60.0);
     let trend_tok = running_average(&series.tokens, 1.0, 60.0);

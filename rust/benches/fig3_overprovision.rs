@@ -2,10 +2,11 @@
 //! system, X ∈ [1, 4], for the four production trace families:
 //! (a) requests, (b) tokens. Paper's headline: BurstGPT-2 keeps ~25 % of
 //! requests above 3× provisioning — overprovisioning alone is not a
-//! panacea.
+//! panacea. Family traces are declared as scenario [`WorkloadSpec`]s.
 
+use tokenscale::report::WorkloadSpec;
 use tokenscale::trace::burst::{bin_traffic, burst_fraction};
-use tokenscale::trace::{base_families, generate_family};
+use tokenscale::trace::base_families;
 use tokenscale::util::table::{pct, Table};
 
 fn main() {
@@ -16,7 +17,13 @@ fn main() {
         .header(&["trace", "1.0x", "1.5x", "2.0x", "2.5x", "3.0x", "3.5x", "4.0x"]);
 
     for family in base_families() {
-        let trace = generate_family(family, 22.0, 900.0, 7 + family.name().len() as u64);
+        let workload = WorkloadSpec::Synthetic {
+            family,
+            rps: 22.0,
+            duration_s: 900.0,
+            seed: 7 + family.name().len() as u64,
+        };
+        let trace = workload.materialize().expect("synthetic workload");
         let series = bin_traffic(&trace, 1.0);
         let mut req_row = vec![family.name().to_string()];
         let mut tok_row = vec![family.name().to_string()];

@@ -1,47 +1,25 @@
 //! Fig. 4 — compute/memory/network utilization of prefiller and decoder
 //! instances while a 2-prefiller + 1-decoder Llama-3.1-8B deployment
-//! serves an RPS 8→16→8 step burst (burst at t=4 s for 4 s).
+//! serves an RPS 8→16→8 step burst (burst at t=4 s for 4 s). The setup is
+//! the `fig4` built-in suite's single static-fleet scenario.
 //!
 //! Paper's shape: the prefiller's compute spikes immediately with the
 //! burst (R1); the decoder's network, then compute, then memory rise with
 //! a delay, and memory keeps growing after the burst ends (R2).
 
-use tokenscale::perfmodel::{catalog, EngineModel};
-use tokenscale::sim::{simulate, ClusterConfig, SimConfig, StaticCoordinator};
-use tokenscale::trace::step_trace;
+use tokenscale::report::suite::fig4_suite;
 use tokenscale::util::table::{fnum, Table};
-use std::sync::Arc;
 
 fn main() {
-    let engine = Arc::new(EngineModel::new(
-        catalog::model("llama-3.1-8b").unwrap(),
-        catalog::gpu("a100-40g").unwrap(),
-        1,
-    ));
-    let trace = step_trace(8.0, 16.0, 4.0, 4.0, 16.0, 1024, 128, 11);
-    let mut coord = StaticCoordinator::new(2, 1);
-    let cfg = SimConfig {
-        initial_prefillers: 2,
-        initial_decoders: 1,
-        sample_interval_s: 0.25,
-        ..Default::default()
-    };
-    let ccfg = ClusterConfig {
-        prefill_engine: engine.clone(),
-        decode_engine: engine,
-        startup_override_s: None,
-        max_gpus: 3,
-        convertible_chunk_size: 0,
-        convertible_reserve_tokens: 0.0,
-    };
-    let res = simulate(cfg, ccfg, &mut coord, &trace);
+    let run = fig4_suite().run().expect("fig4 suite");
+    let res = run.result("step-util", "static").expect("static cell");
 
     let horizon = 16.0;
     let step = 0.5;
-    let p_comp = res.series.prefill_compute.resample(horizon, step, 0.0);
-    let d_comp = res.series.decode_compute.resample(horizon, step, 0.0);
-    let d_mem = res.series.decode_memory.resample(horizon, step, 0.0);
-    let net = res.series.network.resample(horizon, step, 0.0);
+    let p_comp = res.sim.series.prefill_compute.resample(horizon, step, 0.0);
+    let d_comp = res.sim.series.decode_compute.resample(horizon, step, 0.0);
+    let d_mem = res.sim.series.decode_memory.resample(horizon, step, 0.0);
+    let net = res.sim.series.network.resample(horizon, step, 0.0);
 
     let mut t = Table::new("Fig. 4 — stage utilization during an RPS 8→16→8 burst (burst at t=4..8s)")
         .header(&["t_s", "prefill comp", "net", "decode comp", "decode mem"]);

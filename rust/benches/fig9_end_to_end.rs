@@ -6,13 +6,11 @@
 //! Paper's shape: TokenScale top-left (80–96 % attainment, 4–14 % fewer
 //! GPUs); AIBrix/BlitzScale overprovision; DistServe cheap but violating.
 //!
-//! The 24-cell (setup × trace × policy) grid fans out across all cores via
-//! `run_experiments`; results are deterministic and ordered.
+//! The 24-cell grid is the `fig9` built-in suite (report/suite.rs); this
+//! wrapper only picks the horizon and renders the figure table from the
+//! normalized outcomes.
 
-use std::sync::Arc;
-use tokenscale::report::runner::{run_experiments, ExperimentSpec};
-use tokenscale::report::{deployment, PolicyKind};
-use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::report::suite::fig9_suite;
 use tokenscale::util::table::{fnum, pct, Table};
 
 fn main() {
@@ -20,48 +18,29 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(300.0);
-    let traces = [TraceFamily::AzureConv, TraceFamily::AzureCode, TraceFamily::Mixed];
+    let run = fig9_suite(duration).run().expect("fig9 suite");
+
     let mut t = Table::new("Fig. 9 — SLO attainment vs avg GPUs (top-left is better)")
         .header(&["setup", "trace", "policy", "SLO att.", "TTFT att.", "TPOT att.", "avg GPUs", "n"]);
-
-    // Build the full grid first (traces shared via Arc), then fan out.
-    let mut specs: Vec<ExperimentSpec> = Vec::new();
-    for setup in ["small-a100", "large-a100"] {
-        let dep = deployment(setup).unwrap();
-        for family in traces {
-            let trace = Arc::new(generate_family(family, 22.0, duration, 42));
-            for policy in PolicyKind::all_baselines() {
-                specs.push(
-                    ExperimentSpec::new(&dep, policy, &trace)
-                        .with_label(format!("{setup}/{}", family.name())),
-                );
-            }
-        }
-    }
-    let results = run_experiments(&specs);
-
-    for res in &results {
-        let (setup, family) = res.label.split_once('/').unwrap_or((res.label.as_str(), ""));
-        let r = &res.report;
+    for o in &run.outcomes {
+        let (setup, family) = o.scenario.split_once('/').unwrap_or((o.scenario.as_str(), ""));
         t.row(vec![
             setup.into(),
             family.into(),
-            res.policy.name().into(),
-            pct(r.overall_attainment),
-            pct(r.ttft_attainment),
-            pct(r.tpot_attainment),
-            fnum(r.avg_gpus, 2),
-            r.n.to_string(),
+            o.policy.clone(),
+            pct(o.slo_attainment),
+            pct(o.ttft_attainment),
+            pct(o.tpot_attainment),
+            fnum(o.avg_gpus, 2),
+            o.n.to_string(),
         ]);
         eprintln!(
-            "[fig9] {setup:11} {:10} {:10} att={:.3} gpus={:.2}",
-            family,
-            res.policy.name(),
-            r.overall_attainment,
-            r.avg_gpus
+            "[fig9] {setup:11} {family:10} {:10} att={:.3} gpus={:.2}",
+            o.policy, o.slo_attainment, o.avg_gpus
         );
     }
     print!("{}", t.render());
     t.save_csv("fig9_end_to_end").unwrap();
-    println!("CSV: results/fig9_end_to_end.csv");
+    run.write_bench(std::path::Path::new("BENCH_fig9.json")).unwrap();
+    println!("CSV: results/fig9_end_to_end.csv | normalized: BENCH_fig9.json");
 }

@@ -1,158 +1,43 @@
 //! §Long-trace — hour-scale scenario sweeps on the `large-a100` preset
-//! (Qwen-2.5-32B TP=4, 64 GPUs): 2-hour diurnal and burst-injected
-//! workloads across TokenScale/DistServe/BlitzScale/AiBrix, built
-//! entirely on the streaming arrival pipeline (no trace is ever
-//! materialized — each grid worker streams its own copy from a source
-//! factory).
+//! (Qwen-2.5-32B TP=4, 64 GPUs) across TokenScale/DistServe/BlitzScale/
+//! AiBrix, built entirely on the streaming arrival pipeline (no synthetic
+//! trace is ever materialized — each grid worker streams its own copy).
 //!
-//! Emits `BENCH_longtrace.json` (SLO attainment, GPU-hours, wall-clock
-//! events/s per scenario × policy) so the perf trajectory has
-//! scenario-scale data next to `BENCH_hotpath.json`.
+//! The scenario set is the `longtrace` built-in suite (report/suite.rs):
+//! the original diurnal and burst-injected sweeps plus the ROADMAP growth
+//! scenarios — weekend trough, flash-crowd step (BurstInject) and a trace
+//! splice (`Window` over the bundled replay file).
+//!
+//! Emits the normalized `BENCH_longtrace.json`; diff against a pinned
+//! baseline with `tokenscale bench diff` (see docs/scenarios.md).
 //!
 //! `--smoke` (or env `LONGTRACE_SMOKE=1`) runs a reduced-scale variant
-//! for CI: same scenarios and policies, minutes-long horizon.
+//! for CI: same scenario shapes, minutes-long horizon.
 
-use std::sync::Arc;
-use std::time::Instant;
-use tokenscale::report::runner::{run_experiments, ExperimentSpec};
-use tokenscale::report::{deployment, PolicyKind};
-use tokenscale::trace::{
-    BurstWindow, MixedSource, SourceExt, SourceFactory, SpecSource, TraceFamily,
-};
-use tokenscale::util::json::Json;
-use tokenscale::util::table::{fnum, pct, Table};
+use tokenscale::report::suite::{longtrace_suite, LONGTRACE_FULL_SCALE, LONGTRACE_SMOKE_SCALE};
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke")
         || std::env::var("LONGTRACE_SMOKE").map(|v| v == "1").unwrap_or(false);
     // Full scale: 2 simulated hours at the paper's 22 RPS. Smoke: the
     // same scenario shapes compressed to 7 minutes at a lighter rate.
-    let duration: f64 = if smoke { 420.0 } else { 7200.0 };
-    let rps: f64 = if smoke { 6.0 } else { 22.0 };
-    let dep = deployment("large-a100").unwrap();
-
-    // Scenario 1 — "diurnal-conv": Azure Conversation traffic under a
-    // slow sinusoidal day/night swing (one full period over the run).
-    // The diurnal combinator thins by 1/(1+a) on average, so the base
-    // generator runs proportionally hotter to land near `rps`.
-    let diurnal_amp = 0.35;
-    let diurnal_factory: SourceFactory = {
-        let period = duration;
-        Arc::new(move || {
-            SpecSource::new(TraceFamily::AzureConv.spec(rps * (1.0 + diurnal_amp), duration), 101)
-                .diurnal(diurnal_amp, period, 202)
-                .boxed()
-        })
-    };
-
-    // Scenario 2 — "burst-mixed": the Mixed workload with six injected
-    // 90-second 3× bursts spread across the horizon (BurstGPT-style
-    // spikes on top of the base burstiness).
-    let bursts: Vec<BurstWindow> = (0..6)
-        .map(|i| BurstWindow::new(duration * (0.08 + 0.15 * i as f64), duration.min(90.0).min(duration * 0.05), 3.0))
-        .collect();
-    let burst_factory: SourceFactory = {
-        let bursts = bursts.clone();
-        Arc::new(move || {
-            MixedSource::new(rps, duration, 303)
-                .inject_bursts(bursts.clone(), 404)
-                .boxed()
-        })
-    };
-
-    let scenarios: Vec<(&str, SourceFactory)> = vec![
-        ("diurnal-conv", diurnal_factory),
-        ("burst-mixed", burst_factory),
-    ];
-
-    let mut specs: Vec<ExperimentSpec> = Vec::new();
-    for (name, factory) in &scenarios {
-        for policy in PolicyKind::all_baselines() {
-            specs.push(
-                ExperimentSpec::streaming(&dep, policy, factory.clone())
-                    .with_label(format!("{name}/{}", policy.name())),
-            );
-        }
-    }
-
+    let (duration, rps) = if smoke { LONGTRACE_SMOKE_SCALE } else { LONGTRACE_FULL_SCALE };
+    let suite = longtrace_suite(duration, rps);
+    let cells: usize = suite.scenarios.iter().map(|s| s.policies.len()).sum();
     eprintln!(
-        "[longtrace] {} cells on {} | {:.0}s horizon @ ~{rps} rps{}",
-        specs.len(),
-        dep.name,
-        duration,
+        "[longtrace] {cells} cells | {duration:.0}s horizon @ ~{rps} rps{}",
         if smoke { " (smoke)" } else { "" }
     );
-    let t0 = Instant::now();
-    let results = run_experiments(&specs);
-    let wall_s = t0.elapsed().as_secs_f64();
 
-    let mut table = Table::new(&format!(
-        "fig_longtrace — {:.1}h scenarios on {} ({} rps target)",
-        duration / 3600.0,
-        dep.name,
-        rps
-    ))
-    .header(&[
-        "scenario", "policy", "SLO att.", "GPU-hours", "avg GPUs", "n", "events", "arr rps",
-    ]);
-
-    let mut scen_json = Json::obj();
-    let mut events_total: u64 = 0;
-    for (name, _) in &scenarios {
-        let mut pol_json = Json::obj();
-        for res in results.iter().filter(|r| r.label.starts_with(&format!("{name}/"))) {
-            let r = &res.report;
-            let m = &res.sim.metrics;
-            let gpu_hours = m.gpu_seconds / 3600.0;
-            events_total += res.sim.events_processed;
-            table.row(vec![
-                (*name).into(),
-                res.policy.name().into(),
-                pct(r.overall_attainment),
-                fnum(gpu_hours, 2),
-                fnum(r.avg_gpus, 2),
-                r.n.to_string(),
-                res.sim.events_processed.to_string(),
-                fnum(m.offered_rps(), 2),
-            ]);
-            pol_json = pol_json.set(
-                res.policy.name(),
-                Json::obj()
-                    .set("slo_attainment", r.overall_attainment)
-                    .set("ttft_attainment", r.ttft_attainment)
-                    .set("tpot_attainment", r.tpot_attainment)
-                    .set("gpu_hours", gpu_hours)
-                    .set("avg_gpus", r.avg_gpus)
-                    .set("n", r.n)
-                    .set("events", res.sim.events_processed)
-                    .set("scale_ups", res.sim.scale_ups)
-                    .set("scale_downs", res.sim.scale_downs)
-                    // Online arrival stats (no trace rescan exists to
-                    // compute these from — the workload was never
-                    // materialized).
-                    .set("arrival_rps", m.offered_rps())
-                    .set("avg_input_tokens", m.avg_arrival_input_tokens())
-                    .set("avg_output_tokens", m.avg_arrival_output_tokens()),
-            );
-        }
-        scen_json = scen_json.set(*name, pol_json);
-    }
-    print!("{}", table.render());
+    let run = suite.run().expect("longtrace suite");
+    print!("{}", run.render_table());
+    let events_total: u64 = run.outcomes.iter().map(|o| o.events).sum();
     println!(
-        "wall {wall_s:.1}s | {events_total} events | {:.2}M events/s of wall time",
-        events_total as f64 / wall_s / 1e6
+        "wall {:.1}s | {events_total} events | {:.2}M events/s of wall time",
+        run.wall_s,
+        events_total as f64 / run.wall_s.max(1e-9) / 1e6
     );
 
-    let out = Json::obj()
-        .set("smoke", smoke)
-        .set("deployment", dep.name.as_str())
-        .set("duration_s", duration)
-        .set("rps_target", rps)
-        .set("wall_s", wall_s)
-        .set("events_total", events_total)
-        .set("events_per_wall_s", events_total as f64 / wall_s.max(1e-9))
-        .set("scenarios", scen_json);
-    let path = "BENCH_longtrace.json";
-    std::fs::write(path, out.to_string()).expect("write BENCH_longtrace.json");
-    println!("wrote {path}");
+    run.write_bench(std::path::Path::new("BENCH_longtrace.json")).unwrap();
+    println!("wrote BENCH_longtrace.json");
 }

@@ -3,16 +3,19 @@
 //! router decision latency, scaler evaluation latency, trace generation
 //! rate, and (if artifacts exist) real-engine prefill/decode step latency.
 //!
-//! Emits `BENCH_hotpath.json` (events/s, simulated-requests/s per wall
-//! second, speedup vs the single-step reference mode) so the perf
+//! The end-to-end cell is declared as a [`Scenario`] and compiled to an
+//! [`ExperimentSpec`] through the suite API — the timed inner loop is the
+//! same `run_experiment` every suite cell goes through.
+//!
+//! Emits `BENCH_hotpath.json` (events/s, sim-requests/s per wall
+//! second, speedup vs the in-binary single-step baseline) so the perf
 //! trajectory is tracked across PRs.
 
 use std::sync::Arc;
 use tokenscale::coordinator::{router, RouterConfig, TokenScale, TokenScaleConfig};
 use tokenscale::perfmodel::{catalog, EngineModel};
 use tokenscale::report::bench::{human_time, BenchTimer};
-use tokenscale::report::runner::RunOverrides;
-use tokenscale::report::{deployment, run_experiment, PolicyKind};
+use tokenscale::report::{run_experiment, Scenario, WorkloadSpec};
 use tokenscale::sim::{Action, Cluster, ClusterConfig, ClusterView, ControlPlane, Role, Signal};
 use tokenscale::trace::{generate_family, TraceFamily};
 use tokenscale::util::json::Json;
@@ -25,21 +28,30 @@ fn main() {
     // 1. End-to-end simulation throughput (the Fig. 9 inner loop), in the
     //    default coalesced mode and in the single-step reference mode the
     //    pre-refactor engine was equivalent to.
-    let dep = deployment("small-a100").unwrap();
-    let trace = generate_family(TraceFamily::Mixed, 22.0, 120.0, 5);
-    let n_req = trace.requests.len();
+    let scenario = Scenario::new(
+        "hotpath-e2e",
+        "small-a100",
+        WorkloadSpec::Synthetic {
+            family: TraceFamily::Mixed,
+            rps: 22.0,
+            duration_s: 120.0,
+            seed: 5,
+        },
+    )
+    .policy("tokenscale")
+    .materialized();
+    let fast_spec = scenario.experiment_specs().expect("hotpath scenario").remove(0);
+    let mut slow_spec = fast_spec.clone();
+    slow_spec.overrides.force_single_step = true;
 
-    let fast_probe = run_experiment(&dep, PolicyKind::named("tokenscale"), &trace, &RunOverrides::default());
+    let fast_probe = run_experiment(&fast_spec);
+    let n_req = fast_probe.sim.metrics.arrivals;
     let fast_events = fast_probe.sim.events_processed;
-    let slow_ov = RunOverrides {
-        force_single_step: true,
-        ..Default::default()
-    };
-    let slow_probe = run_experiment(&dep, PolicyKind::named("tokenscale"), &trace, &slow_ov);
+    let slow_probe = run_experiment(&slow_spec);
     let slow_events = slow_probe.sim.events_processed;
 
     let fast = timer.run(|| {
-        let r = run_experiment(&dep, PolicyKind::named("tokenscale"), &trace, &RunOverrides::default());
+        let r = run_experiment(&fast_spec);
         std::hint::black_box(r.report.n);
     });
     println!("{}", fast.line("sim_e2e_tokenscale_120s_22rps"));
@@ -51,7 +63,7 @@ fn main() {
     );
 
     let slow = BenchTimer::new(1, 3).run(|| {
-        let r = run_experiment(&dep, PolicyKind::named("tokenscale"), &trace, &slow_ov);
+        let r = run_experiment(&slow_spec);
         std::hint::black_box(r.report.n);
     });
     println!("{}", slow.line("sim_e2e_single_step_reference"));

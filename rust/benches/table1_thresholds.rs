@@ -1,11 +1,13 @@
 //! Table I — scaling thresholds for each system on each trace, derived
 //! exactly as §V describes (ratios of profiled capacities to trace
 //! statistics). Paper's Azure-conv row: BlitzScale 7/45 req, AIBrix
-//! 7 req/70%, DistServe 14/28 req/s, TokenScale 14K tok/s.
+//! 7 req/70%, DistServe 14/28 req/s, TokenScale 14K tok/s. Family traces
+//! are declared as scenario [`WorkloadSpec`]s.
 
 use tokenscale::perfmodel::{catalog, EngineModel};
+use tokenscale::report::WorkloadSpec;
 use tokenscale::scaler::derive_thresholds;
-use tokenscale::trace::{generate_family, TraceFamily};
+use tokenscale::trace::TraceFamily;
 use tokenscale::util::table::Table;
 use tokenscale::velocity::VelocityProfile;
 
@@ -20,7 +22,13 @@ fn main() {
     let mut t = Table::new("Table I — derived scaling thresholds (Llama-3.1-8B TP=1, A100)")
         .header(&["trace", "system", "prefiller", "decoder"]);
     for family in [TraceFamily::AzureConv, TraceFamily::AzureCode, TraceFamily::Mixed] {
-        let trace = generate_family(family, 22.0, 300.0, 5);
+        let workload = WorkloadSpec::Synthetic {
+            family,
+            rps: 22.0,
+            duration_s: 300.0,
+            seed: 5,
+        };
+        let trace = workload.materialize().expect("synthetic workload");
         let profile = VelocityProfile::analytic(&engine, &link, trace.avg_input_tokens() as usize);
         let th = derive_thresholds(&trace, &engine, &profile);
         t.row(vec![family.name().into(), "BlitzScale".into(),

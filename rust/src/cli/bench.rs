@@ -1,0 +1,198 @@
+//! `tokenscale bench list | run | diff` — the scenario-suite lifecycle.
+//!
+//! - `bench list` enumerates built-in suites and file suites under
+//!   `scenarios/`, with their scenario names.
+//! - `bench run <suite>` runs every scenario × policy cell on the shared
+//!   thread pool, prints the normalized summary table and writes
+//!   `BENCH_<suite>.json`; `--diff BASELINE.json` additionally gates on
+//!   per-scenario SLO-attainment / GPU-hour regressions.
+//! - `bench diff CURRENT BASELINE` compares two normalized reports.
+
+use super::args::Args;
+use crate::report::suite::{
+    builtin_suites, diff_bench, fig9_suite, file_suites, find_suite, longtrace_suite,
+    DiffTolerance, LONGTRACE_FULL_SCALE, LONGTRACE_SMOKE_SCALE, SCENARIO_DIR, Suite, SuiteRun,
+};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use std::path::Path;
+
+pub fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    match args.positional.first().map(String::as_str) {
+        None | Some("list") => bench_list(),
+        Some("run") => bench_run(args),
+        Some("diff") => bench_diff(args),
+        Some(other) => anyhow::bail!("unknown bench action `{other}` (expected list|run|diff)"),
+    }
+}
+
+fn scenario_names(suite: &Suite) -> String {
+    suite
+        .scenarios
+        .iter()
+        .map(|s| s.name.as_str())
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+fn bench_list() -> anyhow::Result<()> {
+    let mut t = Table::new("scenario suites").header(&["suite", "source", "scenarios", "description"]);
+    for s in builtin_suites() {
+        t.row(vec![
+            s.name.clone(),
+            "built-in".into(),
+            scenario_names(&s),
+            s.description.clone(),
+        ]);
+    }
+    for (path, loaded) in file_suites(Path::new(SCENARIO_DIR)) {
+        match loaded {
+            Ok(s) => t.row(vec![
+                s.name.clone(),
+                path.display().to_string(),
+                scenario_names(&s),
+                s.description.clone(),
+            ]),
+            Err(e) => t.row(vec![
+                path.display().to_string(),
+                "BROKEN".into(),
+                String::new(),
+                e.to_string(),
+            ]),
+        };
+    }
+    print!("{}", t.render());
+    println!("run with `tokenscale bench run <suite> [--diff BASELINE_<suite>.json]`");
+    Ok(())
+}
+
+/// Resolve the suite named on the command line, honoring the scale flags
+/// of the parameterized built-ins (`longtrace`, `fig9`).
+fn resolve_suite(args: &Args, name: &str) -> anyhow::Result<Suite> {
+    let smoke = args.get_bool("smoke");
+    let duration = args.get_f64("duration")?;
+    let rps = args.get_f64("rps")?;
+    match name {
+        "longtrace" => {
+            let (d0, r0) = if smoke { LONGTRACE_SMOKE_SCALE } else { LONGTRACE_FULL_SCALE };
+            Ok(longtrace_suite(duration.unwrap_or(d0), rps.unwrap_or(r0)))
+        }
+        "fig9" => {
+            if rps.is_some() {
+                eprintln!("note: fig9 runs at the paper's 22 RPS; --rps is ignored");
+            }
+            let d0 = if smoke { 60.0 } else { 300.0 };
+            Ok(fig9_suite(duration.unwrap_or(d0)))
+        }
+        _ => {
+            if smoke || duration.is_some() || rps.is_some() {
+                eprintln!("note: --smoke/--duration/--rps only rescale the longtrace/fig9 built-ins");
+            }
+            find_suite(name)
+        }
+    }
+}
+
+fn tolerance(args: &Args) -> anyhow::Result<DiffTolerance> {
+    let mut tol = DiffTolerance::default();
+    if let Some(v) = args.get_f64("slo-tolerance")? {
+        anyhow::ensure!(v >= 0.0, "--slo-tolerance must be non-negative");
+        tol.slo_attainment = v;
+    }
+    if let Some(v) = args.get_f64("gpu-tolerance")? {
+        anyhow::ensure!(v >= 0.0, "--gpu-tolerance must be non-negative");
+        tol.gpu_hours_frac = v;
+    }
+    Ok(tol)
+}
+
+fn bench_run(args: &Args) -> anyhow::Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("bench run needs a suite name (see `tokenscale bench list`)"))?;
+    let suite = resolve_suite(args, name)?;
+    let cells: usize = suite.scenarios.iter().map(|s| s.policies.len()).sum();
+    eprintln!(
+        "[bench] suite {} | {} scenarios, {cells} cells",
+        suite.name,
+        suite.scenarios.len()
+    );
+    let run = suite.run()?;
+    print!("{}", run.render_table());
+
+    let out = args
+        .get("out")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("BENCH_{}.json", suite.name));
+    let out_path = Path::new(&out);
+    run.write_bench(out_path)?;
+    println!("wrote {out}");
+
+    if let Some(baseline) = args.get("diff") {
+        gate_against_baseline(&run, Path::new(baseline), &tolerance(args)?, args.get_bool("init-missing"))?;
+    }
+    Ok(())
+}
+
+/// Diff a fresh run against a baseline file; with `init_missing`, an
+/// absent baseline is seeded from the current run instead of failing.
+fn gate_against_baseline(
+    run: &SuiteRun,
+    baseline: &Path,
+    tol: &DiffTolerance,
+    init_missing: bool,
+) -> anyhow::Result<()> {
+    if !baseline.exists() {
+        if init_missing {
+            std::fs::write(baseline, run.to_json().pretty())
+                .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", baseline.display()))?;
+            println!(
+                "baseline {} was missing — initialized from this run (commit it to pin)",
+                baseline.display()
+            );
+            return Ok(());
+        }
+        anyhow::bail!(
+            "baseline {} does not exist (pass --init-missing to seed it from this run)",
+            baseline.display()
+        );
+    }
+    let text = std::fs::read_to_string(baseline)
+        .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", baseline.display()))?;
+    let base = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", baseline.display()))?;
+    let report = diff_bench(&run.to_json(), &base, tol)?;
+    print!("{}", report.render());
+    anyhow::ensure!(
+        report.clean(),
+        "suite {} regressed vs {} ({} regressions, {} missing cells)",
+        run.suite,
+        baseline.display(),
+        report.regressions.len(),
+        report.missing.len()
+    );
+    Ok(())
+}
+
+fn bench_diff(args: &Args) -> anyhow::Result<()> {
+    let (cur_path, base_path) = match (args.positional.get(1), args.positional.get(2)) {
+        (Some(c), Some(b)) => (c, b),
+        _ => anyhow::bail!("bench diff needs CURRENT and BASELINE file paths"),
+    };
+    let load = |p: &str| -> anyhow::Result<Json> {
+        let text =
+            std::fs::read_to_string(p).map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("{p}: {e}"))
+    };
+    let current = load(cur_path)?;
+    let baseline = load(base_path)?;
+    let report = diff_bench(&current, &baseline, &tolerance(args)?)?;
+    print!("{}", report.render());
+    anyhow::ensure!(
+        report.clean(),
+        "{cur_path} regressed vs {base_path} ({} regressions, {} missing cells)",
+        report.regressions.len(),
+        report.missing.len()
+    );
+    Ok(())
+}

@@ -3,7 +3,7 @@
 use super::args::Args;
 use crate::config::ExperimentConfig;
 use crate::report::runner::RunOverrides;
-use crate::report::{deployment, run_experiment, PolicyKind, PolicyRegistry};
+use crate::report::{deployment, run_experiment, ExperimentSpec, PolicyKind, PolicyRegistry};
 use crate::trace::{generate_family, TraceFamily};
 use crate::util::table::{fnum, pct, Table};
 use crate::velocity::VelocityProfile;
@@ -31,6 +31,20 @@ SUBCOMMANDS:
     policy      Policy-registry tooling
                   policy list   Print registered control planes (name,
                                 aliases, description, tunable params)
+    bench       Scenario-suite tooling (see docs/scenarios.md)
+                  bench list    Enumerate built-in suites and file suites
+                                under scenarios/
+                  bench run SUITE [--out PATH] [--diff BASELINE]
+                      [--init-missing] [--slo-tolerance F]
+                      [--gpu-tolerance F] [--smoke] [--duration S]
+                      [--rps R]
+                      Run every scenario x policy cell, print the summary,
+                      write the normalized BENCH_<suite>.json, and (with
+                      --diff) fail on regressions beyond tolerance
+                  bench diff CURRENT BASELINE [--slo-tolerance F]
+                      [--gpu-tolerance F]
+                      Compare two normalized reports; nonzero exit on
+                      regression
     trace       Workload-trace tooling
                   trace [inspect] --trace T --rps R --duration S [--seed N]
                       Generate a synthetic trace and print its stats
@@ -61,6 +75,7 @@ pub fn run_cli(argv: Vec<String>) -> i32 {
         "compare" => cmd_compare(&args),
         "explain" => cmd_explain(&args),
         "policy" => cmd_policy(&args),
+        "bench" => super::bench::cmd_bench(&args),
         "profile" => cmd_profile(&args),
         "thresholds" => cmd_thresholds(&args),
         "trace" => cmd_trace(&args),
@@ -132,7 +147,11 @@ fn run_one_with(
         decision_log,
         ..Default::default()
     };
-    Ok(run_experiment(&dep, policy, &trace, &ov))
+    // The trace is owned here — hand it to the spec without a deep copy.
+    let trace = std::sync::Arc::new(trace);
+    Ok(run_experiment(
+        &ExperimentSpec::new(&dep, policy, &trace).with_overrides(ov),
+    ))
 }
 
 fn run_one(cfg: &ExperimentConfig, policy: PolicyKind) -> anyhow::Result<crate::report::ExperimentResult> {

@@ -2,6 +2,7 @@
 //! subcommand implementations behind the `tokenscale` binary.
 
 pub mod args;
+pub mod bench;
 pub mod commands;
 
 pub use args::Args;

@@ -1,10 +1,14 @@
 //! Reporting and experiment harness: deployment presets, the policy
-//! registry, the shared policy-vs-trace runner every bench target drives,
-//! and a tiny timing harness replacing criterion (offline crate set).
+//! registry, the generic spec runner, the declarative scenario/suite
+//! layer every bench target drives (serializable experiment definitions,
+//! normalized `BENCH_*.json` emission, baseline regression diffing), and
+//! a tiny timing harness replacing criterion (offline crate set).
 
 pub mod bench;
 pub mod registry;
 pub mod runner;
+pub mod scenario;
+pub mod suite;
 
 pub use bench::BenchTimer;
 pub use registry::{
@@ -12,6 +16,11 @@ pub use registry::{
     PolicyRegistry,
 };
 pub use runner::{
-    deployment, run_experiment, run_experiment_source, run_experiments, Deployment,
-    ExperimentResult, ExperimentSpec, PolicyKind, Workload,
+    deployment, run_experiment, run_experiments, Deployment, ExperimentResult, ExperimentSpec,
+    PolicyKind, RunOverrides, Workload,
+};
+pub use scenario::{Scenario, ScenarioError, ScenarioOverrides, TransformStep, WorkloadSpec};
+pub use suite::{
+    builtin_suites, diff_bench, file_suites, find_suite, longtrace_suite, BENCH_SCHEMA_VERSION,
+    DiffReport, DiffTolerance, SCENARIO_DIR, ScenarioOutcome, Suite, SuiteRun,
 };

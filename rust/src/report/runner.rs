@@ -1,7 +1,11 @@
 //! The shared experiment runner: deployment presets matching the paper's
-//! §V setups and a single entry point that drives any policy over any
-//! trace on the simulated cluster. Every bench target and example uses
-//! this, so all experiments share identical mechanics.
+//! §V setups and **one generic entry point** — [`run_experiment`] over an
+//! [`ExperimentSpec`] — that drives any registry policy over any workload
+//! (shared materialized trace or streaming source factory) on the
+//! simulated cluster. Every bench target, example and CLI command uses
+//! this, so all experiments share identical mechanics; the declarative
+//! layer above it ([`super::scenario`], [`super::suite`]) compiles
+//! serializable scenario values down to specs.
 //!
 //! Policies are selected **by registry name** ([`PolicyKind`] is a thin
 //! wrapper over the canonical names): the runner derives the experiment
@@ -12,7 +16,6 @@ use crate::metrics::SloReport;
 use crate::perfmodel::{catalog, EngineModel, LinkSpec};
 use crate::report::registry::{PolicyContext, PolicyParams, PolicyRegistry};
 use crate::scaler::derive_thresholds_from_profile;
-use crate::sim::legacy::{simulate_source_legacy, V1Bridge};
 use crate::sim::{simulate_source, ClusterConfig, SimConfig, SimResult};
 use crate::trace::{ArrivalSource, SourceFactory, Trace, TraceProfile, TraceSliceSource};
 use crate::velocity::VelocityProfile;
@@ -91,6 +94,12 @@ pub struct RunOverrides {
     /// Initial fleet override.
     pub initial_prefillers: Option<usize>,
     pub initial_decoders: Option<usize>,
+    /// GPU budget override (None = deployment preset).
+    pub max_gpus: Option<usize>,
+    /// Time-series sampling interval override (None = engine default).
+    pub sample_interval_s: Option<f64>,
+    /// SLO targets (None = [`SloPolicy::default`]).
+    pub slo: Option<SloPolicy>,
     /// Run the simulator in single-step reference mode (no decode-
     /// iteration coalescing). Perf baseline + equivalence testing only.
     pub force_single_step: bool,
@@ -106,6 +115,9 @@ impl Default for RunOverrides {
             warmup_s: 10.0,
             initial_prefillers: None,
             initial_decoders: None,
+            max_gpus: None,
+            sample_interval_s: None,
+            slo: None,
             force_single_step: false,
             decision_log: 0,
         }
@@ -128,8 +140,7 @@ pub struct ExperimentResult {
     pub policy: PolicyKind,
     pub report: SloReport,
     pub sim: SimResult,
-    /// The spec's free-form label when run via `run_experiments`
-    /// (empty for direct `run_experiment` calls).
+    /// The spec's free-form label, carried from [`ExperimentSpec::label`].
     pub label: String,
 }
 
@@ -141,7 +152,7 @@ fn prepare_run(
     workload: &TraceProfile,
     ov: &RunOverrides,
 ) -> (SimConfig, ClusterConfig, crate::report::registry::BuiltPolicy) {
-    let slo = SloPolicy::default();
+    let slo = ov.slo.unwrap_or_default();
     let avg_in = workload.avg_input_tokens.max(1.0);
     let profile = VelocityProfile::analytic(&dep.engine, &dep.link, avg_in as usize);
     let thresholds = derive_thresholds_from_profile(workload, &dep.engine, &profile);
@@ -158,7 +169,7 @@ fn prepare_run(
     };
     let built = (entry.build)(&ctx, &ov.policy_params());
 
-    let sim_cfg = SimConfig {
+    let mut sim_cfg = SimConfig {
         initial_prefillers: ov.initial_prefillers.unwrap_or(dep.initial_prefillers),
         initial_decoders: ov.initial_decoders.unwrap_or(dep.initial_decoders),
         initial_convertibles: built.setup.convertibles,
@@ -168,36 +179,24 @@ fn prepare_run(
         decision_log: ov.decision_log,
         ..Default::default()
     };
+    if let Some(s) = ov.sample_interval_s {
+        sim_cfg.sample_interval_s = s;
+    }
     let cluster_cfg = ClusterConfig {
         prefill_engine: dep.engine.clone(),
         decode_engine: dep.engine.clone(),
         startup_override_s: None,
-        max_gpus: dep.max_gpus,
+        max_gpus: ov.max_gpus.unwrap_or(dep.max_gpus),
         convertible_chunk_size: built.setup.chunk_size,
         convertible_reserve_tokens: built.setup.reserve_tokens,
     };
     (sim_cfg, cluster_cfg, built)
 }
 
-/// Run one (deployment, policy, trace) experiment over a materialized
-/// trace: measures the workload profile exactly, then streams the trace
-/// through the arrival pipeline.
-pub fn run_experiment(
-    dep: &Deployment,
-    policy: PolicyKind,
-    trace: &Trace,
-    ov: &RunOverrides,
-) -> ExperimentResult {
-    let workload = TraceProfile::of_trace(trace);
-    let mut src = TraceSliceSource::new(trace);
-    run_experiment_source(dep, policy, &mut src, &workload, ov)
-}
-
-/// Run one experiment over a streaming arrival source. `workload` is the
-/// a-priori character estimate used to size velocity profiles and the
-/// baselines' thresholds (for a materialized trace it is measured; for a
-/// synthetic source it is analytic — see [`TraceProfile`]).
-pub fn run_experiment_source(
+/// Drive one (deployment, policy) cell over a streaming arrival source.
+/// `workload` is the a-priori character estimate used to size velocity
+/// profiles and the baselines' thresholds.
+fn run_source(
     dep: &Deployment,
     policy: PolicyKind,
     source: &mut dyn ArrivalSource,
@@ -216,80 +215,57 @@ pub fn run_experiment_source(
     }
 }
 
-/// Equivalence-oracle twin of [`run_experiment`]: same registry-built
-/// policy, driven through the frozen v1 `Coordinator` engine via
-/// [`V1Bridge`]. Used only by `rust/tests/control_plane_equivalence.rs`;
-/// deleted together with `sim::legacy`.
-#[doc(hidden)]
-pub fn run_experiment_legacy(
-    dep: &Deployment,
-    policy: PolicyKind,
-    trace: &Trace,
-    ov: &RunOverrides,
-) -> ExperimentResult {
-    let workload = TraceProfile::of_trace(trace);
-    let mut src = TraceSliceSource::new(trace);
-    run_experiment_source_legacy(dep, policy, &mut src, &workload, ov)
-}
-
-/// Streaming-source twin of [`run_experiment_legacy`].
-#[doc(hidden)]
-pub fn run_experiment_source_legacy(
-    dep: &Deployment,
-    policy: PolicyKind,
-    source: &mut dyn ArrivalSource,
-    workload: &TraceProfile,
-    ov: &RunOverrides,
-) -> ExperimentResult {
-    let (sim_cfg, cluster_cfg, mut built) = prepare_run(dep, policy, workload, ov);
-    let slo = sim_cfg.slo;
-    let mut bridge = V1Bridge::new(built.plane.as_mut(), cluster_cfg.clone());
-    let sim = simulate_source_legacy(sim_cfg, cluster_cfg, &mut bridge, source);
-    let report = sim.metrics.report(&slo, ov.warmup_s);
-    ExperimentResult {
-        policy,
-        report,
-        sim,
-        label: String::new(),
-    }
-}
-
-/// Run one spec, carrying its label onto the result.
-fn run_spec(s: &ExperimentSpec) -> ExperimentResult {
-    let mut r = match &s.workload {
-        Workload::Shared(trace) => run_experiment(&s.deployment, s.policy, trace, &s.overrides),
+/// Run one experiment cell. This is the single entry point the old
+/// `run_experiment` / `run_experiment_source` (+ their `_legacy` twins)
+/// collapsed into: the trace-vs-source split lives in the spec's
+/// [`Workload`] enum, and the workload profile defaults to *measured*
+/// for shared traces and *analytic* for streaming sources (overridable
+/// via [`ExperimentSpec::with_profile`]).
+pub fn run_experiment(spec: &ExperimentSpec) -> ExperimentResult {
+    let mut r = match &spec.workload {
+        Workload::Shared(trace) => {
+            let workload = spec
+                .profile
+                .unwrap_or_else(|| TraceProfile::of_trace(trace));
+            let mut src = TraceSliceSource::new(trace.as_ref());
+            run_source(&spec.deployment, spec.policy, &mut src, &workload, &spec.overrides)
+        }
         Workload::Streaming(factory) => {
-            // Each cell builds its own source, so grid workers stream
+            // Each run builds its own source, so grid workers stream
             // independent copies instead of sharing a materialized vector.
             let mut src = factory();
-            let profile = src.profile();
-            run_experiment_source(&s.deployment, s.policy, &mut src, &profile, &s.overrides)
+            let workload = spec.profile.unwrap_or_else(|| src.profile());
+            run_source(&spec.deployment, spec.policy, &mut src, &workload, &spec.overrides)
         }
     };
-    r.label = s.label.clone();
+    r.label = spec.label.clone();
     r
 }
 
 // ---------------------------------------------------- parallel experiments
 
-/// What a grid cell runs over: a shared materialized trace (`Arc`-cloned
-/// handle, not requests) or a streaming source factory that every worker
-/// invokes for its own independent, lazily-generated copy.
+/// What an experiment cell runs over: a shared materialized trace
+/// (`Arc`-cloned handle, not requests) or a streaming source factory that
+/// every worker invokes for its own independent, lazily-generated copy.
 #[derive(Clone)]
 pub enum Workload {
     Shared(Arc<Trace>),
     Streaming(SourceFactory),
 }
 
-/// One cell of an experiment grid: everything `run_experiment` needs,
-/// owned/shared so cells can execute on any worker thread.
+/// One experiment cell: everything [`run_experiment`] needs, owned/shared
+/// so cells can execute on any worker thread.
 #[derive(Clone)]
 pub struct ExperimentSpec {
     pub deployment: Deployment,
     pub policy: PolicyKind,
     pub workload: Workload,
     pub overrides: RunOverrides,
-    /// Free-form tag (e.g. trace family name) carried to the result.
+    /// Workload-profile override: None derives it from the workload
+    /// (measured for [`Workload::Shared`], source-reported for
+    /// [`Workload::Streaming`]).
+    pub profile: Option<TraceProfile>,
+    /// Free-form tag (e.g. `scenario/policy`) carried to the result.
     pub label: String,
 }
 
@@ -300,18 +276,26 @@ impl ExperimentSpec {
             policy,
             workload: Workload::Shared(trace.clone()),
             overrides: RunOverrides::default(),
+            profile: None,
             label: String::new(),
         }
     }
 
-    /// A grid cell over a streaming source factory (trace never
-    /// materialized; each worker streams its own copy).
+    /// Convenience for one-off runs over a borrowed trace (clones it into
+    /// a shared handle).
+    pub fn shared(dep: &Deployment, policy: PolicyKind, trace: &Trace) -> ExperimentSpec {
+        ExperimentSpec::new(dep, policy, &Arc::new(trace.clone()))
+    }
+
+    /// A cell over a streaming source factory (trace never materialized;
+    /// each worker streams its own copy).
     pub fn streaming(dep: &Deployment, policy: PolicyKind, factory: SourceFactory) -> ExperimentSpec {
         ExperimentSpec {
             deployment: dep.clone(),
             policy,
             workload: Workload::Streaming(factory),
             overrides: RunOverrides::default(),
+            profile: None,
             label: String::new(),
         }
     }
@@ -323,6 +307,11 @@ impl ExperimentSpec {
 
     pub fn with_overrides(mut self, ov: RunOverrides) -> ExperimentSpec {
         self.overrides = ov;
+        self
+    }
+
+    pub fn with_profile(mut self, profile: TraceProfile) -> ExperimentSpec {
+        self.profile = Some(profile);
         self
     }
 }
@@ -342,7 +331,7 @@ pub fn experiment_workers() -> usize {
 }
 
 /// Run an experiment grid across all cores and return results in spec
-/// order. Each (deployment × policy × trace × overrides) cell is an
+/// order. Each (deployment × policy × workload × overrides) cell is an
 /// independent simulation, so the fan-out is embarrassingly parallel;
 /// work-stealing is a shared atomic cursor over the spec list (cells vary
 /// wildly in cost — long traces vs short, 64 GPUs vs 16 — so static
@@ -352,7 +341,7 @@ pub fn experiment_workers() -> usize {
 pub fn run_experiments(specs: &[ExperimentSpec]) -> Vec<ExperimentResult> {
     let workers = experiment_workers().min(specs.len().max(1));
     if workers <= 1 || specs.len() <= 1 {
-        return specs.iter().map(run_spec).collect();
+        return specs.iter().map(run_experiment).collect();
     }
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::mpsc;
@@ -369,7 +358,7 @@ pub fn run_experiments(specs: &[ExperimentSpec]) -> Vec<ExperimentResult> {
                 if i >= specs.len() {
                     break;
                 }
-                let r = run_spec(&specs[i]);
+                let r = run_experiment(&specs[i]);
                 if tx.send((i, r)).is_err() {
                     break;
                 }
@@ -411,7 +400,7 @@ mod tests {
         let dep = deployment("small-a100").unwrap();
         let trace = generate_family(TraceFamily::AzureConv, 8.0, 60.0, 3);
         for p in PolicyKind::all_baselines() {
-            let r = run_experiment(&dep, p, &trace, &RunOverrides::default());
+            let r = run_experiment(&ExperimentSpec::shared(&dep, p, &trace));
             assert!(r.report.n > 100, "{}: n={}", p.name(), r.report.n);
             assert!(r.report.avg_gpus > 0.0);
             // Registry-built stock policies emit only valid actions.
@@ -425,9 +414,27 @@ mod tests {
         // string-keyed path as the stock policies.
         let dep = deployment("small-a100").unwrap();
         let trace = generate_family(TraceFamily::AzureConv, 6.0, 45.0, 9);
-        let r = run_experiment(&dep, PolicyKind::named("deflect"), &trace, &RunOverrides::default());
+        let r = run_experiment(&ExperimentSpec::shared(&dep, PolicyKind::named("deflect"), &trace));
         assert!(r.report.n > 50, "n={}", r.report.n);
         assert_eq!(r.report.rejected_actions, 0);
+    }
+
+    #[test]
+    fn overrides_cap_and_sampling_apply() {
+        let dep = deployment("small-a100").unwrap();
+        let trace = generate_family(TraceFamily::AzureConv, 6.0, 45.0, 9);
+        let spec = ExperimentSpec::shared(&dep, PolicyKind::named("static"), &trace)
+            .with_overrides(RunOverrides {
+                initial_prefillers: Some(1),
+                initial_decoders: Some(1),
+                max_gpus: Some(2),
+                sample_interval_s: Some(0.5),
+                ..Default::default()
+            });
+        let r = run_experiment(&spec);
+        // A 2-GPU cap with a 1+1 static fleet can never exceed 2 GPUs.
+        assert!(r.report.avg_gpus <= 2.0 + 1e-9, "avg={}", r.report.avg_gpus);
+        assert!(r.report.n > 0);
     }
 
     #[test]
@@ -446,7 +453,7 @@ mod tests {
             assert_eq!(spec.label, res.label);
             // ...and are identical to a sequential run (simulations are
             // deterministic, so parallelism must not change anything).
-            let seq = run_spec(spec);
+            let seq = run_experiment(spec);
             assert_eq!(seq.report.n, res.report.n, "{}", spec.label);
             assert_eq!(seq.report.overall_attainment, res.report.overall_attainment);
             assert_eq!(seq.report.avg_gpus, res.report.avg_gpus);

@@ -1,0 +1,1230 @@
+//! Declarative experiment scenarios.
+//!
+//! A [`Scenario`] is a **serializable value** describing one experiment:
+//! a deployment preset, a set of policies selected by registry name, a
+//! workload (synthetic trace spec, replay file, or either behind a chain
+//! of transform combinators from `trace::transform`), run overrides and
+//! optional SLO targets. Scenarios can be built in code (the built-in
+//! suite library in [`super::suite`]) or loaded from TOML/JSON files
+//! under `scenarios/` — experiments are data, not code.
+//!
+//! A scenario compiles down to one [`ExperimentSpec`] per policy via
+//! [`Scenario::experiment_specs`]; the generic runner does the rest.
+//! Malformed scenario values surface as typed [`ScenarioError`]s (unknown
+//! policy/deployment/family names, unknown or invalid transform steps),
+//! so file-driven sweeps fail with actionable messages instead of deep
+//! panics.
+
+use crate::report::runner::{deployment, ExperimentSpec, RunOverrides, Workload};
+use crate::report::PolicyKind;
+use crate::trace::{
+    family_source, materialize, step_trace, uniform_bucket_trace, ArrivalSource, BurstWindow,
+    OwnedTraceSource, SourceExt, SourceFactory, Trace, TraceFamily,
+};
+use crate::util::json::Json;
+use crate::workload::SloPolicy;
+use std::fmt;
+use std::sync::Arc;
+
+/// Typed scenario-parse/validation error. Everything a malformed scenario
+/// file can get wrong maps to one of these variants; `Display` renders an
+/// actionable message and the blanket `From<std::error::Error>` lifts it
+/// into `anyhow::Result` call chains.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScenarioError {
+    MissingField { context: String, field: String },
+    UnknownField { context: String, field: String },
+    BadValue { field: String, reason: String },
+    UnknownDeployment { name: String },
+    UnknownPolicy { name: String },
+    UnknownTraceFamily { name: String },
+    UnknownWorkloadKind { kind: String },
+    UnknownTransform { op: String },
+    BadTransform { op: String, reason: String },
+    NoPolicies { scenario: String },
+    DuplicatePolicy { scenario: String, name: String },
+    DuplicateScenario { name: String },
+}
+
+impl fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScenarioError::MissingField { context, field } => {
+                write!(f, "{context}: missing required field `{field}`")
+            }
+            ScenarioError::UnknownField { context, field } => {
+                write!(f, "{context}: unknown field `{field}` (typo?)")
+            }
+            ScenarioError::BadValue { field, reason } => {
+                write!(f, "bad value for `{field}`: {reason}")
+            }
+            ScenarioError::UnknownDeployment { name } => {
+                write!(f, "unknown deployment `{name}` (expected small-a100, large-a100 or h100)")
+            }
+            ScenarioError::UnknownPolicy { name } => {
+                write!(f, "unknown policy `{name}` (see `tokenscale policy list`)")
+            }
+            ScenarioError::UnknownTraceFamily { name } => {
+                write!(f, "unknown trace family `{name}`")
+            }
+            ScenarioError::UnknownWorkloadKind { kind } => {
+                write!(
+                    f,
+                    "unknown workload kind `{kind}` (expected synthetic, replay, step or uniform-buckets)"
+                )
+            }
+            ScenarioError::UnknownTransform { op } => {
+                write!(
+                    f,
+                    "unknown transform op `{op}` (expected window, rate-scale, diurnal, burst or resample)"
+                )
+            }
+            ScenarioError::BadTransform { op, reason } => {
+                write!(f, "bad `{op}` transform: {reason}")
+            }
+            ScenarioError::NoPolicies { scenario } => {
+                write!(f, "scenario `{scenario}` selects no policies")
+            }
+            ScenarioError::DuplicatePolicy { scenario, name } => {
+                write!(
+                    f,
+                    "scenario `{scenario}` selects policy `{name}` twice (normalized cells are keyed by policy)"
+                )
+            }
+            ScenarioError::DuplicateScenario { name } => {
+                write!(f, "duplicate scenario name `{name}` in suite")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+// ------------------------------------------------------------- workload
+
+/// The workload a scenario runs over, before transforms.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkloadSpec {
+    /// A synthetic trace family (Markov-modulated generators; `mixed`
+    /// interleaves the four base families).
+    Synthetic {
+        family: TraceFamily,
+        rps: f64,
+        duration_s: f64,
+        seed: u64,
+    },
+    /// An Azure-style CSV/JSONL replay file (see `trace::replay`).
+    Replay { path: String },
+    /// A step function: `base_rps`, jumping to `burst_rps` during
+    /// `[burst_start_s, burst_start_s + burst_len_s)` (Fig. 4/10 shape).
+    Step {
+        base_rps: f64,
+        burst_rps: f64,
+        burst_start_s: f64,
+        burst_len_s: f64,
+        duration_s: f64,
+        input_tokens: usize,
+        output_tokens: usize,
+        seed: u64,
+    },
+    /// Uniform nine-bucket mix (§VI-B1 decoder-count validation).
+    UniformBuckets { rps: f64, duration_s: f64, seed: u64 },
+}
+
+impl WorkloadSpec {
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        let positive = |field: &str, v: f64| -> Result<(), ScenarioError> {
+            if v > 0.0 {
+                Ok(())
+            } else {
+                Err(ScenarioError::BadValue {
+                    field: field.to_string(),
+                    reason: format!("must be positive, got {v}"),
+                })
+            }
+        };
+        match self {
+            WorkloadSpec::Synthetic { rps, duration_s, .. } => {
+                positive("workload.rps", *rps)?;
+                positive("workload.duration_s", *duration_s)
+            }
+            WorkloadSpec::Replay { path } => {
+                if path.is_empty() {
+                    Err(ScenarioError::MissingField {
+                        context: "replay workload".into(),
+                        field: "path".into(),
+                    })
+                } else {
+                    Ok(())
+                }
+            }
+            WorkloadSpec::Step {
+                base_rps,
+                burst_rps,
+                duration_s,
+                input_tokens,
+                ..
+            } => {
+                positive("workload.base_rps", *base_rps)?;
+                positive("workload.burst_rps", *burst_rps)?;
+                positive("workload.duration_s", *duration_s)?;
+                if *input_tokens == 0 {
+                    return Err(ScenarioError::BadValue {
+                        field: "workload.input_tokens".into(),
+                        reason: "must be at least 1".into(),
+                    });
+                }
+                Ok(())
+            }
+            WorkloadSpec::UniformBuckets { rps, duration_s, .. } => {
+                positive("workload.rps", *rps)?;
+                positive("workload.duration_s", *duration_s)
+            }
+        }
+    }
+
+    /// Build a fresh streaming source for this workload (no transforms).
+    /// Replay files are read per call; use [`Scenario::source_factory`]
+    /// for grid runs so the file is loaded once.
+    pub fn build_source(&self) -> anyhow::Result<Box<dyn ArrivalSource + Send>> {
+        self.validate()?;
+        Ok(match self {
+            WorkloadSpec::Synthetic {
+                family,
+                rps,
+                duration_s,
+                seed,
+            } => family_source(*family, *rps, *duration_s, *seed),
+            WorkloadSpec::Replay { path } => {
+                let trace = crate::trace::replay::load_path(std::path::Path::new(path))?;
+                OwnedTraceSource::new(trace).boxed()
+            }
+            WorkloadSpec::Step {
+                base_rps,
+                burst_rps,
+                burst_start_s,
+                burst_len_s,
+                duration_s,
+                input_tokens,
+                output_tokens,
+                seed,
+            } => OwnedTraceSource::new(step_trace(
+                *base_rps,
+                *burst_rps,
+                *burst_start_s,
+                *burst_len_s,
+                *duration_s,
+                *input_tokens,
+                *output_tokens,
+                *seed,
+            ))
+            .boxed(),
+            WorkloadSpec::UniformBuckets { rps, duration_s, seed } => {
+                OwnedTraceSource::new(uniform_bucket_trace(*rps, *duration_s, *seed)).boxed()
+            }
+        })
+    }
+
+    /// Materialize the (untransformed) workload into a trace — the bridge
+    /// for trace-analytics consumers (burst statistics, threshold tables).
+    pub fn materialize(&self) -> anyhow::Result<Trace> {
+        let mut src = self.build_source()?;
+        Ok(materialize(src.as_mut()))
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            WorkloadSpec::Synthetic {
+                family,
+                rps,
+                duration_s,
+                seed,
+            } => Json::obj()
+                .set("kind", "synthetic")
+                .set("family", family.name())
+                .set("rps", *rps)
+                .set("duration_s", *duration_s)
+                .set("seed", *seed),
+            WorkloadSpec::Replay { path } => {
+                Json::obj().set("kind", "replay").set("path", path.as_str())
+            }
+            WorkloadSpec::Step {
+                base_rps,
+                burst_rps,
+                burst_start_s,
+                burst_len_s,
+                duration_s,
+                input_tokens,
+                output_tokens,
+                seed,
+            } => Json::obj()
+                .set("kind", "step")
+                .set("base_rps", *base_rps)
+                .set("burst_rps", *burst_rps)
+                .set("burst_start_s", *burst_start_s)
+                .set("burst_len_s", *burst_len_s)
+                .set("duration_s", *duration_s)
+                .set("input_tokens", *input_tokens)
+                .set("output_tokens", *output_tokens)
+                .set("seed", *seed),
+            WorkloadSpec::UniformBuckets { rps, duration_s, seed } => Json::obj()
+                .set("kind", "uniform-buckets")
+                .set("rps", *rps)
+                .set("duration_s", *duration_s)
+                .set("seed", *seed),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<WorkloadSpec, ScenarioError> {
+        let kind = req_str(j, "workload", "kind")?;
+        let w = match kind {
+            "synthetic" => {
+                check_fields(j, "synthetic workload", &["kind", "family", "rps", "duration_s", "seed"])?;
+                let name = req_str(j, "workload", "family")?;
+                let family = TraceFamily::parse(name).ok_or_else(|| {
+                    ScenarioError::UnknownTraceFamily { name: name.to_string() }
+                })?;
+                WorkloadSpec::Synthetic {
+                    family,
+                    rps: req_f64(j, "workload", "rps")?,
+                    duration_s: req_f64(j, "workload", "duration_s")?,
+                    seed: opt_u64(j, "seed")?.unwrap_or(42),
+                }
+            }
+            "replay" => {
+                check_fields(j, "replay workload", &["kind", "path"])?;
+                WorkloadSpec::Replay {
+                    path: req_str(j, "workload", "path")?.to_string(),
+                }
+            }
+            "step" => {
+                check_fields(
+                    j,
+                    "step workload",
+                    &[
+                        "kind",
+                        "base_rps",
+                        "burst_rps",
+                        "burst_start_s",
+                        "burst_len_s",
+                        "duration_s",
+                        "input_tokens",
+                        "output_tokens",
+                        "seed",
+                    ],
+                )?;
+                WorkloadSpec::Step {
+                    base_rps: req_f64(j, "workload", "base_rps")?,
+                    burst_rps: req_f64(j, "workload", "burst_rps")?,
+                    burst_start_s: opt_f64(j, "burst_start_s")?.unwrap_or(0.0),
+                    burst_len_s: opt_f64(j, "burst_len_s")?.unwrap_or(0.0),
+                    duration_s: req_f64(j, "workload", "duration_s")?,
+                    input_tokens: opt_usize(j, "input_tokens")?.unwrap_or(512),
+                    output_tokens: opt_usize(j, "output_tokens")?.unwrap_or(128),
+                    seed: opt_u64(j, "seed")?.unwrap_or(42),
+                }
+            }
+            "uniform-buckets" => {
+                check_fields(j, "uniform-buckets workload", &["kind", "rps", "duration_s", "seed"])?;
+                WorkloadSpec::UniformBuckets {
+                    rps: req_f64(j, "workload", "rps")?,
+                    duration_s: req_f64(j, "workload", "duration_s")?,
+                    seed: opt_u64(j, "seed")?.unwrap_or(42),
+                }
+            }
+            other => {
+                return Err(ScenarioError::UnknownWorkloadKind { kind: other.to_string() })
+            }
+        };
+        w.validate()?;
+        Ok(w)
+    }
+}
+
+// ------------------------------------------------------------ transforms
+
+/// One step of a workload transform chain — a serializable mirror of the
+/// `trace::transform` combinators, applied in order over the base source.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TransformStep {
+    /// Splice out `[t0, t1)`, re-based to start at 0.
+    Window { t0: f64, t1: f64 },
+    /// Compress time so the request rate is multiplied by `factor`.
+    RateScale { factor: f64 },
+    /// Sinusoidal thinning (day/night swing).
+    Diurnal { amplitude: f64, period_s: f64, seed: u64 },
+    /// Duplicate arrivals inside episode windows.
+    Burst { windows: Vec<BurstWindow>, seed: u64 },
+    /// Thin/duplicate to a target average RPS.
+    Resample { target_rps: f64, seed: u64 },
+}
+
+impl TransformStep {
+    fn op(&self) -> &'static str {
+        match self {
+            TransformStep::Window { .. } => "window",
+            TransformStep::RateScale { .. } => "rate-scale",
+            TransformStep::Diurnal { .. } => "diurnal",
+            TransformStep::Burst { .. } => "burst",
+            TransformStep::Resample { .. } => "resample",
+        }
+    }
+
+    /// Check the parameters the combinator constructors would otherwise
+    /// `assert!` on, so bad chains fail as typed errors at parse time.
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        let bad = |reason: String| ScenarioError::BadTransform {
+            op: self.op().to_string(),
+            reason,
+        };
+        match self {
+            TransformStep::Window { t0, t1 } => {
+                if t1 < t0 {
+                    return Err(bad(format!("window end {t1} before start {t0}")));
+                }
+                if *t0 < 0.0 {
+                    return Err(bad(format!("window start {t0} is negative")));
+                }
+            }
+            TransformStep::RateScale { factor } => {
+                if *factor <= 0.0 {
+                    return Err(bad(format!("rate factor must be positive, got {factor}")));
+                }
+            }
+            TransformStep::Diurnal { amplitude, period_s, .. } => {
+                if *period_s <= 0.0 {
+                    return Err(bad(format!("period must be positive, got {period_s}")));
+                }
+                if !(0.0..=0.95).contains(amplitude) {
+                    return Err(bad(format!("amplitude must be in [0, 0.95], got {amplitude}")));
+                }
+            }
+            TransformStep::Burst { windows, .. } => {
+                if windows.is_empty() {
+                    return Err(bad("needs at least one burst window".into()));
+                }
+                for w in windows {
+                    if w.len_s < 0.0 || w.rate_factor < 1.0 || w.start_s < 0.0 {
+                        return Err(bad(format!(
+                            "window start={} len={} factor={} (need start/len >= 0, factor >= 1)",
+                            w.start_s, w.len_s, w.rate_factor
+                        )));
+                    }
+                }
+            }
+            TransformStep::Resample { target_rps, .. } => {
+                if *target_rps <= 0.0 {
+                    return Err(bad(format!("target rps must be positive, got {target_rps}")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Wrap `src` in this combinator.
+    pub fn apply(&self, src: Box<dyn ArrivalSource + Send>) -> Box<dyn ArrivalSource + Send> {
+        match self {
+            TransformStep::Window { t0, t1 } => src.window(*t0, *t1).boxed(),
+            TransformStep::RateScale { factor } => src.scale_rate(*factor).boxed(),
+            TransformStep::Diurnal {
+                amplitude,
+                period_s,
+                seed,
+            } => src.diurnal(*amplitude, *period_s, *seed).boxed(),
+            TransformStep::Burst { windows, seed } => {
+                src.inject_bursts(windows.clone(), *seed).boxed()
+            }
+            TransformStep::Resample { target_rps, seed } => {
+                src.resample_rps(*target_rps, *seed).boxed()
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            TransformStep::Window { t0, t1 } => {
+                Json::obj().set("op", "window").set("t0", *t0).set("t1", *t1)
+            }
+            TransformStep::RateScale { factor } => {
+                Json::obj().set("op", "rate-scale").set("factor", *factor)
+            }
+            TransformStep::Diurnal {
+                amplitude,
+                period_s,
+                seed,
+            } => Json::obj()
+                .set("op", "diurnal")
+                .set("amplitude", *amplitude)
+                .set("period_s", *period_s)
+                .set("seed", *seed),
+            TransformStep::Burst { windows, seed } => Json::obj()
+                .set("op", "burst")
+                .set(
+                    "windows",
+                    Json::Arr(
+                        windows
+                            .iter()
+                            .map(|w| {
+                                Json::obj()
+                                    .set("start_s", w.start_s)
+                                    .set("len_s", w.len_s)
+                                    .set("rate_factor", w.rate_factor)
+                            })
+                            .collect(),
+                    ),
+                )
+                .set("seed", *seed),
+            TransformStep::Resample { target_rps, seed } => Json::obj()
+                .set("op", "resample")
+                .set("target_rps", *target_rps)
+                .set("seed", *seed),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<TransformStep, ScenarioError> {
+        let op = req_str(j, "transform", "op")?;
+        let step = match op {
+            "window" => {
+                check_fields(j, "window transform", &["op", "t0", "t1"])?;
+                TransformStep::Window {
+                    t0: req_f64(j, "window transform", "t0")?,
+                    t1: req_f64(j, "window transform", "t1")?,
+                }
+            }
+            "rate-scale" | "rate_scale" => {
+                check_fields(j, "rate-scale transform", &["op", "factor"])?;
+                TransformStep::RateScale {
+                    factor: req_f64(j, "rate-scale transform", "factor")?,
+                }
+            }
+            "diurnal" => {
+                check_fields(j, "diurnal transform", &["op", "amplitude", "period_s", "seed"])?;
+                TransformStep::Diurnal {
+                    amplitude: req_f64(j, "diurnal transform", "amplitude")?,
+                    period_s: req_f64(j, "diurnal transform", "period_s")?,
+                    seed: opt_u64(j, "seed")?.unwrap_or(0),
+                }
+            }
+            "burst" | "burst-inject" => {
+                check_fields(j, "burst transform", &["op", "windows", "seed"])?;
+                let arr = j
+                    .get("windows")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| ScenarioError::MissingField {
+                        context: "burst transform".into(),
+                        field: "windows".into(),
+                    })?;
+                let mut windows = Vec::with_capacity(arr.len());
+                for w in arr {
+                    check_fields(w, "burst window", &["start_s", "len_s", "rate_factor"])?;
+                    windows.push(BurstWindow::new(
+                        req_f64(w, "burst window", "start_s")?,
+                        req_f64(w, "burst window", "len_s")?,
+                        req_f64(w, "burst window", "rate_factor")?,
+                    ));
+                }
+                TransformStep::Burst {
+                    windows,
+                    seed: opt_u64(j, "seed")?.unwrap_or(0),
+                }
+            }
+            "resample" => {
+                check_fields(j, "resample transform", &["op", "target_rps", "seed"])?;
+                TransformStep::Resample {
+                    target_rps: req_f64(j, "resample transform", "target_rps")?,
+                    seed: opt_u64(j, "seed")?.unwrap_or(0),
+                }
+            }
+            other => return Err(ScenarioError::UnknownTransform { op: other.to_string() }),
+        };
+        step.validate()?;
+        Ok(step)
+    }
+}
+
+// ------------------------------------------------------------- overrides
+
+/// Serializable mirror of the runner's [`RunOverrides`] (minus the
+/// test-only single-step switch).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioOverrides {
+    pub convertibles: Option<usize>,
+    pub predictor_accuracy: Option<f64>,
+    pub warmup_s: f64,
+    pub prefillers: Option<usize>,
+    pub decoders: Option<usize>,
+    pub max_gpus: Option<usize>,
+    pub sample_interval_s: Option<f64>,
+    pub decision_log: usize,
+}
+
+impl Default for ScenarioOverrides {
+    fn default() -> Self {
+        ScenarioOverrides {
+            convertibles: None,
+            predictor_accuracy: None,
+            warmup_s: 10.0,
+            prefillers: None,
+            decoders: None,
+            max_gpus: None,
+            sample_interval_s: None,
+            decision_log: 0,
+        }
+    }
+}
+
+impl ScenarioOverrides {
+    fn is_default(&self) -> bool {
+        *self == ScenarioOverrides::default()
+    }
+
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        if let Some(s) = self.sample_interval_s {
+            if s.is_nan() || s <= 0.0 {
+                return Err(ScenarioError::BadValue {
+                    field: "overrides.sample_interval_s".into(),
+                    reason: format!("must be positive (the engine ticks at this interval), got {s}"),
+                });
+            }
+        }
+        if self.warmup_s.is_nan() || self.warmup_s < 0.0 {
+            return Err(ScenarioError::BadValue {
+                field: "overrides.warmup_s".into(),
+                reason: format!("must be non-negative, got {}", self.warmup_s),
+            });
+        }
+        if let Some(a) = self.predictor_accuracy {
+            if !(0.0..=1.0).contains(&a) {
+                return Err(ScenarioError::BadValue {
+                    field: "overrides.predictor_accuracy".into(),
+                    reason: format!("must be in [0, 1], got {a}"),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj().set("warmup_s", self.warmup_s);
+        if let Some(v) = self.convertibles {
+            j = j.set("convertibles", v);
+        }
+        if let Some(v) = self.predictor_accuracy {
+            j = j.set("predictor_accuracy", v);
+        }
+        if let Some(v) = self.prefillers {
+            j = j.set("prefillers", v);
+        }
+        if let Some(v) = self.decoders {
+            j = j.set("decoders", v);
+        }
+        if let Some(v) = self.max_gpus {
+            j = j.set("max_gpus", v);
+        }
+        if let Some(v) = self.sample_interval_s {
+            j = j.set("sample_interval_s", v);
+        }
+        if self.decision_log > 0 {
+            j = j.set("decision_log", self.decision_log);
+        }
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<ScenarioOverrides, ScenarioError> {
+        check_fields(
+            j,
+            "overrides",
+            &[
+                "convertibles",
+                "predictor_accuracy",
+                "warmup_s",
+                "prefillers",
+                "decoders",
+                "max_gpus",
+                "sample_interval_s",
+                "decision_log",
+            ],
+        )?;
+        let mut ov = ScenarioOverrides {
+            convertibles: opt_usize(j, "convertibles")?,
+            predictor_accuracy: opt_f64(j, "predictor_accuracy")?,
+            prefillers: opt_usize(j, "prefillers")?,
+            decoders: opt_usize(j, "decoders")?,
+            max_gpus: opt_usize(j, "max_gpus")?,
+            sample_interval_s: opt_f64(j, "sample_interval_s")?,
+            decision_log: opt_usize(j, "decision_log")?.unwrap_or(0),
+            ..Default::default()
+        };
+        if let Some(w) = opt_f64(j, "warmup_s")? {
+            ov.warmup_s = w;
+        }
+        ov.validate()?;
+        Ok(ov)
+    }
+}
+
+// -------------------------------------------------------------- scenario
+
+/// One declarative experiment: the serializable unit of the scenario
+/// library. See the module docs and `docs/scenarios.md`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// Deployment preset name (`small-a100`, `large-a100`, `h100`).
+    pub deployment: String,
+    /// Registry names of the control planes to run (one spec per entry).
+    pub policies: Vec<String>,
+    pub workload: WorkloadSpec,
+    pub transforms: Vec<TransformStep>,
+    pub overrides: ScenarioOverrides,
+    /// SLO targets (None = paper defaults).
+    pub slo: Option<SloPolicy>,
+    /// Materialize the workload once and share it across the scenario's
+    /// policies (measured workload profile — the classic fig* setup)
+    /// instead of streaming an independent copy per grid worker
+    /// (analytic profile — the hour-scale setup).
+    pub materialize: bool,
+}
+
+impl Scenario {
+    pub fn new(name: impl Into<String>, deployment: impl Into<String>, workload: WorkloadSpec) -> Scenario {
+        Scenario {
+            name: name.into(),
+            deployment: deployment.into(),
+            policies: Vec::new(),
+            workload,
+            transforms: Vec::new(),
+            overrides: ScenarioOverrides::default(),
+            slo: None,
+            materialize: false,
+        }
+    }
+
+    pub fn policy(mut self, name: impl Into<String>) -> Scenario {
+        self.policies.push(name.into());
+        self
+    }
+
+    pub fn policies(mut self, names: &[&str]) -> Scenario {
+        self.policies.extend(names.iter().map(|s| s.to_string()));
+        self
+    }
+
+    /// All four headline baselines.
+    pub fn all_baselines(mut self) -> Scenario {
+        self.policies
+            .extend(PolicyKind::all_baselines().iter().map(|p| p.name().to_string()));
+        self
+    }
+
+    pub fn transform(mut self, step: TransformStep) -> Scenario {
+        self.transforms.push(step);
+        self
+    }
+
+    pub fn with_overrides(mut self, ov: ScenarioOverrides) -> Scenario {
+        self.overrides = ov;
+        self
+    }
+
+    pub fn with_slo(mut self, slo: SloPolicy) -> Scenario {
+        self.slo = Some(slo);
+        self
+    }
+
+    pub fn materialized(mut self) -> Scenario {
+        self.materialize = true;
+        self
+    }
+
+    /// Full structural validation — everything that can be checked
+    /// without touching the filesystem.
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        if self.name.is_empty() {
+            return Err(ScenarioError::MissingField {
+                context: "scenario".into(),
+                field: "name".into(),
+            });
+        }
+        if deployment(&self.deployment).is_none() {
+            return Err(ScenarioError::UnknownDeployment {
+                name: self.deployment.clone(),
+            });
+        }
+        if self.policies.is_empty() {
+            return Err(ScenarioError::NoPolicies {
+                scenario: self.name.clone(),
+            });
+        }
+        // Duplicates are checked on *canonical* names: the normalized
+        // report keys cells by policy, so aliases like "ts"/"tokenscale"
+        // would silently overwrite each other's cell.
+        let mut seen = std::collections::BTreeSet::new();
+        for p in &self.policies {
+            let Some(kind) = PolicyKind::parse(p) else {
+                return Err(ScenarioError::UnknownPolicy { name: p.clone() });
+            };
+            if !seen.insert(kind.name()) {
+                return Err(ScenarioError::DuplicatePolicy {
+                    scenario: self.name.clone(),
+                    name: p.clone(),
+                });
+            }
+        }
+        self.workload.validate()?;
+        for t in &self.transforms {
+            t.validate()?;
+        }
+        self.overrides.validate()?;
+        Ok(())
+    }
+
+    /// A factory of independent, fully-transformed streaming sources.
+    /// Replay files are loaded once here and shared; every factory call
+    /// replays its own cursor over the shared requests.
+    pub fn source_factory(&self) -> anyhow::Result<SourceFactory> {
+        self.validate()?;
+        enum Base {
+            Spec(WorkloadSpec),
+            Loaded(Arc<Trace>),
+        }
+        let base = match &self.workload {
+            WorkloadSpec::Replay { path } => {
+                Base::Loaded(Arc::new(crate::trace::replay::load_path(std::path::Path::new(path))?))
+            }
+            other => Base::Spec(other.clone()),
+        };
+        let transforms = self.transforms.clone();
+        Ok(Arc::new(move || {
+            let mut src: Box<dyn ArrivalSource + Send> = match &base {
+                Base::Spec(w) => w
+                    .build_source()
+                    .expect("workload validated at factory construction"),
+                Base::Loaded(trace) => OwnedTraceSource::new((**trace).clone()).boxed(),
+            };
+            for t in &transforms {
+                src = t.apply(src);
+            }
+            src
+        }))
+    }
+
+    /// Materialize the fully-transformed workload into a trace.
+    pub fn build_trace(&self) -> anyhow::Result<Trace> {
+        let factory = self.source_factory()?;
+        let mut src = factory();
+        let mut trace = materialize(src.as_mut());
+        trace.name = self.name.clone();
+        Ok(trace)
+    }
+
+    fn run_overrides(&self) -> RunOverrides {
+        RunOverrides {
+            convertibles: self.overrides.convertibles,
+            predictor_accuracy: self.overrides.predictor_accuracy,
+            warmup_s: self.overrides.warmup_s,
+            initial_prefillers: self.overrides.prefillers,
+            initial_decoders: self.overrides.decoders,
+            max_gpus: self.overrides.max_gpus,
+            sample_interval_s: self.overrides.sample_interval_s,
+            slo: self.slo,
+            force_single_step: false,
+            decision_log: self.overrides.decision_log,
+        }
+    }
+
+    /// Compile to one [`ExperimentSpec`] per policy, labelled
+    /// `scenario-name/policy-name`, ready for the generic runner.
+    pub fn experiment_specs(&self) -> anyhow::Result<Vec<ExperimentSpec>> {
+        self.validate()?;
+        let dep = deployment(&self.deployment).expect("deployment validated");
+        let ov = self.run_overrides();
+        let workload = if self.materialize {
+            Workload::Shared(Arc::new(self.build_trace()?))
+        } else {
+            Workload::Streaming(self.source_factory()?)
+        };
+        Ok(self
+            .policies
+            .iter()
+            .map(|p| {
+                let policy = PolicyKind::parse(p).expect("policy validated");
+                ExperimentSpec {
+                    deployment: dep.clone(),
+                    policy,
+                    workload: workload.clone(),
+                    overrides: ov.clone(),
+                    profile: None,
+                    label: format!("{}/{}", self.name, policy.name()),
+                }
+            })
+            .collect())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("name", self.name.as_str())
+            .set("deployment", self.deployment.as_str())
+            .set(
+                "policies",
+                Json::Arr(self.policies.iter().map(|p| Json::Str(p.clone())).collect()),
+            )
+            .set("workload", self.workload.to_json());
+        if !self.transforms.is_empty() {
+            j = j.set(
+                "transforms",
+                Json::Arr(self.transforms.iter().map(TransformStep::to_json).collect()),
+            );
+        }
+        if !self.overrides.is_default() {
+            j = j.set("overrides", self.overrides.to_json());
+        }
+        if let Some(slo) = &self.slo {
+            j = j.set(
+                "slo",
+                Json::obj()
+                    .set("ttft_short_s", slo.ttft_short_s)
+                    .set("ttft_medium_s", slo.ttft_medium_s)
+                    .set("ttft_long_s", slo.ttft_long_s)
+                    .set("tpot_s", slo.tpot_s),
+            );
+        }
+        if self.materialize {
+            j = j.set("materialize", true);
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Scenario, ScenarioError> {
+        check_fields(
+            j,
+            "scenario",
+            &[
+                "name",
+                "deployment",
+                "policies",
+                "workload",
+                "transforms",
+                "overrides",
+                "slo",
+                "materialize",
+            ],
+        )?;
+        let name = req_str(j, "scenario", "name")?.to_string();
+        let workload = WorkloadSpec::from_json(j.get("workload").ok_or_else(|| {
+            ScenarioError::MissingField {
+                context: format!("scenario `{name}`"),
+                field: "workload".into(),
+            }
+        })?)?;
+        let policies: Vec<String> = match j.get("policies") {
+            None => Vec::new(),
+            Some(v) => {
+                let arr = v.as_arr().ok_or_else(|| ScenarioError::BadValue {
+                    field: "policies".into(),
+                    reason: "expected an array of policy names".into(),
+                })?;
+                arr.iter()
+                    .map(|p| {
+                        p.as_str().map(str::to_string).ok_or_else(|| ScenarioError::BadValue {
+                            field: "policies".into(),
+                            reason: "entries must be strings".into(),
+                        })
+                    })
+                    .collect::<Result<_, _>>()?
+            }
+        };
+        let mut transforms = Vec::new();
+        if let Some(v) = j.get("transforms") {
+            let arr = v.as_arr().ok_or_else(|| ScenarioError::BadValue {
+                field: "transforms".into(),
+                reason: "expected an array of transform steps".into(),
+            })?;
+            for t in arr {
+                transforms.push(TransformStep::from_json(t)?);
+            }
+        }
+        let overrides = match j.get("overrides") {
+            Some(o) => ScenarioOverrides::from_json(o)?,
+            None => ScenarioOverrides::default(),
+        };
+        let slo = match j.get("slo") {
+            Some(s) => {
+                check_fields(s, "slo", &["ttft_short_s", "ttft_medium_s", "ttft_long_s", "tpot_s"])?;
+                let d = SloPolicy::default();
+                Some(SloPolicy {
+                    ttft_short_s: opt_f64(s, "ttft_short_s")?.unwrap_or(d.ttft_short_s),
+                    ttft_medium_s: opt_f64(s, "ttft_medium_s")?.unwrap_or(d.ttft_medium_s),
+                    ttft_long_s: opt_f64(s, "ttft_long_s")?.unwrap_or(d.ttft_long_s),
+                    tpot_s: opt_f64(s, "tpot_s")?.unwrap_or(d.tpot_s),
+                })
+            }
+            None => None,
+        };
+        let scenario = Scenario {
+            name,
+            deployment: req_str(j, "scenario", "deployment")?.to_string(),
+            policies,
+            workload,
+            transforms,
+            overrides,
+            slo,
+            materialize: match j.get("materialize") {
+                None => false,
+                Some(v) => v.as_bool().ok_or_else(|| ScenarioError::BadValue {
+                    field: "materialize".into(),
+                    reason: "expected a boolean".into(),
+                })?,
+            },
+        };
+        scenario.validate()?;
+        Ok(scenario)
+    }
+}
+
+// ------------------------------------------------------ parsing helpers
+
+fn req_str<'j>(j: &'j Json, context: &str, field: &str) -> Result<&'j str, ScenarioError> {
+    match j.get(field) {
+        None => Err(ScenarioError::MissingField {
+            context: context.to_string(),
+            field: field.to_string(),
+        }),
+        Some(v) => v.as_str().ok_or_else(|| ScenarioError::BadValue {
+            field: format!("{context}.{field}"),
+            reason: "expected a string".into(),
+        }),
+    }
+}
+
+fn req_f64(j: &Json, context: &str, field: &str) -> Result<f64, ScenarioError> {
+    match j.get(field) {
+        None => Err(ScenarioError::MissingField {
+            context: context.to_string(),
+            field: field.to_string(),
+        }),
+        Some(v) => v.as_f64().ok_or_else(|| ScenarioError::BadValue {
+            field: format!("{context}.{field}"),
+            reason: "expected a number".into(),
+        }),
+    }
+}
+
+fn opt_f64(j: &Json, field: &str) -> Result<Option<f64>, ScenarioError> {
+    match j.get(field) {
+        None => Ok(None),
+        Some(v) => v.as_f64().map(Some).ok_or_else(|| ScenarioError::BadValue {
+            field: field.to_string(),
+            reason: "expected a number".into(),
+        }),
+    }
+}
+
+fn opt_nonneg_int(j: &Json, field: &str) -> Result<Option<f64>, ScenarioError> {
+    match opt_f64(j, field)? {
+        None => Ok(None),
+        Some(v) if v.is_finite() && v >= 0.0 && v.fract() == 0.0 => Ok(Some(v)),
+        Some(v) => Err(ScenarioError::BadValue {
+            field: field.to_string(),
+            reason: format!("expected a non-negative integer, got {v}"),
+        }),
+    }
+}
+
+fn opt_usize(j: &Json, field: &str) -> Result<Option<usize>, ScenarioError> {
+    Ok(opt_nonneg_int(j, field)?.map(|v| v as usize))
+}
+
+fn opt_u64(j: &Json, field: &str) -> Result<Option<u64>, ScenarioError> {
+    Ok(opt_nonneg_int(j, field)?.map(|v| v as u64))
+}
+
+/// Reject unknown keys so a typo'd field fails loudly instead of silently
+/// running a different experiment than the file says.
+pub(crate) fn check_fields(j: &Json, context: &str, allowed: &[&str]) -> Result<(), ScenarioError> {
+    if let Json::Obj(m) = j {
+        for k in m.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(ScenarioError::UnknownField {
+                    context: context.to_string(),
+                    field: k.clone(),
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_scenario() -> Scenario {
+        Scenario::new(
+            "demo",
+            "small-a100",
+            WorkloadSpec::Synthetic {
+                family: TraceFamily::AzureConv,
+                rps: 8.0,
+                duration_s: 60.0,
+                seed: 7,
+            },
+        )
+        .policies(&["tokenscale", "distserve"])
+        .transform(TransformStep::Diurnal {
+            amplitude: 0.3,
+            period_s: 60.0,
+            seed: 11,
+        })
+        .transform(TransformStep::Burst {
+            windows: vec![BurstWindow::new(20.0, 10.0, 2.5)],
+            seed: 13,
+        })
+    }
+
+    #[test]
+    fn json_round_trip_preserves_everything() {
+        let mut sc = demo_scenario();
+        sc.overrides.convertibles = Some(2);
+        sc.overrides.max_gpus = Some(8);
+        sc.slo = Some(SloPolicy::default());
+        sc.materialize = true;
+        let j = sc.to_json();
+        let back = Scenario::from_json(&j).unwrap();
+        assert_eq!(sc, back);
+        // And through text.
+        let back2 = Scenario::from_json(&Json::parse(&j.pretty()).unwrap()).unwrap();
+        assert_eq!(sc, back2);
+    }
+
+    #[test]
+    fn typed_errors_for_unknown_names() {
+        let mut sc = demo_scenario();
+        sc.policies.push("no-such-policy".into());
+        assert_eq!(
+            sc.validate(),
+            Err(ScenarioError::UnknownPolicy { name: "no-such-policy".into() })
+        );
+
+        let mut sc = demo_scenario();
+        sc.deployment = "tpu-pod".into();
+        assert_eq!(
+            sc.validate(),
+            Err(ScenarioError::UnknownDeployment { name: "tpu-pod".into() })
+        );
+
+        let j = demo_scenario().to_json().set(
+            "workload",
+            Json::obj().set("kind", "synthetic").set("family", "nope").set("rps", 1.0).set("duration_s", 1.0),
+        );
+        assert_eq!(
+            Scenario::from_json(&j),
+            Err(ScenarioError::UnknownTraceFamily { name: "nope".into() })
+        );
+    }
+
+    #[test]
+    fn duplicate_policies_rejected_by_canonical_name() {
+        // "ts" is an alias of the already-selected "tokenscale"; the
+        // normalized report keys cells by canonical name, so this would
+        // silently overwrite a cell if allowed.
+        let sc = demo_scenario().policy("ts");
+        assert!(matches!(
+            sc.validate(),
+            Err(ScenarioError::DuplicatePolicy { .. })
+        ));
+    }
+
+    #[test]
+    fn overrides_guard_degenerate_values() {
+        let mut sc = demo_scenario();
+        sc.overrides.sample_interval_s = Some(0.0);
+        assert!(matches!(sc.validate(), Err(ScenarioError::BadValue { .. })));
+        let mut sc = demo_scenario();
+        sc.overrides.warmup_s = -1.0;
+        assert!(matches!(sc.validate(), Err(ScenarioError::BadValue { .. })));
+    }
+
+    #[test]
+    fn typed_errors_for_bad_transform_chains() {
+        let j = Json::parse(r#"{"op":"teleport"}"#).unwrap();
+        assert_eq!(
+            TransformStep::from_json(&j),
+            Err(ScenarioError::UnknownTransform { op: "teleport".into() })
+        );
+        let j = Json::parse(r#"{"op":"window","t0":50,"t1":10}"#).unwrap();
+        assert!(matches!(
+            TransformStep::from_json(&j),
+            Err(ScenarioError::BadTransform { .. })
+        ));
+        let j = Json::parse(r#"{"op":"burst","windows":[{"start_s":0,"len_s":5,"rate_factor":0.5}],"seed":1}"#)
+            .unwrap();
+        assert!(matches!(
+            TransformStep::from_json(&j),
+            Err(ScenarioError::BadTransform { .. })
+        ));
+        let j = Json::parse(r#"{"op":"diurnal","amplitude":2.0,"period_s":60}"#).unwrap();
+        assert!(matches!(
+            TransformStep::from_json(&j),
+            Err(ScenarioError::BadTransform { .. })
+        ));
+    }
+
+    #[test]
+    fn factory_streams_are_deterministic_and_transformed() {
+        let sc = demo_scenario();
+        let f = sc.source_factory().unwrap();
+        let a = materialize(f().as_mut());
+        let b = materialize(f().as_mut());
+        assert_eq!(a.requests, b.requests);
+        assert!(!a.requests.is_empty());
+        // The diurnal transform thins the trough half of the period
+        // (sin < 0 for t in (30, 60)), so the chain has strictly fewer
+        // arrivals there than the untransformed workload; the burst
+        // window [20, 30) does not reach into it.
+        let plain = sc.workload.materialize().unwrap();
+        let trough = |t: &Trace| t.requests.iter().filter(|r| r.arrival >= 31.0).count();
+        assert!(trough(&plain) > trough(&a), "{} vs {}", trough(&plain), trough(&a));
+    }
+
+    #[test]
+    fn specs_carry_labels_policies_and_overrides() {
+        let mut sc = demo_scenario();
+        sc.overrides.decision_log = 64;
+        let specs = sc.experiment_specs().unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].label, "demo/tokenscale");
+        assert_eq!(specs[1].label, "demo/distserve");
+        assert_eq!(specs[0].overrides.decision_log, 64);
+        assert!(matches!(specs[0].workload, Workload::Streaming(_)));
+        let mat = sc.materialized();
+        assert!(matches!(
+            mat.experiment_specs().unwrap()[0].workload,
+            Workload::Shared(_)
+        ));
+    }
+
+    #[test]
+    fn step_and_uniform_workloads_materialize() {
+        let step = WorkloadSpec::Step {
+            base_rps: 4.0,
+            burst_rps: 8.0,
+            burst_start_s: 5.0,
+            burst_len_s: 5.0,
+            duration_s: 20.0,
+            input_tokens: 256,
+            output_tokens: 32,
+            seed: 3,
+        };
+        let t = step.materialize().unwrap();
+        assert!(!t.requests.is_empty());
+        assert_eq!(t.duration_s, 20.0);
+        let uni = WorkloadSpec::UniformBuckets {
+            rps: 5.0,
+            duration_s: 30.0,
+            seed: 4,
+        };
+        let t = uni.materialize().unwrap();
+        assert!(!t.requests.is_empty());
+    }
+}

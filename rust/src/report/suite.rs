@@ -1,0 +1,1004 @@
+//! Scenario suites: named collections of [`Scenario`]s that run through
+//! one generic driver and emit a **normalized** benchmark schema.
+//!
+//! Every `fig*`/`table*` bench used to hand-roll its own deployment
+//! wiring, policy loop and JSON emission; a [`Suite`] replaces all of
+//! that. `Suite::run` compiles every scenario to experiment specs, fans
+//! them out on the [`run_experiments`] thread pool, and returns a
+//! [`SuiteRun`] holding both the normalized per-cell [`ScenarioOutcome`]s
+//! (what `BENCH_<suite>.json` serializes) and the raw
+//! [`ExperimentResult`]s (for benches that render custom figures —
+//! timelines, Pearson correlations — on top).
+//!
+//! [`diff_bench`] compares two normalized reports and flags per-scenario
+//! SLO-attainment / GPU-hour regressions beyond tolerance; the
+//! `tokenscale bench` CLI family (list | run | diff) exposes the whole
+//! lifecycle, and `BASELINE_<suite>.json` files pin expectations across
+//! PRs (see `docs/scenarios.md`).
+//!
+//! The built-in suite library at the bottom of this file is the
+//! data-driven replacement for the benches' former setup code; file-based
+//! suites load from TOML/JSON under [`SCENARIO_DIR`].
+
+use crate::report::runner::{run_experiments, ExperimentResult};
+use crate::report::scenario::{
+    Scenario, ScenarioError, ScenarioOverrides, TransformStep, WorkloadSpec,
+};
+use crate::trace::{BurstWindow, TraceFamily};
+use crate::util::json::Json;
+use crate::util::table::{fnum, pct, Table};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Version tag of the normalized `BENCH_<suite>.json` schema; bump on any
+/// structural change (the golden-file test pins the layout).
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// Directory scanned for file-based suites (relative to the repo root).
+pub const SCENARIO_DIR: &str = "scenarios";
+
+/// `(duration_s, rps)` of the `longtrace` suite's full scale (2 simulated
+/// hours at the paper's 22 RPS) — shared by `builtin_suites`, the
+/// `fig_longtrace` bench and `tokenscale bench run longtrace`.
+pub const LONGTRACE_FULL_SCALE: (f64, f64) = (7200.0, 22.0);
+
+/// `(duration_s, rps)` of the `longtrace` smoke scale (same scenario
+/// shapes, minutes-long horizon for CI).
+pub const LONGTRACE_SMOKE_SCALE: (f64, f64) = (420.0, 6.0);
+
+/// A named collection of scenarios run and reported as one unit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Suite {
+    pub name: String,
+    pub description: String,
+    pub scenarios: Vec<Scenario>,
+}
+
+impl Suite {
+    pub fn new(name: impl Into<String>, description: impl Into<String>) -> Suite {
+        Suite {
+            name: name.into(),
+            description: description.into(),
+            scenarios: Vec::new(),
+        }
+    }
+
+    pub fn scenario(mut self, sc: Scenario) -> Suite {
+        self.scenarios.push(sc);
+        self
+    }
+
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        if self.name.is_empty() {
+            return Err(ScenarioError::MissingField {
+                context: "suite".into(),
+                field: "name".into(),
+            });
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for sc in &self.scenarios {
+            sc.validate()?;
+            if !seen.insert(sc.name.clone()) {
+                return Err(ScenarioError::DuplicateScenario { name: sc.name.clone() });
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("description", self.description.as_str())
+            .set(
+                "scenarios",
+                Json::Arr(self.scenarios.iter().map(Scenario::to_json).collect()),
+            )
+    }
+
+    /// Parse a suite document. A document without a `scenarios` array is
+    /// treated as a single scenario and wrapped in a suite of one.
+    pub fn from_json(j: &Json) -> Result<Suite, ScenarioError> {
+        let suite = match j.get("scenarios").and_then(Json::as_arr) {
+            Some(arr) => {
+                crate::report::scenario::check_fields(j, "suite", &["name", "description", "scenarios"])?;
+                let mut scenarios = Vec::with_capacity(arr.len());
+                for s in arr {
+                    scenarios.push(Scenario::from_json(s)?);
+                }
+                Suite {
+                    name: j
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .unwrap_or("unnamed")
+                        .to_string(),
+                    description: j
+                        .get("description")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    scenarios,
+                }
+            }
+            None => {
+                let sc = Scenario::from_json(j)?;
+                Suite {
+                    name: sc.name.clone(),
+                    description: format!("single scenario `{}`", sc.name),
+                    scenarios: vec![sc],
+                }
+            }
+        };
+        suite.validate()?;
+        Ok(suite)
+    }
+
+    /// Load from a `.toml` or `.json` file.
+    pub fn from_path(path: &Path) -> anyhow::Result<Suite> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        let doc = match path.extension().and_then(|e| e.to_str()) {
+            Some("toml") => crate::util::toml::parse(&text)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?,
+            Some("json") => Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?,
+            other => anyhow::bail!(
+                "{}: unsupported suite extension {:?} (expected .toml or .json)",
+                path.display(),
+                other
+            ),
+        };
+        let suite = Suite::from_json(&doc).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Ok(suite)
+    }
+
+    /// Run every scenario × policy cell on the shared thread pool.
+    pub fn run(&self) -> anyhow::Result<SuiteRun> {
+        self.validate()?;
+        let mut specs = Vec::new();
+        let mut cells: Vec<(String, String)> = Vec::new();
+        for sc in &self.scenarios {
+            for spec in sc.experiment_specs()? {
+                cells.push((sc.name.clone(), spec.policy.name().to_string()));
+                specs.push(spec);
+            }
+        }
+        let t0 = Instant::now();
+        let results = run_experiments(&specs);
+        let wall_s = t0.elapsed().as_secs_f64();
+        let outcomes = cells
+            .iter()
+            .zip(&results)
+            .map(|((scenario, policy), res)| ScenarioOutcome::of(scenario, policy, res))
+            .collect();
+        Ok(SuiteRun {
+            suite: self.name.clone(),
+            wall_s,
+            outcomes,
+            results,
+        })
+    }
+}
+
+// ------------------------------------------------------------- outcomes
+
+/// Normalized result of one scenario × policy cell — exactly what one
+/// entry of `BENCH_<suite>.json` serializes.
+#[derive(Clone, Debug)]
+pub struct ScenarioOutcome {
+    pub scenario: String,
+    pub policy: String,
+    pub slo_attainment: f64,
+    pub ttft_attainment: f64,
+    pub tpot_attainment: f64,
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub tpot_p50_ms: f64,
+    pub tpot_p99_ms: f64,
+    pub gpu_hours: f64,
+    pub avg_gpus: f64,
+    pub n: usize,
+    pub rejections: usize,
+    pub events: u64,
+    pub scale_ups: usize,
+    pub scale_downs: usize,
+    pub arrival_rps: f64,
+}
+
+impl ScenarioOutcome {
+    fn of(scenario: &str, policy: &str, res: &ExperimentResult) -> ScenarioOutcome {
+        let r = &res.report;
+        ScenarioOutcome {
+            scenario: scenario.to_string(),
+            policy: policy.to_string(),
+            slo_attainment: r.overall_attainment,
+            ttft_attainment: r.ttft_attainment,
+            tpot_attainment: r.tpot_attainment,
+            ttft_p50_ms: r.ttft.p50 * 1e3,
+            ttft_p99_ms: r.ttft.p99 * 1e3,
+            tpot_p50_ms: r.tpot.p50 * 1e3,
+            tpot_p99_ms: r.tpot.p99 * 1e3,
+            gpu_hours: res.sim.metrics.gpu_seconds / 3600.0,
+            avg_gpus: r.avg_gpus,
+            n: r.n,
+            rejections: r.rejected_actions,
+            events: res.sim.events_processed,
+            scale_ups: res.sim.scale_ups,
+            scale_downs: res.sim.scale_downs,
+            arrival_rps: res.sim.metrics.offered_rps(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("slo_attainment", self.slo_attainment)
+            .set("ttft_attainment", self.ttft_attainment)
+            .set("tpot_attainment", self.tpot_attainment)
+            .set("ttft_p50_ms", self.ttft_p50_ms)
+            .set("ttft_p99_ms", self.ttft_p99_ms)
+            .set("tpot_p50_ms", self.tpot_p50_ms)
+            .set("tpot_p99_ms", self.tpot_p99_ms)
+            .set("gpu_hours", self.gpu_hours)
+            .set("avg_gpus", self.avg_gpus)
+            .set("n", self.n)
+            .set("rejections", self.rejections)
+            .set("events", self.events)
+            .set("scale_ups", self.scale_ups)
+            .set("scale_downs", self.scale_downs)
+            .set("arrival_rps", self.arrival_rps)
+    }
+}
+
+/// Everything one suite execution produced.
+pub struct SuiteRun {
+    pub suite: String,
+    pub wall_s: f64,
+    /// One normalized row per scenario × policy cell, in suite order.
+    pub outcomes: Vec<ScenarioOutcome>,
+    /// Raw results, parallel to `outcomes` (custom figure rendering).
+    pub results: Vec<ExperimentResult>,
+}
+
+impl SuiteRun {
+    /// The raw result of one cell.
+    pub fn result(&self, scenario: &str, policy: &str) -> Option<&ExperimentResult> {
+        self.outcomes
+            .iter()
+            .position(|o| o.scenario == scenario && o.policy == policy)
+            .map(|i| &self.results[i])
+    }
+
+    pub fn outcome(&self, scenario: &str, policy: &str) -> Option<&ScenarioOutcome> {
+        self.outcomes
+            .iter()
+            .find(|o| o.scenario == scenario && o.policy == policy)
+    }
+
+    /// The normalized `BENCH_<suite>.json` document.
+    pub fn to_json(&self) -> Json {
+        let mut scenarios = Json::obj();
+        // Group cells: scenario -> policy -> metrics. BTreeMaps keep the
+        // serialization deterministic regardless of run order.
+        let mut names: Vec<&str> = self.outcomes.iter().map(|o| o.scenario.as_str()).collect();
+        names.dedup();
+        for name in names {
+            let mut per_policy = Json::obj();
+            for o in self.outcomes.iter().filter(|o| o.scenario == name) {
+                per_policy = per_policy.set(&o.policy, o.to_json());
+            }
+            scenarios = scenarios.set(name, per_policy);
+        }
+        Json::obj()
+            .set("schema_version", BENCH_SCHEMA_VERSION)
+            .set("suite", self.suite.as_str())
+            .set("wall_s", self.wall_s)
+            .set("scenarios", scenarios)
+    }
+
+    /// Write the normalized report (pretty-printed) to `path`.
+    pub fn write_bench(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+            .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    /// The shared summary table every suite-driven bench prints.
+    pub fn render_table(&self) -> String {
+        let mut t = Table::new(&format!("suite {} — {:.1}s wall", self.suite, self.wall_s)).header(&[
+            "scenario", "policy", "SLO att.", "TTFT att.", "TPOT att.", "GPU-hours", "avg GPUs",
+            "n", "rejects",
+        ]);
+        for o in &self.outcomes {
+            t.row(vec![
+                o.scenario.clone(),
+                o.policy.clone(),
+                pct(o.slo_attainment),
+                pct(o.ttft_attainment),
+                pct(o.tpot_attainment),
+                fnum(o.gpu_hours, 3),
+                fnum(o.avg_gpus, 2),
+                o.n.to_string(),
+                o.rejections.to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+// ------------------------------------------------------------ diff mode
+
+/// Regression-gate tolerances for [`diff_bench`].
+#[derive(Clone, Copy, Debug)]
+pub struct DiffTolerance {
+    /// Allowed absolute drop in per-cell SLO attainment (fraction, e.g.
+    /// 0.02 = two percentage points).
+    pub slo_attainment: f64,
+    /// Allowed relative growth in per-cell GPU-hours (e.g. 0.05 = +5 %).
+    pub gpu_hours_frac: f64,
+}
+
+impl Default for DiffTolerance {
+    fn default() -> Self {
+        DiffTolerance {
+            slo_attainment: 0.02,
+            gpu_hours_frac: 0.05,
+        }
+    }
+}
+
+/// One metric movement beyond tolerance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DiffFinding {
+    pub scenario: String,
+    pub policy: String,
+    pub metric: &'static str,
+    pub baseline: f64,
+    pub current: f64,
+}
+
+impl DiffFinding {
+    fn line(&self) -> String {
+        format!(
+            "{}/{} {}: {:.4} -> {:.4}",
+            self.scenario, self.policy, self.metric, self.baseline, self.current
+        )
+    }
+}
+
+/// Result of comparing a current normalized report against a baseline.
+#[derive(Clone, Debug, Default)]
+pub struct DiffReport {
+    pub regressions: Vec<DiffFinding>,
+    pub improvements: Vec<DiffFinding>,
+    /// Cells the baseline has but the current report lost (coverage
+    /// regressions — they gate too).
+    pub missing: Vec<String>,
+    /// Cells only the current report has (informational).
+    pub added: Vec<String>,
+}
+
+impl DiffReport {
+    /// True when the current report is no worse than the baseline.
+    pub fn clean(&self) -> bool {
+        self.regressions.is_empty() && self.missing.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if self.clean() {
+            out.push_str("no regressions beyond tolerance\n");
+        }
+        for r in &self.regressions {
+            out.push_str(&format!("REGRESSION  {}\n", r.line()));
+        }
+        for m in &self.missing {
+            out.push_str(&format!("MISSING     {m} (in baseline, not in current)\n"));
+        }
+        for i in &self.improvements {
+            out.push_str(&format!("improved    {}\n", i.line()));
+        }
+        for a in &self.added {
+            out.push_str(&format!("new cell    {a}\n"));
+        }
+        out
+    }
+}
+
+/// Compare two normalized `BENCH_*.json` documents cell by cell. A cell
+/// regresses when SLO attainment drops more than `tol.slo_attainment`
+/// (absolute) or GPU-hours grow more than `tol.gpu_hours_frac`
+/// (relative); symmetric movements count as improvements.
+pub fn diff_bench(current: &Json, baseline: &Json, tol: &DiffTolerance) -> anyhow::Result<DiffReport> {
+    let cells = |doc: &Json, which: &str| -> anyhow::Result<Vec<(String, String, f64, f64)>> {
+        let scenarios = doc
+            .get("scenarios")
+            .ok_or_else(|| anyhow::anyhow!("{which} report has no `scenarios` object"))?;
+        let Json::Obj(map) = scenarios else {
+            anyhow::bail!("{which} report: `scenarios` is not an object");
+        };
+        let mut out = Vec::new();
+        for (scenario, policies) in map {
+            let Json::Obj(pm) = policies else {
+                anyhow::bail!("{which} report: scenario `{scenario}` is not an object");
+            };
+            for (policy, cell) in pm {
+                let slo = cell
+                    .get("slo_attainment")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("{which} report: {scenario}/{policy} lacks slo_attainment")
+                    })?;
+                let gpu = cell.get("gpu_hours").and_then(Json::as_f64).ok_or_else(|| {
+                    anyhow::anyhow!("{which} report: {scenario}/{policy} lacks gpu_hours")
+                })?;
+                out.push((scenario.clone(), policy.clone(), slo, gpu));
+            }
+        }
+        Ok(out)
+    };
+    let cur = cells(current, "current")?;
+    let base = cells(baseline, "baseline")?;
+
+    let mut report = DiffReport::default();
+    for (scenario, policy, b_slo, b_gpu) in &base {
+        let Some((_, _, c_slo, c_gpu)) = cur
+            .iter()
+            .find(|(s, p, _, _)| s == scenario && p == policy)
+        else {
+            report.missing.push(format!("{scenario}/{policy}"));
+            continue;
+        };
+        if *c_slo < b_slo - tol.slo_attainment {
+            report.regressions.push(DiffFinding {
+                scenario: scenario.clone(),
+                policy: policy.clone(),
+                metric: "slo_attainment",
+                baseline: *b_slo,
+                current: *c_slo,
+            });
+        } else if *c_slo > b_slo + tol.slo_attainment {
+            report.improvements.push(DiffFinding {
+                scenario: scenario.clone(),
+                policy: policy.clone(),
+                metric: "slo_attainment",
+                baseline: *b_slo,
+                current: *c_slo,
+            });
+        }
+        let gpu_limit = b_gpu * (1.0 + tol.gpu_hours_frac) + 1e-9;
+        if *c_gpu > gpu_limit {
+            report.regressions.push(DiffFinding {
+                scenario: scenario.clone(),
+                policy: policy.clone(),
+                metric: "gpu_hours",
+                baseline: *b_gpu,
+                current: *c_gpu,
+            });
+        } else if *c_gpu < b_gpu * (1.0 - tol.gpu_hours_frac) - 1e-9 {
+            report.improvements.push(DiffFinding {
+                scenario: scenario.clone(),
+                policy: policy.clone(),
+                metric: "gpu_hours",
+                baseline: *b_gpu,
+                current: *c_gpu,
+            });
+        }
+    }
+    for (scenario, policy, _, _) in &cur {
+        if !base.iter().any(|(s, p, _, _)| s == scenario && p == policy) {
+            report.added.push(format!("{scenario}/{policy}"));
+        }
+    }
+    Ok(report)
+}
+
+// ---------------------------------------------------- built-in suites
+
+/// Fig. 4 — stage utilization during an RPS 8→16→8 step burst on a fixed
+/// 2-prefiller + 1-decoder fleet.
+pub fn fig4_suite() -> Suite {
+    Suite::new("fig4", "stage utilization during a step burst (static fleet)").scenario(
+        Scenario::new(
+            "step-util",
+            "small-a100",
+            WorkloadSpec::Step {
+                base_rps: 8.0,
+                burst_rps: 16.0,
+                burst_start_s: 4.0,
+                burst_len_s: 4.0,
+                duration_s: 16.0,
+                input_tokens: 1024,
+                output_tokens: 128,
+                seed: 11,
+            },
+        )
+        .policy("static")
+        .with_overrides(ScenarioOverrides {
+            prefillers: Some(2),
+            decoders: Some(1),
+            max_gpus: Some(3),
+            sample_interval_s: Some(0.25),
+            ..Default::default()
+        })
+        .materialized(),
+    )
+}
+
+/// Fig. 9 — the headline end-to-end grid: both A100 setups × three trace
+/// families × all four policies.
+pub fn fig9_suite(duration_s: f64) -> Suite {
+    let mut suite = Suite::new(
+        "fig9",
+        "SLO attainment vs avg GPUs across setups, traces and policies",
+    );
+    for setup in ["small-a100", "large-a100"] {
+        for family in [TraceFamily::AzureConv, TraceFamily::AzureCode, TraceFamily::Mixed] {
+            suite = suite.scenario(
+                Scenario::new(
+                    format!("{setup}/{}", family.name()),
+                    setup,
+                    WorkloadSpec::Synthetic {
+                        family,
+                        rps: 22.0,
+                        duration_s,
+                        seed: 42,
+                    },
+                )
+                .all_baselines()
+                .materialized(),
+            );
+        }
+    }
+    suite
+}
+
+/// Fig. 10 — TTFT/throughput timelines under a 10× burst from a minimal
+/// 1 prefiller + 1 decoder fleet.
+pub fn fig10_suite() -> Suite {
+    Suite::new("fig10", "TTFT and decode-throughput timelines under a 10x burst").scenario(
+        Scenario::new(
+            "burst-10x",
+            "small-a100",
+            WorkloadSpec::Step {
+                base_rps: 1.0,
+                burst_rps: 10.0,
+                burst_start_s: 10.0,
+                burst_len_s: 8.0,
+                duration_s: 30.0,
+                input_tokens: 1000,
+                output_tokens: 64,
+                seed: 99,
+            },
+        )
+        .all_baselines()
+        .with_overrides(ScenarioOverrides {
+            warmup_s: 0.0,
+            prefillers: Some(1),
+            decoders: Some(1),
+            ..Default::default()
+        })
+        .materialized(),
+    )
+}
+
+/// Fig. 11 — provisioned-vs-required correlation: the four policies plus
+/// an overprovisioned static ground-truth fleet on the same trace.
+pub fn fig11_suite() -> Suite {
+    let workload = WorkloadSpec::Synthetic {
+        family: TraceFamily::AzureConv,
+        rps: 22.0,
+        duration_s: 300.0,
+        seed: 17,
+    };
+    Suite::new("fig11", "provisioned vs required instances (Pearson correlation)")
+        .scenario(
+            Scenario::new("provisioning", "small-a100", workload.clone())
+                .all_baselines()
+                .materialized(),
+        )
+        .scenario(
+            Scenario::new("ground-truth", "small-a100", workload)
+                .policy("static")
+                .with_overrides(ScenarioOverrides {
+                    prefillers: Some(8),
+                    decoders: Some(8),
+                    max_gpus: Some(64),
+                    ..Default::default()
+                })
+                .materialized(),
+        )
+}
+
+/// Fig. 12 — TokenScale vs output-predictor accuracy (100 % → 50 %).
+pub fn fig12_suite() -> Suite {
+    let mut suite = Suite::new("fig12", "TokenScale performance/cost vs predictor accuracy");
+    for acc in [1.0, 0.9, 0.8, 0.7, 0.6, 0.5] {
+        suite = suite.scenario(
+            Scenario::new(
+                format!("acc-{:.0}", acc * 100.0),
+                "small-a100",
+                WorkloadSpec::Synthetic {
+                    family: TraceFamily::Mixed,
+                    rps: 22.0,
+                    duration_s: 300.0,
+                    seed: 23,
+                },
+            )
+            .policy("tokenscale")
+            .with_overrides(ScenarioOverrides {
+                predictor_accuracy: Some(acc),
+                ..Default::default()
+            })
+            .materialized(),
+        );
+    }
+    suite
+}
+
+/// Fig. 13 — SLO attainment vs Convertible Decoder count (0–4).
+pub fn fig13_suite() -> Suite {
+    let mut suite = Suite::new("fig13", "SLO attainment vs convertible decoder count");
+    for n in 0..=4usize {
+        suite = suite.scenario(
+            Scenario::new(
+                format!("cd-{n}"),
+                "small-a100",
+                WorkloadSpec::Synthetic {
+                    family: TraceFamily::Mixed,
+                    rps: 22.0,
+                    duration_s: 300.0,
+                    seed: 29,
+                },
+            )
+            .policy("tokenscale")
+            .with_overrides(ScenarioOverrides {
+                convertibles: Some(n),
+                ..Default::default()
+            })
+            .materialized(),
+        );
+    }
+    suite
+}
+
+/// Fig. 14 — component ablation B → B+P → B+P+D → full TokenScale.
+pub fn fig14_suite() -> Suite {
+    Suite::new("fig14", "component ablation on the mixed trace").scenario(
+        Scenario::new(
+            "ablation-mixed",
+            "small-a100",
+            WorkloadSpec::Synthetic {
+                family: TraceFamily::Mixed,
+                rps: 22.0,
+                duration_s: 300.0,
+                seed: 31,
+            },
+        )
+        .policies(&["distserve", "b+p", "b+p+d", "tokenscale"])
+        .materialized(),
+    )
+}
+
+/// Fig. 15 — hardware generality on the H100 cluster.
+pub fn fig15_suite() -> Suite {
+    let mut suite = Suite::new("fig15", "TokenScale vs DistServe on the H100 cluster");
+    for family in [TraceFamily::AzureConv, TraceFamily::AzureCode, TraceFamily::Mixed] {
+        suite = suite.scenario(
+            Scenario::new(
+                family.name(),
+                "h100",
+                WorkloadSpec::Synthetic {
+                    family,
+                    rps: 60.0,
+                    duration_s: 300.0,
+                    seed: 37,
+                },
+            )
+            .policies(&["distserve", "tokenscale"])
+            .materialized(),
+        );
+    }
+    suite
+}
+
+/// §VI-B1 — decoder-count validation: static decoder sweep on the
+/// uniform nine-bucket mix.
+pub fn decoder_validation_suite() -> Suite {
+    let mut suite = Suite::new(
+        "decoder-validation",
+        "Eq. 3 decoder-count validation: static sweep on the uniform bucket mix",
+    );
+    for d in 1..=6usize {
+        suite = suite.scenario(
+            Scenario::new(
+                format!("d-{d}"),
+                "small-a100",
+                WorkloadSpec::UniformBuckets {
+                    rps: 6.0,
+                    duration_s: 300.0,
+                    seed: 41,
+                },
+            )
+            .policy("static")
+            .with_overrides(ScenarioOverrides {
+                prefillers: Some(4),
+                decoders: Some(d),
+                max_gpus: Some(32),
+                ..Default::default()
+            })
+            .materialized(),
+        );
+    }
+    suite
+}
+
+/// Hour-scale scenario library on `large-a100`: the original diurnal and
+/// burst-injected sweeps plus the three ROADMAP growth scenarios —
+/// weekend trough, flash-crowd step (BurstInject) and a trace splice
+/// (`Window` over a replayed file).
+pub fn longtrace_suite(duration_s: f64, rps: f64) -> Suite {
+    // The diurnal combinator thins by 1/(1+a) on average, so base
+    // generators run proportionally hotter to land near `rps`.
+    let diurnal_amp = 0.35;
+    let trough_amp = 0.6;
+    let bursts: Vec<BurstWindow> = (0..6)
+        .map(|i| {
+            BurstWindow::new(
+                duration_s * (0.08 + 0.15 * i as f64),
+                duration_s.min(90.0).min(duration_s * 0.05),
+                3.0,
+            )
+        })
+        .collect();
+    Suite::new(
+        "longtrace",
+        "hour-scale streaming scenario sweeps on large-a100",
+    )
+    .scenario(
+        Scenario::new(
+            "diurnal-conv",
+            "large-a100",
+            WorkloadSpec::Synthetic {
+                family: TraceFamily::AzureConv,
+                rps: rps * (1.0 + diurnal_amp),
+                duration_s,
+                seed: 101,
+            },
+        )
+        .transform(TransformStep::Diurnal {
+            amplitude: diurnal_amp,
+            period_s: duration_s,
+            seed: 202,
+        })
+        .all_baselines(),
+    )
+    .scenario(
+        Scenario::new(
+            "burst-mixed",
+            "large-a100",
+            WorkloadSpec::Synthetic {
+                family: TraceFamily::Mixed,
+                rps,
+                duration_s,
+                seed: 303,
+            },
+        )
+        .transform(TransformStep::Burst {
+            windows: bursts,
+            seed: 404,
+        })
+        .all_baselines(),
+    )
+    .scenario(
+        // Weekend trough: one deep day/night period — traffic crests in
+        // the first half and bottoms out around 3T/4, exercising
+        // scale-down depth and the ramp back up.
+        Scenario::new(
+            "weekend-trough",
+            "large-a100",
+            WorkloadSpec::Synthetic {
+                family: TraceFamily::AzureConv,
+                rps: rps * (1.0 + trough_amp),
+                duration_s,
+                seed: 505,
+            },
+        )
+        .transform(TransformStep::Diurnal {
+            amplitude: trough_amp,
+            period_s: duration_s,
+            seed: 606,
+        })
+        .all_baselines(),
+    )
+    .scenario(
+        // Flash crowd: a single sustained step to 4x mid-run (viral-link
+        // shape) rather than scattered short spikes.
+        Scenario::new(
+            "flash-crowd",
+            "large-a100",
+            WorkloadSpec::Synthetic {
+                family: TraceFamily::Mixed,
+                rps,
+                duration_s,
+                seed: 707,
+            },
+        )
+        .transform(TransformStep::Burst {
+            windows: vec![BurstWindow::new(duration_s * 0.45, duration_s * 0.10, 4.0)],
+            seed: 808,
+        })
+        .all_baselines(),
+    )
+    .scenario(
+        // Trace splice: a window cut from the bundled replay file,
+        // resampled to the sweep's target rate.
+        Scenario::new(
+            "splice-replay",
+            "large-a100",
+            WorkloadSpec::Replay {
+                path: "examples/traces/azure_conv_sample.csv".into(),
+            },
+        )
+        .transform(TransformStep::Window { t0: 10.0, t1: 90.0 })
+        .transform(TransformStep::Resample {
+            target_rps: rps,
+            seed: 909,
+        })
+        .all_baselines(),
+    )
+}
+
+/// Every built-in suite at its default scale.
+pub fn builtin_suites() -> Vec<Suite> {
+    let (lt_duration, lt_rps) = LONGTRACE_FULL_SCALE;
+    vec![
+        fig4_suite(),
+        fig9_suite(300.0),
+        fig10_suite(),
+        fig11_suite(),
+        fig12_suite(),
+        fig13_suite(),
+        fig14_suite(),
+        fig15_suite(),
+        decoder_validation_suite(),
+        longtrace_suite(lt_duration, lt_rps),
+    ]
+}
+
+/// File-based suites under `dir`: every `.toml`/`.json`, with per-file
+/// load results so `bench list` can show broken files without dying.
+pub fn file_suites(dir: &Path) -> Vec<(PathBuf, anyhow::Result<Suite>)> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return out;
+    };
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            matches!(
+                p.extension().and_then(|e| e.to_str()),
+                Some("toml") | Some("json")
+            )
+        })
+        .collect();
+    paths.sort();
+    for p in paths {
+        let suite = Suite::from_path(&p);
+        out.push((p, suite));
+    }
+    out
+}
+
+/// Resolve a suite by name: built-ins first, then
+/// `scenarios/<name>.{toml,json}`, then `name` as a literal path.
+pub fn find_suite(name: &str) -> anyhow::Result<Suite> {
+    if let Some(s) = builtin_suites().into_iter().find(|s| s.name == name) {
+        return Ok(s);
+    }
+    for ext in ["toml", "json"] {
+        let p = Path::new(SCENARIO_DIR).join(format!("{name}.{ext}"));
+        if p.exists() {
+            return Suite::from_path(&p);
+        }
+    }
+    let p = Path::new(name);
+    if p.exists() {
+        return Suite::from_path(p);
+    }
+    let known: Vec<String> = builtin_suites().into_iter().map(|s| s.name).collect();
+    anyhow::bail!(
+        "unknown suite `{name}` (built-ins: {}; or a file under {SCENARIO_DIR}/)",
+        known.join(", ")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_suites_validate() {
+        let suites = builtin_suites();
+        assert!(suites.len() >= 10);
+        for s in &suites {
+            s.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+            assert!(!s.scenarios.is_empty(), "{}", s.name);
+        }
+        // The ROADMAP growth scenarios are in the longtrace library.
+        let lt = suites.iter().find(|s| s.name == "longtrace").unwrap();
+        for want in ["diurnal-conv", "burst-mixed", "weekend-trough", "flash-crowd", "splice-replay"] {
+            assert!(
+                lt.scenarios.iter().any(|sc| sc.name == want),
+                "longtrace lacks {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn suite_json_round_trip() {
+        let s = fig12_suite();
+        let back = Suite::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn duplicate_scenario_names_rejected() {
+        let s = Suite::new("dup", "")
+            .scenario(fig14_suite().scenarios[0].clone())
+            .scenario(fig14_suite().scenarios[0].clone());
+        assert!(matches!(
+            s.validate(),
+            Err(ScenarioError::DuplicateScenario { .. })
+        ));
+    }
+
+    #[test]
+    fn single_scenario_document_becomes_suite_of_one() {
+        let sc = fig14_suite().scenarios[0].clone();
+        let suite = Suite::from_json(&sc.to_json()).unwrap();
+        assert_eq!(suite.scenarios.len(), 1);
+        assert_eq!(suite.name, sc.name);
+    }
+
+    #[test]
+    fn diff_flags_regressions_and_missing_cells() {
+        let cell = |slo: f64, gpu: f64| Json::obj().set("slo_attainment", slo).set("gpu_hours", gpu);
+        let doc = |slo: f64, gpu: f64, extra: bool| {
+            let mut pols = Json::obj().set("tokenscale", cell(slo, gpu));
+            if extra {
+                pols = pols.set("distserve", cell(0.8, 2.0));
+            }
+            Json::obj()
+                .set("schema_version", BENCH_SCHEMA_VERSION)
+                .set("suite", "t")
+                .set("wall_s", 1.0)
+                .set("scenarios", Json::obj().set("s1", pols))
+        };
+        let tol = DiffTolerance::default();
+
+        // Within tolerance: clean.
+        let d = diff_bench(&doc(0.94, 1.02, true), &doc(0.95, 1.0, true), &tol).unwrap();
+        assert!(d.clean(), "{:?}", d);
+
+        // SLO drop beyond tolerance: regression.
+        let d = diff_bench(&doc(0.90, 1.0, true), &doc(0.95, 1.0, true), &tol).unwrap();
+        assert!(!d.clean());
+        assert_eq!(d.regressions.len(), 1);
+        assert_eq!(d.regressions[0].metric, "slo_attainment");
+
+        // GPU-hours growth beyond tolerance: regression.
+        let d = diff_bench(&doc(0.95, 1.2, true), &doc(0.95, 1.0, true), &tol).unwrap();
+        assert_eq!(d.regressions.len(), 1);
+        assert_eq!(d.regressions[0].metric, "gpu_hours");
+
+        // Lost cell: gates as missing.
+        let d = diff_bench(&doc(0.95, 1.0, false), &doc(0.95, 1.0, true), &tol).unwrap();
+        assert!(!d.clean());
+        assert_eq!(d.missing, vec!["s1/distserve".to_string()]);
+
+        // Improvements are informational.
+        let d = diff_bench(&doc(0.99, 0.8, true), &doc(0.90, 1.0, true), &tol).unwrap();
+        assert!(d.clean());
+        assert_eq!(d.improvements.len(), 2);
+    }
+}

@@ -8,16 +8,16 @@
 //! Control planes implement the action-based [`ControlPlane`] v2 API
 //! (docs/control_plane.md): the engine delivers typed [`Signal`]s with a
 //! read-only [`ClusterView`], policies answer with typed [`Action`]s, and
-//! the engine validates, applies and audits them. The pre-redesign
-//! `Coordinator` trait survives one more PR in [`legacy`] as the
-//! equivalence oracle.
+//! the engine validates, applies and audits them. (The pre-redesign
+//! `Coordinator` trait and its frozen v1 engine were deleted after the
+//! v1→v2 equivalence gate ran its course in PR 3; the surviving
+//! determinism assertions live in `rust/tests/control_plane_equivalence.rs`.)
 
 pub mod audit;
 pub mod cluster;
 pub mod engine;
 pub mod event;
 pub mod instance;
-pub mod legacy;
 pub mod policy;
 pub mod view;
 

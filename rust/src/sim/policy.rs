@@ -2,10 +2,10 @@
 //!
 //! The simulator owns the *mechanics* (queues, batches, transfers, memory,
 //! clocks); a [`ControlPlane`] owns the *decisions*. Where the old
-//! `Coordinator` trait (now frozen in [`crate::sim::legacy`] for one PR as
-//! the equivalence oracle) could only answer two fixed questions — "where
-//! does this prefill go?" and "how many instances do you want?" — v2
-//! inverts the boundary into a command API:
+//! `Coordinator` trait (deleted after its frozen copy served one PR as
+//! the v1→v2 equivalence oracle) could only answer two fixed questions —
+//! "where does this prefill go?" and "how many instances do you want?" —
+//! v2 inverts the boundary into a command API:
 //!
 //! - the engine delivers typed [`Signal`]s (arrivals, prefill/decode
 //!   hand-offs, control ticks, instance lifecycle notifications) together

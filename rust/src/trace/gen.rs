@@ -345,6 +345,33 @@ pub fn step_trace(
     }
 }
 
+/// Uniform nine-bucket mix at the given request rate: Poisson arrivals
+/// cycling through the bucket representatives in order (§VI-B1 decoder-
+/// count validation; also the `uniform-buckets` scenario workload).
+pub fn uniform_bucket_trace(rps: f64, duration_s: f64, seed: u64) -> Trace {
+    let scheme = crate::workload::BucketScheme::default();
+    let buckets = crate::workload::all_buckets();
+    let mut rng = Pcg64::new(seed);
+    let mut requests = Vec::new();
+    let mut t = 0.0;
+    let mut id = 0u64;
+    loop {
+        t += rng.exponential(rps);
+        if t >= duration_s {
+            break;
+        }
+        let b = buckets[(id as usize) % buckets.len()];
+        let (input, output) = scheme.representative(b);
+        requests.push(Request::new(id, t, input, output));
+        id += 1;
+    }
+    Trace {
+        name: "uniform-9-bucket".into(),
+        duration_s,
+        requests,
+    }
+}
+
 /// The Fig. 6 toy workload: two bursts over stable traffic — at `t1`
 /// five 2-token requests (request burst), at `t2` two 5-token requests
 /// (token burst).

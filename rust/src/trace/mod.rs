@@ -19,8 +19,8 @@ pub mod spec;
 pub mod transform;
 
 pub use gen::{
-    family_source, fig6_trace, generate, generate_family, generate_mixed, step_trace, MixedSource,
-    SpecSource, Trace,
+    family_source, fig6_trace, generate, generate_family, generate_mixed, step_trace,
+    uniform_bucket_trace, MixedSource, SpecSource, Trace,
 };
 pub use source::{
     materialize, ArrivalSource, OwnedTraceSource, SourceFactory, TraceProfile, TraceReplaySource,

@@ -308,7 +308,7 @@ impl<S: ArrivalSource> ArrivalSource for Diurnal<S> {
 /// One injected burst episode: arrivals inside
 /// `[start_s, start_s + len_s)` are duplicated so the local rate is
 /// multiplied by `rate_factor`.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct BurstWindow {
     pub start_s: f64,
     pub len_s: f64,

@@ -1,0 +1,532 @@
+//! Minimal TOML reader for scenario/suite files.
+//!
+//! The offline crate set has no `toml` (or serde), so this hand-rolled
+//! parser covers the subset the scenario library uses and lowers it into
+//! the [`Json`] value model — scenario deserialization is then
+//! format-agnostic (`report::scenario` consumes `Json` whether the file
+//! was TOML or JSON).
+//!
+//! Supported: `key = value` pairs, `[table.path]` headers, `[[array]]`
+//! array-of-tables headers (dotted paths traverse the *last* element of
+//! intermediate arrays, per TOML semantics), basic `"…"` and literal
+//! `'…'` strings, numbers, booleans, inline arrays (multi-line allowed)
+//! and inline tables, and `#` comments. Not supported (not needed by
+//! scenario files): dates, multi-line strings, dotted keys.
+
+use super::json::Json;
+use std::collections::BTreeMap;
+
+/// Parse TOML text into a [`Json`] object.
+pub fn parse(text: &str) -> anyhow::Result<Json> {
+    let mut root = Json::obj();
+    // Path of the table currently being filled by `key = value` lines.
+    let mut current: Vec<String> = Vec::new();
+    let lines: Vec<&str> = text.lines().collect();
+    let mut i = 0usize;
+    while i < lines.len() {
+        let lineno = i + 1;
+        let line = strip_comment(lines[i]);
+        i += 1;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let path = parse_path(inner, lineno)?;
+            let (last, parents) = path.split_last().expect("parse_path is non-empty");
+            let table = descend(&mut root, parents, lineno)?;
+            let map = as_obj(table, last, lineno)?;
+            let entry = map
+                .entry(last.clone())
+                .or_insert_with(|| Json::Arr(Vec::new()));
+            match entry {
+                Json::Arr(items) => items.push(Json::obj()),
+                _ => anyhow::bail!("line {lineno}: `{last}` is not an array of tables"),
+            }
+            current = path;
+        } else if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let path = parse_path(inner, lineno)?;
+            descend(&mut root, &path, lineno)?;
+            current = path;
+        } else if let Some(eq) = find_unquoted(line, '=') {
+            let key = line[..eq].trim();
+            anyhow::ensure!(
+                !key.is_empty() && key.chars().all(is_bare_key_char),
+                "line {lineno}: bad key `{key}`"
+            );
+            // Collect the value, joining following lines while brackets
+            // are unbalanced (multi-line arrays / inline tables).
+            let mut value_text = line[eq + 1..].trim().to_string();
+            while bracket_depth(&value_text) > 0 && i < lines.len() {
+                value_text.push(' ');
+                value_text.push_str(strip_comment(lines[i]).trim());
+                i += 1;
+            }
+            let value = parse_value(value_text.trim(), lineno)?;
+            let table = descend(&mut root, &current, lineno)?;
+            let map = as_obj(table, key, lineno)?;
+            anyhow::ensure!(
+                !map.contains_key(key),
+                "line {lineno}: duplicate key `{key}`"
+            );
+            map.insert(key.to_string(), value);
+        } else {
+            anyhow::bail!("line {lineno}: expected `key = value` or a [table] header");
+        }
+    }
+    Ok(root)
+}
+
+fn is_bare_key_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_' || c == '-'
+}
+
+fn parse_path(inner: &str, lineno: usize) -> anyhow::Result<Vec<String>> {
+    let segs: Vec<String> = inner.split('.').map(|s| s.trim().to_string()).collect();
+    anyhow::ensure!(
+        !segs.is_empty() && segs.iter().all(|s| !s.is_empty() && s.chars().all(is_bare_key_char)),
+        "line {lineno}: bad table path `{inner}`"
+    );
+    Ok(segs)
+}
+
+/// Walk `path` from `root`, creating empty tables for missing segments and
+/// resolving arrays-of-tables to their last element (TOML: a `[a.b]`
+/// header after `[[a]]` opens a table inside the most recent `a` entry).
+fn descend<'a>(root: &'a mut Json, path: &[String], lineno: usize) -> anyhow::Result<&'a mut Json> {
+    let mut cur = root;
+    for seg in path {
+        let map = match cur {
+            Json::Obj(m) => m,
+            _ => anyhow::bail!("line {lineno}: `{seg}` traverses a non-table value"),
+        };
+        let next = map.entry(seg.clone()).or_insert_with(Json::obj);
+        cur = match next {
+            Json::Arr(items) => items
+                .last_mut()
+                .ok_or_else(|| anyhow::anyhow!("line {lineno}: array of tables `{seg}` is empty"))?,
+            other => other,
+        };
+    }
+    Ok(cur)
+}
+
+fn as_obj<'a>(
+    v: &'a mut Json,
+    key: &str,
+    lineno: usize,
+) -> anyhow::Result<&'a mut BTreeMap<String, Json>> {
+    match v {
+        Json::Obj(m) => Ok(m),
+        _ => anyhow::bail!("line {lineno}: cannot insert `{key}` into a non-table value"),
+    }
+}
+
+/// Drive `f(index, byte)` for every byte of `line` that sits outside
+/// string literals; `f` returning `true` stops the scan. Escapes inside
+/// basic strings are tracked as a state machine (not a look-behind), so a
+/// string ending in an escaped backslash (`"dir\\"`) closes correctly.
+fn scan_outside_strings(line: &str, mut f: impl FnMut(usize, u8) -> bool) {
+    let mut in_basic = false;
+    let mut in_literal = false;
+    let mut escaped = false;
+    for (i, &b) in line.as_bytes().iter().enumerate() {
+        if in_basic {
+            if escaped {
+                escaped = false;
+            } else if b == b'\\' {
+                escaped = true;
+            } else if b == b'"' {
+                in_basic = false;
+            }
+        } else if in_literal {
+            if b == b'\'' {
+                in_literal = false;
+            }
+        } else {
+            match b {
+                b'"' => in_basic = true,
+                b'\'' => in_literal = true,
+                _ => {
+                    if f(i, b) {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Strip a `#` comment, ignoring `#` inside quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut cut = None;
+    scan_outside_strings(line, |i, b| {
+        if b == b'#' {
+            cut = Some(i);
+            true
+        } else {
+            false
+        }
+    });
+    match cut {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// Index of the first unquoted occurrence of `needle`.
+fn find_unquoted(line: &str, needle: char) -> Option<usize> {
+    let mut found = None;
+    scan_outside_strings(line, |i, b| {
+        if b == needle as u8 {
+            found = Some(i);
+            true
+        } else {
+            false
+        }
+    });
+    found
+}
+
+/// Net `[`/`{` depth of `text`, ignoring brackets inside strings.
+fn bracket_depth(text: &str) -> i32 {
+    let mut depth = 0i32;
+    scan_outside_strings(text, |_, b| {
+        match b {
+            b'[' | b'{' => depth += 1,
+            b']' | b'}' => depth -= 1,
+            _ => {}
+        }
+        false
+    });
+    depth
+}
+
+/// Recursive-descent value parser over one (joined) value string.
+struct VParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    lineno: usize,
+}
+
+fn parse_value(text: &str, lineno: usize) -> anyhow::Result<Json> {
+    let mut p = VParser {
+        bytes: text.as_bytes(),
+        pos: 0,
+        lineno,
+    };
+    let v = p.value()?;
+    p.skip_ws();
+    anyhow::ensure!(
+        p.pos == p.bytes.len(),
+        "line {lineno}: trailing characters after value in `{text}`"
+    );
+    Ok(v)
+}
+
+impl<'a> VParser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'"') => self.basic_string(),
+            Some(b'\'') => self.literal_string(),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.inline_table(),
+            Some(_) => self.scalar(),
+            None => anyhow::bail!("line {}: missing value", self.lineno),
+        }
+    }
+
+    fn basic_string(&mut self) -> anyhow::Result<Json> {
+        self.pos += 1; // opening quote
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => anyhow::bail!("line {}: unterminated string", self.lineno),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(Json::Str(out));
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        other => anyhow::bail!(
+                            "line {}: bad escape {:?}",
+                            self.lineno,
+                            other.map(|c| c as char)
+                        ),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn literal_string(&mut self) -> anyhow::Result<Json> {
+        self.pos += 1;
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b == b'\'' {
+                let s = std::str::from_utf8(&self.bytes[start..self.pos])?.to_string();
+                self.pos += 1;
+                return Ok(Json::Str(s));
+            }
+            self.pos += 1;
+        }
+        anyhow::bail!("line {}: unterminated literal string", self.lineno)
+    }
+
+    fn array(&mut self) -> anyhow::Result<Json> {
+        self.pos += 1; // '['
+        let mut items = Vec::new();
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                None => anyhow::bail!("line {}: unterminated array", self.lineno),
+                _ => {}
+            }
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1; // trailing comma before ']' is fine
+                }
+                Some(b']') => {}
+                other => anyhow::bail!(
+                    "line {}: expected `,` or `]` in array, found {:?}",
+                    self.lineno,
+                    other.map(|c| c as char)
+                ),
+            }
+        }
+    }
+
+    fn inline_table(&mut self) -> anyhow::Result<Json> {
+        self.pos += 1; // '{'
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let start = self.pos;
+            while self
+                .peek()
+                .map(|b| is_bare_key_char(b as char))
+                .unwrap_or(false)
+            {
+                self.pos += 1;
+            }
+            let key = std::str::from_utf8(&self.bytes[start..self.pos])?.to_string();
+            anyhow::ensure!(!key.is_empty(), "line {}: bad inline-table key", self.lineno);
+            self.skip_ws();
+            anyhow::ensure!(
+                self.peek() == Some(b'='),
+                "line {}: expected `=` after inline-table key `{key}`",
+                self.lineno
+            );
+            self.pos += 1;
+            let v = self.value()?;
+            anyhow::ensure!(
+                !map.contains_key(&key),
+                "line {}: duplicate inline-table key `{key}`",
+                self.lineno
+            );
+            map.insert(key, v);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(map));
+                }
+                other => anyhow::bail!(
+                    "line {}: expected `,` or `}}` in inline table, found {:?}",
+                    self.lineno,
+                    other.map(|c| c as char)
+                ),
+            }
+        }
+    }
+
+    fn scalar(&mut self) -> anyhow::Result<Json> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b == b',' || b == b']' || b == b'}' || b.is_ascii_whitespace() {
+                break;
+            }
+            self.pos += 1;
+        }
+        let token = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        match token {
+            "true" => Ok(Json::Bool(true)),
+            "false" => Ok(Json::Bool(false)),
+            _ => {
+                let cleaned = token.replace('_', "");
+                cleaned
+                    .parse::<f64>()
+                    .map(Json::Num)
+                    .map_err(|_| anyhow::anyhow!("line {}: bad value `{token}`", self.lineno))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_keys_and_types() {
+        let j = parse(
+            r#"
+# a comment
+name = "smoke"   # trailing comment
+rps = 22.5
+seed = 42
+deep = true
+tag = 'lit # not a comment'
+"#,
+        )
+        .unwrap();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("smoke"));
+        assert_eq!(j.get("rps").unwrap().as_f64(), Some(22.5));
+        assert_eq!(j.get("seed").unwrap().as_f64(), Some(42.0));
+        assert_eq!(j.get("deep").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("tag").unwrap().as_str(), Some("lit # not a comment"));
+    }
+
+    #[test]
+    fn nested_tables_and_arrays_of_tables() {
+        let j = parse(
+            r#"
+name = "suite"
+
+[[scenarios]]
+name = "a"
+
+[scenarios.workload]
+kind = "synthetic"
+rps = 5.0
+
+[[scenarios.transforms]]
+op = "window"
+t0 = 0.0
+t1 = 60.0
+
+[[scenarios]]
+name = "b"
+
+[scenarios.workload]
+kind = "replay"
+path = "examples/traces/azure_conv_sample.csv"
+"#,
+        )
+        .unwrap();
+        let scenarios = j.get("scenarios").unwrap().as_arr().unwrap();
+        assert_eq!(scenarios.len(), 2);
+        assert_eq!(scenarios[0].get("name").unwrap().as_str(), Some("a"));
+        assert_eq!(
+            scenarios[0].get_path(&["workload", "kind"]).unwrap().as_str(),
+            Some("synthetic")
+        );
+        let tr = scenarios[0].get("transforms").unwrap().as_arr().unwrap();
+        assert_eq!(tr[0].get("op").unwrap().as_str(), Some("window"));
+        assert_eq!(tr[0].get("t1").unwrap().as_f64(), Some(60.0));
+        assert_eq!(
+            scenarios[1].get_path(&["workload", "path"]).unwrap().as_str(),
+            Some("examples/traces/azure_conv_sample.csv")
+        );
+    }
+
+    #[test]
+    fn inline_arrays_and_tables_multiline() {
+        let j = parse(
+            r#"
+policies = ["tokenscale", "distserve"]
+windows = [
+    { start_s = 10.0, len_s = 5.0, rate_factor = 3.0 },
+    { start_s = 40.0, len_s = 5.0, rate_factor = 2.0 },
+]
+"#,
+        )
+        .unwrap();
+        let pols = j.get("policies").unwrap().as_arr().unwrap();
+        assert_eq!(pols[1].as_str(), Some("distserve"));
+        let wins = j.get("windows").unwrap().as_arr().unwrap();
+        assert_eq!(wins.len(), 2);
+        assert_eq!(wins[0].get("rate_factor").unwrap().as_f64(), Some(3.0));
+        assert_eq!(wins[1].get("start_s").unwrap().as_f64(), Some(40.0));
+    }
+
+    #[test]
+    fn escaped_backslash_closes_string_before_comment() {
+        // The closing quote after an escaped backslash really closes the
+        // string, so the trailing comment is stripped.
+        let j = parse(r#"path = "dir\\" # trailing comment"#).unwrap();
+        assert_eq!(j.get("path").unwrap().as_str(), Some("dir\\"));
+    }
+
+    #[test]
+    fn duplicate_inline_table_key_rejected() {
+        let e = parse("w = { a = 1.0, a = 2.0 }").unwrap_err().to_string();
+        assert!(e.contains("duplicate inline-table key"), "{e}");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        for (text, frag) in [
+            ("= 3", "key"),
+            ("x = ", "missing value"),
+            ("x = nope", "bad value"),
+            ("x = 1\nx = 2", "duplicate"),
+            ("just a line", "expected"),
+            ("[a]\nx = 1\n[a.x]\ny = 2", "non-table"),
+        ] {
+            let e = parse(text).unwrap_err().to_string();
+            assert!(e.contains(frag), "`{text}` -> `{e}`");
+        }
+    }
+
+    #[test]
+    fn matches_json_model() {
+        let toml = parse(
+            r#"
+name = "x"
+[nested]
+a = 1.0
+b = ["y", 2.0]
+"#,
+        )
+        .unwrap();
+        let json = Json::parse(r#"{"name":"x","nested":{"a":1,"b":["y",2]}}"#).unwrap();
+        assert_eq!(toml, json);
+    }
+}

@@ -1,35 +1,27 @@
-//! The v1→v2 control-plane redesign equivalence gate.
+//! Determinism gate for the action-based control-plane engine.
 //!
-//! The action-based ControlPlane v2 API replaced the old `Coordinator`
-//! trait; the pre-redesign engine loop is frozen in `sim::legacy` for one
-//! PR exactly so this test can prove the swap changed *nothing* about the
-//! results: every policy is built once through the registry, then driven
+//! The v1→v2 redesign shipped with a frozen `sim::legacy` oracle proving
+//! the swap was bit-identical; that oracle (and its test leg) was deleted
+//! one PR later as scheduled. What survives is the part of the contract
+//! that must keep holding: for every stock policy, the same scenario run
+//! twice — through the declarative [`Scenario`] layer, the way every
+//! suite cell runs — produces **bit-identical** results: every `SloReport`
+//! field (attainments, GPU cost, every latency percentile), every
+//! completion, the event count, the scaling activity, and zero rejected
+//! actions.
 //!
-//! - through the frozen v1 engine (via `V1Bridge`, which reproduces the
-//!   old observe/route/scale/predict call pattern), and
-//! - through the v2 signal/action engine,
-//!
-//! and the two runs must agree **bit for bit**: every `SloReport` field
-//! (attainments, GPU cost, every latency percentile), every completion,
-//! the event count and the scaling activity. Scenarios cover the fig6-
-//! style policy-compare smoke (Mixed @ 22 RPS on `small-a100`) and both
-//! `fig_longtrace --smoke` scenario shapes (diurnal Azure-Conversation
-//! and burst-injected Mixed on `large-a100`), for TokenScale and all
-//! three baselines.
+//! Scenarios cover the fig6/9-style policy-compare smoke (Mixed @ 22 RPS
+//! on `small-a100`) and both `fig_longtrace --smoke` scenario shapes
+//! (diurnal Azure-Conversation and burst-injected Mixed on `large-a100`).
 
 use tokenscale::metrics::SloReport;
-use tokenscale::report::runner::{
-    run_experiment_legacy, run_experiment_source_legacy, RunOverrides,
-};
 use tokenscale::report::{
-    deployment, run_experiment, run_experiment_source, ExperimentResult, PolicyKind,
+    run_experiment, ExperimentResult, Scenario, TransformStep, WorkloadSpec,
 };
-use tokenscale::trace::{
-    generate_family, ArrivalSource, BurstWindow, MixedSource, SourceExt, SpecSource, TraceFamily,
-};
+use tokenscale::trace::{BurstWindow, TraceFamily};
 use tokenscale::util::stats::Summary;
 
-/// Every pre-redesign `SloReport` field, bit-exact (f64s via `to_bits`).
+/// Every `SloReport` field, bit-exact (f64s via `to_bits`).
 fn report_bits(r: &SloReport) -> Vec<u64> {
     let mut out = vec![
         r.n as u64,
@@ -70,89 +62,145 @@ fn completion_bits(res: &ExperimentResult) -> Vec<(u64, u64, u64, u64, u64)> {
         .collect()
 }
 
-fn assert_equivalent(label: &str, v1: &ExperimentResult, v2: &ExperimentResult) {
+fn assert_deterministic(label: &str, a: &ExperimentResult, b: &ExperimentResult) {
     assert_eq!(
-        report_bits(&v1.report),
-        report_bits(&v2.report),
-        "{label}: SloReport must be byte-identical across the redesign"
+        report_bits(&a.report),
+        report_bits(&b.report),
+        "{label}: SloReport must be byte-identical across repeated runs"
     );
     assert_eq!(
-        completion_bits(v1),
-        completion_bits(v2),
+        completion_bits(a),
+        completion_bits(b),
         "{label}: completions must be identical"
     );
     assert_eq!(
-        v1.sim.events_processed, v2.sim.events_processed,
+        a.sim.events_processed, b.sim.events_processed,
         "{label}: event counts must match"
     );
-    assert_eq!(v1.sim.scale_ups, v2.sim.scale_ups, "{label}: scale-ups");
-    assert_eq!(v1.sim.scale_downs, v2.sim.scale_downs, "{label}: scale-downs");
+    assert_eq!(a.sim.scale_ups, b.sim.scale_ups, "{label}: scale-ups");
+    assert_eq!(a.sim.scale_downs, b.sim.scale_downs, "{label}: scale-downs");
     assert_eq!(
-        v1.sim.metrics.gpu_seconds.to_bits(),
-        v2.sim.metrics.gpu_seconds.to_bits(),
+        a.sim.metrics.gpu_seconds.to_bits(),
+        b.sim.metrics.gpu_seconds.to_bits(),
         "{label}: GPU-seconds (cost) must be bit-identical"
     );
-    // The ported policies only emit actions the engine accepts, so the
-    // "0.0 delta" claim holds with zero rejections on the v2 path too.
+    // Stock policies only emit actions the engine accepts.
     assert_eq!(
-        v2.sim.metrics.rejections.total(),
+        a.sim.metrics.rejections.total(),
         0,
         "{label}: stock policies must have no rejected actions"
     );
-    assert!(v2.report.n > 0, "{label}: scenario must complete requests");
+    assert!(a.report.n > 0, "{label}: scenario must complete requests");
+}
+
+/// Run every (policy) cell of the scenario twice through freshly compiled
+/// specs — independent source factories, independent policy instances —
+/// and require bit equality.
+fn scenario_is_deterministic(scenario: &Scenario) {
+    let first = scenario.experiment_specs().expect("specs compile");
+    let second = scenario.experiment_specs().expect("specs compile");
+    for (sa, sb) in first.iter().zip(&second) {
+        let a = run_experiment(sa);
+        let b = run_experiment(sb);
+        assert_deterministic(&sa.label, &a, &b);
+    }
 }
 
 /// Fig. 6/9-style policy-compare smoke: the bursty Mixed family at the
-/// paper's 22 RPS on the 16-GPU `small-a100` preset.
+/// paper's 22 RPS on the 16-GPU `small-a100` preset, shared-trace mode.
 #[test]
-fn policy_compare_smoke_is_bit_identical_across_redesign() {
-    let dep = deployment("small-a100").unwrap();
-    let trace = generate_family(TraceFamily::Mixed, 22.0, 90.0, 42);
-    let ov = RunOverrides::default();
-    for policy in PolicyKind::all_baselines() {
-        let v1 = run_experiment_legacy(&dep, policy, &trace, &ov);
-        let v2 = run_experiment(&dep, policy, &trace, &ov);
-        assert_equivalent(&format!("fig6-compare/{}", policy.name()), &v1, &v2);
-    }
+fn policy_compare_smoke_is_bit_deterministic() {
+    let scenario = Scenario::new(
+        "fig6-compare",
+        "small-a100",
+        WorkloadSpec::Synthetic {
+            family: TraceFamily::Mixed,
+            rps: 22.0,
+            duration_s: 90.0,
+            seed: 42,
+        },
+    )
+    .all_baselines()
+    .materialized();
+    scenario_is_deterministic(&scenario);
 }
 
-fn diurnal_source(duration: f64, rps: f64) -> Box<dyn ArrivalSource + Send> {
-    // Same shape as fig_longtrace's "diurnal-conv" scenario (smoke scale).
-    let amp = 0.35;
-    SpecSource::new(TraceFamily::AzureConv.spec(rps * (1.0 + amp), duration), 101)
-        .diurnal(amp, duration, 202)
-        .boxed()
+/// `fig_longtrace`'s "diurnal-conv" shape at smoke scale, streaming mode.
+#[test]
+fn longtrace_diurnal_smoke_is_bit_deterministic() {
+    let (duration, rps, amp) = (150.0, 5.0, 0.35);
+    let scenario = Scenario::new(
+        "longtrace-diurnal",
+        "large-a100",
+        WorkloadSpec::Synthetic {
+            family: TraceFamily::AzureConv,
+            rps: rps * (1.0 + amp),
+            duration_s: duration,
+            seed: 101,
+        },
+    )
+    .transform(TransformStep::Diurnal {
+        amplitude: amp,
+        period_s: duration,
+        seed: 202,
+    })
+    .all_baselines();
+    scenario_is_deterministic(&scenario);
 }
 
-fn burst_source(duration: f64, rps: f64) -> Box<dyn ArrivalSource + Send> {
-    // Same shape as fig_longtrace's "burst-mixed" scenario (smoke scale).
+/// `fig_longtrace`'s "burst-mixed" shape at smoke scale, streaming mode.
+#[test]
+fn longtrace_burst_smoke_is_bit_deterministic() {
+    let duration = 150.0;
     let bursts: Vec<BurstWindow> = (0..3)
         .map(|i| BurstWindow::new(duration * (0.15 + 0.25 * i as f64), duration * 0.05, 3.0))
         .collect();
-    MixedSource::new(rps, duration, 303)
-        .inject_bursts(bursts, 404)
-        .boxed()
+    let scenario = Scenario::new(
+        "longtrace-burst",
+        "large-a100",
+        WorkloadSpec::Synthetic {
+            family: TraceFamily::Mixed,
+            rps: 5.0,
+            duration_s: duration,
+            seed: 303,
+        },
+    )
+    .transform(TransformStep::Burst {
+        windows: bursts,
+        seed: 404,
+    })
+    .all_baselines();
+    scenario_is_deterministic(&scenario);
 }
 
-fn longtrace_scenario(label: &str, make: &dyn Fn() -> Box<dyn ArrivalSource + Send>) {
-    let dep = deployment("large-a100").unwrap();
-    let ov = RunOverrides::default();
-    for policy in PolicyKind::all_baselines() {
-        let mut src1 = make();
-        let profile = src1.profile();
-        let v1 = run_experiment_source_legacy(&dep, policy, src1.as_mut(), &profile, &ov);
-        let mut src2 = make();
-        let v2 = run_experiment_source(&dep, policy, src2.as_mut(), &profile, &ov);
-        assert_equivalent(&format!("{label}/{}", policy.name()), &v1, &v2);
+/// Shared-trace and streaming modes agree when driven from the same
+/// measured workload profile: the scenario layer's `materialize` switch
+/// changes memory behavior, not results.
+#[test]
+fn materialized_and_streamed_scenarios_agree_on_measured_profile() {
+    use tokenscale::trace::TraceProfile;
+
+    let base = Scenario::new(
+        "mode-agreement",
+        "small-a100",
+        WorkloadSpec::Synthetic {
+            family: TraceFamily::AzureConv,
+            rps: 8.0,
+            duration_s: 60.0,
+            seed: 31,
+        },
+    )
+    .policies(&["tokenscale", "distserve"]);
+
+    let trace = base.build_trace().expect("materialize");
+    let profile = TraceProfile::of_trace(&trace);
+    let shared_specs = base.clone().materialized().experiment_specs().unwrap();
+    let streamed_specs = base.experiment_specs().unwrap();
+    for (shared, streamed) in shared_specs.iter().zip(&streamed_specs) {
+        let a = run_experiment(shared);
+        // Pin the streamed cell to the measured profile so the only
+        // difference is preloaded-vs-streamed arrival delivery.
+        let b = run_experiment(&streamed.clone().with_profile(profile));
+        assert_deterministic(&shared.label, &a, &b);
     }
-}
-
-#[test]
-fn longtrace_diurnal_smoke_is_bit_identical_across_redesign() {
-    longtrace_scenario("longtrace-diurnal", &|| diurnal_source(150.0, 5.0));
-}
-
-#[test]
-fn longtrace_burst_smoke_is_bit_identical_across_redesign() {
-    longtrace_scenario("longtrace-burst", &|| burst_source(150.0, 5.0));
 }

@@ -4,7 +4,7 @@
 use std::sync::Arc;
 use tokenscale::perfmodel::{catalog, EngineModel};
 use tokenscale::report::runner::RunOverrides;
-use tokenscale::report::{deployment, run_experiment, PolicyKind};
+use tokenscale::report::{deployment, run_experiment, ExperimentSpec, PolicyKind};
 use tokenscale::sim::{simulate, ClusterConfig, SimConfig, StaticCoordinator};
 use tokenscale::trace::{step_trace, Trace};
 use tokenscale::workload::Request;
@@ -93,14 +93,13 @@ fn tiny_gpu_cap_still_serves_with_degraded_slo() {
     dep2.initial_prefillers = 1;
     dep2.initial_decoders = 1;
     let res = run_experiment(
-        &dep2,
-        PolicyKind::named("tokenscale"),
-        &trace,
-        &RunOverrides {
-            convertibles: Some(0),
-            warmup_s: 0.0,
-            ..Default::default()
-        },
+        &ExperimentSpec::shared(&dep2, PolicyKind::named("tokenscale"), &trace).with_overrides(
+            RunOverrides {
+                convertibles: Some(0),
+                warmup_s: 0.0,
+                ..Default::default()
+            },
+        ),
     );
     // Overload: most requests finish (eventually) and none vanish.
     assert!(res.report.n + res.sim.metrics.dropped > 0);
@@ -116,14 +115,13 @@ fn zero_output_predictor_accuracy_still_works() {
     let dep = deployment("small-a100").unwrap();
     let trace = step_trace(6.0, 6.0, 0.0, 0.0, 30.0, 512, 128, 5);
     let res = run_experiment(
-        &dep,
-        PolicyKind::named("tokenscale"),
-        &trace,
-        &RunOverrides {
-            predictor_accuracy: Some(0.0),
-            warmup_s: 0.0,
-            ..Default::default()
-        },
+        &ExperimentSpec::shared(&dep, PolicyKind::named("tokenscale"), &trace).with_overrides(
+            RunOverrides {
+                predictor_accuracy: Some(0.0),
+                warmup_s: 0.0,
+                ..Default::default()
+            },
+        ),
     );
     // Always-wrong predictions cost efficiency, never correctness.
     assert_eq!(res.report.n, trace.requests.len());

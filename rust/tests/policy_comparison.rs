@@ -6,13 +6,12 @@
 //! runner — the same string-keyed path the CLI and every bench use.
 
 use tokenscale::metrics::SloReport;
-use tokenscale::report::runner::RunOverrides;
-use tokenscale::report::{deployment, run_experiment, PolicyKind};
+use tokenscale::report::{deployment, run_experiment, ExperimentSpec, PolicyKind};
 use tokenscale::trace::{generate_family, Trace, TraceFamily};
 
 fn run_policy(name: &str, trace: &Trace) -> SloReport {
     let dep = deployment("small-a100").unwrap();
-    let res = run_experiment(&dep, PolicyKind::named(name), trace, &RunOverrides::default());
+    let res = run_experiment(&ExperimentSpec::shared(&dep, PolicyKind::named(name), trace));
     let report = res.report;
     eprintln!(
         "{name:12} attainment={:.3} (ttft {:.3} tpot {:.3}) gpus={:.2} n={}",

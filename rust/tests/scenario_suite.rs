@@ -1,0 +1,353 @@
+//! Scenario-suite API safety nets:
+//!
+//! 1. **Serialization** — scenarios and suites round-trip through JSON
+//!    and parse from the TOML scenario-file format; malformed documents
+//!    surface as *typed* [`ScenarioError`]s (unknown policy names, bad
+//!    transform chains), not panics or stringly failures.
+//! 2. **Golden schema** — the normalized `BENCH_<suite>.json` layout is
+//!    pinned by `rust/tests/golden/bench_schema.golden`; any structural
+//!    change must bump [`BENCH_SCHEMA_VERSION`] and update the golden.
+//! 3. **Regression gate** — `tokenscale bench diff` exits nonzero on an
+//!    injected SLO regression in a fixture and zero on a clean pair.
+//! 4. **Library files** — the shipped `scenarios/*.toml` suites (CI's
+//!    `smoke`) parse and validate.
+
+use std::collections::BTreeSet;
+use tokenscale::report::{
+    Scenario, ScenarioError, Suite, TransformStep, WorkloadSpec, BENCH_SCHEMA_VERSION,
+};
+use tokenscale::trace::{BurstWindow, TraceFamily};
+use tokenscale::util::json::Json;
+use tokenscale::util::toml;
+
+fn demo_suite() -> Suite {
+    Suite::new("demo", "round-trip fixture")
+        .scenario(
+            Scenario::new(
+                "windowed-conv",
+                "small-a100",
+                WorkloadSpec::Synthetic {
+                    family: TraceFamily::AzureConv,
+                    rps: 10.0,
+                    duration_s: 120.0,
+                    seed: 7,
+                },
+            )
+            .policies(&["tokenscale", "distserve"])
+            .transform(TransformStep::Window { t0: 0.0, t1: 60.0 })
+            .transform(TransformStep::Burst {
+                windows: vec![BurstWindow::new(20.0, 10.0, 3.0)],
+                seed: 13,
+            }),
+        )
+        .scenario(
+            Scenario::new(
+                "replayed",
+                "small-a100",
+                WorkloadSpec::Replay {
+                    path: "examples/traces/azure_conv_sample.csv".into(),
+                },
+            )
+            .policy("static"),
+        )
+}
+
+// ------------------------------------------------------- serialization
+
+#[test]
+fn suite_round_trips_through_json_text() {
+    let suite = demo_suite();
+    let text = suite.to_json().pretty();
+    let back = Suite::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(suite, back);
+}
+
+#[test]
+fn suite_parses_from_toml_format() {
+    let text = r#"
+name = "demo"
+description = "round-trip fixture"
+
+[[scenarios]]
+name = "windowed-conv"
+deployment = "small-a100"
+policies = ["tokenscale", "distserve"]
+
+[scenarios.workload]
+kind = "synthetic"
+family = "azure-conv"
+rps = 10.0
+duration_s = 120.0
+seed = 7
+
+[[scenarios.transforms]]
+op = "window"
+t0 = 0.0
+t1 = 60.0
+
+[[scenarios.transforms]]
+op = "burst"
+windows = [{ start_s = 20.0, len_s = 10.0, rate_factor = 3.0 }]
+seed = 13
+
+[[scenarios]]
+name = "replayed"
+deployment = "small-a100"
+policies = ["static"]
+
+[scenarios.workload]
+kind = "replay"
+path = "examples/traces/azure_conv_sample.csv"
+"#;
+    let doc = toml::parse(text).unwrap();
+    let suite = Suite::from_json(&doc).unwrap();
+    // The TOML form and the code-built form are the same value, so the
+    // two serialization paths cannot drift apart.
+    assert_eq!(suite, demo_suite());
+}
+
+#[test]
+fn unknown_policy_name_is_a_typed_error() {
+    let mut doc = demo_suite().to_json();
+    // Corrupt the first scenario's policy list.
+    let Json::Obj(m) = &mut doc else { panic!() };
+    let Json::Arr(scenarios) = m.get_mut("scenarios").unwrap() else { panic!() };
+    let Json::Obj(sc) = &mut scenarios[0] else { panic!() };
+    sc.insert(
+        "policies".into(),
+        Json::Arr(vec![Json::Str("gradient-descent".into())]),
+    );
+    assert_eq!(
+        Suite::from_json(&doc),
+        Err(ScenarioError::UnknownPolicy { name: "gradient-descent".into() })
+    );
+}
+
+#[test]
+fn bad_transform_chain_is_a_typed_error() {
+    let toml_text = r#"
+name = "broken"
+deployment = "small-a100"
+policies = ["tokenscale"]
+
+[workload]
+kind = "synthetic"
+family = "mixed"
+rps = 5.0
+duration_s = 30.0
+
+[[transforms]]
+op = "window"
+t0 = 60.0
+t1 = 10.0
+"#;
+    let doc = toml::parse(toml_text).unwrap();
+    let err = Suite::from_json(&doc).unwrap_err();
+    assert!(
+        matches!(err, ScenarioError::BadTransform { ref op, .. } if op == "window"),
+        "{err}"
+    );
+
+    let doc = Json::parse(
+        r#"{"name":"broken","deployment":"small-a100","policies":["tokenscale"],
+            "workload":{"kind":"synthetic","family":"mixed","rps":5,"duration_s":30},
+            "transforms":[{"op":"wormhole"}]}"#,
+    )
+    .unwrap();
+    assert_eq!(
+        Suite::from_json(&doc),
+        Err(ScenarioError::UnknownTransform { op: "wormhole".into() })
+    );
+}
+
+#[test]
+fn unknown_and_malformed_fields_are_typed_errors() {
+    // A typo'd key ("transform" instead of "transforms") must not
+    // silently run the untransformed workload.
+    let doc = Json::parse(
+        r#"{"name":"x","deployment":"small-a100","policies":["tokenscale"],
+            "workload":{"kind":"synthetic","family":"mixed","rps":5,"duration_s":30},
+            "transform":[{"op":"window","t0":0,"t1":10}]}"#,
+    )
+    .unwrap();
+    assert!(matches!(
+        Suite::from_json(&doc),
+        Err(ScenarioError::UnknownField { ref field, .. }) if field == "transform"
+    ));
+
+    // Negative / fractional integer overrides are rejected, not cast.
+    for bad in [r#"{"max_gpus":-1}"#, r#"{"decoders":2.7}"#] {
+        let doc = Json::parse(&format!(
+            r#"{{"name":"x","deployment":"small-a100","policies":["tokenscale"],
+                "workload":{{"kind":"synthetic","family":"mixed","rps":5,"duration_s":30}},
+                "overrides":{bad}}}"#,
+        ))
+        .unwrap();
+        assert!(
+            matches!(Suite::from_json(&doc), Err(ScenarioError::BadValue { .. })),
+            "{bad}"
+        );
+    }
+}
+
+// ------------------------------------------------------- golden schema
+
+/// Flatten a normalized report into sorted `path: type` lines, with
+/// scenario/policy names generalized so the schema is data-independent.
+fn schema_lines(doc: &Json) -> BTreeSet<String> {
+    fn type_name(j: &Json) -> &'static str {
+        match j {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
+        }
+    }
+    fn walk(j: &Json, path: &str, depth_under_scenarios: i32, out: &mut BTreeSet<String>) {
+        out.insert(format!("{path}: {}", type_name(j)));
+        if let Json::Obj(m) = j {
+            for (k, v) in m {
+                let (key, next_depth) = match depth_under_scenarios {
+                    0 if k == "scenarios" => ("scenarios".to_string(), 1),
+                    1 => ("<scenario>".to_string(), 2),
+                    2 => ("<policy>".to_string(), 3),
+                    _ => (k.clone(), depth_under_scenarios),
+                };
+                walk(v, &format!("{path}.{key}"), next_depth, out);
+            }
+        }
+    }
+    let mut out = BTreeSet::new();
+    if let Json::Obj(m) = doc {
+        for (k, v) in m {
+            let depth = if k == "scenarios" { 1 } else { -1 };
+            walk(v, k, depth, &mut out);
+        }
+    }
+    out
+}
+
+#[test]
+fn bench_json_schema_matches_golden() {
+    // A tiny two-cell suite is enough to materialize every schema path.
+    let run = Suite::new("golden", "schema fixture")
+        .scenario(
+            Scenario::new(
+                "tiny",
+                "small-a100",
+                WorkloadSpec::Synthetic {
+                    family: TraceFamily::AzureConv,
+                    rps: 6.0,
+                    duration_s: 30.0,
+                    seed: 3,
+                },
+            )
+            .policies(&["static", "distserve"])
+            .materialized(),
+        )
+        .run()
+        .expect("golden suite runs");
+    let doc = run.to_json();
+    assert_eq!(
+        doc.get("schema_version").and_then(Json::as_f64),
+        Some(BENCH_SCHEMA_VERSION as f64)
+    );
+
+    let got = schema_lines(&doc);
+    let golden_path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/golden/bench_schema.golden"
+    );
+    let golden_text = std::fs::read_to_string(golden_path).expect("golden file");
+    let want: BTreeSet<String> = golden_text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect();
+    assert_eq!(
+        got, want,
+        "normalized BENCH schema drifted — bump BENCH_SCHEMA_VERSION and regenerate the golden\n\
+         missing from golden: {:?}\nextra in golden: {:?}",
+        got.difference(&want).collect::<Vec<_>>(),
+        want.difference(&got).collect::<Vec<_>>()
+    );
+}
+
+// ------------------------------------------------------ regression gate
+
+fn bench_doc(slo: f64, gpu: f64) -> String {
+    Json::obj()
+        .set("schema_version", BENCH_SCHEMA_VERSION)
+        .set("suite", "fixture")
+        .set("wall_s", 1.0)
+        .set(
+            "scenarios",
+            Json::obj().set(
+                "s1",
+                Json::obj().set(
+                    "tokenscale",
+                    Json::obj().set("slo_attainment", slo).set("gpu_hours", gpu),
+                ),
+            ),
+        )
+        .pretty()
+}
+
+#[test]
+fn bench_diff_cli_exits_nonzero_on_injected_slo_regression() {
+    let dir = std::env::temp_dir();
+    let cur = dir.join("tokenscale_test_current.json");
+    let base = dir.join("tokenscale_test_baseline.json");
+    // Injected regression: attainment collapses 0.95 -> 0.80.
+    std::fs::write(&cur, bench_doc(0.80, 1.0)).unwrap();
+    std::fs::write(&base, bench_doc(0.95, 1.0)).unwrap();
+
+    let argv = |c: &std::path::Path, b: &std::path::Path| {
+        vec![
+            "bench".to_string(),
+            "diff".to_string(),
+            c.display().to_string(),
+            b.display().to_string(),
+        ]
+    };
+    let code = tokenscale::cli::run_cli(argv(&cur, &base));
+    assert_ne!(code, 0, "regression must fail the diff");
+
+    // The reverse direction is an improvement: clean exit.
+    let code = tokenscale::cli::run_cli(argv(&base, &cur));
+    assert_eq!(code, 0, "improvement must pass the diff");
+
+    // Identical reports: clean exit.
+    let code = tokenscale::cli::run_cli(argv(&base, &base));
+    assert_eq!(code, 0);
+}
+
+// ------------------------------------------------------- shipped files
+
+#[test]
+fn shipped_smoke_suite_parses_and_validates() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/smoke.toml");
+    let suite = Suite::from_path(std::path::Path::new(path)).expect("smoke suite loads");
+    assert_eq!(suite.name, "smoke");
+    suite.validate().expect("smoke suite validates");
+    for want in ["compare-mixed", "diurnal-conv", "flash-crowd", "splice-replay"] {
+        assert!(
+            suite.scenarios.iter().any(|s| s.name == want),
+            "smoke suite lacks {want}"
+        );
+    }
+    // The replay scenario's transform chain has the Window splice.
+    let splice = suite
+        .scenarios
+        .iter()
+        .find(|s| s.name == "splice-replay")
+        .unwrap();
+    assert!(matches!(splice.workload, WorkloadSpec::Replay { .. }));
+    assert!(splice
+        .transforms
+        .iter()
+        .any(|t| matches!(t, TransformStep::Window { .. })));
+}

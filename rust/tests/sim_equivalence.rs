@@ -11,7 +11,7 @@
 //!    pure-decode windows.
 
 use tokenscale::report::runner::RunOverrides;
-use tokenscale::report::{deployment, run_experiment, ExperimentResult, PolicyKind};
+use tokenscale::report::{deployment, run_experiment, ExperimentResult, ExperimentSpec, PolicyKind};
 use tokenscale::trace::{generate_family, Trace, TraceFamily};
 
 /// Canonical per-request view of a run's completions, sorted by id.
@@ -29,7 +29,7 @@ fn completion_key(res: &ExperimentResult) -> Vec<(u64, f64, f64, f64, f64)> {
 
 fn run(policy: PolicyKind, trace: &Trace, ov: &RunOverrides) -> ExperimentResult {
     let dep = deployment("small-a100").unwrap();
-    run_experiment(&dep, policy, trace, ov)
+    run_experiment(&ExperimentSpec::shared(&dep, policy, trace).with_overrides(ov.clone()))
 }
 
 #[test]

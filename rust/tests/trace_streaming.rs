@@ -13,11 +13,11 @@
 //! 4. **Engine equivalence** — driving the simulator from a live stream
 //!    must reproduce the preloaded-trace run event for event.
 
-use tokenscale::report::runner::RunOverrides;
-use tokenscale::report::{deployment, run_experiment, run_experiment_source, PolicyKind};
+use std::sync::Arc;
+use tokenscale::report::{deployment, run_experiment, ExperimentSpec, PolicyKind};
 use tokenscale::trace::{
     base_families, generate, generate_mixed, materialize, replay, ArrivalSource, MixedSource,
-    SpecSource, Trace, TraceFamily, TraceProfile, TraceSpec,
+    SourceExt, SourceFactory, SpecSource, Trace, TraceFamily, TraceProfile, TraceSpec,
 };
 use tokenscale::util::rng::Pcg64;
 use tokenscale::workload::Request;
@@ -217,14 +217,16 @@ fn streamed_run_matches_preloaded_run_for_every_policy() {
     let seed = 31;
     let trace = generate(&spec, seed);
     let dep = deployment("small-a100").unwrap();
-    let ov = RunOverrides::default();
     // Use the measured profile on both sides so the only difference is
     // preloaded-vs-streamed arrival delivery.
     let profile = TraceProfile::of_trace(&trace);
     for policy in [PolicyKind::named("tokenscale"), PolicyKind::named("distserve")] {
-        let preloaded = run_experiment(&dep, policy, &trace, &ov);
-        let mut src = SpecSource::new(spec.clone(), seed);
-        let streamed = run_experiment_source(&dep, policy, &mut src, &profile, &ov);
+        let preloaded = run_experiment(&ExperimentSpec::shared(&dep, policy, &trace));
+        let stream_spec = spec.clone();
+        let factory: SourceFactory =
+            Arc::new(move || SpecSource::new(stream_spec.clone(), seed).boxed());
+        let streamed =
+            run_experiment(&ExperimentSpec::streaming(&dep, policy, factory).with_profile(profile));
         assert_eq!(
             preloaded.sim.events_processed, streamed.sim.events_processed,
             "{}: event counts must match",
