@@ -10,8 +10,9 @@
 
 use super::args::Args;
 use crate::report::suite::{
-    builtin_suites, diff_bench, fig9_suite, file_suites, find_suite, longtrace_suite,
-    DiffTolerance, LONGTRACE_FULL_SCALE, LONGTRACE_SMOKE_SCALE, SCENARIO_DIR, Suite, SuiteRun,
+    builtin_suites, diff_bench, fig9_suite, file_suites, find_suite, longtrace_daily_suite,
+    longtrace_suite, DiffTolerance, LONGTRACE_DAILY_FULL_SCALE, LONGTRACE_DAILY_SMOKE_SCALE,
+    LONGTRACE_FULL_SCALE, LONGTRACE_SMOKE_SCALE, SCENARIO_DIR, Suite, SuiteRun,
 };
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -77,6 +78,14 @@ fn resolve_suite(args: &Args, name: &str) -> anyhow::Result<Suite> {
             let (d0, r0) = if smoke { LONGTRACE_SMOKE_SCALE } else { LONGTRACE_FULL_SCALE };
             Ok(longtrace_suite(duration.unwrap_or(d0), rps.unwrap_or(r0)))
         }
+        "longtrace-daily" => {
+            let (d0, r0) = if smoke {
+                LONGTRACE_DAILY_SMOKE_SCALE
+            } else {
+                LONGTRACE_DAILY_FULL_SCALE
+            };
+            Ok(longtrace_daily_suite(duration.unwrap_or(d0), rps.unwrap_or(r0)))
+        }
         "fig9" => {
             if rps.is_some() {
                 eprintln!("note: fig9 runs at the paper's 22 RPS; --rps is ignored");
@@ -86,7 +95,9 @@ fn resolve_suite(args: &Args, name: &str) -> anyhow::Result<Suite> {
         }
         _ => {
             if smoke || duration.is_some() || rps.is_some() {
-                eprintln!("note: --smoke/--duration/--rps only rescale the longtrace/fig9 built-ins");
+                eprintln!(
+                    "note: --smoke/--duration/--rps only rescale the longtrace/longtrace-daily/fig9 built-ins"
+                );
             }
             find_suite(name)
         }

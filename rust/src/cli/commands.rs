@@ -45,6 +45,19 @@ SUBCOMMANDS:
                       [--gpu-tolerance F]
                       Compare two normalized reports; nonzero exit on
                       regression
+    sim         Simulation checkpoint tooling (see docs/checkpoints.md)
+                  sim checkpoint [same flags as simulate] [--at T]
+                      [--every S] [--out FILE]
+                      Run the scenario to simulated time T (default:
+                      duration/2), write a resumable checkpoint file
+                      (with --every S, also write periodic snapshots
+                      along the way)
+                  sim resume --checkpoint FILE [--policy P]
+                      Continue an interrupted run bit-identically, or
+                      fork a different policy from the warmed cluster
+                  sim inspect --checkpoint FILE
+                      Print a checkpoint's scenario, capture time,
+                      fleet and stream position
     trace       Workload-trace tooling
                   trace [inspect] --trace T --rps R --duration S [--seed N]
                       Generate a synthetic trace and print its stats
@@ -76,6 +89,7 @@ pub fn run_cli(argv: Vec<String>) -> i32 {
         "explain" => cmd_explain(&args),
         "policy" => cmd_policy(&args),
         "bench" => super::bench::cmd_bench(&args),
+        "sim" => super::sim::cmd_sim(&args),
         "profile" => cmd_profile(&args),
         "thresholds" => cmd_thresholds(&args),
         "trace" => cmd_trace(&args),
@@ -98,7 +112,7 @@ pub fn run_cli(argv: Vec<String>) -> i32 {
     }
 }
 
-fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
+pub(crate) fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
     let mut cfg = match args.get("config") {
         Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
         None => ExperimentConfig::default(),

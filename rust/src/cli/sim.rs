@@ -1,0 +1,288 @@
+//! `tokenscale sim checkpoint | resume | inspect` — on-disk simulation
+//! snapshot artifacts (see docs/checkpoints.md).
+//!
+//! A checkpoint file is a versioned JSON document bundling the
+//! serializable [`Scenario`] that defines the experiment with the
+//! [`SimSnapshot`] of its mid-run state, so `resume` needs nothing but
+//! the file: it rebuilds deployment, workload source and policy from the
+//! embedded scenario, restores the snapshot, and continues the run
+//! bit-identically to one that was never interrupted. `resume --policy`
+//! forks instead: a *different* policy takes over the warmed cluster
+//! (the warm-start move the suite runner automates per scenario).
+
+use super::args::Args;
+use crate::report::{
+    run_experiment_resumed, simulate_prefix, PolicyKind, Scenario, WorkloadSpec,
+};
+use crate::sim::SimSnapshot;
+use crate::trace::TraceFamily;
+use crate::util::json::Json;
+use crate::util::table::pct;
+use std::path::Path;
+
+/// Version tag of the checkpoint *file* wrapper (scenario + snapshot);
+/// the snapshot blob inside carries its own `SNAPSHOT_SCHEMA_VERSION`.
+pub const CHECKPOINT_FILE_VERSION: u64 = 1;
+
+pub fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("checkpoint") => sim_checkpoint(args),
+        Some("resume") => sim_resume(args),
+        Some("inspect") => sim_inspect(args),
+        other => anyhow::bail!(
+            "sim needs an action: checkpoint|resume|inspect (got {:?})",
+            other.unwrap_or("none")
+        ),
+    }
+}
+
+/// Build the single-policy scenario the simulate-style flags describe.
+fn scenario_from_args(args: &Args) -> anyhow::Result<Scenario> {
+    let cfg = crate::cli::commands::config_from_args(args)?;
+    let family = TraceFamily::parse(&cfg.trace)
+        .ok_or_else(|| anyhow::anyhow!("unknown trace family `{}`", cfg.trace))?;
+    let mut sc = Scenario::new(
+        "cli-sim",
+        cfg.deployment.clone(),
+        WorkloadSpec::Synthetic {
+            family,
+            rps: cfg.rps,
+            duration_s: cfg.duration_s,
+            seed: cfg.seed,
+        },
+    )
+    .policy(cfg.policy.clone());
+    sc.overrides.convertibles = cfg.convertibles;
+    sc.overrides.predictor_accuracy = cfg.predictor_accuracy;
+    sc.overrides.warmup_s = cfg.warmup_s;
+    sc.validate()?;
+    Ok(sc)
+}
+
+/// Bundle a snapshot with its defining scenario into the on-disk format.
+pub fn checkpoint_document(scenario: &Scenario, snap: &SimSnapshot) -> Json {
+    Json::obj()
+        .set("schema_version", CHECKPOINT_FILE_VERSION)
+        .set("scenario", scenario.to_json())
+        .set("snapshot", snap.to_json())
+}
+
+/// Parse a checkpoint file into its scenario and snapshot.
+pub fn load_checkpoint_document(path: &Path) -> anyhow::Result<(Scenario, SimSnapshot)> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let version = doc
+        .get("schema_version")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("{}: missing `schema_version`", path.display()))?
+        as u64;
+    anyhow::ensure!(
+        version == CHECKPOINT_FILE_VERSION,
+        "{}: checkpoint file v{version} is not supported (this build reads v{CHECKPOINT_FILE_VERSION})",
+        path.display()
+    );
+    let scenario = Scenario::from_json(
+        doc.get("scenario")
+            .ok_or_else(|| anyhow::anyhow!("{}: missing `scenario`", path.display()))?,
+    )
+    .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let snap = SimSnapshot::from_json(
+        doc.get("snapshot")
+            .ok_or_else(|| anyhow::anyhow!("{}: missing `snapshot`", path.display()))?,
+    )?;
+    Ok((scenario, snap))
+}
+
+fn sim_checkpoint(args: &Args) -> anyhow::Result<()> {
+    let scenario = scenario_from_args(args)?;
+    let spec = scenario
+        .experiment_specs()?
+        .into_iter()
+        .next()
+        .expect("scenario has one policy");
+    let duration = match &scenario.workload {
+        WorkloadSpec::Synthetic { duration_s, .. } => *duration_s,
+        _ => unreachable!("scenario_from_args builds synthetic workloads"),
+    };
+    let at = args.get_f64("at")?.unwrap_or(duration * 0.5);
+    anyhow::ensure!(
+        at > 0.0 && at < duration,
+        "--at must fall inside the workload (0, {duration}), got {at}"
+    );
+    let every = args.get_f64("every")?.unwrap_or(0.0);
+    anyhow::ensure!(every >= 0.0, "--every must be non-negative");
+    let out = args.get("out").unwrap_or("checkpoint.json").to_string();
+    let out_path = Path::new(&out);
+
+    let write_doc = |snap: &SimSnapshot| -> anyhow::Result<()> {
+        std::fs::write(out_path, checkpoint_document(&scenario, snap).pretty())
+            .map_err(|e| anyhow::anyhow!("cannot write {out}: {e}"))
+    };
+    let sink: Option<Box<dyn FnMut(SimSnapshot) + '_>> = if every > 0.0 {
+        Some(Box::new(|snap: SimSnapshot| {
+            match write_doc(&snap) {
+                Ok(()) => eprintln!("[sim] auto-checkpoint at t={:.1}s -> {out}", snap.t),
+                Err(e) => eprintln!("[sim] auto-checkpoint failed: {e:#}"),
+            }
+        }))
+    } else {
+        None
+    };
+    let snap = simulate_prefix(&spec, spec.policy, at, every, sink)?;
+    write_doc(&snap)?;
+    println!(
+        "checkpointed `{}` ({} on {}) at t={:.2}s -> {out}",
+        scenario.name,
+        spec.policy.name(),
+        scenario.deployment,
+        snap.t
+    );
+    println!(
+        "arrivals consumed  : {} (stream resume position)",
+        snap.arrivals_pulled
+    );
+    println!("resume with        : tokenscale sim resume --checkpoint {out}");
+    Ok(())
+}
+
+fn sim_resume(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .get("checkpoint")
+        .or_else(|| args.positional.get(1).map(String::as_str))
+        .ok_or_else(|| anyhow::anyhow!("sim resume needs --checkpoint FILE"))?;
+    let (scenario, snap) = load_checkpoint_document(Path::new(path))?;
+    let mut spec = scenario
+        .experiment_specs()?
+        .into_iter()
+        .next()
+        .expect("scenario has one policy");
+    // The cluster in the snapshot was built under the policy that ran
+    // the prefix; mechanics config is re-derived from it on resume.
+    let driver = PolicyKind::parse(&snap.policy.policy).ok_or_else(|| {
+        anyhow::anyhow!("snapshot policy `{}` is not in the registry", snap.policy.policy)
+    })?;
+    let (policy, restore) = match args.get("policy") {
+        // Fork: a different policy takes over the warmed cluster.
+        Some(p) => (
+            PolicyKind::parse(p)
+                .ok_or_else(|| anyhow::anyhow!("unknown policy `{p}` (see `tokenscale policy list`)"))?,
+            false,
+        ),
+        // Continue: same policy, internal state restored bit-exactly.
+        None => (spec.policy, true),
+    };
+    spec.policy = policy;
+    spec.label = format!("{}/{}", scenario.name, policy.name());
+    let res = run_experiment_resumed(&spec, &snap, driver, restore)?;
+    let r = &res.report;
+    println!(
+        "== resumed {} from t={:.2}s ({} driving the prefix, {} from the fork) ==",
+        path,
+        snap.t,
+        driver.name(),
+        policy.name()
+    );
+    println!("requests completed : {}", r.n);
+    println!(
+        "SLO attainment     : {} (TTFT {}, TPOT {})",
+        pct(r.overall_attainment),
+        pct(r.ttft_attainment),
+        pct(r.tpot_attainment)
+    );
+    println!("avg GPUs           : {:.2}", r.avg_gpus);
+    println!("TTFT p50/p99       : {:.0} / {:.0} ms", r.ttft.p50 * 1e3, r.ttft.p99 * 1e3);
+    println!("TPOT p50/p99       : {:.1} / {:.1} ms", r.tpot.p50 * 1e3, r.tpot.p99 * 1e3);
+    println!("scale ups/downs    : {} / {}", res.sim.scale_ups, res.sim.scale_downs);
+    if r.rejected_actions > 0 {
+        println!("rejected actions   : {}", r.rejected_actions);
+    }
+    Ok(())
+}
+
+fn sim_inspect(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .get("checkpoint")
+        .or_else(|| args.positional.get(1).map(String::as_str))
+        .ok_or_else(|| anyhow::anyhow!("sim inspect needs --checkpoint FILE"))?;
+    let (scenario, snap) = load_checkpoint_document(Path::new(path))?;
+    println!("== checkpoint {} ==", path);
+    println!("file schema        : v{CHECKPOINT_FILE_VERSION}");
+    println!("snapshot schema    : v{}", snap.version);
+    println!(
+        "scenario           : {} on {} ({})",
+        scenario.name,
+        scenario.deployment,
+        scenario.policies.join(", ")
+    );
+    println!("workload           : {}", snap.label);
+    println!("captured at        : t={:.2}s (simulated)", snap.t);
+    println!("arrivals consumed  : {}", snap.arrivals_pulled);
+    println!("policy state       : {}", snap.policy.policy);
+    let e = &snap.engine;
+    if let Some(n) = e
+        .get_path(&["metrics", "completions"])
+        .and_then(Json::as_arr)
+        .map(<[Json]>::len)
+    {
+        println!("completions so far : {n}");
+    }
+    if let Some(g) = e
+        .get_path(&["metrics", "gpu_seconds"])
+        .and_then(Json::as_f64_bits)
+    {
+        println!("GPU-seconds so far : {g:.1}");
+    }
+    if let Some(entries) = e.get_path(&["events", "entries"]).and_then(Json::as_arr) {
+        println!("events pending     : {}", entries.len());
+    }
+    if let Some(ep) = e.get("events_processed").and_then(Json::as_u64_hex) {
+        println!("events processed   : {ep}");
+    }
+    if let Some(live) = e.get_path(&["cluster", "live"]).and_then(Json::as_arr) {
+        let count = |k: usize| live.get(k).and_then(Json::as_arr).map_or(0, <[Json]>::len);
+        println!(
+            "fleet              : {} prefillers, {} decoders, {} convertibles",
+            count(0),
+            count(1),
+            count(2)
+        );
+    }
+    match e.get("decisions") {
+        Some(Json::Null) | None => {}
+        Some(log) => {
+            if let Some(records) = log.get("records").and_then(Json::as_arr) {
+                println!("decision ring      : {} retained", records.len());
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_document_round_trips_through_disk() {
+        let scenario = Scenario::new(
+            "roundtrip",
+            "small-a100",
+            WorkloadSpec::Synthetic {
+                family: TraceFamily::AzureConv,
+                rps: 6.0,
+                duration_s: 40.0,
+                seed: 5,
+            },
+        )
+        .policy("static");
+        let spec = scenario.experiment_specs().unwrap().remove(0);
+        let snap = simulate_prefix(&spec, spec.policy, 15.0, 0.0, None).unwrap();
+        let path = std::env::temp_dir().join("tokenscale_test_checkpoint.json");
+        std::fs::write(&path, checkpoint_document(&scenario, &snap).pretty()).unwrap();
+        let (sc2, snap2) = load_checkpoint_document(&path).unwrap();
+        assert_eq!(sc2, scenario);
+        assert_eq!(snap2, snap);
+        let _ = std::fs::remove_file(&path);
+    }
+}

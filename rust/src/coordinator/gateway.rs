@@ -2,6 +2,7 @@
 //! output lengths, and maintains the per-bucket combined token-rate
 //! windows the Scaler consumes.
 
+use crate::util::json::Json;
 use crate::util::stats::{Ewma, SlidingWindow};
 use crate::workload::{Bucket, OutputPredictor, Request};
 
@@ -111,6 +112,60 @@ impl Gateway {
         let base = self.baseline.get_or(f64::MAX);
         self.last_rate > self.burst_factor * base
     }
+
+    /// Bit-exact serialization of all gateway stream state for
+    /// checkpoint/restore (sim::snapshot): every traffic window, the
+    /// burst-detector baseline/bootstrap, and the predictor RNG position.
+    pub fn to_snapshot(&self) -> Json {
+        Json::obj()
+            .set("input_tokens", self.input_tokens.to_snapshot())
+            .set("requests", self.requests.to_snapshot())
+            .set(
+                "bucket_tokens",
+                Json::Arr(self.bucket_tokens.iter().map(SlidingWindow::to_snapshot).collect()),
+            )
+            .set("predictor", self.predictor.to_snapshot())
+            .set("baseline", self.baseline.to_snapshot())
+            .set("burst_factor", Json::f64_bits(self.burst_factor))
+            .set("last_rate", Json::f64_bits(self.last_rate))
+            .set("ticks", self.ticks)
+    }
+
+    /// Restore stream state captured by [`Gateway::to_snapshot`] into a
+    /// freshly constructed gateway (in place).
+    pub fn restore_snapshot(&mut self, j: &Json) -> anyhow::Result<()> {
+        let what = "gateway snapshot";
+        let get = |key: &str| -> anyhow::Result<&Json> {
+            j.get(key).ok_or_else(|| anyhow::anyhow!("{what}: missing `{key}`"))
+        };
+        self.input_tokens = SlidingWindow::from_snapshot(get("input_tokens")?)?;
+        self.requests = SlidingWindow::from_snapshot(get("requests")?)?;
+        let buckets = get("bucket_tokens")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("{what}: `bucket_tokens` is not an array"))?;
+        anyhow::ensure!(
+            buckets.len() == self.bucket_tokens.len(),
+            "{what}: expected {} bucket windows, got {}",
+            self.bucket_tokens.len(),
+            buckets.len()
+        );
+        self.bucket_tokens = buckets
+            .iter()
+            .map(SlidingWindow::from_snapshot)
+            .collect::<anyhow::Result<_>>()?;
+        self.predictor.restore_snapshot(get("predictor")?)?;
+        self.baseline = Ewma::from_snapshot(get("baseline")?)?;
+        self.burst_factor = get("burst_factor")?
+            .as_f64_bits()
+            .ok_or_else(|| anyhow::anyhow!("{what}: bad `burst_factor`"))?;
+        self.last_rate = get("last_rate")?
+            .as_f64_bits()
+            .ok_or_else(|| anyhow::anyhow!("{what}: bad `last_rate`"))?;
+        self.ticks = get("ticks")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("{what}: bad `ticks`"))?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -148,6 +203,35 @@ mod tests {
         );
         assert!(rates[ss.index()] > 0.0);
         assert_eq!(rates.iter().filter(|r| **r > 0.0).count(), 1);
+    }
+
+    #[test]
+    fn snapshot_restores_rates_and_prediction_stream() {
+        let mut a = Gateway::new(1.0, 5.0, OutputPredictor::new(0.85, 7));
+        for i in 0..40 {
+            let t = i as f64 * 0.05;
+            a.ingest(t, &req(i, t, 200 + i as usize, 300));
+            if i % 10 == 0 {
+                a.tick_burst_detector(t);
+            }
+        }
+        let snap = a.to_snapshot();
+        let mut b = Gateway::new(1.0, 5.0, OutputPredictor::new(0.85, 999));
+        b.restore_snapshot(&snap).unwrap();
+        assert_eq!(
+            a.input_token_rate(2.0).to_bits(),
+            b.input_token_rate(2.0).to_bits()
+        );
+        assert_eq!(a.request_rate(2.0).to_bits(), b.request_rate(2.0).to_bits());
+        let ra = a.bucket_token_rates(2.0);
+        let rb = b.bucket_token_rates(2.0);
+        for (x, y) in ra.iter().zip(rb.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.is_burst(), b.is_burst());
+        // Predictor streams advance in lockstep after restore.
+        let next = req(1000, 3.0, 500, 600);
+        assert_eq!(a.ingest(3.0, &next), b.ingest(3.0, &next));
     }
 
     #[test]

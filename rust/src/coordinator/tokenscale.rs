@@ -12,7 +12,8 @@ use crate::perfmodel::{EngineModel, LinkSpec};
 use crate::scaler::tokenscale::{
     required_decoders, required_prefillers, regular_decoders, Hysteresis,
 };
-use crate::sim::{Action, ClusterView, ControlPlane, Role, Signal};
+use crate::sim::{Action, ClusterView, ControlPlane, PolicyState, Role, Signal};
+use crate::util::json::Json;
 use crate::velocity::VelocityProfile;
 use crate::workload::{OutputPredictor, Request, SloPolicy};
 
@@ -218,6 +219,28 @@ impl ControlPlane for TokenScale {
             }
             Signal::Completion(_) | Signal::InstanceReady(_) | Signal::InstanceDrained(_) => {}
         }
+    }
+
+    /// Stream state only: the gateway windows/predictor RNG and the two
+    /// hysteresis streaks. The offline-profiled parts (velocity profile,
+    /// chunk sizing, router config) are re-derived from the experiment
+    /// spec at construction, exactly like a fresh run.
+    fn save_state(&self) -> PolicyState {
+        PolicyState::new(
+            self.name(),
+            Json::obj()
+                .set("gateway", self.gateway.to_snapshot())
+                .set("prefill_hyst", self.prefill_hyst.to_snapshot())
+                .set("decode_hyst", self.decode_hyst.to_snapshot()),
+        )
+    }
+
+    fn restore_state(&mut self, state: &PolicyState) -> anyhow::Result<()> {
+        state.expect(self.name())?;
+        self.gateway.restore_snapshot(state.part("gateway")?)?;
+        self.prefill_hyst = Hysteresis::from_snapshot(state.part("prefill_hyst")?)?;
+        self.decode_hyst = Hysteresis::from_snapshot(state.part("decode_hyst")?)?;
+        Ok(())
     }
 }
 

@@ -1,6 +1,7 @@
 //! Completion recording and SLO attainment reporting.
 
 use crate::sim::policy::RejectReason;
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 use crate::workload::{Completion, Request, SloPolicy};
 
@@ -24,6 +25,32 @@ impl RejectionCounts {
 
     pub fn total(&self) -> usize {
         self.counts.iter().sum()
+    }
+
+    /// Checkpoint serialization: the dense counter array in
+    /// [`RejectReason::ALL`] order.
+    pub fn to_snapshot(&self) -> Json {
+        Json::Arr(self.counts.iter().map(|c| Json::from(*c)).collect())
+    }
+
+    /// Rebuild from [`RejectionCounts::to_snapshot`] output.
+    pub fn from_snapshot(j: &Json) -> anyhow::Result<RejectionCounts> {
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("rejection counts: expected an array"))?;
+        anyhow::ensure!(
+            arr.len() == RejectReason::ALL.len(),
+            "rejection counts: expected {} entries, got {}",
+            RejectReason::ALL.len(),
+            arr.len()
+        );
+        let mut out = RejectionCounts::default();
+        for (i, v) in arr.iter().enumerate() {
+            out.counts[i] = v
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("rejection counts: entry {i} is not an integer"))?;
+        }
+        Ok(out)
     }
 
     /// (reason, count) pairs for every non-zero counter.
@@ -149,6 +176,107 @@ impl MetricsRecorder {
         self.gpu_seconds += gpus * dt.max(0.0);
     }
 
+    /// Bit-exact serialization of every accumulator for checkpoint/
+    /// restore (sim::snapshot): a resumed run's final report must be
+    /// byte-identical to an uninterrupted one, so floats are stored as
+    /// bit patterns, not decimal renderings.
+    pub fn to_snapshot(&self) -> Json {
+        // The (time, value) pair codec is shared with the engine's
+        // ttft_points blob (sim::snapshot) so the format cannot drift.
+        let pairs = crate::sim::snapshot::pairs_to_json;
+        Json::obj()
+            .set(
+                "completions",
+                Json::Arr(
+                    self.completions
+                        .iter()
+                        .map(|c| {
+                            Json::obj()
+                                .set("id", Json::u64_hex(c.id))
+                                .set("arrival", Json::f64_bits(c.arrival))
+                                .set("input", c.input_tokens)
+                                .set("output", c.output_tokens)
+                                .set("ttft", Json::f64_bits(c.ttft))
+                                .set("tpot", Json::f64_bits(c.tpot))
+                                .set("finish", Json::f64_bits(c.finish))
+                        })
+                        .collect(),
+                ),
+            )
+            .set("gpu_seconds", Json::f64_bits(self.gpu_seconds))
+            .set("horizon_s", Json::f64_bits(self.horizon_s))
+            .set("dropped", self.dropped)
+            .set("prefill_waits", pairs(&self.prefill_waits))
+            .set("queue_waits", pairs(&self.queue_waits))
+            .set("arrivals", self.arrivals)
+            .set("arrival_input_tokens", Json::f64_bits(self.arrival_input_tokens))
+            .set("arrival_output_tokens", Json::f64_bits(self.arrival_output_tokens))
+            .set("workload_s", Json::f64_bits(self.workload_s))
+            .set("rejections", self.rejections.to_snapshot())
+    }
+
+    /// Rebuild from [`MetricsRecorder::to_snapshot`] output.
+    pub fn from_snapshot(j: &Json) -> anyhow::Result<MetricsRecorder> {
+        let what = "metrics snapshot";
+        let req = |key: &str| -> anyhow::Result<&Json> {
+            j.get(key).ok_or_else(|| anyhow::anyhow!("{what}: missing `{key}`"))
+        };
+        let bits = |key: &str| -> anyhow::Result<f64> {
+            req(key)?
+                .as_f64_bits()
+                .ok_or_else(|| anyhow::anyhow!("{what}: `{key}` is not a bit-exact f64"))
+        };
+        let pairs = |key: &str| -> anyhow::Result<Vec<(f64, f64)>> {
+            crate::sim::snapshot::pairs_from_json(req(key)?, key)
+        };
+        let mut completions = Vec::new();
+        for c in req("completions")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("{what}: `completions` is not an array"))?
+        {
+            let cf = |key: &str| -> anyhow::Result<f64> {
+                c.get(key)
+                    .and_then(Json::as_f64_bits)
+                    .ok_or_else(|| anyhow::anyhow!("{what}: completion lacks bit-exact `{key}`"))
+            };
+            completions.push(Completion {
+                id: c
+                    .get("id")
+                    .and_then(Json::as_u64_hex)
+                    .ok_or_else(|| anyhow::anyhow!("{what}: completion lacks `id`"))?,
+                arrival: cf("arrival")?,
+                input_tokens: c
+                    .get("input")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("{what}: completion lacks `input`"))?,
+                output_tokens: c
+                    .get("output")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("{what}: completion lacks `output`"))?,
+                ttft: cf("ttft")?,
+                tpot: cf("tpot")?,
+                finish: cf("finish")?,
+            });
+        }
+        Ok(MetricsRecorder {
+            completions,
+            gpu_seconds: bits("gpu_seconds")?,
+            horizon_s: bits("horizon_s")?,
+            dropped: req("dropped")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("{what}: `dropped` is not an integer"))?,
+            prefill_waits: pairs("prefill_waits")?,
+            queue_waits: pairs("queue_waits")?,
+            arrivals: req("arrivals")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("{what}: `arrivals` is not an integer"))?,
+            arrival_input_tokens: bits("arrival_input_tokens")?,
+            arrival_output_tokens: bits("arrival_output_tokens")?,
+            workload_s: bits("workload_s")?,
+            rejections: RejectionCounts::from_snapshot(req("rejections")?)?,
+        })
+    }
+
     /// Produce the report under an SLO policy. `warmup_s` drops requests
     /// arriving before that time (cold-start transient).
     pub fn report(&self, slo: &SloPolicy, warmup_s: f64) -> SloReport {
@@ -269,6 +397,38 @@ mod tests {
         assert_eq!(r.n, 0);
         assert_eq!(r.overall_attainment, 0.0);
         assert_eq!(r.rejected_actions, 0);
+    }
+
+    #[test]
+    fn snapshot_round_trips_bit_exactly_through_text() {
+        let mut m = MetricsRecorder::new();
+        m.record(c(0.0, 100, 0.1, 1.0 / 3.0));
+        m.record(c(1.5, 4096, f64::MIN_POSITIVE, 0.05));
+        m.note_arrival(&Request::new(0, 0.0, 100, 20));
+        m.note_arrival(&Request::new(1, 1.5, 4096, 64));
+        m.prefill_waits.push((0.0, 0.123456789));
+        m.queue_waits.push((0.0, 1e-9));
+        m.gpu_seconds = 1234.5678901234;
+        m.horizon_s = 90.0;
+        m.workload_s = 60.0;
+        m.dropped = 2;
+        m.rejections.note(RejectReason::NoCapacity);
+        let text = m.to_snapshot().pretty();
+        let back =
+            MetricsRecorder::from_snapshot(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.completions.len(), m.completions.len());
+        for (a, b) in back.completions.iter().zip(&m.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.ttft.to_bits(), b.ttft.to_bits());
+            assert_eq!(a.tpot.to_bits(), b.tpot.to_bits());
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+        }
+        assert_eq!(back.gpu_seconds.to_bits(), m.gpu_seconds.to_bits());
+        assert_eq!(back.arrival_input_tokens.to_bits(), m.arrival_input_tokens.to_bits());
+        assert_eq!(back.arrivals, m.arrivals);
+        assert_eq!(back.dropped, 2);
+        assert_eq!(back.rejections, m.rejections);
+        assert_eq!(back.prefill_waits[0].1.to_bits(), m.prefill_waits[0].1.to_bits());
     }
 
     #[test]

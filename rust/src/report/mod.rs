@@ -16,11 +16,13 @@ pub use registry::{
     PolicyRegistry,
 };
 pub use runner::{
-    deployment, run_experiment, run_experiments, Deployment, ExperimentResult, ExperimentSpec,
-    PolicyKind, RunOverrides, Workload,
+    deployment, prepare_run, run_experiment, run_experiment_resumed, run_experiments,
+    simulate_prefix, CheckpointSpec, Deployment, ExperimentResult, ExperimentSpec, PolicyKind,
+    RunOverrides, Workload,
 };
 pub use scenario::{Scenario, ScenarioError, ScenarioOverrides, TransformStep, WorkloadSpec};
 pub use suite::{
-    builtin_suites, diff_bench, file_suites, find_suite, longtrace_suite, BENCH_SCHEMA_VERSION,
-    DiffReport, DiffTolerance, SCENARIO_DIR, ScenarioOutcome, Suite, SuiteRun,
+    builtin_suites, diff_bench, file_suites, find_suite, longtrace_daily_suite, longtrace_suite,
+    BENCH_SCHEMA_VERSION, DiffReport, DiffTolerance, SCENARIO_DIR, ScenarioOutcome, Suite,
+    SuiteRun, WarmStartStat,
 };

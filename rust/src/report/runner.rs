@@ -16,11 +16,12 @@ use crate::metrics::SloReport;
 use crate::perfmodel::{catalog, EngineModel, LinkSpec};
 use crate::report::registry::{PolicyContext, PolicyParams, PolicyRegistry};
 use crate::scaler::derive_thresholds_from_profile;
-use crate::sim::{simulate_source, ClusterConfig, SimConfig, SimResult};
+use crate::sim::{simulate_source, ClusterConfig, SimConfig, SimEngine, SimResult, SimSnapshot};
 use crate::trace::{ArrivalSource, SourceFactory, Trace, TraceProfile, TraceSliceSource};
 use crate::velocity::VelocityProfile;
 use crate::workload::SloPolicy;
 use std::sync::Arc;
+use std::time::Instant;
 
 pub use crate::report::registry::PolicyKind;
 
@@ -135,6 +136,38 @@ impl RunOverrides {
     }
 }
 
+/// Warm-start / checkpoint configuration of one experiment cell — the
+/// runner-side mirror of a scenario's serializable `checkpoint` block.
+///
+/// When present on an [`ExperimentSpec`], the run forks from a
+/// checkpoint instead of simulating from t=0: a shared warm-up prefix of
+/// `warm_start_s` simulated seconds is driven by the registry policy
+/// named in `policy` (amortizing fleet ramp-up), snapshotted, and the
+/// cell's own policy takes over from the fork with the warmed cluster.
+/// `Suite::run` simulates the prefix **once per scenario** and hands the
+/// snapshot to every cell via [`ExperimentSpec::warm_snapshot`]; a cell
+/// run on its own computes the identical prefix itself, so shared and
+/// unshared execution produce bit-identical results.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointSpec {
+    /// Simulated seconds of shared warm-up prefix before the fork.
+    pub warm_start_s: f64,
+    /// Registry name of the warm-up driver policy.
+    pub policy: String,
+    /// Auto-checkpoint interval for the forked cells (0 = off).
+    pub every_s: f64,
+}
+
+impl CheckpointSpec {
+    pub fn new(warm_start_s: f64) -> CheckpointSpec {
+        CheckpointSpec {
+            warm_start_s,
+            policy: "tokenscale".into(),
+            every_s: 0.0,
+        }
+    }
+}
+
 /// Everything a figure needs from one run.
 pub struct ExperimentResult {
     pub policy: PolicyKind,
@@ -142,11 +175,16 @@ pub struct ExperimentResult {
     pub sim: SimResult,
     /// The spec's free-form label, carried from [`ExperimentSpec::label`].
     pub label: String,
+    /// Wall-clock seconds this cell took (excluding any shared warm-up
+    /// prefix, whose cost is reported once per scenario by the suite).
+    pub wall_s: f64,
 }
 
 /// Build the simulation/cluster configs and the policy (via the registry)
-/// for one experiment cell.
-fn prepare_run(
+/// for one experiment cell. Public so equivalence tests can assemble
+/// reference runs (e.g. a two-phase cold run mirroring a warm-start fork)
+/// from the exact same configuration derivation.
+pub fn prepare_run(
     dep: &Deployment,
     policy: PolicyKind,
     workload: &TraceProfile,
@@ -212,6 +250,7 @@ fn run_source(
         report,
         sim,
         label: String::new(),
+        wall_s: 0.0,
     }
 }
 
@@ -221,25 +260,183 @@ fn run_source(
 /// [`Workload`] enum, and the workload profile defaults to *measured*
 /// for shared traces and *analytic* for streaming sources (overridable
 /// via [`ExperimentSpec::with_profile`]).
+///
+/// Cells with a [`CheckpointSpec`] run warm-started: the shared prefix
+/// snapshot is taken from [`ExperimentSpec::warm_snapshot`] when the
+/// suite precomputed it, or simulated here (identically) when the cell
+/// runs on its own.
 pub fn run_experiment(spec: &ExperimentSpec) -> ExperimentResult {
-    let mut r = match &spec.workload {
+    // Per-cell wall-clock starts *after* any shared warm-up prefix, so a
+    // cell's `wall_s` is the same whether the suite injected the
+    // snapshot or the cell computed its own.
+    let t0;
+    let mut r = if let Some(ck) = &spec.checkpoint {
+        let driver = PolicyKind::parse(&ck.policy).unwrap_or_else(|| {
+            panic!("warm-start driver `{}` is not in the registry", ck.policy)
+        });
+        let snap: Arc<SimSnapshot> = match &spec.warm_snapshot {
+            Some(s) => s.clone(),
+            None => Arc::new(
+                simulate_prefix(spec, driver, ck.warm_start_s, 0.0, None).unwrap_or_else(|e| {
+                    panic!("warm-up prefix for `{}` failed: {e:#}", spec.label)
+                }),
+            ),
+        };
+        t0 = Instant::now();
+        run_experiment_resumed(spec, &snap, driver, false).unwrap_or_else(|e| {
+            panic!("warm-start resume for `{}` failed: {e:#}", spec.label)
+        })
+    } else {
+        t0 = Instant::now();
+        match &spec.workload {
+            Workload::Shared(trace) => {
+                let workload = spec
+                    .profile
+                    .unwrap_or_else(|| TraceProfile::of_trace(trace));
+                let mut src = TraceSliceSource::new(trace.as_ref());
+                run_source(&spec.deployment, spec.policy, &mut src, &workload, &spec.overrides)
+            }
+            Workload::Streaming(factory) => {
+                // Each run builds its own source, so grid workers stream
+                // independent copies instead of sharing a materialized
+                // vector.
+                let mut src = factory();
+                let workload = spec.profile.unwrap_or_else(|| src.profile());
+                run_source(&spec.deployment, spec.policy, &mut src, &workload, &spec.overrides)
+            }
+        }
+    };
+    r.label = spec.label.clone();
+    r.wall_s = t0.elapsed().as_secs_f64();
+    r
+}
+
+/// Simulate `spec`'s workload under the `driver` policy up to simulated
+/// time `until_s` and return the checkpoint — the shared warm-up prefix
+/// of the warm-start lifecycle, and the engine behind `tokenscale sim
+/// checkpoint`. `every_s` > 0 additionally streams periodic snapshots to
+/// `sink` along the way (crash recovery for day-scale prefixes).
+pub fn simulate_prefix(
+    spec: &ExperimentSpec,
+    driver: PolicyKind,
+    until_s: f64,
+    every_s: f64,
+    sink: Option<Box<dyn FnMut(SimSnapshot) + '_>>,
+) -> anyhow::Result<SimSnapshot> {
+    anyhow::ensure!(
+        until_s.is_finite() && until_s > 0.0,
+        "prefix horizon must be positive, got {until_s}"
+    );
+    match &spec.workload {
         Workload::Shared(trace) => {
             let workload = spec
                 .profile
                 .unwrap_or_else(|| TraceProfile::of_trace(trace));
             let mut src = TraceSliceSource::new(trace.as_ref());
-            run_source(&spec.deployment, spec.policy, &mut src, &workload, &spec.overrides)
+            prefix_with_source(spec, driver, until_s, every_s, sink, &mut src, &workload)
         }
         Workload::Streaming(factory) => {
-            // Each run builds its own source, so grid workers stream
-            // independent copies instead of sharing a materialized vector.
             let mut src = factory();
             let workload = spec.profile.unwrap_or_else(|| src.profile());
-            run_source(&spec.deployment, spec.policy, &mut src, &workload, &spec.overrides)
+            prefix_with_source(spec, driver, until_s, every_s, sink, src.as_mut(), &workload)
         }
+    }
+}
+
+fn prefix_with_source(
+    spec: &ExperimentSpec,
+    driver: PolicyKind,
+    until_s: f64,
+    every_s: f64,
+    sink: Option<Box<dyn FnMut(SimSnapshot) + '_>>,
+    src: &mut dyn ArrivalSource,
+    workload: &TraceProfile,
+) -> anyhow::Result<SimSnapshot> {
+    let (mut sim_cfg, cluster_cfg, mut built) =
+        prepare_run(&spec.deployment, driver, workload, &spec.overrides);
+    sim_cfg.checkpoint_every_s = every_s;
+    let mut engine = SimEngine::new(sim_cfg, cluster_cfg, built.plane.as_mut(), src);
+    if let Some(sink) = sink {
+        engine.set_checkpoint_sink(sink);
+    }
+    engine.start();
+    let finished = engine.advance(until_s);
+    anyhow::ensure!(
+        !finished,
+        "warm-up prefix ({until_s}s) covers the whole workload — nothing left to fork"
+    );
+    Ok(engine.checkpoint())
+}
+
+/// Continue an experiment cell from a [`SimSnapshot`].
+///
+/// `driver` names the policy that produced the snapshot: the *cluster
+/// mechanics* config (convertible chunk budget, Eq. 6 reserve) is
+/// re-derived from it, because the captured fleet was built under it.
+/// With `restore_policy` the cell policy's internal state is restored
+/// from the snapshot (same-policy resume — bit-identical continuation of
+/// an interrupted run); without it the cell policy starts fresh from the
+/// warmed cluster (the warm-start fork).
+pub fn run_experiment_resumed(
+    spec: &ExperimentSpec,
+    snap: &SimSnapshot,
+    driver: PolicyKind,
+    restore_policy: bool,
+) -> anyhow::Result<ExperimentResult> {
+    match &spec.workload {
+        Workload::Shared(trace) => {
+            let workload = spec
+                .profile
+                .unwrap_or_else(|| TraceProfile::of_trace(trace));
+            let mut src = TraceSliceSource::new(trace.as_ref());
+            resume_with_source(spec, snap, driver, restore_policy, &mut src, &workload)
+        }
+        Workload::Streaming(factory) => {
+            let mut src = factory();
+            let workload = spec.profile.unwrap_or_else(|| src.profile());
+            resume_with_source(spec, snap, driver, restore_policy, src.as_mut(), &workload)
+        }
+    }
+}
+
+fn resume_with_source(
+    spec: &ExperimentSpec,
+    snap: &SimSnapshot,
+    driver: PolicyKind,
+    restore_policy: bool,
+    src: &mut dyn ArrivalSource,
+    workload: &TraceProfile,
+) -> anyhow::Result<ExperimentResult> {
+    // Mechanics from the driver, policy + report from the cell. The
+    // common same-policy resume needs only one derivation.
+    let (mut sim_cfg, cell_cluster_cfg, mut built) =
+        prepare_run(&spec.deployment, spec.policy, workload, &spec.overrides);
+    let cluster_cfg = if driver == spec.policy {
+        cell_cluster_cfg
+    } else {
+        prepare_run(&spec.deployment, driver, workload, &spec.overrides).1
     };
-    r.label = spec.label.clone();
-    r
+    if let Some(ck) = &spec.checkpoint {
+        sim_cfg.checkpoint_every_s = ck.every_s;
+    }
+    let slo = sim_cfg.slo;
+    let engine = SimEngine::resume(
+        sim_cfg,
+        cluster_cfg,
+        built.plane.as_mut(),
+        src,
+        snap,
+        restore_policy,
+    )?;
+    let sim = engine.run_to_completion();
+    let report = sim.metrics.report(&slo, spec.overrides.warmup_s);
+    Ok(ExperimentResult {
+        policy: spec.policy,
+        report,
+        sim,
+        label: spec.label.clone(),
+        wall_s: 0.0,
+    })
 }
 
 // ---------------------------------------------------- parallel experiments
@@ -267,6 +464,11 @@ pub struct ExperimentSpec {
     pub profile: Option<TraceProfile>,
     /// Free-form tag (e.g. `scenario/policy`) carried to the result.
     pub label: String,
+    /// Warm-start configuration; None runs cold from t=0.
+    pub checkpoint: Option<CheckpointSpec>,
+    /// Precomputed shared warm-up snapshot (injected by `Suite::run` so
+    /// the prefix is simulated once per scenario, not once per cell).
+    pub warm_snapshot: Option<Arc<SimSnapshot>>,
 }
 
 impl ExperimentSpec {
@@ -278,6 +480,8 @@ impl ExperimentSpec {
             overrides: RunOverrides::default(),
             profile: None,
             label: String::new(),
+            checkpoint: None,
+            warm_snapshot: None,
         }
     }
 
@@ -297,7 +501,15 @@ impl ExperimentSpec {
             overrides: RunOverrides::default(),
             profile: None,
             label: String::new(),
+            checkpoint: None,
+            warm_snapshot: None,
         }
+    }
+
+    /// Configure this cell to warm-start from a shared prefix snapshot.
+    pub fn with_checkpoint(mut self, ck: CheckpointSpec) -> ExperimentSpec {
+        self.checkpoint = Some(ck);
+        self
     }
 
     pub fn with_label(mut self, label: impl Into<String>) -> ExperimentSpec {

@@ -15,7 +15,7 @@
 //! so file-driven sweeps fail with actionable messages instead of deep
 //! panics.
 
-use crate::report::runner::{deployment, ExperimentSpec, RunOverrides, Workload};
+use crate::report::runner::{deployment, CheckpointSpec, ExperimentSpec, RunOverrides, Workload};
 use crate::report::PolicyKind;
 use crate::trace::{
     family_source, materialize, step_trace, uniform_bucket_trace, ArrivalSource, BurstWindow,
@@ -684,6 +684,11 @@ pub struct Scenario {
     /// instead of streaming an independent copy per grid worker
     /// (analytic profile — the hour-scale setup).
     pub materialize: bool,
+    /// Cross-cell warm-start: simulate a shared warm-up prefix once per
+    /// scenario under the named driver policy, snapshot it, and fork
+    /// every policy cell from the snapshot (see docs/checkpoints.md).
+    /// None runs every cell cold from t=0.
+    pub checkpoint: Option<CheckpointSpec>,
 }
 
 impl Scenario {
@@ -697,6 +702,7 @@ impl Scenario {
             overrides: ScenarioOverrides::default(),
             slo: None,
             materialize: false,
+            checkpoint: None,
         }
     }
 
@@ -734,6 +740,12 @@ impl Scenario {
 
     pub fn materialized(mut self) -> Scenario {
         self.materialize = true;
+        self
+    }
+
+    /// Enable cross-cell warm-start from a shared prefix snapshot.
+    pub fn with_checkpoint(mut self, ck: CheckpointSpec) -> Scenario {
+        self.checkpoint = Some(ck);
         self
     }
 
@@ -776,6 +788,46 @@ impl Scenario {
             t.validate()?;
         }
         self.overrides.validate()?;
+        if let Some(ck) = &self.checkpoint {
+            if !(ck.warm_start_s.is_finite() && ck.warm_start_s > 0.0) {
+                return Err(ScenarioError::BadValue {
+                    field: "checkpoint.warm_start_s".into(),
+                    reason: format!("must be positive, got {}", ck.warm_start_s),
+                });
+            }
+            if ck.every_s.is_nan() || ck.every_s < 0.0 {
+                return Err(ScenarioError::BadValue {
+                    field: "checkpoint.every_s".into(),
+                    reason: format!("must be non-negative, got {}", ck.every_s),
+                });
+            }
+            if PolicyKind::parse(&ck.policy).is_none() {
+                return Err(ScenarioError::UnknownPolicy {
+                    name: ck.policy.clone(),
+                });
+            }
+            // When the workload's horizon is known up front, a prefix
+            // that swallows the whole run is a configuration error here,
+            // not a panic mid-suite. (Replay durations are only known
+            // after loading the file; those fail at run time instead.)
+            let known_duration = match &self.workload {
+                WorkloadSpec::Synthetic { duration_s, .. }
+                | WorkloadSpec::Step { duration_s, .. }
+                | WorkloadSpec::UniformBuckets { duration_s, .. } => Some(*duration_s),
+                WorkloadSpec::Replay { .. } => None,
+            };
+            if let Some(d) = known_duration {
+                if ck.warm_start_s >= d {
+                    return Err(ScenarioError::BadValue {
+                        field: "checkpoint.warm_start_s".into(),
+                        reason: format!(
+                            "warm-up prefix ({}s) must end before the workload does ({d}s)",
+                            ck.warm_start_s
+                        ),
+                    });
+                }
+            }
+        }
         Ok(())
     }
 
@@ -844,6 +896,23 @@ impl Scenario {
         } else {
             Workload::Streaming(self.source_factory()?)
         };
+        // The static validate() check only sees the raw workload duration;
+        // replay files and duration-changing transforms (window,
+        // rate-scale) are only measurable here. Catch a prefix that
+        // swallows the whole stream as a typed error instead of a panic
+        // inside the experiment grid.
+        if let Some(ck) = &self.checkpoint {
+            let duration = match &workload {
+                Workload::Shared(trace) => trace.duration_s,
+                Workload::Streaming(factory) => factory().duration_s(),
+            };
+            anyhow::ensure!(
+                ck.warm_start_s < duration,
+                "scenario `{}`: warm-up prefix ({}s) must end before the workload does ({duration}s)",
+                self.name,
+                ck.warm_start_s
+            );
+        }
         Ok(self
             .policies
             .iter()
@@ -856,6 +925,8 @@ impl Scenario {
                     overrides: ov.clone(),
                     profile: None,
                     label: format!("{}/{}", self.name, policy.name()),
+                    checkpoint: self.checkpoint.clone(),
+                    warm_snapshot: None,
                 }
             })
             .collect())
@@ -892,6 +963,15 @@ impl Scenario {
         if self.materialize {
             j = j.set("materialize", true);
         }
+        if let Some(ck) = &self.checkpoint {
+            let mut c = Json::obj()
+                .set("warm_start_s", ck.warm_start_s)
+                .set("policy", ck.policy.as_str());
+            if ck.every_s > 0.0 {
+                c = c.set("every_s", ck.every_s);
+            }
+            j = j.set("checkpoint", c);
+        }
         j
     }
 
@@ -908,6 +988,7 @@ impl Scenario {
                 "overrides",
                 "slo",
                 "materialize",
+                "checkpoint",
             ],
         )?;
         let name = req_str(j, "scenario", "name")?.to_string();
@@ -961,6 +1042,26 @@ impl Scenario {
             }
             None => None,
         };
+        let checkpoint = match j.get("checkpoint") {
+            None => None,
+            Some(c) => {
+                check_fields(c, "checkpoint", &["warm_start_s", "policy", "every_s"])?;
+                let mut ck = CheckpointSpec::new(req_f64(c, "checkpoint", "warm_start_s")?);
+                if let Some(p) = c.get("policy") {
+                    ck.policy = p
+                        .as_str()
+                        .ok_or_else(|| ScenarioError::BadValue {
+                            field: "checkpoint.policy".into(),
+                            reason: "expected a policy name string".into(),
+                        })?
+                        .to_string();
+                }
+                if let Some(e) = opt_f64(c, "every_s")? {
+                    ck.every_s = e;
+                }
+                Some(ck)
+            }
+        };
         let scenario = Scenario {
             name,
             deployment: req_str(j, "scenario", "deployment")?.to_string(),
@@ -976,6 +1077,7 @@ impl Scenario {
                     reason: "expected a boolean".into(),
                 })?,
             },
+            checkpoint,
         };
         scenario.validate()?;
         Ok(scenario)
@@ -1121,6 +1223,51 @@ mod tests {
             Scenario::from_json(&j),
             Err(ScenarioError::UnknownTraceFamily { name: "nope".into() })
         );
+    }
+
+    #[test]
+    fn checkpoint_block_round_trips_and_validates() {
+        let mut sc = demo_scenario();
+        sc.checkpoint = Some(CheckpointSpec {
+            warm_start_s: 20.0,
+            policy: "static".into(),
+            every_s: 5.0,
+        });
+        let back = Scenario::from_json(&Json::parse(&sc.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back, sc);
+        // Defaults: policy falls back to tokenscale, every_s to 0.
+        let j = Json::parse(
+            r#"{"name":"x","deployment":"small-a100","policies":["distserve"],
+                "workload":{"kind":"synthetic","family":"mixed","rps":5,"duration_s":60},
+                "checkpoint":{"warm_start_s":10}}"#,
+        )
+        .unwrap();
+        let sc = Scenario::from_json(&j).unwrap();
+        let ck = sc.checkpoint.unwrap();
+        assert_eq!(ck.policy, "tokenscale");
+        assert_eq!(ck.every_s, 0.0);
+        // Specs carry the block through compilation.
+        let mut sc = demo_scenario();
+        sc.checkpoint = Some(CheckpointSpec::new(20.0));
+        let specs = sc.experiment_specs().unwrap();
+        assert!(specs.iter().all(|s| s.checkpoint == sc.checkpoint));
+        assert!(specs.iter().all(|s| s.warm_snapshot.is_none()));
+
+        // Degenerate values are typed errors.
+        let mut bad = demo_scenario();
+        bad.checkpoint = Some(CheckpointSpec::new(0.0));
+        assert!(matches!(bad.validate(), Err(ScenarioError::BadValue { .. })));
+        let mut bad = demo_scenario();
+        bad.checkpoint = Some(CheckpointSpec {
+            warm_start_s: 10.0,
+            policy: "no-such-policy".into(),
+            every_s: 0.0,
+        });
+        assert!(matches!(bad.validate(), Err(ScenarioError::UnknownPolicy { .. })));
+        // Prefix >= known workload duration is rejected at parse time.
+        let mut bad = demo_scenario();
+        bad.checkpoint = Some(CheckpointSpec::new(60.0)); // demo duration is 60s
+        assert!(matches!(bad.validate(), Err(ScenarioError::BadValue { .. })));
     }
 
     #[test]

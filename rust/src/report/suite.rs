@@ -20,19 +20,25 @@
 //! data-driven replacement for the benches' former setup code; file-based
 //! suites load from TOML/JSON under [`SCENARIO_DIR`].
 
-use crate::report::runner::{run_experiments, ExperimentResult};
+use crate::report::runner::{
+    run_experiments, CheckpointSpec, ExperimentResult, PolicyKind, simulate_prefix,
+};
 use crate::report::scenario::{
     Scenario, ScenarioError, ScenarioOverrides, TransformStep, WorkloadSpec,
 };
+use crate::sim::SimSnapshot;
 use crate::trace::{BurstWindow, TraceFamily};
 use crate::util::json::Json;
 use crate::util::table::{fnum, pct, Table};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Version tag of the normalized `BENCH_<suite>.json` schema; bump on any
 /// structural change (the golden-file test pins the layout).
-pub const BENCH_SCHEMA_VERSION: u64 = 1;
+/// v2: per-cell `wall_s` plus the top-level `warm_start` amortization
+/// block (shared warm-up prefix wall-clock accounting).
+pub const BENCH_SCHEMA_VERSION: u64 = 2;
 
 /// Directory scanned for file-based suites (relative to the repo root).
 pub const SCENARIO_DIR: &str = "scenarios";
@@ -152,19 +158,50 @@ impl Suite {
     }
 
     /// Run every scenario × policy cell on the shared thread pool.
+    ///
+    /// Scenarios with a `checkpoint` block run **warm-started**: the
+    /// shared warm-up prefix is simulated once per scenario here (under
+    /// the block's driver policy), snapshotted, and every policy cell
+    /// forks from the snapshot on the grid — per-cell results are
+    /// identical to running each cell on its own (which would compute
+    /// the same prefix itself), but the prefix wall-clock is paid once
+    /// instead of once per cell. The amortization is reported in the
+    /// normalized JSON's `warm_start` block.
     pub fn run(&self) -> anyhow::Result<SuiteRun> {
         self.validate()?;
         let mut specs = Vec::new();
         let mut cells: Vec<(String, String)> = Vec::new();
+        let mut warm_start: Vec<WarmStartStat> = Vec::new();
         for sc in &self.scenarios {
-            for spec in sc.experiment_specs()? {
+            let mut cell_specs = sc.experiment_specs()?;
+            if let Some(ck) = &sc.checkpoint {
+                let driver = PolicyKind::parse(&ck.policy)
+                    .ok_or_else(|| anyhow::anyhow!("warm-start driver `{}` unknown", ck.policy))?;
+                let t0 = Instant::now();
+                let snap = Arc::new(
+                    simulate_prefix(&cell_specs[0], driver, ck.warm_start_s, 0.0, None)
+                        .map_err(|e| anyhow::anyhow!("scenario `{}`: {e}", sc.name))?,
+                );
+                warm_start.push(WarmStartStat {
+                    scenario: sc.name.clone(),
+                    policy: ck.policy.clone(),
+                    warm_start_s: ck.warm_start_s,
+                    prefix_wall_s: t0.elapsed().as_secs_f64(),
+                    cells: cell_specs.len(),
+                });
+                for spec in &mut cell_specs {
+                    spec.warm_snapshot = Some(snap.clone());
+                }
+            }
+            for spec in cell_specs {
                 cells.push((sc.name.clone(), spec.policy.name().to_string()));
                 specs.push(spec);
             }
         }
         let t0 = Instant::now();
         let results = run_experiments(&specs);
-        let wall_s = t0.elapsed().as_secs_f64();
+        let wall_s = t0.elapsed().as_secs_f64()
+            + warm_start.iter().map(|w| w.prefix_wall_s).sum::<f64>();
         let outcomes = cells
             .iter()
             .zip(&results)
@@ -175,7 +212,29 @@ impl Suite {
             wall_s,
             outcomes,
             results,
+            warm_start,
         })
+    }
+}
+
+/// Wall-clock amortization record of one warm-started scenario.
+#[derive(Clone, Debug)]
+pub struct WarmStartStat {
+    pub scenario: String,
+    /// Warm-up driver policy (registry name).
+    pub policy: String,
+    /// Simulated seconds of shared prefix.
+    pub warm_start_s: f64,
+    /// Wall-clock seconds the single prefix simulation took.
+    pub prefix_wall_s: f64,
+    /// Cells forked from the snapshot.
+    pub cells: usize,
+}
+
+impl WarmStartStat {
+    /// Estimated wall-clock saved vs simulating the prefix per cell.
+    pub fn saved_wall_s(&self) -> f64 {
+        self.prefix_wall_s * self.cells.saturating_sub(1) as f64
     }
 }
 
@@ -202,6 +261,8 @@ pub struct ScenarioOutcome {
     pub scale_ups: usize,
     pub scale_downs: usize,
     pub arrival_rps: f64,
+    /// Wall-clock seconds this cell took (excl. any shared prefix).
+    pub wall_s: f64,
 }
 
 impl ScenarioOutcome {
@@ -225,6 +286,7 @@ impl ScenarioOutcome {
             scale_ups: res.sim.scale_ups,
             scale_downs: res.sim.scale_downs,
             arrival_rps: res.sim.metrics.offered_rps(),
+            wall_s: res.wall_s,
         }
     }
 
@@ -245,6 +307,7 @@ impl ScenarioOutcome {
             .set("scale_ups", self.scale_ups)
             .set("scale_downs", self.scale_downs)
             .set("arrival_rps", self.arrival_rps)
+            .set("wall_s", self.wall_s)
     }
 }
 
@@ -256,6 +319,9 @@ pub struct SuiteRun {
     pub outcomes: Vec<ScenarioOutcome>,
     /// Raw results, parallel to `outcomes` (custom figure rendering).
     pub results: Vec<ExperimentResult>,
+    /// Wall-clock amortization per warm-started scenario (empty when the
+    /// suite has no `checkpoint` blocks).
+    pub warm_start: Vec<WarmStartStat>,
 }
 
 impl SuiteRun {
@@ -287,10 +353,23 @@ impl SuiteRun {
             }
             scenarios = scenarios.set(name, per_policy);
         }
+        let mut warm = Json::obj();
+        for w in &self.warm_start {
+            warm = warm.set(
+                &w.scenario,
+                Json::obj()
+                    .set("policy", w.policy.as_str())
+                    .set("warm_start_s", w.warm_start_s)
+                    .set("prefix_wall_s", w.prefix_wall_s)
+                    .set("cells", w.cells)
+                    .set("saved_wall_s", w.saved_wall_s()),
+            );
+        }
         Json::obj()
             .set("schema_version", BENCH_SCHEMA_VERSION)
             .set("suite", self.suite.as_str())
             .set("wall_s", self.wall_s)
+            .set("warm_start", warm)
             .set("scenarios", scenarios)
     }
 
@@ -847,9 +926,90 @@ pub fn longtrace_suite(duration_s: f64, rps: f64) -> Suite {
     )
 }
 
+/// Day-scale diurnal sweeps on `large-a100` with **cross-cell
+/// warm-start**: each scenario's fleet ramp-up prefix is simulated once
+/// (TokenScale-driven), snapshotted, and all four policy cells fork from
+/// it — the wall-clock amortization lands in the bench JSON's
+/// `warm_start` block. This is the multi-day-horizon answer the ROADMAP
+/// called for: the streaming pipeline removed the memory wall, the
+/// checkpoint subsystem removes the repeated warm-up wall.
+pub fn longtrace_daily_suite(duration_s: f64, rps: f64) -> Suite {
+    let diurnal_amp = 0.5;
+    // Warm-up prefix: 5 % of the horizon (~72 simulated minutes at full
+    // scale) — long enough to carry the fleet through its initial ramp.
+    let warm = CheckpointSpec {
+        warm_start_s: duration_s * 0.05,
+        policy: "tokenscale".into(),
+        every_s: 0.0,
+    };
+    // Reports measure from the fork: the shared prefix is ramp, not the
+    // policy under test.
+    let ov = ScenarioOverrides {
+        warmup_s: duration_s * 0.05,
+        ..Default::default()
+    };
+    Suite::new(
+        "longtrace-daily",
+        "day-scale diurnal sweeps with shared warm-up prefixes (cross-cell warm-start)",
+    )
+    .scenario(
+        // One full day/night period over the whole horizon.
+        Scenario::new(
+            "daily-diurnal",
+            "large-a100",
+            WorkloadSpec::Synthetic {
+                family: TraceFamily::AzureConv,
+                rps: rps * (1.0 + diurnal_amp),
+                duration_s,
+                seed: 1101,
+            },
+        )
+        .transform(TransformStep::Diurnal {
+            amplitude: diurnal_amp,
+            period_s: duration_s,
+            seed: 1202,
+        })
+        .all_baselines()
+        .with_overrides(ov.clone())
+        .with_checkpoint(warm.clone()),
+    )
+    .scenario(
+        // Diurnal trend with evening flash crowds layered on top.
+        Scenario::new(
+            "daily-burst",
+            "large-a100",
+            WorkloadSpec::Synthetic {
+                family: TraceFamily::Mixed,
+                rps,
+                duration_s,
+                seed: 1303,
+            },
+        )
+        .transform(TransformStep::Burst {
+            windows: vec![
+                BurstWindow::new(duration_s * 0.35, duration_s * 0.04, 3.0),
+                BurstWindow::new(duration_s * 0.70, duration_s * 0.06, 4.0),
+            ],
+            seed: 1404,
+        })
+        .all_baselines()
+        .with_overrides(ov)
+        .with_checkpoint(warm),
+    )
+}
+
+/// `(duration_s, rps)` of the `longtrace-daily` full scale: 24 simulated
+/// hours at the paper's 22 RPS.
+pub const LONGTRACE_DAILY_FULL_SCALE: (f64, f64) = (86_400.0, 22.0);
+
+/// `(duration_s, rps)` of the `longtrace-daily` smoke scale (same
+/// scenario shapes, minutes-long horizon for CI and tests).
+pub const LONGTRACE_DAILY_SMOKE_SCALE: (f64, f64) = (1_200.0, 4.0);
+
 /// Every built-in suite at its default scale.
 pub fn builtin_suites() -> Vec<Suite> {
     let (lt_duration, lt_rps) = LONGTRACE_FULL_SCALE;
+    let (day_duration, day_rps) = LONGTRACE_DAILY_FULL_SCALE;
     vec![
         fig4_suite(),
         fig9_suite(300.0),
@@ -861,6 +1021,7 @@ pub fn builtin_suites() -> Vec<Suite> {
         fig15_suite(),
         decoder_validation_suite(),
         longtrace_suite(lt_duration, lt_rps),
+        longtrace_daily_suite(day_duration, day_rps),
     ]
 }
 
@@ -919,7 +1080,7 @@ mod tests {
     #[test]
     fn builtin_suites_validate() {
         let suites = builtin_suites();
-        assert!(suites.len() >= 10);
+        assert!(suites.len() >= 11);
         for s in &suites {
             s.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
             assert!(!s.scenarios.is_empty(), "{}", s.name);
@@ -932,6 +1093,12 @@ mod tests {
                 "longtrace lacks {want}"
             );
         }
+        // The day-scale suite warm-starts every scenario and validates at
+        // smoke scale too (the warm prefix must fit inside the horizon).
+        let daily = suites.iter().find(|s| s.name == "longtrace-daily").unwrap();
+        assert!(daily.scenarios.iter().all(|sc| sc.checkpoint.is_some()));
+        let (d, r) = LONGTRACE_DAILY_SMOKE_SCALE;
+        longtrace_daily_suite(d, r).validate().unwrap();
     }
 
     #[test]

@@ -17,7 +17,8 @@
 
 use super::thresholds::Thresholds;
 use super::tokenscale::Hysteresis;
-use crate::sim::{Action, ClusterView, ControlPlane, InstanceId, Role, Signal};
+use crate::sim::{Action, ClusterView, ControlPlane, InstanceId, PolicyState, Role, Signal};
+use crate::util::json::Json;
 use crate::util::stats::SlidingWindow;
 use crate::workload::{BucketScheme, Request, SloPolicy};
 
@@ -206,6 +207,42 @@ impl BaseState {
                 .apply(view.active_count(Role::Decoder), d_target),
         )
     }
+
+    /// Bit-exact serialization of the shared baseline stream state for
+    /// checkpoint/restore (sim::snapshot).
+    fn to_snapshot(&self) -> Json {
+        Json::obj()
+            .set("inflight", self.inflight)
+            .set("prefill_conc", self.prefill_conc.to_snapshot())
+            .set("decode_conc", self.decode_conc.to_snapshot())
+            .set("rps", self.rps.to_snapshot())
+            .set("prefill_hyst", self.prefill_hyst.to_snapshot())
+            .set("decode_hyst", self.decode_hyst.to_snapshot())
+    }
+
+    /// Restore state captured by [`BaseState::to_snapshot`] in place
+    /// (thresholds/minimums are construction config, not stream state).
+    fn restore_snapshot(&mut self, j: &Json) -> anyhow::Result<()> {
+        let what = "baseline snapshot";
+        let get = |key: &str| -> anyhow::Result<&Json> {
+            j.get(key).ok_or_else(|| anyhow::anyhow!("{what}: missing `{key}`"))
+        };
+        self.inflight = get("inflight")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("{what}: bad `inflight`"))?;
+        self.prefill_conc = SlidingWindow::from_snapshot(get("prefill_conc")?)?;
+        self.decode_conc = SlidingWindow::from_snapshot(get("decode_conc")?)?;
+        self.rps = SlidingWindow::from_snapshot(get("rps")?)?;
+        self.prefill_hyst = Hysteresis::from_snapshot(get("prefill_hyst")?)?;
+        self.decode_hyst = Hysteresis::from_snapshot(get("decode_hyst")?)?;
+        Ok(())
+    }
+}
+
+/// Shared `save_state` body for policies whose only stream state is a
+/// [`BaseState`].
+fn base_only_state(name: &str, state: &BaseState) -> PolicyState {
+    PolicyState::new(name, Json::obj().set("base", state.to_snapshot()))
 }
 
 // ---------------------------------------------------------------- AIBrix
@@ -282,6 +319,15 @@ impl ControlPlane for AiBrix {
             self.tick(now, view, actions);
         }
     }
+
+    fn save_state(&self) -> PolicyState {
+        base_only_state(self.name(), &self.state)
+    }
+
+    fn restore_state(&mut self, state: &PolicyState) -> anyhow::Result<()> {
+        state.expect(self.name())?;
+        self.state.restore_snapshot(state.part("base")?)
+    }
 }
 
 // ------------------------------------------------------------ BlitzScale
@@ -350,6 +396,15 @@ impl ControlPlane for BlitzScale {
     fn live_scaling(&self) -> bool {
         true // §V: ideal live autoscaling, model-load latency removed
     }
+
+    fn save_state(&self) -> PolicyState {
+        base_only_state(self.name(), &self.state)
+    }
+
+    fn restore_state(&mut self, state: &PolicyState) -> anyhow::Result<()> {
+        state.expect(self.name())?;
+        self.state.restore_snapshot(state.part("base")?)
+    }
 }
 
 // ------------------------------------------------------------- DistServe
@@ -399,6 +454,15 @@ impl ControlPlane for DistServe {
         if matches!(signal, Signal::Tick) {
             self.tick(now, view, actions);
         }
+    }
+
+    fn save_state(&self) -> PolicyState {
+        base_only_state(self.name(), &self.state)
+    }
+
+    fn restore_state(&mut self, state: &PolicyState) -> anyhow::Result<()> {
+        state.expect(self.name())?;
+        self.state.restore_snapshot(state.part("base")?)
     }
 }
 
@@ -506,6 +570,15 @@ impl ControlPlane for PrefillDeflect {
                 self.state.base_signal(now, other, view, actions);
             }
         }
+    }
+
+    fn save_state(&self) -> PolicyState {
+        base_only_state(self.name(), &self.state)
+    }
+
+    fn restore_state(&mut self, state: &PolicyState) -> anyhow::Result<()> {
+        state.expect(self.name())?;
+        self.state.restore_snapshot(state.part("base")?)
     }
 }
 
@@ -832,5 +905,23 @@ impl ControlPlane for Ablation {
             .decode_hyst
             .apply(view.active_count(Role::Decoder), d_target);
         BaseState::push_fleet(actions, prefillers, decoders);
+    }
+
+    /// Base windows plus the gateway (velocity windows + predictor RNG);
+    /// the label distinguishes the B+P and B+P+D variants.
+    fn save_state(&self) -> PolicyState {
+        PolicyState::new(
+            self.name(),
+            Json::obj()
+                .set("base", self.state.to_snapshot())
+                .set("gateway", self.gateway.to_snapshot()),
+        )
+    }
+
+    fn restore_state(&mut self, state: &PolicyState) -> anyhow::Result<()> {
+        state.expect(self.name())?;
+        self.state.restore_snapshot(state.part("base")?)?;
+        self.gateway.restore_snapshot(state.part("gateway")?)?;
+        Ok(())
     }
 }

@@ -5,6 +5,7 @@
 //! hysteresis wrapper that turns instantaneous targets into stable scaling
 //! decisions.
 
+use crate::util::json::Json;
 use crate::velocity::VelocityProfile;
 
 /// Eq. 2: required prefillers `I_P = λ / min(V_P, V_BW)` where λ is the
@@ -94,6 +95,28 @@ impl Hysteresis {
         } else {
             current
         }
+    }
+
+    /// Checkpoint serialization of the scale-down streak (sim::snapshot).
+    pub fn to_snapshot(&self) -> Json {
+        Json::obj()
+            .set("down_delay_ticks", self.down_delay_ticks)
+            .set("below", self.below)
+            .set("below_max", self.below_max)
+    }
+
+    /// Rebuild from [`Hysteresis::to_snapshot`] output.
+    pub fn from_snapshot(j: &Json) -> anyhow::Result<Hysteresis> {
+        let field = |key: &str| -> anyhow::Result<usize> {
+            j.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("hysteresis snapshot: missing `{key}`"))
+        };
+        Ok(Hysteresis {
+            down_delay_ticks: field("down_delay_ticks")?,
+            below: field("below")?,
+            below_max: field("below_max")?,
+        })
     }
 }
 

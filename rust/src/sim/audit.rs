@@ -58,6 +58,24 @@ impl DecisionLog {
         }
     }
 
+    /// Rebuild a ring from checkpointed parts (sim::snapshot): retained
+    /// records oldest-first, plus the lifetime counter. Extra records
+    /// beyond `capacity` are dropped oldest-first, matching `push`.
+    pub fn from_parts(capacity: usize, total_seen: u64, records: Vec<DecisionRecord>) -> DecisionLog {
+        let mut buf: VecDeque<DecisionRecord> = records.into();
+        while capacity > 0 && buf.len() > capacity {
+            buf.pop_front();
+        }
+        if capacity == 0 {
+            buf.clear();
+        }
+        DecisionLog {
+            capacity,
+            total_seen,
+            buf,
+        }
+    }
+
     pub fn push(&mut self, rec: DecisionRecord) {
         self.total_seen += 1;
         if self.capacity == 0 {

@@ -10,8 +10,10 @@
 
 use super::event::InstanceId;
 use super::instance::{Instance, LifeState, Role};
+use super::snapshot;
 use crate::metrics::TimeSeries;
 use crate::perfmodel::EngineModel;
+use crate::util::json::Json;
 use std::sync::Arc;
 
 /// Deployment-level configuration of a simulated cluster.
@@ -306,6 +308,126 @@ impl Cluster {
             .map(|i| i.id)
             .collect()
     }
+
+    /// Capture the complete cluster state for a checkpoint: slab slots
+    /// with their generation seqs, the free list, per-role live lists,
+    /// cached counts, and the cost integral (sim::snapshot).
+    pub fn to_snapshot(&self) -> Json {
+        Json::obj()
+            .set(
+                "slots",
+                Json::Arr(
+                    self.slots
+                        .iter()
+                        .map(|s| {
+                            Json::obj().set("seq", Json::u64_hex(s.seq)).set(
+                                "inst",
+                                match &s.inst {
+                                    None => Json::Null,
+                                    Some(i) => snapshot::instance_to_json(i),
+                                },
+                            )
+                        })
+                        .collect(),
+                ),
+            )
+            .set(
+                "free",
+                Json::Arr(self.free.iter().map(|f| Json::from(*f as usize)).collect()),
+            )
+            .set("next_seq", Json::u64_hex(self.next_seq))
+            .set(
+                "live",
+                Json::Arr(
+                    self.live
+                        .iter()
+                        .map(|ids| {
+                            Json::Arr(ids.iter().map(|id| snapshot::iid_to_json(*id)).collect())
+                        })
+                        .collect(),
+                ),
+            )
+            .set(
+                "active",
+                Json::Arr(self.active.iter().map(|a| Json::from(*a)).collect()),
+            )
+            .set("allocated", self.allocated)
+            .set("gpu_seconds", Json::f64_bits(self.gpu_seconds))
+            .set("last_cost_t", Json::f64_bits(self.last_cost_t))
+            .set("prefiller_series", snapshot::series_to_json(&self.prefiller_series))
+            .set("decoder_series", snapshot::series_to_json(&self.decoder_series))
+    }
+
+    /// Rebuild a cluster from [`Cluster::to_snapshot`] output. `config`
+    /// supplies the engine models (shared across instances by role, as in
+    /// `spawn`) and is not itself serialized — the caller reconstructs it
+    /// from the experiment spec, exactly like a fresh run.
+    pub fn from_snapshot(config: ClusterConfig, j: &Json) -> anyhow::Result<Cluster> {
+        let what = "cluster snapshot";
+        let mut slots = Vec::new();
+        for s in snapshot::parr(j, "slots", what)? {
+            let seq = snapshot::pu64(s, "seq", what)?;
+            let inst = match snapshot::get(s, "inst", what)? {
+                Json::Null => None,
+                other => {
+                    // Role decides which shared engine model the instance
+                    // uses (conversions never cross the prefiller side).
+                    let role = other.get("role").and_then(Json::as_str);
+                    let engine = if role == Some("prefiller") {
+                        config.prefill_engine.clone()
+                    } else {
+                        config.decode_engine.clone()
+                    };
+                    Some(snapshot::instance_from_json(other, engine)?)
+                }
+            };
+            slots.push(Slot { seq, inst });
+        }
+        let free = snapshot::parr(j, "free", what)?
+            .iter()
+            .map(|f| {
+                f.as_usize()
+                    .map(|v| v as u32)
+                    .ok_or_else(|| anyhow::anyhow!("{what}: bad free-slot index"))
+            })
+            .collect::<anyhow::Result<Vec<u32>>>()?;
+        let live_arr = snapshot::parr(j, "live", what)?;
+        anyhow::ensure!(live_arr.len() == 3, "{what}: expected 3 live lists");
+        let mut live: [Vec<InstanceId>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for (k, ids) in live_arr.iter().enumerate() {
+            live[k] = ids
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{what}: live list {k} is not an array"))?
+                .iter()
+                .map(snapshot::iid_from_json)
+                .collect::<anyhow::Result<_>>()?;
+        }
+        let active_arr = snapshot::parr(j, "active", what)?;
+        anyhow::ensure!(active_arr.len() == 3, "{what}: expected 3 active counts");
+        let mut active = [0usize; 3];
+        for (k, a) in active_arr.iter().enumerate() {
+            active[k] = a
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("{what}: bad active count"))?;
+        }
+        Ok(Cluster {
+            config,
+            slots,
+            free,
+            next_seq: snapshot::pu64(j, "next_seq", what)?,
+            live,
+            active,
+            allocated: snapshot::pusize(j, "allocated", what)?,
+            gpu_seconds: snapshot::pf(j, "gpu_seconds", what)?,
+            last_cost_t: snapshot::pf(j, "last_cost_t", what)?,
+            prefiller_series: snapshot::series_from_json(snapshot::get(
+                j,
+                "prefiller_series",
+                what,
+            )?)?,
+            decoder_series: snapshot::series_from_json(snapshot::get(j, "decoder_series", what)?)?,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -434,6 +556,41 @@ mod tests {
         let mut c = Cluster::new(test_config(8));
         let id = c.spawn(Role::Prefiller, 0.0, Some(0.2)).unwrap();
         assert!((c.get(id).unwrap().ready_at - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_round_trips_slab_state_through_text() {
+        let mut c = Cluster::new(test_config(8));
+        let a = c.spawn(Role::Prefiller, 0.0, Some(0.0)).unwrap();
+        let b = c.spawn(Role::Decoder, 0.5, None).unwrap();
+        let _cv = c.spawn(Role::ConvertibleDecoder, 1.0, Some(0.0)).unwrap();
+        c.retire(a, 2.0);
+        c.sweep_drained(3.0); // frees a's slot -> non-trivial free list
+        c.accrue_cost(4.0);
+        c.get_mut(b).unwrap().reserved_tokens = 1234.5;
+
+        let text = c.to_snapshot().pretty();
+        let back = Cluster::from_snapshot(
+            test_config(8),
+            &crate::util::json::Json::parse(&text).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.allocated_gpus(), c.allocated_gpus());
+        assert_eq!(back.gpu_seconds.to_bits(), c.gpu_seconds.to_bits());
+        for role in [Role::Prefiller, Role::Decoder, Role::ConvertibleDecoder] {
+            assert_eq!(back.active_count(role), c.active_count(role), "{role:?}");
+            assert_eq!(back.count_role(role), c.count_role(role), "{role:?}");
+        }
+        assert!(back.get(a).is_none(), "stale id stays dead after restore");
+        let bi = back.get(b).unwrap();
+        assert_eq!(bi.reserved_tokens.to_bits(), 1234.5f64.to_bits());
+        assert_eq!(bi.life, c.get(b).unwrap().life);
+        // Spawning after restore reuses the freed slot with a fresh seq,
+        // exactly like the live cluster would.
+        let mut c2 = back;
+        let d = c2.spawn(Role::Decoder, 5.0, Some(0.0)).unwrap();
+        assert_eq!(d.slot(), a.slot());
+        assert!(d.seq() > b.seq());
     }
 
     #[test]

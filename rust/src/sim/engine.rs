@@ -53,10 +53,12 @@ use super::cluster::{Cluster, ClusterConfig};
 use super::event::{Event, EventQueue, InstanceId};
 use super::instance::{ActiveSeq, LifeState, PrefillJob, RequestClock, Role};
 use super::policy::{Action, ActionOutcome, ControlPlane, RejectReason, Signal, SignalKind};
+use super::snapshot::{self, SimSnapshot, SNAPSHOT_SCHEMA_VERSION};
 use super::view::ClusterView;
 use crate::metrics::{MetricsRecorder, TimeSeries};
 use crate::perfmodel::LinkSpec;
-use crate::trace::{ArrivalSource, Trace, TraceSliceSource};
+use crate::trace::{fast_forward, ArrivalSource, Trace, TraceSliceSource};
+use crate::util::json::Json;
 use crate::workload::{BucketScheme, Completion, Request, RequestId, SloPolicy};
 use std::collections::{HashMap, VecDeque};
 
@@ -88,6 +90,14 @@ pub struct SimConfig {
     pub force_single_step: bool,
     /// Decision audit ring capacity; 0 disables the [`DecisionLog`].
     pub decision_log: usize,
+    /// Periodic auto-checkpoint interval in simulated seconds; 0 (the
+    /// default) disables it. Each firing captures a [`SimSnapshot`] —
+    /// delivered to the sink installed via
+    /// [`SimEngine::set_checkpoint_sink`], or retained as
+    /// [`SimResult::last_checkpoint`] when no sink is set. Taking a
+    /// snapshot never perturbs simulation state, so results are identical
+    /// with or without auto-checkpointing.
+    pub checkpoint_every_s: f64,
 }
 
 impl Default for SimConfig {
@@ -103,6 +113,7 @@ impl Default for SimConfig {
             slo: SloPolicy::default(),
             force_single_step: false,
             decision_log: 0,
+            checkpoint_every_s: 0.0,
         }
     }
 }
@@ -142,6 +153,9 @@ pub struct SimResult {
     pub events_processed: u64,
     /// Decision audit trail (present when `SimConfig::decision_log` > 0).
     pub decisions: Option<DecisionLog>,
+    /// The most recent auto-checkpoint (present when
+    /// `SimConfig::checkpoint_every_s` > 0 and no sink consumed it).
+    pub last_checkpoint: Option<Box<SimSnapshot>>,
 }
 
 /// In-flight KVC transfer bookkeeping.
@@ -203,6 +217,15 @@ pub struct SimEngine<'a, C: ControlPlane + ?Sized> {
     /// Cached classification scheme for chunked-prefill completions (one
     /// per run, not one per completed chunk).
     bucket_scheme: BucketScheme,
+    /// Arrivals pulled from the source so far — the stream resume
+    /// position recorded in checkpoints.
+    arrivals_pulled: u64,
+    /// Next auto-checkpoint boundary (INFINITY when disabled).
+    next_auto_ckpt: f64,
+    /// Consumer for auto-checkpoints; when absent the latest snapshot is
+    /// kept and surfaced on [`SimResult::last_checkpoint`].
+    ckpt_sink: Option<Box<dyn FnMut(SimSnapshot) + 'a>>,
+    last_checkpoint: Option<Box<SimSnapshot>>,
 }
 
 impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
@@ -218,6 +241,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         } else {
             None
         };
+        let cfg_every = cfg.checkpoint_every_s;
         SimEngine {
             cfg,
             policy,
@@ -246,11 +270,39 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             actions_buf: Vec::new(),
             decisions,
             bucket_scheme: BucketScheme::default(),
+            arrivals_pulled: 0,
+            next_auto_ckpt: if cfg_every > 0.0 { cfg_every } else { f64::INFINITY },
+            ckpt_sink: None,
+            last_checkpoint: None,
         }
+    }
+
+    /// Install a consumer for periodic auto-checkpoints (see
+    /// [`SimConfig::checkpoint_every_s`]); e.g. the CLI writes each one
+    /// to disk so a long sweep can be resumed after an interruption.
+    pub fn set_checkpoint_sink(&mut self, sink: Box<dyn FnMut(SimSnapshot) + 'a>) {
+        self.ckpt_sink = Some(sink);
     }
 
     /// Run the simulation to completion and return the results.
     pub fn run(mut self) -> SimResult {
+        self.start();
+        self.advance(f64::INFINITY);
+        self.finish()
+    }
+
+    /// Drive a resumed engine (built with [`SimEngine::resume`]) to
+    /// completion. Fresh engines use [`SimEngine::run`], which also
+    /// performs the t=0 initialization.
+    pub fn run_to_completion(mut self) -> SimResult {
+        self.advance(f64::INFINITY);
+        self.finish()
+    }
+
+    /// Fresh-run initialization: warm the initial fleet, prime the
+    /// arrival stream and schedule the first ticks. Not used on resume —
+    /// the checkpoint carries all of this state.
+    pub fn start(&mut self) {
         // Warm initial fleet.
         for _ in 0..self.cfg.initial_prefillers {
             self.cluster.spawn(Role::Prefiller, 0.0, Some(0.0));
@@ -262,18 +314,46 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             self.cluster.spawn(Role::ConvertibleDecoder, 0.0, Some(0.0));
         }
         // Prime the stream: exactly one arrival is pending at any time.
-        self.next_arrival = self.arrivals.next_request();
+        self.next_arrival = self.pull_arrival();
         if let Some(r) = &self.next_arrival {
             self.events.push(r.arrival.max(0.0), Event::Arrival);
         }
         self.events.push(0.0, Event::ControlTick);
         self.events.push(0.0, Event::SampleTick);
+    }
 
+    /// Process events whose time is <= `until` (and within the drain
+    /// horizon). Returns `true` when the run is complete — no events
+    /// left, past the horizon, or fully drained — and `false` when it
+    /// stopped at the `until` boundary with events still pending (the
+    /// state a checkpoint captures). Stopping between events is exact:
+    /// resuming and processing the remaining events reproduces an
+    /// uninterrupted run bit for bit.
+    pub fn advance(&mut self, until: f64) -> bool {
         let horizon = self.duration_s + self.cfg.drain_s;
-        while let Some((t, ev)) = self.events.pop() {
+        loop {
+            let Some(t) = self.events.peek_time() else {
+                return true;
+            };
             if t > horizon {
-                break;
+                return true;
             }
+            if t > until {
+                return false;
+            }
+            if t > self.next_auto_ckpt {
+                let snap = self.checkpoint();
+                if let Some(sink) = self.ckpt_sink.as_mut() {
+                    sink(snap);
+                } else {
+                    self.last_checkpoint = Some(Box::new(snap));
+                }
+                let every = self.cfg.checkpoint_every_s;
+                while self.next_auto_ckpt < t {
+                    self.next_auto_ckpt += every;
+                }
+            }
+            let (t, ev) = self.events.pop().expect("peeked above");
             self.now = t;
             self.events_processed += 1;
             self.handle(ev);
@@ -284,9 +364,13 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 && self.awaiting_decode.is_empty()
                 && self.all_idle()
             {
-                break;
+                return true;
             }
         }
+    }
+
+    /// Final accounting after the event loop; consumes the engine.
+    pub fn finish(mut self) -> SimResult {
         let end = self.now.max(self.duration_s);
         self.cluster.accrue_cost(end);
         self.metrics.gpu_seconds = self.cluster.gpu_seconds;
@@ -305,7 +389,320 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             scale_downs: self.scale_downs,
             events_processed: self.events_processed,
             decisions: self.decisions,
+            last_checkpoint: self.last_checkpoint,
         }
+    }
+
+    /// Pull the next arrival from the stream, tracking the resume
+    /// position checkpoints record.
+    fn pull_arrival(&mut self) -> Option<Request> {
+        let r = self.arrivals.next_request();
+        if r.is_some() {
+            self.arrivals_pulled += 1;
+        }
+        r
+    }
+
+    // ---- checkpoint / restore ----
+
+    /// Capture the complete simulation state as a serializable
+    /// [`SimSnapshot`]. Read-only: taking a checkpoint never changes the
+    /// run. Valid at any point between events; [`SimEngine::advance`]'s
+    /// `until` boundary is the natural place.
+    pub fn checkpoint(&self) -> SimSnapshot {
+        let (entries, next_seq) = self.events.dump();
+        let events = Json::obj()
+            .set("next_seq", Json::u64_hex(next_seq))
+            .set(
+                "entries",
+                Json::Arr(
+                    entries
+                        .into_iter()
+                        .map(|(t, rank, seq, ev)| {
+                            Json::obj()
+                                .set("t", Json::f64_bits(t))
+                                .set("rank", rank as usize)
+                                .set("seq", Json::u64_hex(seq))
+                                .set("event", snapshot::event_to_json(&ev))
+                        })
+                        .collect(),
+                ),
+            );
+        // Keyed maps are serialized sorted by request id so snapshot
+        // bytes are deterministic (nothing in the engine iterates these
+        // maps, so restore order is irrelevant to the simulation).
+        let mut transfers: Vec<(&RequestId, &Transfer)> = self.transfers.iter().collect();
+        transfers.sort_by_key(|(id, _)| **id);
+        let mut in_transfer: Vec<(&RequestId, &(Request, usize))> = self.in_transfer.iter().collect();
+        in_transfer.sort_by_key(|(id, _)| **id);
+        let mut clocks: Vec<(&RequestId, &RequestClock)> = self.clocks.iter().collect();
+        clocks.sort_by_key(|(id, _)| **id);
+        let opt_time = |t: Option<f64>| match t {
+            None => Json::Null,
+            Some(t) => Json::f64_bits(t),
+        };
+        let engine = Json::obj()
+            .set("now", Json::f64_bits(self.now))
+            .set("duration_s", Json::f64_bits(self.duration_s))
+            .set("next_arrival", snapshot::opt_request_to_json(&self.next_arrival))
+            .set(
+                "pending",
+                Json::Arr(self.pending.iter().map(snapshot::request_to_json).collect()),
+            )
+            .set(
+                "awaiting_decode",
+                Json::Arr(
+                    self.awaiting_decode
+                        .iter()
+                        .map(snapshot::request_to_json)
+                        .collect(),
+                ),
+            )
+            .set(
+                "transfers",
+                Json::Arr(
+                    transfers
+                        .into_iter()
+                        .map(|(id, tr)| {
+                            Json::obj()
+                                .set("req", Json::u64_hex(*id))
+                                .set("bytes_per_s", Json::f64_bits(tr.bytes_per_s))
+                        })
+                        .collect(),
+                ),
+            )
+            .set("net_bytes_per_s", Json::f64_bits(self.net_bytes_per_s))
+            .set(
+                "in_transfer",
+                Json::Arr(
+                    in_transfer
+                        .into_iter()
+                        .map(|(_, (req, bucket))| {
+                            Json::obj()
+                                .set("req", snapshot::request_to_json(req))
+                                .set("bucket", *bucket)
+                        })
+                        .collect(),
+                ),
+            )
+            .set(
+                "clocks",
+                Json::Arr(
+                    clocks
+                        .into_iter()
+                        .map(|(_, ck)| {
+                            Json::obj()
+                                .set("id", Json::u64_hex(ck.id))
+                                .set("arrival", Json::f64_bits(ck.arrival))
+                                .set("prefill_started", opt_time(ck.prefill_started))
+                                .set("prefill_done", opt_time(ck.prefill_done))
+                        })
+                        .collect(),
+                ),
+            )
+            .set("metrics", self.metrics.to_snapshot())
+            .set(
+                "series",
+                Json::obj()
+                    .set("prefill_compute", snapshot::series_to_json(&self.series.prefill_compute))
+                    .set("decode_memory", snapshot::series_to_json(&self.series.decode_memory))
+                    .set("decode_compute", snapshot::series_to_json(&self.series.decode_compute))
+                    .set("network", snapshot::series_to_json(&self.series.network))
+                    .set(
+                        "decode_throughput",
+                        snapshot::series_to_json(&self.series.decode_throughput),
+                    )
+                    .set("queue_len", snapshot::series_to_json(&self.series.queue_len)),
+            )
+            .set("ttft_points", snapshot::pairs_to_json(&self.ttft_points))
+            .set("tokens_since_sample", Json::f64_bits(self.tokens_since_sample))
+            .set("last_sample_t", Json::f64_bits(self.last_sample_t))
+            .set("scale_ups", self.scale_ups)
+            .set("scale_downs", self.scale_downs)
+            .set("events_processed", Json::u64_hex(self.events_processed))
+            .set(
+                "decisions",
+                match &self.decisions {
+                    None => Json::Null,
+                    Some(log) => snapshot::decision_log_to_json(log),
+                },
+            )
+            .set("events", events)
+            .set("cluster", self.cluster.to_snapshot());
+        SimSnapshot {
+            version: SNAPSHOT_SCHEMA_VERSION,
+            label: self.arrivals.label(),
+            t: self.now,
+            arrivals_pulled: self.arrivals_pulled,
+            policy: self.policy.save_state(),
+            engine,
+        }
+    }
+
+    /// Rebuild a mid-run engine from a [`SimSnapshot`].
+    ///
+    /// `cfg`/`cluster_cfg` are reconstructed by the caller from the same
+    /// experiment spec as the original run (they are configuration, not
+    /// stream state). `arrivals` must be a **freshly built** copy of the
+    /// original source: it is fast-forwarded to the recorded resume
+    /// position here. With `restore_policy` the policy's internal state
+    /// is restored too (same-policy resume — continues bit-identically);
+    /// without it the policy starts fresh from the captured cluster state
+    /// (the cross-cell warm-start fork).
+    pub fn resume(
+        cfg: SimConfig,
+        cluster_cfg: ClusterConfig,
+        policy: &'a mut C,
+        arrivals: &'a mut dyn ArrivalSource,
+        snap: &SimSnapshot,
+        restore_policy: bool,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            snap.version == SNAPSHOT_SCHEMA_VERSION,
+            "snapshot schema v{} is not supported (this build reads v{})",
+            snap.version,
+            SNAPSHOT_SCHEMA_VERSION
+        );
+        if restore_policy {
+            policy.restore_state(&snap.policy)?;
+        }
+        let skipped = fast_forward(arrivals, snap.arrivals_pulled);
+        anyhow::ensure!(
+            skipped == snap.arrivals_pulled,
+            "arrival source is shorter than the snapshot's resume position \
+             ({skipped} < {} arrivals) — wrong workload for this checkpoint?",
+            snap.arrivals_pulled
+        );
+
+        let e = &snap.engine;
+        let what = "engine snapshot";
+        let ev_blob = snapshot::get(e, "events", what)?;
+        let mut entries = Vec::new();
+        for entry in snapshot::parr(ev_blob, "entries", what)? {
+            entries.push((
+                snapshot::pf(entry, "t", what)?,
+                snapshot::pusize(entry, "rank", what)? as u8,
+                snapshot::pu64(entry, "seq", what)?,
+                snapshot::event_from_json(snapshot::get(entry, "event", what)?)?,
+            ));
+        }
+        let events = EventQueue::rebuild(entries, snapshot::pu64(ev_blob, "next_seq", what)?);
+
+        let mut transfers = HashMap::new();
+        let mut net_check = 0usize;
+        for tr in snapshot::parr(e, "transfers", what)? {
+            net_check += 1;
+            transfers.insert(
+                snapshot::pu64(tr, "req", what)?,
+                Transfer {
+                    bytes_per_s: snapshot::pf(tr, "bytes_per_s", what)?,
+                },
+            );
+        }
+        anyhow::ensure!(
+            transfers.len() == net_check,
+            "{what}: duplicate transfer request ids"
+        );
+        let mut in_transfer = HashMap::new();
+        for it in snapshot::parr(e, "in_transfer", what)? {
+            let req = snapshot::request_from_json(snapshot::get(it, "req", what)?)?;
+            in_transfer.insert(req.id, (req, snapshot::pusize(it, "bucket", what)?));
+        }
+        let mut clocks = HashMap::new();
+        for ck in snapshot::parr(e, "clocks", what)? {
+            let opt = |key: &str| -> anyhow::Result<Option<f64>> {
+                match snapshot::get(ck, key, what)? {
+                    Json::Null => Ok(None),
+                    other => Ok(Some(other.as_f64_bits().ok_or_else(|| {
+                        anyhow::anyhow!("{what}: clock `{key}` is not a bit-exact f64")
+                    })?)),
+                }
+            };
+            let id = snapshot::pu64(ck, "id", what)?;
+            clocks.insert(
+                id,
+                RequestClock {
+                    id,
+                    arrival: snapshot::pf(ck, "arrival", what)?,
+                    prefill_started: opt("prefill_started")?,
+                    prefill_done: opt("prefill_done")?,
+                },
+            );
+        }
+        let series_blob = snapshot::get(e, "series", what)?;
+        let series = SimSeries {
+            prefill_compute: snapshot::series_from_json(snapshot::get(
+                series_blob,
+                "prefill_compute",
+                what,
+            )?)?,
+            decode_memory: snapshot::series_from_json(snapshot::get(series_blob, "decode_memory", what)?)?,
+            decode_compute: snapshot::series_from_json(snapshot::get(
+                series_blob,
+                "decode_compute",
+                what,
+            )?)?,
+            network: snapshot::series_from_json(snapshot::get(series_blob, "network", what)?)?,
+            decode_throughput: snapshot::series_from_json(snapshot::get(
+                series_blob,
+                "decode_throughput",
+                what,
+            )?)?,
+            queue_len: snapshot::series_from_json(snapshot::get(series_blob, "queue_len", what)?)?,
+        };
+        let decisions = match snapshot::get(e, "decisions", what)? {
+            Json::Null => None,
+            other => Some(snapshot::decision_log_from_json(other)?),
+        };
+        let now = snapshot::pf(e, "now", what)?;
+        let every = cfg.checkpoint_every_s;
+        let next_auto_ckpt = if every > 0.0 {
+            (now / every).floor() * every + every
+        } else {
+            f64::INFINITY
+        };
+        Ok(SimEngine {
+            cluster: Cluster::from_snapshot(cluster_cfg, snapshot::get(e, "cluster", what)?)?,
+            events,
+            policy,
+            arrivals,
+            duration_s: snapshot::pf(e, "duration_s", what)?,
+            next_arrival: snapshot::opt_request_from_json(snapshot::get(e, "next_arrival", what)?)?,
+            now,
+            pending: snapshot::parr(e, "pending", what)?
+                .iter()
+                .map(snapshot::request_from_json)
+                .collect::<anyhow::Result<_>>()?,
+            awaiting_decode: snapshot::parr(e, "awaiting_decode", what)?
+                .iter()
+                .map(snapshot::request_from_json)
+                .collect::<anyhow::Result<_>>()?,
+            transfers,
+            net_bytes_per_s: snapshot::pf(e, "net_bytes_per_s", what)?,
+            in_transfer,
+            clocks,
+            metrics: MetricsRecorder::from_snapshot(snapshot::get(e, "metrics", what)?)?,
+            series,
+            ttft_points: snapshot::pairs_from_json(
+                snapshot::get(e, "ttft_points", what)?,
+                "ttft points",
+            )?,
+            tokens_since_sample: snapshot::pf(e, "tokens_since_sample", what)?,
+            last_sample_t: snapshot::pf(e, "last_sample_t", what)?,
+            scale_ups: snapshot::pusize(e, "scale_ups", what)?,
+            scale_downs: snapshot::pusize(e, "scale_downs", what)?,
+            events_processed: snapshot::pu64(e, "events_processed", what)?,
+            completions_buf: Vec::new(),
+            batch_scratch: Vec::new(),
+            actions_buf: Vec::new(),
+            decisions,
+            bucket_scheme: BucketScheme::default(),
+            arrivals_pulled: snap.arrivals_pulled,
+            next_auto_ckpt,
+            ckpt_sink: None,
+            last_checkpoint: None,
+            cfg,
+        })
     }
 
     fn all_idle(&self) -> bool {
@@ -320,7 +717,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 };
                 // Pull the successor and schedule its event before
                 // dispatching, so the stream stays exactly one ahead.
-                self.next_arrival = self.arrivals.next_request();
+                self.next_arrival = self.pull_arrival();
                 if let Some(n) = &self.next_arrival {
                     debug_assert!(
                         n.arrival >= req.arrival,
@@ -1706,6 +2103,121 @@ mod tests {
         assert!(report.prefill_wait.p50 > 0.0);
         // Prefill wait (queue + execution) dominates pure queue delay.
         assert!(report.prefill_wait.p50 >= report.queue_wait.p50);
+    }
+
+    #[test]
+    fn checkpoint_resume_matches_uninterrupted_run() {
+        let trace = step_trace(6.0, 6.0, 0.0, 0.0, 30.0, 512, 64, 33);
+        let cfg = SimConfig {
+            initial_prefillers: 2,
+            initial_decoders: 2,
+            ..Default::default()
+        };
+        // Uninterrupted reference run.
+        let mut c0 = StaticCoordinator::new(2, 2);
+        let full = simulate(cfg.clone(), cluster_cfg(16), &mut c0, &trace);
+
+        // Interrupted run: stop at t=12, checkpoint, round-trip through
+        // the serialized text form, resume with fresh policy + source.
+        let mut c1 = StaticCoordinator::new(2, 2);
+        let mut src1 = crate::trace::OwnedTraceSource::new(trace.clone());
+        let mut eng = SimEngine::new(cfg.clone(), cluster_cfg(16), &mut c1, &mut src1);
+        eng.start();
+        assert!(!eng.advance(12.0), "workload extends past the boundary");
+        let snap = eng.checkpoint();
+        drop(eng);
+        let text = snap.to_json().pretty();
+        let snap = crate::sim::SimSnapshot::from_json(
+            &crate::util::json::Json::parse(&text).unwrap(),
+        )
+        .unwrap();
+
+        let mut c2 = StaticCoordinator::new(2, 2);
+        let mut src2 = crate::trace::OwnedTraceSource::new(trace.clone());
+        let resumed = SimEngine::resume(cfg, cluster_cfg(16), &mut c2, &mut src2, &snap, true)
+            .unwrap()
+            .run_to_completion();
+
+        assert_eq!(full.metrics.completions.len(), resumed.metrics.completions.len());
+        for (a, b) in full.metrics.completions.iter().zip(&resumed.metrics.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.ttft.to_bits(), b.ttft.to_bits());
+            assert_eq!(a.tpot.to_bits(), b.tpot.to_bits());
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+        }
+        assert_eq!(full.events_processed, resumed.events_processed);
+        assert_eq!(
+            full.metrics.gpu_seconds.to_bits(),
+            resumed.metrics.gpu_seconds.to_bits()
+        );
+        assert_eq!(full.scale_ups, resumed.scale_ups);
+        assert_eq!(full.scale_downs, resumed.scale_downs);
+        assert_eq!(full.horizon_s.to_bits(), resumed.horizon_s.to_bits());
+    }
+
+    #[test]
+    fn auto_checkpoint_is_transparent_and_resumable() {
+        let trace = step_trace(4.0, 4.0, 0.0, 0.0, 20.0, 256, 32, 44);
+        let base_cfg = SimConfig {
+            initial_prefillers: 1,
+            initial_decoders: 1,
+            ..Default::default()
+        };
+        let mut c0 = StaticCoordinator::new(1, 1);
+        let plain = simulate(base_cfg.clone(), cluster_cfg(4), &mut c0, &trace);
+
+        // Same run with periodic snapshots: results must be identical
+        // (checkpointing is read-only) and the last snapshot resumable.
+        let auto_cfg = SimConfig {
+            checkpoint_every_s: 5.0,
+            ..base_cfg.clone()
+        };
+        let mut c1 = StaticCoordinator::new(1, 1);
+        let auto = simulate(auto_cfg, cluster_cfg(4), &mut c1, &trace);
+        assert_eq!(plain.metrics.completions.len(), auto.metrics.completions.len());
+        assert_eq!(plain.events_processed, auto.events_processed);
+        let snap = *auto.last_checkpoint.expect("auto checkpoint retained");
+        assert!(snap.t >= 5.0, "snapshot at a later boundary, got t={}", snap.t);
+
+        let mut c2 = StaticCoordinator::new(1, 1);
+        let mut src = crate::trace::OwnedTraceSource::new(trace.clone());
+        let resumed = SimEngine::resume(base_cfg, cluster_cfg(4), &mut c2, &mut src, &snap, true)
+            .unwrap()
+            .run_to_completion();
+        let key = |v: &Vec<crate::workload::Completion>| {
+            v.iter()
+                .map(|c| (c.id, c.ttft.to_bits(), c.finish.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(key(&resumed.metrics.completions), key(&plain.metrics.completions));
+        assert_eq!(resumed.events_processed, plain.events_processed);
+    }
+
+    #[test]
+    fn checkpoint_sink_receives_periodic_snapshots() {
+        let trace = step_trace(4.0, 4.0, 0.0, 0.0, 20.0, 256, 32, 45);
+        let cfg = SimConfig {
+            initial_prefillers: 1,
+            initial_decoders: 1,
+            checkpoint_every_s: 4.0,
+            ..Default::default()
+        };
+        let mut coord = StaticCoordinator::new(1, 1);
+        let mut src = crate::trace::OwnedTraceSource::new(trace);
+        let collected = std::cell::RefCell::new(Vec::new());
+        let res = {
+            let mut eng = SimEngine::new(cfg, cluster_cfg(4), &mut coord, &mut src);
+            eng.set_checkpoint_sink(Box::new(|s: crate::sim::SimSnapshot| {
+                collected.borrow_mut().push(s.t);
+            }));
+            eng.start();
+            eng.advance(f64::INFINITY);
+            eng.finish()
+        };
+        let times = collected.into_inner();
+        assert!(times.len() >= 3, "expected several snapshots, got {times:?}");
+        assert!(times.windows(2).all(|w| w[0] < w[1]));
+        assert!(res.last_checkpoint.is_none(), "sink consumed the snapshots");
     }
 
     #[test]

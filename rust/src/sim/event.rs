@@ -141,6 +141,35 @@ impl EventQueue {
         self.heap.peek().map(|s| s.time)
     }
 
+    /// Capture the full queue state for a checkpoint: every scheduled
+    /// entry as `(time, rank, seq, event)` sorted in pop order, plus the
+    /// next insertion sequence number. `(time, rank, seq)` is a strict
+    /// total order (seqs are unique), so the sorted dump plus preserved
+    /// seqs reproduces the exact pop sequence on rebuild.
+    pub fn dump(&self) -> (Vec<(f64, u8, u64, Event)>, u64) {
+        let mut entries: Vec<&Scheduled> = self.heap.iter().collect();
+        entries.sort_by(|a, b| b.cmp(a)); // Ord is inverted for the max-heap
+        (
+            entries
+                .into_iter()
+                .map(|s| (s.time, s.rank, s.seq, s.event.clone()))
+                .collect(),
+            self.seq,
+        )
+    }
+
+    /// Rebuild a queue from a [`EventQueue::dump`]: entries keep their
+    /// original seqs (tie-break order) and future pushes continue from
+    /// `next_seq`.
+    pub fn rebuild(entries: Vec<(f64, u8, u64, Event)>, next_seq: u64) -> EventQueue {
+        let mut q = EventQueue::new();
+        for (time, rank, seq, event) in entries {
+            q.heap.push(Scheduled { time, rank, seq, event });
+        }
+        q.seq = next_seq;
+        q
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -178,6 +207,34 @@ mod tests {
         q.push(1.0, ev(3));
         let order: Vec<Event> = (0..3).map(|_| q.pop().unwrap().1).collect();
         assert_eq!(order, vec![ev(1), ev(2), ev(3)]);
+    }
+
+    #[test]
+    fn dump_and_rebuild_preserve_pop_order_and_ties() {
+        let ev = |req: u64| Event::PrefillDone {
+            instance: InstanceId::new(0, 0),
+            req,
+        };
+        let mut q = EventQueue::new();
+        q.push(2.0, ev(1));
+        q.push(1.0, Event::ControlTick);
+        q.push(1.0, Event::Arrival); // later push, earlier rank
+        q.push(2.0, ev(2)); // FIFO tie with ev(1)
+        let (entries, seq) = q.dump();
+        assert_eq!(entries.len(), 4);
+        // Dump is in pop order: arrival first at t=1.
+        assert_eq!(entries[0].3, Event::Arrival);
+        let mut rebuilt = EventQueue::rebuild(entries, seq);
+        let mut order = Vec::new();
+        while let Some((t, e)) = rebuilt.pop() {
+            order.push((t, e));
+            if let Some((qt, qe)) = q.pop() {
+                assert_eq!(order.last().unwrap(), &(qt, qe));
+            }
+        }
+        assert_eq!(order.len(), 4);
+        assert_eq!(order[2].1, ev(1));
+        assert_eq!(order[3].1, ev(2));
     }
 
     #[test]

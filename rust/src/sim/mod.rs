@@ -19,6 +19,7 @@ pub mod engine;
 pub mod event;
 pub mod instance;
 pub mod policy;
+pub mod snapshot;
 pub mod view;
 
 pub use audit::{DecisionLog, DecisionRecord};
@@ -29,4 +30,5 @@ pub use instance::{ActiveSeq, Instance, LifeState, PrefillJob, RequestClock, Rol
 pub use policy::{
     Action, ActionOutcome, ControlPlane, RejectReason, Signal, SignalKind, StaticCoordinator,
 };
+pub use snapshot::{PolicyState, SimSnapshot, SNAPSHOT_SCHEMA_VERSION};
 pub use view::ClusterView;

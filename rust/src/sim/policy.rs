@@ -26,6 +26,7 @@
 
 use super::event::InstanceId;
 use super::instance::Role;
+use super::snapshot::PolicyState;
 use super::view::ClusterView;
 use crate::workload::{BucketScheme, Completion, Request, RequestId};
 
@@ -285,6 +286,23 @@ pub trait ControlPlane {
     /// executed proactively, removing model-load latency).
     fn live_scaling(&self) -> bool {
         false
+    }
+
+    /// Serialize policy-internal state for checkpointing (the
+    /// `sim::snapshot` hook). Stateful policies override this to capture
+    /// their traffic windows, hysteresis streaks and RNG positions
+    /// bit-exactly; the default declares the policy stateless.
+    fn save_state(&self) -> PolicyState {
+        PolicyState::stateless(self.name())
+    }
+
+    /// Restore state captured by [`ControlPlane::save_state`] into a
+    /// freshly constructed instance of the *same* policy (construction
+    /// parameters are re-derived from the experiment spec; only stream
+    /// state travels through the snapshot). The default verifies the
+    /// snapshot names this policy and restores nothing.
+    fn restore_state(&mut self, state: &PolicyState) -> anyhow::Result<()> {
+        state.expect(self.name())
     }
 }
 

@@ -1,0 +1,809 @@
+//! Checkpoint/restore of complete simulation state (`SimSnapshot`).
+//!
+//! A snapshot captures *everything* a mid-run [`SimEngine`] holds — the
+//! event heap (with its FIFO tie-break sequence numbers), the slab
+//! cluster (instances, free list, generations, per-role live lists), the
+//! pending arrival and the stream resume position, every request clock
+//! and in-flight transfer, the `MetricsRecorder` accumulators, the
+//! decision-audit ring, and the control plane's internal state via the
+//! [`PolicyState`] hook on [`ControlPlane`](super::policy::ControlPlane)
+//! — such that `SimEngine::resume` continues the run **bit-identically**
+//! to one that was never interrupted (`rust/tests/snapshot_equivalence.rs`
+//! enforces byte equality of `SloReport`s, completions, event counts and
+//! GPU-seconds).
+//!
+//! ## Encoding
+//!
+//! Snapshots serialize through the repo's [`Json`] model (util/json.rs),
+//! `schema_version`-tagged like the normalized BENCH files. JSON numbers
+//! cannot represent the state losslessly (`f64::INFINITY` sentinels,
+//! `u64`/`u128` counters past 2^53, and round-trip drift would break bit
+//! equality), so every scalar that must survive exactly is encoded as a
+//! fixed-width hex string of its bits (`Json::f64_bits`, `Json::u64_hex`,
+//! `Json::u128_hex`). Small structural integers (queue lengths, token
+//! counts, slot indices) stay plain numbers for readability.
+//!
+//! ## Stream resume
+//!
+//! Arrival sources are not serialized: they are deterministic per
+//! construction (spec × seed × transform chain), so the snapshot records
+//! only how many arrivals were pulled (`arrivals_pulled`) and resume
+//! rebuilds the source and [`fast_forward`](crate::trace::fast_forward)s
+//! it. The property test in `rust/tests/snapshot_equivalence.rs` pins
+//! that any generator+transform stack resumed this way yields the
+//! identical arrival suffix.
+//!
+//! See docs/checkpoints.md for the on-disk format and the warm-start
+//! lifecycle built on top (report/runner.rs, report/suite.rs).
+
+use super::audit::{DecisionLog, DecisionRecord};
+use super::event::{Event, InstanceId};
+use super::instance::{ActiveSeq, Instance, LifeState, PrefillJob, Role};
+use super::policy::{Action, ActionOutcome, RejectReason, SignalKind};
+use crate::perfmodel::EngineModel;
+use crate::util::json::Json;
+use crate::workload::Request;
+use std::sync::Arc;
+
+/// Version tag of the snapshot encoding; bump on any structural change.
+pub const SNAPSHOT_SCHEMA_VERSION: u64 = 1;
+
+// ------------------------------------------------------------ helpers
+
+pub(crate) fn get<'j>(j: &'j Json, key: &str, what: &str) -> anyhow::Result<&'j Json> {
+    j.get(key)
+        .ok_or_else(|| anyhow::anyhow!("{what}: missing `{key}`"))
+}
+
+pub(crate) fn pf(j: &Json, key: &str, what: &str) -> anyhow::Result<f64> {
+    get(j, key, what)?
+        .as_f64_bits()
+        .ok_or_else(|| anyhow::anyhow!("{what}: `{key}` is not a bit-exact f64"))
+}
+
+pub(crate) fn pu64(j: &Json, key: &str, what: &str) -> anyhow::Result<u64> {
+    get(j, key, what)?
+        .as_u64_hex()
+        .ok_or_else(|| anyhow::anyhow!("{what}: `{key}` is not a hex u64"))
+}
+
+pub(crate) fn pusize(j: &Json, key: &str, what: &str) -> anyhow::Result<usize> {
+    get(j, key, what)?
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("{what}: `{key}` is not an integer"))
+}
+
+pub(crate) fn pbool(j: &Json, key: &str, what: &str) -> anyhow::Result<bool> {
+    get(j, key, what)?
+        .as_bool()
+        .ok_or_else(|| anyhow::anyhow!("{what}: `{key}` is not a boolean"))
+}
+
+pub(crate) fn pstr<'j>(j: &'j Json, key: &str, what: &str) -> anyhow::Result<&'j str> {
+    get(j, key, what)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("{what}: `{key}` is not a string"))
+}
+
+pub(crate) fn parr<'j>(j: &'j Json, key: &str, what: &str) -> anyhow::Result<&'j [Json]> {
+    get(j, key, what)?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{what}: `{key}` is not an array"))
+}
+
+// ----------------------------------------------------------- requests
+
+pub(crate) fn request_to_json(r: &Request) -> Json {
+    Json::obj()
+        .set("id", Json::u64_hex(r.id))
+        .set("arrival", Json::f64_bits(r.arrival))
+        .set("input", r.input_tokens)
+        .set("output", r.output_tokens)
+}
+
+pub(crate) fn request_from_json(j: &Json) -> anyhow::Result<Request> {
+    Ok(Request {
+        id: pu64(j, "id", "request")?,
+        arrival: pf(j, "arrival", "request")?,
+        input_tokens: pusize(j, "input", "request")?,
+        output_tokens: pusize(j, "output", "request")?,
+    })
+}
+
+pub(crate) fn opt_request_to_json(r: &Option<Request>) -> Json {
+    match r {
+        None => Json::Null,
+        Some(r) => request_to_json(r),
+    }
+}
+
+pub(crate) fn opt_request_from_json(j: &Json) -> anyhow::Result<Option<Request>> {
+    match j {
+        Json::Null => Ok(None),
+        other => Ok(Some(request_from_json(other)?)),
+    }
+}
+
+// ------------------------------------------------------ ids and labels
+
+pub(crate) fn iid_to_json(id: InstanceId) -> Json {
+    Json::obj()
+        .set("slot", id.slot())
+        .set("seq", Json::u64_hex(id.seq()))
+}
+
+pub(crate) fn iid_from_json(j: &Json) -> anyhow::Result<InstanceId> {
+    Ok(InstanceId::new(
+        pusize(j, "slot", "instance-id")? as u32,
+        pu64(j, "seq", "instance-id")?,
+    ))
+}
+
+fn role_label(role: Role) -> &'static str {
+    match role {
+        Role::Prefiller => "prefiller",
+        Role::Decoder => "decoder",
+        Role::ConvertibleDecoder => "convertible",
+    }
+}
+
+fn role_from_label(s: &str) -> anyhow::Result<Role> {
+    Ok(match s {
+        "prefiller" => Role::Prefiller,
+        "decoder" => Role::Decoder,
+        "convertible" => Role::ConvertibleDecoder,
+        other => anyhow::bail!("unknown role label `{other}`"),
+    })
+}
+
+fn life_label(life: LifeState) -> &'static str {
+    match life {
+        LifeState::Starting => "starting",
+        LifeState::Running => "running",
+        LifeState::Draining => "draining",
+    }
+}
+
+fn life_from_label(s: &str) -> anyhow::Result<LifeState> {
+    Ok(match s {
+        "starting" => LifeState::Starting,
+        "running" => LifeState::Running,
+        "draining" => LifeState::Draining,
+        other => anyhow::bail!("unknown life-state label `{other}`"),
+    })
+}
+
+// -------------------------------------------------------------- events
+
+pub(crate) fn event_to_json(ev: &Event) -> Json {
+    match ev {
+        Event::Arrival => Json::obj().set("kind", "arrival"),
+        Event::ControlTick => Json::obj().set("kind", "control-tick"),
+        Event::SampleTick => Json::obj().set("kind", "sample-tick"),
+        Event::InstanceReady { instance } => Json::obj()
+            .set("kind", "instance-ready")
+            .set("instance", iid_to_json(*instance)),
+        Event::PrefillDone { instance, req } => Json::obj()
+            .set("kind", "prefill-done")
+            .set("instance", iid_to_json(*instance))
+            .set("req", Json::u64_hex(*req)),
+        Event::TransferDone { instance, req } => Json::obj()
+            .set("kind", "transfer-done")
+            .set("instance", iid_to_json(*instance))
+            .set("req", Json::u64_hex(*req)),
+        Event::DecodeIterDone { instance, epoch } => Json::obj()
+            .set("kind", "decode-iter-done")
+            .set("instance", iid_to_json(*instance))
+            .set("epoch", Json::u64_hex(*epoch)),
+    }
+}
+
+pub(crate) fn event_from_json(j: &Json) -> anyhow::Result<Event> {
+    let kind = pstr(j, "kind", "event")?;
+    let iid = |j: &Json| iid_from_json(get(j, "instance", "event")?);
+    Ok(match kind {
+        "arrival" => Event::Arrival,
+        "control-tick" => Event::ControlTick,
+        "sample-tick" => Event::SampleTick,
+        "instance-ready" => Event::InstanceReady { instance: iid(j)? },
+        "prefill-done" => Event::PrefillDone {
+            instance: iid(j)?,
+            req: pu64(j, "req", "event")?,
+        },
+        "transfer-done" => Event::TransferDone {
+            instance: iid(j)?,
+            req: pu64(j, "req", "event")?,
+        },
+        "decode-iter-done" => Event::DecodeIterDone {
+            instance: iid(j)?,
+            epoch: pu64(j, "epoch", "event")?,
+        },
+        other => anyhow::bail!("unknown event kind `{other}`"),
+    })
+}
+
+// ------------------------------------------------- sequences and jobs
+
+pub(crate) fn seq_to_json(s: &ActiveSeq) -> Json {
+    Json::obj()
+        .set("req", request_to_json(&s.req))
+        .set("generated", s.generated)
+        .set("ctx", s.ctx)
+        .set(
+            "first_token_at",
+            match s.first_token_at {
+                None => Json::Null,
+                Some(t) => Json::f64_bits(t),
+            },
+        )
+        .set("bucket", s.predicted_bucket)
+}
+
+pub(crate) fn seq_from_json(j: &Json) -> anyhow::Result<ActiveSeq> {
+    let first_token_at = match get(j, "first_token_at", "active-seq")? {
+        Json::Null => None,
+        other => Some(
+            other
+                .as_f64_bits()
+                .ok_or_else(|| anyhow::anyhow!("active-seq: bad `first_token_at`"))?,
+        ),
+    };
+    Ok(ActiveSeq {
+        req: request_from_json(get(j, "req", "active-seq")?)?,
+        generated: pusize(j, "generated", "active-seq")?,
+        ctx: pusize(j, "ctx", "active-seq")?,
+        first_token_at,
+        predicted_bucket: pusize(j, "bucket", "active-seq")?,
+    })
+}
+
+pub(crate) fn job_to_json(job: &PrefillJob) -> Json {
+    Json::obj()
+        .set("req", request_to_json(&job.req))
+        .set("remaining", job.remaining)
+        .set("enqueued_at", Json::f64_bits(job.enqueued_at))
+        .set(
+            "chunk_override",
+            match job.chunk_override {
+                None => Json::Null,
+                Some(c) => Json::from(c),
+            },
+        )
+}
+
+pub(crate) fn job_from_json(j: &Json) -> anyhow::Result<PrefillJob> {
+    let chunk_override = match get(j, "chunk_override", "prefill-job")? {
+        Json::Null => None,
+        other => Some(
+            other
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("prefill-job: bad `chunk_override`"))?,
+        ),
+    };
+    Ok(PrefillJob {
+        req: request_from_json(get(j, "req", "prefill-job")?)?,
+        remaining: pusize(j, "remaining", "prefill-job")?,
+        enqueued_at: pf(j, "enqueued_at", "prefill-job")?,
+        chunk_override,
+    })
+}
+
+// ------------------------------------------------------------ instances
+
+pub(crate) fn instance_to_json(i: &Instance) -> Json {
+    Json::obj()
+        .set("id", iid_to_json(i.id))
+        .set("role", role_label(i.role))
+        .set("life", life_label(i.life))
+        .set("ready_at", Json::f64_bits(i.ready_at))
+        .set("spawned_at", Json::f64_bits(i.spawned_at))
+        .set(
+            "prefill_queue",
+            Json::Arr(i.prefill_queue.iter().map(job_to_json).collect()),
+        )
+        .set(
+            "active_prefill",
+            match &i.active_prefill {
+                None => Json::Null,
+                Some(job) => job_to_json(job),
+            },
+        )
+        .set("prefill_done_at", Json::f64_bits(i.prefill_done_at))
+        .set("batch", Json::Arr(i.batch.iter().map(seq_to_json).collect()))
+        .set("joining", Json::Arr(i.joining.iter().map(seq_to_json).collect()))
+        .set("reserved_tokens", Json::f64_bits(i.reserved_tokens))
+        .set("iter_epoch", Json::u64_hex(i.iter_epoch))
+        .set("iterating", i.iterating)
+        .set("iter_chunk", i.iter_chunk)
+        .set("chunk_size", i.chunk_size)
+        .set(
+            "convertible_reserve_tokens",
+            Json::f64_bits(i.convertible_reserve_tokens),
+        )
+        .set("win_active", i.win_active)
+        .set("win_total", i.win_total as usize)
+        .set("win_done", i.win_done as usize)
+        .set("win_t", Json::f64_bits(i.win_t))
+        .set("win_t1", Json::f64_bits(i.win_t1))
+        .set("win_sum_ctx0", Json::u64_hex(i.win_sum_ctx0))
+}
+
+pub(crate) fn instance_from_json(
+    j: &Json,
+    engine: Arc<EngineModel>,
+) -> anyhow::Result<Instance> {
+    let what = "instance";
+    let mut inst = Instance::new(
+        iid_from_json(get(j, "id", what)?)?,
+        role_from_label(pstr(j, "role", what)?)?,
+        engine,
+        0.0,
+        0.0,
+    );
+    inst.life = life_from_label(pstr(j, "life", what)?)?;
+    inst.ready_at = pf(j, "ready_at", what)?;
+    inst.spawned_at = pf(j, "spawned_at", what)?;
+    inst.prefill_queue = parr(j, "prefill_queue", what)?
+        .iter()
+        .map(job_from_json)
+        .collect::<anyhow::Result<_>>()?;
+    inst.active_prefill = match get(j, "active_prefill", what)? {
+        Json::Null => None,
+        other => Some(job_from_json(other)?),
+    };
+    inst.prefill_done_at = pf(j, "prefill_done_at", what)?;
+    inst.batch = parr(j, "batch", what)?
+        .iter()
+        .map(seq_from_json)
+        .collect::<anyhow::Result<_>>()?;
+    inst.joining = parr(j, "joining", what)?
+        .iter()
+        .map(seq_from_json)
+        .collect::<anyhow::Result<_>>()?;
+    inst.reserved_tokens = pf(j, "reserved_tokens", what)?;
+    inst.iter_epoch = pu64(j, "iter_epoch", what)?;
+    inst.iterating = pbool(j, "iterating", what)?;
+    inst.iter_chunk = pusize(j, "iter_chunk", what)?;
+    inst.chunk_size = pusize(j, "chunk_size", what)?;
+    inst.convertible_reserve_tokens = pf(j, "convertible_reserve_tokens", what)?;
+    inst.win_active = pbool(j, "win_active", what)?;
+    inst.win_total = pusize(j, "win_total", what)? as u32;
+    inst.win_done = pusize(j, "win_done", what)? as u32;
+    inst.win_t = pf(j, "win_t", what)?;
+    inst.win_t1 = pf(j, "win_t1", what)?;
+    inst.win_sum_ctx0 = pu64(j, "win_sum_ctx0", what)?;
+    Ok(inst)
+}
+
+// ------------------------------------------------------ decision audit
+
+fn reject_from_label(s: &str) -> anyhow::Result<RejectReason> {
+    RejectReason::ALL
+        .iter()
+        .copied()
+        .find(|r| r.label() == s)
+        .ok_or_else(|| anyhow::anyhow!("unknown reject reason `{s}`"))
+}
+
+fn signal_kind_from_label(s: &str) -> anyhow::Result<SignalKind> {
+    const ALL: [SignalKind; 7] = [
+        SignalKind::Arrival,
+        SignalKind::RetryPrefill,
+        SignalKind::PrefillDone,
+        SignalKind::Completion,
+        SignalKind::Tick,
+        SignalKind::InstanceReady,
+        SignalKind::InstanceDrained,
+    ];
+    ALL.iter()
+        .copied()
+        .find(|k| k.label() == s)
+        .ok_or_else(|| anyhow::anyhow!("unknown signal kind `{s}`"))
+}
+
+fn action_to_json(a: &Action) -> Json {
+    match a {
+        Action::RoutePrefill { req, target } => Json::obj()
+            .set("kind", "route-prefill")
+            .set("req", Json::u64_hex(*req))
+            .set("target", iid_to_json(*target)),
+        Action::DeflectPrefill { req, decoder, chunked } => Json::obj()
+            .set("kind", "deflect-prefill")
+            .set("req", Json::u64_hex(*req))
+            .set("decoder", iid_to_json(*decoder))
+            .set("chunked", *chunked),
+        Action::DispatchDecode { req, decoder, bucket } => Json::obj()
+            .set("kind", "dispatch-decode")
+            .set("req", Json::u64_hex(*req))
+            .set("decoder", iid_to_json(*decoder))
+            .set("bucket", *bucket),
+        Action::SetFleet { role, target } => Json::obj()
+            .set("kind", "set-fleet")
+            .set("role", role_label(*role))
+            .set("target", *target),
+        Action::Convert { decoder } => Json::obj()
+            .set("kind", "convert")
+            .set("decoder", iid_to_json(*decoder)),
+        Action::Revert { decoder } => Json::obj()
+            .set("kind", "revert")
+            .set("decoder", iid_to_json(*decoder)),
+        Action::Drain { instance } => Json::obj()
+            .set("kind", "drain")
+            .set("instance", iid_to_json(*instance)),
+    }
+}
+
+fn action_from_json(j: &Json) -> anyhow::Result<Action> {
+    let what = "action";
+    Ok(match pstr(j, "kind", what)? {
+        "route-prefill" => Action::RoutePrefill {
+            req: pu64(j, "req", what)?,
+            target: iid_from_json(get(j, "target", what)?)?,
+        },
+        "deflect-prefill" => Action::DeflectPrefill {
+            req: pu64(j, "req", what)?,
+            decoder: iid_from_json(get(j, "decoder", what)?)?,
+            chunked: pbool(j, "chunked", what)?,
+        },
+        "dispatch-decode" => Action::DispatchDecode {
+            req: pu64(j, "req", what)?,
+            decoder: iid_from_json(get(j, "decoder", what)?)?,
+            bucket: pusize(j, "bucket", what)?,
+        },
+        "set-fleet" => Action::SetFleet {
+            role: role_from_label(pstr(j, "role", what)?)?,
+            target: pusize(j, "target", what)?,
+        },
+        "convert" => Action::Convert {
+            decoder: iid_from_json(get(j, "decoder", what)?)?,
+        },
+        "revert" => Action::Revert {
+            decoder: iid_from_json(get(j, "decoder", what)?)?,
+        },
+        "drain" => Action::Drain {
+            instance: iid_from_json(get(j, "instance", what)?)?,
+        },
+        other => anyhow::bail!("unknown action kind `{other}`"),
+    })
+}
+
+fn outcome_to_json(o: &ActionOutcome) -> Json {
+    match o {
+        ActionOutcome::Applied => Json::obj().set("status", "applied"),
+        ActionOutcome::Clamped(r) => Json::obj().set("status", "clamped").set("reason", r.label()),
+        ActionOutcome::Rejected(r) => {
+            Json::obj().set("status", "rejected").set("reason", r.label())
+        }
+    }
+}
+
+fn outcome_from_json(j: &Json) -> anyhow::Result<ActionOutcome> {
+    Ok(match pstr(j, "status", "outcome")? {
+        "applied" => ActionOutcome::Applied,
+        "clamped" => ActionOutcome::Clamped(reject_from_label(pstr(j, "reason", "outcome")?)?),
+        "rejected" => ActionOutcome::Rejected(reject_from_label(pstr(j, "reason", "outcome")?)?),
+        other => anyhow::bail!("unknown outcome status `{other}`"),
+    })
+}
+
+/// Lossless decision-log serialization (distinct from the human-facing
+/// `DecisionLog::to_json` export, which flattens actions into labels).
+pub(crate) fn decision_log_to_json(log: &DecisionLog) -> Json {
+    Json::obj()
+        .set("capacity", log.capacity())
+        .set("total_seen", Json::u64_hex(log.total_seen()))
+        .set(
+            "records",
+            Json::Arr(
+                log.iter()
+                    .map(|r| {
+                        Json::obj()
+                            .set("t", Json::f64_bits(r.t))
+                            .set("signal", r.signal.label())
+                            .set("action", action_to_json(&r.action))
+                            .set("outcome", outcome_to_json(&r.outcome))
+                    })
+                    .collect(),
+            ),
+        )
+}
+
+pub(crate) fn decision_log_from_json(j: &Json) -> anyhow::Result<DecisionLog> {
+    let what = "decision-log";
+    let mut records = Vec::new();
+    for r in parr(j, "records", what)? {
+        records.push(DecisionRecord {
+            t: pf(r, "t", what)?,
+            signal: signal_kind_from_label(pstr(r, "signal", what)?)?,
+            action: action_from_json(get(r, "action", what)?)?,
+            outcome: outcome_from_json(get(r, "outcome", what)?)?,
+        });
+    }
+    Ok(DecisionLog::from_parts(
+        pusize(j, "capacity", what)?,
+        pu64(j, "total_seen", what)?,
+        records,
+    ))
+}
+
+// --------------------------------------------------------- time series
+
+pub(crate) fn series_to_json(s: &crate::metrics::TimeSeries) -> Json {
+    Json::obj().set("name", s.name.as_str()).set(
+        "points",
+        Json::Arr(
+            s.points
+                .iter()
+                .map(|(t, v)| Json::Arr(vec![Json::f64_bits(*t), Json::f64_bits(*v)]))
+                .collect(),
+        ),
+    )
+}
+
+pub(crate) fn series_from_json(j: &Json) -> anyhow::Result<crate::metrics::TimeSeries> {
+    let mut s = crate::metrics::TimeSeries::new(pstr(j, "name", "time-series")?);
+    for (i, p) in parr(j, "points", "time-series")?.iter().enumerate() {
+        let pair = p
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| anyhow::anyhow!("time-series: point {i} is not a pair"))?;
+        let t = pair[0]
+            .as_f64_bits()
+            .ok_or_else(|| anyhow::anyhow!("time-series: bad point time"))?;
+        let v = pair[1]
+            .as_f64_bits()
+            .ok_or_else(|| anyhow::anyhow!("time-series: bad point value"))?;
+        s.points.push((t, v));
+    }
+    Ok(s)
+}
+
+/// `(time, value)` pair lists (ttft points, wait clocks).
+pub(crate) fn pairs_to_json(pairs: &[(f64, f64)]) -> Json {
+    Json::Arr(
+        pairs
+            .iter()
+            .map(|(a, b)| Json::Arr(vec![Json::f64_bits(*a), Json::f64_bits(*b)]))
+            .collect(),
+    )
+}
+
+pub(crate) fn pairs_from_json(j: &Json, what: &str) -> anyhow::Result<Vec<(f64, f64)>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{what}: expected an array of pairs"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, p) in arr.iter().enumerate() {
+        let pair = p
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| anyhow::anyhow!("{what}: entry {i} is not a pair"))?;
+        let a = pair[0]
+            .as_f64_bits()
+            .ok_or_else(|| anyhow::anyhow!("{what}: bad pair value"))?;
+        let b = pair[1]
+            .as_f64_bits()
+            .ok_or_else(|| anyhow::anyhow!("{what}: bad pair value"))?;
+        out.push((a, b));
+    }
+    Ok(out)
+}
+
+// --------------------------------------------------------- policy state
+
+/// Serialized control-plane internals, captured through the
+/// `ControlPlane::save_state`/`restore_state` hook. Stateless policies
+/// carry `Json::Null`; stateful ones serialize their traffic windows,
+/// hysteresis streaks and RNG stream positions bit-exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicyState {
+    /// The policy's `ControlPlane::name()` — restore refuses a mismatch.
+    pub policy: String,
+    pub data: Json,
+}
+
+impl PolicyState {
+    pub fn new(policy: impl Into<String>, data: Json) -> PolicyState {
+        PolicyState {
+            policy: policy.into(),
+            data,
+        }
+    }
+
+    /// State of a policy with nothing to save.
+    pub fn stateless(policy: impl Into<String>) -> PolicyState {
+        PolicyState::new(policy, Json::Null)
+    }
+
+    /// Guard a restore against state saved by a different policy.
+    pub fn expect(&self, policy: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.policy == policy,
+            "policy state was saved by `{}`, cannot restore into `{policy}`",
+            self.policy
+        );
+        Ok(())
+    }
+
+    /// Fetch a required sub-object of `data`.
+    pub fn part<'j>(&'j self, key: &str) -> anyhow::Result<&'j Json> {
+        get(&self.data, key, "policy state")
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("policy", self.policy.as_str())
+            .set("data", self.data.clone())
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<PolicyState> {
+        Ok(PolicyState {
+            policy: pstr(j, "policy", "policy state")?.to_string(),
+            data: get(j, "data", "policy state")?.clone(),
+        })
+    }
+}
+
+// ------------------------------------------------------------ snapshot
+
+/// A complete, serializable capture of a mid-run simulation. Produced by
+/// `SimEngine::checkpoint`, consumed by `SimEngine::resume`; survives a
+/// JSON text round trip losslessly (`save`/`load`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimSnapshot {
+    pub version: u64,
+    /// Arrival-source label at capture time (provenance only).
+    pub label: String,
+    /// Simulated time of the last processed event.
+    pub t: f64,
+    /// Arrivals pulled from the source so far — the stream resume
+    /// position (`trace::fast_forward` skips this many on resume).
+    pub arrivals_pulled: u64,
+    /// Control-plane internals via the `ControlPlane` snapshot hook.
+    pub policy: PolicyState,
+    /// Engine + cluster + metrics state blob (see engine.rs `checkpoint`).
+    pub engine: Json,
+}
+
+impl SimSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("schema_version", self.version)
+            .set("label", self.label.as_str())
+            .set("t", Json::f64_bits(self.t))
+            .set("arrivals_pulled", Json::u64_hex(self.arrivals_pulled))
+            .set("policy", self.policy.to_json())
+            .set("engine", self.engine.clone())
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<SimSnapshot> {
+        let version = j
+            .get("schema_version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("snapshot: missing `schema_version`"))?
+            as u64;
+        anyhow::ensure!(
+            version == SNAPSHOT_SCHEMA_VERSION,
+            "snapshot schema v{version} is not supported (this build reads v{SNAPSHOT_SCHEMA_VERSION})"
+        );
+        Ok(SimSnapshot {
+            version,
+            label: pstr(j, "label", "snapshot")?.to_string(),
+            t: pf(j, "t", "snapshot")?,
+            arrivals_pulled: pu64(j, "arrivals_pulled", "snapshot")?,
+            policy: PolicyState::from_json(get(j, "policy", "snapshot")?)?,
+            engine: get(j, "engine", "snapshot")?.clone(),
+        })
+    }
+
+    /// Write the snapshot (pretty-printed JSON) to `path`.
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+            .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", path.display()))
+    }
+
+    /// Read a snapshot written by [`SimSnapshot::save`].
+    pub fn load(path: &std::path::Path) -> anyhow::Result<SimSnapshot> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        SimSnapshot::from_json(&Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_and_event_codecs_round_trip() {
+        let r = Request::new(u64::MAX - 3, 1234.5678e-3, 8192, 1);
+        let back = request_from_json(&request_to_json(&r)).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.arrival.to_bits(), r.arrival.to_bits());
+
+        let id = InstanceId::new(7, 0xFFFF_FFFF_FFFF_FF01);
+        for ev in [
+            Event::Arrival,
+            Event::ControlTick,
+            Event::SampleTick,
+            Event::InstanceReady { instance: id },
+            Event::PrefillDone { instance: id, req: 42 },
+            Event::TransferDone { instance: id, req: 43 },
+            Event::DecodeIterDone { instance: id, epoch: u64::MAX },
+        ] {
+            let back = event_from_json(&event_to_json(&ev)).unwrap();
+            assert_eq!(back, ev);
+        }
+    }
+
+    #[test]
+    fn action_codec_round_trips_every_variant() {
+        let id = InstanceId::new(3, 11);
+        let actions = [
+            Action::RoutePrefill { req: 1, target: id },
+            Action::DeflectPrefill { req: 2, decoder: id, chunked: true },
+            Action::DispatchDecode { req: 3, decoder: id, bucket: 8 },
+            Action::SetFleet { role: Role::ConvertibleDecoder, target: 4 },
+            Action::Convert { decoder: id },
+            Action::Revert { decoder: id },
+            Action::Drain { instance: id },
+        ];
+        for a in actions {
+            assert_eq!(action_from_json(&action_to_json(&a)).unwrap(), a);
+        }
+        for o in [
+            ActionOutcome::Applied,
+            ActionOutcome::Clamped(RejectReason::FleetOverQuota),
+            ActionOutcome::Rejected(RejectReason::Busy),
+        ] {
+            assert_eq!(outcome_from_json(&outcome_to_json(&o)).unwrap(), o);
+        }
+    }
+
+    #[test]
+    fn decision_log_codec_round_trips_through_text() {
+        let mut log = DecisionLog::new(4);
+        for k in 0..6u64 {
+            log.push(DecisionRecord {
+                t: k as f64 * 0.25,
+                signal: SignalKind::Tick,
+                action: Action::SetFleet { role: Role::Prefiller, target: k as usize },
+                outcome: if k % 2 == 0 {
+                    ActionOutcome::Applied
+                } else {
+                    ActionOutcome::Rejected(RejectReason::NotRunning)
+                },
+            });
+        }
+        let text = decision_log_to_json(&log).pretty();
+        let back = decision_log_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.capacity(), 4);
+        assert_eq!(back.total_seen(), 6);
+        assert_eq!(back.len(), log.len());
+        for (a, b) in back.iter().zip(log.iter()) {
+            assert_eq!(a.t.to_bits(), b.t.to_bits());
+            assert_eq!(a.action, b.action);
+            assert_eq!(a.outcome, b.outcome);
+            assert_eq!(a.signal, b.signal);
+        }
+    }
+
+    #[test]
+    fn snapshot_wrapper_round_trips_and_gates_version() {
+        let snap = SimSnapshot {
+            version: SNAPSHOT_SCHEMA_VERSION,
+            label: "demo".into(),
+            t: 12.75,
+            arrivals_pulled: 1 << 60,
+            policy: PolicyState::new("tokenscale", Json::obj().set("x", 1.0)),
+            engine: Json::obj().set("now", Json::f64_bits(12.75)),
+        };
+        let text = snap.to_json().pretty();
+        let back = SimSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, snap);
+
+        let future = snap.to_json().set("schema_version", 999usize);
+        assert!(SimSnapshot::from_json(&future).is_err());
+        assert!(PolicyState::new("a", Json::Null).expect("b").is_err());
+    }
+}

@@ -23,8 +23,8 @@ pub use gen::{
     uniform_bucket_trace, MixedSource, SpecSource, Trace,
 };
 pub use source::{
-    materialize, ArrivalSource, OwnedTraceSource, SourceFactory, TraceProfile, TraceReplaySource,
-    TraceSliceSource,
+    fast_forward, materialize, ArrivalSource, OwnedTraceSource, SourceFactory, TraceProfile,
+    TraceReplaySource, TraceSliceSource,
 };
 pub use spec::{base_families, BurstModel, LenDist, TraceFamily, TraceSpec};
 pub use transform::{BurstInject, BurstWindow, Diurnal, RateScale, Resample, SourceExt, Window};

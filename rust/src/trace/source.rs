@@ -142,6 +142,26 @@ pub fn materialize(src: &mut dyn ArrivalSource) -> Trace {
     }
 }
 
+/// Skip the first `n` arrivals of a freshly built source — the stream
+/// resume primitive of the checkpoint subsystem (`sim::snapshot`).
+///
+/// Sources are deterministic per construction (spec × seed × transform
+/// chain), so a snapshot records only how many arrivals were pulled;
+/// resuming rebuilds the source identically and fast-forwards it, after
+/// which the remaining stream is the exact suffix the interrupted run
+/// would have consumed (property-tested in
+/// `rust/tests/snapshot_equivalence.rs`). Returns the number actually
+/// skipped (less than `n` only if the stream is shorter, which a
+/// consistent snapshot never hits).
+pub fn fast_forward(src: &mut dyn ArrivalSource, n: u64) -> u64 {
+    for k in 0..n {
+        if src.next_request().is_none() {
+            return k;
+        }
+    }
+    n
+}
+
 /// A shareable constructor of independent source instances: the grid
 /// runner clones the factory into each worker so every (deployment ×
 /// policy × seed) cell streams its own copy instead of sharing one
@@ -179,6 +199,19 @@ mod tests {
         assert_eq!(p.avg_input_tokens, trace.avg_input_tokens());
         assert_eq!(p.avg_output_tokens, trace.avg_output_tokens());
         assert_eq!(p.duration_s, trace.duration_s);
+    }
+
+    #[test]
+    fn fast_forward_skips_exactly_n() {
+        let trace = step_trace(4.0, 4.0, 0.0, 0.0, 20.0, 128, 16, 5);
+        let n = trace.requests.len() as u64;
+        let mut a = TraceSliceSource::new(&trace);
+        assert_eq!(fast_forward(&mut a, 3), 3);
+        assert_eq!(a.next_request().unwrap(), trace.requests[3]);
+        // Over-running the stream reports the true skip count.
+        let mut b = TraceSliceSource::new(&trace);
+        assert_eq!(fast_forward(&mut b, n + 10), n);
+        assert!(b.next_request().is_none());
     }
 
     #[test]

@@ -200,6 +200,59 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+// ---- bit-exact scalar encodings (checkpoint/restore) -------------------
+//
+// JSON numbers cannot carry every value the simulator state holds: `f64`
+// round-trips only for finite values (and the engine stores `INFINITY`
+// sentinels), and `u64`/`u128` counters exceed the 2^53 exact-integer
+// range. The snapshot subsystem therefore encodes them as fixed-width
+// lowercase-hex *strings* of the underlying bits, which round-trip
+// losslessly by construction.
+
+impl Json {
+    /// Encode an `f64` bit-exactly (hex of `to_bits`). Handles ±inf/NaN.
+    pub fn f64_bits(x: f64) -> Json {
+        Json::Str(format!("{:016x}", x.to_bits()))
+    }
+
+    /// Decode a [`Json::f64_bits`] value.
+    pub fn as_f64_bits(&self) -> Option<f64> {
+        let s = self.as_str()?;
+        if s.len() != 16 {
+            return None;
+        }
+        u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+    }
+
+    /// Encode a `u64` bit-exactly as 16 hex digits.
+    pub fn u64_hex(x: u64) -> Json {
+        Json::Str(format!("{x:016x}"))
+    }
+
+    /// Decode a [`Json::u64_hex`] value.
+    pub fn as_u64_hex(&self) -> Option<u64> {
+        let s = self.as_str()?;
+        if s.len() != 16 {
+            return None;
+        }
+        u64::from_str_radix(s, 16).ok()
+    }
+
+    /// Encode a `u128` bit-exactly as 32 hex digits (PCG64 state words).
+    pub fn u128_hex(x: u128) -> Json {
+        Json::Str(format!("{x:032x}"))
+    }
+
+    /// Decode a [`Json::u128_hex`] value.
+    pub fn as_u128_hex(&self) -> Option<u128> {
+        let s = self.as_str()?;
+        if s.len() != 32 {
+            return None;
+        }
+        u128::from_str_radix(s, 16).ok()
+    }
+}
+
 impl From<f64> for Json {
     fn from(x: f64) -> Json {
         Json::Num(x)
@@ -475,5 +528,36 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Json::Num(5.0).to_string(), "5");
         assert_eq!(Json::Num(5.25).to_string(), "5.25");
+    }
+
+    #[test]
+    fn bit_exact_scalars_round_trip() {
+        for x in [
+            0.0,
+            -0.0,
+            1.5,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE,
+            1.0 / 3.0,
+            -123.456789e-12,
+        ] {
+            let j = Json::f64_bits(x);
+            let text = j.to_string();
+            let back = Json::parse(&text).unwrap().as_f64_bits().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x}");
+        }
+        let n = Json::f64_bits(f64::NAN);
+        assert!(Json::parse(&n.to_string()).unwrap().as_f64_bits().unwrap().is_nan());
+        for x in [0u64, 1, u64::MAX, 1 << 63] {
+            assert_eq!(Json::u64_hex(x).as_u64_hex(), Some(x));
+        }
+        for x in [0u128, u128::MAX, 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645] {
+            assert_eq!(Json::u128_hex(x).as_u128_hex(), Some(x));
+        }
+        // Wrong widths are rejected, not misparsed.
+        assert_eq!(Json::Str("abc".into()).as_f64_bits(), None);
+        assert_eq!(Json::Str("abc".into()).as_u64_hex(), None);
+        assert_eq!(Json::Num(1.0).as_u128_hex(), None);
     }
 }

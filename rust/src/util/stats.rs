@@ -1,6 +1,8 @@
 //! Small statistics toolkit: summaries, percentiles, correlation, EWMA,
 //! and running-window averages used by the burst analytics and metrics.
 
+use crate::util::json::Json;
+
 /// Mean of a slice; 0.0 for empty input.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -125,6 +127,35 @@ impl Ewma {
     pub fn reset(&mut self) {
         self.value = None;
     }
+
+    /// Bit-exact serialization for checkpoint/restore (sim::snapshot).
+    pub fn to_snapshot(&self) -> Json {
+        Json::obj()
+            .set("alpha", Json::f64_bits(self.alpha))
+            .set(
+                "value",
+                match self.value {
+                    None => Json::Null,
+                    Some(v) => Json::f64_bits(v),
+                },
+            )
+    }
+
+    /// Rebuild from [`Ewma::to_snapshot`] output.
+    pub fn from_snapshot(j: &Json) -> anyhow::Result<Ewma> {
+        let alpha = j
+            .get("alpha")
+            .and_then(Json::as_f64_bits)
+            .ok_or_else(|| anyhow::anyhow!("ewma snapshot: missing `alpha`"))?;
+        let value = match j.get("value") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_f64_bits()
+                    .ok_or_else(|| anyhow::anyhow!("ewma snapshot: bad `value`"))?,
+            ),
+        };
+        Ok(Ewma { alpha, value })
+    }
 }
 
 /// Fixed-duration sliding-window sum/rate over timestamped samples.
@@ -186,6 +217,57 @@ impl SlidingWindow {
 
     pub fn window_secs(&self) -> f64 {
         self.window
+    }
+
+    /// Bit-exact serialization for checkpoint/restore (sim::snapshot).
+    /// The running `sum` is stored verbatim: it accumulates additions and
+    /// subtractions in a specific order, so recomputing it from the
+    /// samples would not reproduce the same bits.
+    pub fn to_snapshot(&self) -> Json {
+        Json::obj()
+            .set("window", Json::f64_bits(self.window))
+            .set("sum", Json::f64_bits(self.sum))
+            .set(
+                "samples",
+                Json::Arr(
+                    self.samples
+                        .iter()
+                        .map(|(t, v)| Json::Arr(vec![Json::f64_bits(*t), Json::f64_bits(*v)]))
+                        .collect(),
+                ),
+            )
+    }
+
+    /// Rebuild from [`SlidingWindow::to_snapshot`] output.
+    pub fn from_snapshot(j: &Json) -> anyhow::Result<SlidingWindow> {
+        let bits = |key: &str| -> anyhow::Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64_bits)
+                .ok_or_else(|| anyhow::anyhow!("sliding-window snapshot: missing `{key}`"))
+        };
+        let window = bits("window")?;
+        anyhow::ensure!(window > 0.0, "sliding-window snapshot: non-positive window");
+        let sum = bits("sum")?;
+        let mut samples = std::collections::VecDeque::new();
+        for (i, s) in j
+            .get("samples")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("sliding-window snapshot: missing `samples`"))?
+            .iter()
+            .enumerate()
+        {
+            let pair = s.as_arr().filter(|p| p.len() == 2).ok_or_else(|| {
+                anyhow::anyhow!("sliding-window snapshot: sample {i} is not a pair")
+            })?;
+            let t = pair[0]
+                .as_f64_bits()
+                .ok_or_else(|| anyhow::anyhow!("sliding-window snapshot: bad sample time"))?;
+            let v = pair[1]
+                .as_f64_bits()
+                .ok_or_else(|| anyhow::anyhow!("sliding-window snapshot: bad sample value"))?;
+            samples.push_back((t, v));
+        }
+        Ok(SlidingWindow { window, samples, sum })
     }
 }
 
@@ -292,6 +374,27 @@ mod tests {
         w.evict(3.0);
         assert_eq!(w.sum(), 0.0);
         assert!(w.is_empty());
+    }
+
+    #[test]
+    fn window_and_ewma_snapshots_round_trip() {
+        let mut w = SlidingWindow::new(2.5);
+        w.push(0.1, 3.0);
+        w.push(0.7, 1.5);
+        w.push(1.9, 0.25);
+        w.evict(2.0);
+        let back = SlidingWindow::from_snapshot(&w.to_snapshot()).unwrap();
+        assert_eq!(back.window_secs(), w.window_secs());
+        assert_eq!(back.sum().to_bits(), w.sum().to_bits());
+        assert_eq!(back.len(), w.len());
+
+        let mut e = Ewma::with_half_life(7.0);
+        e.update(2.0);
+        e.update(5.5);
+        let eb = Ewma::from_snapshot(&e.to_snapshot()).unwrap();
+        assert_eq!(eb.get().unwrap().to_bits(), e.get().unwrap().to_bits());
+        let empty = Ewma::from_snapshot(&Ewma::new(0.3).to_snapshot()).unwrap();
+        assert_eq!(empty.get(), None);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! recently completed requests — the runtime-status signal the Scaler
 //! cross-checks against the offline profile.
 
+use crate::util::json::Json;
 use crate::util::stats::{Ewma, SlidingWindow};
 
 /// Measures realized decode velocity from the completion stream.
@@ -40,6 +41,25 @@ impl OnlineVelocity {
     pub fn observed_tpot(&self) -> Option<f64> {
         self.tpot.get()
     }
+
+    /// Bit-exact serialization for checkpoint/restore (sim::snapshot).
+    pub fn to_snapshot(&self) -> Json {
+        Json::obj()
+            .set("released", self.released.to_snapshot())
+            .set("tpot", self.tpot.to_snapshot())
+    }
+
+    /// Rebuild from [`OnlineVelocity::to_snapshot`] output.
+    pub fn from_snapshot(j: &Json) -> anyhow::Result<OnlineVelocity> {
+        let get = |key: &str| -> anyhow::Result<&Json> {
+            j.get(key)
+                .ok_or_else(|| anyhow::anyhow!("online-velocity snapshot: missing `{key}`"))
+        };
+        Ok(OnlineVelocity {
+            released: SlidingWindow::from_snapshot(get("released")?)?,
+            tpot: Ewma::from_snapshot(get("tpot")?)?,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -63,6 +83,22 @@ mod tests {
         v.on_completion(0.0, 1000, 0.05);
         assert!(v.release_rate(1.0) > 0.0);
         assert_eq!(v.release_rate(100.0), 0.0);
+    }
+
+    #[test]
+    fn snapshot_round_trips_measurement_state() {
+        let mut v = OnlineVelocity::new(10.0);
+        for i in 0..8 {
+            v.on_completion(i as f64 * 0.5, 300 + i, 0.04 + 0.001 * i as f64);
+        }
+        let back = OnlineVelocity::from_snapshot(&v.to_snapshot()).unwrap();
+        assert_eq!(
+            back.observed_tpot().unwrap().to_bits(),
+            v.observed_tpot().unwrap().to_bits()
+        );
+        let mut a = v;
+        let mut b = back;
+        assert_eq!(a.release_rate(5.0).to_bits(), b.release_rate(5.0).to_bits());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! confuses M with S/L far more often than S with L).
 
 use super::bucket::{Bucket, BucketScheme, LenClass};
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
 #[derive(Clone, Debug)]
@@ -77,6 +78,38 @@ impl OutputPredictor {
             self.predict_class(true_output),
         )
     }
+
+    /// Bit-exact serialization for checkpoint/restore (sim::snapshot):
+    /// the accuracy knob plus the exact RNG stream position, so the next
+    /// prediction after restore is the one the live predictor would have
+    /// drawn.
+    pub fn to_snapshot(&self) -> Json {
+        let (state, inc) = self.rng.state_parts();
+        Json::obj()
+            .set("accuracy", Json::f64_bits(self.accuracy))
+            .set("rng_state", Json::u128_hex(state))
+            .set("rng_inc", Json::u128_hex(inc))
+    }
+
+    /// Restore from [`OutputPredictor::to_snapshot`] output (in place; the
+    /// bucket scheme is deployment config, not stream state).
+    pub fn restore_snapshot(&mut self, j: &Json) -> anyhow::Result<()> {
+        let accuracy = j
+            .get("accuracy")
+            .and_then(Json::as_f64_bits)
+            .ok_or_else(|| anyhow::anyhow!("predictor snapshot: missing `accuracy`"))?;
+        let state = j
+            .get("rng_state")
+            .and_then(Json::as_u128_hex)
+            .ok_or_else(|| anyhow::anyhow!("predictor snapshot: missing `rng_state`"))?;
+        let inc = j
+            .get("rng_inc")
+            .and_then(Json::as_u128_hex)
+            .ok_or_else(|| anyhow::anyhow!("predictor snapshot: missing `rng_inc`"))?;
+        self.accuracy = accuracy;
+        self.rng = Pcg64::from_state_parts(state, inc);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +148,20 @@ mod tests {
         let mut p = OutputPredictor::new(0.0, 3);
         for _ in 0..100 {
             assert_ne!(p.predict_class(50), LenClass::Short);
+        }
+    }
+
+    #[test]
+    fn snapshot_restores_the_exact_prediction_stream() {
+        let mut a = OutputPredictor::new(0.85, 9);
+        for _ in 0..37 {
+            a.predict_class(300);
+        }
+        let snap = a.to_snapshot();
+        let mut b = OutputPredictor::new(0.85, 12345); // different stream...
+        b.restore_snapshot(&snap).unwrap(); // ...until restored
+        for out in [50, 300, 600, 50, 1000] {
+            assert_eq!(a.predict_class(out), b.predict_class(out));
         }
     }
 

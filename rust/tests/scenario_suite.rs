@@ -193,7 +193,8 @@ fn unknown_and_malformed_fields_are_typed_errors() {
 // ------------------------------------------------------- golden schema
 
 /// Flatten a normalized report into sorted `path: type` lines, with
-/// scenario/policy names generalized so the schema is data-independent.
+/// scenario/policy names generalized so the schema is data-independent
+/// (both under `scenarios` and under the `warm_start` block).
 fn schema_lines(doc: &Json) -> BTreeSet<String> {
     fn type_name(j: &Json) -> &'static str {
         match j {
@@ -205,25 +206,25 @@ fn schema_lines(doc: &Json) -> BTreeSet<String> {
             Json::Obj(_) => "object",
         }
     }
-    fn walk(j: &Json, path: &str, depth_under_scenarios: i32, out: &mut BTreeSet<String>) {
+    fn walk(j: &Json, path: &str, out: &mut BTreeSet<String>) {
         out.insert(format!("{path}: {}", type_name(j)));
         if let Json::Obj(m) = j {
             for (k, v) in m {
-                let (key, next_depth) = match depth_under_scenarios {
-                    0 if k == "scenarios" => ("scenarios".to_string(), 1),
-                    1 => ("<scenario>".to_string(), 2),
-                    2 => ("<policy>".to_string(), 3),
-                    _ => (k.clone(), depth_under_scenarios),
+                let key = if path == "scenarios" || path == "warm_start" {
+                    "<scenario>".to_string()
+                } else if path == "scenarios.<scenario>" {
+                    "<policy>".to_string()
+                } else {
+                    k.clone()
                 };
-                walk(v, &format!("{path}.{key}"), next_depth, out);
+                walk(v, &format!("{path}.{key}"), out);
             }
         }
     }
     let mut out = BTreeSet::new();
     if let Json::Obj(m) = doc {
         for (k, v) in m {
-            let depth = if k == "scenarios" { 1 } else { -1 };
-            walk(v, k, depth, &mut out);
+            walk(v, k, &mut out);
         }
     }
     out
@@ -231,7 +232,7 @@ fn schema_lines(doc: &Json) -> BTreeSet<String> {
 
 #[test]
 fn bench_json_schema_matches_golden() {
-    // A tiny two-cell suite is enough to materialize every schema path.
+    // A tiny two-cell suite materializes every per-cell schema path...
     let run = Suite::new("golden", "schema fixture")
         .scenario(
             Scenario::new(
@@ -254,8 +255,32 @@ fn bench_json_schema_matches_golden() {
         doc.get("schema_version").and_then(Json::as_f64),
         Some(BENCH_SCHEMA_VERSION as f64)
     );
+    // ...and a one-cell warm-started suite materializes the `warm_start`
+    // amortization block; the golden pins the union.
+    let warm_run = Suite::new("golden-warm", "warm-start schema fixture")
+        .scenario(
+            Scenario::new(
+                "warmed",
+                "small-a100",
+                WorkloadSpec::Synthetic {
+                    family: TraceFamily::AzureConv,
+                    rps: 6.0,
+                    duration_s: 30.0,
+                    seed: 3,
+                },
+            )
+            .policy("static")
+            .with_checkpoint(tokenscale::report::CheckpointSpec {
+                warm_start_s: 10.0,
+                policy: "static".into(),
+                every_s: 0.0,
+            }),
+        )
+        .run()
+        .expect("warm golden suite runs");
 
-    let got = schema_lines(&doc);
+    let mut got = schema_lines(&doc);
+    got.extend(schema_lines(&warm_run.to_json()));
     let golden_path = concat!(
         env!("CARGO_MANIFEST_DIR"),
         "/rust/tests/golden/bench_schema.golden"
@@ -350,4 +375,28 @@ fn shipped_smoke_suite_parses_and_validates() {
         .transforms
         .iter()
         .any(|t| matches!(t, TransformStep::Window { .. })));
+}
+
+#[test]
+fn shipped_slo_sweep_suite_parses_and_sweeps_targets() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/slo-sweep.toml");
+    let suite = Suite::from_path(std::path::Path::new(path)).expect("slo-sweep suite loads");
+    assert_eq!(suite.name, "slo-sweep");
+    suite.validate().expect("slo-sweep suite validates");
+    assert_eq!(suite.scenarios.len(), 3);
+    // The sweep moves only the SLO block: targets strictly relax...
+    let targets: Vec<f64> = suite
+        .scenarios
+        .iter()
+        .map(|s| s.slo.expect("slo block present").ttft_medium_s)
+        .collect();
+    assert!(
+        targets.windows(2).all(|w| w[0] < w[1]),
+        "targets must relax monotonically: {targets:?}"
+    );
+    // ...while the workload (and its transform chain) stays identical.
+    for sc in &suite.scenarios {
+        assert_eq!(sc.workload, suite.scenarios[0].workload);
+        assert_eq!(sc.transforms, suite.scenarios[0].transforms);
+    }
 }
