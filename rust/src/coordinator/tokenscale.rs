@@ -217,7 +217,10 @@ impl ControlPlane for TokenScale {
                     target: decoders,
                 });
             }
-            Signal::Completion(_) | Signal::InstanceReady(_) | Signal::InstanceDrained(_) => {}
+            Signal::Completion(_)
+            | Signal::InstanceReady(_)
+            | Signal::InstanceDrained(_)
+            | Signal::InstanceFailed { .. } => {}
         }
     }
 

@@ -5,5 +5,5 @@ pub mod exporter;
 pub mod recorder;
 pub mod series;
 
-pub use recorder::{MetricsRecorder, RejectionCounts, SloReport};
+pub use recorder::{AbandonedRequest, DropReason, MetricsRecorder, RejectionCounts, SloReport};
 pub use series::TimeSeries;

@@ -3,7 +3,7 @@
 use crate::sim::policy::RejectReason;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
-use crate::workload::{Completion, Request, SloPolicy};
+use crate::workload::{Completion, Request, RequestId, SloPolicy};
 
 /// Per-reason counters for control-plane actions the engine refused (or
 /// clamped). A healthy policy keeps every counter at zero; non-zero
@@ -69,6 +69,45 @@ impl RejectionCounts {
     }
 }
 
+/// Why the gateway gave up on a request (the satellite fix for the
+/// silent-starvation hazard: bounded retries/age instead of requeueing
+/// forever).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropReason {
+    /// The request exhausted its fault-retry budget
+    /// (`SimConfig::retry_limit`).
+    RetryBudget,
+    /// The request aged past `SimConfig::starvation_age_s` while no
+    /// instance in the fleet could ever serve it (no prefill-capable or
+    /// no decode-capable instance with sufficient KV reserve).
+    Starved,
+}
+
+impl DropReason {
+    pub const ALL: [DropReason; 2] = [DropReason::RetryBudget, DropReason::Starved];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            DropReason::RetryBudget => "retry-budget",
+            DropReason::Starved => "starved",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<DropReason> {
+        DropReason::ALL.iter().copied().find(|d| d.label() == s)
+    }
+}
+
+/// One abandoned request in the failure ledger.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AbandonedRequest {
+    pub id: RequestId,
+    pub arrival: f64,
+    /// Fault retries consumed before the drop.
+    pub retries: u32,
+    pub reason: DropReason,
+}
+
 /// Collects completions and GPU-time, and produces the attainment/cost
 /// numbers every end-to-end experiment reports (Fig. 9, 14, 15).
 #[derive(Clone, Debug, Default)]
@@ -100,6 +139,31 @@ pub struct MetricsRecorder {
     pub workload_s: f64,
     /// Control-plane actions the engine rejected or clamped, by reason.
     pub rejections: RejectionCounts,
+
+    // ---- failure ledger (sim::faults) ----
+    /// Fault firings the engine actually applied (stale-target no-ops
+    /// excluded).
+    pub faults_injected: usize,
+    /// Request-loss events: every time a request's in-flight work was
+    /// destroyed by a crash, preemption or aborted transfer. One request
+    /// hit twice counts twice.
+    pub lost_requests: usize,
+    /// Distinct requests that re-entered the gateway at least once after
+    /// losing work.
+    pub retried_requests: usize,
+    /// Prompt tokens of completed or partial prefill work that had to be
+    /// redone (the re-prefill cost of churn).
+    pub wasted_prefill_tokens: f64,
+    /// KVC transfer attempts that timed out and were retried.
+    pub transfer_retries: usize,
+    /// KVC transfers that exhausted the retry budget and fell back to
+    /// re-prefill.
+    pub transfer_aborts: usize,
+    /// Requests the gateway gave up on, with typed reasons.
+    pub abandoned: Vec<AbandonedRequest>,
+    /// Per-fault recovery times: (fault time, seconds until every request
+    /// salvaged from that fault completed or was abandoned).
+    pub recoveries: Vec<(f64, f64)>,
 }
 
 /// Aggregated SLO report.
@@ -124,6 +188,36 @@ pub struct SloReport {
     /// the run (0 for well-formed policies; see
     /// [`MetricsRecorder::rejections`] for the per-reason breakdown).
     pub rejected_actions: usize,
+
+    // ---- failure ledger (zero on healthy runs) ----
+    /// Goodput: completions meeting both SLOs over *offered* post-warmup
+    /// requests (completed + abandoned). Equals `overall_attainment` when
+    /// nothing is abandoned; strictly lower when churn drops requests —
+    /// the DistServe-style "goodput vs. raw attainment" distinction.
+    pub goodput_attainment: f64,
+    /// Fault firings applied during the run.
+    pub faults_injected: usize,
+    /// Request-loss events (in-flight work destroyed by faults).
+    pub lost_requests: usize,
+    /// Distinct requests that retried after losing work.
+    pub retried_requests: usize,
+    /// Post-warmup requests the gateway abandoned (typed drops).
+    pub abandoned_requests: usize,
+    /// Abandoned for `DropReason::RetryBudget` (post-warmup).
+    pub abandoned_retry_budget: usize,
+    /// Abandoned for `DropReason::Starved` (post-warmup).
+    pub abandoned_starved: usize,
+    /// Prompt tokens of prefill work redone because of churn.
+    pub wasted_prefill_tokens: f64,
+    /// KVC transfer timeouts that were retried.
+    pub transfer_retries: usize,
+    /// KVC transfers that fell back to re-prefill.
+    pub transfer_aborts: usize,
+    /// Number of fault events whose salvaged cohort fully resolved.
+    pub recovery_events: usize,
+    /// Mean / max seconds from a fault to its cohort's full resolution.
+    pub recovery_mean_s: f64,
+    pub recovery_max_s: f64,
 }
 
 impl MetricsRecorder {
@@ -213,6 +307,31 @@ impl MetricsRecorder {
             .set("arrival_output_tokens", Json::f64_bits(self.arrival_output_tokens))
             .set("workload_s", Json::f64_bits(self.workload_s))
             .set("rejections", self.rejections.to_snapshot())
+            .set("faults_injected", self.faults_injected)
+            .set("lost_requests", self.lost_requests)
+            .set("retried_requests", self.retried_requests)
+            .set(
+                "wasted_prefill_tokens",
+                Json::f64_bits(self.wasted_prefill_tokens),
+            )
+            .set("transfer_retries", self.transfer_retries)
+            .set("transfer_aborts", self.transfer_aborts)
+            .set(
+                "abandoned",
+                Json::Arr(
+                    self.abandoned
+                        .iter()
+                        .map(|a| {
+                            Json::obj()
+                                .set("id", Json::u64_hex(a.id))
+                                .set("arrival", Json::f64_bits(a.arrival))
+                                .set("retries", a.retries as usize)
+                                .set("reason", a.reason.label())
+                        })
+                        .collect(),
+                ),
+            )
+            .set("recoveries", pairs(&self.recoveries))
     }
 
     /// Rebuild from [`MetricsRecorder::to_snapshot`] output.
@@ -274,12 +393,88 @@ impl MetricsRecorder {
             arrival_output_tokens: bits("arrival_output_tokens")?,
             workload_s: bits("workload_s")?,
             rejections: RejectionCounts::from_snapshot(req("rejections")?)?,
+            faults_injected: req("faults_injected")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("{what}: `faults_injected` is not an integer"))?,
+            lost_requests: req("lost_requests")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("{what}: `lost_requests` is not an integer"))?,
+            retried_requests: req("retried_requests")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("{what}: `retried_requests` is not an integer"))?,
+            wasted_prefill_tokens: bits("wasted_prefill_tokens")?,
+            transfer_retries: req("transfer_retries")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("{what}: `transfer_retries` is not an integer"))?,
+            transfer_aborts: req("transfer_aborts")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("{what}: `transfer_aborts` is not an integer"))?,
+            abandoned: req("abandoned")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{what}: `abandoned` is not an array"))?
+                .iter()
+                .map(|a| {
+                    Ok(AbandonedRequest {
+                        id: a
+                            .get("id")
+                            .and_then(Json::as_u64_hex)
+                            .ok_or_else(|| anyhow::anyhow!("{what}: abandoned entry lacks `id`"))?,
+                        arrival: a.get("arrival").and_then(Json::as_f64_bits).ok_or_else(
+                            || anyhow::anyhow!("{what}: abandoned entry lacks `arrival`"),
+                        )?,
+                        retries: a.get("retries").and_then(Json::as_usize).ok_or_else(
+                            || anyhow::anyhow!("{what}: abandoned entry lacks `retries`"),
+                        )? as u32,
+                        reason: a
+                            .get("reason")
+                            .and_then(Json::as_str)
+                            .and_then(DropReason::from_label)
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("{what}: abandoned entry has a bad `reason`")
+                            })?,
+                    })
+                })
+                .collect::<anyhow::Result<Vec<AbandonedRequest>>>()?,
+            recoveries: pairs("recoveries")?,
         })
     }
 
     /// Produce the report under an SLO policy. `warmup_s` drops requests
     /// arriving before that time (cold-start transient).
     pub fn report(&self, slo: &SloPolicy, warmup_s: f64) -> SloReport {
+        let abandoned_requests = self
+            .abandoned
+            .iter()
+            .filter(|a| a.arrival >= warmup_s)
+            .count();
+        let abandoned_retry_budget = self
+            .abandoned
+            .iter()
+            .filter(|a| a.arrival >= warmup_s && a.reason == DropReason::RetryBudget)
+            .count();
+        let recovery_events = self.recoveries.len();
+        let (recovery_mean_s, recovery_max_s) = if recovery_events == 0 {
+            (0.0, 0.0)
+        } else {
+            let sum: f64 = self.recoveries.iter().map(|(_, d)| *d).sum();
+            let max = self.recoveries.iter().map(|(_, d)| *d).fold(0.0f64, f64::max);
+            (sum / recovery_events as f64, max)
+        };
+        let ledger = SloReport {
+            faults_injected: self.faults_injected,
+            lost_requests: self.lost_requests,
+            retried_requests: self.retried_requests,
+            abandoned_requests,
+            abandoned_retry_budget,
+            abandoned_starved: abandoned_requests - abandoned_retry_budget,
+            wasted_prefill_tokens: self.wasted_prefill_tokens,
+            transfer_retries: self.transfer_retries,
+            transfer_aborts: self.transfer_aborts,
+            recovery_events,
+            recovery_mean_s,
+            recovery_max_s,
+            ..Default::default()
+        };
         let completions: Vec<&Completion> = self
             .completions
             .iter()
@@ -294,7 +489,7 @@ impl MetricsRecorder {
                     0.0
                 },
                 rejected_actions: self.rejections.total(),
-                ..Default::default()
+                ..ledger
             };
         }
         let ttft_ok = completions.iter().filter(|c| c.ttft_ok(slo)).count();
@@ -314,11 +509,17 @@ impl MetricsRecorder {
         };
         let prefill_waits = wait_filter(&self.prefill_waits);
         let queue_waits = wait_filter(&self.queue_waits);
+        // Offered = completed + abandoned: goodput charges dropped
+        // requests against attainment (DistServe's objective). With
+        // nothing abandoned this is the same division as
+        // `overall_attainment`, bit for bit.
+        let offered = n + abandoned_requests;
         SloReport {
             n,
             ttft_attainment: ttft_ok as f64 / n as f64,
             tpot_attainment: tpot_ok as f64 / n as f64,
             overall_attainment: both_ok as f64 / n as f64,
+            goodput_attainment: both_ok as f64 / offered as f64,
             avg_gpus: if self.horizon_s > 0.0 {
                 self.gpu_seconds / self.horizon_s
             } else {
@@ -329,6 +530,7 @@ impl MetricsRecorder {
             prefill_wait: Summary::of(&prefill_waits),
             queue_wait: Summary::of(&queue_waits),
             rejected_actions: self.rejections.total(),
+            ..ledger
         }
     }
 }
@@ -413,6 +615,19 @@ mod tests {
         m.workload_s = 60.0;
         m.dropped = 2;
         m.rejections.note(RejectReason::NoCapacity);
+        m.faults_injected = 3;
+        m.lost_requests = 2;
+        m.retried_requests = 1;
+        m.wasted_prefill_tokens = 512.0;
+        m.transfer_retries = 4;
+        m.transfer_aborts = 1;
+        m.abandoned.push(AbandonedRequest {
+            id: 7,
+            arrival: 2.5,
+            retries: 9,
+            reason: DropReason::Starved,
+        });
+        m.recoveries.push((10.0, 3.25));
         let text = m.to_snapshot().pretty();
         let back =
             MetricsRecorder::from_snapshot(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
@@ -429,6 +644,48 @@ mod tests {
         assert_eq!(back.dropped, 2);
         assert_eq!(back.rejections, m.rejections);
         assert_eq!(back.prefill_waits[0].1.to_bits(), m.prefill_waits[0].1.to_bits());
+        assert_eq!(back.faults_injected, 3);
+        assert_eq!(back.lost_requests, 2);
+        assert_eq!(back.retried_requests, 1);
+        assert_eq!(back.wasted_prefill_tokens.to_bits(), 512.0f64.to_bits());
+        assert_eq!(back.transfer_retries, 4);
+        assert_eq!(back.transfer_aborts, 1);
+        assert_eq!(back.abandoned, m.abandoned);
+        assert_eq!(back.recoveries, m.recoveries);
+    }
+
+    #[test]
+    fn goodput_charges_abandoned_requests() {
+        let mut m = MetricsRecorder::new();
+        m.record(c(0.0, 100, 0.1, 0.05)); // meets SLO
+        m.record(c(1.0, 100, 0.1, 0.05)); // meets SLO
+        m.abandoned.push(AbandonedRequest {
+            id: 9,
+            arrival: 2.0,
+            retries: 8,
+            reason: DropReason::RetryBudget,
+        });
+        m.abandoned.push(AbandonedRequest {
+            id: 10,
+            arrival: 3.0,
+            retries: 0,
+            reason: DropReason::Starved,
+        });
+        m.recoveries.push((5.0, 2.0));
+        m.recoveries.push((9.0, 4.0));
+        let r = m.report(&SloPolicy::default(), 0.0);
+        assert_eq!(r.n, 2);
+        assert!((r.overall_attainment - 1.0).abs() < 1e-12);
+        assert!((r.goodput_attainment - 0.5).abs() < 1e-12);
+        assert_eq!(r.abandoned_requests, 2);
+        assert_eq!(r.abandoned_retry_budget, 1);
+        assert_eq!(r.abandoned_starved, 1);
+        assert_eq!(r.recovery_events, 2);
+        assert!((r.recovery_mean_s - 3.0).abs() < 1e-12);
+        assert!((r.recovery_max_s - 4.0).abs() < 1e-12);
+        // Abandoned requests inside the warmup window don't count.
+        let r2 = m.report(&SloPolicy::default(), 2.5);
+        assert_eq!(r2.abandoned_requests, 1);
     }
 
     #[test]

@@ -16,7 +16,9 @@ use crate::metrics::SloReport;
 use crate::perfmodel::{catalog, EngineModel, LinkSpec};
 use crate::report::registry::{PolicyContext, PolicyParams, PolicyRegistry};
 use crate::scaler::derive_thresholds_from_profile;
-use crate::sim::{simulate_source, ClusterConfig, SimConfig, SimEngine, SimResult, SimSnapshot};
+use crate::sim::{
+    simulate_source, ClusterConfig, FaultPlan, SimConfig, SimEngine, SimResult, SimSnapshot,
+};
 use crate::trace::{ArrivalSource, SourceFactory, Trace, TraceProfile, TraceSliceSource};
 use crate::velocity::VelocityProfile;
 use crate::workload::SloPolicy;
@@ -106,6 +108,8 @@ pub struct RunOverrides {
     pub force_single_step: bool,
     /// Decision audit ring capacity (0 = disabled).
     pub decision_log: usize,
+    /// Fault-injection plan (empty = no faults; see `sim::faults`).
+    pub faults: FaultPlan,
 }
 
 impl Default for RunOverrides {
@@ -121,6 +125,7 @@ impl Default for RunOverrides {
             slo: None,
             force_single_step: false,
             decision_log: 0,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -215,6 +220,7 @@ pub fn prepare_run(
         slo,
         force_single_step: ov.force_single_step,
         decision_log: ov.decision_log,
+        faults: ov.faults.clone(),
         ..Default::default()
     };
     if let Some(s) = ov.sample_interval_s {

@@ -21,6 +21,7 @@ use crate::trace::{
     family_source, materialize, step_trace, uniform_bucket_trace, ArrivalSource, BurstWindow,
     OwnedTraceSource, SourceExt, SourceFactory, Trace, TraceFamily,
 };
+use crate::sim::FaultPlan;
 use crate::util::json::Json;
 use crate::workload::SloPolicy;
 use std::fmt;
@@ -689,6 +690,10 @@ pub struct Scenario {
     /// every policy cell from the snapshot (see docs/checkpoints.md).
     /// None runs every cell cold from t=0.
     pub checkpoint: Option<CheckpointSpec>,
+    /// Fault-injection plan (see `sim::faults` and docs/faults.md). The
+    /// default empty plan arms nothing and leaves runs byte-identical to
+    /// a build without the fault layer.
+    pub faults: FaultPlan,
 }
 
 impl Scenario {
@@ -703,6 +708,7 @@ impl Scenario {
             slo: None,
             materialize: false,
             checkpoint: None,
+            faults: FaultPlan::default(),
         }
     }
 
@@ -746,6 +752,12 @@ impl Scenario {
     /// Enable cross-cell warm-start from a shared prefix snapshot.
     pub fn with_checkpoint(mut self, ck: CheckpointSpec) -> Scenario {
         self.checkpoint = Some(ck);
+        self
+    }
+
+    /// Arm a fault-injection plan for every cell of this scenario.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Scenario {
+        self.faults = plan;
         self
     }
 
@@ -828,6 +840,10 @@ impl Scenario {
                 }
             }
         }
+        self.faults.validate().map_err(|reason| ScenarioError::BadValue {
+            field: "faults".into(),
+            reason,
+        })?;
         Ok(())
     }
 
@@ -882,6 +898,7 @@ impl Scenario {
             slo: self.slo,
             force_single_step: false,
             decision_log: self.overrides.decision_log,
+            faults: self.faults.clone(),
         }
     }
 
@@ -972,6 +989,9 @@ impl Scenario {
             }
             j = j.set("checkpoint", c);
         }
+        if !self.faults.is_empty() {
+            j = j.set("faults", self.faults.to_json());
+        }
         j
     }
 
@@ -989,6 +1009,7 @@ impl Scenario {
                 "slo",
                 "materialize",
                 "checkpoint",
+                "faults",
             ],
         )?;
         let name = req_str(j, "scenario", "name")?.to_string();
@@ -1062,6 +1083,13 @@ impl Scenario {
                 Some(ck)
             }
         };
+        let faults = match j.get("faults") {
+            None => FaultPlan::default(),
+            Some(f) => FaultPlan::from_json(f).map_err(|e| ScenarioError::BadValue {
+                field: "faults".into(),
+                reason: e.to_string(),
+            })?,
+        };
         let scenario = Scenario {
             name,
             deployment: req_str(j, "scenario", "deployment")?.to_string(),
@@ -1078,6 +1106,7 @@ impl Scenario {
                 })?,
             },
             checkpoint,
+            faults,
         };
         scenario.validate()?;
         Ok(scenario)
@@ -1267,6 +1296,54 @@ mod tests {
         // Prefix >= known workload duration is rejected at parse time.
         let mut bad = demo_scenario();
         bad.checkpoint = Some(CheckpointSpec::new(60.0)); // demo duration is 60s
+        assert!(matches!(bad.validate(), Err(ScenarioError::BadValue { .. })));
+    }
+
+    #[test]
+    fn faults_block_round_trips_and_validates() {
+        use crate::sim::{FaultKind, FaultSchedule, FaultSpec};
+        let mut sc = demo_scenario();
+        sc.faults = FaultPlan {
+            seed: 99,
+            entries: vec![
+                FaultSpec {
+                    kind: FaultKind::Crash,
+                    role: Some(crate::sim::Role::Decoder),
+                    instance_index: None,
+                    schedule: FaultSchedule::At { t: 30.0 },
+                },
+                FaultSpec {
+                    kind: FaultKind::Transfer {
+                        loss_prob: 0.5,
+                        stall_s: 2.0,
+                        max_retries: 3,
+                        duration_s: 20.0,
+                    },
+                    role: None,
+                    instance_index: None,
+                    schedule: FaultSchedule::At { t: 10.0 },
+                },
+            ],
+        };
+        let back = Scenario::from_json(&Json::parse(&sc.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back, sc);
+        // The plan rides into every compiled spec's run overrides.
+        let specs = sc.experiment_specs().unwrap();
+        assert!(specs.iter().all(|s| s.overrides.faults == sc.faults));
+        // An empty plan is omitted from the serialized form entirely.
+        let plain = demo_scenario();
+        assert!(plain.to_json().get("faults").is_none());
+        // Bad plans are typed errors.
+        let mut bad = demo_scenario();
+        bad.faults = FaultPlan {
+            seed: 0,
+            entries: vec![FaultSpec {
+                kind: FaultKind::Degrade { factor: 0.0, duration_s: 5.0 },
+                role: None,
+                instance_index: None,
+                schedule: FaultSchedule::At { t: 1.0 },
+            }],
+        };
         assert!(matches!(bad.validate(), Err(ScenarioError::BadValue { .. })));
     }
 

@@ -38,7 +38,11 @@ use std::time::Instant;
 /// structural change (the golden-file test pins the layout).
 /// v2: per-cell `wall_s` plus the top-level `warm_start` amortization
 /// block (shared warm-up prefix wall-clock accounting).
-pub const BENCH_SCHEMA_VERSION: u64 = 2;
+/// v3: per-cell failure ledger — `goodput_attainment` plus the
+/// fault-injection counters (lost/retried/abandoned requests, wasted
+/// prefill tokens, transfer retries/aborts, recovery times). Always
+/// emitted; zero on fault-free runs.
+pub const BENCH_SCHEMA_VERSION: u64 = 3;
 
 /// Directory scanned for file-based suites (relative to the repo root).
 pub const SCENARIO_DIR: &str = "scenarios";
@@ -263,6 +267,23 @@ pub struct ScenarioOutcome {
     pub arrival_rps: f64,
     /// Wall-clock seconds this cell took (excl. any shared prefix).
     pub wall_s: f64,
+
+    // ---- failure ledger (schema v3; zero on fault-free runs) ----
+    /// Completions meeting both SLOs over *offered* post-warmup requests
+    /// (completed + abandoned) — goodput vs. the raw attainment above.
+    pub goodput_attainment: f64,
+    pub faults_injected: usize,
+    pub lost_requests: usize,
+    pub retried_requests: usize,
+    pub abandoned_requests: usize,
+    pub abandoned_retry_budget: usize,
+    pub abandoned_starved: usize,
+    pub wasted_prefill_tokens: f64,
+    pub transfer_retries: usize,
+    pub transfer_aborts: usize,
+    pub recovery_events: usize,
+    pub recovery_mean_s: f64,
+    pub recovery_max_s: f64,
 }
 
 impl ScenarioOutcome {
@@ -287,6 +308,19 @@ impl ScenarioOutcome {
             scale_downs: res.sim.scale_downs,
             arrival_rps: res.sim.metrics.offered_rps(),
             wall_s: res.wall_s,
+            goodput_attainment: r.goodput_attainment,
+            faults_injected: r.faults_injected,
+            lost_requests: r.lost_requests,
+            retried_requests: r.retried_requests,
+            abandoned_requests: r.abandoned_requests,
+            abandoned_retry_budget: r.abandoned_retry_budget,
+            abandoned_starved: r.abandoned_starved,
+            wasted_prefill_tokens: r.wasted_prefill_tokens,
+            transfer_retries: r.transfer_retries,
+            transfer_aborts: r.transfer_aborts,
+            recovery_events: r.recovery_events,
+            recovery_mean_s: r.recovery_mean_s,
+            recovery_max_s: r.recovery_max_s,
         }
     }
 
@@ -308,6 +342,19 @@ impl ScenarioOutcome {
             .set("scale_downs", self.scale_downs)
             .set("arrival_rps", self.arrival_rps)
             .set("wall_s", self.wall_s)
+            .set("goodput_attainment", self.goodput_attainment)
+            .set("faults_injected", self.faults_injected)
+            .set("lost_requests", self.lost_requests)
+            .set("retried_requests", self.retried_requests)
+            .set("abandoned_requests", self.abandoned_requests)
+            .set("abandoned_retry_budget", self.abandoned_retry_budget)
+            .set("abandoned_starved", self.abandoned_starved)
+            .set("wasted_prefill_tokens", self.wasted_prefill_tokens)
+            .set("transfer_retries", self.transfer_retries)
+            .set("transfer_aborts", self.transfer_aborts)
+            .set("recovery_events", self.recovery_events)
+            .set("recovery_mean_s", self.recovery_mean_s)
+            .set("recovery_max_s", self.recovery_max_s)
     }
 }
 

@@ -170,7 +170,10 @@ impl BaseState {
                 self.on_completion();
                 true
             }
-            Signal::Tick | Signal::InstanceReady(_) | Signal::InstanceDrained(_) => false,
+            Signal::Tick
+            | Signal::InstanceReady(_)
+            | Signal::InstanceDrained(_)
+            | Signal::InstanceFailed { .. } => false,
         }
     }
 

@@ -9,6 +9,7 @@
 //! (spawn/retire/sweep) instead of on every simulator event.
 
 use super::event::InstanceId;
+use super::faults::FaultLabel;
 use super::instance::{Instance, LifeState, Role};
 use super::snapshot;
 use crate::metrics::TimeSeries;
@@ -32,6 +33,15 @@ pub struct ClusterConfig {
     pub convertible_chunk_size: usize,
     /// Eq. 6 reserved KV tokens on each convertible decoder.
     pub convertible_reserve_tokens: f64,
+}
+
+/// One injected-fault hit on an instance, kept in the cluster's failure
+/// ledger so `ClusterView` can expose churn history to policies.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailureRecord {
+    pub t: f64,
+    pub instance: InstanceId,
+    pub label: FaultLabel,
 }
 
 /// One slab slot. `seq` records the spawn sequence number of the current
@@ -65,6 +75,9 @@ pub struct Cluster {
     /// Instance-count time series (provisioned; Fig. 11).
     pub prefiller_series: TimeSeries,
     pub decoder_series: TimeSeries,
+    /// Injected-fault ledger (crashes, preemptions, degradations), newest
+    /// last. Empty unless a `FaultPlan` is armed.
+    pub failures: Vec<FailureRecord>,
 }
 
 impl Cluster {
@@ -81,6 +94,7 @@ impl Cluster {
             last_cost_t: 0.0,
             prefiller_series: TimeSeries::new("prefillers"),
             decoder_series: TimeSeries::new("decoders"),
+            failures: Vec::new(),
         }
     }
 
@@ -241,6 +255,27 @@ impl Cluster {
         dead
     }
 
+    /// Forcibly remove an instance that was lost to an injected fault
+    /// (crash, or preemption deadline). Unlike `sweep_drained` the
+    /// instance may still hold work — the caller salvages it from the
+    /// returned `Instance`. Returns `None` for stale ids.
+    pub fn remove_failed(&mut self, id: InstanceId, now: f64) -> Option<Instance> {
+        self.accrue_cost(now);
+        let slot = self.slots.get_mut(id.slot())?;
+        if slot.seq != id.seq() {
+            return None;
+        }
+        let inst = slot.inst.take()?;
+        self.allocated -= inst.gpus();
+        self.live[inst.role.idx()].retain(|x| *x != id);
+        if inst.life != LifeState::Draining {
+            self.active[inst.role.idx()] -= 1;
+        }
+        self.free.push(id.slot() as u32);
+        self.record_counts(now);
+        Some(inst)
+    }
+
     fn record_counts(&mut self, now: f64) {
         self.prefiller_series
             .push(now, self.active_count(Role::Prefiller) as f64);
@@ -356,6 +391,20 @@ impl Cluster {
             .set("last_cost_t", Json::f64_bits(self.last_cost_t))
             .set("prefiller_series", snapshot::series_to_json(&self.prefiller_series))
             .set("decoder_series", snapshot::series_to_json(&self.decoder_series))
+            .set(
+                "failures",
+                Json::Arr(
+                    self.failures
+                        .iter()
+                        .map(|r| {
+                            Json::obj()
+                                .set("t", Json::f64_bits(r.t))
+                                .set("instance", snapshot::iid_to_json(r.instance))
+                                .set("label", r.label.label())
+                        })
+                        .collect(),
+                ),
+            )
     }
 
     /// Rebuild a cluster from [`Cluster::to_snapshot`] output. `config`
@@ -426,6 +475,21 @@ impl Cluster {
                 what,
             )?)?,
             decoder_series: snapshot::series_from_json(snapshot::get(j, "decoder_series", what)?)?,
+            failures: snapshot::parr(j, "failures", what)?
+                .iter()
+                .map(|r| {
+                    let label = r
+                        .get("label")
+                        .and_then(Json::as_str)
+                        .and_then(FaultLabel::from_label)
+                        .ok_or_else(|| anyhow::anyhow!("{what}: bad failure label"))?;
+                    Ok(FailureRecord {
+                        t: snapshot::pf(r, "t", what)?,
+                        instance: snapshot::iid_from_json(snapshot::get(r, "instance", what)?)?,
+                        label,
+                    })
+                })
+                .collect::<anyhow::Result<Vec<FailureRecord>>>()?,
         })
     }
 }

@@ -49,22 +49,28 @@
 //!   maintained as a running accumulator rather than a per-sample rescan.
 
 use super::audit::{DecisionLog, DecisionRecord};
-use super::cluster::{Cluster, ClusterConfig};
+use super::cluster::{Cluster, ClusterConfig, FailureRecord};
 use super::event::{Event, EventQueue, InstanceId};
+use super::faults::{mix_seed, FaultKind, FaultLabel, FaultPlan, Firing};
 use super::instance::{ActiveSeq, LifeState, PrefillJob, RequestClock, Role};
 use super::policy::{Action, ActionOutcome, ControlPlane, RejectReason, Signal, SignalKind};
 use super::snapshot::{self, SimSnapshot, SNAPSHOT_SCHEMA_VERSION};
 use super::view::ClusterView;
-use crate::metrics::{MetricsRecorder, TimeSeries};
+use crate::metrics::{AbandonedRequest, DropReason, MetricsRecorder, TimeSeries};
 use crate::perfmodel::LinkSpec;
 use crate::trace::{fast_forward, ArrivalSource, Trace, TraceSliceSource};
 use crate::util::json::Json;
+use crate::util::rng::Pcg64;
 use crate::workload::{BucketScheme, Completion, Request, RequestId, SloPolicy};
 use std::collections::{HashMap, VecDeque};
 
 /// Chunk budget used for `DeflectPrefill { chunked: true }` when the
 /// deployment has no profiled convertible chunk size (baseline clusters).
 const DEFAULT_DEFLECT_CHUNK: usize = 512;
+
+/// First-retry delay for a faulted KVC transfer; attempt `k` waits
+/// `base * 2^(k-1)` before redelivery (exponential backoff).
+const TRANSFER_BACKOFF_BASE_S: f64 = 0.1;
 
 /// Simulation parameters.
 #[derive(Clone, Debug)]
@@ -98,6 +104,20 @@ pub struct SimConfig {
     /// snapshot never perturbs simulation state, so results are identical
     /// with or without auto-checkpointing.
     pub checkpoint_every_s: f64,
+    /// Fault-injection plan (`sim::faults`). Empty by default: no fault
+    /// events are scheduled and no randomness is drawn, so runs are
+    /// byte-identical to a build without the fault layer.
+    pub faults: FaultPlan,
+    /// Per-request retry budget: a request displaced more than this many
+    /// times (crash/preemption/transfer-abort re-prefills) is abandoned
+    /// with [`DropReason::RetryBudget`] instead of requeueing forever.
+    pub retry_limit: u32,
+    /// Gateway starvation bound: a queued request older than this while
+    /// the fleet has nothing that could ever serve it is abandoned with
+    /// [`DropReason::Starved`]. Never fires in a healthy run (scaling
+    /// keeps >= 1 instance per stage); it closes the requeue-forever
+    /// hazard when faults empty out a pool.
+    pub starvation_age_s: f64,
 }
 
 impl Default for SimConfig {
@@ -114,6 +134,9 @@ impl Default for SimConfig {
             force_single_step: false,
             decision_log: 0,
             checkpoint_every_s: 0.0,
+            faults: FaultPlan::default(),
+            retry_limit: 8,
+            starvation_age_s: 120.0,
         }
     }
 }
@@ -161,6 +184,23 @@ pub struct SimResult {
 /// In-flight KVC transfer bookkeeping.
 struct Transfer {
     bytes_per_s: f64,
+    /// Delivery attempt, 1-based (> 1 after transfer-fault retries).
+    attempt: u32,
+    /// This attempt was doomed by an armed transfer brownout: at
+    /// `TransferDone` (the engine-side timeout) it retries with backoff
+    /// instead of landing.
+    doomed: bool,
+}
+
+/// A transfer-fault brownout window derived from a [`FaultKind::Transfer`]
+/// firing (pure function of the plan; recomputed on resume).
+#[derive(Clone, Copy)]
+struct TransferWindow {
+    from: f64,
+    until: f64,
+    loss_prob: f64,
+    stall_s: f64,
+    max_retries: u32,
 }
 
 /// What stage the request carried by the current signal dispatch is in —
@@ -226,6 +266,42 @@ pub struct SimEngine<'a, C: ControlPlane + ?Sized> {
     /// kept and surfaced on [`SimResult::last_checkpoint`].
     ckpt_sink: Option<Box<dyn FnMut(SimSnapshot) + 'a>>,
     last_checkpoint: Option<Box<SimSnapshot>>,
+    /// Materialized fault firings — a pure function of `cfg.faults`
+    /// (recomputed on resume, never snapshotted).
+    firings: Vec<Firing>,
+    /// Brownout windows from `FaultKind::Transfer` firings; derived like
+    /// `firings`.
+    transfer_windows: Vec<TransferWindow>,
+    /// Open recovery cohorts: (fault time, displaced requests still
+    /// outstanding). When a cohort drains to zero the recovery time is
+    /// recorded in `metrics.recoveries`.
+    fault_cohorts: Vec<(f64, usize)>,
+    /// Displaced request → index into `fault_cohorts`.
+    fault_req: HashMap<RequestId, usize>,
+}
+
+/// Derive the firing list and transfer brownout windows from a plan.
+fn fault_derived(plan: &FaultPlan) -> (Vec<Firing>, Vec<TransferWindow>) {
+    let firings = plan.materialize();
+    let windows = firings
+        .iter()
+        .filter_map(|f| match plan.entries[f.entry].kind {
+            FaultKind::Transfer {
+                loss_prob,
+                stall_s,
+                max_retries,
+                duration_s,
+            } => Some(TransferWindow {
+                from: f.t,
+                until: f.t + duration_s,
+                loss_prob,
+                stall_s,
+                max_retries,
+            }),
+            _ => None,
+        })
+        .collect();
+    (firings, windows)
 }
 
 impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
@@ -242,6 +318,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             None
         };
         let cfg_every = cfg.checkpoint_every_s;
+        let (firings, transfer_windows) = fault_derived(&cfg.faults);
         SimEngine {
             cfg,
             policy,
@@ -274,6 +351,10 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             next_auto_ckpt: if cfg_every > 0.0 { cfg_every } else { f64::INFINITY },
             ckpt_sink: None,
             last_checkpoint: None,
+            firings,
+            transfer_windows,
+            fault_cohorts: Vec::new(),
+            fault_req: HashMap::new(),
         }
     }
 
@@ -320,6 +401,11 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         }
         self.events.push(0.0, Event::ControlTick);
         self.events.push(0.0, Event::SampleTick);
+        // Schedule every materialized fault firing up front (an empty plan
+        // pushes nothing, leaving the event stream byte-identical).
+        for i in 0..self.firings.len() {
+            self.events.push(self.firings[i].t, Event::Fault { firing: i });
+        }
     }
 
     /// Process events whose time is <= `until` (and within the drain
@@ -467,6 +553,8 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                             Json::obj()
                                 .set("req", Json::u64_hex(*id))
                                 .set("bytes_per_s", Json::f64_bits(tr.bytes_per_s))
+                                .set("attempt", tr.attempt as usize)
+                                .set("doomed", Json::Bool(tr.doomed))
                         })
                         .collect(),
                 ),
@@ -520,6 +608,29 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             .set("scale_ups", self.scale_ups)
             .set("scale_downs", self.scale_downs)
             .set("events_processed", Json::u64_hex(self.events_processed))
+            .set(
+                "fault_cohorts",
+                Json::Arr(
+                    self.fault_cohorts
+                        .iter()
+                        .map(|(t, n)| Json::obj().set("t", Json::f64_bits(*t)).set("n", *n))
+                        .collect(),
+                ),
+            )
+            .set("fault_req", {
+                let mut members: Vec<(&RequestId, &usize)> = self.fault_req.iter().collect();
+                members.sort_by_key(|(id, _)| **id);
+                Json::Arr(
+                    members
+                        .into_iter()
+                        .map(|(id, idx)| {
+                            Json::obj()
+                                .set("req", Json::u64_hex(*id))
+                                .set("cohort", *idx)
+                        })
+                        .collect(),
+                )
+            })
             .set(
                 "decisions",
                 match &self.decisions {
@@ -596,6 +707,10 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 snapshot::pu64(tr, "req", what)?,
                 Transfer {
                     bytes_per_s: snapshot::pf(tr, "bytes_per_s", what)?,
+                    attempt: snapshot::pusize(tr, "attempt", what)? as u32,
+                    doomed: snapshot::get(tr, "doomed", what)?
+                        .as_bool()
+                        .ok_or_else(|| anyhow::anyhow!("{what}: transfer `doomed` not a bool"))?,
                 },
             );
         }
@@ -654,6 +769,20 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             Json::Null => None,
             other => Some(snapshot::decision_log_from_json(other)?),
         };
+        let mut fault_cohorts = Vec::new();
+        for c in snapshot::parr(e, "fault_cohorts", what)? {
+            fault_cohorts.push((snapshot::pf(c, "t", what)?, snapshot::pusize(c, "n", what)?));
+        }
+        let mut fault_req = HashMap::new();
+        for m in snapshot::parr(e, "fault_req", what)? {
+            let idx = snapshot::pusize(m, "cohort", what)?;
+            anyhow::ensure!(
+                idx < fault_cohorts.len(),
+                "{what}: fault_req cohort index out of range"
+            );
+            fault_req.insert(snapshot::pu64(m, "req", what)?, idx);
+        }
+        let (firings, transfer_windows) = fault_derived(&cfg.faults);
         let now = snapshot::pf(e, "now", what)?;
         let every = cfg.checkpoint_every_s;
         let next_auto_ckpt = if every > 0.0 {
@@ -701,6 +830,10 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             next_auto_ckpt,
             ckpt_sink: None,
             last_checkpoint: None,
+            firings,
+            transfer_windows,
+            fault_cohorts,
+            fault_req,
             cfg,
         })
     }
@@ -767,7 +900,286 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             Event::PrefillDone { instance, req } => self.on_prefill_done(instance, req),
             Event::TransferDone { instance, req } => self.on_transfer_done(instance, req),
             Event::DecodeIterDone { instance, epoch } => self.on_iter_done(instance, epoch),
+            Event::Fault { firing } => self.on_fault(firing),
+            Event::FaultKill { instance } => self.on_fault_kill(instance),
+            Event::FaultRestore { instance } => self.on_fault_restore(instance),
         }
+    }
+
+    // ---- fault injection (sim::faults) ----
+
+    /// Pick the victim of a fault firing among live, non-draining
+    /// instances matching the spec's scope. Candidates are enumerated in
+    /// role/spawn order, so selection is deterministic: a pinned
+    /// `instance_index` indexes that ordering; otherwise the firing's
+    /// pre-drawn salt does.
+    fn pick_fault_target(&self, entry: usize, salt: u64) -> Option<InstanceId> {
+        let spec = &self.cfg.faults.entries[entry];
+        let mut cands: Vec<InstanceId> = Vec::new();
+        for role in [Role::Prefiller, Role::Decoder, Role::ConvertibleDecoder] {
+            if spec.role.is_some_and(|r| r != role) {
+                continue;
+            }
+            for i in self.cluster.iter_role(role) {
+                if i.life != LifeState::Draining {
+                    cands.push(i.id);
+                }
+            }
+        }
+        if cands.is_empty() {
+            return None;
+        }
+        let idx = match spec.instance_index {
+            Some(i) => i % cands.len(),
+            None => (salt % cands.len() as u64) as usize,
+        };
+        Some(cands[idx])
+    }
+
+    /// Record an injected fault in the decision audit ring so
+    /// `tokenscale explain` shows cause -> reaction chains.
+    fn audit_fault(&mut self, instance: InstanceId, label: FaultLabel) {
+        self.record_decision(
+            SignalKind::InstanceFailed,
+            Action::Fault {
+                instance,
+                kind: label,
+            },
+            ActionOutcome::Applied,
+        );
+    }
+
+    fn on_fault(&mut self, firing: usize) {
+        let f = self.firings[firing];
+        self.metrics.faults_injected += 1;
+        match self.cfg.faults.entries[f.entry].kind {
+            // Brownouts act through the derived window at dispatch time;
+            // the firing itself only counts in the ledger.
+            FaultKind::Transfer { .. } => {}
+            FaultKind::Crash => {
+                if let Some(id) = self.pick_fault_target(f.entry, f.salt) {
+                    self.crash_instance(id, FaultLabel::Crash, false);
+                }
+            }
+            FaultKind::Preempt { warning_s } => {
+                if let Some(id) = self.pick_fault_target(f.entry, f.salt) {
+                    self.cluster.failures.push(FailureRecord {
+                        t: self.now,
+                        instance: id,
+                        label: FaultLabel::Preempt,
+                    });
+                    // Drain: work that completes before the deadline
+                    // survives; FaultKill reaps whatever is left.
+                    self.cluster.retire(id, self.now);
+                    self.audit_fault(id, FaultLabel::Preempt);
+                    self.dispatch_notify(Signal::InstanceFailed {
+                        instance: id,
+                        planned: true,
+                    });
+                    self.events
+                        .push(self.now + warning_s, Event::FaultKill { instance: id });
+                }
+            }
+            FaultKind::Degrade { factor, duration_s } => {
+                if let Some(id) = self.pick_fault_target(f.entry, f.salt) {
+                    // Close any coalesced window at the old speed before
+                    // the rate changes.
+                    self.interrupt_window(id);
+                    if let Some(inst) = self.cluster.get_mut(id) {
+                        inst.perf_factor = factor;
+                        inst.degrade_until = self.now + duration_s;
+                    }
+                    self.cluster.failures.push(FailureRecord {
+                        t: self.now,
+                        instance: id,
+                        label: FaultLabel::Degrade,
+                    });
+                    self.audit_fault(id, FaultLabel::Degrade);
+                    self.dispatch_notify(Signal::InstanceFailed {
+                        instance: id,
+                        planned: true,
+                    });
+                    self.events
+                        .push(self.now + duration_s, Event::FaultRestore { instance: id });
+                }
+            }
+        }
+    }
+
+    /// Preemption drain deadline: whatever is still on the instance is
+    /// lost. If it finished draining first, the id is stale — a no-op.
+    fn on_fault_kill(&mut self, instance: InstanceId) {
+        self.crash_instance(instance, FaultLabel::PreemptKill, true);
+    }
+
+    /// End of a degradation window. A later, overlapping degrade firing
+    /// pushes `degrade_until` forward; only the final expiry restores.
+    fn on_fault_restore(&mut self, instance: InstanceId) {
+        let Some(inst) = self.cluster.get(instance) else {
+            return;
+        };
+        if !inst.is_degraded() || self.now < inst.degrade_until {
+            return;
+        }
+        // Close the degraded-rate window before restoring the rate.
+        self.interrupt_window(instance);
+        if let Some(inst) = self.cluster.get_mut(instance) {
+            inst.perf_factor = 1.0;
+            inst.degrade_until = f64::NEG_INFINITY;
+        }
+        self.cluster.failures.push(FailureRecord {
+            t: self.now,
+            instance,
+            label: FaultLabel::Restore,
+        });
+        self.ensure_iterating(instance);
+    }
+
+    /// Remove a failed instance and salvage its displaced work: in-flight
+    /// prefills and decodes are lost (KV freed), and every displaced
+    /// request re-enters the gateway as a `RetryPrefill` (re-prefill
+    /// cost), joined into one recovery cohort.
+    fn crash_instance(&mut self, id: InstanceId, label: FaultLabel, planned: bool) {
+        let Some(mut inst) = self.cluster.remove_failed(id, self.now) else {
+            return;
+        };
+        self.cluster.failures.push(FailureRecord {
+            t: self.now,
+            instance: id,
+            label,
+        });
+        let mut displaced: Vec<Request> = Vec::new();
+        let mut wasted = 0.0;
+        if let Some(job) = inst.active_prefill.take() {
+            // Chunked progress is wasted; a whole-prompt prefill in
+            // flight has produced nothing visible yet.
+            wasted += (job.req.input_tokens - job.remaining) as f64;
+            displaced.push(job.req);
+        }
+        for job in inst.prefill_queue.drain(..) {
+            displaced.push(job.req);
+        }
+        // Batched/joining sequences lose their prefilled KV entirely.
+        for seq in inst.batch.drain(..) {
+            wasted += seq.req.input_tokens as f64;
+            displaced.push(seq.req);
+        }
+        for seq in inst.joining.drain(..) {
+            wasted += seq.req.input_tokens as f64;
+            displaced.push(seq.req);
+        }
+        self.metrics.wasted_prefill_tokens += wasted;
+        self.audit_fault(id, label);
+        // Tell the policy before re-offering the displaced work so it can
+        // react (spawn replacements, re-route) within the same instant.
+        self.dispatch_notify(Signal::InstanceFailed {
+            instance: id,
+            planned,
+        });
+        let cohort = if displaced.is_empty() {
+            None
+        } else {
+            self.fault_cohorts.push((self.now, 0));
+            Some(self.fault_cohorts.len() - 1)
+        };
+        for req in displaced {
+            self.fault_requeue(req, cohort);
+        }
+    }
+
+    /// Drop a request's cohort membership; when its cohort drains to
+    /// zero, the fault's recovery time is recorded.
+    fn cohort_release(&mut self, rid: RequestId) {
+        if let Some(idx) = self.fault_req.remove(&rid) {
+            let (t, n) = &mut self.fault_cohorts[idx];
+            *n -= 1;
+            if *n == 0 {
+                self.metrics.recoveries.push((*t, self.now - *t));
+            }
+        }
+    }
+
+    /// Return a displaced request to the gateway as a retry, or abandon
+    /// it once its retry budget is spent.
+    fn fault_requeue(&mut self, mut req: Request, cohort: Option<usize>) {
+        self.metrics.lost_requests += 1;
+        self.cohort_release(req.id);
+        req.retries += 1;
+        if req.retries > self.cfg.retry_limit {
+            self.abandon(req, DropReason::RetryBudget);
+            return;
+        }
+        if req.retries == 1 {
+            self.metrics.retried_requests += 1;
+        }
+        if let Some(idx) = cohort {
+            self.fault_cohorts[idx].1 += 1;
+            self.fault_req.insert(req.id, idx);
+        }
+        self.offer_prefill(req, true);
+    }
+
+    /// Permanently drop a request with a typed reason (failure ledger).
+    fn abandon(&mut self, req: Request, reason: DropReason) {
+        self.cohort_release(req.id);
+        self.clocks.remove(&req.id);
+        self.metrics.abandoned.push(AbandonedRequest {
+            id: req.id,
+            arrival: req.arrival,
+            retries: req.retries,
+            reason,
+        });
+    }
+
+    /// Abandon gateway-queued requests that can never be served: older
+    /// than the starvation bound while the fleet holds nothing capable of
+    /// their next stage. Never fires in a healthy run.
+    fn sweep_starved(&mut self) {
+        let age = self.cfg.starvation_age_s;
+        if age <= 0.0 {
+            return;
+        }
+        if !self.pending.is_empty() {
+            // Any non-draining instance can take a prefill (prefillers
+            // directly, decode-side via deflection/admission).
+            let can_prefill = self.cluster.iter().any(|i| i.life != LifeState::Draining);
+            if !can_prefill {
+                let n = self.pending.len();
+                for _ in 0..n {
+                    let r = self.pending.pop_front().expect("len checked");
+                    if self.now - r.arrival > age {
+                        self.abandon(r, DropReason::Starved);
+                    } else {
+                        self.pending.push_back(r);
+                    }
+                }
+            }
+        }
+        if !self.awaiting_decode.is_empty() {
+            let can_decode = self
+                .cluster
+                .iter()
+                .any(|i| i.role != Role::Prefiller && i.life != LifeState::Draining);
+            if !can_decode {
+                let n = self.awaiting_decode.len();
+                for _ in 0..n {
+                    let r = self.awaiting_decode.pop_front().expect("len checked");
+                    if self.now - r.arrival > age {
+                        self.abandon(r, DropReason::Starved);
+                    } else {
+                        self.awaiting_decode.push_back(r);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The transfer brownout window covering `t`, if any.
+    fn transfer_window_at(&self, t: f64) -> Option<TransferWindow> {
+        self.transfer_windows
+            .iter()
+            .copied()
+            .find(|w| t >= w.from && t < w.until)
     }
 
     // ---- signal dispatch / action interpretation ----
@@ -989,6 +1401,15 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                     let outcome = self.apply_drain(instance);
                     self.record_decision(kind, a, outcome);
                 }
+                Action::Fault { .. } => {
+                    // Audit marker the engine itself emits when a planned
+                    // fault fires; policies cannot forge faults.
+                    self.record_decision(
+                        kind,
+                        a,
+                        ActionOutcome::Rejected(RejectReason::EngineOnly),
+                    );
+                }
             }
         }
         if fleet_p.is_some() || fleet_d.is_some() {
@@ -1130,10 +1551,30 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         let bytes = inst.engine.kvc_bytes(req.input_tokens);
         let dur = self.cfg.link.transfer_time(bytes);
         let bytes_per_s = bytes / dur.max(1e-9);
-        self.transfers.insert(req.id, Transfer { bytes_per_s });
+        // Armed transfer brownout: the attempt may be doomed — it stalls
+        // until the engine-side timeout instead of landing. The draw is
+        // keyed by (plan seed, request, attempt) so it is independent of
+        // dispatch order. No window (the default) draws nothing.
+        let mut doomed = false;
+        let mut land = dur;
+        if let Some(w) = self.transfer_window_at(self.now) {
+            let mut rng = Pcg64::new(mix_seed(self.cfg.faults.seed, req.id, 1));
+            if rng.chance(w.loss_prob) {
+                doomed = true;
+                land = w.stall_s;
+            }
+        }
+        self.transfers.insert(
+            req.id,
+            Transfer {
+                bytes_per_s,
+                attempt: 1,
+                doomed,
+            },
+        );
         self.net_bytes_per_s += bytes_per_s;
         self.events.push(
-            self.now + dur,
+            self.now + land,
             Event::TransferDone {
                 instance: decoder,
                 req: req.id,
@@ -1244,7 +1685,9 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         let Some(job) = inst.prefill_queue.pop_front() else {
             return;
         };
-        let dur = inst.engine.prefill_time(job.req.input_tokens);
+        // `perf_factor` is 1.0 outside a degradation window; multiplying
+        // by 1.0 is bit-exact, so healthy runs are unchanged.
+        let dur = inst.engine.prefill_time(job.req.input_tokens) * inst.perf_factor;
         let req_id = job.req.id;
         inst.active_prefill = Some(job);
         inst.prefill_done_at = self.now + dur;
@@ -1281,12 +1724,31 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
     }
 
     fn on_transfer_done(&mut self, instance: InstanceId, req_id: RequestId) {
-        if let Some(tr) = self.transfers.remove(&req_id) {
-            self.net_bytes_per_s = (self.net_bytes_per_s - tr.bytes_per_s).max(0.0);
-        }
+        let doomed_attempt = match self.transfers.remove(&req_id) {
+            Some(tr) => {
+                self.net_bytes_per_s = (self.net_bytes_per_s - tr.bytes_per_s).max(0.0);
+                tr.doomed.then_some(tr.attempt)
+            }
+            None => None,
+        };
         let Some((req, bucket)) = self.in_transfer.remove(&req_id) else {
             return;
         };
+        if let Some(attempt) = doomed_attempt {
+            // Engine-side timeout on a faulted transfer: retry with
+            // exponential backoff, or fall back to re-prefill once the
+            // retry budget is spent.
+            self.retry_transfer(instance, req, bucket, attempt);
+            return;
+        }
+        if self.cluster.get(instance).is_none() {
+            // Destination vanished mid-transfer (crash/preemption): the
+            // KV copy died with it — back to the gateway for a
+            // re-prefill. (Pre-fault-layer this was a silent loss.)
+            self.metrics.wasted_prefill_tokens += req.input_tokens as f64;
+            self.fault_requeue(req, None);
+            return;
+        }
         // A joiner changes the batch composition: truncate any coalesced
         // window so the merge happens at the next true iteration boundary.
         self.interrupt_window(instance);
@@ -1301,6 +1763,61 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             req,
         });
         self.ensure_iterating(instance);
+    }
+
+    /// Redeliver a faulted KVC transfer: backoff then a fresh attempt
+    /// (re-drawing its doom against the brownout state at retry time), or
+    /// abort to a gateway re-prefill when the target died or the window's
+    /// bounded retry budget is exhausted.
+    fn retry_transfer(&mut self, instance: InstanceId, req: Request, bucket: usize, attempt: u32) {
+        self.metrics.transfer_retries += 1;
+        let next_attempt = attempt + 1;
+        let alive = self.cluster.get(instance).is_some();
+        let over_budget = self
+            .transfer_window_at(self.now)
+            .is_some_and(|w| next_attempt > w.max_retries + 1);
+        if !alive || over_budget {
+            if let Some(inst) = self.cluster.get_mut(instance) {
+                inst.reserved_tokens =
+                    (inst.reserved_tokens - req.total_tokens() as f64).max(0.0);
+            }
+            self.metrics.transfer_aborts += 1;
+            self.metrics.wasted_prefill_tokens += req.input_tokens as f64;
+            self.audit_fault(instance, FaultLabel::TransferAbort);
+            self.fault_requeue(req, None);
+            return;
+        }
+        // Exponential backoff before the retry occupies the link again.
+        let backoff = TRANSFER_BACKOFF_BASE_S * (1u64 << (attempt.min(16) - 1)) as f64;
+        let bytes = self.cluster.config.decode_engine.kvc_bytes(req.input_tokens);
+        let dur = self.cfg.link.transfer_time(bytes);
+        let bytes_per_s = bytes / dur.max(1e-9);
+        let mut doomed = false;
+        let mut land = backoff + dur;
+        if let Some(w) = self.transfer_window_at(self.now) {
+            let mut rng = Pcg64::new(mix_seed(self.cfg.faults.seed, req.id, next_attempt as u64));
+            if rng.chance(w.loss_prob) {
+                doomed = true;
+                land = backoff + w.stall_s;
+            }
+        }
+        self.transfers.insert(
+            req.id,
+            Transfer {
+                bytes_per_s,
+                attempt: next_attempt,
+                doomed,
+            },
+        );
+        self.net_bytes_per_s += bytes_per_s;
+        self.events.push(
+            self.now + land,
+            Event::TransferDone {
+                instance,
+                req: req.id,
+            },
+        );
+        self.in_transfer.insert(req.id, (req, bucket));
     }
 
     // ---- decode iterations ----
@@ -1339,7 +1856,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 // its single-step schedule.
                 let n = inst.batch.len();
                 let avg = inst.win_avg_ctx(inst.win_done);
-                let dur = inst.engine.decode_iter_time(n, avg);
+                let dur = inst.engine.decode_iter_time(n, avg) * inst.perf_factor;
                 let end = inst.win_t + dur;
                 inst.win_apply_to_seqs();
                 inst.win_clear();
@@ -1416,7 +1933,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             inst.engine.chunked_iter_time(chunk_tokens, n, avg_ctx)
         } else {
             inst.engine.decode_iter_time(n, avg_ctx)
-        };
+        } * inst.perf_factor;
         inst.iterating = true;
         inst.iter_epoch += 1;
         inst.iter_chunk = chunk_tokens;
@@ -1444,7 +1961,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 let mut t = end; // iteration 0 computed above
                 for i in 1..total {
                     let avg = ((sum_ctx + i as u64 * n as u64) as f64) / (n as f64);
-                    t += inst.engine.decode_iter_time(n, avg);
+                    t += inst.engine.decode_iter_time(n, avg) * inst.perf_factor;
                 }
                 inst.win_active = true;
                 inst.win_total = total;
@@ -1561,6 +2078,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         for idx in 0..self.completions_buf.len() {
             let c = self.completions_buf[idx];
             self.ttft_points.push((c.arrival, c.ttft));
+            self.cohort_release(c.id);
             self.dispatch_notify(Signal::Completion(&c));
             self.metrics.record(c);
             if let Some(ck) = self.clocks.remove(&c.id) {
@@ -1589,6 +2107,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         self.actions_buf = acts;
         self.reoffer_pending();
         self.retry_awaiting_decode();
+        self.sweep_starved();
         let dead = self.cluster.sweep_drained(self.now);
         for id in dead {
             self.dispatch_notify(Signal::InstanceDrained(id));

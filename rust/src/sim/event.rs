@@ -66,6 +66,14 @@ pub enum Event {
     InstanceReady { instance: InstanceId },
     /// Metrics sampling tick (time-series capture).
     SampleTick,
+    /// An armed fault fires (`firing` indexes the engine's materialized
+    /// firing list, which is a pure function of `SimConfig::faults`).
+    Fault { firing: usize },
+    /// Preemption drain deadline: the instance loses whatever work it
+    /// has not finished. Stale ids (already drained and swept) no-op.
+    FaultKill { instance: InstanceId },
+    /// End of a degradation window: restore the instance's perf factor.
+    FaultRestore { instance: InstanceId },
 }
 
 /// Heap entry ordered by (time, class rank, seq): simultaneous events pop

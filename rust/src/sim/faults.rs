@@ -1,0 +1,685 @@
+//! Deterministic fault injection for the simulator.
+//!
+//! A [`FaultPlan`] is a serializable list of fault entries — scheduled
+//! (`at`, `every`) or stochastic (`rate`, Poisson) — scoped per role or
+//! per instance index. The plan is **materialized** into a concrete
+//! firing list by a pure function of `(plan.seed, entries)`: no engine
+//! RNG state is consumed, so armed runs are bit-reproducible and
+//! checkpoint/resume can rebuild the identical firing list from the
+//! config alone.
+//!
+//! Fault kinds (semantics live in `sim::engine`):
+//!
+//! * `crash` — the target vanishes instantly; in-flight prefills and
+//!   decodes are lost, KV is freed, and their requests re-enter the
+//!   gateway with `retries += 1` (full re-prefill cost).
+//! * `preempt` — preemption with a `warning_s` drain deadline; work
+//!   finishing before the deadline survives, the rest is lost as in a
+//!   crash.
+//! * `degrade` — a straggler window: prefill/decode step durations are
+//!   multiplied by `factor` for `duration_s` seconds.
+//! * `transfer` — a KVC-transfer brownout window of `duration_s`
+//!   seconds: each transfer started inside the window is lost with
+//!   `loss_prob` (the engine notices after a `stall_s` timeout and
+//!   retries with exponential backoff, up to `max_retries` attempts
+//!   before falling back to re-prefill).
+//!
+//! The empty plan is the default everywhere and injects nothing: the
+//! engine pushes no fault events and draws no random numbers, so runs
+//! with an empty plan are byte-identical to builds without this module.
+
+use super::instance::Role;
+use crate::util::json::Json;
+use crate::util::rng::{splitmix64, Pcg64};
+
+/// What a fault entry does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Instant instance loss.
+    Crash,
+    /// Preemption with a drain warning: the target stops admitting work
+    /// immediately and is force-killed `warning_s` later.
+    Preempt { warning_s: f64 },
+    /// Straggler window: step durations × `factor` for `duration_s`.
+    Degrade { factor: f64, duration_s: f64 },
+    /// KVC-transfer brownout for `duration_s`: transfers started in the
+    /// window are lost with `loss_prob`; the engine times out after
+    /// `stall_s`, backs off exponentially and retries up to
+    /// `max_retries` times before re-prefilling.
+    Transfer {
+        loss_prob: f64,
+        stall_s: f64,
+        max_retries: u32,
+        duration_s: f64,
+    },
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Preempt { .. } => "preempt",
+            FaultKind::Degrade { .. } => "degrade",
+            FaultKind::Transfer { .. } => "transfer",
+        }
+    }
+}
+
+/// When a fault entry fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultSchedule {
+    /// Once, at an absolute sim time.
+    At { t: f64 },
+    /// Periodically: `from_s, from_s + period_s, …` while `< until_s`.
+    Every { period_s: f64, from_s: f64, until_s: f64 },
+    /// Poisson arrivals at `rate_per_s` inside `[from_s, until_s)`,
+    /// capped at `count` firings (0 = unlimited).
+    Poisson {
+        rate_per_s: f64,
+        from_s: f64,
+        until_s: f64,
+        count: usize,
+    },
+}
+
+/// One fault entry: a kind, an optional scope and a schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    /// Restrict targets to one role (`None` = any role).
+    pub role: Option<Role>,
+    /// Pin the target to the i-th matching instance (sorted by id) at
+    /// fire time; `None` picks pseudo-randomly via the firing's salt.
+    pub instance_index: Option<usize>,
+    pub schedule: FaultSchedule,
+}
+
+/// A serializable fault-injection plan. `Default` is the empty plan.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultPlan {
+    /// Seed for stochastic schedules, target picks and transfer-loss
+    /// draws. Independent of the workload seed.
+    pub seed: u64,
+    pub entries: Vec<FaultSpec>,
+}
+
+/// One concrete firing produced by [`FaultPlan::materialize`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Firing {
+    /// Sim time the fault fires.
+    pub t: f64,
+    /// Index into `FaultPlan::entries`.
+    pub entry: usize,
+    /// Per-firing salt (deterministic) used for target selection.
+    pub salt: u64,
+}
+
+/// Audit label for injected faults, recorded in the decision ring as
+/// `Action::Fault` so `tokenscale explain` shows cause→reaction chains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultLabel {
+    /// Instance crashed (unplanned loss).
+    Crash,
+    /// Preemption warning issued (instance began force-draining).
+    Preempt,
+    /// Preemption deadline hit; undrained work was lost.
+    PreemptKill,
+    /// Degradation window opened.
+    Degrade,
+    /// Degradation window closed.
+    Restore,
+    /// A KVC transfer exhausted its retry budget and fell back to
+    /// re-prefill.
+    TransferAbort,
+}
+
+impl FaultLabel {
+    pub const ALL: [FaultLabel; 6] = [
+        FaultLabel::Crash,
+        FaultLabel::Preempt,
+        FaultLabel::PreemptKill,
+        FaultLabel::Degrade,
+        FaultLabel::Restore,
+        FaultLabel::TransferAbort,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultLabel::Crash => "crash",
+            FaultLabel::Preempt => "preempt",
+            FaultLabel::PreemptKill => "preempt-kill",
+            FaultLabel::Degrade => "degrade",
+            FaultLabel::Restore => "restore",
+            FaultLabel::TransferAbort => "transfer-abort",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<FaultLabel> {
+        FaultLabel::ALL.iter().copied().find(|l| l.label() == s)
+    }
+}
+
+fn role_name(r: Role) -> &'static str {
+    match r {
+        Role::Prefiller => "prefiller",
+        Role::Decoder => "decoder",
+        Role::ConvertibleDecoder => "convertible",
+    }
+}
+
+fn role_from_name(s: &str) -> Option<Role> {
+    match s {
+        "prefiller" => Some(Role::Prefiller),
+        "decoder" => Some(Role::Decoder),
+        "convertible" => Some(Role::ConvertibleDecoder),
+        _ => None,
+    }
+}
+
+/// Deterministic per-stream seed: mixes the plan seed with a stream tag
+/// so each entry (and each transfer doom-draw) gets an independent,
+/// order-insensitive RNG.
+pub fn mix_seed(seed: u64, a: u64, b: u64) -> u64 {
+    let mut s = seed ^ a.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ b.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    splitmix64(&mut s)
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Validate parameter ranges. Returns a human-readable reason on
+    /// failure (mapped to `ScenarioError::BadValue` by the scenario
+    /// loader).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, e) in self.entries.iter().enumerate() {
+            let ctx = |msg: String| format!("faults.entries[{i}]: {msg}");
+            match e.kind {
+                FaultKind::Crash => {}
+                FaultKind::Preempt { warning_s } => {
+                    if !(warning_s >= 0.0) {
+                        return Err(ctx(format!("warning_s must be >= 0 (got {warning_s})")));
+                    }
+                }
+                FaultKind::Degrade { factor, duration_s } => {
+                    if !(factor >= 1.0) {
+                        return Err(ctx(format!("factor must be >= 1 (got {factor})")));
+                    }
+                    if !(duration_s > 0.0) {
+                        return Err(ctx(format!("duration_s must be > 0 (got {duration_s})")));
+                    }
+                }
+                FaultKind::Transfer {
+                    loss_prob,
+                    stall_s,
+                    duration_s,
+                    ..
+                } => {
+                    if !(0.0..=1.0).contains(&loss_prob) {
+                        return Err(ctx(format!("loss_prob must be in [0,1] (got {loss_prob})")));
+                    }
+                    if !(stall_s > 0.0) {
+                        return Err(ctx(format!("stall_s must be > 0 (got {stall_s})")));
+                    }
+                    if !(duration_s > 0.0) {
+                        return Err(ctx(format!("duration_s must be > 0 (got {duration_s})")));
+                    }
+                }
+            }
+            match e.schedule {
+                FaultSchedule::At { t } => {
+                    if !(t >= 0.0) {
+                        return Err(ctx(format!("at must be >= 0 (got {t})")));
+                    }
+                }
+                FaultSchedule::Every {
+                    period_s,
+                    from_s,
+                    until_s,
+                } => {
+                    if !(period_s > 0.0) {
+                        return Err(ctx(format!("every must be > 0 (got {period_s})")));
+                    }
+                    if !(from_s >= 0.0) || until_s < from_s {
+                        return Err(ctx(format!(
+                            "bad window from_s={from_s} until_s={until_s}"
+                        )));
+                    }
+                }
+                FaultSchedule::Poisson {
+                    rate_per_s,
+                    from_s,
+                    until_s,
+                    ..
+                } => {
+                    if !(rate_per_s > 0.0) {
+                        return Err(ctx(format!("rate must be > 0 (got {rate_per_s})")));
+                    }
+                    if !(from_s >= 0.0) || until_s < from_s {
+                        return Err(ctx(format!(
+                            "bad window from_s={from_s} until_s={until_s}"
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand the plan into a concrete, time-sorted firing list. Pure
+    /// function of the plan: each entry draws from its own seeded
+    /// stream, so adding or reordering entries never perturbs another
+    /// entry's firings.
+    pub fn materialize(&self) -> Vec<Firing> {
+        let mut out = Vec::new();
+        for (idx, e) in self.entries.iter().enumerate() {
+            let mut rng = Pcg64::new(mix_seed(self.seed, idx as u64, 0x5ca1ab1e));
+            match e.schedule {
+                FaultSchedule::At { t } => out.push(Firing {
+                    t,
+                    entry: idx,
+                    salt: rng.next_u64(),
+                }),
+                FaultSchedule::Every {
+                    period_s,
+                    from_s,
+                    until_s,
+                } => {
+                    let mut k = 0u32;
+                    loop {
+                        // Multiply instead of repeated addition so the
+                        // firing times are independent of how many have
+                        // fired (bit-stable under window edits).
+                        let t = from_s + period_s * k as f64;
+                        if t >= until_s {
+                            break;
+                        }
+                        out.push(Firing {
+                            t,
+                            entry: idx,
+                            salt: rng.next_u64(),
+                        });
+                        k += 1;
+                    }
+                }
+                FaultSchedule::Poisson {
+                    rate_per_s,
+                    from_s,
+                    until_s,
+                    count,
+                } => {
+                    let mut t = from_s;
+                    let mut fired = 0usize;
+                    loop {
+                        t += rng.exponential(rate_per_s);
+                        if t >= until_s || (count > 0 && fired >= count) {
+                            break;
+                        }
+                        out.push(Firing {
+                            t,
+                            entry: idx,
+                            salt: rng.next_u64(),
+                        });
+                        fired += 1;
+                    }
+                }
+            }
+        }
+        // Stable order: time, then entry index (ties across entries).
+        out.sort_by(|a, b| {
+            a.t.partial_cmp(&b.t)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.entry.cmp(&b.entry))
+        });
+        out
+    }
+
+    // ---- serialization (scenario schema + snapshots) ----
+
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self.entries.iter().map(spec_to_json).collect();
+        Json::obj()
+            .set("seed", self.seed as f64)
+            .set("entries", Json::Arr(entries))
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<FaultPlan> {
+        if let Json::Obj(m) = j {
+            for k in m.keys() {
+                if !["seed", "entries"].contains(&k.as_str()) {
+                    anyhow::bail!("faults: unknown field `{k}` (typo?)");
+                }
+            }
+        } else {
+            anyhow::bail!("faults: expected an object");
+        }
+        let seed = j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let mut entries = Vec::new();
+        if let Some(arr) = j.get("entries").and_then(Json::as_arr) {
+            for (i, ej) in arr.iter().enumerate() {
+                entries.push(
+                    spec_from_json(ej)
+                        .map_err(|e| anyhow::anyhow!("faults.entries[{i}]: {e}"))?,
+                );
+            }
+        }
+        let plan = FaultPlan { seed, entries };
+        plan.validate().map_err(|e| anyhow::anyhow!(e))?;
+        Ok(plan)
+    }
+}
+
+fn spec_to_json(e: &FaultSpec) -> Json {
+    let mut j = Json::obj().set("kind", e.kind.name());
+    if let Some(r) = e.role {
+        j = j.set("role", role_name(r));
+    }
+    if let Some(i) = e.instance_index {
+        j = j.set("instance", i as f64);
+    }
+    match e.kind {
+        FaultKind::Crash => {}
+        FaultKind::Preempt { warning_s } => {
+            j = j.set("warning_s", warning_s);
+        }
+        FaultKind::Degrade { factor, duration_s } => {
+            j = j.set("factor", factor).set("duration_s", duration_s);
+        }
+        FaultKind::Transfer {
+            loss_prob,
+            stall_s,
+            max_retries,
+            duration_s,
+        } => {
+            j = j
+                .set("loss_prob", loss_prob)
+                .set("stall_s", stall_s)
+                .set("max_retries", max_retries as f64)
+                .set("duration_s", duration_s);
+        }
+    }
+    match e.schedule {
+        FaultSchedule::At { t } => {
+            j = j.set("at", t);
+        }
+        FaultSchedule::Every {
+            period_s,
+            from_s,
+            until_s,
+        } => {
+            j = j.set("every", period_s).set("from_s", from_s);
+            if until_s.is_finite() {
+                j = j.set("until_s", until_s);
+            }
+        }
+        FaultSchedule::Poisson {
+            rate_per_s,
+            from_s,
+            until_s,
+            count,
+        } => {
+            j = j.set("rate", rate_per_s).set("from_s", from_s);
+            if until_s.is_finite() {
+                j = j.set("until_s", until_s);
+            }
+            if count > 0 {
+                j = j.set("count", count as f64);
+            }
+        }
+    }
+    j
+}
+
+fn spec_from_json(j: &Json) -> Result<FaultSpec, String> {
+    let kind_str = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or("missing required field `kind`")?;
+
+    let f = |key: &str| j.get(key).and_then(Json::as_f64);
+    let req = |key: &str| f(key).ok_or(format!("`{kind_str}` needs numeric field `{key}`"));
+
+    let kind = match kind_str {
+        "crash" => FaultKind::Crash,
+        "preempt" => FaultKind::Preempt {
+            warning_s: req("warning_s")?,
+        },
+        "degrade" => FaultKind::Degrade {
+            factor: req("factor")?,
+            duration_s: req("duration_s")?,
+        },
+        "transfer" => FaultKind::Transfer {
+            loss_prob: req("loss_prob")?,
+            stall_s: req("stall_s")?,
+            max_retries: f("max_retries").unwrap_or(3.0) as u32,
+            duration_s: req("duration_s")?,
+        },
+        other => {
+            return Err(format!(
+                "unknown kind `{other}` (expected crash, preempt, degrade or transfer)"
+            ))
+        }
+    };
+
+    // Schedule: exactly one selector.
+    let selectors = [f("at").is_some(), f("every").is_some(), f("rate").is_some()];
+    if selectors.iter().filter(|x| **x).count() != 1 {
+        return Err("need exactly one of `at`, `every` or `rate`".into());
+    }
+    let from_s = f("from_s").unwrap_or(0.0);
+    let until_s = f("until_s").unwrap_or(f64::INFINITY);
+    let schedule = if let Some(t) = f("at") {
+        FaultSchedule::At { t }
+    } else if let Some(period_s) = f("every") {
+        FaultSchedule::Every {
+            period_s,
+            from_s,
+            until_s,
+        }
+    } else {
+        FaultSchedule::Poisson {
+            rate_per_s: f("rate").unwrap(),
+            from_s,
+            until_s,
+            count: f("count").unwrap_or(0.0) as usize,
+        }
+    };
+
+    let role = match j.get("role").and_then(Json::as_str) {
+        Some(s) => Some(role_from_name(s).ok_or(format!(
+            "unknown role `{s}` (expected prefiller, decoder or convertible)"
+        ))?),
+        None => None,
+    };
+    let instance_index = j.get("instance").and_then(Json::as_usize);
+
+    // Strict field check, parameterized by kind + schedule so a
+    // mismatched parameter (e.g. `factor` on a crash) fails loudly.
+    let mut allowed: Vec<&str> = vec!["kind", "role", "instance", "at", "every", "rate"];
+    match kind_str {
+        "preempt" => allowed.push("warning_s"),
+        "degrade" => allowed.extend(["factor", "duration_s"]),
+        "transfer" => allowed.extend(["loss_prob", "stall_s", "max_retries", "duration_s"]),
+        _ => {}
+    }
+    if f("at").is_none() {
+        allowed.extend(["from_s", "until_s"]);
+        if f("rate").is_some() {
+            allowed.push("count");
+        }
+    }
+    if let Json::Obj(m) = j {
+        for k in m.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!("unknown field `{k}` for kind `{kind_str}` (typo?)"));
+            }
+        }
+    } else {
+        return Err("expected an object".into());
+    }
+
+    Ok(FaultSpec {
+        kind,
+        role,
+        instance_index,
+        schedule,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_with(entries: Vec<FaultSpec>) -> FaultPlan {
+        FaultPlan { seed: 42, entries }
+    }
+
+    #[test]
+    fn empty_plan_is_default_and_materializes_nothing() {
+        let p = FaultPlan::default();
+        assert!(p.is_empty());
+        assert!(p.materialize().is_empty());
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn materialize_is_deterministic_and_sorted() {
+        let p = plan_with(vec![
+            FaultSpec {
+                kind: FaultKind::Crash,
+                role: Some(Role::Prefiller),
+                instance_index: None,
+                schedule: FaultSchedule::Poisson {
+                    rate_per_s: 0.1,
+                    from_s: 0.0,
+                    until_s: 100.0,
+                    count: 0,
+                },
+            },
+            FaultSpec {
+                kind: FaultKind::Crash,
+                role: None,
+                instance_index: Some(0),
+                schedule: FaultSchedule::Every {
+                    period_s: 10.0,
+                    from_s: 5.0,
+                    until_s: 40.0,
+                },
+            },
+        ]);
+        let a = p.materialize();
+        let b = p.materialize();
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].t <= w[1].t));
+        // The periodic entry fires at 5, 15, 25, 35.
+        let periodic: Vec<f64> = a.iter().filter(|f| f.entry == 1).map(|f| f.t).collect();
+        assert_eq!(periodic, vec![5.0, 15.0, 25.0, 35.0]);
+    }
+
+    #[test]
+    fn entry_streams_are_independent() {
+        // Removing the first entry must not change the second's firings.
+        let e2 = FaultSpec {
+            kind: FaultKind::Crash,
+            role: None,
+            instance_index: None,
+            schedule: FaultSchedule::Poisson {
+                rate_per_s: 0.2,
+                from_s: 0.0,
+                until_s: 50.0,
+                count: 3,
+            },
+        };
+        let solo = plan_with(vec![e2.clone()]);
+        let both = plan_with(vec![
+            FaultSpec {
+                kind: FaultKind::Crash,
+                role: None,
+                instance_index: None,
+                schedule: FaultSchedule::Poisson {
+                    rate_per_s: 1.0,
+                    from_s: 0.0,
+                    until_s: 50.0,
+                    count: 0,
+                },
+            },
+            e2,
+        ]);
+        let solo_times: Vec<f64> = solo.materialize().iter().map(|f| f.t).collect();
+        let both_times: Vec<f64> = both
+            .materialize()
+            .iter()
+            .filter(|f| f.entry == 1)
+            .map(|f| f.t)
+            .collect();
+        assert_eq!(solo_times, both_times);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let p = plan_with(vec![
+            FaultSpec {
+                kind: FaultKind::Preempt { warning_s: 10.0 },
+                role: Some(Role::Decoder),
+                instance_index: None,
+                schedule: FaultSchedule::Every {
+                    period_s: 30.0,
+                    from_s: 20.0,
+                    until_s: 200.0,
+                },
+            },
+            FaultSpec {
+                kind: FaultKind::Transfer {
+                    loss_prob: 0.5,
+                    stall_s: 2.0,
+                    max_retries: 4,
+                    duration_s: 25.0,
+                },
+                role: None,
+                instance_index: None,
+                schedule: FaultSchedule::At { t: 40.0 },
+            },
+            FaultSpec {
+                kind: FaultKind::Degrade {
+                    factor: 3.0,
+                    duration_s: 15.0,
+                },
+                role: Some(Role::Prefiller),
+                instance_index: Some(1),
+                schedule: FaultSchedule::At { t: 10.0 },
+            },
+        ]);
+        let j = p.to_json();
+        let back = FaultPlan::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn strict_parsing_rejects_typos_and_mismatched_params() {
+        let bad = Json::parse(r#"{"entries":[{"kind":"crash","att":5.0}]}"#).unwrap();
+        assert!(FaultPlan::from_json(&bad).is_err());
+        // `factor` belongs to degrade, not crash.
+        let mixed =
+            Json::parse(r#"{"entries":[{"kind":"crash","at":5.0,"factor":2.0}]}"#).unwrap();
+        assert!(FaultPlan::from_json(&mixed).is_err());
+        // Two schedule selectors.
+        let twice =
+            Json::parse(r#"{"entries":[{"kind":"crash","at":5.0,"every":2.0}]}"#).unwrap();
+        assert!(FaultPlan::from_json(&twice).is_err());
+        // Out-of-range probability.
+        let oob = Json::parse(
+            r#"{"entries":[{"kind":"transfer","loss_prob":1.5,"stall_s":1.0,"duration_s":5.0,"at":1.0}]}"#,
+        )
+        .unwrap();
+        assert!(FaultPlan::from_json(&oob).is_err());
+    }
+
+    #[test]
+    fn fault_labels_round_trip() {
+        for l in FaultLabel::ALL {
+            assert_eq!(FaultLabel::from_label(l.label()), Some(l));
+        }
+        assert_eq!(FaultLabel::from_label("nope"), None);
+    }
+}

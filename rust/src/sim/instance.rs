@@ -118,6 +118,15 @@ pub struct Instance {
     /// KV tokens reserved for burst prefill work (Eq. 6), convertibles only.
     pub convertible_reserve_tokens: f64,
 
+    // ---- fault injection (sim::faults) ----
+    /// Slowdown multiplier on prefill/decode step durations (straggler
+    /// model). 1.0 = healthy; applied to work *started* while degraded.
+    /// Multiplying by 1.0 is bit-exact, so healthy runs are untouched.
+    pub perf_factor: f64,
+    /// Simulated time the degradation window ends (NEG_INFINITY when
+    /// healthy); the engine restores `perf_factor` to 1.0 then.
+    pub degrade_until: f64,
+
     // ---- coalesced decode window (fixed batch fast path) ----
     /// A multi-iteration window is in flight (the scheduled
     /// DecodeIterDone covers `win_total` iterations).
@@ -167,6 +176,8 @@ impl Instance {
             iter_chunk: 0,
             chunk_size: 0,
             convertible_reserve_tokens: 0.0,
+            perf_factor: 1.0,
+            degrade_until: f64::NEG_INFINITY,
             win_active: false,
             win_total: 0,
             win_done: 0,
@@ -234,6 +245,11 @@ impl Instance {
         self.batch.len() + self.joining.len()
     }
 
+    /// Whether a degradation window is currently active (straggler fault).
+    pub fn is_degraded(&self) -> bool {
+        self.perf_factor != 1.0
+    }
+
     /// Whether the instance has fully drained (safe to remove).
     pub fn drained(&self) -> bool {
         self.batch.is_empty()
@@ -265,7 +281,7 @@ impl Instance {
         let mut produced = 0u64;
         while self.win_done + 1 < self.win_total {
             let avg = self.win_avg_ctx(self.win_done);
-            let dur = self.engine.decode_iter_time(n, avg);
+            let dur = self.engine.decode_iter_time(n, avg) * self.perf_factor;
             let end = self.win_t + dur;
             if end >= t {
                 break;

@@ -17,13 +17,15 @@ pub mod audit;
 pub mod cluster;
 pub mod engine;
 pub mod event;
+pub mod faults;
 pub mod instance;
 pub mod policy;
 pub mod snapshot;
 pub mod view;
 
 pub use audit::{DecisionLog, DecisionRecord};
-pub use cluster::{Cluster, ClusterConfig};
+pub use cluster::{Cluster, ClusterConfig, FailureRecord};
+pub use faults::{FaultKind, FaultLabel, FaultPlan, FaultSchedule, FaultSpec};
 pub use engine::{simulate, simulate_source, SimConfig, SimEngine, SimResult, SimSeries};
 pub use event::{Event, EventQueue, InstanceId};
 pub use instance::{ActiveSeq, Instance, LifeState, PrefillJob, RequestClock, Role};

@@ -25,6 +25,7 @@
 //! still runs on identical mechanics.
 
 use super::event::InstanceId;
+use super::faults::FaultLabel;
 use super::instance::Role;
 use super::snapshot::PolicyState;
 use super::view::ClusterView;
@@ -57,6 +58,12 @@ pub enum Signal<'a> {
     InstanceReady(InstanceId),
     /// A draining instance finished its work and left the cluster.
     InstanceDrained(InstanceId),
+    /// An instance was lost to an injected fault. `planned` is true for
+    /// preemptions (a drain warning preceded the loss), false for
+    /// crashes. Recovery is a *policy* decision: re-scale, convert a
+    /// decoder, deflect — the engine only salvages the lost requests
+    /// back into the gateway.
+    InstanceFailed { instance: InstanceId, planned: bool },
 }
 
 impl Signal<'_> {
@@ -70,6 +77,7 @@ impl Signal<'_> {
             Signal::Tick => SignalKind::Tick,
             Signal::InstanceReady(_) => SignalKind::InstanceReady,
             Signal::InstanceDrained(_) => SignalKind::InstanceDrained,
+            Signal::InstanceFailed { .. } => SignalKind::InstanceFailed,
         }
     }
 }
@@ -84,6 +92,7 @@ pub enum SignalKind {
     Tick,
     InstanceReady,
     InstanceDrained,
+    InstanceFailed,
 }
 
 impl SignalKind {
@@ -96,6 +105,7 @@ impl SignalKind {
             SignalKind::Tick => "tick",
             SignalKind::InstanceReady => "instance-ready",
             SignalKind::InstanceDrained => "instance-drained",
+            SignalKind::InstanceFailed => "instance-failed",
         }
     }
 }
@@ -144,6 +154,15 @@ pub enum Action {
     /// Begin draining one specific instance; it finishes queued work and
     /// is removed once idle. Rejected if already draining.
     Drain { instance: InstanceId },
+    /// Engine-originated audit verb: an injected fault hit `instance`.
+    /// Never valid from a policy — policies emitting it get
+    /// [`RejectReason::EngineOnly`]; the engine records it directly in
+    /// the decision ring so `tokenscale explain` shows cause→reaction
+    /// chains.
+    Fault {
+        instance: InstanceId,
+        kind: FaultLabel,
+    },
 }
 
 impl Action {
@@ -156,6 +175,7 @@ impl Action {
             Action::Convert { .. } => "convert",
             Action::Revert { .. } => "revert",
             Action::Drain { .. } => "drain",
+            Action::Fault { .. } => "fault",
         }
     }
 }
@@ -174,6 +194,9 @@ impl std::fmt::Display for Action {
             Action::Convert { decoder } => write!(f, "Convert({decoder})"),
             Action::Revert { decoder } => write!(f, "Revert({decoder})"),
             Action::Drain { instance } => write!(f, "Drain({instance})"),
+            Action::Fault { instance, kind } => {
+                write!(f, "Fault({instance}, {})", kind.label())
+            }
         }
     }
 }
@@ -202,10 +225,13 @@ pub enum RejectReason {
     /// A second routing action for a request that was already consumed in
     /// this dispatch.
     DuplicateRoute,
+    /// A policy emitted an engine-originated audit verb
+    /// ([`Action::Fault`]).
+    EngineOnly,
 }
 
 impl RejectReason {
-    pub const ALL: [RejectReason; 9] = [
+    pub const ALL: [RejectReason; 10] = [
         RejectReason::UnknownInstance,
         RejectReason::UnknownRequest,
         RejectReason::WrongRole,
@@ -215,6 +241,7 @@ impl RejectReason {
         RejectReason::AlreadyDraining,
         RejectReason::Busy,
         RejectReason::DuplicateRoute,
+        RejectReason::EngineOnly,
     ];
 
     /// Dense index for counter arrays.
@@ -229,6 +256,7 @@ impl RejectReason {
             RejectReason::AlreadyDraining => 6,
             RejectReason::Busy => 7,
             RejectReason::DuplicateRoute => 8,
+            RejectReason::EngineOnly => 9,
         }
     }
 
@@ -243,6 +271,7 @@ impl RejectReason {
             RejectReason::AlreadyDraining => "already-draining",
             RejectReason::Busy => "busy",
             RejectReason::DuplicateRoute => "duplicate-route",
+            RejectReason::EngineOnly => "engine-only",
         }
     }
 }
@@ -382,7 +411,10 @@ impl ControlPlane for StaticCoordinator {
                     target: self.decoders,
                 });
             }
-            Signal::Completion(_) | Signal::InstanceReady(_) | Signal::InstanceDrained(_) => {}
+            Signal::Completion(_)
+            | Signal::InstanceReady(_)
+            | Signal::InstanceDrained(_)
+            | Signal::InstanceFailed { .. } => {}
         }
     }
 }

@@ -38,6 +38,7 @@
 
 use super::audit::{DecisionLog, DecisionRecord};
 use super::event::{Event, InstanceId};
+use super::faults::FaultLabel;
 use super::instance::{ActiveSeq, Instance, LifeState, PrefillJob, Role};
 use super::policy::{Action, ActionOutcome, RejectReason, SignalKind};
 use crate::perfmodel::EngineModel;
@@ -46,7 +47,9 @@ use crate::workload::Request;
 use std::sync::Arc;
 
 /// Version tag of the snapshot encoding; bump on any structural change.
-pub const SNAPSHOT_SCHEMA_VERSION: u64 = 1;
+/// v2: fault-injection state (request retries, instance perf factor,
+/// fault events/actions, transfer attempts, failure ledger, cohorts).
+pub const SNAPSHOT_SCHEMA_VERSION: u64 = 2;
 
 // ------------------------------------------------------------ helpers
 
@@ -99,6 +102,7 @@ pub(crate) fn request_to_json(r: &Request) -> Json {
         .set("arrival", Json::f64_bits(r.arrival))
         .set("input", r.input_tokens)
         .set("output", r.output_tokens)
+        .set("retries", r.retries as usize)
 }
 
 pub(crate) fn request_from_json(j: &Json) -> anyhow::Result<Request> {
@@ -107,6 +111,7 @@ pub(crate) fn request_from_json(j: &Json) -> anyhow::Result<Request> {
         arrival: pf(j, "arrival", "request")?,
         input_tokens: pusize(j, "input", "request")?,
         output_tokens: pusize(j, "output", "request")?,
+        retries: pusize(j, "retries", "request")? as u32,
     })
 }
 
@@ -195,6 +200,13 @@ pub(crate) fn event_to_json(ev: &Event) -> Json {
             .set("kind", "decode-iter-done")
             .set("instance", iid_to_json(*instance))
             .set("epoch", Json::u64_hex(*epoch)),
+        Event::Fault { firing } => Json::obj().set("kind", "fault").set("firing", *firing),
+        Event::FaultKill { instance } => Json::obj()
+            .set("kind", "fault-kill")
+            .set("instance", iid_to_json(*instance)),
+        Event::FaultRestore { instance } => Json::obj()
+            .set("kind", "fault-restore")
+            .set("instance", iid_to_json(*instance)),
     }
 }
 
@@ -218,6 +230,11 @@ pub(crate) fn event_from_json(j: &Json) -> anyhow::Result<Event> {
             instance: iid(j)?,
             epoch: pu64(j, "epoch", "event")?,
         },
+        "fault" => Event::Fault {
+            firing: pusize(j, "firing", "event")?,
+        },
+        "fault-kill" => Event::FaultKill { instance: iid(j)? },
+        "fault-restore" => Event::FaultRestore { instance: iid(j)? },
         other => anyhow::bail!("unknown event kind `{other}`"),
     })
 }
@@ -326,6 +343,8 @@ pub(crate) fn instance_to_json(i: &Instance) -> Json {
         .set("win_t", Json::f64_bits(i.win_t))
         .set("win_t1", Json::f64_bits(i.win_t1))
         .set("win_sum_ctx0", Json::u64_hex(i.win_sum_ctx0))
+        .set("perf_factor", Json::f64_bits(i.perf_factor))
+        .set("degrade_until", Json::f64_bits(i.degrade_until))
 }
 
 pub(crate) fn instance_from_json(
@@ -372,6 +391,8 @@ pub(crate) fn instance_from_json(
     inst.win_t = pf(j, "win_t", what)?;
     inst.win_t1 = pf(j, "win_t1", what)?;
     inst.win_sum_ctx0 = pu64(j, "win_sum_ctx0", what)?;
+    inst.perf_factor = pf(j, "perf_factor", what)?;
+    inst.degrade_until = pf(j, "degrade_until", what)?;
     Ok(inst)
 }
 
@@ -386,7 +407,7 @@ fn reject_from_label(s: &str) -> anyhow::Result<RejectReason> {
 }
 
 fn signal_kind_from_label(s: &str) -> anyhow::Result<SignalKind> {
-    const ALL: [SignalKind; 7] = [
+    const ALL: [SignalKind; 8] = [
         SignalKind::Arrival,
         SignalKind::RetryPrefill,
         SignalKind::PrefillDone,
@@ -394,6 +415,7 @@ fn signal_kind_from_label(s: &str) -> anyhow::Result<SignalKind> {
         SignalKind::Tick,
         SignalKind::InstanceReady,
         SignalKind::InstanceDrained,
+        SignalKind::InstanceFailed,
     ];
     ALL.iter()
         .copied()
@@ -430,6 +452,10 @@ fn action_to_json(a: &Action) -> Json {
         Action::Drain { instance } => Json::obj()
             .set("kind", "drain")
             .set("instance", iid_to_json(*instance)),
+        Action::Fault { instance, kind } => Json::obj()
+            .set("kind", "fault")
+            .set("instance", iid_to_json(*instance))
+            .set("fault", kind.label()),
     }
 }
 
@@ -462,6 +488,11 @@ fn action_from_json(j: &Json) -> anyhow::Result<Action> {
         },
         "drain" => Action::Drain {
             instance: iid_from_json(get(j, "instance", what)?)?,
+        },
+        "fault" => Action::Fault {
+            instance: iid_from_json(get(j, "instance", what)?)?,
+            kind: FaultLabel::from_label(pstr(j, "fault", what)?)
+                .ok_or_else(|| anyhow::anyhow!("unknown fault label"))?,
         },
         other => anyhow::bail!("unknown action kind `{other}`"),
     })
@@ -730,6 +761,9 @@ mod tests {
             Event::PrefillDone { instance: id, req: 42 },
             Event::TransferDone { instance: id, req: 43 },
             Event::DecodeIterDone { instance: id, epoch: u64::MAX },
+            Event::Fault { firing: 5 },
+            Event::FaultKill { instance: id },
+            Event::FaultRestore { instance: id },
         ] {
             let back = event_from_json(&event_to_json(&ev)).unwrap();
             assert_eq!(back, ev);
@@ -747,6 +781,7 @@ mod tests {
             Action::Convert { decoder: id },
             Action::Revert { decoder: id },
             Action::Drain { instance: id },
+            Action::Fault { instance: id, kind: FaultLabel::PreemptKill },
         ];
         for a in actions {
             assert_eq!(action_from_json(&action_to_json(&a)).unwrap(), a);

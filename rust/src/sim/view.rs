@@ -16,7 +16,7 @@
 //!   a role (the slab's per-role live lists), so min-by tie-breaks are
 //!   deterministic and favor the oldest instance.
 
-use super::cluster::{Cluster, ClusterConfig};
+use super::cluster::{Cluster, ClusterConfig, FailureRecord};
 use super::event::InstanceId;
 use super::instance::{Instance, Role};
 
@@ -86,6 +86,19 @@ impl<'a> ClusterView<'a> {
     /// Ids of non-draining instances of a role, spawn order.
     pub fn ids_of(&self, role: Role) -> Vec<InstanceId> {
         self.cluster.ids_of(role)
+    }
+
+    /// Injected-fault ledger (crashes, preemptions, degradations),
+    /// oldest first. Empty unless a `FaultPlan` is armed — policies can
+    /// use it to distinguish failure-induced backpressure from load.
+    pub fn failures(&self) -> &'a [FailureRecord] {
+        &self.cluster.failures
+    }
+
+    /// Iterate running instances currently inside a degradation window
+    /// (stragglers), spawn order across all roles.
+    pub fn degraded(&self) -> impl Iterator<Item = &'a Instance> + 'a {
+        self.cluster.iter().filter(|i| i.is_degraded())
     }
 }
 

@@ -15,6 +15,10 @@ pub struct Request {
     /// True output length in tokens (hidden from the system; revealed
     /// during generation; the predictor estimates it).
     pub output_tokens: usize,
+    /// How many times this request re-entered the gateway after losing
+    /// in-flight work (instance crash, preemption, aborted KVC transfer).
+    /// Always 0 on arrival; bounded by the engine's retry budget.
+    pub retries: u32,
 }
 
 impl Request {
@@ -24,6 +28,7 @@ impl Request {
             arrival,
             input_tokens,
             output_tokens,
+            retries: 0,
         }
     }
 

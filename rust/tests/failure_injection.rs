@@ -2,10 +2,14 @@
 //! never deadlock, and account for everything it drops.
 
 use std::sync::Arc;
+use tokenscale::metrics::DropReason;
 use tokenscale::perfmodel::{catalog, EngineModel};
 use tokenscale::report::runner::RunOverrides;
 use tokenscale::report::{deployment, run_experiment, ExperimentSpec, PolicyKind};
-use tokenscale::sim::{simulate, ClusterConfig, SimConfig, StaticCoordinator};
+use tokenscale::sim::{
+    simulate, ClusterConfig, FaultKind, FaultPlan, FaultSchedule, FaultSpec, Role, SimConfig,
+    StaticCoordinator,
+};
 use tokenscale::trace::{step_trace, Trace};
 use tokenscale::workload::Request;
 
@@ -201,4 +205,311 @@ fn draining_prefiller_finishes_queue() {
         "scale-down dropped requests"
     );
     assert!(res.scale_downs >= 2);
+}
+
+// ---------------------------------------- sim::faults mechanics
+
+/// A run with no fault plan must report an all-zero failure ledger, and
+/// goodput must collapse to plain SLO attainment.
+#[test]
+fn fault_free_run_has_zero_ledger() {
+    let trace = step_trace(6.0, 6.0, 0.0, 0.0, 20.0, 512, 64, 11);
+    let mut coord = StaticCoordinator::new(2, 2);
+    let cfg = SimConfig {
+        initial_prefillers: 2,
+        initial_decoders: 2,
+        ..Default::default()
+    };
+    let slo = cfg.slo;
+    let res = simulate(cfg, cluster_cfg(8), &mut coord, &trace);
+    let r = res.metrics.report(&slo, 0.0);
+    assert_eq!(res.metrics.completions.len(), trace.requests.len());
+    assert_eq!(r.faults_injected, 0);
+    assert_eq!(r.lost_requests, 0);
+    assert_eq!(r.retried_requests, 0);
+    assert_eq!(r.abandoned_requests, 0);
+    assert_eq!(r.transfer_retries, 0);
+    assert_eq!(r.transfer_aborts, 0);
+    assert_eq!(r.recovery_events, 0);
+    assert_eq!(r.wasted_prefill_tokens, 0.0);
+    assert_eq!(
+        r.goodput_attainment.to_bits(),
+        r.overall_attainment.to_bits(),
+        "with nothing abandoned, goodput == attainment"
+    );
+}
+
+/// A decoder crash destroys in-flight decode work; the victims re-enter
+/// the gateway, are re-prefilled (wasted tokens), and — with the static
+/// fleet restoring capacity — everything is eventually served or typed.
+#[test]
+fn decoder_crash_displaces_work_and_requeues() {
+    let trace = step_trace(6.0, 6.0, 0.0, 0.0, 25.0, 512, 256, 9);
+    let mut coord = StaticCoordinator::new(2, 2);
+    let cfg = SimConfig {
+        initial_prefillers: 2,
+        initial_decoders: 2,
+        faults: FaultPlan {
+            seed: 7,
+            entries: vec![FaultSpec {
+                kind: FaultKind::Crash,
+                role: Some(Role::Decoder),
+                instance_index: None,
+                schedule: FaultSchedule::At { t: 8.0 },
+            }],
+        },
+        ..Default::default()
+    };
+    let slo = cfg.slo;
+    let res = simulate(cfg, cluster_cfg(8), &mut coord, &trace);
+    let r = res.metrics.report(&slo, 0.0);
+    assert!(r.faults_injected >= 1, "the crash must land");
+    assert!(
+        r.lost_requests >= 1,
+        "a busy decoder must hold in-flight work at t=8"
+    );
+    assert!(r.retried_requests >= 1, "victims must re-enter the gateway");
+    assert!(
+        r.wasted_prefill_tokens > 0.0,
+        "re-prefilling victims costs tokens"
+    );
+    assert_eq!(
+        res.metrics.completions.len() + res.metrics.abandoned.len() + res.metrics.dropped,
+        trace.requests.len(),
+        "every request must be accounted for"
+    );
+    assert!(
+        !res.metrics.recoveries.is_empty(),
+        "salvaging the victims must record a recovery time"
+    );
+}
+
+/// A mid-run transfer brownout forces timeouts, backoff retries and
+/// re-prefill fallbacks — but once the window closes, everything still
+/// completes.
+#[test]
+fn transfer_brownout_retries_then_recovers() {
+    let trace = step_trace(4.0, 4.0, 0.0, 0.0, 20.0, 512, 64, 23);
+    let mut coord = StaticCoordinator::new(1, 1);
+    let cfg = SimConfig {
+        faults: FaultPlan {
+            seed: 17,
+            entries: vec![FaultSpec {
+                kind: FaultKind::Transfer {
+                    loss_prob: 1.0,
+                    stall_s: 1.0,
+                    max_retries: 1,
+                    duration_s: 6.0,
+                },
+                role: None,
+                instance_index: None,
+                schedule: FaultSchedule::At { t: 5.0 },
+            }],
+        },
+        ..Default::default()
+    };
+    let slo = cfg.slo;
+    let res = simulate(cfg, cluster_cfg(4), &mut coord, &trace);
+    let r = res.metrics.report(&slo, 0.0);
+    assert!(r.transfer_retries >= 1, "lost transfers must be retried");
+    assert!(
+        r.transfer_aborts >= 1,
+        "with loss_prob=1 inside the window, the retry budget must run dry"
+    );
+    assert!(
+        r.wasted_prefill_tokens > 0.0,
+        "aborted transfers fall back to re-prefill"
+    );
+    assert_eq!(
+        res.metrics.completions.len(),
+        trace.requests.len(),
+        "the brownout is transient: everything completes after the window"
+    );
+}
+
+/// A permanent transfer blackout exhausts each request's retry budget:
+/// the gateway must abandon them with a typed reason instead of cycling
+/// forever (the requeue-forever hazard).
+#[test]
+fn retry_budget_exhaustion_abandons_typed() {
+    let trace = step_trace(2.0, 2.0, 0.0, 0.0, 4.0, 256, 32, 5);
+    let mut coord = StaticCoordinator::new(1, 1);
+    let cfg = SimConfig {
+        faults: FaultPlan {
+            seed: 3,
+            entries: vec![FaultSpec {
+                kind: FaultKind::Transfer {
+                    loss_prob: 1.0,
+                    stall_s: 0.5,
+                    max_retries: 0,
+                    duration_s: 10_000.0,
+                },
+                role: None,
+                instance_index: None,
+                schedule: FaultSchedule::At { t: 0.0 },
+            }],
+        },
+        ..Default::default()
+    };
+    let retry_limit = cfg.retry_limit;
+    let slo = cfg.slo;
+    let res = simulate(cfg, cluster_cfg(4), &mut coord, &trace);
+    let r = res.metrics.report(&slo, 0.0);
+    assert_eq!(
+        res.metrics.completions.len(),
+        0,
+        "no transfer can ever succeed"
+    );
+    assert_eq!(
+        res.metrics.abandoned.len(),
+        trace.requests.len(),
+        "every request must be abandoned, not stuck"
+    );
+    for a in &res.metrics.abandoned {
+        assert_eq!(a.reason, DropReason::RetryBudget);
+        assert!(
+            a.retries >= retry_limit,
+            "the budget must actually be consumed (got {})",
+            a.retries
+        );
+    }
+    assert_eq!(r.abandoned_retry_budget, trace.requests.len());
+    assert_eq!(r.retried_requests, trace.requests.len());
+    assert_eq!(
+        r.goodput_attainment, 0.0,
+        "goodput charges the abandoned offered load"
+    );
+}
+
+/// A degraded (straggler) prefiller slows TTFT for the window and then
+/// restores — it never drops work.
+#[test]
+fn degraded_prefiller_slows_then_restores() {
+    let trace = step_trace(4.0, 4.0, 0.0, 0.0, 30.0, 1024, 32, 21);
+    let base_cfg = SimConfig::default();
+    let slo = base_cfg.slo;
+    let mut coord = StaticCoordinator::new(1, 1);
+    let base = simulate(base_cfg, cluster_cfg(4), &mut coord, &trace);
+    let r_base = base.metrics.report(&slo, 0.0);
+
+    let cfg = SimConfig {
+        faults: FaultPlan {
+            seed: 29,
+            entries: vec![FaultSpec {
+                kind: FaultKind::Degrade {
+                    factor: 5.0,
+                    duration_s: 15.0,
+                },
+                role: Some(Role::Prefiller),
+                instance_index: Some(0),
+                schedule: FaultSchedule::At { t: 5.0 },
+            }],
+        },
+        ..Default::default()
+    };
+    let mut coord = StaticCoordinator::new(1, 1);
+    let deg = simulate(cfg, cluster_cfg(4), &mut coord, &trace);
+    let r_deg = deg.metrics.report(&slo, 0.0);
+
+    assert!(r_deg.faults_injected >= 1, "the degrade must land");
+    assert_eq!(
+        deg.metrics.completions.len(),
+        trace.requests.len(),
+        "degradation slows, never drops"
+    );
+    assert!(
+        r_deg.ttft.mean > r_base.ttft.mean,
+        "a 5x-slow prefiller must hurt TTFT ({} <= {})",
+        r_deg.ttft.mean,
+        r_base.ttft.mean
+    );
+}
+
+/// When the decode pool collapses for good, requests parked awaiting
+/// decode must drain through the starvation bound as typed drops — the
+/// simulation must terminate, not spin.
+#[test]
+fn decode_pool_collapse_starves_typed() {
+    use tokenscale::sim::{Action, ClusterView, ControlPlane, Signal};
+
+    /// Routes normally but retires the whole decode pool at t >= 5 and
+    /// never brings it back.
+    struct KillDecode;
+    impl ControlPlane for KillDecode {
+        fn name(&self) -> &str {
+            "kill-decode"
+        }
+        fn on_signal(
+            &mut self,
+            now: f64,
+            signal: Signal<'_>,
+            view: &ClusterView<'_>,
+            actions: &mut Vec<Action>,
+        ) {
+            match signal {
+                Signal::Arrival(req) | Signal::RetryPrefill(req) => {
+                    if let Some(i) = view
+                        .running_of(Role::Prefiller)
+                        .min_by_key(|i| i.inflight_prefill_tokens())
+                    {
+                        actions.push(Action::RoutePrefill {
+                            req: req.id,
+                            target: i.id,
+                        });
+                    }
+                }
+                Signal::PrefillDone(req) => {
+                    if let Some(i) = view
+                        .running_of(Role::Decoder)
+                        .filter(|i| i.can_admit(req.total_tokens()))
+                        .min_by_key(|i| i.decode_load())
+                    {
+                        actions.push(Action::DispatchDecode {
+                            req: req.id,
+                            decoder: i.id,
+                            bucket: 0,
+                        });
+                    }
+                }
+                Signal::Tick => {
+                    actions.push(Action::SetFleet {
+                        role: Role::Prefiller,
+                        target: 1,
+                    });
+                    actions.push(Action::SetFleet {
+                        role: Role::Decoder,
+                        target: if now >= 5.0 { 0 } else { 1 },
+                    });
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let trace = step_trace(4.0, 4.0, 0.0, 0.0, 15.0, 256, 64, 31);
+    let mut coord = KillDecode;
+    let cfg = SimConfig {
+        starvation_age_s: 3.0,
+        ..Default::default()
+    };
+    let slo = cfg.slo;
+    let res = simulate(cfg, cluster_cfg(4), &mut coord, &trace);
+    let r = res.metrics.report(&slo, 0.0);
+    assert!(
+        !res.metrics.completions.is_empty(),
+        "work served before the collapse must complete"
+    );
+    assert!(r.abandoned_starved >= 1, "the starvation bound must fire");
+    assert!(
+        res.metrics
+            .abandoned
+            .iter()
+            .all(|a| a.reason == DropReason::Starved),
+        "collapse drops are starvation, not retry-budget"
+    );
+    assert_eq!(
+        res.metrics.completions.len() + res.metrics.abandoned.len() + res.metrics.dropped,
+        trace.requests.len(),
+        "every request must be accounted for"
+    );
 }

@@ -358,12 +358,26 @@ fn shipped_smoke_suite_parses_and_validates() {
     let suite = Suite::from_path(std::path::Path::new(path)).expect("smoke suite loads");
     assert_eq!(suite.name, "smoke");
     suite.validate().expect("smoke suite validates");
-    for want in ["compare-mixed", "diurnal-conv", "flash-crowd", "splice-replay"] {
+    for want in [
+        "compare-mixed",
+        "diurnal-conv",
+        "flash-crowd",
+        "chaos-smoke",
+        "splice-replay",
+    ] {
         assert!(
             suite.scenarios.iter().any(|s| s.name == want),
             "smoke suite lacks {want}"
         );
     }
+    // The chaos cell carries an armed, seeded fault plan.
+    let chaos = suite
+        .scenarios
+        .iter()
+        .find(|s| s.name == "chaos-smoke")
+        .unwrap();
+    assert!(!chaos.faults.is_empty(), "chaos-smoke must arm faults");
+    assert_eq!(chaos.faults.seed, 616);
     // The replay scenario's transform chain has the Window splice.
     let splice = suite
         .scenarios
@@ -375,6 +389,29 @@ fn shipped_smoke_suite_parses_and_validates() {
         .transforms
         .iter()
         .any(|t| matches!(t, TransformStep::Window { .. })));
+}
+
+#[test]
+fn shipped_chaos_suite_parses_and_validates() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/chaos.toml");
+    let suite = Suite::from_path(std::path::Path::new(path)).expect("chaos suite loads");
+    assert_eq!(suite.name, "chaos");
+    suite.validate().expect("chaos suite validates");
+    for want in [
+        "crash-flash-crowd",
+        "rolling-preempt",
+        "straggler-prefill",
+        "transfer-brownout",
+    ] {
+        let sc = suite
+            .scenarios
+            .iter()
+            .find(|s| s.name == want)
+            .unwrap_or_else(|| panic!("chaos suite lacks {want}"));
+        assert!(!sc.faults.is_empty(), "{want} must arm a fault plan");
+        // Goodput-under-churn compares the full baseline panel.
+        assert_eq!(sc.policies.len(), 4, "{want} must run all four baselines");
+    }
 }
 
 #[test]

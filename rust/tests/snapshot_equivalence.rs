@@ -18,6 +18,11 @@
 //! 4. **Stream resume (property)** — any generator+transform stack saved
 //!    mid-stream and resumed by rebuild+fast-forward yields the exact
 //!    arrival suffix, bit for bit.
+//! 5. **Faults** — a run with an armed `FaultPlan` checkpointed
+//!    mid-outage (degraded instances, a pending preemption deadline, a
+//!    transfer brownout in flight) resumes bit-identically, and any
+//!    random plan replayed from the same seed reproduces the SloReport
+//!    and the failure ledger byte for byte (property).
 
 use tokenscale::metrics::SloReport;
 use tokenscale::report::{
@@ -25,7 +30,8 @@ use tokenscale::report::{
     ExperimentResult, PolicyKind, Scenario, Suite, TransformStep, Workload, WorkloadSpec,
 };
 use tokenscale::sim::{
-    simulate_source, Action, ClusterView, ControlPlane, Signal, SimSnapshot,
+    simulate_source, Action, ClusterView, ControlPlane, FaultKind, FaultPlan, FaultSchedule,
+    FaultSpec, Role, Signal, SimSnapshot,
 };
 use tokenscale::trace::{fast_forward, BurstWindow, TraceFamily, TraceProfile};
 use tokenscale::util::json::Json;
@@ -55,7 +61,33 @@ fn report_bits(r: &SloReport) -> Vec<u64> {
     push_summary(&r.tpot);
     push_summary(&r.prefill_wait);
     push_summary(&r.queue_wait);
+    // The failure ledger is part of the bit-equality contract too.
+    out.extend([
+        r.goodput_attainment.to_bits(),
+        r.faults_injected as u64,
+        r.lost_requests as u64,
+        r.retried_requests as u64,
+        r.abandoned_requests as u64,
+        r.abandoned_retry_budget as u64,
+        r.abandoned_starved as u64,
+        r.wasted_prefill_tokens.to_bits(),
+        r.transfer_retries as u64,
+        r.transfer_aborts as u64,
+        r.recovery_events as u64,
+        r.recovery_mean_s.to_bits(),
+        r.recovery_max_s.to_bits(),
+    ]);
     out
+}
+
+/// The raw drop ledger, bit-exact (id, arrival, retries, reason).
+fn abandoned_bits(res: &ExperimentResult) -> Vec<(u64, u64, u32, &'static str)> {
+    res.sim
+        .metrics
+        .abandoned
+        .iter()
+        .map(|a| (a.id, a.arrival.to_bits(), a.retries, a.reason.label()))
+        .collect()
 }
 
 fn completion_bits(res: &ExperimentResult) -> Vec<(u64, u64, u64, u64, u64)> {
@@ -96,6 +128,11 @@ fn assert_identical(label: &str, a: &ExperimentResult, b: &ExperimentResult) {
         a.sim.metrics.gpu_seconds.to_bits(),
         b.sim.metrics.gpu_seconds.to_bits(),
         "{label}: GPU-seconds must be bit-identical"
+    );
+    assert_eq!(
+        abandoned_bits(a),
+        abandoned_bits(b),
+        "{label}: abandoned-request ledgers must be identical"
     );
     assert!(a.report.n > 0, "{label}: scenario must complete requests");
 }
@@ -476,5 +513,178 @@ fn any_source_stack_resumes_to_the_identical_suffix() {
         // Guard against vacuous cases: with K capped well below the
         // stream length at these rates, most cases must have a suffix.
         let _ = remaining;
+    });
+}
+
+// ----------------------- 5. faults: mid-outage resume + replay (prop)
+
+/// A chaos plan whose every mechanism is mid-flight at the checkpoint
+/// time (t = 40): a crash already fired, a preemption warned but not yet
+/// killed, a degrade window and a transfer brownout both spanning t = 40.
+fn chaos_scenario() -> Scenario {
+    let plan = FaultPlan {
+        seed: 616,
+        entries: vec![
+            FaultSpec {
+                kind: FaultKind::Crash,
+                role: Some(Role::Decoder),
+                instance_index: None,
+                schedule: FaultSchedule::At { t: 25.0 },
+            },
+            // Warned at 35, force-killed at 47: the kill event is
+            // pending in the queue at checkpoint time.
+            FaultSpec {
+                kind: FaultKind::Preempt { warning_s: 12.0 },
+                role: Some(Role::Decoder),
+                instance_index: None,
+                schedule: FaultSchedule::At { t: 35.0 },
+            },
+            // Degraded 30–60: the perf_factor must survive the snapshot.
+            FaultSpec {
+                kind: FaultKind::Degrade {
+                    factor: 2.5,
+                    duration_s: 30.0,
+                },
+                role: Some(Role::Prefiller),
+                instance_index: Some(0),
+                schedule: FaultSchedule::At { t: 30.0 },
+            },
+            // Brownout 30–55: doomed transfers and their backoff clocks
+            // are in flight at checkpoint time.
+            FaultSpec {
+                kind: FaultKind::Transfer {
+                    loss_prob: 0.4,
+                    stall_s: 1.5,
+                    max_retries: 2,
+                    duration_s: 25.0,
+                },
+                role: None,
+                instance_index: None,
+                schedule: FaultSchedule::At { t: 30.0 },
+            },
+        ],
+    };
+    Scenario::new(
+        "chaos-resume",
+        "small-a100",
+        WorkloadSpec::Synthetic {
+            family: TraceFamily::Mixed,
+            rps: 10.0,
+            duration_s: 90.0,
+            seed: 515,
+        },
+    )
+    .all_baselines()
+    .with_faults(plan)
+}
+
+/// A checkpoint taken in the middle of an outage — degraded instances,
+/// a pending preemption deadline, a live transfer brownout, and the
+/// failure ledger partially filled — must resume bit-identically for
+/// every stock policy. (`report_bits` pins the full ledger, so goodput,
+/// wasted prefill tokens and recovery times are covered.)
+#[test]
+fn chaos_run_resumes_bit_identically_mid_outage() {
+    let scenario = chaos_scenario();
+    // Guard against vacuity: the plan must actually bite.
+    let spec = scenario.experiment_specs().unwrap().remove(0);
+    let cold = run_experiment(&spec);
+    assert!(
+        cold.report.faults_injected >= 4,
+        "chaos plan must fire all four entries (got {})",
+        cold.report.faults_injected
+    );
+    assert!(
+        cold.report.lost_requests > 0
+            || cold.report.retried_requests > 0
+            || cold.report.transfer_retries > 0,
+        "chaos plan must displace at least some work"
+    );
+    scenario_resumes_bit_identically(&scenario, 40.0);
+}
+
+/// Any fault plan replayed from the same seed yields a byte-identical
+/// SloReport, completion list and abandoned ledger — the determinism
+/// contract `docs/faults.md` promises, across the policy registry.
+#[test]
+fn any_fault_plan_replays_bit_identically() {
+    let policies = [
+        "tokenscale",
+        "aibrix",
+        "blitzscale",
+        "distserve",
+        "b+p",
+        "deflect",
+        "static",
+    ];
+    check(Config::named("fault-plan-replay").cases(12), |rng| {
+        let duration = rng.range_f64(40.0, 70.0);
+        let mut entries = Vec::new();
+        for _ in 0..1 + rng.below(3) {
+            let kind = match rng.below(4) {
+                0 => FaultKind::Crash,
+                1 => FaultKind::Preempt {
+                    warning_s: rng.range_f64(2.0, 15.0),
+                },
+                2 => FaultKind::Degrade {
+                    factor: rng.range_f64(1.5, 4.0),
+                    duration_s: rng.range_f64(10.0, 40.0),
+                },
+                _ => FaultKind::Transfer {
+                    loss_prob: rng.range_f64(0.1, 0.6),
+                    stall_s: rng.range_f64(0.5, 3.0),
+                    max_retries: 1 + rng.below(3) as u32,
+                    duration_s: rng.range_f64(10.0, 40.0),
+                },
+            };
+            let role = match rng.below(3) {
+                0 => None,
+                1 => Some(Role::Prefiller),
+                _ => Some(Role::Decoder),
+            };
+            let schedule = match rng.below(3) {
+                0 => FaultSchedule::At {
+                    t: rng.range_f64(5.0, duration * 0.8),
+                },
+                1 => FaultSchedule::Every {
+                    period_s: rng.range_f64(20.0, 40.0),
+                    from_s: rng.range_f64(5.0, 20.0),
+                    until_s: duration,
+                },
+                _ => FaultSchedule::Poisson {
+                    rate_per_s: rng.range_f64(0.01, 0.05),
+                    from_s: 5.0,
+                    until_s: duration,
+                    count: 2,
+                },
+            };
+            entries.push(FaultSpec {
+                kind,
+                role,
+                instance_index: None,
+                schedule,
+            });
+        }
+        let plan = FaultPlan {
+            seed: rng.next_u64(),
+            entries,
+        };
+        plan.validate().expect("generated plan is valid");
+        let policy = policies[rng.below(policies.len() as u64) as usize];
+        let sc = Scenario::new(
+            "fault-replay",
+            "small-a100",
+            WorkloadSpec::Synthetic {
+                family: TraceFamily::Mixed,
+                rps: rng.range_f64(4.0, 9.0),
+                duration_s: duration,
+                seed: rng.next_u64(),
+            },
+        )
+        .policy(policy)
+        .with_faults(plan);
+        let spec = sc.experiment_specs().expect("specs compile").remove(0);
+        let (a, b) = (run_experiment(&spec), run_experiment(&spec));
+        assert_identical(&format!("replay/{policy}"), &a, &b);
     });
 }
