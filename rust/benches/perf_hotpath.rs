@@ -9,7 +9,16 @@
 //!
 //! Emits `BENCH_hotpath.json` (events/s, sim-requests/s per wall
 //! second, speedup vs the in-binary single-step baseline) so the perf
-//! trajectory is tracked across PRs.
+//! trajectory is tracked across PRs. How to read the file, and the
+//! scheduler/metrics machinery it measures: docs/performance.md.
+//!
+//! Flags (after `cargo bench --bench perf_hotpath --`):
+//!
+//! - `--smoke` — CI scale: shorter simulated trace, fewer repetitions.
+//! - `--baseline FILE` — gate against a previously committed
+//!   `BENCH_hotpath.json`: exit nonzero when `sim_e2e.events_per_s`
+//!   drops more than 30%. Baselines without `"measured": true` (the
+//!   bootstrap documented-bounds artifact) skip the gate.
 
 use std::sync::Arc;
 use tokenscale::coordinator::{router, RouterConfig, TokenScale, TokenScaleConfig};
@@ -22,8 +31,21 @@ use tokenscale::util::json::Json;
 use tokenscale::workload::{Request, SloPolicy};
 
 fn main() {
-    let timer = BenchTimer::new(2, 8);
-    let mut out = Json::obj();
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    // The output file doubles as the committed baseline in CI, so read
+    // the reference before this run overwrites it.
+    let baseline = argv
+        .iter()
+        .position(|a| a == "--baseline")
+        .and_then(|i| argv.get(i + 1))
+        .map(|p| (p.clone(), std::fs::read_to_string(p)));
+
+    let timer = if smoke { BenchTimer::new(1, 3) } else { BenchTimer::new(2, 8) };
+    let duration_s = if smoke { 30.0 } else { 120.0 };
+    let mut out = Json::obj()
+        .set("measured", true)
+        .set("mode", if smoke { "smoke" } else { "full" });
 
     // 1. End-to-end simulation throughput (the Fig. 9 inner loop), in the
     //    default coalesced mode and in the single-step reference mode the
@@ -34,7 +56,7 @@ fn main() {
         WorkloadSpec::Synthetic {
             family: TraceFamily::Mixed,
             rps: 22.0,
-            duration_s: 120.0,
+            duration_s,
             seed: 5,
         },
     )
@@ -54,7 +76,10 @@ fn main() {
         let r = run_experiment(&fast_spec);
         std::hint::black_box(r.report.n);
     });
-    println!("{}", fast.line("sim_e2e_tokenscale_120s_22rps"));
+    println!(
+        "{}",
+        fast.line(&format!("sim_e2e_tokenscale_{duration_s:.0}s_22rps"))
+    );
     println!(
         "  -> {:.0} simulated requests/s of wall time, {:.2}M events/s ({} events)",
         n_req as f64 / fast.p50_s,
@@ -62,7 +87,7 @@ fn main() {
         fast_events
     );
 
-    let slow = BenchTimer::new(1, 3).run(|| {
+    let slow = if smoke { BenchTimer::new(1, 2) } else { BenchTimer::new(1, 3) }.run(|| {
         let r = run_experiment(&slow_spec);
         std::hint::black_box(r.report.n);
     });
@@ -98,6 +123,35 @@ fn main() {
     out = out.set(
         "event_reduction",
         slow_events as f64 / (fast_events as f64).max(1.0),
+    );
+
+    // 1b. The same cell in streaming-sketch metrics mode
+    //     (`retain_completions = false`): O(1) recorder memory, exact
+    //     counters, log-bucket percentiles (docs/performance.md).
+    let mut sketch_sc = scenario.clone();
+    sketch_sc.overrides.retain_completions = false;
+    let sketch_spec = sketch_sc
+        .experiment_specs()
+        .expect("hotpath scenario")
+        .remove(0);
+    let sketch_events = run_experiment(&sketch_spec).sim.events_processed;
+    let sketch = timer.run(|| {
+        let r = run_experiment(&sketch_spec);
+        std::hint::black_box(r.report.n);
+    });
+    println!("{}", sketch.line("sim_e2e_sketch_metrics"));
+    println!(
+        "  -> {:.2}M events/s ({} events, retain_completions=false)",
+        sketch_events as f64 / sketch.p50_s / 1e6,
+        sketch_events
+    );
+    out = out.set(
+        "sim_e2e_sketch",
+        Json::obj()
+            .set("p50_s", sketch.p50_s)
+            .set("mean_s", sketch.mean_s)
+            .set("events", sketch_events)
+            .set("events_per_s", sketch_events as f64 / sketch.p50_s),
     );
 
     // 2. Router decision latency (Alg. 1) on a 16-instance cluster.
@@ -195,4 +249,59 @@ fn main() {
     let path = "BENCH_hotpath.json";
     std::fs::write(path, out.to_string()).expect("write BENCH_hotpath.json");
     println!("\nwrote {path}");
+
+    if let Some((base_path, read)) = baseline {
+        if !gate_events_per_s(&out, &base_path, read) {
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Gate the fresh `sim_e2e.events_per_s` against a previously committed
+/// `BENCH_hotpath.json`: fail (false) on a >30% drop. Baselines without
+/// `"measured": true` — the bootstrap artifact documents expected bounds
+/// from an environment that could not run the bench — and unreadable or
+/// incomplete files skip the gate rather than fail it.
+fn gate_events_per_s(out: &Json, path: &str, read: std::io::Result<String>) -> bool {
+    let text = match read {
+        Ok(t) => t,
+        Err(e) => {
+            println!("perf gate: cannot read baseline {path}: {e} — skipped");
+            return true;
+        }
+    };
+    let base = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            println!("perf gate: baseline {path} does not parse: {e} — skipped");
+            return true;
+        }
+    };
+    if base.get("measured").and_then(Json::as_bool) != Some(true) {
+        println!("perf gate: baseline {path} is not a measured run (bootstrap bounds artifact) — skipped");
+        return true;
+    }
+    let (Some(was), Some(now)) = (
+        base.get_path(&["sim_e2e", "events_per_s"]).and_then(Json::as_f64),
+        out.get_path(&["sim_e2e", "events_per_s"]).and_then(Json::as_f64),
+    ) else {
+        println!("perf gate: baseline {path} lacks sim_e2e.events_per_s — skipped");
+        return true;
+    };
+    if base.get("mode").and_then(Json::as_str) != out.get("mode").and_then(Json::as_str) {
+        println!("perf gate: note — baseline and current run use different scales (smoke vs full)");
+    }
+    let ratio = now / was;
+    if ratio < 0.7 {
+        println!(
+            "perf gate FAILED: {now:.0} events/s is {:.0}% of the {was:.0} events/s baseline (floor 70%)",
+            ratio * 100.0
+        );
+        return false;
+    }
+    println!(
+        "perf gate: {now:.0} events/s vs baseline {was:.0} ({:+.1}%) — ok",
+        (ratio - 1.0) * 100.0
+    );
+    true
 }

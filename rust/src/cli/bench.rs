@@ -5,7 +5,10 @@
 //! - `bench run <suite>` runs every scenario × policy cell on the shared
 //!   thread pool, prints the normalized summary table and writes
 //!   `BENCH_<suite>.json`; `--diff BASELINE.json` additionally gates on
-//!   per-scenario SLO-attainment / GPU-hour regressions.
+//!   per-scenario SLO-attainment / GPU-hour regressions;
+//!   `--resume-dir DIR` checkpoints each cell there every
+//!   `--checkpoint-every N` simulated seconds (default 60) and resumes a
+//!   killed sweep bit-identically from the surviving files.
 //! - `bench diff CURRENT BASELINE` compares two normalized reports.
 
 use super::args::Args;
@@ -129,7 +132,19 @@ fn bench_run(args: &Args) -> anyhow::Result<()> {
         suite.name,
         suite.scenarios.len()
     );
-    let run = suite.run()?;
+    let run = match args.get("resume-dir") {
+        Some(dir) => {
+            let every = args.get_f64("checkpoint-every")?.unwrap_or(60.0);
+            eprintln!("[bench] recovery checkpoints in {dir} every {every}s of sim time");
+            suite.run_recoverable(Path::new(dir), every)?
+        }
+        None => {
+            if args.get("checkpoint-every").is_some() {
+                eprintln!("note: --checkpoint-every only applies with --resume-dir");
+            }
+            suite.run()?
+        }
+    };
     print!("{}", run.render_table());
 
     let out = args

@@ -4,6 +4,8 @@
 pub mod exporter;
 pub mod recorder;
 pub mod series;
+pub mod sketch;
 
 pub use recorder::{AbandonedRequest, DropReason, MetricsRecorder, RejectionCounts, SloReport};
 pub use series::TimeSeries;
+pub use sketch::{CompletionSketch, LogHistogram};

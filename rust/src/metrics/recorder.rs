@@ -1,5 +1,16 @@
 //! Completion recording and SLO attainment reporting.
+//!
+//! Two recording modes (docs/performance.md):
+//!
+//! * **Retained** (default): every [`Completion`] is kept in a vector.
+//!   Figure-grade — reports use exact interpolated percentiles — but
+//!   O(trace) memory and the dominant blob in late-run checkpoints.
+//! * **Sketch** ([`MetricsRecorder::enable_sketch`]): completions fold
+//!   into a [`CompletionSketch`] at ingest. Counters, means and maxima
+//!   stay exact; percentiles come from deterministic log-bucket
+//!   histograms (≤2.3% relative error); memory is O(1) in trace length.
 
+use super::sketch::CompletionSketch;
 use crate::sim::policy::RejectReason;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
@@ -164,6 +175,12 @@ pub struct MetricsRecorder {
     /// Per-fault recovery times: (fault time, seconds until every request
     /// salvaged from that fault completed or was abandoned).
     pub recoveries: Vec<(f64, f64)>,
+
+    /// Streaming-aggregation mode: when `Some`, completions and wait
+    /// samples fold into the sketch instead of the vectors above, and
+    /// [`MetricsRecorder::report`] reads the sketch. `None` (the default)
+    /// is the historical retained mode.
+    pub sketch: Option<CompletionSketch>,
 }
 
 /// Aggregated SLO report.
@@ -225,8 +242,43 @@ impl MetricsRecorder {
         Self::default()
     }
 
+    /// Switch to streaming-sketch mode. Must be called before anything is
+    /// recorded: a sketch cannot retroactively absorb retained samples,
+    /// and the warm-up/SLO parameters are baked in at ingest.
+    pub fn enable_sketch(&mut self, slo: SloPolicy, warmup_s: f64) {
+        assert!(
+            self.completions.is_empty()
+                && self.prefill_waits.is_empty()
+                && self.queue_waits.is_empty(),
+            "enable_sketch must run before any sample is recorded"
+        );
+        self.sketch = Some(CompletionSketch::new(slo, warmup_s));
+    }
+
     pub fn record(&mut self, c: Completion) {
-        self.completions.push(c);
+        match &mut self.sketch {
+            Some(sk) => sk.record(&c),
+            None => self.completions.push(c),
+        }
+    }
+
+    /// Record one (arrival, prefill-wait) sample in whichever mode is
+    /// active. Retained mode keeps the pair; sketch mode folds the wait
+    /// into a histogram (post-warmup only).
+    pub fn note_prefill_wait(&mut self, arrival: f64, wait: f64) {
+        match &mut self.sketch {
+            Some(sk) => sk.note_prefill_wait(arrival, wait),
+            None => self.prefill_waits.push((arrival, wait)),
+        }
+    }
+
+    /// Record one (arrival, queue-delay) sample; see
+    /// [`MetricsRecorder::note_prefill_wait`].
+    pub fn note_queue_wait(&mut self, arrival: f64, wait: f64) {
+        match &mut self.sketch {
+            Some(sk) => sk.note_queue_wait(arrival, wait),
+            None => self.queue_waits.push((arrival, wait)),
+        }
     }
 
     /// Accumulate arrival-side statistics (one call per consumed arrival).
@@ -278,7 +330,7 @@ impl MetricsRecorder {
         // The (time, value) pair codec is shared with the engine's
         // ttft_points blob (sim::snapshot) so the format cannot drift.
         let pairs = crate::sim::snapshot::pairs_to_json;
-        Json::obj()
+        let out = Json::obj()
             .set(
                 "completions",
                 Json::Arr(
@@ -331,7 +383,15 @@ impl MetricsRecorder {
                         .collect(),
                 ),
             )
-            .set("recoveries", pairs(&self.recoveries))
+            .set("recoveries", pairs(&self.recoveries));
+        // Optional blob: present exactly when sketch mode is on, so a
+        // resumed run re-enters the same mode (snapshot content wins over
+        // whatever config the resuming process was built with). Absent in
+        // retained-mode snapshots — old checkpoints restore unchanged.
+        match &self.sketch {
+            Some(sk) => out.set("sketch", sk.to_snapshot()),
+            None => out,
+        }
     }
 
     /// Rebuild from [`MetricsRecorder::to_snapshot`] output.
@@ -436,6 +496,10 @@ impl MetricsRecorder {
                 })
                 .collect::<anyhow::Result<Vec<AbandonedRequest>>>()?,
             recoveries: pairs("recoveries")?,
+            sketch: match j.get("sketch") {
+                None => None,
+                Some(s) => Some(CompletionSketch::from_snapshot(s)?),
+            },
         })
     }
 
@@ -475,6 +539,49 @@ impl MetricsRecorder {
             recovery_max_s,
             ..Default::default()
         };
+        if let Some(sk) = &self.sketch {
+            // The sketch filtered by SLO and warm-up at ingest; honoring a
+            // *different* policy here is impossible, so refuse loudly
+            // rather than return silently mis-filtered numbers.
+            assert!(
+                sk.slo == *slo && sk.warmup_s.to_bits() == warmup_s.to_bits(),
+                "sketch-mode report: requested slo/warmup ({slo:?}, {warmup_s}) \
+                 differ from the sketch's ingest parameters ({:?}, {})",
+                sk.slo,
+                sk.warmup_s
+            );
+            let avg_gpus = if self.horizon_s > 0.0 {
+                self.gpu_seconds / self.horizon_s
+            } else {
+                0.0
+            };
+            let rejected_actions = self.rejections.total();
+            let n = sk.n as usize;
+            if n == 0 {
+                return SloReport {
+                    avg_gpus,
+                    rejected_actions,
+                    ..ledger
+                };
+            }
+            // Same divisions as the retained path over the same integer
+            // counts: every non-percentile field agrees bit for bit.
+            let offered = n + abandoned_requests;
+            return SloReport {
+                n,
+                ttft_attainment: sk.ttft_ok as f64 / n as f64,
+                tpot_attainment: sk.tpot_ok as f64 / n as f64,
+                overall_attainment: sk.both_ok as f64 / n as f64,
+                goodput_attainment: sk.both_ok as f64 / offered as f64,
+                avg_gpus,
+                ttft: sk.ttft.summary(),
+                tpot: sk.tpot.summary(),
+                prefill_wait: sk.prefill_wait.summary(),
+                queue_wait: sk.queue_wait.summary(),
+                rejected_actions,
+                ..ledger
+            };
+        }
         let completions: Vec<&Completion> = self
             .completions
             .iter()
@@ -686,6 +793,107 @@ mod tests {
         // Abandoned requests inside the warmup window don't count.
         let r2 = m.report(&SloPolicy::default(), 2.5);
         assert_eq!(r2.abandoned_requests, 1);
+    }
+
+    #[test]
+    fn sketch_mode_agrees_with_retained_on_exact_fields() {
+        let slo = SloPolicy::default();
+        let warmup = 5.0;
+        let mut retained = MetricsRecorder::new();
+        let mut sketched = MetricsRecorder::new();
+        sketched.enable_sketch(slo, warmup);
+        // Dyadic values: their sums are exact in every addition order, so
+        // the retained mean (summed sorted) and the sketch mean (summed in
+        // record order) agree bit for bit.
+        let cs = [
+            c(0.0, 100, 9.0, 9.0),        // warm-up, excluded from both
+            c(6.0, 100, 0.125, 0.0625),   // ok, ok
+            c(7.0, 100, 0.5, 0.0625),     // ttft bad (short slo 0.25)
+            c(8.0, 4096, 0.125, 0.25),    // tpot bad
+            c(9.0, 100, 0.875, 0.375),    // both bad
+        ];
+        for x in cs {
+            retained.record(x);
+            sketched.record(x);
+        }
+        for m in [&mut retained, &mut sketched] {
+            m.note_prefill_wait(1.0, 0.9); // warm-up, excluded
+            m.note_prefill_wait(6.0, 0.25);
+            m.note_queue_wait(6.0, 0.125);
+            m.horizon_s = 20.0;
+            m.gpu_seconds = 80.0;
+            m.abandoned.push(AbandonedRequest {
+                id: 99,
+                arrival: 7.5,
+                retries: 8,
+                reason: DropReason::RetryBudget,
+            });
+        }
+        let a = retained.report(&slo, warmup);
+        let b = sketched.report(&slo, warmup);
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.ttft_attainment.to_bits(), b.ttft_attainment.to_bits());
+        assert_eq!(a.tpot_attainment.to_bits(), b.tpot_attainment.to_bits());
+        assert_eq!(
+            a.overall_attainment.to_bits(),
+            b.overall_attainment.to_bits()
+        );
+        assert_eq!(
+            a.goodput_attainment.to_bits(),
+            b.goodput_attainment.to_bits()
+        );
+        assert_eq!(a.avg_gpus.to_bits(), b.avg_gpus.to_bits());
+        assert_eq!(a.abandoned_requests, b.abandoned_requests);
+        // Distribution summaries: count, mean and max are exact in sketch
+        // mode; percentiles are quantized (bounded in sketch.rs tests).
+        for (x, y) in [
+            (a.ttft, b.ttft),
+            (a.tpot, b.tpot),
+            (a.prefill_wait, b.prefill_wait),
+            (a.queue_wait, b.queue_wait),
+        ] {
+            assert_eq!(x.count, y.count);
+            assert_eq!(x.mean.to_bits(), y.mean.to_bits());
+            assert_eq!(x.max.to_bits(), y.max.to_bits());
+        }
+        // Sketch mode retains nothing.
+        assert!(sketched.completions.is_empty());
+        assert!(sketched.prefill_waits.is_empty());
+        assert!(sketched.queue_waits.is_empty());
+    }
+
+    #[test]
+    fn sketch_mode_snapshot_round_trips_and_restores_mode() {
+        let mut m = MetricsRecorder::new();
+        m.enable_sketch(SloPolicy::default(), 2.0);
+        m.record(c(3.0, 100, 0.1, 1.0 / 3.0));
+        m.record(c(4.0, 100, 0.7, 0.01));
+        m.note_prefill_wait(3.5, 0.25);
+        m.horizon_s = 10.0;
+        m.gpu_seconds = 40.0;
+        let text = m.to_snapshot().pretty();
+        let back =
+            MetricsRecorder::from_snapshot(&crate::util::json::Json::parse(&text).unwrap())
+                .unwrap();
+        // Mode comes from snapshot content, not the resuming config.
+        assert_eq!(back.sketch, m.sketch);
+        let r1 = m.report(&SloPolicy::default(), 2.0);
+        let r2 = back.report(&SloPolicy::default(), 2.0);
+        assert_eq!(r1.n, r2.n);
+        assert_eq!(r1.ttft.p50.to_bits(), r2.ttft.p50.to_bits());
+        assert_eq!(
+            r1.overall_attainment.to_bits(),
+            r2.overall_attainment.to_bits()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "sketch-mode report")]
+    fn sketch_mode_rejects_mismatched_report_parameters() {
+        let mut m = MetricsRecorder::new();
+        m.enable_sketch(SloPolicy::default(), 2.0);
+        m.record(c(3.0, 100, 0.1, 0.05));
+        let _ = m.report(&SloPolicy::default(), 0.0); // wrong warm-up
     }
 
     #[test]

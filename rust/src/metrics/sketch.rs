@@ -1,0 +1,481 @@
+//! Deterministic streaming metric sketches.
+//!
+//! Retained mode keeps every [`Completion`](crate::workload::Completion)
+//! in a vector — perfect for figures and equivalence tests, but O(trace)
+//! memory and the dominant blob in late-run checkpoints. Sketch mode
+//! (`SimConfig::retain_completions = false`) folds each completion into
+//! a [`CompletionSketch`] instead: exact counters for everything countable
+//! (n, SLO attainment, sums, maxima) and fixed-layout log-bucket
+//! histograms ([`LogHistogram`]) for the latency percentiles. Memory and
+//! checkpoint size become O(1) in trace length.
+//!
+//! **Determinism contract.** Nothing here depends on insertion order
+//! beyond what exact arithmetic already does: counters are integer or
+//! monotone-max updates, and histogram insertion touches a single bucket
+//! computed from the value's bit pattern. Two runs that record the same
+//! multiset of completions produce byte-identical sketches, and the
+//! serialized form stores floats as bit patterns through the same
+//! `f64_bits` codec the checkpoint layer uses everywhere else.
+//!
+//! **Percentile error bounds.** A [`LogHistogram`] bucket spans one
+//! 1/32nd of a power-of-two decade (top 5 mantissa bits), so any quantile
+//! it reports is off by at most one sub-bucket: a relative error bound of
+//! 2^(1/32) − 1 ≈ 2.2% on the value axis. Counters (attainment, counts,
+//! mean via exact sum, max) carry no error at all — only `p50/p90/p99`
+//! are approximate, and `docs/performance.md` spells out the bound.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::workload::{Completion, SloPolicy};
+
+/// Smallest represented magnitude exponent: values in `(0, 2^-20)` fold
+/// into a single underflow bucket reported as `0.0` (sub-microsecond
+/// latencies are far below every SLO and every plot axis).
+const E_MIN: i32 = -20;
+/// Largest finite magnitude exponent tracked before the overflow bucket.
+const E_MAX: i32 = 20;
+/// Sub-buckets per power-of-two decade (top 5 mantissa bits).
+const SUBS: usize = 32;
+/// Decades in `[E_MIN, E_MAX)`.
+const DECADES: usize = (E_MAX - E_MIN) as usize;
+/// Fixed bucket count: underflow + decades*subs + overflow.
+const NBUCKETS: usize = 2 + DECADES * SUBS;
+
+/// Fixed-layout base-2 log-bucket histogram over non-negative `f64`s.
+///
+/// Layout (never resizes, so serialized sketches are schema-stable):
+/// bucket 0 holds `[0, 2^-20)` (reported as 0.0), buckets `1..=DECADES*32`
+/// split each power-of-two decade in `[2^-20, 2^20)` into 32 equal-ratio
+/// sub-buckets, and the last bucket holds `[2^20, inf)` (reported as the
+/// exact observed maximum). Exact count/sum/max ride alongside, so mean
+/// and max are error-free and only interior percentiles are quantized.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LogHistogram {
+    /// Sparse (bucket index, count) pairs, kept sorted by index.
+    counts: Vec<(u32, u64)>,
+    pub count: u64,
+    pub sum: f64,
+    pub max: f64,
+}
+
+/// Bucket index for a finite non-negative value.
+fn bucket_of(v: f64) -> u32 {
+    debug_assert!(v.is_finite() && v >= 0.0);
+    let bits = v.to_bits();
+    // Unbiased exponent; subnormals and zero land below E_MIN anyway.
+    let exp = ((bits >> 52) & 0x7FF) as i32 - 1023;
+    if v == 0.0 || exp < E_MIN {
+        return 0;
+    }
+    if exp >= E_MAX {
+        return (NBUCKETS - 1) as u32;
+    }
+    let decade = (exp - E_MIN) as u32;
+    let sub = ((bits >> 47) & 0x1F) as u32;
+    1 + decade * SUBS as u32 + sub
+}
+
+/// Deterministic representative for a bucket: the midpoint of the
+/// sub-bucket, constructed from bits (no transcendental math, so every
+/// platform produces the identical f64).
+fn representative(bucket: u32, observed_max: f64) -> f64 {
+    if bucket == 0 {
+        return 0.0;
+    }
+    if bucket as usize == NBUCKETS - 1 {
+        return observed_max;
+    }
+    let b = bucket - 1;
+    let decade = (b / SUBS as u32) as i32 + E_MIN;
+    let sub = (b % SUBS as u32) as u64;
+    // Exponent field biased back; mantissa = sub-bucket midpoint (the top
+    // 5 bits plus half a step in the 6th bit).
+    let bits = (((decade + 1023) as u64) << 52) | (sub << 47) | (1u64 << 46);
+    f64::from_bits(bits)
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        debug_assert!(v.is_finite() && v >= 0.0, "histogram value {v}");
+        let b = bucket_of(v.max(0.0));
+        match self.counts.binary_search_by_key(&b, |(idx, _)| *idx) {
+            Ok(i) => self.counts[i].1 += 1,
+            Err(i) => self.counts.insert(i, (b, 1)),
+        }
+        self.count += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Nearest-rank quantile over bucket representatives, mirroring
+    /// `percentile_sorted`'s index convention (`pos = q/100 * (n-1)`,
+    /// truncated to a rank instead of interpolated — interpolation
+    /// between two quantized representatives would only manufacture
+    /// false precision).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 100.0);
+        let rank = (q / 100.0 * (self.count - 1) as f64).floor() as u64;
+        let mut seen = 0u64;
+        for &(b, n) in &self.counts {
+            seen += n;
+            if rank < seen {
+                return representative(b, self.max);
+            }
+        }
+        // Unreachable when counters are consistent; fall back to max.
+        self.max
+    }
+
+    /// A [`Summary`] shaped like `Summary::of` over the retained values:
+    /// count/mean/max exact, percentiles quantized per the module bound.
+    pub fn summary(&self) -> Summary {
+        if self.count == 0 {
+            return Summary::default();
+        }
+        Summary {
+            count: self.count as usize,
+            mean: self.mean(),
+            p50: self.quantile(50.0),
+            p90: self.quantile(90.0),
+            p99: self.quantile(99.0),
+            max: self.max,
+        }
+    }
+
+    /// Bit-exact serialization (sparse bucket list).
+    pub fn to_snapshot(&self) -> Json {
+        Json::obj()
+            .set(
+                "buckets",
+                Json::Arr(
+                    self.counts
+                        .iter()
+                        .map(|(b, n)| {
+                            Json::obj().set("b", *b as usize).set("n", Json::u64_hex(*n))
+                        })
+                        .collect(),
+                ),
+            )
+            .set("count", Json::u64_hex(self.count))
+            .set("sum", Json::f64_bits(self.sum))
+            .set("max", Json::f64_bits(self.max))
+    }
+
+    /// Rebuild from [`LogHistogram::to_snapshot`] output.
+    pub fn from_snapshot(j: &Json) -> anyhow::Result<LogHistogram> {
+        let what = "histogram snapshot";
+        let mut counts = Vec::new();
+        let arr = j
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("{what}: missing `buckets` array"))?;
+        for e in arr {
+            let b = e
+                .get("b")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("{what}: bucket lacks `b`"))?;
+            anyhow::ensure!(b < NBUCKETS, "{what}: bucket index {b} out of range");
+            let n = e
+                .get("n")
+                .and_then(Json::as_u64_hex)
+                .ok_or_else(|| anyhow::anyhow!("{what}: bucket lacks `n`"))?;
+            counts.push((b as u32, n));
+        }
+        anyhow::ensure!(
+            counts.windows(2).all(|w| w[0].0 < w[1].0),
+            "{what}: bucket list not strictly sorted"
+        );
+        let total: u64 = counts.iter().map(|(_, n)| *n).sum();
+        let count = j
+            .get("count")
+            .and_then(Json::as_u64_hex)
+            .ok_or_else(|| anyhow::anyhow!("{what}: missing `count`"))?;
+        anyhow::ensure!(total == count, "{what}: bucket counts disagree with total");
+        let bits = |key: &str| -> anyhow::Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64_bits)
+                .ok_or_else(|| anyhow::anyhow!("{what}: `{key}` is not a bit-exact f64"))
+        };
+        Ok(LogHistogram {
+            counts,
+            count,
+            sum: bits("sum")?,
+            max: bits("max")?,
+        })
+    }
+}
+
+/// Streaming replacement for the retained completions/waits vectors:
+/// exact counters for attainment and the failure math, histograms for
+/// the latency distributions. The SLO policy and warm-up cutoff are
+/// baked in at ingest (a stream can't be re-filtered after the fact).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompletionSketch {
+    /// SLO policy attainment was evaluated under at ingest.
+    pub slo: SloPolicy,
+    /// Completions (by arrival time) before this were not aggregated.
+    pub warmup_s: f64,
+    /// Post-warmup completions folded in.
+    pub n: u64,
+    pub ttft_ok: u64,
+    pub tpot_ok: u64,
+    pub both_ok: u64,
+    pub ttft: LogHistogram,
+    /// TPOT over completions with more than one output token (mirrors
+    /// the retained report's filter).
+    pub tpot: LogHistogram,
+    pub prefill_wait: LogHistogram,
+    pub queue_wait: LogHistogram,
+}
+
+impl CompletionSketch {
+    pub fn new(slo: SloPolicy, warmup_s: f64) -> CompletionSketch {
+        CompletionSketch {
+            slo,
+            warmup_s,
+            n: 0,
+            ttft_ok: 0,
+            tpot_ok: 0,
+            both_ok: 0,
+            ttft: LogHistogram::new(),
+            tpot: LogHistogram::new(),
+            prefill_wait: LogHistogram::new(),
+            queue_wait: LogHistogram::new(),
+        }
+    }
+
+    /// Fold one completion in (warm-up filtering applied here).
+    pub fn record(&mut self, c: &Completion) {
+        if c.arrival < self.warmup_s {
+            return;
+        }
+        self.n += 1;
+        let slo = self.slo;
+        self.ttft_ok += u64::from(c.ttft_ok(&slo));
+        self.tpot_ok += u64::from(c.tpot_ok(&slo));
+        self.both_ok += u64::from(c.slo_ok(&slo));
+        self.ttft.record(c.ttft);
+        if c.output_tokens > 1 {
+            self.tpot.record(c.tpot);
+        }
+    }
+
+    pub fn note_prefill_wait(&mut self, arrival: f64, wait: f64) {
+        if arrival >= self.warmup_s {
+            self.prefill_wait.record(wait);
+        }
+    }
+
+    pub fn note_queue_wait(&mut self, arrival: f64, wait: f64) {
+        if arrival >= self.warmup_s {
+            self.queue_wait.record(wait);
+        }
+    }
+
+    /// Bit-exact serialization for checkpoints; O(1) in trace length.
+    pub fn to_snapshot(&self) -> Json {
+        Json::obj()
+            .set("ttft_short_s", Json::f64_bits(self.slo.ttft_short_s))
+            .set("ttft_medium_s", Json::f64_bits(self.slo.ttft_medium_s))
+            .set("ttft_long_s", Json::f64_bits(self.slo.ttft_long_s))
+            .set("tpot_s", Json::f64_bits(self.slo.tpot_s))
+            .set("warmup_s", Json::f64_bits(self.warmup_s))
+            .set("n", Json::u64_hex(self.n))
+            .set("ttft_ok", Json::u64_hex(self.ttft_ok))
+            .set("tpot_ok", Json::u64_hex(self.tpot_ok))
+            .set("both_ok", Json::u64_hex(self.both_ok))
+            .set("ttft", self.ttft.to_snapshot())
+            .set("tpot", self.tpot.to_snapshot())
+            .set("prefill_wait", self.prefill_wait.to_snapshot())
+            .set("queue_wait", self.queue_wait.to_snapshot())
+    }
+
+    /// Rebuild from [`CompletionSketch::to_snapshot`] output.
+    pub fn from_snapshot(j: &Json) -> anyhow::Result<CompletionSketch> {
+        let what = "completion sketch snapshot";
+        let bits = |key: &str| -> anyhow::Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64_bits)
+                .ok_or_else(|| anyhow::anyhow!("{what}: `{key}` is not a bit-exact f64"))
+        };
+        let hex = |key: &str| -> anyhow::Result<u64> {
+            j.get(key)
+                .and_then(Json::as_u64_hex)
+                .ok_or_else(|| anyhow::anyhow!("{what}: `{key}` is not a u64"))
+        };
+        let hist = |key: &str| -> anyhow::Result<LogHistogram> {
+            LogHistogram::from_snapshot(
+                j.get(key)
+                    .ok_or_else(|| anyhow::anyhow!("{what}: missing `{key}`"))?,
+            )
+        };
+        Ok(CompletionSketch {
+            slo: SloPolicy {
+                ttft_short_s: bits("ttft_short_s")?,
+                ttft_medium_s: bits("ttft_medium_s")?,
+                ttft_long_s: bits("ttft_long_s")?,
+                tpot_s: bits("tpot_s")?,
+            },
+            warmup_s: bits("warmup_s")?,
+            n: hex("n")?,
+            ttft_ok: hex("ttft_ok")?,
+            tpot_ok: hex("tpot_ok")?,
+            both_ok: hex("both_ok")?,
+            ttft: hist("ttft")?,
+            tpot: hist("tpot")?,
+            prefill_wait: hist("prefill_wait")?,
+            queue_wait: hist("queue_wait")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::stats::percentile_sorted;
+
+    #[test]
+    fn buckets_partition_the_axis() {
+        // Zero and subnormal-ish values underflow to bucket 0.
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(1e-9), 0);
+        // Overflow bucket at the top.
+        assert_eq!(bucket_of(2.0e6), (NBUCKETS - 1) as u32);
+        // Monotone non-decreasing across a wide sweep.
+        let mut prev = 0u32;
+        let mut v = 1.0e-7f64;
+        while v < 1.0e7 {
+            let b = bucket_of(v);
+            assert!(b >= prev, "bucket order violated at {v}: {b} < {prev}");
+            prev = b;
+            v *= 1.07;
+        }
+    }
+
+    #[test]
+    fn representative_stays_inside_its_bucket() {
+        let mut v = 2.0e-6f64;
+        while v < 1.0e6 {
+            let b = bucket_of(v);
+            let r = representative(b, f64::INFINITY);
+            assert_eq!(bucket_of(r), b, "rep {r} escaped bucket of {v}");
+            // Within one sub-bucket: relative error <= 2^(1/32) - 1.
+            let rel = (r - v).abs() / v;
+            assert!(rel < 0.023, "rel err {rel} at {v} (rep {r})");
+            v *= 1.013;
+        }
+    }
+
+    #[test]
+    fn exact_fields_match_retained_math() {
+        let mut h = LogHistogram::new();
+        let xs = [0.25, 0.125, 3.0, 0.25, 0.9, 17.5, 0.0];
+        for &x in &xs {
+            h.record(x);
+        }
+        assert_eq!(h.count, xs.len() as u64);
+        assert_eq!(h.max, 17.5);
+        let sum: f64 = xs.iter().sum();
+        assert_eq!(h.sum.to_bits(), sum.to_bits());
+    }
+
+    #[test]
+    fn prop_quantiles_within_bound_of_exact() {
+        prop::check(prop::Config::named("sketch-quantile-bound"), |rng| {
+            let mut h = LogHistogram::new();
+            let n = 50 + rng.range_usize(0, 400);
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                // Latency-shaped values across several decades.
+                let v = 0.001 * (1.0 + rng.f64() * 999.0);
+                xs.push(v);
+                h.record(v);
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [50.0, 90.0, 99.0] {
+                let exact = percentile_sorted(&xs, q);
+                let approx = h.quantile(q);
+                // One sub-bucket of value error plus one rank of
+                // interpolation slack between adjacent samples.
+                let lo_rank = (q / 100.0 * (n - 1) as f64).floor() as usize;
+                let hi_rank = (q / 100.0 * (n - 1) as f64).ceil() as usize;
+                let lo = xs[lo_rank] * 0.97;
+                let hi = xs[hi_rank] * 1.03;
+                assert!(
+                    approx >= lo && approx <= hi,
+                    "q{q}: approx {approx} outside [{lo}, {hi}] (exact {exact})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn insertion_order_does_not_change_the_sketch() {
+        let xs = [0.9, 0.02, 0.02, 14.0, 0.33, 0.9, 1e-30, 5.0e7];
+        let mut a = LogHistogram::new();
+        for &x in &xs {
+            a.record(x);
+        }
+        let mut rev = xs;
+        rev.reverse();
+        let mut b = LogHistogram::new();
+        for &x in &rev {
+            b.record(x);
+        }
+        // Counters and buckets agree exactly; the sums differ only by
+        // addition order, which the engine never varies (one canonical
+        // event order), so compare the canonical parts.
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.count, b.count);
+        assert_eq!(a.max.to_bits(), b.max.to_bits());
+    }
+
+    #[test]
+    fn sketch_snapshot_round_trips_bit_exactly() {
+        let mut s = CompletionSketch::new(SloPolicy::default(), 5.0);
+        let c = |arrival: f64, ttft: f64, tpot: f64, out: usize| Completion {
+            id: 1,
+            arrival,
+            input_tokens: 100,
+            output_tokens: out,
+            ttft,
+            tpot,
+            finish: arrival + 1.0,
+        };
+        s.record(&c(0.0, 9.0, 9.0, 10)); // warm-up: ignored
+        s.record(&c(6.0, 0.1, 0.05, 10));
+        s.record(&c(7.0, 0.5, 0.01, 1)); // single-token: no tpot sample
+        s.note_prefill_wait(2.0, 0.5); // warm-up: ignored
+        s.note_prefill_wait(6.5, 0.25);
+        s.note_queue_wait(6.5, 0.125);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.tpot.count, 1);
+        assert_eq!(s.prefill_wait.count, 1);
+        let text = s.to_snapshot().pretty();
+        let back =
+            CompletionSketch::from_snapshot(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+}

@@ -18,7 +18,7 @@ pub use registry::{
 pub use runner::{
     deployment, prepare_run, run_experiment, run_experiment_resumed, run_experiments,
     simulate_prefix, CheckpointSpec, Deployment, ExperimentResult, ExperimentSpec, PolicyKind,
-    RunOverrides, Workload,
+    RecoverySpec, RunOverrides, Workload,
 };
 pub use scenario::{Scenario, ScenarioError, ScenarioOverrides, TransformStep, WorkloadSpec};
 pub use suite::{

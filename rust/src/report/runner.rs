@@ -110,6 +110,12 @@ pub struct RunOverrides {
     pub decision_log: usize,
     /// Fault-injection plan (empty = no faults; see `sim::faults`).
     pub faults: FaultPlan,
+    /// Keep every completion in memory (historical default, figure-grade
+    /// percentiles). `false` switches the engine's recorder to streaming
+    /// sketches: O(1) memory/checkpoint size in trace length, exact
+    /// counters, percentiles within the log-bucket error bound
+    /// (docs/performance.md).
+    pub retain_completions: bool,
 }
 
 impl Default for RunOverrides {
@@ -126,6 +132,7 @@ impl Default for RunOverrides {
             force_single_step: false,
             decision_log: 0,
             faults: FaultPlan::default(),
+            retain_completions: true,
         }
     }
 }
@@ -171,6 +178,33 @@ impl CheckpointSpec {
             every_s: 0.0,
         }
     }
+}
+
+/// Per-cell crash recovery (`bench run --resume-dir`): the cell rewrites
+/// `path` every `every_s` simulated seconds while it runs, resumes from
+/// the file when it already exists (a killed sweep restarts where it left
+/// off — bit-identical to the uninterrupted run by the checkpoint/resume
+/// determinism gate), and deletes it on successful completion.
+#[derive(Clone, Debug)]
+pub struct RecoverySpec {
+    pub path: std::path::PathBuf,
+    pub every_s: f64,
+}
+
+/// Checkpoint sink that rewrites `path` atomically (write temp file in
+/// the same directory, then rename). A failed write is reported but does
+/// not abort the run — recovery is best-effort, results are not.
+fn recovery_sink(path: std::path::PathBuf) -> Box<dyn FnMut(SimSnapshot)> {
+    Box::new(move |snap: SimSnapshot| {
+        let tmp = path.with_extension("tmp");
+        let write = snap.save(&tmp).and_then(|()| {
+            std::fs::rename(&tmp, &path)
+                .map_err(|e| anyhow::anyhow!("cannot move into {}: {e}", path.display()))
+        });
+        if let Err(e) = write {
+            eprintln!("[recovery] checkpoint write failed: {e:#}");
+        }
+    })
 }
 
 /// Everything a figure needs from one run.
@@ -221,6 +255,10 @@ pub fn prepare_run(
         force_single_step: ov.force_single_step,
         decision_log: ov.decision_log,
         faults: ov.faults.clone(),
+        retain_completions: ov.retain_completions,
+        // The engine-side sketch must filter with the same warm-up the
+        // report will be produced under (the sketch asserts the match).
+        metrics_warmup_s: ov.warmup_s,
         ..Default::default()
     };
     if let Some(s) = ov.sample_interval_s {
@@ -246,10 +284,19 @@ fn run_source(
     source: &mut dyn ArrivalSource,
     workload: &TraceProfile,
     ov: &RunOverrides,
+    recovery: Option<&RecoverySpec>,
 ) -> ExperimentResult {
-    let (sim_cfg, cluster_cfg, mut built) = prepare_run(dep, policy, workload, ov);
+    let (mut sim_cfg, cluster_cfg, mut built) = prepare_run(dep, policy, workload, ov);
     let slo = sim_cfg.slo;
-    let sim = simulate_source(sim_cfg, cluster_cfg, built.plane.as_mut(), source);
+    let sim = match recovery {
+        None => simulate_source(sim_cfg, cluster_cfg, built.plane.as_mut(), source),
+        Some(rs) => {
+            sim_cfg.checkpoint_every_s = rs.every_s;
+            let mut engine = SimEngine::new(sim_cfg, cluster_cfg, built.plane.as_mut(), source);
+            engine.set_checkpoint_sink(recovery_sink(rs.path.clone()));
+            engine.run()
+        }
+    };
     let report = sim.metrics.report(&slo, ov.warmup_s);
     ExperimentResult {
         policy,
@@ -272,6 +319,31 @@ fn run_source(
 /// suite precomputed it, or simulated here (identically) when the cell
 /// runs on its own.
 pub fn run_experiment(spec: &ExperimentSpec) -> ExperimentResult {
+    // Crash recovery: when this cell's checkpoint file survives a killed
+    // sweep, continue from it (same-policy resume, restore_policy=true)
+    // instead of starting over. The mechanics driver is the warm-start
+    // policy when one configured the captured fleet, the cell policy
+    // otherwise — the same derivation the interrupted run used.
+    if let Some(rs) = &spec.recovery {
+        if rs.path.exists() {
+            let t0 = Instant::now();
+            let snap = SimSnapshot::load(&rs.path).unwrap_or_else(|e| {
+                panic!("recovery checkpoint for `{}`: {e:#}", spec.label)
+            });
+            let driver = match &spec.checkpoint {
+                Some(ck) => PolicyKind::parse(&ck.policy).unwrap_or_else(|| {
+                    panic!("warm-start driver `{}` is not in the registry", ck.policy)
+                }),
+                None => spec.policy,
+            };
+            let mut r = run_experiment_resumed(spec, &snap, driver, true).unwrap_or_else(|e| {
+                panic!("recovery resume for `{}` failed: {e:#}", spec.label)
+            });
+            let _ = std::fs::remove_file(&rs.path);
+            r.wall_s = t0.elapsed().as_secs_f64();
+            return r;
+        }
+    }
     // Per-cell wall-clock starts *after* any shared warm-up prefix, so a
     // cell's `wall_s` is the same whether the suite injected the
     // snapshot or the cell computed its own.
@@ -300,7 +372,14 @@ pub fn run_experiment(spec: &ExperimentSpec) -> ExperimentResult {
                     .profile
                     .unwrap_or_else(|| TraceProfile::of_trace(trace));
                 let mut src = TraceSliceSource::new(trace.as_ref());
-                run_source(&spec.deployment, spec.policy, &mut src, &workload, &spec.overrides)
+                run_source(
+                    &spec.deployment,
+                    spec.policy,
+                    &mut src,
+                    &workload,
+                    &spec.overrides,
+                    spec.recovery.as_ref(),
+                )
             }
             Workload::Streaming(factory) => {
                 // Each run builds its own source, so grid workers stream
@@ -308,10 +387,22 @@ pub fn run_experiment(spec: &ExperimentSpec) -> ExperimentResult {
                 // vector.
                 let mut src = factory();
                 let workload = spec.profile.unwrap_or_else(|| src.profile());
-                run_source(&spec.deployment, spec.policy, &mut src, &workload, &spec.overrides)
+                run_source(
+                    &spec.deployment,
+                    spec.policy,
+                    &mut src,
+                    &workload,
+                    &spec.overrides,
+                    spec.recovery.as_ref(),
+                )
             }
         }
     };
+    // A completed cell no longer needs its recovery checkpoint; removing
+    // it keeps a later rerun from replaying a stale tail.
+    if let Some(rs) = &spec.recovery {
+        let _ = std::fs::remove_file(&rs.path);
+    }
     r.label = spec.label.clone();
     r.wall_s = t0.elapsed().as_secs_f64();
     r
@@ -425,8 +516,13 @@ fn resume_with_source(
     if let Some(ck) = &spec.checkpoint {
         sim_cfg.checkpoint_every_s = ck.every_s;
     }
+    // Crash recovery overrides the scenario's checkpoint cadence: the
+    // resumed cell keeps rewriting its recovery file as it progresses.
+    if let Some(rs) = &spec.recovery {
+        sim_cfg.checkpoint_every_s = rs.every_s;
+    }
     let slo = sim_cfg.slo;
-    let engine = SimEngine::resume(
+    let mut engine = SimEngine::resume(
         sim_cfg,
         cluster_cfg,
         built.plane.as_mut(),
@@ -434,6 +530,9 @@ fn resume_with_source(
         snap,
         restore_policy,
     )?;
+    if let Some(rs) = &spec.recovery {
+        engine.set_checkpoint_sink(recovery_sink(rs.path.clone()));
+    }
     let sim = engine.run_to_completion();
     let report = sim.metrics.report(&slo, spec.overrides.warmup_s);
     Ok(ExperimentResult {
@@ -475,6 +574,9 @@ pub struct ExperimentSpec {
     /// Precomputed shared warm-up snapshot (injected by `Suite::run` so
     /// the prefix is simulated once per scenario, not once per cell).
     pub warm_snapshot: Option<Arc<SimSnapshot>>,
+    /// Crash-recovery checkpointing for this cell (`bench run
+    /// --resume-dir`); None runs without periodic disk checkpoints.
+    pub recovery: Option<RecoverySpec>,
 }
 
 impl ExperimentSpec {
@@ -488,6 +590,7 @@ impl ExperimentSpec {
             label: String::new(),
             checkpoint: None,
             warm_snapshot: None,
+            recovery: None,
         }
     }
 
@@ -509,12 +612,19 @@ impl ExperimentSpec {
             label: String::new(),
             checkpoint: None,
             warm_snapshot: None,
+            recovery: None,
         }
     }
 
     /// Configure this cell to warm-start from a shared prefix snapshot.
     pub fn with_checkpoint(mut self, ck: CheckpointSpec) -> ExperimentSpec {
         self.checkpoint = Some(ck);
+        self
+    }
+
+    /// Configure per-cell crash-recovery checkpointing.
+    pub fn with_recovery(mut self, rs: RecoverySpec) -> ExperimentSpec {
+        self.recovery = Some(rs);
         self
     }
 

@@ -557,6 +557,10 @@ pub struct ScenarioOverrides {
     pub max_gpus: Option<usize>,
     pub sample_interval_s: Option<f64>,
     pub decision_log: usize,
+    /// `false` switches the recorder to streaming sketches (O(1) memory,
+    /// approximate percentiles — docs/performance.md). Default `true`:
+    /// figure-grade retained completions.
+    pub retain_completions: bool,
 }
 
 impl Default for ScenarioOverrides {
@@ -570,6 +574,7 @@ impl Default for ScenarioOverrides {
             max_gpus: None,
             sample_interval_s: None,
             decision_log: 0,
+            retain_completions: true,
         }
     }
 }
@@ -628,6 +633,9 @@ impl ScenarioOverrides {
         if self.decision_log > 0 {
             j = j.set("decision_log", self.decision_log);
         }
+        if !self.retain_completions {
+            j = j.set("retain_completions", false);
+        }
         j
     }
 
@@ -644,6 +652,7 @@ impl ScenarioOverrides {
                 "max_gpus",
                 "sample_interval_s",
                 "decision_log",
+                "retain_completions",
             ],
         )?;
         let mut ov = ScenarioOverrides {
@@ -656,6 +665,12 @@ impl ScenarioOverrides {
             decision_log: opt_usize(j, "decision_log")?.unwrap_or(0),
             ..Default::default()
         };
+        if let Some(v) = j.get("retain_completions") {
+            ov.retain_completions = v.as_bool().ok_or_else(|| ScenarioError::BadValue {
+                field: "overrides.retain_completions".into(),
+                reason: "expected a boolean".into(),
+            })?;
+        }
         if let Some(w) = opt_f64(j, "warmup_s")? {
             ov.warmup_s = w;
         }
@@ -899,6 +914,7 @@ impl Scenario {
             force_single_step: false,
             decision_log: self.overrides.decision_log,
             faults: self.faults.clone(),
+            retain_completions: self.overrides.retain_completions,
         }
     }
 
@@ -944,6 +960,7 @@ impl Scenario {
                     label: format!("{}/{}", self.name, policy.name()),
                     checkpoint: self.checkpoint.clone(),
                     warm_snapshot: None,
+                    recovery: None,
                 }
             })
             .collect())

@@ -21,7 +21,7 @@
 //! suites load from TOML/JSON under [`SCENARIO_DIR`].
 
 use crate::report::runner::{
-    run_experiments, CheckpointSpec, ExperimentResult, PolicyKind, simulate_prefix,
+    run_experiments, CheckpointSpec, ExperimentResult, PolicyKind, RecoverySpec, simulate_prefix,
 };
 use crate::report::scenario::{
     Scenario, ScenarioError, ScenarioOverrides, TransformStep, WorkloadSpec,
@@ -172,6 +172,32 @@ impl Suite {
     /// instead of once per cell. The amortization is reported in the
     /// normalized JSON's `warm_start` block.
     pub fn run(&self) -> anyhow::Result<SuiteRun> {
+        self.run_inner(None)
+    }
+
+    /// [`Suite::run`] with per-cell crash recovery (`bench run
+    /// --resume-dir`): every cell rewrites
+    /// `<dir>/<scenario>__<policy>.ckpt.json` every `every_s` simulated
+    /// seconds, resumes from that file when it already exists — so a
+    /// killed sweep restarts where it left off, losing at most `every_s`
+    /// simulated seconds per in-flight cell — and removes it on
+    /// completion. Results are bit-identical to an uninterrupted
+    /// [`Suite::run`] (the checkpoint/resume determinism gate).
+    ///
+    /// The directory is tied to one suite configuration: reusing it after
+    /// changing scenarios or policies resumes stale state — use a fresh
+    /// directory (or clear it) when the suite changes.
+    pub fn run_recoverable(&self, dir: &Path, every_s: f64) -> anyhow::Result<SuiteRun> {
+        anyhow::ensure!(
+            every_s.is_finite() && every_s > 0.0,
+            "recovery checkpoint interval must be positive, got {every_s}"
+        );
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("cannot create {}: {e}", dir.display()))?;
+        self.run_inner(Some((dir, every_s)))
+    }
+
+    fn run_inner(&self, recovery: Option<(&Path, f64)>) -> anyhow::Result<SuiteRun> {
         self.validate()?;
         let mut specs = Vec::new();
         let mut cells: Vec<(String, String)> = Vec::new();
@@ -197,7 +223,16 @@ impl Suite {
                     spec.warm_snapshot = Some(snap.clone());
                 }
             }
-            for spec in cell_specs {
+            for mut spec in cell_specs {
+                if let Some((dir, every_s)) = recovery {
+                    spec.recovery = Some(RecoverySpec {
+                        path: dir.join(format!(
+                            "{}.ckpt.json",
+                            cell_key(&sc.name, spec.policy.name())
+                        )),
+                        every_s,
+                    });
+                }
                 cells.push((sc.name.clone(), spec.policy.name().to_string()));
                 specs.push(spec);
             }
@@ -219,6 +254,26 @@ impl Suite {
             warm_start,
         })
     }
+}
+
+/// Stable on-disk key of one scenario × policy cell inside a recovery
+/// directory. Path-hostile characters collapse to `-`; the double
+/// underscore separates the (sanitized) halves unambiguously enough for
+/// human inspection — collisions would only merge two cells' checkpoint
+/// files, never corrupt results.
+fn cell_key(scenario: &str, policy: &str) -> String {
+    let sanitize = |s: &str| {
+        s.chars()
+            .map(|c| {
+                if c.is_ascii_alphanumeric() || c == '-' || c == '.' {
+                    c
+                } else {
+                    '-'
+                }
+            })
+            .collect::<String>()
+    };
+    format!("{}__{}", sanitize(scenario), sanitize(policy))
 }
 
 /// Wall-clock amortization record of one warm-started scenario.

@@ -54,6 +54,7 @@ use super::event::{Event, EventQueue, InstanceId};
 use super::faults::{mix_seed, FaultKind, FaultLabel, FaultPlan, Firing};
 use super::instance::{ActiveSeq, LifeState, PrefillJob, RequestClock, Role};
 use super::policy::{Action, ActionOutcome, ControlPlane, RejectReason, Signal, SignalKind};
+use super::reqtable::ReqTable;
 use super::snapshot::{self, SimSnapshot, SNAPSHOT_SCHEMA_VERSION};
 use super::view::ClusterView;
 use crate::metrics::{AbandonedRequest, DropReason, MetricsRecorder, TimeSeries};
@@ -62,7 +63,7 @@ use crate::trace::{fast_forward, ArrivalSource, Trace, TraceSliceSource};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use crate::workload::{BucketScheme, Completion, Request, RequestId, SloPolicy};
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 /// Chunk budget used for `DeflectPrefill { chunked: true }` when the
 /// deployment has no profiled convertible chunk size (baseline clusters).
@@ -118,6 +119,20 @@ pub struct SimConfig {
     /// keeps >= 1 instance per stage); it closes the requeue-forever
     /// hazard when faults empty out a pool.
     pub starvation_age_s: f64,
+    /// Retain every per-request record (the completions vector, wait-time
+    /// samples, TTFT timeline points) for figure-grade reporting — the
+    /// historical behavior, and the default. With `false` the recorder
+    /// folds each completion into streaming sketches instead
+    /// (`metrics::sketch`): exact counters/attainment, log-bucket
+    /// histogram percentiles, O(1) memory and checkpoint size however
+    /// long the trace runs.
+    pub retain_completions: bool,
+    /// Warm-up cutoff baked into sketch-mode aggregation: completions
+    /// (and wait samples) arriving before this are excluded at ingest,
+    /// exactly as `MetricsRecorder::report` filters retained vectors with
+    /// the same `warmup_s`. Ignored in retained mode, where reports
+    /// filter after the fact.
+    pub metrics_warmup_s: f64,
 }
 
 impl Default for SimConfig {
@@ -137,6 +152,8 @@ impl Default for SimConfig {
             faults: FaultPlan::default(),
             retry_limit: 8,
             starvation_age_s: 120.0,
+            retain_completions: true,
+            metrics_warmup_s: 0.0,
         }
     }
 }
@@ -192,6 +209,31 @@ struct Transfer {
     doomed: bool,
 }
 
+/// Unified per-request engine state: one [`ReqTable`] arena slot carries
+/// everything the engine used to scatter across four
+/// `HashMap<RequestId, _>`s. A slot is recycled once every component has
+/// been vacated (see `SimEngine::release_if_vacant`).
+#[derive(Default)]
+struct ReqState {
+    /// Gateway/prefill journey timestamps (feeds wait percentiles).
+    clock: Option<RequestClock>,
+    /// In-flight KVC transfer bookkeeping.
+    transfer: Option<Transfer>,
+    /// The request mid-KVC-transfer and its predicted bucket.
+    in_transfer: Option<(Request, usize)>,
+    /// Recovery-cohort membership (index into `fault_cohorts`).
+    fault_cohort: Option<usize>,
+}
+
+impl ReqState {
+    fn is_vacant(&self) -> bool {
+        self.clock.is_none()
+            && self.transfer.is_none()
+            && self.in_transfer.is_none()
+            && self.fault_cohort.is_none()
+    }
+}
+
 /// A transfer-fault brownout window derived from a [`FaultKind::Transfer`]
 /// firing (pure function of the plan; recomputed on resume).
 #[derive(Clone, Copy)]
@@ -231,13 +273,16 @@ pub struct SimEngine<'a, C: ControlPlane + ?Sized> {
     pending: VecDeque<Request>,
     /// Prefilled requests awaiting a decoder with capacity (backpressure).
     awaiting_decode: VecDeque<Request>,
-    transfers: HashMap<RequestId, Transfer>,
+    /// Per-request state arena (clock, transfer, cohort membership):
+    /// slab slots with free-list reuse instead of per-request `HashMap`
+    /// churn (see `sim::reqtable`).
+    requests: ReqTable<ReqState>,
+    /// In-flight KVC transfers (slots in `requests` with `transfer` set);
+    /// `all_idle` checks the count without scanning the arena.
+    active_transfers: usize,
     /// Running sum of in-flight transfer rates (avoids rescanning
-    /// `transfers` every sample tick).
+    /// transfers every sample tick).
     net_bytes_per_s: f64,
-    /// Requests mid-KVC-transfer: (request, predicted bucket).
-    in_transfer: HashMap<RequestId, (Request, usize)>,
-    clocks: HashMap<RequestId, RequestClock>,
     metrics: MetricsRecorder,
     series: SimSeries,
     ttft_points: Vec<(f64, f64)>,
@@ -274,10 +319,9 @@ pub struct SimEngine<'a, C: ControlPlane + ?Sized> {
     transfer_windows: Vec<TransferWindow>,
     /// Open recovery cohorts: (fault time, displaced requests still
     /// outstanding). When a cohort drains to zero the recovery time is
-    /// recorded in `metrics.recoveries`.
+    /// recorded in `metrics.recoveries`. Per-request membership lives on
+    /// the arena slot (`ReqState::fault_cohort`).
     fault_cohorts: Vec<(f64, usize)>,
-    /// Displaced request → index into `fault_cohorts`.
-    fault_req: HashMap<RequestId, usize>,
 }
 
 /// Derive the firing list and transfer brownout windows from a plan.
@@ -319,6 +363,10 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         };
         let cfg_every = cfg.checkpoint_every_s;
         let (firings, transfer_windows) = fault_derived(&cfg.faults);
+        let mut metrics = MetricsRecorder::new();
+        if !cfg.retain_completions {
+            metrics.enable_sketch(cfg.slo, cfg.metrics_warmup_s);
+        }
         SimEngine {
             cfg,
             policy,
@@ -330,11 +378,10 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             now: 0.0,
             pending: VecDeque::new(),
             awaiting_decode: VecDeque::new(),
-            transfers: HashMap::new(),
+            requests: ReqTable::new(),
+            active_transfers: 0,
             net_bytes_per_s: 0.0,
-            in_transfer: HashMap::new(),
-            clocks: HashMap::new(),
-            metrics: MetricsRecorder::new(),
+            metrics,
             series: SimSeries::default(),
             ttft_points: Vec::new(),
             tokens_since_sample: 0.0,
@@ -354,7 +401,6 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             firings,
             transfer_windows,
             fault_cohorts: Vec::new(),
-            fault_req: HashMap::new(),
         }
     }
 
@@ -514,15 +560,28 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                         .collect(),
                 ),
             );
-        // Keyed maps are serialized sorted by request id so snapshot
-        // bytes are deterministic (nothing in the engine iterates these
-        // maps, so restore order is irrelevant to the simulation).
-        let mut transfers: Vec<(&RequestId, &Transfer)> = self.transfers.iter().collect();
-        transfers.sort_by_key(|(id, _)| **id);
-        let mut in_transfer: Vec<(&RequestId, &(Request, usize))> = self.in_transfer.iter().collect();
-        in_transfer.sort_by_key(|(id, _)| **id);
-        let mut clocks: Vec<(&RequestId, &RequestClock)> = self.clocks.iter().collect();
-        clocks.sort_by_key(|(id, _)| **id);
+        // Arena components are serialized sorted by request id so
+        // snapshot bytes are deterministic regardless of slot-reuse order
+        // (nothing in the engine iterates the arena, so restore order is
+        // irrelevant to the simulation).
+        let mut transfers: Vec<(RequestId, &Transfer)> = self
+            .requests
+            .iter()
+            .filter_map(|(id, s)| s.transfer.as_ref().map(|tr| (id, tr)))
+            .collect();
+        transfers.sort_by_key(|(id, _)| *id);
+        let mut in_transfer: Vec<(RequestId, &(Request, usize))> = self
+            .requests
+            .iter()
+            .filter_map(|(id, s)| s.in_transfer.as_ref().map(|it| (id, it)))
+            .collect();
+        in_transfer.sort_by_key(|(id, _)| *id);
+        let mut clocks: Vec<&RequestClock> = self
+            .requests
+            .iter()
+            .filter_map(|(_, s)| s.clock.as_ref())
+            .collect();
+        clocks.sort_by_key(|ck| ck.id);
         let opt_time = |t: Option<f64>| match t {
             None => Json::Null,
             Some(t) => Json::f64_bits(t),
@@ -551,7 +610,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                         .into_iter()
                         .map(|(id, tr)| {
                             Json::obj()
-                                .set("req", Json::u64_hex(*id))
+                                .set("req", Json::u64_hex(id))
                                 .set("bytes_per_s", Json::f64_bits(tr.bytes_per_s))
                                 .set("attempt", tr.attempt as usize)
                                 .set("doomed", Json::Bool(tr.doomed))
@@ -570,7 +629,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                                 .set("req", snapshot::request_to_json(req))
                                 .set("bucket", *bucket)
                         })
-                        .collect(),
+                        .collect::<Vec<_>>(),
                 ),
             )
             .set(
@@ -578,7 +637,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 Json::Arr(
                     clocks
                         .into_iter()
-                        .map(|(_, ck)| {
+                        .map(|ck| {
                             Json::obj()
                                 .set("id", Json::u64_hex(ck.id))
                                 .set("arrival", Json::f64_bits(ck.arrival))
@@ -618,15 +677,19 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 ),
             )
             .set("fault_req", {
-                let mut members: Vec<(&RequestId, &usize)> = self.fault_req.iter().collect();
-                members.sort_by_key(|(id, _)| **id);
+                let mut members: Vec<(RequestId, usize)> = self
+                    .requests
+                    .iter()
+                    .filter_map(|(id, s)| s.fault_cohort.map(|idx| (id, idx)))
+                    .collect();
+                members.sort_by_key(|(id, _)| *id);
                 Json::Arr(
                     members
                         .into_iter()
                         .map(|(id, idx)| {
                             Json::obj()
-                                .set("req", Json::u64_hex(*id))
-                                .set("cohort", *idx)
+                                .set("req", Json::u64_hex(id))
+                                .set("cohort", idx)
                         })
                         .collect(),
                 )
@@ -699,31 +762,30 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         }
         let events = EventQueue::rebuild(entries, snapshot::pu64(ev_blob, "next_seq", what)?);
 
-        let mut transfers = HashMap::new();
-        let mut net_check = 0usize;
+        let mut requests: ReqTable<ReqState> = ReqTable::new();
+        let mut active_transfers = 0usize;
         for tr in snapshot::parr(e, "transfers", what)? {
-            net_check += 1;
-            transfers.insert(
-                snapshot::pu64(tr, "req", what)?,
-                Transfer {
-                    bytes_per_s: snapshot::pf(tr, "bytes_per_s", what)?,
-                    attempt: snapshot::pusize(tr, "attempt", what)? as u32,
-                    doomed: snapshot::get(tr, "doomed", what)?
-                        .as_bool()
-                        .ok_or_else(|| anyhow::anyhow!("{what}: transfer `doomed` not a bool"))?,
-                },
+            let id = snapshot::pu64(tr, "req", what)?;
+            let transfer = Transfer {
+                bytes_per_s: snapshot::pf(tr, "bytes_per_s", what)?,
+                attempt: snapshot::pusize(tr, "attempt", what)? as u32,
+                doomed: snapshot::get(tr, "doomed", what)?
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("{what}: transfer `doomed` not a bool"))?,
+            };
+            let slot = requests.entry(id);
+            anyhow::ensure!(
+                slot.transfer.is_none(),
+                "{what}: duplicate transfer request ids"
             );
+            slot.transfer = Some(transfer);
+            active_transfers += 1;
         }
-        anyhow::ensure!(
-            transfers.len() == net_check,
-            "{what}: duplicate transfer request ids"
-        );
-        let mut in_transfer = HashMap::new();
         for it in snapshot::parr(e, "in_transfer", what)? {
             let req = snapshot::request_from_json(snapshot::get(it, "req", what)?)?;
-            in_transfer.insert(req.id, (req, snapshot::pusize(it, "bucket", what)?));
+            let bucket = snapshot::pusize(it, "bucket", what)?;
+            requests.entry(req.id).in_transfer = Some((req, bucket));
         }
-        let mut clocks = HashMap::new();
         for ck in snapshot::parr(e, "clocks", what)? {
             let opt = |key: &str| -> anyhow::Result<Option<f64>> {
                 match snapshot::get(ck, key, what)? {
@@ -734,15 +796,13 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 }
             };
             let id = snapshot::pu64(ck, "id", what)?;
-            clocks.insert(
+            let clock = RequestClock {
                 id,
-                RequestClock {
-                    id,
-                    arrival: snapshot::pf(ck, "arrival", what)?,
-                    prefill_started: opt("prefill_started")?,
-                    prefill_done: opt("prefill_done")?,
-                },
-            );
+                arrival: snapshot::pf(ck, "arrival", what)?,
+                prefill_started: opt("prefill_started")?,
+                prefill_done: opt("prefill_done")?,
+            };
+            requests.entry(id).clock = Some(clock);
         }
         let series_blob = snapshot::get(e, "series", what)?;
         let series = SimSeries {
@@ -773,14 +833,13 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         for c in snapshot::parr(e, "fault_cohorts", what)? {
             fault_cohorts.push((snapshot::pf(c, "t", what)?, snapshot::pusize(c, "n", what)?));
         }
-        let mut fault_req = HashMap::new();
         for m in snapshot::parr(e, "fault_req", what)? {
             let idx = snapshot::pusize(m, "cohort", what)?;
             anyhow::ensure!(
                 idx < fault_cohorts.len(),
                 "{what}: fault_req cohort index out of range"
             );
-            fault_req.insert(snapshot::pu64(m, "req", what)?, idx);
+            requests.entry(snapshot::pu64(m, "req", what)?).fault_cohort = Some(idx);
         }
         let (firings, transfer_windows) = fault_derived(&cfg.faults);
         let now = snapshot::pf(e, "now", what)?;
@@ -806,10 +865,9 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 .iter()
                 .map(snapshot::request_from_json)
                 .collect::<anyhow::Result<_>>()?,
-            transfers,
+            requests,
+            active_transfers,
             net_bytes_per_s: snapshot::pf(e, "net_bytes_per_s", what)?,
-            in_transfer,
-            clocks,
             metrics: MetricsRecorder::from_snapshot(snapshot::get(e, "metrics", what)?)?,
             series,
             ttft_points: snapshot::pairs_from_json(
@@ -833,13 +891,12 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             firings,
             transfer_windows,
             fault_cohorts,
-            fault_req,
             cfg,
         })
     }
 
     fn all_idle(&self) -> bool {
-        self.transfers.is_empty() && self.cluster.iter().all(|i| i.drained())
+        self.active_transfers == 0 && self.cluster.iter().all(|i| i.drained())
     }
 
     fn handle(&mut self, ev: Event) {
@@ -861,8 +918,8 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                     self.events.push(n.arrival.max(self.now), Event::Arrival);
                 }
                 self.metrics.note_arrival(&req);
-                self.clocks
-                    .insert(req.id, RequestClock::at_arrival(req.id, req.arrival));
+                self.requests.entry(req.id).clock =
+                    Some(RequestClock::at_arrival(req.id, req.arrival));
                 self.offer_prefill(req, false);
             }
             Event::ControlTick => {
@@ -1087,10 +1144,24 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         }
     }
 
+    /// Return a request's arena slot to the free list once every
+    /// component has been vacated. Callers invoke it after clearing a
+    /// component; a slot with any live component stays allocated.
+    fn release_if_vacant(&mut self, rid: RequestId) {
+        if self.requests.get(rid).is_some_and(ReqState::is_vacant) {
+            self.requests.remove(rid);
+        }
+    }
+
     /// Drop a request's cohort membership; when its cohort drains to
     /// zero, the fault's recovery time is recorded.
     fn cohort_release(&mut self, rid: RequestId) {
-        if let Some(idx) = self.fault_req.remove(&rid) {
+        let membership = self
+            .requests
+            .get_mut(rid)
+            .and_then(|s| s.fault_cohort.take());
+        if let Some(idx) = membership {
+            self.release_if_vacant(rid);
             let (t, n) = &mut self.fault_cohorts[idx];
             *n -= 1;
             if *n == 0 {
@@ -1114,7 +1185,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         }
         if let Some(idx) = cohort {
             self.fault_cohorts[idx].1 += 1;
-            self.fault_req.insert(req.id, idx);
+            self.requests.entry(req.id).fault_cohort = Some(idx);
         }
         self.offer_prefill(req, true);
     }
@@ -1122,7 +1193,10 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
     /// Permanently drop a request with a typed reason (failure ledger).
     fn abandon(&mut self, req: Request, reason: DropReason) {
         self.cohort_release(req.id);
-        self.clocks.remove(&req.id);
+        if let Some(s) = self.requests.get_mut(req.id) {
+            s.clock = None;
+        }
+        self.release_if_vacant(req.id);
         self.metrics.abandoned.push(AbandonedRequest {
             id: req.id,
             arrival: req.arrival,
@@ -1264,7 +1338,10 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                     max_capacity
                 );
             }
-            self.clocks.remove(&req.id);
+            if let Some(s) = self.requests.get_mut(req.id) {
+                s.clock = None;
+            }
+            self.release_if_vacant(req.id);
             return;
         }
         let acts = {
@@ -1564,26 +1641,26 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 land = w.stall_s;
             }
         }
-        self.transfers.insert(
-            req.id,
-            Transfer {
-                bytes_per_s,
-                attempt: 1,
-                doomed,
-            },
-        );
+        // Stash the request on its arena slot via joining-at-transfer: we
+        // re-create the ActiveSeq at TransferDone; the request rides on
+        // the slot, not the event.
+        let rid = req.id;
+        let slot = self.requests.entry(rid);
+        slot.transfer = Some(Transfer {
+            bytes_per_s,
+            attempt: 1,
+            doomed,
+        });
+        slot.in_transfer = Some((req, bucket));
+        self.active_transfers += 1;
         self.net_bytes_per_s += bytes_per_s;
         self.events.push(
             self.now + land,
             Event::TransferDone {
                 instance: decoder,
-                req: req.id,
+                req: rid,
             },
         );
-        // Stash the request on the decoder via joining-at-transfer: we
-        // re-create the ActiveSeq at TransferDone; carry the request in
-        // the event via a map.
-        self.in_transfer.insert(req.id, (req, bucket));
     }
 
     fn apply_convert(&mut self, id: InstanceId, to_convertible: bool) -> ActionOutcome {
@@ -1691,7 +1768,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         let req_id = job.req.id;
         inst.active_prefill = Some(job);
         inst.prefill_done_at = self.now + dur;
-        if let Some(ck) = self.clocks.get_mut(&req_id) {
+        if let Some(ck) = self.requests.get_mut(req_id).and_then(|s| s.clock.as_mut()) {
             if ck.prefill_started.is_none() {
                 ck.prefill_started = Some(self.now);
             }
@@ -1714,7 +1791,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         };
         debug_assert_eq!(job.req.id, req_id);
         inst.prefill_done_at = f64::INFINITY;
-        if let Some(ck) = self.clocks.get_mut(&req_id) {
+        if let Some(ck) = self.requests.get_mut(req_id).and_then(|s| s.clock.as_mut()) {
             ck.prefill_done = Some(self.now);
         }
         // Next job on this prefiller.
@@ -1724,14 +1801,20 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
     }
 
     fn on_transfer_done(&mut self, instance: InstanceId, req_id: RequestId) {
-        let doomed_attempt = match self.transfers.remove(&req_id) {
-            Some(tr) => {
-                self.net_bytes_per_s = (self.net_bytes_per_s - tr.bytes_per_s).max(0.0);
-                tr.doomed.then_some(tr.attempt)
+        let mut doomed_attempt = None;
+        let taken = match self.requests.get_mut(req_id) {
+            Some(s) => {
+                if let Some(tr) = s.transfer.take() {
+                    self.active_transfers -= 1;
+                    self.net_bytes_per_s = (self.net_bytes_per_s - tr.bytes_per_s).max(0.0);
+                    doomed_attempt = tr.doomed.then_some(tr.attempt);
+                }
+                s.in_transfer.take()
             }
             None => None,
         };
-        let Some((req, bucket)) = self.in_transfer.remove(&req_id) else {
+        self.release_if_vacant(req_id);
+        let Some((req, bucket)) = taken else {
             return;
         };
         if let Some(attempt) = doomed_attempt {
@@ -1801,23 +1884,23 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 land = backoff + w.stall_s;
             }
         }
-        self.transfers.insert(
-            req.id,
-            Transfer {
-                bytes_per_s,
-                attempt: next_attempt,
-                doomed,
-            },
-        );
+        let rid = req.id;
+        let slot = self.requests.entry(rid);
+        slot.transfer = Some(Transfer {
+            bytes_per_s,
+            attempt: next_attempt,
+            doomed,
+        });
+        slot.in_transfer = Some((req, bucket));
+        self.active_transfers += 1;
         self.net_bytes_per_s += bytes_per_s;
         self.events.push(
             self.now + land,
             Event::TransferDone {
                 instance,
-                req: req.id,
+                req: rid,
             },
         );
-        self.in_transfer.insert(req.id, (req, bucket));
     }
 
     // ---- decode iterations ----
@@ -1975,7 +2058,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         self.events
             .push(end, Event::DecodeIterDone { instance: id, epoch });
         if let Some(rid) = chunk_first_start {
-            if let Some(ck) = self.clocks.get_mut(&rid) {
+            if let Some(ck) = self.requests.get_mut(rid).and_then(|s| s.clock.as_mut()) {
                 if ck.prefill_started.is_none() {
                     ck.prefill_started = Some(now);
                 }
@@ -2021,7 +2104,9 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                             .bucket_scheme
                             .classify(job.req.input_tokens, job.req.output_tokens)
                             .index();
-                        if let Some(ck) = self.clocks.get_mut(&job.req.id) {
+                        if let Some(ck) =
+                            self.requests.get_mut(job.req.id).and_then(|s| s.clock.as_mut())
+                        {
                             ck.prefill_done = Some(now);
                         }
                         inst.joining.push(ActiveSeq {
@@ -2077,18 +2162,23 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
 
         for idx in 0..self.completions_buf.len() {
             let c = self.completions_buf[idx];
-            self.ttft_points.push((c.arrival, c.ttft));
+            // Figure-grade timeline points only exist in retained mode;
+            // sketch mode keeps the run O(1) in trace length.
+            if self.cfg.retain_completions {
+                self.ttft_points.push((c.arrival, c.ttft));
+            }
             self.cohort_release(c.id);
             self.dispatch_notify(Signal::Completion(&c));
             self.metrics.record(c);
-            if let Some(ck) = self.clocks.remove(&c.id) {
+            if let Some(ck) = self.requests.get_mut(c.id).and_then(|s| s.clock.take()) {
                 if let Some(done) = ck.prefill_done {
-                    self.metrics.prefill_waits.push((c.arrival, done - c.arrival));
+                    self.metrics.note_prefill_wait(c.arrival, done - c.arrival);
                 }
                 if let Some(started) = ck.prefill_started {
-                    self.metrics.queue_waits.push((c.arrival, started - c.arrival));
+                    self.metrics.note_queue_wait(c.arrival, started - c.arrival);
                 }
             }
+            self.release_if_vacant(c.id);
         }
 
         // Freed memory: retry backpressured prefilled requests.

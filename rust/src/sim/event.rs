@@ -1,4 +1,14 @@
-//! Discrete-event machinery: event kinds and the time-ordered event heap.
+//! Discrete-event machinery: event kinds and the time-ordered scheduler.
+//!
+//! The scheduler is a **calendar queue** (single-level timing wheel with
+//! an overflow heap): sim events are extremely time-local — decode
+//! iterations, KVC transfers and arrivals land within milliseconds of
+//! `now` — so hashing each event into a fixed ring of ~1 ms buckets makes
+//! `push`/`pop` O(1) instead of the `BinaryHeap`'s O(log n) compare
+//! cascade. Events beyond the wheel's horizon (fault firings, instance
+//! startups) wait in a small overflow heap and migrate into the wheel as
+//! the cursor approaches. The exact `(time, rank, seq)` total order of
+//! the old heap is preserved bit-for-bit; see `docs/performance.md`.
 
 use crate::workload::RequestId;
 use std::cmp::Ordering;
@@ -76,8 +86,8 @@ pub enum Event {
     FaultRestore { instance: InstanceId },
 }
 
-/// Heap entry ordered by (time, class rank, seq): simultaneous events pop
-/// arrivals first, then FIFO.
+/// Scheduled entry ordered by (time, class rank, seq): simultaneous
+/// events pop arrivals first, then FIFO.
 ///
 /// The arrival-first rank preserves the pre-streaming engine's tie
 /// semantics: when every arrival was preloaded at init, an arrival
@@ -92,6 +102,19 @@ struct Scheduled {
     rank: u8,
     seq: u64,
     event: Event,
+}
+
+impl Scheduled {
+    /// Strict `(time, rank, seq)` pop order. Times are finite (`push`
+    /// rejects non-finite), and seqs are unique, so this is total.
+    #[inline]
+    fn before(&self, other: &Scheduled) -> bool {
+        match self.time.partial_cmp(&other.time) {
+            Some(Ordering::Less) => true,
+            Some(Ordering::Greater) => false,
+            _ => (self.rank, self.seq) < (other.rank, other.seq),
+        }
+    }
 }
 
 impl PartialEq for Scheduled {
@@ -117,45 +140,222 @@ impl Ord for Scheduled {
     }
 }
 
+/// Wheel geometry. A tick is the bucket quantum; the near wheel covers
+/// `NBUCKETS` consecutive ticks (`4096 × 1/1024 s = 4 s`), which spans
+/// the inter-event gaps of everything hot (decode iterations, transfers,
+/// arrivals, control/sample ticks). Startup completions and fault
+/// firings land in the overflow heap and migrate in lazily.
+const TICKS_PER_S: f64 = 1024.0;
+const NBUCKETS: usize = 4096;
+const MASK: usize = NBUCKETS - 1;
+/// Occupancy bitmap: one bit per bucket, one u64 word per 64 buckets.
+const WORDS: usize = NBUCKETS / 64;
+
 /// Earliest-first event queue with deterministic FIFO tie-breaking.
-#[derive(Debug, Default)]
+///
+/// Calendar-queue layout:
+/// - **near wheel** — `NBUCKETS` unordered `Vec` buckets indexed by
+///   `tick & MASK`, holding every event whose tick falls in
+///   `[cursor, cursor + NBUCKETS)`. Within that window each residue maps
+///   to exactly one tick, so a bucket never mixes ticks and the first
+///   occupied bucket at/after the cursor holds the earliest event.
+/// - **occupancy bitmap** — one bit per bucket; the cursor scan is a
+///   word-at-a-time `trailing_zeros` walk, not a bucket-by-bucket probe.
+/// - **far heap** — events at/beyond `cursor + NBUCKETS`, kept in the old
+///   `BinaryHeap` order and migrated into the wheel once the cursor's
+///   window reaches them.
+///
+/// Determinism: pop order is the strict total order `(time, rank, seq)`
+/// — identical to the previous `BinaryHeap` implementation, which the
+/// heap-oracle property test (below) and the snapshot-equivalence suite
+/// pin down.
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Scheduled>,
+    buckets: Vec<Vec<Scheduled>>,
+    occupied: [u64; WORDS],
+    /// Tick of the last popped event: nothing earlier remains anywhere.
+    cursor: u64,
+    /// Entry count in the near wheel (buckets).
+    near_len: usize,
+    far: BinaryHeap<Scheduled>,
+    len: usize,
     seq: u64,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl EventQueue {
     pub fn new() -> Self {
-        Self::default()
+        EventQueue {
+            buckets: (0..NBUCKETS).map(|_| Vec::new()).collect(),
+            occupied: [0; WORDS],
+            cursor: 0,
+            near_len: 0,
+            far: BinaryHeap::new(),
+            len: 0,
+            seq: 0,
+        }
+    }
+
+    #[inline]
+    fn tick_of(time: f64) -> u64 {
+        // `as` truncates toward zero == floor for the clamped non-negative
+        // value, and saturates at u64::MAX for out-of-range input.
+        (time.max(0.0) * TICKS_PER_S) as u64
     }
 
     pub fn push(&mut self, time: f64, event: Event) {
-        debug_assert!(time.is_finite(), "non-finite event time");
-        let rank = if matches!(event, Event::Arrival) { 0 } else { 1 };
-        self.heap.push(Scheduled {
+        // A NaN/∞ time would break the strict `(time, rank, seq)` total
+        // order and silently corrupt pop order downstream; fail loudly in
+        // release builds too (satellite of the scheduler swap).
+        assert!(
+            time.is_finite(),
+            "EventQueue::push: non-finite event time {time} for {event:?}"
+        );
+        let rank = u8::from(!matches!(event, Event::Arrival));
+        let s = Scheduled {
             time,
             rank,
             seq: self.seq,
             event,
-        });
+        };
         self.seq += 1;
+        self.insert(s);
+    }
+
+    fn insert(&mut self, s: Scheduled) {
+        // The engine never schedules into the past; clamp defensively so
+        // a same-tick float edge still lands in a scannable bucket (the
+        // in-bucket min is by exact `(time, rank, seq)`, so placement
+        // never affects pop order, only scan efficiency).
+        let tick = Self::tick_of(s.time).max(self.cursor);
+        if tick < self.cursor + NBUCKETS as u64 {
+            let b = (tick as usize) & MASK;
+            self.buckets[b].push(s);
+            self.occupied[b >> 6] |= 1 << (b & 63);
+            self.near_len += 1;
+        } else {
+            self.far.push(s);
+        }
+        self.len += 1;
+    }
+
+    /// Move far-heap entries whose tick now falls inside the near window
+    /// into their buckets. Called with the cursor settled for this pop.
+    fn migrate(&mut self) {
+        let horizon = self.cursor + NBUCKETS as u64;
+        while let Some(head) = self.far.peek() {
+            if Self::tick_of(head.time) >= horizon {
+                break;
+            }
+            let s = self.far.pop().expect("peeked entry exists");
+            let b = (Self::tick_of(s.time).max(self.cursor) as usize) & MASK;
+            self.buckets[b].push(s);
+            self.occupied[b >> 6] |= 1 << (b & 63);
+            self.near_len += 1;
+        }
+    }
+
+    /// Tick of the first occupied bucket at/after the cursor, scanning
+    /// the bitmap circularly (the near window is one full revolution).
+    fn next_occupied_tick(&self) -> Option<u64> {
+        if self.near_len == 0 {
+            return None;
+        }
+        let b0 = (self.cursor as usize) & MASK;
+        let (w0, bit0) = (b0 >> 6, b0 & 63);
+        let head = self.occupied[w0] & (!0u64 << bit0);
+        if head != 0 {
+            let b = (w0 << 6) | head.trailing_zeros() as usize;
+            return Some(self.cursor + ((b + NBUCKETS - b0) & MASK) as u64);
+        }
+        for k in 1..=WORDS {
+            let wi = (w0 + k) & (WORDS - 1);
+            let mut w = self.occupied[wi];
+            if k == WORDS {
+                // Wrapped back into the cursor's word: only the buckets
+                // *before* the cursor (end of the revolution) remain.
+                w &= !(!0u64 << bit0);
+            }
+            if w != 0 {
+                let b = (wi << 6) | w.trailing_zeros() as usize;
+                return Some(self.cursor + ((b + NBUCKETS - b0) & MASK) as u64);
+            }
+        }
+        None
     }
 
     pub fn pop(&mut self) -> Option<(f64, Event)> {
-        self.heap.pop().map(|s| (s.time, s.event))
+        if self.len == 0 {
+            return None;
+        }
+        if self.near_len == 0 {
+            // Idle stretch: jump the cursor straight to the earliest far
+            // event instead of sweeping empty revolutions.
+            let head = self.far.peek().expect("len > 0 with empty wheel");
+            self.cursor = self.cursor.max(Self::tick_of(head.time));
+        }
+        self.migrate();
+        let tick = self
+            .next_occupied_tick()
+            .expect("near wheel holds the minimum after migration");
+        self.cursor = tick;
+        let b = (tick as usize) & MASK;
+        let bucket = &mut self.buckets[b];
+        let mut mi = 0;
+        for i in 1..bucket.len() {
+            if bucket[i].before(&bucket[mi]) {
+                mi = i;
+            }
+        }
+        let s = bucket.swap_remove(mi);
+        if bucket.is_empty() {
+            self.occupied[b >> 6] &= !(1 << (b & 63));
+        }
+        self.near_len -= 1;
+        self.len -= 1;
+        Some((s.time, s.event))
     }
 
     pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|s| s.time)
+        if self.len == 0 {
+            return None;
+        }
+        // Earliest time overall = min(first occupied near bucket's min
+        // time, far-heap head time). `time` leads the total order, so the
+        // rank/seq tie-break cannot change which *time* comes first.
+        let near = self.next_occupied_tick().map(|tick| {
+            let bucket = &self.buckets[(tick as usize) & MASK];
+            bucket
+                .iter()
+                .map(|s| s.time)
+                .fold(f64::INFINITY, f64::min)
+        });
+        let far = self.far.peek().map(|s| s.time);
+        match (near, far) {
+            (Some(n), Some(f)) => Some(n.min(f)),
+            (Some(n), None) => Some(n),
+            (None, f) => f,
+        }
     }
 
     /// Capture the full queue state for a checkpoint: every scheduled
     /// entry as `(time, rank, seq, event)` sorted in pop order, plus the
     /// next insertion sequence number. `(time, rank, seq)` is a strict
     /// total order (seqs are unique), so the sorted dump plus preserved
-    /// seqs reproduces the exact pop sequence on rebuild.
+    /// seqs reproduces the exact pop sequence on rebuild — regardless of
+    /// how entries were split between the near wheel and the far heap.
     pub fn dump(&self) -> (Vec<(f64, u8, u64, Event)>, u64) {
-        let mut entries: Vec<&Scheduled> = self.heap.iter().collect();
+        let mut entries: Vec<&Scheduled> = self
+            .buckets
+            .iter()
+            .flatten()
+            .chain(self.far.iter())
+            .collect();
         entries.sort_by(|a, b| b.cmp(a)); // Ord is inverted for the max-heap
         (
             entries
@@ -171,25 +371,39 @@ impl EventQueue {
     /// `next_seq`.
     pub fn rebuild(entries: Vec<(f64, u8, u64, Event)>, next_seq: u64) -> EventQueue {
         let mut q = EventQueue::new();
+        // Seat the cursor at the earliest entry so the near window lands
+        // where the resumed sim actually is (t=0 would bucket everything
+        // into the far heap and force a pointless first migration).
+        q.cursor = entries
+            .iter()
+            .map(|e| Self::tick_of(e.0))
+            .min()
+            .unwrap_or(0);
         for (time, rank, seq, event) in entries {
-            q.heap.push(Scheduled { time, rank, seq, event });
+            q.insert(Scheduled {
+                time,
+                rank,
+                seq,
+                event,
+            });
         }
         q.seq = next_seq;
         q
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{check, Config};
 
     #[test]
     fn pops_in_time_order() {
@@ -256,5 +470,127 @@ mod tests {
         assert_eq!(q.pop().unwrap().1, Event::Arrival);
         assert_eq!(q.pop().unwrap().1, Event::ControlTick);
         assert_eq!(q.pop().unwrap().1, Event::SampleTick);
+    }
+
+    #[test]
+    fn far_horizon_events_migrate_in_order() {
+        // Events far beyond the wheel's 4 s coverage (fault firings,
+        // week-scale horizons) live in the overflow heap until the cursor
+        // approaches; pop order must be seamless across the boundary.
+        let mut q = EventQueue::new();
+        q.push(9000.0, Event::ControlTick);
+        q.push(0.5, Event::SampleTick);
+        q.push(100.0, Event::Arrival);
+        q.push(100.0, Event::ControlTick);
+        q.push(8999.9, Event::SampleTick);
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|(t, _)| t).collect();
+        assert_eq!(times, vec![0.5, 100.0, 100.0, 8999.9, 9000.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn non_finite_push_panics_in_release_too() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, Event::ControlTick);
+    }
+
+    /// The old `BinaryHeap` scheduler, kept verbatim as the ordering
+    /// oracle for the property test below.
+    struct OracleQueue {
+        heap: BinaryHeap<Scheduled>,
+        seq: u64,
+    }
+
+    impl OracleQueue {
+        fn new() -> Self {
+            OracleQueue {
+                heap: BinaryHeap::new(),
+                seq: 0,
+            }
+        }
+
+        fn push(&mut self, time: f64, event: Event) {
+            let rank = u8::from(!matches!(event, Event::Arrival));
+            self.heap.push(Scheduled {
+                time,
+                rank,
+                seq: self.seq,
+                event,
+            });
+            self.seq += 1;
+        }
+
+        fn pop(&mut self) -> Option<(f64, Event)> {
+            self.heap.pop().map(|s| (s.time, s.event))
+        }
+    }
+
+    #[test]
+    fn prop_wheel_matches_heap_oracle() {
+        check(Config::named("wheel-vs-heap").cases(96), |rng| {
+            let mut wheel = EventQueue::new();
+            let mut oracle = OracleQueue::new();
+            // Quantized times produce dense exact-tie clusters; the wide
+            // span (0..~40 s at ops≈200) exercises near and far wheels.
+            let quantum = [0.25, 0.001, 7.5][rng.below(3) as usize];
+            let ops = 40 + rng.below(200) as usize;
+            let mut now = 0.0f64;
+            let event = |rng: &mut crate::util::rng::Pcg64| match rng.below(4) {
+                0 => Event::Arrival,
+                1 => Event::ControlTick,
+                2 => Event::SampleTick,
+                _ => Event::PrefillDone {
+                    instance: InstanceId::new(0, 0),
+                    req: rng.below(8),
+                },
+            };
+            for _ in 0..ops {
+                if rng.chance(0.6) || wheel.is_empty() {
+                    // Push 1–4 events at/after `now`, snapped to the
+                    // quantum so exact ties across ranks are common.
+                    for _ in 0..=rng.below(3) {
+                        let steps = rng.below(64) as f64;
+                        let t = now + steps * quantum;
+                        let e = event(rng);
+                        wheel.push(t, e.clone());
+                        oracle.push(t, e);
+                    }
+                } else {
+                    let got = wheel.pop();
+                    let want = oracle.pop();
+                    assert_eq!(got, want, "pop diverged from heap oracle");
+                    if let Some((t, _)) = got {
+                        now = t;
+                    }
+                }
+                if rng.chance(0.05) {
+                    // Mid-stream checkpoint: dump/rebuild must preserve
+                    // the remaining pop sequence exactly.
+                    let (entries, seq) = wheel.dump();
+                    wheel = EventQueue::rebuild(entries, seq);
+                }
+            }
+            // Drain both: full remaining sequences must match.
+            loop {
+                let got = wheel.pop();
+                let want = oracle.pop();
+                assert_eq!(got, want, "drain diverged from heap oracle");
+                if got.is_none() {
+                    break;
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn peek_time_tracks_global_minimum() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push(50.0, Event::ControlTick); // far
+        assert_eq!(q.peek_time(), Some(50.0));
+        q.push(0.25, Event::SampleTick); // near
+        assert_eq!(q.peek_time(), Some(0.25));
+        q.pop();
+        assert_eq!(q.peek_time(), Some(50.0));
     }
 }

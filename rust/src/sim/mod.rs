@@ -20,6 +20,7 @@ pub mod event;
 pub mod faults;
 pub mod instance;
 pub mod policy;
+pub mod reqtable;
 pub mod snapshot;
 pub mod view;
 

@@ -1,0 +1,328 @@
+//! Slab-allocated per-request state arena.
+//!
+//! The engine used to key four separate `HashMap<RequestId, _>`s (clock,
+//! in-flight transfer, transfer payload, fault-cohort membership) — four
+//! SipHash probes and an allocator round-trip per request. [`ReqTable`]
+//! replaces them with one dense slab: each live request owns a single
+//! reusable slot found through a compact open-addressed index
+//! ([`U64Map`], Fibonacci hashing, `u32` slot handles). Slots return to a
+//! free list on release, so steady-state operation allocates nothing.
+//!
+//! Determinism: iteration order is slot order (insertion-and-reuse
+//! dependent), so callers that serialize the table must sort by request
+//! id — exactly what the engine's checkpoint writer already did for the
+//! `HashMap`s it replaces.
+
+const EMPTY: u32 = u32::MAX;
+const TOMB: u32 = u32::MAX - 1;
+
+/// Open-addressed `u64 -> u32` index: linear probing over a power-of-two
+/// table, tombstone deletion, Fibonacci-multiply hashing. Values must be
+/// `< u32::MAX - 1` (the two top values are control sentinels) — slot
+/// handles, in practice.
+struct U64Map {
+    keys: Vec<u64>,
+    vals: Vec<u32>,
+    /// Live entries.
+    live: usize,
+    /// Live entries plus tombstones (controls growth/rehash).
+    used: usize,
+}
+
+impl U64Map {
+    fn new() -> U64Map {
+        U64Map {
+            keys: vec![0; 64],
+            vals: vec![EMPTY; 64],
+            live: 0,
+            used: 0,
+        }
+    }
+
+    #[inline]
+    fn mask(&self) -> usize {
+        self.keys.len() - 1
+    }
+
+    #[inline]
+    fn start(&self, key: u64) -> usize {
+        // Fibonacci hashing: the high bits of the multiply are well mixed;
+        // shift them down to the table's index width.
+        let h = key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        (h >> (64 - self.keys.len().trailing_zeros())) as usize & self.mask()
+    }
+
+    fn get(&self, key: u64) -> Option<u32> {
+        let mask = self.mask();
+        let mut i = self.start(key);
+        loop {
+            let v = self.vals[i];
+            if v == EMPTY {
+                return None;
+            }
+            if v != TOMB && self.keys[i] == key {
+                return Some(v);
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    /// Insert or overwrite. `val` must be below the sentinel range.
+    fn insert(&mut self, key: u64, val: u32) {
+        debug_assert!(val < TOMB, "value collides with control sentinel");
+        // Keep load (incl. tombstones) under 3/4 so probes terminate.
+        if (self.used + 1) * 4 >= self.keys.len() * 3 {
+            self.grow();
+        }
+        let mask = self.mask();
+        let mut i = self.start(key);
+        let mut first_tomb: Option<usize> = None;
+        loop {
+            let v = self.vals[i];
+            if v == EMPTY {
+                let slot = first_tomb.unwrap_or(i);
+                // A reclaimed tombstone does not raise `used`.
+                if first_tomb.is_none() {
+                    self.used += 1;
+                }
+                self.keys[slot] = key;
+                self.vals[slot] = val;
+                self.live += 1;
+                return;
+            }
+            if v == TOMB {
+                if first_tomb.is_none() {
+                    first_tomb = Some(i);
+                }
+            } else if self.keys[i] == key {
+                self.vals[i] = val;
+                return;
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    fn remove(&mut self, key: u64) -> Option<u32> {
+        let mask = self.mask();
+        let mut i = self.start(key);
+        loop {
+            let v = self.vals[i];
+            if v == EMPTY {
+                return None;
+            }
+            if v != TOMB && self.keys[i] == key {
+                self.vals[i] = TOMB;
+                self.live -= 1;
+                return Some(v);
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    /// Rehash into a table sized for the live count (doubling when
+    /// genuinely full, merely purging tombstones when churn-dominated).
+    fn grow(&mut self) {
+        let want = if (self.live + 1) * 2 >= self.keys.len() {
+            self.keys.len() * 2
+        } else {
+            self.keys.len()
+        };
+        let old_keys = std::mem::replace(&mut self.keys, vec![0; want]);
+        let old_vals = std::mem::replace(&mut self.vals, vec![EMPTY; want]);
+        self.live = 0;
+        self.used = 0;
+        for (k, v) in old_keys.into_iter().zip(old_vals) {
+            if v != EMPTY && v != TOMB {
+                self.insert(k, v);
+            }
+        }
+    }
+}
+
+/// Dense per-key arena: one reusable slot per live key, a free list for
+/// O(1) recycling, and a [`U64Map`] index for key lookup.
+pub struct ReqTable<T> {
+    slots: Vec<Option<(u64, T)>>,
+    free: Vec<u32>,
+    index: U64Map,
+    len: usize,
+}
+
+impl<T> Default for ReqTable<T> {
+    fn default() -> Self {
+        ReqTable::new()
+    }
+}
+
+impl<T> ReqTable<T> {
+    pub fn new() -> ReqTable<T> {
+        ReqTable {
+            slots: Vec::new(),
+            free: Vec::new(),
+            index: U64Map::new(),
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn get(&self, key: u64) -> Option<&T> {
+        let i = self.index.get(key)?;
+        self.slots[i as usize].as_ref().map(|(_, v)| v)
+    }
+
+    pub fn get_mut(&mut self, key: u64) -> Option<&mut T> {
+        let i = self.index.get(key)?;
+        self.slots[i as usize].as_mut().map(|(_, v)| v)
+    }
+
+    /// The slot for `key`, created from `T::default()` if absent.
+    pub fn entry(&mut self, key: u64) -> &mut T
+    where
+        T: Default,
+    {
+        let i = match self.index.get(key) {
+            Some(i) => i,
+            None => {
+                let i = match self.free.pop() {
+                    Some(i) => {
+                        self.slots[i as usize] = Some((key, T::default()));
+                        i
+                    }
+                    None => {
+                        assert!(
+                            self.slots.len() < (TOMB as usize),
+                            "ReqTable slot handles exhausted"
+                        );
+                        self.slots.push(Some((key, T::default())));
+                        (self.slots.len() - 1) as u32
+                    }
+                };
+                self.index.insert(key, i);
+                self.len += 1;
+                i
+            }
+        };
+        match &mut self.slots[i as usize] {
+            Some((_, v)) => v,
+            None => unreachable!("index points at a vacant slot"),
+        }
+    }
+
+    /// Remove `key`, returning its state and recycling the slot.
+    pub fn remove(&mut self, key: u64) -> Option<T> {
+        let i = self.index.remove(key)?;
+        let (_, v) = self.slots[i as usize]
+            .take()
+            .expect("index points at a live slot");
+        self.free.push(i);
+        self.len -= 1;
+        Some(v)
+    }
+
+    /// Iterate live entries in slot order (NOT key order — sort before
+    /// serializing).
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &T)> + '_ {
+        self.slots
+            .iter()
+            .filter_map(|s| s.as_ref().map(|(k, v)| (*k, v)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use std::collections::HashMap;
+
+    #[test]
+    fn basic_insert_get_remove() {
+        let mut t: ReqTable<u64> = ReqTable::new();
+        assert!(t.is_empty());
+        *t.entry(7) = 70;
+        *t.entry(0) = 1;
+        *t.entry(u64::MAX) = 2;
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.get(7), Some(&70));
+        assert_eq!(t.get(0), Some(&1));
+        assert_eq!(t.get(u64::MAX), Some(&2));
+        assert_eq!(t.get(8), None);
+        assert_eq!(t.remove(7), Some(70));
+        assert_eq!(t.get(7), None);
+        assert_eq!(t.len(), 2);
+        // Entry on an existing key returns the same slot, not a fresh one.
+        *t.entry(0) += 10;
+        assert_eq!(t.get(0), Some(&11));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn slots_are_recycled_through_the_free_list() {
+        let mut t: ReqTable<u64> = ReqTable::new();
+        for k in 0..100u64 {
+            *t.entry(k) = k;
+        }
+        for k in 0..100u64 {
+            assert_eq!(t.remove(k), Some(k));
+        }
+        let high_water = t.slots.len();
+        // A second wave of 100 must reuse the freed slots exactly.
+        for k in 1000..1100u64 {
+            *t.entry(k) = k;
+        }
+        assert_eq!(t.slots.len(), high_water, "free-list reuse, no growth");
+        assert_eq!(t.len(), 100);
+    }
+
+    #[test]
+    fn iter_visits_every_live_entry_once() {
+        let mut t: ReqTable<u64> = ReqTable::new();
+        for k in [5u64, 1, 9, 3] {
+            *t.entry(k) = k * 2;
+        }
+        t.remove(9);
+        let mut seen: Vec<(u64, u64)> = t.iter().map(|(k, v)| (k, *v)).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![(1, 2), (3, 6), (5, 10)]);
+    }
+
+    #[test]
+    fn prop_matches_std_hashmap_oracle() {
+        // Random insert/overwrite/remove/lookup churn against HashMap,
+        // with a skewed key range so collisions and tombstone reuse are
+        // constantly exercised.
+        prop::check(prop::Config::named("reqtable-vs-hashmap"), |rng| {
+            let mut t: ReqTable<u64> = ReqTable::new();
+            let mut oracle: HashMap<u64, u64> = HashMap::new();
+            let ops = 200 + rng.range_usize(0, 600);
+            for step in 0..ops {
+                let key = rng.below(96);
+                match rng.below(4) {
+                    0 | 1 => {
+                        let v = step as u64;
+                        *t.entry(key) = v;
+                        oracle.insert(key, v);
+                    }
+                    2 => {
+                        assert_eq!(t.remove(key), oracle.remove(&key));
+                    }
+                    _ => {
+                        assert_eq!(t.get(key), oracle.get(&key));
+                    }
+                }
+                assert_eq!(t.len(), oracle.len());
+            }
+            let mut got: Vec<(u64, u64)> = t.iter().map(|(k, v)| (k, *v)).collect();
+            got.sort_unstable();
+            let mut want: Vec<(u64, u64)> = oracle.into_iter().collect();
+            want.sort_unstable();
+            assert_eq!(got, want);
+        });
+    }
+}

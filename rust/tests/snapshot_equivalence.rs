@@ -603,6 +603,173 @@ fn chaos_run_resumes_bit_identically_mid_outage() {
     scenario_resumes_bit_identically(&scenario, 40.0);
 }
 
+// ---------------------- 6. scheduler: mid-wheel checkpoints (near+far)
+
+/// A checkpoint taken while the timing-wheel scheduler is mid-span —
+/// events pending both inside the 4 s near-wheel window (4096 ticks at
+/// 1024/s) and beyond it in the far heap — must dump and rebuild
+/// bit-identically. A materialized trace keeps every future arrival
+/// queued up front, and a crash armed at t = 70 pins a far-heap entry
+/// ~40 s past the checkpoint, so the dump provably straddles the span.
+#[test]
+fn mid_wheel_checkpoint_spans_near_and_far_horizons() {
+    let plan = FaultPlan {
+        seed: 99,
+        entries: vec![FaultSpec {
+            kind: FaultKind::Crash,
+            role: Some(Role::Decoder),
+            instance_index: None,
+            schedule: FaultSchedule::At { t: 70.0 },
+        }],
+    };
+    let scenario = Scenario::new(
+        "mid-wheel",
+        "small-a100",
+        WorkloadSpec::Synthetic {
+            family: TraceFamily::Mixed,
+            rps: 15.0,
+            duration_s: 90.0,
+            seed: 4242,
+        },
+    )
+    .all_baselines()
+    .materialized()
+    .with_faults(plan);
+
+    // Non-vacuity guard: the snapshot's event dump must hold entries on
+    // both sides of the wheel span around the checkpoint time (±0.5 s
+    // margin keeps the assertion clear of the tick-quantized boundary).
+    let spec = scenario.experiment_specs().unwrap().remove(0);
+    let snap = simulate_prefix(&spec, spec.policy, 30.0, 0.0, None).unwrap();
+    let times: Vec<f64> = snap
+        .engine
+        .get("events")
+        .and_then(|e| e.get("entries"))
+        .and_then(Json::as_arr)
+        .expect("snapshot carries the event dump")
+        .iter()
+        .map(|e| e.get("t").and_then(Json::as_f64_bits).expect("entry time"))
+        .collect();
+    let near = times.iter().filter(|t| **t < snap.t + 3.5).count();
+    let far = times.iter().filter(|t| **t > snap.t + 4.5).count();
+    assert!(near > 0, "no pending events inside the near-wheel window");
+    assert!(far > 0, "no pending events beyond the wheel span (far heap)");
+
+    scenario_resumes_bit_identically(&scenario, 30.0);
+}
+
+// ------------------- 7. sketch-mode metrics: exact parity + O(1) resume
+
+/// Sketch-mode runs (`retain_completions = false`) must agree with
+/// retained-mode runs on every exactly-computed report field —
+/// attainments, goodput, GPU accounting, distribution counts and maxima
+/// — while keeping no per-completion state in memory or in checkpoints;
+/// percentiles must stay within the log-bucket quantization bound. An
+/// interrupted sketch-mode run must also resume bit-identically, with
+/// the mode restored from snapshot content.
+#[test]
+fn sketch_mode_matches_retained_and_resumes_bit_identically() {
+    let base = Scenario::new(
+        "sketch-parity",
+        "small-a100",
+        WorkloadSpec::Synthetic {
+            family: TraceFamily::Mixed,
+            rps: 18.0,
+            duration_s: 90.0,
+            seed: 2718,
+        },
+    )
+    .all_baselines();
+    let mut sketch_sc = base.clone();
+    sketch_sc.overrides.retain_completions = false;
+
+    let retained_specs = base.experiment_specs().unwrap();
+    let sketch_specs = sketch_sc.experiment_specs().unwrap();
+    for (rs, ss) in retained_specs.iter().zip(&sketch_specs) {
+        let a = run_experiment(rs);
+        let b = run_experiment(ss);
+        let label = &rs.label;
+        assert!(a.report.n > 0, "{label}: scenario must complete requests");
+        assert_eq!(a.report.n, b.report.n, "{label}: n");
+        for (name, x, y) in [
+            ("ttft_attainment", a.report.ttft_attainment, b.report.ttft_attainment),
+            ("tpot_attainment", a.report.tpot_attainment, b.report.tpot_attainment),
+            ("overall_attainment", a.report.overall_attainment, b.report.overall_attainment),
+            ("goodput_attainment", a.report.goodput_attainment, b.report.goodput_attainment),
+            ("avg_gpus", a.report.avg_gpus, b.report.avg_gpus),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label}: {name}");
+        }
+        assert_eq!(a.report.rejected_actions, b.report.rejected_actions);
+        assert_eq!(a.report.abandoned_requests, b.report.abandoned_requests);
+        assert_eq!(
+            a.sim.metrics.gpu_seconds.to_bits(),
+            b.sim.metrics.gpu_seconds.to_bits(),
+            "{label}: GPU-seconds"
+        );
+        assert_eq!(a.sim.events_processed, b.sim.events_processed);
+        // Distribution counts and maxima are exact in sketch mode; means
+        // and percentiles are not compared here (summation order and
+        // bucket quantization — bounded below and in metrics::sketch).
+        for (name, x, y) in [
+            ("ttft", &a.report.ttft, &b.report.ttft),
+            ("tpot", &a.report.tpot, &b.report.tpot),
+            ("prefill_wait", &a.report.prefill_wait, &b.report.prefill_wait),
+            ("queue_wait", &a.report.queue_wait, &b.report.queue_wait),
+        ] {
+            assert_eq!(x.count, y.count, "{label}: {name}.count");
+            assert_eq!(x.max.to_bits(), y.max.to_bits(), "{label}: {name}.max");
+        }
+        // Percentile bound, checked against the retained run's exact
+        // order statistics: the sketch reports the log-bucket
+        // representative of the nearest-rank element, which sits within
+        // 2.3% of it (metrics::sketch).
+        let mut ttfts: Vec<f64> = a
+            .sim
+            .metrics
+            .completions
+            .iter()
+            .filter(|c| c.arrival >= rs.overrides.warmup_s)
+            .map(|c| c.ttft)
+            .collect();
+        ttfts.sort_by(f64::total_cmp);
+        for (q, approx) in [
+            (50.0, b.report.ttft.p50),
+            (90.0, b.report.ttft.p90),
+            (99.0, b.report.ttft.p99),
+        ] {
+            let exact = ttfts[((q / 100.0) * (ttfts.len() - 1) as f64) as usize];
+            assert!(
+                (approx - exact).abs() <= exact * 0.024 + 1e-12,
+                "{label}: ttft p{q} {approx} strays from nearest-rank {exact}"
+            );
+        }
+        // O(1) memory: sketch mode retains nothing per-completion...
+        assert!(b.sim.metrics.completions.is_empty());
+        assert!(b.sim.metrics.prefill_waits.is_empty());
+        assert!(b.sim.metrics.queue_waits.is_empty());
+    }
+
+    // ...and neither do its checkpoints: the metrics blob carries the
+    // fixed-size sketch instead of the completion list.
+    let spec = sketch_specs.into_iter().next().unwrap();
+    let snap = simulate_prefix(&spec, spec.policy, 45.0, 0.0, None).unwrap();
+    let metrics = snap.engine.get("metrics").expect("metrics blob");
+    assert!(metrics.get("sketch").is_some(), "sketch blob in checkpoint");
+    assert_eq!(
+        metrics
+            .get("completions")
+            .and_then(Json::as_arr)
+            .map(<[Json]>::len),
+        Some(0),
+        "sketch-mode checkpoints must not retain completions"
+    );
+
+    // Interrupted sketch-mode runs resume bit-identically (mode restored
+    // from the snapshot, percentiles and all).
+    scenario_resumes_bit_identically(&sketch_sc, 30.0);
+}
+
 /// Any fault plan replayed from the same seed yields a byte-identical
 /// SloReport, completion list and abandoned ledger — the determinism
 /// contract `docs/faults.md` promises, across the policy registry.
