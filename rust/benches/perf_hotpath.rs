@@ -167,6 +167,7 @@ fn main() {
         max_gpus: 64,
         convertible_chunk_size: 512,
         convertible_reserve_tokens: 4096.0,
+        kvcache: tokenscale::sim::KvCacheConfig::disabled(),
     });
     for _ in 0..8 {
         cluster.spawn(Role::Prefiller, 0.0, Some(0.0));

@@ -14,8 +14,9 @@
 use super::args::Args;
 use crate::report::suite::{
     builtin_suites, diff_bench, fig9_suite, file_suites, find_suite, longtrace_daily_suite,
-    longtrace_suite, DiffTolerance, LONGTRACE_DAILY_FULL_SCALE, LONGTRACE_DAILY_SMOKE_SCALE,
-    LONGTRACE_FULL_SCALE, LONGTRACE_SMOKE_SCALE, SCENARIO_DIR, Suite, SuiteRun,
+    longtrace_suite, longtrace_weekly_suite, DiffTolerance, LONGTRACE_DAILY_FULL_SCALE,
+    LONGTRACE_DAILY_SMOKE_SCALE, LONGTRACE_FULL_SCALE, LONGTRACE_SMOKE_SCALE,
+    LONGTRACE_WEEKLY_FULL_SCALE, LONGTRACE_WEEKLY_SMOKE_SCALE, SCENARIO_DIR, Suite, SuiteRun,
 };
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -71,7 +72,7 @@ fn bench_list() -> anyhow::Result<()> {
 }
 
 /// Resolve the suite named on the command line, honoring the scale flags
-/// of the parameterized built-ins (`longtrace`, `fig9`).
+/// of the parameterized built-ins (the `longtrace` family, `fig9`).
 fn resolve_suite(args: &Args, name: &str) -> anyhow::Result<Suite> {
     let smoke = args.get_bool("smoke");
     let duration = args.get_f64("duration")?;
@@ -89,6 +90,14 @@ fn resolve_suite(args: &Args, name: &str) -> anyhow::Result<Suite> {
             };
             Ok(longtrace_daily_suite(duration.unwrap_or(d0), rps.unwrap_or(r0)))
         }
+        "longtrace-weekly" => {
+            let (d0, r0) = if smoke {
+                LONGTRACE_WEEKLY_SMOKE_SCALE
+            } else {
+                LONGTRACE_WEEKLY_FULL_SCALE
+            };
+            Ok(longtrace_weekly_suite(duration.unwrap_or(d0), rps.unwrap_or(r0)))
+        }
         "fig9" => {
             if rps.is_some() {
                 eprintln!("note: fig9 runs at the paper's 22 RPS; --rps is ignored");
@@ -99,7 +108,7 @@ fn resolve_suite(args: &Args, name: &str) -> anyhow::Result<Suite> {
         _ => {
             if smoke || duration.is_some() || rps.is_some() {
                 eprintln!(
-                    "note: --smoke/--duration/--rps only rescale the longtrace/longtrace-daily/fig9 built-ins"
+                    "note: --smoke/--duration/--rps only rescale the longtrace/longtrace-daily/longtrace-weekly/fig9 built-ins"
                 );
             }
             find_suite(name)

@@ -379,6 +379,45 @@ fn print_trace_stats(trace: &crate::trace::Trace) {
         "mean burst length  : {:.1}s",
         crate::trace::burst::mean_burst_len_s(&series.requests, 1.0, 60.0)
     );
+    print_session_stats(trace);
+}
+
+/// Session/prefix-sharing block of `trace inspect` — only printed when
+/// the trace carries session refs (sessioned synthetic traces or replay
+/// files with session columns).
+fn print_session_stats(trace: &crate::trace::Trace) {
+    let mut turns: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+    let mut tagged = 0usize;
+    let mut warm_requests = 0usize;
+    let mut prefix_tokens = 0usize;
+    let mut prompt_tokens = 0usize;
+    for r in &trace.requests {
+        let Some(s) = r.session else { continue };
+        tagged += 1;
+        *turns.entry(s.id).or_insert(0) += 1;
+        prompt_tokens += r.input_tokens;
+        if s.prefix_tokens > 0 {
+            warm_requests += 1;
+            prefix_tokens += s.prefix_tokens;
+        }
+    }
+    if tagged == 0 {
+        return;
+    }
+    let sessions = turns.len();
+    let turns_mean = tagged as f64 / sessions as f64;
+    let turns_max = turns.values().copied().max().unwrap_or(0);
+    let sharing = if prompt_tokens == 0 {
+        0.0
+    } else {
+        prefix_tokens as f64 / prompt_tokens as f64
+    };
+    println!("sessions           : {sessions} ({tagged} of {} requests tagged)", trace.requests.len());
+    println!("turns per session  : {turns_mean:.2} mean, {turns_max} max");
+    println!(
+        "warm follow-ups    : {warm_requests} requests carrying {prefix_tokens} prefix tokens"
+    );
+    println!("prefix sharing     : {} of tagged prompt tokens", pct(sharing));
 }
 
 fn cmd_trace_inspect(args: &Args) -> anyhow::Result<()> {

@@ -153,6 +153,7 @@ mod tests {
             max_gpus: 64,
             convertible_chunk_size: 512,
             convertible_reserve_tokens: 4096.0,
+            kvcache: crate::sim::KvCacheConfig::disabled(),
         });
         for _ in 0..prefillers {
             c.spawn(Role::Prefiller, 0.0, Some(0.0));
@@ -194,6 +195,7 @@ mod tests {
         cluster.get_mut(pid).unwrap().prefill_queue.push_back(crate::sim::PrefillJob {
             req: Request::new(99, 0.0, 10_000_000, 1),
             remaining: 10_000_000,
+            cached: 0,
             enqueued_at: 0.0,
             chunk_override: None,
         });
@@ -211,6 +213,7 @@ mod tests {
         cluster.get_mut(pid).unwrap().prefill_queue.push_back(crate::sim::PrefillJob {
             req: Request::new(99, 0.0, 10_000_000, 1),
             remaining: 10_000_000,
+            cached: 0,
             enqueued_at: 0.0,
             chunk_override: None,
         });
@@ -218,6 +221,7 @@ mod tests {
         cluster.get_mut(cid).unwrap().prefill_queue.push_back(crate::sim::PrefillJob {
             req: Request::new(98, 0.0, 10_000_000, 1),
             remaining: 10_000_000,
+            cached: 0,
             enqueued_at: 0.0,
             chunk_override: None,
         });

@@ -314,6 +314,7 @@ mod tests {
             max_gpus: 64,
             convertible_chunk_size: 512,
             convertible_reserve_tokens: 4096.0,
+            kvcache: crate::sim::KvCacheConfig::disabled(),
         });
         cluster.spawn(Role::Prefiller, 0.0, Some(0.0));
         cluster.spawn(Role::Decoder, 0.0, Some(0.0));
@@ -347,6 +348,7 @@ mod tests {
             max_gpus: 64,
             convertible_chunk_size: 512,
             convertible_reserve_tokens: 4096.0,
+            kvcache: crate::sim::KvCacheConfig::disabled(),
         });
         for _ in 0..4 {
             cluster.spawn(Role::Prefiller, 0.0, Some(0.0));

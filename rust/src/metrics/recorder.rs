@@ -176,6 +176,15 @@ pub struct MetricsRecorder {
     /// salvaged from that fault completed or was abandoned).
     pub recoveries: Vec<(f64, f64)>,
 
+    // ---- prefix cache (sim::kvcache; zero with the cache disabled) ----
+    /// Cache lookups performed at prefill admission (session-carrying
+    /// requests on cache-enabled instances only).
+    pub prefix_lookups: usize,
+    /// Lookups that found a non-empty warm overlap.
+    pub prefix_hits: usize,
+    /// Prompt tokens whose prefill was skipped thanks to warm prefixes.
+    pub saved_prefill_tokens: f64,
+
     /// Streaming-aggregation mode: when `Some`, completions and wait
     /// samples fold into the sketch instead of the vectors above, and
     /// [`MetricsRecorder::report`] reads the sketch. `None` (the default)
@@ -235,6 +244,13 @@ pub struct SloReport {
     /// Mean / max seconds from a fault to its cohort's full resolution.
     pub recovery_mean_s: f64,
     pub recovery_max_s: f64,
+
+    // ---- prefix cache (sim::kvcache; zero with the cache disabled) ----
+    /// Fraction of prefill-admission cache lookups that found a warm
+    /// prefix (0.0 when the cache is disabled or no lookups happened).
+    pub cache_hit_rate: f64,
+    /// Prompt tokens whose prefill was skipped thanks to warm prefixes.
+    pub saved_prefill_tokens: f64,
 }
 
 impl MetricsRecorder {
@@ -383,7 +399,13 @@ impl MetricsRecorder {
                         .collect(),
                 ),
             )
-            .set("recoveries", pairs(&self.recoveries));
+            .set("recoveries", pairs(&self.recoveries))
+            .set("prefix_lookups", self.prefix_lookups)
+            .set("prefix_hits", self.prefix_hits)
+            .set(
+                "saved_prefill_tokens",
+                Json::f64_bits(self.saved_prefill_tokens),
+            );
         // Optional blob: present exactly when sketch mode is on, so a
         // resumed run re-enters the same mode (snapshot content wins over
         // whatever config the resuming process was built with). Absent in
@@ -496,6 +518,13 @@ impl MetricsRecorder {
                 })
                 .collect::<anyhow::Result<Vec<AbandonedRequest>>>()?,
             recoveries: pairs("recoveries")?,
+            prefix_lookups: req("prefix_lookups")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("{what}: `prefix_lookups` is not an integer"))?,
+            prefix_hits: req("prefix_hits")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("{what}: `prefix_hits` is not an integer"))?,
+            saved_prefill_tokens: bits("saved_prefill_tokens")?,
             sketch: match j.get("sketch") {
                 None => None,
                 Some(s) => Some(CompletionSketch::from_snapshot(s)?),
@@ -537,6 +566,12 @@ impl MetricsRecorder {
             recovery_events,
             recovery_mean_s,
             recovery_max_s,
+            cache_hit_rate: if self.prefix_lookups == 0 {
+                0.0
+            } else {
+                self.prefix_hits as f64 / self.prefix_lookups as f64
+            },
+            saved_prefill_tokens: self.saved_prefill_tokens,
             ..Default::default()
         };
         if let Some(sk) = &self.sketch {

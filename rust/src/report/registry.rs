@@ -18,7 +18,8 @@
 use crate::coordinator::{TokenScale, TokenScaleConfig};
 use crate::report::runner::Deployment;
 use crate::scaler::{
-    ablation_bp, ablation_bpd, prefill_deflect, AiBrix, BlitzScale, DistServe, Thresholds,
+    ablation_bp, ablation_bpd, prefill_deflect, router_policy, AiBrix, BlitzScale, DistServe,
+    RouterKind, Thresholds,
 };
 use crate::sim::{ControlPlane, StaticCoordinator};
 use crate::trace::TraceProfile;
@@ -49,6 +50,10 @@ pub struct PolicyParams {
     /// Fixed fleet sizes (the `static` policy).
     pub prefillers: Option<usize>,
     pub decoders: Option<usize>,
+    /// KV-router overlap weight (`kv-router` family; default 1.0).
+    pub overlap_weight: Option<f64>,
+    /// KV-router softmax temperature (0 = deterministic argmax).
+    pub router_temperature: Option<f64>,
 }
 
 /// Cluster provisions a policy requires from the runner.
@@ -101,6 +106,35 @@ impl PolicyEntry {
     }
 }
 
+/// Build one registry row of the `scaler::routers` family: same policy
+/// mechanics, different prefill placement (`kind`) and scaling flavor.
+fn router_entry(
+    name: &'static str,
+    aliases: &'static [&'static str],
+    description: &'static str,
+    velocity_scaling: bool,
+    kind: fn(&PolicyParams) -> RouterKind,
+) -> PolicyEntry {
+    PolicyEntry {
+        name,
+        aliases,
+        description,
+        params: "overlap_weight=F, router_temperature=F (kv-router only)",
+        build: Arc::new(move |ctx, params| {
+            let avg_in = ctx.workload.avg_input_tokens.max(1.0);
+            BuiltPolicy::plain(Box::new(router_policy(
+                kind(params),
+                velocity_scaling,
+                name,
+                ctx.thresholds,
+                &ctx.deployment.engine,
+                &ctx.deployment.link,
+                avg_in as usize,
+            )))
+        }),
+    }
+}
+
 /// Extra entries registered at runtime (third-party policies).
 fn extras() -> &'static Mutex<Vec<PolicyEntry>> {
     static EXTRAS: Mutex<Vec<PolicyEntry>> = Mutex::new(Vec::new());
@@ -122,7 +156,9 @@ pub struct PolicyRegistry {
 }
 
 impl PolicyRegistry {
-    /// The six stock control planes plus the deflection demo.
+    /// The stock control planes: the paper's four headliners, the Fig. 14
+    /// ablations, the deflection demo, the cache-aware router family
+    /// (3 routers × 2 scaling flavors) and the static fleet.
     pub fn builtin() -> PolicyRegistry {
         let entries = vec![
             PolicyEntry {
@@ -226,6 +262,48 @@ impl PolicyRegistry {
                     )))
                 }),
             },
+            router_entry(
+                "kv-router",
+                &["kv"],
+                "Cache-aware prefill routing (overlap·weight − load) + velocity scaling",
+                true,
+                |p| RouterKind::kv(p.overlap_weight.unwrap_or(1.0), p.router_temperature.unwrap_or(0.0), 0x52),
+            ),
+            router_entry(
+                "kv-router-rps",
+                &[],
+                "Cache-aware prefill routing over DistServe RPS scaling",
+                false,
+                |p| RouterKind::kv(p.overlap_weight.unwrap_or(1.0), p.router_temperature.unwrap_or(0.0), 0x52),
+            ),
+            router_entry(
+                "random-router",
+                &["random"],
+                "Uniform random prefill routing (seeded) + velocity scaling",
+                true,
+                |_| RouterKind::random(0x52),
+            ),
+            router_entry(
+                "random-router-rps",
+                &[],
+                "Uniform random prefill routing over DistServe RPS scaling",
+                false,
+                |_| RouterKind::random(0x52),
+            ),
+            router_entry(
+                "round-robin-router",
+                &["rr", "round-robin"],
+                "Round-robin prefill routing + velocity scaling",
+                true,
+                |_| RouterKind::round_robin(),
+            ),
+            router_entry(
+                "round-robin-router-rps",
+                &[],
+                "Round-robin prefill routing over DistServe RPS scaling",
+                false,
+                |_| RouterKind::round_robin(),
+            ),
             PolicyEntry {
                 name: "static",
                 aliases: &[],
@@ -321,6 +399,12 @@ mod tests {
             ("b+p+d", "b+p+d"),
             ("deflect", "deflect"),
             ("static", "static"),
+            ("kv", "kv-router"),
+            ("KV-Router", "kv-router"),
+            ("kv-router-rps", "kv-router-rps"),
+            ("random", "random-router"),
+            ("rr", "round-robin-router"),
+            ("round-robin-router-rps", "round-robin-router-rps"),
         ] {
             assert_eq!(PolicyKind::parse(query).map(|k| k.name()), Some(canon), "{query}");
         }

@@ -116,6 +116,14 @@ pub struct RunOverrides {
     /// counters, percentiles within the log-bucket error bound
     /// (docs/performance.md).
     pub retain_completions: bool,
+    /// Per-instance prefix-cache model (`sim::kvcache`). The default
+    /// (capacity 0) disables the cache entirely and reproduces pre-cache
+    /// behavior bit-identically.
+    pub kvcache: crate::sim::KvCacheConfig,
+    /// KV-router overlap weight (`kv-router` family).
+    pub overlap_weight: Option<f64>,
+    /// KV-router softmax temperature (0 = deterministic argmax).
+    pub router_temperature: Option<f64>,
 }
 
 impl Default for RunOverrides {
@@ -133,6 +141,9 @@ impl Default for RunOverrides {
             decision_log: 0,
             faults: FaultPlan::default(),
             retain_completions: true,
+            kvcache: crate::sim::KvCacheConfig::disabled(),
+            overlap_weight: None,
+            router_temperature: None,
         }
     }
 }
@@ -144,6 +155,8 @@ impl RunOverrides {
             predictor_accuracy: self.predictor_accuracy,
             prefillers: self.initial_prefillers,
             decoders: self.initial_decoders,
+            overlap_weight: self.overlap_weight,
+            router_temperature: self.router_temperature,
         }
     }
 }
@@ -271,6 +284,7 @@ pub fn prepare_run(
         max_gpus: ov.max_gpus.unwrap_or(dep.max_gpus),
         convertible_chunk_size: built.setup.chunk_size,
         convertible_reserve_tokens: built.setup.reserve_tokens,
+        kvcache: ov.kvcache,
     };
     (sim_cfg, cluster_cfg, built)
 }

@@ -18,8 +18,9 @@
 use crate::report::runner::{deployment, CheckpointSpec, ExperimentSpec, RunOverrides, Workload};
 use crate::report::PolicyKind;
 use crate::trace::{
-    family_source, materialize, step_trace, uniform_bucket_trace, ArrivalSource, BurstWindow,
-    OwnedTraceSource, SourceExt, SourceFactory, Trace, TraceFamily,
+    family_source, materialize, sessioned_family_source, step_trace, uniform_bucket_trace,
+    ArrivalSource, BurstWindow, OwnedTraceSource, SessionModel, SourceExt, SourceFactory, Trace,
+    TraceFamily,
 };
 use crate::sim::FaultPlan;
 use crate::util::json::Json;
@@ -561,6 +562,17 @@ pub struct ScenarioOverrides {
     /// approximate percentiles — docs/performance.md). Default `true`:
     /// figure-grade retained completions.
     pub retain_completions: bool,
+    /// Per-instance prefix-cache capacity in KV tokens (`sim::kvcache`).
+    /// `None`/0 keeps the cache disabled — byte-identical to a build
+    /// without the cache layer.
+    pub kv_capacity_tokens: Option<usize>,
+    /// Prefix-cache block granularity in tokens (default 256). Only
+    /// meaningful alongside `kv_capacity_tokens`.
+    pub kv_block_tokens: Option<usize>,
+    /// kv-router scoring weight on warm-prefix overlap (docs/kv_routing.md).
+    pub overlap_weight: Option<f64>,
+    /// kv-router softmax temperature; `None`/0 is strict argmax.
+    pub router_temperature: Option<f64>,
 }
 
 impl Default for ScenarioOverrides {
@@ -575,6 +587,10 @@ impl Default for ScenarioOverrides {
             sample_interval_s: None,
             decision_log: 0,
             retain_completions: true,
+            kv_capacity_tokens: None,
+            kv_block_tokens: None,
+            overlap_weight: None,
+            router_temperature: None,
         }
     }
 }
@@ -607,6 +623,36 @@ impl ScenarioOverrides {
                 });
             }
         }
+        if let Some(b) = self.kv_block_tokens {
+            if b == 0 {
+                return Err(ScenarioError::BadValue {
+                    field: "overrides.kv_block_tokens".into(),
+                    reason: "block granularity must be at least 1 token".into(),
+                });
+            }
+            if self.kv_capacity_tokens.is_none() {
+                return Err(ScenarioError::BadValue {
+                    field: "overrides.kv_block_tokens".into(),
+                    reason: "set kv_capacity_tokens to enable the prefix cache first".into(),
+                });
+            }
+        }
+        if let Some(w) = self.overlap_weight {
+            if !w.is_finite() {
+                return Err(ScenarioError::BadValue {
+                    field: "overrides.overlap_weight".into(),
+                    reason: format!("must be finite, got {w}"),
+                });
+            }
+        }
+        if let Some(t) = self.router_temperature {
+            if !(t.is_finite() && t >= 0.0) {
+                return Err(ScenarioError::BadValue {
+                    field: "overrides.router_temperature".into(),
+                    reason: format!("must be a non-negative finite number, got {t}"),
+                });
+            }
+        }
         Ok(())
     }
 
@@ -636,6 +682,18 @@ impl ScenarioOverrides {
         if !self.retain_completions {
             j = j.set("retain_completions", false);
         }
+        if let Some(v) = self.kv_capacity_tokens {
+            j = j.set("kv_capacity_tokens", v);
+        }
+        if let Some(v) = self.kv_block_tokens {
+            j = j.set("kv_block_tokens", v);
+        }
+        if let Some(v) = self.overlap_weight {
+            j = j.set("overlap_weight", v);
+        }
+        if let Some(v) = self.router_temperature {
+            j = j.set("router_temperature", v);
+        }
         j
     }
 
@@ -653,6 +711,10 @@ impl ScenarioOverrides {
                 "sample_interval_s",
                 "decision_log",
                 "retain_completions",
+                "kv_capacity_tokens",
+                "kv_block_tokens",
+                "overlap_weight",
+                "router_temperature",
             ],
         )?;
         let mut ov = ScenarioOverrides {
@@ -663,6 +725,10 @@ impl ScenarioOverrides {
             max_gpus: opt_usize(j, "max_gpus")?,
             sample_interval_s: opt_f64(j, "sample_interval_s")?,
             decision_log: opt_usize(j, "decision_log")?.unwrap_or(0),
+            kv_capacity_tokens: opt_usize(j, "kv_capacity_tokens")?,
+            kv_block_tokens: opt_usize(j, "kv_block_tokens")?,
+            overlap_weight: opt_f64(j, "overlap_weight")?,
+            router_temperature: opt_f64(j, "router_temperature")?,
             ..Default::default()
         };
         if let Some(v) = j.get("retain_completions") {
@@ -691,6 +757,12 @@ pub struct Scenario {
     /// Registry names of the control planes to run (one spec per entry).
     pub policies: Vec<String>,
     pub workload: WorkloadSpec,
+    /// Multi-turn session structure layered over a *synthetic* workload
+    /// (`trace::SessionSource`): base arrivals open conversations whose
+    /// follow-up turns carry warm prefixes for `sim::kvcache`. Replay
+    /// workloads carry their own session columns instead; `None` keeps
+    /// the stream bit-identical to the sessionless generator.
+    pub sessions: Option<SessionModel>,
     pub transforms: Vec<TransformStep>,
     pub overrides: ScenarioOverrides,
     /// SLO targets (None = paper defaults).
@@ -718,6 +790,7 @@ impl Scenario {
             deployment: deployment.into(),
             policies: Vec::new(),
             workload,
+            sessions: None,
             transforms: Vec::new(),
             overrides: ScenarioOverrides::default(),
             slo: None,
@@ -741,6 +814,12 @@ impl Scenario {
     pub fn all_baselines(mut self) -> Scenario {
         self.policies
             .extend(PolicyKind::all_baselines().iter().map(|p| p.name().to_string()));
+        self
+    }
+
+    /// Layer multi-turn sessions over the (synthetic) workload.
+    pub fn with_sessions(mut self, model: SessionModel) -> Scenario {
+        self.sessions = Some(model);
         self
     }
 
@@ -811,6 +890,34 @@ impl Scenario {
             }
         }
         self.workload.validate()?;
+        if let Some(s) = &self.sessions {
+            if !matches!(self.workload, WorkloadSpec::Synthetic { .. }) {
+                return Err(ScenarioError::BadValue {
+                    field: "sessions".into(),
+                    reason: "session structure only layers over synthetic workloads \
+                             (replay files carry their own session columns)"
+                        .into(),
+                });
+            }
+            if !(s.turns_mean.is_finite() && s.turns_mean >= 1.0) {
+                return Err(ScenarioError::BadValue {
+                    field: "sessions.turns_mean".into(),
+                    reason: format!("must be at least 1, got {}", s.turns_mean),
+                });
+            }
+            if !(s.think_time_s.is_finite() && s.think_time_s > 0.0) {
+                return Err(ScenarioError::BadValue {
+                    field: "sessions.think_time_s".into(),
+                    reason: format!("must be positive, got {}", s.think_time_s),
+                });
+            }
+            if s.max_context == 0 {
+                return Err(ScenarioError::BadValue {
+                    field: "sessions.max_context".into(),
+                    reason: "context cap must be at least 1 token".into(),
+                });
+            }
+        }
         for t in &self.transforms {
             t.validate()?;
         }
@@ -878,8 +985,19 @@ impl Scenario {
             other => Base::Spec(other.clone()),
         };
         let transforms = self.transforms.clone();
+        let sessions = self.sessions;
         Ok(Arc::new(move || {
             let mut src: Box<dyn ArrivalSource + Send> = match &base {
+                // validate() pins sessions to synthetic workloads, so the
+                // sessioned path never loses a replay/step stream here.
+                Base::Spec(WorkloadSpec::Synthetic {
+                    family,
+                    rps,
+                    duration_s,
+                    seed,
+                }) if sessions.is_some() => {
+                    sessioned_family_source(*family, *rps, *duration_s, *seed, sessions)
+                }
                 Base::Spec(w) => w
                     .build_source()
                     .expect("workload validated at factory construction"),
@@ -915,6 +1033,18 @@ impl Scenario {
             decision_log: self.overrides.decision_log,
             faults: self.faults.clone(),
             retain_completions: self.overrides.retain_completions,
+            kvcache: match self.overrides.kv_capacity_tokens {
+                Some(cap) if cap > 0 => crate::sim::KvCacheConfig {
+                    capacity_tokens: cap,
+                    block_tokens: self
+                        .overrides
+                        .kv_block_tokens
+                        .unwrap_or(crate::sim::KvCacheConfig::disabled().block_tokens),
+                },
+                _ => crate::sim::KvCacheConfig::disabled(),
+            },
+            overlap_weight: self.overrides.overlap_weight,
+            router_temperature: self.overrides.router_temperature,
         }
     }
 
@@ -975,6 +1105,15 @@ impl Scenario {
                 Json::Arr(self.policies.iter().map(|p| Json::Str(p.clone())).collect()),
             )
             .set("workload", self.workload.to_json());
+        if let Some(s) = &self.sessions {
+            j = j.set(
+                "sessions",
+                Json::obj()
+                    .set("turns_mean", s.turns_mean)
+                    .set("think_time_s", s.think_time_s)
+                    .set("max_context", s.max_context),
+            );
+        }
         if !self.transforms.is_empty() {
             j = j.set(
                 "transforms",
@@ -1021,6 +1160,7 @@ impl Scenario {
                 "deployment",
                 "policies",
                 "workload",
+                "sessions",
                 "transforms",
                 "overrides",
                 "slo",
@@ -1051,6 +1191,20 @@ impl Scenario {
                         })
                     })
                     .collect::<Result<_, _>>()?
+            }
+        };
+        let sessions = match j.get("sessions") {
+            None => None,
+            Some(s) => {
+                check_fields(s, "sessions", &["turns_mean", "think_time_s", "max_context"])?;
+                let mut model = SessionModel::new(
+                    req_f64(s, "sessions", "turns_mean")?,
+                    req_f64(s, "sessions", "think_time_s")?,
+                );
+                if let Some(cap) = opt_usize(s, "max_context")? {
+                    model.max_context = cap;
+                }
+                Some(model)
             }
         };
         let mut transforms = Vec::new();
@@ -1112,6 +1266,7 @@ impl Scenario {
             deployment: req_str(j, "scenario", "deployment")?.to_string(),
             policies,
             workload,
+            sessions,
             transforms,
             overrides,
             slo,
@@ -1235,6 +1390,11 @@ mod tests {
         let mut sc = demo_scenario();
         sc.overrides.convertibles = Some(2);
         sc.overrides.max_gpus = Some(8);
+        sc.overrides.kv_capacity_tokens = Some(200_000);
+        sc.overrides.kv_block_tokens = Some(128);
+        sc.overrides.overlap_weight = Some(1.5);
+        sc.overrides.router_temperature = Some(0.25);
+        sc.sessions = Some(SessionModel::new(3.0, 8.0));
         sc.slo = Some(SloPolicy::default());
         sc.materialize = true;
         let j = sc.to_json();
@@ -1243,6 +1403,57 @@ mod tests {
         // And through text.
         let back2 = Scenario::from_json(&Json::parse(&j.pretty()).unwrap()).unwrap();
         assert_eq!(sc, back2);
+    }
+
+    #[test]
+    fn sessions_only_layer_over_synthetic_workloads() {
+        let mut sc = demo_scenario();
+        sc.workload = WorkloadSpec::Replay { path: "trace.csv".into() };
+        sc.sessions = Some(SessionModel::new(3.0, 8.0));
+        assert!(matches!(sc.validate(), Err(ScenarioError::BadValue { .. })));
+
+        let mut sc = demo_scenario();
+        sc.sessions = Some(SessionModel::new(0.5, 8.0));
+        assert!(matches!(sc.validate(), Err(ScenarioError::BadValue { .. })));
+        let mut sc = demo_scenario();
+        sc.sessions = Some(SessionModel::new(3.0, 0.0));
+        assert!(matches!(sc.validate(), Err(ScenarioError::BadValue { .. })));
+    }
+
+    #[test]
+    fn sessioned_factory_tags_requests_and_reaches_cells() {
+        let sc = demo_scenario().with_sessions(SessionModel::new(3.0, 5.0));
+        let f = sc.source_factory().unwrap();
+        let a = materialize(f().as_mut());
+        let b = materialize(f().as_mut());
+        assert_eq!(a.requests, b.requests, "sessioned factory stays deterministic");
+        assert!(a.requests.iter().all(|r| r.session.is_some()));
+        assert!(
+            a.requests.iter().any(|r| r.session.unwrap().prefix_tokens > 0),
+            "mean 3 turns must produce warm follow-ups"
+        );
+        // Sessionless scenarios stay byte-identical to the base stream.
+        let plain = demo_scenario();
+        let p = materialize(plain.source_factory().unwrap()().as_mut());
+        assert!(p.requests.iter().all(|r| r.session.is_none()));
+    }
+
+    #[test]
+    fn cache_overrides_flow_into_run_overrides() {
+        let mut sc = demo_scenario();
+        sc.overrides.kv_capacity_tokens = Some(100_000);
+        sc.overrides.overlap_weight = Some(2.0);
+        let specs = sc.experiment_specs().unwrap();
+        assert_eq!(specs[0].overrides.kvcache.capacity_tokens, 100_000);
+        assert!(specs[0].overrides.kvcache.enabled());
+        assert_eq!(specs[0].overrides.overlap_weight, Some(2.0));
+        // Default: cache disabled, byte-identical to the pre-cache runner.
+        let specs = demo_scenario().experiment_specs().unwrap();
+        assert!(!specs[0].overrides.kvcache.enabled());
+        // Block granularity without a capacity is a config error.
+        let mut bad = demo_scenario();
+        bad.overrides.kv_block_tokens = Some(64);
+        assert!(matches!(bad.validate(), Err(ScenarioError::BadValue { .. })));
     }
 
     #[test]

@@ -42,7 +42,10 @@ use std::time::Instant;
 /// fault-injection counters (lost/retried/abandoned requests, wasted
 /// prefill tokens, transfer retries/aborts, recovery times). Always
 /// emitted; zero on fault-free runs.
-pub const BENCH_SCHEMA_VERSION: u64 = 3;
+/// v4: per-cell prefix-cache ledger — `cache_hit_rate` and
+/// `saved_prefill_tokens` (`sim::kvcache`). Always emitted; zero when
+/// the cache is disabled.
+pub const BENCH_SCHEMA_VERSION: u64 = 4;
 
 /// Directory scanned for file-based suites (relative to the repo root).
 pub const SCENARIO_DIR: &str = "scenarios";
@@ -339,6 +342,12 @@ pub struct ScenarioOutcome {
     pub recovery_events: usize,
     pub recovery_mean_s: f64,
     pub recovery_max_s: f64,
+
+    // ---- prefix-cache ledger (schema v4; zero when the cache is off) ----
+    /// Warm-prefix hit rate over all prefill routes (`sim::kvcache`).
+    pub cache_hit_rate: f64,
+    /// Prefill tokens skipped thanks to warm prefixes.
+    pub saved_prefill_tokens: f64,
 }
 
 impl ScenarioOutcome {
@@ -376,6 +385,8 @@ impl ScenarioOutcome {
             recovery_events: r.recovery_events,
             recovery_mean_s: r.recovery_mean_s,
             recovery_max_s: r.recovery_max_s,
+            cache_hit_rate: r.cache_hit_rate,
+            saved_prefill_tokens: r.saved_prefill_tokens,
         }
     }
 
@@ -410,6 +421,8 @@ impl ScenarioOutcome {
             .set("recovery_events", self.recovery_events)
             .set("recovery_mean_s", self.recovery_mean_s)
             .set("recovery_max_s", self.recovery_max_s)
+            .set("cache_hit_rate", self.cache_hit_rate)
+            .set("saved_prefill_tokens", self.saved_prefill_tokens)
     }
 }
 
@@ -1108,10 +1121,86 @@ pub const LONGTRACE_DAILY_FULL_SCALE: (f64, f64) = (86_400.0, 22.0);
 /// scenario shapes, minutes-long horizon for CI and tests).
 pub const LONGTRACE_DAILY_SMOKE_SCALE: (f64, f64) = (1_200.0, 4.0);
 
+/// Week-scale sketch-mode sweep: seven day/night periods over one
+/// streamed horizon, `retain_completions = false` throughout so the
+/// recorder stays O(1) in completed requests (streaming percentile
+/// sketches — docs/performance.md) no matter how many millions of
+/// requests the week serves. Cross-cell warm-start amortizes the fleet
+/// ramp exactly like `longtrace-daily`; the warm prefix is 2 % of the
+/// horizon (~3.4 simulated hours at full scale).
+pub fn longtrace_weekly_suite(duration_s: f64, rps: f64) -> Suite {
+    let diurnal_amp = 0.5;
+    let warm = CheckpointSpec {
+        warm_start_s: duration_s * 0.02,
+        policy: "tokenscale".into(),
+        every_s: 0.0,
+    };
+    let ov = ScenarioOverrides {
+        warmup_s: duration_s * 0.02,
+        retain_completions: false,
+        ..Default::default()
+    };
+    Suite::new(
+        "longtrace-weekly",
+        "week-scale sketch-mode diurnal sweeps (O(1)-memory recorder, cross-cell warm-start)",
+    )
+    .scenario(
+        // Seven full day/night periods across the horizon.
+        Scenario::new(
+            "weekly-diurnal",
+            "large-a100",
+            WorkloadSpec::Synthetic {
+                family: TraceFamily::AzureConv,
+                rps: rps * (1.0 + diurnal_amp),
+                duration_s,
+                seed: 2101,
+            },
+        )
+        .transform(TransformStep::Diurnal {
+            amplitude: diurnal_amp,
+            period_s: duration_s / 7.0,
+            seed: 2202,
+        })
+        .all_baselines()
+        .with_overrides(ov.clone())
+        .with_checkpoint(warm.clone()),
+    )
+    .scenario(
+        // The mixed-family head-to-head at the same weekly rhythm.
+        Scenario::new(
+            "weekly-mixed",
+            "large-a100",
+            WorkloadSpec::Synthetic {
+                family: TraceFamily::Mixed,
+                rps,
+                duration_s,
+                seed: 2303,
+            },
+        )
+        .transform(TransformStep::Diurnal {
+            amplitude: diurnal_amp,
+            period_s: duration_s / 7.0,
+            seed: 2404,
+        })
+        .policies(&["tokenscale", "distserve"])
+        .with_overrides(ov)
+        .with_checkpoint(warm),
+    )
+}
+
+/// `(duration_s, rps)` of the `longtrace-weekly` full scale: 7 simulated
+/// days at the paper's 22 RPS.
+pub const LONGTRACE_WEEKLY_FULL_SCALE: (f64, f64) = (604_800.0, 22.0);
+
+/// `(duration_s, rps)` of the `longtrace-weekly` smoke scale (same
+/// scenario shapes and sketch-mode recorder, minutes-long horizon).
+pub const LONGTRACE_WEEKLY_SMOKE_SCALE: (f64, f64) = (2_400.0, 4.0);
+
 /// Every built-in suite at its default scale.
 pub fn builtin_suites() -> Vec<Suite> {
     let (lt_duration, lt_rps) = LONGTRACE_FULL_SCALE;
     let (day_duration, day_rps) = LONGTRACE_DAILY_FULL_SCALE;
+    let (week_duration, week_rps) = LONGTRACE_WEEKLY_FULL_SCALE;
     vec![
         fig4_suite(),
         fig9_suite(300.0),
@@ -1124,6 +1213,7 @@ pub fn builtin_suites() -> Vec<Suite> {
         decoder_validation_suite(),
         longtrace_suite(lt_duration, lt_rps),
         longtrace_daily_suite(day_duration, day_rps),
+        longtrace_weekly_suite(week_duration, week_rps),
     ]
 }
 
@@ -1201,6 +1291,13 @@ mod tests {
         assert!(daily.scenarios.iter().all(|sc| sc.checkpoint.is_some()));
         let (d, r) = LONGTRACE_DAILY_SMOKE_SCALE;
         longtrace_daily_suite(d, r).validate().unwrap();
+        // The week-scale suite runs sketch-mode throughout (O(1) memory)
+        // and also validates at smoke scale.
+        let weekly = suites.iter().find(|s| s.name == "longtrace-weekly").unwrap();
+        assert!(weekly.scenarios.iter().all(|sc| !sc.overrides.retain_completions));
+        assert!(weekly.scenarios.iter().all(|sc| sc.checkpoint.is_some()));
+        let (d, r) = LONGTRACE_WEEKLY_SMOKE_SCALE;
+        longtrace_weekly_suite(d, r).validate().unwrap();
     }
 
     #[test]

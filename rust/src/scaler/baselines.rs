@@ -22,9 +22,10 @@ use crate::util::json::Json;
 use crate::util::stats::SlidingWindow;
 use crate::workload::{BucketScheme, Request, SloPolicy};
 
-/// Shared mechanics for the baselines: traffic windows + least-loaded
-/// routing, expressed over the v2 signal/action exchange.
-struct BaseState {
+/// Shared mechanics for the baselines (and the `scaler::routers` family):
+/// traffic windows + least-loaded routing, expressed over the v2
+/// signal/action exchange.
+pub(crate) struct BaseState {
     /// In-system request count (arrivals − completions).
     inflight: usize,
     /// Windowed per-stage concurrency samples — the Knative-heritage
@@ -38,12 +39,12 @@ struct BaseState {
     scheme: BucketScheme,
     prefill_hyst: Hysteresis,
     decode_hyst: Hysteresis,
-    min_prefillers: usize,
-    min_decoders: usize,
+    pub(crate) min_prefillers: usize,
+    pub(crate) min_decoders: usize,
 }
 
 impl BaseState {
-    fn new(down_delay_ticks: usize, conc_window_s: f64) -> BaseState {
+    pub(crate) fn new(down_delay_ticks: usize, conc_window_s: f64) -> BaseState {
         BaseState {
             inflight: 0,
             prefill_conc: SlidingWindow::new(conc_window_s),
@@ -57,7 +58,7 @@ impl BaseState {
         }
     }
 
-    fn on_arrival(&mut self, now: f64, _req: &Request) {
+    pub(crate) fn on_arrival(&mut self, now: f64, _req: &Request) {
         self.inflight += 1;
         self.rps.push(now, 1.0);
     }
@@ -114,7 +115,7 @@ impl BaseState {
         }
     }
 
-    fn route_prefill(&self, view: &ClusterView<'_>) -> Option<InstanceId> {
+    pub(crate) fn route_prefill(&self, view: &ClusterView<'_>) -> Option<InstanceId> {
         view.running_of(Role::Prefiller)
             .min_by_key(|i| i.inflight_prefill_tokens())
             .map(|i| i.id)
@@ -135,7 +136,7 @@ impl BaseState {
     /// arrival accounting, least-loaded routing, completion accounting.
     /// Returns true when the signal was one of those (Tick and lifecycle
     /// notifications return false for the caller to handle).
-    fn base_signal(
+    pub(crate) fn base_signal(
         &mut self,
         now: f64,
         signal: Signal<'_>,
@@ -177,7 +178,7 @@ impl BaseState {
         }
     }
 
-    fn push_fleet(actions: &mut Vec<Action>, prefillers: usize, decoders: usize) {
+    pub(crate) fn push_fleet(actions: &mut Vec<Action>, prefillers: usize, decoders: usize) {
         actions.push(Action::SetFleet {
             role: Role::Prefiller,
             target: prefillers,
@@ -192,7 +193,7 @@ impl BaseState {
     /// offline thresholds, floored and hysteresis-smoothed. Shared by
     /// every RPS-threshold policy so a threshold/hysteresis fix lands in
     /// all of them at once.
-    fn rps_fleet_targets(
+    pub(crate) fn rps_fleet_targets(
         &mut self,
         now: f64,
         view: &ClusterView<'_>,
@@ -211,9 +212,29 @@ impl BaseState {
         )
     }
 
+    /// Apply the per-stage minimums and hysteresis smoothing to raw fleet
+    /// targets — the tail every tick handler shares.
+    pub(crate) fn smoothed_fleet(
+        &mut self,
+        view: &ClusterView<'_>,
+        p_target: usize,
+        d_target: usize,
+    ) -> (usize, usize) {
+        (
+            self.prefill_hyst.apply(
+                view.active_count(Role::Prefiller),
+                p_target.max(self.min_prefillers),
+            ),
+            self.decode_hyst.apply(
+                view.active_count(Role::Decoder),
+                d_target.max(self.min_decoders),
+            ),
+        )
+    }
+
     /// Bit-exact serialization of the shared baseline stream state for
     /// checkpoint/restore (sim::snapshot).
-    fn to_snapshot(&self) -> Json {
+    pub(crate) fn to_snapshot(&self) -> Json {
         Json::obj()
             .set("inflight", self.inflight)
             .set("prefill_conc", self.prefill_conc.to_snapshot())
@@ -225,7 +246,7 @@ impl BaseState {
 
     /// Restore state captured by [`BaseState::to_snapshot`] in place
     /// (thresholds/minimums are construction config, not stream state).
-    fn restore_snapshot(&mut self, j: &Json) -> anyhow::Result<()> {
+    pub(crate) fn restore_snapshot(&mut self, j: &Json) -> anyhow::Result<()> {
         let what = "baseline snapshot";
         let get = |key: &str| -> anyhow::Result<&Json> {
             j.get(key).ok_or_else(|| anyhow::anyhow!("{what}: missing `{key}`"))
@@ -621,6 +642,7 @@ mod tests {
             max_gpus: 64,
             convertible_chunk_size: 512,
             convertible_reserve_tokens: 0.0,
+            kvcache: crate::sim::KvCacheConfig::disabled(),
         });
         c.spawn(Role::Prefiller, 0.0, Some(0.0));
         c.spawn(Role::Decoder, 0.0, Some(0.0));
@@ -676,6 +698,7 @@ mod tests {
                 .push_back(crate::sim::PrefillJob {
                     req: Request::new(i as u64, 0.0, 500, 100),
                     remaining: 500,
+                    cached: 0,
                     enqueued_at: 0.0,
                     chunk_override: None,
                 });
@@ -775,6 +798,7 @@ mod tests {
             .push_back(crate::sim::PrefillJob {
                 req: Request::new(99, 0.0, 10_000_000, 1),
                 remaining: 10_000_000,
+                cached: 0,
                 enqueued_at: 0.0,
                 chunk_override: None,
             });

@@ -1,0 +1,479 @@
+//! Cache-aware prefill router family (`sim::kvcache` consumers).
+//!
+//! Three routers that differ **only** in where they place prefill work —
+//! decode dispatch, completion accounting and autoscaling are the shared
+//! [`BaseState`] mechanics, so a BENCH_routing delta between two routers
+//! is attributable to placement alone:
+//!
+//! - **random** — uniform choice over running prefillers (seeded, so runs
+//!   are reproducible). The classic stateless load balancer.
+//! - **round-robin** — cycling counter over the spawn-ordered prefiller
+//!   list. What most gateways ship by default.
+//! - **kv** — Dynamo-style cache-aware scoring: each prefiller is scored
+//!   `overlap_weight · warm_overlap(req) − inflight_prefill_tokens`, the
+//!   argmax wins (earliest spawn breaks ties). Warm overlap is read
+//!   through [`ClusterView::warm_overlap`], which never perturbs cache
+//!   LRU state, so scoring every candidate is observation-free. An
+//!   optional softmax `temperature > 0` turns the argmax into seeded
+//!   probabilistic sampling over `exp(score/T)` — trading a little hit
+//!   rate for load spread when many sessions share one instance.
+//!
+//! Each router comes in two scaling variants: `*-router` drives the
+//! TokenScale velocity calculators (Eqs. 2–3) from a [`Gateway`] ingest,
+//! `*-router-rps` uses the DistServe RPS thresholds — giving the
+//! `scenarios/routing.toml` suite a 3 × 2 grid without touching the
+//! engine.
+
+use super::baselines::BaseState;
+use super::thresholds::Thresholds;
+use super::tokenscale as ts_calc;
+use crate::coordinator::Gateway;
+use crate::perfmodel::{EngineModel, LinkSpec};
+use crate::sim::{Action, ClusterView, ControlPlane, InstanceId, PolicyState, Role, Signal};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::velocity::VelocityProfile;
+use crate::workload::{OutputPredictor, Request};
+
+/// Seed salt for router RNG streams, so a router's draws never collide
+/// with the output predictor's (both start from small scenario seeds).
+const ROUTER_SEED_SALT: u64 = 0x5E55_1045_0042_0075;
+
+/// The placement strategy (and its stream state).
+pub enum RouterKind {
+    /// Uniform seeded choice over running prefillers.
+    Random { rng: Pcg64 },
+    /// Cycling counter over the spawn-ordered prefiller list.
+    RoundRobin { counter: u64 },
+    /// Overlap-vs-load scoring; `temperature > 0` softmax-samples.
+    Kv {
+        overlap_weight: f64,
+        temperature: f64,
+        rng: Pcg64,
+    },
+}
+
+impl RouterKind {
+    pub fn random(seed: u64) -> RouterKind {
+        RouterKind::Random {
+            rng: Pcg64::new(seed ^ ROUTER_SEED_SALT),
+        }
+    }
+
+    pub fn round_robin() -> RouterKind {
+        RouterKind::RoundRobin { counter: 0 }
+    }
+
+    pub fn kv(overlap_weight: f64, temperature: f64, seed: u64) -> RouterKind {
+        RouterKind::Kv {
+            overlap_weight,
+            temperature,
+            rng: Pcg64::new(seed ^ ROUTER_SEED_SALT),
+        }
+    }
+
+    fn kind_name(&self) -> &'static str {
+        match self {
+            RouterKind::Random { .. } => "random",
+            RouterKind::RoundRobin { .. } => "round-robin",
+            RouterKind::Kv { .. } => "kv",
+        }
+    }
+
+    /// Pick a prefill target among running prefillers (`None` when the
+    /// fleet is empty — the engine re-signals via `RetryPrefill`).
+    fn route(&mut self, req: &Request, view: &ClusterView<'_>) -> Option<InstanceId> {
+        let candidates: Vec<&crate::sim::Instance> = view.running_of(Role::Prefiller).collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        match self {
+            RouterKind::Random { rng } => {
+                Some(candidates[rng.below(candidates.len() as u64) as usize].id)
+            }
+            RouterKind::RoundRobin { counter } => {
+                let ix = (*counter % candidates.len() as u64) as usize;
+                *counter += 1;
+                Some(candidates[ix].id)
+            }
+            RouterKind::Kv {
+                overlap_weight,
+                temperature,
+                rng,
+            } => {
+                let scores: Vec<f64> = candidates
+                    .iter()
+                    .map(|i| {
+                        *overlap_weight * i.warm_overlap(req) as f64
+                            - i.inflight_prefill_tokens() as f64
+                    })
+                    .collect();
+                if *temperature > 0.0 {
+                    // Softmax over score/T, max-subtracted for stability.
+                    let max = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                    let w: Vec<f64> =
+                        scores.iter().map(|s| ((s - max) / *temperature).exp()).collect();
+                    Some(candidates[rng.weighted(&w)].id)
+                } else {
+                    // Strict argmax; first (oldest spawn) wins ties, so
+                    // with no warm overlap anywhere this degenerates to
+                    // deterministic least-loaded routing.
+                    let mut best = 0;
+                    for (i, s) in scores.iter().enumerate() {
+                        if *s > scores[best] {
+                            best = i;
+                        }
+                    }
+                    Some(candidates[best].id)
+                }
+            }
+        }
+    }
+
+    /// Bit-exact stream state (sim::snapshot). Config knobs
+    /// (overlap weight, temperature) are construction parameters and are
+    /// re-derived from the experiment spec on restore.
+    fn to_snapshot(&self) -> Json {
+        let j = Json::obj().set("kind", self.kind_name());
+        match self {
+            RouterKind::Random { rng } | RouterKind::Kv { rng, .. } => {
+                let (state, inc) = rng.state_parts();
+                j.set("rng_state", Json::u128_hex(state))
+                    .set("rng_inc", Json::u128_hex(inc))
+            }
+            RouterKind::RoundRobin { counter } => j.set("counter", Json::u64_hex(*counter)),
+        }
+    }
+
+    fn restore_snapshot(&mut self, j: &Json) -> anyhow::Result<()> {
+        let what = "router snapshot";
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("{what}: missing `kind`"))?;
+        anyhow::ensure!(
+            kind == self.kind_name(),
+            "{what}: kind `{kind}` does not match policy `{}`",
+            self.kind_name()
+        );
+        match self {
+            RouterKind::Random { rng } | RouterKind::Kv { rng, .. } => {
+                let state = j
+                    .get("rng_state")
+                    .and_then(Json::as_u128_hex)
+                    .ok_or_else(|| anyhow::anyhow!("{what}: missing `rng_state`"))?;
+                let inc = j
+                    .get("rng_inc")
+                    .and_then(Json::as_u128_hex)
+                    .ok_or_else(|| anyhow::anyhow!("{what}: missing `rng_inc`"))?;
+                *rng = Pcg64::from_state_parts(state, inc);
+            }
+            RouterKind::RoundRobin { counter } => {
+                *counter = j
+                    .get("counter")
+                    .and_then(Json::as_u64_hex)
+                    .ok_or_else(|| anyhow::anyhow!("{what}: missing `counter`"))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A routing-focused control plane: one [`RouterKind`] for prefill
+/// placement over the shared baseline mechanics, scaled either by the
+/// TokenScale velocity calculators or the DistServe RPS thresholds.
+pub struct RouterPolicy {
+    state: BaseState,
+    gateway: Gateway,
+    profile: VelocityProfile,
+    /// true → velocity scaling (Eqs. 2–3); false → RPS thresholds.
+    velocity_scaling: bool,
+    prefill_rps_threshold: f64,
+    decode_rps_threshold: f64,
+    router: RouterKind,
+    label: &'static str,
+}
+
+/// Build one member of the router family. `label` is the registry name
+/// (`kv-router`, `random-router-rps`, …).
+pub fn router_policy(
+    router: RouterKind,
+    velocity_scaling: bool,
+    label: &'static str,
+    thresholds: &Thresholds,
+    engine: &EngineModel,
+    link: &LinkSpec,
+    avg_prompt: usize,
+) -> RouterPolicy {
+    RouterPolicy {
+        state: BaseState::new(20, 10.0),
+        gateway: Gateway::new(1.0, 5.0, OutputPredictor::new(0.85, 0xCA)),
+        profile: VelocityProfile::analytic(engine, link, avg_prompt),
+        velocity_scaling,
+        prefill_rps_threshold: thresholds.rps_per_prefiller,
+        decode_rps_threshold: thresholds.rps_per_decoder,
+        router,
+        label,
+    }
+}
+
+impl ControlPlane for RouterPolicy {
+    fn name(&self) -> &str {
+        self.label
+    }
+
+    fn on_signal(
+        &mut self,
+        now: f64,
+        signal: Signal<'_>,
+        view: &ClusterView<'_>,
+        actions: &mut Vec<Action>,
+    ) {
+        match signal {
+            // The router replaces the default least-loaded prefill
+            // placement; everything else is the shared baseline behavior.
+            Signal::Arrival(req) => {
+                self.state.on_arrival(now, req);
+                if self.velocity_scaling {
+                    self.gateway.ingest(now, req);
+                }
+                if let Some(target) = self.router.route(req, view) {
+                    actions.push(Action::RoutePrefill { req: req.id, target });
+                }
+            }
+            Signal::RetryPrefill(req) => {
+                if let Some(target) = self.router.route(req, view) {
+                    actions.push(Action::RoutePrefill { req: req.id, target });
+                }
+            }
+            Signal::Tick => {
+                let (prefillers, decoders) = if self.velocity_scaling {
+                    let p = ts_calc::required_prefillers(
+                        self.gateway.input_token_rate(now),
+                        &self.profile,
+                    );
+                    let d = ts_calc::required_decoders(
+                        &self.gateway.bucket_token_rates(now),
+                        &self.profile,
+                    );
+                    self.state.smoothed_fleet(view, p, d)
+                } else {
+                    self.state.rps_fleet_targets(
+                        now,
+                        view,
+                        self.prefill_rps_threshold,
+                        self.decode_rps_threshold,
+                    )
+                };
+                BaseState::push_fleet(actions, prefillers, decoders);
+            }
+            other => {
+                self.state.base_signal(now, other, view, actions);
+            }
+        }
+    }
+
+    fn save_state(&self) -> PolicyState {
+        PolicyState::new(
+            self.name(),
+            Json::obj()
+                .set("base", self.state.to_snapshot())
+                .set("gateway", self.gateway.to_snapshot())
+                .set("router", self.router.to_snapshot()),
+        )
+    }
+
+    fn restore_state(&mut self, state: &PolicyState) -> anyhow::Result<()> {
+        state.expect(self.name())?;
+        self.state.restore_snapshot(state.part("base")?)?;
+        self.gateway.restore_snapshot(state.part("gateway")?)?;
+        self.router.restore_snapshot(state.part("router")?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::catalog;
+    use crate::scaler::thresholds;
+    use crate::sim::{Cluster, ClusterConfig, KvCacheConfig};
+    use crate::trace::{generate_family, TraceFamily};
+
+    fn thresh() -> Thresholds {
+        let engine = EngineModel::new(
+            catalog::model("llama-3.1-8b").unwrap(),
+            catalog::gpu("a100-40g").unwrap(),
+            1,
+        );
+        let link = catalog::link("a100-cluster").unwrap();
+        let trace = generate_family(TraceFamily::AzureConv, 22.0, 120.0, 1);
+        let profile = VelocityProfile::analytic(&engine, &link, 1024);
+        thresholds::derive(&trace, &engine, &profile)
+    }
+
+    fn mk_policy(router: RouterKind) -> RouterPolicy {
+        let t = thresh();
+        let engine = EngineModel::new(
+            catalog::model("llama-3.1-8b").unwrap(),
+            catalog::gpu("a100-40g").unwrap(),
+            1,
+        );
+        let link = catalog::link("a100-cluster").unwrap();
+        router_policy(router, true, "test-router", &t, &engine, &link, 1024)
+    }
+
+    fn mk_cluster(prefillers: usize, cache: KvCacheConfig) -> Cluster {
+        use std::sync::Arc;
+        let engine = Arc::new(EngineModel::new(
+            catalog::model("llama-3.1-8b").unwrap(),
+            catalog::gpu("a100-40g").unwrap(),
+            1,
+        ));
+        let mut c = Cluster::new(ClusterConfig {
+            prefill_engine: engine.clone(),
+            decode_engine: engine,
+            startup_override_s: None,
+            max_gpus: 64,
+            convertible_chunk_size: 512,
+            convertible_reserve_tokens: 0.0,
+            kvcache: cache,
+        });
+        for _ in 0..prefillers {
+            c.spawn(Role::Prefiller, 0.0, Some(0.0));
+        }
+        c.spawn(Role::Decoder, 0.0, Some(0.0));
+        c
+    }
+
+    fn route_of(p: &mut RouterPolicy, req: &Request, c: &Cluster) -> Option<InstanceId> {
+        let mut acts = Vec::new();
+        p.on_signal(req.arrival, Signal::Arrival(req), &ClusterView::new(c), &mut acts);
+        acts.iter().find_map(|a| match a {
+            Action::RoutePrefill { target, .. } => Some(*target),
+            _ => None,
+        })
+    }
+
+    #[test]
+    fn round_robin_cycles_over_prefillers() {
+        let c = mk_cluster(3, KvCacheConfig::disabled());
+        let ids = c.ids_of(Role::Prefiller);
+        let mut p = mk_policy(RouterKind::round_robin());
+        let got: Vec<_> = (0..6)
+            .map(|i| route_of(&mut p, &Request::new(i, i as f64, 100, 10), &c).unwrap())
+            .collect();
+        assert_eq!(got, vec![ids[0], ids[1], ids[2], ids[0], ids[1], ids[2]]);
+    }
+
+    #[test]
+    fn random_router_is_seed_deterministic() {
+        let c = mk_cluster(4, KvCacheConfig::disabled());
+        let mut a = mk_policy(RouterKind::random(7));
+        let mut b = mk_policy(RouterKind::random(7));
+        for i in 0..20 {
+            let req = Request::new(i, i as f64, 100, 10);
+            assert_eq!(route_of(&mut a, &req, &c), route_of(&mut b, &req, &c));
+        }
+    }
+
+    #[test]
+    fn kv_router_prefers_warm_overlap() {
+        let cache = KvCacheConfig {
+            capacity_tokens: 1 << 20,
+            block_tokens: 16,
+        };
+        let mut c = mk_cluster(2, cache);
+        let ids = c.ids_of(Role::Prefiller);
+        // Instance 1 holds 900 warm tokens of session 5; instance 0 is
+        // colder but slightly less loaded.
+        c.get_mut(ids[1]).unwrap().kvcache.insert(5, 900);
+        let mut p = mk_policy(RouterKind::kv(1.0, 0.0, 3));
+        let warm = Request::new(0, 0.0, 1000, 50).with_session(5, 900);
+        assert_eq!(route_of(&mut p, &warm, &c), Some(ids[1]));
+        // A sessionless request sees zero overlap everywhere and falls
+        // back to deterministic least-loaded (tie → oldest spawn).
+        let cold = Request::new(1, 0.1, 1000, 50);
+        assert_eq!(route_of(&mut p, &cold, &c), Some(ids[0]));
+    }
+
+    #[test]
+    fn kv_router_load_term_beats_stale_overlap() {
+        let cache = KvCacheConfig {
+            capacity_tokens: 1 << 20,
+            block_tokens: 16,
+        };
+        let mut c = mk_cluster(2, cache);
+        let ids = c.ids_of(Role::Prefiller);
+        c.get_mut(ids[1]).unwrap().kvcache.insert(5, 200);
+        // Pile far more queued prefill work than the overlap is worth.
+        c.get_mut(ids[1])
+            .unwrap()
+            .prefill_queue
+            .push_back(crate::sim::PrefillJob {
+                req: Request::new(99, 0.0, 50_000, 1),
+                remaining: 50_000,
+                cached: 0,
+                enqueued_at: 0.0,
+                chunk_override: None,
+            });
+        let mut p = mk_policy(RouterKind::kv(1.0, 0.0, 3));
+        let req = Request::new(0, 0.0, 1000, 50).with_session(5, 200);
+        assert_eq!(route_of(&mut p, &req, &c), Some(ids[0]));
+    }
+
+    #[test]
+    fn softmax_temperature_still_deterministic_per_seed() {
+        let cache = KvCacheConfig {
+            capacity_tokens: 1 << 20,
+            block_tokens: 16,
+        };
+        let mut c = mk_cluster(3, cache);
+        let ids = c.ids_of(Role::Prefiller);
+        c.get_mut(ids[2]).unwrap().kvcache.insert(9, 500);
+        let mut a = mk_policy(RouterKind::kv(1.0, 100.0, 11));
+        let mut b = mk_policy(RouterKind::kv(1.0, 100.0, 11));
+        for i in 0..30 {
+            let req = Request::new(i, i as f64, 800, 40).with_session(9, 500);
+            assert_eq!(route_of(&mut a, &req, &c), route_of(&mut b, &req, &c));
+        }
+    }
+
+    #[test]
+    fn router_state_round_trips_through_snapshot() {
+        let c = mk_cluster(3, KvCacheConfig::disabled());
+        for kind in [
+            RouterKind::random(13),
+            RouterKind::round_robin(),
+            RouterKind::kv(1.0, 50.0, 13),
+        ] {
+            let fresh_kind = match &kind {
+                RouterKind::Random { .. } => RouterKind::random(99),
+                RouterKind::RoundRobin { .. } => RouterKind::round_robin(),
+                RouterKind::Kv { .. } => RouterKind::kv(1.0, 50.0, 99),
+            };
+            let mut live = mk_policy(kind);
+            // Advance the stream, snapshot, restore into a fresh policy.
+            for i in 0..7 {
+                let req = Request::new(i, i as f64, 300, 20);
+                route_of(&mut live, &req, &c);
+            }
+            let saved = live.save_state();
+            let mut restored = mk_policy(fresh_kind);
+            restored.restore_state(&saved).unwrap();
+            for i in 7..20 {
+                let req = Request::new(i, i as f64, 300, 20);
+                assert_eq!(route_of(&mut live, &req, &c), route_of(&mut restored, &req, &c));
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_router_kind_restore_fails() {
+        let c = mk_cluster(1, KvCacheConfig::disabled());
+        let mut live = mk_policy(RouterKind::round_robin());
+        route_of(&mut live, &Request::new(0, 0.0, 100, 10), &c);
+        let saved = live.save_state();
+        let mut other = mk_policy(RouterKind::random(1));
+        assert!(other.restore_state(&saved).is_err());
+    }
+}

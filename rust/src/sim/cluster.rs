@@ -33,6 +33,9 @@ pub struct ClusterConfig {
     pub convertible_chunk_size: usize,
     /// Eq. 6 reserved KV tokens on each convertible decoder.
     pub convertible_reserve_tokens: f64,
+    /// Per-instance prefix-cache model (`sim::kvcache`); capacity 0
+    /// disables it (the pre-subsystem behavior).
+    pub kvcache: super::kvcache::KvCacheConfig,
 }
 
 /// One injected-fault hit on an instance, kept in the cluster's failure
@@ -162,6 +165,9 @@ impl Cluster {
         if role == Role::ConvertibleDecoder {
             inst.chunk_size = self.config.convertible_chunk_size;
             inst.convertible_reserve_tokens = self.config.convertible_reserve_tokens;
+        }
+        if self.config.kvcache.enabled() {
+            inst.kvcache = super::kvcache::PrefixCache::new(self.config.kvcache);
         }
         self.allocated += inst.gpus();
         self.slots[slot as usize].inst = Some(inst);
@@ -512,6 +518,7 @@ mod tests {
             max_gpus,
             convertible_chunk_size: 512,
             convertible_reserve_tokens: 8192.0,
+            kvcache: crate::sim::kvcache::KvCacheConfig::disabled(),
         }
     }
 

@@ -52,7 +52,7 @@ use super::audit::{DecisionLog, DecisionRecord};
 use super::cluster::{Cluster, ClusterConfig, FailureRecord};
 use super::event::{Event, EventQueue, InstanceId};
 use super::faults::{mix_seed, FaultKind, FaultLabel, FaultPlan, Firing};
-use super::instance::{ActiveSeq, LifeState, PrefillJob, RequestClock, Role};
+use super::instance::{ActiveSeq, Instance, LifeState, PrefillJob, RequestClock, Role};
 use super::policy::{Action, ActionOutcome, ControlPlane, RejectReason, Signal, SignalKind};
 use super::reqtable::ReqTable;
 use super::snapshot::{self, SimSnapshot, SNAPSHOT_SCHEMA_VERSION};
@@ -1109,8 +1109,9 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         let mut wasted = 0.0;
         if let Some(job) = inst.active_prefill.take() {
             // Chunked progress is wasted; a whole-prompt prefill in
-            // flight has produced nothing visible yet.
-            wasted += (job.req.input_tokens - job.remaining) as f64;
+            // flight has produced nothing visible yet. Cached prefix
+            // tokens were never recomputed, so they are not lost work.
+            wasted += (job.req.input_tokens - job.cached - job.remaining) as f64;
             displaced.push(job.req);
         }
         for job in inst.prefill_queue.drain(..) {
@@ -1560,20 +1561,45 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         }
     }
 
+    /// Prefix-cache admission (`sim::kvcache`): look up the request's warm
+    /// overlap on the target instance, clamp so at least one prompt token
+    /// is always recomputed (a prefill job must do real work), and record
+    /// the lookup. Sessionless requests and disabled caches are exact
+    /// no-ops — no counter moves, no state is touched — so cacheless runs
+    /// stay bit-identical to the pre-cache engine.
+    fn cache_admit(
+        inst: &mut Instance,
+        req: &Request,
+        metrics: &mut MetricsRecorder,
+    ) -> usize {
+        if req.session.is_none() || !inst.kvcache.enabled() {
+            return 0;
+        }
+        let look = inst.kvcache.lookup(req);
+        let cached = look.overlap.min(req.input_tokens.saturating_sub(1));
+        metrics.prefix_lookups += 1;
+        if look.hit {
+            metrics.prefix_hits += 1;
+        }
+        metrics.saved_prefill_tokens += cached as f64;
+        cached
+    }
+
     fn apply_route_prefill(&mut self, target: InstanceId, req: Request) {
         let role = self.cluster.get(target).map(|i| i.role);
         match role {
             Some(Role::Prefiller) => {
-                let job = PrefillJob {
-                    remaining: req.input_tokens,
-                    req,
-                    enqueued_at: self.now,
-                    chunk_override: None,
-                };
                 if let Some(inst) = self.cluster.get_mut(target) {
-                    inst.prefill_queue.push_back(job);
+                    let cached = Self::cache_admit(inst, &req, &mut self.metrics);
+                    inst.prefill_queue.push_back(PrefillJob {
+                        remaining: req.input_tokens - cached,
+                        req,
+                        enqueued_at: self.now,
+                        chunk_override: None,
+                        cached,
+                    });
                 } else {
-                    self.pending.push_back(job.req);
+                    self.pending.push_back(req);
                     return;
                 }
                 self.maybe_start_prefill(target);
@@ -1605,13 +1631,15 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             return;
         };
         inst.reserved_tokens += req.total_tokens() as f64;
+        let cached = Self::cache_admit(inst, &req, &mut self.metrics);
         // Decode-side instances process at most one prefill at a time
         // (§IV-D); extras wait in the local queue.
         inst.prefill_queue.push_back(PrefillJob {
-            remaining: req.input_tokens,
+            remaining: req.input_tokens - cached,
             req,
             enqueued_at: self.now,
             chunk_override,
+            cached,
         });
         self.ensure_iterating(id);
     }
@@ -1764,7 +1792,9 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         };
         // `perf_factor` is 1.0 outside a degradation window; multiplying
         // by 1.0 is bit-exact, so healthy runs are unchanged.
-        let dur = inst.engine.prefill_time(job.req.input_tokens) * inst.perf_factor;
+        // Cached prefix tokens (`job.cached`) are real saved work: the
+        // engine only computes the cold suffix.
+        let dur = inst.engine.prefill_time(job.remaining) * inst.perf_factor;
         let req_id = job.req.id;
         inst.active_prefill = Some(job);
         inst.prefill_done_at = self.now + dur;
@@ -1791,6 +1821,13 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         };
         debug_assert_eq!(job.req.id, req_id);
         inst.prefill_done_at = f64::INFINITY;
+        // The finished prompt's KV blocks stay warm on this prefiller:
+        // later turns of the same session routed here reuse them.
+        if let Some(s) = job.req.session {
+            if inst.kvcache.enabled() {
+                inst.kvcache.insert(s.id, job.req.input_tokens);
+            }
+        }
         if let Some(ck) = self.requests.get_mut(req_id).and_then(|s| s.clock.as_mut()) {
             ck.prefill_done = Some(self.now);
         }
@@ -1993,7 +2030,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 let chunk_size = job.chunk_override.unwrap_or(inst.chunk_size);
                 let budget = chunk_size.saturating_sub(inst.batch.len());
                 chunk_tokens = budget.min(job.remaining);
-                if chunk_tokens > 0 && job.remaining == job.req.input_tokens {
+                if chunk_tokens > 0 && job.remaining + job.cached == job.req.input_tokens {
                     chunk_first_start = Some(job.req.id);
                 }
             }
@@ -2135,6 +2172,14 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                     inst.reserved_tokens =
                         (inst.reserved_tokens - seq.req.total_tokens() as f64).max(0.0);
                     freed = true;
+                    // The full conversation context (prompt + generated
+                    // tokens) stays warm on this decode instance for the
+                    // session's next turn.
+                    if let Some(s) = seq.req.session {
+                        if inst.kvcache.enabled() {
+                            inst.kvcache.insert(s.id, seq.req.total_tokens());
+                        }
+                    }
                     let first = seq.first_token_at.unwrap();
                     let ttft = first - seq.req.arrival;
                     let tpot = if seq.req.output_tokens > 1 {
@@ -2403,6 +2448,7 @@ mod tests {
             max_gpus,
             convertible_chunk_size: 512,
             convertible_reserve_tokens: 8192.0,
+            kvcache: super::super::kvcache::KvCacheConfig::disabled(),
         }
     }
 

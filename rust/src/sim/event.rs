@@ -172,6 +172,12 @@ const WORDS: usize = NBUCKETS / 64;
 #[derive(Debug)]
 pub struct EventQueue {
     buckets: Vec<Vec<Scheduled>>,
+    /// Capacity pool: the backing `Vec`s of drained buckets. A freshly
+    /// occupied bucket takes one instead of growing a new allocation, so
+    /// live heap capacity tracks the number of *concurrently* occupied
+    /// buckets (a handful) rather than every residue the cursor has ever
+    /// visited (up to all `NBUCKETS` of them on long horizons).
+    free: Vec<Vec<Scheduled>>,
     occupied: [u64; WORDS],
     /// Tick of the last popped event: nothing earlier remains anywhere.
     cursor: u64,
@@ -192,6 +198,7 @@ impl EventQueue {
     pub fn new() -> Self {
         EventQueue {
             buckets: (0..NBUCKETS).map(|_| Vec::new()).collect(),
+            free: Vec::new(),
             occupied: [0; WORDS],
             cursor: 0,
             near_len: 0,
@@ -227,6 +234,21 @@ impl EventQueue {
         self.insert(s);
     }
 
+    /// Seat `s` in near-wheel bucket `b`, reusing a pooled allocation
+    /// when the bucket's own `Vec` was handed to the pool on drain.
+    #[inline]
+    fn bucket_push(&mut self, b: usize, s: Scheduled) {
+        let bucket = &mut self.buckets[b];
+        if bucket.capacity() == 0 {
+            if let Some(pooled) = self.free.pop() {
+                self.buckets[b] = pooled;
+            }
+        }
+        self.buckets[b].push(s);
+        self.occupied[b >> 6] |= 1 << (b & 63);
+        self.near_len += 1;
+    }
+
     fn insert(&mut self, s: Scheduled) {
         // The engine never schedules into the past; clamp defensively so
         // a same-tick float edge still lands in a scannable bucket (the
@@ -234,10 +256,7 @@ impl EventQueue {
         // never affects pop order, only scan efficiency).
         let tick = Self::tick_of(s.time).max(self.cursor);
         if tick < self.cursor + NBUCKETS as u64 {
-            let b = (tick as usize) & MASK;
-            self.buckets[b].push(s);
-            self.occupied[b >> 6] |= 1 << (b & 63);
-            self.near_len += 1;
+            self.bucket_push((tick as usize) & MASK, s);
         } else {
             self.far.push(s);
         }
@@ -254,9 +273,7 @@ impl EventQueue {
             }
             let s = self.far.pop().expect("peeked entry exists");
             let b = (Self::tick_of(s.time).max(self.cursor) as usize) & MASK;
-            self.buckets[b].push(s);
-            self.occupied[b >> 6] |= 1 << (b & 63);
-            self.near_len += 1;
+            self.bucket_push(b, s);
         }
     }
 
@@ -315,6 +332,12 @@ impl EventQueue {
         let s = bucket.swap_remove(mi);
         if bucket.is_empty() {
             self.occupied[b >> 6] &= !(1 << (b & 63));
+            // Hand the drained bucket's allocation to the pool; the next
+            // bucket to become occupied reuses it (see `bucket_push`).
+            let pooled = std::mem::take(bucket);
+            if pooled.capacity() > 0 {
+                self.free.push(pooled);
+            }
         }
         self.near_len -= 1;
         self.len -= 1;
@@ -580,6 +603,62 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn drained_buckets_recycle_their_allocations() {
+        let mut q = EventQueue::new();
+        for _ in 0..32 {
+            q.push(0.5, Event::ControlTick);
+        }
+        while q.pop().is_some() {}
+        // The drained bucket's Vec (grown to hold 32 entries) is pooled...
+        assert!(q.free.iter().any(|v| v.capacity() >= 32));
+        let pooled = q.free.len();
+        // ...and the next bucket to become occupied takes it instead of
+        // growing a fresh allocation.
+        q.push(1.0, Event::SampleTick);
+        assert_eq!(q.free.len(), pooled - 1);
+        let b = (EventQueue::tick_of(1.0) as usize) & MASK;
+        assert!(q.buckets[b].capacity() >= 32, "pooled capacity reused");
+        assert_eq!(q.pop().unwrap().1, Event::SampleTick);
+    }
+
+    #[test]
+    fn empty_queue_dump_rebuilds_and_continues_seqs() {
+        let mut q = EventQueue::new();
+        q.push(1.0, Event::Arrival);
+        assert!(q.pop().is_some());
+        let (entries, seq) = q.dump();
+        assert!(entries.is_empty());
+        assert_eq!(seq, 1);
+        let mut rebuilt = EventQueue::rebuild(entries, seq);
+        assert!(rebuilt.is_empty());
+        assert_eq!(rebuilt.pop(), None);
+        // Future pushes continue the seq stream past the checkpoint, so
+        // FIFO tie-breaks stay aligned with the uncheckpointed run.
+        rebuilt.push(2.0, Event::ControlTick);
+        assert_eq!(rebuilt.seq, seq + 1);
+        assert_eq!(rebuilt.pop().unwrap().0, 2.0);
+    }
+
+    #[test]
+    fn idle_cursor_jump_migrates_far_events_with_ties_intact() {
+        let mut q = EventQueue::new();
+        q.push(0.1, Event::Arrival);
+        q.push(10_000.0, Event::ControlTick); // far beyond the 4 s window
+        q.push(10_000.0, Event::SampleTick); // far, exact FIFO tie
+        assert_eq!(q.pop().unwrap().1, Event::Arrival);
+        assert_eq!(q.far.len(), 2, "distant events wait in the overflow heap");
+        assert_eq!(q.near_len, 0);
+        // The next pop jumps the cursor across the ~10,000 s idle gap;
+        // both far events migrate into the wheel and the FIFO tie pops
+        // in push order.
+        assert_eq!(q.pop().unwrap().1, Event::ControlTick);
+        assert!(q.far.is_empty(), "migration drains the overflow heap");
+        assert_eq!(q.near_len, 1);
+        assert_eq!(q.pop().unwrap().1, Event::SampleTick);
+        assert!(q.is_empty());
     }
 
     #[test]

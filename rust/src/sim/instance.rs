@@ -67,7 +67,13 @@ pub struct ActiveSeq {
 pub struct PrefillJob {
     pub req: Request,
     /// Prompt tokens still to process (chunked prefill decrements this).
+    /// Starts at `input_tokens − cached`: warm prefix tokens found in the
+    /// instance's `sim::kvcache` at admission are never processed.
     pub remaining: usize,
+    /// Warm prefix tokens skipped via the instance's prefix cache (0 for
+    /// sessionless requests or disabled caches). Invariant: `remaining +
+    /// processed + cached == input_tokens` throughout the job's life.
+    pub cached: usize,
     /// Arrival at this instance's queue.
     pub enqueued_at: f64,
     /// Per-job chunk-budget override (deflected prefills on regular
@@ -117,6 +123,12 @@ pub struct Instance {
     pub chunk_size: usize,
     /// KV tokens reserved for burst prefill work (Eq. 6), convertibles only.
     pub convertible_reserve_tokens: f64,
+
+    // ---- prefix cache (sim::kvcache) ----
+    /// Warm prefix groups held by this instance's KV cache. Disabled
+    /// (capacity 0) unless the deployment opts in, in which case
+    /// `Cluster::spawn` applies the configured capacity.
+    pub kvcache: super::kvcache::PrefixCache,
 
     // ---- fault injection (sim::faults) ----
     /// Slowdown multiplier on prefill/decode step durations (straggler
@@ -176,6 +188,7 @@ impl Instance {
             iter_chunk: 0,
             chunk_size: 0,
             convertible_reserve_tokens: 0.0,
+            kvcache: super::kvcache::PrefixCache::disabled(),
             perf_factor: 1.0,
             degrade_until: f64::NEG_INFINITY,
             win_active: false,
@@ -200,6 +213,12 @@ impl Instance {
     pub fn inflight_prefill_tokens(&self) -> usize {
         self.prefill_queue.iter().map(|j| j.remaining).sum::<usize>()
             + self.active_prefill.as_ref().map_or(0, |j| j.remaining)
+    }
+
+    /// Warm prefix tokens this instance could skip when prefilling `req`
+    /// (read-only; no LRU touch). The signal cache-aware routers score by.
+    pub fn warm_overlap(&self, req: &Request) -> usize {
+        self.kvcache.overlap(req)
     }
 
     /// Memory utilization as reserved fraction of KV capacity.
@@ -413,12 +432,14 @@ mod tests {
         i.prefill_queue.push_back(PrefillJob {
             req: Request::new(1, 0.0, 700, 10),
             remaining: 700,
+            cached: 0,
             enqueued_at: 0.0,
             chunk_override: None,
         });
         i.active_prefill = Some(PrefillJob {
             req: Request::new(2, 0.0, 300, 10),
             remaining: 300,
+            cached: 0,
             enqueued_at: 0.0,
             chunk_override: None,
         });

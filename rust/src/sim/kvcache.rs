@@ -1,0 +1,472 @@
+//! Per-instance KV/prefix-cache model (`sim::kvcache`).
+//!
+//! Each simulated instance owns a [`PrefixCache`]: a capacity-bounded
+//! block pool tracking which conversational prefix groups (sessions) are
+//! still warm in its KV cache. When a prefill for turn *k* of a session
+//! lands on an instance that served an earlier turn, the overlapping
+//! prefix is skipped — the saved tokens shrink the prefill duration in
+//! the engine, the instance's in-flight token accounting (and therefore
+//! the velocity/waiting-time estimates every router divides by), and are
+//! surfaced in `SloReport` as hit-rate / saved-prefill-tokens.
+//!
+//! **Determinism contract.** The cache is a pure function of the request
+//! sequence applied to it: entries are touched in event order, the
+//! eviction victim is always the least-recently-touched entry with the
+//! touch sequence number as a strict total order (no wall clock, no RNG,
+//! no hash-iteration order — the victim scan resolves ties by session id,
+//! but touch sequence numbers are unique so ties cannot occur). A
+//! zero-capacity cache is free by construction: no entries are stored, no
+//! counters move, every overlap is 0 — byte-identical to a build without
+//! the subsystem.
+//!
+//! Capacity is modeled in tokens, allocated in fixed-size blocks (vLLM /
+//! Dynamo style): an entry of `warm_tokens` occupies
+//! `ceil(warm_tokens / block_tokens) · block_tokens`.
+
+use crate::util::json::Json;
+use crate::workload::Request;
+use std::collections::HashMap;
+
+/// Deployment-level prefix-cache configuration (per instance).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KvCacheConfig {
+    /// Cache capacity in KV tokens; 0 disables the cache entirely.
+    pub capacity_tokens: usize,
+    /// Allocation granularity in tokens (vLLM-style paged blocks).
+    pub block_tokens: usize,
+}
+
+impl KvCacheConfig {
+    /// Disabled cache (capacity 0) — the default for every deployment
+    /// until a scenario opts in, keeping pre-subsystem runs byte-identical.
+    pub fn disabled() -> KvCacheConfig {
+        KvCacheConfig {
+            capacity_tokens: 0,
+            block_tokens: 256,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity_tokens > 0
+    }
+}
+
+impl Default for KvCacheConfig {
+    fn default() -> Self {
+        KvCacheConfig::disabled()
+    }
+}
+
+/// One warm prefix group.
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    /// Longest warm prefix of this session held by the instance, tokens.
+    warm_tokens: usize,
+    /// Logical LRU clock value of the last touch (unique per cache).
+    touch_seq: u64,
+}
+
+/// Result of a touching cache lookup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheLookup {
+    /// Warm tokens this instance can skip for the request (0 on miss).
+    pub overlap: usize,
+    /// Whether the lookup counted as a hit (overlap > 0).
+    pub hit: bool,
+}
+
+/// Deterministic per-instance prefix cache with LRU eviction.
+#[derive(Clone, Debug)]
+pub struct PrefixCache {
+    config: KvCacheConfig,
+    entries: HashMap<u64, Entry>,
+    /// Logical clock; bumped on every touch (lookup hit or insert).
+    clock: u64,
+    /// Block-rounded tokens currently occupied.
+    occupied_tokens: usize,
+    // ---- counters (monotone, serialized) ----
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl PrefixCache {
+    pub fn new(config: KvCacheConfig) -> PrefixCache {
+        PrefixCache {
+            config,
+            entries: HashMap::new(),
+            clock: 0,
+            occupied_tokens: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Disabled cache (the `Instance::new` default before the cluster
+    /// applies its deployment config).
+    pub fn disabled() -> PrefixCache {
+        PrefixCache::new(KvCacheConfig::disabled())
+    }
+
+    pub fn config(&self) -> KvCacheConfig {
+        self.config
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.config.enabled()
+    }
+
+    /// Block-rounded footprint of a `warm_tokens` entry.
+    fn footprint(&self, warm_tokens: usize) -> usize {
+        let b = self.config.block_tokens.max(1);
+        warm_tokens.div_ceil(b) * b
+    }
+
+    /// Warm prefix groups currently held.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Block-rounded tokens currently occupied.
+    pub fn occupancy_tokens(&self) -> usize {
+        self.occupied_tokens
+    }
+
+    /// Occupied fraction of capacity (0.0 when disabled).
+    pub fn occupancy(&self) -> f64 {
+        if self.config.capacity_tokens == 0 {
+            return 0.0;
+        }
+        self.occupied_tokens as f64 / self.config.capacity_tokens as f64
+    }
+
+    /// Read-only warm overlap for a request: how many of its re-sent
+    /// prefix tokens this instance still holds. Does not touch LRU state
+    /// or counters — safe for policies scoring candidates via
+    /// `ClusterView`.
+    pub fn overlap(&self, req: &Request) -> usize {
+        let Some(s) = req.session else { return 0 };
+        if !self.enabled() {
+            return 0;
+        }
+        self.entries
+            .get(&s.id)
+            .map_or(0, |e| e.warm_tokens.min(s.prefix_tokens))
+    }
+
+    /// Touching lookup at prefill admission: returns the warm overlap,
+    /// bumps the entry's LRU position and counts hit/miss. Sessionless
+    /// requests and disabled caches return a zero-overlap lookup without
+    /// moving any state (free by construction).
+    pub fn lookup(&mut self, req: &Request) -> CacheLookup {
+        let Some(s) = req.session else {
+            return CacheLookup { overlap: 0, hit: false };
+        };
+        if !self.enabled() {
+            return CacheLookup { overlap: 0, hit: false };
+        }
+        let overlap = match self.entries.get_mut(&s.id) {
+            Some(e) => {
+                self.clock += 1;
+                e.touch_seq = self.clock;
+                e.warm_tokens.min(s.prefix_tokens)
+            }
+            None => 0,
+        };
+        let hit = overlap > 0;
+        if hit {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        CacheLookup { overlap, hit }
+    }
+
+    /// Record that `warm_tokens` of session `session_id` are now resident
+    /// on this instance (after a prefill or a completed decode). Grows an
+    /// existing entry monotonically, clamps to capacity, and evicts
+    /// least-recently-touched entries until the pool fits.
+    pub fn insert(&mut self, session_id: u64, warm_tokens: usize) {
+        if !self.enabled() || warm_tokens == 0 {
+            return;
+        }
+        let warm = warm_tokens.min(self.config.capacity_tokens);
+        self.clock += 1;
+        let clock = self.clock;
+        match self.entries.get_mut(&session_id) {
+            Some(e) => {
+                let new_warm = e.warm_tokens.max(warm);
+                self.occupied_tokens -= self.footprint(e.warm_tokens);
+                self.occupied_tokens += self.footprint(new_warm);
+                e.warm_tokens = new_warm;
+                e.touch_seq = clock;
+            }
+            None => {
+                self.entries.insert(
+                    session_id,
+                    Entry {
+                        warm_tokens: warm,
+                        touch_seq: clock,
+                    },
+                );
+                self.occupied_tokens += self.footprint(warm);
+            }
+        }
+        self.evict_to_fit(session_id);
+    }
+
+    /// Evict LRU entries until occupancy fits capacity. The freshly
+    /// touched `keep` entry is never the victim (it holds the max
+    /// touch_seq by construction).
+    fn evict_to_fit(&mut self, keep: u64) {
+        while self.occupied_tokens > self.config.capacity_tokens {
+            // Victim = minimum (touch_seq, session_id). touch_seqs are
+            // unique, so the id tie-break is only a belt-and-braces
+            // guarantee of a total order.
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(id, _)| **id != keep)
+                .min_by_key(|(id, e)| (e.touch_seq, **id))
+                .map(|(id, _)| *id);
+            let Some(v) = victim else { break };
+            if let Some(e) = self.entries.remove(&v) {
+                self.occupied_tokens -= self.footprint(e.warm_tokens);
+                self.evictions += 1;
+            }
+        }
+    }
+
+    /// Drop every entry (conversion keeps the cache; crash/removal drops
+    /// the whole instance, so this is only used by tests and future
+    /// policies). Counters are preserved.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.occupied_tokens = 0;
+    }
+
+    /// Bit-exact serialization for `sim::snapshot`; entries sorted by
+    /// session id so the text form is canonical.
+    pub fn to_json(&self) -> Json {
+        let mut ids: Vec<u64> = self.entries.keys().copied().collect();
+        ids.sort_unstable();
+        Json::obj()
+            .set("capacity_tokens", self.config.capacity_tokens)
+            .set("block_tokens", self.config.block_tokens)
+            .set("clock", Json::u64_hex(self.clock))
+            .set("occupied_tokens", self.occupied_tokens)
+            .set("hits", Json::u64_hex(self.hits))
+            .set("misses", Json::u64_hex(self.misses))
+            .set("evictions", Json::u64_hex(self.evictions))
+            .set(
+                "entries",
+                Json::Arr(
+                    ids.iter()
+                        .map(|id| {
+                            let e = &self.entries[id];
+                            Json::obj()
+                                .set("session", Json::u64_hex(*id))
+                                .set("warm", e.warm_tokens)
+                                .set("touch", Json::u64_hex(e.touch_seq))
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    /// Rebuild from [`PrefixCache::to_json`] output.
+    pub fn from_json(j: &Json) -> anyhow::Result<PrefixCache> {
+        let what = "kvcache snapshot";
+        let get = |key: &str| -> anyhow::Result<&Json> {
+            j.get(key).ok_or_else(|| anyhow::anyhow!("{what}: missing `{key}`"))
+        };
+        let usz = |key: &str| -> anyhow::Result<usize> {
+            get(key)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("{what}: bad `{key}`"))
+        };
+        let u64f = |key: &str| -> anyhow::Result<u64> {
+            get(key)?
+                .as_u64_hex()
+                .ok_or_else(|| anyhow::anyhow!("{what}: bad `{key}`"))
+        };
+        let mut cache = PrefixCache::new(KvCacheConfig {
+            capacity_tokens: usz("capacity_tokens")?,
+            block_tokens: usz("block_tokens")?,
+        });
+        cache.clock = u64f("clock")?;
+        cache.occupied_tokens = usz("occupied_tokens")?;
+        cache.hits = u64f("hits")?;
+        cache.misses = u64f("misses")?;
+        cache.evictions = u64f("evictions")?;
+        let arr = get("entries")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("{what}: `entries` is not an array"))?;
+        for e in arr {
+            let id = e
+                .get("session")
+                .and_then(Json::as_u64_hex)
+                .ok_or_else(|| anyhow::anyhow!("{what}: bad entry session"))?;
+            let warm = e
+                .get("warm")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("{what}: bad entry warm"))?;
+            let touch = e
+                .get("touch")
+                .and_then(Json::as_u64_hex)
+                .ok_or_else(|| anyhow::anyhow!("{what}: bad entry touch"))?;
+            cache.entries.insert(
+                id,
+                Entry {
+                    warm_tokens: warm,
+                    touch_seq: touch,
+                },
+            );
+        }
+        Ok(cache)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Request;
+
+    fn cfg(cap: usize, block: usize) -> KvCacheConfig {
+        KvCacheConfig {
+            capacity_tokens: cap,
+            block_tokens: block,
+        }
+    }
+
+    fn req(id: u64, input: usize, session: u64, prefix: usize) -> Request {
+        Request::new(id, 0.0, input, 10).with_session(session, prefix)
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let mut c = PrefixCache::disabled();
+        let r = req(1, 1000, 7, 500);
+        assert_eq!(c.overlap(&r), 0);
+        assert_eq!(c.lookup(&r), CacheLookup { overlap: 0, hit: false });
+        c.insert(7, 1000);
+        assert!(c.is_empty());
+        assert_eq!(c.hits + c.misses + c.evictions, 0);
+        assert_eq!(c.occupancy(), 0.0);
+    }
+
+    #[test]
+    fn sessionless_requests_never_touch_state() {
+        let mut c = PrefixCache::new(cfg(10_000, 256));
+        let r = Request::new(1, 0.0, 500, 10);
+        assert_eq!(c.lookup(&r), CacheLookup { overlap: 0, hit: false });
+        assert_eq!(c.hits + c.misses, 0, "sessionless lookups are free");
+    }
+
+    #[test]
+    fn overlap_is_min_of_warm_and_prefix() {
+        let mut c = PrefixCache::new(cfg(100_000, 1));
+        c.insert(7, 600);
+        // Prefix longer than warm: only the warm part overlaps.
+        assert_eq!(c.overlap(&req(1, 2000, 7, 900)), 600);
+        // Prefix shorter than warm: the whole prefix overlaps.
+        assert_eq!(c.overlap(&req(2, 2000, 7, 400)), 400);
+        // Different session: nothing.
+        assert_eq!(c.overlap(&req(3, 2000, 8, 400)), 0);
+    }
+
+    #[test]
+    fn lookup_counts_hits_and_misses() {
+        let mut c = PrefixCache::new(cfg(100_000, 1));
+        c.insert(7, 600);
+        assert!(c.lookup(&req(1, 2000, 7, 500)).hit);
+        assert!(!c.lookup(&req(2, 2000, 8, 500)).hit);
+        // First turn (prefix 0) on a warm session is a miss: nothing to save.
+        assert!(!c.lookup(&req(3, 2000, 7, 0)).hit);
+        assert_eq!((c.hits, c.misses), (1, 2));
+    }
+
+    #[test]
+    fn insert_grows_monotonically_and_rounds_to_blocks() {
+        let mut c = PrefixCache::new(cfg(10_000, 256));
+        c.insert(1, 100);
+        assert_eq!(c.occupancy_tokens(), 256);
+        c.insert(1, 300); // grows
+        assert_eq!(c.occupancy_tokens(), 512);
+        c.insert(1, 200); // never shrinks
+        assert_eq!(c.occupancy_tokens(), 512);
+        assert_eq!(c.overlap(&req(1, 1000, 1, 1000)), 300);
+    }
+
+    #[test]
+    fn eviction_is_lru_and_deterministic() {
+        let mut c = PrefixCache::new(cfg(1024, 256));
+        c.insert(1, 256);
+        c.insert(2, 256);
+        c.insert(3, 256);
+        c.insert(4, 256);
+        assert_eq!(c.len(), 4);
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(c.lookup(&req(9, 1000, 1, 200)).hit);
+        c.insert(5, 256);
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.overlap(&req(10, 1000, 2, 200)), 0, "2 evicted");
+        assert_eq!(c.overlap(&req(11, 1000, 1, 200)), 200, "1 survived");
+        // Replaying the same ops gives the same victims.
+        let replay = || {
+            let mut c = PrefixCache::new(cfg(1024, 256));
+            for s in 1..=4 {
+                c.insert(s, 256);
+            }
+            c.lookup(&req(9, 1000, 1, 200));
+            c.insert(5, 256);
+            let mut ids: Vec<u64> = (1..=5)
+                .filter(|s| c.overlap(&req(0, 1000, *s, 1)) > 0)
+                .collect();
+            ids.sort_unstable();
+            ids
+        };
+        assert_eq!(replay(), replay());
+    }
+
+    #[test]
+    fn oversized_insert_clamps_to_capacity() {
+        let mut c = PrefixCache::new(cfg(1000, 256));
+        c.insert(1, 50_000);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.overlap(&req(1, 60_000, 1, 60_000)), 1000);
+        // Block rounding may exceed capacity by a partial block; the entry
+        // itself is never evicted.
+        c.insert(2, 256);
+        assert!(c.len() >= 1);
+    }
+
+    #[test]
+    fn snapshot_round_trips_bit_exactly_through_text() {
+        let mut c = PrefixCache::new(cfg(4096, 128));
+        c.insert(3, 500);
+        c.insert(u64::MAX - 1, 900);
+        c.lookup(&req(1, 1000, 3, 400));
+        c.lookup(&req(2, 1000, 99, 400));
+        c.insert(42, 4000); // forces an eviction
+        let text = c.to_json().pretty();
+        let back = PrefixCache::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().pretty(), text);
+        assert_eq!(back.hits, c.hits);
+        assert_eq!(back.misses, c.misses);
+        assert_eq!(back.evictions, c.evictions);
+        assert_eq!(back.occupancy_tokens(), c.occupancy_tokens());
+        // LRU clock resumes: the same next operation evicts the same victim.
+        let mut a = c.clone();
+        let mut b = back;
+        a.insert(77, 4000);
+        b.insert(77, 4000);
+        assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+    }
+}

@@ -19,6 +19,7 @@ pub mod engine;
 pub mod event;
 pub mod faults;
 pub mod instance;
+pub mod kvcache;
 pub mod policy;
 pub mod reqtable;
 pub mod snapshot;
@@ -30,6 +31,7 @@ pub use faults::{FaultKind, FaultLabel, FaultPlan, FaultSchedule, FaultSpec};
 pub use engine::{simulate, simulate_source, SimConfig, SimEngine, SimResult, SimSeries};
 pub use event::{Event, EventQueue, InstanceId};
 pub use instance::{ActiveSeq, Instance, LifeState, PrefillJob, RequestClock, Role};
+pub use kvcache::{CacheLookup, KvCacheConfig, PrefixCache};
 pub use policy::{
     Action, ActionOutcome, ControlPlane, RejectReason, Signal, SignalKind, StaticCoordinator,
 };

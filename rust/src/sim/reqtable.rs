@@ -292,6 +292,101 @@ mod tests {
         assert_eq!(seen, vec![(1, 2), (3, 6), (5, 10)]);
     }
 
+    /// What the engine's checkpoint writer does with the arena: collect
+    /// live entries and sort by request id so the serialized bytes are
+    /// independent of slot-reuse order (engine.rs `checkpoint`).
+    fn sorted_dump(t: &ReqTable<u64>) -> Vec<(u64, u64)> {
+        let mut out: Vec<(u64, u64)> = t.iter().map(|(k, v)| (k, *v)).collect();
+        out.sort_by_key(|(k, _)| *k);
+        out
+    }
+
+    #[test]
+    fn checkpoint_writer_sees_nothing_after_full_drain() {
+        // Empty-queue path: a drained table must serialize exactly like a
+        // never-used one — no ghost entries from recycled slots, and the
+        // index (now tombstone-riddled) must still terminate lookups.
+        let mut drained: ReqTable<u64> = ReqTable::new();
+        for k in 0..64u64 {
+            *drained.entry(k) = k;
+        }
+        for k in 0..64u64 {
+            drained.remove(k);
+        }
+        let fresh: ReqTable<u64> = ReqTable::new();
+        assert!(drained.is_empty());
+        assert_eq!(sorted_dump(&drained), sorted_dump(&fresh));
+        assert_eq!(drained.iter().count(), 0);
+        assert_eq!(drained.get(3), None, "tombstoned key stays gone");
+        assert_eq!(drained.get(999), None, "probe past tombstones terminates");
+        // The drained table is still fully usable afterwards.
+        *drained.entry(7) = 70;
+        assert_eq!(sorted_dump(&drained), vec![(7, 70)]);
+    }
+
+    #[test]
+    fn checkpoint_writer_is_order_independent_under_tombstone_churn() {
+        // Tombstone-heavy path: reach the same logical contents through
+        // wildly different insert/remove histories (different slot
+        // assignments, different tombstone layouts) and require the
+        // sorted dump — the checkpoint bytes — to be identical.
+        let keys: Vec<u64> = (0..40u64).map(|k| k * 17 + 3).collect();
+
+        let mut straight: ReqTable<u64> = ReqTable::new();
+        for &k in &keys {
+            *straight.entry(k) = k ^ 0xABCD;
+        }
+
+        let mut churned: ReqTable<u64> = ReqTable::new();
+        // Three full waves of decoys interleaved with the real keys, each
+        // wave removed again, so every real key lands in a recycled slot
+        // behind a different tombstone pattern.
+        for wave in 0..3u64 {
+            for d in 0..64u64 {
+                *churned.entry(1_000_000 + wave * 100 + d) = d;
+            }
+            for d in 0..64u64 {
+                churned.remove(1_000_000 + wave * 100 + d);
+            }
+        }
+        for &k in keys.iter().rev() {
+            *churned.entry(k) = 0; // placeholder, overwritten below
+        }
+        for &k in &keys {
+            *churned.entry(k) = k ^ 0xABCD;
+        }
+        assert_eq!(sorted_dump(&straight), sorted_dump(&churned));
+        assert_eq!(churned.len(), keys.len());
+    }
+
+    #[test]
+    fn tombstone_churn_purges_instead_of_growing_forever() {
+        // Sustained insert/remove churn with a tiny live set must not
+        // ratchet the index table up: grow() purges tombstones in place
+        // when the live count is small.
+        let mut t: ReqTable<u64> = ReqTable::new();
+        for round in 0..2_000u64 {
+            *t.entry(round) = round;
+            if round >= 8 {
+                t.remove(round - 8);
+            }
+        }
+        assert_eq!(t.len(), 8);
+        assert!(
+            t.index.keys.len() <= 256,
+            "index ratcheted to {} slots for 8 live entries",
+            t.index.keys.len()
+        );
+        assert!(
+            t.slots.len() <= 64,
+            "slab ratcheted to {} slots for 8 live entries",
+            t.slots.len()
+        );
+        // And the survivors checkpoint correctly.
+        let want: Vec<(u64, u64)> = (1_992..2_000).map(|k| (k, k)).collect();
+        assert_eq!(sorted_dump(&t), want);
+    }
+
     #[test]
     fn prop_matches_std_hashmap_oracle() {
         // Random insert/overwrite/remove/lookup churn against HashMap,

@@ -49,7 +49,9 @@ use std::sync::Arc;
 /// Version tag of the snapshot encoding; bump on any structural change.
 /// v2: fault-injection state (request retries, instance perf factor,
 /// fault events/actions, transfer attempts, failure ledger, cohorts).
-pub const SNAPSHOT_SCHEMA_VERSION: u64 = 2;
+/// v3: prefix-cache state (request session refs, per-job cached tokens,
+/// per-instance `sim::kvcache` blob, recorder cache counters).
+pub const SNAPSHOT_SCHEMA_VERSION: u64 = 3;
 
 // ------------------------------------------------------------ helpers
 
@@ -103,15 +105,32 @@ pub(crate) fn request_to_json(r: &Request) -> Json {
         .set("input", r.input_tokens)
         .set("output", r.output_tokens)
         .set("retries", r.retries as usize)
+        .set(
+            "session",
+            match r.session {
+                None => Json::Null,
+                Some(s) => Json::obj()
+                    .set("id", Json::u64_hex(s.id))
+                    .set("prefix", s.prefix_tokens),
+            },
+        )
 }
 
 pub(crate) fn request_from_json(j: &Json) -> anyhow::Result<Request> {
+    let session = match get(j, "session", "request")? {
+        Json::Null => None,
+        s => Some(crate::workload::SessionRef {
+            id: pu64(s, "id", "request-session")?,
+            prefix_tokens: pusize(s, "prefix", "request-session")?,
+        }),
+    };
     Ok(Request {
         id: pu64(j, "id", "request")?,
         arrival: pf(j, "arrival", "request")?,
         input_tokens: pusize(j, "input", "request")?,
         output_tokens: pusize(j, "output", "request")?,
         retries: pusize(j, "retries", "request")? as u32,
+        session,
     })
 }
 
@@ -278,6 +297,7 @@ pub(crate) fn job_to_json(job: &PrefillJob) -> Json {
     Json::obj()
         .set("req", request_to_json(&job.req))
         .set("remaining", job.remaining)
+        .set("cached", job.cached)
         .set("enqueued_at", Json::f64_bits(job.enqueued_at))
         .set(
             "chunk_override",
@@ -300,6 +320,7 @@ pub(crate) fn job_from_json(j: &Json) -> anyhow::Result<PrefillJob> {
     Ok(PrefillJob {
         req: request_from_json(get(j, "req", "prefill-job")?)?,
         remaining: pusize(j, "remaining", "prefill-job")?,
+        cached: pusize(j, "cached", "prefill-job")?,
         enqueued_at: pf(j, "enqueued_at", "prefill-job")?,
         chunk_override,
     })
@@ -345,6 +366,7 @@ pub(crate) fn instance_to_json(i: &Instance) -> Json {
         .set("win_sum_ctx0", Json::u64_hex(i.win_sum_ctx0))
         .set("perf_factor", Json::f64_bits(i.perf_factor))
         .set("degrade_until", Json::f64_bits(i.degrade_until))
+        .set("kvcache", i.kvcache.to_json())
 }
 
 pub(crate) fn instance_from_json(
@@ -393,6 +415,7 @@ pub(crate) fn instance_from_json(
     inst.win_sum_ctx0 = pu64(j, "win_sum_ctx0", what)?;
     inst.perf_factor = pf(j, "perf_factor", what)?;
     inst.degrade_until = pf(j, "degrade_until", what)?;
+    inst.kvcache = super::kvcache::PrefixCache::from_json(get(j, "kvcache", what)?)?;
     Ok(inst)
 }
 

@@ -100,6 +100,36 @@ impl<'a> ClusterView<'a> {
     pub fn degraded(&self) -> impl Iterator<Item = &'a Instance> + 'a {
         self.cluster.iter().filter(|i| i.is_degraded())
     }
+
+    // ---- prefix-cache observation (`sim::kvcache`) ----
+    //
+    // Cache-aware routers score placement by warm overlap; these queries
+    // are read-only (no LRU touch, no hit/miss counter movement), so a
+    // policy probing every candidate does not perturb cache state.
+
+    /// Warm prefix tokens instance `id` could reuse for `req` (0 for
+    /// stale ids, sessionless requests, or disabled caches).
+    pub fn warm_overlap(&self, id: InstanceId, req: &crate::workload::Request) -> usize {
+        self.cluster.get(id).map_or(0, |i| i.warm_overlap(req))
+    }
+
+    /// Occupied fraction of instance `id`'s prefix-cache block pool
+    /// (0.0 for stale ids or disabled caches).
+    pub fn cache_occupancy(&self, id: InstanceId) -> f64 {
+        self.cluster.get(id).map_or(0.0, |i| i.kvcache.occupancy())
+    }
+
+    /// Aggregate (lookup hits, misses, evictions) across all live
+    /// instances' prefix caches.
+    pub fn cache_counters(&self) -> (u64, u64, u64) {
+        self.cluster.iter().fold((0, 0, 0), |acc, i| {
+            (
+                acc.0 + i.kvcache.hits,
+                acc.1 + i.kvcache.misses,
+                acc.2 + i.kvcache.evictions,
+            )
+        })
+    }
 }
 
 #[cfg(test)]
@@ -121,6 +151,7 @@ mod tests {
             max_gpus: 8,
             convertible_chunk_size: 512,
             convertible_reserve_tokens: 4096.0,
+            kvcache: crate::sim::KvCacheConfig::disabled(),
         })
     }
 
@@ -137,5 +168,30 @@ mod tests {
         assert_eq!(v.max_gpus(), 8);
         assert_eq!(v.ids_of(Role::Prefiller), vec![p]);
         assert_eq!(v.iter().count(), 2);
+    }
+
+    #[test]
+    fn cache_queries_are_read_only() {
+        use crate::sim::KvCacheConfig;
+        use crate::workload::Request;
+        let mut c = cluster();
+        c.config.kvcache = KvCacheConfig {
+            capacity_tokens: 4096,
+            block_tokens: 16,
+        };
+        let p = c.spawn(Role::Prefiller, 0.0, Some(0.0)).unwrap();
+        c.get_mut(p).unwrap().kvcache.insert(9, 600);
+        let req = Request::new(0, 1.0, 800, 64).with_session(9, 700);
+        let c = c; // freeze
+        let v = ClusterView::new(&c);
+        assert_eq!(v.warm_overlap(p, &req), 600);
+        assert!(v.cache_occupancy(p) > 0.0);
+        let before = v.cache_counters();
+        // Probing candidates must not move LRU clocks or counters.
+        for _ in 0..10 {
+            v.warm_overlap(p, &req);
+        }
+        assert_eq!(v.cache_counters(), before);
+        assert_eq!(v.warm_overlap(p, &Request::new(1, 1.0, 100, 10)), 0);
     }
 }

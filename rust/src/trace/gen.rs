@@ -9,7 +9,7 @@
 //! byte-identical sequence the pre-streaming eager generator produced.
 
 use super::source::{materialize, ArrivalSource, TraceProfile, TraceSliceSource};
-use super::spec::{base_families, TraceFamily, TraceSpec};
+use super::spec::{base_families, SessionModel, TraceFamily, TraceSpec};
 use super::transform::Resample;
 use crate::util::rng::Pcg64;
 use crate::workload::Request;
@@ -285,15 +285,54 @@ pub fn family_source(family: TraceFamily, rps: f64, duration_s: f64, seed: u64) 
     if family == TraceFamily::Mixed {
         Box::new(MixedSource::new(rps, duration_s, seed))
     } else {
-        Box::new(SpecSource::new(family.spec(rps, duration_s), seed))
+        spec_source(&family.spec(rps, duration_s), seed)
+    }
+}
+
+/// [`family_source`] with an optional multi-turn session model layered on
+/// top (the scenario loader's `sessions` block). `None` defers to the
+/// plain family stream, bit-identical to the historical output; `Some`
+/// wraps the family's base arrivals in a
+/// [`super::session::SessionSource`] — including the Mixed family, whose
+/// interleaved stream becomes the session openers.
+pub fn sessioned_family_source(
+    family: TraceFamily,
+    rps: f64,
+    duration_s: f64,
+    seed: u64,
+    sessions: Option<SessionModel>,
+) -> Box<dyn ArrivalSource + Send> {
+    let Some(model) = sessions else {
+        return family_source(family, rps, duration_s, seed);
+    };
+    let spec = family.spec(rps, duration_s).with_sessions(model);
+    if family == TraceFamily::Mixed {
+        let base = MixedSource::new(rps, duration_s, seed);
+        Box::new(super::session::SessionSource::new(&spec, base, seed))
+    } else {
+        spec_source(&spec, seed)
+    }
+}
+
+/// Build the streaming source for an arbitrary [`TraceSpec`], wrapping in
+/// the multi-turn [`super::session::SessionSource`] when the spec carries
+/// a session model. Specs with `sessions: None` go through the bare
+/// [`SpecSource`] path, bit-identical to the historical stream.
+pub fn spec_source(spec: &TraceSpec, seed: u64) -> Box<dyn ArrivalSource + Send> {
+    let base = SpecSource::new(spec.clone(), seed);
+    if spec.sessions.is_some() {
+        Box::new(super::session::SessionSource::new(spec, base, seed))
+    } else {
+        Box::new(base)
     }
 }
 
 /// Generate a materialized trace from a spec. Deterministic for a given
-/// seed; drains [`SpecSource`], whose sequence is pinned to the old eager
-/// generator by the streaming-equivalence tests.
+/// seed; drains [`SpecSource`] (session-wrapped when the spec asks for
+/// it), whose sequence is pinned to the old eager generator by the
+/// streaming-equivalence tests.
 pub fn generate(spec: &TraceSpec, seed: u64) -> Trace {
-    materialize(&mut SpecSource::new(spec.clone(), seed))
+    materialize(&mut spec_source(spec, seed))
 }
 
 /// Generate a materialized family trace at the given rate/duration.
@@ -404,6 +443,43 @@ pub fn fig6_trace(t1: f64, t2: f64, duration_s: f64) -> Trace {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sessioned_streaming_matches_materialized() {
+        // The streamed SessionSource and the materialized trace built by
+        // draining it must agree request-for-request, session refs
+        // included — the same contract the sessionless streaming-
+        // equivalence tests pin for SpecSource.
+        let spec = TraceFamily::AzureConv
+            .spec(6.0, 120.0)
+            .with_sessions(SessionModel::new(4.0, 5.0));
+        let eager = generate(&spec, 9);
+        let mut src = spec_source(&spec, 9);
+        let mut streamed = Vec::new();
+        while let Some(r) = src.next_request() {
+            streamed.push(r);
+        }
+        assert_eq!(eager.requests, streamed);
+        assert!(
+            streamed
+                .iter()
+                .any(|r| r.session.is_some_and(|s| s.prefix_tokens > 0)),
+            "session layer produced no warm follow-up turns"
+        );
+        // And the sessioned helper routes through the same wrapped path.
+        let mut via_family = sessioned_family_source(
+            TraceFamily::AzureConv,
+            6.0,
+            120.0,
+            9,
+            Some(SessionModel::new(4.0, 5.0)),
+        );
+        let mut family_reqs = Vec::new();
+        while let Some(r) = via_family.next_request() {
+            family_reqs.push(r);
+        }
+        assert_eq!(family_reqs, streamed);
+    }
 
     #[test]
     fn generated_rate_matches_spec() {

@@ -14,17 +14,20 @@
 pub mod burst;
 pub mod gen;
 pub mod replay;
+pub mod session;
 pub mod source;
 pub mod spec;
 pub mod transform;
 
 pub use gen::{
-    family_source, fig6_trace, generate, generate_family, generate_mixed, step_trace,
-    uniform_bucket_trace, MixedSource, SpecSource, Trace,
+    family_source, fig6_trace, generate, generate_family, generate_mixed, sessioned_family_source,
+    spec_source,
+    step_trace, uniform_bucket_trace, MixedSource, SpecSource, Trace,
 };
+pub use session::SessionSource;
 pub use source::{
     fast_forward, materialize, ArrivalSource, OwnedTraceSource, SourceFactory, TraceProfile,
     TraceReplaySource, TraceSliceSource,
 };
-pub use spec::{base_families, BurstModel, LenDist, TraceFamily, TraceSpec};
+pub use spec::{base_families, BurstModel, LenDist, SessionModel, TraceFamily, TraceSpec};
 pub use transform::{BurstInject, BurstWindow, Diurnal, RateScale, Resample, SourceExt, Window};

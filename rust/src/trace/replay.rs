@@ -21,24 +21,61 @@
 use super::gen::Trace;
 use crate::util::json::Json;
 use crate::workload::Request;
+use std::collections::HashMap;
 use std::path::Path;
 
 /// Column aliases accepted for each field (lowercased for matching).
 const ARRIVAL_KEYS: &[&str] = &["arrival_s", "arrival", "timestamp", "ts", "time"];
 const INPUT_KEYS: &[&str] = &["input_tokens", "contexttokens", "context_tokens", "prompt_tokens", "input"];
 const OUTPUT_KEYS: &[&str] = &["output_tokens", "generatedtokens", "generated_tokens", "output"];
+/// Optional multi-turn columns (`sim::kvcache` workloads). Azure-style
+/// exports carry a conversation id; the prefix column is ours.
+const SESSION_KEYS: &[&str] = &["session_id", "session", "conversationid", "conversation_id", "conv_id"];
+const PREFIX_KEYS: &[&str] = &["prefix_tokens", "prefix", "cached_tokens", "cachedtokens"];
 
 fn match_key(name: &str, aliases: &[&str]) -> bool {
     let n = name.trim().to_ascii_lowercase();
     aliases.iter().any(|a| *a == n)
 }
 
+/// Map a session-id cell to a `u64`: decimal ids pass through exactly
+/// (lossless round trips), anything else (GUID-style conversation keys)
+/// hashes deterministically via FNV-1a.
+fn session_id_of(text: &str) -> u64 {
+    let t = text.trim();
+    if let Ok(v) = t.parse::<u64>() {
+        return v;
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in t.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// One parsed record before id re-sequencing.
+struct Row {
+    arrival: f64,
+    input: usize,
+    output: usize,
+    session: Option<u64>,
+    /// Explicit warm-prefix length; `None` with a session id present means
+    /// "derive from the running conversation context".
+    prefix: Option<usize>,
+}
+
 /// Finalize parsed rows into a [`Trace`]: stable-sort by arrival,
-/// re-sequence ids, resolve the horizon.
-fn finish(name: &str, mut rows: Vec<(f64, usize, usize)>, duration_s: Option<f64>) -> anyhow::Result<Trace> {
+/// re-sequence ids, resolve the horizon, and derive missing prefixes.
+///
+/// Prefix derivation: turn *k* of a conversation resends everything said
+/// so far, so when a file carries session ids without a prefix column the
+/// warm prefix defaults to the previous turn's input + output tokens
+/// (clamped to the prompt length by [`Request::with_session`]).
+fn finish(name: &str, mut rows: Vec<Row>, duration_s: Option<f64>) -> anyhow::Result<Trace> {
     anyhow::ensure!(!rows.is_empty(), "replay file contains no records");
-    rows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
-    let last = rows.last().map(|r| r.0).unwrap_or(0.0);
+    rows.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap_or(std::cmp::Ordering::Equal));
+    let last = rows.last().map(|r| r.arrival).unwrap_or(0.0);
     let duration = duration_s.unwrap_or_else(|| last.ceil().max(1.0));
     anyhow::ensure!(
         duration.is_finite() && duration > 0.0,
@@ -48,10 +85,21 @@ fn finish(name: &str, mut rows: Vec<(f64, usize, usize)>, duration_s: Option<f64
         duration >= last,
         "declared duration_s {duration} precedes last arrival {last}"
     );
+    let mut context: HashMap<u64, usize> = HashMap::new();
     let requests = rows
         .into_iter()
         .enumerate()
-        .map(|(i, (t, inp, out))| Request::new(i as u64, t, inp, out))
+        .map(|(i, r)| {
+            let mut req = Request::new(i as u64, r.arrival, r.input, r.output);
+            if let Some(id) = r.session {
+                let prefix = r
+                    .prefix
+                    .unwrap_or_else(|| context.get(&id).copied().unwrap_or(0));
+                req = req.with_session(id, prefix);
+                context.insert(id, r.input + r.output);
+            }
+            req
+        })
         .collect();
     Ok(Trace {
         name: name.to_string(),
@@ -76,7 +124,9 @@ fn comment_duration(line: &str) -> Option<f64> {
 pub fn parse_csv(text: &str, name: &str) -> anyhow::Result<Trace> {
     let mut duration: Option<f64> = None;
     let mut cols: Option<(usize, usize, usize)> = None;
-    let mut rows: Vec<(f64, usize, usize)> = Vec::new();
+    // Optional session/prefix columns; empty cells mean "sessionless row".
+    let mut opt_cols: (Option<usize>, Option<usize>) = (None, None);
+    let mut rows: Vec<Row> = Vec::new();
     for (lineno, raw) in text.lines().enumerate() {
         let line = raw.trim();
         if line.is_empty() {
@@ -101,6 +151,7 @@ pub fn parse_csv(text: &str, name: &str) -> anyhow::Result<Trace> {
                 );
             };
             cols = Some((a, i, o));
+            opt_cols = (find(SESSION_KEYS), find(PREFIX_KEYS));
             continue;
         }
         let (a, i, o) = cols.unwrap();
@@ -126,17 +177,41 @@ pub fn parse_csv(text: &str, name: &str) -> anyhow::Result<Trace> {
             "line {}: arrival must be finite and >= 0",
             lineno + 1
         );
-        rows.push((arrival, input, output));
+        let cell = |ix: Option<usize>| {
+            ix.and_then(|ix| fields.get(ix))
+                .map(|f| f.trim())
+                .filter(|f| !f.is_empty())
+        };
+        let session = cell(opt_cols.0).map(session_id_of);
+        let prefix = match cell(opt_cols.1) {
+            Some(f) if session.is_some() => Some(f.parse::<usize>().map_err(|_| {
+                anyhow::anyhow!("line {}: bad prefix tokens `{f}`", lineno + 1)
+            })?),
+            // A prefix without a session id is meaningless; ignore it.
+            _ => None,
+        };
+        rows.push(Row {
+            arrival,
+            input,
+            output,
+            session,
+            prefix,
+        });
     }
     finish(name, rows, duration)
 }
 
 /// Pull a numeric field from a JSON object by alias list.
 fn json_field(obj: &Json, aliases: &[&str]) -> Option<f64> {
+    json_raw(obj, aliases).and_then(Json::as_f64)
+}
+
+/// Pull a raw field value from a JSON object by alias list.
+fn json_raw<'a>(obj: &'a Json, aliases: &[&str]) -> Option<&'a Json> {
     if let Json::Obj(m) = obj {
         for (k, v) in m {
             if match_key(k, aliases) {
-                return v.as_f64();
+                return Some(v);
             }
         }
     }
@@ -146,7 +221,7 @@ fn json_field(obj: &Json, aliases: &[&str]) -> Option<f64> {
 /// Parse JSONL replay text into a trace named `name`.
 pub fn parse_jsonl(text: &str, name: &str) -> anyhow::Result<Trace> {
     let mut duration: Option<f64> = None;
-    let mut rows: Vec<(f64, usize, usize)> = Vec::new();
+    let mut rows: Vec<Row> = Vec::new();
     for (lineno, raw) in text.lines().enumerate() {
         let line = raw.trim();
         if line.is_empty() {
@@ -189,7 +264,39 @@ pub fn parse_jsonl(text: &str, name: &str) -> anyhow::Result<Trace> {
                 lineno + 1
             );
         }
-        rows.push((arrival, input as usize, output as usize));
+        let session = match json_raw(&obj, SESSION_KEYS) {
+            None | Some(Json::Null) => None,
+            Some(Json::Str(s)) => Some(session_id_of(s)),
+            Some(v) => {
+                let f = v.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("line {}: session id must be a string or number", lineno + 1)
+                })?;
+                anyhow::ensure!(
+                    f.is_finite() && f >= 0.0 && f.fract() == 0.0,
+                    "line {}: numeric session id must be a non-negative integer, got {f}",
+                    lineno + 1
+                );
+                Some(f as u64)
+            }
+        };
+        let prefix = match json_field(&obj, PREFIX_KEYS) {
+            Some(p) if session.is_some() => {
+                anyhow::ensure!(
+                    p.is_finite() && p >= 0.0 && p.fract() == 0.0,
+                    "line {}: prefix tokens must be a non-negative integer, got {p}",
+                    lineno + 1
+                );
+                Some(p as usize)
+            }
+            _ => None,
+        };
+        rows.push(Row {
+            arrival,
+            input: input as usize,
+            output: output as usize,
+            session,
+            prefix,
+        });
     }
     finish(name, rows, duration)
 }
@@ -197,11 +304,31 @@ pub fn parse_jsonl(text: &str, name: &str) -> anyhow::Result<Trace> {
 /// Serialize a trace to canonical CSV (`# duration_s` comment + header +
 /// one row per request, shortest-round-trip floats).
 pub fn to_csv(trace: &Trace) -> String {
+    // Session columns appear only when some request carries one, so
+    // sessionless traces serialize byte-identically to the historical
+    // three-column format.
+    let sessions = trace.requests.iter().any(|r| r.session.is_some());
     let mut out = String::new();
     out.push_str(&format!("# duration_s={}\n", trace.duration_s));
-    out.push_str("arrival_s,input_tokens,output_tokens\n");
+    if sessions {
+        out.push_str("arrival_s,input_tokens,output_tokens,session_id,prefix_tokens\n");
+    } else {
+        out.push_str("arrival_s,input_tokens,output_tokens\n");
+    }
     for r in &trace.requests {
-        out.push_str(&format!("{},{},{}\n", r.arrival, r.input_tokens, r.output_tokens));
+        match (sessions, r.session) {
+            (false, _) => {
+                out.push_str(&format!("{},{},{}\n", r.arrival, r.input_tokens, r.output_tokens))
+            }
+            (true, Some(s)) => out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                r.arrival, r.input_tokens, r.output_tokens, s.id, s.prefix_tokens
+            )),
+            (true, None) => out.push_str(&format!(
+                "{},{},{},,\n",
+                r.arrival, r.input_tokens, r.output_tokens
+            )),
+        }
     }
     out
 }
@@ -212,10 +339,17 @@ pub fn to_jsonl(trace: &Trace) -> String {
     out.push_str(&Json::obj().set("duration_s", trace.duration_s).to_string());
     out.push('\n');
     for r in &trace.requests {
-        let rec = Json::obj()
+        let mut rec = Json::obj()
             .set("arrival_s", r.arrival)
             .set("input_tokens", r.input_tokens)
             .set("output_tokens", r.output_tokens);
+        if let Some(s) = r.session {
+            // Decimal string: hashed conversation keys use all 64 bits,
+            // which a JSON double cannot represent exactly.
+            rec = rec
+                .set("session_id", s.id.to_string())
+                .set("prefix_tokens", s.prefix_tokens);
+        }
         out.push_str(&rec.to_string());
         out.push('\n');
     }
@@ -350,6 +484,82 @@ mod tests {
         // JSONL token counts must be non-negative integers, like CSV.
         assert!(parse_jsonl("{\"arrival_s\":1,\"input_tokens\":-100,\"output_tokens\":5}\n", "x").is_err());
         assert!(parse_jsonl("{\"arrival_s\":1,\"input_tokens\":10.7,\"output_tokens\":5}\n", "x").is_err());
+    }
+
+    fn sessioned_sample() -> Trace {
+        use crate::trace::spec::SessionModel;
+        let spec = TraceFamily::AzureConv
+            .spec(5.0, 120.0)
+            .with_sessions(SessionModel::new(3.0, 4.0));
+        generate(&spec, 11)
+    }
+
+    #[test]
+    fn csv_session_round_trip_is_lossless() {
+        let t = sessioned_sample();
+        assert!(t.requests.iter().any(|r| r.session.is_some()));
+        let text = to_csv(&t);
+        assert!(text.contains("session_id"), "sessioned CSV must carry the column");
+        let back = parse_csv(&text, &t.name).unwrap();
+        assert_eq!(back.requests, t.requests);
+        assert_eq!(to_csv(&back), text);
+    }
+
+    #[test]
+    fn jsonl_session_round_trip_is_lossless() {
+        let t = sessioned_sample();
+        let text = to_jsonl(&t);
+        assert!(text.contains("session_id"));
+        let back = parse_jsonl(&text, &t.name).unwrap();
+        assert_eq!(back.requests, t.requests);
+        assert_eq!(to_jsonl(&back), text);
+    }
+
+    #[test]
+    fn sessionless_serialization_is_unchanged() {
+        // The historical three-column format must stay byte-for-byte:
+        // pre-session golden files and diff baselines depend on it.
+        let t = sample();
+        assert!(to_csv(&t).starts_with(&format!(
+            "# duration_s={}\narrival_s,input_tokens,output_tokens\n",
+            t.duration_s
+        )));
+        assert!(!to_jsonl(&t).contains("session_id"));
+    }
+
+    #[test]
+    fn conversation_ids_without_prefix_column_derive_running_context() {
+        // Azure-style export: conversation GUIDs, no prefix column. Turn k
+        // should inherit prefix = previous turn's input + output.
+        let text = "TIMESTAMP,ContextTokens,GeneratedTokens,ConversationId\n\
+                    0.0,100,20,guid-a\n\
+                    5.0,140,30,guid-a\n\
+                    7.0,50,10,guid-b\n\
+                    9.0,300,40,guid-a\n";
+        let t = parse_csv(text, "azure").unwrap();
+        let s: Vec<_> = t.requests.iter().map(|r| r.session.unwrap()).collect();
+        assert_eq!(s[0].prefix_tokens, 0);
+        assert_eq!(s[1].prefix_tokens, 120); // 100 + 20
+        assert_eq!(s[2].prefix_tokens, 0); // new conversation
+        assert_eq!(s[3].prefix_tokens, 170); // 140 + 30
+        assert_eq!(s[0].id, s[1].id);
+        assert_eq!(s[1].id, s[3].id);
+        assert_ne!(s[0].id, s[2].id);
+        // Derived prefixes are clamped to the prompt by with_session.
+        for r in &t.requests {
+            assert!(r.session.unwrap().prefix_tokens <= r.input_tokens);
+        }
+    }
+
+    #[test]
+    fn explicit_prefix_column_wins_over_derivation() {
+        let text = "arrival_s,input_tokens,output_tokens,session_id,prefix_tokens\n\
+                    0.0,100,20,7,0\n\
+                    5.0,200,30,7,90\n\
+                    8.0,60,10,,\n";
+        let t = parse_csv(text, "x").unwrap();
+        assert_eq!(t.requests[1].session.unwrap().prefix_tokens, 90);
+        assert!(t.requests[2].session.is_none(), "empty cells mean sessionless");
     }
 
     #[test]

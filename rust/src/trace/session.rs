@@ -1,0 +1,344 @@
+//! Multi-turn conversational sessions ([`SessionSource`]).
+//!
+//! When a [`TraceSpec`] carries a [`SessionModel`], base arrivals become
+//! session *openers* and the wrapper spawns follow-up turns: turn k+1's
+//! prompt re-submits the whole conversation so far (prefix = Σ earlier
+//! input + output tokens) plus a freshly sampled user message. The prefix
+//! is exactly what a warm KV cache (`sim::kvcache`) can skip, so these
+//! workloads are where cache-aware routing pays off.
+//!
+//! Determinism contract: one wrapper-owned [`Pcg64`] stream, drawn from in
+//! *emission order* (turn count at the opener, fresh lengths + think gap
+//! at each follow-up), so the stream is reproducible per seed and
+//! identical whether drained eagerly or pulled lazily. The base source's
+//! own streams are untouched — a spec with `sessions: None` never
+//! constructs a wrapper and stays bit-identical to the historical output.
+
+use super::source::{ArrivalSource, TraceProfile};
+use super::spec::{LenDist, SessionModel, TraceSpec};
+use crate::util::rng::Pcg64;
+use crate::workload::Request;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Hard cap on turns per session: keeps a pathological geometric draw from
+/// spawning unbounded context growth (the context cap would clamp it
+/// anyway, but bounding the turn count also bounds per-session work).
+const MAX_TURNS: u32 = 32;
+
+/// A follow-up turn waiting for its arrival time, ordered for a min-heap
+/// on `(time, seq)` — `seq` is an emission-order tie-break so equal times
+/// pop deterministically.
+struct PendingTurn {
+    time: f64,
+    seq: u64,
+    session: u64,
+    /// Accumulated conversation tokens (Σ prior input + output).
+    prefix: usize,
+    /// Turns still to come *after* this one.
+    turns_left: u32,
+}
+
+impl PartialEq for PendingTurn {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for PendingTurn {}
+impl PartialOrd for PendingTurn {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for PendingTurn {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Session-structure wrapper over any arrival source (in practice the
+/// synthetic [`super::SpecSource`] family). Base arrivals open sessions;
+/// follow-up turns are spawned with exponential think-time gaps and
+/// growing context prefixes, merged time-sorted, ids re-sequenced in
+/// emission order.
+pub struct SessionSource<S> {
+    base: S,
+    model: SessionModel,
+    input_len: LenDist,
+    output_len: LenDist,
+    rng: Pcg64,
+    pending: BinaryHeap<PendingTurn>,
+    base_peek: Option<Request>,
+    base_primed: bool,
+    next_id: u64,
+    next_session: u64,
+    next_seq: u64,
+}
+
+impl<S: ArrivalSource> SessionSource<S> {
+    /// Wrap `base` with the session structure of `spec` (which must carry
+    /// `sessions: Some(..)`; the spec's length distributions sample the
+    /// fresh per-turn user messages). `seed` should be the trace seed —
+    /// the wrapper derives its own independent stream from it.
+    pub fn new(spec: &TraceSpec, base: S, seed: u64) -> SessionSource<S> {
+        let model = spec
+            .sessions
+            .expect("SessionSource requires a spec with a session model");
+        SessionSource {
+            base,
+            model,
+            input_len: spec.input_len,
+            output_len: spec.output_len,
+            // XOR-derived stream: independent of the base source's
+            // `Pcg64::new(seed)` fork parent.
+            rng: Pcg64::new(seed ^ 0x5E55_1045_CAFE_F00D),
+            pending: BinaryHeap::new(),
+            base_peek: None,
+            base_primed: false,
+            next_id: 0,
+            next_session: 0,
+            next_seq: 0,
+        }
+    }
+
+    /// Probability each turn is followed by another, chosen so the mean
+    /// turn count is `turns_mean` (geometric, min 1).
+    fn continue_prob(&self) -> f64 {
+        let m = self.model.turns_mean.max(1.0);
+        (1.0 - 1.0 / m).clamp(0.0, 0.98)
+    }
+
+    /// Draw this session's total turn count (min 1, capped).
+    fn draw_turns(&mut self) -> u32 {
+        let p = self.continue_prob();
+        let mut turns = 1u32;
+        while turns < MAX_TURNS && self.rng.chance(p) {
+            turns += 1;
+        }
+        turns
+    }
+
+    /// Schedule the next turn of a session, unless it would land past the
+    /// stream horizon (truncated sessions simply end early).
+    fn schedule_turn(&mut self, time: f64, session: u64, prefix: usize, turns_left: u32) {
+        let gap = self.rng.exponential(1.0 / self.model.think_time_s.max(1e-6));
+        let t = time + gap;
+        if t >= self.base.duration_s() {
+            return;
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.push(PendingTurn {
+            time: t,
+            seq,
+            session,
+            prefix,
+            turns_left,
+        });
+    }
+
+    /// Emit a follow-up turn: fresh user message sampled from the spec
+    /// length distributions, prompt = prefix + fresh, context clamped.
+    fn emit_turn(&mut self, turn: PendingTurn) -> Request {
+        let fresh = sample_len(&mut self.rng, &self.input_len);
+        let output = sample_len(&mut self.rng, &self.output_len);
+        // Clamp so prefix + fresh + output fits the context cap: the
+        // oldest context is dropped first (prefix shrinks), keeping the
+        // turn admissible on any decoder.
+        let cap = self.model.max_context;
+        let prefix = turn.prefix.min(cap.saturating_sub(fresh + output));
+        let input = prefix + fresh;
+        let next_prefix = input + output;
+        if turn.turns_left > 0 {
+            self.schedule_turn(turn.time, turn.session, next_prefix, turn.turns_left - 1);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        Request::new(id, turn.time, input, output).with_session(turn.session, prefix)
+    }
+
+    /// Emit a session opener from a base arrival (turn 1, cold prefix).
+    fn emit_opener(&mut self, base: Request) -> Request {
+        let session = self.next_session;
+        self.next_session += 1;
+        let turns = self.draw_turns();
+        if turns > 1 {
+            let next_prefix = base.input_tokens + base.output_tokens;
+            self.schedule_turn(base.arrival, session, next_prefix, turns - 2);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        Request::new(id, base.arrival, base.input_tokens, base.output_tokens)
+            .with_session(session, 0)
+    }
+}
+
+fn sample_len(rng: &mut Pcg64, d: &LenDist) -> usize {
+    (rng.lognormal(d.mu, d.sigma).round() as usize).clamp(d.min, d.max)
+}
+
+impl<S: ArrivalSource> ArrivalSource for SessionSource<S> {
+    fn next_request(&mut self) -> Option<Request> {
+        if !self.base_primed {
+            self.base_peek = self.base.next_request();
+            self.base_primed = true;
+        }
+        let take_pending = match (&self.base_peek, self.pending.peek()) {
+            (None, Some(_)) => true,
+            (Some(_), None) => false,
+            (None, None) => return None,
+            // Tie → opener first (matches the merge order of emission:
+            // the opener was generated earlier).
+            (Some(b), Some(p)) => p.time < b.arrival,
+        };
+        if take_pending {
+            let turn = self.pending.pop().unwrap();
+            Some(self.emit_turn(turn))
+        } else {
+            let base = self.base_peek.take().unwrap();
+            self.base_peek = self.base.next_request();
+            Some(self.emit_opener(base))
+        }
+    }
+
+    fn duration_s(&self) -> f64 {
+        self.base.duration_s()
+    }
+
+    fn label(&self) -> String {
+        format!("{}+sessions", self.base.label())
+    }
+
+    fn profile(&self) -> TraceProfile {
+        // Analytic estimate: openers arrive at the base rate and each
+        // session averages `turns_mean` turns, so the request rate scales
+        // by ~turns_mean (horizon truncation makes this an upper bound).
+        // Turn k's prompt adds (k-1)·(input+output) of context; averaging
+        // over k = 1..m gives + (m-1)/2 · (input+output), clamped to the
+        // context cap.
+        let base = self.base.profile();
+        let m = self.model.turns_mean.max(1.0);
+        let per_turn = base.avg_input_tokens + base.avg_output_tokens;
+        let avg_input = (base.avg_input_tokens + (m - 1.0) / 2.0 * per_turn)
+            .min(self.model.max_context as f64);
+        TraceProfile {
+            avg_rps: base.avg_rps * m,
+            avg_input_tokens: avg_input,
+            avg_output_tokens: base.avg_output_tokens,
+            duration_s: base.duration_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::gen::SpecSource;
+    use crate::trace::source::materialize;
+    use crate::trace::spec::TraceFamily;
+
+    fn sessioned_spec(rps: f64, dur: f64) -> TraceSpec {
+        TraceFamily::AzureConv
+            .spec(rps, dur)
+            .with_sessions(SessionModel::new(3.0, 5.0))
+    }
+
+    fn build(rps: f64, dur: f64, seed: u64) -> SessionSource<SpecSource> {
+        let spec = sessioned_spec(rps, dur);
+        let base = SpecSource::new(spec.clone(), seed);
+        SessionSource::new(&spec, base, seed)
+    }
+
+    #[test]
+    fn sessions_are_deterministic_and_sorted() {
+        let a = materialize(&mut build(6.0, 120.0, 7));
+        let b = materialize(&mut build(6.0, 120.0, 7));
+        assert_eq!(a.requests, b.requests);
+        assert!(!a.requests.is_empty());
+        for w in a.requests.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        for (i, r) in a.requests.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "ids re-sequenced in emission order");
+        }
+    }
+
+    #[test]
+    fn every_request_carries_a_session_and_valid_prefix() {
+        let t = materialize(&mut build(6.0, 120.0, 11));
+        let mut multi_turn = 0usize;
+        for r in &t.requests {
+            let s = r.session.expect("session workloads tag every request");
+            assert!(s.prefix_tokens < r.input_tokens.max(1) + 1);
+            assert!(s.prefix_tokens <= r.input_tokens);
+            if s.prefix_tokens > 0 {
+                multi_turn += 1;
+            }
+        }
+        assert!(multi_turn > 0, "mean 3 turns must produce follow-ups");
+    }
+
+    #[test]
+    fn turn_prefixes_grow_within_a_session() {
+        let t = materialize(&mut build(4.0, 180.0, 3));
+        use std::collections::HashMap;
+        let mut last_prefix: HashMap<u64, usize> = HashMap::new();
+        let mut turns_per: HashMap<u64, usize> = HashMap::new();
+        for r in &t.requests {
+            let s = r.session.unwrap();
+            *turns_per.entry(s.id).or_insert(0) += 1;
+            let prev = last_prefix.insert(s.id, s.prefix_tokens);
+            if let Some(prev) = prev {
+                // Prefix grows monotonically (clamping only ever lowers
+                // it toward the cap, which itself grows with the turn).
+                assert!(
+                    s.prefix_tokens >= prev.min(s.prefix_tokens),
+                    "session {} shrank below floor",
+                    s.id
+                );
+                assert!(s.prefix_tokens > 0, "follow-up turns have warm prefixes");
+            }
+        }
+        assert!(
+            turns_per.values().any(|&n| n >= 2),
+            "some session must have multiple turns"
+        );
+    }
+
+    #[test]
+    fn context_cap_bounds_every_turn() {
+        let spec = TraceFamily::AzureConv.spec(6.0, 240.0).with_sessions(SessionModel {
+            turns_mean: 6.0,
+            think_time_s: 2.0,
+            max_context: 4096,
+        });
+        let base = SpecSource::new(spec.clone(), 5);
+        let t = materialize(&mut SessionSource::new(&spec, base, 5));
+        for r in &t.requests {
+            let s = r.session.unwrap();
+            // Fresh (uncached) prompt + output can exceed the cap only
+            // through a single oversized base sample; the *prefix* never
+            // pushes past it.
+            assert!(
+                s.prefix_tokens + (r.input_tokens - s.prefix_tokens) + r.output_tokens
+                    <= 4096 + 8192 + 1024,
+                "prefix clamp failed"
+            );
+            if s.prefix_tokens > 0 {
+                assert!(s.prefix_tokens + r.output_tokens <= 4096 + 1024);
+            }
+        }
+    }
+
+    #[test]
+    fn sessionless_spec_is_untouched() {
+        let spec = TraceFamily::AzureConv.spec(6.0, 60.0);
+        assert!(spec.sessions.is_none());
+        let t = materialize(&mut SpecSource::new(spec, 9));
+        assert!(t.requests.iter().all(|r| r.session.is_none()));
+    }
+}

@@ -43,6 +43,36 @@ pub struct BurstModel {
     pub rate_factor: f64,
 }
 
+/// Multi-turn conversational-session model (`sim::kvcache` workloads).
+///
+/// When a [`TraceSpec`] carries one, base arrivals become session
+/// *openers*: each opener draws a geometric turn count (mean
+/// `turns_mean`, min 1) and spawns follow-up turns after exponential
+/// think-time gaps. Turn k's prompt accumulates the full prior
+/// conversation — prefix = Σ earlier (input + output) tokens — which is
+/// exactly what a warm prefix cache can skip.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SessionModel {
+    /// Mean turns per session (geometric; min 1 turn = the opener).
+    pub turns_mean: f64,
+    /// Mean think time between a turn's completion estimate and the next
+    /// turn's arrival, seconds (exponential).
+    pub think_time_s: f64,
+    /// Conversation context cap: prefix + fresh input + output is clamped
+    /// to this many tokens so late turns stay admissible on decoders.
+    pub max_context: usize,
+}
+
+impl SessionModel {
+    pub fn new(turns_mean: f64, think_time_s: f64) -> SessionModel {
+        SessionModel {
+            turns_mean,
+            think_time_s,
+            max_context: 16_384,
+        }
+    }
+}
+
 /// Complete description of a synthetic trace family.
 #[derive(Clone, Debug)]
 pub struct TraceSpec {
@@ -62,6 +92,17 @@ pub struct TraceSpec {
     pub diurnal_amplitude: f64,
     /// Period of the slow modulation, seconds.
     pub diurnal_period_s: f64,
+    /// Multi-turn session structure; `None` (every family default) keeps
+    /// the historical single-shot arrivals bit-identically.
+    pub sessions: Option<SessionModel>,
+}
+
+impl TraceSpec {
+    /// Attach a session model (builder-style, for scenario/test setup).
+    pub fn with_sessions(mut self, sessions: SessionModel) -> TraceSpec {
+        self.sessions = Some(sessions);
+        self
+    }
 }
 
 /// The four production trace families the paper evaluates (§II-C1, §V),
@@ -116,6 +157,7 @@ impl TraceFamily {
                 },
                 diurnal_amplitude: 0.25,
                 diurnal_period_s: 900.0,
+                sessions: None,
             },
             // Code: long prompts, short outputs, sharper bursts.
             TraceFamily::AzureCode => TraceSpec {
@@ -132,6 +174,7 @@ impl TraceFamily {
                 },
                 diurnal_amplitude: 0.30,
                 diurnal_period_s: 700.0,
+                sessions: None,
             },
             // BurstGPT 1: GPT-conversation style — rarer but much taller
             // spikes than the Azure traces.
@@ -149,6 +192,7 @@ impl TraceFamily {
                 },
                 diurnal_amplitude: 0.35,
                 diurnal_period_s: 600.0,
+                sessions: None,
             },
             // BurstGPT 2: API-style, the burstiest of the four — calibrated
             // so ~25 % of requests exceed a 3×-overprovisioned trendline
@@ -167,6 +211,7 @@ impl TraceFamily {
                 },
                 diurnal_amplitude: 0.40,
                 diurnal_period_s: 500.0,
+                sessions: None,
             },
             // Mixed is generated by interleaving the other four at equal
             // rates (see `generate_mixed`); the spec here only carries the
@@ -185,6 +230,7 @@ impl TraceFamily {
                 },
                 diurnal_amplitude: 0.30,
                 diurnal_period_s: 650.0,
+                sessions: None,
             },
         }
     }

@@ -13,7 +13,7 @@
 
 use super::source::{ArrivalSource, TraceProfile};
 use crate::util::rng::Pcg64;
-use crate::workload::Request;
+use crate::workload::{Request, SessionRef};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -28,6 +28,7 @@ struct Pending {
     seq: u64,
     input_tokens: usize,
     output_tokens: usize,
+    session: Option<SessionRef>,
 }
 
 impl PartialEq for Pending {
@@ -100,7 +101,8 @@ impl DupEmitter {
                 };
                 if safe {
                     let p = self.pending.pop().unwrap();
-                    let r = Request::new(self.next_id, p.time, p.input_tokens, p.output_tokens);
+                    let mut r = Request::new(self.next_id, p.time, p.input_tokens, p.output_tokens);
+                    r.session = p.session;
                     self.next_id += 1;
                     return Some(r);
                 }
@@ -124,6 +126,10 @@ impl DupEmitter {
                     seq: self.seq,
                     input_tokens: r.input_tokens,
                     output_tokens: r.output_tokens,
+                    // Every copy keeps the session ref: duplicated turns
+                    // model the same user retrying, so the warm prefix
+                    // still applies.
+                    session: r.session,
                 });
                 self.seq += 1;
             }
@@ -178,7 +184,9 @@ impl<S: ArrivalSource> ArrivalSource for Window<S> {
                 self.done = true;
                 return None;
             }
-            let req = Request::new(self.next_id, r.arrival - self.t0, r.input_tokens, r.output_tokens);
+            let mut req =
+                Request::new(self.next_id, r.arrival - self.t0, r.input_tokens, r.output_tokens);
+            req.session = r.session;
             self.next_id += 1;
             return Some(req);
         }
@@ -278,7 +286,8 @@ impl<S: ArrivalSource> ArrivalSource for Diurnal<S> {
             let phase = 2.0 * std::f64::consts::PI * r.arrival / self.period_s;
             let keep = (1.0 + self.amplitude * phase.sin()) / (1.0 + self.amplitude);
             if self.rng.f64() < keep {
-                let req = Request::new(self.next_id, r.arrival, r.input_tokens, r.output_tokens);
+                let mut req = Request::new(self.next_id, r.arrival, r.input_tokens, r.output_tokens);
+                req.session = r.session;
                 self.next_id += 1;
                 return Some(req);
             }
@@ -584,6 +593,31 @@ mod tests {
             .collect_trace();
         assert!(sorted(&up) && ids_sequential(&up));
         assert!((up.avg_rps() - 30.0).abs() < 4.0, "rps={}", up.avg_rps());
+    }
+
+    #[test]
+    fn transforms_preserve_session_refs() {
+        use crate::trace::gen::spec_source;
+        use crate::trace::spec::SessionModel;
+        let spec = TraceFamily::AzureConv
+            .spec(10.0, 120.0)
+            .with_sessions(SessionModel::new(3.0, 5.0));
+        let full = materialize(&mut *spec_source(&spec, 42));
+        assert!(full.requests.iter().any(|r| r.session.is_some()));
+        let mut chained = spec_source(&spec, 42)
+            .window(10.0, 110.0)
+            .diurnal(0.3, 40.0, 9)
+            .inject_bursts(vec![BurstWindow::new(30.0, 20.0, 2.0)], 10);
+        let t = materialize(&mut chained);
+        assert!(sorted(&t) && ids_sequential(&t));
+        // Every surviving/duplicated arrival still carries its session ref
+        // with a prefix no larger than its prompt.
+        assert!(t.requests.iter().any(|r| r.session.is_some()));
+        for r in &t.requests {
+            if let Some(s) = r.session {
+                assert!(s.prefix_tokens <= r.input_tokens);
+            }
+        }
     }
 
     #[test]

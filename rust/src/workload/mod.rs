@@ -7,4 +7,4 @@ pub mod request;
 
 pub use bucket::{all_buckets, Bucket, BucketScheme, LenClass};
 pub use predictor::OutputPredictor;
-pub use request::{Completion, Request, RequestId, SloPolicy};
+pub use request::{Completion, Request, RequestId, SessionRef, SloPolicy};

@@ -4,6 +4,20 @@
 /// Unique request identifier.
 pub type RequestId = u64;
 
+/// Conversational-session membership of a request (multi-turn workloads).
+///
+/// `id` names the session / prefix group; `prefix_tokens` is how many of
+/// the request's `input_tokens` are a re-sent prefix shared with earlier
+/// turns of the same session (conversation history). An instance that
+/// still holds that prefix warm in its KV cache can skip recomputing the
+/// overlapping part (`sim::kvcache`). Always `prefix_tokens ≤
+/// input_tokens`; first turns carry `prefix_tokens = 0`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SessionRef {
+    pub id: u64,
+    pub prefix_tokens: usize,
+}
+
 /// One inference request as it arrives at the gateway.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Request {
@@ -19,6 +33,9 @@ pub struct Request {
     /// in-flight work (instance crash, preemption, aborted KVC transfer).
     /// Always 0 on arrival; bounded by the engine's retry budget.
     pub retries: u32,
+    /// Session / prefix-group membership for multi-turn conversational
+    /// workloads; `None` for independent one-shot requests.
+    pub session: Option<SessionRef>,
 }
 
 impl Request {
@@ -29,7 +46,18 @@ impl Request {
             input_tokens,
             output_tokens,
             retries: 0,
+            session: None,
         }
+    }
+
+    /// Attach session membership (builder style; clamps the prefix to the
+    /// prompt length so the invariant holds by construction).
+    pub fn with_session(mut self, session_id: u64, prefix_tokens: usize) -> Self {
+        self.session = Some(SessionRef {
+            id: session_id,
+            prefix_tokens: prefix_tokens.min(self.input_tokens),
+        });
+        self
     }
 
     /// Total tokens this request will eventually occupy in KV cache.
@@ -139,6 +167,15 @@ mod tests {
         assert!(!bad_ttft.slo_ok(&slo));
         let bad_tpot = Completion { tpot: 0.15, ..ok };
         assert!(!bad_tpot.slo_ok(&slo));
+    }
+
+    #[test]
+    fn with_session_clamps_prefix_to_prompt() {
+        let r = Request::new(1, 0.0, 100, 50).with_session(7, 500);
+        assert_eq!(r.session, Some(SessionRef { id: 7, prefix_tokens: 100 }));
+        let r2 = Request::new(2, 0.0, 100, 50).with_session(7, 40);
+        assert_eq!(r2.session.unwrap().prefix_tokens, 40);
+        assert_eq!(Request::new(3, 0.0, 10, 5).session, None);
     }
 
     #[test]

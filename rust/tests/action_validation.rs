@@ -29,6 +29,7 @@ fn cluster_cfg(max_gpus: usize) -> ClusterConfig {
         max_gpus,
         convertible_chunk_size: 512,
         convertible_reserve_tokens: 4096.0,
+        kvcache: tokenscale::sim::KvCacheConfig::disabled(),
     }
 }
 

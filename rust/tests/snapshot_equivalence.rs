@@ -33,7 +33,7 @@ use tokenscale::sim::{
     simulate_source, Action, ClusterView, ControlPlane, FaultKind, FaultPlan, FaultSchedule,
     FaultSpec, Role, Signal, SimSnapshot,
 };
-use tokenscale::trace::{fast_forward, BurstWindow, TraceFamily, TraceProfile};
+use tokenscale::trace::{fast_forward, BurstWindow, SessionModel, TraceFamily, TraceProfile};
 use tokenscale::util::json::Json;
 use tokenscale::util::prop::{check, Config};
 use tokenscale::util::stats::Summary;
@@ -76,6 +76,10 @@ fn report_bits(r: &SloReport) -> Vec<u64> {
         r.recovery_events as u64,
         r.recovery_mean_s.to_bits(),
         r.recovery_max_s.to_bits(),
+        // Prefix-cache ledger: a resume that dropped or reordered warm
+        // cache entries would change hits/saved tokens immediately.
+        r.cache_hit_rate.to_bits(),
+        r.saved_prefill_tokens.to_bits(),
     ]);
     out
 }
@@ -768,6 +772,62 @@ fn sketch_mode_matches_retained_and_resumes_bit_identically() {
     // Interrupted sketch-mode runs resume bit-identically (mode restored
     // from the snapshot, percentiles and all).
     scenario_resumes_bit_identically(&sketch_sc, 30.0);
+}
+
+// ------------------- 8. prefix cache: warm mid-session checkpoints
+
+/// A checkpoint taken mid-session — warm prefix-cache entries live on
+/// instances, follow-up turns still pending in their sessions — must
+/// resume bit-identically for every router in the cache-aware family.
+/// `report_bits` pins the cache ledger (hit rate, saved prefill tokens),
+/// so a resume that dropped, reordered or re-aged warm entries would
+/// diverge on the first follow-up turn after the checkpoint.
+#[test]
+fn warm_cache_mid_session_resumes_bit_identically_across_routers() {
+    let mut scenario = Scenario::new(
+        "kv-resume",
+        "small-a100",
+        WorkloadSpec::Synthetic {
+            family: TraceFamily::AzureConv,
+            rps: 4.0,
+            duration_s: 90.0,
+            seed: 808,
+        },
+    )
+    .with_sessions(SessionModel::new(5.0, 6.0))
+    .policies(&["kv-router", "kv-router-rps", "random-router", "round-robin-router"]);
+    scenario.overrides.kv_capacity_tokens = Some(300_000);
+
+    // Non-vacuity: the cache must actually be hot. The kv-router cell
+    // (first policy) must score warm hits, and the snapshot taken at the
+    // checkpoint time must carry live cache entries on some instance.
+    let spec = scenario.experiment_specs().unwrap().remove(0);
+    let cold = run_experiment(&spec);
+    assert!(
+        cold.report.cache_hit_rate > 0.0,
+        "kv-router cell produced no warm hits — fixture is vacuous"
+    );
+    assert!(cold.report.saved_prefill_tokens > 0.0, "no prefill saved");
+    let snap = simulate_prefix(&spec, spec.policy, 45.0, 0.0, None).unwrap();
+    let warm_entries: usize = snap
+        .engine
+        .get("cluster")
+        .and_then(|c| c.get("slots"))
+        .and_then(Json::as_arr)
+        .expect("snapshot carries the cluster slots")
+        .iter()
+        .filter_map(|s| s.get("inst"))
+        .filter_map(|i| i.get("kvcache"))
+        .filter_map(|k| k.get("entries"))
+        .filter_map(Json::as_arr)
+        .map(<[Json]>::len)
+        .sum();
+    assert!(
+        warm_entries > 0,
+        "mid-session checkpoint must hold warm cache entries"
+    );
+
+    scenario_resumes_bit_identically(&scenario, 45.0);
 }
 
 /// Any fault plan replayed from the same seed yields a byte-identical
