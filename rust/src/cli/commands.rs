@@ -379,7 +379,83 @@ fn print_trace_stats(trace: &crate::trace::Trace) {
         "mean burst length  : {:.1}s",
         crate::trace::burst::mean_burst_len_s(&series.requests, 1.0, 60.0)
     );
+    print_seasonality_stats(&series);
     print_session_stats(trace);
+}
+
+/// Seasonality analysis of a binned arrival series: lag-k autocorrelation
+/// at candidate lags (fractions of the trace length) plus the suggested
+/// period (the best-scoring lag). `None` when the series is too short or
+/// constant to score.
+fn seasonality(xs: &[f64]) -> Option<(Vec<(usize, f64)>, usize)> {
+    let n = xs.len();
+    if n < 8 {
+        return None;
+    }
+    let m = xs.iter().sum::<f64>() / n as f64;
+    let denom: f64 = xs.iter().map(|x| (x - m) * (x - m)).sum();
+    if denom <= 1e-12 {
+        return None;
+    }
+    let acf = |k: usize| {
+        let mut num = 0.0;
+        for t in 0..n - k {
+            num += (xs[t] - m) * (xs[t + k] - m);
+        }
+        num / denom
+    };
+    let mut scored: Vec<(usize, f64)> = Vec::new();
+    for div in [24usize, 12, 8, 6, 4, 3, 2] {
+        let k = n / div;
+        if k >= 1 && scored.last().map_or(true, |(prev, _)| *prev != k) {
+            scored.push((k, acf(k)));
+        }
+    }
+    let best = scored
+        .iter()
+        .max_by(|a, b| a.1.total_cmp(&b.1))
+        .map(|(k, _)| *k)?;
+    Some((scored, best))
+}
+
+/// Mean of `xs` folded at `period` bins into (up to) `phases` equal
+/// phase buckets — the shape of one season.
+fn phase_profile(xs: &[f64], period: usize, phases: usize) -> Vec<f64> {
+    let phases = phases.min(period).max(1);
+    let mut sum = vec![0.0; phases];
+    let mut cnt = vec![0usize; phases];
+    for (t, x) in xs.iter().enumerate() {
+        let p = (t % period) * phases / period;
+        sum[p] += *x;
+        cnt[p] += 1;
+    }
+    sum.iter()
+        .zip(&cnt)
+        .map(|(s, &c)| if c > 0 { s / c as f64 } else { 0.0 })
+        .collect()
+}
+
+/// Seasonality block of `trace inspect`: lag-k autocorrelation of the
+/// binned arrival series and the mean rps profile folded at the
+/// best-scoring lag — the `period_s` evidence a `[scenarios.planner]`
+/// block wants (docs/forecasting.md).
+fn print_seasonality_stats(series: &crate::trace::burst::TrafficSeries) {
+    let Some((scored, period_bins)) = seasonality(&series.requests) else {
+        return;
+    };
+    let bin = series.bin_s;
+    println!("seasonality        : lag-k autocorrelation of {bin:.0}s-binned arrivals");
+    for (k, r) in &scored {
+        let marker = if *k == period_bins {
+            "  <- suggested period_s"
+        } else {
+            ""
+        };
+        println!("  acf @ lag {:>5.0}s : {:+.3}{marker}", *k as f64 * bin, r);
+    }
+    let profile = phase_profile(&series.requests, period_bins, 12);
+    let cells: Vec<String> = profile.iter().map(|v| format!("{:.1}", v / bin)).collect();
+    println!("period rps profile : [{}]", cells.join(", "));
 }
 
 /// Session/prefix-sharing block of `trace inspect` — only printed when
@@ -464,4 +540,45 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     println!("mean TTFT          : {:.1} ms", report.mean_ttft() * 1e3);
     println!("mean TPOT          : {:.1} ms", report.mean_tpot() * 1e3);
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{phase_profile, seasonality};
+
+    #[test]
+    fn seasonality_finds_sinusoid_period() {
+        // Period-60 sinusoid over 240 bins: the lag-60 candidate (n/4)
+        // must score highest among the candidate lags.
+        let n = 240;
+        let xs: Vec<f64> = (0..n)
+            .map(|t| 10.0 + 5.0 * (t as f64 * std::f64::consts::TAU / 60.0).sin())
+            .collect();
+        let (scored, best) = seasonality(&xs).expect("long non-constant series");
+        assert_eq!(best, 60, "scored={scored:?}");
+        let best_r = scored.iter().find(|(k, _)| *k == 60).unwrap().1;
+        assert!(best_r > 0.9, "acf at true period was {best_r}");
+        // Anti-phase lag (half a period) must score clearly lower.
+        let anti = scored.iter().find(|(k, _)| *k == 30).unwrap().1;
+        assert!(anti < 0.0, "acf at half period was {anti}");
+    }
+
+    #[test]
+    fn seasonality_declines_short_or_flat_series() {
+        assert!(seasonality(&[1.0; 4]).is_none());
+        assert!(seasonality(&[3.0; 100]).is_none());
+    }
+
+    #[test]
+    fn phase_profile_folds_square_wave() {
+        // 10 high bins then 10 low bins, repeated: folding at period 20
+        // into 4 phases gives [high, high, low, low].
+        let xs: Vec<f64> = (0..100)
+            .map(|t| if t % 20 < 10 { 8.0 } else { 2.0 })
+            .collect();
+        let p = phase_profile(&xs, 20, 4);
+        assert_eq!(p, vec![8.0, 8.0, 2.0, 2.0]);
+        // Phases clamp to the period when the period is tiny.
+        assert_eq!(phase_profile(&xs, 2, 4).len(), 2);
+    }
 }

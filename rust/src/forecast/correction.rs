@@ -1,0 +1,116 @@
+//! Multiplicative correction factors: close the loop between the
+//! interpolator's predicted latency and what the simulator observed.
+//!
+//! Each planning interval the planner feeds `(observed, predicted)`
+//! latency pairs in; the EWMA of the ratio becomes the factor the next
+//! plan's predictions are multiplied by. A factor above 1 means the
+//! analytic model has been optimistic, so the planner provisions as if
+//! latency were proportionally worse. Ratios are clamped to a sane band
+//! so one pathological interval cannot swing the fleet.
+
+use crate::util::json::Json;
+use crate::util::stats::Ewma;
+
+/// EWMA of observed/predicted latency ratios, clamped per sample.
+#[derive(Clone, Debug)]
+pub struct Correction {
+    ratio: Ewma,
+    floor: f64,
+    ceil: f64,
+}
+
+impl Correction {
+    /// `half_life_samples`: planning intervals for a deviation to decay
+    /// by half.
+    pub fn new(half_life_samples: f64) -> Self {
+        Correction { ratio: Ewma::with_half_life(half_life_samples), floor: 0.25, ceil: 4.0 }
+    }
+
+    /// Record one interval's observed-vs-predicted latency pair. Pairs
+    /// with a non-finite or ~zero prediction are ignored (an infeasible
+    /// plan predicts infinity; there is nothing to calibrate against).
+    pub fn observe(&mut self, observed: f64, predicted: f64) {
+        if !observed.is_finite() || !predicted.is_finite() || predicted <= 1e-9 || observed <= 0.0 {
+            return;
+        }
+        self.ratio.update((observed / predicted).clamp(self.floor, self.ceil));
+    }
+
+    /// Current multiplicative factor (1.0 until the first observation).
+    pub fn factor(&self) -> f64 {
+        self.ratio.get_or(1.0)
+    }
+
+    pub fn to_snapshot(&self) -> Json {
+        Json::obj()
+            .set("ratio", self.ratio.to_snapshot())
+            .set("floor", Json::f64_bits(self.floor))
+            .set("ceil", Json::f64_bits(self.ceil))
+    }
+
+    pub fn restore_snapshot(&mut self, j: &Json) -> anyhow::Result<()> {
+        self.ratio = Ewma::from_snapshot(
+            j.get("ratio").ok_or_else(|| anyhow::anyhow!("correction snapshot missing `ratio`"))?,
+        )?;
+        self.floor = j
+            .get("floor")
+            .and_then(Json::as_f64_bits)
+            .ok_or_else(|| anyhow::anyhow!("correction snapshot missing `floor`"))?;
+        self.ceil = j
+            .get("ceil")
+            .and_then(Json::as_f64_bits)
+            .ok_or_else(|| anyhow::anyhow!("correction snapshot missing `ceil`"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_neutral_and_tracks_ratio() {
+        let mut c = Correction::new(4.0);
+        assert_eq!(c.factor(), 1.0);
+        for _ in 0..64 {
+            c.observe(0.2, 0.1); // model persistently 2x optimistic
+        }
+        assert!((c.factor() - 2.0).abs() < 1e-6, "factor={}", c.factor());
+    }
+
+    #[test]
+    fn ignores_uncalibratable_pairs() {
+        let mut c = Correction::new(4.0);
+        c.observe(f64::INFINITY, 0.1);
+        c.observe(0.1, f64::INFINITY);
+        c.observe(0.1, 0.0);
+        c.observe(0.0, 0.1);
+        assert_eq!(c.factor(), 1.0);
+    }
+
+    #[test]
+    fn clamps_outliers() {
+        let mut c = Correction::new(1.0);
+        for _ in 0..64 {
+            c.observe(100.0, 0.001); // raw ratio 1e5, clamped to 4
+        }
+        assert!(c.factor() <= 4.0 + 1e-9);
+        let mut d = Correction::new(1.0);
+        for _ in 0..64 {
+            d.observe(0.001, 100.0);
+        }
+        assert!(d.factor() >= 0.25 - 1e-9);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_bit_exact() {
+        let mut c = Correction::new(8.0);
+        c.observe(0.31, 0.2);
+        c.observe(0.17, 0.2);
+        let snap = c.to_snapshot();
+        let mut r = Correction::new(8.0);
+        r.restore_snapshot(&snap).unwrap();
+        assert_eq!(c.factor().to_bits(), r.factor().to_bits());
+        assert_eq!(snap, r.to_snapshot());
+    }
+}

@@ -1,0 +1,211 @@
+//! Performance interpolation: invert the analytic `perfmodel` latency
+//! surfaces to turn a load forecast into minimum replica counts.
+//!
+//! This mirrors Dynamo's pre-deployment-profiling → interpolation step,
+//! except our "profile" is the closed-form [`EngineModel`] the simulator
+//! itself runs on, so the planner's model error comes only from queueing
+//! approximations (corrected online by `forecast::correction`):
+//!
+//! - **Prefill**: each prefiller is an M/D/1 queue with deterministic
+//!   service time `prefill_time(isl)`. Predicted TTFT = service +
+//!   Pollaczek-Khinchine waiting time `rho*s / (2*(1-rho))`.
+//! - **Decode**: the steady-state batch on each decoder is the Little's-
+//!   law fixed point solved by [`EngineModel::decode_steady_state`];
+//!   predicted ITL is the iteration time at that batch.
+//!
+//! Both predictions are monotone non-increasing in the replica count, so
+//! the minimum count meeting a target is found by binary search.
+
+use crate::perfmodel::EngineModel;
+use std::sync::Arc;
+
+/// A point forecast of offered load.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LoadForecast {
+    /// Requests per second across the fleet.
+    pub rps: f64,
+    /// Mean input (prompt) tokens per request.
+    pub isl: f64,
+    /// Mean output tokens per request.
+    pub osl: f64,
+}
+
+/// Latency targets the plan must meet.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanTarget {
+    pub ttft_s: f64,
+    pub tpot_s: f64,
+}
+
+/// The interpolator's answer: minimum replica counts plus the predicted
+/// latencies at those counts (pre-correction).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanResult {
+    pub prefillers: usize,
+    pub decoders: usize,
+    /// Predicted TTFT at `prefillers` (correction factor already applied).
+    pub ttft_s: f64,
+    /// Predicted ITL at `decoders` (correction factor already applied).
+    pub itl_s: f64,
+    /// False when the target is unreachable within the replica cap; the
+    /// counts are then the cap itself (best effort).
+    pub feasible: bool,
+}
+
+/// Inverts the engine latency model. Cheap to construct; holds only the
+/// shared engine spec.
+#[derive(Clone, Debug)]
+pub struct Interpolator {
+    engine: Arc<EngineModel>,
+}
+
+impl Interpolator {
+    pub fn new(engine: Arc<EngineModel>) -> Self {
+        Interpolator { engine }
+    }
+
+    /// Predicted TTFT with `n` prefillers under `load` (M/D/1 per
+    /// prefiller, load split evenly). Infinite when the queue is
+    /// unstable (`rho >= 1`).
+    pub fn predicted_ttft(&self, load: &LoadForecast, n: usize) -> f64 {
+        if load.rps <= 0.0 {
+            return self.engine.prefill_time(load.isl.max(1.0) as usize);
+        }
+        let n = n.max(1) as f64;
+        let s = self.engine.prefill_time(load.isl.max(1.0) as usize);
+        let rho = (load.rps / n) * s;
+        if rho >= 1.0 {
+            return f64::INFINITY;
+        }
+        s + rho * s / (2.0 * (1.0 - rho))
+    }
+
+    /// Predicted steady-state ITL with `n` decoders under `load`.
+    /// Infinite when the decode fixed point diverges at that share.
+    pub fn predicted_itl(&self, load: &LoadForecast, n: usize) -> f64 {
+        let n = n.max(1) as f64;
+        match self.engine.decode_steady_state(load.rps / n, load.isl, load.osl) {
+            Some((_, itl)) => itl,
+            None => f64::INFINITY,
+        }
+    }
+
+    /// Minimum replica counts meeting `target` under `load`, with the
+    /// predicted latencies scaled by the multiplicative correction
+    /// factors (`>1` means the model has been under-predicting). `cap`
+    /// bounds each role's count; an unreachable target returns the cap
+    /// with `feasible = false`.
+    pub fn plan(
+        &self,
+        load: &LoadForecast,
+        target: &PlanTarget,
+        ttft_factor: f64,
+        itl_factor: f64,
+        cap: usize,
+    ) -> PlanResult {
+        let cap = cap.max(1);
+        let (prefillers, ttft_s, p_ok) = min_replicas(cap, |n| {
+            ttft_factor * self.predicted_ttft(load, n)
+        }, target.ttft_s);
+        let (decoders, itl_s, d_ok) = min_replicas(cap, |n| {
+            itl_factor * self.predicted_itl(load, n)
+        }, target.tpot_s);
+        PlanResult { prefillers, decoders, ttft_s, itl_s, feasible: p_ok && d_ok }
+    }
+}
+
+/// Smallest `n` in `[1, cap]` with `predict(n) <= target`, by binary
+/// search (predict must be monotone non-increasing in `n`). Returns
+/// `(n, predict(n), met)`.
+fn min_replicas(cap: usize, predict: impl Fn(usize) -> f64, target: f64) -> (usize, f64, bool) {
+    let (mut lo, mut hi) = (1usize, cap);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if predict(mid) <= target {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let at = predict(lo);
+    (lo, at, at <= target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::catalog;
+
+    fn interp() -> Interpolator {
+        let engine = EngineModel::new(
+            catalog::model("llama-3.1-8b").unwrap(),
+            catalog::gpu("a100-40g").unwrap(),
+            1,
+        );
+        Interpolator::new(Arc::new(engine))
+    }
+
+    fn load(rps: f64) -> LoadForecast {
+        LoadForecast { rps, isl: 512.0, osl: 200.0 }
+    }
+
+    #[test]
+    fn predictions_monotone_in_replicas() {
+        let ip = interp();
+        let l = load(12.0);
+        let mut prev_ttft = f64::INFINITY;
+        let mut prev_itl = f64::INFINITY;
+        for n in 1..=8 {
+            let t = ip.predicted_ttft(&l, n);
+            let i = ip.predicted_itl(&l, n);
+            assert!(t <= prev_ttft + 1e-12, "ttft not monotone at n={n}");
+            assert!(i <= prev_itl + 1e-12, "itl not monotone at n={n}");
+            prev_ttft = t;
+            prev_itl = i;
+        }
+    }
+
+    #[test]
+    fn plan_finds_minimum_counts() {
+        let ip = interp();
+        let l = load(12.0);
+        let tgt = PlanTarget { ttft_s: 0.4, tpot_s: 0.1 };
+        let res = ip.plan(&l, &tgt, 1.0, 1.0, 16);
+        assert!(res.feasible);
+        assert!(res.ttft_s <= tgt.ttft_s && res.itl_s <= tgt.tpot_s);
+        // Minimality: one replica fewer misses the target.
+        if res.prefillers > 1 {
+            assert!(ip.predicted_ttft(&l, res.prefillers - 1) > tgt.ttft_s);
+        }
+        if res.decoders > 1 {
+            assert!(ip.predicted_itl(&l, res.decoders - 1) > tgt.tpot_s);
+        }
+    }
+
+    #[test]
+    fn plan_scales_with_load_and_caps_out() {
+        let ip = interp();
+        let tgt = PlanTarget { ttft_s: 0.4, tpot_s: 0.1 };
+        let lo = ip.plan(&load(4.0), &tgt, 1.0, 1.0, 16);
+        let hi = ip.plan(&load(24.0), &tgt, 1.0, 1.0, 16);
+        assert!(hi.prefillers >= lo.prefillers);
+        assert!(hi.decoders >= lo.decoders);
+        // A hopeless target pins to the cap, flagged infeasible.
+        let res = ip.plan(&load(500.0), &tgt, 1.0, 1.0, 4);
+        assert!(!res.feasible);
+        assert_eq!((res.prefillers, res.decoders), (4, 4));
+    }
+
+    #[test]
+    fn correction_factor_inflates_counts() {
+        let ip = interp();
+        let l = load(12.0);
+        let tgt = PlanTarget { ttft_s: 0.4, tpot_s: 0.1 };
+        let plain = ip.plan(&l, &tgt, 1.0, 1.0, 16);
+        // A 10x under-prediction history pushes both targets below the
+        // single-replica floor, so corrected counts must strictly grow.
+        let corrected = ip.plan(&l, &tgt, 10.0, 10.0, 16);
+        assert!(corrected.prefillers > plain.prefillers);
+        assert!(corrected.decoders > plain.decoders);
+    }
+}

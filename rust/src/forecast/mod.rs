@@ -1,0 +1,30 @@
+//! Online load forecasting for predictive autoscaling.
+//!
+//! The predictive half of an SLA planner (SNIPPETS.md §1, Dynamo's
+//! planner architecture; "Taming the Chaos", arXiv:2508.19559) needs
+//! three pieces, each deterministic and dependency-free so simulations
+//! stay byte-reproducible:
+//!
+//! - [`predict`] — the [`Forecaster`] trait and its implementations:
+//!   windowed-mean [`ConstantPredictor`], [`SeasonalNaive`], and
+//!   additive [`HoltWinters`] triple-exponential smoothing. All state
+//!   snapshots bit-exactly (f64 bit patterns, not decimal text) so a
+//!   checkpointed policy resumes to the identical forecast suffix.
+//! - [`interpolate`] — the performance [`Interpolator`]: invert the
+//!   `perfmodel` latency surfaces to turn a forecast (rps, isl, osl)
+//!   plus TTFT/TPOT targets into minimum replica counts per role.
+//! - [`correction`] — multiplicative EWMA [`Correction`] factors that
+//!   scale predicted latency by the observed-vs-predicted ratio, so
+//!   analytic-model error self-corrects online.
+//!
+//! The `sla-planner` / `sla-hybrid` policies in `scaler::planner`
+//! compose all three; docs/forecasting.md has the math and tuning
+//! guidance.
+
+pub mod correction;
+pub mod interpolate;
+pub mod predict;
+
+pub use correction::Correction;
+pub use interpolate::{Interpolator, LoadForecast, PlanResult, PlanTarget};
+pub use predict::{ConstantPredictor, Forecaster, ForecasterKind, HoltWinters, SeasonalNaive};

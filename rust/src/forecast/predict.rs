@@ -1,0 +1,519 @@
+//! Deterministic online forecasters over regularly sampled series.
+//!
+//! Each forecaster ingests one sample per planner sampling step via
+//! `observe(t, y)` and answers `forecast(h)` — the predicted value `h`
+//! steps past the most recent observation. Implementations are O(1) or
+//! O(window) per update, allocate nothing on the observe path after
+//! warm-up, and snapshot/restore their state bit-exactly.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+
+/// Which forecaster a planner runs; parsed from scenario TOML.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ForecasterKind {
+    /// Windowed mean of recent samples (the Dynamo baseline predictor).
+    Constant,
+    /// The value one season ago.
+    SeasonalNaive,
+    /// Additive Holt-Winters triple-exponential smoothing.
+    HoltWinters,
+}
+
+impl ForecasterKind {
+    pub fn parse(s: &str) -> Option<ForecasterKind> {
+        match s {
+            "constant" | "mean" => Some(ForecasterKind::Constant),
+            "seasonal-naive" | "seasonal_naive" | "naive" => Some(ForecasterKind::SeasonalNaive),
+            "holt-winters" | "holt_winters" | "hw" => Some(ForecasterKind::HoltWinters),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ForecasterKind::Constant => "constant",
+            ForecasterKind::SeasonalNaive => "seasonal-naive",
+            ForecasterKind::HoltWinters => "holt-winters",
+        }
+    }
+
+    /// Construct a boxed forecaster of this kind. `period_steps` is the
+    /// seasonal period in sampling steps (seasonal models), and
+    /// `mean_window_steps` the averaging window (constant model).
+    pub fn build(&self, period_steps: usize, mean_window_steps: usize) -> Box<dyn Forecaster> {
+        match self {
+            ForecasterKind::Constant => Box::new(ConstantPredictor::new(mean_window_steps)),
+            ForecasterKind::SeasonalNaive => Box::new(SeasonalNaive::new(period_steps)),
+            ForecasterKind::HoltWinters => Box::new(HoltWinters::new(period_steps)),
+        }
+    }
+}
+
+/// An online one-series forecaster. `observe` must be called with
+/// monotonically non-decreasing `t`; `forecast(h)` predicts the value
+/// `h` sampling steps after the last observation (`h >= 1`), returning
+/// `None` until the model has seen at least one sample.
+pub trait Forecaster: Send {
+    fn kind(&self) -> ForecasterKind;
+    fn observe(&mut self, t: f64, y: f64);
+    fn forecast(&self, steps_ahead: usize) -> Option<f64>;
+    /// Total samples ingested since construction/restore.
+    fn observations(&self) -> u64;
+    fn to_snapshot(&self) -> Json;
+    fn restore_snapshot(&mut self, j: &Json) -> anyhow::Result<()>;
+}
+
+fn bits_arr(xs: impl Iterator<Item = f64>) -> Json {
+    Json::Arr(xs.map(Json::f64_bits).collect())
+}
+
+fn from_bits_arr(j: &Json, key: &str) -> anyhow::Result<Vec<f64>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("forecaster snapshot missing `{key}` array"))?
+        .iter()
+        .map(|v| {
+            v.as_f64_bits()
+                .ok_or_else(|| anyhow::anyhow!("forecaster snapshot `{key}`: bad f64 bits"))
+        })
+        .collect()
+}
+
+fn req_bits(j: &Json, key: &str) -> anyhow::Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64_bits)
+        .ok_or_else(|| anyhow::anyhow!("forecaster snapshot missing f64-bits field `{key}`"))
+}
+
+fn req_count(j: &Json, key: &str) -> anyhow::Result<u64> {
+    j.get(key)
+        .and_then(Json::as_u64_hex)
+        .ok_or_else(|| anyhow::anyhow!("forecaster snapshot missing u64 field `{key}`"))
+}
+
+// ------------------------------------------------------- constant mean
+
+/// Forecast = mean of the last `window` samples, flat at every horizon.
+#[derive(Clone, Debug)]
+pub struct ConstantPredictor {
+    window: usize,
+    values: VecDeque<f64>,
+    count: u64,
+    last_t: f64,
+}
+
+impl ConstantPredictor {
+    pub fn new(window: usize) -> Self {
+        let window = window.max(1);
+        ConstantPredictor { window, values: VecDeque::with_capacity(window), count: 0, last_t: 0.0 }
+    }
+}
+
+impl Forecaster for ConstantPredictor {
+    fn kind(&self) -> ForecasterKind {
+        ForecasterKind::Constant
+    }
+
+    fn observe(&mut self, t: f64, y: f64) {
+        if self.values.len() == self.window {
+            self.values.pop_front();
+        }
+        self.values.push_back(y);
+        self.count += 1;
+        self.last_t = t;
+    }
+
+    fn forecast(&self, _steps_ahead: usize) -> Option<f64> {
+        if self.values.is_empty() {
+            return None;
+        }
+        // Front-to-back summation: deterministic regardless of how the
+        // deque wrapped internally.
+        let mut sum = 0.0;
+        for v in &self.values {
+            sum += *v;
+        }
+        Some(sum / self.values.len() as f64)
+    }
+
+    fn observations(&self) -> u64 {
+        self.count
+    }
+
+    fn to_snapshot(&self) -> Json {
+        Json::obj()
+            .set("window", self.window)
+            .set("values", bits_arr(self.values.iter().copied()))
+            .set("count", Json::u64_hex(self.count))
+            .set("last_t", Json::f64_bits(self.last_t))
+    }
+
+    fn restore_snapshot(&mut self, j: &Json) -> anyhow::Result<()> {
+        self.window = j
+            .get("window")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("constant snapshot missing `window`"))?
+            .max(1);
+        self.values = from_bits_arr(j, "values")?.into();
+        self.count = req_count(j, "count")?;
+        self.last_t = req_bits(j, "last_t")?;
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------ seasonal naive
+
+/// Forecast = the observation one period ago (`y[t+h-period]`). Before a
+/// full period has been seen, falls back to the latest observation.
+#[derive(Clone, Debug)]
+pub struct SeasonalNaive {
+    period: usize,
+    /// Ring buffer of the last `period` samples; slot `count % period`
+    /// is overwritten on each observe.
+    ring: Vec<f64>,
+    count: u64,
+    last_t: f64,
+}
+
+impl SeasonalNaive {
+    pub fn new(period: usize) -> Self {
+        let period = period.max(1);
+        SeasonalNaive { period, ring: vec![0.0; period], count: 0, last_t: 0.0 }
+    }
+}
+
+impl Forecaster for SeasonalNaive {
+    fn kind(&self) -> ForecasterKind {
+        ForecasterKind::SeasonalNaive
+    }
+
+    fn observe(&mut self, t: f64, y: f64) {
+        let idx = (self.count % self.period as u64) as usize;
+        self.ring[idx] = y;
+        self.count += 1;
+        self.last_t = t;
+    }
+
+    fn forecast(&self, steps_ahead: usize) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let last_idx = ((self.count - 1) % self.period as u64) as usize;
+        if self.count < self.period as u64 {
+            return Some(self.ring[last_idx]);
+        }
+        // The slot that is `h` steps ahead of the last write, modulo the
+        // period, holds the observation exactly one season before the
+        // forecast target.
+        let idx = ((self.count - 1 + steps_ahead.max(1) as u64) % self.period as u64) as usize;
+        Some(self.ring[idx])
+    }
+
+    fn observations(&self) -> u64 {
+        self.count
+    }
+
+    fn to_snapshot(&self) -> Json {
+        Json::obj()
+            .set("period", self.period)
+            .set("ring", bits_arr(self.ring.iter().copied()))
+            .set("count", Json::u64_hex(self.count))
+            .set("last_t", Json::f64_bits(self.last_t))
+    }
+
+    fn restore_snapshot(&mut self, j: &Json) -> anyhow::Result<()> {
+        self.period = j
+            .get("period")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("seasonal snapshot missing `period`"))?
+            .max(1);
+        let ring = from_bits_arr(j, "ring")?;
+        anyhow::ensure!(
+            ring.len() == self.period,
+            "seasonal snapshot ring length {} != period {}",
+            ring.len(),
+            self.period
+        );
+        self.ring = ring;
+        self.count = req_count(j, "count")?;
+        self.last_t = req_bits(j, "last_t")?;
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------- holt-winters
+
+/// Additive Holt-Winters (triple exponential smoothing): level + trend +
+/// additive seasonal component, updated incrementally per observation.
+///
+/// With `s = season[t mod period]` from one season ago:
+///
+/// ```text
+/// level'  = alpha * (y - s)            + (1 - alpha) * (level + trend)
+/// trend'  = beta  * (level' - level)   + (1 - beta)  * trend
+/// season' = gamma * (y - level')       + (1 - gamma) * s
+/// forecast(h) = level' + h * trend' + season[(t + h) mod period]
+/// ```
+///
+/// The first observation initializes the level; the seasonal array
+/// starts at zero and is learned online, which keeps warm-up behavior
+/// identical to the trend-only model until a season has been absorbed.
+#[derive(Clone, Debug)]
+pub struct HoltWinters {
+    period: usize,
+    alpha: f64,
+    beta: f64,
+    gamma: f64,
+    level: f64,
+    trend: f64,
+    season: Vec<f64>,
+    count: u64,
+    last_t: f64,
+}
+
+impl HoltWinters {
+    pub fn new(period: usize) -> Self {
+        Self::with_params(period, 0.3, 0.1, 0.3)
+    }
+
+    pub fn with_params(period: usize, alpha: f64, beta: f64, gamma: f64) -> Self {
+        let period = period.max(1);
+        HoltWinters {
+            period,
+            alpha: alpha.clamp(0.0, 1.0),
+            beta: beta.clamp(0.0, 1.0),
+            gamma: gamma.clamp(0.0, 1.0),
+            level: 0.0,
+            trend: 0.0,
+            season: vec![0.0; period],
+            count: 0,
+            last_t: 0.0,
+        }
+    }
+}
+
+impl Forecaster for HoltWinters {
+    fn kind(&self) -> ForecasterKind {
+        ForecasterKind::HoltWinters
+    }
+
+    fn observe(&mut self, t: f64, y: f64) {
+        let idx = (self.count % self.period as u64) as usize;
+        if self.count == 0 {
+            self.level = y;
+            self.trend = 0.0;
+        } else {
+            let old_season = self.season[idx];
+            let prev_level = self.level;
+            self.level =
+                self.alpha * (y - old_season) + (1.0 - self.alpha) * (prev_level + self.trend);
+            self.trend = self.beta * (self.level - prev_level) + (1.0 - self.beta) * self.trend;
+            self.season[idx] = self.gamma * (y - self.level) + (1.0 - self.gamma) * old_season;
+        }
+        self.count += 1;
+        self.last_t = t;
+    }
+
+    fn forecast(&self, steps_ahead: usize) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let h = steps_ahead.max(1) as u64;
+        let idx = ((self.count - 1 + h) % self.period as u64) as usize;
+        Some(self.level + h as f64 * self.trend + self.season[idx])
+    }
+
+    fn observations(&self) -> u64 {
+        self.count
+    }
+
+    fn to_snapshot(&self) -> Json {
+        Json::obj()
+            .set("period", self.period)
+            .set("alpha", Json::f64_bits(self.alpha))
+            .set("beta", Json::f64_bits(self.beta))
+            .set("gamma", Json::f64_bits(self.gamma))
+            .set("level", Json::f64_bits(self.level))
+            .set("trend", Json::f64_bits(self.trend))
+            .set("season", bits_arr(self.season.iter().copied()))
+            .set("count", Json::u64_hex(self.count))
+            .set("last_t", Json::f64_bits(self.last_t))
+    }
+
+    fn restore_snapshot(&mut self, j: &Json) -> anyhow::Result<()> {
+        self.period = j
+            .get("period")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("holt-winters snapshot missing `period`"))?
+            .max(1);
+        self.alpha = req_bits(j, "alpha")?;
+        self.beta = req_bits(j, "beta")?;
+        self.gamma = req_bits(j, "gamma")?;
+        self.level = req_bits(j, "level")?;
+        self.trend = req_bits(j, "trend")?;
+        let season = from_bits_arr(j, "season")?;
+        anyhow::ensure!(
+            season.len() == self.period,
+            "holt-winters snapshot season length {} != period {}",
+            season.len(),
+            self.period
+        );
+        self.season = season;
+        self.count = req_count(j, "count")?;
+        self.last_t = req_bits(j, "last_t")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in [
+            ForecasterKind::Constant,
+            ForecasterKind::SeasonalNaive,
+            ForecasterKind::HoltWinters,
+        ] {
+            assert_eq!(ForecasterKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(ForecasterKind::parse("hw"), Some(ForecasterKind::HoltWinters));
+        assert_eq!(ForecasterKind::parse("arima"), None);
+    }
+
+    #[test]
+    fn constant_is_windowed_mean() {
+        let mut f = ConstantPredictor::new(3);
+        assert_eq!(f.forecast(1), None);
+        f.observe(0.0, 2.0);
+        assert_eq!(f.forecast(1), Some(2.0));
+        f.observe(1.0, 4.0);
+        f.observe(2.0, 6.0);
+        assert_eq!(f.forecast(1), Some(4.0));
+        f.observe(3.0, 8.0); // evicts 2.0 -> mean of [4, 6, 8]
+        assert_eq!(f.forecast(5), Some(6.0));
+        assert_eq!(f.observations(), 4);
+    }
+
+    #[test]
+    fn seasonal_naive_repeats_last_period() {
+        let mut f = SeasonalNaive::new(3);
+        assert_eq!(f.forecast(1), None);
+        for (t, y) in [(0.0, 10.0), (1.0, 20.0), (2.0, 30.0)].iter() {
+            f.observe(*t, *y);
+        }
+        // Last write landed in slot 2 (value 30); h=1 wraps to slot 0.
+        assert_eq!(f.forecast(1), Some(10.0));
+        assert_eq!(f.forecast(2), Some(20.0));
+        assert_eq!(f.forecast(3), Some(30.0));
+        assert_eq!(f.forecast(4), Some(10.0)); // h wraps a full season
+        f.observe(3.0, 40.0); // overwrites slot 0
+        assert_eq!(f.forecast(1), Some(20.0));
+        assert_eq!(f.forecast(3), Some(40.0));
+    }
+
+    #[test]
+    fn seasonal_naive_partial_period_uses_latest() {
+        let mut f = SeasonalNaive::new(4);
+        f.observe(0.0, 5.0);
+        f.observe(1.0, 7.0);
+        assert_eq!(f.forecast(1), Some(7.0));
+        assert_eq!(f.forecast(3), Some(7.0));
+    }
+
+    /// Pin the Holt-Winters recurrence against a hand-computed sequence
+    /// (period 2, alpha 0.5, beta 0.5, gamma 0.5).
+    #[test]
+    fn holt_winters_matches_hand_computation() {
+        let mut f = HoltWinters::with_params(2, 0.5, 0.5, 0.5);
+        // t=0: y=10 -> level=10, trend=0, season=[0,0]
+        f.observe(0.0, 10.0);
+        assert_eq!(f.forecast(1), Some(10.0));
+        // t=1: y=20, slot 1, s=0:
+        //   level = .5*20 + .5*(10+0) = 15
+        //   trend = .5*(15-10) + .5*0 = 2.5
+        //   season[1] = .5*(20-15) + .5*0 = 2.5
+        f.observe(1.0, 20.0);
+        // forecast(1): idx = (2-1+1)%2 = 0 -> 15 + 2.5 + 0 = 17.5
+        assert_eq!(f.forecast(1), Some(17.5));
+        // t=2: y=12, slot 0, s=0:
+        //   level = .5*12 + .5*(15+2.5) = 14.75
+        //   trend = .5*(14.75-15) + .5*2.5 = 1.125
+        //   season[0] = .5*(12-14.75) + 0 = -1.375
+        f.observe(2.0, 12.0);
+        // forecast(1): idx = (3-1+1)%2 = 1 -> 14.75 + 1.125 + 2.5 = 18.375
+        assert_eq!(f.forecast(1), Some(18.375));
+        // forecast(2): idx = (3-1+2)%2 = 0 -> 14.75 + 2.25 - 1.375 = 15.625
+        assert_eq!(f.forecast(2), Some(15.625));
+    }
+
+    #[test]
+    fn holt_winters_learns_pure_season() {
+        // A clean period-4 signal with no trend: after several seasons the
+        // forecast should approach the true seasonal values.
+        let pattern = [10.0, 30.0, 50.0, 30.0];
+        let mut f = HoltWinters::new(4);
+        for i in 0..400 {
+            f.observe(i as f64, pattern[i % 4]);
+        }
+        for h in 1..=4 {
+            let want = pattern[(400 - 1 + h) % 4];
+            let got = f.forecast(h).unwrap();
+            assert!(
+                (got - want).abs() < 1.5,
+                "h={h}: forecast {got} too far from {want}"
+            );
+        }
+    }
+
+    /// Checkpoint/restore mid-series must reproduce the identical
+    /// forecast suffix, bit for bit, for every forecaster kind.
+    #[test]
+    fn prop_snapshot_resume_identical_suffix() {
+        check(Config::named("forecaster-resume-suffix").cases(40), |rng| {
+            let period = rng.range_usize(2, 13);
+            let window = rng.range_usize(1, 16);
+            let kinds = [
+                ForecasterKind::Constant,
+                ForecasterKind::SeasonalNaive,
+                ForecasterKind::HoltWinters,
+            ];
+            let kind = kinds[rng.below(3) as usize];
+            let n = rng.range_usize(8, 48);
+            let series: Vec<f64> = (0..n).map(|_| rng.f64() * 100.0).collect();
+            let split = rng.range_usize(1, n - 1);
+
+            let mut live = kind.build(period, window);
+            for (i, y) in series.iter().enumerate().take(split) {
+                live.observe(i as f64, *y);
+            }
+            let snap = live.to_snapshot();
+            let mut resumed = kind.build(period, window);
+            resumed.restore_snapshot(&snap).expect("restore");
+
+            for (i, y) in series.iter().enumerate().skip(split) {
+                live.observe(i as f64, *y);
+                resumed.observe(i as f64, *y);
+                for h in 1..=4 {
+                    let a = live.forecast(h).map(f64::to_bits);
+                    let b = resumed.forecast(h).map(f64::to_bits);
+                    assert_eq!(a, b, "{} diverged at i={i} h={h}", kind.label());
+                }
+            }
+            // And the snapshots themselves must re-converge.
+            assert_eq!(live.to_snapshot(), resumed.to_snapshot());
+        });
+    }
+
+    #[test]
+    fn snapshot_rejects_wrong_shapes() {
+        let mut f = SeasonalNaive::new(4);
+        f.observe(0.0, 1.0);
+        let mut hw = HoltWinters::new(3);
+        assert!(hw.restore_snapshot(&f.to_snapshot()).is_err());
+        assert!(f.restore_snapshot(&Json::obj()).is_err());
+    }
+}

@@ -21,6 +21,7 @@
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod forecast;
 pub mod metrics;
 pub mod perfmodel;
 pub mod profiler;

@@ -75,6 +75,76 @@ impl EngineModel {
         weight_read.max(compute) + kv_read + self.iter_overhead_s
     }
 
+    /// Continuous-batch variant of [`decode_iter_time`]: identical formula
+    /// with a fractional batch size, for analytic steady-state solves where
+    /// the mean in-flight batch is not an integer.
+    ///
+    /// [`decode_iter_time`]: EngineModel::decode_iter_time
+    pub fn decode_iter_time_f(&self, batch: f64, avg_ctx: f64) -> f64 {
+        if batch <= 0.0 {
+            return 0.0;
+        }
+        let bw = self.gpu.eff_bw() * self.tp as f64;
+        let weight_read = self.model.weight_bytes() / bw;
+        let kv_read = batch * avg_ctx * self.model.kv_bytes_per_token() / bw;
+        let compute = batch * 2.0 * self.model.params() / (self.gpu.eff_flops() * self.tp as f64);
+        weight_read.max(compute) + kv_read + self.iter_overhead_s
+    }
+
+    /// Steady-state decode operating point for one instance absorbing
+    /// `rps` requests/s with mean input `isl` and output `osl` tokens:
+    /// the fixed point of `batch = rps * osl * decode_iter_time_f(batch)`
+    /// (Little's law — each request occupies a decode slot for `osl`
+    /// iterations). Returns `Some((batch, itl_s))`, or `None` when the
+    /// load has no stable fixed point (queue diverges) or the implied
+    /// batch exceeds KV-cache capacity. `rps <= 0` yields the idle
+    /// single-sequence ITL.
+    ///
+    /// The fixed point is solved in closed form: the iteration time is
+    /// piecewise linear in the batch (weight-read-bound below the
+    /// compute crossover, compute-bound above), so each piece gives a
+    /// linear equation in `b`.
+    pub fn decode_steady_state(&self, rps: f64, isl: f64, osl: f64) -> Option<(f64, f64)> {
+        let avg_ctx = isl + 0.5 * osl.max(1.0);
+        if rps <= 0.0 {
+            return Some((0.0, self.decode_iter_time_f(1.0, avg_ctx)));
+        }
+        let bw = self.gpu.eff_bw() * self.tp as f64;
+        let w = self.model.weight_bytes() / bw;
+        let kv = avg_ctx * self.model.kv_bytes_per_token() / bw;
+        let c = 2.0 * self.model.params() / (self.gpu.eff_flops() * self.tp as f64);
+        let o = self.iter_overhead_s;
+        // Token load: decode iterations demanded per second.
+        let load = rps * osl.max(1.0);
+
+        // Piece A (weight-read bound, c*b <= w): b = load*(w+o) / (1 - load*kv)
+        let mut batch = None;
+        let denom_a = 1.0 - load * kv;
+        if denom_a > 1e-12 {
+            let b = load * (w + o) / denom_a;
+            if c * b <= w + 1e-12 {
+                batch = Some(b);
+            }
+        }
+        // Piece B (compute bound, c*b >= w): b = load*o / (1 - load*(c+kv))
+        if batch.is_none() {
+            let denom_b = 1.0 - load * (c + kv);
+            if denom_b > 1e-12 {
+                let b = load * o / denom_b;
+                if c * b >= w - 1e-12 {
+                    batch = Some(b);
+                }
+            }
+        }
+        let b = batch?;
+        // The implied resident KV must fit: each in-flight sequence holds
+        // its full (isl + osl) footprint at peak.
+        if b * (isl + osl.max(1.0)) > self.kv_capacity_tokens() {
+            return None;
+        }
+        Some((b, self.decode_iter_time_f(b.max(1.0), avg_ctx)))
+    }
+
     /// Latency of one **chunked-prefill** iteration co-locating
     /// `prefill_tokens` prompt tokens with a decode batch of `batch`
     /// sequences at mean context `avg_ctx` — the Convertible Decoder's
@@ -195,5 +265,40 @@ mod tests {
         let d = e.decode_iter_time(64, 600.0);
         let c = e.chunked_iter_time(0, 64, 600.0);
         assert!((c - d).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_iter_time_f_matches_integer_variant() {
+        let e = llama_a100();
+        for batch in [1usize, 7, 64, 256] {
+            let a = e.decode_iter_time(batch, 512.0);
+            let b = e.decode_iter_time_f(batch as f64, 512.0);
+            assert!((a - b).abs() < 1e-12, "batch={batch}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn decode_steady_state_is_a_fixed_point() {
+        let e = llama_a100();
+        let (rps, isl, osl) = (4.0, 512.0, 200.0);
+        let (b, itl) = e.decode_steady_state(rps, isl, osl).expect("feasible");
+        assert!(b > 0.0 && itl > 0.0);
+        // Little's law closes: batch == load * iter_time(batch).
+        let implied = rps * osl * e.decode_iter_time_f(b, isl + 0.5 * osl);
+        assert!((implied - b).abs() / b < 1e-6, "b={b} implied={implied}");
+    }
+
+    #[test]
+    fn decode_steady_state_monotone_and_diverges() {
+        let e = llama_a100();
+        let (_, itl_lo) = e.decode_steady_state(2.0, 512.0, 200.0).unwrap();
+        let (_, itl_hi) = e.decode_steady_state(8.0, 512.0, 200.0).unwrap();
+        assert!(itl_hi > itl_lo, "more load must mean slower iterations");
+        // Absurd load has no stable batch.
+        assert!(e.decode_steady_state(1.0e6, 512.0, 200.0).is_none());
+        // Zero load gives the idle single-sequence ITL.
+        let (b0, itl0) = e.decode_steady_state(0.0, 512.0, 200.0).unwrap();
+        assert_eq!(b0, 0.0);
+        assert!((itl0 - e.decode_iter_time(1, 512.0 + 100.0)).abs() < 1e-12);
     }
 }

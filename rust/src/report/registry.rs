@@ -18,8 +18,8 @@
 use crate::coordinator::{TokenScale, TokenScaleConfig};
 use crate::report::runner::Deployment;
 use crate::scaler::{
-    ablation_bp, ablation_bpd, prefill_deflect, router_policy, AiBrix, BlitzScale, DistServe,
-    RouterKind, Thresholds,
+    ablation_bp, ablation_bpd, prefill_deflect, router_policy, sla_hybrid, sla_planner, AiBrix,
+    BlitzScale, DistServe, PlannerParams, RouterKind, Thresholds,
 };
 use crate::sim::{ControlPlane, StaticCoordinator};
 use crate::trace::TraceProfile;
@@ -54,6 +54,8 @@ pub struct PolicyParams {
     pub overlap_weight: Option<f64>,
     /// KV-router softmax temperature (0 = deterministic argmax).
     pub router_temperature: Option<f64>,
+    /// Forecast/planning knobs (`sla-planner` family).
+    pub planner: Option<PlannerParams>,
 }
 
 /// Cluster provisions a policy requires from the runner.
@@ -158,7 +160,8 @@ pub struct PolicyRegistry {
 impl PolicyRegistry {
     /// The stock control planes: the paper's four headliners, the Fig. 14
     /// ablations, the deflection demo, the cache-aware router family
-    /// (3 routers × 2 scaling flavors) and the static fleet.
+    /// (3 routers × 2 scaling flavors), the predictive `sla-planner`
+    /// family and the static fleet.
     pub fn builtin() -> PolicyRegistry {
         let entries = vec![
             PolicyEntry {
@@ -305,6 +308,44 @@ impl PolicyRegistry {
                 |_| RouterKind::round_robin(),
             ),
             PolicyEntry {
+                name: "sla-planner",
+                aliases: &["planner"],
+                description: "Predictive: forecast load, invert the latency model, provision ahead",
+                params: "planner block (forecaster, interval_s, sample_s, period_s, horizon_s)",
+                build: Arc::new(|ctx, params| {
+                    let p = params.planner.unwrap_or_default();
+                    let cap =
+                        (ctx.deployment.max_gpus / ctx.deployment.engine.tp.max(1)).max(1);
+                    BuiltPolicy::plain(Box::new(sla_planner(
+                        &p,
+                        ctx.deployment.engine.clone(),
+                        ctx.slo,
+                        cap,
+                        ctx.workload,
+                    )))
+                }),
+            },
+            PolicyEntry {
+                name: "sla-hybrid",
+                aliases: &["hybrid"],
+                description: "Token-velocity scaling floored by the SLA planner's forecast",
+                params: "planner block + predictor_accuracy=0..1",
+                build: Arc::new(|ctx, params| {
+                    let p = params.planner.unwrap_or_default();
+                    let cap =
+                        (ctx.deployment.max_gpus / ctx.deployment.engine.tp.max(1)).max(1);
+                    BuiltPolicy::plain(Box::new(sla_hybrid(
+                        &p,
+                        ctx.deployment.engine.clone(),
+                        &ctx.deployment.link,
+                        ctx.slo,
+                        cap,
+                        ctx.workload,
+                        params.predictor_accuracy.unwrap_or(0.85),
+                    )))
+                }),
+            },
+            PolicyEntry {
                 name: "static",
                 aliases: &[],
                 description: "Fixed fleet, least-loaded routing (tests / capacity ground truth)",
@@ -405,6 +446,10 @@ mod tests {
             ("random", "random-router"),
             ("rr", "round-robin-router"),
             ("round-robin-router-rps", "round-robin-router-rps"),
+            ("planner", "sla-planner"),
+            ("SLA-Planner", "sla-planner"),
+            ("hybrid", "sla-hybrid"),
+            ("sla-hybrid", "sla-hybrid"),
         ] {
             assert_eq!(PolicyKind::parse(query).map(|k| k.name()), Some(canon), "{query}");
         }

@@ -124,6 +124,8 @@ pub struct RunOverrides {
     pub overlap_weight: Option<f64>,
     /// KV-router softmax temperature (0 = deterministic argmax).
     pub router_temperature: Option<f64>,
+    /// Forecast/planning knobs (`sla-planner` family).
+    pub planner: Option<crate::scaler::PlannerParams>,
 }
 
 impl Default for RunOverrides {
@@ -144,6 +146,7 @@ impl Default for RunOverrides {
             kvcache: crate::sim::KvCacheConfig::disabled(),
             overlap_weight: None,
             router_temperature: None,
+            planner: None,
         }
     }
 }
@@ -157,6 +160,7 @@ impl RunOverrides {
             decoders: self.initial_decoders,
             overlap_weight: self.overlap_weight,
             router_temperature: self.router_temperature,
+            planner: self.planner,
         }
     }
 }

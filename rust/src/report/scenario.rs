@@ -15,8 +15,10 @@
 //! so file-driven sweeps fail with actionable messages instead of deep
 //! panics.
 
+use crate::forecast::ForecasterKind;
 use crate::report::runner::{deployment, CheckpointSpec, ExperimentSpec, RunOverrides, Workload};
 use crate::report::PolicyKind;
+use crate::scaler::PlannerParams;
 use crate::trace::{
     family_source, materialize, sessioned_family_source, step_trace, uniform_bucket_trace,
     ArrivalSource, BurstWindow, OwnedTraceSource, SessionModel, SourceExt, SourceFactory, Trace,
@@ -781,6 +783,10 @@ pub struct Scenario {
     /// default empty plan arms nothing and leaves runs byte-identical to
     /// a build without the fault layer.
     pub faults: FaultPlan,
+    /// Forecast/planning knobs for the `sla-planner` policy family
+    /// (`[scenarios.planner]` in TOML; see docs/forecasting.md). Ignored
+    /// by every other policy; `None` keeps the family's defaults.
+    pub planner: Option<PlannerParams>,
 }
 
 impl Scenario {
@@ -797,6 +803,7 @@ impl Scenario {
             materialize: false,
             checkpoint: None,
             faults: FaultPlan::default(),
+            planner: None,
         }
     }
 
@@ -852,6 +859,12 @@ impl Scenario {
     /// Arm a fault-injection plan for every cell of this scenario.
     pub fn with_faults(mut self, plan: FaultPlan) -> Scenario {
         self.faults = plan;
+        self
+    }
+
+    /// Tune the `sla-planner` policy family for this scenario.
+    pub fn with_planner(mut self, params: PlannerParams) -> Scenario {
+        self.planner = Some(params);
         self
     }
 
@@ -966,6 +979,12 @@ impl Scenario {
             field: "faults".into(),
             reason,
         })?;
+        if let Some(p) = &self.planner {
+            p.validate().map_err(|reason| ScenarioError::BadValue {
+                field: "planner".into(),
+                reason,
+            })?;
+        }
         Ok(())
     }
 
@@ -1045,6 +1064,7 @@ impl Scenario {
             },
             overlap_weight: self.overrides.overlap_weight,
             router_temperature: self.overrides.router_temperature,
+            planner: self.planner,
         }
     }
 
@@ -1148,6 +1168,17 @@ impl Scenario {
         if !self.faults.is_empty() {
             j = j.set("faults", self.faults.to_json());
         }
+        if let Some(p) = &self.planner {
+            let mut pj = Json::obj()
+                .set("forecaster", p.forecaster.label())
+                .set("interval_s", p.interval_s)
+                .set("sample_s", p.sample_s)
+                .set("period_s", p.period_s);
+            if let Some(h) = p.horizon_s {
+                pj = pj.set("horizon_s", h);
+            }
+            j = j.set("planner", pj);
+        }
         j
     }
 
@@ -1167,6 +1198,7 @@ impl Scenario {
                 "materialize",
                 "checkpoint",
                 "faults",
+                "planner",
             ],
         )?;
         let name = req_str(j, "scenario", "name")?.to_string();
@@ -1261,6 +1293,43 @@ impl Scenario {
                 reason: e.to_string(),
             })?,
         };
+        let planner = match j.get("planner") {
+            None => None,
+            Some(p) => {
+                check_fields(
+                    p,
+                    "planner",
+                    &["forecaster", "interval_s", "sample_s", "period_s", "horizon_s"],
+                )?;
+                let mut params = PlannerParams::default();
+                if let Some(f) = p.get("forecaster") {
+                    let name = f.as_str().ok_or_else(|| ScenarioError::BadValue {
+                        field: "planner.forecaster".into(),
+                        reason: "expected a forecaster name string".into(),
+                    })?;
+                    params.forecaster =
+                        ForecasterKind::parse(name).ok_or_else(|| ScenarioError::BadValue {
+                            field: "planner.forecaster".into(),
+                            reason: format!(
+                                "unknown forecaster `{name}` (expected constant, seasonal-naive or holt-winters)"
+                            ),
+                        })?;
+                }
+                if let Some(v) = opt_f64(p, "interval_s")? {
+                    params.interval_s = v;
+                }
+                if let Some(v) = opt_f64(p, "sample_s")? {
+                    params.sample_s = v;
+                }
+                if let Some(v) = opt_f64(p, "period_s")? {
+                    params.period_s = v;
+                }
+                if let Some(v) = opt_f64(p, "horizon_s")? {
+                    params.horizon_s = Some(v);
+                }
+                Some(params)
+            }
+        };
         let scenario = Scenario {
             name,
             deployment: req_str(j, "scenario", "deployment")?.to_string(),
@@ -1279,6 +1348,7 @@ impl Scenario {
             },
             checkpoint,
             faults,
+            planner,
         };
         scenario.validate()?;
         Ok(scenario)

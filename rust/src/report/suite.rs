@@ -211,10 +211,23 @@ impl Suite {
                 let driver = PolicyKind::parse(&ck.policy)
                     .ok_or_else(|| anyhow::anyhow!("warm-start driver `{}` unknown", ck.policy))?;
                 let t0 = Instant::now();
-                let snap = Arc::new(
-                    simulate_prefix(&cell_specs[0], driver, ck.warm_start_s, 0.0, None)
-                        .map_err(|e| anyhow::anyhow!("scenario `{}`: {e}", sc.name))?,
-                );
+                let cache_path = warm_cache_path(sc);
+                let snap = match cache_path
+                    .as_deref()
+                    .and_then(|p| load_cached_prefix(p, ck.warm_start_s))
+                {
+                    Some(cached) => cached,
+                    None => {
+                        let fresh =
+                            simulate_prefix(&cell_specs[0], driver, ck.warm_start_s, 0.0, None)
+                                .map_err(|e| anyhow::anyhow!("scenario `{}`: {e}", sc.name))?;
+                        if let Some(p) = &cache_path {
+                            store_cached_prefix(p, &fresh);
+                        }
+                        fresh
+                    }
+                };
+                let snap = Arc::new(snap);
                 warm_start.push(WarmStartStat {
                     scenario: sc.name.clone(),
                     policy: ck.policy.clone(),
@@ -264,6 +277,105 @@ impl Suite {
 /// underscore separates the (sanitized) halves unambiguously enough for
 /// human inspection — collisions would only merge two cells' checkpoint
 /// files, never corrupt results.
+/// FNV-1a 64-bit running hash (dependency-free; used only for cache
+/// addressing, not integrity).
+struct Fnv64(u64);
+
+impl Fnv64 {
+    fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+}
+
+/// Directory of the cross-run warm-prefix cache, or `None` when
+/// disabled. Defaults to `.tokenscale-warm-cache/` in the working
+/// directory; `TOKENSCALE_WARM_CACHE=<dir>` relocates it and an empty
+/// value, `0` or `off` disables caching entirely.
+fn warm_cache_dir() -> Option<PathBuf> {
+    match std::env::var("TOKENSCALE_WARM_CACHE") {
+        Ok(v) if v.is_empty() || v == "0" || v.eq_ignore_ascii_case("off") => None,
+        Ok(v) => Some(PathBuf::from(v)),
+        Err(_) => Some(PathBuf::from(".tokenscale-warm-cache")),
+    }
+}
+
+/// Cache file for one scenario's warm prefix, or `None` when the
+/// scenario is not cacheable. Only replay workloads qualify: their
+/// prefixes replay large files deterministically run after run, which is
+/// exactly what a content hash can witness — synthetic prefixes would
+/// spend disk to skip a cheap regeneration. The key hashes the replay
+/// file **bytes**, the scenario definition minus its policy list (cells
+/// fork *after* the prefix, so the prefix is policy-list-independent;
+/// the warm-up driver and horizon live in the hashed checkpoint block)
+/// and the snapshot schema version, so any input drift misses cleanly.
+fn warm_cache_path(sc: &Scenario) -> Option<PathBuf> {
+    let WorkloadSpec::Replay { path } = &sc.workload else {
+        return None;
+    };
+    let dir = warm_cache_dir()?;
+    let bytes = std::fs::read(path).ok()?;
+    let mut scenario_json = sc.to_json();
+    if let Json::Obj(m) = &mut scenario_json {
+        m.remove("policies");
+    }
+    let mut h = Fnv64::new();
+    h.write(&bytes);
+    h.write(scenario_json.pretty().as_bytes());
+    h.write(&crate::sim::SNAPSHOT_SCHEMA_VERSION.to_le_bytes());
+    Some(dir.join(format!("{}-{:016x}.snap.json", cell_key(&sc.name, "prefix"), h.0)))
+}
+
+/// Load a cached prefix snapshot, declining anything implausible (a
+/// capture past the warm-start horizon can only be a stale or foreign
+/// file — recompute rather than trust it).
+fn load_cached_prefix(path: &Path, warm_start_s: f64) -> Option<SimSnapshot> {
+    if !path.exists() {
+        return None;
+    }
+    match SimSnapshot::load(path) {
+        Ok(s) if s.t <= warm_start_s + 1e-6 => {
+            eprintln!("warm-start cache hit: {}", path.display());
+            Some(s)
+        }
+        Ok(s) => {
+            eprintln!(
+                "warm-start cache: ignoring {} (captured at t={} past horizon {warm_start_s})",
+                path.display(),
+                s.t
+            );
+            None
+        }
+        Err(e) => {
+            eprintln!("warm-start cache: ignoring {}: {e}", path.display());
+            None
+        }
+    }
+}
+
+/// Best-effort atomic cache write (tmp + rename, like the recovery
+/// sink). Failures only cost the next run a recompute, so they are
+/// swallowed after cleaning up the temp file.
+fn store_cached_prefix(path: &Path, snap: &SimSnapshot) {
+    let Some(dir) = path.parent() else { return };
+    if std::fs::create_dir_all(dir).is_err() {
+        return;
+    }
+    let tmp = path.with_extension("tmp");
+    let write = snap
+        .save(&tmp)
+        .and_then(|()| std::fs::rename(&tmp, path).map_err(|e| anyhow::anyhow!("{e}")));
+    if write.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+}
+
 fn cell_key(scenario: &str, policy: &str) -> String {
     let sanitize = |s: &str| {
         s.chars()
@@ -539,7 +651,9 @@ impl Default for DiffTolerance {
     }
 }
 
-/// One metric movement beyond tolerance.
+/// One metric movement beyond tolerance. Carries both sides of the gate
+/// so CI logs show *which* bound failed and by how much, not just that
+/// something moved.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DiffFinding {
     pub scenario: String,
@@ -547,13 +661,21 @@ pub struct DiffFinding {
     pub metric: &'static str,
     pub baseline: f64,
     pub current: f64,
+    /// The tolerance boundary the current value was gated against
+    /// (baseline ± the configured tolerance for this metric).
+    pub allowed: f64,
+    /// True when larger is better (slo_attainment); false for cost
+    /// metrics (gpu_hours).
+    pub higher_is_better: bool,
 }
 
 impl DiffFinding {
     fn line(&self) -> String {
+        let delta = self.current - self.baseline;
+        let gate = if self.higher_is_better { ">=" } else { "<=" };
         format!(
-            "{}/{} {}: {:.4} -> {:.4}",
-            self.scenario, self.policy, self.metric, self.baseline, self.current
+            "{}/{} {}: baseline {:.4} -> current {:.4} (delta {delta:+.4}; gate: current {gate} {:.4})",
+            self.scenario, self.policy, self.metric, self.baseline, self.current, self.allowed
         )
     }
 }
@@ -641,13 +763,16 @@ pub fn diff_bench(current: &Json, baseline: &Json, tol: &DiffTolerance) -> anyho
             report.missing.push(format!("{scenario}/{policy}"));
             continue;
         };
-        if *c_slo < b_slo - tol.slo_attainment {
+        let slo_floor = b_slo - tol.slo_attainment;
+        if *c_slo < slo_floor {
             report.regressions.push(DiffFinding {
                 scenario: scenario.clone(),
                 policy: policy.clone(),
                 metric: "slo_attainment",
                 baseline: *b_slo,
                 current: *c_slo,
+                allowed: slo_floor,
+                higher_is_better: true,
             });
         } else if *c_slo > b_slo + tol.slo_attainment {
             report.improvements.push(DiffFinding {
@@ -656,6 +781,8 @@ pub fn diff_bench(current: &Json, baseline: &Json, tol: &DiffTolerance) -> anyho
                 metric: "slo_attainment",
                 baseline: *b_slo,
                 current: *c_slo,
+                allowed: slo_floor,
+                higher_is_better: true,
             });
         }
         let gpu_limit = b_gpu * (1.0 + tol.gpu_hours_frac) + 1e-9;
@@ -666,6 +793,8 @@ pub fn diff_bench(current: &Json, baseline: &Json, tol: &DiffTolerance) -> anyho
                 metric: "gpu_hours",
                 baseline: *b_gpu,
                 current: *c_gpu,
+                allowed: gpu_limit,
+                higher_is_better: false,
             });
         } else if *c_gpu < b_gpu * (1.0 - tol.gpu_hours_frac) - 1e-9 {
             report.improvements.push(DiffFinding {
@@ -674,6 +803,8 @@ pub fn diff_bench(current: &Json, baseline: &Json, tol: &DiffTolerance) -> anyho
                 metric: "gpu_hours",
                 baseline: *b_gpu,
                 current: *c_gpu,
+                allowed: gpu_limit,
+                higher_is_better: false,
             });
         }
     }
@@ -1366,5 +1497,96 @@ mod tests {
         let d = diff_bench(&doc(0.99, 0.8, true), &doc(0.90, 1.0, true), &tol).unwrap();
         assert!(d.clean());
         assert_eq!(d.improvements.len(), 2);
+    }
+
+    /// Regression lines must name both sides of the gate: baseline and
+    /// current value, the signed delta, and the boundary that failed.
+    #[test]
+    fn diff_lines_show_gate_side_and_delta() {
+        let cell = |slo: f64, gpu: f64| Json::obj().set("slo_attainment", slo).set("gpu_hours", gpu);
+        let doc = |slo: f64, gpu: f64| {
+            Json::obj()
+                .set("schema_version", BENCH_SCHEMA_VERSION)
+                .set("suite", "t")
+                .set("wall_s", 1.0)
+                .set("scenarios", Json::obj().set("s1", Json::obj().set("tokenscale", cell(slo, gpu))))
+        };
+        let tol = DiffTolerance::default();
+        let d = diff_bench(&doc(0.90, 1.5), &doc(0.95, 1.0), &tol).unwrap();
+        assert_eq!(d.regressions.len(), 2);
+
+        let slo = d.regressions.iter().find(|r| r.metric == "slo_attainment").unwrap();
+        assert!(slo.higher_is_better);
+        assert!((slo.allowed - (0.95 - tol.slo_attainment)).abs() < 1e-12);
+        let line = d.render();
+        assert!(line.contains("baseline 0.9500"), "{line}");
+        assert!(line.contains("current 0.9000"), "{line}");
+        assert!(line.contains("delta -0.0500"), "{line}");
+        assert!(line.contains(">="), "{line}");
+
+        let gpu = d.regressions.iter().find(|r| r.metric == "gpu_hours").unwrap();
+        assert!(!gpu.higher_is_better);
+        assert!(gpu.allowed < gpu.current && gpu.allowed > gpu.baseline);
+        assert!(line.contains("delta +0.5000"), "{line}");
+        assert!(line.contains("<="), "{line}");
+    }
+
+    #[test]
+    fn fnv64_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        let hash = |bytes: &[u8]| {
+            let mut h = Fnv64::new();
+            h.write(bytes);
+            h.0
+        };
+        assert_eq!(hash(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(hash(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(hash(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn warm_cache_roundtrip_and_horizon_guard() {
+        let dir = std::env::temp_dir().join(format!("ts-warmcache-{}", std::process::id()));
+        let path = dir.join("cell-prefix-0123.snap.json");
+        let snap = SimSnapshot {
+            version: crate::sim::SNAPSHOT_SCHEMA_VERSION,
+            label: "t".into(),
+            t: 60.0,
+            arrivals_pulled: 7,
+            policy: crate::sim::PolicyState::stateless("tokenscale"),
+            engine: Json::obj(),
+        };
+        store_cached_prefix(&path, &snap);
+        let back = load_cached_prefix(&path, 60.0).expect("cache hit");
+        assert_eq!(back, snap);
+        // A capture past the warm-start horizon can only be stale: declined.
+        assert!(load_cached_prefix(&path, 30.0).is_none());
+        // Corrupt cache files are declined, never fatal.
+        std::fs::write(&path, "not json").unwrap();
+        assert!(load_cached_prefix(&path, 60.0).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn warm_cache_only_keys_replay_scenarios() {
+        // Synthetic workloads regenerate instantly — never cached.
+        let sc = Scenario::new(
+            "s",
+            "small-a100",
+            WorkloadSpec::Synthetic {
+                family: TraceFamily::AzureConv,
+                rps: 5.0,
+                duration_s: 60.0,
+                seed: 1,
+            },
+        );
+        assert!(warm_cache_path(&sc).is_none());
+        // A replay scenario pointing at a missing file is also uncacheable.
+        let sc = Scenario::new(
+            "s",
+            "small-a100",
+            WorkloadSpec::Replay { path: "/nonexistent/trace.csv".into() },
+        );
+        assert!(warm_cache_path(&sc).is_none());
     }
 }

@@ -3,6 +3,7 @@
 //! DistServe) with their Table I threshold derivations.
 
 pub mod baselines;
+pub mod planner;
 pub mod routers;
 pub mod thresholds;
 pub mod tokenscale;
@@ -11,6 +12,7 @@ pub use baselines::{
     ablation_bp, ablation_bpd, prefill_deflect, Ablation, AiBrix, BlitzScale, DistServe,
     PrefillDeflect,
 };
+pub use planner::{sla_hybrid, sla_planner, PlannerParams, SlaPlanner};
 pub use routers::{router_policy, RouterKind, RouterPolicy};
 pub use thresholds::{
     derive as derive_thresholds, derive_from_profile as derive_thresholds_from_profile, Thresholds,

@@ -1,0 +1,543 @@
+//! The predictive `sla-planner` policy family: forecast the load, invert
+//! the latency model, provision *ahead* of the ramp.
+//!
+//! Both policies compose the three `forecast` pieces (SNIPPETS.md §1,
+//! Dynamo's SLA-planner architecture):
+//!
+//! 1. Every `sample_s` of sim time, the observed arrival rate and mean
+//!    ISL/OSL are appended to three online [`Forecaster`] series.
+//! 2. Every `interval_s`, the forecast at the planning horizon (one
+//!    interval plus instance startup, so capacity is *ready* when the
+//!    load lands) is pushed through the [`Interpolator`] to get minimum
+//!    replica counts meeting the TTFT/TPOT SLOs.
+//! 3. Observed TTFT/TPOT over the elapsed interval update multiplicative
+//!    [`Correction`] factors, so queueing-approximation error in the
+//!    analytic model self-corrects.
+//!
+//! - **`sla-planner`** emits the planned counts directly (`SetFleet` is
+//!   absolute, re-asserted every tick) — pure prediction, no reactive
+//!   term. The planning interval itself is the smoothing; there is no
+//!   extra hysteresis to fight the forecast.
+//! - **`sla-hybrid`** uses the plan as a *floor* under TokenScale's
+//!   token-velocity targets: prediction pre-provisions the diurnal
+//!   swell, velocity adds burst headroom the forecast cannot see.
+//!
+//! Routing is least-loaded (DistServe mechanics via [`BaseState`]), so
+//! benchmark deltas against `distserve`/`tokenscale` isolate the scaling
+//! policy. All stream state — forecasters, corrections, windows, the
+//! schedule — serializes bit-exactly through [`PolicyState`]
+//! (docs/forecasting.md covers determinism and tuning).
+
+use super::baselines::BaseState;
+use super::tokenscale as ts_calc;
+use crate::coordinator::Gateway;
+use crate::forecast::{Correction, Forecaster, ForecasterKind, Interpolator, LoadForecast, PlanTarget};
+use crate::perfmodel::{EngineModel, LinkSpec};
+use crate::sim::{Action, ClusterView, ControlPlane, PolicyState, Role, Signal};
+use crate::trace::TraceProfile;
+use crate::util::json::Json;
+use crate::util::stats::SlidingWindow;
+use crate::velocity::VelocityProfile;
+use crate::workload::{OutputPredictor, SloPolicy};
+use std::sync::Arc;
+
+/// Tuning knobs for the planner family, settable per scenario via the
+/// `[scenarios.planner]` TOML block.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlannerParams {
+    /// Which load forecaster runs (arrival rate, ISL, OSL series alike).
+    pub forecaster: ForecasterKind,
+    /// Re-plan (interpolate + correct) every this many sim seconds.
+    pub interval_s: f64,
+    /// Append one sample to each forecast series every this many seconds;
+    /// also the seasonal step unit.
+    pub sample_s: f64,
+    /// Seasonal period in seconds (seasonal-naive / Holt-Winters).
+    pub period_s: f64,
+    /// Forecast horizon in seconds; `None` = one planning interval plus
+    /// the engine's startup time, so ordered capacity is live on arrival.
+    pub horizon_s: Option<f64>,
+}
+
+impl Default for PlannerParams {
+    fn default() -> Self {
+        PlannerParams {
+            forecaster: ForecasterKind::HoltWinters,
+            interval_s: 60.0,
+            sample_s: 5.0,
+            period_s: 3600.0,
+            horizon_s: None,
+        }
+    }
+}
+
+impl PlannerParams {
+    /// Typed validation for scenario loading.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.interval_s > 0.0) {
+            return Err(format!("planner interval_s must be > 0 (got {})", self.interval_s));
+        }
+        if !(self.sample_s > 0.0) {
+            return Err(format!("planner sample_s must be > 0 (got {})", self.sample_s));
+        }
+        if self.sample_s > self.interval_s {
+            return Err(format!(
+                "planner sample_s ({}) must not exceed interval_s ({})",
+                self.sample_s, self.interval_s
+            ));
+        }
+        if self.period_s < self.sample_s {
+            return Err(format!(
+                "planner period_s ({}) must be at least sample_s ({})",
+                self.period_s, self.sample_s
+            ));
+        }
+        if let Some(h) = self.horizon_s {
+            if !(h > 0.0) {
+                return Err(format!("planner horizon_s must be > 0 (got {h})"));
+            }
+        }
+        Ok(())
+    }
+
+    fn period_steps(&self) -> usize {
+        ((self.period_s / self.sample_s).round() as usize).max(1)
+    }
+
+    fn mean_window_steps(&self) -> usize {
+        ((self.interval_s / self.sample_s).ceil() as usize).max(1)
+    }
+}
+
+/// The reactive arm of `sla-hybrid`: TokenScale's gateway windows and
+/// velocity profile.
+struct VelocityArm {
+    gateway: Gateway,
+    profile: VelocityProfile,
+}
+
+/// Shared implementation behind `sla-planner` and `sla-hybrid`.
+pub struct SlaPlanner {
+    label: &'static str,
+    state: BaseState,
+    velocity: Option<VelocityArm>,
+    interp: Interpolator,
+    slo: SloPolicy,
+    /// Per-role replica cap (deployment GPU budget / TP degree).
+    cap: usize,
+    /// Resolved planning horizon, seconds.
+    horizon_s: f64,
+    sample_s: f64,
+    interval_s: f64,
+    default_isl: f64,
+    default_osl: f64,
+    // Sampled series feeding the forecasters (window = sample_s).
+    req_win: SlidingWindow,
+    in_tok_win: SlidingWindow,
+    out_tok_win: SlidingWindow,
+    comp_win: SlidingWindow,
+    // Observed latency over the planning interval (window = interval_s).
+    ttft_win: SlidingWindow,
+    tpot_win: SlidingWindow,
+    fc_rps: Box<dyn Forecaster>,
+    fc_isl: Box<dyn Forecaster>,
+    fc_osl: Box<dyn Forecaster>,
+    corr_ttft: Correction,
+    corr_itl: Correction,
+    next_sample_t: f64,
+    next_plan_t: f64,
+    /// Current plan (0 = no plan yet; planner holds until the first
+    /// forecast materializes).
+    plan_p: usize,
+    plan_d: usize,
+    /// Corrected predictions backing the current plan, matched against
+    /// observations at the next re-plan.
+    last_pred_ttft: Option<f64>,
+    last_pred_itl: Option<f64>,
+}
+
+/// Pure predictive planner (`sla-planner`).
+pub fn sla_planner(
+    params: &PlannerParams,
+    engine: Arc<EngineModel>,
+    slo: SloPolicy,
+    cap: usize,
+    workload: &TraceProfile,
+) -> SlaPlanner {
+    SlaPlanner::build("sla-planner", params, engine, None, slo, cap, workload, 0.85)
+}
+
+/// Forecast-floored token-velocity policy (`sla-hybrid`).
+pub fn sla_hybrid(
+    params: &PlannerParams,
+    engine: Arc<EngineModel>,
+    link: &LinkSpec,
+    slo: SloPolicy,
+    cap: usize,
+    workload: &TraceProfile,
+    predictor_accuracy: f64,
+) -> SlaPlanner {
+    SlaPlanner::build(
+        "sla-hybrid",
+        params,
+        engine,
+        Some(link),
+        slo,
+        cap,
+        workload,
+        predictor_accuracy,
+    )
+}
+
+impl SlaPlanner {
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        label: &'static str,
+        params: &PlannerParams,
+        engine: Arc<EngineModel>,
+        link: Option<&LinkSpec>,
+        slo: SloPolicy,
+        cap: usize,
+        workload: &TraceProfile,
+        predictor_accuracy: f64,
+    ) -> SlaPlanner {
+        let horizon_s = params
+            .horizon_s
+            .unwrap_or(params.interval_s + engine.startup_time());
+        let velocity = link.map(|link| VelocityArm {
+            gateway: Gateway::new(1.0, 5.0, OutputPredictor::new(predictor_accuracy, 0x5A1)),
+            profile: VelocityProfile::analytic(&engine, link, workload.avg_input_tokens as usize),
+        });
+        let (period, window) = (params.period_steps(), params.mean_window_steps());
+        SlaPlanner {
+            label,
+            state: BaseState::new(20, 10.0),
+            velocity,
+            interp: Interpolator::new(engine),
+            slo,
+            cap: cap.max(1),
+            horizon_s,
+            sample_s: params.sample_s,
+            interval_s: params.interval_s,
+            default_isl: workload.avg_input_tokens.max(1.0),
+            default_osl: workload.avg_output_tokens.max(1.0),
+            req_win: SlidingWindow::new(params.sample_s),
+            in_tok_win: SlidingWindow::new(params.sample_s),
+            out_tok_win: SlidingWindow::new(params.sample_s),
+            comp_win: SlidingWindow::new(params.sample_s),
+            ttft_win: SlidingWindow::new(params.interval_s),
+            tpot_win: SlidingWindow::new(params.interval_s),
+            fc_rps: params.forecaster.build(period, window),
+            fc_isl: params.forecaster.build(period, window),
+            fc_osl: params.forecaster.build(period, window),
+            corr_ttft: Correction::new(8.0),
+            corr_itl: Correction::new(8.0),
+            next_sample_t: 0.0,
+            next_plan_t: 0.0,
+            plan_p: 0,
+            plan_d: 0,
+            last_pred_ttft: None,
+            last_pred_itl: None,
+        }
+    }
+
+    /// Append one sample per series: arrival rate plus mean ISL/OSL over
+    /// the elapsed sampling window (falling back to the workload profile
+    /// means when the window saw no traffic, so seasonal slots learned
+    /// during quiet phases stay plausible).
+    fn sample(&mut self, now: f64) {
+        self.req_win.evict(now);
+        self.in_tok_win.evict(now);
+        self.out_tok_win.evict(now);
+        self.comp_win.evict(now);
+        let rps = self.req_win.rate();
+        let isl = if self.req_win.sum() > 0.0 {
+            self.in_tok_win.sum() / self.req_win.sum()
+        } else {
+            self.default_isl
+        };
+        let osl = if self.comp_win.sum() > 0.0 {
+            self.out_tok_win.sum() / self.comp_win.sum()
+        } else {
+            self.default_osl
+        };
+        self.fc_rps.observe(now, rps);
+        self.fc_isl.observe(now, isl);
+        self.fc_osl.observe(now, osl);
+    }
+
+    /// Re-plan: calibrate the corrections against the elapsed interval,
+    /// forecast load at the horizon, invert the latency model. Holds the
+    /// previous plan when the forecasters have no data yet.
+    fn plan(&mut self, now: f64) {
+        self.ttft_win.evict(now);
+        self.tpot_win.evict(now);
+        if let Some(pred) = self.last_pred_ttft {
+            if self.ttft_win.len() > 0 {
+                let observed = self.ttft_win.sum() / self.ttft_win.len() as f64;
+                self.corr_ttft.observe(observed, pred);
+            }
+        }
+        if let Some(pred) = self.last_pred_itl {
+            if self.tpot_win.len() > 0 {
+                let observed = self.tpot_win.sum() / self.tpot_win.len() as f64;
+                self.corr_itl.observe(observed, pred);
+            }
+        }
+
+        let steps = ((self.horizon_s / self.sample_s).ceil() as usize).max(1);
+        let Some(rps_hat) = self.fc_rps.forecast(steps) else {
+            return;
+        };
+        let load = LoadForecast {
+            rps: rps_hat.max(0.0),
+            isl: self.fc_isl.forecast(steps).unwrap_or(self.default_isl).clamp(1.0, 1.0e6),
+            osl: self.fc_osl.forecast(steps).unwrap_or(self.default_osl).clamp(1.0, 1.0e6),
+        };
+        let target = PlanTarget {
+            ttft_s: self.slo.ttft_slo(load.isl as usize),
+            tpot_s: self.slo.tpot_s,
+        };
+        let res = self.interp.plan(
+            &load,
+            &target,
+            self.corr_ttft.factor(),
+            self.corr_itl.factor(),
+            self.cap,
+        );
+        self.plan_p = res.prefillers.max(self.state.min_prefillers);
+        self.plan_d = res.decoders.max(self.state.min_decoders);
+        self.last_pred_ttft = Some(res.ttft_s);
+        self.last_pred_itl = Some(res.itl_s);
+    }
+
+    fn on_tick(&mut self, now: f64, view: &ClusterView<'_>, actions: &mut Vec<Action>) {
+        if now + 1e-9 >= self.next_sample_t {
+            self.sample(now);
+            self.next_sample_t += self.sample_s;
+            if self.next_sample_t <= now {
+                self.next_sample_t = now + self.sample_s;
+            }
+        }
+        if now + 1e-9 >= self.next_plan_t {
+            self.plan(now);
+            self.next_plan_t += self.interval_s;
+            if self.next_plan_t <= now {
+                self.next_plan_t = now + self.interval_s;
+            }
+        }
+
+        match &mut self.velocity {
+            None => {
+                // Pure planner: the plan IS the fleet. Re-asserted every
+                // tick (SetFleet is absolute); held until the first plan.
+                if self.plan_p > 0 {
+                    BaseState::push_fleet(actions, self.plan_p, self.plan_d);
+                }
+            }
+            Some(arm) => {
+                // Hybrid: token-velocity targets with the plan as floor.
+                let lambda = arm.gateway.input_token_rate(now);
+                let vel_p = ts_calc::required_prefillers(lambda, &arm.profile);
+                let per_bucket = arm.gateway.bucket_token_rates(now);
+                let vel_d = ts_calc::required_decoders(&per_bucket, &arm.profile);
+                let (p, d) = self.state.smoothed_fleet(
+                    view,
+                    vel_p.max(self.plan_p),
+                    vel_d.max(self.plan_d),
+                );
+                BaseState::push_fleet(actions, p, d);
+            }
+        }
+    }
+
+    fn forecast_snapshot(&self) -> Json {
+        Json::obj()
+            .set("rps", self.fc_rps.to_snapshot())
+            .set("isl", self.fc_isl.to_snapshot())
+            .set("osl", self.fc_osl.to_snapshot())
+    }
+
+    fn windows_snapshot(&self) -> Json {
+        Json::obj()
+            .set("req", self.req_win.to_snapshot())
+            .set("in_tok", self.in_tok_win.to_snapshot())
+            .set("out_tok", self.out_tok_win.to_snapshot())
+            .set("comp", self.comp_win.to_snapshot())
+            .set("ttft", self.ttft_win.to_snapshot())
+            .set("tpot", self.tpot_win.to_snapshot())
+    }
+
+    fn sched_snapshot(&self) -> Json {
+        let opt_bits = |v: Option<f64>| match v {
+            Some(x) => Json::f64_bits(x),
+            None => Json::Null,
+        };
+        Json::obj()
+            .set("next_sample_t", Json::f64_bits(self.next_sample_t))
+            .set("next_plan_t", Json::f64_bits(self.next_plan_t))
+            .set("plan_p", self.plan_p)
+            .set("plan_d", self.plan_d)
+            .set("last_pred_ttft", opt_bits(self.last_pred_ttft))
+            .set("last_pred_itl", opt_bits(self.last_pred_itl))
+    }
+}
+
+fn req_window(j: &Json, key: &str) -> anyhow::Result<SlidingWindow> {
+    SlidingWindow::from_snapshot(
+        j.get(key)
+            .ok_or_else(|| anyhow::anyhow!("planner snapshot missing window `{key}`"))?,
+    )
+}
+
+fn opt_bits_field(j: &Json, key: &str) -> anyhow::Result<Option<f64>> {
+    match j.get(key) {
+        Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_f64_bits()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("planner snapshot: bad f64 bits in `{key}`")),
+        None => anyhow::bail!("planner snapshot missing `{key}`"),
+    }
+}
+
+impl ControlPlane for SlaPlanner {
+    fn name(&self) -> &str {
+        self.label
+    }
+
+    fn on_signal(
+        &mut self,
+        now: f64,
+        signal: Signal<'_>,
+        view: &ClusterView<'_>,
+        actions: &mut Vec<Action>,
+    ) {
+        if let Signal::Arrival(req) = signal {
+            self.state.on_arrival(now, req);
+            self.req_win.push(now, 1.0);
+            self.in_tok_win.push(now, req.input_tokens as f64);
+            if let Some(arm) = &mut self.velocity {
+                arm.gateway.ingest(now, req);
+            }
+            if let Some(target) = self.state.route_prefill(view) {
+                actions.push(Action::RoutePrefill { req: req.id, target });
+            }
+            return;
+        }
+        let handled = self.state.base_signal(now, signal, view, actions);
+        if let Signal::Completion(c) = signal {
+            self.out_tok_win.push(now, c.output_tokens as f64);
+            self.comp_win.push(now, 1.0);
+            self.ttft_win.push(now, c.ttft);
+            if c.output_tokens > 1 {
+                self.tpot_win.push(now, c.tpot);
+            }
+            return;
+        }
+        if handled {
+            return;
+        }
+        if matches!(signal, Signal::Tick) {
+            self.on_tick(now, view, actions);
+        }
+    }
+
+    fn save_state(&self) -> PolicyState {
+        let mut data = Json::obj()
+            .set("base", self.state.to_snapshot())
+            .set("forecast", self.forecast_snapshot())
+            .set(
+                "correction",
+                Json::obj()
+                    .set("ttft", self.corr_ttft.to_snapshot())
+                    .set("itl", self.corr_itl.to_snapshot()),
+            )
+            .set("windows", self.windows_snapshot())
+            .set("sched", self.sched_snapshot());
+        if let Some(arm) = &self.velocity {
+            data = data.set("gateway", arm.gateway.to_snapshot());
+        }
+        PolicyState::new(self.name(), data)
+    }
+
+    fn restore_state(&mut self, state: &PolicyState) -> anyhow::Result<()> {
+        state.expect(self.name())?;
+        self.state.restore_snapshot(state.part("base")?)?;
+        if let Some(arm) = &mut self.velocity {
+            arm.gateway.restore_snapshot(state.part("gateway")?)?;
+        }
+        let fc = state.part("forecast")?;
+        for (series, slot) in [
+            ("rps", &mut self.fc_rps),
+            ("isl", &mut self.fc_isl),
+            ("osl", &mut self.fc_osl),
+        ] {
+            slot.restore_snapshot(
+                fc.get(series)
+                    .ok_or_else(|| anyhow::anyhow!("planner snapshot missing forecast `{series}`"))?,
+            )?;
+        }
+        let corr = state.part("correction")?;
+        self.corr_ttft.restore_snapshot(
+            corr.get("ttft").ok_or_else(|| anyhow::anyhow!("planner snapshot missing `correction.ttft`"))?,
+        )?;
+        self.corr_itl.restore_snapshot(
+            corr.get("itl").ok_or_else(|| anyhow::anyhow!("planner snapshot missing `correction.itl`"))?,
+        )?;
+        let w = state.part("windows")?;
+        self.req_win = req_window(w, "req")?;
+        self.in_tok_win = req_window(w, "in_tok")?;
+        self.out_tok_win = req_window(w, "out_tok")?;
+        self.comp_win = req_window(w, "comp")?;
+        self.ttft_win = req_window(w, "ttft")?;
+        self.tpot_win = req_window(w, "tpot")?;
+        let s = state.part("sched")?;
+        self.next_sample_t = s
+            .get("next_sample_t")
+            .and_then(Json::as_f64_bits)
+            .ok_or_else(|| anyhow::anyhow!("planner snapshot missing `next_sample_t`"))?;
+        self.next_plan_t = s
+            .get("next_plan_t")
+            .and_then(Json::as_f64_bits)
+            .ok_or_else(|| anyhow::anyhow!("planner snapshot missing `next_plan_t`"))?;
+        self.plan_p = s
+            .get("plan_p")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("planner snapshot missing `plan_p`"))?;
+        self.plan_d = s
+            .get("plan_d")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("planner snapshot missing `plan_d`"))?;
+        self.last_pred_ttft = opt_bits_field(s, "last_pred_ttft")?;
+        self.last_pred_itl = opt_bits_field(s, "last_pred_itl")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_validate() {
+        assert!(PlannerParams::default().validate().is_ok());
+        let bad = PlannerParams { interval_s: 0.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = PlannerParams { sample_s: 120.0, interval_s: 60.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = PlannerParams { period_s: 1.0, sample_s: 5.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = PlannerParams { horizon_s: Some(-1.0), ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn period_and_window_steps() {
+        let p = PlannerParams { period_s: 300.0, sample_s: 5.0, interval_s: 30.0, ..Default::default() };
+        assert_eq!(p.period_steps(), 60);
+        assert_eq!(p.mean_window_steps(), 6);
+        let tiny = PlannerParams { period_s: 1.0, sample_s: 5.0, ..Default::default() };
+        assert_eq!(tiny.period_steps(), 1); // floored, validate() rejects it anyway
+    }
+}

@@ -364,12 +364,23 @@ fn shipped_smoke_suite_parses_and_validates() {
         "flash-crowd",
         "chaos-smoke",
         "splice-replay",
+        "planner-smoke",
     ] {
         assert!(
             suite.scenarios.iter().any(|s| s.name == want),
             "smoke suite lacks {want}"
         );
     }
+    // The planner cell arms the forecast block for both planner policies.
+    let planner = suite
+        .scenarios
+        .iter()
+        .find(|s| s.name == "planner-smoke")
+        .unwrap();
+    let params = planner.planner.expect("planner-smoke must carry a planner block");
+    assert_eq!(params.period_s, 60.0);
+    assert!(planner.policies.iter().any(|p| p == "sla-planner"));
+    assert!(planner.policies.iter().any(|p| p == "sla-hybrid"));
     // The chaos cell carries an armed, seeded fault plan.
     let chaos = suite
         .scenarios
@@ -412,6 +423,37 @@ fn shipped_chaos_suite_parses_and_validates() {
         // Goodput-under-churn compares the full baseline panel.
         assert_eq!(sc.policies.len(), 4, "{want} must run all four baselines");
     }
+}
+
+#[test]
+fn shipped_planner_suite_parses_and_validates() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/planner.toml");
+    let suite = Suite::from_path(std::path::Path::new(path)).expect("planner suite loads");
+    assert_eq!(suite.name, "planner");
+    suite.validate().expect("planner suite validates");
+    for want in ["planner-diurnal", "planner-flash"] {
+        let sc = suite
+            .scenarios
+            .iter()
+            .find(|s| s.name == want)
+            .unwrap_or_else(|| panic!("planner suite lacks {want}"));
+        // Every cell compares the planner family against reactive baselines.
+        let params = sc.planner.unwrap_or_else(|| panic!("{want} must carry a planner block"));
+        assert!(params.period_s >= params.sample_s);
+        for policy in ["tokenscale", "sla-planner", "sla-hybrid", "distserve"] {
+            assert!(
+                sc.policies.iter().any(|p| p == policy),
+                "{want} must run {policy}"
+            );
+        }
+    }
+    // The diurnal cell warm-starts from a shared checkpoint prefix.
+    let diurnal = suite
+        .scenarios
+        .iter()
+        .find(|s| s.name == "planner-diurnal")
+        .unwrap();
+    assert!(diurnal.checkpoint.is_some(), "planner-diurnal must warm-start");
 }
 
 #[test]

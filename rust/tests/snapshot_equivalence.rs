@@ -251,6 +251,35 @@ fn remaining_registry_policies_resume_bit_identically() {
     scenario_resumes_bit_identically(&scenario, 20.0);
 }
 
+/// The predictive planner family carries the richest state shape in the
+/// registry — three forecasters, two correction EWMAs, six sliding
+/// windows, the plan schedule, and (hybrid) the gateway — so gate both
+/// policies through the same mid-run checkpoint kit. The planner knobs
+/// are tightened so sampling *and* at least one re-plan (with a live
+/// plan and correction observations) land inside the 60 s run and the
+/// 20 s checkpoint straddles scheduled work on both sides.
+#[test]
+fn planner_family_resumes_bit_identically() {
+    let scenario = Scenario::new(
+        "planner-extras",
+        "small-a100",
+        WorkloadSpec::Synthetic {
+            family: TraceFamily::Mixed,
+            rps: 10.0,
+            duration_s: 60.0,
+            seed: 77,
+        },
+    )
+    .policies(&["sla-planner", "sla-hybrid"])
+    .with_planner(tokenscale::scaler::PlannerParams {
+        sample_s: 2.0,
+        interval_s: 10.0,
+        period_s: 60.0,
+        ..Default::default()
+    });
+    scenario_resumes_bit_identically(&scenario, 20.0);
+}
+
 /// An interrupted run with a decision-audit ring resumes with the ring
 /// contents intact (total_seen continues, retained records survive).
 #[test]
