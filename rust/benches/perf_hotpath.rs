@@ -154,6 +154,45 @@ fn main() {
             .set("events_per_s", sketch_events as f64 / sketch.p50_s),
     );
 
+    // 1c. The same cell with telemetry armed (every request span-sampled,
+    //     5s timeline) vs the observe-off run above — the cost of watching.
+    //     Telemetry must never change the trajectory (the passivity
+    //     contract in `tokenscale::obs`), only the wall clock, and not by
+    //     much: docs/observability.md documents the expected overhead.
+    let mut obs_sc = scenario.clone();
+    obs_sc.observe = Some(tokenscale::obs::ObserveConfig {
+        sample_s: 5.0,
+        span_sample_n: 1,
+        seed: 0,
+        sinks: vec![],
+    });
+    let obs_spec = obs_sc.experiment_specs().expect("hotpath scenario").remove(0);
+    let obs_probe = run_experiment(&obs_spec);
+    let obs_events = obs_probe.sim.events_processed;
+    let span_events = obs_probe.sim.obs.as_ref().map_or(0, |o| o.spans.len());
+    let obs = timer.run(|| {
+        let r = run_experiment(&obs_spec);
+        std::hint::black_box(r.report.n);
+    });
+    println!("{}", obs.line("sim_e2e_observe_on"));
+    let overhead = obs.p50_s / fast.p50_s - 1.0;
+    println!(
+        "  -> {:.2}M events/s ({} span events recorded); observe overhead {:+.1}% vs off",
+        obs_events as f64 / obs.p50_s / 1e6,
+        span_events,
+        overhead * 100.0
+    );
+    out = out.set(
+        "sim_e2e_observe",
+        Json::obj()
+            .set("p50_s", obs.p50_s)
+            .set("mean_s", obs.mean_s)
+            .set("events", obs_events)
+            .set("events_per_s", obs_events as f64 / obs.p50_s)
+            .set("span_events", span_events)
+            .set("overhead_vs_off", overhead),
+    );
+
     // 2. Router decision latency (Alg. 1) on a 16-instance cluster.
     let engine = Arc::new(EngineModel::new(
         catalog::model("llama-3.1-8b").unwrap(),

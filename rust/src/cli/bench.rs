@@ -164,8 +164,21 @@ fn bench_run(args: &Args) -> anyhow::Result<()> {
     run.write_bench(out_path)?;
     println!("wrote {out}");
 
+    // Telemetry artifacts for every cell whose scenario armed observe
+    // (`[scenarios.observe]`), written next to the bench report.
+    let artifact_dir = out_path.parent().unwrap_or(Path::new("."));
+    for p in run.write_observe_artifacts(artifact_dir)? {
+        println!("wrote {}", p.display());
+    }
+
     if let Some(baseline) = args.get("diff") {
-        gate_against_baseline(&run, Path::new(baseline), &tolerance(args)?, args.get_bool("init-missing"))?;
+        gate_against_baseline(
+            &run,
+            Path::new(baseline),
+            &tolerance(args)?,
+            args.get_bool("init-missing"),
+            artifact_dir,
+        )?;
     }
     Ok(())
 }
@@ -177,6 +190,7 @@ fn gate_against_baseline(
     baseline: &Path,
     tol: &DiffTolerance,
     init_missing: bool,
+    artifact_dir: &Path,
 ) -> anyhow::Result<()> {
     if !baseline.exists() {
         if init_missing {
@@ -197,7 +211,9 @@ fn gate_against_baseline(
         .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", baseline.display()))?;
     let base = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", baseline.display()))?;
     let report = diff_bench(&run.to_json(), &base, tol)?;
-    print!("{}", report.render());
+    // Failing gate lines point at the cell's timeline artifact (when one
+    // was written) so regressions come with their telemetry attached.
+    print!("{}", report.render_with_artifacts(Some(artifact_dir)));
     anyhow::ensure!(
         report.clean(),
         "suite {} regressed vs {} ({} regressions, {} missing cells)",
@@ -222,7 +238,10 @@ fn bench_diff(args: &Args) -> anyhow::Result<()> {
     let current = load(cur_path)?;
     let baseline = load(base_path)?;
     let report = diff_bench(&current, &baseline, &tolerance(args)?)?;
-    print!("{}", report.render());
+    // Artifacts live next to the current report when `bench run` wrote
+    // them; regression lines pick up the pointer if the file exists.
+    let artifact_dir = Path::new(cur_path).parent().unwrap_or(Path::new("."));
+    print!("{}", report.render_with_artifacts(Some(artifact_dir)));
     anyhow::ensure!(
         report.clean(),
         "{cur_path} regressed vs {base_path} ({} regressions, {} missing cells)",

@@ -5,6 +5,7 @@ use crate::config::ExperimentConfig;
 use crate::report::runner::RunOverrides;
 use crate::report::{deployment, run_experiment, ExperimentSpec, PolicyKind, PolicyRegistry};
 use crate::trace::{generate_family, TraceFamily};
+use crate::util::json::Json;
 use crate::util::table::{fnum, pct, Table};
 use crate::velocity::VelocityProfile;
 use crate::workload::{all_buckets, BucketScheme};
@@ -26,8 +27,11 @@ SUBCOMMANDS:
     thresholds  Print derived baseline thresholds (Tab. I style)
                   --deployment D --trace T --rps R
     explain     Re-run one scenario with the decision audit ring enabled
-                  and print the control plane's applied/rejected actions
+                  and print the control plane's applied/rejected actions,
+                  each correlated with the telemetry sample it saw
                   [same flags as simulate] [--last N] [--ring N]
+                  [--since T] [--until T] [--instance ID] [--action KIND]
+                  [--sample-s S] [--json]
     policy      Policy-registry tooling
                   policy list   Print registered control planes (name,
                                 aliases, description, tunable params)
@@ -45,6 +49,17 @@ SUBCOMMANDS:
                       [--gpu-tolerance F]
                       Compare two normalized reports; nonzero exit on
                       regression
+    obs         Telemetry tooling (see docs/observability.md)
+                  obs export [same flags as simulate] [--format F]
+                      [--out FILE] [--sample-s S] [--span-n N]
+                      [--obs-seed N]
+                      Re-run one cell with telemetry armed and export
+                      one artifact: F = perfetto (Chrome trace-event
+                      JSON, the default), csv (flat span rows),
+                      timeline (columnar cluster samples) or prom
+                      (Prometheus exposition snapshot)
+                  obs summary [same flags as simulate] [--last N]
+                      Print the captured timeline and span-chain health
     sim         Simulation checkpoint tooling (see docs/checkpoints.md)
                   sim checkpoint [same flags as simulate] [--at T]
                       [--every S] [--out FILE]
@@ -89,6 +104,7 @@ pub fn run_cli(argv: Vec<String>) -> i32 {
         "explain" => cmd_explain(&args),
         "policy" => cmd_policy(&args),
         "bench" => super::bench::cmd_bench(&args),
+        "obs" => super::obs::cmd_obs(&args),
         "sim" => super::sim::cmd_sim(&args),
         "profile" => cmd_profile(&args),
         "thresholds" => cmd_thresholds(&args),
@@ -145,10 +161,11 @@ pub(crate) fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> 
     Ok(cfg)
 }
 
-fn run_one_with(
+pub(crate) fn run_one_with(
     cfg: &ExperimentConfig,
     policy: PolicyKind,
     decision_log: usize,
+    observe: Option<crate::obs::ObserveConfig>,
 ) -> anyhow::Result<crate::report::ExperimentResult> {
     let dep = deployment(&cfg.deployment)
         .ok_or_else(|| anyhow::anyhow!("unknown deployment"))?;
@@ -159,6 +176,7 @@ fn run_one_with(
         predictor_accuracy: cfg.predictor_accuracy,
         warmup_s: cfg.warmup_s,
         decision_log,
+        observe,
         ..Default::default()
     };
     // The trace is owned here — hand it to the spec without a deep copy.
@@ -169,10 +187,10 @@ fn run_one_with(
 }
 
 fn run_one(cfg: &ExperimentConfig, policy: PolicyKind) -> anyhow::Result<crate::report::ExperimentResult> {
-    run_one_with(cfg, policy, 0)
+    run_one_with(cfg, policy, 0, None)
 }
 
-fn parse_policy(name: &str) -> anyhow::Result<PolicyKind> {
+pub(crate) fn parse_policy(name: &str) -> anyhow::Result<PolicyKind> {
     PolicyKind::parse(name).ok_or_else(|| {
         anyhow::anyhow!("unknown policy `{name}` (see `tokenscale policy list`)")
     })
@@ -230,17 +248,95 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The instance an action targets, when it targets exactly one (fleet
+/// resizes don't), for the `explain --instance` filter.
+fn action_instance(a: &crate::sim::Action) -> Option<crate::sim::InstanceId> {
+    use crate::sim::Action;
+    match a {
+        Action::RoutePrefill { target, .. } => Some(*target),
+        Action::DeflectPrefill { decoder, .. }
+        | Action::DispatchDecode { decoder, .. }
+        | Action::Convert { decoder }
+        | Action::Revert { decoder } => Some(*decoder),
+        Action::Drain { instance } | Action::Fault { instance, .. } => Some(*instance),
+        Action::SetFleet { .. } => None,
+    }
+}
+
 fn cmd_explain(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from_args(args)?;
     let policy = parse_policy(&cfg.policy)?;
     let ring = args.get_usize("ring")?.unwrap_or(4096);
     let last = args.get_usize("last")?.unwrap_or(40);
-    let res = run_one_with(&cfg, policy, ring.max(1))?;
+    // Arm a timeline-only telemetry pass (passive by the `crate::obs`
+    // contract) so every record carries the sample the policy saw.
+    let observe = crate::obs::ObserveConfig {
+        span_sample_n: 0,
+        sinks: vec![],
+        ..super::obs::observe_from_args(args)?
+    };
+    let res = run_one_with(&cfg, policy, ring.max(1), Some(observe))?;
     let log = res
         .sim
         .decisions
         .as_ref()
         .ok_or_else(|| anyhow::anyhow!("decision log missing (ring size 0?)"))?;
+    let timeline = res.sim.obs.as_ref().map(|o| &o.timeline);
+
+    let since = args.get_f64("since")?;
+    let until = args.get_f64("until")?;
+    let instance = args.get("instance");
+    let action = args.get("action");
+    let filtered: Vec<crate::sim::DecisionRecord> = log
+        .iter()
+        .filter(|r| {
+            since.is_none_or(|t| r.t >= t)
+                && until.is_none_or(|t| r.t <= t)
+                && action.is_none_or(|a| r.action.label() == a)
+                && instance.is_none_or(|id| {
+                    action_instance(&r.action).is_some_and(|i| i.to_string() == id)
+                })
+        })
+        .copied()
+        .collect();
+
+    if args.get_bool("json") {
+        let mut records: Vec<Json> = Vec::with_capacity(filtered.len());
+        for rec in &filtered {
+            let (status, reason) = match rec.outcome {
+                crate::sim::ActionOutcome::Applied => ("applied", None),
+                crate::sim::ActionOutcome::Clamped(r) => ("clamped", Some(r.label())),
+                crate::sim::ActionOutcome::Rejected(r) => ("rejected", Some(r.label())),
+            };
+            let mut j = Json::obj()
+                .set("t", rec.t)
+                .set("signal", rec.signal.label())
+                .set("action", rec.action.label())
+                .set("detail", rec.action.to_string())
+                .set("status", status);
+            if let Some(reason) = reason {
+                j = j.set("reason", reason);
+            }
+            if let Some(s) = rec.sample {
+                j = j.set("sample", s as usize);
+                if let Some(sample) = timeline.and_then(|tl| tl.get(s)) {
+                    let mut saw = Json::obj();
+                    for (name, v) in crate::obs::timeline::COLUMNS.iter().zip(sample.values()) {
+                        saw = saw.set(name, v);
+                    }
+                    j = j.set("saw", saw);
+                }
+            }
+            records.push(j);
+        }
+        let doc = Json::obj()
+            .set("total_seen", log.total_seen() as f64)
+            .set("retained", log.len())
+            .set("matched", filtered.len())
+            .set("records", Json::Arr(records));
+        println!("{}", doc.pretty());
+        return Ok(());
+    }
 
     println!(
         "== decision audit | {} | {} | {} @ {} rps for {}s ==",
@@ -270,9 +366,29 @@ fn cmd_explain(args: &Args) -> anyhow::Result<()> {
     for (label, n) in &per_action {
         println!("  - {label:<18}: {n}");
     }
-    println!("last {} decisions:", last.min(log.len()));
-    for rec in log.tail(last) {
+    let filters_on = since.is_some() || until.is_some() || instance.is_some() || action.is_some();
+    if filters_on {
+        println!(
+            "filters            : {} of {} retained decisions match",
+            filtered.len(),
+            log.len()
+        );
+    }
+    println!("last {} decisions:", last.min(filtered.len()));
+    let skip = filtered.len().saturating_sub(last);
+    let mut shown_sample: Option<u32> = None;
+    for rec in &filtered[skip..] {
         println!("  {}", rec.line());
+        // Correlate with the telemetry sample current at decision time,
+        // printed once per sample so bursts of decisions stay readable.
+        if let Some(s) = rec.sample {
+            if shown_sample != Some(s) {
+                shown_sample = Some(s);
+                if let Some(sample) = timeline.and_then(|tl| tl.get(s)) {
+                    println!("      saw: {}", sample.line());
+                }
+            }
+        }
     }
     Ok(())
 }

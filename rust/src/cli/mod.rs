@@ -4,6 +4,7 @@
 pub mod args;
 pub mod bench;
 pub mod commands;
+pub mod obs;
 pub mod sim;
 
 pub use args::Args;

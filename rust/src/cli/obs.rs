@@ -1,0 +1,176 @@
+//! `tokenscale obs export | summary` — one-off telemetry capture.
+//!
+//! Both actions re-run a single scenario cell (the simulate-style flags)
+//! with the observe subsystem armed, then either export one artifact
+//! (`export --format perfetto|csv|timeline|prom`, to `--out` or stdout)
+//! or print a human summary of the captured timeline and span chains
+//! (`summary`). Arming telemetry never perturbs the run: the simulated
+//! trajectory is bit-identical to an unobserved run (the passivity
+//! contract in `crate::obs`), so the exported artifacts describe exactly
+//! the run `tokenscale simulate` would have produced.
+
+use super::args::Args;
+use crate::metrics::PromRegistry;
+use crate::obs::{span, ObserveConfig, SpanKind};
+use crate::util::table::pct;
+
+pub fn cmd_obs(args: &Args) -> anyhow::Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("export") => obs_export(args),
+        Some("summary") => obs_summary(args),
+        other => anyhow::bail!(
+            "obs needs an action: export|summary (got {:?})",
+            other.unwrap_or("none")
+        ),
+    }
+}
+
+/// Observe settings from the shared telemetry flags (`--sample-s`,
+/// `--span-n`, `--obs-seed`), starting from the subsystem defaults.
+pub(crate) fn observe_from_args(args: &Args) -> anyhow::Result<ObserveConfig> {
+    let mut cfg = ObserveConfig::default();
+    if let Some(v) = args.get_f64("sample-s")? {
+        cfg.sample_s = v;
+    }
+    if let Some(v) = args.get_usize("span-n")? {
+        cfg.span_sample_n = v as u64;
+    }
+    if let Some(v) = args.get_usize("obs-seed")? {
+        cfg.seed = v as u64;
+    }
+    cfg.validate()
+        .map_err(|reason| anyhow::anyhow!("observe config: {reason}"))?;
+    Ok(cfg)
+}
+
+/// Run the cell described by the simulate-style flags with telemetry on.
+fn run_observed(
+    args: &Args,
+) -> anyhow::Result<(
+    crate::config::ExperimentConfig,
+    crate::report::PolicyKind,
+    crate::report::ExperimentResult,
+)> {
+    let cfg = super::commands::config_from_args(args)?;
+    let policy = super::commands::parse_policy(&cfg.policy)?;
+    let observe = observe_from_args(args)?;
+    let res = super::commands::run_one_with(&cfg, policy, 0, Some(observe))?;
+    Ok((cfg, policy, res))
+}
+
+fn obs_export(args: &Args) -> anyhow::Result<()> {
+    let (cfg, policy, res) = run_observed(args)?;
+    let obs = res
+        .sim
+        .obs
+        .as_ref()
+        .expect("observe was armed, telemetry state must exist");
+    let format = args.get("format").unwrap_or("perfetto");
+    let text = match format {
+        "perfetto" => crate::obs::perfetto(&obs.spans).pretty(),
+        "csv" => crate::obs::spans_csv(&obs.spans),
+        "timeline" => obs.timeline.to_json().pretty(),
+        "prom" => {
+            let mut reg = PromRegistry::new();
+            if let Some(last) = obs.timeline.samples.last() {
+                last.to_prom(&mut reg);
+            }
+            res.report
+                .to_prom(&mut reg, &[("policy", policy.name()), ("trace", cfg.trace.as_str())]);
+            reg.render()
+        }
+        other => anyhow::bail!(
+            "unknown --format `{other}` (expected perfetto, csv, timeline or prom)"
+        ),
+    };
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)
+                .map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))?;
+            eprintln!(
+                "wrote {path} ({format}, {} span events, {} timeline samples)",
+                obs.spans.len(),
+                obs.timeline.len()
+            );
+            if format == "perfetto" {
+                eprintln!("open it at https://ui.perfetto.dev or chrome://tracing");
+            }
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+fn obs_summary(args: &Args) -> anyhow::Result<()> {
+    let (cfg, policy, res) = run_observed(args)?;
+    let obs = res
+        .sim
+        .obs
+        .as_ref()
+        .expect("observe was armed, telemetry state must exist");
+    println!(
+        "== telemetry summary | {} | {} | {} @ {} rps for {}s ==",
+        policy.name(),
+        cfg.deployment,
+        cfg.trace,
+        cfg.rps,
+        cfg.duration_s
+    );
+    println!(
+        "timeline           : {} samples every {}s",
+        obs.timeline.len(),
+        obs.timeline.sample_s
+    );
+    let chains = obs.spans.by_request();
+    println!(
+        "spans              : {} events across {} sampled requests (1 in {})",
+        obs.spans.len(),
+        chains.len(),
+        obs.cfg.span_sample_n.max(1)
+    );
+    match obs.spans.check_chains(true) {
+        Ok(()) => println!("chain invariant    : ok"),
+        Err(e) => println!("chain invariant    : VIOLATED — {e}"),
+    }
+    let mut per_kind: std::collections::BTreeMap<&'static str, usize> =
+        std::collections::BTreeMap::new();
+    let mut drops: std::collections::BTreeMap<&'static str, usize> =
+        std::collections::BTreeMap::new();
+    for ev in &obs.spans.events {
+        *per_kind.entry(ev.kind.label()).or_insert(0) += 1;
+        if ev.kind == SpanKind::Drop {
+            *drops.entry(span::drop_label(ev.aux)).or_insert(0) += 1;
+        }
+    }
+    println!("span events        :");
+    for kind in SpanKind::ALL {
+        if let Some(n) = per_kind.get(kind.label()) {
+            println!("  - {:<16}: {n}", kind.label());
+        }
+    }
+    for (reason, n) in &drops {
+        println!("    drop[{reason}]: {n}");
+    }
+    if !chains.is_empty() {
+        let completed = obs
+            .spans
+            .events
+            .iter()
+            .filter(|e| e.kind == SpanKind::Completion)
+            .count();
+        println!(
+            "sampled outcome    : {} of chains completed",
+            pct(completed as f64 / chains.len() as f64)
+        );
+    }
+    let last = args.get_usize("last")?.unwrap_or(12);
+    let n = obs.timeline.len();
+    println!("last {} timeline samples:", last.min(n));
+    for s in obs.timeline.samples.iter().skip(n.saturating_sub(last)) {
+        println!("  {}", s.line());
+    }
+    println!(
+        "export with        : tokenscale obs export --format perfetto|csv|timeline|prom [--out FILE]"
+    );
+    Ok(())
+}

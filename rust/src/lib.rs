@@ -23,6 +23,7 @@ pub mod config;
 pub mod coordinator;
 pub mod forecast;
 pub mod metrics;
+pub mod obs;
 pub mod perfmodel;
 pub mod profiler;
 pub mod report;

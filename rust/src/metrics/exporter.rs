@@ -1,14 +1,65 @@
 //! Prometheus-text-format metric export (the paper integrates with
 //! Prometheus for compatibility with vLLM's monitoring; we emit the same
 //! exposition format so the control plane stays scrape-compatible).
+//!
+//! Three metric kinds: gauges (`set_gauge`), monotonic counters
+//! (`inc_counter`, `_total` semantics), and histograms rendered from the
+//! deterministic log-bucket sketches (`set_histogram` over a
+//! [`LogHistogram`]): cumulative `le`-labeled buckets plus `_sum` and
+//! `_count`, exactly as a Prometheus client library would emit them.
 
+use super::sketch::LogHistogram;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-/// A registry of gauges/counters rendered in Prometheus exposition format.
+type LabelSet = Vec<(String, String)>;
+
+#[derive(Clone, Debug)]
+struct HistSample {
+    /// Cumulative (upper bound, count) pairs ending with (+inf, total).
+    buckets: Vec<(f64, u64)>,
+    sum: f64,
+    count: u64,
+}
+
+#[derive(Clone, Debug)]
+enum Value {
+    Gauge(f64),
+    Counter(f64),
+    Hist(HistSample),
+}
+
+impl Value {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Value::Gauge(_) => "gauge",
+            Value::Counter(_) => "counter",
+            Value::Hist(_) => "histogram",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Family {
+    help: String,
+    samples: Vec<(LabelSet, Value)>,
+}
+
+/// A registry of gauges/counters/histograms rendered in Prometheus
+/// exposition format. Families render sorted by name; labels are
+/// canonicalized (sorted by key) at insertion.
 #[derive(Clone, Debug, Default)]
 pub struct PromRegistry {
-    gauges: BTreeMap<String, (String, Vec<(Vec<(String, String)>, f64)>)>,
+    families: BTreeMap<String, Family>,
+}
+
+fn canon(labels: &[(&str, &str)]) -> LabelSet {
+    let mut set: LabelSet = labels
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    set.sort();
+    set
 }
 
 impl PromRegistry {
@@ -16,40 +67,101 @@ impl PromRegistry {
         Self::default()
     }
 
+    fn upsert(&mut self, name: &str, help: &str, labels: &[(&str, &str)]) -> &mut Vec<(LabelSet, Value)> {
+        let fam = self
+            .families
+            .entry(name.to_string())
+            .or_insert_with(|| Family {
+                help: help.to_string(),
+                samples: Vec::new(),
+            });
+        let key = canon(labels);
+        if !fam.samples.iter().any(|(k, _)| *k == key) {
+            fam.samples.push((key, Value::Gauge(0.0)));
+        }
+        &mut fam.samples
+    }
+
+    fn slot(&mut self, name: &str, help: &str, labels: &[(&str, &str)]) -> &mut Value {
+        let key = canon(labels);
+        let samples = self.upsert(name, help, labels);
+        &mut samples.iter_mut().find(|(k, _)| *k == key).unwrap().1
+    }
+
     /// Set a gauge value with labels; replaces any previous sample with the
     /// same label set.
     pub fn set_gauge(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
-        let entry = self
-            .gauges
-            .entry(name.to_string())
-            .or_insert_with(|| (help.to_string(), Vec::new()));
-        let key: Vec<(String, String)> = labels
-            .iter()
-            .map(|(k, v)| (k.to_string(), v.to_string()))
-            .collect();
-        if let Some(slot) = entry.1.iter_mut().find(|(k, _)| *k == key) {
-            slot.1 = value;
+        *self.slot(name, help, labels) = Value::Gauge(value);
+    }
+
+    /// Add to a monotonic counter (conventionally a `_total`-suffixed
+    /// name). Negative increments are clamped to zero: counters only go
+    /// up.
+    pub fn inc_counter(&mut self, name: &str, help: &str, labels: &[(&str, &str)], by: f64) {
+        debug_assert!(by >= 0.0, "counter increment must be non-negative, got {by}");
+        let slot = self.slot(name, help, labels);
+        let prev = match slot {
+            Value::Counter(v) => *v,
+            _ => 0.0,
+        };
+        *slot = Value::Counter(prev + by.max(0.0));
+    }
+
+    /// Set a histogram sample from a deterministic log-bucket sketch:
+    /// cumulative `le` buckets over the occupied sketch buckets, plus
+    /// exact `_sum` and `_count`.
+    pub fn set_histogram(&mut self, name: &str, help: &str, labels: &[(&str, &str)], h: &LogHistogram) {
+        *self.slot(name, help, labels) = Value::Hist(HistSample {
+            buckets: h.cumulative(),
+            sum: h.sum,
+            count: h.count,
+        });
+    }
+
+    fn label_text(labels: &LabelSet, extra: Option<(&str, &str)>) -> String {
+        let mut parts: Vec<String> = labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+        if let Some((k, v)) = extra {
+            parts.push(format!("{k}=\"{v}\""));
+        }
+        if parts.is_empty() {
+            String::new()
         } else {
-            entry.1.push((key, value));
+            format!("{{{}}}", parts.join(","))
         }
     }
 
     /// Render the exposition text.
     pub fn render(&self) -> String {
         let mut out = String::new();
-        for (name, (help, samples)) in &self.gauges {
-            let _ = writeln!(out, "# HELP {name} {help}");
-            let _ = writeln!(out, "# TYPE {name} gauge");
-            for (labels, value) in samples {
-                if labels.is_empty() {
-                    let _ = writeln!(out, "{name} {value}");
-                } else {
-                    let lab = labels
-                        .iter()
-                        .map(|(k, v)| format!("{k}=\"{v}\""))
-                        .collect::<Vec<_>>()
-                        .join(",");
-                    let _ = writeln!(out, "{name}{{{lab}}} {value}");
+        for (name, fam) in &self.families {
+            let kind = fam
+                .samples
+                .first()
+                .map_or("gauge", |(_, v)| v.type_name());
+            let _ = writeln!(out, "# HELP {name} {}", fam.help);
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            for (labels, value) in &fam.samples {
+                match value {
+                    Value::Gauge(v) | Value::Counter(v) => {
+                        let _ = writeln!(out, "{name}{} {v}", Self::label_text(labels, None));
+                    }
+                    Value::Hist(h) => {
+                        for (ub, cum) in &h.buckets {
+                            let le = if ub.is_finite() {
+                                format!("{ub}")
+                            } else {
+                                "+Inf".to_string()
+                            };
+                            let _ = writeln!(
+                                out,
+                                "{name}_bucket{} {cum}",
+                                Self::label_text(labels, Some(("le", &le)))
+                            );
+                        }
+                        let _ = writeln!(out, "{name}_sum{} {}", Self::label_text(labels, None), h.sum);
+                        let _ =
+                            writeln!(out, "{name}_count{} {}", Self::label_text(labels, None), h.count);
+                    }
                 }
             }
         }
@@ -85,5 +197,57 @@ mod tests {
         let text = r.render();
         assert_eq!(text.matches("g{a=\"b\"}").count(), 1);
         assert!(text.contains("g{a=\"b\"} 2"));
+    }
+
+    #[test]
+    fn counters_accumulate_monotonically() {
+        let mut r = PromRegistry::new();
+        r.inc_counter("reqs_total", "Requests", &[("policy", "ts")], 3.0);
+        r.inc_counter("reqs_total", "Requests", &[("policy", "ts")], 4.0);
+        r.inc_counter("reqs_total", "Requests", &[("policy", "other")], 1.0);
+        let text = r.render();
+        assert!(text.contains("# TYPE reqs_total counter"));
+        assert!(text.contains("reqs_total{policy=\"ts\"} 7"));
+        assert!(text.contains("reqs_total{policy=\"other\"} 1"));
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_le_buckets() {
+        let mut h = LogHistogram::new();
+        for v in [0.125, 0.125, 0.5, 4.0] {
+            h.record(v);
+        }
+        let mut r = PromRegistry::new();
+        r.set_histogram("ttft_seconds", "TTFT distribution", &[], &h);
+        let text = r.render();
+        assert!(text.contains("# TYPE ttft_seconds histogram"));
+        assert!(text.contains("ttft_seconds_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("ttft_seconds_sum 4.75"));
+        assert!(text.contains("ttft_seconds_count 4"));
+        // Cumulative counts are non-decreasing down the bucket list.
+        let counts: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("ttft_seconds_bucket"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(counts.len(), 4); // 3 occupied buckets + +Inf
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*counts.last().unwrap(), 4);
+        // The 0.125 bucket's upper bound sits just above 0.125.
+        let first = text
+            .lines()
+            .find(|l| l.starts_with("ttft_seconds_bucket"))
+            .unwrap();
+        assert!(first.contains("} 2"), "two samples in the lowest bucket: {first}");
+    }
+
+    #[test]
+    fn labels_are_canonicalized() {
+        let mut r = PromRegistry::new();
+        r.set_gauge("g", "h", &[("z", "1"), ("a", "2")], 1.0);
+        r.set_gauge("g", "h", &[("a", "2"), ("z", "1")], 5.0);
+        let text = r.render();
+        assert_eq!(text.matches("g{").count(), 1);
+        assert!(text.contains("g{a=\"2\",z=\"1\"} 5"));
     }
 }

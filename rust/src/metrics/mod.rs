@@ -6,6 +6,7 @@ pub mod recorder;
 pub mod series;
 pub mod sketch;
 
+pub use exporter::PromRegistry;
 pub use recorder::{AbandonedRequest, DropReason, MetricsRecorder, RejectionCounts, SloReport};
 pub use series::TimeSeries;
 pub use sketch::{CompletionSketch, LogHistogram};

@@ -10,6 +10,7 @@
 //!   stay exact; percentiles come from deterministic log-bucket
 //!   histograms (≤2.3% relative error); memory is O(1) in trace length.
 
+use super::exporter::PromRegistry;
 use super::sketch::CompletionSketch;
 use crate::sim::policy::RejectReason;
 use crate::util::json::Json;
@@ -251,6 +252,132 @@ pub struct SloReport {
     pub cache_hit_rate: f64,
     /// Prompt tokens whose prefill was skipped thanks to warm prefixes.
     pub saved_prefill_tokens: f64,
+}
+
+impl SloReport {
+    /// Render the report into a [`PromRegistry`] under the
+    /// `tokenscale_report_*` namespace, so suite cells can expose their
+    /// end-of-run summary in the same scrape format as the live timeline
+    /// (`obs::timeline::TimelineSample::to_prom`). Latency distributions
+    /// emit quantile-labeled gauges (the percentiles the report already
+    /// carries); the failure ledger emits `_total` counters. `labels` is
+    /// attached to every sample (e.g. scenario/policy for a bench cell).
+    pub fn to_prom(&self, reg: &mut PromRegistry, labels: &[(&str, &str)]) {
+        let gauge = |reg: &mut PromRegistry, name: &str, help: &str, v: f64| {
+            reg.set_gauge(name, help, labels, v);
+        };
+        let counter = |reg: &mut PromRegistry, name: &str, help: &str, v: f64| {
+            reg.inc_counter(name, help, labels, v);
+        };
+        let summary = |reg: &mut PromRegistry, name: &str, help: &str, s: &Summary| {
+            for (q, v) in [("0.5", s.p50), ("0.9", s.p90), ("0.99", s.p99)] {
+                let mut ls: Vec<(&str, &str)> = labels.to_vec();
+                ls.push(("quantile", q));
+                reg.set_gauge(name, help, &ls, v);
+            }
+            reg.set_gauge(&format!("{name}_mean"), help, labels, s.mean);
+            reg.set_gauge(&format!("{name}_max"), help, labels, s.max);
+            reg.set_gauge(&format!("{name}_count"), help, labels, s.count as f64);
+        };
+
+        gauge(reg, "tokenscale_report_requests", "Post-warmup completed requests", self.n as f64);
+        gauge(
+            reg,
+            "tokenscale_report_ttft_attainment",
+            "Fraction of requests meeting the TTFT SLO",
+            self.ttft_attainment,
+        );
+        gauge(
+            reg,
+            "tokenscale_report_tpot_attainment",
+            "Fraction of requests meeting the TPOT SLO",
+            self.tpot_attainment,
+        );
+        gauge(
+            reg,
+            "tokenscale_report_slo_attainment",
+            "Fraction of requests meeting both SLOs",
+            self.overall_attainment,
+        );
+        gauge(
+            reg,
+            "tokenscale_report_goodput_attainment",
+            "SLO-met completions over offered (completed + dropped) requests",
+            self.goodput_attainment,
+        );
+        gauge(
+            reg,
+            "tokenscale_report_avg_gpus",
+            "Time-averaged GPU count over the horizon",
+            self.avg_gpus,
+        );
+        gauge(
+            reg,
+            "tokenscale_report_cache_hit_rate",
+            "Prefix-cache lookup hit rate",
+            self.cache_hit_rate,
+        );
+        summary(
+            reg,
+            "tokenscale_report_ttft_seconds",
+            "Time-to-first-token distribution",
+            &self.ttft,
+        );
+        summary(
+            reg,
+            "tokenscale_report_tpot_seconds",
+            "Time-per-output-token distribution",
+            &self.tpot,
+        );
+        summary(
+            reg,
+            "tokenscale_report_prefill_wait_seconds",
+            "Arrival to prefill-done latency distribution",
+            &self.prefill_wait,
+        );
+        summary(
+            reg,
+            "tokenscale_report_queue_wait_seconds",
+            "Arrival to prefill-start (pure queueing) distribution",
+            &self.queue_wait,
+        );
+        counter(
+            reg,
+            "tokenscale_report_rejected_actions_total",
+            "Control-plane actions the engine rejected or clamped",
+            self.rejected_actions as f64,
+        );
+        counter(
+            reg,
+            "tokenscale_report_faults_injected_total",
+            "Fault firings applied during the run",
+            self.faults_injected as f64,
+        );
+        counter(
+            reg,
+            "tokenscale_report_lost_requests_total",
+            "In-flight work destroyed by faults",
+            self.lost_requests as f64,
+        );
+        counter(
+            reg,
+            "tokenscale_report_abandoned_total",
+            "Post-warmup requests the gateway abandoned",
+            self.abandoned_requests as f64,
+        );
+        counter(
+            reg,
+            "tokenscale_report_transfer_retries_total",
+            "KVC transfer timeouts that were retried",
+            self.transfer_retries as f64,
+        );
+        counter(
+            reg,
+            "tokenscale_report_wasted_prefill_tokens_total",
+            "Prompt tokens re-prefilled because of churn",
+            self.wasted_prefill_tokens,
+        );
+    }
 }
 
 impl MetricsRecorder {
@@ -949,5 +1076,149 @@ mod tests {
         m.record(c(0.0, 100, 0.1, 0.05));
         let r = m.report(&SloPolicy::default(), 0.0);
         assert_eq!(r.rejected_actions, 3);
+    }
+
+    #[test]
+    fn slo_report_prom_exposition_is_pinned() {
+        // Byte-for-byte pin of the exposition render: any change to metric
+        // names, label canonicalization, family ordering, or value
+        // formatting must show up here (scrape dashboards key on these).
+        let report = SloReport {
+            n: 4,
+            ttft_attainment: 0.75,
+            tpot_attainment: 1.0,
+            overall_attainment: 0.75,
+            goodput_attainment: 0.5,
+            avg_gpus: 2.5,
+            cache_hit_rate: 0.25,
+            ttft: Summary {
+                count: 4,
+                mean: 0.25,
+                p50: 0.2,
+                p90: 0.4,
+                p99: 0.5,
+                max: 0.5,
+            },
+            rejected_actions: 1,
+            faults_injected: 2,
+            abandoned_requests: 3,
+            transfer_retries: 5,
+            wasted_prefill_tokens: 128.0,
+            ..SloReport::default()
+        };
+        let mut reg = PromRegistry::new();
+        report.to_prom(&mut reg, &[]);
+        let expected = "\
+# HELP tokenscale_report_abandoned_total Post-warmup requests the gateway abandoned
+# TYPE tokenscale_report_abandoned_total counter
+tokenscale_report_abandoned_total 3
+# HELP tokenscale_report_avg_gpus Time-averaged GPU count over the horizon
+# TYPE tokenscale_report_avg_gpus gauge
+tokenscale_report_avg_gpus 2.5
+# HELP tokenscale_report_cache_hit_rate Prefix-cache lookup hit rate
+# TYPE tokenscale_report_cache_hit_rate gauge
+tokenscale_report_cache_hit_rate 0.25
+# HELP tokenscale_report_faults_injected_total Fault firings applied during the run
+# TYPE tokenscale_report_faults_injected_total counter
+tokenscale_report_faults_injected_total 2
+# HELP tokenscale_report_goodput_attainment SLO-met completions over offered (completed + dropped) requests
+# TYPE tokenscale_report_goodput_attainment gauge
+tokenscale_report_goodput_attainment 0.5
+# HELP tokenscale_report_lost_requests_total In-flight work destroyed by faults
+# TYPE tokenscale_report_lost_requests_total counter
+tokenscale_report_lost_requests_total 0
+# HELP tokenscale_report_prefill_wait_seconds Arrival to prefill-done latency distribution
+# TYPE tokenscale_report_prefill_wait_seconds gauge
+tokenscale_report_prefill_wait_seconds{quantile=\"0.5\"} 0
+tokenscale_report_prefill_wait_seconds{quantile=\"0.9\"} 0
+tokenscale_report_prefill_wait_seconds{quantile=\"0.99\"} 0
+# HELP tokenscale_report_prefill_wait_seconds_count Arrival to prefill-done latency distribution
+# TYPE tokenscale_report_prefill_wait_seconds_count gauge
+tokenscale_report_prefill_wait_seconds_count 0
+# HELP tokenscale_report_prefill_wait_seconds_max Arrival to prefill-done latency distribution
+# TYPE tokenscale_report_prefill_wait_seconds_max gauge
+tokenscale_report_prefill_wait_seconds_max 0
+# HELP tokenscale_report_prefill_wait_seconds_mean Arrival to prefill-done latency distribution
+# TYPE tokenscale_report_prefill_wait_seconds_mean gauge
+tokenscale_report_prefill_wait_seconds_mean 0
+# HELP tokenscale_report_queue_wait_seconds Arrival to prefill-start (pure queueing) distribution
+# TYPE tokenscale_report_queue_wait_seconds gauge
+tokenscale_report_queue_wait_seconds{quantile=\"0.5\"} 0
+tokenscale_report_queue_wait_seconds{quantile=\"0.9\"} 0
+tokenscale_report_queue_wait_seconds{quantile=\"0.99\"} 0
+# HELP tokenscale_report_queue_wait_seconds_count Arrival to prefill-start (pure queueing) distribution
+# TYPE tokenscale_report_queue_wait_seconds_count gauge
+tokenscale_report_queue_wait_seconds_count 0
+# HELP tokenscale_report_queue_wait_seconds_max Arrival to prefill-start (pure queueing) distribution
+# TYPE tokenscale_report_queue_wait_seconds_max gauge
+tokenscale_report_queue_wait_seconds_max 0
+# HELP tokenscale_report_queue_wait_seconds_mean Arrival to prefill-start (pure queueing) distribution
+# TYPE tokenscale_report_queue_wait_seconds_mean gauge
+tokenscale_report_queue_wait_seconds_mean 0
+# HELP tokenscale_report_rejected_actions_total Control-plane actions the engine rejected or clamped
+# TYPE tokenscale_report_rejected_actions_total counter
+tokenscale_report_rejected_actions_total 1
+# HELP tokenscale_report_requests Post-warmup completed requests
+# TYPE tokenscale_report_requests gauge
+tokenscale_report_requests 4
+# HELP tokenscale_report_slo_attainment Fraction of requests meeting both SLOs
+# TYPE tokenscale_report_slo_attainment gauge
+tokenscale_report_slo_attainment 0.75
+# HELP tokenscale_report_tpot_attainment Fraction of requests meeting the TPOT SLO
+# TYPE tokenscale_report_tpot_attainment gauge
+tokenscale_report_tpot_attainment 1
+# HELP tokenscale_report_tpot_seconds Time-per-output-token distribution
+# TYPE tokenscale_report_tpot_seconds gauge
+tokenscale_report_tpot_seconds{quantile=\"0.5\"} 0
+tokenscale_report_tpot_seconds{quantile=\"0.9\"} 0
+tokenscale_report_tpot_seconds{quantile=\"0.99\"} 0
+# HELP tokenscale_report_tpot_seconds_count Time-per-output-token distribution
+# TYPE tokenscale_report_tpot_seconds_count gauge
+tokenscale_report_tpot_seconds_count 0
+# HELP tokenscale_report_tpot_seconds_max Time-per-output-token distribution
+# TYPE tokenscale_report_tpot_seconds_max gauge
+tokenscale_report_tpot_seconds_max 0
+# HELP tokenscale_report_tpot_seconds_mean Time-per-output-token distribution
+# TYPE tokenscale_report_tpot_seconds_mean gauge
+tokenscale_report_tpot_seconds_mean 0
+# HELP tokenscale_report_transfer_retries_total KVC transfer timeouts that were retried
+# TYPE tokenscale_report_transfer_retries_total counter
+tokenscale_report_transfer_retries_total 5
+# HELP tokenscale_report_ttft_attainment Fraction of requests meeting the TTFT SLO
+# TYPE tokenscale_report_ttft_attainment gauge
+tokenscale_report_ttft_attainment 0.75
+# HELP tokenscale_report_ttft_seconds Time-to-first-token distribution
+# TYPE tokenscale_report_ttft_seconds gauge
+tokenscale_report_ttft_seconds{quantile=\"0.5\"} 0.2
+tokenscale_report_ttft_seconds{quantile=\"0.9\"} 0.4
+tokenscale_report_ttft_seconds{quantile=\"0.99\"} 0.5
+# HELP tokenscale_report_ttft_seconds_count Time-to-first-token distribution
+# TYPE tokenscale_report_ttft_seconds_count gauge
+tokenscale_report_ttft_seconds_count 4
+# HELP tokenscale_report_ttft_seconds_max Time-to-first-token distribution
+# TYPE tokenscale_report_ttft_seconds_max gauge
+tokenscale_report_ttft_seconds_max 0.5
+# HELP tokenscale_report_ttft_seconds_mean Time-to-first-token distribution
+# TYPE tokenscale_report_ttft_seconds_mean gauge
+tokenscale_report_ttft_seconds_mean 0.25
+# HELP tokenscale_report_wasted_prefill_tokens_total Prompt tokens re-prefilled because of churn
+# TYPE tokenscale_report_wasted_prefill_tokens_total counter
+tokenscale_report_wasted_prefill_tokens_total 128
+";
+        assert_eq!(reg.render(), expected);
+    }
+
+    #[test]
+    fn slo_report_prom_labels_ride_on_every_sample() {
+        let mut reg = PromRegistry::new();
+        SloReport::default().to_prom(&mut reg, &[("policy", "tokenscale")]);
+        let text = reg.render();
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(
+                line.contains("policy=\"tokenscale\""),
+                "unlabeled sample: {line}"
+            );
+        }
+        assert!(text.contains("{policy=\"tokenscale\",quantile=\"0.99\"}"));
     }
 }

@@ -94,9 +94,41 @@ fn representative(bucket: u32, observed_max: f64) -> f64 {
     f64::from_bits(bits)
 }
 
+/// Exclusive upper bound of a bucket (the next sub-bucket boundary).
+/// The bit arithmetic naturally carries from the last sub-bucket of a
+/// decade into the next decade's first boundary (2^(decade+1)).
+fn bucket_upper(bucket: u32) -> f64 {
+    if bucket == 0 {
+        return f64::from_bits(((E_MIN + 1023) as u64) << 52); // 2^E_MIN
+    }
+    if bucket as usize == NBUCKETS - 1 {
+        return f64::INFINITY;
+    }
+    let b = bucket - 1;
+    let decade = (b / SUBS as u32) as i32 + E_MIN;
+    let sub = (b % SUBS as u32) as u64;
+    f64::from_bits((((decade + 1023) as u64) << 52) + ((sub + 1) << 47))
+}
+
 impl LogHistogram {
     pub fn new() -> LogHistogram {
         LogHistogram::default()
+    }
+
+    /// Cumulative (upper bound, count) pairs over the occupied buckets,
+    /// always ending with `(+inf, total)` — the shape a Prometheus
+    /// histogram exposition wants (`metrics::exporter`).
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.counts.len() + 1);
+        let mut cum = 0u64;
+        for &(b, n) in &self.counts {
+            cum += n;
+            out.push((bucket_upper(b), cum));
+        }
+        if out.last().is_none_or(|(ub, _)| ub.is_finite()) {
+            out.push((f64::INFINITY, cum));
+        }
+        out
     }
 
     pub fn record(&mut self, v: f64) {

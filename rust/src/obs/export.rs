@@ -1,0 +1,288 @@
+//! Span exporters: Chrome/Perfetto trace-event JSON and flat CSV.
+//!
+//! The Perfetto render maps the PD-disaggregated pipeline onto the
+//! trace-event process/thread model: one *process* per stage (gateway,
+//! prefiller, decoder, convertible, kv-link), one *thread* per instance
+//! slot within it. Stage occupancy renders as complete (`"X"`) slices;
+//! gateway queueing renders as per-request async (`"b"`/`"e"`) spans so
+//! thousands of concurrently queued requests don't need fake threads;
+//! arrivals, transfer retries and drops render as instants (`"i"`).
+//! Open docs/observability.md for the ui.perfetto.dev how-to.
+
+use super::span::{drop_label, role_label, SpanEvent, SpanKind, SpanLog};
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// Trace-event process ids per pipeline stage.
+const PID_GATEWAY: usize = 1;
+const PID_PREFILLER: usize = 2;
+const PID_DECODER: usize = 3;
+const PID_CONVERTIBLE: usize = 4;
+const PID_LINK: usize = 5;
+
+fn role_pid(role: u8) -> usize {
+    match role {
+        super::span::ROLE_PREFILLER => PID_PREFILLER,
+        super::span::ROLE_DECODER => PID_DECODER,
+        super::span::ROLE_CONVERTIBLE => PID_CONVERTIBLE,
+        _ => PID_GATEWAY,
+    }
+}
+
+fn us(t: f64) -> f64 {
+    t * 1e6
+}
+
+fn meta(pid: usize, name: &str) -> Json {
+    Json::obj()
+        .set("name", "process_name")
+        .set("ph", "M")
+        .set("pid", pid)
+        .set("tid", 0usize)
+        .set("args", Json::obj().set("name", name))
+}
+
+fn slice(name: &str, t0: f64, t1: f64, pid: usize, tid: i64, req: u64) -> Json {
+    Json::obj()
+        .set("name", name)
+        .set("cat", "req")
+        .set("ph", "X")
+        .set("ts", us(t0))
+        .set("dur", us(t1 - t0))
+        .set("pid", pid)
+        .set("tid", tid)
+        .set("args", Json::obj().set("req", Json::Num(req as f64)))
+}
+
+fn instant(name: &str, ev: &SpanEvent, pid: usize, tid: i64) -> Json {
+    Json::obj()
+        .set("name", name)
+        .set("cat", "req")
+        .set("ph", "i")
+        .set("s", "t")
+        .set("ts", us(ev.t))
+        .set("pid", pid)
+        .set("tid", tid)
+        .set("args", Json::obj().set("req", Json::Num(ev.req as f64)))
+}
+
+fn async_ev(ph: &str, name: &str, t: f64, id: u64) -> Json {
+    Json::obj()
+        .set("name", name)
+        .set("cat", "queue")
+        .set("ph", ph)
+        .set("ts", us(t))
+        .set("pid", PID_GATEWAY)
+        .set("tid", 0usize)
+        .set("id", Json::Num(id as f64))
+}
+
+/// Render a span log as Chrome trace-event JSON
+/// (`{"traceEvents": [...], "displayTimeUnit": "ms"}`).
+pub fn perfetto(spans: &SpanLog) -> Json {
+    let mut events: Vec<Json> = vec![
+        meta(PID_GATEWAY, "gateway"),
+        meta(PID_PREFILLER, "prefillers"),
+        meta(PID_DECODER, "decoders"),
+        meta(PID_CONVERTIBLE, "convertible-decoders"),
+        meta(PID_LINK, "kv-link"),
+    ];
+    for (req, evs) in spans.by_request() {
+        // Sequential pairing state; faults can abandon an open stage, in
+        // which case the pending open is discarded (the re-queue opens a
+        // fresh one).
+        let mut queue_open: Option<f64> = None;
+        let mut prefill_open: Option<&SpanEvent> = None;
+        let mut transfer_open: Option<&SpanEvent> = None;
+        let mut decode_open: Option<&SpanEvent> = None;
+        for ev in &evs {
+            match ev.kind {
+                SpanKind::Arrival => {
+                    events.push(instant("arrival", ev, PID_GATEWAY, 0));
+                }
+                SpanKind::QueueEnter => {
+                    if queue_open.is_none() {
+                        queue_open = Some(ev.t);
+                        events.push(async_ev("b", "queued", ev.t, req));
+                    }
+                }
+                SpanKind::Route => {
+                    if queue_open.take().is_some() {
+                        events.push(async_ev("e", "queued", ev.t, req));
+                    }
+                    prefill_open = None;
+                }
+                SpanKind::PrefillStart => prefill_open = Some(ev),
+                SpanKind::PrefillDone => {
+                    if let Some(open) = prefill_open.take() {
+                        events.push(slice(
+                            "prefill",
+                            open.t,
+                            ev.t,
+                            role_pid(open.role),
+                            open.slot,
+                            req,
+                        ));
+                    }
+                }
+                SpanKind::TransferStart => transfer_open = Some(ev),
+                SpanKind::TransferRetry => {
+                    events.push(instant("transfer-retry", ev, PID_LINK, ev.slot));
+                }
+                SpanKind::TransferDone => {
+                    if let Some(open) = transfer_open.take() {
+                        events.push(slice("kvc-transfer", open.t, ev.t, PID_LINK, open.slot, req));
+                    }
+                }
+                SpanKind::DecodeDispatch => decode_open = Some(ev),
+                SpanKind::Completion => {
+                    if let Some(open) = decode_open.take() {
+                        events.push(slice(
+                            "decode",
+                            open.t,
+                            ev.t,
+                            role_pid(open.role),
+                            open.slot,
+                            req,
+                        ));
+                    }
+                }
+                SpanKind::Drop => {
+                    if queue_open.take().is_some() {
+                        events.push(async_ev("e", "queued", ev.t, req));
+                    }
+                    events.push(instant(drop_label(ev.aux), ev, PID_GATEWAY, 0));
+                }
+            }
+        }
+        // A checkpoint-time export can hold an unclosed queue span; emit
+        // the end at the last seen event so the JSON stays well-formed.
+        if queue_open.is_some() {
+            if let Some(last) = evs.last() {
+                events.push(async_ev("e", "queued", last.t, req));
+            }
+        }
+    }
+    Json::obj()
+        .set("traceEvents", Json::Arr(events))
+        .set("displayTimeUnit", "ms")
+}
+
+/// Flat CSV render: one row per span event.
+pub fn spans_csv(spans: &SpanLog) -> String {
+    let mut out = String::from("req,t_s,event,role,slot,aux\n");
+    for e in &spans.events {
+        let _ = writeln!(
+            out,
+            "{},{:.9},{},{},{},{}",
+            e.req,
+            e.t,
+            e.kind.label(),
+            role_label(e.role),
+            e.slot,
+            e.aux
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{ROLE_DECODER, ROLE_NONE, ROLE_PREFILLER};
+
+    fn log() -> SpanLog {
+        let mut l = SpanLog::default();
+        let ev = |t: f64, kind: SpanKind, role: u8, slot: i64, aux: u32| SpanEvent {
+            t,
+            req: 7,
+            kind,
+            role,
+            slot,
+            aux,
+        };
+        l.push(ev(0.0, SpanKind::Arrival, ROLE_NONE, -1, 0));
+        l.push(ev(0.0, SpanKind::QueueEnter, ROLE_NONE, -1, 0));
+        l.push(ev(0.2, SpanKind::Route, ROLE_PREFILLER, 0, 0));
+        l.push(ev(0.3, SpanKind::PrefillStart, ROLE_PREFILLER, 0, 0));
+        l.push(ev(0.9, SpanKind::PrefillDone, ROLE_PREFILLER, 0, 0));
+        l.push(ev(0.9, SpanKind::TransferStart, ROLE_DECODER, 1, 0));
+        l.push(ev(1.0, SpanKind::TransferRetry, ROLE_DECODER, 1, 1));
+        l.push(ev(1.1, SpanKind::TransferDone, ROLE_DECODER, 1, 0));
+        l.push(ev(1.1, SpanKind::DecodeDispatch, ROLE_DECODER, 1, 0));
+        l.push(ev(3.5, SpanKind::Completion, ROLE_DECODER, 1, 64));
+        l
+    }
+
+    #[test]
+    fn perfetto_is_valid_trace_event_json() {
+        let j = perfetto(&log());
+        // Round-trips through the JSON parser: structurally valid.
+        let back = Json::parse(&j.pretty()).unwrap();
+        let events = back.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 5 process metadata + arrival + queue b/e + 3 slices + 1 retry.
+        assert_eq!(events.len(), 12);
+        for ev in events {
+            assert!(ev.get("ph").is_some(), "event lacks ph: {ev:?}");
+            assert!(ev.get("pid").is_some());
+        }
+        let slices: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
+        assert_eq!(slices.len(), 3);
+        let prefill = slices
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("prefill"))
+            .unwrap();
+        // 0.3s → 0.9s on prefiller slot 0.
+        assert_eq!(prefill.get("ts").and_then(Json::as_f64), Some(300_000.0));
+        assert_eq!(prefill.get("dur").and_then(Json::as_f64), Some(600_000.0));
+        assert_eq!(prefill.get("tid").and_then(Json::as_f64), Some(0.0));
+        let decode = slices
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("decode"))
+            .unwrap();
+        assert_eq!(decode.get("tid").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn dropped_request_closes_queue_span() {
+        let mut l = SpanLog::default();
+        let ev = |t: f64, kind: SpanKind| SpanEvent {
+            t,
+            req: 3,
+            kind,
+            role: ROLE_NONE,
+            slot: -1,
+            aux: 1,
+        };
+        l.push(ev(0.0, SpanKind::Arrival));
+        l.push(ev(0.0, SpanKind::QueueEnter));
+        l.push(ev(9.0, SpanKind::Drop));
+        let j = perfetto(&l);
+        let text = j.to_string();
+        assert!(text.contains("\"starved\""));
+        // The async queue span both begins and ends.
+        let events = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let b = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("b"))
+            .count();
+        let e = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("e"))
+            .count();
+        assert_eq!((b, e), (1, 1));
+    }
+
+    #[test]
+    fn csv_has_one_row_per_event() {
+        let text = spans_csv(&log());
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "req,t_s,event,role,slot,aux");
+        assert_eq!(lines.len(), 1 + 10);
+        assert!(lines[1].starts_with("7,0.000000000,arrival,-,-1,0"));
+        assert!(lines.iter().any(|l| l.contains("completion,decoder,1,64")));
+    }
+}

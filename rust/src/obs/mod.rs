@@ -1,0 +1,304 @@
+//! Deterministic, off-by-default telemetry: request-lifecycle spans,
+//! sampled cluster timelines, and decision-correlated export.
+//!
+//! The simulator's end-of-run aggregates (`SloReport`) answer *how well*
+//! a policy did; this subsystem answers *why*. Three coordinated pieces
+//! (docs/observability.md):
+//!
+//! - **Spans** ([`span`]) — each sampled request records a typed event
+//!   chain (arrival → gateway queue → route → prefill → KVC transfer
+//!   [+retries] → decode dispatch → completion / typed drop), rendered
+//!   as Chrome/Perfetto trace-event JSON or flat CSV by [`export`].
+//! - **Timeline** ([`timeline`]) — a telemetry bus the engine ticks
+//!   every `sample_s` of sim time, capturing fleet shape, queue state,
+//!   per-stage token velocity (demand vs capacity — the paper's §IV
+//!   metric over time), KV-cache health, in-flight transfers and fault
+//!   pressure. Emitted as a columnar `TIMELINE_<cell>.json` artifact
+//!   and renderable as Prometheus exposition snapshots.
+//! - **Decision correlation** — every `DecisionRecord` is stamped with
+//!   the timeline sample current at decision time, so `tokenscale
+//!   explain` can show what the policy saw when it acted.
+//!
+//! **Passivity contract.** Telemetry observes; it never perturbs. With
+//! `observe = None` the engine schedules no telemetry events, draws no
+//! RNG and allocates nothing — output stays byte-identical to a build
+//! without this module. With observe *on*, the simulation trajectory is
+//! still bit-identical to an observe-off run (enforced by test): span
+//! sampling uses a pure hash of the request id, never the workload or
+//! fault RNG streams, and timeline capture only reads engine state.
+//! Observe state rides in `SimSnapshot`, so checkpoint/resume
+//! reproduces identical artifacts.
+
+pub mod export;
+pub mod span;
+pub mod timeline;
+
+pub use export::{perfetto, spans_csv};
+pub use span::{SpanEvent, SpanKind, SpanLog};
+pub use timeline::{Timeline, TimelineSample};
+
+use crate::util::json::Json;
+
+/// Artifact sink selector for the suite/CLI layer. The engine records
+/// spans + timeline regardless; sinks choose which files get written
+/// per suite cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sink {
+    /// Columnar `TIMELINE_<cell>.json`.
+    Timeline,
+    /// Chrome trace-event JSON (`SPANS_<cell>.perfetto.json`).
+    Perfetto,
+    /// Flat span CSV (`SPANS_<cell>.csv`).
+    Csv,
+    /// Prometheus exposition snapshot (`PROM_<cell>.prom`): final
+    /// timeline sample plus the run's `SloReport::to_prom` render.
+    Prom,
+}
+
+impl Sink {
+    pub const ALL: [Sink; 4] = [Sink::Timeline, Sink::Perfetto, Sink::Csv, Sink::Prom];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Sink::Timeline => "timeline",
+            Sink::Perfetto => "perfetto",
+            Sink::Csv => "csv",
+            Sink::Prom => "prom",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<Sink> {
+        Sink::ALL.iter().copied().find(|k| k.label() == s)
+    }
+}
+
+/// Per-run telemetry configuration (the `[scenarios.observe]` block).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObserveConfig {
+    /// Timeline capture interval in sim seconds.
+    pub sample_s: f64,
+    /// Span sampling rate: record the lifecycle of 1 in N requests
+    /// (seeded, deterministic). 1 = every request; 0 = spans off
+    /// (timeline only), which keeps week-scale runs O(1) memory.
+    pub span_sample_n: u64,
+    /// Seed for the span-sampling hash. Independent of the workload and
+    /// fault seeds by construction (pure hash, no RNG stream).
+    pub seed: u64,
+    /// Artifacts to write per suite cell.
+    pub sinks: Vec<Sink>,
+}
+
+impl Default for ObserveConfig {
+    fn default() -> Self {
+        ObserveConfig {
+            sample_s: 5.0,
+            span_sample_n: 1,
+            seed: 0,
+            sinks: vec![Sink::Timeline, Sink::Perfetto],
+        }
+    }
+}
+
+impl ObserveConfig {
+    /// Typed validation (scenario loading surfaces these as
+    /// `ScenarioError::BadValue { field: "observe" }`).
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.sample_s.is_finite() || self.sample_s <= 0.0 {
+            return Err(format!("sample_s must be finite and > 0, got {}", self.sample_s));
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic 1-in-N request sampling: a splitmix64 finalizer over
+/// (seed, request id). Pure — draws from no RNG stream, so arming
+/// observation cannot shift workload or fault randomness.
+pub fn span_sampled(seed: u64, req: u64, n: u64) -> bool {
+    if n == 0 {
+        return false;
+    }
+    if n == 1 {
+        return true;
+    }
+    let mut z = seed ^ req.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    z % n == 0
+}
+
+/// Live telemetry state threaded through the engine (present exactly
+/// when `SimConfig::observe` is `Some`).
+#[derive(Clone, Debug)]
+pub struct ObsState {
+    pub cfg: ObserveConfig,
+    pub spans: SpanLog,
+    pub timeline: Timeline,
+    /// Arrival-window accumulators since the last timeline tick (token
+    /// demand for the velocity columns).
+    pub win_arrivals: u64,
+    pub win_input_tokens: u64,
+    pub win_output_tokens: u64,
+}
+
+impl ObsState {
+    pub fn new(cfg: ObserveConfig) -> ObsState {
+        let sample_s = cfg.sample_s;
+        ObsState {
+            cfg,
+            spans: SpanLog::default(),
+            timeline: Timeline::new(sample_s),
+            win_arrivals: 0,
+            win_input_tokens: 0,
+            win_output_tokens: 0,
+        }
+    }
+
+    /// Is this request's lifecycle being recorded?
+    pub fn sampled(&self, req: u64) -> bool {
+        span_sampled(self.cfg.seed, req, self.cfg.span_sample_n)
+    }
+
+    /// Record one span event if the request is sampled.
+    pub fn span(&mut self, ev: SpanEvent) {
+        if self.sampled(ev.req) {
+            self.spans.push(ev);
+        }
+    }
+
+    /// Note an arrival for the velocity-demand window.
+    pub fn note_arrival(&mut self, input_tokens: usize, output_tokens: usize) {
+        self.win_arrivals += 1;
+        self.win_input_tokens += input_tokens as u64;
+        self.win_output_tokens += output_tokens as u64;
+    }
+
+    /// Take and reset the arrival window (called at each timeline tick).
+    pub fn take_window(&mut self) -> (u64, u64, u64) {
+        let w = (self.win_arrivals, self.win_input_tokens, self.win_output_tokens);
+        self.win_arrivals = 0;
+        self.win_input_tokens = 0;
+        self.win_output_tokens = 0;
+        w
+    }
+
+    /// Index of the timeline sample current "now" (the latest captured),
+    /// for decision correlation. `None` before the first tick.
+    pub fn current_sample(&self) -> Option<u32> {
+        self.timeline.len().checked_sub(1).map(|i| i as u32)
+    }
+
+    /// Bit-exact dynamic-state serialization for checkpoints. The
+    /// config is not stored: like `FaultPlan`, it is rebuilt from
+    /// `SimConfig` on resume.
+    pub fn to_snapshot(&self) -> Json {
+        Json::obj()
+            .set("spans", self.spans.to_snapshot())
+            .set("timeline", self.timeline.to_snapshot())
+            .set("win_arrivals", Json::u64_hex(self.win_arrivals))
+            .set("win_input_tokens", Json::u64_hex(self.win_input_tokens))
+            .set("win_output_tokens", Json::u64_hex(self.win_output_tokens))
+    }
+
+    /// Rebuild from [`ObsState::to_snapshot`] output plus the run config.
+    pub fn from_snapshot(cfg: ObserveConfig, j: &Json) -> anyhow::Result<ObsState> {
+        let what = "obs snapshot";
+        let hex = |key: &str| -> anyhow::Result<u64> {
+            j.get(key)
+                .and_then(Json::as_u64_hex)
+                .ok_or_else(|| anyhow::anyhow!("{what}: `{key}` is not a u64"))
+        };
+        Ok(ObsState {
+            cfg,
+            spans: SpanLog::from_snapshot(
+                j.get("spans")
+                    .ok_or_else(|| anyhow::anyhow!("{what}: missing `spans`"))?,
+            )?,
+            timeline: Timeline::from_snapshot(
+                j.get("timeline")
+                    .ok_or_else(|| anyhow::anyhow!("{what}: missing `timeline`"))?,
+            )?,
+            win_arrivals: hex("win_arrivals")?,
+            win_input_tokens: hex("win_input_tokens")?,
+            win_output_tokens: hex("win_output_tokens")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_deterministic_and_roughly_1_in_n() {
+        for n in [2u64, 8, 64] {
+            let hits: usize = (0..10_000).filter(|r| span_sampled(7, *r, n)).count();
+            let expect = 10_000 / n as usize;
+            assert!(
+                hits > expect / 2 && hits < expect * 2,
+                "n={n}: {hits} hits, expected ~{expect}"
+            );
+            // Same inputs, same answer.
+            for r in 0..100 {
+                assert_eq!(span_sampled(7, r, n), span_sampled(7, r, n));
+            }
+        }
+        assert!((0..100).all(|r| span_sampled(3, r, 1)));
+        assert!(!(0..100).any(|r| span_sampled(3, r, 0)));
+    }
+
+    #[test]
+    fn different_seeds_pick_different_requests() {
+        let a: Vec<u64> = (0..1000).filter(|r| span_sampled(1, *r, 8)).collect();
+        let b: Vec<u64> = (0..1000).filter(|r| span_sampled(2, *r, 8)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(ObserveConfig::default().validate().is_ok());
+        let bad = ObserveConfig {
+            sample_s: 0.0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let nan = ObserveConfig {
+            sample_s: f64::NAN,
+            ..Default::default()
+        };
+        assert!(nan.validate().is_err());
+    }
+
+    #[test]
+    fn sink_labels_round_trip() {
+        for s in Sink::ALL {
+            assert_eq!(Sink::from_label(s.label()), Some(s));
+        }
+        assert_eq!(Sink::from_label("bogus"), None);
+    }
+
+    #[test]
+    fn obs_state_snapshot_round_trips() {
+        let mut o = ObsState::new(ObserveConfig::default());
+        o.note_arrival(100, 20);
+        o.note_arrival(300, 60);
+        o.span(SpanEvent {
+            t: 0.5,
+            req: 0,
+            kind: SpanKind::Arrival,
+            role: span::ROLE_NONE,
+            slot: -1,
+            aux: 0,
+        });
+        let text = o.to_snapshot().pretty();
+        let back = ObsState::from_snapshot(
+            ObserveConfig::default(),
+            &Json::parse(&text).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.spans, o.spans);
+        assert_eq!(back.win_arrivals, 2);
+        assert_eq!(back.win_input_tokens, 400);
+        assert_eq!(back.win_output_tokens, 80);
+    }
+}

@@ -1,0 +1,479 @@
+//! Request-lifecycle span events.
+//!
+//! A sampled request's life is recorded as a flat sequence of typed
+//! instant events; exporters ([`super::export`]) pair them into duration
+//! slices (gateway queue, prefill, KVC transfer, decode). The flat form
+//! keeps the engine hook O(1) per event with no open-span bookkeeping,
+//! and it checkpoint-serializes trivially.
+//!
+//! **Chain invariant** (enforced by [`SpanLog::check_chains`] and the
+//! property tests): every sampled request's events are time-ordered,
+//! begin with `Arrival`, close each stage at most as often as it was
+//! opened (faults may abandon an open stage and re-queue), and end in
+//! exactly one terminal event — `Completion` or a typed `Drop`.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Role code carried on span events (instance roles + "no instance").
+pub const ROLE_PREFILLER: u8 = 0;
+pub const ROLE_DECODER: u8 = 1;
+pub const ROLE_CONVERTIBLE: u8 = 2;
+pub const ROLE_NONE: u8 = 255;
+
+/// Human label for a span role code.
+pub fn role_label(role: u8) -> &'static str {
+    match role {
+        ROLE_PREFILLER => "prefiller",
+        ROLE_DECODER => "decoder",
+        ROLE_CONVERTIBLE => "convertible",
+        _ => "-",
+    }
+}
+
+/// Typed lifecycle event kinds, in nominal chain order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Request entered the system.
+    Arrival,
+    /// Pushed onto the gateway queue (initial entry or fault re-queue).
+    QueueEnter,
+    /// Route decision admitted the prompt to an instance's prefill
+    /// queue (`aux` = 1 for a deflected prefill on a decode-capable
+    /// instance).
+    Route,
+    /// Prefill execution began on the routed instance.
+    PrefillStart,
+    /// Prompt fully processed.
+    PrefillDone,
+    /// KVC transfer to the decode instance began.
+    TransferStart,
+    /// Transfer attempt timed out and was retried (`aux` = attempt).
+    TransferRetry,
+    /// KV blocks landed on the decoder.
+    TransferDone,
+    /// Request joined a decoder's continuous batch.
+    DecodeDispatch,
+    /// Terminal: all output tokens produced (`aux` = output tokens).
+    Completion,
+    /// Terminal: the gateway gave up (`aux` = drop code, see
+    /// [`drop_label`]).
+    Drop,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 11] = [
+        SpanKind::Arrival,
+        SpanKind::QueueEnter,
+        SpanKind::Route,
+        SpanKind::PrefillStart,
+        SpanKind::PrefillDone,
+        SpanKind::TransferStart,
+        SpanKind::TransferRetry,
+        SpanKind::TransferDone,
+        SpanKind::DecodeDispatch,
+        SpanKind::Completion,
+        SpanKind::Drop,
+    ];
+
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_code(c: u8) -> Option<SpanKind> {
+        SpanKind::ALL.get(c as usize).copied()
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::Arrival => "arrival",
+            SpanKind::QueueEnter => "queue-enter",
+            SpanKind::Route => "route",
+            SpanKind::PrefillStart => "prefill-start",
+            SpanKind::PrefillDone => "prefill-done",
+            SpanKind::TransferStart => "transfer-start",
+            SpanKind::TransferRetry => "transfer-retry",
+            SpanKind::TransferDone => "transfer-done",
+            SpanKind::DecodeDispatch => "decode-dispatch",
+            SpanKind::Completion => "completion",
+            SpanKind::Drop => "drop",
+        }
+    }
+
+    /// Terminal events end a request's chain.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, SpanKind::Completion | SpanKind::Drop)
+    }
+}
+
+/// Drop codes carried in `SpanEvent::aux` on [`SpanKind::Drop`]. Codes
+/// 0/1 mirror `metrics::DropReason`; 2 is the admission-time oversized
+/// rejection (prompt exceeds every decoder's KV capacity).
+pub fn drop_label(aux: u32) -> &'static str {
+    match aux {
+        0 => "retry-budget",
+        1 => "starved",
+        2 => "oversized",
+        _ => "unknown",
+    }
+}
+
+/// One recorded lifecycle event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanEvent {
+    /// Sim time of the event.
+    pub t: f64,
+    /// Request id.
+    pub req: u64,
+    pub kind: SpanKind,
+    /// Role code of the involved instance ([`ROLE_NONE`] for gateway
+    /// events).
+    pub role: u8,
+    /// Instance slot (-1 for gateway events). Slots are reused across
+    /// instance generations; with the event time this is unambiguous
+    /// and maps directly onto a Perfetto thread id.
+    pub slot: i64,
+    /// Kind-specific payload (retry attempt, output tokens, drop code,
+    /// deflection flag).
+    pub aux: u32,
+}
+
+/// Append-only log of span events across all sampled requests, in
+/// engine event order (time-ordered per request by construction).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SpanLog {
+    pub events: Vec<SpanEvent>,
+}
+
+impl SpanLog {
+    pub fn push(&mut self, ev: SpanEvent) {
+        self.events.push(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events grouped by request id (insertion order preserved within a
+    /// request).
+    pub fn by_request(&self) -> BTreeMap<u64, Vec<&SpanEvent>> {
+        let mut m: BTreeMap<u64, Vec<&SpanEvent>> = BTreeMap::new();
+        for ev in &self.events {
+            m.entry(ev.req).or_default().push(ev);
+        }
+        m
+    }
+
+    /// Verify the chain invariant for every recorded request. Returns
+    /// the first violation as `Err(description)`.
+    ///
+    /// `require_terminal` should be true for completed runs (every
+    /// sampled request must have resolved); false for mid-run state
+    /// (checkpoints), where open chains are legal.
+    pub fn check_chains(&self, require_terminal: bool) -> Result<(), String> {
+        for (req, evs) in self.by_request() {
+            check_chain(req, &evs, require_terminal)?;
+        }
+        Ok(())
+    }
+
+    /// Bit-exact serialization: one compact row per event.
+    pub fn to_snapshot(&self) -> Json {
+        Json::Arr(
+            self.events
+                .iter()
+                .map(|e| {
+                    Json::Arr(vec![
+                        Json::from(e.kind.code() as usize),
+                        Json::f64_bits(e.t),
+                        Json::u64_hex(e.req),
+                        Json::from(e.role as usize),
+                        Json::from(e.slot),
+                        Json::from(e.aux as usize),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Rebuild from [`SpanLog::to_snapshot`] output.
+    pub fn from_snapshot(j: &Json) -> anyhow::Result<SpanLog> {
+        let what = "span log snapshot";
+        let rows = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("{what}: expected an array"))?;
+        let mut events = Vec::with_capacity(rows.len());
+        for row in rows {
+            let f = row
+                .as_arr()
+                .filter(|f| f.len() == 6)
+                .ok_or_else(|| anyhow::anyhow!("{what}: expected 6-element rows"))?;
+            events.push(SpanEvent {
+                kind: f[0]
+                    .as_usize()
+                    .and_then(|c| SpanKind::from_code(c as u8))
+                    .ok_or_else(|| anyhow::anyhow!("{what}: bad kind code"))?,
+                t: f[1]
+                    .as_f64_bits()
+                    .ok_or_else(|| anyhow::anyhow!("{what}: bad time bits"))?,
+                req: f[2]
+                    .as_u64_hex()
+                    .ok_or_else(|| anyhow::anyhow!("{what}: bad request id"))?,
+                role: f[3]
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("{what}: bad role"))? as u8,
+                slot: f[4]
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("{what}: bad slot"))?
+                    as i64,
+                aux: f[5]
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("{what}: bad aux"))? as u32,
+            });
+        }
+        Ok(SpanLog { events })
+    }
+}
+
+/// Chain invariant for one request's events (see module docs).
+fn check_chain(req: u64, evs: &[&SpanEvent], require_terminal: bool) -> Result<(), String> {
+    let fail = |msg: String| Err(format!("req {req}: {msg}"));
+    let Some(first) = evs.first() else {
+        return fail("empty chain".into());
+    };
+    if first.kind != SpanKind::Arrival {
+        return fail(format!("chain opens with {}, not arrival", first.kind.label()));
+    }
+    let mut last_t = f64::NEG_INFINITY;
+    let mut open_prefill = 0i64;
+    let mut open_transfer = 0i64;
+    let mut routed = 0i64;
+    let mut dispatched = 0i64;
+    let mut terminal = 0usize;
+    for (i, ev) in evs.iter().enumerate() {
+        if ev.t < last_t {
+            return fail(format!(
+                "time went backwards at event {i} ({} at t={} after t={last_t})",
+                ev.kind.label(),
+                ev.t
+            ));
+        }
+        last_t = ev.t;
+        if terminal > 0 {
+            return fail(format!(
+                "event {} after terminal at index {i}",
+                ev.kind.label()
+            ));
+        }
+        match ev.kind {
+            SpanKind::Arrival => {
+                if i != 0 {
+                    return fail("duplicate arrival".into());
+                }
+            }
+            SpanKind::QueueEnter => {}
+            SpanKind::Route => routed += 1,
+            SpanKind::PrefillStart => {
+                if routed == 0 {
+                    return fail("prefill-start before any route".into());
+                }
+                open_prefill += 1;
+            }
+            SpanKind::PrefillDone => {
+                open_prefill -= 1;
+                if open_prefill < 0 {
+                    return fail("prefill-done without open prefill".into());
+                }
+            }
+            SpanKind::TransferStart => open_transfer += 1,
+            SpanKind::TransferRetry => {
+                if open_transfer == 0 {
+                    return fail("transfer-retry without open transfer".into());
+                }
+            }
+            SpanKind::TransferDone => {
+                open_transfer -= 1;
+                if open_transfer < 0 {
+                    return fail("transfer-done without open transfer".into());
+                }
+            }
+            SpanKind::DecodeDispatch => dispatched += 1,
+            SpanKind::Completion => {
+                terminal += 1;
+                if dispatched == 0 {
+                    return fail("completion without decode dispatch".into());
+                }
+            }
+            SpanKind::Drop => terminal += 1,
+        }
+    }
+    if require_terminal && terminal != 1 {
+        return fail(format!("chain has {terminal} terminals, want exactly 1"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: f64, req: u64, kind: SpanKind) -> SpanEvent {
+        SpanEvent {
+            t,
+            req,
+            kind,
+            role: ROLE_NONE,
+            slot: -1,
+            aux: 0,
+        }
+    }
+
+    fn healthy_chain(req: u64, t0: f64) -> Vec<SpanEvent> {
+        use SpanKind::*;
+        [
+            Arrival,
+            QueueEnter,
+            Route,
+            PrefillStart,
+            PrefillDone,
+            TransferStart,
+            TransferDone,
+            DecodeDispatch,
+            Completion,
+        ]
+        .iter()
+        .enumerate()
+        .map(|(i, k)| ev(t0 + i as f64 * 0.1, req, *k))
+        .collect()
+    }
+
+    #[test]
+    fn healthy_chain_passes() {
+        let mut log = SpanLog::default();
+        for e in healthy_chain(3, 0.0) {
+            log.push(e);
+        }
+        log.check_chains(true).unwrap();
+    }
+
+    #[test]
+    fn interleaved_requests_are_separated() {
+        let mut log = SpanLog::default();
+        let a = healthy_chain(1, 0.0);
+        let b = healthy_chain(2, 0.05);
+        for (x, y) in a.iter().zip(&b) {
+            log.push(*x);
+            log.push(*y);
+        }
+        log.check_chains(true).unwrap();
+        assert_eq!(log.by_request().len(), 2);
+    }
+
+    #[test]
+    fn faulted_chain_with_requeue_passes() {
+        use SpanKind::*;
+        // Prefill crashed mid-flight: stage reopened after a re-queue.
+        let mut log = SpanLog::default();
+        for (i, k) in [
+            Arrival,
+            QueueEnter,
+            Route,
+            PrefillStart,
+            QueueEnter, // crash salvage: back to the gateway
+            Route,
+            PrefillStart,
+            PrefillDone,
+            TransferStart,
+            TransferRetry,
+            TransferDone,
+            DecodeDispatch,
+            Completion,
+        ]
+        .iter()
+        .enumerate()
+        {
+            log.push(ev(i as f64, 9, *k));
+        }
+        log.check_chains(true).unwrap();
+    }
+
+    #[test]
+    fn dropped_chain_passes() {
+        use SpanKind::*;
+        let mut log = SpanLog::default();
+        for (i, k) in [Arrival, QueueEnter, Route, PrefillStart, Drop].iter().enumerate() {
+            log.push(ev(i as f64, 4, *k));
+        }
+        log.check_chains(true).unwrap();
+    }
+
+    #[test]
+    fn violations_are_caught() {
+        use SpanKind::*;
+        // No terminal.
+        let mut log = SpanLog::default();
+        log.push(ev(0.0, 1, Arrival));
+        log.push(ev(1.0, 1, QueueEnter));
+        assert!(log.check_chains(true).is_err());
+        assert!(log.check_chains(false).is_ok()); // mid-run: open is fine
+
+        // Event after terminal.
+        let mut log = SpanLog::default();
+        for e in healthy_chain(1, 0.0) {
+            log.push(e);
+        }
+        log.push(ev(99.0, 1, QueueEnter));
+        assert!(log.check_chains(true).is_err());
+
+        // Close without open.
+        let mut log = SpanLog::default();
+        log.push(ev(0.0, 1, Arrival));
+        log.push(ev(1.0, 1, PrefillDone));
+        assert!(log.check_chains(false).is_err());
+
+        // Time goes backwards.
+        let mut log = SpanLog::default();
+        log.push(ev(5.0, 1, Arrival));
+        log.push(ev(4.0, 1, QueueEnter));
+        assert!(log.check_chains(false).is_err());
+
+        // Doesn't open with arrival.
+        let mut log = SpanLog::default();
+        log.push(ev(0.0, 1, QueueEnter));
+        assert!(log.check_chains(false).is_err());
+    }
+
+    #[test]
+    fn kind_codes_round_trip() {
+        for k in SpanKind::ALL {
+            assert_eq!(SpanKind::from_code(k.code()), Some(k));
+        }
+        assert_eq!(SpanKind::from_code(200), None);
+    }
+
+    #[test]
+    fn snapshot_round_trips_bit_exactly() {
+        let mut log = SpanLog::default();
+        for e in healthy_chain(7, 1.0 / 3.0) {
+            log.push(e);
+        }
+        log.push(SpanEvent {
+            t: f64::MIN_POSITIVE,
+            req: u64::MAX,
+            kind: SpanKind::Drop,
+            role: ROLE_CONVERTIBLE,
+            slot: 41,
+            aux: 2,
+        });
+        let text = log.to_snapshot().pretty();
+        let back = SpanLog::from_snapshot(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, log);
+        for (a, b) in back.events.iter().zip(&log.events) {
+            assert_eq!(a.t.to_bits(), b.t.to_bits());
+        }
+    }
+}

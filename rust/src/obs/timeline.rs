@@ -1,0 +1,436 @@
+//! Sampled cluster timeline: the telemetry bus's periodic capture.
+//!
+//! Every `ObserveConfig::sample_s` of sim time the engine captures one
+//! [`TimelineSample`] — fleet shape, gateway queue state, per-stage
+//! token velocity (demand vs capacity, the paper's §IV leading metric,
+//! visible over time instead of only inside the autoscaler), KV-cache
+//! health, transfer pressure and fault windows. The run's samples form
+//! a [`Timeline`], exported as a columnar JSON artifact
+//! (`TIMELINE_<cell>.json`, schema documented in docs/observability.md)
+//! or rendered as a Prometheus exposition snapshot.
+
+use crate::metrics::PromRegistry;
+use crate::util::json::Json;
+
+/// One telemetry capture at sim time `t`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TimelineSample {
+    pub t: f64,
+    // ---- fleet shape ----
+    /// Active (non-draining) instances per role.
+    pub prefillers: u32,
+    pub decoders: u32,
+    pub convertibles: u32,
+    /// Instances provisioned but not yet serving (pending scale-up).
+    pub starting: u32,
+    /// Instances draining toward removal (pending scale-down).
+    pub draining: u32,
+    // ---- gateway ----
+    /// Requests waiting in the gateway queues (prefill + decode-wait).
+    pub queue_depth: u32,
+    /// Age of the oldest queued request (0 when empty).
+    pub oldest_wait_s: f64,
+    // ---- token velocity (demand vs capacity) ----
+    /// Offered prompt tokens/s over the last sample window.
+    pub demand_prefill_tok_s: f64,
+    /// Fleet prefill velocity: V_P × running prefill-capable instances.
+    pub capacity_prefill_tok_s: f64,
+    /// Offered output tokens/s implied by the window's arrivals.
+    pub demand_decode_tok_s: f64,
+    /// Fleet decode velocity at the window's mean request shape.
+    pub capacity_decode_tok_s: f64,
+    /// KVC link utilization (0..1) at capture time.
+    pub net_util: f64,
+    // ---- KV / prefix cache ----
+    /// Cumulative prefix-cache hit rate (0 with the cache disabled).
+    pub kv_hit_rate: f64,
+    /// Mean prefix-cache pool occupancy across live instances.
+    pub kv_occupancy: f64,
+    // ---- transfers & faults ----
+    /// KVC transfers in flight.
+    pub inflight_transfers: u32,
+    /// Running instances currently inside a degradation window.
+    pub degraded: u32,
+    /// Cumulative fault-ledger entries (crashes/preemptions/brownouts).
+    pub failures: u32,
+}
+
+/// Column names in artifact order (one array per column in the JSON;
+/// must stay in lockstep with [`TimelineSample::values`]).
+pub const COLUMNS: [&str; 18] = [
+    "t",
+    "prefillers",
+    "decoders",
+    "convertibles",
+    "starting",
+    "draining",
+    "queue_depth",
+    "oldest_wait_s",
+    "demand_prefill_tok_s",
+    "capacity_prefill_tok_s",
+    "demand_decode_tok_s",
+    "capacity_decode_tok_s",
+    "net_util",
+    "kv_hit_rate",
+    "kv_occupancy",
+    "inflight_transfers",
+    "degraded",
+    "failures",
+];
+
+impl TimelineSample {
+    /// Values in [`COLUMNS`] order.
+    pub fn values(&self) -> [f64; 18] {
+        [
+            self.t,
+            self.prefillers as f64,
+            self.decoders as f64,
+            self.convertibles as f64,
+            self.starting as f64,
+            self.draining as f64,
+            self.queue_depth as f64,
+            self.oldest_wait_s,
+            self.demand_prefill_tok_s,
+            self.capacity_prefill_tok_s,
+            self.demand_decode_tok_s,
+            self.capacity_decode_tok_s,
+            self.net_util,
+            self.kv_hit_rate,
+            self.kv_occupancy,
+            self.inflight_transfers as f64,
+            self.degraded as f64,
+            self.failures as f64,
+        ]
+    }
+
+    /// One-line human rendering (`tokenscale explain` correlation and
+    /// `obs summary`).
+    pub fn line(&self) -> String {
+        format!(
+            "t={:8.2}s fleet {}p/{}d/{}c (+{} starting, {} draining) queue={} oldest={:.2}s \
+             vP {:.0}/{:.0} vD {:.0}/{:.0} tok/s net={:.0}% kv hit={:.0}% occ={:.0}% \
+             transfers={} degraded={} failures={}",
+            self.t,
+            self.prefillers,
+            self.decoders,
+            self.convertibles,
+            self.starting,
+            self.draining,
+            self.queue_depth,
+            self.oldest_wait_s,
+            self.demand_prefill_tok_s,
+            self.capacity_prefill_tok_s,
+            self.demand_decode_tok_s,
+            self.capacity_decode_tok_s,
+            self.net_util * 100.0,
+            self.kv_hit_rate * 100.0,
+            self.kv_occupancy * 100.0,
+            self.inflight_transfers,
+            self.degraded,
+            self.failures,
+        )
+    }
+
+    /// Render this sample into a Prometheus registry as gauges.
+    pub fn to_prom(&self, reg: &mut PromRegistry) {
+        let fleet = "Active instances per role";
+        reg.set_gauge("tokenscale_fleet_size", fleet, &[("role", "prefiller")], self.prefillers as f64);
+        reg.set_gauge("tokenscale_fleet_size", fleet, &[("role", "decoder")], self.decoders as f64);
+        reg.set_gauge(
+            "tokenscale_fleet_size",
+            fleet,
+            &[("role", "convertible")],
+            self.convertibles as f64,
+        );
+        reg.set_gauge(
+            "tokenscale_fleet_pending",
+            "Instances starting up or draining",
+            &[("state", "starting")],
+            self.starting as f64,
+        );
+        reg.set_gauge(
+            "tokenscale_fleet_pending",
+            "Instances starting up or draining",
+            &[("state", "draining")],
+            self.draining as f64,
+        );
+        reg.set_gauge(
+            "tokenscale_gateway_queue_depth",
+            "Requests waiting in the gateway queues",
+            &[],
+            self.queue_depth as f64,
+        );
+        reg.set_gauge(
+            "tokenscale_gateway_oldest_wait_seconds",
+            "Age of the oldest queued request",
+            &[],
+            self.oldest_wait_s,
+        );
+        let vel = "Token velocity by stage (tok/s)";
+        for (stage, kind, v) in [
+            ("prefill", "demand", self.demand_prefill_tok_s),
+            ("prefill", "capacity", self.capacity_prefill_tok_s),
+            ("decode", "demand", self.demand_decode_tok_s),
+            ("decode", "capacity", self.capacity_decode_tok_s),
+        ] {
+            reg.set_gauge(
+                "tokenscale_token_velocity",
+                vel,
+                &[("stage", stage), ("kind", kind)],
+                v,
+            );
+        }
+        reg.set_gauge("tokenscale_net_utilization", "KVC link utilization", &[], self.net_util);
+        reg.set_gauge(
+            "tokenscale_kv_hit_rate",
+            "Cumulative prefix-cache hit rate",
+            &[],
+            self.kv_hit_rate,
+        );
+        reg.set_gauge(
+            "tokenscale_kv_occupancy",
+            "Mean prefix-cache pool occupancy",
+            &[],
+            self.kv_occupancy,
+        );
+        reg.set_gauge(
+            "tokenscale_inflight_transfers",
+            "KVC transfers in flight",
+            &[],
+            self.inflight_transfers as f64,
+        );
+        reg.set_gauge(
+            "tokenscale_degraded_instances",
+            "Running instances inside a degradation window",
+            &[],
+            self.degraded as f64,
+        );
+        reg.inc_counter(
+            "tokenscale_failures_total",
+            "Cumulative injected-fault ledger entries",
+            &[],
+            self.failures as f64,
+        );
+    }
+}
+
+/// The run's captured samples, columnar on export.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Timeline {
+    pub sample_s: f64,
+    pub samples: Vec<TimelineSample>,
+}
+
+impl Timeline {
+    pub fn new(sample_s: f64) -> Timeline {
+        Timeline {
+            sample_s,
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, s: TimelineSample) {
+        self.samples.push(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn get(&self, idx: u32) -> Option<&TimelineSample> {
+        self.samples.get(idx as usize)
+    }
+
+    /// Index of the sample nearest time `t` (samples are time-ordered).
+    pub fn nearest_index(&self, t: f64) -> Option<u32> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for (i, s) in self.samples.iter().enumerate() {
+            let d = (s.t - t).abs();
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        Some(best as u32)
+    }
+
+    /// Columnar artifact JSON (`TIMELINE_<cell>.json`): plain decimal
+    /// numbers for human/plotting consumption.
+    pub fn to_json(&self) -> Json {
+        let mut cols = Json::obj();
+        for (c, name) in COLUMNS.iter().enumerate() {
+            let col: Vec<Json> = self.samples.iter().map(|s| Json::Num(s.values()[c])).collect();
+            cols = cols.set(name, Json::Arr(col));
+        }
+        Json::obj()
+            .set("schema", 1usize)
+            .set("sample_s", self.sample_s)
+            .set("rows", self.samples.len())
+            .set("columns", cols)
+    }
+
+    /// Bit-exact serialization for checkpoints (row-major, f64 bits).
+    pub fn to_snapshot(&self) -> Json {
+        Json::obj()
+            .set("sample_s", Json::f64_bits(self.sample_s))
+            .set(
+                "rows",
+                Json::Arr(
+                    self.samples
+                        .iter()
+                        .map(|s| Json::Arr(s.values().iter().map(|v| Json::f64_bits(*v)).collect()))
+                        .collect(),
+                ),
+            )
+    }
+
+    /// Rebuild from [`Timeline::to_snapshot`] output.
+    pub fn from_snapshot(j: &Json) -> anyhow::Result<Timeline> {
+        let what = "timeline snapshot";
+        let sample_s = j
+            .get("sample_s")
+            .and_then(Json::as_f64_bits)
+            .ok_or_else(|| anyhow::anyhow!("{what}: missing `sample_s`"))?;
+        let rows = j
+            .get("rows")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("{what}: missing `rows`"))?;
+        let mut samples = Vec::with_capacity(rows.len());
+        for row in rows {
+            let vals = row
+                .as_arr()
+                .filter(|v| v.len() == COLUMNS.len())
+                .ok_or_else(|| anyhow::anyhow!("{what}: expected {}-column rows", COLUMNS.len()))?;
+            let mut f = [0.0f64; 18];
+            for (i, v) in vals.iter().enumerate() {
+                f[i] = v
+                    .as_f64_bits()
+                    .ok_or_else(|| anyhow::anyhow!("{what}: column {i} is not bit-exact"))?;
+            }
+            samples.push(TimelineSample {
+                t: f[0],
+                prefillers: f[1] as u32,
+                decoders: f[2] as u32,
+                convertibles: f[3] as u32,
+                starting: f[4] as u32,
+                draining: f[5] as u32,
+                queue_depth: f[6] as u32,
+                oldest_wait_s: f[7],
+                demand_prefill_tok_s: f[8],
+                capacity_prefill_tok_s: f[9],
+                demand_decode_tok_s: f[10],
+                capacity_decode_tok_s: f[11],
+                net_util: f[12],
+                kv_hit_rate: f[13],
+                kv_occupancy: f[14],
+                inflight_transfers: f[15] as u32,
+                degraded: f[16] as u32,
+                failures: f[17] as u32,
+            });
+        }
+        Ok(Timeline { sample_s, samples })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t: f64) -> TimelineSample {
+        TimelineSample {
+            t,
+            prefillers: 2,
+            decoders: 3,
+            convertibles: 1,
+            starting: 1,
+            draining: 0,
+            queue_depth: 5,
+            oldest_wait_s: 0.75,
+            demand_prefill_tok_s: 12_000.0,
+            capacity_prefill_tok_s: 28_000.0,
+            demand_decode_tok_s: 900.0,
+            capacity_decode_tok_s: 40_000.0,
+            net_util: 0.25,
+            kv_hit_rate: 1.0 / 3.0,
+            kv_occupancy: 0.5,
+            inflight_transfers: 2,
+            degraded: 1,
+            failures: 4,
+        }
+    }
+
+    #[test]
+    fn columnar_json_shape() {
+        let mut tl = Timeline::new(5.0);
+        tl.push(sample(0.0));
+        tl.push(sample(5.0));
+        let j = tl.to_json();
+        assert_eq!(j.get("rows").and_then(Json::as_usize), Some(2));
+        let cols = j.get("columns").unwrap();
+        for name in COLUMNS {
+            let col = cols.get(name).and_then(Json::as_arr).unwrap_or_else(|| {
+                panic!("missing column {name}");
+            });
+            assert_eq!(col.len(), 2, "column {name}");
+        }
+        assert_eq!(
+            cols.get("queue_depth").unwrap().as_arr().unwrap()[0].as_f64(),
+            Some(5.0)
+        );
+        // Artifact text parses back.
+        Json::parse(&j.pretty()).unwrap();
+    }
+
+    #[test]
+    fn snapshot_round_trips_bit_exactly() {
+        let mut tl = Timeline::new(2.5);
+        tl.push(sample(0.0));
+        tl.push(TimelineSample {
+            oldest_wait_s: f64::MIN_POSITIVE,
+            kv_hit_rate: 2.0 / 3.0,
+            ..sample(2.5)
+        });
+        let text = tl.to_snapshot().pretty();
+        let back = Timeline::from_snapshot(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, tl);
+        assert_eq!(
+            back.samples[1].oldest_wait_s.to_bits(),
+            tl.samples[1].oldest_wait_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn nearest_index_picks_closest() {
+        let mut tl = Timeline::new(5.0);
+        for k in 0..5 {
+            tl.push(sample(k as f64 * 5.0));
+        }
+        assert_eq!(tl.nearest_index(0.0), Some(0));
+        assert_eq!(tl.nearest_index(7.4), Some(1));
+        assert_eq!(tl.nearest_index(7.6), Some(2));
+        assert_eq!(tl.nearest_index(1e9), Some(4));
+        assert_eq!(Timeline::new(5.0).nearest_index(1.0), None);
+    }
+
+    #[test]
+    fn prom_render_contains_velocity_and_fleet() {
+        let mut reg = PromRegistry::new();
+        sample(10.0).to_prom(&mut reg);
+        let text = reg.render();
+        assert!(text.contains("tokenscale_fleet_size{role=\"prefiller\"} 2"));
+        assert!(text.contains(
+            "tokenscale_token_velocity{kind=\"capacity\",stage=\"prefill\"} 28000"
+        ));
+        assert!(text.contains("tokenscale_gateway_queue_depth 5"));
+        assert!(text.contains("# TYPE tokenscale_failures_total counter"));
+        assert!(text.contains("tokenscale_failures_total 4"));
+    }
+}

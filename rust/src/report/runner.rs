@@ -126,6 +126,9 @@ pub struct RunOverrides {
     pub router_temperature: Option<f64>,
     /// Forecast/planning knobs (`sla-planner` family).
     pub planner: Option<crate::scaler::PlannerParams>,
+    /// Telemetry capture (`crate::obs`): spans + cluster timeline. None
+    /// (the default) arms nothing and keeps output byte-identical.
+    pub observe: Option<crate::obs::ObserveConfig>,
 }
 
 impl Default for RunOverrides {
@@ -147,6 +150,7 @@ impl Default for RunOverrides {
             overlap_weight: None,
             router_temperature: None,
             planner: None,
+            observe: None,
         }
     }
 }
@@ -276,6 +280,7 @@ pub fn prepare_run(
         // The engine-side sketch must filter with the same warm-up the
         // report will be produced under (the sketch asserts the match).
         metrics_warmup_s: ov.warmup_s,
+        observe: ov.observe.clone(),
         ..Default::default()
     };
     if let Some(s) = ov.sample_interval_s {

@@ -16,6 +16,7 @@
 //! panics.
 
 use crate::forecast::ForecasterKind;
+use crate::obs::{ObserveConfig, Sink};
 use crate::report::runner::{deployment, CheckpointSpec, ExperimentSpec, RunOverrides, Workload};
 use crate::report::PolicyKind;
 use crate::scaler::PlannerParams;
@@ -787,6 +788,11 @@ pub struct Scenario {
     /// (`[scenarios.planner]` in TOML; see docs/forecasting.md). Ignored
     /// by every other policy; `None` keeps the family's defaults.
     pub planner: Option<PlannerParams>,
+    /// Telemetry capture for every cell of this scenario
+    /// (`[scenarios.observe]` in TOML; see docs/observability.md).
+    /// `None` (the default) arms nothing and keeps suite output
+    /// byte-identical to a build without the telemetry layer.
+    pub observe: Option<ObserveConfig>,
 }
 
 impl Scenario {
@@ -804,6 +810,7 @@ impl Scenario {
             checkpoint: None,
             faults: FaultPlan::default(),
             planner: None,
+            observe: None,
         }
     }
 
@@ -865,6 +872,13 @@ impl Scenario {
     /// Tune the `sla-planner` policy family for this scenario.
     pub fn with_planner(mut self, params: PlannerParams) -> Scenario {
         self.planner = Some(params);
+        self
+    }
+
+    /// Arm telemetry capture (spans + timeline) for every cell of this
+    /// scenario.
+    pub fn with_observe(mut self, cfg: ObserveConfig) -> Scenario {
+        self.observe = Some(cfg);
         self
     }
 
@@ -985,6 +999,12 @@ impl Scenario {
                 reason,
             })?;
         }
+        if let Some(o) = &self.observe {
+            o.validate().map_err(|reason| ScenarioError::BadValue {
+                field: "observe".into(),
+                reason,
+            })?;
+        }
         Ok(())
     }
 
@@ -1065,6 +1085,7 @@ impl Scenario {
             overlap_weight: self.overrides.overlap_weight,
             router_temperature: self.overrides.router_temperature,
             planner: self.planner,
+            observe: self.observe.clone(),
         }
     }
 
@@ -1179,6 +1200,19 @@ impl Scenario {
             }
             j = j.set("planner", pj);
         }
+        if let Some(o) = &self.observe {
+            j = j.set(
+                "observe",
+                Json::obj()
+                    .set("sample_s", o.sample_s)
+                    .set("span_sample_n", o.span_sample_n as usize)
+                    .set("seed", o.seed as usize)
+                    .set(
+                        "sinks",
+                        Json::Arr(o.sinks.iter().map(|s| Json::Str(s.label().to_string())).collect()),
+                    ),
+            );
+        }
         j
     }
 
@@ -1199,6 +1233,7 @@ impl Scenario {
                 "checkpoint",
                 "faults",
                 "planner",
+                "observe",
             ],
         )?;
         let name = req_str(j, "scenario", "name")?.to_string();
@@ -1330,6 +1365,45 @@ impl Scenario {
                 Some(params)
             }
         };
+        let observe = match j.get("observe") {
+            None => None,
+            Some(o) => {
+                check_fields(o, "observe", &["sample_s", "span_sample_n", "seed", "sinks"])?;
+                let mut cfg = ObserveConfig::default();
+                if let Some(v) = opt_f64(o, "sample_s")? {
+                    cfg.sample_s = v;
+                }
+                if let Some(v) = opt_usize(o, "span_sample_n")? {
+                    cfg.span_sample_n = v as u64;
+                }
+                if let Some(v) = opt_usize(o, "seed")? {
+                    cfg.seed = v as u64;
+                }
+                if let Some(v) = o.get("sinks") {
+                    let arr = v.as_arr().ok_or_else(|| ScenarioError::BadValue {
+                        field: "observe.sinks".into(),
+                        reason: "expected an array of sink names".into(),
+                    })?;
+                    let mut sinks = Vec::with_capacity(arr.len());
+                    for s in arr {
+                        let name = s.as_str().ok_or_else(|| ScenarioError::BadValue {
+                            field: "observe.sinks".into(),
+                            reason: "entries must be strings".into(),
+                        })?;
+                        sinks.push(Sink::from_label(name).ok_or_else(|| {
+                            ScenarioError::BadValue {
+                                field: "observe.sinks".into(),
+                                reason: format!(
+                                    "unknown sink `{name}` (expected timeline, perfetto, csv or prom)"
+                                ),
+                            }
+                        })?);
+                    }
+                    cfg.sinks = sinks;
+                }
+                Some(cfg)
+            }
+        };
         let scenario = Scenario {
             name,
             deployment: req_str(j, "scenario", "deployment")?.to_string(),
@@ -1349,6 +1423,7 @@ impl Scenario {
             checkpoint,
             faults,
             planner,
+            observe,
         };
         scenario.validate()?;
         Ok(scenario)

@@ -607,6 +607,53 @@ impl SuiteRun {
         Ok(())
     }
 
+    /// Write per-cell telemetry artifacts into `dir`, honoring each
+    /// cell's `[scenarios.observe] sinks` selection:
+    /// `TIMELINE_<scenario>__<policy>.json` (columnar timeline),
+    /// `SPANS_<cell>.perfetto.json` (Chrome trace-event JSON — open on
+    /// ui.perfetto.dev), `SPANS_<cell>.csv` (flat span rows) and
+    /// `PROM_<cell>.prom` (Prometheus exposition: final timeline sample
+    /// plus the cell's `SloReport` render). Cells that ran without an
+    /// observe block write nothing, so a telemetry-free suite leaves the
+    /// output directory byte-identical. Returns the paths written.
+    pub fn write_observe_artifacts(&self, dir: &Path) -> anyhow::Result<Vec<PathBuf>> {
+        let mut written = Vec::new();
+        for (o, res) in self.outcomes.iter().zip(&self.results) {
+            let Some(obs) = &res.sim.obs else { continue };
+            let key = cell_key(&o.scenario, &o.policy);
+            for sink in &obs.cfg.sinks {
+                let (name, bytes) = match sink {
+                    crate::obs::Sink::Timeline => {
+                        (format!("TIMELINE_{key}.json"), obs.timeline.to_json().pretty())
+                    }
+                    crate::obs::Sink::Perfetto => (
+                        format!("SPANS_{key}.perfetto.json"),
+                        crate::obs::perfetto(&obs.spans).pretty(),
+                    ),
+                    crate::obs::Sink::Csv => {
+                        (format!("SPANS_{key}.csv"), crate::obs::spans_csv(&obs.spans))
+                    }
+                    crate::obs::Sink::Prom => {
+                        let mut reg = crate::metrics::PromRegistry::new();
+                        if let Some(last) = obs.timeline.samples.last() {
+                            last.to_prom(&mut reg);
+                        }
+                        res.report.to_prom(
+                            &mut reg,
+                            &[("policy", o.policy.as_str()), ("scenario", o.scenario.as_str())],
+                        );
+                        (format!("PROM_{key}.prom"), reg.render())
+                    }
+                };
+                let path = dir.join(name);
+                std::fs::write(&path, bytes)
+                    .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", path.display()))?;
+                written.push(path);
+            }
+        }
+        Ok(written)
+    }
+
     /// The shared summary table every suite-driven bench prints.
     pub fn render_table(&self) -> String {
         let mut t = Table::new(&format!("suite {} — {:.1}s wall", self.suite, self.wall_s)).header(&[
@@ -699,12 +746,37 @@ impl DiffReport {
     }
 
     pub fn render(&self) -> String {
+        self.render_with_artifacts(None)
+    }
+
+    /// Like [`DiffReport::render`], but when `artifact_dir` holds a
+    /// telemetry timeline for a failing cell
+    /// (`TIMELINE_<scenario>__<policy>.json`, written by
+    /// [`SuiteRun::write_observe_artifacts`]), the gate line points at it
+    /// — so a CI failure links straight to the sampled cluster state that
+    /// produced the regression.
+    pub fn render_with_artifacts(&self, artifact_dir: Option<&Path>) -> String {
+        let pointer = |scenario: &str, policy: &str| -> String {
+            let Some(dir) = artifact_dir else {
+                return String::new();
+            };
+            let path = dir.join(format!("TIMELINE_{}.json", cell_key(scenario, policy)));
+            if path.exists() {
+                format!("  [timeline: {}]", path.display())
+            } else {
+                String::new()
+            }
+        };
         let mut out = String::new();
         if self.clean() {
             out.push_str("no regressions beyond tolerance\n");
         }
         for r in &self.regressions {
-            out.push_str(&format!("REGRESSION  {}\n", r.line()));
+            out.push_str(&format!(
+                "REGRESSION  {}{}\n",
+                r.line(),
+                pointer(&r.scenario, &r.policy)
+            ));
         }
         for m in &self.missing {
             out.push_str(&format!("MISSING     {m} (in baseline, not in current)\n"));

@@ -19,6 +19,11 @@ pub struct DecisionRecord {
     pub signal: SignalKind,
     pub action: Action,
     pub outcome: ActionOutcome,
+    /// Index of the telemetry timeline sample nearest the decision time,
+    /// when the observe subsystem was armed (`None` otherwise). Lets
+    /// `tokenscale explain` answer "what did the policy see when it
+    /// acted" by joining against the timeline artifact.
+    pub sample: Option<u32>,
 }
 
 impl DecisionRecord {
@@ -133,6 +138,9 @@ impl DecisionLog {
             if let Some(reason) = reason {
                 j = j.set("reason", reason);
             }
+            if let Some(sample) = r.sample {
+                j = j.set("sample", sample as usize);
+            }
             arr.push(j);
         }
         Json::obj()
@@ -157,6 +165,7 @@ mod tests {
                 target: 2,
             },
             outcome: ActionOutcome::Applied,
+            sample: None,
         }
     }
 
@@ -190,10 +199,17 @@ mod tests {
             outcome: ActionOutcome::Rejected(RejectReason::WrongRole),
             ..rec(1.0)
         });
+        log.push(DecisionRecord {
+            sample: Some(3),
+            ..rec(2.0)
+        });
         let j = log.to_json();
-        assert_eq!(j.get("retained").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("retained").and_then(Json::as_usize), Some(3));
         let records = j.get("records").and_then(Json::as_arr).unwrap();
         assert_eq!(records[1].get("status").and_then(Json::as_str), Some("rejected"));
         assert_eq!(records[1].get("reason").and_then(Json::as_str), Some("wrong-role"));
+        // The telemetry sample index rides along only when stamped.
+        assert!(records[0].get("sample").is_none());
+        assert_eq!(records[2].get("sample").and_then(Json::as_usize), Some(3));
     }
 }

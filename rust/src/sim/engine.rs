@@ -58,10 +58,13 @@ use super::reqtable::ReqTable;
 use super::snapshot::{self, SimSnapshot, SNAPSHOT_SCHEMA_VERSION};
 use super::view::ClusterView;
 use crate::metrics::{AbandonedRequest, DropReason, MetricsRecorder, TimeSeries};
+use crate::obs::span::{ROLE_NONE, ROLE_PREFILLER};
+use crate::obs::{ObsState, ObserveConfig, SpanEvent, SpanKind, TimelineSample};
 use crate::perfmodel::LinkSpec;
 use crate::trace::{fast_forward, ArrivalSource, Trace, TraceSliceSource};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
+use crate::velocity::analytic::{decode_velocity, prefill_velocity};
 use crate::workload::{BucketScheme, Completion, Request, RequestId, SloPolicy};
 use std::collections::VecDeque;
 
@@ -133,6 +136,13 @@ pub struct SimConfig {
     /// the same `warmup_s`. Ignored in retained mode, where reports
     /// filter after the fact.
     pub metrics_warmup_s: f64,
+    /// Telemetry subsystem (`crate::obs`): request-lifecycle spans and
+    /// the sampled cluster timeline. `None` (the default) arms nothing —
+    /// no `ObsTick` events are scheduled, no span state is allocated, and
+    /// runs are byte-identical to a build without the telemetry layer.
+    /// With `Some`, the simulated trajectory is still bit-identical to an
+    /// observe-off run (see the passivity contract in `crate::obs`).
+    pub observe: Option<ObserveConfig>,
 }
 
 impl Default for SimConfig {
@@ -154,6 +164,7 @@ impl Default for SimConfig {
             starvation_age_s: 120.0,
             retain_completions: true,
             metrics_warmup_s: 0.0,
+            observe: None,
         }
     }
 }
@@ -196,6 +207,9 @@ pub struct SimResult {
     /// The most recent auto-checkpoint (present when
     /// `SimConfig::checkpoint_every_s` > 0 and no sink consumed it).
     pub last_checkpoint: Option<Box<SimSnapshot>>,
+    /// Telemetry capture (present when `SimConfig::observe` is set):
+    /// span log + cluster timeline, ready for `crate::obs::export`.
+    pub obs: Option<ObsState>,
 }
 
 /// In-flight KVC transfer bookkeeping.
@@ -322,6 +336,9 @@ pub struct SimEngine<'a, C: ControlPlane + ?Sized> {
     /// recorded in `metrics.recoveries`. Per-request membership lives on
     /// the arena slot (`ReqState::fault_cohort`).
     fault_cohorts: Vec<(f64, usize)>,
+    /// Telemetry side-car (`SimConfig::observe`); `None` = off. Only the
+    /// obs code paths touch it, and they only *read* simulation state.
+    obs: Option<ObsState>,
 }
 
 /// Derive the firing list and transfer brownout windows from a plan.
@@ -362,6 +379,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             None
         };
         let cfg_every = cfg.checkpoint_every_s;
+        let obs = cfg.observe.clone().map(ObsState::new);
         let (firings, transfer_windows) = fault_derived(&cfg.faults);
         let mut metrics = MetricsRecorder::new();
         if !cfg.retain_completions {
@@ -401,6 +419,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             firings,
             transfer_windows,
             fault_cohorts: Vec::new(),
+            obs,
         }
     }
 
@@ -445,6 +464,12 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         if let Some(r) = &self.next_arrival {
             self.events.push(r.arrival.max(0.0), Event::Arrival);
         }
+        // The telemetry tick goes first among the t=0 ties (FIFO seq
+        // order within a rank), so sample 0 exists before the first
+        // control decisions stamp their correlation index.
+        if self.obs.is_some() {
+            self.events.push(0.0, Event::ObsTick);
+        }
         self.events.push(0.0, Event::ControlTick);
         self.events.push(0.0, Event::SampleTick);
         // Schedule every materialized fault firing up front (an empty plan
@@ -486,6 +511,19 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 }
             }
             let (t, ev) = self.events.pop().expect("peeked above");
+            if matches!(ev, Event::ObsTick) {
+                // Telemetry capture happens "between" simulation instants:
+                // the clock is restored afterwards, the tick never counts
+                // toward `events_processed`, and the capture only reads
+                // state — so an observe-on run carries exactly the
+                // observe-off engine state (including the final `now` a
+                // horizon-bounded run reports as its cost horizon).
+                let prev_now = self.now;
+                self.now = t;
+                self.handle(ev);
+                self.now = prev_now;
+                continue;
+            }
             self.now = t;
             self.events_processed += 1;
             self.handle(ev);
@@ -522,6 +560,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             events_processed: self.events_processed,
             decisions: self.decisions,
             last_checkpoint: self.last_checkpoint,
+            obs: self.obs,
         }
     }
 
@@ -701,6 +740,13 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                     Some(log) => snapshot::decision_log_to_json(log),
                 },
             )
+            .set(
+                "obs",
+                match &self.obs {
+                    None => Json::Null,
+                    Some(obs) => obs.to_snapshot(),
+                },
+            )
             .set("events", events)
             .set("cluster", self.cluster.to_snapshot());
         SimSnapshot {
@@ -841,6 +887,22 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             );
             requests.entry(snapshot::pu64(m, "req", what)?).fault_cohort = Some(idx);
         }
+        // Like `FaultPlan`, the observe config is configuration, not
+        // stream state: it is rebuilt from `cfg` and must agree with the
+        // snapshot in both directions — resuming an observed run without
+        // its config (or vice versa) would silently change the artifacts.
+        let obs = match (cfg.observe.clone(), snapshot::get(e, "obs", what)?) {
+            (None, Json::Null) => None,
+            (Some(_), Json::Null) => anyhow::bail!(
+                "{what}: config enables telemetry but the snapshot has none \
+                 (checkpoint was taken with observe off)"
+            ),
+            (Some(ocfg), blob) => Some(ObsState::from_snapshot(ocfg, blob)?),
+            (None, _) => anyhow::bail!(
+                "{what}: snapshot carries telemetry state but the config has no \
+                 observe block — resume with the original observe settings"
+            ),
+        };
         let (firings, transfer_windows) = fault_derived(&cfg.faults);
         let now = snapshot::pf(e, "now", what)?;
         let every = cfg.checkpoint_every_s;
@@ -891,6 +953,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             firings,
             transfer_windows,
             fault_cohorts,
+            obs,
             cfg,
         })
     }
@@ -918,6 +981,11 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                     self.events.push(n.arrival.max(self.now), Event::Arrival);
                 }
                 self.metrics.note_arrival(&req);
+                if let Some(obs) = self.obs.as_mut() {
+                    obs.note_arrival(req.input_tokens, req.output_tokens);
+                }
+                self.obs_span(req.id, SpanKind::Arrival, ROLE_NONE, -1, 0);
+                self.obs_span(req.id, SpanKind::QueueEnter, ROLE_NONE, -1, 0);
                 self.requests.entry(req.id).clock =
                     Some(RequestClock::at_arrival(req.id, req.arrival));
                 self.offer_prefill(req, false);
@@ -933,6 +1001,18 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 self.sample();
                 self.events
                     .push(self.now + self.cfg.sample_interval_s, Event::SampleTick);
+            }
+            Event::ObsTick => {
+                // Pure read-only capture — deliberately no
+                // `catch_up_windows` or any other state advance, so the
+                // simulated trajectory is untouched (passivity contract,
+                // `crate::obs`). Never scheduled when observe is off.
+                self.obs_capture();
+                if let Some(sample_s) = self.obs.as_ref().map(|o| o.cfg.sample_s) {
+                    // `validate()` requires sample_s > 0; the floor keeps a
+                    // hand-built zero from wedging the event loop.
+                    self.events.push(self.now + sample_s.max(1e-9), Event::ObsTick);
+                }
             }
             Event::InstanceReady { instance } => {
                 // The instance may have been drained and removed before its
@@ -1188,11 +1268,19 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             self.fault_cohorts[idx].1 += 1;
             self.requests.entry(req.id).fault_cohort = Some(idx);
         }
+        // The span chain reopens: a displaced request re-enters the
+        // gateway for a re-prefill (aux = lifetime retry count).
+        self.obs_span(req.id, SpanKind::QueueEnter, ROLE_NONE, -1, req.retries);
         self.offer_prefill(req, true);
     }
 
     /// Permanently drop a request with a typed reason (failure ledger).
     fn abandon(&mut self, req: Request, reason: DropReason) {
+        let code = match reason {
+            DropReason::RetryBudget => 0,
+            DropReason::Starved => 1,
+        };
+        self.obs_span(req.id, SpanKind::Drop, ROLE_NONE, -1, code);
         self.cohort_release(req.id);
         if let Some(s) = self.requests.get_mut(req.id) {
             s.clock = None;
@@ -1280,6 +1368,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 signal,
                 action,
                 outcome,
+                sample: self.obs.as_ref().and_then(ObsState::current_sample),
             });
         }
     }
@@ -1339,6 +1428,8 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                     max_capacity
                 );
             }
+            // Typed drop span (aux 2 = oversized; see `obs::span::drop_label`).
+            self.obs_span(req.id, SpanKind::Drop, ROLE_NONE, -1, 2);
             if let Some(s) = self.requests.get_mut(req.id) {
                 s.clock = None;
             }
@@ -1386,6 +1477,9 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                             Some(r) => ActionOutcome::Rejected(r),
                             None => {
                                 let r = slot.take().expect("checked above");
+                                // Route span first: the apply below can
+                                // emit PrefillStart in the same instant.
+                                self.obs_route(r.id, target, false);
                                 self.apply_route_prefill(target, r);
                                 ActionOutcome::Applied
                             }
@@ -1412,6 +1506,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                                 Some(r) => ActionOutcome::Rejected(r),
                                 None => {
                                     let r = slot.take().expect("checked above");
+                                    self.obs_route(r.id, decoder, true);
                                     let chunk = if chunked {
                                         let c = self.cluster.config.convertible_chunk_size;
                                         if c > 0 {
@@ -1653,6 +1748,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         // Reserve at transfer start so concurrent transfers cannot
         // overcommit the decoder.
         inst.reserved_tokens += req.total_tokens() as f64;
+        let span_role = Self::obs_role(inst.role);
         let bytes = inst.engine.kvc_bytes(req.input_tokens);
         let dur = self.cfg.link.transfer_time(bytes);
         let bytes_per_s = bytes / dur.max(1e-9);
@@ -1688,6 +1784,13 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 instance: decoder,
                 req: rid,
             },
+        );
+        self.obs_span(
+            rid,
+            SpanKind::TransferStart,
+            span_role,
+            decoder.seq() as i64,
+            0,
         );
     }
 
@@ -1810,6 +1913,13 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 req: req_id,
             },
         );
+        self.obs_span(
+            req_id,
+            SpanKind::PrefillStart,
+            ROLE_PREFILLER,
+            id.seq() as i64,
+            0,
+        );
     }
 
     fn on_prefill_done(&mut self, instance: InstanceId, req_id: RequestId) {
@@ -1831,6 +1941,13 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         if let Some(ck) = self.requests.get_mut(req_id).and_then(|s| s.clock.as_mut()) {
             ck.prefill_done = Some(self.now);
         }
+        self.obs_span(
+            req_id,
+            SpanKind::PrefillDone,
+            ROLE_PREFILLER,
+            instance.seq() as i64,
+            0,
+        );
         // Next job on this prefiller.
         self.maybe_start_prefill(instance);
         // Ship the KVC to a decoder.
@@ -1869,6 +1986,20 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             self.fault_requeue(req, None);
             return;
         }
+        if self.obs.is_some() {
+            let role = self
+                .cluster
+                .get(instance)
+                .map_or(ROLE_NONE, |i| Self::obs_role(i.role));
+            self.obs_span(req.id, SpanKind::TransferDone, role, instance.seq() as i64, 0);
+            self.obs_span(
+                req.id,
+                SpanKind::DecodeDispatch,
+                role,
+                instance.seq() as i64,
+                0,
+            );
+        }
         // A joiner changes the batch composition: truncate any coalesced
         // window so the merge happens at the next true iteration boundary.
         self.interrupt_window(instance);
@@ -1891,6 +2022,19 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
     /// bounded retry budget is exhausted.
     fn retry_transfer(&mut self, instance: InstanceId, req: Request, bucket: usize, attempt: u32) {
         self.metrics.transfer_retries += 1;
+        if self.obs.is_some() {
+            let role = self
+                .cluster
+                .get(instance)
+                .map_or(ROLE_NONE, |i| Self::obs_role(i.role));
+            self.obs_span(
+                req.id,
+                SpanKind::TransferRetry,
+                role,
+                instance.seq() as i64,
+                attempt,
+            );
+        }
         let next_attempt = attempt + 1;
         let alive = self.cluster.get(instance).is_some();
         let over_budget = self
@@ -2006,6 +2150,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         if inst.iterating {
             return;
         }
+        let span_role = Self::obs_role(inst.role);
         // Merge joiners at the iteration boundary.
         let joiners = std::mem::take(&mut inst.joining);
         inst.batch.extend(joiners);
@@ -2100,6 +2245,8 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                     ck.prefill_started = Some(now);
                 }
             }
+            // First chunk of a decode-side (restricted chunked) prefill.
+            self.obs_span(rid, SpanKind::PrefillStart, span_role, id.seq() as i64, 0);
         }
     }
 
@@ -2108,6 +2255,8 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
         let mut freed = false;
         let mut produced = 0.0;
         let now = self.now;
+        let span_role;
+        let mut chunk_prefill_done: Option<RequestId> = None;
         {
             let Some(inst) = self.cluster.get_mut(id) else {
                 return;
@@ -2115,6 +2264,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             if epoch != inst.iter_epoch {
                 return; // stale event
             }
+            span_role = Self::obs_role(inst.role);
             inst.iterating = false;
             let chunk = inst.iter_chunk;
             inst.iter_chunk = 0;
@@ -2135,6 +2285,7 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                     job.remaining = job.remaining.saturating_sub(chunk);
                     if job.remaining == 0 {
                         let job = inst.active_prefill.take().unwrap();
+                        chunk_prefill_done = Some(job.req.id);
                         // Seamlessly transition to decoding on this instance
                         // (§III-D); KV already reserved at admission.
                         let bucket = self
@@ -2204,6 +2355,12 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             self.batch_scratch = scratch;
         }
         self.tokens_since_sample += produced;
+        if let Some(rid) = chunk_prefill_done {
+            // Decode-side chunked prefill finished: the sequence joins
+            // the decode batch on the same instance (no transfer leg).
+            self.obs_span(rid, SpanKind::PrefillDone, span_role, id.seq() as i64, 0);
+            self.obs_span(rid, SpanKind::DecodeDispatch, span_role, id.seq() as i64, 0);
+        }
 
         for idx in 0..self.completions_buf.len() {
             let c = self.completions_buf[idx];
@@ -2213,6 +2370,13 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
                 self.ttft_points.push((c.arrival, c.ttft));
             }
             self.cohort_release(c.id);
+            self.obs_span(
+                c.id,
+                SpanKind::Completion,
+                span_role,
+                id.seq() as i64,
+                c.output_tokens as u32,
+            );
             self.dispatch_notify(Signal::Completion(&c));
             self.metrics.record(c);
             if let Some(ck) = self.requests.get_mut(c.id).and_then(|s| s.clock.take()) {
@@ -2344,6 +2508,147 @@ impl<'a, C: ControlPlane + ?Sized> SimEngine<'a, C> {
             };
             self.offer_decode(req);
         }
+    }
+
+    // ---- telemetry capture (crate::obs) ----
+
+    /// Obs role code for a cluster role (`Role::idx` maps 1:1 onto the
+    /// span role constants, pinned by a test below).
+    fn obs_role(role: Role) -> u8 {
+        role.idx() as u8
+    }
+
+    /// Record one span event for `req` (no-op when observe is off; the
+    /// obs state itself drops events for unsampled requests).
+    fn obs_span(&mut self, req: RequestId, kind: SpanKind, role: u8, slot: i64, aux: u32) {
+        let t = self.now;
+        if let Some(obs) = self.obs.as_mut() {
+            obs.span(SpanEvent {
+                t,
+                req,
+                kind,
+                role,
+                slot,
+                aux,
+            });
+        }
+    }
+
+    /// Route/deflect span: which instance (and role) the gateway chose
+    /// for a prefill. `aux` = 1 marks a deflection onto a plain decoder.
+    fn obs_route(&mut self, req: RequestId, target: InstanceId, deflected: bool) {
+        if self.obs.is_none() {
+            return;
+        }
+        let role = self
+            .cluster
+            .get(target)
+            .map_or(ROLE_NONE, |i| Self::obs_role(i.role));
+        self.obs_span(
+            req,
+            SpanKind::Route,
+            role,
+            target.seq() as i64,
+            u32::from(deflected),
+        );
+    }
+
+    /// Capture one cluster-timeline sample (the `ObsTick` handler).
+    /// Strictly read-only on simulation state: the only mutations land in
+    /// the obs side-car (the sample vector and its demand-window
+    /// counters), so the simulated trajectory is bit-identical with or
+    /// without the subsystem armed.
+    fn obs_capture(&mut self) {
+        let Some(mut obs) = self.obs.take() else {
+            return;
+        };
+        let t = self.now;
+        // Fleet shape + KV occupancy in one pass.
+        let mut fleet = [0u32; 3]; // non-draining, by Role::idx()
+        let mut running = [0u32; 3];
+        let mut starting = 0u32;
+        let mut draining = 0u32;
+        let mut degraded = 0u32;
+        let mut kv_occ_sum = 0.0;
+        let mut kv_n = 0u32;
+        for i in self.cluster.iter() {
+            match i.life {
+                LifeState::Starting => {
+                    starting += 1;
+                    fleet[i.role.idx()] += 1;
+                }
+                LifeState::Running => {
+                    running[i.role.idx()] += 1;
+                    fleet[i.role.idx()] += 1;
+                    degraded += u32::from(i.is_degraded());
+                }
+                LifeState::Draining => draining += 1,
+            }
+            if i.role != Role::Prefiller {
+                kv_occ_sum += i.kvcache.occupancy();
+                kv_n += 1;
+            }
+        }
+        let queue_depth = (self.pending.len() + self.awaiting_decode.len()) as u32;
+        let oldest = self
+            .pending
+            .iter()
+            .chain(self.awaiting_decode.iter())
+            .map(|r| t - r.arrival)
+            .fold(0.0f64, f64::max);
+        // Token demand over the window since the last obs tick; capacity
+        // from the analytic velocity model (paper §IV) at the window's
+        // mean request shape, falling back to the cumulative arrival
+        // means when the window saw no arrivals.
+        let elapsed = t - obs.timeline.samples.last().map_or(0.0, |s| s.t);
+        let (n_arr, in_tok, out_tok) = obs.take_window();
+        let (isl, osl) = if n_arr > 0 {
+            ((in_tok / n_arr) as usize, (out_tok / n_arr) as usize)
+        } else {
+            (
+                self.metrics.avg_arrival_input_tokens() as usize,
+                self.metrics.avg_arrival_output_tokens() as usize,
+            )
+        };
+        let (demand_p, demand_d) = if elapsed > 0.0 {
+            (in_tok as f64 / elapsed, out_tok as f64 / elapsed)
+        } else {
+            (0.0, 0.0)
+        };
+        let v_p = prefill_velocity(&self.cluster.config.prefill_engine, isl);
+        let v_d = decode_velocity(&self.cluster.config.decode_engine, isl, osl);
+        let decode_running =
+            running[Role::Decoder.idx()] + running[Role::ConvertibleDecoder.idx()];
+        let kv_hit_rate = if self.metrics.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.metrics.prefix_hits as f64 / self.metrics.prefix_lookups as f64
+        };
+        obs.timeline.push(TimelineSample {
+            t,
+            prefillers: fleet[Role::Prefiller.idx()],
+            decoders: fleet[Role::Decoder.idx()],
+            convertibles: fleet[Role::ConvertibleDecoder.idx()],
+            starting,
+            draining,
+            queue_depth,
+            oldest_wait_s: oldest,
+            demand_prefill_tok_s: demand_p,
+            capacity_prefill_tok_s: running[Role::Prefiller.idx()] as f64 * v_p,
+            demand_decode_tok_s: demand_d,
+            capacity_decode_tok_s: decode_running as f64 * v_d,
+            net_util: (self.net_bytes_per_s / self.cfg.link.eff_rdma_bytes()).min(1.0),
+            kv_hit_rate,
+            kv_occupancy: if kv_n == 0 {
+                0.0
+            } else {
+                kv_occ_sum / kv_n as f64
+            },
+            inflight_transfers: self.active_transfers as u32,
+            degraded,
+            failures: self.cluster.failures.len() as u32,
+        });
+        self.obs = Some(obs);
     }
 
     // ---- sampling ----
@@ -2894,5 +3199,139 @@ mod tests {
             .all(|r| matches!(r.outcome, ActionOutcome::Applied)));
         // Routing and fleet actions both show up.
         assert!(log.iter().any(|r| r.signal == SignalKind::Tick));
+    }
+
+    #[test]
+    fn observe_is_passive_and_captures() {
+        let trace = step_trace(4.0, 4.0, 0.0, 0.0, 20.0, 256, 64, 31);
+        let base = SimConfig {
+            initial_prefillers: 1,
+            initial_decoders: 1,
+            decision_log: 64,
+            ..Default::default()
+        };
+        let mut c0 = StaticCoordinator::new(1, 1);
+        let off = simulate(base.clone(), cluster_cfg(4), &mut c0, &trace);
+
+        let on_cfg = SimConfig {
+            observe: Some(ObserveConfig {
+                sample_s: 1.0,
+                span_sample_n: 1,
+                seed: 0,
+                sinks: vec![],
+            }),
+            ..base
+        };
+        let mut c1 = StaticCoordinator::new(1, 1);
+        let on = simulate(on_cfg, cluster_cfg(4), &mut c1, &trace);
+
+        // Passivity: the observe-on run carries exactly the observe-off
+        // trajectory — same event count, same horizon, bit-identical
+        // completions.
+        assert_eq!(off.events_processed, on.events_processed);
+        assert_eq!(off.horizon_s.to_bits(), on.horizon_s.to_bits());
+        assert_eq!(off.metrics.completions.len(), on.metrics.completions.len());
+        for (a, b) in off.metrics.completions.iter().zip(&on.metrics.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.ttft.to_bits(), b.ttft.to_bits());
+            assert_eq!(a.tpot.to_bits(), b.tpot.to_bits());
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+        }
+        assert!(off.obs.is_none(), "observe off leaves no telemetry state");
+
+        let obs = on.obs.expect("observe armed");
+        assert!(obs.timeline.len() > 10, "1 s samples over a ~20 s run");
+        assert!(!obs.spans.events.is_empty());
+        obs.spans
+            .check_chains(true)
+            .expect("well-formed span chains");
+        // span_sample_n = 1 records every request: one completion span each.
+        let completions = obs
+            .spans
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, SpanKind::Completion))
+            .count();
+        assert_eq!(completions, on.metrics.completions.len());
+        // Timeline samples see the fleet and the workload.
+        assert!(obs.timeline.samples.iter().all(|s| s.prefillers >= 1));
+        assert!(obs
+            .timeline
+            .samples
+            .iter()
+            .any(|s| s.demand_prefill_tok_s > 0.0));
+
+        // Decision records are stamped with the nearest timeline sample
+        // only while observing.
+        let on_log = on.decisions.expect("ring enabled");
+        assert!(!on_log.is_empty());
+        assert!(on_log.iter().all(|r| r.sample.is_some()));
+        let off_log = off.decisions.expect("ring enabled");
+        assert!(off_log.iter().all(|r| r.sample.is_none()));
+    }
+
+    #[test]
+    fn observe_state_survives_checkpoint_resume() {
+        let trace = step_trace(4.0, 4.0, 0.0, 0.0, 20.0, 256, 64, 32);
+        let cfg = SimConfig {
+            initial_prefillers: 1,
+            initial_decoders: 1,
+            observe: Some(ObserveConfig {
+                sample_s: 1.0,
+                span_sample_n: 1,
+                seed: 0,
+                sinks: vec![],
+            }),
+            ..Default::default()
+        };
+        let mut c0 = StaticCoordinator::new(1, 1);
+        let full = simulate(cfg.clone(), cluster_cfg(4), &mut c0, &trace);
+
+        let mut c1 = StaticCoordinator::new(1, 1);
+        let mut src1 = crate::trace::OwnedTraceSource::new(trace.clone());
+        let mut eng = SimEngine::new(cfg.clone(), cluster_cfg(4), &mut c1, &mut src1);
+        eng.start();
+        eng.advance(9.0);
+        let snap = eng.checkpoint();
+        drop(eng);
+        let text = snap.to_json().pretty();
+        let snap2 =
+            SimSnapshot::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        let mut c2 = StaticCoordinator::new(1, 1);
+        let mut src2 = crate::trace::OwnedTraceSource::new(trace.clone());
+        let resumed = SimEngine::resume(cfg.clone(), cluster_cfg(4), &mut c2, &mut src2, &snap2, true)
+            .unwrap()
+            .run_to_completion();
+
+        // Identical telemetry artifacts: same spans, same timeline bits.
+        let a = full.obs.expect("full run observed");
+        let b = resumed.obs.expect("resumed run observed");
+        assert_eq!(a.spans.events.len(), b.spans.events.len());
+        for (x, y) in a.spans.events.iter().zip(&b.spans.events) {
+            assert_eq!(x.req, y.req);
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.t.to_bits(), y.t.to_bits());
+            assert_eq!((x.role, x.slot, x.aux), (y.role, y.slot, y.aux));
+        }
+        assert_eq!(a.timeline.len(), b.timeline.len());
+        for (x, y) in a.timeline.samples.iter().zip(&b.timeline.samples) {
+            assert_eq!(x.t.to_bits(), y.t.to_bits());
+            assert_eq!(x.values().len(), y.values().len());
+            for (vx, vy) in x.values().iter().zip(y.values().iter()) {
+                assert_eq!(vx.to_bits(), vy.to_bits());
+            }
+        }
+
+        // Mismatched observe config at resume is a typed error, both ways.
+        let off_cfg = SimConfig {
+            observe: None,
+            ..cfg.clone()
+        };
+        let mut c3 = StaticCoordinator::new(1, 1);
+        let mut src3 = crate::trace::OwnedTraceSource::new(trace.clone());
+        let err = SimEngine::resume(off_cfg, cluster_cfg(4), &mut c3, &mut src3, &snap2, true)
+            .err()
+            .expect("observe-off resume of an observe-on snapshot fails");
+        assert!(err.to_string().contains("observe"), "{err}");
     }
 }

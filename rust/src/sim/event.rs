@@ -76,6 +76,10 @@ pub enum Event {
     InstanceReady { instance: InstanceId },
     /// Metrics sampling tick (time-series capture).
     SampleTick,
+    /// Telemetry timeline tick (obs subsystem cluster-state capture).
+    /// Never scheduled when `SimConfig::observe` is off, so observe-off
+    /// runs carry zero obs events.
+    ObsTick,
     /// An armed fault fires (`firing` indexes the engine's materialized
     /// firing list, which is a pure function of `SimConfig::faults`).
     Fault { firing: usize },

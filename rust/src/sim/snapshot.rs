@@ -51,7 +51,9 @@ use std::sync::Arc;
 /// fault events/actions, transfer attempts, failure ledger, cohorts).
 /// v3: prefix-cache state (request session refs, per-job cached tokens,
 /// per-instance `sim::kvcache` blob, recorder cache counters).
-pub const SNAPSHOT_SCHEMA_VERSION: u64 = 3;
+/// v4: telemetry state (obs span log + timeline blob, `ObsTick` events,
+/// decision-record sample stamps).
+pub const SNAPSHOT_SCHEMA_VERSION: u64 = 4;
 
 // ------------------------------------------------------------ helpers
 
@@ -204,6 +206,7 @@ pub(crate) fn event_to_json(ev: &Event) -> Json {
         Event::Arrival => Json::obj().set("kind", "arrival"),
         Event::ControlTick => Json::obj().set("kind", "control-tick"),
         Event::SampleTick => Json::obj().set("kind", "sample-tick"),
+        Event::ObsTick => Json::obj().set("kind", "obs-tick"),
         Event::InstanceReady { instance } => Json::obj()
             .set("kind", "instance-ready")
             .set("instance", iid_to_json(*instance)),
@@ -236,6 +239,7 @@ pub(crate) fn event_from_json(j: &Json) -> anyhow::Result<Event> {
         "arrival" => Event::Arrival,
         "control-tick" => Event::ControlTick,
         "sample-tick" => Event::SampleTick,
+        "obs-tick" => Event::ObsTick,
         "instance-ready" => Event::InstanceReady { instance: iid(j)? },
         "prefill-done" => Event::PrefillDone {
             instance: iid(j)?,
@@ -556,6 +560,13 @@ pub(crate) fn decision_log_to_json(log: &DecisionLog) -> Json {
                             .set("signal", r.signal.label())
                             .set("action", action_to_json(&r.action))
                             .set("outcome", outcome_to_json(&r.outcome))
+                            .set(
+                                "sample",
+                                match r.sample {
+                                    None => Json::Null,
+                                    Some(s) => Json::from(s as usize),
+                                },
+                            )
                     })
                     .collect(),
             ),
@@ -566,11 +577,20 @@ pub(crate) fn decision_log_from_json(j: &Json) -> anyhow::Result<DecisionLog> {
     let what = "decision-log";
     let mut records = Vec::new();
     for r in parr(j, "records", what)? {
+        let sample = match get(r, "sample", what)? {
+            Json::Null => None,
+            other => Some(
+                other
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("{what}: bad `sample`"))? as u32,
+            ),
+        };
         records.push(DecisionRecord {
             t: pf(r, "t", what)?,
             signal: signal_kind_from_label(pstr(r, "signal", what)?)?,
             action: action_from_json(get(r, "action", what)?)?,
             outcome: outcome_from_json(get(r, "outcome", what)?)?,
+            sample,
         });
     }
     Ok(DecisionLog::from_parts(
@@ -780,6 +800,7 @@ mod tests {
             Event::Arrival,
             Event::ControlTick,
             Event::SampleTick,
+            Event::ObsTick,
             Event::InstanceReady { instance: id },
             Event::PrefillDone { instance: id, req: 42 },
             Event::TransferDone { instance: id, req: 43 },
@@ -831,6 +852,7 @@ mod tests {
                 } else {
                     ActionOutcome::Rejected(RejectReason::NotRunning)
                 },
+                sample: if k % 3 == 0 { None } else { Some(k as u32) },
             });
         }
         let text = decision_log_to_json(&log).pretty();
@@ -843,6 +865,7 @@ mod tests {
             assert_eq!(a.action, b.action);
             assert_eq!(a.outcome, b.outcome);
             assert_eq!(a.signal, b.signal);
+            assert_eq!(a.sample, b.sample);
         }
     }
 

@@ -171,6 +171,109 @@ fn prop_slo_monotone() {
     });
 }
 
+/// Telemetry under churn: arming observation never perturbs the
+/// trajectory (completions bit-identical to an observe-off run), and
+/// every sampled request's span chain stays well-formed — time-ordered,
+/// arrival-first, exactly one terminal — even when crashes and transfer
+/// brownouts displace in-flight work and force requeues mid-chain.
+#[test]
+fn prop_span_chains_hold_under_faults() {
+    use tokenscale::obs::{ObserveConfig, SpanKind};
+    use tokenscale::sim::{FaultKind, FaultPlan, FaultSchedule, FaultSpec, Role};
+    check(Config::named("span-chains-faults").cases(8), |rng| {
+        let rps = rng.range_f64(2.0, 6.0);
+        let output = rng.range_usize(32, 256);
+        let trace = step_trace(rps, rps, 0.0, 0.0, 20.0, 512, output, rng.next_u64());
+        let faults = FaultPlan {
+            seed: rng.next_u64(),
+            entries: vec![
+                FaultSpec {
+                    kind: FaultKind::Crash,
+                    role: Some(if rng.range_usize(0, 1) == 0 {
+                        Role::Decoder
+                    } else {
+                        Role::Prefiller
+                    }),
+                    instance_index: None,
+                    schedule: FaultSchedule::At {
+                        t: rng.range_f64(4.0, 10.0),
+                    },
+                },
+                FaultSpec {
+                    kind: FaultKind::Transfer {
+                        loss_prob: rng.range_f64(0.3, 1.0),
+                        stall_s: 1.0,
+                        max_retries: 2,
+                        duration_s: rng.range_f64(3.0, 8.0),
+                    },
+                    role: None,
+                    instance_index: None,
+                    schedule: FaultSchedule::At {
+                        t: rng.range_f64(6.0, 12.0),
+                    },
+                },
+            ],
+        };
+        let base = SimConfig {
+            initial_prefillers: 2,
+            initial_decoders: 2,
+            faults,
+            ..Default::default()
+        };
+        let mut coord_off = StaticCoordinator::new(2, 2);
+        let off = simulate(base.clone(), cluster_cfg(8), &mut coord_off, &trace);
+        let on_cfg = SimConfig {
+            observe: Some(ObserveConfig {
+                sample_s: 2.0,
+                span_sample_n: 1,
+                seed: 0,
+                sinks: vec![],
+            }),
+            ..base
+        };
+        let mut coord_on = StaticCoordinator::new(2, 2);
+        let on = simulate(on_cfg, cluster_cfg(8), &mut coord_on, &trace);
+
+        // Passivity: identical trajectory bit for bit.
+        assert_eq!(off.events_processed, on.events_processed);
+        assert_eq!(off.metrics.completions.len(), on.metrics.completions.len());
+        for (a, b) in off.metrics.completions.iter().zip(&on.metrics.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+        }
+
+        // Chain invariant with every request sampled (n=1).
+        let obs = on.obs.expect("observe armed");
+        obs.spans
+            .check_chains(true)
+            .unwrap_or_else(|e| panic!("chain violated under faults: {e}"));
+        let chains = obs.spans.by_request();
+        assert_eq!(
+            chains.len(),
+            trace.requests.len(),
+            "every request gets a chain at n=1"
+        );
+        let terminals = obs
+            .spans
+            .events
+            .iter()
+            .filter(|e| e.kind.is_terminal())
+            .count();
+        assert_eq!(terminals, chains.len(), "every chain resolves exactly once");
+        let completions = obs
+            .spans
+            .events
+            .iter()
+            .filter(|e| e.kind == SpanKind::Completion)
+            .count();
+        assert_eq!(
+            completions,
+            on.metrics.completions.len(),
+            "span terminals agree with the metrics ledger"
+        );
+    });
+}
+
 /// Trace generators: arrivals sorted, lengths within bounds, rate within a
 /// factor of the request across all families and seeds.
 #[test]

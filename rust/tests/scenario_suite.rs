@@ -400,6 +400,28 @@ fn shipped_smoke_suite_parses_and_validates() {
         .transforms
         .iter()
         .any(|t| matches!(t, TransformStep::Window { .. })));
+    // The telemetry cell arms observe with all four sinks (CI uploads
+    // its artifacts); every other cell leaves observe off.
+    let obs_cell = suite
+        .scenarios
+        .iter()
+        .find(|s| s.name == "obs-smoke")
+        .expect("smoke suite lacks obs-smoke");
+    let o = obs_cell
+        .observe
+        .as_ref()
+        .expect("obs-smoke must carry an observe block");
+    assert_eq!(o.sample_s, 5.0);
+    assert_eq!(o.span_sample_n, 4);
+    assert_eq!(o.seed, 17);
+    assert_eq!(o.sinks, tokenscale::obs::Sink::ALL.to_vec());
+    assert!(
+        suite
+            .scenarios
+            .iter()
+            .all(|s| s.name == "obs-smoke" || s.observe.is_none()),
+        "only obs-smoke arms telemetry in the smoke suite"
+    );
 }
 
 #[test]
@@ -478,4 +500,145 @@ fn shipped_slo_sweep_suite_parses_and_sweeps_targets() {
         assert_eq!(sc.workload, suite.scenarios[0].workload);
         assert_eq!(sc.transforms, suite.scenarios[0].transforms);
     }
+}
+
+// ---------------------------------------------------------- telemetry
+
+fn tiny_scenario(name: &str) -> Scenario {
+    Scenario::new(
+        name,
+        "small-a100",
+        WorkloadSpec::Synthetic {
+            family: TraceFamily::AzureConv,
+            rps: 6.0,
+            duration_s: 30.0,
+            seed: 3,
+        },
+    )
+    .policy("static")
+}
+
+/// An observe-armed suite cell writes one artifact per configured sink,
+/// and each artifact is well-formed: the timeline is columnar JSON, the
+/// Perfetto file is Chrome trace-event JSON, the CSV carries the span
+/// header and the Prometheus exposition renders typed metric families.
+#[test]
+fn observe_armed_suite_writes_parsing_artifacts() {
+    use tokenscale::obs::{ObserveConfig, Sink};
+    let run = Suite::new("obs-artifacts", "telemetry artifact fixture")
+        .scenario(tiny_scenario("tiny-obs").with_observe(ObserveConfig {
+            sample_s: 5.0,
+            span_sample_n: 1,
+            seed: 0,
+            sinks: Sink::ALL.to_vec(),
+        }))
+        .run()
+        .expect("observed suite runs");
+    let dir = std::env::temp_dir().join("tokenscale_test_obs_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    let written = run.write_observe_artifacts(&dir).expect("artifacts write");
+    let names: Vec<String> = written
+        .iter()
+        .map(|p| p.file_name().unwrap().to_string_lossy().into_owned())
+        .collect();
+    assert_eq!(
+        names,
+        vec![
+            "TIMELINE_tiny-obs__static.json",
+            "SPANS_tiny-obs__static.perfetto.json",
+            "SPANS_tiny-obs__static.csv",
+            "PROM_tiny-obs__static.prom",
+        ]
+    );
+
+    let read = |i: usize| std::fs::read_to_string(&written[i]).unwrap();
+    // Columnar timeline: schema 1, one array of `rows` values per column.
+    let timeline = Json::parse(&read(0)).expect("timeline parses");
+    assert_eq!(timeline.get("schema").and_then(Json::as_f64), Some(1.0));
+    let rows = timeline.get("rows").and_then(Json::as_f64).unwrap() as usize;
+    assert!(rows > 0, "30s at 5s sampling must produce rows");
+    let Some(Json::Obj(cols)) = timeline.get("columns") else {
+        panic!("timeline lacks a columns object")
+    };
+    assert_eq!(cols.len(), tokenscale::obs::timeline::COLUMNS.len());
+    for (name, col) in cols {
+        assert_eq!(col.as_arr().map(|a| a.len()), Some(rows), "column {name}");
+    }
+    // Chrome trace-event JSON: a traceEvents array of phased events.
+    let perfetto = Json::parse(&read(1)).expect("perfetto parses");
+    let events = perfetto
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(!events.is_empty());
+    for ev in events {
+        assert!(ev.get("ph").is_some() && ev.get("pid").is_some(), "{ev:?}");
+    }
+    // Flat span CSV.
+    assert!(read(2).starts_with("req,t_s,event,role,slot,aux\n"));
+    // Prometheus exposition: typed families from both the final timeline
+    // sample and the cell's SLO report.
+    let prom = read(3);
+    assert!(prom.contains("# TYPE"));
+    assert!(prom.contains("tokenscale_fleet_size"));
+    assert!(prom.contains("scenario=\"tiny-obs\""));
+}
+
+/// Suite-level passivity: arming telemetry leaves every normalized
+/// outcome identical to the unobserved run (wall-clock aside — the only
+/// nondeterministic field in the report), and a suite with no observe
+/// blocks writes zero artifacts, leaving the output directory untouched.
+#[test]
+fn telemetry_is_passive_at_the_suite_level() {
+    use tokenscale::obs::{ObserveConfig, Sink};
+    let off = Suite::new("passivity", "passivity fixture")
+        .scenario(tiny_scenario("tiny"))
+        .run()
+        .expect("unobserved suite runs");
+    let on = Suite::new("passivity", "passivity fixture")
+        .scenario(tiny_scenario("tiny").with_observe(ObserveConfig {
+            sample_s: 2.0,
+            span_sample_n: 1,
+            seed: 9,
+            sinks: Sink::ALL.to_vec(),
+        }))
+        .run()
+        .expect("observed suite runs");
+
+    // Byte-identical normalized reports once real wall-clock — the only
+    // nondeterministic field — is zeroed.
+    fn zero_wall(doc: &mut Json) {
+        match doc {
+            Json::Obj(m) => {
+                for (k, v) in m.iter_mut() {
+                    if k == "wall_s" {
+                        *v = Json::Num(0.0);
+                    } else {
+                        zero_wall(v);
+                    }
+                }
+            }
+            Json::Arr(a) => a.iter_mut().for_each(zero_wall),
+            _ => {}
+        }
+    }
+    let normalized = |run: &tokenscale::report::SuiteRun| {
+        let mut doc = run.to_json();
+        zero_wall(&mut doc);
+        doc.pretty()
+    };
+    assert_eq!(
+        normalized(&off),
+        normalized(&on),
+        "telemetry perturbed the trajectory"
+    );
+
+    // The unobserved run holds no telemetry state and writes nothing.
+    assert!(off.results[0].sim.obs.is_none());
+    let dir = std::env::temp_dir().join("tokenscale_test_obs_passivity");
+    std::fs::create_dir_all(&dir).unwrap();
+    let before: usize = std::fs::read_dir(&dir).unwrap().count();
+    let written = off.write_observe_artifacts(&dir).expect("no-op write");
+    assert!(written.is_empty(), "observe-off suite wrote {written:?}");
+    assert_eq!(std::fs::read_dir(&dir).unwrap().count(), before);
 }

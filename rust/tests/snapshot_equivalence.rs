@@ -23,6 +23,11 @@
 //!    transfer brownout in flight) resumes bit-identically, and any
 //!    random plan replayed from the same seed reproduces the SloReport
 //!    and the failure ledger byte for byte (property).
+//! 6. **Telemetry** — an observed run (`[scenarios.observe]`)
+//!    checkpointed mid-capture, with span chains open and timeline
+//!    accumulators partially filled, resumes to byte-identical exported
+//!    artifacts (Perfetto JSON, span CSV, columnar timeline) and
+//!    identical decision-record sample stamps.
 
 use tokenscale::metrics::SloReport;
 use tokenscale::report::{
@@ -311,6 +316,75 @@ fn decision_log_survives_checkpoint_resume() {
             assert_eq!(x.action, y.action);
             assert_eq!(x.outcome, y.outcome);
         }
+        assert_identical(&spec.label, &cold, &resumed);
+    }
+}
+
+/// An interrupted *observed* run resumes to byte-identical telemetry:
+/// the checkpoint at 25 s lands with span chains open (requests in
+/// prefill/transfer/decode), a timeline arrival window partially
+/// accumulated and sampled ids in flight, and every exported artifact of
+/// the resumed run must equal the uninterrupted run's bytes — the
+/// acceptance criterion for `ObsState::{to,from}_snapshot`.
+#[test]
+fn observed_run_resumes_with_identical_artifacts() {
+    let mut scenario = Scenario::new(
+        "observed",
+        "small-a100",
+        WorkloadSpec::Synthetic {
+            family: TraceFamily::AzureConv,
+            rps: 8.0,
+            duration_s: 60.0,
+            seed: 13,
+        },
+    )
+    .policy("tokenscale")
+    .with_observe(tokenscale::obs::ObserveConfig {
+        sample_s: 2.0,
+        span_sample_n: 2,
+        seed: 5,
+        sinks: vec![],
+    });
+    scenario.overrides.decision_log = 256;
+    for spec in scenario.experiment_specs().unwrap() {
+        let cold = run_experiment(&spec);
+        let snap = through_text(&simulate_prefix(&spec, spec.policy, 25.0, 0.0, None).unwrap());
+        let resumed = run_experiment_resumed(&spec, &snap, spec.policy, true).unwrap();
+        let (a, b) = (
+            cold.sim.obs.as_ref().expect("observe armed"),
+            resumed.sim.obs.as_ref().expect("observe survives resume"),
+        );
+        a.spans.check_chains(true).expect("cold chains well-formed");
+        assert!(!a.spans.events.is_empty(), "n=2 sampling must record spans");
+        assert_eq!(
+            tokenscale::obs::perfetto(&a.spans).pretty(),
+            tokenscale::obs::perfetto(&b.spans).pretty(),
+            "Perfetto artifact must be byte-identical across resume"
+        );
+        assert_eq!(
+            tokenscale::obs::spans_csv(&a.spans),
+            tokenscale::obs::spans_csv(&b.spans),
+            "span CSV must be byte-identical across resume"
+        );
+        assert_eq!(
+            a.timeline.to_json().pretty(),
+            b.timeline.to_json().pretty(),
+            "timeline artifact must be byte-identical across resume"
+        );
+        // Decision-record correlation survives too: every retained record
+        // carries the same nearest-sample stamp on both legs.
+        let (da, db) = (
+            cold.sim.decisions.as_ref().expect("ring enabled"),
+            resumed.sim.decisions.as_ref().expect("ring enabled"),
+        );
+        assert_eq!(da.len(), db.len());
+        for (x, y) in da.iter().zip(db.iter()) {
+            assert_eq!(x.sample, y.sample, "sample stamp at t={}", x.t);
+        }
+        assert!(
+            da.iter().any(|r| r.sample.is_some()),
+            "records must correlate with timeline samples"
+        );
         assert_identical(&spec.label, &cold, &resumed);
     }
 }
